@@ -1,0 +1,87 @@
+//! Autotune a "new GPU": run the paper's full §2 pipeline against a card
+//! the heuristic has never seen, and quantify what reusing another card's
+//! heuristic would cost (the §4.1 experiment).
+//!
+//! ```bash
+//! cargo run --release --example autotune_new_gpu
+//! ```
+
+use partisol::gpu::simulator::GpuSimulator;
+use partisol::gpu::spec::{Dtype, GpuCard};
+use partisol::tuner::correction::{correct_trend, corrections};
+use partisol::tuner::heuristic::{IntervalHeuristic, KnnHeuristic, MHeuristic};
+use partisol::tuner::streams::optimum_streams;
+use partisol::tuner::sweep::{sweep_all, table1_sizes, SweepConfig};
+use partisol::util::table::{fmt_n, Table};
+
+fn main() -> anyhow::Result<()> {
+    // The "new" card we just plugged in: an RTX 4080.
+    let new_card = GpuCard::Rtx4080;
+    let sim = GpuSimulator::new(new_card);
+    let ns = table1_sizes();
+
+    // ---- step 1: empirical sweep (measurement noise included, averaged
+    // over repeats, exactly the paper's §2 loop).
+    let cfg = SweepConfig::observed(Dtype::F64, 424242);
+    let sweeps = sweep_all(&sim, &ns, &cfg);
+
+    // ---- step 2: trend correction (§2.4).
+    let corrected = correct_trend(&sweeps, 0.02);
+    println!(
+        "sweep done on {}: {} observed optima, {} corrected",
+        new_card.name(),
+        sweeps.len(),
+        corrections(&sweeps, &corrected),
+    );
+
+    // ---- step 3: fit the deployable heuristics (§2.5).
+    let interval = IntervalHeuristic::from_corrected("rtx4080-fitted", &ns, &corrected)?;
+    let (knn, report) = KnnHeuristic::fit_paper_pipeline("rtx4080-knn", &ns, &corrected, 17)?;
+    println!(
+        "kNN fit: k={} test accuracy {:.2} (null {:.2})",
+        report.best_k, report.test_accuracy, report.null_accuracy
+    );
+
+    // ---- step 4: what would reusing the 2080 Ti heuristic cost here?
+    // (the paper's Table 3 question: up to 7.13% loss on the 4080).
+    let old = IntervalHeuristic::paper(Dtype::F64);
+    let mut table = Table::new(&["N", "own m", "2080Ti m", "loss %"])
+        .with_title("Cost of reusing the RTX 2080 Ti heuristic (loss > 0.5% rows)");
+    let mut worst: f64 = 0.0;
+    for &n in &ns {
+        let own = interval.opt_m(n);
+        let borrowed = old.opt_m(n);
+        let s = optimum_streams(n);
+        let t_own = sim.solve(n, own, s, Dtype::F64).total_us;
+        let t_borrowed = sim.solve(n, borrowed, s, Dtype::F64).total_us;
+        let loss = (t_borrowed / t_own - 1.0) * 100.0;
+        worst = worst.max(loss);
+        if loss > 0.5 {
+            table.row(vec![
+                fmt_n(n),
+                own.to_string(),
+                borrowed.to_string(),
+                format!("{loss:.2}"),
+            ]);
+        }
+    }
+    if !table.is_empty() {
+        println!("{}", table.render());
+    }
+    println!(
+        "worst loss from reusing the 2080 Ti heuristic on {}: {:.2}% (paper: up to 7.13%)",
+        new_card.name(),
+        worst
+    );
+
+    // The freshly fitted kNN agrees with the interval trend on the grid.
+    let agree = ns
+        .iter()
+        .filter(|&&n| knn.opt_m(n) == interval.opt_m(n))
+        .count();
+    println!(
+        "kNN vs interval agreement on the sweep grid: {agree}/{}",
+        ns.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: solve a tridiagonal SLAE with the tuned sub-system size.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Shows the three-layer path end-to-end: the ML heuristic picks the
+//! sub-system size m, Stage 1/3 run as AOT-compiled Pallas kernels on the
+//! PJRT CPU client, Stage 2 (the interface system) is solved host-side in
+//! Rust, and the solution is verified against the sequential Thomas
+//! baseline.
+
+use partisol::gpu::spec::Dtype;
+use partisol::runtime::executor::pjrt_partition_solve;
+use partisol::runtime::Runtime;
+use partisol::solver::generator::random_dd_system;
+use partisol::solver::residual::{max_abs_diff, max_abs_residual};
+use partisol::solver::{partition_solve, thomas_solve};
+use partisol::tuner::heuristic::{IntervalHeuristic, MHeuristic};
+use partisol::util::Pcg64;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let n = 100_000;
+    let mut rng = Pcg64::new(2025);
+    let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+
+    // 1. The paper's heuristic picks the optimum sub-system size.
+    let heuristic = IntervalHeuristic::paper(Dtype::F64);
+    let m = heuristic.opt_m(n);
+    println!("N = {n}: heuristic optimum sub-system size m = {m}");
+
+    // 2. Solve through the AOT Pallas artifacts on PJRT (falls back to the
+    //    native solver when artifacts are missing).
+    let x = match Runtime::new(Path::new("artifacts")) {
+        Ok(rt) => {
+            println!("backend: PJRT ({})", rt.platform_name());
+            pjrt_partition_solve(&rt, &sys, m)?
+        }
+        Err(e) => {
+            println!("backend: native (PJRT unavailable: {e})");
+            partition_solve(&sys, m, 4)?
+        }
+    };
+
+    // 3. Verify: residual + agreement with the sequential baseline.
+    let residual = max_abs_residual(&sys, &x);
+    let baseline = thomas_solve(&sys)?;
+    let diff = max_abs_diff(&x, &baseline);
+    println!("max |Ax - d|          = {residual:.3e}");
+    println!("max |x - x_thomas|    = {diff:.3e}");
+    assert!(residual < 1e-9 && diff < 1e-9);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Recursive partition method (§3): plan the per-level sub-system sizes,
+//! solve natively with real numerics at every depth, and compare the
+//! simulated GPU cost of the recursion depths.
+//!
+//! ```bash
+//! cargo run --release --example recursive_solve
+//! ```
+
+use partisol::gpu::simulator::GpuSimulator;
+use partisol::gpu::spec::{Dtype, GpuCard};
+use partisol::recursion::planner::plan_for;
+use partisol::recursion::rsteps::{published_opt_r, RStepsModel};
+use partisol::solver::generator::random_dd_system;
+use partisol::solver::recursive::recursive_solve;
+use partisol::solver::residual::max_abs_residual;
+use partisol::tuner::streams::optimum_streams;
+use partisol::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    // Real numerics at a laptop-friendly size: every recursion depth must
+    // produce the same solution.
+    let n = 200_000;
+    let mut rng = Pcg64::new(31);
+    let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+    println!("solving N = {n} natively at every recursion depth:");
+    for r in 0..=4 {
+        let plan = plan_for(n, r, Dtype::F64);
+        let x = recursive_solve(&sys, &plan, 4)?;
+        let res = max_abs_residual(&sys, &x);
+        println!("  R = {r}: plan {plan:?}  max|Ax-d| = {res:.3e}");
+        assert!(res < 1e-9);
+    }
+
+    // The paper-facing question: which depth is fastest on the (simulated)
+    // A5000 at the paper's headline size?
+    let sim = GpuSimulator::new(GpuCard::RtxA5000);
+    let n_big = 4_500_000;
+    let streams = optimum_streams(n_big);
+    println!("\nsimulated GPU times at N = {n_big} [RTX A5000]:");
+    let mut times = Vec::new();
+    for r in 0..=4 {
+        let plan = plan_for(n_big, r, Dtype::F64);
+        let t = sim.solve_plan(n_big, &plan, streams, Dtype::F64).total_ms();
+        println!("  R = {r}: plan {plan:?}  {t:.3} ms");
+        times.push(t);
+    }
+    let best_r = (0..times.len()).min_by(|&a, &b| times[a].partial_cmp(&times[b]).unwrap());
+    println!(
+        "  simulated optimum R = {} (paper: R = {} optimal in this range, speed-up 1.17x)",
+        best_r.unwrap(),
+        published_opt_r(n_big)
+    );
+
+    // The Fig-5 model: 1-NN predicting the optimum R per SLAE size.
+    let ns: Vec<usize> = partisol::data::paper::RECURSION_N_VALUES.to_vec();
+    let rs: Vec<usize> = ns.iter().map(|&x| published_opt_r(x)).collect();
+    let (model, rep) = RStepsModel::fit_on(&ns, &rs, 3)?;
+    println!(
+        "\n1-NN optimum-R model: k={} test accuracy {:.2} null {:.2}",
+        rep.best_k, rep.test_accuracy, rep.null_accuracy
+    );
+    for probe in [1_000_000usize, 3_000_000, 7_000_000, 50_000_000] {
+        println!("  predicted optimum R({probe}) = {}", model.opt_r(probe));
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): run the full three-layer
+//! system on a real workload — the solve service with the ML-tuned router
+//! on a log-uniform mix of SLAE sizes, through the AOT Pallas artifacts on
+//! PJRT, with native workers alongside — and report latency/throughput,
+//! residuals and the paper-facing simulated-GPU cost of every request.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_workload
+//! ```
+
+use partisol::config::Config;
+use partisol::coordinator::{Service, SolveRequest};
+use partisol::solver::generator::random_dd_system;
+use partisol::util::stats::{mean, percentile};
+use partisol::util::Pcg64;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let requests = 128usize;
+    let (min_n, max_n) = (1_000usize, 300_000usize);
+
+    let cfg = Config::default();
+    let svc = Service::start(cfg)?;
+    let mut rng = Pcg64::new(99);
+
+    // Log-uniform workload over the paper's size range.
+    let mut sizes = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let log_n = rng.range((min_n as f64).ln(), (max_n as f64).ln());
+        sizes.push(log_n.exp() as usize);
+    }
+
+    println!("submitting {requests} solves, N in [{min_n}, {max_n}] (log-uniform)…");
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(requests);
+    for (i, &n) in sizes.iter().enumerate() {
+        let sys = random_dd_system(&mut rng, n, 0.5);
+        // Retry on backpressure — the bounded queue is part of the test.
+        loop {
+            match svc.submit(SolveRequest::new(i as u64, sys.clone())) {
+                Ok(rx) => {
+                    rxs.push(rx);
+                    break;
+                }
+                Err(_) => std::thread::sleep(std::time::Duration::from_micros(100)),
+            }
+        }
+    }
+
+    let mut lat_ms = Vec::new();
+    let mut sim_gpu_ms = Vec::new();
+    let mut worst_res: f64 = 0.0;
+    let mut by_backend = std::collections::BTreeMap::<&str, usize>::new();
+    for rx in rxs {
+        let resp = rx.recv()?.map_err(anyhow::Error::msg)?;
+        lat_ms.push((resp.queue_us + resp.exec_us) / 1e3);
+        sim_gpu_ms.push(resp.simulated_gpu_us / 1e3);
+        worst_res = worst_res.max(resp.residual.unwrap_or(0.0));
+        *by_backend.entry(resp.backend.name()).or_default() += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = svc.metrics();
+
+    println!("\n== end-to-end results ==");
+    println!(
+        "throughput        : {requests} solves in {wall:.2}s = {:.1} req/s",
+        requests as f64 / wall
+    );
+    println!(
+        "latency (ms)      : mean {:.2}  p50 {:.2}  p95 {:.2}  max {:.2}",
+        mean(&lat_ms),
+        percentile(&lat_ms, 50.0),
+        percentile(&lat_ms, 95.0),
+        percentile(&lat_ms, 100.0)
+    );
+    println!("worst residual    : {worst_res:.3e}");
+    println!("backends          : {by_backend:?} in {} batches", m.batches);
+    println!(
+        "simulated GPU cost: mean {:.3} ms/solve (what this workload would cost on the paper's 2080 Ti)",
+        mean(&sim_gpu_ms)
+    );
+    assert!(worst_res < 1e-8, "residual check failed");
+    assert_eq!(m.completed as usize, requests);
+    svc.shutdown();
+    println!("serve_workload OK");
+    Ok(())
+}

@@ -1,0 +1,130 @@
+"""AOT pipeline: lower every (stage, dtype, m, P-bucket) variant to HLO text.
+
+Interchange format is HLO **text**, not ``.serialize()``: the runtime links
+xla_extension 0.5.1, which rejects jax>=0.5 serialized protos (64-bit
+instruction ids); the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; the Rust binary is self-contained afterwards.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Variant grid. m values are the corrected optima of Table 1 (§2.4) plus the
+# small sizes the recursion planner's Remark fixes m_1 to; P buckets bound
+# the artifact count — the Rust router pads the sub-system count up to the
+# next bucket with identity rows (runtime/pad.rs), which stage1's data-driven
+# decoupling makes exact (kernels/stage1.py docstring).
+M_VALUES = [4, 8, 10, 16, 20, 32, 64]
+P_BUCKETS = [32, 256, 2048]
+DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+STAGES = ["stage1", "stage3", "fused"]
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(stage: str, dtype_name: str, m: int, p: int) -> str:
+    dt = DTYPES[dtype_name]
+    blk = model.block_shape(p, m, dt)
+    vec = model.vec_shape(p, dt)
+    if stage == "stage1":
+        lowered = jax.jit(model.stage1_fn).lower(blk, blk, blk, blk)
+    elif stage == "stage3":
+        lowered = jax.jit(model.stage3_fn).lower(blk, blk, blk, blk, vec, vec)
+    elif stage == "fused":
+        lowered = jax.jit(model.fused_fn).lower(blk, blk, blk, blk)
+    else:
+        raise ValueError(f"unknown stage {stage}")
+    return to_hlo_text(lowered)
+
+
+def variant_entry(stage: str, dtype_name: str, m: int, p: int, path: str) -> dict:
+    blk = {"shape": [p, m], "dtype": dtype_name}
+    vec = {"shape": [p], "dtype": dtype_name}
+    inputs = [blk, blk, blk, blk]
+    if stage == "stage3":
+        inputs += [vec, vec]
+    outputs = {"stage1": {"shape": [p, 8], "dtype": dtype_name}}.get(
+        stage, {"shape": [p, m], "dtype": dtype_name}
+    )
+    return {
+        "name": f"{stage}_{dtype_name}_m{m}_p{p}",
+        "stage": stage,
+        "dtype": dtype_name,
+        "m": m,
+        "p": p,
+        "path": path,
+        "inputs": inputs,
+        "outputs": [outputs],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="only the smallest bucket per (stage, dtype, m) — for CI smoke",
+    )
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    buckets = P_BUCKETS[:1] if args.quick else P_BUCKETS
+    entries = []
+    n_total = len(STAGES) * len(DTYPES) * len(M_VALUES) * len(buckets)
+    i = 0
+    for stage in STAGES:
+        for dtype_name in DTYPES:
+            for m in M_VALUES:
+                for p in buckets:
+                    i += 1
+                    fname = f"{stage}_{dtype_name}_m{m}_p{p}.hlo.txt"
+                    path = os.path.join(out_dir, fname)
+                    text = lower_variant(stage, dtype_name, m, p)
+                    with open(path, "w") as f:
+                        f.write(text)
+                    entries.append(variant_entry(stage, dtype_name, m, p, fname))
+                    print(f"[{i}/{n_total}] {fname} ({len(text)} chars)")
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "m_values": M_VALUES,
+        "p_buckets": buckets,
+        "dtypes": sorted(DTYPES),
+        "stages": STAGES,
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for the tridiagonal partition method.
+
+Data decomposition (see DESIGN.md §3 "Hardware adaptation"): the paper's
+"one CUDA thread per sub-system" becomes "one VPU lane per sub-system" —
+arrays are laid out ``(P, m)`` (P sub-systems of m unknowns) and a Pallas
+grid tiles P into VMEM-resident blocks of ``TILE_P`` sub-systems; the
+recurrences over ``m`` run as vectorized sweeps across the whole tile.
+
+All kernels are lowered with ``interpret=True``: real-TPU lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute, and this repo's
+runtime is the PJRT CPU client (see /opt/xla-example/README.md).
+"""
+
+from .stage1 import stage1_interface, TILE_P  # noqa: F401
+from .stage3 import stage3_backsolve  # noqa: F401

@@ -1,0 +1,108 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Deliberately written through a *different* solve path than the kernels:
+per-block systems are materialized as dense ``(m, m)`` matrices and solved
+with ``jnp.linalg.solve`` (vmapped over blocks), so a bug in the shared
+Thomas-sweep machinery cannot cancel out between kernel and oracle. The
+whole-pipeline oracle is a ``lax.scan`` Thomas over the full N-sized system.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def thomas(a, b, c, d):
+    """Sequential Thomas over one full tridiagonal system (scan-based).
+
+    ``a[0]`` is forced to 0 (no row above the first); ``c[-1]`` is never
+    read by the backward pass for a well-posed system.
+    """
+
+    def fwd(carry, row):
+        cp_prev, dp_prev = carry
+        ai, bi, ci, di = row
+        w = bi - ai * cp_prev
+        cp = ci / w
+        dp = (di - ai * dp_prev) / w
+        return (cp, dp), (cp, dp)
+
+    a0 = a.at[0].set(0.0)
+    init = (jnp.zeros((), b.dtype), jnp.zeros((), b.dtype))
+    (_, _), (cp, dp) = jax.lax.scan(fwd, init, (a0, b, c, d))
+
+    def bwd(x_next, row):
+        cp_i, dp_i = row
+        x = dp_i - cp_i * x_next
+        return x, x
+
+    _, x = jax.lax.scan(bwd, jnp.zeros((), b.dtype), (cp, dp), reverse=True)
+    return x
+
+
+def _block_dense(a_k, b_k, c_k):
+    """Dense (m, m) local matrix; ``a_k[0]`` / ``c_k[m-1]`` are external."""
+    t = jnp.diag(b_k)
+    t = t + jnp.diag(a_k[1:], k=-1)
+    t = t + jnp.diag(c_k[:-1], k=1)
+    return t
+
+
+def ref_stage1(a, b, c, d):
+    """Dense-solve oracle for ``stage1_interface``; returns ``(P, 8)``."""
+
+    def per_block(a_k, b_k, c_k, d_k):
+        m = b_k.shape[0]
+        t = _block_dense(a_k, b_k, c_k)
+        e0 = jnp.zeros((m,), b_k.dtype).at[0].set(1.0)
+        em = jnp.zeros((m,), b_k.dtype).at[m - 1].set(1.0)
+        y = jnp.linalg.solve(t, d_k)
+        u = jnp.linalg.solve(t, -a_k[0] * e0)
+        v = jnp.linalg.solve(t, -c_k[m - 1] * em)
+        y0, ym = y[0], y[m - 1]
+        u0, um = u[0], u[m - 1]
+        v0, vm = v[0], v[m - 1]
+        zero = jnp.zeros_like(y0)
+        one = jnp.ones_like(y0)
+        right_dec = vm == 0
+        left_dec = u0 == 0
+        up = jnp.where(
+            right_dec,
+            jnp.stack([-u0, one, zero, y0]),
+            jnp.stack([v0 * um - vm * u0, vm, -v0, vm * y0 - v0 * ym]),
+        )
+        dn = jnp.where(
+            left_dec,
+            jnp.stack([zero, one, -vm, ym]),
+            jnp.stack([um, -u0, u0 * vm - um * v0, um * y0 - u0 * ym]),
+        )
+        up = up / up[1]
+        dn = dn / dn[1]
+        return jnp.concatenate([up, dn])
+
+    return jax.vmap(per_block)(a, b, c, d)
+
+
+def ref_stage3(a, b, c, d, xf, xl):
+    """Dense-solve oracle for ``stage3_backsolve``; returns ``(P, m)``."""
+
+    def per_block(a_k, b_k, c_k, d_k, xf_k, xl_k):
+        m = b_k.shape[0]
+        # Interior system: rows 1..m-2 of the block, boundaries folded in.
+        ti = jnp.diag(b_k[1 : m - 1])
+        ti = ti + jnp.diag(a_k[2 : m - 1], k=-1)
+        ti = ti + jnp.diag(c_k[1 : m - 2], k=1)
+        rhs = d_k[1 : m - 1]
+        rhs = rhs.at[0].add(-a_k[1] * xf_k)
+        rhs = rhs.at[m - 3].add(-c_k[m - 2] * xl_k)
+        xi = jnp.linalg.solve(ti, rhs)
+        return jnp.concatenate([xf_k[None], xi, xl_k[None]])
+
+    return jax.vmap(per_block)(a, b, c, d, xf, xl)
+
+
+def ref_full_solve(a, b, c, d):
+    """Whole-system oracle: flatten blocks and Thomas the full system."""
+    x = thomas(a.reshape(-1), b.reshape(-1), c.reshape(-1), d.reshape(-1))
+    return x.reshape(a.shape)

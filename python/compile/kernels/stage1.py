@@ -1,0 +1,161 @@
+"""Stage-1 Pallas kernel: per-sub-system interface-equation reduction.
+
+For each sub-system (block) ``k`` with local tridiagonal matrix ``T_k``
+(built from ``a[k,1:], b[k,:], c[k,:-1]``), local RHS ``d_k``, left coupling
+``a[k,0]`` (to the previous block's last unknown ``x_prev``) and right
+coupling ``c[k,m-1]`` (to the next block's first unknown ``x_next``), the
+kernel solves the three local systems sharing one Thomas factorization::
+
+    T y = d          (particular solution)
+    T u = -a[k,0] * e_0      (left spike)
+    T v = -c[k,m-1] * e_{m-1}  (right spike)
+
+so that the local solution is ``x = y + u * x_prev + v * x_next``. Only the
+six endpoint values ``y_0, y_{m-1}, u_0, u_{m-1}, v_0, v_{m-1}`` are needed
+(the memory-efficient formulation of Austin-Berndt-Moulton [1]); eliminating
+``x_next`` / ``x_prev`` between the two endpoint relations yields the two
+interface equations (DESIGN.md §4)::
+
+    UP_k  :  alpha  * x_prev + beta  * x_f + gamma  * x_l    = delta
+    DOWN_k:  alpha' * x_f    + beta' * x_l + gamma' * x_next = delta'
+
+which assemble into a *tridiagonal* system of size 2P. Both equations are
+returned normalized by their diagonal (beta resp. beta'), so the output per
+block is ``[alpha, 1, gamma, delta, alpha', 1, gamma', delta']`` — stored as
+``(P, 8)`` with the unit diagonals omitted from computation downstream.
+
+Decoupling (zero spike) is detected data-driven — ``v == 0`` (right-decoupled:
+the global last block, or a padded identity block) switches UP to the direct
+endpoint relation ``x_f - u_0 x_prev = y_0``; ``u == 0`` (left-decoupled)
+switches DOWN to ``x_l - v_{m-1} x_next = y_{m-1}``. This makes padding with
+identity rows (a=0, b=1, c=0, d=0) exact: padded blocks produce
+``x_f = x_l = 0`` and no coupling, so the router can round P up to a bucket
+size without changing the real solution (property-tested in
+tests/test_padding.py and rust/src/runtime/pad.rs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default number of sub-systems per VMEM tile. 128 lanes match the VPU lane
+# width; with m = 64 / FP64 a tile holds 128*64*8 B = 64 KiB per operand,
+# 8 operands (4 inputs + 4 sweep intermediates) = 512 KiB — comfortably
+# within a ~16 MiB VMEM budget (DESIGN.md §10, EXPERIMENTS.md §Perf L1).
+TILE_P = 128
+
+
+def _stage1_kernel(a_ref, b_ref, c_ref, d_ref, out_ref):
+    """Kernel body over one (tile, m) block of sub-systems."""
+    a = a_ref[...]
+    b = b_ref[...]
+    c = c_ref[...]
+    d = d_ref[...]
+    tile, m = a.shape
+    dt = a.dtype
+
+    # ---- shared Thomas forward elimination, three RHS transformed at once.
+    w0 = b[:, 0]
+    cp = jnp.zeros((tile, m), dt).at[:, 0].set(c[:, 0] / w0)
+    dy = jnp.zeros((tile, m), dt).at[:, 0].set(d[:, 0] / w0)
+    du = jnp.zeros((tile, m), dt).at[:, 0].set(-a[:, 0] / w0)
+    dv = jnp.zeros((tile, m), dt)  # v's RHS lives at row m-1 only
+
+    def fwd(i, st):
+        cp, dy, du, dv = st
+        ai = a[:, i]
+        w = b[:, i] - ai * cp[:, i - 1]
+        # The v system's RHS is -c[:, m-1] at the last row, 0 elsewhere.
+        rv = jnp.where(i == m - 1, -c[:, i], jnp.zeros_like(w))
+        cp = cp.at[:, i].set(c[:, i] / w)
+        dy = dy.at[:, i].set((d[:, i] - ai * dy[:, i - 1]) / w)
+        du = du.at[:, i].set((-ai * du[:, i - 1]) / w)
+        dv = dv.at[:, i].set((rv - ai * dv[:, i - 1]) / w)
+        return cp, dy, du, dv
+
+    cp, dy, du, dv = jax.lax.fori_loop(1, m, fwd, (cp, dy, du, dv))
+
+    # ---- back-substitution, carrying only the running endpoint values.
+    ym = dy[:, m - 1]
+    um = du[:, m - 1]
+    vm = dv[:, m - 1]
+
+    def bwd(t, st):
+        y, u, v = st
+        i = m - 2 - t
+        y = dy[:, i] - cp[:, i] * y
+        u = du[:, i] - cp[:, i] * u
+        v = dv[:, i] - cp[:, i] * v
+        return y, u, v
+
+    y0, u0, v0 = jax.lax.fori_loop(0, m - 1, bwd, (ym, um, vm))
+
+    # ---- interface equations (DESIGN.md §4), data-driven decoupling.
+    zero = jnp.zeros_like(y0)
+    one = jnp.ones_like(y0)
+    right_dec = vm == 0  # no right neighbour (last block / padding)
+    left_dec = u0 == 0  # no left neighbour (first block / padding)
+
+    # UP: eliminate x_next between the endpoint relations; if right-decoupled
+    # use  x_f - u0 * x_prev = y0  directly.
+    up_alpha = jnp.where(right_dec, -u0, v0 * um - vm * u0)
+    up_beta = jnp.where(right_dec, one, vm)
+    up_gamma = jnp.where(right_dec, zero, -v0)
+    up_delta = jnp.where(right_dec, y0, vm * y0 - v0 * ym)
+
+    # DOWN: eliminate x_prev; if left-decoupled use  x_l - vm * x_next = ym.
+    dn_alpha = jnp.where(left_dec, zero, um)
+    dn_beta = jnp.where(left_dec, one, -u0)
+    dn_gamma = jnp.where(left_dec, -vm, u0 * vm - um * v0)
+    dn_delta = jnp.where(left_dec, ym, um * y0 - u0 * ym)
+
+    out_ref[...] = jnp.stack(
+        [
+            up_alpha / up_beta,
+            jnp.ones_like(up_beta),
+            up_gamma / up_beta,
+            up_delta / up_beta,
+            dn_alpha / dn_beta,
+            jnp.ones_like(dn_beta),
+            dn_gamma / dn_beta,
+            dn_delta / dn_beta,
+        ],
+        axis=1,
+    )
+
+
+def _pick_tile(p: int) -> int:
+    tile = min(TILE_P, p)
+    while p % tile != 0:  # grid must tile P exactly
+        tile //= 2
+    return max(tile, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_p", "interpret"))
+def stage1_interface(a, b, c, d, *, tile_p: int | None = None, interpret: bool = True):
+    """Compute normalized interface coefficients, shape ``(P, 8)``.
+
+    Inputs are ``(P, m)``: per-block sub-diagonal ``a`` (``a[k,0]`` = left
+    coupling; the global system must have ``a[0,0] == 0``), diagonal ``b``,
+    super-diagonal ``c`` (``c[k,m-1]`` = right coupling; global
+    ``c[P-1,m-1] == 0``) and RHS ``d``.
+    """
+    p, m = a.shape
+    if m < 3:
+        raise ValueError(f"sub-system size m must be >= 3, got {m}")
+    tile = tile_p or _pick_tile(p)
+    grid = (p // tile,)
+    spec_in = pl.BlockSpec((tile, m), lambda i: (i, 0))
+    spec_out = pl.BlockSpec((tile, 8), lambda i: (i, 0))
+    return pl.pallas_call(
+        _stage1_kernel,
+        grid=grid,
+        in_specs=[spec_in, spec_in, spec_in, spec_in],
+        out_specs=spec_out,
+        out_shape=jax.ShapeDtypeStruct((p, 8), a.dtype),
+        interpret=interpret,
+    )(a, b, c, d)

@@ -1,0 +1,90 @@
+"""Stage-3 Pallas kernel: per-sub-system interior back-solve.
+
+After Stage 2 has solved the interface system, every block knows its own
+boundary unknowns ``x_f = x[k*m]`` and ``x_l = x[k*m + m - 1]``. The interior
+unknowns ``x[1..m-2]`` then satisfy an independent tridiagonal system of size
+``m - 2`` whose RHS folds the known boundary values in::
+
+    rhs[1]   = d[1]   - a[1]   * x_f
+    rhs[m-2] = d[m-2] - c[m-2] * x_l     (cumulative when m == 3)
+
+One Thomas sweep per block, vectorized across the tile (one VPU lane per
+sub-system — see kernels/__init__.py for the CUDA->TPU mapping).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .stage1 import TILE_P, _pick_tile
+
+
+def _stage3_kernel(a_ref, b_ref, c_ref, d_ref, xf_ref, xl_ref, x_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    c = c_ref[...]
+    d = d_ref[...]
+    xf = xf_ref[...]
+    xl = xl_ref[...]
+    tile, m = a.shape
+    dt = a.dtype
+
+    # Fold boundary values into the interior RHS (cumulative so m == 3,
+    # where both corrections hit row 1, is handled by the same code).
+    rhs = d.at[:, 1].add(-a[:, 1] * xf)
+    rhs = rhs.at[:, m - 2].add(-c[:, m - 2] * xl)
+
+    # Thomas forward elimination over interior rows 1 .. m-2.
+    w1 = b[:, 1]
+    cp = jnp.zeros((tile, m), dt).at[:, 1].set(c[:, 1] / w1)
+    dp = jnp.zeros((tile, m), dt).at[:, 1].set(rhs[:, 1] / w1)
+
+    def fwd(i, st):
+        cp, dp = st
+        ai = a[:, i]
+        w = b[:, i] - ai * cp[:, i - 1]
+        cp = cp.at[:, i].set(c[:, i] / w)
+        dp = dp.at[:, i].set((rhs[:, i] - ai * dp[:, i - 1]) / w)
+        return cp, dp
+
+    cp, dp = jax.lax.fori_loop(2, m - 1, fwd, (cp, dp))
+
+    # Back-substitution, writing interior unknowns as we go.
+    x = jnp.zeros((tile, m), dt)
+    x = x.at[:, 0].set(xf)
+    x = x.at[:, m - 1].set(xl)
+    x = x.at[:, m - 2].set(dp[:, m - 2])
+
+    def bwd(t, x):
+        i = m - 3 - t
+        xi = dp[:, i] - cp[:, i] * x[:, i + 1]
+        return x.at[:, i].set(xi)
+
+    x = jax.lax.fori_loop(0, m - 3, bwd, x)
+    x_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("tile_p", "interpret"))
+def stage3_backsolve(a, b, c, d, xf, xl, *, tile_p: int | None = None, interpret: bool = True):
+    """Solve all block interiors given boundary values; returns ``(P, m)``."""
+    p, m = a.shape
+    if m < 3:
+        raise ValueError(f"sub-system size m must be >= 3, got {m}")
+    if xf.shape != (p,) or xl.shape != (p,):
+        raise ValueError(f"boundary shapes {xf.shape}/{xl.shape} != ({p},)")
+    tile = tile_p or _pick_tile(p)
+    grid = (p // tile,)
+    spec_mat = pl.BlockSpec((tile, m), lambda i: (i, 0))
+    spec_vec = pl.BlockSpec((tile,), lambda i: (i,))
+    return pl.pallas_call(
+        _stage3_kernel,
+        grid=grid,
+        in_specs=[spec_mat, spec_mat, spec_mat, spec_mat, spec_vec, spec_vec],
+        out_specs=spec_mat,
+        out_shape=jax.ShapeDtypeStruct((p, m), a.dtype),
+        interpret=interpret,
+    )(a, b, c, d, xf, xl)

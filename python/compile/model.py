@@ -1,0 +1,82 @@
+"""Layer-2 JAX model: the partition-method compute graphs.
+
+Three graph families, all calling the Layer-1 Pallas kernels, each lowered
+once per ``(P, m, dtype)`` variant by ``aot.py``:
+
+* ``stage1``  — interface-equation reduction only. Production path: the Rust
+  coordinator runs Stage 2 (host Thomas or recursive re-partition) between
+  ``stage1`` and ``stage3`` executions, mirroring the paper's device/host
+  split including the (simulated) D2H/H2D transfers.
+* ``stage3``  — interior back-solve given Stage-2 boundary values.
+* ``fused``   — the whole non-recursive partition solve as one HLO module
+  (Stage 2 as an in-graph ``lax.scan`` Thomas); used by the runtime
+  integration tests and the single-call solve path.
+
+Python is build-time only; none of this is imported at request time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import stage1_interface, stage3_backsolve
+from .kernels.ref import thomas as _thomas_scan
+
+
+def assemble_interface(iface):
+    """Assemble the 2P tridiagonal interface system from ``(P, 8)`` coeffs.
+
+    Row ``2k`` is UP_k ``(alpha, 1, gamma | delta)`` over unknowns
+    ``(x_{k-1,l}, x_{k,f}, x_{k,l})``; row ``2k+1`` is DOWN_k over
+    ``(x_{k,f}, x_{k,l}, x_{k+1,f})`` — consecutive columns, so the
+    sub/diag/super vectors interleave directly (DESIGN.md §4).
+    """
+    up_a, up_g, up_d = iface[:, 0], iface[:, 2], iface[:, 3]
+    dn_a, dn_g, dn_d = iface[:, 4], iface[:, 6], iface[:, 7]
+    sub = jnp.stack([up_a, dn_a], axis=1).reshape(-1)
+    diag = jnp.ones_like(sub)
+    sup = jnp.stack([up_g, dn_g], axis=1).reshape(-1)
+    rhs = jnp.stack([up_d, dn_d], axis=1).reshape(-1)
+    return sub, diag, sup, rhs
+
+
+def solve_interface(iface):
+    """Stage 2 in-graph: Thomas over the assembled interface system.
+
+    Returns ``(xf, xl)`` each of shape ``(P,)``.
+    """
+    sub, diag, sup, rhs = assemble_interface(iface)
+    x = _thomas_scan(sub, diag, sup, rhs)
+    xb = x.reshape(-1, 2)
+    return xb[:, 0], xb[:, 1]
+
+
+def fused_solve(a, b, c, d, *, interpret: bool = True):
+    """Full non-recursive partition solve: stage1 -> stage2 -> stage3."""
+    iface = stage1_interface(a, b, c, d, interpret=interpret)
+    xf, xl = solve_interface(iface)
+    return stage3_backsolve(a, b, c, d, xf, xl, interpret=interpret)
+
+
+def stage1_fn(a, b, c, d):
+    """AOT entry point for the stage1 artifact (1-tuple output)."""
+    return (stage1_interface(a, b, c, d),)
+
+
+def stage3_fn(a, b, c, d, xf, xl):
+    """AOT entry point for the stage3 artifact (1-tuple output)."""
+    return (stage3_backsolve(a, b, c, d, xf, xl),)
+
+
+def fused_fn(a, b, c, d):
+    """AOT entry point for the fused artifact (1-tuple output)."""
+    return (fused_solve(a, b, c, d),)
+
+
+def block_shape(p: int, m: int, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((p, m), dtype)
+
+
+def vec_shape(p: int, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((p,), dtype)

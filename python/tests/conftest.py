@@ -1,0 +1,37 @@
+"""Shared fixtures: FP64 mode and diagonally-dominant system generators."""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+def make_blocks(rng, p, m, dtype=np.float64, dominance=0.5):
+    """Random diagonally-dominant tridiagonal system in (P, m) block layout.
+
+    Row-wise dominance: |b| >= |a| + |c| + dominance. The global first/last
+    couplings are zeroed (well-posed full system).
+    """
+    a = rng.uniform(-1.0, -0.1, (p, m)).astype(dtype)
+    c = rng.uniform(0.1, 1.0, (p, m)).astype(dtype)
+    b = (np.abs(a) + np.abs(c) + rng.uniform(dominance, dominance + 1.0, (p, m))).astype(dtype)
+    sign = rng.choice([-1.0, 1.0], (p, m)).astype(dtype)
+    b = b * sign
+    d = rng.uniform(-1.0, 1.0, (p, m)).astype(dtype)
+    a[0, 0] = 0.0
+    c[-1, -1] = 0.0
+    return tuple(jnp.asarray(x) for x in (a, b, c, d))
+
+
+def tol_for(dtype) -> float:
+    return 1e-10 if dtype == np.float64 else 2e-4
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(12345)

@@ -1,0 +1,57 @@
+"""AOT pipeline tests: HLO text generation and manifest integrity."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+def test_lower_variant_produces_hlo_text():
+    text = aot.lower_variant("stage1", "f64", 4, 32)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # f64 inputs must survive lowering (x64 enabled in aot.py).
+    assert "f64[32,4]" in text
+
+
+def test_lower_fused_contains_while_loop():
+    """The scan-based Stage-2 Thomas must lower to a while op, keeping the
+    HLO size O(1) in P (DESIGN.md §10 L2)."""
+    text = aot.lower_variant("fused", "f32", 4, 32)
+    assert "while" in text
+
+
+def test_lower_unknown_stage_rejected():
+    with pytest.raises(ValueError, match="unknown stage"):
+        aot.lower_variant("stage2", "f64", 4, 32)
+
+
+def test_manifest_entry_shapes():
+    e1 = aot.variant_entry("stage1", "f64", 8, 256, "x.hlo.txt")
+    assert e1["inputs"] == [{"shape": [256, 8], "dtype": "f64"}] * 4
+    assert e1["outputs"] == [{"shape": [256, 8], "dtype": "f64"}]
+    e3 = aot.variant_entry("stage3", "f32", 4, 32, "y.hlo.txt")
+    assert len(e3["inputs"]) == 6
+    assert e3["inputs"][4] == {"shape": [32], "dtype": "f32"}
+    assert e3["outputs"] == [{"shape": [32, 4], "dtype": "f32"}]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_is_complete():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == aot.MANIFEST_VERSION
+    expect = len(man["stages"]) * len(man["dtypes"]) * len(man["m_values"]) * len(man["p_buckets"])
+    assert len(man["artifacts"]) == expect
+    for entry in man["artifacts"]:
+        path = os.path.join(root, entry["path"])
+        assert os.path.exists(path), f"missing artifact {entry['path']}"
+        assert os.path.getsize(path) > 1000

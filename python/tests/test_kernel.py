@@ -1,0 +1,93 @@
+"""Kernel vs pure-jnp oracle — the CORE correctness signal of Layer 1.
+
+``stage1_interface`` / ``stage3_backsolve`` (Pallas, interpret mode) must
+match ``ref.py``'s dense-solve oracles to close to machine precision across
+shapes, dtypes and tile configurations.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import stage1_interface, stage3_backsolve
+from compile.kernels.ref import ref_full_solve, ref_stage1, ref_stage3
+
+from .conftest import make_blocks, tol_for
+
+SHAPES = [(1, 4), (2, 3), (5, 4), (16, 8), (32, 20), (7, 16), (128, 5), (256, 4)]
+DTYPES = [np.float64, np.float32]
+
+
+@pytest.mark.parametrize("p,m", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_stage1_matches_oracle(rng, p, m, dtype):
+    a, b, c, d = make_blocks(rng, p, m, dtype)
+    got = stage1_interface(a, b, c, d)
+    want = ref_stage1(a, b, c, d)
+    np.testing.assert_allclose(got, want, atol=tol_for(dtype), rtol=tol_for(dtype))
+
+
+@pytest.mark.parametrize("p,m", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_stage3_matches_oracle(rng, p, m, dtype):
+    a, b, c, d = make_blocks(rng, p, m, dtype)
+    xf = jnp.asarray(rng.uniform(-1, 1, (p,)).astype(dtype))
+    xl = jnp.asarray(rng.uniform(-1, 1, (p,)).astype(dtype))
+    got = stage3_backsolve(a, b, c, d, xf, xl)
+    want = ref_stage3(a, b, c, d, xf, xl)
+    np.testing.assert_allclose(got, want, atol=tol_for(dtype), rtol=tol_for(dtype))
+
+
+@pytest.mark.parametrize("tile_p", [1, 2, 4, 8, 16])
+def test_stage1_tile_invariance(rng, tile_p):
+    """The grid/BlockSpec tiling must not change the numbers (up to FMA
+    re-association differences in XLA's per-shape CPU codegen)."""
+    a, b, c, d = make_blocks(rng, 16, 8)
+    base = stage1_interface(a, b, c, d, tile_p=16)
+    tiled = stage1_interface(a, b, c, d, tile_p=tile_p)
+    np.testing.assert_allclose(tiled, base, atol=1e-14, rtol=1e-13)
+
+
+def test_stage1_unit_diagonals(rng):
+    """Interface rows are normalized: columns 1 and 5 are exactly 1."""
+    a, b, c, d = make_blocks(rng, 8, 8)
+    iface = np.asarray(stage1_interface(a, b, c, d))
+    np.testing.assert_array_equal(iface[:, 1], 1.0)
+    np.testing.assert_array_equal(iface[:, 5], 1.0)
+
+
+def test_stage1_interface_diagonally_dominant(rng):
+    """The interface system inherits diagonal dominance from the input."""
+    a, b, c, d = make_blocks(rng, 32, 8, dominance=1.0)
+    iface = np.asarray(stage1_interface(a, b, c, d))
+    off = np.abs(iface[:, [0, 2, 4, 6]])
+    assert np.all(off[:, 0] + off[:, 1] < 1.0 + 1e-12)  # UP rows
+    assert np.all(off[:, 2] + off[:, 3] < 1.0 + 1e-12)  # DOWN rows
+
+
+def test_stage1_boundary_decoupling(rng):
+    """First block has no x_prev term; last block has no x_next term."""
+    a, b, c, d = make_blocks(rng, 8, 8)
+    iface = np.asarray(stage1_interface(a, b, c, d))
+    assert iface[0, 0] == 0.0  # UP_0 alpha
+    assert iface[0, 4] == 0.0  # DOWN_0 alpha'
+    assert iface[-1, 6] == 0.0  # DOWN_{P-1} gamma'
+    assert iface[-1, 2] == 0.0  # UP_{P-1} gamma
+
+
+def test_m_too_small_rejected(rng):
+    a, b, c, d = make_blocks(rng, 4, 3)
+    with pytest.raises(ValueError, match="m must be >= 3"):
+        stage1_interface(a[:, :2], b[:, :2], c[:, :2], d[:, :2])
+
+
+def test_full_pipeline_vs_global_thomas(rng):
+    """stage1 -> interface Thomas -> stage3 == Thomas on the full system."""
+    for p, m in [(4, 4), (16, 8), (64, 16), (25, 20)]:
+        a, b, c, d = make_blocks(rng, p, m)
+        x = model.fused_solve(a, b, c, d)
+        want = ref_full_solve(a, b, c, d)
+        np.testing.assert_allclose(x, want, atol=1e-10, rtol=1e-10)

@@ -1,0 +1,111 @@
+"""Hypothesis sweeps over shapes/dtypes and system structure (Layer 1).
+
+These complement the fixed-shape tests in test_kernel.py by letting
+hypothesis explore the (P, m, dtype, dominance, seed) space and a few
+structural edge cases (constant Toeplitz rows, asymmetric couplings).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import stage1_interface, stage3_backsolve
+from compile.kernels.ref import ref_full_solve, ref_stage1, ref_stage3
+
+from .conftest import make_blocks, tol_for
+
+shapes = st.tuples(st.integers(1, 64), st.integers(3, 40))
+dtypes = st.sampled_from([np.float64, np.float32])
+seeds = st.integers(0, 2**31 - 1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape=shapes, dtype=dtypes, seed=seeds, dominance=st.floats(0.05, 3.0))
+def test_stage1_property(shape, dtype, seed, dominance):
+    p, m = shape
+    rng = np.random.default_rng(seed)
+    a, b, c, d = make_blocks(rng, p, m, dtype, dominance)
+    got = stage1_interface(a, b, c, d)
+    want = ref_stage1(a, b, c, d)
+    np.testing.assert_allclose(got, want, atol=tol_for(dtype), rtol=tol_for(dtype))
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape=shapes, dtype=dtypes, seed=seeds)
+def test_stage3_property(shape, dtype, seed):
+    p, m = shape
+    rng = np.random.default_rng(seed)
+    a, b, c, d = make_blocks(rng, p, m, dtype)
+    xf = jnp.asarray(rng.uniform(-1, 1, (p,)).astype(dtype))
+    xl = jnp.asarray(rng.uniform(-1, 1, (p,)).astype(dtype))
+    got = stage3_backsolve(a, b, c, d, xf, xl)
+    want = ref_stage3(a, b, c, d, xf, xl)
+    np.testing.assert_allclose(got, want, atol=tol_for(dtype), rtol=tol_for(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=st.tuples(st.integers(1, 32), st.integers(3, 24)), seed=seeds)
+def test_full_solve_property(shape, seed):
+    """End-to-end partition solve equals global Thomas for any shape."""
+    p, m = shape
+    rng = np.random.default_rng(seed)
+    a, b, c, d = make_blocks(rng, p, m)
+    x = model.fused_solve(a, b, c, d)
+    want = ref_full_solve(a, b, c, d)
+    np.testing.assert_allclose(x, want, atol=1e-9, rtol=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p_real=st.integers(1, 20),
+    p_pad=st.integers(0, 20),
+    m=st.integers(3, 16),
+    seed=seeds,
+)
+def test_padding_property(p_real, p_pad, m, seed):
+    """Appending identity blocks never perturbs the real solution (§7)."""
+    rng = np.random.default_rng(seed)
+    a, b, c, d = (np.asarray(x) for x in make_blocks(rng, p_real, m))
+    pad = np.zeros((p_pad, m))
+    one = np.ones((p_pad, m))
+    ap = np.concatenate([a, pad])
+    bp = np.concatenate([b, one])
+    cp = np.concatenate([c, pad])
+    dp = np.concatenate([d, pad])
+    x_pad = model.fused_solve(*map(jnp.asarray, (ap, bp, cp, dp)))
+    x = model.fused_solve(*map(jnp.asarray, (a, b, c, d)))
+    np.testing.assert_allclose(x_pad[:p_real], x, atol=1e-12, rtol=1e-12)
+    np.testing.assert_array_equal(np.asarray(x_pad[p_real:]), 0.0)
+
+
+def test_toeplitz_constant_rows():
+    """Constant-coefficient (Toeplitz) systems — the classic benchmark case."""
+    p, m = 32, 16
+    n = p * m
+    a = np.full((p, m), -1.0)
+    b = np.full((p, m), 4.0)
+    c = np.full((p, m), -1.0)
+    d = np.arange(n, dtype=np.float64).reshape(p, m) / n
+    a[0, 0] = 0.0
+    c[-1, -1] = 0.0
+    x = model.fused_solve(*map(jnp.asarray, (a, b, c, d)))
+    want = ref_full_solve(*map(jnp.asarray, (a, b, c, d)))
+    np.testing.assert_allclose(x, want, atol=1e-12, rtol=1e-12)
+
+
+def test_residual_of_full_solve():
+    """Check A x = d directly (residual, not just oracle agreement)."""
+    rng = np.random.default_rng(7)
+    p, m = 16, 12
+    a, b, c, d = (np.asarray(v) for v in make_blocks(rng, p, m))
+    x = np.asarray(model.fused_solve(*map(jnp.asarray, (a, b, c, d)))).reshape(-1)
+    af, bf, cf, df = a.reshape(-1), b.reshape(-1), c.reshape(-1), d.reshape(-1)
+    n = p * m
+    res = bf * x
+    res[1:] += af[1:] * x[:-1]
+    res[:-1] += cf[:-1] * x[1:]
+    assert np.max(np.abs(res - df)) < 1e-11

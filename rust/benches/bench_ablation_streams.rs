@@ -1,0 +1,64 @@
+//! Ablation: derive the optimum CUDA-stream count from the event-driven
+//! pipeline model and compare with the published heuristic of the
+//! companion paper [5] (the `#streams` column of Table 1) — a design-
+//! choice check DESIGN.md §6 calls out: our simulator should *predict*
+//! the stream heuristic it elsewhere consumes, not merely hardcode it.
+//!
+//! Also ablates the §2.6 alignment rule: how much do misaligned
+//! sub-system sizes (m not a multiple of 32) cost once streams > 1?
+
+use partisol::data::paper;
+use partisol::gpu::simulator::GpuSimulator;
+use partisol::gpu::spec::{Dtype, GpuCard};
+use partisol::tuner::streams::optimum_streams;
+use partisol::util::table::{fmt_n, Table};
+
+fn main() {
+    let sim = GpuSimulator::new(GpuCard::Rtx2080Ti);
+
+    // ---- stream-count ablation.
+    let mut t = Table::new(&["N", "sim best s", "heuristic [5]", "ok (±1 step)", "gain vs 1 stream"])
+        .with_title("ABLATION — optimum stream count derived from the pipeline model");
+    let candidates = [1usize, 2, 4, 8, 16, 32];
+    let mut within_one = 0usize;
+    let mut rows = 0usize;
+    for row in paper::table1_rows() {
+        let m = row.m_corrected;
+        let times: Vec<f64> = candidates
+            .iter()
+            .map(|&s| sim.solve(row.n, m, s, Dtype::F64).total_us)
+            .collect();
+        let best_i = (0..times.len())
+            .min_by(|&a, &b| times[a].partial_cmp(&times[b]).unwrap())
+            .unwrap();
+        let best_s = candidates[best_i];
+        let want = optimum_streams(row.n);
+        let want_i = candidates.iter().position(|&s| s == want).unwrap();
+        let ok = best_i.abs_diff(want_i) <= 1;
+        within_one += ok as usize;
+        rows += 1;
+        t.row(vec![
+            fmt_n(row.n),
+            best_s.to_string(),
+            want.to_string(),
+            if ok { "yes".into() } else { "NO".into() },
+            format!("{:.2}x", times[0] / times[best_i]),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("pipeline-model optimum within one step of the [5] heuristic: {within_one}/{rows}");
+
+    // ---- §2.6 alignment ablation: cost of misaligned m at 8 streams.
+    println!("\nalignment ablation (N = 1e6, 8 streams, FP64): time vs m");
+    for m in [20usize, 32, 35, 40, 64] {
+        let aligned = m % 32 == 0;
+        let tt = sim.solve(1_000_000, m, 8, Dtype::F64).total_ms();
+        println!(
+            "  m {:>3} ({}aligned): {:.4} ms",
+            m,
+            if aligned { "  " } else { "un" },
+            tt
+        );
+    }
+    println!("(multiples of 32 avoid the offset-misalignment penalty — the paper's §2.6 observation)");
+}

@@ -1,0 +1,68 @@
+//! End-to-end service benchmark: throughput and latency of the threaded
+//! coordinator under a mixed synthetic workload (the serving-paper-style
+//! metric of EXPERIMENTS.md §E2E).
+
+use partisol::config::Config;
+use partisol::coordinator::{Service, SolveRequest};
+use partisol::solver::generator::random_dd_system;
+use partisol::util::Pcg64;
+use std::time::Instant;
+
+fn run_workload(cfg: Config, label: &str, requests: usize) {
+    let svc = match Service::start(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("{label}: SKIP ({e})");
+            return;
+        }
+    };
+    let mut rng = Pcg64::new(11);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        let n = (1000.0 * (100.0f64).powf(rng.uniform())) as usize; // 1e3..1e5
+        let sys = random_dd_system(&mut rng, n, 0.5);
+        loop {
+            match svc.submit(SolveRequest::new(i as u64, sys.clone())) {
+                Ok(rx) => {
+                    rxs.push(rx);
+                    break;
+                }
+                Err(_) => std::thread::sleep(std::time::Duration::from_micros(50)),
+            }
+        }
+    }
+    let ok = rxs
+        .into_iter()
+        .filter(|rx| matches!(rx.recv(), Ok(Ok(_))))
+        .count();
+    let wall = t0.elapsed().as_secs_f64();
+    let m = svc.metrics();
+    println!(
+        "{label}: {ok}/{requests} ok, {:.1} req/s | e2e p50 {:.1} ms p99 {:.1} ms | batches {} | pjrt {} native {} thomas {}",
+        ok as f64 / wall,
+        m.p50_e2e_us / 1e3,
+        m.p99_e2e_us / 1e3,
+        m.batches,
+        m.pjrt_solves,
+        m.native_solves,
+        m.thomas_solves
+    );
+    svc.shutdown();
+}
+
+fn main() {
+    println!("== end-to-end service benchmarks (64 mixed requests, N in 1e3..1e5) ==");
+    // PJRT-backed service (device thread + batching).
+    run_workload(Config::default(), "pjrt   ", 64);
+    // Native-only service (worker pool).
+    run_workload(
+        Config {
+            artifacts_dir: "/nonexistent".into(),
+            workers: 4,
+            ..Config::default()
+        },
+        "native ",
+        64,
+    );
+}

@@ -1,0 +1,45 @@
+//! Figure 1 reproduction: achieved vs theoretical occupancy for the
+//! Stage-1/Stage-3 kernels at the corrected optimum m per SLAE size.
+//!
+//! The paper's observation — achieved occupancy stays below 50% for N up
+//! to 4x10^7 while the theoretical occupancy is pinned at 100% — is why
+//! occupancy cannot be the tuning objective (§2.3).
+
+use partisol::data::paper;
+use partisol::gpu::occupancy::{achieved_occupancy, theoretical_occupancy, KernelResources};
+use partisol::gpu::spec::RTX_2080_TI;
+use partisol::util::table::{fmt_n, Table};
+
+fn main() {
+    let spec = &RTX_2080_TI;
+    let res = KernelResources::default();
+    let theo = theoretical_occupancy(spec, &res);
+
+    let mut t = Table::new(&["N", "opt m", "threads", "achieved %", "theoretical %"])
+        .with_title("FIGURE 1 — occupancy at the corrected optimum m [RTX 2080 Ti]");
+    let mut below_50_up_to_4e7 = true;
+    let mut crossed_after = false;
+    for row in paper::table1_rows() {
+        let m = row.m_corrected;
+        let threads = row.n / m;
+        let ach = achieved_occupancy(spec, &res, threads);
+        if row.n <= 40_000_000 && ach >= 0.5 {
+            below_50_up_to_4e7 = false;
+        }
+        if row.n > 40_000_000 && ach >= 0.5 {
+            crossed_after = true;
+        }
+        t.row(vec![
+            fmt_n(row.n),
+            m.to_string(),
+            threads.to_string(),
+            format!("{:.1}", ach * 100.0),
+            format!("{:.0}", theo.theoretical * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("theoretical occupancy pinned at 100%: {}", theo.theoretical == 1.0);
+    println!("achieved < 50% for all N <= 4e7 (paper's observation): {below_50_up_to_4e7}");
+    println!("achieved crosses 50% beyond 4e7: {crossed_after}");
+    println!("=> occupancy is not a usable tuning proxy (the optimum m does not maximize it)");
+}

@@ -1,0 +1,79 @@
+//! PJRT runtime hot-path microbenchmarks (EXPERIMENTS.md §Perf, L3):
+//! artifact routing, executable-cache hits, literal construction, Stage-1
+//! execution and the full PJRT partition solve.
+
+use partisol::gpu::spec::Dtype;
+use partisol::runtime::artifact::StageKind;
+use partisol::runtime::executor::pjrt_partition_solve;
+use partisol::runtime::pad::{to_blocks, BlockLayout};
+use partisol::runtime::Runtime;
+use partisol::solver::generator::random_dd_system;
+use partisol::util::stats::median;
+use partisol::util::timer::bench_loop;
+use partisol::util::Pcg64;
+use std::path::Path;
+use std::time::Duration;
+
+fn main() {
+    let rt = match Runtime::new(Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP: artifacts unavailable ({e}); run `make artifacts` first");
+            return;
+        }
+    };
+    let mut rng = Pcg64::new(3);
+
+    // Router/manifest lookup (must be O(1)-ish; called per request).
+    let samples = bench_loop(Duration::from_millis(200), 100, || {
+        let _ = std::hint::black_box(
+            rt.manifest()
+                .find(StageKind::Stage1, Dtype::F64, 32, 1500)
+                .unwrap(),
+        );
+    });
+    println!("manifest lookup:        {:>10.0} ns", median(&samples) * 1e9);
+
+    // Executable cache hit (compile happens once; the hot path re-uses).
+    let spec = rt
+        .manifest()
+        .find(StageKind::Stage1, Dtype::F64, 32, 256)
+        .unwrap()
+        .clone();
+    let _ = rt.executable(&spec).unwrap(); // warm
+    let samples = bench_loop(Duration::from_millis(200), 100, || {
+        let _ = std::hint::black_box(rt.executable(&spec).unwrap());
+    });
+    println!("executable cache hit:   {:>10.0} ns", median(&samples) * 1e9);
+
+    // Block layout + padding (pure CPU data prep).
+    let n = 256 * 32;
+    let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+    let layout = BlockLayout::new(n, 32, 256).unwrap();
+    let samples = bench_loop(Duration::from_millis(200), 20, || {
+        let _ = std::hint::black_box(to_blocks(&sys, &layout));
+    });
+    println!(
+        "to_blocks (N=8192):     {:>10.1} µs ({:.2} GB/s)",
+        median(&samples) * 1e6,
+        (n * 4 * 8) as f64 / median(&samples) / 1e9
+    );
+
+    // Full PJRT partition solve at one bucket (stage1 + host stage2 +
+    // stage3, including literal conversion both ways).
+    for n in [8_192usize, 65_536, 262_144] {
+        let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+        let _ = pjrt_partition_solve(&rt, &sys, 32).unwrap(); // warm compiles
+        let samples = bench_loop(Duration::from_millis(500), 3, || {
+            let _ = std::hint::black_box(pjrt_partition_solve(&rt, &sys, 32).unwrap());
+        });
+        let t = median(&samples);
+        println!(
+            "pjrt solve N={:>7}:   {:>10.2} ms ({:>6.1} Melem/s, {} compiles total)",
+            n,
+            t * 1e3,
+            n as f64 / t / 1e6,
+            rt.compile_count()
+        );
+    }
+}

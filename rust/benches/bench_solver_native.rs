@@ -1,0 +1,80 @@
+//! Native-solver performance: sequential Thomas baseline vs the parallel
+//! partition method across sizes and thread counts (EXPERIMENTS.md §Perf,
+//! L3 targets: Thomas >= 1 elt/ns at cache-resident sizes).
+
+use partisol::solver::generator::random_dd_system;
+use partisol::solver::partition::{partition_solve_with_workspace, PartitionWorkspace};
+use partisol::solver::thomas::{thomas_solve_with_scratch, ThomasScratch};
+use partisol::util::stats::{mean, median};
+use partisol::util::timer::bench_loop;
+use partisol::util::Pcg64;
+use std::time::Duration;
+
+fn main() {
+    let mut rng = Pcg64::new(1);
+    println!("== native solver benchmarks ==\n");
+    println!(
+        "{:>10} {:>14} {:>12} | {:>14} {:>10} {:>9}",
+        "N", "thomas ms", "Melem/s", "partition ms", "Melem/s", "threads"
+    );
+    for n in [10_000usize, 100_000, 1_000_000, 10_000_000] {
+        let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+        let mut scratch = ThomasScratch::with_capacity(n);
+        let mut x = vec![0.0; n];
+        let samples = bench_loop(Duration::from_millis(300), 3, || {
+            thomas_solve_with_scratch(&sys, &mut scratch, &mut x).unwrap();
+        });
+        let t_thomas = median(&samples);
+
+        let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+        let mut ws = PartitionWorkspace::new();
+        let m = 32;
+        let samples = bench_loop(Duration::from_millis(300), 3, || {
+            let _ = partition_solve_with_workspace(&sys, m, threads, &mut ws).unwrap();
+        });
+        let t_part = median(&samples);
+        println!(
+            "{:>10} {:>14.3} {:>12.1} | {:>14.3} {:>10.1} {:>9}",
+            n,
+            t_thomas * 1e3,
+            n as f64 / t_thomas / 1e6,
+            t_part * 1e3,
+            n as f64 / t_part / 1e6,
+            threads
+        );
+    }
+
+    // Thread scaling at a fixed size (the Stage-1/3 data parallelism).
+    println!("\npartition thread scaling at N = 4e6, m = 32:");
+    let n = 4_000_000;
+    let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+    let mut base = 0.0;
+    for threads in [1usize, 2, 4, 8] {
+        let mut ws = PartitionWorkspace::new();
+        let samples = bench_loop(Duration::from_millis(400), 3, || {
+            let _ = partition_solve_with_workspace(&sys, 32, threads, &mut ws).unwrap();
+        });
+        let t = median(&samples);
+        if threads == 1 {
+            base = t;
+        }
+        println!(
+            "  threads {:>2}: {:>8.3} ms  speedup {:.2}x",
+            threads,
+            t * 1e3,
+            base / t
+        );
+    }
+
+    // Per-m cost shape (the quantity the whole paper tunes).
+    println!("\npartition time vs m at N = 1e6 (4 threads):");
+    let n = 1_000_000;
+    let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+    for m in [4usize, 8, 16, 32, 64, 128] {
+        let mut ws = PartitionWorkspace::new();
+        let samples = bench_loop(Duration::from_millis(200), 3, || {
+            let _ = partition_solve_with_workspace(&sys, m, 4, &mut ws).unwrap();
+        });
+        println!("  m {:>4}: {:>8.3} ms (mean {:.3})", m, median(&samples) * 1e3, mean(&samples) * 1e3);
+    }
+}

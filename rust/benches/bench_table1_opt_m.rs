@@ -1,0 +1,88 @@
+//! Table 1 reproduction: optimum sub-system size per SLAE size (FP64,
+//! RTX 2080 Ti) — observed (noise-injected sweep), corrected (§2.4 trend
+//! fit), simulated absolute times, and the 1.7x headline speed-up.
+
+use partisol::data::paper;
+use partisol::gpu::simulator::GpuSimulator;
+use partisol::gpu::spec::{Dtype, GpuCard};
+use partisol::tuner::correction::{correct_trend, corrections};
+use partisol::tuner::streams::optimum_streams;
+use partisol::tuner::sweep::{sweep_all, table1_sizes, SweepConfig};
+use partisol::util::stats::log_rmse;
+use partisol::util::table::{fmt_n, Table};
+
+fn main() {
+    let sim = GpuSimulator::new(GpuCard::Rtx2080Ti);
+    let ns = table1_sizes();
+
+    // The paper's experiment: noisy sweep -> observed optima; trend
+    // correction -> corrected optima.
+    let observed = sweep_all(&sim, &ns, &SweepConfig::observed(Dtype::F64, 2025));
+    let corrected = correct_trend(&observed, 0.02);
+
+    let mut t = Table::new(&[
+        "N",
+        "#st",
+        "obs m",
+        "corr m",
+        "sim ms",
+        "paper obs",
+        "paper corr",
+        "corr ok",
+    ])
+    .with_title("TABLE 1 — optimum sub-system size, FP64, RTX 2080 Ti (simulated)");
+    let mut strict = 0usize;
+    let mut tolerant = 0usize;
+    let mut sim_times = Vec::new();
+    let mut pub_times = Vec::new();
+    for ((row, sweep), &corr) in paper::table1_rows().iter().zip(&observed).zip(&corrected) {
+        let ok = corr == row.m_corrected;
+        strict += ok as usize;
+        // Tolerant: the paper's corrected choice is within 1% of the
+        // simulated argmin (the paper itself treats <=1-3% differences as
+        // equivalent, §2.5).
+        let t_want = sweep
+            .times
+            .iter()
+            .find(|&&(m, _)| m == row.m_corrected)
+            .map(|&(_, t)| t)
+            .unwrap_or(sweep.opt_time_us);
+        let tol_ok = (t_want - sweep.opt_time_us) / sweep.opt_time_us < 0.01;
+        tolerant += tol_ok as usize;
+        sim_times.push(sweep.opt_time_us / 1e3);
+        pub_times.push(row.time_opt_ms);
+        t.row(vec![
+            fmt_n(row.n),
+            optimum_streams(row.n).to_string(),
+            sweep.opt_m.to_string(),
+            corr.to_string(),
+            format!("{:.4}", sweep.opt_time_us / 1e3),
+            row.m_observed.to_string(),
+            row.m_corrected.to_string(),
+            if ok { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "corrected-m agreement: {strict}/37 strict, {tolerant}/37 within 1% of the simulated optimum"
+    );
+    println!(
+        "corrections applied by the trend fit: {} (paper: 8)",
+        corrections(&observed, &corrected)
+    );
+    println!(
+        "log-RMSE simulated vs published absolute times: {:.3}",
+        log_rmse(&sim_times, &pub_times)
+    );
+
+    // Headline: tuned m speed-up at N = 8e7, m = 64 vs m = 4.
+    let n = paper::headline::SPEEDUP_TUNED_M_N;
+    let s = optimum_streams(n);
+    let t4 = sim.solve(n, 4, s, Dtype::F64).total_us;
+    let t64 = sim.solve(n, 64, s, Dtype::F64).total_us;
+    println!(
+        "headline speed-up (N=8e7, m=64 vs m=4): {:.2}x (paper: {:.2}x)",
+        t4 / t64,
+        paper::headline::SPEEDUP_TUNED_M
+    );
+}

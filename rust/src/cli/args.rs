@@ -1,0 +1,145 @@
+//! Tiny flag parser: `--key value`, `--key=value`, boolean `--flag`.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags plus positional values.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// `known_bools` lists flags that take no value.
+    pub fn parse(argv: &[String], known_bools: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if known_bools.contains(&stripped) {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                } else {
+                    let v = argv.get(i + 1).ok_or_else(|| {
+                        Error::Cli(format!("flag --{stripped} expects a value"))
+                    })?;
+                    args.flags.insert(stripped.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => parse_human_int(v)
+                .ok_or_else(|| Error::Cli(format!("--{key}: cannot parse `{v}` as integer"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.get_usize(key, default as usize)? as u64)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{key}: cannot parse `{v}` as float"))),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Accepts `1000000`, `1_000_000`, `1e6`, `4.5e3`.
+pub fn parse_human_int(s: &str) -> Option<usize> {
+    let clean = s.replace('_', "");
+    if let Ok(v) = clean.parse::<usize>() {
+        return Some(v);
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        if f >= 0.0 && f.fract() == 0.0 {
+            return Some(f as usize);
+        }
+    }
+    None
+}
+
+/// Parse a card name.
+pub fn parse_card(s: &str) -> Result<crate::gpu::GpuCard> {
+    use crate::gpu::GpuCard::*;
+    match s.to_ascii_lowercase().replace([' ', '-'], "").as_str() {
+        "rtx2080ti" | "2080ti" => Ok(Rtx2080Ti),
+        "rtxa5000" | "a5000" => Ok(RtxA5000),
+        "rtx4080" | "4080" => Ok(Rtx4080),
+        other => Err(Error::Cli(format!("unknown card `{other}`"))),
+    }
+}
+
+/// Parse a dtype name.
+pub fn parse_dtype(s: &str) -> Result<crate::gpu::Dtype> {
+    match s {
+        "f32" | "fp32" => Ok(crate::gpu::Dtype::F32),
+        "f64" | "fp64" => Ok(crate::gpu::Dtype::F64),
+        other => Err(Error::Cli(format!("unknown dtype `{other}`"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&v(&["--n", "1e6", "--card=4080", "--verbose", "pos"]), &["verbose"]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 1_000_000);
+        assert_eq!(a.get("card"), Some("4080"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(), &["pos".to_string()]);
+    }
+
+    #[test]
+    fn human_ints() {
+        assert_eq!(parse_human_int("4.5e3"), Some(4500));
+        assert_eq!(parse_human_int("1_000"), Some(1000));
+        assert_eq!(parse_human_int("abc"), None);
+        assert_eq!(parse_human_int("1.5"), None);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&v(&["--n"]), &[]).is_err());
+    }
+
+    #[test]
+    fn card_and_dtype_parsing() {
+        assert!(parse_card("RTX 2080 Ti").is_ok());
+        assert!(parse_card("h100").is_err());
+        assert!(parse_dtype("f32").is_ok());
+        assert!(parse_dtype("bf16").is_err());
+    }
+}

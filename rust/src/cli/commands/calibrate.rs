@@ -1,0 +1,106 @@
+//! `partisol calibrate` — score and (optionally re-fit) the GPU-simulator
+//! constants against the published tables (DESIGN.md §8).
+
+use crate::cli::args::{parse_card, Args};
+use crate::error::Result;
+use crate::gpu::calibration::{fit, objective, ModelParams};
+use crate::gpu::spec::GpuCard;
+
+const HELP: &str = "\
+partisol calibrate — score/fit simulator constants against Tables 1-4
+
+OPTIONS:
+    --card <name>      card to calibrate (default: all three)
+    --fit              run coordinate descent from the committed constants
+    --sweeps <n>       max fit sweeps (default 8)
+    --verbose          print per-row mismatches
+";
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["fit", "verbose", "help"])?;
+    if args.has("help") {
+        print!("{HELP}");
+        return Ok(());
+    }
+    let cards: Vec<GpuCard> = match args.get("card") {
+        Some(c) => vec![parse_card(c)?],
+        None => GpuCard::ALL.to_vec(),
+    };
+    let sweeps = args.get_usize("sweeps", 8)?;
+    // --set field=value,field=value for manual probing
+    let overrides: Vec<(String, f64)> = args
+        .get("set")
+        .map(|spec| {
+            spec.split(',')
+                .filter_map(|kv| {
+                    let (k, v) = kv.split_once('=')?;
+                    Some((k.to_string(), v.parse().ok()?))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+
+    for card in cards {
+        let mut start = ModelParams::fitted(card);
+        for (k, v) in &overrides {
+            start.set(k, *v);
+        }
+        let score = objective::combined(card, &start);
+        println!(
+            "[{}] committed constants: m-mismatches {}/{}  r-mismatches {}  time-logRMSE {:.4}  scalar {:.3}",
+            card.name(),
+            score.m_mismatches,
+            score.rows,
+            score.r_mismatches,
+            score.time_rmse,
+            score.scalar()
+        );
+        if args.has("verbose") {
+            print_mismatches(card, &start);
+        }
+        if args.has("fit") {
+            let (best, best_score) = fit(card, start, sweeps);
+            println!("[{}] after fit: scalar {:.3}", card.name(), best_score);
+            println!("{best:#?}");
+        }
+    }
+    Ok(())
+}
+
+fn print_mismatches(card: GpuCard, params: &ModelParams) {
+    use crate::data::paper;
+    use crate::gpu::simulator::GpuSimulator;
+    use crate::gpu::spec::Dtype;
+    let sim = GpuSimulator::with_params(card, *params);
+    for row in paper::table3_rows() {
+        let want = match card {
+            GpuCard::Rtx2080Ti => paper::trend_lookup(&paper::FP64_TREND, row.n),
+            GpuCard::RtxA5000 => row.m_a5000,
+            GpuCard::Rtx4080 => row.m_4080,
+        };
+        let got = objective::predicted_opt_m(&sim, row.n, Dtype::F64);
+        if got != want {
+            println!("    fp64 N={:<12} want m={:<4} got m={}", row.n, want, got);
+        }
+    }
+    if card == GpuCard::Rtx2080Ti {
+        for row in paper::fp32_rows() {
+            let got = objective::predicted_opt_m(&sim, row.n, Dtype::F32);
+            if got != row.m_corrected {
+                println!(
+                    "    fp32 N={:<12} want m={:<4} got m={}",
+                    row.n, row.m_corrected, got
+                );
+            }
+        }
+    }
+    if card == GpuCard::RtxA5000 {
+        for &n in &paper::RECURSION_N_VALUES {
+            let want = crate::recursion::rsteps::published_opt_r(n);
+            let got = objective::predicted_opt_r(&sim, n);
+            if got != want {
+                println!("    R    N={n:<12} want R={want} got R={got}");
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! CLI subcommand implementations.
+
+pub mod calibrate;
+pub mod occupancy;
+pub mod predict;
+pub mod report;
+pub mod serve;
+pub mod simulate;
+pub mod solve;
+pub mod tune;

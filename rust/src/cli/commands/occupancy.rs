@@ -1,0 +1,45 @@
+//! `partisol occupancy` — the Fig-1 series: achieved vs theoretical
+//! occupancy at the corrected optimum m per SLAE size.
+
+use crate::cli::args::{parse_card, Args};
+use crate::data::paper;
+use crate::error::Result;
+use crate::gpu::occupancy::{achieved_occupancy, theoretical_occupancy, KernelResources};
+use crate::gpu::spec::GpuCard;
+use crate::util::table::{fmt_n, Table};
+
+const HELP: &str = "\
+partisol occupancy — Fig-1 occupancy series (achieved vs theoretical)
+
+OPTIONS:
+    --card <name>   (default rtx2080ti)
+";
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["help"])?;
+    if args.has("help") {
+        print!("{HELP}");
+        return Ok(());
+    }
+    let card = args.get("card").map(parse_card).transpose()?.unwrap_or(GpuCard::Rtx2080Ti);
+    let spec = card.spec();
+    let res = KernelResources::default();
+    let theo = theoretical_occupancy(spec, &res);
+
+    let mut t = Table::new(&["N", "opt m", "threads", "achieved %", "theoretical %"])
+        .with_title(&format!("Occupancy at the corrected optimum m [{}]", card.name()));
+    for row in paper::table1_rows() {
+        let m = row.m_corrected;
+        let threads = row.n / m;
+        let ach = achieved_occupancy(spec, &res, threads);
+        t.row(vec![
+            fmt_n(row.n),
+            m.to_string(),
+            threads.to_string(),
+            format!("{:.1}", ach * 100.0),
+            format!("{:.0}", theo.theoretical * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

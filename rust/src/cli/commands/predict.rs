@@ -1,0 +1,39 @@
+//! `partisol predict` — heuristic predictions for one SLAE size: optimum
+//! sub-system size, stream count, recursion depth and per-level plan.
+
+use crate::cli::args::{parse_dtype, Args};
+use crate::error::Result;
+use crate::gpu::spec::Dtype;
+use crate::recursion::planner::plan_with_heuristic;
+use crate::recursion::rsteps::published_opt_r;
+use crate::tuner::heuristic::{IntervalHeuristic, MHeuristic};
+use crate::tuner::streams::optimum_streams;
+use crate::util::table::fmt_n;
+
+const HELP: &str = "\
+partisol predict — heuristic predictions for an SLAE size
+
+OPTIONS:
+    --n <N>         SLAE size (default 1e6)
+    --dtype <d>     f64 | f32 (default f64)
+";
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["help"])?;
+    if args.has("help") {
+        print!("{HELP}");
+        return Ok(());
+    }
+    let n = args.get_usize("n", 1_000_000)?;
+    let dtype = args.get("dtype").map(parse_dtype).transpose()?.unwrap_or(Dtype::F64);
+
+    let h = IntervalHeuristic::paper(dtype);
+    let r = published_opt_r(n);
+    let plan = plan_with_heuristic(n, r, &h);
+    println!("N = {} ({n}), dtype {}", fmt_n(n), dtype.name());
+    println!("  optimum sub-system size m : {}", h.opt_m(n));
+    println!("  optimum CUDA streams      : {}", optimum_streams(n));
+    println!("  optimum recursive steps R : {r}");
+    println!("  per-level plan [m0..mR]   : {plan:?}");
+    Ok(())
+}

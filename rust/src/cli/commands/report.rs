@@ -1,0 +1,57 @@
+//! `partisol report` — paper-vs-reproduction summary (headline numbers).
+
+use crate::cli::args::Args;
+use crate::data::paper::{self, headline};
+use crate::error::Result;
+use crate::gpu::simulator::GpuSimulator;
+use crate::gpu::spec::{Dtype, GpuCard};
+use crate::recursion::planner::plan_for;
+use crate::recursion::rsteps::published_opt_r;
+use crate::tuner::streams::optimum_streams;
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let _args = Args::parse(argv, &["help"])?;
+    let sim = GpuSimulator::new(GpuCard::Rtx2080Ti);
+
+    println!("== partisol reproduction summary ==\n");
+
+    // Headline 1: tuned-m speed-up at N = 8e7 (m=64 vs m=4).
+    let n = headline::SPEEDUP_TUNED_M_N;
+    let s = optimum_streams(n);
+    let t4 = sim.solve(n, 4, s, Dtype::F64).total_us;
+    let t64 = sim.solve(n, 64, s, Dtype::F64).total_us;
+    println!(
+        "tuned-m speed-up at N=8e7 (m=64 vs 4): paper {:.2}x, simulated {:.2}x",
+        headline::SPEEDUP_TUNED_M,
+        t4 / t64
+    );
+
+    // Headline 2: recursive speed-up at N = 4.5e6.
+    let simr = GpuSimulator::new(GpuCard::RtxA5000);
+    let n = headline::SPEEDUP_RECURSIVE_N;
+    let s = optimum_streams(n);
+    let r = published_opt_r(n);
+    let t0 = simr.solve_plan(n, &plan_for(n, 0, Dtype::F64), s, Dtype::F64).total_us;
+    let tr = simr.solve_plan(n, &plan_for(n, r, Dtype::F64), s, Dtype::F64).total_us;
+    println!(
+        "recursive speed-up at N=4.5e6 (R={r}): paper {:.2}x, simulated {:.2}x",
+        headline::SPEEDUP_RECURSIVE,
+        t0 / tr
+    );
+
+    // Simulator fidelity against Table 1 absolute times.
+    let mut worst: (usize, f64) = (0, 0.0);
+    for row in paper::table1_rows() {
+        let t = sim.solve(row.n, row.m_observed, row.streams, Dtype::F64).total_ms();
+        let ratio = (t / row.time_opt_ms).max(row.time_opt_ms / t);
+        if ratio > worst.1 {
+            worst = (row.n, ratio);
+        }
+    }
+    println!(
+        "worst |simulated/published| time ratio over Table 1: {:.2}x at N={}",
+        worst.1, worst.0
+    );
+    println!("\nrun the benches (cargo bench) for the full per-table reports.");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! `partisol serve` — run the threaded solve service on a synthetic
+//! workload and report latency/throughput.
+
+use crate::cli::args::Args;
+use crate::config::Config;
+use crate::coordinator::{Service, SolveRequest};
+use crate::error::Result;
+use crate::solver::generator::random_dd_system;
+use crate::util::Pcg64;
+use std::time::Instant;
+
+const HELP: &str = "\
+partisol serve — drive the solve service with a synthetic workload
+
+OPTIONS:
+    --requests <r>      number of requests (default 64)
+    --min-n <N>         smallest SLAE (default 1e3)
+    --max-n <N>         largest SLAE (default 2e5)
+    --workers <w>       native worker threads (default 2)
+    --config <path>     TOML config file (flags override it)
+    --seed <s>          workload seed (default 7)
+";
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["help"])?;
+    if args.has("help") {
+        print!("{HELP}");
+        return Ok(());
+    }
+    let requests = args.get_usize("requests", 64)?;
+    let min_n = args.get_usize("min-n", 1_000)?;
+    let max_n = args.get_usize("max-n", 200_000)?;
+    let seed = args.get_u64("seed", 7)?;
+
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+
+    let svc = Service::start(cfg)?;
+    let mut rng = Pcg64::new(seed);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let n = (min_n as f64
+            * ((max_n as f64 / min_n as f64).powf(rng.uniform()))) as usize;
+        let sys = random_dd_system(&mut rng, n.max(4), 0.5);
+        loop {
+            match svc.submit(SolveRequest::new(i as u64, sys.clone())) {
+                Ok(rx) => {
+                    rxs.push(rx);
+                    break;
+                }
+                Err(_) => std::thread::sleep(std::time::Duration::from_micros(200)),
+            }
+        }
+    }
+    let mut worst_res: f64 = 0.0;
+    let mut ok = 0usize;
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Ok(resp)) => {
+                ok += 1;
+                if let Some(r) = resp.residual {
+                    worst_res = worst_res.max(r);
+                }
+            }
+            other => eprintln!("request failed: {other:?}"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = svc.metrics();
+    println!("requests completed : {ok}/{requests} in {wall:.3}s ({:.1} req/s)", ok as f64 / wall);
+    println!("worst residual     : {worst_res:.3e}");
+    println!(
+        "latency e2e        : mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms",
+        m.mean_e2e_us / 1e3,
+        m.p50_e2e_us / 1e3,
+        m.p99_e2e_us / 1e3
+    );
+    println!(
+        "backends           : pjrt {} | native {} | thomas {} ({} batches)",
+        m.pjrt_solves, m.native_solves, m.thomas_solves, m.batches
+    );
+    println!(
+        "backpressure       : {} rejected",
+        m.rejected_backpressure
+    );
+    svc.shutdown();
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! `partisol simulate` — print the simulated timing landscape for one N.
+
+use crate::cli::args::{parse_card, parse_dtype, Args};
+use crate::error::Result;
+use crate::gpu::simulator::GpuSimulator;
+use crate::gpu::spec::{Dtype, GpuCard};
+use crate::tuner::streams::optimum_streams;
+use crate::util::table::{fmt_n, Table};
+
+const HELP: &str = "\
+partisol simulate — simulated GPU timing landscape for one SLAE size
+
+OPTIONS:
+    --n <N>            SLAE size (default 1e6; accepts 4.5e3 style)
+    --card <name>      rtx2080ti | rtxa5000 | rtx4080 (default rtx2080ti)
+    --dtype <d>        f64 | f32 (default f64)
+    --streams <s>      override the optimum-stream heuristic
+";
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["help", "rsweep"])?;
+    if args.has("help") {
+        print!("{HELP}");
+        return Ok(());
+    }
+    let n = args.get_usize("n", 1_000_000)?;
+    let card = args.get("card").map(parse_card).transpose()?.unwrap_or(GpuCard::Rtx2080Ti);
+    let dtype = args.get("dtype").map(parse_dtype).transpose()?.unwrap_or(Dtype::F64);
+    let streams = args.get_usize("streams", optimum_streams(n))?;
+
+    let sim = GpuSimulator::new(card);
+
+    if args.has("rsweep") {
+        // Recursion-depth landscape (Fig 4 / Table 2 debugging aid).
+        let mut t = Table::new(&["R", "plan", "total ms", "phase A", "stage2", "phase B"])
+            .with_title(&format!(
+                "Recursion sweep: N={} [{}], {} streams",
+                fmt_n(n),
+                card.name(),
+                streams
+            ));
+        for r in 0..=4 {
+            let plan = crate::recursion::planner::plan_for(n, r, dtype);
+            let b = sim.solve_plan(n, &plan, streams, dtype);
+            t.row(vec![
+                r.to_string(),
+                format!("{plan:?}"),
+                format!("{:.4}", b.total_ms()),
+                format!("{:.4}", b.phase_a_us / 1e3),
+                format!("{:.4}", b.stage2_us / 1e3),
+                format!("{:.4}", b.phase_b_us / 1e3),
+            ]);
+        }
+        println!("{}", t.render());
+        return Ok(());
+    }
+
+    let mut table = Table::new(&["m", "total ms", "phase A ms", "stage2 ms", "phase B ms"])
+        .with_title(&format!(
+            "Simulated partition-method times: N={} ({}), {} streams, {} [{}]",
+            fmt_n(n),
+            n,
+            streams,
+            dtype.name(),
+            card.name()
+        ));
+    let mut best = (0usize, f64::INFINITY);
+    for &m in crate::data::paper::M_CANDIDATES.iter().filter(|&&m| m <= n) {
+        let b = sim.solve(n, m, streams, dtype);
+        if b.total_us < best.1 {
+            best = (m, b.total_us);
+        }
+        table.row(vec![
+            m.to_string(),
+            format!("{:.4}", b.total_ms()),
+            format!("{:.4}", b.phase_a_us / 1e3),
+            format!("{:.4}", b.stage2_us / 1e3),
+            format!("{:.4}", b.phase_b_us / 1e3),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("optimum m = {} ({:.4} ms)", best.0, best.1 / 1e3);
+    Ok(())
+}

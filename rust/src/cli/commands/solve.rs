@@ -1,0 +1,77 @@
+//! `partisol solve` — generate an SLAE and solve it end-to-end.
+
+use crate::cli::args::{parse_dtype, Args};
+use crate::error::Result;
+use crate::gpu::spec::Dtype;
+use crate::runtime::executor::pjrt_partition_solve;
+use crate::runtime::Runtime;
+use crate::solver::generator::random_dd_system;
+use crate::solver::residual::max_abs_residual;
+use crate::solver::{partition_solve, thomas_solve};
+use crate::tuner::heuristic::{IntervalHeuristic, MHeuristic};
+use crate::util::table::fmt_n;
+use crate::util::{Pcg64, Stopwatch};
+use std::path::Path;
+
+const HELP: &str = "\
+partisol solve — generate a diagonally-dominant SLAE and solve it
+
+OPTIONS:
+    --n <N>             SLAE size (default 1e5)
+    --m <m>             sub-system size (default: tuned heuristic)
+    --dtype <d>         f64 | f32 (default f64)
+    --backend <b>       pjrt | native | thomas (default pjrt, falls back)
+    --artifacts <dir>   artifact directory (default artifacts)
+    --seed <s>          system generator seed (default 42)
+    --threads <t>       native solver threads (default: all cores)
+";
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["help"])?;
+    if args.has("help") {
+        print!("{HELP}");
+        return Ok(());
+    }
+    let n = args.get_usize("n", 100_000)?;
+    let dtype = args.get("dtype").map(parse_dtype).transpose()?.unwrap_or(Dtype::F64);
+    let h = IntervalHeuristic::paper(dtype);
+    let m = args.get_usize("m", h.opt_m(n))?;
+    let backend = args.get("backend").unwrap_or("pjrt").to_string();
+    let artifacts = args.get("artifacts").unwrap_or("artifacts").to_string();
+    let seed = args.get_u64("seed", 42)?;
+    let threads = args.get_usize(
+        "threads",
+        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4),
+    )?;
+
+    let mut rng = Pcg64::new(seed);
+    println!("N = {} ({n}), m = {m} ({}), dtype {}", fmt_n(n), h.name(), dtype.name());
+
+    let mut sw = Stopwatch::new();
+    let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+    sw.lap("generate");
+
+    let (x, used) = match backend.as_str() {
+        "thomas" => (thomas_solve(&sys)?, "thomas"),
+        "native" => (partition_solve(&sys, m, threads)?, "native"),
+        _ => match Runtime::new(Path::new(&artifacts)) {
+            Ok(rt) => (pjrt_partition_solve(&rt, &sys, m)?, "pjrt"),
+            Err(e) => {
+                eprintln!("pjrt unavailable ({e}); using native solver");
+                (partition_solve(&sys, m, threads)?, "native-fallback")
+            }
+        },
+    };
+    let solve_t = sw.lap("solve");
+    let res = max_abs_residual(&sys, &x);
+    sw.lap("verify");
+
+    println!("backend          : {used}");
+    println!("solve wall time  : {:.3} ms", solve_t.as_secs_f64() * 1e3);
+    println!("max|Ax - d|      : {res:.3e}");
+    println!("x[0..4]          : {:?}", &x[..4.min(x.len())]);
+    if res > 1e-6 {
+        return Err(crate::Error::Solver(format!("residual too large: {res:e}")));
+    }
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! `partisol tune` — the full §2 pipeline: empirical sweep (simulated
+//! hardware) → trend correction → interval + kNN heuristics.
+
+use crate::cli::args::{parse_card, parse_dtype, Args};
+use crate::error::Result;
+use crate::gpu::simulator::GpuSimulator;
+use crate::gpu::spec::{Dtype, GpuCard};
+use crate::tuner::correction::{correct_trend, corrections};
+use crate::tuner::heuristic::{IntervalHeuristic, KnnHeuristic, MHeuristic};
+use crate::tuner::sweep::{sweep_all, table1_sizes, SweepConfig};
+use crate::util::table::{fmt_n, Table};
+
+const HELP: &str = "\
+partisol tune — empirical sweep -> correction -> heuristics
+
+OPTIONS:
+    --card <name>    (default rtx2080ti)
+    --dtype <d>      f64 | f32 (default f64)
+    --seed <s>       measurement-noise seed (default 2025)
+    --clean          noise-free sweep (no observed/corrected distinction)
+";
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["help", "clean"])?;
+    if args.has("help") {
+        print!("{HELP}");
+        return Ok(());
+    }
+    let card = args.get("card").map(parse_card).transpose()?.unwrap_or(GpuCard::Rtx2080Ti);
+    let dtype = args.get("dtype").map(parse_dtype).transpose()?.unwrap_or(Dtype::F64);
+    let seed = args.get_u64("seed", 2025)?;
+
+    let sim = GpuSimulator::new(card);
+    let cfg = if args.has("clean") {
+        SweepConfig::noise_free(dtype)
+    } else {
+        SweepConfig::observed(dtype, seed)
+    };
+    let ns = table1_sizes();
+    let sweeps = sweep_all(&sim, &ns, &cfg);
+    let corrected = correct_trend(&sweeps, 0.02);
+
+    let mut t = Table::new(&["N", "observed m", "corrected m", "time obs [ms]", "time corr [ms]"])
+        .with_title(&format!(
+            "Sweep results [{}] {} (seed {seed})",
+            card.name(),
+            dtype.name()
+        ));
+    for (s, &c) in sweeps.iter().zip(&corrected) {
+        t.row(vec![
+            fmt_n(s.n),
+            s.opt_m.to_string(),
+            c.to_string(),
+            format!("{:.4}", s.opt_time_us / 1e3),
+            format!("{:.4}", s.time_at(c) / 1e3),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "corrections applied: {} of {} rows",
+        corrections(&sweeps, &corrected),
+        sweeps.len()
+    );
+
+    let interval = IntervalHeuristic::from_corrected("fitted", &ns, &corrected)?;
+    println!("\ninterval heuristic: {:?}", interval.intervals());
+
+    let ms_obs: Vec<usize> = sweeps.iter().map(|s| s.opt_m).collect();
+    let (_, rep_corr) = KnnHeuristic::fit_paper_pipeline("knn-corr", &ns, &corrected, seed)?;
+    let (_, rep_obs) = KnnHeuristic::fit_paper_pipeline("knn-obs", &ns, &ms_obs, seed)?;
+    println!(
+        "kNN (corrected): k={} test-accuracy {:.2} null {:.2}",
+        rep_corr.best_k, rep_corr.test_accuracy, rep_corr.null_accuracy
+    );
+    println!(
+        "kNN (observed):  k={} test-accuracy {:.2} null {:.2}",
+        rep_obs.best_k, rep_obs.test_accuracy, rep_obs.null_accuracy
+    );
+    let _ = interval.opt_m(1);
+    Ok(())
+}

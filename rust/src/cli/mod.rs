@@ -1,0 +1,62 @@
+//! Hand-rolled CLI (clap is unavailable offline): subcommand dispatch and
+//! a small flag parser.
+
+pub mod args;
+pub mod commands;
+
+use crate::error::Result;
+
+const USAGE: &str = "\
+partisol — tridiagonal partition-method solver with ML-tuned sub-system size
+           (reproduction of Veneva, CS.DC 2025)
+
+USAGE:
+    partisol <COMMAND> [OPTIONS]
+
+COMMANDS:
+    solve       solve a generated SLAE end-to-end (native or PJRT runtime)
+    tune        run the empirical sweep -> correction -> heuristic pipeline
+    predict     predict optimum m / recursion plan for an SLAE size
+    simulate    print the simulated GPU timing landscape for one N
+    calibrate   re-fit the GPU-simulator constants against the paper tables
+    occupancy   print the Fig-1 occupancy series
+    serve       run the threaded solve service on a synthetic workload
+    report      print paper-vs-reproduction summary tables
+    help        show this message
+
+Run `partisol <COMMAND> --help` for command options.
+";
+
+/// Entry point used by main.rs. Returns the process exit code.
+pub fn run() -> i32 {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = &argv[1.min(argv.len())..];
+    match cmd {
+        "solve" => commands::solve::run(rest),
+        "tune" => commands::tune::run(rest),
+        "predict" => commands::predict::run(rest),
+        "simulate" => commands::simulate::run(rest),
+        "calibrate" => commands::calibrate::run(rest),
+        "occupancy" => commands::occupancy::run(rest),
+        "serve" => commands::serve::run(rest),
+        "report" => commands::report::run(rest),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(crate::Error::Cli(format!(
+            "unknown command `{other}` (try `partisol help`)"
+        ))),
+    }
+}

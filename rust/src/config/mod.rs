@@ -1,0 +1,8 @@
+//! Typed configuration for the solver service, parsed from a TOML-subset
+//! file (serde/toml are unavailable offline — see [`parser`]).
+
+pub mod parser;
+pub mod schema;
+
+pub use parser::TomlValue;
+pub use schema::{Config, HeuristicKind};

@@ -1,0 +1,194 @@
+//! Minimal TOML-subset parser: `[section]` / `[section.sub]` headers,
+//! `key = value` pairs with string/int/float/bool/array values, `#`
+//! comments. Enough for service configuration files; not a general TOML
+//! implementation (no inline tables, no multi-line strings, no dates).
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat map of `section.key` → value.
+pub type TomlTable = BTreeMap<String, TomlValue>;
+
+/// Parse a TOML-subset document into a flat dotted-key table.
+pub fn parse(text: &str) -> Result<TomlTable> {
+    let mut table = TomlTable::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            section = name.to_string();
+        } else if let Some((k, v)) = line.split_once('=') {
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            table.insert(full, parse_value(v.trim(), lineno)?);
+        } else {
+            return Err(err(lineno, "expected `key = value` or `[section]`"));
+        }
+    }
+    Ok(table)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue> {
+    if let Some(q) = s.strip_prefix('"') {
+        let inner = q
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items: Result<Vec<TomlValue>> = inner
+            .split(',')
+            .map(|item| parse_value(item.trim(), lineno))
+            .collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(lineno, &format!("cannot parse value `{s}`")))
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {}", lineno + 1, msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let text = r#"
+            # service config
+            [service]
+            workers = 4
+            queue_depth = 128        # backpressure bound
+            dtype = "f64"
+            auto_tune = true
+
+            [gpu]
+            card = "rtx2080ti"
+            noise = 0.012
+            m_grid = [4, 8, 16, 32, 64]
+        "#;
+        let t = parse(text).unwrap();
+        assert_eq!(t["service.workers"], TomlValue::Int(4));
+        assert_eq!(t["service.dtype"].as_str(), Some("f64"));
+        assert_eq!(t["service.auto_tune"].as_bool(), Some(true));
+        assert_eq!(t["gpu.noise"].as_float(), Some(0.012));
+        match &t["gpu.m_grid"] {
+            TomlValue::Array(v) => assert_eq!(v.len(), 5),
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn underscore_numbers_and_bare_keys() {
+        let t = parse("n = 1_000_000\nratio = 0.25").unwrap();
+        assert_eq!(t["n"], TomlValue::Int(1_000_000));
+        assert_eq!(t["ratio"], TomlValue::Float(0.25));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let t = parse(r#"name = "a#b""#).unwrap();
+        assert_eq!(t["name"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("key").is_err());
+        assert!(parse("k = \"open").is_err());
+        assert!(parse("k = [1, 2").is_err());
+        assert!(parse("k = nope").is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Typed service configuration with defaults, loaded from the TOML-subset
+//! parser.
+
+use super::parser::{parse, TomlTable};
+use crate::error::{Error, Result};
+use crate::gpu::spec::{Dtype, GpuCard};
+use std::path::Path;
+
+/// Which optimum-m heuristic the router uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeuristicKind {
+    /// The §2.4 interval trend (paper values).
+    PaperInterval,
+    /// The §2.5 kNN model fitted on the calibrated simulator sweep.
+    Knn,
+    /// A fixed sub-system size (tuning disabled).
+    Fixed(usize),
+}
+
+/// Full service configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Worker threads executing solves.
+    pub workers: usize,
+    /// Bounded request-queue depth (backpressure beyond this).
+    pub queue_depth: usize,
+    /// Max requests batched into one executor call.
+    pub max_batch: usize,
+    pub dtype: Dtype,
+    pub heuristic: HeuristicKind,
+    /// Artifact directory (HLO text + manifest.json).
+    pub artifacts_dir: String,
+    /// Simulated GPU card for timing estimates.
+    pub card: GpuCard,
+    /// Use the native Rust solver instead of the PJRT runtime.
+    pub native_fallback: bool,
+    /// CPU threads for the native solver path.
+    pub solver_threads: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            workers: 2,
+            queue_depth: 256,
+            max_batch: 8,
+            dtype: Dtype::F64,
+            heuristic: HeuristicKind::PaperInterval,
+            artifacts_dir: "artifacts".to_string(),
+            card: GpuCard::Rtx2080Ti,
+            native_fallback: true,
+            solver_threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        }
+    }
+}
+
+impl Config {
+    pub fn from_str(text: &str) -> Result<Config> {
+        let table = parse(text)?;
+        Self::from_table(&table)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_str(&text)
+    }
+
+    fn from_table(t: &TomlTable) -> Result<Config> {
+        let mut cfg = Config::default();
+        if let Some(v) = t.get("service.workers") {
+            cfg.workers = int_field(v, "service.workers")?;
+        }
+        if let Some(v) = t.get("service.queue_depth") {
+            cfg.queue_depth = int_field(v, "service.queue_depth")?;
+        }
+        if let Some(v) = t.get("service.max_batch") {
+            cfg.max_batch = int_field(v, "service.max_batch")?;
+        }
+        if let Some(v) = t.get("service.dtype") {
+            cfg.dtype = match v.as_str() {
+                Some("f64") => Dtype::F64,
+                Some("f32") => Dtype::F32,
+                other => {
+                    return Err(Error::Config(format!(
+                        "service.dtype must be \"f32\"|\"f64\", got {other:?}"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = t.get("service.heuristic") {
+            cfg.heuristic = match v.as_str() {
+                Some("paper") => HeuristicKind::PaperInterval,
+                Some("knn") => HeuristicKind::Knn,
+                Some(s) if s.starts_with("fixed:") => {
+                    let m = s[6..].parse().map_err(|_| {
+                        Error::Config(format!("bad fixed heuristic spec `{s}`"))
+                    })?;
+                    HeuristicKind::Fixed(m)
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "service.heuristic must be paper|knn|fixed:<m>, got {other:?}"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = t.get("service.artifacts_dir") {
+            cfg.artifacts_dir = v
+                .as_str()
+                .ok_or_else(|| Error::Config("service.artifacts_dir must be a string".into()))?
+                .to_string();
+        }
+        if let Some(v) = t.get("service.native_fallback") {
+            cfg.native_fallback = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("service.native_fallback must be a bool".into()))?;
+        }
+        if let Some(v) = t.get("service.solver_threads") {
+            cfg.solver_threads = int_field(v, "service.solver_threads")?;
+        }
+        if let Some(v) = t.get("gpu.card") {
+            cfg.card = match v.as_str() {
+                Some("rtx2080ti") => GpuCard::Rtx2080Ti,
+                Some("rtxa5000") => GpuCard::RtxA5000,
+                Some("rtx4080") => GpuCard::Rtx4080,
+                other => {
+                    return Err(Error::Config(format!(
+                        "gpu.card must be rtx2080ti|rtxa5000|rtx4080, got {other:?}"
+                    )))
+                }
+            };
+        }
+        if cfg.workers == 0 || cfg.queue_depth == 0 || cfg.max_batch == 0 {
+            return Err(Error::Config(
+                "workers, queue_depth, max_batch must be positive".into(),
+            ));
+        }
+        Ok(cfg)
+    }
+}
+
+fn int_field(v: &super::parser::TomlValue, name: &str) -> Result<usize> {
+    v.as_int()
+        .filter(|&i| i >= 0)
+        .map(|i| i as usize)
+        .ok_or_else(|| Error::Config(format!("{name} must be a non-negative integer")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert!(c.workers > 0 && c.queue_depth > 0 && c.max_batch > 0);
+        assert_eq!(c.dtype, Dtype::F64);
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let c = Config::from_str(
+            r#"
+            [service]
+            workers = 8
+            queue_depth = 64
+            max_batch = 4
+            dtype = "f32"
+            heuristic = "knn"
+            native_fallback = false
+
+            [gpu]
+            card = "rtx4080"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.workers, 8);
+        assert_eq!(c.dtype, Dtype::F32);
+        assert_eq!(c.heuristic, HeuristicKind::Knn);
+        assert_eq!(c.card, GpuCard::Rtx4080);
+        assert!(!c.native_fallback);
+    }
+
+    #[test]
+    fn fixed_heuristic_spec() {
+        let c = Config::from_str("[service]\nheuristic = \"fixed:32\"").unwrap();
+        assert_eq!(c.heuristic, HeuristicKind::Fixed(32));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(Config::from_str("[service]\ndtype = \"f16\"").is_err());
+        assert!(Config::from_str("[service]\nworkers = 0").is_err());
+        assert!(Config::from_str("[gpu]\ncard = \"h100\"").is_err());
+        assert!(Config::from_str("[service]\nheuristic = \"fixed:x\"").is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Dynamic batching: same-(m, dtype, backend) requests are concatenated
+//! into one blocked execution.
+//!
+//! Soundness: every request's system has zero first/last couplings
+//! (`a[0] = c[n-1] = 0`), so concatenated systems do not couple — Stage 1
+//! treats each block independently and the concatenated interface system
+//! is block-diagonal, which the Stage-2 Thomas solves exactly. Each
+//! request's slice of the batch solution equals its standalone solution
+//! (verified in tests/coordinator_e2e.rs). Requests whose n is not a
+//! multiple of m are padded to a block boundary first, keeping slice
+//! offsets block-aligned.
+
+use super::request::Backend;
+use super::router::Route;
+use crate::solver::TriSystem;
+
+/// One queued job after routing (service-internal).
+pub struct RoutedJob<J> {
+    pub job: J,
+    pub route: Route,
+}
+
+/// A batch of jobs sharing an execution shape.
+pub struct Batch<J> {
+    pub route: Route,
+    pub jobs: Vec<J>,
+}
+
+/// Group routed jobs into batches of at most `max_batch`, preserving FIFO
+/// order within a group. Only PJRT jobs batch (>1); native/Thomas jobs get
+/// singleton batches.
+pub fn form_batches<J>(jobs: Vec<RoutedJob<J>>, max_batch: usize) -> Vec<Batch<J>> {
+    let mut batches: Vec<Batch<J>> = Vec::new();
+    for rj in jobs {
+        let can_join = rj.route.backend == Backend::Pjrt;
+        if can_join {
+            if let Some(b) = batches
+                .iter_mut()
+                .find(|b| b.route == rj.route && b.jobs.len() < max_batch)
+            {
+                b.jobs.push(rj.job);
+                continue;
+            }
+        }
+        batches.push(Batch {
+            route: rj.route,
+            jobs: vec![rj.job],
+        });
+    }
+    batches
+}
+
+/// Concatenate systems into one, each padded to a whole number of blocks.
+/// Returns the combined system and each request's `(row_offset, n)`.
+pub fn concat_systems(systems: &[&TriSystem<f64>], m: usize) -> (TriSystem<f64>, Vec<(usize, usize)>) {
+    let total: usize = systems.iter().map(|s| s.n().div_ceil(m) * m).sum();
+    let mut combined = TriSystem {
+        a: Vec::with_capacity(total),
+        b: Vec::with_capacity(total),
+        c: Vec::with_capacity(total),
+        d: Vec::with_capacity(total),
+    };
+    let mut spans = Vec::with_capacity(systems.len());
+    for sys in systems {
+        let offset = combined.b.len();
+        let n = sys.n();
+        let padded = n.div_ceil(m) * m;
+        combined.a.extend_from_slice(&sys.a);
+        combined.b.extend_from_slice(&sys.b);
+        combined.c.extend_from_slice(&sys.c);
+        combined.d.extend_from_slice(&sys.d);
+        combined.a.extend(std::iter::repeat_n(0.0, padded - n));
+        combined.b.extend(std::iter::repeat_n(1.0, padded - n));
+        combined.c.extend(std::iter::repeat_n(0.0, padded - n));
+        combined.d.extend(std::iter::repeat_n(0.0, padded - n));
+        spans.push((offset, n));
+    }
+    (combined, spans)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Backend;
+    use crate::solver::generator::random_dd_system;
+    use crate::solver::residual::max_abs_diff;
+    use crate::solver::{partition_solve, thomas_solve};
+    use crate::util::Pcg64;
+
+    fn route(m: usize, backend: Backend) -> Route {
+        Route { m, backend }
+    }
+
+    #[test]
+    fn groups_same_route_up_to_max() {
+        let jobs: Vec<RoutedJob<usize>> = (0..5)
+            .map(|i| RoutedJob {
+                job: i,
+                route: route(32, Backend::Pjrt),
+            })
+            .collect();
+        let batches = form_batches(jobs, 2);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].jobs, vec![0, 1]);
+        assert_eq!(batches[2].jobs, vec![4]);
+    }
+
+    #[test]
+    fn different_m_never_mixes() {
+        let jobs = vec![
+            RoutedJob {
+                job: 0,
+                route: route(32, Backend::Pjrt),
+            },
+            RoutedJob {
+                job: 1,
+                route: route(64, Backend::Pjrt),
+            },
+        ];
+        assert_eq!(form_batches(jobs, 8).len(), 2);
+    }
+
+    #[test]
+    fn native_jobs_stay_single() {
+        let jobs: Vec<RoutedJob<usize>> = (0..3)
+            .map(|i| RoutedJob {
+                job: i,
+                route: route(32, Backend::Native),
+            })
+            .collect();
+        assert_eq!(form_batches(jobs, 8).len(), 3);
+    }
+
+    #[test]
+    fn concat_solution_matches_individual() {
+        let mut rng = Pcg64::new(5);
+        let m = 8;
+        let systems: Vec<TriSystem<f64>> = [37usize, 64, 100]
+            .iter()
+            .map(|&n| random_dd_system(&mut rng, n, 0.5))
+            .collect();
+        let refs: Vec<&TriSystem<f64>> = systems.iter().collect();
+        let (combined, spans) = concat_systems(&refs, m);
+        assert_eq!(combined.n() % m, 0);
+        let x = partition_solve(&combined, m, 2).unwrap();
+        for (sys, &(off, n)) in systems.iter().zip(&spans) {
+            let want = thomas_solve(sys).unwrap();
+            let got = &x[off..off + n];
+            assert!(
+                max_abs_diff(got, &want) < 1e-9,
+                "batched slice diverges from standalone solve"
+            );
+        }
+    }
+
+    #[test]
+    fn concat_offsets_are_block_aligned() {
+        let mut rng = Pcg64::new(6);
+        let systems: Vec<TriSystem<f64>> = [10usize, 11]
+            .iter()
+            .map(|&n| random_dd_system(&mut rng, n, 0.5))
+            .collect();
+        let refs: Vec<&TriSystem<f64>> = systems.iter().collect();
+        let (_, spans) = concat_systems(&refs, 4);
+        assert_eq!(spans[0], (0, 10));
+        assert_eq!(spans[1].0 % 4, 0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Service metrics: atomic counters + a log-bucketed latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log2-bucketed latency histogram (µs): bucket i covers [2^i, 2^(i+1)).
+const BUCKETS: usize = 32;
+
+#[derive(Default)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Histogram {
+    pub fn record(&self, us: f64) {
+        let b = (us.max(1.0) as u64).ilog2().min(BUCKETS as u32 - 1) as usize;
+        self.counts[b].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate percentile from the bucket histogram (upper bound of
+    /// the containing bucket).
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = (q / 100.0 * n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// All service counters.
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub rejected_backpressure: AtomicU64,
+    pub batches: AtomicU64,
+    pub pjrt_solves: AtomicU64,
+    pub native_solves: AtomicU64,
+    pub thomas_solves: AtomicU64,
+    pub queue_latency: Histogram,
+    pub exec_latency: Histogram,
+    pub e2e_latency: Histogram,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected_backpressure: u64,
+    pub batches: u64,
+    pub pjrt_solves: u64,
+    pub native_solves: u64,
+    pub thomas_solves: u64,
+    pub mean_e2e_us: f64,
+    pub p50_e2e_us: f64,
+    pub p99_e2e_us: f64,
+    pub mean_exec_us: f64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            rejected_backpressure: self.rejected_backpressure.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            pjrt_solves: self.pjrt_solves.load(Ordering::Relaxed),
+            native_solves: self.native_solves.load(Ordering::Relaxed),
+            thomas_solves: self.thomas_solves.load(Ordering::Relaxed),
+            mean_e2e_us: self.e2e_latency.mean_us(),
+            p50_e2e_us: self.e2e_latency.percentile_us(50.0),
+            p99_e2e_us: self.e2e_latency.percentile_us(99.0),
+            mean_exec_us: self.exec_latency.mean_us(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_and_percentiles() {
+        let h = Histogram::default();
+        for us in [10.0, 20.0, 40.0, 80.0, 10_000.0] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_us() - 2030.0).abs() < 1.0);
+        assert!(h.percentile_us(50.0) <= 64.0);
+        assert!(h.percentile_us(99.0) >= 8192.0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::default();
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.percentile_us(99.0), 0.0);
+    }
+
+    #[test]
+    fn snapshot_copies_counters() {
+        let m = Metrics::default();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.completed.fetch_add(2, Ordering::Relaxed);
+        m.e2e_latency.record(100.0);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.completed, 2);
+        assert!(s.mean_e2e_us > 0.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! Layer-3 coordinator (system S19): the solve service a downstream user
+//! deploys.
+//!
+//! Architecture (one process):
+//!
+//! ```text
+//!   submit() ─▶ bounded queue ─▶ router ─▶ ┌ device thread (PJRT runtime,
+//!      │            │                      │   batched same-shape solves)
+//!      │        backpressure               └ worker pool (native solver)
+//!      ▼
+//!   Receiver<SolveResponse>
+//! ```
+//!
+//! * [`request`] — request/response types.
+//! * [`router`] — picks sub-system size (via the tuned heuristic — the
+//!   paper's contribution in production position) and backend/bucket.
+//! * [`batcher`] — groups same-(m, dtype) requests and *concatenates*
+//!   their systems into one blocked execution: independent tridiagonal
+//!   systems do not couple, so one fused Stage-1/2/3 pass solves the whole
+//!   batch (tested in tests/coordinator_e2e.rs).
+//! * [`service`] — bounded-queue threaded service with a PJRT device
+//!   thread (xla handles are thread-confined) and a native worker pool.
+//! * [`metrics`] — counters + latency histogram.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod service;
+
+pub use request::{Backend, SolveOptions, SolveRequest, SolveResponse};
+pub use router::Router;
+pub use service::Service;

@@ -1,0 +1,115 @@
+//! Solve-service request/response types.
+
+use crate::gpu::spec::Dtype;
+use crate::solver::TriSystem;
+
+/// Which execution backend handled (or should handle) a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT Pallas artifacts on the PJRT CPU client (the three-layer path).
+    Pjrt,
+    /// Native Rust partition solver (threaded CPU).
+    Native,
+    /// Sequential Thomas (tiny systems, or baseline comparisons).
+    Thomas,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Native => "native",
+            Backend::Thomas => "thomas",
+        }
+    }
+}
+
+/// Per-request options.
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    pub dtype: Dtype,
+    /// Force a sub-system size instead of the heuristic.
+    pub m_override: Option<usize>,
+    /// Force a backend instead of the router's choice.
+    pub backend_override: Option<Backend>,
+    /// Verify the solution and include the residual in the response.
+    pub compute_residual: bool,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            dtype: Dtype::F64,
+            m_override: None,
+            backend_override: None,
+            compute_residual: true,
+        }
+    }
+}
+
+/// One solve request (f64 payload; f32 execution casts internally).
+#[derive(Clone, Debug)]
+pub struct SolveRequest {
+    pub id: u64,
+    pub sys: TriSystem<f64>,
+    pub opts: SolveOptions,
+}
+
+impl SolveRequest {
+    pub fn new(id: u64, sys: TriSystem<f64>) -> Self {
+        SolveRequest {
+            id,
+            sys,
+            opts: SolveOptions::default(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.sys.n()
+    }
+}
+
+/// One solve response.
+#[derive(Clone, Debug)]
+pub struct SolveResponse {
+    pub id: u64,
+    pub x: Vec<f64>,
+    /// Sub-system size used.
+    pub m: usize,
+    pub backend: Backend,
+    /// Max-abs residual, when requested.
+    pub residual: Option<f64>,
+    /// Time spent queued, µs.
+    pub queue_us: f64,
+    /// Execution wall time, µs.
+    pub exec_us: f64,
+    /// Size of the batch this request was executed in.
+    pub batch_size: usize,
+    /// What the calibrated simulator says this solve would cost on the
+    /// paper's GPU (total µs) — the paper-facing metric.
+    pub simulated_gpu_us: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::generator::random_dd_system;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn defaults() {
+        let mut rng = Pcg64::new(1);
+        let req = SolveRequest::new(7, random_dd_system(&mut rng, 64, 0.5));
+        assert_eq!(req.id, 7);
+        assert_eq!(req.n(), 64);
+        assert_eq!(req.opts.dtype, Dtype::F64);
+        assert!(req.opts.m_override.is_none());
+    }
+
+    #[test]
+    fn backend_names() {
+        assert_eq!(Backend::Pjrt.name(), "pjrt");
+        assert_eq!(Backend::Native.name(), "native");
+        assert_eq!(Backend::Thomas.name(), "thomas");
+    }
+}

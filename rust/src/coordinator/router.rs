@@ -1,0 +1,181 @@
+//! Request routing: sub-system size via the tuned heuristic (the paper's
+//! contribution in its production position) + backend/bucket choice.
+
+use super::request::{Backend, SolveOptions};
+use crate::config::{Config, HeuristicKind};
+use crate::error::Result;
+use crate::gpu::simulator::GpuSimulator;
+use crate::gpu::spec::Dtype;
+use crate::tuner::heuristic::{IntervalHeuristic, KnnHeuristic, MHeuristic};
+use crate::tuner::streams::optimum_streams;
+
+/// The execution plan the router assigns to a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Route {
+    pub m: usize,
+    pub backend: Backend,
+}
+
+/// Router: heuristics per dtype + the m values the artifacts support.
+pub struct Router {
+    h_f64: Box<dyn MHeuristic>,
+    h_f32: Box<dyn MHeuristic>,
+    /// m values with stage1+stage3 artifacts (ascending); empty = no PJRT.
+    pjrt_m: Vec<usize>,
+    native_fallback: bool,
+    sim: GpuSimulator,
+}
+
+impl Router {
+    pub fn from_config(cfg: &Config, pjrt_m: Vec<usize>) -> Result<Router> {
+        let make = |dtype: Dtype| -> Result<Box<dyn MHeuristic>> {
+            Ok(match cfg.heuristic {
+                HeuristicKind::PaperInterval => Box::new(IntervalHeuristic::paper(dtype)),
+                HeuristicKind::Knn => {
+                    // Fit the kNN on the paper's corrected data (full fit,
+                    // deployment mode, k = 1 as GridSearchCV selects).
+                    let rows = crate::data::paper::table1_rows();
+                    let ns: Vec<usize> = rows.iter().map(|r| r.n).collect();
+                    let ms: Vec<usize> = match dtype {
+                        Dtype::F64 => rows.iter().map(|r| r.m_corrected).collect(),
+                        Dtype::F32 => crate::data::paper::fp32_rows()
+                            .iter()
+                            .map(|r| r.m_corrected)
+                            .collect(),
+                    };
+                    let ns = match dtype {
+                        Dtype::F64 => ns,
+                        Dtype::F32 => crate::data::paper::fp32_rows()
+                            .iter()
+                            .map(|r| r.n)
+                            .collect(),
+                    };
+                    Box::new(KnnHeuristic::fit_full("knn", &ns, &ms, 1)?)
+                }
+                HeuristicKind::Fixed(m) => Box::new(IntervalHeuristic::new(
+                    "fixed",
+                    vec![(usize::MAX, m)],
+                )?),
+            })
+        };
+        Ok(Router {
+            h_f64: make(Dtype::F64)?,
+            h_f32: make(Dtype::F32)?,
+            pjrt_m,
+            native_fallback: cfg.native_fallback,
+            sim: GpuSimulator::new(cfg.card),
+        })
+    }
+
+    fn heuristic(&self, dtype: Dtype) -> &dyn MHeuristic {
+        match dtype {
+            Dtype::F64 => self.h_f64.as_ref(),
+            Dtype::F32 => self.h_f32.as_ref(),
+        }
+    }
+
+    /// Snap a desired m to the nearest artifact-supported value.
+    pub fn snap_to_supported(&self, m: usize) -> Option<usize> {
+        self.pjrt_m
+            .iter()
+            .copied()
+            .min_by_key(|&s| s.abs_diff(m))
+    }
+
+    /// Route one request.
+    pub fn route(&self, n: usize, opts: &SolveOptions) -> Route {
+        let m_want = opts
+            .m_override
+            .unwrap_or_else(|| self.heuristic(opts.dtype).opt_m(n));
+
+        let backend = opts.backend_override.unwrap_or({
+            // Tiny systems: partitioning is pure overhead.
+            if n <= 2 * m_want.max(4) {
+                Backend::Thomas
+            } else if !self.pjrt_m.is_empty() {
+                Backend::Pjrt
+            } else if self.native_fallback {
+                Backend::Native
+            } else {
+                Backend::Thomas
+            }
+        });
+
+        let m = match backend {
+            Backend::Pjrt => self
+                .snap_to_supported(m_want)
+                .unwrap_or(m_want)
+                .max(3),
+            _ => m_want.max(3),
+        };
+        Route { m, backend }
+    }
+
+    /// The paper-facing timing estimate for a routed request.
+    pub fn simulated_gpu_us(&self, n: usize, m: usize, dtype: Dtype) -> f64 {
+        self.sim.solve(n, m, optimum_streams(n), dtype).total_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn router(pjrt_m: Vec<usize>) -> Router {
+        Router::from_config(&Config::default(), pjrt_m).unwrap()
+    }
+
+    #[test]
+    fn uses_paper_heuristic_for_m() {
+        let r = router(vec![4, 8, 10, 16, 20, 32, 64]);
+        let route = r.route(1_000_000, &SolveOptions::default());
+        assert_eq!(route.m, 32);
+        assert_eq!(route.backend, Backend::Pjrt);
+        assert_eq!(r.route(30_000, &SolveOptions::default()).m, 16);
+    }
+
+    #[test]
+    fn override_wins() {
+        let r = router(vec![4, 8, 16, 32, 64]);
+        let opts = SolveOptions {
+            m_override: Some(20),
+            ..Default::default()
+        };
+        // 20 not supported by artifacts -> snapped to 16.
+        assert_eq!(r.route(1_000_000, &opts).m, 16);
+        let opts = SolveOptions {
+            m_override: Some(20),
+            backend_override: Some(Backend::Native),
+            ..Default::default()
+        };
+        assert_eq!(r.route(1_000_000, &opts).m, 20);
+    }
+
+    #[test]
+    fn tiny_systems_go_to_thomas() {
+        let r = router(vec![4, 8]);
+        assert_eq!(r.route(6, &SolveOptions::default()).backend, Backend::Thomas);
+    }
+
+    #[test]
+    fn no_artifacts_falls_back_native() {
+        let r = router(vec![]);
+        assert_eq!(
+            r.route(1_000_000, &SolveOptions::default()).backend,
+            Backend::Native
+        );
+    }
+
+    #[test]
+    fn fp32_uses_fp32_trend() {
+        let r = router(vec![4, 8, 16, 32, 64]);
+        let opts = SolveOptions {
+            dtype: Dtype::F32,
+            ..Default::default()
+        };
+        // FP32 trend: m=64 from 7.2e5 (vs 2e7 for FP64).
+        assert_eq!(r.route(1_000_000, &opts).m, 64);
+        assert_eq!(r.route(1_000_000, &SolveOptions::default()).m, 32);
+    }
+}

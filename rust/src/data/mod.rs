@@ -1,0 +1,16 @@
+//! The paper's published experimental data, embedded as typed datasets
+//! (system S20 in DESIGN.md).
+//!
+//! Two uses:
+//! 1. the ML benches (Fig 2/5/6) run the paper's exact kNN pipeline on the
+//!    exact published data, reproducing the reported accuracies;
+//! 2. the GPU-simulator calibration fits per-card constants so the
+//!    simulated timing landscape reproduces the published argmin structure
+//!    (Tables 1–4) — see `gpu::calibration`.
+
+pub mod paper;
+
+pub use paper::{
+    fp32_rows, recursion_intervals, table1_rows, table3_rows, Fp32Row, RecursionInterval,
+    Table1Row, Table3Row,
+};

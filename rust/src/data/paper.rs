@@ -1,0 +1,424 @@
+//! Tables 1–4 of the paper, transcribed verbatim.
+
+/// One row of Table 1 (FP64, RTX 2080 Ti).
+#[derive(Clone, Copy, Debug)]
+pub struct Table1Row {
+    /// SLAE size N.
+    pub n: usize,
+    /// Experimentally observed optimum sub-system size.
+    pub m_observed: usize,
+    /// CUDA streams used (optimum-stream heuristic [5]).
+    pub streams: usize,
+    /// Time at the observed optimum m, in ms.
+    pub time_opt_ms: f64,
+    /// Trend-corrected optimum m (§2.4).
+    pub m_corrected: usize,
+    /// Time at the corrected m, in ms (None when equal to observed m).
+    pub time_corrected_ms: Option<f64>,
+}
+
+const fn t1(
+    n: usize,
+    m_observed: usize,
+    streams: usize,
+    time_opt_ms: f64,
+    m_corrected: usize,
+    time_corrected_ms: Option<f64>,
+) -> Table1Row {
+    Table1Row {
+        n,
+        m_observed,
+        streams,
+        time_opt_ms,
+        m_corrected,
+        time_corrected_ms,
+    }
+}
+
+/// Table 1: observations on the optimum sub-system size (FP64, 2080 Ti).
+pub const TABLE1: [Table1Row; 37] = [
+    t1(100, 4, 1, 0.310275, 4, None),
+    t1(200, 4, 1, 0.315868, 4, None),
+    t1(400, 4, 1, 0.327477, 4, None),
+    t1(500, 4, 1, 0.325367, 4, None),
+    t1(800, 4, 1, 0.340679, 4, None),
+    t1(1_000, 4, 1, 0.331446, 4, None),
+    t1(2_000, 4, 1, 0.351094, 4, None),
+    t1(4_000, 4, 1, 0.373837, 4, None),
+    t1(4_500, 4, 1, 0.385070, 4, None),
+    t1(5_000, 8, 1, 0.380488, 8, None),
+    t1(8_000, 8, 1, 0.424161, 8, None),
+    t1(10_000, 8, 1, 0.438337, 8, None),
+    t1(20_000, 8, 1, 0.536961, 8, None),
+    t1(25_000, 8, 1, 0.591000, 8, None),
+    t1(30_000, 16, 1, 0.614149, 16, None),
+    t1(40_000, 16, 1, 0.711075, 16, None),
+    t1(50_000, 16, 1, 0.785274, 16, None),
+    t1(60_000, 20, 1, 0.874056, 20, None),
+    t1(70_000, 35, 1, 0.956710, 20, Some(0.957520)),
+    t1(75_000, 40, 1, 0.995135, 20, Some(1.002325)),
+    t1(80_000, 32, 1, 1.034019, 32, None),
+    t1(100_000, 40, 1, 1.195640, 32, Some(1.196261)),
+    t1(200_000, 64, 2, 1.857711, 32, Some(1.931349)),
+    t1(400_000, 64, 4, 3.270235, 32, Some(3.339023)),
+    t1(500_000, 40, 8, 4.043336, 32, Some(4.089002)),
+    t1(800_000, 64, 8, 6.055748, 32, Some(6.237866)),
+    t1(1_000_000, 32, 8, 7.635039, 32, None),
+    t1(2_000_000, 32, 16, 14.49496, 32, None),
+    t1(4_000_000, 32, 32, 27.83609, 32, None),
+    t1(5_000_000, 32, 32, 34.51819, 32, None),
+    t1(8_000_000, 64, 32, 53.92044, 32, Some(54.36878)),
+    t1(10_000_000, 32, 32, 66.71282, 32, None),
+    t1(20_000_000, 64, 32, 131.0139, 64, None),
+    t1(40_000_000, 64, 32, 259.8288, 64, None),
+    t1(50_000_000, 64, 32, 323.7364, 64, None),
+    t1(80_000_000, 64, 32, 516.1501, 64, None),
+    t1(100_000_000, 64, 32, 643.1100, 64, None),
+];
+
+pub fn table1_rows() -> &'static [Table1Row] {
+    &TABLE1
+}
+
+/// §2.4's corrected-trend intervals, FP64: the interval heuristic the paper
+/// derives from Table 1 (upper bounds inclusive).
+pub const FP64_TREND: [(usize, usize); 6] = [
+    (4_500, 4),
+    (25_000, 8),
+    (50_000, 16),
+    (75_000, 20),
+    (10_000_000, 32),
+    (usize::MAX, 64),
+];
+
+/// Corrected-trend intervals for the RTX A5000 / RTX 4080 (Table 3's
+/// observed columns de-fluctuated the same way §2.4 de-fluctuates
+/// Table 1; the paper notes the two cards can share one heuristic with no
+/// performance loss, and both switch to m = 64 from N = 2x10^5 with no
+/// m = 20 level).
+pub const AMPERE_TREND: [(usize, usize); 5] = [
+    (4_500, 4),
+    (25_000, 8),
+    (50_000, 16),
+    (100_000, 32),
+    (usize::MAX, 64),
+];
+
+/// FP32 corrected-trend intervals from Table 4.
+pub const FP32_TREND: [(usize, usize); 5] = [
+    (4_500, 4),
+    (25_000, 8),
+    (70_000, 16),
+    (700_000, 32),
+    (usize::MAX, 64),
+];
+
+/// One row of Table 3 (cross-card study, FP64).
+#[derive(Clone, Copy, Debug)]
+pub struct Table3Row {
+    pub n: usize,
+    pub streams: usize,
+    /// Observed optimum on the 2080 Ti.
+    pub m_2080ti: usize,
+    /// The 2080 Ti-derived heuristic's prediction.
+    pub heuristic_2080ti: usize,
+    /// Observed optimum on the A5000.
+    pub m_a5000: usize,
+    /// Performance loss on A5000 when reusing the 2080 Ti heuristic
+    /// (None = no loss; Some(0.0) = "small" per the paper).
+    pub loss_a5000_pct: Option<f64>,
+    /// Observed optimum on the 4080.
+    pub m_4080: usize,
+    pub loss_4080_pct: Option<f64>,
+}
+
+const fn t3(
+    n: usize,
+    streams: usize,
+    m_2080ti: usize,
+    heuristic_2080ti: usize,
+    m_a5000: usize,
+    loss_a5000_pct: Option<f64>,
+    m_4080: usize,
+    loss_4080_pct: Option<f64>,
+) -> Table3Row {
+    Table3Row {
+        n,
+        streams,
+        m_2080ti,
+        heuristic_2080ti,
+        m_a5000,
+        loss_a5000_pct,
+        m_4080,
+        loss_4080_pct,
+    }
+}
+
+/// "small" (< 2.5%) performance loss marker.
+pub const SMALL: Option<f64> = Some(0.0);
+
+/// Table 3: optimum sub-system size across GPU cards (FP64).
+pub const TABLE3: [Table3Row; 37] = [
+    t3(100, 1, 4, 4, 4, None, 4, None),
+    t3(200, 1, 4, 4, 4, None, 4, None),
+    t3(400, 1, 4, 4, 4, None, 4, None),
+    t3(500, 1, 4, 4, 4, None, 4, None),
+    t3(800, 1, 4, 4, 4, None, 8, SMALL),
+    t3(1_000, 1, 4, 4, 4, None, 4, None),
+    t3(2_000, 1, 4, 4, 4, None, 4, None),
+    t3(4_000, 1, 4, 4, 8, SMALL, 8, SMALL),
+    t3(4_500, 1, 4, 4, 4, None, 4, None),
+    t3(5_000, 1, 8, 8, 4, SMALL, 4, SMALL),
+    t3(8_000, 1, 8, 8, 8, None, 4, SMALL),
+    t3(10_000, 1, 8, 8, 8, None, 8, None),
+    t3(20_000, 1, 8, 8, 8, None, 16, SMALL),
+    t3(25_000, 1, 8, 8, 8, None, 8, None),
+    t3(30_000, 1, 16, 16, 16, None, 16, None),
+    t3(40_000, 1, 16, 16, 16, None, 16, None),
+    t3(50_000, 1, 16, 16, 16, None, 16, None),
+    t3(60_000, 1, 20, 20, 32, Some(2.65), 40, SMALL),
+    t3(70_000, 1, 35, 20, 20, None, 20, None),
+    t3(75_000, 1, 40, 20, 20, None, 40, SMALL),
+    t3(80_000, 1, 32, 32, 40, SMALL, 32, None),
+    t3(100_000, 1, 40, 32, 32, None, 32, None),
+    t3(200_000, 2, 64, 32, 64, Some(6.26), 64, Some(4.59)),
+    t3(400_000, 3, 64, 32, 64, Some(3.54), 64, SMALL),
+    t3(500_000, 8, 40, 32, 40, Some(2.38), 40, Some(4.19)),
+    t3(800_000, 8, 64, 32, 64, Some(6.03), 64, Some(2.50)),
+    t3(1_000_000, 8, 32, 32, 64, Some(9.44), 64, Some(7.13)),
+    t3(2_000_000, 16, 32, 32, 64, Some(8.15), 64, Some(6.00)),
+    t3(4_000_000, 32, 32, 32, 64, Some(5.60), 64, Some(6.90)),
+    t3(5_000_000, 32, 32, 32, 64, Some(3.65), 64, Some(5.66)),
+    t3(8_000_000, 32, 64, 32, 64, Some(5.63), 64, Some(7.09)),
+    t3(10_000_000, 32, 32, 32, 64, Some(6.06), 64, Some(6.75)),
+    t3(20_000_000, 32, 64, 64, 64, None, 64, None),
+    t3(40_000_000, 32, 64, 64, 64, None, 64, None),
+    t3(50_000_000, 32, 64, 64, 64, None, 64, None),
+    t3(80_000_000, 32, 64, 64, 64, None, 64, None),
+    t3(100_000_000, 32, 64, 64, 64, None, 64, None),
+];
+
+pub fn table3_rows() -> &'static [Table3Row] {
+    &TABLE3
+}
+
+/// One row of Table 4 (FP32 study, 2080 Ti).
+#[derive(Clone, Copy, Debug)]
+pub struct Fp32Row {
+    pub n: usize,
+    pub m_observed: usize,
+    pub streams: usize,
+    pub m_corrected: usize,
+}
+
+const fn t4(n: usize, m_observed: usize, streams: usize, m_corrected: usize) -> Fp32Row {
+    Fp32Row {
+        n,
+        m_observed,
+        streams,
+        m_corrected,
+    }
+}
+
+/// Table 4: observations on the optimum sub-system size, FP32.
+pub const TABLE4: [Fp32Row; 40] = [
+    t4(100, 4, 1, 4),
+    t4(200, 4, 1, 4),
+    t4(400, 4, 1, 4),
+    t4(500, 4, 1, 4),
+    t4(800, 4, 1, 4),
+    t4(1_000, 4, 1, 4),
+    t4(2_000, 4, 1, 4),
+    t4(4_000, 4, 1, 4),
+    t4(4_500, 4, 1, 4),
+    t4(5_000, 8, 1, 8),
+    t4(8_000, 8, 1, 8),
+    t4(10_000, 8, 1, 8),
+    t4(20_000, 16, 1, 8),
+    t4(25_000, 20, 1, 8),
+    t4(30_000, 16, 1, 16),
+    t4(40_000, 16, 1, 16),
+    t4(50_000, 16, 1, 16),
+    t4(60_000, 16, 1, 16),
+    t4(70_000, 16, 1, 16),
+    t4(72_000, 32, 1, 32),
+    t4(80_000, 32, 1, 32),
+    t4(100_000, 32, 1, 32),
+    t4(200_000, 64, 2, 32),
+    t4(400_000, 64, 4, 32),
+    t4(500_000, 40, 8, 32),
+    t4(600_000, 64, 8, 32),
+    t4(700_000, 40, 8, 32),
+    t4(720_000, 64, 8, 64),
+    t4(800_000, 64, 8, 64),
+    t4(1_000_000, 64, 8, 64),
+    t4(2_000_000, 64, 16, 64),
+    t4(4_000_000, 64, 32, 64),
+    t4(5_000_000, 64, 32, 64),
+    t4(8_000_000, 64, 32, 64),
+    t4(10_000_000, 64, 32, 64),
+    t4(20_000_000, 64, 32, 64),
+    t4(40_000_000, 40, 32, 64),
+    t4(50_000_000, 40, 32, 64),
+    t4(80_000_000, 40, 32, 64),
+    t4(100_000_000, 40, 32, 64),
+];
+
+pub fn fp32_rows() -> &'static [Fp32Row] {
+    &TABLE4
+}
+
+/// Table 2: intervals of SLAE sizes per optimum recursion count (A5000).
+#[derive(Clone, Copy, Debug)]
+pub struct RecursionInterval {
+    pub r: usize,
+    /// Inclusive N range where this R is optimal.
+    pub lo: usize,
+    pub hi: usize,
+}
+
+/// Table 2 (R = 4 never wins — absent).
+pub const TABLE2: [RecursionInterval; 4] = [
+    RecursionInterval {
+        r: 0,
+        lo: 0,
+        hi: 2_200_000,
+    },
+    RecursionInterval {
+        r: 1,
+        lo: 2_300_000,
+        hi: 4_800_000,
+    },
+    RecursionInterval {
+        r: 2,
+        lo: 5_000_000,
+        hi: 9_600_000,
+    },
+    RecursionInterval {
+        r: 3,
+        lo: 10_000_000,
+        hi: 100_000_000,
+    },
+];
+
+pub fn recursion_intervals() -> &'static [RecursionInterval] {
+    &TABLE2
+}
+
+/// The SLAE sizes used for the §3.1 recursion experiments.
+pub const RECURSION_N_VALUES: [usize; 18] = [
+    100_000, 1_000_000, 2_000_000, 2_200_000, 2_300_000, 2_400_000, 2_500_000, 3_000_000,
+    4_000_000, 4_500_000, 4_800_000, 5_000_000, 8_000_000, 8_400_000, 9_200_000, 9_600_000,
+    10_000_000, 100_000_000,
+];
+
+/// The sub-system-size candidate grid the paper sweeps (§2: "between 11 and
+/// 18 different sub-system sizes in the interval [4;1250]").
+pub const M_CANDIDATES: [usize; 18] = [
+    4, 5, 8, 10, 16, 20, 25, 32, 35, 40, 50, 64, 100, 125, 128, 250, 625, 1250,
+];
+
+/// Headline numbers quoted in the abstract / conclusions.
+pub mod headline {
+    /// Speed-up from tuned m at N = 8e7 (m=64 vs m=4).
+    pub const SPEEDUP_TUNED_M: f64 = 1.7;
+    pub const SPEEDUP_TUNED_M_N: usize = 80_000_000;
+    /// Recursive-over-non-recursive speed-up at N = 4.5e6.
+    pub const SPEEDUP_RECURSIVE: f64 = 1.17;
+    pub const SPEEDUP_RECURSIVE_N: usize = 4_500_000;
+    /// kNN model quality (corrected / observed / null accuracy), FP64.
+    pub const KNN_ACC_CORRECTED: f64 = 1.0;
+    pub const KNN_ACC_OBSERVED: f64 = 0.7;
+    pub const KNN_NULL_ACC: f64 = 0.4;
+    /// FP32 variants (Fig 6) and the recursion-steps model (Fig 5).
+    pub const KNN_ACC_OBSERVED_FP32: f64 = 0.8;
+    pub const KNN_RSTEPS_ACC: f64 = 1.0;
+    pub const KNN_RSTEPS_NULL_ACC: f64 = 0.5;
+}
+
+/// Look up the corrected optimum m for a given N from a trend table.
+pub fn trend_lookup(trend: &[(usize, usize)], n: usize) -> usize {
+    for &(hi, m) in trend {
+        if n <= hi {
+            return m;
+        }
+    }
+    trend.last().unwrap().1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_37_rows_sorted() {
+        assert_eq!(TABLE1.len(), 37);
+        assert!(TABLE1.windows(2).all(|w| w[0].n < w[1].n));
+    }
+
+    #[test]
+    fn corrected_matches_trend_intervals() {
+        for row in &TABLE1 {
+            assert_eq!(
+                row.m_corrected,
+                trend_lookup(&FP64_TREND, row.n),
+                "N={} corrected m inconsistent with §2.4 trend",
+                row.n
+            );
+        }
+    }
+
+    #[test]
+    fn fp32_corrected_matches_trend() {
+        for row in &TABLE4 {
+            assert_eq!(
+                row.m_corrected,
+                trend_lookup(&FP32_TREND, row.n),
+                "N={} fp32 corrected m inconsistent",
+                row.n
+            );
+        }
+    }
+
+    #[test]
+    fn corrections_happen_in_8_of_37_rows() {
+        // §2.5: "in the 8 out of 37 cases when we had to make a correction".
+        let corrected = TABLE1
+            .iter()
+            .filter(|r| r.m_observed != r.m_corrected)
+            .count();
+        assert_eq!(corrected, 8);
+    }
+
+    #[test]
+    fn corrected_time_never_better() {
+        // The corrected m is at best equal to the observed optimum.
+        for row in &TABLE1 {
+            if let Some(tc) = row.time_corrected_ms {
+                assert!(tc >= row.time_opt_ms, "N={}", row.n);
+            }
+        }
+    }
+
+    #[test]
+    fn table3_heuristic_column_is_fp64_trend() {
+        for row in &TABLE3 {
+            assert_eq!(row.heuristic_2080ti, trend_lookup(&FP64_TREND, row.n));
+        }
+    }
+
+    #[test]
+    fn table2_intervals_ordered_and_disjoint() {
+        for w in TABLE2.windows(2) {
+            assert!(w[0].hi < w[1].lo);
+            assert_eq!(w[0].r + 1, w[1].r);
+        }
+    }
+
+    #[test]
+    fn headline_speedup_consistent_with_m_candidates() {
+        assert!(M_CANDIDATES.contains(&4));
+        assert!(M_CANDIDATES.contains(&64));
+        assert!(M_CANDIDATES.contains(&1250));
+    }
+}

@@ -1,0 +1,57 @@
+//! Crate-wide error type.
+
+/// Unified error for all partisol subsystems.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("solver error: {0}")]
+    Solver(String),
+
+    #[error("singular system: zero pivot at row {row} (|w| = {magnitude:.3e})")]
+    SingularSystem { row: usize, magnitude: f64 },
+
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("no artifact variant for stage={stage} dtype={dtype} m={m} p>={p}")]
+    NoVariant {
+        stage: String,
+        dtype: String,
+        m: usize,
+        p: usize,
+    },
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("json parse error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    #[error("ml error: {0}")]
+    Ml(String),
+
+    #[error("cli error: {0}")]
+    Cli(String),
+
+    #[error("service error: {0}")]
+    Service(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,450 @@
+//! Fitted model constants per card + the calibration harness (DESIGN.md §8).
+//!
+//! The simulator's structural shape (regimes, pipelines, payload sizes) is
+//! derived from first principles in the sibling modules; the constants
+//! below are **fitted** so that the simulated landscape reproduces the
+//! paper's published results:
+//!
+//! * argmin over m matches the corrected optima of Table 1 (2080 Ti FP64),
+//!   Table 3 (A5000 / 4080 FP64) and Table 4 (2080 Ti FP32);
+//! * argmin over R matches the cut-lines of Table 2 (A5000);
+//! * log-RMSE against the absolute times of Table 1 is minimized as a
+//!   tie-break.
+//!
+//! `partisol calibrate` re-runs the coordinate-descent fit from the
+//! committed values and prints the objective decomposition; the committed
+//! values are the fit's output, rounded.
+
+use super::spec::GpuCard;
+
+/// All tunable constants of the timing model (µs / ns / fractions).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelParams {
+    /// Fixed per-solve overhead: driver, event setup, stream setup (µs).
+    pub t_fixed_us: f64,
+    /// Kernel launch overhead (µs).
+    pub t_launch_us: f64,
+    /// Per-transfer-call fixed latency (µs).
+    pub t_xfer_fixed_us: f64,
+    /// Per-element dependent-chain cost at single-warp occupancy (µs).
+    pub cpe_lat_us: f64,
+    /// Resident warps/SM at which latency is fully hidden.
+    pub warps_sat: f64,
+    /// Effective fraction of peak DRAM bandwidth for the strided kernels.
+    pub bw_eff_frac: f64,
+    /// Large-m cache-pressure slope (per `m_pen_knee` of excess m).
+    pub m_pen: f64,
+    /// m at which the penalty starts.
+    pub m_pen_knee: usize,
+    /// FP32 scale on `m_pen` (halved local footprint).
+    pub m_pen_fp32_scale: f64,
+    /// §2.6 misalignment penalty magnitude.
+    pub align_pen: f64,
+    /// Achieved fraction of PCIe bandwidth.
+    pub pcie_eff: f64,
+    /// Host Stage-2 Thomas: cached per-element cost (ns).
+    pub host_ns_base: f64,
+    /// Additional per-element cost once the working set spills L3 (ns).
+    pub host_ns_extra: f64,
+    /// Host L3 capacity used in the spill sigmoid (bytes).
+    pub host_l3_bytes: f64,
+    /// Fixed host Stage-2 overhead (µs).
+    pub host_fixed_us: f64,
+    /// Per-recursion-level fixed overhead (extra launches, sync) (µs).
+    pub rec_overhead_us: f64,
+    /// Multiplicative measurement-noise σ for "observed" sweeps.
+    pub noise_sigma: f64,
+}
+
+impl ModelParams {
+    /// The committed fit for each card (output of `partisol calibrate`).
+    pub fn fitted(card: GpuCard) -> ModelParams {
+        match card {
+            GpuCard::Rtx2080Ti => ModelParams {
+                t_fixed_us: 280.0,
+                t_launch_us: 4.0,
+                t_xfer_fixed_us: 7.0,
+                cpe_lat_us: 1.146,
+                warps_sat: 24.0,
+                bw_eff_frac: 0.060,
+                m_pen: 0.184,
+                m_pen_knee: 32,
+                m_pen_fp32_scale: 0.407,
+                align_pen: 0.26,
+                pcie_eff: 0.54,
+                host_ns_base: 3.71,
+                host_ns_extra: 3.49,
+                host_l3_bytes: 17.7e6,
+                host_fixed_us: 12.0,
+                rec_overhead_us: 130.0,
+                noise_sigma: 0.012,
+            },
+            GpuCard::RtxA5000 => ModelParams {
+                t_fixed_us: 255.0,
+                t_launch_us: 3.5,
+                t_xfer_fixed_us: 6.0,
+                cpe_lat_us: 0.366,
+                warps_sat: 55.0,
+                bw_eff_frac: 0.0577,
+                m_pen: 0.0335,
+                m_pen_knee: 32,
+                m_pen_fp32_scale: 0.5,
+                align_pen: 0.26,
+                pcie_eff: 0.50,
+                host_ns_base: 1.68,
+                host_ns_extra: 2.68,
+                host_l3_bytes: 8.97e6,
+                host_fixed_us: 12.0,
+                rec_overhead_us: 60.0,
+                noise_sigma: 0.012,
+            },
+            GpuCard::Rtx4080 => ModelParams {
+                t_fixed_us: 235.0,
+                t_launch_us: 3.0,
+                t_xfer_fixed_us: 6.0,
+                cpe_lat_us: 0.475,
+                warps_sat: 24.0,
+                bw_eff_frac: 0.0631,
+                m_pen: 0.0398,
+                m_pen_knee: 32,
+                m_pen_fp32_scale: 0.5,
+                align_pen: 0.26,
+                pcie_eff: 0.412,
+                host_ns_base: 0.5,
+                host_ns_extra: 4.48,
+                host_l3_bytes: 4.0e6,
+                host_fixed_us: 12.0,
+                rec_overhead_us: 130.0,
+                noise_sigma: 0.012,
+            },
+        }
+    }
+
+    /// Parameter accessors for the coordinate-descent fitter.
+    pub const FIT_FIELDS: [&'static str; 11] = [
+        "cpe_lat_us",
+        "warps_sat",
+        "bw_eff_frac",
+        "m_pen",
+        "m_pen_fp32_scale",
+        "align_pen",
+        "host_ns_base",
+        "host_ns_extra",
+        "host_l3_bytes",
+        "rec_overhead_us",
+        "pcie_eff",
+    ];
+
+    pub fn get(&self, field: &str) -> f64 {
+        match field {
+            "t_fixed_us" => self.t_fixed_us,
+            "t_launch_us" => self.t_launch_us,
+            "t_xfer_fixed_us" => self.t_xfer_fixed_us,
+            "cpe_lat_us" => self.cpe_lat_us,
+            "warps_sat" => self.warps_sat,
+            "bw_eff_frac" => self.bw_eff_frac,
+            "m_pen" => self.m_pen,
+            "m_pen_fp32_scale" => self.m_pen_fp32_scale,
+            "align_pen" => self.align_pen,
+            "pcie_eff" => self.pcie_eff,
+            "host_ns_base" => self.host_ns_base,
+            "host_ns_extra" => self.host_ns_extra,
+            "host_l3_bytes" => self.host_l3_bytes,
+            "host_fixed_us" => self.host_fixed_us,
+            "rec_overhead_us" => self.rec_overhead_us,
+            "noise_sigma" => self.noise_sigma,
+            _ => panic!("unknown field {field}"),
+        }
+    }
+
+    pub fn set(&mut self, field: &str, v: f64) {
+        match field {
+            "t_fixed_us" => self.t_fixed_us = v,
+            "t_launch_us" => self.t_launch_us = v,
+            "t_xfer_fixed_us" => self.t_xfer_fixed_us = v,
+            "cpe_lat_us" => self.cpe_lat_us = v,
+            "warps_sat" => self.warps_sat = v,
+            "bw_eff_frac" => self.bw_eff_frac = v,
+            "m_pen" => self.m_pen = v,
+            "m_pen_fp32_scale" => self.m_pen_fp32_scale = v,
+            "align_pen" => self.align_pen = v,
+            "pcie_eff" => self.pcie_eff = v,
+            "host_ns_base" => self.host_ns_base = v,
+            "host_ns_extra" => self.host_ns_extra = v,
+            "host_l3_bytes" => self.host_l3_bytes = v,
+            "host_fixed_us" => self.host_fixed_us = v,
+            "rec_overhead_us" => self.rec_overhead_us = v,
+            "noise_sigma" => self.noise_sigma = v,
+            _ => panic!("unknown field {field}"),
+        }
+    }
+}
+
+pub mod objective {
+    //! The calibration objective: how far a parameter set is from
+    //! reproducing the published tables.
+
+    use super::ModelParams;
+    use crate::data::paper;
+    use crate::gpu::simulator::GpuSimulator;
+    use crate::gpu::spec::{Dtype, GpuCard};
+    use crate::recursion::planner::plan_for;
+    use crate::tuner::streams::optimum_streams;
+    use crate::util::stats::{argmin, log_rmse};
+
+    /// Candidate sub-system sizes (the paper's sweep grid, bounded by N).
+    pub fn m_grid(n: usize) -> Vec<usize> {
+        paper::M_CANDIDATES
+            .iter()
+            .copied()
+            .filter(|&m| m >= 4 && m <= n.max(4))
+            .collect()
+    }
+
+    /// Simulated noise-free optimum m for one N.
+    pub fn predicted_opt_m(sim: &GpuSimulator, n: usize, dtype: Dtype) -> usize {
+        let grid = m_grid(n);
+        let times: Vec<f64> = grid
+            .iter()
+            .map(|&m| sim.solve(n, m, optimum_streams(n), dtype).total_us)
+            .collect();
+        grid[argmin(&times).unwrap()]
+    }
+
+    /// Objective decomposition for one card.
+    #[derive(Clone, Copy, Debug, Default)]
+    pub struct Score {
+        /// # of Table-1/3/4 rows whose simulated argmin-m differs from the
+        /// published corrected optimum.
+        pub m_mismatches: usize,
+        /// # of Table-2 probe sizes whose simulated argmin-R differs.
+        pub r_mismatches: usize,
+        /// Smooth loss: Σ (T(want) − T(argmin)) / T(argmin) over all rows —
+        /// zero exactly when every published optimum is the simulated
+        /// argmin, and differentiable-in-effect otherwise (the fitter's
+        /// real signal; the counts alone are a flat staircase).
+        pub excess: f64,
+        /// log-RMSE against Table 1 absolute times (2080 Ti only).
+        pub time_rmse: f64,
+        pub rows: usize,
+    }
+
+    impl Score {
+        /// Scalar objective: smooth excess dominates, small weights keep
+        /// the counts and absolute-time fidelity in play.
+        pub fn scalar(&self) -> f64 {
+            self.excess * 100.0
+                + (self.m_mismatches + self.r_mismatches) as f64 * 0.6
+                + self.time_rmse * 2.0
+        }
+    }
+
+    /// Relative excess of choosing `want` instead of the argmin,
+    /// normalized by the *variable* part of the optimum time (subtracting
+    /// the fixed per-solve overhead) — otherwise the fitter can cheat by
+    /// inflating `t_fixed_us` until every relative excess vanishes.
+    fn excess_of(times: &[f64], grid: &[usize], want: usize, fixed_us: f64) -> f64 {
+        let t_opt = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let denom = (t_opt - fixed_us).max(t_opt * 0.02);
+        match grid.iter().position(|&m| m == want) {
+            Some(i) => (times[i] - t_opt) / denom,
+            None => 0.0,
+        }
+    }
+
+    /// Score the FP64 corrected optima for one card (Table 1 col 5 /
+    /// Table 3 cols 5 & 7).
+    pub fn score_fp64_m(card: GpuCard, params: &ModelParams) -> Score {
+        let sim = GpuSimulator::with_params(card, *params);
+        let mut s = Score::default();
+        let mut pred = Vec::new();
+        let mut actual = Vec::new();
+        for row in paper::table3_rows() {
+            // Score against the de-fluctuated trend per card (the same
+            // correction §2.4 applies to Table 1) — a noise-free argmin
+            // should not be asked to reproduce measurement flukes.
+            let want = match card {
+                GpuCard::Rtx2080Ti => paper::trend_lookup(&paper::FP64_TREND, row.n),
+                _ => paper::trend_lookup(&paper::AMPERE_TREND, row.n),
+            };
+            let grid = m_grid(row.n);
+            let times: Vec<f64> = grid
+                .iter()
+                .map(|&m| sim.solve(row.n, m, optimum_streams(row.n), Dtype::F64).total_us)
+                .collect();
+            let got = grid[argmin(&times).unwrap()];
+            if got != want {
+                s.m_mismatches += 1;
+            }
+            s.excess += excess_of(&times, &grid, want, params.t_fixed_us);
+            s.rows += 1;
+            if card == GpuCard::Rtx2080Ti {
+                // Compare absolute time at the observed optimum.
+                if let Some(t1) = paper::table1_rows().iter().find(|r| r.n == row.n) {
+                    pred.push(
+                        sim.solve(row.n, t1.m_observed, t1.streams, Dtype::F64)
+                            .total_ms(),
+                    );
+                    actual.push(t1.time_opt_ms);
+                }
+            }
+        }
+        if !pred.is_empty() {
+            s.time_rmse = log_rmse(&pred, &actual);
+        }
+        s
+    }
+
+    /// Score the FP32 corrected optima (Table 4, 2080 Ti).
+    pub fn score_fp32_m(params: &ModelParams) -> Score {
+        let sim = GpuSimulator::with_params(GpuCard::Rtx2080Ti, *params);
+        let mut s = Score::default();
+        for row in paper::fp32_rows() {
+            let grid = m_grid(row.n);
+            let times: Vec<f64> = grid
+                .iter()
+                .map(|&m| sim.solve(row.n, m, optimum_streams(row.n), Dtype::F32).total_us)
+                .collect();
+            let got = grid[argmin(&times).unwrap()];
+            if got != row.m_corrected {
+                s.m_mismatches += 1;
+            }
+            s.excess += excess_of(&times, &grid, row.m_corrected, params.t_fixed_us);
+            s.rows += 1;
+        }
+        s
+    }
+
+    /// Score the recursion cut-lines (Table 2, A5000).
+    pub fn score_recursion(params: &ModelParams) -> Score {
+        let sim = GpuSimulator::with_params(GpuCard::RtxA5000, *params);
+        let mut s = Score::default();
+        for &n in &paper::RECURSION_N_VALUES {
+            let want = paper::recursion_intervals()
+                .iter()
+                .filter(|iv| n >= iv.lo)
+                .map(|iv| iv.r)
+                .last()
+                .unwrap_or(0);
+            let times: Vec<f64> = (0..=4)
+                .map(|r| {
+                    let plan = plan_for(n, r, Dtype::F64);
+                    sim.solve_plan(n, &plan, optimum_streams(n), Dtype::F64)
+                        .total_us
+                })
+                .collect();
+            let got = argmin(&times).unwrap();
+            if got != want {
+                s.r_mismatches += 1;
+            }
+            let t_opt = times.iter().cloned().fold(f64::INFINITY, f64::min);
+            let denom = (t_opt - params.t_fixed_us).max(t_opt * 0.02);
+            s.excess += (times[want] - t_opt) / denom;
+            s.rows += 1;
+        }
+        s
+    }
+
+    /// Simulated optimum recursion count for one N (R in 0..=4).
+    pub fn predicted_opt_r(sim: &GpuSimulator, n: usize) -> usize {
+        let times: Vec<f64> = (0..=4)
+            .map(|r| {
+                let plan = plan_for(n, r, Dtype::F64);
+                sim.solve_plan(n, &plan, optimum_streams(n), Dtype::F64)
+                    .total_us
+            })
+            .collect();
+        argmin(&times).unwrap()
+    }
+
+    /// Combined objective across all calibration targets for one card.
+    pub fn combined(card: GpuCard, params: &ModelParams) -> Score {
+        let mut s = score_fp64_m(card, params);
+        if card == GpuCard::Rtx2080Ti {
+            let s32 = score_fp32_m(params);
+            s.m_mismatches += s32.m_mismatches;
+            s.excess += s32.excess;
+            s.rows += s32.rows;
+        }
+        if card == GpuCard::RtxA5000 {
+            // Recursion rows are few (18) next to the m rows (55) but
+            // carry Table 2 and the 1.17x headline — weight them up.
+            let sr = score_recursion(params);
+            s.r_mismatches += sr.r_mismatches * 3;
+            s.excess += sr.excess * 3.0;
+            s.rows += sr.rows;
+        }
+        s
+    }
+}
+
+/// Physically-motivated bounds per fit field: the fitter must not wander
+/// into unphysical territory (e.g. PCIe at 20% efficiency, or a zero
+/// local-memory penalty that lets m = 1250 win).
+pub fn bounds(field: &str) -> (f64, f64) {
+    match field {
+        "cpe_lat_us" => (0.2, 4.0),
+        "warps_sat" => (4.0, 56.0),
+        "bw_eff_frac" => (0.03, 0.30),
+        "m_pen" => (0.02, 0.50),
+        "m_pen_fp32_scale" => (0.10, 1.0),
+        "align_pen" => (0.05, 0.50),
+        "pcie_eff" => (0.40, 1.0),
+        "host_ns_base" => (0.5, 10.0),
+        "host_ns_extra" => (0.0, 15.0),
+        "host_l3_bytes" => (4e6, 64e6),
+        "rec_overhead_us" => (5.0, 400.0),
+        _ => (f64::MIN_POSITIVE, f64::MAX),
+    }
+}
+
+/// Coordinate-descent fitter: multiplicative probes per field within the
+/// physical bounds, keep improvements, stop after a sweep without
+/// progress.
+pub fn fit(card: GpuCard, start: ModelParams, max_sweeps: usize) -> (ModelParams, f64) {
+    let mut best = start;
+    let mut best_score = objective::combined(card, &best).scalar();
+    for _ in 0..max_sweeps {
+        let mut improved = false;
+        for field in ModelParams::FIT_FIELDS {
+            let (lo, hi) = bounds(field);
+            for step in [0.7, 0.85, 0.93, 0.97, 1.03, 1.08, 1.18, 1.4] {
+                let mut cand = best;
+                cand.set(field, (best.get(field) * step).clamp(lo, hi));
+                let sc = objective::combined(card, &cand).scalar();
+                if sc < best_score {
+                    best = cand;
+                    best_score = sc;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    (best, best_score)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut p = ModelParams::fitted(GpuCard::Rtx2080Ti);
+        for f in ModelParams::FIT_FIELDS {
+            let v = p.get(f);
+            p.set(f, v * 2.0);
+            assert_eq!(p.get(f), v * 2.0, "{f}");
+            p.set(f, v);
+        }
+    }
+
+    #[test]
+    fn fitted_params_differ_per_card() {
+        let a = ModelParams::fitted(GpuCard::Rtx2080Ti);
+        let b = ModelParams::fitted(GpuCard::Rtx4080);
+        assert!(a.m_pen > b.m_pen, "Turing must have larger m penalty");
+    }
+}

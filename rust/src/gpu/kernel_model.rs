@@ -1,0 +1,180 @@
+//! Stage-1 / Stage-3 kernel timing model.
+//!
+//! Two regimes, the max of which bounds the kernel time:
+//!
+//! * **latency regime** — each CUDA thread walks a serial dependent chain
+//!   over its m elements (forward/backward sweeps); at low occupancy the
+//!   per-element cost is the full memory round-trip `cpe_lat_us`, divided
+//!   by the latency-hiding factor `min(resident_warps_per_sm, warps_sat)`.
+//!   Wave quantization applies when the grid exceeds residency.
+//! * **throughput regime** — aggregate traffic over effective DRAM
+//!   bandwidth. Strided one-sub-system-per-thread access wastes most of
+//!   each 32-byte sector, captured by `bw_eff_frac` (fitted, ≈5–10% of
+//!   peak). Large m additionally thrashes the per-SM cache working set
+//!   (per-thread sweep arrays live in local memory); the fitted `m_pen`
+//!   slope models that — per card, because it depends on the L2/memory
+//!   subsystem (Ada's 64 MiB L2 absorbs it; Turing's 5.5 MiB does not).
+//!
+//! All constants marked *fitted* live in [`super::calibration`].
+
+use super::calibration::ModelParams;
+use super::occupancy::{theoretical_occupancy, KernelResources};
+use super::spec::{Dtype, GpuSpec};
+
+/// Which kernel of the pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Interface-equation reduction: reads a,b,c,d; writes 6 coeffs; the
+    /// sweep intermediates (cp/dy/du/dv) spill to local memory.
+    One,
+    /// Interior back-solve: reads a,b,c,d + boundaries, writes x.
+    Three,
+}
+
+impl Stage {
+    /// Structural per-element DRAM+local traffic in units of element size
+    /// (inputs + local-memory spill traffic + outputs).
+    pub fn traffic_factor(self) -> f64 {
+        match self {
+            // 4 reads + (4 write + 4 read) local spill + O(1/m) output
+            Stage::One => 12.0,
+            // 4 reads + (2w + 2r) local + 1 write
+            Stage::Three => 9.0,
+        }
+    }
+
+    /// Dependent memory operations per element of the serial chain.
+    pub fn chain_ops(self) -> f64 {
+        match self {
+            Stage::One => 1.0,
+            Stage::Three => 0.75,
+        }
+    }
+}
+
+/// Resident warps per SM for a grid of `threads` (fractional, capped by
+/// the occupancy limit).
+pub fn resident_warps_per_sm(spec: &GpuSpec, threads: usize) -> f64 {
+    let occ = theoretical_occupancy(spec, &KernelResources::default());
+    let total_warps = threads.div_ceil(spec.warp_size) as f64;
+    (total_warps / spec.sm_count as f64).min(occ.warps_per_sm as f64)
+}
+
+/// Number of device waves for a grid of `threads`.
+pub fn waves(spec: &GpuSpec, threads: usize) -> f64 {
+    let occ = theoretical_occupancy(spec, &KernelResources::default());
+    let block = KernelResources::default().block_size;
+    let blocks = threads.div_ceil(block) as f64;
+    let capacity = (occ.blocks_per_sm * spec.sm_count) as f64;
+    (blocks / capacity).ceil().max(1.0)
+}
+
+/// The large-m cache-pressure penalty factor on effective bandwidth.
+pub fn m_penalty(params: &ModelParams, m: usize, dtype: Dtype) -> f64 {
+    let knee = params.m_pen_knee as f64;
+    let over = (m as f64 - knee).max(0.0) / knee;
+    let scale = match dtype {
+        Dtype::F64 => 1.0,
+        // Halved per-thread local footprint keeps strided lines resident
+        // longer (fitted scale — see DESIGN.md §8).
+        Dtype::F32 => params.m_pen_fp32_scale,
+    };
+    1.0 + params.m_pen * over * scale
+}
+
+/// Kernel wall time in µs for `p` threads each processing `m` elements.
+pub fn kernel_time_us(
+    spec: &GpuSpec,
+    params: &ModelParams,
+    stage: Stage,
+    p: usize,
+    m: usize,
+    dtype: Dtype,
+) -> f64 {
+    if p == 0 {
+        return 0.0;
+    }
+    let total_elems = (p * m) as f64;
+
+    // Latency regime.
+    let rw = resident_warps_per_sm(spec, p);
+    let hide = rw.clamp(1.0, params.warps_sat);
+    let t_lat = waves(spec, p) * m as f64 * params.cpe_lat_us * stage.chain_ops() / hide;
+
+    // Throughput regime.
+    let bytes = total_elems * stage.traffic_factor() * dtype.bytes() as f64;
+    let eff_bw_bytes_per_us = spec.mem_bw_gbps * params.bw_eff_frac * 1e3; // GB/s -> B/µs
+    let t_bw = bytes * m_penalty(params, m, dtype) / eff_bw_bytes_per_us;
+
+    // The two terms add: the per-thread dependent chain stalls are not
+    // hidden behind DRAM streaming in these short kernels (low achieved
+    // occupancy — Fig 1), so the critical path pays both.
+    params.t_launch_us + t_lat + t_bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::calibration::ModelParams;
+    use crate::gpu::spec::{GpuCard, RTX_2080_TI, RTX_4080};
+
+    fn params() -> ModelParams {
+        ModelParams::fitted(GpuCard::Rtx2080Ti)
+    }
+
+    #[test]
+    fn small_grid_is_latency_bound_and_linear_in_m() {
+        let p = params();
+        // N = 2e3: P = 500 threads at m=4 — well under one wave, so the
+        // per-thread serial chain (∝ m) dominates.
+        let t4 = kernel_time_us(&RTX_2080_TI, &p, Stage::One, 500, 4, Dtype::F64);
+        let t8 = kernel_time_us(&RTX_2080_TI, &p, Stage::One, 250, 8, Dtype::F64);
+        assert!(t8 > t4, "halving threads/doubling m must cost time at low N: {t4} vs {t8}");
+    }
+
+    #[test]
+    fn large_grid_is_throughput_bound_and_linear_in_n() {
+        let p = params();
+        let t1 = kernel_time_us(&RTX_2080_TI, &p, Stage::One, 1_000_000 / 32, 32, Dtype::F64);
+        let t2 = kernel_time_us(&RTX_2080_TI, &p, Stage::One, 2_000_000 / 32, 32, Dtype::F64);
+        let ratio = (t2 - p.t_launch_us) / (t1 - p.t_launch_us);
+        assert!((ratio - 2.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn m_penalty_hits_turing_harder_than_ada() {
+        let tur = ModelParams::fitted(GpuCard::Rtx2080Ti);
+        let ada = ModelParams::fitted(GpuCard::Rtx4080);
+        assert!(m_penalty(&tur, 64, Dtype::F64) > m_penalty(&ada, 64, Dtype::F64));
+        assert_eq!(m_penalty(&tur, 32, Dtype::F64), 1.0, "no penalty at knee");
+        let _ = &RTX_4080;
+    }
+
+    #[test]
+    fn fp32_penalty_reduced() {
+        let p = params();
+        assert!(m_penalty(&p, 64, Dtype::F32) < m_penalty(&p, 64, Dtype::F64));
+    }
+
+    #[test]
+    fn waves_quantize() {
+        assert_eq!(waves(&RTX_2080_TI, 1000), 1.0);
+        // capacity = 4 blocks/SM * 68 SM = 272 blocks = 69632 threads
+        assert_eq!(waves(&RTX_2080_TI, 69_632), 1.0);
+        assert_eq!(waves(&RTX_2080_TI, 69_633), 2.0);
+    }
+
+    #[test]
+    fn residency_caps_at_occupancy_limit() {
+        let rw = resident_warps_per_sm(&RTX_2080_TI, 10_000_000);
+        assert_eq!(rw, 32.0);
+    }
+
+    #[test]
+    fn stage3_cheaper_than_stage1() {
+        let p = params();
+        let t1 = kernel_time_us(&RTX_2080_TI, &p, Stage::One, 31_250, 32, Dtype::F64);
+        let t3 = kernel_time_us(&RTX_2080_TI, &p, Stage::Three, 31_250, 32, Dtype::F64);
+        assert!(t3 < t1);
+    }
+}

@@ -1,0 +1,30 @@
+//! Calibrated NVIDIA-GPU timing simulator (systems S4–S9 of DESIGN.md).
+//!
+//! No NVIDIA GPU exists in this environment, so the paper's testbeds are
+//! substituted by an analytic performance model that reproduces the timing
+//! *landscape* `T(N, m, streams, dtype, card)` the tuning pipeline observes:
+//!
+//! * [`spec`] — hardware parameter database (RTX 2080 Ti / A5000 / 4080).
+//! * [`occupancy`] — the CUDA occupancy calculator (§2.1.1/§2.3, Fig 1).
+//! * [`kernel_model`] — Stage-1/Stage-3 kernel times: wave quantization,
+//!   latency hiding vs resident warps, compute/bandwidth rooflines, FP64
+//!   throughput ratios, the large-m local-memory penalty.
+//! * [`transfer`] — PCIe D2H/H2D with the §2.6 alignment rule.
+//! * [`streams`] — a small event-driven pipeline of compute/copy engines
+//!   modelling CUDA-stream overlap.
+//! * [`simulator`] — the end-to-end partition-method time, non-recursive
+//!   and recursive.
+//! * [`calibration`] — fitted per-card constants plus the fitting harness
+//!   (`partisol calibrate`), objective = argmin structure of Tables 1–4 +
+//!   cut-lines of Table 2 + log-RMSE against Table 1 absolute times.
+
+pub mod calibration;
+pub mod kernel_model;
+pub mod occupancy;
+pub mod simulator;
+pub mod spec;
+pub mod streams;
+pub mod transfer;
+
+pub use simulator::{GpuSimulator, SolveBreakdown};
+pub use spec::{Dtype, GpuCard, GpuSpec};

@@ -1,0 +1,190 @@
+//! CUDA occupancy calculator (§2.1.1, §2.3, Figure 1).
+//!
+//! Theoretical occupancy: resident-warp limit per SM derived from the block
+//! size and per-block resource usage (blocks/SM, warps/SM, threads/SM,
+//! registers, shared memory), as in the vendor occupancy calculator [12].
+//! Achieved occupancy: actual resident warps when the grid is too small to
+//! fill the device — the quantity Fig 1 plots against SLAE size.
+
+use super::spec::GpuSpec;
+
+/// Per-kernel resource usage.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelResources {
+    pub block_size: usize,
+    /// Registers per thread.
+    pub regs_per_thread: usize,
+    /// Static shared memory per block, bytes.
+    pub smem_per_block: usize,
+}
+
+impl Default for KernelResources {
+    fn default() -> Self {
+        // The partition-method kernels: register-heavy sweeps, no shared
+        // memory (one sub-system per thread, §2.1.3); blockSize fixed to
+        // 256 per §2.1.1.
+        KernelResources {
+            block_size: 256,
+            regs_per_thread: 40,
+            smem_per_block: 0,
+        }
+    }
+}
+
+/// Occupancy analysis result.
+#[derive(Clone, Copy, Debug)]
+pub struct Occupancy {
+    /// Resident blocks per SM permitted by all limits.
+    pub blocks_per_sm: usize,
+    /// Resident warps per SM permitted by all limits.
+    pub warps_per_sm: usize,
+    /// warps_per_sm / max_warps_per_sm.
+    pub theoretical: f64,
+}
+
+/// The vendor occupancy-calculator logic.
+pub fn theoretical_occupancy(spec: &GpuSpec, res: &KernelResources) -> Occupancy {
+    let warps_per_block = res.block_size.div_ceil(spec.warp_size);
+    let lim_blocks = spec.max_blocks_per_sm;
+    let lim_warps = spec.max_warps_per_sm / warps_per_block;
+    let lim_threads = spec.max_threads_per_sm / res.block_size;
+    let lim_regs = if res.regs_per_thread == 0 {
+        usize::MAX
+    } else {
+        // Register allocation granularity: per warp, rounded to 256.
+        let regs_per_warp = (res.regs_per_thread * spec.warp_size).div_ceil(256) * 256;
+        (spec.regs_per_sm / regs_per_warp) / warps_per_block
+    };
+    let lim_smem = if res.smem_per_block == 0 {
+        usize::MAX
+    } else {
+        spec.smem_per_sm / res.smem_per_block
+    };
+    let blocks = lim_blocks
+        .min(lim_warps)
+        .min(lim_threads)
+        .min(lim_regs)
+        .min(lim_smem)
+        .max(0);
+    let warps = blocks * warps_per_block;
+    Occupancy {
+        blocks_per_sm: blocks,
+        warps_per_sm: warps,
+        theoretical: warps as f64 / spec.max_warps_per_sm as f64,
+    }
+}
+
+/// Warp-residency ramp constant for [`achieved_occupancy`]: the number of
+/// full device waves after which average residency approaches the
+/// theoretical limit. The partition-method kernels are short-lived (a few
+/// µs of work per block), so launch ramp-up, block drain and memory-stall
+/// gaps dominate average residency until the grid is tens of waves deep —
+/// this is why Fig 1 reports < 50% achieved occupancy even at N = 4x10^7
+/// (~9 waves at m = 64). Value chosen to place the 50% crossing between
+/// N = 4x10^7 and 10^8, matching the figure.
+pub const RAMP_WAVES: f64 = 30.0;
+
+/// Achieved occupancy for a grid of `total_threads` threads: average
+/// resident warps per SM over the kernel's wall time (what Nsight reports),
+/// relative to the maximum. Saturating-ramp model: full theoretical
+/// occupancy is approached only once the grid is many waves deep.
+pub fn achieved_occupancy(spec: &GpuSpec, res: &KernelResources, total_threads: usize) -> f64 {
+    let occ = theoretical_occupancy(spec, res);
+    if occ.warps_per_sm == 0 || total_threads == 0 {
+        return 0.0;
+    }
+    let total_warps = total_threads.div_ceil(spec.warp_size) as f64;
+    let device_warp_capacity = (occ.warps_per_sm * spec.sm_count) as f64;
+    let waves = total_warps / device_warp_capacity;
+    occ.theoretical * (1.0 - (-waves / RAMP_WAVES).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::spec::{RTX_2080_TI, RTX_4080, RTX_A5000};
+
+    #[test]
+    fn turing_256_threads_full_occupancy() {
+        // 2080 Ti, blockSize 256, 40 regs: 4 blocks/SM = 32 warps = 100%.
+        let occ = theoretical_occupancy(&RTX_2080_TI, &KernelResources::default());
+        assert_eq!(occ.blocks_per_sm, 4);
+        assert_eq!(occ.warps_per_sm, 32);
+        assert!((occ.theoretical - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ampere_ada_full_occupancy() {
+        // §2.3: "the theoretical occupancy for the two kernels coincides"
+        // at 100% — must hold on every card with the default resources.
+        for spec in [&RTX_A5000, &RTX_4080] {
+            let occ = theoretical_occupancy(spec, &KernelResources::default());
+            assert!(
+                (occ.theoretical - 1.0).abs() < 1e-12,
+                "{}: {occ:?}",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn register_pressure_limits_occupancy() {
+        let res = KernelResources {
+            block_size: 256,
+            regs_per_thread: 128,
+            smem_per_block: 0,
+        };
+        let occ = theoretical_occupancy(&RTX_2080_TI, &res);
+        // 128 regs * 32 = 4096/warp -> 16 warps/SM -> 2 blocks.
+        assert_eq!(occ.blocks_per_sm, 2);
+        assert!((occ.theoretical - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smem_limits_occupancy() {
+        let res = KernelResources {
+            block_size: 256,
+            regs_per_thread: 0,
+            smem_per_block: 32 * 1024,
+        };
+        let occ = theoretical_occupancy(&RTX_2080_TI, &res);
+        assert_eq!(occ.blocks_per_sm, 2);
+    }
+
+    #[test]
+    fn achieved_small_grid_is_low() {
+        // N=1e5, m=32 -> P=3125 threads: far below the 69k-thread capacity.
+        let a = achieved_occupancy(&RTX_2080_TI, &KernelResources::default(), 3125);
+        assert!(a < 0.05, "achieved {a}");
+    }
+
+    #[test]
+    fn achieved_crosses_50pct_past_4e7() {
+        // Fig 1: the 50% line is crossed between N = 4e7 and N = 1e8.
+        let a = achieved_occupancy(&RTX_2080_TI, &KernelResources::default(), 100_000_000 / 64);
+        assert!(a > 0.5, "achieved {a} at N=1e8");
+    }
+
+    #[test]
+    fn achieved_monotone_in_grid_size() {
+        let res = KernelResources::default();
+        let mut prev = 0.0;
+        for threads in [32, 256, 2048, 16_384, 69_632] {
+            let a = achieved_occupancy(&RTX_2080_TI, &res, threads);
+            assert!(a >= prev, "not monotone at {threads}");
+            prev = a;
+        }
+    }
+
+    #[test]
+    fn fig1_shape_low_achieved_below_4e7() {
+        // Fig 1: achieved < 50% for N <= 4e7 at the corrected opt m.
+        use crate::data::paper::{trend_lookup, FP64_TREND};
+        for n in [100, 10_000, 1_000_000, 10_000_000, 40_000_000] {
+            let m = trend_lookup(&FP64_TREND, n);
+            let threads = n / m;
+            let a = achieved_occupancy(&RTX_2080_TI, &KernelResources::default(), threads);
+            assert!(a < 0.5, "N={n}: achieved {a} >= 50%");
+        }
+    }
+}

@@ -1,0 +1,307 @@
+//! End-to-end partition-method GPU timing simulator.
+//!
+//! Reproduces the timing landscape `T(N, m, streams, dtype, card)` the
+//! paper measures with `cudaEvent`s. The measured quantity (Table 1 col 4)
+//! covers the full solve: input upload (H2D), Stage-1 kernel, interface
+//! D2H, host Stage-2 Thomas, boundary H2D, Stage-3 kernel, solution D2H,
+//! plus fixed driver/stream-setup overhead — chunked across CUDA streams
+//! with copy/compute overlap (see [`super::streams`]).
+//!
+//! The recursive variant (§3) keeps the interface data on the device and
+//! re-applies Stage 1/3 per level; only the innermost interface crosses
+//! PCIe — exactly the saving Fig 3 illustrates.
+
+use super::calibration::ModelParams;
+use super::kernel_model::{kernel_time_us, Stage};
+use super::spec::{Dtype, GpuCard, GpuSpec};
+use super::streams::{pipeline_makespan, split_chunks, Op};
+use super::transfer::{alignment_penalty, transfer_time_us};
+use crate::util::Pcg64;
+
+/// Per-element payload multipliers (in units of `dtype.bytes()`).
+const INPUT_ARRAYS: f64 = 4.0; // a, b, c, d
+const IFACE_PER_BLOCK: f64 = 6.0; // ua, ug, ud, da, dg, dd (normalized)
+const BOUNDARY_PER_BLOCK: f64 = 2.0; // x_f, x_l
+const SOLUTION_ARRAYS: f64 = 1.0; // x
+
+/// Timing decomposition of one simulated solve (all µs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolveBreakdown {
+    /// Fixed per-solve overhead (driver, stream setup).
+    pub fixed_us: f64,
+    /// Upload + Stage-1, pipelined across streams.
+    pub phase_a_us: f64,
+    /// Stage 2 (the Fig-3 sync point): interface D2H + host Thomas +
+    /// boundary H2D — or the full recursive device solve.
+    pub stage2_us: f64,
+    /// Stage-3 + solution download, pipelined.
+    pub phase_b_us: f64,
+    /// Sum of the above.
+    pub total_us: f64,
+}
+
+impl SolveBreakdown {
+    pub fn total_ms(&self) -> f64 {
+        self.total_us / 1e3
+    }
+}
+
+/// The simulator: one card + its fitted model constants.
+#[derive(Clone, Debug)]
+pub struct GpuSimulator {
+    pub card: GpuCard,
+    pub params: ModelParams,
+}
+
+impl GpuSimulator {
+    pub fn new(card: GpuCard) -> Self {
+        GpuSimulator {
+            card,
+            params: ModelParams::fitted(card),
+        }
+    }
+
+    pub fn with_params(card: GpuCard, params: ModelParams) -> Self {
+        GpuSimulator { card, params }
+    }
+
+    pub fn spec(&self) -> &'static GpuSpec {
+        self.card.spec()
+    }
+
+    /// Host Stage-2 Thomas time for an interface system of `n_if` unknowns.
+    /// Per-element cost rises once the working set spills the host L3.
+    pub fn host_time_us(&self, n_if: usize) -> f64 {
+        let p = &self.params;
+        let ws_bytes = (n_if * 4 * 8) as f64; // 4 f64 arrays
+        let spill = 1.0 / (1.0 + (-(ws_bytes - p.host_l3_bytes) / (p.host_l3_bytes / 8.0)).exp());
+        let ns_per_elem = p.host_ns_base + p.host_ns_extra * spill;
+        p.host_fixed_us + n_if as f64 * ns_per_elem / 1e3
+    }
+
+    /// Non-recursive solve time (the Table 1/3/4 quantity).
+    pub fn solve(&self, n: usize, m: usize, streams: usize, dtype: Dtype) -> SolveBreakdown {
+        self.solve_plan(n, &[m], streams, dtype)
+    }
+
+    /// Solve with `plan.len() - 1` recursive steps (`plan[r]` = sub-system
+    /// size at level r). `streams` applies to the top level; inner levels
+    /// run stream-less (their sizes are far below the stream heuristic's
+    /// multi-stream range in all of Table 2's regime).
+    pub fn solve_plan(
+        &self,
+        n: usize,
+        plan: &[usize],
+        streams: usize,
+        dtype: Dtype,
+    ) -> SolveBreakdown {
+        assert!(!plan.is_empty(), "plan must have at least one level");
+        let (phase_a, stage2, phase_b) = self.level_time(n, plan, streams, dtype, true);
+        let fixed = self.params.t_fixed_us;
+        SolveBreakdown {
+            fixed_us: fixed,
+            phase_a_us: phase_a,
+            stage2_us: stage2,
+            phase_b_us: phase_b,
+            total_us: fixed + phase_a + stage2 + phase_b,
+        }
+    }
+
+    /// One recursion level: returns (phase_a, stage2, phase_b) in µs.
+    fn level_time(
+        &self,
+        n: usize,
+        plan: &[usize],
+        streams: usize,
+        dtype: Dtype,
+        top: bool,
+    ) -> (f64, f64, f64) {
+        let spec = self.spec();
+        let prm = &self.params;
+        let m = plan[0];
+        let rest = &plan[1..];
+        let p = n.div_ceil(m);
+        let n_if = 2 * p;
+        let elt = dtype.bytes() as f64;
+        let align = alignment_penalty(prm, m, dtype, streams);
+        // Deeper recursion is pointless once the interface stops shrinking.
+        let recurse = !rest.is_empty() && n_if > 2 * rest[0];
+
+        // ---- phase A: [upload ->] stage1, chunk-pipelined across streams.
+        let chunks_a: Vec<Vec<Op>> = split_chunks(p, streams)
+            .iter()
+            .map(|&pc| {
+                let mut ops = Vec::with_capacity(2);
+                if top {
+                    let bytes = (pc * m) as f64 * INPUT_ARRAYS * elt;
+                    ops.push(Op::h2d(transfer_time_us(spec, prm, bytes, align)));
+                }
+                ops.push(Op::compute(kernel_time_us(
+                    spec,
+                    prm,
+                    Stage::One,
+                    pc,
+                    m,
+                    dtype,
+                )));
+                ops
+            })
+            .collect();
+        let phase_a = pipeline_makespan(&chunks_a);
+
+        // ---- stage 2: the synchronization point of Fig 3. Either recurse
+        // on the device, or move the interface across PCIe and Thomas it
+        // on the host. The D2H/H2D here are single contiguous copies after
+        // a device-wide sync — they cannot hide behind compute (this is
+        // exactly the serial cost the recursive variant removes).
+        let stage2 = if recurse {
+            let (a, s, b) = self.level_time(n_if, rest, 1, dtype, false);
+            prm.rec_overhead_us + a + s + b
+        } else {
+            let d2h = transfer_time_us(spec, prm, p as f64 * IFACE_PER_BLOCK * elt, 1.0);
+            let h2d = transfer_time_us(spec, prm, p as f64 * BOUNDARY_PER_BLOCK * elt, 1.0);
+            d2h + self.host_time_us(n_if) + h2d
+        };
+
+        // ---- phase B: stage3 [-> download], chunk-pipelined.
+        let chunks_b: Vec<Vec<Op>> = split_chunks(p, streams)
+            .iter()
+            .map(|&pc| {
+                let mut ops = Vec::with_capacity(2);
+                ops.push(Op::compute(kernel_time_us(
+                    spec,
+                    prm,
+                    Stage::Three,
+                    pc,
+                    m,
+                    dtype,
+                )));
+                if top {
+                    let bytes = (pc * m) as f64 * SOLUTION_ARRAYS * elt;
+                    ops.push(Op::d2h(transfer_time_us(spec, prm, bytes, align)));
+                }
+                ops
+            })
+            .collect();
+        let phase_b = pipeline_makespan(&chunks_b);
+
+        (phase_a, stage2, phase_b)
+    }
+
+    /// Measurement-noise-injected solve time (multiplicative Gaussian,
+    /// truncated at ±3σ) — the "observed" data of the empirical sweeps.
+    pub fn solve_noisy(
+        &self,
+        n: usize,
+        m: usize,
+        streams: usize,
+        dtype: Dtype,
+        rng: &mut Pcg64,
+    ) -> f64 {
+        let t = self.solve(n, m, streams, dtype).total_us;
+        let eps = rng.normal().clamp(-3.0, 3.0);
+        t * (1.0 + self.params.noise_sigma * eps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::streams::optimum_streams;
+
+    fn sim() -> GpuSimulator {
+        GpuSimulator::new(GpuCard::Rtx2080Ti)
+    }
+
+    #[test]
+    fn small_n_dominated_by_fixed_overhead() {
+        let s = sim();
+        let b = s.solve(100, 4, 1, Dtype::F64);
+        assert!(b.total_ms() > 0.15 && b.total_ms() < 0.6, "{}", b.total_ms());
+        assert!(b.fixed_us / b.total_us > 0.5);
+    }
+
+    #[test]
+    fn time_roughly_linear_in_n_at_scale() {
+        let s = sim();
+        let t1 = s.solve(10_000_000, 32, 32, Dtype::F64).total_us;
+        let t2 = s.solve(20_000_000, 64, 32, Dtype::F64).total_us;
+        let ratio = t2 / t1;
+        assert!(ratio > 1.6 && ratio < 2.4, "ratio {ratio}");
+    }
+
+    #[test]
+    fn monotone_in_n_at_fixed_m() {
+        let s = sim();
+        let mut prev = 0.0;
+        for n in [1_000, 10_000, 100_000, 1_000_000, 10_000_000] {
+            let t = s.solve(n, 32, optimum_streams(n), Dtype::F64).total_us;
+            assert!(t > prev, "not monotone at N={n}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn fp32_faster_than_fp64() {
+        let s = sim();
+        let t64 = s.solve(1_000_000, 32, 8, Dtype::F64).total_us;
+        let t32 = s.solve(1_000_000, 32, 8, Dtype::F32).total_us;
+        assert!(t32 < t64);
+    }
+
+    #[test]
+    fn streams_help_at_large_n() {
+        let s = sim();
+        let t1 = s.solve(4_000_000, 32, 1, Dtype::F64).total_us;
+        let t32 = s.solve(4_000_000, 32, 32, Dtype::F64).total_us;
+        assert!(t32 < t1, "32 streams {t32} !< 1 stream {t1}");
+    }
+
+    #[test]
+    fn too_many_streams_hurt_small_n() {
+        let s = sim();
+        let t1 = s.solve(10_000, 8, 1, Dtype::F64).total_us;
+        let t32 = s.solve(10_000, 8, 32, Dtype::F64).total_us;
+        assert!(t32 > t1, "32 streams {t32} !> 1 stream {t1} at small N");
+    }
+
+    #[test]
+    fn recursion_saves_time_at_large_n() {
+        // Table 2: at N = 8e6 two recursive steps beat zero.
+        let s = GpuSimulator::new(GpuCard::RtxA5000);
+        let n = 8_000_000;
+        let st = optimum_streams(n);
+        let t0 = s.solve_plan(n, &[32], st, Dtype::F64).total_us;
+        let t2 = s.solve_plan(n, &[32, 10, 8], st, Dtype::F64).total_us;
+        assert!(t2 < t0, "R=2 {t2} !< R=0 {t0}");
+    }
+
+    #[test]
+    fn recursion_hurts_at_small_n() {
+        let s = GpuSimulator::new(GpuCard::RtxA5000);
+        let n = 100_000;
+        let t0 = s.solve_plan(n, &[32], 1, Dtype::F64).total_us;
+        let t1 = s.solve_plan(n, &[32, 10], 1, Dtype::F64).total_us;
+        assert!(t1 > t0, "R=1 {t1} !> R=0 {t0} at small N");
+    }
+
+    #[test]
+    fn noise_is_small_and_seeded() {
+        let s = sim();
+        let mut rng1 = Pcg64::new(7);
+        let mut rng2 = Pcg64::new(7);
+        let base = s.solve(1_000_000, 32, 8, Dtype::F64).total_us;
+        let a = s.solve_noisy(1_000_000, 32, 8, Dtype::F64, &mut rng1);
+        let b = s.solve_noisy(1_000_000, 32, 8, Dtype::F64, &mut rng2);
+        assert_eq!(a, b);
+        assert!((a / base - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let s = sim();
+        let b = s.solve(1_000_000, 32, 8, Dtype::F64);
+        let sum = b.fixed_us + b.phase_a_us + b.stage2_us + b.phase_b_us;
+        assert!((sum - b.total_us).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,183 @@
+//! GPU hardware parameter database.
+//!
+//! Numbers from the vendor datasheets / TechPowerUp entries the paper cites
+//! ([3], [4], [7], [8], [19]).
+
+/// Element precision (the paper studies FP64 and FP32 separately, §4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    F64,
+}
+
+impl Dtype {
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+        }
+    }
+}
+
+/// The three cards of the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GpuCard {
+    Rtx2080Ti,
+    RtxA5000,
+    Rtx4080,
+}
+
+impl GpuCard {
+    pub const ALL: [GpuCard; 3] = [GpuCard::Rtx2080Ti, GpuCard::RtxA5000, GpuCard::Rtx4080];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuCard::Rtx2080Ti => "RTX 2080 Ti",
+            GpuCard::RtxA5000 => "RTX A5000",
+            GpuCard::Rtx4080 => "RTX 4080",
+        }
+    }
+
+    pub fn spec(self) -> &'static GpuSpec {
+        match self {
+            GpuCard::Rtx2080Ti => &RTX_2080_TI,
+            GpuCard::RtxA5000 => &RTX_A5000,
+            GpuCard::Rtx4080 => &RTX_4080,
+        }
+    }
+}
+
+/// Architectural parameters of one GPU.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub sm_count: usize,
+    pub max_threads_per_sm: usize,
+    pub max_warps_per_sm: usize,
+    pub max_blocks_per_sm: usize,
+    pub warp_size: usize,
+    /// Registers per SM (32-bit).
+    pub regs_per_sm: usize,
+    /// Shared memory per SM, bytes.
+    pub smem_per_sm: usize,
+    /// Boost clock, GHz.
+    pub clock_ghz: f64,
+    /// Peak DRAM bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// L2 cache, bytes.
+    pub l2_bytes: usize,
+    /// Peak FP32 throughput, TFLOP/s.
+    pub fp32_tflops: f64,
+    /// FP64:FP32 throughput ratio (1/32 Turing, 1/64 GA102/AD103).
+    pub fp64_ratio: f64,
+    /// Effective host<->device PCIe bandwidth, GB/s.
+    pub pcie_gbps: f64,
+}
+
+/// NVIDIA GeForce RTX 2080 Ti (TU102, Turing) [3][4].
+pub static RTX_2080_TI: GpuSpec = GpuSpec {
+    name: "RTX 2080 Ti",
+    sm_count: 68,
+    max_threads_per_sm: 1024,
+    max_warps_per_sm: 32,
+    max_blocks_per_sm: 16,
+    warp_size: 32,
+    regs_per_sm: 65_536,
+    smem_per_sm: 65_536,
+    clock_ghz: 1.545,
+    mem_bw_gbps: 616.0,
+    l2_bytes: 5_767_168, // 5.5 MiB
+    fp32_tflops: 13.45,
+    fp64_ratio: 1.0 / 32.0,
+    pcie_gbps: 12.0, // PCIe 3.0 x16 effective
+};
+
+/// NVIDIA RTX A5000 (GA102, Ampere) [7][8].
+pub static RTX_A5000: GpuSpec = GpuSpec {
+    name: "RTX A5000",
+    sm_count: 64,
+    max_threads_per_sm: 1536,
+    max_warps_per_sm: 48,
+    max_blocks_per_sm: 16,
+    warp_size: 32,
+    regs_per_sm: 65_536,
+    smem_per_sm: 102_400,
+    clock_ghz: 1.695,
+    mem_bw_gbps: 768.0,
+    l2_bytes: 6_291_456, // 6 MiB
+    fp32_tflops: 27.77,
+    fp64_ratio: 1.0 / 64.0,
+    pcie_gbps: 22.0, // PCIe 4.0 x16 effective
+};
+
+/// NVIDIA GeForce RTX 4080 (AD103, Ada) [19].
+pub static RTX_4080: GpuSpec = GpuSpec {
+    name: "RTX 4080",
+    sm_count: 76,
+    max_threads_per_sm: 1536,
+    max_warps_per_sm: 48,
+    max_blocks_per_sm: 24,
+    warp_size: 32,
+    regs_per_sm: 65_536,
+    smem_per_sm: 102_400,
+    clock_ghz: 2.505,
+    mem_bw_gbps: 716.8,
+    l2_bytes: 67_108_864, // 64 MiB
+    fp32_tflops: 48.74,
+    fp64_ratio: 1.0 / 64.0,
+    pcie_gbps: 22.0,
+};
+
+impl GpuSpec {
+    /// Peak throughput at the given precision, GFLOP/s.
+    pub fn gflops(&self, dtype: Dtype) -> f64 {
+        match dtype {
+            Dtype::F32 => self.fp32_tflops * 1e3,
+            Dtype::F64 => self.fp32_tflops * 1e3 * self.fp64_ratio,
+        }
+    }
+
+    /// Max resident threads on the whole device.
+    pub fn max_resident_threads(&self) -> usize {
+        self.sm_count * self.max_threads_per_sm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp64_rates_match_datasheets() {
+        // 2080 Ti: ~420 GFLOPS FP64; A5000: ~434; 4080: ~762.
+        assert!((RTX_2080_TI.gflops(Dtype::F64) - 420.3).abs() < 1.0);
+        assert!((RTX_A5000.gflops(Dtype::F64) - 433.9).abs() < 1.0);
+        assert!((RTX_4080.gflops(Dtype::F64) - 761.6).abs() < 1.0);
+    }
+
+    #[test]
+    fn card_lookup() {
+        for card in GpuCard::ALL {
+            assert_eq!(card.spec().name, card.name());
+        }
+    }
+
+    #[test]
+    fn resident_threads() {
+        assert_eq!(RTX_2080_TI.max_resident_threads(), 68 * 1024);
+        assert_eq!(RTX_4080.max_resident_threads(), 76 * 1536);
+    }
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(Dtype::F64.bytes(), 8);
+        assert_eq!(Dtype::F32.bytes(), 4);
+    }
+}

@@ -1,0 +1,93 @@
+//! PCIe D2H/H2D transfer model, including the §2.6 memory-alignment rule.
+//!
+//! Memory from `cudaMalloc` is 256-byte aligned, but per-stream chunk
+//! offsets are `k·(m/streams-ish)·elt` into the arrays — aligned for every
+//! chunk boundary iff `m · elt ≡ 0 (mod 256)`, i.e. m a multiple of 32 for
+//! FP64 (the paper's observation). Misaligned offsets cost extra DMA
+//! transactions; we model a penalty proportional to how far `gcd(m·elt,
+//! 256)` falls short of full alignment.
+
+use super::calibration::ModelParams;
+use super::spec::{Dtype, GpuSpec};
+
+/// Transfer direction (the copy engines are modelled separately in the
+/// stream pipeline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    H2D,
+    D2H,
+}
+
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Alignment penalty factor for chunked (multi-stream) transfers of
+/// sub-system-granular data: 1.0 when `m·elt` is 256-byte aligned.
+pub fn alignment_penalty(params: &ModelParams, m: usize, dtype: Dtype, streams: usize) -> f64 {
+    if streams <= 1 {
+        return 1.0;
+    }
+    let stride = m * dtype.bytes();
+    let align = gcd(stride, 256);
+    1.0 + params.align_pen * (1.0 - align as f64 / 256.0)
+}
+
+/// Wall time in µs to move `bytes` across PCIe (one chunk, one call).
+pub fn transfer_time_us(spec: &GpuSpec, params: &ModelParams, bytes: f64, align_factor: f64) -> f64 {
+    let bw_bytes_per_us = spec.pcie_gbps * params.pcie_eff * 1e3;
+    params.t_xfer_fixed_us + bytes * align_factor / bw_bytes_per_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::calibration::ModelParams;
+    use crate::gpu::spec::{GpuCard, RTX_2080_TI};
+
+    fn params() -> ModelParams {
+        ModelParams::fitted(GpuCard::Rtx2080Ti)
+    }
+
+    #[test]
+    fn aligned_m_has_no_penalty() {
+        let p = params();
+        for m in [32, 64, 128, 1250 - 1250 % 32] {
+            assert_eq!(alignment_penalty(&p, m, Dtype::F64, 8), 1.0, "m={m}");
+        }
+        // FP32: multiple of 64 elements = 256 B.
+        assert_eq!(alignment_penalty(&p, 64, Dtype::F32, 8), 1.0);
+    }
+
+    #[test]
+    fn misaligned_m_penalized_single_stream_exempt() {
+        let p = params();
+        assert!(alignment_penalty(&p, 20, Dtype::F64, 8) > 1.0);
+        assert!(alignment_penalty(&p, 35, Dtype::F64, 8) > 1.0);
+        assert_eq!(alignment_penalty(&p, 20, Dtype::F64, 1), 1.0);
+        // FP32 m=32 -> 128 B: partially aligned, smaller penalty than m=20.
+        let p32 = alignment_penalty(&p, 32, Dtype::F32, 8);
+        let p20 = alignment_penalty(&p, 20, Dtype::F64, 8);
+        assert!(p32 > 1.0 && p32 < p20);
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let p = params();
+        let t1 = transfer_time_us(&RTX_2080_TI, &p, 1e6, 1.0);
+        let t2 = transfer_time_us(&RTX_2080_TI, &p, 2e6, 1.0);
+        assert!((t2 - p.t_xfer_fixed_us) / (t1 - p.t_xfer_fixed_us) > 1.99);
+    }
+
+    #[test]
+    fn fixed_latency_dominates_tiny_transfers() {
+        let p = params();
+        let t = transfer_time_us(&RTX_2080_TI, &p, 64.0, 1.0);
+        assert!(t < p.t_xfer_fixed_us * 1.01);
+    }
+}

@@ -1,0 +1,43 @@
+//! # partisol
+//!
+//! Production-oriented reproduction of *“ML-Based Optimum Sub-system Size
+//! for the GPU Implementation of the Tridiagonal Partition Method”*
+//! (M. Veneva, CS.DC 2025).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer Rust + JAX +
+//! Pallas stack (see `DESIGN.md`):
+//!
+//! * [`solver`] — native tridiagonal solvers: Thomas baseline, the parallel
+//!   partition method (Stage 1/2/3) and its recursive variant.
+//! * [`gpu`] — a calibrated NVIDIA-GPU timing simulator (SMs, warps,
+//!   occupancy, latency hiding, PCIe, CUDA streams) standing in for the
+//!   paper's RTX 2080 Ti / A5000 / 4080 testbeds.
+//! * [`ml`] — the paper's ML toolkit: kNN classification,
+//!   `train_test_split`, grid-search cross-validation, accuracy metrics.
+//! * [`tuner`] — the empirical sweep → trend correction → heuristic
+//!   pipeline of §2, plus the optimum-streams heuristic of [5].
+//! * [`recursion`] — §3: optimum recursion count model and the per-level
+//!   sub-system size planner.
+//! * [`runtime`] — PJRT CPU client executing the AOT-compiled Pallas
+//!   kernels (`artifacts/*.hlo.txt`) on the request path.
+//! * [`coordinator`] — the solve service: router, batcher, worker pool,
+//!   metrics.
+//! * [`data`] — the paper's published tables embedded as typed datasets.
+//! * [`util`], [`config`], [`cli`], [`testkit`] — offline substrates
+//!   (RNG, stats, JSON, tables, TOML-subset config, CLI, property testing).
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod gpu;
+pub mod ml;
+pub mod recursion;
+pub mod runtime;
+pub mod solver;
+pub mod testkit;
+pub mod tuner;
+pub mod util;
+
+pub use error::{Error, Result};

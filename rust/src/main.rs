@@ -1,0 +1,6 @@
+//! partisol CLI entry point. All logic lives in the library (`cli::run`).
+
+fn main() {
+    partisol::util::logging::init();
+    std::process::exit(partisol::cli::run());
+}

@@ -1,0 +1,178 @@
+//! Dataset handling: shuffled train/test splitting (scikit-learn's
+//! `train_test_split` semantics) with the paper's "all classes must appear
+//! in the training set" requirement (§2.5: *"it was important to split and
+//! shuffle the data in such a way that the model has all possible
+//! sub-system sizes values in the training set"*).
+
+use crate::error::{Error, Result};
+use crate::util::Pcg64;
+use std::collections::BTreeSet;
+
+/// A labelled 1-D dataset.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub xs: Vec<f64>,
+    pub ys: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn new(xs: Vec<f64>, ys: Vec<usize>) -> Result<Dataset> {
+        if xs.len() != ys.len() {
+            return Err(Error::Ml(format!(
+                "xs/ys length mismatch: {} vs {}",
+                xs.len(),
+                ys.len()
+            )));
+        }
+        Ok(Dataset { xs, ys })
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn classes(&self) -> BTreeSet<usize> {
+        self.ys.iter().copied().collect()
+    }
+
+    fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            xs: idx.iter().map(|&i| self.xs[i]).collect(),
+            ys: idx.iter().map(|&i| self.ys[i]).collect(),
+        }
+    }
+}
+
+/// A train/test split.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub train: Dataset,
+    pub test: Dataset,
+    pub train_idx: Vec<usize>,
+    pub test_idx: Vec<usize>,
+}
+
+impl Split {
+    /// Does the training set contain every class of the full dataset?
+    pub fn train_covers_all_classes(&self, full: &Dataset) -> bool {
+        self.train.classes() == full.classes()
+    }
+}
+
+/// Shuffled split with `test_ratio` of the points (rounded up) in the test
+/// set — `train_test_split(shuffle=True)` with the paper's 3:1 ratio when
+/// `test_ratio = 0.25`.
+pub fn train_test_split(data: &Dataset, test_ratio: f64, seed: u64) -> Result<Split> {
+    if data.is_empty() {
+        return Err(Error::Ml("cannot split an empty dataset".into()));
+    }
+    if !(0.0..1.0).contains(&test_ratio) || test_ratio == 0.0 {
+        return Err(Error::Ml(format!("bad test_ratio {test_ratio}")));
+    }
+    let n = data.len();
+    let n_test = ((n as f64 * test_ratio).ceil() as usize).clamp(1, n - 1);
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Pcg64::new(seed);
+    rng.shuffle(&mut idx);
+    let (test_idx, train_idx) = idx.split_at(n_test);
+    let (mut test_idx, mut train_idx) = (test_idx.to_vec(), train_idx.to_vec());
+    test_idx.sort_unstable();
+    train_idx.sort_unstable();
+    Ok(Split {
+        train: data.subset(&train_idx),
+        test: data.subset(&test_idx),
+        train_idx,
+        test_idx,
+    })
+}
+
+/// Retry seeds (seed, seed+1, …) until the training set covers all classes
+/// — the paper's shuffle requirement. Returns the split and the seed used.
+pub fn split_covering_classes(
+    data: &Dataset,
+    test_ratio: f64,
+    seed: u64,
+    max_tries: u64,
+) -> Result<(Split, u64)> {
+    for s in seed..seed + max_tries {
+        let split = train_test_split(data, test_ratio, s)?;
+        if split.train_covers_all_classes(data) {
+            return Ok((split, s));
+        }
+    }
+    Err(Error::Ml(format!(
+        "no class-covering split found in {max_tries} seeds from {seed}"
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data() -> Dataset {
+        Dataset::new(
+            (0..37).map(|i| i as f64).collect(),
+            (0..37).map(|i| [4, 8, 16, 20, 32, 64][i % 6]).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn ratio_3_to_1_gives_10_of_37() {
+        let split = train_test_split(&data(), 0.25, 0).unwrap();
+        assert_eq!(split.test.len(), 10);
+        assert_eq!(split.train.len(), 27);
+    }
+
+    #[test]
+    fn split_is_a_partition() {
+        let d = data();
+        let split = train_test_split(&d, 0.25, 42).unwrap();
+        let mut all: Vec<usize> = split
+            .train_idx
+            .iter()
+            .chain(&split.test_idx)
+            .copied()
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..37).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_varies_across_seeds() {
+        let d = data();
+        let a = train_test_split(&d, 0.25, 1).unwrap();
+        let b = train_test_split(&d, 0.25, 1).unwrap();
+        assert_eq!(a.test_idx, b.test_idx);
+        let c = train_test_split(&d, 0.25, 2).unwrap();
+        assert_ne!(a.test_idx, c.test_idx);
+    }
+
+    #[test]
+    fn covering_split_has_all_classes() {
+        let d = data();
+        let (split, _seed) = split_covering_classes(&d, 0.25, 0, 100).unwrap();
+        assert!(split.train_covers_all_classes(&d));
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        assert!(train_test_split(&Dataset::default(), 0.25, 0).is_err());
+        assert!(train_test_split(&data(), 0.0, 0).is_err());
+        assert!(train_test_split(&data(), 1.0, 0).is_err());
+    }
+
+    #[test]
+    fn subset_preserves_pairing() {
+        let d = data();
+        let split = train_test_split(&d, 0.25, 5).unwrap();
+        for (i, &orig) in split.test_idx.iter().enumerate() {
+            assert_eq!(split.test.xs[i], d.xs[orig]);
+            assert_eq!(split.test.ys[i], d.ys[orig]);
+        }
+    }
+}

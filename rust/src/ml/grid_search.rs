@@ -1,0 +1,140 @@
+//! Grid-search cross-validation for the kNN hyper-parameter k — the
+//! paper's GridSearchCV usage: *"look for the best hyper-parameter k,
+//! which should be between 1 and the number of unique sub-system sizes"*.
+
+use super::dataset::Dataset;
+use super::knn::Knn;
+use super::metrics::accuracy;
+use crate::error::{Error, Result};
+
+/// Result of the grid search.
+#[derive(Clone, Debug)]
+pub struct GridSearchResult {
+    pub best_k: usize,
+    pub best_cv_accuracy: f64,
+    /// Mean CV accuracy per candidate k (parallel to `ks`).
+    pub ks: Vec<usize>,
+    pub cv_accuracy: Vec<f64>,
+}
+
+/// k-fold CV accuracy of a kNN with the given k on `train`.
+pub fn cv_accuracy(train: &Dataset, k: usize, folds: usize) -> Result<f64> {
+    let n = train.len();
+    if folds < 2 || folds > n {
+        return Err(Error::Ml(format!("folds={folds} out of range for n={n}")));
+    }
+    let mut accs = Vec::with_capacity(folds);
+    for f in 0..folds {
+        // Contiguous fold assignment (data order is already shuffled by
+        // train_test_split upstream, matching sklearn's default KFold).
+        let lo = f * n / folds;
+        let hi = (f + 1) * n / folds;
+        if lo == hi {
+            continue;
+        }
+        let (mut xs_tr, mut ys_tr) = (Vec::new(), Vec::new());
+        let (mut xs_va, mut ys_va) = (Vec::new(), Vec::new());
+        for i in 0..n {
+            if i >= lo && i < hi {
+                xs_va.push(train.xs[i]);
+                ys_va.push(train.ys[i]);
+            } else {
+                xs_tr.push(train.xs[i]);
+                ys_tr.push(train.ys[i]);
+            }
+        }
+        if k > xs_tr.len() {
+            return Err(Error::Ml(format!("k={k} exceeds fold train size")));
+        }
+        let model = Knn::fit(&xs_tr, &ys_tr, k)?;
+        accs.push(accuracy(&model.predict_batch(&xs_va), &ys_va));
+    }
+    Ok(accs.iter().sum::<f64>() / accs.len() as f64)
+}
+
+/// Search k in `1..=k_max` by `folds`-fold CV; smallest k wins ties
+/// (sklearn keeps the first best parameter).
+pub fn grid_search_k(train: &Dataset, k_max: usize, folds: usize) -> Result<GridSearchResult> {
+    if k_max == 0 {
+        return Err(Error::Ml("k_max must be >= 1".into()));
+    }
+    let mut ks = Vec::new();
+    let mut cv = Vec::new();
+    for k in 1..=k_max {
+        ks.push(k);
+        cv.push(cv_accuracy(train, k, folds)?);
+    }
+    let (best_i, &best_acc) = cv
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+        .unwrap();
+    Ok(GridSearchResult {
+        best_k: ks[best_i],
+        best_cv_accuracy: best_acc,
+        ks,
+        cv_accuracy: cv,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Step-function data in log10(N): well-separated intervals, where
+    /// 1-NN should dominate larger k.
+    fn interval_data() -> Dataset {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let steps = [(2.0, 4), (3.0, 8), (4.0, 16), (5.0, 32), (6.0, 64)];
+        for (base, label) in steps {
+            for i in 0..5 {
+                xs.push(base + i as f64 * 0.15);
+                ys.push(label);
+            }
+        }
+        // Shuffle deterministically (as train_test_split would).
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        let mut rng = crate::util::Pcg64::new(3);
+        rng.shuffle(&mut idx);
+        Dataset::new(
+            idx.iter().map(|&i| xs[i]).collect(),
+            idx.iter().map(|&i| ys[i]).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn selects_k_1_on_interval_data() {
+        // §2.5: "k was found to be equal to 1 … nearest neighbor
+        // interpolation" — on clean interval-structured data.
+        let res = grid_search_k(&interval_data(), 6, 5).unwrap();
+        assert_eq!(res.best_k, 1, "cv accuracies: {:?}", res.cv_accuracy);
+        assert!(res.best_cv_accuracy > 0.9);
+    }
+
+    #[test]
+    fn cv_accuracy_bounded() {
+        let d = interval_data();
+        for k in 1..=5 {
+            let a = cv_accuracy(&d, k, 5).unwrap();
+            assert!((0.0..=1.0).contains(&a));
+        }
+    }
+
+    #[test]
+    fn smallest_k_wins_ties() {
+        // Two identical clusters: every k<=2 gives the same accuracy.
+        let d = Dataset::new(vec![0.0, 0.1, 10.0, 10.1], vec![1, 1, 2, 2]).unwrap();
+        let res = grid_search_k(&d, 2, 2).unwrap();
+        assert_eq!(res.best_k, 1);
+    }
+
+    #[test]
+    fn rejects_bad_folds_and_k() {
+        let d = interval_data();
+        assert!(cv_accuracy(&d, 1, 1).is_err());
+        assert!(cv_accuracy(&d, 1, 1000).is_err());
+        assert!(grid_search_k(&d, 0, 5).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! k-nearest-neighbors classification (1-D feature space).
+//!
+//! Prediction is the mode of the k nearest training labels; ties on the
+//! mode are broken by the smaller total distance of the tied label's
+//! supporters, then by the smaller label (deterministic). k = 1 — the
+//! value GridSearchCV selects in the paper — degenerates to
+//! nearest-neighbor interpolation.
+
+use crate::error::{Error, Result};
+
+/// Fitted kNN classifier over `(x: f64) -> label: usize`.
+#[derive(Clone, Debug)]
+pub struct Knn {
+    k: usize,
+    xs: Vec<f64>,
+    ys: Vec<usize>,
+}
+
+impl Knn {
+    /// Fit (i.e. memorize) the training set.
+    pub fn fit(xs: &[f64], ys: &[usize], k: usize) -> Result<Knn> {
+        if xs.len() != ys.len() {
+            return Err(Error::Ml(format!(
+                "feature/label length mismatch: {} vs {}",
+                xs.len(),
+                ys.len()
+            )));
+        }
+        if xs.is_empty() {
+            return Err(Error::Ml("empty training set".into()));
+        }
+        if k == 0 || k > xs.len() {
+            return Err(Error::Ml(format!(
+                "k={} out of range 1..={}",
+                k,
+                xs.len()
+            )));
+        }
+        Ok(Knn {
+            k,
+            xs: xs.to_vec(),
+            ys: ys.to_vec(),
+        })
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Predict the label for one feature value.
+    pub fn predict(&self, x: f64) -> usize {
+        // Partial sort of the k nearest (n is tiny — dozens of points).
+        let mut order: Vec<usize> = (0..self.xs.len()).collect();
+        order.sort_by(|&i, &j| {
+            let di = (self.xs[i] - x).abs();
+            let dj = (self.xs[j] - x).abs();
+            di.partial_cmp(&dj)
+                .unwrap()
+                .then(self.ys[i].cmp(&self.ys[j]))
+        });
+        let neighbors = &order[..self.k];
+
+        // Mode with (count desc, total distance asc, label asc) ordering.
+        let mut tally: Vec<(usize, usize, f64)> = Vec::new(); // (label, count, dist_sum)
+        for &i in neighbors {
+            let d = (self.xs[i] - x).abs();
+            match tally.iter_mut().find(|t| t.0 == self.ys[i]) {
+                Some(t) => {
+                    t.1 += 1;
+                    t.2 += d;
+                }
+                None => tally.push((self.ys[i], 1, d)),
+            }
+        }
+        tally
+            .into_iter()
+            .min_by(|a, b| {
+                b.1.cmp(&a.1)
+                    .then(a.2.partial_cmp(&b.2).unwrap())
+                    .then(a.0.cmp(&b.0))
+            })
+            .unwrap()
+            .0
+    }
+
+    pub fn predict_batch(&self, xs: &[f64]) -> Vec<usize> {
+        xs.iter().map(|&x| self.predict(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_nn_returns_nearest_label() {
+        let knn = Knn::fit(&[0.0, 10.0, 20.0], &[1, 2, 3], 1).unwrap();
+        assert_eq!(knn.predict(1.0), 1);
+        assert_eq!(knn.predict(9.0), 2);
+        assert_eq!(knn.predict(16.0), 3);
+    }
+
+    #[test]
+    fn training_point_predicts_own_label_k1() {
+        let xs = [2.0, 3.0, 5.0, 8.0, 13.0];
+        let ys = [4, 8, 16, 32, 64];
+        let knn = Knn::fit(&xs, &ys, 1).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(knn.predict(*x), *y);
+        }
+    }
+
+    #[test]
+    fn k3_majority_vote() {
+        let knn = Knn::fit(&[0.0, 1.0, 2.0, 100.0], &[7, 7, 9, 9], 3).unwrap();
+        // Neighbors of 0.5: {0, 1, 2} -> labels {7, 7, 9} -> 7.
+        assert_eq!(knn.predict(0.5), 7);
+    }
+
+    #[test]
+    fn vote_tie_broken_by_distance() {
+        // k=2: one vote each; closer neighbor's label wins.
+        let knn = Knn::fit(&[0.0, 3.0], &[5, 6], 2).unwrap();
+        assert_eq!(knn.predict(1.0), 5);
+        assert_eq!(knn.predict(2.5), 6);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(Knn::fit(&[1.0], &[1, 2], 1).is_err());
+        assert!(Knn::fit(&[], &[], 1).is_err());
+        assert!(Knn::fit(&[1.0], &[1], 0).is_err());
+        assert!(Knn::fit(&[1.0], &[1], 2).is_err());
+    }
+
+    #[test]
+    fn log_scaled_feature_matches_paper_intuition() {
+        // With log10(N) features, the nearest SLAE size in decade terms
+        // provides the prediction — "assign the sub-system size of the
+        // closest SLAE size" (§2.5).
+        let ns = [1e2f64, 1e4, 1e6, 1e8];
+        let xs: Vec<f64> = ns.iter().map(|n| n.log10()).collect();
+        let knn = Knn::fit(&xs, &[4, 8, 32, 64], 1).unwrap();
+        assert_eq!(knn.predict(5e4f64.log10()), 8);
+        assert_eq!(knn.predict(2e5f64.log10()), 32);
+    }
+}

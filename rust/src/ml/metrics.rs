@@ -1,0 +1,84 @@
+//! Classification metrics: normalized accuracy, null accuracy (§2.5) and
+//! a confusion matrix for the report output.
+
+use std::collections::BTreeMap;
+
+/// Fraction of exact matches — the paper's "normalised accuracy score".
+pub fn accuracy(pred: &[usize], actual: &[usize]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(actual).filter(|(p, a)| p == a).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Mode label of a training set (smallest label on ties).
+pub fn mode_label(ys: &[usize]) -> usize {
+    let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+    for &y in ys {
+        *counts.entry(y).or_insert(0) += 1;
+    }
+    counts
+        .into_iter()
+        .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+        .map(|(label, _)| label)
+        .unwrap_or(0)
+}
+
+/// Null accuracy: accuracy achieved by always predicting the most frequent
+/// training label (§2.5: 0.4 for the sub-system-size model).
+pub fn null_accuracy(train_ys: &[usize], test_ys: &[usize]) -> f64 {
+    if test_ys.is_empty() {
+        return 0.0;
+    }
+    let mode = mode_label(train_ys);
+    test_ys.iter().filter(|&&y| y == mode).count() as f64 / test_ys.len() as f64
+}
+
+/// Confusion matrix keyed `(actual, predicted) -> count`.
+pub fn confusion_matrix(pred: &[usize], actual: &[usize]) -> BTreeMap<(usize, usize), usize> {
+    assert_eq!(pred.len(), actual.len());
+    let mut m = BTreeMap::new();
+    for (&p, &a) in pred.iter().zip(actual) {
+        *m.entry((a, p)).or_insert(0) += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 4]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+        assert_eq!(accuracy(&[5], &[5]), 1.0);
+    }
+
+    #[test]
+    fn mode_smallest_on_tie() {
+        assert_eq!(mode_label(&[4, 8, 4, 8]), 4);
+        assert_eq!(mode_label(&[32, 32, 4]), 32);
+    }
+
+    #[test]
+    fn null_accuracy_counts_mode_hits() {
+        // mode(train) = 32; test has 2/5 equal to 32.
+        let train = [32, 32, 32, 4, 8];
+        let test = [32, 4, 32, 8, 64];
+        assert_eq!(null_accuracy(&train, &test), 0.4);
+    }
+
+    #[test]
+    fn confusion_matrix_totals() {
+        let pred = [1, 1, 2, 2];
+        let actual = [1, 2, 2, 2];
+        let m = confusion_matrix(&pred, &actual);
+        assert_eq!(m[&(1, 1)], 1);
+        assert_eq!(m[&(2, 1)], 1);
+        assert_eq!(m[&(2, 2)], 2);
+        assert_eq!(m.values().sum::<usize>(), 4);
+    }
+}

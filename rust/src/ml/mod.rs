@@ -1,0 +1,21 @@
+//! The paper's ML toolkit, reimplemented natively (systems S13–S16):
+//! kNN classification, shuffled train/test splitting, grid-search
+//! cross-validation for the hyper-parameter k, and the accuracy metrics
+//! quoted in §2.5 (normalized accuracy, null accuracy).
+//!
+//! The feature space is one-dimensional (the SLAE size N); the paper's
+//! scikit-learn pipeline maps to:
+//!
+//! * `KNeighborsClassifier` → [`knn::Knn`]
+//! * `train_test_split(shuffle=True, ratio 3:1)` → [`dataset::train_test_split`]
+//! * `GridSearchCV` over k → [`grid_search::grid_search_k`]
+
+pub mod dataset;
+pub mod grid_search;
+pub mod knn;
+pub mod metrics;
+
+pub use dataset::{train_test_split, Dataset, Split};
+pub use grid_search::grid_search_k;
+pub use knn::Knn;
+pub use metrics::{accuracy, confusion_matrix, null_accuracy};

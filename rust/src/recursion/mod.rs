@@ -1,0 +1,9 @@
+//! The recursive partition method's tuning layer (§3, system S17):
+//! the per-level sub-system-size planner of §3.2 and the 1-NN model for
+//! the optimum number of recursive steps (Fig 5).
+
+pub mod planner;
+pub mod rsteps;
+
+pub use planner::{plan_for, plan_with_heuristic};
+pub use rsteps::RStepsModel;

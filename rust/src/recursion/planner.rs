@@ -1,0 +1,87 @@
+//! §3.2 — the algorithm for choosing the sub-system sizes for R recursions:
+//!
+//! * level 0 ("all recursions"): m = the optimum sub-system size for the
+//!   initial SLAE size, from the already-built heuristic;
+//! * if R = 1: m₁ = the optimum size for the 1st interface system;
+//!   else (R ≥ 2): m₁ is fixed to 10 (the Remark: in 6 of 9 cases the
+//!   empirical optimum was 10, and 4/5/8/10 differ negligibly);
+//! * m₂, m₃, m₄: the optimum size for the 2nd/3rd/4th interface system.
+
+use crate::gpu::spec::Dtype;
+use crate::tuner::heuristic::{IntervalHeuristic, MHeuristic};
+
+/// The paper's Remark value for m₁ when more than one recursion is planned.
+pub const M1_FIXED: usize = 10;
+
+/// Interface size after one partition level: 2·⌈n/m⌉.
+pub fn interface_size(n: usize, m: usize) -> usize {
+    2 * n.div_ceil(m)
+}
+
+/// Build the per-level plan `[m₀, m₁, …, m_R]` for `r` recursive steps
+/// using an arbitrary heuristic for the optimum m.
+pub fn plan_with_heuristic(n: usize, r: usize, h: &dyn MHeuristic) -> Vec<usize> {
+    let mut plan = Vec::with_capacity(r + 1);
+    let m0 = h.opt_m(n);
+    plan.push(m0);
+    let mut level_n = interface_size(n, m0);
+    for level in 1..=r {
+        let m = if level == 1 && r >= 2 {
+            M1_FIXED
+        } else {
+            h.opt_m(level_n)
+        };
+        plan.push(m);
+        level_n = interface_size(level_n, m);
+    }
+    plan
+}
+
+/// Plan with the paper's published interval heuristic for the dtype.
+pub fn plan_for(n: usize, r: usize, dtype: Dtype) -> Vec<usize> {
+    let h = IntervalHeuristic::paper(dtype);
+    plan_with_heuristic(n, r, &h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r0_is_just_the_heuristic() {
+        assert_eq!(plan_for(1_000_000, 0, Dtype::F64), vec![32]);
+        assert_eq!(plan_for(100, 0, Dtype::F64), vec![4]);
+    }
+
+    #[test]
+    fn r1_uses_heuristic_on_first_interface() {
+        // N=4.5e6 -> m0=32 -> interface 281250 -> heuristic(2.8e5) = 32.
+        let plan = plan_for(4_500_000, 1, Dtype::F64);
+        assert_eq!(plan, vec![32, 32]);
+    }
+
+    #[test]
+    fn deep_recursion_fixes_m1_to_10() {
+        // §3.2 Remark: for R >= 2, m1 = 10.
+        let plan = plan_for(100_000_000, 3, Dtype::F64);
+        assert_eq!(plan[0], 64, "m0 from heuristic at 1e8");
+        assert_eq!(plan[1], M1_FIXED);
+        // interface chain: 1e8/64*2 = 3.125e6 -> /10*2 = 625e3 -> m2 =
+        // heuristic(625e3) = 32 -> 39_064 -> m3 = heuristic = 16.
+        assert_eq!(plan[2], 32);
+        assert_eq!(plan[3], 16);
+    }
+
+    #[test]
+    fn interface_size_rounds_up() {
+        assert_eq!(interface_size(100, 8), 2 * 13);
+        assert_eq!(interface_size(1024, 32), 64);
+    }
+
+    #[test]
+    fn plan_length_is_r_plus_1() {
+        for r in 0..=4 {
+            assert_eq!(plan_for(10_000_000, r, Dtype::F64).len(), r + 1);
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Artifact manifest: the typed index over `artifacts/` produced by
+//! `python -m compile.aot` (see python/compile/aot.py).
+
+use crate::error::{Error, Result};
+use crate::gpu::spec::Dtype;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Which compute graph an artifact contains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StageKind {
+    Stage1,
+    Stage3,
+    Fused,
+}
+
+impl StageKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            StageKind::Stage1 => "stage1",
+            StageKind::Stage3 => "stage3",
+            StageKind::Fused => "fused",
+        }
+    }
+
+    fn parse(s: &str) -> Result<StageKind> {
+        match s {
+            "stage1" => Ok(StageKind::Stage1),
+            "stage3" => Ok(StageKind::Stage3),
+            "fused" => Ok(StageKind::Fused),
+            other => Err(Error::Artifact(format!("unknown stage `{other}`"))),
+        }
+    }
+}
+
+fn parse_dtype(s: &str) -> Result<Dtype> {
+    match s {
+        "f32" => Ok(Dtype::F32),
+        "f64" => Ok(Dtype::F64),
+        other => Err(Error::Artifact(format!("unknown dtype `{other}`"))),
+    }
+}
+
+/// One compiled variant.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub stage: StageKind,
+    pub dtype: Dtype,
+    pub m: usize,
+    pub p: usize,
+    /// Path relative to the artifact dir.
+    pub rel_path: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub version: usize,
+    pub m_values: Vec<usize>,
+    pub p_buckets: Vec<usize>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j
+            .get("version")?
+            .as_usize()
+            .ok_or_else(|| Error::Artifact("version must be a number".into()))?;
+        let m_values = usize_array(j.get("m_values")?)?;
+        let p_buckets = usize_array(j.get("p_buckets")?)?;
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")?
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("artifacts must be an array".into()))?
+        {
+            artifacts.push(ArtifactSpec {
+                name: str_field(a, "name")?,
+                stage: StageKind::parse(&str_field(a, "stage")?)?,
+                dtype: parse_dtype(&str_field(a, "dtype")?)?,
+                m: usize_field(a, "m")?,
+                p: usize_field(a, "p")?,
+                rel_path: str_field(a, "path")?,
+            });
+        }
+        if artifacts.is_empty() {
+            return Err(Error::Artifact("manifest lists no artifacts".into()));
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            version,
+            m_values,
+            p_buckets,
+            artifacts,
+        })
+    }
+
+    /// The variant for (stage, dtype, m) with the smallest bucket >= p.
+    /// Requests larger than the largest bucket are sharded by the executor,
+    /// which then asks for the largest bucket itself.
+    pub fn find(&self, stage: StageKind, dtype: Dtype, m: usize, p: usize) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.stage == stage && a.dtype == dtype && a.m == m && a.p >= p)
+            .min_by_key(|a| a.p)
+            .or_else(|| {
+                // p exceeds every bucket: hand back the largest for sharding.
+                self.artifacts
+                    .iter()
+                    .filter(|a| a.stage == stage && a.dtype == dtype && a.m == m)
+                    .max_by_key(|a| a.p)
+            })
+            .ok_or_else(|| Error::NoVariant {
+                stage: stage.name().to_string(),
+                dtype: dtype.name().to_string(),
+                m,
+                p,
+            })
+    }
+
+    /// Largest P bucket available for (stage, dtype, m).
+    pub fn max_bucket(&self, stage: StageKind, dtype: Dtype, m: usize) -> Option<usize> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.stage == stage && a.dtype == dtype && a.m == m)
+            .map(|a| a.p)
+            .max()
+    }
+
+    /// m values for which a full stage1+stage3 pair exists at this dtype.
+    pub fn supported_m(&self, dtype: Dtype) -> Vec<usize> {
+        let mut ms: Vec<usize> = self
+            .m_values
+            .iter()
+            .copied()
+            .filter(|&m| {
+                self.max_bucket(StageKind::Stage1, dtype, m).is_some()
+                    && self.max_bucket(StageKind::Stage3, dtype, m).is_some()
+            })
+            .collect();
+        ms.sort_unstable();
+        ms
+    }
+
+    pub fn abs_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.rel_path)
+    }
+}
+
+fn str_field(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)?
+        .as_str()
+        .ok_or_else(|| Error::Artifact(format!("{key} must be a string")))?
+        .to_string())
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)?
+        .as_usize()
+        .ok_or_else(|| Error::Artifact(format!("{key} must be a number")))
+}
+
+fn usize_array(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| Error::Artifact("expected array".into()))?
+        .iter()
+        .map(|x| {
+            x.as_usize()
+                .ok_or_else(|| Error::Artifact("expected number".into()))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "m_values": [4, 8],
+        "p_buckets": [32, 256],
+        "dtypes": ["f32", "f64"],
+        "stages": ["stage1", "stage3"],
+        "artifacts": [
+            {"name": "stage1_f64_m4_p32", "stage": "stage1", "dtype": "f64",
+             "m": 4, "p": 32, "path": "stage1_f64_m4_p32.hlo.txt",
+             "inputs": [], "outputs": []},
+            {"name": "stage1_f64_m4_p256", "stage": "stage1", "dtype": "f64",
+             "m": 4, "p": 256, "path": "stage1_f64_m4_p256.hlo.txt",
+             "inputs": [], "outputs": []},
+            {"name": "stage3_f64_m4_p32", "stage": "stage3", "dtype": "f64",
+             "m": 4, "p": 32, "path": "stage3_f64_m4_p32.hlo.txt",
+             "inputs": [], "outputs": []}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_finds_smallest_fitting_bucket() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        let a = m.find(StageKind::Stage1, Dtype::F64, 4, 10).unwrap();
+        assert_eq!(a.p, 32);
+        let a = m.find(StageKind::Stage1, Dtype::F64, 4, 33).unwrap();
+        assert_eq!(a.p, 256);
+    }
+
+    #[test]
+    fn oversize_request_falls_back_to_largest() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let a = m.find(StageKind::Stage1, Dtype::F64, 4, 100_000).unwrap();
+        assert_eq!(a.p, 256);
+    }
+
+    #[test]
+    fn missing_variant_is_a_typed_error() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        match m.find(StageKind::Stage1, Dtype::F32, 4, 1) {
+            Err(Error::NoVariant { dtype, .. }) => assert_eq!(dtype, "f32"),
+            other => panic!("expected NoVariant, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn supported_m_requires_both_stages() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        // m=4 f64 has stage1+stage3; m=8 has neither.
+        assert_eq!(m.supported_m(Dtype::F64), vec![4]);
+        assert!(m.supported_m(Dtype::F32).is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_manifests() {
+        assert!(Manifest::parse(Path::new("/x"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/x"), r#"{"version": 1, "m_values": [],
+            "p_buckets": [], "artifacts": []}"#)
+        .is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! PJRT client wrapper with an executable cache.
+//!
+//! `xla`'s `PjRtClient` / `PjRtLoadedExecutable` are `Rc`-based and thus
+//! thread-confined: a [`Runtime`] must be created and used on one thread.
+//! The coordinator owns one on a dedicated device thread (mirroring a
+//! single GPU context); benches and examples use it directly.
+
+use super::artifact::{ArtifactSpec, Manifest, StageKind};
+use crate::error::{Error, Result};
+use crate::gpu::spec::Dtype;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// One-thread PJRT runtime: client + manifest + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Compilations performed (for tests/metrics).
+    compiles: RefCell<usize>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        crate::log_info!(
+            "PJRT client up: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compiles: RefCell::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn compile_count(&self) -> usize {
+        *self.compiles.borrow()
+    }
+
+    /// Compiled executable for a variant, compiling + caching on first use.
+    pub fn executable(&self, spec: &ArtifactSpec) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&spec.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.abs_path(spec);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Artifact(format!("non-utf8 path {}", path.display())))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        *self.compiles.borrow_mut() += 1;
+        crate::log_debug!("compiled artifact {}", spec.name);
+        self.cache.borrow_mut().insert(spec.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Look up + compile in one step.
+    pub fn executable_for(
+        &self,
+        stage: StageKind,
+        dtype: Dtype,
+        m: usize,
+        p: usize,
+    ) -> Result<(Rc<xla::PjRtLoadedExecutable>, ArtifactSpec)> {
+        let spec = self.manifest.find(stage, dtype, m, p)?.clone();
+        Ok((self.executable(&spec)?, spec))
+    }
+
+    /// Pre-compile every artifact for a dtype (service warm-up).
+    pub fn warm_up(&self, dtype: Dtype) -> Result<usize> {
+        let specs: Vec<ArtifactSpec> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.dtype == dtype)
+            .cloned()
+            .collect();
+        for spec in &specs {
+            self.executable(spec)?;
+        }
+        Ok(specs.len())
+    }
+}

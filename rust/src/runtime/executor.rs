@@ -1,0 +1,220 @@
+//! Execute the AOT artifacts: Stage-1 / Stage-3 calls, bucket padding,
+//! sharding past the largest bucket, and the full PJRT-backed partition
+//! solve (Stage 2 = native Rust "host" Thomas — the paper's device/host
+//! split).
+
+use super::artifact::StageKind;
+use super::client::Runtime;
+use super::pad::{to_blocks, BlockLayout};
+use crate::error::{Error, Result};
+use crate::gpu::spec::Dtype;
+use crate::solver::partition::{assemble_interface, BlockInterface};
+use crate::solver::thomas::thomas_solve;
+use crate::solver::{Scalar, TriSystem};
+
+/// Scalars the PJRT path supports (Rust-side type <-> XLA element type).
+pub trait PjrtScalar: Scalar + xla::NativeType + xla::ArrayElement {
+    const DTYPE: Dtype;
+}
+
+impl PjrtScalar for f64 {
+    const DTYPE: Dtype = Dtype::F64;
+}
+
+impl PjrtScalar for f32 {
+    const DTYPE: Dtype = Dtype::F32;
+}
+
+fn literal_2d<T: PjrtScalar>(data: &[T], p: usize, m: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), p * m);
+    Ok(xla::Literal::vec1(data).reshape(&[p as i64, m as i64])?)
+}
+
+fn literal_1d<T: PjrtScalar>(data: &[T]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Run Stage 1 for one shard already laid out as `(P_bucket, m)` blocks.
+/// Returns the *real* blocks' interface rows (padding rows dropped).
+fn run_stage1_shard<T: PjrtScalar>(
+    rt: &Runtime,
+    blocks: &[Vec<T>; 4],
+    layout: &BlockLayout,
+) -> Result<Vec<BlockInterface<T>>> {
+    let (exe, spec) = rt.executable_for(StageKind::Stage1, T::DTYPE, layout.m, layout.p_bucket)?;
+    debug_assert_eq!(spec.p, layout.p_bucket);
+    let inputs: Vec<xla::Literal> = blocks
+        .iter()
+        .map(|b| literal_2d(b, layout.p_bucket, layout.m))
+        .collect::<Result<_>>()?;
+    let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+    let out = result.to_tuple1()?;
+    let coeffs = out.to_vec::<T>()?;
+    if coeffs.len() != layout.p_bucket * 8 {
+        return Err(Error::Runtime(format!(
+            "stage1 output length {} != P*8 = {}",
+            coeffs.len(),
+            layout.p_bucket * 8
+        )));
+    }
+    Ok(coeffs[..layout.p_real * 8]
+        .chunks_exact(8)
+        .map(|c| BlockInterface {
+            ua: c[0],
+            ug: c[2],
+            ud: c[3],
+            da: c[4],
+            dg: c[6],
+            dd: c[7],
+        })
+        .collect())
+}
+
+/// Run Stage 3 for one shard; returns the shard's full solution (padding
+/// dropped by the caller via layout.n).
+fn run_stage3_shard<T: PjrtScalar>(
+    rt: &Runtime,
+    blocks: &[Vec<T>; 4],
+    layout: &BlockLayout,
+    xf: &[T],
+    xl: &[T],
+) -> Result<Vec<T>> {
+    debug_assert_eq!(xf.len(), layout.p_bucket);
+    let (exe, _) = rt.executable_for(StageKind::Stage3, T::DTYPE, layout.m, layout.p_bucket)?;
+    let mut inputs: Vec<xla::Literal> = blocks
+        .iter()
+        .map(|b| literal_2d(b, layout.p_bucket, layout.m))
+        .collect::<Result<_>>()?;
+    inputs.push(literal_1d(xf));
+    inputs.push(literal_1d(xl));
+    let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+    let x = result.to_tuple1()?.to_vec::<T>()?;
+    if x.len() != layout.padded_n() {
+        return Err(Error::Runtime(format!(
+            "stage3 output length {} != padded n {}",
+            x.len(),
+            layout.padded_n()
+        )));
+    }
+    Ok(x)
+}
+
+/// Shard bookkeeping: blocks `[start_block, start_block + layout.p_real)`
+/// of the padded system.
+struct Shard<T> {
+    start_block: usize,
+    layout: BlockLayout,
+    blocks: [Vec<T>; 4],
+}
+
+/// Cut the system into shards no larger than the biggest available bucket.
+fn make_shards<T: PjrtScalar>(rt: &Runtime, sys: &TriSystem<T>, m: usize) -> Result<Vec<Shard<T>>> {
+    let max_bucket = rt
+        .manifest()
+        .max_bucket(StageKind::Stage1, T::DTYPE, m)
+        .ok_or_else(|| Error::NoVariant {
+            stage: "stage1".into(),
+            dtype: T::DTYPE.name().into(),
+            m,
+            p: 1,
+        })?;
+    let p_total = sys.n().div_ceil(m);
+    let mut shards = Vec::new();
+    let mut start_block = 0usize;
+    while start_block < p_total {
+        let p_here = (p_total - start_block).min(max_bucket);
+        let row_lo = start_block * m;
+        let row_hi = (row_lo + p_here * m).min(sys.n());
+        // Sub-system slice; interior couplings across the shard boundary
+        // stay in `a[0]`/`c[last]` of the slice, which Stage 1 treats as
+        // couplings to neighbor blocks — exactly right, since the
+        // interface system is assembled globally below.
+        let slice = TriSystem {
+            a: sys.a[row_lo..row_hi].to_vec(),
+            b: sys.b[row_lo..row_hi].to_vec(),
+            c: sys.c[row_lo..row_hi].to_vec(),
+            d: sys.d[row_lo..row_hi].to_vec(),
+        };
+        let bucket = rt
+            .manifest()
+            .find(StageKind::Stage1, T::DTYPE, m, p_here)?
+            .p;
+        let layout = BlockLayout::new(slice.n(), m, bucket)?;
+        let blocks = to_blocks(&slice, &layout);
+        shards.push(Shard {
+            start_block,
+            layout,
+            blocks,
+        });
+        start_block += p_here;
+    }
+    Ok(shards)
+}
+
+/// Full partition solve through the PJRT artifacts:
+/// Stage 1 (device) → Stage 2 (host Thomas over the global interface) →
+/// Stage 3 (device). `n` may be any size; the system is padded to whole
+/// blocks and sharded past the largest artifact bucket.
+pub fn pjrt_partition_solve<T: PjrtScalar>(
+    rt: &Runtime,
+    sys: &TriSystem<T>,
+    m: usize,
+) -> Result<Vec<T>> {
+    let n = sys.n();
+    if m < 3 {
+        return Err(Error::Solver(format!("m={m} must be >= 3")));
+    }
+
+    // ---- Stage 1 per shard (device).
+    let shards = make_shards(rt, sys, m)?;
+    let p_total: usize = shards.iter().map(|s| s.layout.p_real).sum();
+    let mut iface: Vec<BlockInterface<T>> = Vec::with_capacity(p_total);
+    for shard in &shards {
+        iface.extend(run_stage1_shard(rt, &shard.blocks, &shard.layout)?);
+    }
+
+    // ---- Stage 2 (host): global interface Thomas.
+    let iface_sys = assemble_interface(&iface);
+    let boundary = thomas_solve(&iface_sys)?;
+
+    // ---- Stage 3 per shard (device).
+    let mut x = Vec::with_capacity(n);
+    for shard in &shards {
+        let pb = shard.layout.p_bucket;
+        let mut xf = vec![T::zero(); pb];
+        let mut xl = vec![T::zero(); pb];
+        for j in 0..shard.layout.p_real {
+            let k = shard.start_block + j;
+            xf[j] = boundary[2 * k];
+            xl[j] = boundary[2 * k + 1];
+        }
+        let shard_x = run_stage3_shard(rt, &shard.blocks, &shard.layout, &xf, &xl)?;
+        let real_rows = shard.layout.n;
+        x.extend_from_slice(&shard_x[..real_rows]);
+    }
+    debug_assert_eq!(x.len(), n);
+    Ok(x)
+}
+
+/// Fused single-call solve (integration-test path; requires n to fit one
+/// bucket of the fused artifact).
+pub fn pjrt_fused_solve<T: PjrtScalar>(rt: &Runtime, sys: &TriSystem<T>, m: usize) -> Result<Vec<T>> {
+    let p = sys.n().div_ceil(m);
+    let (exe, spec) = rt.executable_for(StageKind::Fused, T::DTYPE, m, p)?;
+    if spec.p < p {
+        return Err(Error::Runtime(format!(
+            "fused artifact bucket {} < required {} (use pjrt_partition_solve)",
+            spec.p, p
+        )));
+    }
+    let layout = BlockLayout::new(sys.n(), m, spec.p)?;
+    let blocks = to_blocks(sys, &layout);
+    let inputs: Vec<xla::Literal> = blocks
+        .iter()
+        .map(|b| literal_2d(b, layout.p_bucket, layout.m))
+        .collect::<Result<_>>()?;
+    let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+    let mut x = result.to_tuple1()?.to_vec::<T>()?;
+    x.truncate(sys.n());
+    Ok(x)
+}

@@ -1,0 +1,24 @@
+//! PJRT runtime (system S18): loads the AOT-compiled Pallas/JAX artifacts
+//! (`artifacts/*.hlo.txt`) and executes them on the PJRT CPU client from
+//! the Rust request path — Python is never involved at runtime.
+//!
+//! * [`artifact`] — manifest parsing and variant lookup (stage, dtype, m,
+//!   P-bucket).
+//! * [`pad`] — `(P, m)` block layout with identity-row padding up to the
+//!   artifact's P-bucket (exact; see `TriSystem::pad_to`).
+//! * [`client`] — PJRT client + executable cache. `xla`'s handles are
+//!   `Rc`-based (thread-confined), so a [`client::Runtime`] lives on one
+//!   thread — the coordinator gives it a dedicated *device thread*,
+//!   mirroring a single GPU context.
+//! * [`executor`] — stage1/stage3/fused execution incl. the full
+//!   PJRT-backed partition solve (Stage 2 on the "host" = native Rust).
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+pub mod pad;
+
+pub use artifact::{ArtifactSpec, Manifest, StageKind};
+pub use client::Runtime;
+pub use executor::pjrt_partition_solve;
+pub use pad::BlockLayout;

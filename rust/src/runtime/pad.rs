@@ -1,0 +1,100 @@
+//! `(P, m)` block layout with identity-row padding to an artifact bucket.
+
+use crate::error::{Error, Result};
+use crate::solver::{Scalar, TriSystem};
+
+/// Shape bookkeeping for one blocked execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockLayout {
+    /// Sub-system size.
+    pub m: usize,
+    /// Real unknowns.
+    pub n: usize,
+    /// Real blocks: ceil(n / m).
+    pub p_real: usize,
+    /// Padded blocks (the artifact bucket).
+    pub p_bucket: usize,
+}
+
+impl BlockLayout {
+    pub fn new(n: usize, m: usize, p_bucket: usize) -> Result<BlockLayout> {
+        if m < 3 {
+            return Err(Error::Shape(format!("m={m} must be >= 3")));
+        }
+        let p_real = n.div_ceil(m);
+        if p_bucket < p_real {
+            return Err(Error::Shape(format!(
+                "bucket {p_bucket} smaller than required blocks {p_real}"
+            )));
+        }
+        Ok(BlockLayout {
+            m,
+            n,
+            p_real,
+            p_bucket,
+        })
+    }
+
+    pub fn padded_n(&self) -> usize {
+        self.p_bucket * self.m
+    }
+}
+
+/// Row-major `(P_bucket, m)` copies of the four diagonals, padded with
+/// identity rows (`b = 1`, rest 0) — exact per `TriSystem::pad_to`'s
+/// invariant and the stage1 kernel's data-driven decoupling.
+pub fn to_blocks<T: Scalar>(sys: &TriSystem<T>, layout: &BlockLayout) -> [Vec<T>; 4] {
+    let n_pad = layout.padded_n();
+    let pad = n_pad - sys.n();
+    let mk = |src: &[T], fill: T| -> Vec<T> {
+        let mut v = Vec::with_capacity(n_pad);
+        v.extend_from_slice(src);
+        v.extend(std::iter::repeat_n(fill, pad));
+        v
+    };
+    [
+        mk(&sys.a, T::zero()),
+        mk(&sys.b, T::one()),
+        mk(&sys.c, T::zero()),
+        mk(&sys.d, T::zero()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::generator::random_dd_system;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn layout_math() {
+        let l = BlockLayout::new(100, 8, 32).unwrap();
+        assert_eq!(l.p_real, 13);
+        assert_eq!(l.padded_n(), 256);
+        assert!(BlockLayout::new(100, 8, 12).is_err());
+        assert!(BlockLayout::new(100, 2, 64).is_err());
+    }
+
+    #[test]
+    fn blocks_are_padded_identity() {
+        let mut rng = Pcg64::new(1);
+        let sys = random_dd_system::<f64>(&mut rng, 10, 0.5);
+        let l = BlockLayout::new(10, 4, 8).unwrap();
+        let [a, b, c, d] = to_blocks(&sys, &l);
+        assert_eq!(a.len(), 32);
+        assert_eq!(&a[..10], &sys.a[..]);
+        assert!(a[10..].iter().all(|&x| x == 0.0));
+        assert!(b[10..].iter().all(|&x| x == 1.0));
+        assert!(c[10..].iter().all(|&x| x == 0.0));
+        assert!(d[10..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn exact_fit_needs_no_padding() {
+        let mut rng = Pcg64::new(2);
+        let sys = random_dd_system::<f32>(&mut rng, 32, 0.5);
+        let l = BlockLayout::new(32, 4, 8).unwrap();
+        let [a, _, _, _] = to_blocks(&sys, &l);
+        assert_eq!(a.len(), 32);
+    }
+}

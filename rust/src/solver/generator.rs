@@ -1,0 +1,89 @@
+//! Seeded SLAE generators for experiments, tests and benches.
+
+use super::{Scalar, TriSystem};
+use crate::util::Pcg64;
+
+/// Random row-wise diagonally-dominant system:
+/// `a ∈ [-1,-0.1]`, `c ∈ [0.1,1]`, `|b| = |a| + |c| + U[dominance, dominance+1)`
+/// with a random diagonal sign, `d ∈ [-1,1)`. `a[0]` and `c[n-1]` are zeroed.
+pub fn random_dd_system<T: Scalar>(rng: &mut Pcg64, n: usize, dominance: f64) -> TriSystem<T> {
+    assert!(n > 0);
+    let mut a = Vec::with_capacity(n);
+    let mut b = Vec::with_capacity(n);
+    let mut c = Vec::with_capacity(n);
+    let mut d = Vec::with_capacity(n);
+    for i in 0..n {
+        let ai = if i == 0 { 0.0 } else { rng.range(-1.0, -0.1) };
+        let ci = if i == n - 1 { 0.0 } else { rng.range(0.1, 1.0) };
+        let sign = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        let bi = sign * (ai.abs() + ci.abs() + rng.range(dominance, dominance + 1.0));
+        a.push(T::of_f64(ai));
+        b.push(T::of_f64(bi));
+        c.push(T::of_f64(ci));
+        d.push(T::of_f64(rng.range(-1.0, 1.0)));
+    }
+    TriSystem { a, b, c, d }
+}
+
+/// Constant-coefficient (Toeplitz) system `(-1, diag, -1)` — the classic
+/// discretized-Laplacian benchmark the paper's workloads are built on.
+pub fn toeplitz_system<T: Scalar>(n: usize, diag: f64) -> TriSystem<T> {
+    assert!(n > 0);
+    let mut sys = TriSystem {
+        a: vec![T::of_f64(-1.0); n],
+        b: vec![T::of_f64(diag); n],
+        c: vec![T::of_f64(-1.0); n],
+        d: (0..n)
+            .map(|i| T::of_f64((i % 97) as f64 / 97.0))
+            .collect(),
+    };
+    sys.a[0] = T::zero();
+    sys.c[n - 1] = T::zero();
+    sys
+}
+
+/// A system whose exact solution is known: pick `x*`, compute `d = A x*`.
+/// Returns `(system, x_star)` — used to measure forward error directly.
+pub fn manufactured_solution<T: Scalar>(rng: &mut Pcg64, n: usize) -> (TriSystem<T>, Vec<T>) {
+    let mut sys = random_dd_system::<T>(rng, n, 1.0);
+    let x_star: Vec<T> = (0..n).map(|_| T::of_f64(rng.range(-2.0, 2.0))).collect();
+    sys.d = sys.matvec(&x_star);
+    (sys, x_star)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_is_dominant_and_seeded() {
+        let mut rng = Pcg64::new(99);
+        let s1 = random_dd_system::<f64>(&mut rng, 200, 0.3);
+        assert!(s1.is_diagonally_dominant());
+        let mut rng2 = Pcg64::new(99);
+        let s2 = random_dd_system::<f64>(&mut rng2, 200, 0.3);
+        assert_eq!(s1, s2, "same seed must give same system");
+    }
+
+    #[test]
+    fn toeplitz_structure() {
+        let s = toeplitz_system::<f64>(10, 4.0);
+        assert!(s.is_diagonally_dominant());
+        assert_eq!(s.a[0], 0.0);
+        assert_eq!(s.c[9], 0.0);
+        assert_eq!(s.b, vec![4.0; 10]);
+    }
+
+    #[test]
+    fn manufactured_reproduces_x_star() {
+        let mut rng = Pcg64::new(5);
+        let (sys, x_star) = manufactured_solution::<f64>(&mut rng, 64);
+        let x = crate::solver::thomas_solve(&sys).unwrap();
+        let err = x
+            .iter()
+            .zip(&x_star)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0, f64::max);
+        assert!(err < 1e-10, "forward error {err}");
+    }
+}

@@ -1,0 +1,55 @@
+//! Native tridiagonal solvers (substrate S1–S3 of DESIGN.md).
+//!
+//! * [`tridiagonal`] — system storage, matvec, diagonal-dominance checks.
+//! * [`thomas`] — the sequential Thomas baseline (the paper's Stage-2 host
+//!   solver, and the oracle every parallel path is tested against).
+//! * [`partition`] — the parallel partition method: Stage-1 interface
+//!   reduction, Stage-2 interface assembly + solve, Stage-3 back-solve.
+//!   The exact formulation is DESIGN.md §4 and mirrors the Pallas kernels
+//!   bit-for-bit in structure.
+//! * [`recursive`] — §3 of the paper: Stage 2 solved by re-applying the
+//!   partition method for a planned sequence of sub-system sizes.
+//! * [`generator`] — seeded SLAE generators (diagonally dominant, Toeplitz).
+//! * [`residual`] — ‖Ax − d‖ verification helpers.
+
+pub mod generator;
+pub mod partition;
+pub mod recursive;
+pub mod residual;
+pub mod thomas;
+pub mod tridiagonal;
+
+pub use generator::{random_dd_system, toeplitz_system};
+pub use partition::{partition_solve, PartitionWorkspace};
+pub use recursive::recursive_solve;
+pub use thomas::{thomas_solve, thomas_solve_with_scratch};
+pub use tridiagonal::TriSystem;
+
+use num_traits::Float;
+
+/// Scalar abstraction: everything the solvers need from f32 / f64.
+pub trait Scalar: Float + Send + Sync + std::fmt::Debug + std::fmt::Display + 'static {
+    const DTYPE_NAME: &'static str;
+    fn of_f64(x: f64) -> Self;
+    fn as_f64(self) -> f64;
+}
+
+impl Scalar for f64 {
+    const DTYPE_NAME: &'static str = "f64";
+    fn of_f64(x: f64) -> Self {
+        x
+    }
+    fn as_f64(self) -> f64 {
+        self
+    }
+}
+
+impl Scalar for f32 {
+    const DTYPE_NAME: &'static str = "f32";
+    fn of_f64(x: f64) -> Self {
+        x as f32
+    }
+    fn as_f64(self) -> f64 {
+        self as f64
+    }
+}

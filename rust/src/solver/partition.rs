@@ -1,0 +1,516 @@
+//! The parallel partition method (non-recursive), exactly the formulation
+//! of DESIGN.md §4 — structurally identical to the Pallas kernels so that
+//! native and PJRT execution paths are interchangeable.
+//!
+//! * **Stage 1** (`stage1_all`): per block, one shared Thomas factorization
+//!   with three right-hand sides (particular `y`, left spike `u`, right
+//!   spike `v`); endpoints only are kept and combined into the UP/DOWN
+//!   interface equations, normalized to unit diagonal.
+//! * **Stage 2** (`assemble_interface` + Thomas): the 2P interface rows
+//!   interleave into a tridiagonal system over `[x_{0,f}, x_{0,l}, …]`.
+//! * **Stage 3** (`stage3_all`): independent interior back-solves with the
+//!   boundary values folded into the RHS.
+//!
+//! Stage 1 and Stage 3 are data-parallel across blocks (`std::thread`
+//! scoped workers — rayon is unavailable offline).
+
+use super::thomas::{thomas_solve_with_scratch, ThomasScratch};
+use super::{Scalar, TriSystem};
+use crate::error::{Error, Result};
+
+/// Normalized interface coefficients of one block (unit diagonals implied):
+/// UP: `ua·x_prev + x_f + ug·x_l = ud`; DOWN: `da·x_f + x_l + dg·x_next = dd`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockInterface<T> {
+    pub ua: T,
+    pub ug: T,
+    pub ud: T,
+    pub da: T,
+    pub dg: T,
+    pub dd: T,
+}
+
+/// Reusable per-call buffers for the whole partition pipeline.
+#[derive(Debug)]
+pub struct PartitionWorkspace<T> {
+    iface: Vec<BlockInterface<T>>,
+    iface_sys: Option<TriSystem<T>>,
+    iface_x: Vec<T>,
+    scratch: ThomasScratch<T>,
+}
+
+impl<T: Scalar> Default for PartitionWorkspace<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Scalar> PartitionWorkspace<T> {
+    pub fn new() -> Self {
+        PartitionWorkspace {
+            iface: Vec::new(),
+            iface_sys: None,
+            iface_x: Vec::new(),
+            scratch: ThomasScratch::default(),
+        }
+    }
+}
+
+/// Stage 1 for one block; `a, b, c, d` are the block's rows (`a[0]` = left
+/// coupling, `c[m-1]` = right coupling). `cp/dy/du/dv` are scratch of len m.
+#[allow(clippy::too_many_arguments)]
+pub fn stage1_block<T: Scalar>(
+    a: &[T],
+    b: &[T],
+    c: &[T],
+    d: &[T],
+    cp: &mut [T],
+    dy: &mut [T],
+    du: &mut [T],
+    dv: &mut [T],
+) -> Result<BlockInterface<T>> {
+    let m = b.len();
+    debug_assert!(m >= 3);
+    let tiny = T::of_f64(f64::MIN_POSITIVE.sqrt());
+
+    // Shared forward elimination, three RHS at once.
+    let w0 = b[0];
+    if w0.abs() <= tiny {
+        return Err(Error::SingularSystem {
+            row: 0,
+            magnitude: w0.as_f64().abs(),
+        });
+    }
+    // cp stays a direct division (loop-carried chain); the three RHS
+    // sweeps share one off-chain reciprocal: 2 divides + 3 muls per row
+    // instead of 4 divides (§Perf).
+    let mut inv_w = T::one() / w0;
+    cp[0] = c[0] / w0;
+    dy[0] = d[0] * inv_w;
+    du[0] = -a[0] * inv_w;
+    dv[0] = T::zero();
+    for i in 1..m {
+        let ai = a[i];
+        let w = b[i] - ai * cp[i - 1];
+        if w.abs() <= tiny {
+            return Err(Error::SingularSystem {
+                row: i,
+                magnitude: w.as_f64().abs(),
+            });
+        }
+        let rv = if i == m - 1 { -c[i] } else { T::zero() };
+        inv_w = T::one() / w;
+        cp[i] = c[i] / w;
+        dy[i] = (d[i] - ai * dy[i - 1]) * inv_w;
+        du[i] = (-ai * du[i - 1]) * inv_w;
+        dv[i] = (rv - ai * dv[i - 1]) * inv_w;
+    }
+
+    // Back-substitution carrying endpoint values only.
+    let (ym, um, vm) = (dy[m - 1], du[m - 1], dv[m - 1]);
+    let (mut y, mut u, mut v) = (ym, um, vm);
+    for i in (0..m - 1).rev() {
+        y = dy[i] - cp[i] * y;
+        u = du[i] - cp[i] * u;
+        v = dv[i] - cp[i] * v;
+    }
+    let (y0, u0, v0) = (y, u, v);
+
+    // Interface equations with data-driven decoupling (stage1.py docstring).
+    let (ua, ub, ug, ud) = if vm == T::zero() {
+        (-u0, T::one(), T::zero(), y0)
+    } else {
+        (v0 * um - vm * u0, vm, -v0, vm * y0 - v0 * ym)
+    };
+    let (da, db, dg, dd) = if u0 == T::zero() {
+        (T::zero(), T::one(), -vm, ym)
+    } else {
+        (um, -u0, u0 * vm - um * v0, um * y0 - u0 * ym)
+    };
+    Ok(BlockInterface {
+        ua: ua / ub,
+        ug: ug / ub,
+        ud: ud / ub,
+        da: da / db,
+        dg: dg / db,
+        dd: dd / db,
+    })
+}
+
+/// Stage 1 across all blocks, data-parallel with `threads` workers.
+/// `sys.n()` must equal `p * m`.
+pub fn stage1_all<T: Scalar>(
+    sys: &TriSystem<T>,
+    m: usize,
+    threads: usize,
+    out: &mut Vec<BlockInterface<T>>,
+) -> Result<()> {
+    let n = sys.n();
+    if m < 3 {
+        return Err(Error::Solver(format!("sub-system size m={m} must be >= 3")));
+    }
+    if n % m != 0 {
+        return Err(Error::Shape(format!("n={n} not a multiple of m={m}")));
+    }
+    let p = n / m;
+    out.clear();
+    out.resize(
+        p,
+        BlockInterface {
+            ua: T::zero(),
+            ug: T::zero(),
+            ud: T::zero(),
+            da: T::zero(),
+            dg: T::zero(),
+            dd: T::zero(),
+        },
+    );
+
+    let workers = threads.max(1).min(p);
+    let chunk = p.div_ceil(workers);
+    let results: Vec<Result<()>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = out
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(w, out_chunk)| {
+                let sys = &sys;
+                scope.spawn(move || -> Result<()> {
+                    let mut cp = vec![T::zero(); m];
+                    let mut dy = vec![T::zero(); m];
+                    let mut du = vec![T::zero(); m];
+                    let mut dv = vec![T::zero(); m];
+                    for (j, slot) in out_chunk.iter_mut().enumerate() {
+                        let k = w * chunk + j;
+                        let s = k * m;
+                        *slot = stage1_block(
+                            &sys.a[s..s + m],
+                            &sys.b[s..s + m],
+                            &sys.c[s..s + m],
+                            &sys.d[s..s + m],
+                            &mut cp,
+                            &mut dy,
+                            &mut du,
+                            &mut dv,
+                        )?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
+
+/// Assemble the 2P tridiagonal interface system (rows `[UP_k, DOWN_k]`
+/// over unknowns `[x_{k,f}, x_{k,l}]`, interleaved).
+pub fn assemble_interface<T: Scalar>(iface: &[BlockInterface<T>]) -> TriSystem<T> {
+    let p = iface.len();
+    let n2 = 2 * p;
+    let mut a = Vec::with_capacity(n2);
+    let mut b = Vec::with_capacity(n2);
+    let mut c = Vec::with_capacity(n2);
+    let mut d = Vec::with_capacity(n2);
+    for blk in iface {
+        // UP_k: couples (x_{k-1,l}, x_{k,f}, x_{k,l})
+        a.push(blk.ua);
+        b.push(T::one());
+        c.push(blk.ug);
+        d.push(blk.ud);
+        // DOWN_k: couples (x_{k,f}, x_{k,l}, x_{k+1,f})
+        a.push(blk.da);
+        b.push(T::one());
+        c.push(blk.dg);
+        d.push(blk.dd);
+    }
+    TriSystem { a, b, c, d }
+}
+
+/// Stage 3 for one block: interior Thomas with boundaries folded in.
+/// Writes the full block solution (including boundaries) into `x`.
+#[allow(clippy::too_many_arguments)]
+pub fn stage3_block<T: Scalar>(
+    a: &[T],
+    b: &[T],
+    c: &[T],
+    d: &[T],
+    xf: T,
+    xl: T,
+    cp: &mut [T],
+    dp: &mut [T],
+    x: &mut [T],
+) -> Result<()> {
+    let m = b.len();
+    debug_assert!(m >= 3);
+    let tiny = T::of_f64(f64::MIN_POSITIVE.sqrt());
+
+    // RHS corrections (cumulative: both hit row 1 when m == 3).
+    let rhs = |i: usize| -> T {
+        let mut v = d[i];
+        if i == 1 {
+            v = v - a[1] * xf;
+        }
+        if i == m - 2 {
+            v = v - c[m - 2] * xl;
+        }
+        v
+    };
+
+    let w1 = b[1];
+    if w1.abs() <= tiny {
+        return Err(Error::SingularSystem {
+            row: 1,
+            magnitude: w1.as_f64().abs(),
+        });
+    }
+    let mut inv_w = T::one() / w1;
+    cp[1] = c[1] * inv_w;
+    dp[1] = rhs(1) * inv_w;
+    for i in 2..m - 1 {
+        let ai = a[i];
+        let w = b[i] - ai * cp[i - 1];
+        if w.abs() <= tiny {
+            return Err(Error::SingularSystem {
+                row: i,
+                magnitude: w.as_f64().abs(),
+            });
+        }
+        inv_w = T::one() / w;
+        cp[i] = c[i] * inv_w;
+        dp[i] = (rhs(i) - ai * dp[i - 1]) * inv_w;
+    }
+
+    x[0] = xf;
+    x[m - 1] = xl;
+    x[m - 2] = if m >= 3 { dp[m - 2] } else { xl };
+    for i in (1..m - 2).rev() {
+        x[i] = dp[i] - cp[i] * x[i + 1];
+    }
+    Ok(())
+}
+
+/// Stage 3 across all blocks, data-parallel.
+pub fn stage3_all<T: Scalar>(
+    sys: &TriSystem<T>,
+    m: usize,
+    boundary: &[T], // interleaved [xf_0, xl_0, xf_1, xl_1, ...] (Stage-2 x)
+    threads: usize,
+    x: &mut [T],
+) -> Result<()> {
+    let n = sys.n();
+    let p = n / m;
+    if boundary.len() != 2 * p {
+        return Err(Error::Shape(format!(
+            "boundary len {} != 2P = {}",
+            boundary.len(),
+            2 * p
+        )));
+    }
+    if x.len() != n {
+        return Err(Error::Shape(format!("x len {} != n {}", x.len(), n)));
+    }
+    let workers = threads.max(1).min(p);
+    let chunk = p.div_ceil(workers);
+    let results: Vec<Result<()>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = x
+            .chunks_mut(chunk * m)
+            .enumerate()
+            .map(|(w, x_chunk)| {
+                let sys = &sys;
+                scope.spawn(move || -> Result<()> {
+                    let mut cp = vec![T::zero(); m];
+                    let mut dp = vec![T::zero(); m];
+                    for (j, xb) in x_chunk.chunks_mut(m).enumerate() {
+                        let k = w * chunk + j;
+                        let s = k * m;
+                        stage3_block(
+                            &sys.a[s..s + m],
+                            &sys.b[s..s + m],
+                            &sys.c[s..s + m],
+                            &sys.d[s..s + m],
+                            boundary[2 * k],
+                            boundary[2 * k + 1],
+                            &mut cp,
+                            &mut dp,
+                            xb,
+                        )?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
+
+/// Full non-recursive partition solve. Pads `n` up to a multiple of `m`
+/// with identity rows internally and truncates the result back to `n`.
+pub fn partition_solve<T: Scalar>(sys: &TriSystem<T>, m: usize, threads: usize) -> Result<Vec<T>> {
+    let mut ws = PartitionWorkspace::new();
+    partition_solve_with_workspace(sys, m, threads, &mut ws)
+}
+
+/// As [`partition_solve`] but reusing caller-provided buffers.
+pub fn partition_solve_with_workspace<T: Scalar>(
+    sys: &TriSystem<T>,
+    m: usize,
+    threads: usize,
+    ws: &mut PartitionWorkspace<T>,
+) -> Result<Vec<T>> {
+    let n = sys.n();
+    if m < 3 {
+        return Err(Error::Solver(format!("sub-system size m={m} must be >= 3")));
+    }
+    // Pad to a whole number of blocks (identity rows are exact — see
+    // TriSystem::pad_to).
+    let padded;
+    let work: &TriSystem<T> = if n % m == 0 {
+        sys
+    } else {
+        let mut s = sys.clone();
+        s.pad_to(n.div_ceil(m) * m);
+        padded = s;
+        &padded
+    };
+
+    stage1_all(work, m, threads, &mut ws.iface)?;
+    let iface_sys = assemble_interface(&ws.iface);
+    ws.iface_x.clear();
+    ws.iface_x.resize(iface_sys.n(), T::zero());
+    thomas_solve_with_scratch(&iface_sys, &mut ws.scratch, &mut ws.iface_x)?;
+    ws.iface_sys = Some(iface_sys);
+
+    let mut x = vec![T::zero(); work.n()];
+    stage3_all(work, m, &ws.iface_x, threads, &mut x)?;
+    x.truncate(n);
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::generator::{manufactured_solution, random_dd_system, toeplitz_system};
+    use crate::solver::residual::{max_abs_diff, max_abs_residual};
+    use crate::solver::thomas_solve;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn matches_thomas_on_random_dd() {
+        let mut rng = Pcg64::new(1);
+        for (n, m) in [(12, 4), (64, 8), (100, 5), (1000, 20), (4096, 32)] {
+            let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let want = thomas_solve(&sys).unwrap();
+            let got = partition_solve(&sys, m, 4).unwrap();
+            assert!(
+                max_abs_diff(&got, &want) < 1e-9,
+                "n={n} m={m} diff={}",
+                max_abs_diff(&got, &want)
+            );
+        }
+    }
+
+    #[test]
+    fn handles_n_not_multiple_of_m() {
+        let mut rng = Pcg64::new(2);
+        for (n, m) in [(13, 4), (99, 8), (4500, 8), (7, 5)] {
+            let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let want = thomas_solve(&sys).unwrap();
+            let got = partition_solve(&sys, m, 2).unwrap();
+            assert!(max_abs_diff(&got, &want) < 1e-9, "n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn single_block_degenerate_case() {
+        let mut rng = Pcg64::new(3);
+        let sys = random_dd_system::<f64>(&mut rng, 6, 0.5);
+        let got = partition_solve(&sys, 6, 1).unwrap();
+        let want = thomas_solve(&sys).unwrap();
+        assert!(max_abs_diff(&got, &want) < 1e-11);
+    }
+
+    #[test]
+    fn n_smaller_than_m() {
+        let mut rng = Pcg64::new(4);
+        let sys = random_dd_system::<f64>(&mut rng, 5, 0.5);
+        let got = partition_solve(&sys, 8, 1).unwrap();
+        let want = thomas_solve(&sys).unwrap();
+        assert!(max_abs_diff(&got, &want) < 1e-11);
+    }
+
+    #[test]
+    fn interface_is_diagonally_dominant() {
+        let mut rng = Pcg64::new(5);
+        let sys = random_dd_system::<f64>(&mut rng, 256, 1.0);
+        let mut iface = Vec::new();
+        stage1_all(&sys, 8, 2, &mut iface).unwrap();
+        let isys = assemble_interface(&iface);
+        assert!(isys.is_diagonally_dominant());
+        assert_eq!(isys.n(), 64);
+    }
+
+    #[test]
+    fn interface_boundary_structure() {
+        let mut rng = Pcg64::new(6);
+        let sys = random_dd_system::<f64>(&mut rng, 64, 0.5);
+        let mut iface = Vec::new();
+        stage1_all(&sys, 8, 1, &mut iface).unwrap();
+        assert_eq!(iface[0].ua, 0.0, "first block must not couple left");
+        assert_eq!(iface[0].da, 0.0);
+        let last = iface.last().unwrap();
+        assert_eq!(last.ug, 0.0, "last block must not couple right");
+        assert_eq!(last.dg, 0.0);
+    }
+
+    #[test]
+    fn thread_count_invariance() {
+        let mut rng = Pcg64::new(7);
+        let sys = random_dd_system::<f64>(&mut rng, 512, 0.5);
+        let x1 = partition_solve(&sys, 16, 1).unwrap();
+        for threads in [2, 3, 8, 64] {
+            let xt = partition_solve(&sys, 16, threads).unwrap();
+            assert_eq!(x1, xt, "threads={threads} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn manufactured_forward_error() {
+        let mut rng = Pcg64::new(8);
+        let (sys, x_star) = manufactured_solution::<f64>(&mut rng, 300);
+        let x = partition_solve(&sys, 10, 4).unwrap();
+        assert!(max_abs_diff(&x, &x_star) < 1e-9);
+    }
+
+    #[test]
+    fn toeplitz_and_f32() {
+        let sys = toeplitz_system::<f32>(1024, 4.0);
+        let x = partition_solve(&sys, 32, 4).unwrap();
+        assert!(max_abs_residual(&sys, &x) < 1e-3);
+    }
+
+    #[test]
+    fn rejects_bad_m() {
+        let mut rng = Pcg64::new(9);
+        let sys = random_dd_system::<f64>(&mut rng, 16, 0.5);
+        assert!(partition_solve(&sys, 2, 1).is_err());
+    }
+
+    #[test]
+    fn workspace_reuse_is_consistent() {
+        let mut rng = Pcg64::new(10);
+        let mut ws = PartitionWorkspace::new();
+        for _ in 0..3 {
+            let sys = random_dd_system::<f64>(&mut rng, 128, 0.5);
+            let x = partition_solve_with_workspace(&sys, 8, 2, &mut ws).unwrap();
+            let want = thomas_solve(&sys).unwrap();
+            assert!(max_abs_diff(&x, &want) < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Recursive parallel partition method (paper §3): instead of solving the
+//! interface system with the host Thomas in Stage 2, re-apply the partition
+//! method to it — once per planned recursion level.
+//!
+//! The per-level sub-system sizes come from a [`crate::recursion::planner`]
+//! plan (§3.2): level 0 uses the optimum m for the initial SLAE, deeper
+//! levels use the optimum m for each interface system (with the paper's
+//! Remark fixing `m_1 = 10` when more than one recursion is planned).
+
+use super::partition::{assemble_interface, stage1_all, stage3_all};
+use super::thomas::thomas_solve;
+use super::{Scalar, TriSystem};
+use crate::error::{Error, Result};
+
+/// Solve with `plan.len() - 1` recursive steps: `plan[0]` is the sub-system
+/// size for the initial SLAE, `plan[r]` for the r-th interface system. An
+/// empty plan degenerates to the sequential Thomas baseline (R = "-1", i.e.
+/// no partitioning at all).
+pub fn recursive_solve<T: Scalar>(
+    sys: &TriSystem<T>,
+    plan: &[usize],
+    threads: usize,
+) -> Result<Vec<T>> {
+    let Some((&m, rest)) = plan.split_first() else {
+        return thomas_solve(sys);
+    };
+    let n = sys.n();
+    if m < 3 {
+        return Err(Error::Solver(format!("sub-system size m={m} must be >= 3")));
+    }
+    // Small systems: partitioning a system comparable to m is pure overhead
+    // and the interface system would be as large as the input; cut off.
+    if n <= 2 * m {
+        return thomas_solve(sys);
+    }
+
+    let padded;
+    let work: &TriSystem<T> = if n % m == 0 {
+        sys
+    } else {
+        let mut s = sys.clone();
+        s.pad_to(n.div_ceil(m) * m);
+        padded = s;
+        &padded
+    };
+
+    let mut iface = Vec::new();
+    stage1_all(work, m, threads, &mut iface)?;
+    let iface_sys = assemble_interface(&iface);
+
+    // Stage 2: recurse (or Thomas when the plan is exhausted).
+    let boundary = recursive_solve(&iface_sys, rest, threads)?;
+
+    let mut x = vec![T::zero(); work.n()];
+    stage3_all(work, m, &boundary, threads, &mut x)?;
+    x.truncate(n);
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::generator::random_dd_system;
+    use crate::solver::residual::max_abs_diff;
+    use crate::solver::thomas_solve;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn empty_plan_is_thomas() {
+        let mut rng = Pcg64::new(1);
+        let sys = random_dd_system::<f64>(&mut rng, 50, 0.5);
+        let got = recursive_solve(&sys, &[], 2).unwrap();
+        let want = thomas_solve(&sys).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn one_level_matches_thomas() {
+        let mut rng = Pcg64::new(2);
+        let sys = random_dd_system::<f64>(&mut rng, 1024, 0.5);
+        let got = recursive_solve(&sys, &[16], 4).unwrap();
+        let want = thomas_solve(&sys).unwrap();
+        assert!(max_abs_diff(&got, &want) < 1e-9);
+    }
+
+    #[test]
+    fn deep_recursion_matches_thomas() {
+        let mut rng = Pcg64::new(3);
+        let sys = random_dd_system::<f64>(&mut rng, 20_000, 0.5);
+        for plan in [
+            vec![32usize],
+            vec![32, 10],
+            vec![32, 10, 8],
+            vec![32, 10, 8, 4],
+            vec![32, 10, 8, 4, 4],
+        ] {
+            let got = recursive_solve(&sys, &plan, 4).unwrap();
+            let want = thomas_solve(&sys).unwrap();
+            assert!(
+                max_abs_diff(&got, &want) < 1e-8,
+                "plan {plan:?} diff {}",
+                max_abs_diff(&got, &want)
+            );
+        }
+    }
+
+    #[test]
+    fn recursion_bottoms_out_on_small_interfaces() {
+        // Plan deeper than the shrinking interface chain supports: the
+        // n <= 2m cutoff must stop the recursion gracefully.
+        let mut rng = Pcg64::new(4);
+        let sys = random_dd_system::<f64>(&mut rng, 256, 0.5);
+        let got = recursive_solve(&sys, &[8, 8, 8, 8, 8, 8, 8, 8], 2).unwrap();
+        let want = thomas_solve(&sys).unwrap();
+        assert!(max_abs_diff(&got, &want) < 1e-9);
+    }
+
+    #[test]
+    fn interface_shrinks_by_2_over_m() {
+        // N=4096, m=32 -> P=128 -> interface 256 = 2N/m.
+        let mut rng = Pcg64::new(5);
+        let sys = random_dd_system::<f64>(&mut rng, 4096, 0.5);
+        let mut iface = Vec::new();
+        stage1_all(&sys, 32, 2, &mut iface).unwrap();
+        assert_eq!(assemble_interface(&iface).n(), 2 * 4096 / 32);
+    }
+
+    #[test]
+    fn f32_recursive() {
+        let mut rng = Pcg64::new(6);
+        let sys = random_dd_system::<f32>(&mut rng, 4096, 1.0);
+        let got = recursive_solve(&sys, &[32, 10], 4).unwrap();
+        let want = thomas_solve(&sys).unwrap();
+        assert!(max_abs_diff(&got, &want) < 5e-3);
+    }
+}

@@ -1,0 +1,65 @@
+//! Residual-based verification: `‖A x − d‖`.
+
+use super::{Scalar, TriSystem};
+
+/// Maximum absolute residual component.
+pub fn max_abs_residual<T: Scalar>(sys: &TriSystem<T>, x: &[T]) -> f64 {
+    let ax = sys.matvec(x);
+    ax.iter()
+        .zip(&sys.d)
+        .map(|(p, q)| (*p - *q).as_f64().abs())
+        .fold(0.0, f64::max)
+}
+
+/// Relative residual `‖Ax − d‖∞ / max(‖d‖∞, ε)`.
+pub fn relative_residual<T: Scalar>(sys: &TriSystem<T>, x: &[T]) -> f64 {
+    let denom = sys
+        .d
+        .iter()
+        .map(|v| v.as_f64().abs())
+        .fold(0.0, f64::max)
+        .max(1e-30);
+    max_abs_residual(sys, x) / denom
+}
+
+/// Max |x - y| between two solution vectors.
+pub fn max_abs_diff<T: Scalar>(x: &[T], y: &[T]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(p, q)| (*p - *q).as_f64().abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::generator::random_dd_system;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn zero_residual_for_exact() {
+        let sys = TriSystem::new(
+            vec![0.0, 1.0],
+            vec![2.0, 2.0],
+            vec![1.0, 0.0],
+            vec![3.0, 3.0],
+        )
+        .unwrap();
+        assert_eq!(max_abs_residual(&sys, &[1.0, 1.0]), 0.0);
+        assert_eq!(relative_residual(&sys, &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn nonzero_for_wrong_solution() {
+        let mut rng = Pcg64::new(3);
+        let sys = random_dd_system::<f64>(&mut rng, 10, 0.5);
+        let x = vec![1.0; 10];
+        assert!(max_abs_residual(&sys, &x) > 0.0);
+    }
+
+    #[test]
+    fn diff_helper() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+    }
+}

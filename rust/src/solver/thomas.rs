@@ -1,0 +1,176 @@
+//! Sequential Thomas algorithm — the paper's Stage-2 host solver and the
+//! correctness oracle for every parallel path.
+
+use super::{Scalar, TriSystem};
+use crate::error::{Error, Result};
+
+/// Reusable scratch to keep the hot path allocation-free (DESIGN.md §10 L3).
+#[derive(Clone, Debug)]
+pub struct ThomasScratch<T> {
+    cp: Vec<T>,
+    dp: Vec<T>,
+}
+
+impl<T> Default for ThomasScratch<T> {
+    fn default() -> Self {
+        ThomasScratch {
+            cp: Vec::new(),
+            dp: Vec::new(),
+        }
+    }
+}
+
+impl<T: Scalar> ThomasScratch<T> {
+    pub fn with_capacity(n: usize) -> Self {
+        ThomasScratch {
+            cp: Vec::with_capacity(n),
+            dp: Vec::with_capacity(n),
+        }
+    }
+}
+
+/// Solve `A x = d`, allocating scratch internally.
+pub fn thomas_solve<T: Scalar>(sys: &TriSystem<T>) -> Result<Vec<T>> {
+    let mut scratch = ThomasScratch::with_capacity(sys.n());
+    let mut x = vec![T::zero(); sys.n()];
+    thomas_solve_with_scratch(sys, &mut scratch, &mut x)?;
+    Ok(x)
+}
+
+/// Solve into `x` using caller-provided scratch (no allocation after the
+/// first call at a given size). Fails on a (near-)zero pivot.
+pub fn thomas_solve_with_scratch<T: Scalar>(
+    sys: &TriSystem<T>,
+    scratch: &mut ThomasScratch<T>,
+    x: &mut [T],
+) -> Result<()> {
+    let n = sys.n();
+    if x.len() != n {
+        return Err(Error::Shape(format!("x len {} != n {}", x.len(), n)));
+    }
+    let (a, b, c, d) = (&sys.a, &sys.b, &sys.c, &sys.d);
+    let tiny = T::of_f64(f64::MIN_POSITIVE.sqrt());
+
+    scratch.cp.clear();
+    scratch.dp.clear();
+    scratch.cp.reserve(n);
+    scratch.dp.reserve(n);
+
+    let mut w = b[0];
+    if w.abs() <= tiny {
+        return Err(Error::SingularSystem {
+            row: 0,
+            magnitude: w.as_f64().abs(),
+        });
+    }
+    // cp stays a direct division (it sits on the loop-carried dependence
+    // chain; an extra multiply there lengthens the critical path). The dp
+    // sweep divides off-chain — see EXPERIMENTS.md §Perf.
+    scratch.cp.push(c[0] / w);
+    scratch.dp.push(d[0] / w);
+    for i in 1..n {
+        w = b[i] - a[i] * scratch.cp[i - 1];
+        if w.abs() <= tiny {
+            return Err(Error::SingularSystem {
+                row: i,
+                magnitude: w.as_f64().abs(),
+            });
+        }
+        scratch.cp.push(c[i] / w);
+        scratch.dp.push((d[i] - a[i] * scratch.dp[i - 1]) / w);
+    }
+
+    x[n - 1] = scratch.dp[n - 1];
+    for i in (0..n - 1).rev() {
+        x[i] = scratch.dp[i] - scratch.cp[i] * x[i + 1];
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::generator::random_dd_system;
+    use crate::solver::residual::max_abs_residual;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn solves_identity() {
+        let n = 5;
+        let sys = TriSystem::new(
+            vec![0.0; n],
+            vec![1.0; n],
+            vec![0.0; n],
+            (0..n).map(|i| i as f64).collect(),
+        )
+        .unwrap();
+        let x = thomas_solve(&sys).unwrap();
+        assert_eq!(x, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn solves_known_3x3() {
+        // [2 1 0; 1 3 1; 0 1 2] * [1,1,1] = [3,5,3]
+        let sys = TriSystem::new(
+            vec![0.0, 1.0, 1.0],
+            vec![2.0, 3.0, 2.0],
+            vec![1.0, 1.0, 0.0],
+            vec![3.0, 5.0, 3.0],
+        )
+        .unwrap();
+        let x = thomas_solve(&sys).unwrap();
+        for xi in x {
+            assert!((xi - 1.0f64).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn residual_small_for_random_dd() {
+        let mut rng = Pcg64::new(42);
+        for n in [1usize, 2, 3, 10, 1000] {
+            let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let x = thomas_solve(&sys).unwrap();
+            assert!(
+                max_abs_residual(&sys, &x) < 1e-10,
+                "n={n} residual too large"
+            );
+        }
+    }
+
+    #[test]
+    fn f32_path_works() {
+        let mut rng = Pcg64::new(7);
+        let sys = random_dd_system::<f32>(&mut rng, 500, 0.5);
+        let x = thomas_solve(&sys).unwrap();
+        assert!(max_abs_residual(&sys, &x) < 1e-3);
+    }
+
+    #[test]
+    fn detects_singular() {
+        let sys = TriSystem::new(
+            vec![0.0, 1.0],
+            vec![0.0, 1.0], // zero pivot at row 0
+            vec![1.0, 0.0],
+            vec![1.0, 1.0],
+        )
+        .unwrap();
+        match thomas_solve(&sys) {
+            Err(crate::Error::SingularSystem { row, .. }) => assert_eq!(row, 0),
+            other => panic!("expected SingularSystem, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_no_realloc() {
+        let mut rng = Pcg64::new(1);
+        let sys = random_dd_system::<f64>(&mut rng, 100, 0.5);
+        let mut scratch = ThomasScratch::with_capacity(100);
+        let mut x = vec![0.0; 100];
+        thomas_solve_with_scratch(&sys, &mut scratch, &mut x).unwrap();
+        let cap0 = scratch.cp.capacity();
+        for _ in 0..10 {
+            thomas_solve_with_scratch(&sys, &mut scratch, &mut x).unwrap();
+        }
+        assert_eq!(scratch.cp.capacity(), cap0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Tridiagonal system storage and basic linear-algebra helpers.
+
+use super::Scalar;
+use crate::error::{Error, Result};
+
+/// A tridiagonal SLAE `A x = d` with `A` stored as three diagonals:
+/// `a` (sub-diagonal, `a[0]` unused/zero), `b` (main), `c` (super-diagonal,
+/// `c[n-1]` unused/zero), plus the right-hand side `d`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TriSystem<T> {
+    pub a: Vec<T>,
+    pub b: Vec<T>,
+    pub c: Vec<T>,
+    pub d: Vec<T>,
+}
+
+impl<T: Scalar> TriSystem<T> {
+    pub fn new(a: Vec<T>, b: Vec<T>, c: Vec<T>, d: Vec<T>) -> Result<Self> {
+        let n = b.len();
+        if n == 0 {
+            return Err(Error::Shape("empty system".into()));
+        }
+        if a.len() != n || c.len() != n || d.len() != n {
+            return Err(Error::Shape(format!(
+                "diagonal lengths differ: a={} b={} c={} d={}",
+                a.len(),
+                n,
+                c.len(),
+                d.len()
+            )));
+        }
+        Ok(TriSystem { a, b, c, d })
+    }
+
+    pub fn n(&self) -> usize {
+        self.b.len()
+    }
+
+    /// `y = A x` (ignores `a[0]` and `c[n-1]`).
+    pub fn matvec(&self, x: &[T]) -> Vec<T> {
+        let n = self.n();
+        assert_eq!(x.len(), n);
+        let mut y = vec![T::zero(); n];
+        for i in 0..n {
+            let mut v = self.b[i] * x[i];
+            if i > 0 {
+                v = v + self.a[i] * x[i - 1];
+            }
+            if i + 1 < n {
+                v = v + self.c[i] * x[i + 1];
+            }
+            y[i] = v;
+        }
+        y
+    }
+
+    /// Strict row-wise diagonal dominance: `|b_i| > |a_i| + |c_i|`.
+    pub fn is_diagonally_dominant(&self) -> bool {
+        let n = self.n();
+        (0..n).all(|i| {
+            let mut off = T::zero();
+            if i > 0 {
+                off = off + self.a[i].abs();
+            }
+            if i + 1 < n {
+                off = off + self.c[i].abs();
+            }
+            self.b[i].abs() > off
+        })
+    }
+
+    /// Grow to length `n_new >= n` with identity rows (`b=1`, rest 0).
+    /// Identity rows do not couple to the real system (the real last row's
+    /// super-diagonal is already zero), so the solution of the first `n`
+    /// unknowns is unchanged and the padded unknowns solve to exactly 0 —
+    /// this is the runtime's bucket-padding primitive (DESIGN.md §7).
+    pub fn pad_to(&mut self, n_new: usize) {
+        let n = self.n();
+        assert!(n_new >= n);
+        self.a.resize(n_new, T::zero());
+        self.b.resize(n_new, T::one());
+        self.c.resize(n_new, T::zero());
+        self.d.resize(n_new, T::zero());
+    }
+
+    /// Cast to another scalar type (used by the FP32 experiments).
+    pub fn cast<U: Scalar>(&self) -> TriSystem<U> {
+        let conv = |v: &[T]| v.iter().map(|x| U::of_f64(x.as_f64())).collect();
+        TriSystem {
+            a: conv(&self.a),
+            b: conv(&self.b),
+            c: conv(&self.c),
+            d: conv(&self.d),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> TriSystem<f64> {
+        // [2 1 0; 1 3 1; 0 1 2] x = [3, 5, 3] -> x = [1, 1, 1]
+        TriSystem::new(
+            vec![0.0, 1.0, 1.0],
+            vec![2.0, 3.0, 2.0],
+            vec![1.0, 1.0, 0.0],
+            vec![3.0, 5.0, 3.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn matvec_matches_hand_computation() {
+        let s = small();
+        let y = s.matvec(&[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 5.0, 3.0]);
+    }
+
+    #[test]
+    fn dominance_check() {
+        assert!(small().is_diagonally_dominant());
+        let mut s = small();
+        s.b[1] = 1.5;
+        assert!(!s.is_diagonally_dominant());
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(TriSystem::<f64>::new(vec![], vec![], vec![], vec![]).is_err());
+        assert!(TriSystem::new(vec![0.0], vec![1.0, 2.0], vec![0.0], vec![0.0]).is_err());
+    }
+
+    #[test]
+    fn pad_appends_identity() {
+        let mut s = small();
+        s.pad_to(5);
+        assert_eq!(s.n(), 5);
+        assert_eq!(s.b[3..], [1.0, 1.0]);
+        assert_eq!(s.a[3..], [0.0, 0.0]);
+        assert_eq!(s.d[3..], [0.0, 0.0]);
+    }
+
+    #[test]
+    fn cast_roundtrip() {
+        let s = small();
+        let s32: TriSystem<f32> = s.cast();
+        let back: TriSystem<f64> = s32.cast();
+        assert!((back.b[1] - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,161 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` against `cases` random
+//! values drawn by `gen`; on failure it re-runs the generator/property
+//! pair over progressively simpler values (shrink-by-regeneration using
+//! the generator's built-in size parameter) and reports the smallest
+//! failing case's seed so the exact run is reproducible.
+
+use crate::util::Pcg64;
+
+/// Generation context: RNG plus a size hint the shrinker lowers.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg64,
+    /// Size budget in 1..=100; generators should scale dimensions by it.
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// Integer in `[lo, hi]`, biased small by the size budget.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = hi - lo + 1;
+        let scaled = (span * self.size).div_ceil(100).max(1);
+        lo + self.rng.below(scaled.min(span))
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.uniform() < 0.5
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct Failure {
+    pub seed: u64,
+    pub case: usize,
+    pub size: usize,
+    pub message: String,
+}
+
+/// Run `prop` on `cases` generated values. Panics with a reproducible
+/// report on the first failure (after shrinking the size budget).
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut failure: Option<Failure> = None;
+    'outer: for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64);
+        let size = 1 + (case * 100 / cases.max(1)).min(99);
+        let mut rng = Pcg64::new(case_seed);
+        let mut g = Gen {
+            rng: &mut rng,
+            size,
+        };
+        let value = gen(&mut g);
+        if let Err(message) = prop(&value) {
+            // Shrink: replay the same case seed at smaller sizes.
+            for shrink_size in [1usize, 2, 5, 10, 25, 50] {
+                if shrink_size >= size {
+                    break;
+                }
+                let mut rng = Pcg64::new(case_seed);
+                let mut g = Gen {
+                    rng: &mut rng,
+                    size: shrink_size,
+                };
+                let v = gen(&mut g);
+                if let Err(msg) = prop(&v) {
+                    failure = Some(Failure {
+                        seed: case_seed,
+                        case,
+                        size: shrink_size,
+                        message: msg,
+                    });
+                    break 'outer;
+                }
+            }
+            failure = Some(Failure {
+                seed: case_seed,
+                case,
+                size,
+                message,
+            });
+            break 'outer;
+        }
+    }
+    if let Some(f) = failure {
+        panic!(
+            "property failed (case {} of seed {}, size {}): {}\n\
+             reproduce with Pcg64::new({}) at size {}",
+            f.case, seed, f.size, f.message, f.seed, f.size
+        );
+    }
+}
+
+/// Number of cases: `PARTISOL_PROPTEST_CASES` env override, default 64.
+pub fn default_cases() -> usize {
+    std::env::var("PARTISOL_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |g| g.int(0, 100),
+            |&x| {
+                count += 1;
+                if x <= 100 {
+                    Ok(())
+                } else {
+                    Err("impossible".into())
+                }
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_repro() {
+        forall(
+            2,
+            50,
+            |g| g.int(0, 100),
+            |&x| {
+                if x < 90 {
+                    Ok(())
+                } else {
+                    Err(format!("x={x} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn generator_size_scales() {
+        let mut rng = Pcg64::new(3);
+        let mut g = Gen {
+            rng: &mut rng,
+            size: 1,
+        };
+        for _ in 0..50 {
+            assert!(g.int(0, 1000) <= 10);
+        }
+    }
+}

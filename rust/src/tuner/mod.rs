@@ -1,0 +1,17 @@
+//! The tuning pipeline of §2 (systems S10–S12): empirical sweep over
+//! sub-system sizes → trend correction → heuristic construction; plus the
+//! optimum-streams heuristic of [5] the experiments take as given.
+//!
+//! The pipeline consumes any `T(N, m)` oracle; in this repo that oracle is
+//! the calibrated GPU simulator (the substitution documented in DESIGN.md
+//! §2) — everything downstream is the paper's procedure unchanged.
+
+pub mod correction;
+pub mod heuristic;
+pub mod streams;
+pub mod sweep;
+
+pub use correction::correct_trend;
+pub use heuristic::{IntervalHeuristic, KnnHeuristic, MHeuristic};
+pub use streams::optimum_streams;
+pub use sweep::{sweep_all, sweep_n, SweepConfig, SweepResult};

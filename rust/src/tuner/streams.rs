@@ -1,0 +1,51 @@
+//! The optimum-number-of-CUDA-streams heuristic of the companion paper
+//! [5] (Veneva & Imamura 2025), as used by every experiment here — the
+//! `#streams` column of Tables 1, 3 and 4.
+
+/// Optimum stream count for a given SLAE size (FP64 and FP32 share the
+/// table — Table 4 reports the same stream column).
+pub fn optimum_streams(n: usize) -> usize {
+    match n {
+        0..=100_000 => 1,
+        100_001..=200_000 => 2,
+        200_001..=400_000 => 4,
+        400_001..=1_000_000 => 8,
+        1_000_001..=2_000_000 => 16,
+        _ => 32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::paper;
+
+    #[test]
+    fn matches_table1_stream_column() {
+        for row in paper::table1_rows() {
+            assert_eq!(
+                optimum_streams(row.n),
+                row.streams,
+                "N={} stream heuristic mismatch",
+                row.n
+            );
+        }
+    }
+
+    #[test]
+    fn matches_table4_stream_column() {
+        for row in paper::fp32_rows() {
+            assert_eq!(optimum_streams(row.n), row.streams, "N={}", row.n);
+        }
+    }
+
+    #[test]
+    fn monotone_in_n() {
+        let mut prev = 0;
+        for n in [1, 1000, 100_000, 150_000, 300_000, 500_000, 1_500_000, 5_000_000] {
+            let s = optimum_streams(n);
+            assert!(s >= prev);
+            prev = s;
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! The empirical sweep driver — the paper's §2 experiment loop: for each
+//! SLAE size, time the partition solve at every candidate sub-system size
+//! (averaging several runs) and record the argmin.
+//!
+//! With `noise: true` the simulator injects the multiplicative measurement
+//! noise real `cudaEvent` timings carry; near-flat optima then fluctuate
+//! between neighboring m — reproducing the observed-vs-corrected
+//! distinction of Table 1 (e.g. 35/40/64 appearing above the 20/32 trend).
+
+use super::streams::optimum_streams;
+use crate::data::paper::M_CANDIDATES;
+use crate::gpu::simulator::GpuSimulator;
+use crate::gpu::spec::Dtype;
+use crate::util::stats::argmin;
+use crate::util::Pcg64;
+
+/// Sweep configuration.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub dtype: Dtype,
+    /// Candidate sub-system sizes (defaults to the paper's grid).
+    pub m_grid: Vec<usize>,
+    /// Runs averaged per (N, m) cell ("the average time of several runs").
+    pub repeats: usize,
+    /// Inject measurement noise (observed-data mode) or not (the
+    /// noise-free landscape used for correction verification).
+    pub noise: bool,
+    pub seed: u64,
+}
+
+impl SweepConfig {
+    pub fn observed(dtype: Dtype, seed: u64) -> Self {
+        SweepConfig {
+            dtype,
+            m_grid: M_CANDIDATES.to_vec(),
+            repeats: 5,
+            noise: true,
+            seed,
+        }
+    }
+
+    pub fn noise_free(dtype: Dtype) -> Self {
+        SweepConfig {
+            dtype,
+            m_grid: M_CANDIDATES.to_vec(),
+            repeats: 1,
+            noise: false,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of sweeping one SLAE size.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub n: usize,
+    pub streams: usize,
+    /// `(m, mean time µs)` per candidate, in grid order.
+    pub times: Vec<(usize, f64)>,
+    pub opt_m: usize,
+    pub opt_time_us: f64,
+}
+
+impl SweepResult {
+    /// Time at a specific m (panics if m not in the grid).
+    pub fn time_at(&self, m: usize) -> f64 {
+        self.times
+            .iter()
+            .find(|(mm, _)| *mm == m)
+            .unwrap_or_else(|| panic!("m={m} not in sweep grid"))
+            .1
+    }
+
+    /// Candidates sorted by time (best first).
+    pub fn ranking(&self) -> Vec<(usize, f64)> {
+        let mut r = self.times.clone();
+        r.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        r
+    }
+}
+
+/// Sweep one SLAE size.
+pub fn sweep_n(sim: &GpuSimulator, n: usize, cfg: &SweepConfig) -> SweepResult {
+    let streams = optimum_streams(n);
+    let mut rng = Pcg64::new(cfg.seed ^ (n as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    let grid: Vec<usize> = cfg
+        .m_grid
+        .iter()
+        .copied()
+        .filter(|&m| m >= 4 && m <= n.max(4))
+        .collect();
+    let times: Vec<(usize, f64)> = grid
+        .iter()
+        .map(|&m| {
+            let mut acc = 0.0;
+            for _ in 0..cfg.repeats.max(1) {
+                acc += if cfg.noise {
+                    sim.solve_noisy(n, m, streams, cfg.dtype, &mut rng)
+                } else {
+                    sim.solve(n, m, streams, cfg.dtype).total_us
+                };
+            }
+            (m, acc / cfg.repeats.max(1) as f64)
+        })
+        .collect();
+    let ts: Vec<f64> = times.iter().map(|&(_, t)| t).collect();
+    let i = argmin(&ts).unwrap();
+    SweepResult {
+        n,
+        streams,
+        opt_m: times[i].0,
+        opt_time_us: times[i].1,
+        times,
+    }
+}
+
+/// Sweep a set of SLAE sizes (the 37 sizes of Table 1 by default).
+pub fn sweep_all(sim: &GpuSimulator, ns: &[usize], cfg: &SweepConfig) -> Vec<SweepResult> {
+    ns.iter().map(|&n| sweep_n(sim, n, cfg)).collect()
+}
+
+/// The 37 SLAE sizes of Table 1.
+pub fn table1_sizes() -> Vec<usize> {
+    crate::data::paper::table1_rows().iter().map(|r| r.n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::spec::GpuCard;
+
+    #[test]
+    fn sweep_finds_an_argmin() {
+        let sim = GpuSimulator::new(GpuCard::Rtx2080Ti);
+        let cfg = SweepConfig::noise_free(Dtype::F64);
+        let r = sweep_n(&sim, 100_000, &cfg);
+        assert!(r.times.len() >= 11, "paper tested 11-18 sizes per N");
+        assert_eq!(r.time_at(r.opt_m), r.opt_time_us);
+        let ranking = r.ranking();
+        assert_eq!(ranking[0].0, r.opt_m);
+    }
+
+    #[test]
+    fn grid_respects_n_bound() {
+        let sim = GpuSimulator::new(GpuCard::Rtx2080Ti);
+        let cfg = SweepConfig::noise_free(Dtype::F64);
+        let r = sweep_n(&sim, 100, &cfg);
+        assert!(r.times.iter().all(|&(m, _)| m <= 100));
+    }
+
+    #[test]
+    fn observed_sweep_is_deterministic_per_seed() {
+        let sim = GpuSimulator::new(GpuCard::Rtx2080Ti);
+        let cfg = SweepConfig::observed(Dtype::F64, 11);
+        let a = sweep_n(&sim, 200_000, &cfg);
+        let b = sweep_n(&sim, 200_000, &cfg);
+        assert_eq!(a.opt_m, b.opt_m);
+        assert_eq!(a.times, b.times);
+    }
+
+    #[test]
+    fn noise_perturbs_but_stays_close() {
+        let sim = GpuSimulator::new(GpuCard::Rtx2080Ti);
+        let clean = sweep_n(&sim, 400_000, &SweepConfig::noise_free(Dtype::F64));
+        let noisy = sweep_n(&sim, 400_000, &SweepConfig::observed(Dtype::F64, 3));
+        for ((m1, t1), (m2, t2)) in clean.times.iter().zip(&noisy.times) {
+            assert_eq!(m1, m2);
+            assert!((t1 / t2 - 1.0).abs() < 0.05);
+        }
+    }
+}

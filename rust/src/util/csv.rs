@@ -1,0 +1,89 @@
+//! CSV writer for experiment dumps (EXPERIMENTS.md references the raw CSVs
+//! written next to bench output).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Streaming CSV writer with RFC-4180-style quoting.
+pub struct CsvWriter<W: Write> {
+    out: W,
+    cols: usize,
+}
+
+impl CsvWriter<std::io::BufWriter<std::fs::File>> {
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        let file = std::fs::File::create(path)?;
+        let mut w = CsvWriter {
+            out: std::io::BufWriter::new(file),
+            cols: header.len(),
+        };
+        w.write_row(header)?;
+        Ok(w)
+    }
+}
+
+impl<W: Write> CsvWriter<W> {
+    pub fn from_writer(out: W, header: &[&str]) -> Result<Self> {
+        let mut w = CsvWriter {
+            out,
+            cols: header.len(),
+        };
+        w.write_row(header)?;
+        Ok(w)
+    }
+
+    pub fn write_row<S: AsRef<str>>(&mut self, cells: &[S]) -> Result<()> {
+        assert_eq!(cells.len(), self.cols, "csv row width mismatch");
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&quote(c.as_ref()));
+        }
+        line.push('\n');
+        self.out.write_all(line.as_bytes())?;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+fn quote(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_quotes() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::from_writer(&mut buf, &["a", "b"]).unwrap();
+            w.write_row(&["1", "plain"]).unwrap();
+            w.write_row(&["x,y", "say \"hi\""]).unwrap();
+            w.finish().unwrap();
+        }
+        let s = String::from_utf8(buf).unwrap();
+        assert_eq!(s, "a,b\n1,plain\n\"x,y\",\"say \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "csv row width mismatch")]
+    fn rejects_ragged() {
+        let mut buf = Vec::new();
+        let mut w = CsvWriter::from_writer(&mut buf, &["a", "b"]).unwrap();
+        let _ = w.write_row(&["only-one"]);
+    }
+}

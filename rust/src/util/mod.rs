@@ -1,0 +1,19 @@
+//! Offline infrastructure substrates: seeded RNG, statistics, a JSON
+//! reader/writer (the artifact manifest is JSON), ASCII table rendering,
+//! CSV output, timing helpers and a tiny leveled logger.
+//!
+//! These exist because the build environment is fully offline — the usual
+//! crates (rand, serde, serde_json, prettytable, tracing) are not available,
+//! and the system-prompt contract is to build substrates rather than stub
+//! them.
+
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use rng::Pcg64;
+pub use timer::Stopwatch;

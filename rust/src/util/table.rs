@@ -1,0 +1,153 @@
+//! ASCII table rendering for benches and CLI reports (the repo's analogue
+//! of the paper's Tables 1–4).
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple ASCII table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    title: Option<String>,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            title: None,
+            aligns: vec![Align::Right; header.len()],
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_title(mut self, title: &str) -> Self {
+        self.title = Some(title.to_string());
+        self
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = h.chars().count();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        let sep = {
+            let mut s = String::from("+");
+            for wi in &w {
+                s.push_str(&"-".repeat(wi + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], aligns: &[Align]| {
+            let mut s = String::from("|");
+            for ((c, wi), a) in cells.iter().zip(&w).zip(aligns) {
+                let pad = wi - c.chars().count();
+                match a {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(c);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(c);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header, &vec![Align::Left; ncol]));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &self.aligns));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+/// Format a SLAE size the way the paper writes them: `2x10^5`, `4.5x10^3`.
+pub fn fmt_n(n: usize) -> String {
+    let x = n as f64;
+    let exp = x.log10().floor() as i32;
+    let mantissa = x / 10f64.powi(exp);
+    if (mantissa - 1.0).abs() < 1e-9 {
+        format!("10^{exp}")
+    } else if (mantissa - mantissa.round()).abs() < 1e-9 {
+        format!("{}x10^{exp}", mantissa.round() as i64)
+    } else {
+        format!("{mantissa:.1}x10^{exp}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["N", "opt m"]).align(0, Align::Left);
+        t.row(vec!["10^2".into(), "4".into()]);
+        t.row(vec!["2x10^7".into(), "64".into()]);
+        let s = t.render();
+        assert!(s.contains("| N      | opt m |"), "got:\n{s}");
+        assert!(s.contains("| 10^2   |     4 |"));
+        assert!(s.contains("| 2x10^7 |    64 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_n_paper_style() {
+        assert_eq!(fmt_n(100), "10^2");
+        assert_eq!(fmt_n(4500), "4.5x10^3");
+        assert_eq!(fmt_n(200_000), "2x10^5");
+        assert_eq!(fmt_n(100_000_000), "10^8");
+        assert_eq!(fmt_n(75_000), "7.5x10^4");
+    }
+}

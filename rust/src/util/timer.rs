@@ -1,0 +1,96 @@
+//! Timing helpers shared by the bench harness and the service metrics.
+
+use std::time::{Duration, Instant};
+
+/// A running stopwatch with lap support.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, Duration)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+            laps: Vec::new(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Record a named lap measured from the previous lap (or start).
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let total: Duration = self.laps.iter().map(|(_, d)| *d).sum();
+        let d = self.start.elapsed().saturating_sub(total);
+        self.laps.push((name.to_string(), d));
+        d
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+}
+
+/// Measure the wall-clock time of `f`, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Repeatedly run `f` until `min_time` has elapsed (at least `min_iters`),
+/// returning per-iteration seconds — the core of the bench harness.
+pub fn bench_loop(min_time: Duration, min_iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    let mut samples = Vec::new();
+    let t_start = Instant::now();
+    while samples.len() < min_iters || t_start.elapsed() < min_time {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 10_000_000 {
+            break;
+        }
+    }
+    samples
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn laps_sum_to_elapsed() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("b");
+        let total: Duration = sw.laps().iter().map(|(_, d)| *d).sum();
+        assert!(total <= sw.elapsed());
+        assert_eq!(sw.laps().len(), 2);
+    }
+
+    #[test]
+    fn bench_loop_runs_min_iters() {
+        let samples = bench_loop(Duration::from_millis(1), 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(samples.len() >= 5);
+    }
+}

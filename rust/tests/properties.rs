@@ -1,0 +1,164 @@
+//! Property-based tests (hand-rolled testkit) over the crate's core
+//! invariants — the Rust-side counterpart of python/tests/test_properties.py.
+
+use partisol::ml::{train_test_split, Dataset, Knn};
+use partisol::solver::generator::random_dd_system;
+use partisol::solver::partition::{assemble_interface, stage1_all};
+use partisol::solver::recursive::recursive_solve;
+use partisol::solver::residual::{max_abs_diff, max_abs_residual};
+use partisol::solver::{partition_solve, thomas_solve};
+use partisol::testkit::{default_cases, forall};
+use partisol::tuner::correction::correct_trend;
+use partisol::tuner::sweep::SweepResult;
+
+#[test]
+fn prop_partition_equals_thomas() {
+    forall(
+        0xA11CE,
+        default_cases(),
+        |g| {
+            let n = g.int(3, 20_000);
+            let m = g.int(3, 64);
+            let seed = g.rng.next_u64();
+            (n, m, seed)
+        },
+        |&(n, m, seed)| {
+            let mut rng = partisol::util::Pcg64::new(seed);
+            let sys = random_dd_system::<f64>(&mut rng, n, 0.3);
+            let want = thomas_solve(&sys).map_err(|e| e.to_string())?;
+            let got = partition_solve(&sys, m, 4).map_err(|e| e.to_string())?;
+            let diff = max_abs_diff(&got, &want);
+            if diff < 1e-8 {
+                Ok(())
+            } else {
+                Err(format!("n={n} m={m}: diff {diff}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_interface_inherits_diagonal_dominance() {
+    forall(
+        0xD0_D0,
+        default_cases(),
+        |g| {
+            let p = g.int(1, 200);
+            let m = g.int(3, 40);
+            (p, m, g.rng.next_u64())
+        },
+        |&(p, m, seed)| {
+            let mut rng = partisol::util::Pcg64::new(seed);
+            let sys = random_dd_system::<f64>(&mut rng, p * m, 0.5);
+            let mut iface = Vec::new();
+            stage1_all(&sys, m, 2, &mut iface).map_err(|e| e.to_string())?;
+            let isys = assemble_interface(&iface);
+            if isys.is_diagonally_dominant() {
+                Ok(())
+            } else {
+                Err(format!("interface lost dominance at p={p} m={m}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_recursion_depth_invariant() {
+    forall(
+        0xBEC_u64,
+        default_cases() / 2,
+        |g| {
+            let n = g.int(10, 30_000);
+            let depth = g.int(0, 4);
+            (n, depth, g.rng.next_u64())
+        },
+        |&(n, depth, seed)| {
+            let mut rng = partisol::util::Pcg64::new(seed);
+            let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let plan: Vec<usize> = std::iter::once(16)
+                .chain(std::iter::repeat_n(8, depth))
+                .collect();
+            let got = recursive_solve(&sys, &plan, 2).map_err(|e| e.to_string())?;
+            let res = max_abs_residual(&sys, &got);
+            if res < 1e-8 {
+                Ok(())
+            } else {
+                Err(format!("n={n} depth={depth}: residual {res}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_split_is_partition_and_knn_memorizes() {
+    forall(
+        0x5EED,
+        default_cases(),
+        |g| {
+            let n = g.int(8, 200);
+            let seed = g.rng.next_u64();
+            (n, seed)
+        },
+        |&(n, seed)| {
+            let xs: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            let ys: Vec<usize> = (0..n).map(|i| [4, 8, 16][i % 3]).collect();
+            let data = Dataset::new(xs.clone(), ys.clone()).map_err(|e| e.to_string())?;
+            let split = train_test_split(&data, 0.25, seed).map_err(|e| e.to_string())?;
+            // Partition invariant.
+            if split.train.len() + split.test.len() != n {
+                return Err("split sizes do not sum".into());
+            }
+            // k=1 memorizes its training set.
+            let knn = Knn::fit(&split.train.xs, &split.train.ys, 1).map_err(|e| e.to_string())?;
+            for (x, y) in split.train.xs.iter().zip(&split.train.ys) {
+                if knn.predict(*x) != *y {
+                    return Err(format!("1-NN failed to memorize x={x}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_trend_correction_monotone_and_within_grid() {
+    forall(
+        0x77E_u64,
+        default_cases(),
+        |g| {
+            // Random sweep landscapes over a fixed grid.
+            let grid = [4usize, 8, 16, 32, 64];
+            let rows = g.int(2, 12);
+            let mut sweeps = Vec::new();
+            for i in 0..rows {
+                let times: Vec<(usize, f64)> = grid
+                    .iter()
+                    .map(|&m| (m, g.f64(1.0, 2.0) * (1.0 + (m as f64 - 16.0).abs() / 64.0)))
+                    .collect();
+                let (opt_m, opt_t) = times
+                    .iter()
+                    .copied()
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .unwrap();
+                sweeps.push(SweepResult {
+                    n: (i + 1) * 1000,
+                    streams: 1,
+                    times,
+                    opt_m,
+                    opt_time_us: opt_t,
+                });
+            }
+            sweeps
+        },
+        |sweeps| {
+            let corrected = correct_trend(sweeps, 0.02);
+            if !corrected.windows(2).all(|w| w[0] <= w[1]) {
+                return Err(format!("not monotone: {corrected:?}"));
+            }
+            if !corrected.iter().all(|m| [4, 8, 16, 32, 64].contains(m)) {
+                return Err("corrected m outside grid".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,105 @@
+//! Integration tests over the PJRT runtime: the AOT Pallas artifacts must
+//! agree with the native Rust solvers to near machine precision.
+//!
+//! Skipped gracefully when `artifacts/` has not been built (`make
+//! artifacts`) so `cargo test` stays green in a fresh checkout.
+
+use partisol::runtime::executor::{pjrt_fused_solve, pjrt_partition_solve};
+use partisol::runtime::Runtime;
+use partisol::solver::generator::{random_dd_system, toeplitz_system};
+use partisol::solver::residual::{max_abs_diff, max_abs_residual};
+use partisol::solver::thomas_solve;
+use partisol::util::Pcg64;
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::new(Path::new("artifacts")) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP pjrt tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_thomas_across_m_and_sizes() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::new(10);
+    for &(n, m) in &[(128usize, 4usize), (1000, 8), (4096, 16), (10_000, 32), (65_536, 64)] {
+        let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+        let x = pjrt_partition_solve(&rt, &sys, m).unwrap();
+        let want = thomas_solve(&sys).unwrap();
+        assert!(
+            max_abs_diff(&x, &want) < 1e-9,
+            "n={n} m={m}: diff {}",
+            max_abs_diff(&x, &want)
+        );
+    }
+}
+
+#[test]
+fn pjrt_f32_path() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::new(11);
+    let sys = random_dd_system::<f32>(&mut rng, 5000, 1.0);
+    let x = pjrt_partition_solve(&rt, &sys, 16).unwrap();
+    assert!(max_abs_residual(&sys, &x) < 1e-3);
+}
+
+#[test]
+fn pjrt_sharding_past_largest_bucket() {
+    let Some(rt) = runtime() else { return };
+    // Largest stage1 bucket is p=2048; m=4 -> capacity 8192 unknowns per
+    // shard. N = 40_000 forces 5 shards with cross-shard couplings.
+    let mut rng = Pcg64::new(12);
+    let sys = random_dd_system::<f64>(&mut rng, 40_000, 0.5);
+    let x = pjrt_partition_solve(&rt, &sys, 4).unwrap();
+    let want = thomas_solve(&sys).unwrap();
+    assert!(max_abs_diff(&x, &want) < 1e-9);
+}
+
+#[test]
+fn pjrt_fused_artifact() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::new(13);
+    let sys = random_dd_system::<f64>(&mut rng, 2048, 0.8);
+    let x = pjrt_fused_solve(&rt, &sys, 8).unwrap();
+    let want = thomas_solve(&sys).unwrap();
+    assert!(max_abs_diff(&x, &want) < 1e-9);
+}
+
+#[test]
+fn pjrt_uneven_n_padding() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::new(14);
+    for n in [97usize, 1001, 4500, 12_345] {
+        let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+        let x = pjrt_partition_solve(&rt, &sys, 8).unwrap();
+        assert_eq!(x.len(), n);
+        let want = thomas_solve(&sys).unwrap();
+        assert!(max_abs_diff(&x, &want) < 1e-9, "n={n}");
+    }
+}
+
+#[test]
+fn pjrt_toeplitz_and_compile_caching() {
+    let Some(rt) = runtime() else { return };
+    let sys = toeplitz_system::<f64>(8192, 4.0);
+    let _ = pjrt_partition_solve(&rt, &sys, 32).unwrap();
+    let compiles_before = rt.compile_count();
+    // Same shapes again: no new compilations on the hot path.
+    let x = pjrt_partition_solve(&rt, &sys, 32).unwrap();
+    assert_eq!(rt.compile_count(), compiles_before);
+    assert!(max_abs_residual(&sys, &x) < 1e-10);
+}
+
+#[test]
+fn pjrt_rejects_unknown_m() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::new(15);
+    let sys = random_dd_system::<f64>(&mut rng, 1000, 0.5);
+    // m = 7 has no artifact variant.
+    let err = pjrt_partition_solve(&rt, &sys, 7).unwrap_err();
+    assert!(err.to_string().contains("no artifact variant"), "{err}");
+}
