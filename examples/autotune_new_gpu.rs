@@ -8,13 +8,14 @@
 
 use partisol::gpu::simulator::GpuSimulator;
 use partisol::gpu::spec::{Dtype, GpuCard};
+use partisol::plan::{BackendAvailability, Planner, SolveOptions};
 use partisol::tuner::correction::{correct_trend, corrections};
 use partisol::tuner::heuristic::{IntervalHeuristic, KnnHeuristic, MHeuristic};
 use partisol::tuner::streams::optimum_streams;
 use partisol::tuner::sweep::{sweep_all, table1_sizes, SweepConfig};
 use partisol::util::table::{fmt_n, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // The "new" card we just plugged in: an RTX 4080.
     let new_card = GpuCard::Rtx4080;
     let sim = GpuSimulator::new(new_card);
@@ -83,5 +84,25 @@ fn main() -> anyhow::Result<()> {
         "kNN vs interval agreement on the sweep grid: {agree}/{}",
         ns.len()
     );
+
+    // ---- step 5: deploy — the fitted heuristic in the planner, exactly
+    // as the coordinator would dispatch on this card.
+    let planner = Planner::with_heuristics(
+        Box::new(interval.clone()),
+        Box::new(interval),
+        BackendAvailability::native_only(),
+        new_card,
+    );
+    println!("\nplanner dispatch with the fitted {} heuristic:", new_card.name());
+    for n in [50_000usize, 2_000_000, 30_000_000] {
+        let plan = planner.plan(n, &SolveOptions::default());
+        println!(
+            "  N = {:>9}: m = {:>3}, backend = {}, simulated {:.3} ms",
+            fmt_n(n),
+            plan.m(),
+            plan.backend.name(),
+            plan.simulated_gpu_us / 1e3
+        );
+    }
     Ok(())
 }

@@ -10,7 +10,7 @@ use partisol::data::paper;
 use partisol::tuner::heuristic::KnnHeuristic;
 use partisol::util::table::{fmt_n, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let rows = paper::table1_rows();
     let ns: Vec<usize> = rows.iter().map(|r| r.n).collect();
     let corrected: Vec<usize> = rows.iter().map(|r| r.m_corrected).collect();

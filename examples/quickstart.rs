@@ -4,49 +4,63 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 //!
-//! Shows the three-layer path end-to-end: the ML heuristic picks the
-//! sub-system size m, Stage 1/3 run as AOT-compiled Pallas kernels on the
-//! PJRT CPU client, Stage 2 (the interface system) is solved host-side in
-//! Rust, and the solution is verified against the sequential Thomas
-//! baseline.
+//! Shows the three-layer path end-to-end through the planning pipeline:
+//! `Planner::plan` picks the sub-system size m and the backend, a
+//! `SolverBackend` executes the plan (Stage 1/3 as AOT-compiled Pallas
+//! kernels on the PJRT CPU client, Stage 2 host-side in Rust — or the
+//! native solver when artifacts are missing), and the solution is
+//! verified against the sequential Thomas baseline.
 
-use partisol::gpu::spec::Dtype;
-use partisol::runtime::executor::pjrt_partition_solve;
-use partisol::runtime::Runtime;
+use partisol::gpu::spec::{Dtype, GpuCard};
+use partisol::plan::{
+    Backend, BackendAvailability, NativeBackend, PjrtBackend, Planner, SolveOptions,
+    SolverBackend,
+};
+use partisol::runtime::{Manifest, Runtime};
 use partisol::solver::generator::random_dd_system;
 use partisol::solver::residual::{max_abs_diff, max_abs_residual};
-use partisol::solver::{partition_solve, thomas_solve};
-use partisol::tuner::heuristic::{IntervalHeuristic, MHeuristic};
+use partisol::solver::thomas_solve;
 use partisol::util::Pcg64;
 use std::path::Path;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n = 100_000;
     let mut rng = Pcg64::new(2025);
     let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
 
-    // 1. The paper's heuristic picks the optimum sub-system size.
-    let heuristic = IntervalHeuristic::paper(Dtype::F64);
-    let m = heuristic.opt_m(n);
-    println!("N = {n}: heuristic optimum sub-system size m = {m}");
+    // 1. The planner composes the paper's heuristics with the probed
+    //    backend availability into an explicit plan.
+    let avail = match Manifest::load(Path::new("artifacts")) {
+        Ok(man) => BackendAvailability::from_manifest(&man, Dtype::F64, true),
+        Err(_) => BackendAvailability::native_only(),
+    };
+    let planner = Planner::paper(avail, GpuCard::Rtx2080Ti);
+    let plan = planner.plan(n, &SolveOptions::default());
+    println!("{}\n", planner.explain(&plan));
 
-    // 2. Solve through the AOT Pallas artifacts on PJRT (falls back to the
-    //    native solver when artifacts are missing).
-    let x = match Runtime::new(Path::new("artifacts")) {
-        Ok(rt) => {
-            println!("backend: PJRT ({})", rt.platform_name());
-            pjrt_partition_solve(&rt, &sys, m)?
-        }
-        Err(e) => {
-            println!("backend: native (PJRT unavailable: {e})");
-            partition_solve(&sys, m, 4)?
+    // 2. Execute the plan on the planned backend (falling back to the
+    //    native solver when the PJRT runtime is unavailable).
+    let outcome = match plan.backend {
+        Backend::Pjrt => match Runtime::new(Path::new("artifacts")) {
+            Ok(rt) => {
+                println!("backend: PJRT ({})", rt.platform_name());
+                PjrtBackend::new(&rt).execute(&plan, &sys)?
+            }
+            Err(e) => {
+                println!("backend: native (PJRT unavailable: {e})");
+                NativeBackend::new(4).execute(&plan, &sys)?
+            }
+        },
+        _ => {
+            println!("backend: {}", plan.backend.name());
+            NativeBackend::new(4).execute(&plan, &sys)?
         }
     };
 
     // 3. Verify: residual + agreement with the sequential baseline.
-    let residual = max_abs_residual(&sys, &x);
+    let residual = max_abs_residual(&sys, &outcome.x);
     let baseline = thomas_solve(&sys)?;
-    let diff = max_abs_diff(&x, &baseline);
+    let diff = max_abs_diff(&outcome.x, &baseline);
     println!("max |Ax - d|          = {residual:.3e}");
     println!("max |x - x_thomas|    = {diff:.3e}");
     assert!(residual < 1e-9 && diff < 1e-9);

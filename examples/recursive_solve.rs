@@ -8,26 +8,27 @@
 
 use partisol::gpu::simulator::GpuSimulator;
 use partisol::gpu::spec::{Dtype, GpuCard};
-use partisol::recursion::planner::plan_for;
+use partisol::plan::{BackendAvailability, NativeBackend, Planner, SolverBackend};
 use partisol::recursion::rsteps::{published_opt_r, RStepsModel};
 use partisol::solver::generator::random_dd_system;
-use partisol::solver::recursive::recursive_solve;
 use partisol::solver::residual::max_abs_residual;
 use partisol::tuner::streams::optimum_streams;
 use partisol::util::Pcg64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // Real numerics at a laptop-friendly size: every recursion depth must
     // produce the same solution.
     let n = 200_000;
     let mut rng = Pcg64::new(31);
     let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+    let planner = Planner::paper(BackendAvailability::native_only(), GpuCard::RtxA5000);
+    let backend = NativeBackend::new(4);
     println!("solving N = {n} natively at every recursion depth:");
     for r in 0..=4 {
-        let plan = plan_for(n, r, Dtype::F64);
-        let x = recursive_solve(&sys, &plan, 4)?;
-        let res = max_abs_residual(&sys, &x);
-        println!("  R = {r}: plan {plan:?}  max|Ax-d| = {res:.3e}");
+        let plan = planner.plan_recursive(n, r, Dtype::F64);
+        let out = backend.execute(&plan, &sys)?;
+        let res = max_abs_residual(&sys, &out.x);
+        println!("  R = {r}: plan {:?}  max|Ax-d| = {res:.3e}", plan.levels);
         assert!(res < 1e-9);
     }
 
@@ -39,9 +40,11 @@ fn main() -> anyhow::Result<()> {
     println!("\nsimulated GPU times at N = {n_big} [RTX A5000]:");
     let mut times = Vec::new();
     for r in 0..=4 {
-        let plan = plan_for(n_big, r, Dtype::F64);
-        let t = sim.solve_plan(n_big, &plan, streams, Dtype::F64).total_ms();
-        println!("  R = {r}: plan {plan:?}  {t:.3} ms");
+        let plan = planner.plan_recursive(n_big, r, Dtype::F64);
+        let t = sim
+            .solve_plan(n_big, &plan.levels, streams, Dtype::F64)
+            .total_ms();
+        println!("  R = {r}: plan {:?}  {t:.3} ms", plan.levels);
         times.push(t);
     }
     let best_r = (0..times.len()).min_by(|&a, &b| times[a].partial_cmp(&times[b]).unwrap());

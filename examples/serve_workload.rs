@@ -15,7 +15,7 @@ use partisol::util::stats::{mean, percentile};
 use partisol::util::Pcg64;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let requests = 128usize;
     let (min_n, max_n) = (1_000usize, 300_000usize);
 
@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     let mut worst_res: f64 = 0.0;
     let mut by_backend = std::collections::BTreeMap::<&str, usize>::new();
     for rx in rxs {
-        let resp = rx.recv()?.map_err(anyhow::Error::msg)?;
+        let resp = rx.recv()?.map_err(partisol::Error::Service)?;
         lat_ms.push((resp.queue_us + resp.exec_us) / 1e3);
         sim_gpu_ms.push(resp.simulated_gpu_us / 1e3);
         worst_res = worst_res.max(resp.residual.unwrap_or(0.0));
@@ -75,6 +75,10 @@ fn main() -> anyhow::Result<()> {
     );
     println!("worst residual    : {worst_res:.3e}");
     println!("backends          : {by_backend:?} in {} batches", m.batches);
+    println!(
+        "plan cache        : {} hits / {} misses (repeated sizes skip kNN + occupancy work)",
+        m.plan_cache_hits, m.plan_cache_misses
+    );
     println!(
         "simulated GPU cost: mean {:.3} ms/solve (what this workload would cost on the paper's 2080 Ti)",
         mean(&sim_gpu_ms)

@@ -39,14 +39,16 @@ fn run_workload(cfg: Config, label: &str, requests: usize) {
     let wall = t0.elapsed().as_secs_f64();
     let m = svc.metrics();
     println!(
-        "{label}: {ok}/{requests} ok, {:.1} req/s | e2e p50 {:.1} ms p99 {:.1} ms | batches {} | pjrt {} native {} thomas {}",
+        "{label}: {ok}/{requests} ok, {:.1} req/s | e2e p50 {:.1} ms p99 {:.1} ms | batches {} | pjrt {} native {} thomas {} | plan cache {}h/{}m",
         ok as f64 / wall,
         m.p50_e2e_us / 1e3,
         m.p99_e2e_us / 1e3,
         m.batches,
         m.pjrt_solves,
         m.native_solves,
-        m.thomas_solves
+        m.thomas_solves,
+        m.plan_cache_hits,
+        m.plan_cache_misses
     );
     svc.shutdown();
 }

@@ -1,8 +1,9 @@
-//! PJRT runtime hot-path microbenchmarks (EXPERIMENTS.md §Perf, L3):
-//! artifact routing, executable-cache hits, literal construction, Stage-1
-//! execution and the full PJRT partition solve.
+//! Runtime hot-path microbenchmarks (EXPERIMENTS.md §Perf, L3): plan
+//! cache hit vs miss, artifact routing, executable-cache hits, literal
+//! construction, Stage-1 execution and the full PJRT partition solve.
 
-use partisol::gpu::spec::Dtype;
+use partisol::gpu::spec::{Dtype, GpuCard};
+use partisol::plan::{BackendAvailability, PlanCache, PlanKey, Planner, SolveOptions};
 use partisol::runtime::artifact::StageKind;
 use partisol::runtime::executor::pjrt_partition_solve;
 use partisol::runtime::pad::{to_blocks, BlockLayout};
@@ -14,11 +15,63 @@ use partisol::util::Pcg64;
 use std::path::Path;
 use std::time::Duration;
 
+/// Plan-cache effect on the serve hot path: a cache hit must be far
+/// cheaper than a full kNN + occupancy-model + shard-layout planning
+/// pass. Runs without artifacts, so it is always part of the trajectory.
+fn bench_plan_cache() {
+    let avail = BackendAvailability::with_pjrt_ms(vec![4, 8, 16, 32, 64], true);
+    let planner = Planner::paper(avail, GpuCard::Rtx2080Ti);
+    let fingerprint = planner.fingerprint();
+    let opts = SolveOptions::default();
+
+    // Uncached planning cost (the work a miss pays on top of the lookup).
+    let mut n = 1_000usize;
+    let samples = bench_loop(Duration::from_millis(200), 1000, || {
+        n = if n > 40_000_000 { 1_000 } else { n + 97 };
+        let _ = std::hint::black_box(planner.plan(n, &opts));
+    });
+    println!("plan (uncached):        {:>10.0} ns", median(&samples) * 1e9);
+
+    // Cache miss: lookup + plan + insert, unique n per iteration.
+    let cache = PlanCache::new(1 << 16);
+    let mut n = 1_000usize;
+    let samples = bench_loop(Duration::from_millis(200), 1000, || {
+        n += 97;
+        let key = PlanKey {
+            n,
+            dtype: Dtype::F64,
+            planner: fingerprint,
+        };
+        let _ = std::hint::black_box(cache.get_or_insert_with(key, || planner.plan(n, &opts)));
+    });
+    let t_miss = median(&samples);
+    println!("plan cache miss:        {:>10.0} ns", t_miss * 1e9);
+
+    // Cache hit: the steady state of a serve workload with repeated sizes.
+    let key = PlanKey {
+        n: 123_456,
+        dtype: Dtype::F64,
+        planner: fingerprint,
+    };
+    let _ = cache.get_or_insert_with(key, || planner.plan(123_456, &opts));
+    let samples = bench_loop(Duration::from_millis(200), 1000, || {
+        let _ = std::hint::black_box(cache.get_or_insert_with(key, || planner.plan(123_456, &opts)));
+    });
+    let t_hit = median(&samples);
+    println!(
+        "plan cache hit:         {:>10.0} ns ({:.1}x faster than a miss)",
+        t_hit * 1e9,
+        t_miss / t_hit
+    );
+}
+
 fn main() {
+    bench_plan_cache();
+
     let rt = match Runtime::new(Path::new("artifacts")) {
         Ok(rt) => rt,
         Err(e) => {
-            println!("SKIP: artifacts unavailable ({e}); run `make artifacts` first");
+            println!("SKIP pjrt sections: artifacts unavailable ({e}); run `make artifacts` first");
             return;
         }
     };

@@ -2,6 +2,8 @@
 //! partition method across sizes and thread counts (EXPERIMENTS.md §Perf,
 //! L3 targets: Thomas >= 1 elt/ns at cache-resident sizes).
 
+use partisol::gpu::spec::GpuCard;
+use partisol::plan::{BackendAvailability, Planner, SolveOptions};
 use partisol::solver::generator::random_dd_system;
 use partisol::solver::partition::{partition_solve_with_workspace, PartitionWorkspace};
 use partisol::solver::thomas::{thomas_solve_with_scratch, ThomasScratch};
@@ -12,10 +14,12 @@ use std::time::Duration;
 
 fn main() {
     let mut rng = Pcg64::new(1);
-    println!("== native solver benchmarks ==\n");
+    // Per-size m comes from the production planner, not a hardcoded guess.
+    let planner = Planner::paper(BackendAvailability::native_only(), GpuCard::Rtx2080Ti);
+    println!("== native solver benchmarks (m from Planner::plan) ==\n");
     println!(
-        "{:>10} {:>14} {:>12} | {:>14} {:>10} {:>9}",
-        "N", "thomas ms", "Melem/s", "partition ms", "Melem/s", "threads"
+        "{:>10} {:>4} {:>14} {:>12} | {:>14} {:>10} {:>9}",
+        "N", "m", "thomas ms", "Melem/s", "partition ms", "Melem/s", "threads"
     );
     for n in [10_000usize, 100_000, 1_000_000, 10_000_000] {
         let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
@@ -28,14 +32,15 @@ fn main() {
 
         let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
         let mut ws = PartitionWorkspace::new();
-        let m = 32;
+        let m = planner.plan(n, &SolveOptions::default()).m();
         let samples = bench_loop(Duration::from_millis(300), 3, || {
             let _ = partition_solve_with_workspace(&sys, m, threads, &mut ws).unwrap();
         });
         let t_part = median(&samples);
         println!(
-            "{:>10} {:>14.3} {:>12.1} | {:>14.3} {:>10.1} {:>9}",
+            "{:>10} {:>4} {:>14.3} {:>12.1} | {:>14.3} {:>10.1} {:>9}",
             n,
+            m,
             t_thomas * 1e3,
             n as f64 / t_thomas / 1e6,
             t_part * 1e3,

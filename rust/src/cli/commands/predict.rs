@@ -1,13 +1,12 @@
-//! `partisol predict` — heuristic predictions for one SLAE size: optimum
-//! sub-system size, stream count, recursion depth and per-level plan.
+//! `partisol predict` — heuristic predictions for one SLAE size, straight
+//! from the planning pipeline: optimum sub-system size, stream count,
+//! recursion depth, the per-level `SolvePlan`, and its explanation.
 
 use crate::cli::args::{parse_dtype, Args};
 use crate::error::Result;
-use crate::gpu::spec::Dtype;
-use crate::recursion::planner::plan_with_heuristic;
+use crate::gpu::spec::{Dtype, GpuCard};
+use crate::plan::{BackendAvailability, Planner};
 use crate::recursion::rsteps::published_opt_r;
-use crate::tuner::heuristic::{IntervalHeuristic, MHeuristic};
-use crate::tuner::streams::optimum_streams;
 use crate::util::table::fmt_n;
 
 const HELP: &str = "\
@@ -27,13 +26,14 @@ pub fn run(argv: &[String]) -> Result<()> {
     let n = args.get_usize("n", 1_000_000)?;
     let dtype = args.get("dtype").map(parse_dtype).transpose()?.unwrap_or(Dtype::F64);
 
-    let h = IntervalHeuristic::paper(dtype);
+    let planner = Planner::paper(BackendAvailability::native_only(), GpuCard::Rtx2080Ti);
     let r = published_opt_r(n);
-    let plan = plan_with_heuristic(n, r, &h);
+    let plan = planner.plan_recursive(n, r, dtype);
     println!("N = {} ({n}), dtype {}", fmt_n(n), dtype.name());
-    println!("  optimum sub-system size m : {}", h.opt_m(n));
-    println!("  optimum CUDA streams      : {}", optimum_streams(n));
+    println!("  optimum sub-system size m : {}", plan.m());
+    println!("  optimum CUDA streams      : {}", plan.streams);
     println!("  optimum recursive steps R : {r}");
-    println!("  per-level plan [m0..mR]   : {plan:?}");
+    println!("  per-level plan [m0..mR]   : {:?}", plan.levels);
+    println!("{}", planner.explain(&plan));
     Ok(())
 }

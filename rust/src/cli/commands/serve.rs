@@ -87,6 +87,10 @@ pub fn run(argv: &[String]) -> Result<()> {
         "backpressure       : {} rejected",
         m.rejected_backpressure
     );
+    println!(
+        "plan cache         : {} hits / {} misses",
+        m.plan_cache_hits, m.plan_cache_misses
+    );
     svc.shutdown();
     Ok(())
 }

@@ -4,6 +4,7 @@ use crate::cli::args::{parse_card, parse_dtype, Args};
 use crate::error::Result;
 use crate::gpu::simulator::GpuSimulator;
 use crate::gpu::spec::{Dtype, GpuCard};
+use crate::plan::{BackendAvailability, Planner, SolveOptions};
 use crate::tuner::streams::optimum_streams;
 use crate::util::table::{fmt_n, Table};
 
@@ -80,5 +81,23 @@ pub fn run(argv: &[String]) -> Result<()> {
     }
     println!("{}", table.render());
     println!("optimum m = {} ({:.4} ms)", best.0, best.1 / 1e3);
+
+    // What the production planner would dispatch for this size on this
+    // card (heuristic choice vs the brute-force landscape above).
+    let planner = Planner::paper(BackendAvailability::native_only(), card);
+    let plan = planner.plan(
+        n,
+        &SolveOptions {
+            dtype,
+            ..Default::default()
+        },
+    );
+    println!(
+        "planner dispatch: m = {}, backend = {}, streams = {} ({})",
+        plan.m(),
+        plan.backend.name(),
+        plan.streams,
+        plan.heuristic
+    );
     Ok(())
 }

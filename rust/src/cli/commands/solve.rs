@@ -1,14 +1,17 @@
-//! `partisol solve` — generate an SLAE and solve it end-to-end.
+//! `partisol solve` — generate an SLAE and solve it end-to-end through
+//! the planning pipeline: `Planner::plan` picks sub-system size and
+//! backend, a `SolverBackend` executes the plan.
 
 use crate::cli::args::{parse_dtype, Args};
 use crate::error::Result;
-use crate::gpu::spec::Dtype;
-use crate::runtime::executor::pjrt_partition_solve;
-use crate::runtime::Runtime;
+use crate::gpu::spec::{Dtype, GpuCard};
+use crate::plan::{
+    Backend, BackendAvailability, NativeBackend, PjrtBackend, Planner, SolveOptions,
+    SolverBackend,
+};
+use crate::runtime::{Manifest, Runtime};
 use crate::solver::generator::random_dd_system;
 use crate::solver::residual::max_abs_residual;
-use crate::solver::{partition_solve, thomas_solve};
-use crate::tuner::heuristic::{IntervalHeuristic, MHeuristic};
 use crate::util::table::fmt_n;
 use crate::util::{Pcg64, Stopwatch};
 use std::path::Path;
@@ -20,23 +23,21 @@ OPTIONS:
     --n <N>             SLAE size (default 1e5)
     --m <m>             sub-system size (default: tuned heuristic)
     --dtype <d>         f64 | f32 (default f64)
-    --backend <b>       pjrt | native | thomas (default pjrt, falls back)
+    --backend <b>       pjrt | native | thomas (default: planner's choice)
     --artifacts <dir>   artifact directory (default artifacts)
     --seed <s>          system generator seed (default 42)
     --threads <t>       native solver threads (default: all cores)
+    --explain           print the chosen SolvePlan before solving
 ";
 
 pub fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["help"])?;
+    let args = Args::parse(argv, &["help", "explain"])?;
     if args.has("help") {
         print!("{HELP}");
         return Ok(());
     }
     let n = args.get_usize("n", 100_000)?;
     let dtype = args.get("dtype").map(parse_dtype).transpose()?.unwrap_or(Dtype::F64);
-    let h = IntervalHeuristic::paper(dtype);
-    let m = args.get_usize("m", h.opt_m(n))?;
-    let backend = args.get("backend").unwrap_or("pjrt").to_string();
     let artifacts = args.get("artifacts").unwrap_or("artifacts").to_string();
     let seed = args.get_u64("seed", 42)?;
     let threads = args.get_usize(
@@ -44,29 +45,61 @@ pub fn run(argv: &[String]) -> Result<()> {
         std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4),
     )?;
 
+    // One decision layer: probe what backends exist, then plan.
+    let avail = match Manifest::load(Path::new(&artifacts)) {
+        Ok(man) => BackendAvailability::from_manifest(&man, dtype, true),
+        Err(_) => BackendAvailability::native_only(),
+    };
+    let planner = Planner::paper(avail, GpuCard::Rtx2080Ti);
+    let opts = SolveOptions {
+        dtype,
+        m_override: args.get("m").map(|_| args.get_usize("m", 0)).transpose()?,
+        backend_override: args.get("backend").map(Backend::parse).transpose()?,
+        compute_residual: true,
+    };
+    let plan = planner.plan(n, &opts);
+    if let Some(want) = opts.m_override {
+        if plan.m() != want {
+            eprintln!(
+                "note: m = {want} has no PJRT artifact; snapped to m = {} \
+                 (pass --backend native for the exact size)",
+                plan.m()
+            );
+        }
+    }
+    if args.has("explain") {
+        println!("{}\n", planner.explain(&plan));
+    }
+
     let mut rng = Pcg64::new(seed);
-    println!("N = {} ({n}), m = {m} ({}), dtype {}", fmt_n(n), h.name(), dtype.name());
+    println!(
+        "N = {} ({n}), m = {} ({}), dtype {}",
+        fmt_n(n),
+        plan.m(),
+        plan.heuristic,
+        dtype.name()
+    );
 
     let mut sw = Stopwatch::new();
     let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
     sw.lap("generate");
 
-    let (x, used) = match backend.as_str() {
-        "thomas" => (thomas_solve(&sys)?, "thomas"),
-        "native" => (partition_solve(&sys, m, threads)?, "native"),
-        _ => match Runtime::new(Path::new(&artifacts)) {
-            Ok(rt) => (pjrt_partition_solve(&rt, &sys, m)?, "pjrt"),
+    let outcome = match plan.backend {
+        Backend::Pjrt => match Runtime::new(Path::new(&artifacts)) {
+            Ok(rt) => PjrtBackend::new(&rt).execute(&plan, &sys)?,
             Err(e) => {
                 eprintln!("pjrt unavailable ({e}); using native solver");
-                (partition_solve(&sys, m, threads)?, "native-fallback")
+                NativeBackend::new(threads).execute(&plan, &sys)?
             }
         },
+        _ => NativeBackend::new(threads).execute(&plan, &sys)?,
     };
     let solve_t = sw.lap("solve");
+    let x = outcome.x;
     let res = max_abs_residual(&sys, &x);
     sw.lap("verify");
 
-    println!("backend          : {used}");
+    println!("backend          : {}", outcome.backend.name());
     println!("solve wall time  : {:.3} ms", solve_t.as_secs_f64() * 1e3);
     println!("max|Ax - d|      : {res:.3e}");
     println!("x[0..4]          : {:?}", &x[..4.min(x.len())]);

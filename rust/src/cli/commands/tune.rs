@@ -5,8 +5,9 @@ use crate::cli::args::{parse_card, parse_dtype, Args};
 use crate::error::Result;
 use crate::gpu::simulator::GpuSimulator;
 use crate::gpu::spec::{Dtype, GpuCard};
+use crate::plan::{BackendAvailability, Planner, SolveOptions};
 use crate::tuner::correction::{correct_trend, corrections};
-use crate::tuner::heuristic::{IntervalHeuristic, KnnHeuristic, MHeuristic};
+use crate::tuner::heuristic::{IntervalHeuristic, KnnHeuristic};
 use crate::tuner::sweep::{sweep_all, table1_sizes, SweepConfig};
 use crate::util::table::{fmt_n, Table};
 
@@ -76,6 +77,32 @@ pub fn run(argv: &[String]) -> Result<()> {
         "kNN (observed):  k={} test-accuracy {:.2} null {:.2}",
         rep_obs.best_k, rep_obs.test_accuracy, rep_obs.null_accuracy
     );
-    let _ = interval.opt_m(1);
+
+    // Deployment preview: the freshly fitted heuristic in production
+    // position — the same Planner the coordinator dispatches through.
+    let planner = Planner::with_heuristics(
+        Box::new(interval.clone()),
+        Box::new(interval.clone()),
+        BackendAvailability::native_only(),
+        card,
+    );
+    println!("\ndeployment preview (Planner::plan with the fitted heuristic):");
+    for n in [10_000usize, 1_000_000, 20_000_000] {
+        let plan = planner.plan(
+            n,
+            &SolveOptions {
+                dtype,
+                ..Default::default()
+            },
+        );
+        println!(
+            "  N = {:>10}: m = {:>3}, backend = {}, streams = {:>2}, simulated {:.3} ms",
+            fmt_n(n),
+            plan.m(),
+            plan.backend.name(),
+            plan.streams,
+            plan.simulated_gpu_us / 1e3
+        );
+    }
     Ok(())
 }

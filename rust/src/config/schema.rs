@@ -26,6 +26,8 @@ pub struct Config {
     pub queue_depth: usize,
     /// Max requests batched into one executor call.
     pub max_batch: usize,
+    /// Capacity of the serve-path plan cache (0 disables caching).
+    pub plan_cache: usize,
     pub dtype: Dtype,
     pub heuristic: HeuristicKind,
     /// Artifact directory (HLO text + manifest.json).
@@ -44,6 +46,7 @@ impl Default for Config {
             workers: 2,
             queue_depth: 256,
             max_batch: 8,
+            plan_cache: 512,
             dtype: Dtype::F64,
             heuristic: HeuristicKind::PaperInterval,
             artifacts_dir: "artifacts".to_string(),
@@ -77,6 +80,9 @@ impl Config {
         }
         if let Some(v) = t.get("service.max_batch") {
             cfg.max_batch = int_field(v, "service.max_batch")?;
+        }
+        if let Some(v) = t.get("service.plan_cache") {
+            cfg.plan_cache = int_field(v, "service.plan_cache")?;
         }
         if let Some(v) = t.get("service.dtype") {
             cfg.dtype = match v.as_str() {
@@ -181,6 +187,13 @@ mod tests {
         assert_eq!(c.heuristic, HeuristicKind::Knn);
         assert_eq!(c.card, GpuCard::Rtx4080);
         assert!(!c.native_fallback);
+    }
+
+    #[test]
+    fn plan_cache_size_is_configurable() {
+        let c = Config::from_str("[service]\nplan_cache = 0").unwrap();
+        assert_eq!(c.plan_cache, 0);
+        assert_eq!(Config::default().plan_cache, 512);
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Dynamic batching: same-(m, dtype, backend) requests are concatenated
-//! into one blocked execution.
+//! Dynamic batching: requests sharing an execution shape — the
+//! `(m, backend, dtype)` of their [`Route`] — are concatenated into one
+//! blocked execution.
 //!
 //! Soundness: every request's system has zero first/last couplings
 //! (`a[0] = c[n-1] = 0`), so concatenated systems do not couple — Stage 1
@@ -82,13 +83,18 @@ pub fn concat_systems(systems: &[&TriSystem<f64>], m: usize) -> (TriSystem<f64>,
 mod tests {
     use super::*;
     use crate::coordinator::request::Backend;
+    use crate::gpu::spec::Dtype;
     use crate::solver::generator::random_dd_system;
     use crate::solver::residual::max_abs_diff;
     use crate::solver::{partition_solve, thomas_solve};
     use crate::util::Pcg64;
 
     fn route(m: usize, backend: Backend) -> Route {
-        Route { m, backend }
+        Route {
+            m,
+            backend,
+            dtype: Dtype::F64,
+        }
     }
 
     #[test]
@@ -115,6 +121,27 @@ mod tests {
             RoutedJob {
                 job: 1,
                 route: route(64, Backend::Pjrt),
+            },
+        ];
+        assert_eq!(form_batches(jobs, 8).len(), 2);
+    }
+
+    #[test]
+    fn different_dtype_never_mixes() {
+        // Mixed-precision batches would silently execute in the first
+        // job's dtype; the route's dtype keeps them apart.
+        let jobs = vec![
+            RoutedJob {
+                job: 0,
+                route: route(32, Backend::Pjrt),
+            },
+            RoutedJob {
+                job: 1,
+                route: Route {
+                    m: 32,
+                    backend: Backend::Pjrt,
+                    dtype: Dtype::F32,
+                },
             },
         ];
         assert_eq!(form_batches(jobs, 8).len(), 2);

@@ -67,7 +67,8 @@ pub struct Metrics {
     pub e2e_latency: Histogram,
 }
 
-/// A point-in-time copy for reporting.
+/// A point-in-time copy for reporting. The plan-cache counters live in
+/// the router's cache; `Service::metrics` fills them in.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
@@ -78,6 +79,8 @@ pub struct MetricsSnapshot {
     pub pjrt_solves: u64,
     pub native_solves: u64,
     pub thomas_solves: u64,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
     pub mean_e2e_us: f64,
     pub p50_e2e_us: f64,
     pub p99_e2e_us: f64,
@@ -85,6 +88,16 @@ pub struct MetricsSnapshot {
 }
 
 impl Metrics {
+    /// Count `n` solves executed by `backend`.
+    pub fn record_backend(&self, backend: crate::plan::Backend, n: u64) {
+        match backend {
+            crate::plan::Backend::Pjrt => &self.pjrt_solves,
+            crate::plan::Backend::Native => &self.native_solves,
+            crate::plan::Backend::Thomas => &self.thomas_solves,
+        }
+        .fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -95,6 +108,8 @@ impl Metrics {
             pjrt_solves: self.pjrt_solves.load(Ordering::Relaxed),
             native_solves: self.native_solves.load(Ordering::Relaxed),
             thomas_solves: self.thomas_solves.load(Ordering::Relaxed),
+            plan_cache_hits: 0,
+            plan_cache_misses: 0,
             mean_e2e_us: self.e2e_latency.mean_us(),
             p50_e2e_us: self.e2e_latency.percentile_us(50.0),
             p99_e2e_us: self.e2e_latency.percentile_us(99.0),
@@ -136,5 +151,18 @@ mod tests {
         assert_eq!(s.submitted, 3);
         assert_eq!(s.completed, 2);
         assert!(s.mean_e2e_us > 0.0);
+    }
+
+    #[test]
+    fn record_backend_routes_to_the_right_counter() {
+        use crate::plan::Backend;
+        let m = Metrics::default();
+        m.record_backend(Backend::Pjrt, 3);
+        m.record_backend(Backend::Native, 2);
+        m.record_backend(Backend::Thomas, 1);
+        let s = m.snapshot();
+        assert_eq!(s.pjrt_solves, 3);
+        assert_eq!(s.native_solves, 2);
+        assert_eq!(s.thomas_solves, 1);
     }
 }

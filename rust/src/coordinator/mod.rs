@@ -11,16 +11,20 @@
 //!   Receiver<SolveResponse>
 //! ```
 //!
-//! * [`request`] — request/response types.
-//! * [`router`] — picks sub-system size (via the tuned heuristic — the
-//!   paper's contribution in production position) and backend/bucket.
+//! * [`request`] — request/response types (backend + options re-exported
+//!   from [`crate::plan`]).
+//! * [`router`] — a [`crate::plan::Planner`] (the tuned heuristic — the
+//!   paper's contribution in production position) behind an LRU
+//!   [`crate::plan::PlanCache`]; emits explicit `SolvePlan`s.
 //! * [`batcher`] — groups same-(m, dtype) requests and *concatenates*
 //!   their systems into one blocked execution: independent tridiagonal
 //!   systems do not couple, so one fused Stage-1/2/3 pass solves the whole
 //!   batch (tested in tests/coordinator_e2e.rs).
 //! * [`service`] — bounded-queue threaded service with a PJRT device
-//!   thread (xla handles are thread-confined) and a native worker pool.
-//! * [`metrics`] — counters + latency histogram.
+//!   thread (xla handles are thread-confined) and a native worker pool;
+//!   execution goes through [`crate::plan::SolverBackend`] impls.
+//! * [`metrics`] — counters (incl. plan-cache hit/miss) + latency
+//!   histogram.
 
 pub mod batcher;
 pub mod metrics;

@@ -1,51 +1,10 @@
-//! Solve-service request/response types.
+//! Solve-service request/response types. The backend enum and the
+//! per-request options live in [`crate::plan`] (the planning layer owns
+//! them); they are re-exported here for the service API.
 
-use crate::gpu::spec::Dtype;
 use crate::solver::TriSystem;
 
-/// Which execution backend handled (or should handle) a request.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Backend {
-    /// AOT Pallas artifacts on the PJRT CPU client (the three-layer path).
-    Pjrt,
-    /// Native Rust partition solver (threaded CPU).
-    Native,
-    /// Sequential Thomas (tiny systems, or baseline comparisons).
-    Thomas,
-}
-
-impl Backend {
-    pub fn name(self) -> &'static str {
-        match self {
-            Backend::Pjrt => "pjrt",
-            Backend::Native => "native",
-            Backend::Thomas => "thomas",
-        }
-    }
-}
-
-/// Per-request options.
-#[derive(Clone, Debug)]
-pub struct SolveOptions {
-    pub dtype: Dtype,
-    /// Force a sub-system size instead of the heuristic.
-    pub m_override: Option<usize>,
-    /// Force a backend instead of the router's choice.
-    pub backend_override: Option<Backend>,
-    /// Verify the solution and include the residual in the response.
-    pub compute_residual: bool,
-}
-
-impl Default for SolveOptions {
-    fn default() -> Self {
-        SolveOptions {
-            dtype: Dtype::F64,
-            m_override: None,
-            backend_override: None,
-            compute_residual: true,
-        }
-    }
-}
+pub use crate::plan::{Backend, SolveOptions};
 
 /// One solve request (f64 payload; f32 execution casts internally).
 #[derive(Clone, Debug)]
@@ -93,6 +52,7 @@ pub struct SolveResponse {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gpu::spec::Dtype;
     use crate::solver::generator::random_dd_system;
     use crate::util::Pcg64;
 

@@ -1,119 +1,77 @@
-//! Request routing: sub-system size via the tuned heuristic (the paper's
-//! contribution in its production position) + backend/bucket choice.
+//! Request routing, rebuilt on the unified planning pipeline: the router
+//! is a [`Planner`] (the paper's contribution in its production position)
+//! plus an LRU [`PlanCache`] so repeated SLAE sizes skip the kNN lookup,
+//! occupancy simulation and shard-layout work on the serve hot path.
 
 use super::request::{Backend, SolveOptions};
-use crate::config::{Config, HeuristicKind};
+use crate::config::Config;
 use crate::error::Result;
-use crate::gpu::simulator::GpuSimulator;
 use crate::gpu::spec::Dtype;
-use crate::tuner::heuristic::{IntervalHeuristic, KnnHeuristic, MHeuristic};
-use crate::tuner::streams::optimum_streams;
+use crate::plan::{BackendAvailability, PlanCache, PlanKey, Planner, SolvePlan};
+use std::sync::Arc;
 
-/// The execution plan the router assigns to a request.
+/// The execution shape the batcher groups by: same (m, backend, dtype)
+/// requests can share one blocked execution.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Route {
     pub m: usize,
     pub backend: Backend,
+    pub dtype: Dtype,
 }
 
-/// Router: heuristics per dtype + the m values the artifacts support.
+impl Route {
+    pub fn of_plan(plan: &SolvePlan) -> Route {
+        Route {
+            m: plan.m(),
+            backend: plan.backend,
+            dtype: plan.dtype,
+        }
+    }
+}
+
+/// Router: a planner plus the serve-path plan cache.
 pub struct Router {
-    h_f64: Box<dyn MHeuristic>,
-    h_f32: Box<dyn MHeuristic>,
-    /// m values with stage1+stage3 artifacts (ascending); empty = no PJRT.
-    pjrt_m: Vec<usize>,
-    native_fallback: bool,
-    sim: GpuSimulator,
+    planner: Planner,
+    cache: PlanCache,
 }
 
 impl Router {
-    pub fn from_config(cfg: &Config, pjrt_m: Vec<usize>) -> Result<Router> {
-        let make = |dtype: Dtype| -> Result<Box<dyn MHeuristic>> {
-            Ok(match cfg.heuristic {
-                HeuristicKind::PaperInterval => Box::new(IntervalHeuristic::paper(dtype)),
-                HeuristicKind::Knn => {
-                    // Fit the kNN on the paper's corrected data (full fit,
-                    // deployment mode, k = 1 as GridSearchCV selects).
-                    let rows = crate::data::paper::table1_rows();
-                    let ns: Vec<usize> = rows.iter().map(|r| r.n).collect();
-                    let ms: Vec<usize> = match dtype {
-                        Dtype::F64 => rows.iter().map(|r| r.m_corrected).collect(),
-                        Dtype::F32 => crate::data::paper::fp32_rows()
-                            .iter()
-                            .map(|r| r.m_corrected)
-                            .collect(),
-                    };
-                    let ns = match dtype {
-                        Dtype::F64 => ns,
-                        Dtype::F32 => crate::data::paper::fp32_rows()
-                            .iter()
-                            .map(|r| r.n)
-                            .collect(),
-                    };
-                    Box::new(KnnHeuristic::fit_full("knn", &ns, &ms, 1)?)
-                }
-                HeuristicKind::Fixed(m) => Box::new(IntervalHeuristic::new(
-                    "fixed",
-                    vec![(usize::MAX, m)],
-                )?),
-            })
-        };
+    pub fn from_config(cfg: &Config, avail: BackendAvailability) -> Result<Router> {
         Ok(Router {
-            h_f64: make(Dtype::F64)?,
-            h_f32: make(Dtype::F32)?,
-            pjrt_m,
-            native_fallback: cfg.native_fallback,
-            sim: GpuSimulator::new(cfg.card),
+            planner: Planner::from_config(cfg, avail)?,
+            cache: PlanCache::new(cfg.plan_cache),
         })
     }
 
-    fn heuristic(&self, dtype: Dtype) -> &dyn MHeuristic {
-        match dtype {
-            Dtype::F64 => self.h_f64.as_ref(),
-            Dtype::F32 => self.h_f32.as_ref(),
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    /// Plan one request, through the cache when the request carries no
+    /// per-request overrides (overrides are rare and must not alias
+    /// heuristic plans). Plans are shared: a cache hit is an `Arc` clone.
+    pub fn plan(&self, n: usize, opts: &SolveOptions) -> Arc<SolvePlan> {
+        let cacheable = opts.m_override.is_none() && opts.backend_override.is_none();
+        if !cacheable {
+            return Arc::new(self.planner.plan(n, opts));
         }
-    }
-
-    /// Snap a desired m to the nearest artifact-supported value.
-    pub fn snap_to_supported(&self, m: usize) -> Option<usize> {
-        self.pjrt_m
-            .iter()
-            .copied()
-            .min_by_key(|&s| s.abs_diff(m))
-    }
-
-    /// Route one request.
-    pub fn route(&self, n: usize, opts: &SolveOptions) -> Route {
-        let m_want = opts
-            .m_override
-            .unwrap_or_else(|| self.heuristic(opts.dtype).opt_m(n));
-
-        let backend = opts.backend_override.unwrap_or({
-            // Tiny systems: partitioning is pure overhead.
-            if n <= 2 * m_want.max(4) {
-                Backend::Thomas
-            } else if !self.pjrt_m.is_empty() {
-                Backend::Pjrt
-            } else if self.native_fallback {
-                Backend::Native
-            } else {
-                Backend::Thomas
-            }
-        });
-
-        let m = match backend {
-            Backend::Pjrt => self
-                .snap_to_supported(m_want)
-                .unwrap_or(m_want)
-                .max(3),
-            _ => m_want.max(3),
+        let key = PlanKey {
+            n,
+            dtype: opts.dtype,
+            planner: self.planner.fingerprint(),
         };
-        Route { m, backend }
+        self.cache
+            .get_or_insert_with(key, || self.planner.plan(n, opts))
     }
 
-    /// The paper-facing timing estimate for a routed request.
-    pub fn simulated_gpu_us(&self, n: usize, m: usize, dtype: Dtype) -> f64 {
-        self.sim.solve(n, m, optimum_streams(n), dtype).total_us
+    /// Routing shape only (see [`Router::plan`] for the full plan).
+    pub fn route(&self, n: usize, opts: &SolveOptions) -> Route {
+        Route::of_plan(&self.plan(n, opts))
+    }
+
+    /// `(hits, misses)` of the plan cache.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache.hits(), self.cache.misses())
     }
 }
 
@@ -123,59 +81,49 @@ mod tests {
     use crate::config::Config;
 
     fn router(pjrt_m: Vec<usize>) -> Router {
-        Router::from_config(&Config::default(), pjrt_m).unwrap()
+        let avail = if pjrt_m.is_empty() {
+            BackendAvailability::native_only()
+        } else {
+            BackendAvailability::with_pjrt_ms(pjrt_m, true)
+        };
+        Router::from_config(&Config::default(), avail).unwrap()
     }
 
+    // Heuristic/backend/snapping behavior is covered by the planner's own
+    // tests (`crate::plan::planner`); here only the routing shape and the
+    // cache wrapper are exercised.
     #[test]
-    fn uses_paper_heuristic_for_m() {
+    fn route_is_the_plans_shape() {
         let r = router(vec![4, 8, 10, 16, 20, 32, 64]);
         let route = r.route(1_000_000, &SolveOptions::default());
         assert_eq!(route.m, 32);
         assert_eq!(route.backend, Backend::Pjrt);
-        assert_eq!(r.route(30_000, &SolveOptions::default()).m, 16);
+        assert_eq!(route.dtype, Dtype::F64);
     }
 
     #[test]
-    fn override_wins() {
+    fn repeated_sizes_hit_the_plan_cache() {
+        let r = router(vec![4, 8, 16, 32, 64]);
+        let opts = SolveOptions::default();
+        let first = r.plan(123_456, &opts);
+        let second = r.plan(123_456, &opts);
+        assert_eq!(first, second);
+        let (hits, misses) = r.cache_stats();
+        assert_eq!(hits, 1);
+        assert_eq!(misses, 1);
+    }
+
+    #[test]
+    fn overrides_bypass_the_cache() {
         let r = router(vec![4, 8, 16, 32, 64]);
         let opts = SolveOptions {
-            m_override: Some(20),
+            m_override: Some(8),
             ..Default::default()
         };
-        // 20 not supported by artifacts -> snapped to 16.
-        assert_eq!(r.route(1_000_000, &opts).m, 16);
-        let opts = SolveOptions {
-            m_override: Some(20),
-            backend_override: Some(Backend::Native),
-            ..Default::default()
-        };
-        assert_eq!(r.route(1_000_000, &opts).m, 20);
-    }
-
-    #[test]
-    fn tiny_systems_go_to_thomas() {
-        let r = router(vec![4, 8]);
-        assert_eq!(r.route(6, &SolveOptions::default()).backend, Backend::Thomas);
-    }
-
-    #[test]
-    fn no_artifacts_falls_back_native() {
-        let r = router(vec![]);
-        assert_eq!(
-            r.route(1_000_000, &SolveOptions::default()).backend,
-            Backend::Native
-        );
-    }
-
-    #[test]
-    fn fp32_uses_fp32_trend() {
-        let r = router(vec![4, 8, 16, 32, 64]);
-        let opts = SolveOptions {
-            dtype: Dtype::F32,
-            ..Default::default()
-        };
-        // FP32 trend: m=64 from 7.2e5 (vs 2e7 for FP64).
-        assert_eq!(r.route(1_000_000, &opts).m, 64);
-        assert_eq!(r.route(1_000_000, &SolveOptions::default()).m, 32);
+        let _ = r.plan(77_000, &opts);
+        let _ = r.plan(77_000, &opts);
+        let (hits, misses) = r.cache_stats();
+        assert_eq!(hits, 0);
+        assert_eq!(misses, 0);
     }
 }

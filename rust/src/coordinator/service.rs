@@ -1,5 +1,11 @@
-//! The threaded solve service: bounded queue, router, dynamic batcher,
-//! PJRT device thread + native worker pool, metrics, clean shutdown.
+//! The threaded solve service: bounded queue, plan-based router, dynamic
+//! batcher, PJRT device thread + native worker pool, metrics, clean
+//! shutdown.
+//!
+//! Execution is fully plan-driven: `submit` asks the router for a
+//! [`SolvePlan`] (served from the LRU plan cache on repeated sizes), and
+//! the worker threads hand plans to [`SolverBackend`] implementations —
+//! the service itself contains no backend dispatch logic.
 
 use super::batcher::{concat_systems, form_batches, RoutedJob};
 use super::metrics::Metrics;
@@ -7,11 +13,10 @@ use super::request::{Backend, SolveRequest, SolveResponse};
 use super::router::{Route, Router};
 use crate::config::Config;
 use crate::error::{Error, Result};
-use crate::gpu::spec::Dtype;
-use crate::runtime::executor::pjrt_partition_solve;
+use crate::plan::{BackendAvailability, NativeBackend, PjrtBackend, SolvePlan, SolverBackend};
 use crate::runtime::Runtime;
 use crate::solver::residual::max_abs_residual;
-use crate::solver::{partition_solve, thomas_solve, TriSystem};
+use crate::solver::TriSystem;
 use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::atomic::Ordering;
@@ -24,7 +29,7 @@ pub type Reply = std::result::Result<SolveResponse, String>;
 
 struct Job {
     req: SolveRequest,
-    route: Route,
+    plan: Arc<SolvePlan>,
     enqueued: Instant,
     tx: mpsc::Sender<Reply>,
 }
@@ -54,17 +59,23 @@ impl Service {
     /// Start the service. When PJRT artifacts are unavailable and
     /// `cfg.native_fallback` is set, all requests run natively.
     pub fn start(cfg: Config) -> Result<Service> {
-        // Probe the manifest up front so the router knows the supported m
-        // values (the device thread re-opens it to build the runtime).
-        let pjrt_m = crate::runtime::Manifest::load(Path::new(&cfg.artifacts_dir))
-            .map(|man| man.supported_m(cfg.dtype))
-            .unwrap_or_default();
-        if pjrt_m.is_empty() && !cfg.native_fallback {
+        // Probe the manifest up front so the planner knows the supported
+        // m values and buckets (the device thread re-opens it to build
+        // the runtime).
+        let avail = match crate::runtime::Manifest::load(Path::new(&cfg.artifacts_dir)) {
+            Ok(man) => BackendAvailability::from_manifest(&man, cfg.dtype, cfg.native_fallback),
+            Err(_) => BackendAvailability {
+                pjrt: Vec::new(),
+                native: cfg.native_fallback,
+            },
+        };
+        if !avail.has_pjrt() && !cfg.native_fallback {
             return Err(Error::Service(
                 "no artifacts and native fallback disabled".into(),
             ));
         }
-        let router = Router::from_config(&cfg, pjrt_m.clone())?;
+        let has_pjrt = avail.has_pjrt();
+        let router = Router::from_config(&cfg, avail)?;
         let inner = Arc::new(Inner {
             cfg: cfg.clone(),
             router,
@@ -74,7 +85,7 @@ impl Service {
         });
 
         let mut threads = Vec::new();
-        if !pjrt_m.is_empty() {
+        if has_pjrt {
             let inner2 = inner.clone();
             threads.push(
                 std::thread::Builder::new()
@@ -99,7 +110,7 @@ impl Service {
     /// error when the bounded queue is full.
     pub fn submit(&self, req: SolveRequest) -> Result<mpsc::Receiver<Reply>> {
         let inner = &self.inner;
-        let route = inner.router.route(req.n(), &req.opts);
+        let plan = inner.router.plan(req.n(), &req.opts);
         let (tx, rx) = mpsc::channel();
         {
             let mut q = inner.queue.lock().unwrap();
@@ -113,15 +124,17 @@ impl Service {
                     .fetch_add(1, Ordering::Relaxed);
                 return Err(Error::Service("queue full (backpressure)".into()));
             }
+            let lane_is_pjrt = plan.backend == Backend::Pjrt;
             let job = Job {
                 req,
-                route,
+                plan,
                 enqueued: Instant::now(),
                 tx,
             };
-            match route.backend {
-                Backend::Pjrt => q.pjrt.push_back(job),
-                _ => q.native.push_back(job),
+            if lane_is_pjrt {
+                q.pjrt.push_back(job);
+            } else {
+                q.native.push_back(job);
             }
         }
         inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
@@ -138,7 +151,11 @@ impl Service {
     }
 
     pub fn metrics(&self) -> super::metrics::MetricsSnapshot {
-        self.inner.metrics.snapshot()
+        let mut snap = self.inner.metrics.snapshot();
+        let (hits, misses) = self.inner.router.cache_stats();
+        snap.plan_cache_hits = hits;
+        snap.plan_cache_misses = misses;
+        snap
     }
 
     pub fn router(&self) -> &Router {
@@ -199,7 +216,7 @@ fn device_thread(inner: Arc<Inner>) {
         let routed: Vec<RoutedJob<Job>> = jobs
             .into_iter()
             .map(|job| RoutedJob {
-                route: job.route,
+                route: Route::of_plan(&job.plan),
                 job,
             })
             .collect();
@@ -231,31 +248,24 @@ fn execute_pjrt_batch(inner: &Arc<Inner>, rt: &Runtime, route: Route, jobs: Vec<
     let t0 = Instant::now();
     let systems: Vec<&TriSystem<f64>> = jobs.iter().map(|j| &j.req.sys).collect();
     let (combined, spans) = concat_systems(&systems, route.m);
-    let dtype = jobs
-        .first()
-        .map(|j| j.req.opts.dtype)
-        .unwrap_or(Dtype::F64);
-    let solved: std::result::Result<Vec<f64>, String> = match dtype {
-        Dtype::F64 => pjrt_partition_solve(rt, &combined, route.m).map_err(|e| e.to_string()),
-        Dtype::F32 => {
-            let c32: TriSystem<f32> = combined.cast();
-            pjrt_partition_solve(rt, &c32, route.m)
-                .map(|x| x.iter().map(|&v| v as f64).collect())
-                .map_err(|e| e.to_string())
-        }
-    };
+    // The members were planned (and cached) individually; the batch only
+    // restates their shared shape — no planning work on the device thread.
+    let batch_plan = SolvePlan::for_batch(combined.n(), route.m, route.dtype);
+    let backend = PjrtBackend::new(rt);
+    let solved = backend
+        .execute(&batch_plan, &combined)
+        .map_err(|e| e.to_string());
     let exec_us = t0.elapsed().as_secs_f64() * 1e6;
     let batch_size = jobs.len();
 
     match solved {
-        Ok(x) => {
+        Ok(outcome) => {
             inner
                 .metrics
-                .pjrt_solves
-                .fetch_add(batch_size as u64, Ordering::Relaxed);
+                .record_backend(outcome.backend, batch_size as u64);
             for (job, &(off, n)) in jobs.into_iter().zip(&spans) {
-                let xj = x[off..off + n].to_vec();
-                respond_ok(inner, job, xj, route, Backend::Pjrt, exec_us, batch_size);
+                let xj = outcome.x[off..off + n].to_vec();
+                respond_ok(inner, job, xj, outcome.backend, exec_us, batch_size);
             }
         }
         Err(msg) => {
@@ -284,24 +294,13 @@ fn native_worker(inner: Arc<Inner>) {
 
 fn execute_native(inner: &Arc<Inner>, job: Job) {
     let t0 = Instant::now();
-    let route = job.route;
-    let backend = match route.backend {
-        Backend::Pjrt => Backend::Native, // fallback path
-        b => b,
-    };
-    let result = match backend {
-        Backend::Thomas => thomas_solve(&job.req.sys),
-        _ => partition_solve(&job.req.sys, route.m, inner.cfg.solver_threads),
-    };
+    let backend = NativeBackend::new(inner.cfg.solver_threads);
+    let result = backend.execute(&job.plan, &job.req.sys);
     let exec_us = t0.elapsed().as_secs_f64() * 1e6;
     match result {
-        Ok(x) => {
-            match backend {
-                Backend::Thomas => &inner.metrics.thomas_solves,
-                _ => &inner.metrics.native_solves,
-            }
-            .fetch_add(1, Ordering::Relaxed);
-            respond_ok(inner, job, x, route, backend, exec_us, 1);
+        Ok(outcome) => {
+            inner.metrics.record_backend(outcome.backend, 1);
+            respond_ok(inner, job, outcome.x, outcome.backend, exec_us, 1);
         }
         Err(e) => {
             inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
@@ -314,7 +313,6 @@ fn respond_ok(
     inner: &Arc<Inner>,
     job: Job,
     x: Vec<f64>,
-    route: Route,
     backend: Backend,
     exec_us: f64,
     batch_size: usize,
@@ -325,19 +323,16 @@ fn respond_ok(
         .opts
         .compute_residual
         .then(|| max_abs_residual(&job.req.sys, &x));
-    let simulated_gpu_us = inner
-        .router
-        .simulated_gpu_us(job.req.n(), route.m, job.req.opts.dtype);
     let resp = SolveResponse {
         id: job.req.id,
         x,
-        m: route.m,
+        m: job.plan.m(),
         backend,
         residual,
         queue_us: queue_us.max(0.0),
         exec_us,
         batch_size,
-        simulated_gpu_us,
+        simulated_gpu_us: job.plan.simulated_gpu_us,
     };
     inner.metrics.queue_latency.record(resp.queue_us);
     inner.metrics.exec_latency.record(exec_us);
@@ -453,5 +448,19 @@ mod tests {
         }
         let m = svc.metrics();
         assert_eq!(m.completed, 40);
+    }
+
+    #[test]
+    fn repeated_sizes_report_plan_cache_hits() {
+        let svc = Service::start(native_cfg()).unwrap();
+        let mut rng = Pcg64::new(5);
+        for i in 0..6 {
+            let sys = random_dd_system(&mut rng, 2_000, 0.5);
+            let _ = svc.solve(SolveRequest::new(i, sys)).unwrap();
+        }
+        let m = svc.metrics();
+        assert_eq!(m.plan_cache_misses, 1, "first size plans once");
+        assert_eq!(m.plan_cache_hits, 5, "repeats come from the cache");
+        svc.shutdown();
     }
 }

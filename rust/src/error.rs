@@ -1,21 +1,20 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — derive
+//! macros like thiserror are unavailable offline).
 
 /// Unified error for all partisol subsystems.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("solver error: {0}")]
     Solver(String),
 
-    #[error("singular system: zero pivot at row {row} (|w| = {magnitude:.3e})")]
-    SingularSystem { row: usize, magnitude: f64 },
+    SingularSystem {
+        row: usize,
+        magnitude: f64,
+    },
 
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    #[error("no artifact variant for stage={stage} dtype={dtype} m={m} p>={p}")]
     NoVariant {
         stage: String,
         dtype: String,
@@ -23,29 +22,67 @@ pub enum Error {
         p: usize,
     },
 
-    #[error("runtime error: {0}")]
     Runtime(String),
 
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error("json parse error at byte {offset}: {message}")]
-    Json { offset: usize, message: String },
+    Json {
+        offset: usize,
+        message: String,
+    },
 
-    #[error("ml error: {0}")]
     Ml(String),
 
-    #[error("cli error: {0}")]
     Cli(String),
 
-    #[error("service error: {0}")]
     Service(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("xla error: {0}")]
     Xla(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Solver(msg) => write!(f, "solver error: {msg}"),
+            Error::SingularSystem { row, magnitude } => write!(
+                f,
+                "singular system: zero pivot at row {row} (|w| = {magnitude:.3e})"
+            ),
+            Error::Shape(msg) => write!(f, "shape mismatch: {msg}"),
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::NoVariant { stage, dtype, m, p } => write!(
+                f,
+                "no artifact variant for stage={stage} dtype={dtype} m={m} p>={p}"
+            ),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Json { offset, message } => {
+                write!(f, "json parse error at byte {offset}: {message}")
+            }
+            Error::Ml(msg) => write!(f, "ml error: {msg}"),
+            Error::Cli(msg) => write!(f, "cli error: {msg}"),
+            Error::Service(msg) => write!(f, "service error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(msg) => write!(f, "xla error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

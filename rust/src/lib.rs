@@ -18,10 +18,14 @@
 //!   pipeline of §2, plus the optimum-streams heuristic of [5].
 //! * [`recursion`] — §3: optimum recursion count model and the per-level
 //!   sub-system size planner.
+//! * [`plan`] — the unified solve-planning pipeline: a `Planner` composes
+//!   the heuristics, recursion planner and GPU cost models into explicit
+//!   `SolvePlan`s; `SolverBackend` implementations execute them; an LRU
+//!   `PlanCache` keeps the serve hot path free of repeated planning work.
 //! * [`runtime`] — PJRT CPU client executing the AOT-compiled Pallas
 //!   kernels (`artifacts/*.hlo.txt`) on the request path.
-//! * [`coordinator`] — the solve service: router, batcher, worker pool,
-//!   metrics.
+//! * [`coordinator`] — the solve service: router (plan + cache), batcher,
+//!   worker pool, metrics.
 //! * [`data`] — the paper's published tables embedded as typed datasets.
 //! * [`util`], [`config`], [`cli`], [`testkit`] — offline substrates
 //!   (RNG, stats, JSON, tables, TOML-subset config, CLI, property testing).
@@ -33,6 +37,7 @@ pub mod data;
 pub mod error;
 pub mod gpu;
 pub mod ml;
+pub mod plan;
 pub mod recursion;
 pub mod runtime;
 pub mod solver;

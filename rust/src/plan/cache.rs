@@ -1,0 +1,244 @@
+//! LRU plan cache for the serve hot path: repeated SLAE sizes skip the
+//! kNN lookup, occupancy simulation and shard-layout work entirely.
+//!
+//! Keys are `(n, dtype, planner fingerprint)` — the fingerprint covers
+//! backend availability, the simulated card and the heuristics' decision
+//! functions, so plans from differently-configured planners never alias.
+//! Requests with per-request overrides bypass the cache (the caller
+//! decides; see `coordinator::Router`).
+
+use super::SolvePlan;
+use crate::gpu::spec::Dtype;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cache key: SLAE size + dtype + the planner's fingerprint
+/// ([`crate::plan::Planner::fingerprint`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub n: usize,
+    pub dtype: Dtype,
+    pub planner: u64,
+}
+
+struct Entry {
+    plan: Arc<SolvePlan>,
+    last_used: u64,
+}
+
+/// `order` indexes entries by their `last_used` tick (ticks are unique),
+/// making LRU eviction O(log n) instead of a full-map scan under the
+/// lock on every insert.
+struct Inner {
+    map: HashMap<PlanKey, Entry>,
+    order: BTreeMap<u64, PlanKey>,
+    tick: u64,
+}
+
+/// Thread-safe LRU cache of [`SolvePlan`]s with hit/miss counters.
+/// Plans are shared as `Arc`s, so a hit is a refcount bump — no
+/// deep clone of levels/shards under the lock.
+pub struct PlanCache {
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl PlanCache {
+    /// `capacity = 0` disables caching (every lookup is a miss).
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: BTreeMap::new(),
+                tick: 0,
+            }),
+        }
+    }
+
+    /// Look up a plan, counting the hit or miss.
+    pub fn lookup(&self, key: &PlanKey) -> Option<Arc<SolvePlan>> {
+        if self.capacity == 0 {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        let inner = &mut *g;
+        match inner.map.get_mut(key) {
+            Some(e) => {
+                inner.order.remove(&e.last_used);
+                e.last_used = tick;
+                inner.order.insert(tick, *key);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.plan.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a plan, evicting the least-recently-used entry when full.
+    pub fn insert(&self, key: PlanKey, plan: Arc<SolvePlan>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        let inner = &mut *g;
+        if let Some(old) = inner.map.get(&key) {
+            // Replacing an existing entry: drop its order slot.
+            inner.order.remove(&old.last_used);
+        } else if inner.map.len() >= self.capacity {
+            if let Some((&oldest, &victim)) = inner.order.iter().next() {
+                inner.order.remove(&oldest);
+                inner.map.remove(&victim);
+            }
+        }
+        inner.map.insert(
+            key,
+            Entry {
+                plan,
+                last_used: tick,
+            },
+        );
+        inner.order.insert(tick, key);
+    }
+
+    /// Lookup-or-plan. The plan closure runs outside the cache lock (a
+    /// concurrent miss on the same key may plan twice; last write wins —
+    /// plans are deterministic, so both are identical).
+    pub fn get_or_insert_with(
+        &self,
+        key: PlanKey,
+        make: impl FnOnce() -> SolvePlan,
+    ) -> Arc<SolvePlan> {
+        if let Some(plan) = self.lookup(&key) {
+            return plan;
+        }
+        let plan = Arc::new(make());
+        self.insert(key, plan.clone());
+        plan
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::Backend;
+
+    fn key(n: usize) -> PlanKey {
+        PlanKey {
+            n,
+            dtype: Dtype::F64,
+            planner: 7,
+        }
+    }
+
+    fn plan(n: usize) -> SolvePlan {
+        SolvePlan {
+            n,
+            dtype: Dtype::F64,
+            backend: Backend::Native,
+            levels: vec![32],
+            streams: 1,
+            shards: Vec::new(),
+            simulated_gpu_us: 1.0,
+            heuristic: "t".into(),
+        }
+    }
+
+    #[test]
+    fn hit_and_miss_counting() {
+        let c = PlanCache::new(8);
+        assert!(c.lookup(&key(10)).is_none());
+        c.insert(key(10), Arc::new(plan(10)));
+        assert_eq!(c.lookup(&key(10)).unwrap().n, 10);
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_keeps_recently_used() {
+        let c = PlanCache::new(2);
+        c.insert(key(1), Arc::new(plan(1)));
+        c.insert(key(2), Arc::new(plan(2)));
+        // Touch 1 so 2 is the LRU victim.
+        assert!(c.lookup(&key(1)).is_some());
+        c.insert(key(3), Arc::new(plan(3)));
+        assert_eq!(c.len(), 2);
+        assert!(c.lookup(&key(1)).is_some(), "recently used must survive");
+        assert!(c.lookup(&key(2)).is_none(), "LRU entry must be evicted");
+        assert!(c.lookup(&key(3)).is_some());
+    }
+
+    #[test]
+    fn dtype_and_planner_fingerprint_separate_keys() {
+        let c = PlanCache::new(8);
+        c.insert(key(10), Arc::new(plan(10)));
+        let other_dtype = PlanKey {
+            n: 10,
+            dtype: Dtype::F32,
+            planner: 7,
+        };
+        let other_planner = PlanKey {
+            n: 10,
+            dtype: Dtype::F64,
+            planner: 8,
+        };
+        assert!(c.lookup(&other_dtype).is_none());
+        assert!(c.lookup(&other_planner).is_none());
+    }
+
+    #[test]
+    fn capacity_zero_disables() {
+        let c = PlanCache::new(0);
+        c.insert(key(1), Arc::new(plan(1)));
+        assert!(c.lookup(&key(1)).is_none());
+        assert_eq!(c.hits(), 0);
+        assert_eq!(c.misses(), 2);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn get_or_insert_with_plans_once_per_key() {
+        let c = PlanCache::new(8);
+        let mut calls = 0;
+        let p = c.get_or_insert_with(key(5), || {
+            calls += 1;
+            plan(5)
+        });
+        assert_eq!(p.n, 5);
+        let _ = c.get_or_insert_with(key(5), || {
+            calls += 1;
+            plan(5)
+        });
+        assert_eq!(calls, 1);
+        assert_eq!(c.hits(), 1);
+    }
+}

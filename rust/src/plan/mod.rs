@@ -1,0 +1,337 @@
+//! The unified solve-planning pipeline: `Planner` → [`SolvePlan`] →
+//! [`SolverBackend`].
+//!
+//! The paper's whole contribution is choosing the right sub-system
+//! size(s) *before* solving — the §2.5 kNN m-model, the §2.4 interval
+//! trend, and the §3.2 per-recursion-level plan. This module is that
+//! decision logic in one place: every solve entry point (coordinator
+//! service, CLI commands, examples, benches) asks a [`Planner`] for an
+//! explicit, serializable [`SolvePlan`] and hands it to an
+//! interchangeable execution backend.
+//!
+//! ```text
+//!   Planner::plan(n, opts)                SolverBackend::execute(plan, sys)
+//!        │                                        ▲
+//!        ▼                                        │
+//!   SolvePlan { levels [m0..mR], dtype,   NativeBackend (threaded CPU)
+//!               backend, streams,         PjrtBackend   (AOT Pallas on PJRT)
+//!               shards, simulated cost }
+//! ```
+//!
+//! * [`planner`] — composes the `MHeuristic` implementations, the §3.2
+//!   recursion planner and the GPU occupancy/transfer models into plans.
+//! * [`shard`] — the bucket-padding / shard layout shared with the PJRT
+//!   executor.
+//! * [`cache`] — an LRU plan cache keyed by `(n, dtype, availability)`
+//!   so the serve hot path skips kNN/occupancy work on repeated sizes.
+//! * [`backend`] — the [`SolverBackend`] trait and its two
+//!   implementations.
+
+pub mod backend;
+pub mod cache;
+pub mod planner;
+pub mod shard;
+
+pub use backend::{NativeBackend, PjrtBackend, SolveOutcome, SolverBackend};
+pub use cache::{PlanCache, PlanKey};
+pub use planner::{BackendAvailability, Planner, PjrtVariant};
+pub use shard::{plan_shards, ShardSpec};
+
+use crate::error::{Error, Result};
+use crate::gpu::spec::Dtype;
+use crate::util::json::{obj, Json};
+
+/// Which execution backend handles (or should handle) a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// AOT Pallas artifacts on the PJRT CPU client (the three-layer path).
+    Pjrt,
+    /// Native Rust partition solver (threaded CPU).
+    Native,
+    /// Sequential Thomas (tiny systems, or baseline comparisons).
+    Thomas,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Native => "native",
+            Backend::Thomas => "thomas",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "pjrt" => Ok(Backend::Pjrt),
+            "native" => Ok(Backend::Native),
+            "thomas" => Ok(Backend::Thomas),
+            other => Err(Error::Config(format!("unknown backend `{other}`"))),
+        }
+    }
+}
+
+/// Per-request options the planner honors.
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    pub dtype: Dtype,
+    /// Force a sub-system size instead of the heuristic.
+    pub m_override: Option<usize>,
+    /// Force a backend instead of the planner's choice.
+    pub backend_override: Option<Backend>,
+    /// Verify the solution and include the residual in the response.
+    pub compute_residual: bool,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            dtype: Dtype::F64,
+            m_override: None,
+            backend_override: None,
+            compute_residual: true,
+        }
+    }
+}
+
+/// An explicit, serializable execution plan for one SLAE.
+///
+/// `levels[0]` is the sub-system size for the initial system; deeper
+/// entries are the §3.2 per-recursion-level sizes for the interface
+/// systems. A plan with one level is the plain (non-recursive) partition
+/// method.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolvePlan {
+    /// SLAE size the plan was made for.
+    pub n: usize,
+    pub dtype: Dtype,
+    pub backend: Backend,
+    /// Per-level sub-system sizes `[m0..mR]` (never empty).
+    pub levels: Vec<usize>,
+    /// CUDA-stream count from the companion-paper heuristic.
+    pub streams: usize,
+    /// Bucket/shard layout for the PJRT path (empty otherwise, or when
+    /// the artifact buckets are unknown to the planner).
+    pub shards: Vec<ShardSpec>,
+    /// What this solve would cost on the simulated paper GPU, µs.
+    pub simulated_gpu_us: f64,
+    /// Name of the heuristic that picked `levels[0]`.
+    pub heuristic: String,
+}
+
+impl SolvePlan {
+    /// A minimal plan for an already-routed batch execution: the member
+    /// requests were planned individually (and cached); the concatenated
+    /// system only needs the shared shape `(m, dtype)` re-stated, so no
+    /// heuristic, occupancy or shard work is repeated here.
+    pub fn for_batch(n: usize, m: usize, dtype: Dtype) -> SolvePlan {
+        SolvePlan {
+            n,
+            dtype,
+            backend: Backend::Pjrt,
+            levels: vec![m],
+            streams: 1,
+            shards: Vec::new(),
+            simulated_gpu_us: 0.0,
+            heuristic: "batch".to_string(),
+        }
+    }
+
+    /// Top-level sub-system size.
+    pub fn m(&self) -> usize {
+        self.levels.first().copied().unwrap_or(3)
+    }
+
+    /// Number of recursive steps (`levels.len() - 1`).
+    pub fn recursions(&self) -> usize {
+        self.levels.len().saturating_sub(1)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("dtype", Json::Str(self.dtype.name().to_string())),
+            ("backend", Json::Str(self.backend.name().to_string())),
+            (
+                "levels",
+                Json::Arr(self.levels.iter().map(|&m| Json::Num(m as f64)).collect()),
+            ),
+            ("streams", Json::Num(self.streams as f64)),
+            (
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|s| {
+                            obj(vec![
+                                ("start_block", Json::Num(s.start_block as f64)),
+                                ("p_real", Json::Num(s.p_real as f64)),
+                                ("bucket", Json::Num(s.bucket as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("simulated_gpu_us", Json::Num(self.simulated_gpu_us)),
+            ("heuristic", Json::Str(self.heuristic.clone())),
+        ])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn from_json(j: &Json) -> Result<SolvePlan> {
+        let num = |key: &str| -> Result<usize> {
+            j.get(key)?
+                .as_usize()
+                .ok_or_else(|| Error::Config(format!("plan field `{key}` must be a number")))
+        };
+        let dtype = match j.get("dtype")?.as_str() {
+            Some("f64") => Dtype::F64,
+            Some("f32") => Dtype::F32,
+            other => {
+                return Err(Error::Config(format!("bad plan dtype {other:?}")));
+            }
+        };
+        let backend = Backend::parse(
+            j.get("backend")?
+                .as_str()
+                .ok_or_else(|| Error::Config("plan backend must be a string".into()))?,
+        )?;
+        let usize_arr = |v: &Json| -> Result<Vec<usize>> {
+            v.as_arr()
+                .ok_or_else(|| Error::Config("expected an array".into()))?
+                .iter()
+                .map(|x| {
+                    x.as_usize()
+                        .ok_or_else(|| Error::Config("expected a number".into()))
+                })
+                .collect()
+        };
+        let levels = usize_arr(j.get("levels")?)?;
+        if levels.is_empty() {
+            return Err(Error::Config("plan levels must not be empty".into()));
+        }
+        let mut shards = Vec::new();
+        for s in j
+            .get("shards")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("plan shards must be an array".into()))?
+        {
+            let field = |key: &str| -> Result<usize> {
+                s.get(key)?
+                    .as_usize()
+                    .ok_or_else(|| Error::Config(format!("shard field `{key}` must be a number")))
+            };
+            shards.push(ShardSpec {
+                start_block: field("start_block")?,
+                p_real: field("p_real")?,
+                bucket: field("bucket")?,
+            });
+        }
+        let simulated_gpu_us = j
+            .get("simulated_gpu_us")?
+            .as_f64()
+            .ok_or_else(|| Error::Config("plan simulated_gpu_us must be a number".into()))?;
+        let heuristic = j
+            .get("heuristic")?
+            .as_str()
+            .ok_or_else(|| Error::Config("plan heuristic must be a string".into()))?
+            .to_string();
+        Ok(SolvePlan {
+            n: num("n")?,
+            dtype,
+            backend,
+            levels,
+            streams: num("streams")?,
+            shards,
+            simulated_gpu_us,
+            heuristic,
+        })
+    }
+
+    pub fn from_json_str(text: &str) -> Result<SolvePlan> {
+        Self::from_json(&Json::parse(text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_plan() -> SolvePlan {
+        SolvePlan {
+            n: 4_500_000,
+            dtype: Dtype::F64,
+            backend: Backend::Pjrt,
+            levels: vec![32, 10, 8],
+            streams: 32,
+            shards: vec![
+                ShardSpec {
+                    start_block: 0,
+                    p_real: 2048,
+                    bucket: 2048,
+                },
+                ShardSpec {
+                    start_block: 2048,
+                    p_real: 1500,
+                    bucket: 2048,
+                },
+            ],
+            simulated_gpu_us: 10_537.25,
+            heuristic: "paper-trend-f64".to_string(),
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let p = sample_plan();
+        assert_eq!(p.m(), 32);
+        assert_eq!(p.recursions(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = sample_plan();
+        let back = SolvePlan::from_json_str(&p.to_json_string()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn json_roundtrip_minimal_native_plan() {
+        let p = SolvePlan {
+            n: 1000,
+            dtype: Dtype::F32,
+            backend: Backend::Thomas,
+            levels: vec![4],
+            streams: 1,
+            shards: Vec::new(),
+            simulated_gpu_us: 203.0,
+            heuristic: "knn".to_string(),
+        };
+        let back = SolvePlan::from_json_str(&p.to_json_string()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_plans() {
+        assert!(SolvePlan::from_json_str("{}").is_err());
+        let no_levels = r#"{"n": 10, "dtype": "f64", "backend": "native",
+            "levels": [], "streams": 1, "shards": [],
+            "simulated_gpu_us": 1.0, "heuristic": "h"}"#;
+        assert!(SolvePlan::from_json_str(no_levels).is_err());
+        let bad_backend = r#"{"n": 10, "dtype": "f64", "backend": "gpu",
+            "levels": [4], "streams": 1, "shards": [],
+            "simulated_gpu_us": 1.0, "heuristic": "h"}"#;
+        assert!(SolvePlan::from_json_str(bad_backend).is_err());
+    }
+
+    #[test]
+    fn backend_names_roundtrip() {
+        for b in [Backend::Pjrt, Backend::Native, Backend::Thomas] {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+        }
+        assert!(Backend::parse("cuda").is_err());
+    }
+}

@@ -1,0 +1,503 @@
+//! The [`Planner`]: one decision layer composing the §2.4/§2.5 optimum-m
+//! heuristics, the §3.2 recursion planner, the companion-paper stream
+//! heuristic and the calibrated GPU cost model into explicit
+//! [`SolvePlan`]s.
+
+use super::shard::plan_shards;
+use super::{Backend, SolveOptions, SolvePlan};
+use crate::config::{Config, HeuristicKind};
+use crate::error::Result;
+use crate::gpu::simulator::GpuSimulator;
+use crate::gpu::spec::{Dtype, GpuCard};
+use crate::recursion::planner::plan_with_heuristic;
+use crate::runtime::artifact::{Manifest, StageKind};
+use crate::tuner::heuristic::{IntervalHeuristic, KnnHeuristic, MHeuristic};
+use crate::tuner::streams::optimum_streams;
+use crate::util::table::fmt_n;
+use std::hash::{Hash, Hasher};
+
+/// One PJRT-executable sub-system size and its artifact buckets.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PjrtVariant {
+    pub m: usize,
+    /// Stage-1 P buckets for this m, ascending (may be empty when the
+    /// planner only knows the supported m values, not the manifest).
+    pub buckets: Vec<usize>,
+}
+
+/// What execution backends a deployment actually has.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BackendAvailability {
+    /// PJRT-executable m variants, ascending by m; empty = no PJRT.
+    pub pjrt: Vec<PjrtVariant>,
+    /// Whether the native threaded solver may be used as a main backend.
+    pub native: bool,
+}
+
+impl BackendAvailability {
+    /// Native solvers only (no artifacts).
+    pub fn native_only() -> Self {
+        BackendAvailability {
+            pjrt: Vec::new(),
+            native: true,
+        }
+    }
+
+    /// PJRT m values without bucket detail (e.g. from a manifest probe
+    /// that only recorded supported m).
+    pub fn with_pjrt_ms(ms: Vec<usize>, native: bool) -> Self {
+        let mut ms = ms;
+        ms.sort_unstable();
+        BackendAvailability {
+            pjrt: ms
+                .into_iter()
+                .map(|m| PjrtVariant {
+                    m,
+                    buckets: Vec::new(),
+                })
+                .collect(),
+            native,
+        }
+    }
+
+    /// Full availability from a parsed artifact manifest.
+    pub fn from_manifest(man: &Manifest, dtype: Dtype, native: bool) -> Self {
+        BackendAvailability {
+            pjrt: man
+                .supported_m(dtype)
+                .into_iter()
+                .map(|m| PjrtVariant {
+                    m,
+                    buckets: man.buckets(StageKind::Stage1, dtype, m),
+                })
+                .collect(),
+            native,
+        }
+    }
+
+    pub fn has_pjrt(&self) -> bool {
+        !self.pjrt.is_empty()
+    }
+
+    /// The supported PJRT m values, ascending.
+    pub fn pjrt_ms(&self) -> Vec<usize> {
+        self.pjrt.iter().map(|v| v.m).collect()
+    }
+
+    fn buckets_for(&self, m: usize) -> &[usize] {
+        self.pjrt
+            .iter()
+            .find(|v| v.m == m)
+            .map(|v| v.buckets.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Stable fingerprint of the availability alone (one ingredient of
+    /// [`Planner::fingerprint`]).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.native.hash(&mut h);
+        for v in &self.pjrt {
+            v.m.hash(&mut h);
+            v.buckets.hash(&mut h);
+        }
+        h.finish()
+    }
+}
+
+/// The planner: per-dtype optimum-m heuristics + backend availability +
+/// the calibrated GPU cost model.
+pub struct Planner {
+    h_f64: Box<dyn MHeuristic>,
+    h_f32: Box<dyn MHeuristic>,
+    avail: BackendAvailability,
+    sim: GpuSimulator,
+    fingerprint: u64,
+}
+
+impl Planner {
+    /// The paper's published heuristics on a given simulated card.
+    pub fn paper(avail: BackendAvailability, card: GpuCard) -> Planner {
+        Planner::with_heuristics(
+            Box::new(IntervalHeuristic::paper(Dtype::F64)),
+            Box::new(IntervalHeuristic::paper(Dtype::F32)),
+            avail,
+            card,
+        )
+    }
+
+    /// Custom heuristics (e.g. freshly fitted by `partisol tune`).
+    pub fn with_heuristics(
+        h_f64: Box<dyn MHeuristic>,
+        h_f32: Box<dyn MHeuristic>,
+        avail: BackendAvailability,
+        card: GpuCard,
+    ) -> Planner {
+        // Fingerprint everything a plan depends on: the availability, the
+        // simulated card, and the heuristics' actual decision functions
+        // (probed over the paper's size range — names alone cannot tell
+        // `fixed:32` from `fixed:64`).
+        let mut hasher = std::collections::hash_map::DefaultHasher::new();
+        avail.fingerprint().hash(&mut hasher);
+        card.hash(&mut hasher);
+        for h in [h_f64.as_ref(), h_f32.as_ref()] {
+            h.name().hash(&mut hasher);
+            for exp in 0..=8u32 {
+                h.opt_m(10usize.pow(exp)).hash(&mut hasher);
+            }
+        }
+        Planner {
+            h_f64,
+            h_f32,
+            avail,
+            sim: GpuSimulator::new(card),
+            fingerprint: hasher.finish(),
+        }
+    }
+
+    /// Build from service configuration (heuristic kind + card).
+    pub fn from_config(cfg: &Config, avail: BackendAvailability) -> Result<Planner> {
+        let make = |dtype: Dtype| -> Result<Box<dyn MHeuristic>> {
+            Ok(match cfg.heuristic {
+                HeuristicKind::PaperInterval => Box::new(IntervalHeuristic::paper(dtype)),
+                HeuristicKind::Knn => {
+                    // Fit the kNN on the paper's corrected data (full fit,
+                    // deployment mode, k = 1 as GridSearchCV selects).
+                    let rows = crate::data::paper::table1_rows();
+                    let ns: Vec<usize> = match dtype {
+                        Dtype::F64 => rows.iter().map(|r| r.n).collect(),
+                        Dtype::F32 => crate::data::paper::fp32_rows()
+                            .iter()
+                            .map(|r| r.n)
+                            .collect(),
+                    };
+                    let ms: Vec<usize> = match dtype {
+                        Dtype::F64 => rows.iter().map(|r| r.m_corrected).collect(),
+                        Dtype::F32 => crate::data::paper::fp32_rows()
+                            .iter()
+                            .map(|r| r.m_corrected)
+                            .collect(),
+                    };
+                    Box::new(KnnHeuristic::fit_full("knn", &ns, &ms, 1)?)
+                }
+                HeuristicKind::Fixed(m) => {
+                    Box::new(IntervalHeuristic::new("fixed", vec![(usize::MAX, m)])?)
+                }
+            })
+        };
+        Ok(Planner::with_heuristics(
+            make(Dtype::F64)?,
+            make(Dtype::F32)?,
+            avail,
+            cfg.card,
+        ))
+    }
+
+    fn heuristic(&self, dtype: Dtype) -> &dyn MHeuristic {
+        match dtype {
+            Dtype::F64 => self.h_f64.as_ref(),
+            Dtype::F32 => self.h_f32.as_ref(),
+        }
+    }
+
+    pub fn availability(&self) -> &BackendAvailability {
+        &self.avail
+    }
+
+    /// Cache-key fingerprint: planners with equal fingerprints produce
+    /// interchangeable plans (same availability, card and heuristics).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    pub fn simulator(&self) -> &GpuSimulator {
+        &self.sim
+    }
+
+    /// Snap a desired m to the nearest PJRT-supported value.
+    pub fn snap_to_supported(&self, m: usize) -> Option<usize> {
+        self.avail
+            .pjrt
+            .iter()
+            .map(|v| v.m)
+            .min_by_key(|&s| s.abs_diff(m))
+    }
+
+    /// Plan one (non-recursive) solve: heuristic m, backend choice,
+    /// stream count, shard layout and the paper-facing cost estimate.
+    pub fn plan(&self, n: usize, opts: &SolveOptions) -> SolvePlan {
+        let h = self.heuristic(opts.dtype);
+        let m_want = opts.m_override.unwrap_or_else(|| h.opt_m(n));
+
+        let requested = opts.backend_override.unwrap_or({
+            // Tiny systems: partitioning is pure overhead.
+            if n <= 2 * m_want.max(4) {
+                Backend::Thomas
+            } else if self.avail.has_pjrt() {
+                Backend::Pjrt
+            } else if self.avail.native {
+                Backend::Native
+            } else {
+                Backend::Thomas
+            }
+        });
+        // Clamp to what can actually execute: a PJRT override without
+        // artifacts would plan a lane no executor drains (the request
+        // would hang in the service's pjrt queue).
+        let backend = match requested {
+            Backend::Pjrt if !self.avail.has_pjrt() => {
+                if self.avail.native {
+                    Backend::Native
+                } else {
+                    Backend::Thomas
+                }
+            }
+            b => b,
+        };
+
+        let m = match backend {
+            Backend::Pjrt => self.snap_to_supported(m_want).unwrap_or(m_want).max(3),
+            _ => m_want.max(3),
+        };
+        let streams = optimum_streams(n);
+        let shards = match backend {
+            Backend::Pjrt => plan_shards(n, m, self.avail.buckets_for(m)),
+            _ => Vec::new(),
+        };
+        let heuristic = if opts.m_override.is_some() {
+            "m-override".to_string()
+        } else {
+            h.name().to_string()
+        };
+        SolvePlan {
+            n,
+            dtype: opts.dtype,
+            backend,
+            levels: vec![m],
+            streams,
+            shards,
+            simulated_gpu_us: self.sim.solve(n, m, streams, opts.dtype).total_us,
+            heuristic,
+        }
+    }
+
+    /// Plan a §3.2 recursive solve with `r` recursion steps. Recursive
+    /// plans execute on the native backend (the PJRT artifacts implement
+    /// the non-recursive pipeline).
+    pub fn plan_recursive(&self, n: usize, r: usize, dtype: Dtype) -> SolvePlan {
+        let h = self.heuristic(dtype);
+        let levels = plan_with_heuristic(n, r, h);
+        let m0 = levels[0];
+        let backend = if n <= 2 * m0.max(4) {
+            Backend::Thomas
+        } else {
+            Backend::Native
+        };
+        let streams = optimum_streams(n);
+        SolvePlan {
+            n,
+            dtype,
+            backend,
+            simulated_gpu_us: self.sim.solve_plan(n, &levels, streams, dtype).total_us,
+            levels,
+            streams,
+            shards: Vec::new(),
+            heuristic: h.name().to_string(),
+        }
+    }
+
+    /// Human-readable rendering of a plan (the `solve --explain` output).
+    pub fn explain(&self, plan: &SolvePlan) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "SolvePlan for N = {} ({}), dtype {}\n",
+            fmt_n(plan.n),
+            plan.n,
+            plan.dtype.name()
+        ));
+        out.push_str(&format!(
+            "  backend            : {} (pjrt m values: {:?}, native fallback: {})\n",
+            plan.backend.name(),
+            self.avail.pjrt_ms(),
+            self.avail.native
+        ));
+        out.push_str(&format!(
+            "  levels [m0..mR]    : {:?} (heuristic: {})\n",
+            plan.levels, plan.heuristic
+        ));
+        out.push_str(&format!("  streams            : {}\n", plan.streams));
+        if plan.shards.is_empty() {
+            out.push_str("  shards             : (no PJRT bucket layout)\n");
+        } else {
+            out.push_str(&format!(
+                "  shards             : {} over buckets {:?}\n",
+                plan.shards.len(),
+                plan.shards.iter().map(|s| s.bucket).collect::<Vec<_>>()
+            ));
+        }
+        out.push_str(&format!(
+            "  simulated GPU cost : {:.3} ms on {}",
+            plan.simulated_gpu_us / 1e3,
+            self.sim.card.name()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planner(pjrt_m: Vec<usize>) -> Planner {
+        let avail = if pjrt_m.is_empty() {
+            BackendAvailability::native_only()
+        } else {
+            BackendAvailability::with_pjrt_ms(pjrt_m, true)
+        };
+        Planner::paper(avail, GpuCard::Rtx2080Ti)
+    }
+
+    #[test]
+    fn plan_uses_paper_heuristic_for_m() {
+        let p = planner(vec![4, 8, 10, 16, 20, 32, 64]);
+        let plan = p.plan(1_000_000, &SolveOptions::default());
+        assert_eq!(plan.m(), 32);
+        assert_eq!(plan.backend, Backend::Pjrt);
+        assert_eq!(p.plan(30_000, &SolveOptions::default()).m(), 16);
+    }
+
+    #[test]
+    fn override_wins_and_snaps_on_pjrt() {
+        let p = planner(vec![4, 8, 16, 32, 64]);
+        let opts = SolveOptions {
+            m_override: Some(20),
+            ..Default::default()
+        };
+        // 20 not supported by artifacts -> snapped to 16.
+        assert_eq!(p.plan(1_000_000, &opts).m(), 16);
+        let opts = SolveOptions {
+            m_override: Some(20),
+            backend_override: Some(Backend::Native),
+            ..Default::default()
+        };
+        let plan = p.plan(1_000_000, &opts);
+        assert_eq!(plan.m(), 20);
+        assert_eq!(plan.heuristic, "m-override");
+    }
+
+    #[test]
+    fn tiny_systems_plan_thomas() {
+        let p = planner(vec![4, 8]);
+        assert_eq!(p.plan(6, &SolveOptions::default()).backend, Backend::Thomas);
+    }
+
+    #[test]
+    fn pjrt_override_without_artifacts_is_clamped() {
+        // An unclamped Pjrt plan would be queued to a lane no thread
+        // drains when the service has no device thread.
+        let p = planner(vec![]);
+        let opts = SolveOptions {
+            backend_override: Some(Backend::Pjrt),
+            ..Default::default()
+        };
+        assert_eq!(p.plan(100_000, &opts).backend, Backend::Native);
+    }
+
+    #[test]
+    fn no_artifacts_plans_native() {
+        let p = planner(vec![]);
+        let plan = p.plan(1_000_000, &SolveOptions::default());
+        assert_eq!(plan.backend, Backend::Native);
+        assert!(plan.shards.is_empty());
+    }
+
+    #[test]
+    fn fp32_uses_fp32_trend() {
+        let p = planner(vec![4, 8, 16, 32, 64]);
+        let opts = SolveOptions {
+            dtype: Dtype::F32,
+            ..Default::default()
+        };
+        // FP32 trend: m=64 from 7.2e5 (vs 2e7 for FP64).
+        assert_eq!(p.plan(1_000_000, &opts).m(), 64);
+        assert_eq!(p.plan(1_000_000, &SolveOptions::default()).m(), 32);
+    }
+
+    #[test]
+    fn pjrt_plans_carry_shard_layout() {
+        let avail = BackendAvailability {
+            pjrt: vec![PjrtVariant {
+                m: 32,
+                buckets: vec![256, 2048],
+            }],
+            native: true,
+        };
+        let p = Planner::paper(avail, GpuCard::Rtx2080Ti);
+        let plan = p.plan(1_000_000, &SolveOptions::default());
+        assert_eq!(plan.backend, Backend::Pjrt);
+        assert_eq!(plan.m(), 32);
+        // 31_250 blocks over the 2048 bucket.
+        assert!(!plan.shards.is_empty());
+        let total: usize = plan.shards.iter().map(|s| s.p_real).sum();
+        assert_eq!(total, 1_000_000usize.div_ceil(32));
+    }
+
+    #[test]
+    fn recursive_plan_matches_section_3_2() {
+        let p = planner(vec![]);
+        let plan = p.plan_recursive(100_000_000, 3, Dtype::F64);
+        assert_eq!(plan.levels, vec![64, 10, 32, 16]);
+        assert_eq!(plan.recursions(), 3);
+        assert_eq!(plan.backend, Backend::Native);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_availability() {
+        let a = BackendAvailability::native_only();
+        let b = BackendAvailability::with_pjrt_ms(vec![4, 8], true);
+        let c = BackendAvailability::with_pjrt_ms(vec![4, 8], true);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_eq!(b.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn planner_fingerprint_covers_heuristic_and_card() {
+        use crate::config::{Config, HeuristicKind};
+        let mk = |kind: HeuristicKind, card: GpuCard| {
+            let cfg = Config {
+                heuristic: kind,
+                card,
+                ..Config::default()
+            };
+            Planner::from_config(&cfg, BackendAvailability::native_only()).unwrap()
+        };
+        let paper = mk(HeuristicKind::PaperInterval, GpuCard::Rtx2080Ti);
+        let paper2 = mk(HeuristicKind::PaperInterval, GpuCard::Rtx2080Ti);
+        let fixed32 = mk(HeuristicKind::Fixed(32), GpuCard::Rtx2080Ti);
+        let fixed64 = mk(HeuristicKind::Fixed(64), GpuCard::Rtx2080Ti);
+        let other_card = mk(HeuristicKind::PaperInterval, GpuCard::Rtx4080);
+        assert_eq!(paper.fingerprint(), paper2.fingerprint());
+        assert_ne!(paper.fingerprint(), fixed32.fingerprint());
+        assert_ne!(fixed32.fingerprint(), fixed64.fingerprint());
+        assert_ne!(paper.fingerprint(), other_card.fingerprint());
+    }
+
+    #[test]
+    fn plans_include_cost_estimate_and_streams() {
+        let p = planner(vec![]);
+        let plan = p.plan(50_000, &SolveOptions::default());
+        assert!(plan.simulated_gpu_us > 0.0);
+        assert_eq!(plan.streams, 1);
+        let plan = p.plan(4_500_000, &SolveOptions::default());
+        assert_eq!(plan.streams, 32);
+    }
+
+    #[test]
+    fn explain_mentions_the_choice() {
+        let p = planner(vec![4, 8, 16, 32, 64]);
+        let plan = p.plan(1_000_000, &SolveOptions::default());
+        let text = p.explain(&plan);
+        assert!(text.contains("pjrt"));
+        assert!(text.contains("[32]"));
+    }
+}

@@ -1,0 +1,113 @@
+//! Bucket/shard layout planning: how a `(P, m)` blocked system maps onto
+//! the AOT artifact buckets — one place, shared by the [`crate::plan`]
+//! planner (for explicit plans) and the PJRT executor (for execution).
+
+/// One shard of a blocked execution: blocks
+/// `[start_block, start_block + p_real)` run in a bucket of `bucket`
+/// blocks (the gap is identity-row padding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// First block of this shard within the whole system.
+    pub start_block: usize,
+    /// Real (non-padding) blocks in this shard.
+    pub p_real: usize,
+    /// Artifact bucket the shard is padded to (`bucket >= p_real`).
+    pub bucket: usize,
+}
+
+/// Cut an `n`-unknown system with sub-system size `m` into shards over
+/// the available artifact `buckets` (ascending or not; empty buckets =>
+/// no layout, the caller reports the missing variant).
+///
+/// Mirrors the manifest lookup rule: each shard takes at most the
+/// largest bucket of blocks and is padded to the smallest bucket that
+/// fits it.
+pub fn plan_shards(n: usize, m: usize, buckets: &[usize]) -> Vec<ShardSpec> {
+    let Some(&max_bucket) = buckets.iter().max() else {
+        return Vec::new();
+    };
+    let p_total = n.div_ceil(m);
+    let mut shards = Vec::new();
+    let mut start_block = 0usize;
+    while start_block < p_total {
+        let p_real = (p_total - start_block).min(max_bucket);
+        let bucket = buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= p_real)
+            .min()
+            .unwrap_or(max_bucket);
+        shards.push(ShardSpec {
+            start_block,
+            p_real,
+            bucket,
+        });
+        start_block += p_real;
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shard_smallest_fitting_bucket() {
+        let shards = plan_shards(100, 8, &[32, 256]);
+        // 13 blocks fit the 32 bucket.
+        assert_eq!(
+            shards,
+            vec![ShardSpec {
+                start_block: 0,
+                p_real: 13,
+                bucket: 32
+            }]
+        );
+    }
+
+    #[test]
+    fn oversize_system_is_sharded_by_largest_bucket() {
+        // 10_000 unknowns, m=4 -> 2500 blocks over buckets {32, 256}:
+        // nine full 256-block shards + a 196-block tail in the 256 bucket.
+        let shards = plan_shards(10_000, 4, &[32, 256]);
+        assert_eq!(shards.len(), 10);
+        assert!(shards[..9]
+            .iter()
+            .all(|s| s.p_real == 256 && s.bucket == 256));
+        assert_eq!(shards[9].p_real, 2500 - 9 * 256);
+        assert_eq!(shards[9].bucket, 256);
+        // Shards tile the block range exactly.
+        let mut next = 0;
+        for s in &shards {
+            assert_eq!(s.start_block, next);
+            next += s.p_real;
+        }
+        assert_eq!(next, 2500);
+    }
+
+    #[test]
+    fn tail_shard_drops_to_a_smaller_bucket() {
+        // 520 blocks over {32, 256, 512}: one 512 shard + an 8-block tail
+        // padded to the 32 bucket, not 512.
+        let shards = plan_shards(520 * 4, 4, &[32, 256, 512]);
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[1].p_real, 8);
+        assert_eq!(shards[1].bucket, 32);
+    }
+
+    #[test]
+    fn no_buckets_no_layout() {
+        assert!(plan_shards(1000, 8, &[]).is_empty());
+    }
+
+    #[test]
+    fn bucket_always_covers_real_blocks() {
+        for n in [1usize, 7, 100, 4096, 99_999] {
+            for m in [3usize, 8, 32] {
+                for s in plan_shards(n, m, &[16, 128, 1024]) {
+                    assert!(s.bucket >= s.p_real, "n={n} m={m} {s:?}");
+                }
+            }
+        }
+    }
+}

@@ -84,4 +84,34 @@ mod tests {
             assert_eq!(plan_for(10_000_000, r, Dtype::F64).len(), r + 1);
         }
     }
+
+    #[test]
+    fn r0_plan_with_custom_heuristic_is_its_opt_m() {
+        let h = IntervalHeuristic::new("c", vec![(1000, 5), (usize::MAX, 7)]).unwrap();
+        assert_eq!(plan_with_heuristic(500, 0, &h), vec![5]);
+        assert_eq!(plan_with_heuristic(5000, 0, &h), vec![7]);
+    }
+
+    #[test]
+    fn tiny_n_where_interface_does_not_shrink() {
+        // interface_size(2, m) = 2 >= n: the level size chain stalls at 2
+        // but planning must still terminate with r + 1 levels.
+        assert_eq!(interface_size(2, 4), 2);
+        assert!(interface_size(1, 8) >= 1);
+        let plan = plan_for(2, 3, Dtype::F64);
+        // m0 = opt_m(2) = 4; m1 = M1_FIXED (r >= 2); the stalled chain
+        // keeps asking the heuristic about n = 2.
+        assert_eq!(plan, vec![4, M1_FIXED, 4, 4]);
+        let plan = plan_for(1, 2, Dtype::F64);
+        assert_eq!(plan, vec![4, M1_FIXED, 4]);
+    }
+
+    #[test]
+    fn m1_fixed_applies_exactly_from_r2() {
+        // R = 1 plans the first interface with the heuristic...
+        assert_eq!(plan_for(4_500_000, 1, Dtype::F64), vec![32, 32]);
+        // ...R = 2 pins m1 = 10 per the §3.2 Remark, then resumes the
+        // heuristic: interface chain 4.5e6 -> 281_250 -> 56_250 -> m2 = 20.
+        assert_eq!(plan_for(4_500_000, 2, Dtype::F64), vec![32, M1_FIXED, 20]);
+    }
 }

@@ -133,6 +133,20 @@ impl Manifest {
             })
     }
 
+    /// All P buckets available for (stage, dtype, m), ascending and
+    /// deduplicated — the input the shard planner consumes.
+    pub fn buckets(&self, stage: StageKind, dtype: Dtype, m: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.stage == stage && a.dtype == dtype && a.m == m)
+            .map(|a| a.p)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
     /// Largest P bucket available for (stage, dtype, m).
     pub fn max_bucket(&self, stage: StageKind, dtype: Dtype, m: usize) -> Option<usize> {
         self.artifacts

@@ -107,24 +107,25 @@ struct Shard<T> {
     blocks: [Vec<T>; 4],
 }
 
-/// Cut the system into shards no larger than the biggest available bucket.
+/// Cut the system into shards over the available artifact buckets. The
+/// layout decision itself lives in [`crate::plan::plan_shards`] — the
+/// same code the `Planner` uses to put the shard layout into a
+/// `SolvePlan`; this function materializes the block data for each shard.
 fn make_shards<T: PjrtScalar>(rt: &Runtime, sys: &TriSystem<T>, m: usize) -> Result<Vec<Shard<T>>> {
-    let max_bucket = rt
-        .manifest()
-        .max_bucket(StageKind::Stage1, T::DTYPE, m)
-        .ok_or_else(|| Error::NoVariant {
+    let buckets = rt.manifest().buckets(StageKind::Stage1, T::DTYPE, m);
+    let specs = crate::plan::plan_shards(sys.n(), m, &buckets);
+    if specs.is_empty() {
+        return Err(Error::NoVariant {
             stage: "stage1".into(),
             dtype: T::DTYPE.name().into(),
             m,
             p: 1,
-        })?;
-    let p_total = sys.n().div_ceil(m);
-    let mut shards = Vec::new();
-    let mut start_block = 0usize;
-    while start_block < p_total {
-        let p_here = (p_total - start_block).min(max_bucket);
-        let row_lo = start_block * m;
-        let row_hi = (row_lo + p_here * m).min(sys.n());
+        });
+    }
+    let mut shards = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let row_lo = spec.start_block * m;
+        let row_hi = (row_lo + spec.p_real * m).min(sys.n());
         // Sub-system slice; interior couplings across the shard boundary
         // stay in `a[0]`/`c[last]` of the slice, which Stage 1 treats as
         // couplings to neighbor blocks — exactly right, since the
@@ -135,18 +136,13 @@ fn make_shards<T: PjrtScalar>(rt: &Runtime, sys: &TriSystem<T>, m: usize) -> Res
             c: sys.c[row_lo..row_hi].to_vec(),
             d: sys.d[row_lo..row_hi].to_vec(),
         };
-        let bucket = rt
-            .manifest()
-            .find(StageKind::Stage1, T::DTYPE, m, p_here)?
-            .p;
-        let layout = BlockLayout::new(slice.n(), m, bucket)?;
+        let layout = BlockLayout::new(slice.n(), m, spec.bucket)?;
         let blocks = to_blocks(&slice, &layout);
         shards.push(Shard {
-            start_block,
+            start_block: spec.start_block,
             layout,
             blocks,
         });
-        start_block += p_here;
     }
     Ok(shards)
 }

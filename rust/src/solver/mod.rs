@@ -25,17 +25,42 @@ pub use recursive::recursive_solve;
 pub use thomas::{thomas_solve, thomas_solve_with_scratch};
 pub use tridiagonal::TriSystem;
 
-use num_traits::Float;
-
-/// Scalar abstraction: everything the solvers need from f32 / f64.
-pub trait Scalar: Float + Send + Sync + std::fmt::Debug + std::fmt::Display + 'static {
+/// Scalar abstraction: everything the solvers need from f32 / f64
+/// (self-contained — num_traits is unavailable offline).
+pub trait Scalar:
+    Copy
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::fmt::Debug
+    + std::fmt::Display
+    + 'static
+{
     const DTYPE_NAME: &'static str;
+    fn zero() -> Self;
+    fn one() -> Self;
+    fn abs(self) -> Self;
     fn of_f64(x: f64) -> Self;
     fn as_f64(self) -> f64;
 }
 
 impl Scalar for f64 {
     const DTYPE_NAME: &'static str = "f64";
+    fn zero() -> Self {
+        0.0
+    }
+    fn one() -> Self {
+        1.0
+    }
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
     fn of_f64(x: f64) -> Self {
         x
     }
@@ -46,6 +71,15 @@ impl Scalar for f64 {
 
 impl Scalar for f32 {
     const DTYPE_NAME: &'static str = "f32";
+    fn zero() -> Self {
+        0.0
+    }
+    fn one() -> Self {
+        1.0
+    }
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
     fn of_f64(x: f64) -> Self {
         x as f32
     }

@@ -196,6 +196,43 @@ mod tests {
     }
 
     #[test]
+    fn from_corrected_single_run_extends_to_infinity() {
+        // One measurement: the sole interval must cover every n, not just
+        // the measured point (the last-interval extension has no previous
+        // bound to fence it).
+        let h = IntervalHeuristic::from_corrected("single", &[1000], &[8]).unwrap();
+        assert_eq!(h.intervals(), &[(usize::MAX, 8)]);
+        assert_eq!(h.opt_m(1), 8);
+        assert_eq!(h.opt_m(1000), 8);
+        assert_eq!(h.opt_m(usize::MAX), 8);
+    }
+
+    #[test]
+    fn from_corrected_degenerate_all_equal_ms() {
+        // All runs share one m: the table must collapse to one unbounded
+        // interval (not keep a dangling bound at the second-to-last n).
+        let ns = [100, 1000, 10_000, 100_000];
+        let ms = [4, 4, 4, 4];
+        let h = IntervalHeuristic::from_corrected("flat", &ns, &ms).unwrap();
+        assert_eq!(h.intervals(), &[(usize::MAX, 4)]);
+        assert_eq!(h.opt_m(50), 4);
+        assert_eq!(h.opt_m(99_999_999), 4);
+    }
+
+    #[test]
+    fn from_corrected_boundary_is_inclusive_per_run() {
+        // The interval bound is the last n of its run, inclusive: n at
+        // the bound keeps the run's m, n just past it takes the next m
+        // (the off-by-one the last-interval extension must not disturb).
+        let h = IntervalHeuristic::from_corrected("b", &[100, 1000], &[4, 8]).unwrap();
+        assert_eq!(h.intervals(), &[(100, 4), (usize::MAX, 8)]);
+        assert_eq!(h.opt_m(100), 4);
+        assert_eq!(h.opt_m(101), 8);
+        // The final measured n is NOT a bound: the last run is unbounded.
+        assert_eq!(h.opt_m(1001), 8);
+    }
+
+    #[test]
     fn knn_full_fit_on_corrected_data_reproduces_trend() {
         let ns: Vec<usize> = paper::table1_rows().iter().map(|r| r.n).collect();
         let ms: Vec<usize> = paper::table1_rows().iter().map(|r| r.m_corrected).collect();

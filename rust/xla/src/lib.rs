@@ -1,0 +1,251 @@
+//! Offline API-compatibility stub for the `xla` (PJRT) bindings.
+//!
+//! The build environment has no network access and no XLA/PJRT shared
+//! libraries, so this crate mirrors exactly the slice of the real `xla`
+//! crate's surface that partisol's runtime layer consumes, with the
+//! device entry point gated: [`PjRtClient::cpu`] reports the runtime as
+//! unavailable, which every caller in partisol already handles by falling
+//! back to the native Rust solvers.
+//!
+//! Everything downstream of a client (`compile`, `execute`, buffers) is
+//! statically unreachable — the handle types contain an uninhabited void
+//! member, so their methods type-check without a single `panic!`.
+//! [`Literal`] is implemented for real (it is pure host data), so the
+//! literal-construction code paths stay testable.
+//!
+//! Swapping this path dependency for the real `xla` bindings re-enables
+//! the PJRT device path without touching partisol itself.
+
+use std::rc::Rc;
+
+/// Stub error: every fallible entry point reports unavailability.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The PJRT runtime is not present in this build.
+    Unavailable(String),
+    /// A host-side literal operation failed (shape mismatch, wrong type).
+    Literal(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unavailable(msg) => write!(f, "xla unavailable: {msg}"),
+            Error::Literal(msg) => write!(f, "xla literal error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Uninhabited: makes post-client handles statically unreachable.
+#[derive(Debug, Clone, Copy)]
+enum Void {}
+
+/// Host-side element storage for [`Literal`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Elements {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+impl Elements {
+    fn len(&self) -> usize {
+        match self {
+            Elements::F32(v) => v.len(),
+            Elements::F64(v) => v.len(),
+        }
+    }
+}
+
+/// Scalar types the bindings can move across the literal boundary.
+pub trait NativeType: Copy + 'static {
+    fn to_elements(data: &[Self]) -> Elements;
+    fn from_elements(e: &Elements) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn to_elements(data: &[Self]) -> Elements {
+        Elements::F32(data.to_vec())
+    }
+    fn from_elements(e: &Elements) -> Option<Vec<Self>> {
+        match e {
+            Elements::F32(v) => Some(v.clone()),
+            Elements::F64(_) => None,
+        }
+    }
+}
+
+impl NativeType for f64 {
+    fn to_elements(data: &[Self]) -> Elements {
+        Elements::F64(data.to_vec())
+    }
+    fn from_elements(e: &Elements) -> Option<Vec<Self>> {
+        match e {
+            Elements::F64(v) => Some(v.clone()),
+            Elements::F32(_) => None,
+        }
+    }
+}
+
+/// Marker trait mirroring the real crate's array-element bound.
+pub trait ArrayElement: NativeType {}
+
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+
+/// A host-side literal: element buffer plus dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Elements,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: T::to_elements(data),
+        }
+    }
+
+    /// Reshape without moving data; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(Error::Literal(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// First element of a tuple literal. The stub stores no tuples (they
+    /// only arise from device execution), so this is the identity.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Ok(self.clone())
+    }
+
+    /// Copy the elements out as `Vec<T>`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_elements(&self.data)
+            .ok_or_else(|| Error::Literal("literal element type mismatch".into()))
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module. Unconstructible in the stub: parsing requires XLA.
+pub struct HloModuleProto {
+    void: Void,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable(format!(
+            "cannot parse HLO {path}: built with the offline xla stub"
+        )))
+    }
+}
+
+/// An XLA computation handle. Only obtainable from an [`HloModuleProto`],
+/// which is itself unconstructible here.
+pub struct XlaComputation {
+    void: Void,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        match proto.void {}
+    }
+}
+
+/// PJRT client handle. `cpu()` is the gate: it reports unavailability.
+pub struct PjRtClient {
+    void: Void,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable(
+            "PJRT runtime not present (offline xla stub); native solvers remain available".into(),
+        ))
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self.void {}
+    }
+
+    pub fn device_count(&self) -> usize {
+        match self.void {}
+    }
+
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match computation.void {}
+    }
+}
+
+/// A compiled executable. Unreachable without a client.
+pub struct PjRtLoadedExecutable {
+    void: Void,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.void {}
+    }
+}
+
+/// A device buffer. Unreachable without an executable.
+pub struct PjRtBuffer {
+    void: Void,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.void {}
+    }
+}
+
+/// Keeps `Rc<PjRtLoadedExecutable>` in the signatures the callers use.
+pub type LoadedExecutableRc = Rc<PjRtLoadedExecutable>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_gated() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f64, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.dims(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f64>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert!(r.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn tuple1_is_identity_on_host_literals() {
+        let l = Literal::vec1(&[1.5f32]);
+        assert_eq!(l.to_tuple1().unwrap(), l);
+    }
+}
