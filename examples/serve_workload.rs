@@ -80,6 +80,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         m.plan_cache_hits, m.plan_cache_misses
     );
     println!(
+        "exec pool         : {} workers, {} fan-outs, {} chunks (threads parked between solves)",
+        m.pool_workers, m.pool_tasks, m.pool_chunks
+    );
+    println!(
+        "workspaces        : {} created / {} reused (steady state allocates only the response)",
+        m.workspaces_created, m.workspaces_reused
+    );
+    println!(
         "simulated GPU cost: mean {:.3} ms/solve (what this workload would cost on the paper's 2080 Ti)",
         mean(&sim_gpu_ms)
     );

@@ -1,7 +1,13 @@
 //! Runtime hot-path microbenchmarks (EXPERIMENTS.md §Perf, L3): plan
-//! cache hit vs miss, artifact routing, executable-cache hits, literal
-//! construction, Stage-1 execution and the full PJRT partition solve.
+//! cache hit vs miss, exec-pool dispatch vs thread spawn, artifact
+//! routing, executable-cache hits, literal construction, Stage-1
+//! execution and the full PJRT partition solve.
+//!
+//! The plan-cache and pool-dispatch sections always run (no artifacts
+//! needed) and are persisted to `BENCH_runtime_hotpath.json` at the
+//! repo root. Pass `--smoke` for the CI-sized iteration budget.
 
+use partisol::exec::WorkerPool;
 use partisol::gpu::spec::{Dtype, GpuCard};
 use partisol::plan::{BackendAvailability, PlanCache, PlanKey, Planner, SolveOptions};
 use partisol::runtime::artifact::StageKind;
@@ -9,16 +15,53 @@ use partisol::runtime::executor::pjrt_partition_solve;
 use partisol::runtime::pad::{to_blocks, BlockLayout};
 use partisol::runtime::Runtime;
 use partisol::solver::generator::random_dd_system;
+use partisol::util::json::{obj, Json};
 use partisol::util::stats::median;
 use partisol::util::timer::bench_loop;
 use partisol::util::Pcg64;
 use std::path::Path;
 use std::time::Duration;
 
+/// Orchestration overhead on the serve hot path: dispatching a fan-out
+/// to the parked worker pool vs spawning scoped threads — the per-solve
+/// fixed cost the pool removes, independent of any solve arithmetic.
+fn bench_pool_dispatch(loop_t: Duration, min_iters: usize) -> Vec<(&'static str, f64)> {
+    let mut out = Vec::new();
+    for workers in [1usize, 4] {
+        let pool = WorkerPool::new(workers);
+        let samples = bench_loop(loop_t, min_iters, || {
+            pool.run(workers, workers, |_, c| {
+                std::hint::black_box(c);
+                Ok(())
+            })
+            .unwrap();
+        });
+        let t_pool = median(&samples);
+
+        let samples = bench_loop(loop_t, min_iters, || {
+            std::thread::scope(|scope| {
+                for c in 0..workers {
+                    scope.spawn(move || std::hint::black_box(c));
+                }
+            });
+        });
+        let t_spawn = median(&samples);
+        println!(
+            "dispatch x{workers}:  pool {:>8.0} ns | spawn {:>8.0} ns ({:.1}x)",
+            t_pool * 1e9,
+            t_spawn * 1e9,
+            t_spawn / t_pool
+        );
+        out.push((if workers == 1 { "pool_x1" } else { "pool_x4" }, t_pool * 1e9));
+        out.push((if workers == 1 { "spawn_x1" } else { "spawn_x4" }, t_spawn * 1e9));
+    }
+    out
+}
+
 /// Plan-cache effect on the serve hot path: a cache hit must be far
 /// cheaper than a full kNN + occupancy-model + shard-layout planning
 /// pass. Runs without artifacts, so it is always part of the trajectory.
-fn bench_plan_cache() {
+fn bench_plan_cache(loop_t: Duration, min_iters: usize) -> (f64, f64, f64) {
     let avail = BackendAvailability::with_pjrt_ms(vec![4, 8, 16, 32, 64], true);
     let planner = Planner::paper(avail, GpuCard::Rtx2080Ti);
     let fingerprint = planner.fingerprint();
@@ -26,16 +69,17 @@ fn bench_plan_cache() {
 
     // Uncached planning cost (the work a miss pays on top of the lookup).
     let mut n = 1_000usize;
-    let samples = bench_loop(Duration::from_millis(200), 1000, || {
+    let samples = bench_loop(loop_t, min_iters, || {
         n = if n > 40_000_000 { 1_000 } else { n + 97 };
         let _ = std::hint::black_box(planner.plan(n, &opts));
     });
-    println!("plan (uncached):        {:>10.0} ns", median(&samples) * 1e9);
+    let t_plan = median(&samples);
+    println!("plan (uncached):        {:>10.0} ns", t_plan * 1e9);
 
     // Cache miss: lookup + plan + insert, unique n per iteration.
     let cache = PlanCache::new(1 << 16);
     let mut n = 1_000usize;
-    let samples = bench_loop(Duration::from_millis(200), 1000, || {
+    let samples = bench_loop(loop_t, min_iters, || {
         n += 97;
         let key = PlanKey {
             n,
@@ -54,7 +98,7 @@ fn bench_plan_cache() {
         planner: fingerprint,
     };
     let _ = cache.get_or_insert_with(key, || planner.plan(123_456, &opts));
-    let samples = bench_loop(Duration::from_millis(200), 1000, || {
+    let samples = bench_loop(loop_t, min_iters, || {
         let _ = std::hint::black_box(cache.get_or_insert_with(key, || planner.plan(123_456, &opts)));
     });
     let t_hit = median(&samples);
@@ -63,10 +107,36 @@ fn bench_plan_cache() {
         t_hit * 1e9,
         t_miss / t_hit
     );
+    (t_plan * 1e9, t_miss * 1e9, t_hit * 1e9)
 }
 
 fn main() {
-    bench_plan_cache();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (loop_t, min_iters) = if smoke {
+        (Duration::from_millis(1), 3)
+    } else {
+        (Duration::from_millis(200), 1000)
+    };
+    let (plan_ns, miss_ns, hit_ns) = bench_plan_cache(loop_t, min_iters);
+    let dispatch = bench_pool_dispatch(loop_t, if smoke { 3 } else { 200 });
+
+    let report = obj(vec![
+        ("bench", Json::Str("runtime_hotpath".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("plan_uncached_ns", Json::Num(plan_ns)),
+        ("plan_cache_miss_ns", Json::Num(miss_ns)),
+        ("plan_cache_hit_ns", Json::Num(hit_ns)),
+        (
+            "pool_dispatch_ns",
+            obj(dispatch
+                .iter()
+                .map(|&(label, ns)| (label, Json::Num(ns)))
+                .collect()),
+        ),
+    ]);
+    std::fs::write("BENCH_runtime_hotpath.json", report.to_string_pretty())
+        .expect("write BENCH_runtime_hotpath.json");
+    println!("wrote BENCH_runtime_hotpath.json");
 
     let rt = match Runtime::new(Path::new("artifacts")) {
         Ok(rt) => rt,

@@ -1,85 +1,279 @@
-//! Native-solver performance: sequential Thomas baseline vs the parallel
-//! partition method across sizes and thread counts (EXPERIMENTS.md §Perf,
-//! L3 targets: Thomas >= 1 elt/ns at cache-resident sizes).
+//! Native-solver performance: sequential Thomas baseline, the *old*
+//! spawn-threads-per-solve partition path, and the pooled
+//! allocation-free path (EXPERIMENTS.md §Perf).
+//!
+//! The headline comparison is spawn-per-solve vs the persistent worker
+//! pool at the paper's sizes (N = 2^20, m near the heuristic optimum):
+//! the pool removes two generations of `std::thread::scope` and every
+//! per-solve scratch allocation. A counting global allocator reports
+//! allocations-per-solve for both paths; a warmed-up pooled solve must
+//! report **zero** (also asserted by `tests/alloc_free.rs`).
+//!
+//! Results are written machine-readably to `BENCH_solver_native.json`
+//! at the repo root to seed the perf trajectory. Pass `--smoke` (the CI
+//! bench-smoke job does) for a tiny iteration count that still
+//! exercises the JSON-emitting path.
 
+use partisol::exec::{ExecCtx, WorkerPool};
 use partisol::gpu::spec::GpuCard;
 use partisol::plan::{BackendAvailability, Planner, SolveOptions};
 use partisol::solver::generator::random_dd_system;
-use partisol::solver::partition::{partition_solve_with_workspace, PartitionWorkspace};
+use partisol::solver::partition::{
+    assemble_interface, partition_solve_with_workspace, stage1_block, stage3_block,
+    BlockInterface, PartitionWorkspace,
+};
 use partisol::solver::thomas::{thomas_solve_with_scratch, ThomasScratch};
-use partisol::util::stats::{mean, median};
+use partisol::solver::TriSystem;
+use partisol::util::count_alloc::CountingAlloc;
+use partisol::util::json::{obj, Json};
+use partisol::util::stats::median;
 use partisol::util::timer::bench_loop;
 use partisol::util::Pcg64;
+use std::sync::Arc;
 use std::time::Duration;
 
-fn main() {
-    let mut rng = Pcg64::new(1);
-    // Per-size m comes from the production planner, not a hardcoded guess.
-    let planner = Planner::paper(BackendAvailability::native_only(), GpuCard::Rtx2080Ti);
-    println!("== native solver benchmarks (m from Planner::plan) ==\n");
-    println!(
-        "{:>10} {:>4} {:>14} {:>12} | {:>14} {:>10} {:>9}",
-        "N", "m", "thomas ms", "Melem/s", "partition ms", "Melem/s", "threads"
-    );
-    for n in [10_000usize, 100_000, 1_000_000, 10_000_000] {
-        let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
-        let mut scratch = ThomasScratch::with_capacity(n);
-        let mut x = vec![0.0; n];
-        let samples = bench_loop(Duration::from_millis(300), 3, || {
-            thomas_solve_with_scratch(&sys, &mut scratch, &mut x).unwrap();
-        });
-        let t_thomas = median(&samples);
+// Allocations-per-solve instrumentation (shared with tests/alloc_free.rs).
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
 
-        let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
-        let mut ws = PartitionWorkspace::new();
+// ---------------------------------------------------------------------------
+// The pre-pool execution path, kept here as the measured baseline: two
+// generations of scoped threads per solve, fresh scratch everywhere
+// (this is exactly what `solver::partition` did before `exec` existed).
+// ---------------------------------------------------------------------------
+
+fn spawn_stage1_all(
+    sys: &TriSystem<f64>,
+    m: usize,
+    threads: usize,
+    out: &mut Vec<BlockInterface<f64>>,
+) {
+    let p = sys.n() / m;
+    out.clear();
+    out.resize(p, BlockInterface::zero());
+    let workers = threads.max(1).min(p);
+    let chunk = p.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (w, out_chunk) in out.chunks_mut(chunk).enumerate() {
+            let sys = &sys;
+            scope.spawn(move || {
+                let mut cp = vec![0.0; m];
+                let mut dy = vec![0.0; m];
+                let mut du = vec![0.0; m];
+                let mut dv = vec![0.0; m];
+                for (j, slot) in out_chunk.iter_mut().enumerate() {
+                    let s = (w * chunk + j) * m;
+                    *slot = stage1_block(
+                        &sys.a[s..s + m],
+                        &sys.b[s..s + m],
+                        &sys.c[s..s + m],
+                        &sys.d[s..s + m],
+                        &mut cp,
+                        &mut dy,
+                        &mut du,
+                        &mut dv,
+                    )
+                    .unwrap();
+                }
+            });
+        }
+    });
+}
+
+fn spawn_stage3_all(
+    sys: &TriSystem<f64>,
+    m: usize,
+    boundary: &[f64],
+    threads: usize,
+    x: &mut [f64],
+) {
+    let p = sys.n() / m;
+    let workers = threads.max(1).min(p);
+    let chunk = p.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (w, x_chunk) in x.chunks_mut(chunk * m).enumerate() {
+            let sys = &sys;
+            scope.spawn(move || {
+                let mut cp = vec![0.0; m];
+                let mut dp = vec![0.0; m];
+                for (j, xb) in x_chunk.chunks_mut(m).enumerate() {
+                    let k = w * chunk + j;
+                    let s = k * m;
+                    stage3_block(
+                        &sys.a[s..s + m],
+                        &sys.b[s..s + m],
+                        &sys.c[s..s + m],
+                        &sys.d[s..s + m],
+                        boundary[2 * k],
+                        boundary[2 * k + 1],
+                        &mut cp,
+                        &mut dp,
+                        xb,
+                    )
+                    .unwrap();
+                }
+            });
+        }
+    });
+}
+
+/// Old `partition_solve`: spawns threads and allocates scratch per call.
+/// `n` must be a multiple of `m` (the bench uses exact sizes).
+fn spawn_partition_solve(sys: &TriSystem<f64>, m: usize, threads: usize) -> Vec<f64> {
+    let mut iface = Vec::new();
+    spawn_stage1_all(sys, m, threads, &mut iface);
+    let iface_sys = assemble_interface(&iface);
+    let mut scratch = ThomasScratch::with_capacity(iface_sys.n());
+    let mut boundary = vec![0.0; iface_sys.n()];
+    thomas_solve_with_scratch(&iface_sys, &mut scratch, &mut boundary).unwrap();
+    let mut x = vec![0.0; sys.n()];
+    spawn_stage3_all(sys, m, &boundary, threads, &mut x);
+    x
+}
+
+// ---------------------------------------------------------------------------
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (loop_ms, min_iters) = if smoke { (1, 1) } else { (300, 3) };
+    let loop_t = Duration::from_millis(loop_ms);
+
+    let threads = partisol::exec::default_pool_size();
+    let pool = Arc::new(WorkerPool::new(threads));
+    let exec = ExecCtx::with_pool(pool.clone(), threads);
+    let planner = Planner::paper(BackendAvailability::native_only(), GpuCard::Rtx2080Ti);
+
+    let mut rng = Pcg64::new(1);
+    let mut rows: Vec<Json> = Vec::new();
+
+    // The paper's headline size is N = 2^20 with m near the heuristic
+    // optimum; smaller sizes chart the trend (and keep --smoke fast).
+    let sizes: &[usize] = if smoke {
+        &[1 << 12]
+    } else {
+        &[1 << 14, 1 << 17, 1 << 20]
+    };
+
+    println!("== native solver: spawn-per-solve vs pooled ({threads} threads) ==\n");
+    println!(
+        "{:>10} {:>4} | {:>12} {:>12} {:>8} | {:>12} {:>12}",
+        "N", "m", "spawn ms", "pooled ms", "speedup", "allocs spawn", "allocs pooled"
+    );
+    for &n in sizes {
+        // Per-size m from the production planner, snapped to a divisor
+        // shape the spawn baseline handles (exact blocks).
         let m = planner.plan(n, &SolveOptions::default()).m();
-        let samples = bench_loop(Duration::from_millis(300), 3, || {
-            let _ = partition_solve_with_workspace(&sys, m, threads, &mut ws).unwrap();
+        let m = if n % m == 0 { m } else { 32 };
+        let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+
+        // Spawn-per-solve baseline.
+        let samples = bench_loop(loop_t, min_iters, || {
+            let _ = std::hint::black_box(spawn_partition_solve(&sys, m, threads));
         });
-        let t_part = median(&samples);
+        let t_spawn = median(&samples);
+        let spawn_allocs = CountingAlloc::count_during(|| {
+            let _ = std::hint::black_box(spawn_partition_solve(&sys, m, threads));
+        });
+
+        // Pooled path: warmed workspace, caller-provided output.
+        let mut ws = PartitionWorkspace::new();
+        let mut x = vec![0.0f64; n];
+        partition_solve_with_workspace(&sys, m, &exec, &mut ws, &mut x).unwrap(); // warm
+        let samples = bench_loop(loop_t, min_iters, || {
+            partition_solve_with_workspace(&sys, m, &exec, &mut ws, &mut x).unwrap();
+            std::hint::black_box(&x);
+        });
+        let t_pooled = median(&samples);
+        let pooled_allocs = CountingAlloc::count_during(|| {
+            partition_solve_with_workspace(&sys, m, &exec, &mut ws, &mut x).unwrap();
+        });
+
+        // Verify both paths agree before reporting them.
+        let x_spawn = spawn_partition_solve(&sys, m, threads);
+        assert_eq!(x, x_spawn, "pooled and spawn paths must be bit-identical");
+
         println!(
-            "{:>10} {:>4} {:>14.3} {:>12.1} | {:>14.3} {:>10.1} {:>9}",
+            "{:>10} {:>4} | {:>12.3} {:>12.3} {:>7.2}x | {:>12} {:>12}",
             n,
             m,
-            t_thomas * 1e3,
-            n as f64 / t_thomas / 1e6,
-            t_part * 1e3,
-            n as f64 / t_part / 1e6,
-            threads
+            t_spawn * 1e3,
+            t_pooled * 1e3,
+            t_spawn / t_pooled,
+            spawn_allocs,
+            pooled_allocs
         );
+        rows.push(obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("m", Json::Num(m as f64)),
+            ("threads", Json::Num(threads as f64)),
+            ("spawn_ms", Json::Num(t_spawn * 1e3)),
+            ("pooled_ms", Json::Num(t_pooled * 1e3)),
+            ("speedup", Json::Num(t_spawn / t_pooled)),
+            ("spawn_allocs_per_solve", Json::Num(spawn_allocs as f64)),
+            ("pooled_allocs_per_solve", Json::Num(pooled_allocs as f64)),
+        ]));
     }
 
-    // Thread scaling at a fixed size (the Stage-1/3 data parallelism).
-    println!("\npartition thread scaling at N = 4e6, m = 32:");
-    let n = 4_000_000;
+    // Thomas baseline for scale (EXPERIMENTS.md: >= 1 elt/ns cached).
+    let n = if smoke { 1 << 12 } else { 1 << 20 };
     let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+    let mut scratch = ThomasScratch::with_capacity(n);
+    let mut x = vec![0.0; n];
+    let samples = bench_loop(loop_t, min_iters, || {
+        thomas_solve_with_scratch(&sys, &mut scratch, &mut x).unwrap();
+    });
+    let t_thomas = median(&samples);
+    println!(
+        "\nthomas N={n}: {:.3} ms ({:.1} Melem/s)",
+        t_thomas * 1e3,
+        n as f64 / t_thomas / 1e6
+    );
+
+    // Pooled thread scaling at a fixed size (Stage-1/3 data parallelism).
+    let n_scale = if smoke { 1 << 12 } else { 4 << 20 };
+    println!("\npooled thread scaling at N = {n_scale}, m = 32:");
+    let sys = random_dd_system::<f64>(&mut rng, n_scale, 0.5);
+    let mut scaling = Vec::new();
     let mut base = 0.0;
-    for threads in [1usize, 2, 4, 8] {
+    for cap in [1usize, 2, 4, 8] {
+        let exec_cap = ExecCtx::with_pool(pool.clone(), cap);
         let mut ws = PartitionWorkspace::new();
-        let samples = bench_loop(Duration::from_millis(400), 3, || {
-            let _ = partition_solve_with_workspace(&sys, 32, threads, &mut ws).unwrap();
+        let mut x = vec![0.0; n_scale];
+        partition_solve_with_workspace(&sys, 32, &exec_cap, &mut ws, &mut x).unwrap();
+        let samples = bench_loop(loop_t, min_iters, || {
+            partition_solve_with_workspace(&sys, 32, &exec_cap, &mut ws, &mut x).unwrap();
         });
         let t = median(&samples);
-        if threads == 1 {
+        if cap == 1 {
             base = t;
         }
         println!(
             "  threads {:>2}: {:>8.3} ms  speedup {:.2}x",
-            threads,
+            cap,
             t * 1e3,
             base / t
         );
+        scaling.push(obj(vec![
+            ("threads", Json::Num(cap as f64)),
+            ("ms", Json::Num(t * 1e3)),
+        ]));
     }
 
-    // Per-m cost shape (the quantity the whole paper tunes).
-    println!("\npartition time vs m at N = 1e6 (4 threads):");
-    let n = 1_000_000;
-    let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
-    for m in [4usize, 8, 16, 32, 64, 128] {
-        let mut ws = PartitionWorkspace::new();
-        let samples = bench_loop(Duration::from_millis(200), 3, || {
-            let _ = partition_solve_with_workspace(&sys, m, 4, &mut ws).unwrap();
-        });
-        println!("  m {:>4}: {:>8.3} ms (mean {:.3})", m, median(&samples) * 1e3, mean(&samples) * 1e3);
-    }
+    let report = obj(vec![
+        ("bench", Json::Str("solver_native".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("pool_size", Json::Num(threads as f64)),
+        ("results", Json::Arr(rows)),
+        (
+            "thomas_baseline",
+            obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("ms", Json::Num(t_thomas * 1e3)),
+            ]),
+        ),
+        ("pooled_scaling", Json::Arr(scaling)),
+    ]);
+    std::fs::write("BENCH_solver_native.json", report.to_string_pretty())
+        .expect("write BENCH_solver_native.json");
+    println!("\nwrote BENCH_solver_native.json");
 }

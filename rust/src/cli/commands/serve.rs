@@ -17,6 +17,8 @@ OPTIONS:
     --min-n <N>         smallest SLAE (default 1e3)
     --max-n <N>         largest SLAE (default 2e5)
     --workers <w>       native worker threads (default 2)
+    --pool-size <p>     exec-pool worker threads shared by all solves
+                        (default: all cores; [exec] pool_size in config)
     --config <path>     TOML config file (flags override it)
     --seed <s>          workload seed (default 7)
 ";
@@ -37,6 +39,12 @@ pub fn run(argv: &[String]) -> Result<()> {
         None => Config::default(),
     };
     cfg.workers = args.get_usize("workers", cfg.workers)?;
+    cfg.pool_size = args.get_usize("pool-size", cfg.pool_size)?;
+    if cfg.workers == 0 || cfg.pool_size == 0 {
+        return Err(crate::Error::Cli(
+            "--workers and --pool-size must be positive".into(),
+        ));
+    }
 
     let svc = Service::start(cfg)?;
     let mut rng = Pcg64::new(seed);
@@ -90,6 +98,14 @@ pub fn run(argv: &[String]) -> Result<()> {
     println!(
         "plan cache         : {} hits / {} misses",
         m.plan_cache_hits, m.plan_cache_misses
+    );
+    println!(
+        "exec pool          : {} workers, {} fan-outs, {} chunks",
+        m.pool_workers, m.pool_tasks, m.pool_chunks
+    );
+    println!(
+        "workspaces         : {} created / {} reused",
+        m.workspaces_created, m.workspaces_reused
     );
     svc.shutdown();
     Ok(())

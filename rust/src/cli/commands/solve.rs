@@ -26,7 +26,9 @@ OPTIONS:
     --backend <b>       pjrt | native | thomas (default: planner's choice)
     --artifacts <dir>   artifact directory (default artifacts)
     --seed <s>          system generator seed (default 42)
-    --threads <t>       native solver threads (default: all cores)
+    --threads <t>       parallelism cap on the shared exec pool
+                        (default: all cores; no threads are spawned
+                        per solve — the persistent pool is reused)
     --explain           print the chosen SolvePlan before solving
 ";
 
@@ -40,10 +42,7 @@ pub fn run(argv: &[String]) -> Result<()> {
     let dtype = args.get("dtype").map(parse_dtype).transpose()?.unwrap_or(Dtype::F64);
     let artifacts = args.get("artifacts").unwrap_or("artifacts").to_string();
     let seed = args.get_u64("seed", 42)?;
-    let threads = args.get_usize(
-        "threads",
-        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4),
-    )?;
+    let threads = args.get_usize("threads", crate::exec::default_pool_size())?;
 
     // One decision layer: probe what backends exist, then plan.
     let avail = match Manifest::load(Path::new(&artifacts)) {

@@ -36,8 +36,14 @@ pub struct Config {
     pub card: GpuCard,
     /// Use the native Rust solver instead of the PJRT runtime.
     pub native_fallback: bool,
-    /// CPU threads for the native solver path.
+    /// Per-solve parallelism cap on the shared exec pool; 0 (the
+    /// default) means "match `pool_size`", so raising the pool raises
+    /// per-solve parallelism without touching a second knob.
     pub solver_threads: usize,
+    /// Worker threads in the service's persistent exec pool
+    /// (`[exec] pool_size`; CLI `--threads` / `--pool-size` flags map
+    /// onto the same pool configuration). Defaults to all cores.
+    pub pool_size: usize,
 }
 
 impl Default for Config {
@@ -52,9 +58,20 @@ impl Default for Config {
             artifacts_dir: "artifacts".to_string(),
             card: GpuCard::Rtx2080Ti,
             native_fallback: true,
-            solver_threads: std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4),
+            solver_threads: 0,
+            pool_size: crate::exec::default_pool_size(),
+        }
+    }
+}
+
+impl Config {
+    /// The effective per-solve parallelism cap: `solver_threads`, with
+    /// 0 meaning "as wide as the pool".
+    pub fn effective_solver_threads(&self) -> usize {
+        if self.solver_threads == 0 {
+            self.pool_size
+        } else {
+            self.solver_threads
         }
     }
 }
@@ -126,6 +143,9 @@ impl Config {
         if let Some(v) = t.get("service.solver_threads") {
             cfg.solver_threads = int_field(v, "service.solver_threads")?;
         }
+        if let Some(v) = t.get("exec.pool_size") {
+            cfg.pool_size = int_field(v, "exec.pool_size")?;
+        }
         if let Some(v) = t.get("gpu.card") {
             cfg.card = match v.as_str() {
                 Some("rtx2080ti") => GpuCard::Rtx2080Ti,
@@ -138,9 +158,9 @@ impl Config {
                 }
             };
         }
-        if cfg.workers == 0 || cfg.queue_depth == 0 || cfg.max_batch == 0 {
+        if cfg.workers == 0 || cfg.queue_depth == 0 || cfg.max_batch == 0 || cfg.pool_size == 0 {
             return Err(Error::Config(
-                "workers, queue_depth, max_batch must be positive".into(),
+                "workers, queue_depth, max_batch, pool_size must be positive".into(),
             ));
         }
         Ok(cfg)
@@ -194,6 +214,23 @@ mod tests {
         let c = Config::from_str("[service]\nplan_cache = 0").unwrap();
         assert_eq!(c.plan_cache, 0);
         assert_eq!(Config::default().plan_cache, 512);
+    }
+
+    #[test]
+    fn exec_pool_size_is_configurable() {
+        let c = Config::from_str("[exec]\npool_size = 3").unwrap();
+        assert_eq!(c.pool_size, 3);
+        assert!(Config::default().pool_size >= 1);
+        assert!(Config::from_str("[exec]\npool_size = 0").is_err());
+    }
+
+    #[test]
+    fn solver_threads_default_follows_pool_size() {
+        let c = Config::from_str("[exec]\npool_size = 6").unwrap();
+        assert_eq!(c.solver_threads, 0, "unset = follow the pool");
+        assert_eq!(c.effective_solver_threads(), 6);
+        let c = Config::from_str("[service]\nsolver_threads = 2\n[exec]\npool_size = 6").unwrap();
+        assert_eq!(c.effective_solver_threads(), 2, "explicit cap wins");
     }
 
     #[test]

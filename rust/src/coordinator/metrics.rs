@@ -68,7 +68,9 @@ pub struct Metrics {
 }
 
 /// A point-in-time copy for reporting. The plan-cache counters live in
-/// the router's cache; `Service::metrics` fills them in.
+/// the router's cache, and the exec-pool / workspace-reuse counters in
+/// the shared worker pool and workspace pool; `Service::metrics` fills
+/// them in.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
@@ -81,6 +83,15 @@ pub struct MetricsSnapshot {
     pub thomas_solves: u64,
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
+    /// Worker threads in the service's shared exec pool.
+    pub pool_workers: u64,
+    /// Fan-outs dispatched to the pool (Stage-1/Stage-3 passes).
+    pub pool_tasks: u64,
+    /// Chunks (partition blocks) executed by the pool.
+    pub pool_chunks: u64,
+    /// Solve workspaces created (cold) vs recycled (warm).
+    pub workspaces_created: u64,
+    pub workspaces_reused: u64,
     pub mean_e2e_us: f64,
     pub p50_e2e_us: f64,
     pub p99_e2e_us: f64,
@@ -110,6 +121,11 @@ impl Metrics {
             thomas_solves: self.thomas_solves.load(Ordering::Relaxed),
             plan_cache_hits: 0,
             plan_cache_misses: 0,
+            pool_workers: 0,
+            pool_tasks: 0,
+            pool_chunks: 0,
+            workspaces_created: 0,
+            workspaces_reused: 0,
             mean_e2e_us: self.e2e_latency.mean_us(),
             p50_e2e_us: self.e2e_latency.percentile_us(50.0),
             p99_e2e_us: self.e2e_latency.percentile_us(99.0),

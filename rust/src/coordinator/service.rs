@@ -6,6 +6,12 @@
 //! [`SolvePlan`] (served from the LRU plan cache on repeated sizes), and
 //! the worker threads hand plans to [`SolverBackend`] implementations —
 //! the service itself contains no backend dispatch logic.
+//!
+//! All native solves share **one** persistent exec pool
+//! (`cfg.pool_size` threads, parked between fan-outs) and one recycled
+//! workspace pool, so a steady-state request allocates only its
+//! response vector; the pool/task/workspace-reuse counters are exported
+//! through [`Service::metrics`].
 
 use super::batcher::{concat_systems, form_batches, RoutedJob};
 use super::metrics::Metrics;
@@ -13,6 +19,7 @@ use super::request::{Backend, SolveRequest, SolveResponse};
 use super::router::{Route, Router};
 use crate::config::Config;
 use crate::error::{Error, Result};
+use crate::exec::{ExecCtx, WorkerPool, WorkspacePool};
 use crate::plan::{BackendAvailability, NativeBackend, PjrtBackend, SolvePlan, SolverBackend};
 use crate::runtime::Runtime;
 use crate::solver::residual::max_abs_residual;
@@ -47,6 +54,13 @@ struct Inner {
     metrics: Metrics,
     queue: Mutex<QueueState>,
     cv: Condvar,
+    /// One persistent exec pool shared by the device thread and every
+    /// native worker (total CPU parallelism = `cfg.pool_size`, not
+    /// `workers x solver_threads`).
+    pool: Arc<WorkerPool>,
+    /// One native backend (pool handle + recycled workspaces) shared
+    /// across requests.
+    native: NativeBackend,
 }
 
 /// Handle to a running service.
@@ -76,12 +90,17 @@ impl Service {
         }
         let has_pjrt = avail.has_pjrt();
         let router = Router::from_config(&cfg, avail)?;
+        let pool = Arc::new(WorkerPool::new(cfg.pool_size));
+        let exec = ExecCtx::with_pool(pool.clone(), cfg.effective_solver_threads());
+        let native = NativeBackend::with_workspaces(exec, Arc::new(WorkspacePool::new()));
         let inner = Arc::new(Inner {
             cfg: cfg.clone(),
             router,
             metrics: Metrics::default(),
             queue: Mutex::new(QueueState::default()),
             cv: Condvar::new(),
+            pool,
+            native,
         });
 
         let mut threads = Vec::new();
@@ -155,6 +174,13 @@ impl Service {
         let (hits, misses) = self.inner.router.cache_stats();
         snap.plan_cache_hits = hits;
         snap.plan_cache_misses = misses;
+        let pool = self.inner.pool.stats();
+        snap.pool_workers = pool.workers as u64;
+        snap.pool_tasks = pool.tasks;
+        snap.pool_chunks = pool.chunks;
+        let ws = self.inner.native.workspace_stats();
+        snap.workspaces_created = ws.created;
+        snap.workspaces_reused = ws.reused;
         snap
     }
 
@@ -294,8 +320,7 @@ fn native_worker(inner: Arc<Inner>) {
 
 fn execute_native(inner: &Arc<Inner>, job: Job) {
     let t0 = Instant::now();
-    let backend = NativeBackend::new(inner.cfg.solver_threads);
-    let result = backend.execute(&job.plan, &job.req.sys);
+    let result = inner.native.execute(&job.plan, &job.req.sys);
     let exec_us = t0.elapsed().as_secs_f64() * 1e6;
     match result {
         Ok(outcome) => {
@@ -448,6 +473,32 @@ mod tests {
         }
         let m = svc.metrics();
         assert_eq!(m.completed, 40);
+    }
+
+    #[test]
+    fn pool_and_workspace_counters_are_exported() {
+        let svc = Service::start(native_cfg()).unwrap();
+        let mut rng = Pcg64::new(6);
+        for i in 0..8 {
+            let sys = random_dd_system(&mut rng, 5_000, 0.5);
+            let resp = svc.solve(SolveRequest::new(i, sys)).unwrap();
+            assert_eq!(resp.backend, Backend::Native);
+        }
+        let m = svc.metrics();
+        assert!(m.pool_workers >= 1);
+        assert!(
+            m.pool_tasks >= 16,
+            "each native solve fans out stage 1 and stage 3 (got {})",
+            m.pool_tasks
+        );
+        assert!(m.pool_chunks >= m.pool_tasks);
+        assert_eq!(
+            m.workspaces_created + m.workspaces_reused,
+            8,
+            "every native solve checks exactly one workspace out"
+        );
+        assert!(m.workspaces_created >= 1);
+        svc.shutdown();
     }
 
     #[test]

@@ -1,0 +1,94 @@
+//! Per-worker reusable scratch arenas.
+//!
+//! Every pool worker owns one [`ScratchArena`]: a word-aligned buffer
+//! that hands out typed scratch slices (`f32`/`f64` via [`Scalar`]) and
+//! only touches the allocator while it is *growing*. Once a workload's
+//! peak scratch size has been seen, every further `take` is a pointer
+//! cast — the steady-state solve path performs zero heap allocations
+//! (asserted by `tests/alloc_free.rs`).
+//!
+//! Contents are **not** cleared between tasks: callers must treat the
+//! returned slice as uninitialized and write every element they read
+//! (all solver kernels do — `stage1_block`/`stage3_block` fully
+//! overwrite their scratch before reading it), which is also what keeps
+//! results bit-identical to the old fresh-`vec!` path.
+
+use crate::solver::Scalar;
+
+/// A growable, reusable scratch buffer aligned for any [`Scalar`] type.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    /// `u64` storage so every `Scalar` (align <= 8) can be carved out of
+    /// the same buffer regardless of the dtype of the previous task.
+    words: Vec<u64>,
+}
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena { words: Vec::new() }
+    }
+
+    /// Bytes currently retained by the arena.
+    pub fn capacity_bytes(&self) -> usize {
+        self.words.capacity() * std::mem::size_of::<u64>()
+    }
+
+    /// Borrow the whole arena as one `&mut [T]` of length `len`, growing
+    /// (and zero-filling new words) only if the current buffer is too
+    /// small. The content of a large-enough buffer is whatever the last
+    /// task left there — callers must write before they read.
+    pub fn take<T: Scalar>(&mut self, len: usize) -> &mut [T] {
+        debug_assert!(std::mem::align_of::<T>() <= std::mem::align_of::<u64>());
+        let words = (len * std::mem::size_of::<T>()).div_ceil(std::mem::size_of::<u64>());
+        if self.words.len() < words {
+            self.words.resize(words, 0);
+        }
+        // SAFETY: the buffer is u64-aligned (>= align_of::<T>(), asserted
+        // above), holds at least `len * size_of::<T>()` initialized bytes,
+        // and `T: Scalar` is plain-old-data (f32/f64), so any bit pattern
+        // is a valid `T`. The borrow of `self` prevents aliasing.
+        unsafe { std::slice::from_raw_parts_mut(self.words.as_mut_ptr() as *mut T, len) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_grows_then_reuses() {
+        let mut a = ScratchArena::new();
+        {
+            let s = a.take::<f64>(16);
+            assert_eq!(s.len(), 16);
+            s.fill(1.5);
+        }
+        let cap = a.capacity_bytes();
+        assert!(cap >= 16 * 8);
+        // A smaller or equal request must not grow the buffer.
+        let _ = a.take::<f64>(8);
+        let _ = a.take::<f32>(32); // 128 bytes <= 16 * 8
+        assert_eq!(a.capacity_bytes(), cap);
+    }
+
+    #[test]
+    fn take_supports_both_dtypes_in_turn() {
+        let mut a = ScratchArena::new();
+        a.take::<f32>(10).fill(2.0);
+        let d = a.take::<f64>(5);
+        d.fill(3.0);
+        assert!(d.iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn split_into_parallel_scratch_slices() {
+        // The solver pattern: one take, then split_at_mut into cp/dy/du/dv.
+        let mut a = ScratchArena::new();
+        let m = 7;
+        let buf = a.take::<f64>(4 * m);
+        let (cp, rest) = buf.split_at_mut(m);
+        let (dy, rest) = rest.split_at_mut(m);
+        let (du, dv) = rest.split_at_mut(m);
+        assert_eq!((cp.len(), dy.len(), du.len(), dv.len()), (m, m, m, m));
+    }
+}

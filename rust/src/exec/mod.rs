@@ -1,0 +1,51 @@
+//! The execution engine under the native solver layer: a persistent
+//! worker pool, per-worker scratch arenas, and workspace recycling —
+//! everything needed for an allocation-free steady-state solve path.
+//!
+//! Before this module existed, every native solve opened
+//! `std::thread::scope` twice per recursion level (Stage 1 and Stage 3)
+//! and re-allocated every scratch buffer; the ML-tuned sub-system size
+//! the paper contributes was being spent on orchestration overhead.
+//! Now:
+//!
+//! * [`WorkerPool`] — threads spawned once, parked on a condvar between
+//!   fan-outs. [`WorkerPool::run`] hands a borrowed closure to the
+//!   workers and blocks until completion; no allocation per call.
+//! * [`ScratchArena`] — one per worker, reused across fan-outs and
+//!   dtypes; grows to the workload's peak and then never touches the
+//!   allocator again.
+//! * [`WorkspacePool`] — recycles whole `solver::SolveWorkspace`s
+//!   across coordinator requests, with created/reused counters in the
+//!   service metrics.
+//! * [`ExecCtx`] — the handle the solver layer threads through
+//!   `stage1_all` / `stage3_all` / `recursive_solve`: a pool plus a
+//!   per-call parallelism cap. [`ExecCtx::global`] adapts the legacy
+//!   `threads: usize` APIs onto the process-wide [`global_pool`].
+//!
+//! # Ownership
+//!
+//! The coordinator `Service` owns one pool (sized by
+//! `config.pool_size`) and shares it across the device thread and all
+//! native workers; CLI one-shot commands and the compatibility solver
+//! APIs use the lazily-created [`global_pool`]. Tests that pin a pool
+//! size construct their own [`WorkerPool`] and wrap it in an
+//! [`ExecCtx`].
+//!
+//! # Determinism contract
+//!
+//! Results are bit-identical across pool sizes and parallelism caps:
+//! chunk content is defined by the caller independently of the pool
+//! (one partition block per chunk in the solver layer), workers take
+//! deterministic contiguous chunk ranges, every chunk writes a disjoint
+//! output range, and scratch is fully overwritten before it is read.
+//! See `pool.rs` for the full argument; `partition::tests::
+//! thread_count_invariance` and `recursive::tests::pool_size_invariance`
+//! assert it.
+
+pub mod arena;
+pub mod pool;
+pub mod workspace;
+
+pub use arena::ScratchArena;
+pub use pool::{default_pool_size, global_pool, ExecCtx, PoolStats, SendPtr, WorkerPool};
+pub use workspace::{WorkspacePool, WorkspaceStats};

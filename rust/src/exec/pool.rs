@@ -1,0 +1,499 @@
+//! The persistent worker pool: threads are spawned **once** and parked
+//! on a condvar between calls, replacing the spawn-two-generations-of-
+//! `std::thread::scope`-per-solve pattern the solver layer started with.
+//!
+//! # Execution model
+//!
+//! [`WorkerPool::run`] submits one *fan-out*: a closure invoked once per
+//! chunk index `0..chunks`, each call receiving the executing worker's
+//! private [`ScratchArena`]. The submitting thread blocks until every
+//! participating worker has checked in, so the closure may freely borrow
+//! the caller's stack (systems, output slices) — the pool erases the
+//! lifetime internally but never lets the borrow escape the call.
+//!
+//! # Determinism contract
+//!
+//! Chunk *content* is defined by the caller (the solver layer uses one
+//! partition block per chunk) and never depends on the pool size.
+//! Worker `w` of the `s` participating workers executes the contiguous
+//! chunk range `[w * ceil(chunks/s), (w+1) * ceil(chunks/s))` — the same
+//! static assignment the old scoped-thread code used. Because every
+//! chunk writes a disjoint output range and reads only shared inputs
+//! plus scratch it fully overwrites, the results are **bit-identical**
+//! across pool sizes and `max_workers` values (asserted by the
+//! `thread_count_invariance` / pool-size invariance tests).
+//!
+//! # Concurrency
+//!
+//! One fan-out runs at a time per pool; concurrent `run` calls serialize
+//! on a submission lock (the coordinator shares one pool across all
+//! request workers — total CPU parallelism is the pool size, not
+//! `workers x solver_threads`). `run` never allocates on the steady
+//! state path: the task is passed to workers as a raw `&dyn` borrow,
+//! completion is a counter under the state mutex.
+
+use super::arena::ScratchArena;
+use crate::error::{Error, Result};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Raw mutable pointer wrapper so fan-out closures can write disjoint
+/// output ranges from several workers. The caller asserts disjointness;
+/// the solver layer derives ranges from the chunk index so two chunks
+/// can never alias.
+#[derive(Clone, Copy, Debug)]
+pub struct SendPtr<T>(pub *mut T);
+
+// SAFETY: SendPtr is a plain address; the fan-out protocol (disjoint
+// per-chunk ranges, submitter blocked until completion) provides the
+// actual synchronization.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Object-safe task: run one chunk of a fan-out on a worker's arena.
+trait ChunkTask: Sync {
+    fn run_chunk(&self, arena: &mut ScratchArena, chunk: usize);
+}
+
+/// Adapter recording the first error a fallible chunk closure returns.
+struct ClosureTask<'a, F> {
+    f: F,
+    err: &'a Mutex<Option<Error>>,
+}
+
+impl<F> ChunkTask for ClosureTask<'_, F>
+where
+    F: Fn(&mut ScratchArena, usize) -> Result<()> + Sync,
+{
+    fn run_chunk(&self, arena: &mut ScratchArena, chunk: usize) {
+        if let Err(e) = (self.f)(arena, chunk) {
+            let mut slot = self.err.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+        }
+    }
+}
+
+type TaskPtr = *const (dyn ChunkTask + 'static);
+
+/// Worker-visible state of the current fan-out.
+struct PoolState {
+    /// Bumped once per submitted fan-out; workers compare against their
+    /// last-seen epoch so a woken worker never re-runs a finished task.
+    epoch: u64,
+    /// Lifetime-erased task pointer; only valid while the submitter is
+    /// blocked inside [`WorkerPool::run`].
+    task: Option<TaskPtr>,
+    chunks: usize,
+    /// Number of workers participating in the current fan-out.
+    stride: usize,
+    /// Participating workers that have not checked in yet.
+    remaining: usize,
+    /// Set when a worker's chunk closure panicked.
+    panicked: bool,
+    shutdown: bool,
+}
+
+// SAFETY: the raw task pointer makes PoolState automatically !Send; it
+// is only ever dereferenced between submission and the final check-in,
+// while the submitting frame (which owns the task) is blocked.
+unsafe impl Send for PoolState {}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers park here between fan-outs.
+    work_cv: Condvar,
+    /// The submitter parks here until `remaining == 0`.
+    done_cv: Condvar,
+}
+
+/// Cumulative pool counters (exported through the coordinator metrics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub workers: usize,
+    /// Fan-outs executed (`run` calls that dispatched work).
+    pub tasks: u64,
+    /// Total chunks dispatched across all fan-outs.
+    pub chunks: u64,
+}
+
+/// A persistent worker pool. Dropping the pool shuts the workers down
+/// and joins them; the [`global_pool`] instance lives for the process.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+    /// Serializes fan-outs (one task in flight per pool).
+    submit: Mutex<()>,
+    tasks: AtomicU64,
+    chunks: AtomicU64,
+}
+
+impl WorkerPool {
+    /// Spawn `size` parked workers (clamped to >= 1).
+    pub fn new(size: usize) -> WorkerPool {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                task: None,
+                chunks: 0,
+                stride: 0,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..size)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("partisol-exec-{w}"))
+                    .spawn(move || worker_loop(shared, w))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            handles,
+            size,
+            submit: Mutex::new(()),
+            tasks: AtomicU64::new(0),
+            chunks: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.size,
+            tasks: self.tasks.load(Ordering::Relaxed),
+            chunks: self.chunks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `f` once per chunk in `0..chunks` across at most `max_workers`
+    /// workers, blocking until every chunk has completed. Returns the
+    /// first error any chunk reported. See the module docs for the
+    /// determinism contract; steady-state calls do not allocate.
+    pub fn run<F>(&self, chunks: usize, max_workers: usize, f: F) -> Result<()>
+    where
+        F: Fn(&mut ScratchArena, usize) -> Result<()> + Sync,
+    {
+        if chunks == 0 {
+            return Ok(());
+        }
+        let err = Mutex::new(None);
+        let task = ClosureTask { f, err: &err };
+        let task_obj: &dyn ChunkTask = &task;
+        let task_raw: *const (dyn ChunkTask + '_) = task_obj;
+        // SAFETY: we only erase the lifetime. The pointer is cleared and
+        // never dereferenced again after the wait below observes
+        // `remaining == 0`, and `run` does not return before that, so
+        // the erased borrow cannot outlive `task`/`err`/`f`.
+        let task_ptr: TaskPtr = unsafe { std::mem::transmute(task_raw) };
+
+        let stride = self.size.min(max_workers.max(1)).min(chunks);
+        let panicked;
+        {
+            let _guard = self.submit.lock().unwrap();
+            {
+                let mut st = self.shared.state.lock().unwrap();
+                st.epoch = st.epoch.wrapping_add(1);
+                st.task = Some(task_ptr);
+                st.chunks = chunks;
+                st.stride = stride;
+                st.remaining = stride;
+                st.panicked = false;
+            }
+            self.shared.work_cv.notify_all();
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.task = None;
+            panicked = st.panicked;
+        }
+        self.tasks.fetch_add(1, Ordering::Relaxed);
+        self.chunks.fetch_add(chunks as u64, Ordering::Relaxed);
+        if panicked {
+            return Err(Error::Solver("exec pool worker panicked".into()));
+        }
+        match err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, w: usize) {
+    let mut arena = ScratchArena::new();
+    let mut seen_epoch = 0u64;
+    loop {
+        // Wait for a fan-out this worker participates in.
+        let (task_ptr, chunks, stride) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen_epoch {
+                    seen_epoch = st.epoch;
+                    if w < st.stride {
+                        break (st.task.expect("task set with epoch"), st.chunks, st.stride);
+                    }
+                    // Not participating in this fan-out; keep waiting.
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+
+        // Deterministic contiguous chunk range (see module docs).
+        let per = chunks.div_ceil(stride);
+        let lo = (w * per).min(chunks);
+        let hi = ((w + 1) * per).min(chunks);
+        // SAFETY: the submitter keeps the task alive until this worker's
+        // check-in below, and only hands out disjoint chunk indices.
+        let task: &dyn ChunkTask = unsafe { &*task_ptr };
+        let ok = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            for c in lo..hi {
+                task.run_chunk(&mut arena, c);
+            }
+        }))
+        .is_ok();
+
+        // Check in; the last participant wakes the submitter.
+        let mut st = shared.state.lock().unwrap();
+        if !ok {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-wide default pool.
+// ---------------------------------------------------------------------------
+
+/// Default pool size: one worker per available core.
+pub fn default_pool_size() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+static GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+
+/// The process-wide worker pool, lazily created at [`default_pool_size`].
+/// Entry points that take a plain `threads: usize` (the compatibility
+/// solver API, `NativeBackend::new`) cap their parallelism on this pool
+/// instead of spawning threads per call.
+pub fn global_pool() -> &'static Arc<WorkerPool> {
+    GLOBAL.get_or_init(|| Arc::new(WorkerPool::new(default_pool_size())))
+}
+
+/// A pool handle plus a per-call parallelism cap: what the solver layer
+/// threads through `stage1_all`/`stage3_all`/`recursive_solve` instead
+/// of a bare thread count.
+#[derive(Clone)]
+pub struct ExecCtx {
+    pool: Arc<WorkerPool>,
+    parallelism: usize,
+}
+
+impl ExecCtx {
+    /// The global pool, capped at `parallelism` workers per fan-out.
+    pub fn global(parallelism: usize) -> ExecCtx {
+        ExecCtx {
+            pool: global_pool().clone(),
+            parallelism: parallelism.max(1),
+        }
+    }
+
+    /// An explicit pool (service-owned, or a test pool of a fixed size).
+    pub fn with_pool(pool: Arc<WorkerPool>, parallelism: usize) -> ExecCtx {
+        ExecCtx {
+            pool,
+            parallelism: parallelism.max(1),
+        }
+    }
+
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
+    }
+
+    /// Fan `f` out over `chunks` chunks (see [`WorkerPool::run`]).
+    pub fn run<F>(&self, chunks: usize, f: F) -> Result<()>
+    where
+        F: Fn(&mut ScratchArena, usize) -> Result<()> + Sync,
+    {
+        self.pool.run(chunks, self.parallelism, f)
+    }
+}
+
+impl std::fmt::Debug for ExecCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecCtx")
+            .field("pool_size", &self.pool.size())
+            .field("parallelism", &self.parallelism)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let mut hits = vec![0u8; 1000];
+        let ptr = SendPtr(hits.as_mut_ptr());
+        pool.run(1000, 4, |_, c| {
+            // SAFETY: each chunk owns element c.
+            unsafe { *ptr.0.add(c) += 1 };
+            Ok(())
+        })
+        .unwrap();
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn repeated_fanouts_reuse_the_same_threads() {
+        let pool = WorkerPool::new(2);
+        let count = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(8, 2, |_, _| {
+                count.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            })
+            .unwrap();
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 400);
+        let stats = pool.stats();
+        assert_eq!(stats.tasks, 50);
+        assert_eq!(stats.chunks, 400);
+        assert_eq!(stats.workers, 2);
+    }
+
+    #[test]
+    fn first_error_is_propagated() {
+        let pool = WorkerPool::new(3);
+        let r = pool.run(10, 3, |_, c| {
+            if c >= 5 {
+                Err(Error::Solver(format!("chunk {c} failed")))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn worker_panic_is_reported_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let r = pool.run(4, 2, |_, c| {
+            if c == 1 {
+                panic!("boom");
+            }
+            Ok(())
+        });
+        assert!(r.is_err());
+        // The pool must still be usable afterwards.
+        pool.run(4, 2, |_, _| Ok(())).unwrap();
+    }
+
+    #[test]
+    fn max_workers_caps_participation_without_changing_coverage() {
+        let pool = WorkerPool::new(8);
+        let mut hits = vec![0u8; 64];
+        let ptr = SendPtr(hits.as_mut_ptr());
+        for cap in [1usize, 2, 64] {
+            pool.run(64, cap, |_, c| {
+                unsafe { *ptr.0.add(c) += 1 };
+                Ok(())
+            })
+            .unwrap();
+        }
+        assert!(hits.iter().all(|&h| h == 3));
+    }
+
+    #[test]
+    fn zero_chunks_is_a_noop() {
+        let pool = WorkerPool::new(2);
+        pool.run(0, 2, |_, _| Err(Error::Solver("never called".into())))
+            .unwrap();
+        assert_eq!(pool.stats().tasks, 0);
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize_safely() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = pool.clone();
+            let total = total.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..25 {
+                    pool.run(16, 4, |_, _| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                        Ok(())
+                    })
+                    .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 25 * 16);
+    }
+
+    #[test]
+    fn arena_is_worker_private_and_reused() {
+        let pool = WorkerPool::new(1);
+        let caps = Mutex::new(Vec::new());
+        for _ in 0..3 {
+            pool.run(1, 1, |arena, _| {
+                let s = arena.take::<f64>(128);
+                s.fill(1.0);
+                caps.lock().unwrap().push(arena.capacity_bytes());
+                Ok(())
+            })
+            .unwrap();
+        }
+        let caps = caps.into_inner().unwrap();
+        assert_eq!(caps.len(), 3);
+        assert!(caps[1] == caps[0] && caps[2] == caps[0], "no regrowth");
+    }
+}

@@ -9,6 +9,10 @@
 //!
 //! * [`solver`] — native tridiagonal solvers: Thomas baseline, the parallel
 //!   partition method (Stage 1/2/3) and its recursive variant.
+//! * [`exec`] — the execution engine under the native solvers: persistent
+//!   worker pool (threads parked between solves), per-worker scratch
+//!   arenas and workspace recycling; the steady-state solve path
+//!   performs zero heap allocations.
 //! * [`gpu`] — a calibrated NVIDIA-GPU timing simulator (SMs, warps,
 //!   occupancy, latency hiding, PCIe, CUDA streams) standing in for the
 //!   paper's RTX 2080 Ti / A5000 / 4080 testbeds.
@@ -35,6 +39,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod exec;
 pub mod gpu;
 pub mod ml;
 pub mod plan;

@@ -4,10 +4,15 @@
 
 use super::{Backend, SolvePlan};
 use crate::error::Result;
+use crate::exec::{ExecCtx, WorkspacePool, WorkspaceStats};
 use crate::gpu::spec::Dtype;
 use crate::runtime::executor::pjrt_partition_solve;
 use crate::runtime::Runtime;
-use crate::solver::{partition_solve, recursive_solve, thomas_solve, TriSystem};
+use crate::solver::{
+    partition_solve_with_workspace, recursive_solve_with_workspace, thomas_solve, SolveWorkspace,
+    TriSystem,
+};
+use std::sync::Arc;
 
 /// The result of executing a plan: the solution plus the backend that
 /// actually ran it (a PJRT plan executed by the native fallback reports
@@ -27,16 +32,47 @@ pub trait SolverBackend {
 /// Threaded native CPU execution: Thomas for `Backend::Thomas` plans,
 /// the (recursive) partition method otherwise — including PJRT plans
 /// handed over by a fallback path.
-#[derive(Clone, Copy, Debug)]
+///
+/// The backend owns an [`ExecCtx`] (a persistent worker-pool handle —
+/// no threads are spawned per solve) and a [`WorkspacePool`] recycling
+/// [`SolveWorkspace`]s across requests, so the steady-state solve path
+/// allocates only the response vector.
+#[derive(Clone, Debug)]
 pub struct NativeBackend {
-    threads: usize,
+    exec: ExecCtx,
+    workspaces: Arc<WorkspacePool<SolveWorkspace<f64>>>,
 }
 
 impl NativeBackend {
+    /// Run on the process-wide pool, capped at `threads` workers.
     pub fn new(threads: usize) -> NativeBackend {
+        Self::with_exec(ExecCtx::global(threads))
+    }
+
+    /// Run on an explicit pool handle (the coordinator service shares
+    /// one pool and one workspace pool across all its workers).
+    pub fn with_exec(exec: ExecCtx) -> NativeBackend {
         NativeBackend {
-            threads: threads.max(1),
+            exec,
+            workspaces: Arc::new(WorkspacePool::new()),
         }
+    }
+
+    /// Share an existing workspace pool (coordinator-owned).
+    pub fn with_workspaces(
+        exec: ExecCtx,
+        workspaces: Arc<WorkspacePool<SolveWorkspace<f64>>>,
+    ) -> NativeBackend {
+        NativeBackend { exec, workspaces }
+    }
+
+    pub fn exec(&self) -> &ExecCtx {
+        &self.exec
+    }
+
+    /// Workspace created/reused counters (exported via service metrics).
+    pub fn workspace_stats(&self) -> WorkspaceStats {
+        self.workspaces.stats()
     }
 }
 
@@ -52,11 +88,15 @@ impl SolverBackend for NativeBackend {
                 backend: Backend::Thomas,
             });
         }
-        let x = if plan.levels.len() > 1 {
-            recursive_solve(sys, &plan.levels, self.threads)?
+        let mut ws = self.workspaces.acquire();
+        let mut x = vec![0.0f64; sys.n()];
+        let solved = if plan.levels.len() > 1 {
+            recursive_solve_with_workspace(sys, &plan.levels, &self.exec, &mut ws, &mut x)
         } else {
-            partition_solve(sys, plan.m(), self.threads)?
+            partition_solve_with_workspace(sys, plan.m(), &self.exec, ws.level(0), &mut x)
         };
+        self.workspaces.release(ws);
+        solved?;
         Ok(SolveOutcome {
             x,
             backend: Backend::Native,

@@ -14,6 +14,12 @@ use crate::tuner::heuristic::{IntervalHeuristic, MHeuristic};
 pub const M1_FIXED: usize = 10;
 
 /// Interface size after one partition level: 2·⌈n/m⌉.
+///
+/// `⌈n/m⌉` is the *padded* block count, which is also the unit the
+/// executor's Thomas-vs-partition cutoff reasons in
+/// ([`crate::solver::partition_applies`]: partition iff `⌈n/m⌉ >= 3`),
+/// so planned interface chains and the executed recursion agree on
+/// where the chain bottoms out.
 pub fn interface_size(n: usize, m: usize) -> usize {
     2 * n.div_ceil(m)
 }

@@ -9,8 +9,14 @@
 //!   bit-for-bit in structure.
 //! * [`recursive`] — §3 of the paper: Stage 2 solved by re-applying the
 //!   partition method for a planned sequence of sub-system sizes.
+//! * [`workspace`] — the reusable per-level buffer stack behind the
+//!   allocation-free steady-state solve path.
 //! * [`generator`] — seeded SLAE generators (diagonally dominant, Toeplitz).
 //! * [`residual`] — ‖Ax − d‖ verification helpers.
+//!
+//! Stage 1/3 data-parallelism runs on the persistent worker pool in
+//! [`crate::exec`]; the `*_with_workspace` entry points solve into
+//! caller-provided output and, once warmed up, never touch the heap.
 
 pub mod generator;
 pub mod partition;
@@ -18,12 +24,14 @@ pub mod recursive;
 pub mod residual;
 pub mod thomas;
 pub mod tridiagonal;
+pub mod workspace;
 
 pub use generator::{random_dd_system, toeplitz_system};
-pub use partition::{partition_solve, PartitionWorkspace};
-pub use recursive::recursive_solve;
+pub use partition::{partition_solve, partition_solve_with_workspace, PartitionWorkspace};
+pub use recursive::{partition_applies, recursive_solve, recursive_solve_with_workspace};
 pub use thomas::{thomas_solve, thomas_solve_with_scratch};
 pub use tridiagonal::TriSystem;
+pub use workspace::SolveWorkspace;
 
 /// Scalar abstraction: everything the solvers need from f32 / f64
 /// (self-contained — num_traits is unavailable offline).

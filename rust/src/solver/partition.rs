@@ -11,12 +11,18 @@
 //! * **Stage 3** (`stage3_all`): independent interior back-solves with the
 //!   boundary values folded into the RHS.
 //!
-//! Stage 1 and Stage 3 are data-parallel across blocks (`std::thread`
-//! scoped workers — rayon is unavailable offline).
+//! Stage 1 and Stage 3 are data-parallel across blocks and dispatch one
+//! chunk per block to the persistent [`crate::exec::WorkerPool`] (rayon
+//! is unavailable offline; the pool replaces the per-solve
+//! `std::thread::scope` the module started with). Per-block scratch
+//! comes from the executing worker's [`crate::exec::ScratchArena`], so a
+//! warmed-up solve through [`partition_solve_with_workspace`] performs
+//! zero heap allocations (asserted by `tests/alloc_free.rs`).
 
 use super::thomas::{thomas_solve_with_scratch, ThomasScratch};
 use super::{Scalar, TriSystem};
 use crate::error::{Error, Result};
+use crate::exec::{ExecCtx, SendPtr};
 
 /// Normalized interface coefficients of one block (unit diagonals implied):
 /// UP: `ua·x_prev + x_f + ug·x_l = ud`; DOWN: `da·x_f + x_l + dg·x_next = dd`.
@@ -30,13 +36,35 @@ pub struct BlockInterface<T> {
     pub dd: T,
 }
 
-/// Reusable per-call buffers for the whole partition pipeline.
+impl<T: Scalar> BlockInterface<T> {
+    /// The all-zero placeholder Stage 1 overwrites.
+    pub fn zero() -> BlockInterface<T> {
+        BlockInterface {
+            ua: T::zero(),
+            ug: T::zero(),
+            ud: T::zero(),
+            da: T::zero(),
+            dg: T::zero(),
+            dd: T::zero(),
+        }
+    }
+}
+
+/// Reusable per-call buffers for the whole partition pipeline. All
+/// fields retain their capacity across solves, so a workspace that has
+/// seen a given `(n, m)` shape once solves it again without touching
+/// the allocator.
 #[derive(Debug)]
 pub struct PartitionWorkspace<T> {
-    iface: Vec<BlockInterface<T>>,
-    iface_sys: Option<TriSystem<T>>,
-    iface_x: Vec<T>,
-    scratch: ThomasScratch<T>,
+    pub(crate) iface: Vec<BlockInterface<T>>,
+    pub(crate) iface_sys: TriSystem<T>,
+    pub(crate) iface_x: Vec<T>,
+    pub(crate) scratch: ThomasScratch<T>,
+    /// Reused pad buffer: the `n % m != 0` path copies the system here
+    /// instead of `clone()`-ing it.
+    pub(crate) padded: TriSystem<T>,
+    /// Output buffer of padded length for the same path.
+    pub(crate) padded_x: Vec<T>,
 }
 
 impl<T: Scalar> Default for PartitionWorkspace<T> {
@@ -45,19 +73,71 @@ impl<T: Scalar> Default for PartitionWorkspace<T> {
     }
 }
 
+fn empty_system<T>() -> TriSystem<T> {
+    TriSystem {
+        a: Vec::new(),
+        b: Vec::new(),
+        c: Vec::new(),
+        d: Vec::new(),
+    }
+}
+
 impl<T: Scalar> PartitionWorkspace<T> {
     pub fn new() -> Self {
         PartitionWorkspace {
             iface: Vec::new(),
-            iface_sys: None,
+            iface_sys: empty_system(),
             iface_x: Vec::new(),
             scratch: ThomasScratch::default(),
+            padded: empty_system(),
+            padded_x: Vec::new(),
         }
     }
 }
 
+/// Size `v` to exactly `len` elements, touching memory only when the
+/// length actually changes. Used for buffers whose every element is
+/// overwritten before being read (Stage-1 output, Stage-2/3 solution
+/// vectors): on the steady-state path the length is unchanged and this
+/// is a no-op, skipping a redundant O(len) zero-fill per solve.
+pub(crate) fn ensure_len<T: Clone>(v: &mut Vec<T>, len: usize, fill: T) {
+    if v.len() != len {
+        v.clear();
+        v.resize(len, fill);
+    }
+}
+
+/// Copy `sys` into `out` grown to `n_new` with identity pad rows,
+/// reusing `out`'s buffers (the allocation-free replacement for
+/// `sys.clone()` + [`TriSystem::pad_to`]).
+pub(crate) fn copy_into_padded<T: Scalar>(sys: &TriSystem<T>, n_new: usize, out: &mut TriSystem<T>) {
+    debug_assert!(n_new >= sys.n());
+    out.a.clear();
+    out.a.extend_from_slice(&sys.a);
+    out.a.resize(n_new, T::zero());
+    out.b.clear();
+    out.b.extend_from_slice(&sys.b);
+    out.b.resize(n_new, T::one());
+    out.c.clear();
+    out.c.extend_from_slice(&sys.c);
+    out.c.resize(n_new, T::zero());
+    out.d.clear();
+    out.d.extend_from_slice(&sys.d);
+    out.d.resize(n_new, T::zero());
+}
+
 /// Stage 1 for one block; `a, b, c, d` are the block's rows (`a[0]` = left
-/// coupling, `c[m-1]` = right coupling). `cp/dy/du/dv` are scratch of len m.
+/// coupling, `c[m-1]` = right coupling). `cp/dy/du/dv` are scratch of len m
+/// (fully overwritten before being read — callers may pass uninitialized
+/// arena memory).
+///
+/// # Invariant
+///
+/// `m = b.len()` must be >= 3: the interface construction needs a first
+/// row, a last row and at least one interior row. The public entry
+/// points ([`stage1_all`], [`partition_solve`]) validate this and return
+/// [`Error::Solver`]; calling the per-block kernel directly with `m < 3`
+/// is a contract violation checked only by `debug_assert`.
 #[allow(clippy::too_many_arguments)]
 pub fn stage1_block<T: Scalar>(
     a: &[T],
@@ -70,7 +150,7 @@ pub fn stage1_block<T: Scalar>(
     dv: &mut [T],
 ) -> Result<BlockInterface<T>> {
     let m = b.len();
-    debug_assert!(m >= 3);
+    debug_assert!(m >= 3, "stage1_block requires m >= 3 (validated by callers)");
     let tiny = T::of_f64(f64::MIN_POSITIVE.sqrt());
 
     // Shared forward elimination, three RHS at once.
@@ -137,12 +217,13 @@ pub fn stage1_block<T: Scalar>(
     })
 }
 
-/// Stage 1 across all blocks, data-parallel with `threads` workers.
-/// `sys.n()` must equal `p * m`.
-pub fn stage1_all<T: Scalar>(
+/// Stage 1 across all blocks through the worker pool in `exec`.
+/// `sys.n()` must be a multiple of `m` (callers pad first) and `m >= 3`.
+/// One chunk per block; see `exec::pool` for the determinism contract.
+pub fn stage1_all_exec<T: Scalar>(
     sys: &TriSystem<T>,
     m: usize,
-    threads: usize,
+    exec: &ExecCtx,
     out: &mut Vec<BlockInterface<T>>,
 ) -> Result<()> {
     let n = sys.n();
@@ -153,84 +234,89 @@ pub fn stage1_all<T: Scalar>(
         return Err(Error::Shape(format!("n={n} not a multiple of m={m}")));
     }
     let p = n / m;
-    out.clear();
-    out.resize(
-        p,
-        BlockInterface {
-            ua: T::zero(),
-            ug: T::zero(),
-            ud: T::zero(),
-            da: T::zero(),
-            dg: T::zero(),
-            dd: T::zero(),
-        },
-    );
+    ensure_len(out, p, BlockInterface::zero());
 
-    let workers = threads.max(1).min(p);
-    let chunk = p.div_ceil(workers);
-    let results: Vec<Result<()>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = out
-            .chunks_mut(chunk)
-            .enumerate()
-            .map(|(w, out_chunk)| {
-                let sys = &sys;
-                scope.spawn(move || -> Result<()> {
-                    let mut cp = vec![T::zero(); m];
-                    let mut dy = vec![T::zero(); m];
-                    let mut du = vec![T::zero(); m];
-                    let mut dv = vec![T::zero(); m];
-                    for (j, slot) in out_chunk.iter_mut().enumerate() {
-                        let k = w * chunk + j;
-                        let s = k * m;
-                        *slot = stage1_block(
-                            &sys.a[s..s + m],
-                            &sys.b[s..s + m],
-                            &sys.c[s..s + m],
-                            &sys.d[s..s + m],
-                            &mut cp,
-                            &mut dy,
-                            &mut du,
-                            &mut dv,
-                        )?;
-                    }
-                    Ok(())
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    for r in results {
-        r?;
-    }
-    Ok(())
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    exec.run(p, |arena, k| {
+        let buf = arena.take::<T>(4 * m);
+        let (cp, rest) = buf.split_at_mut(m);
+        let (dy, rest) = rest.split_at_mut(m);
+        let (du, dv) = rest.split_at_mut(m);
+        let s = k * m;
+        // SAFETY: chunk k exclusively owns out[k] (disjoint per chunk;
+        // the submitter blocks until all chunks complete).
+        let slot = unsafe { &mut *out_ptr.0.add(k) };
+        *slot = stage1_block(
+            &sys.a[s..s + m],
+            &sys.b[s..s + m],
+            &sys.c[s..s + m],
+            &sys.d[s..s + m],
+            cp,
+            dy,
+            du,
+            dv,
+        )?;
+        Ok(())
+    })
+}
+
+/// Stage 1 across all blocks, data-parallel with at most `threads`
+/// workers of the process-wide pool (compatibility wrapper over
+/// [`stage1_all_exec`] — no threads are spawned).
+pub fn stage1_all<T: Scalar>(
+    sys: &TriSystem<T>,
+    m: usize,
+    threads: usize,
+    out: &mut Vec<BlockInterface<T>>,
+) -> Result<()> {
+    stage1_all_exec(sys, m, &ExecCtx::global(threads), out)
 }
 
 /// Assemble the 2P tridiagonal interface system (rows `[UP_k, DOWN_k]`
-/// over unknowns `[x_{k,f}, x_{k,l}]`, interleaved).
-pub fn assemble_interface<T: Scalar>(iface: &[BlockInterface<T>]) -> TriSystem<T> {
-    let p = iface.len();
-    let n2 = 2 * p;
-    let mut a = Vec::with_capacity(n2);
-    let mut b = Vec::with_capacity(n2);
-    let mut c = Vec::with_capacity(n2);
-    let mut d = Vec::with_capacity(n2);
+/// over unknowns `[x_{k,f}, x_{k,l}]`, interleaved) into `out`, reusing
+/// its buffers.
+pub fn assemble_interface_into<T: Scalar>(iface: &[BlockInterface<T>], out: &mut TriSystem<T>) {
+    let n2 = 2 * iface.len();
+    out.a.clear();
+    out.a.reserve(n2);
+    out.b.clear();
+    out.b.reserve(n2);
+    out.c.clear();
+    out.c.reserve(n2);
+    out.d.clear();
+    out.d.reserve(n2);
     for blk in iface {
         // UP_k: couples (x_{k-1,l}, x_{k,f}, x_{k,l})
-        a.push(blk.ua);
-        b.push(T::one());
-        c.push(blk.ug);
-        d.push(blk.ud);
+        out.a.push(blk.ua);
+        out.b.push(T::one());
+        out.c.push(blk.ug);
+        out.d.push(blk.ud);
         // DOWN_k: couples (x_{k,f}, x_{k,l}, x_{k+1,f})
-        a.push(blk.da);
-        b.push(T::one());
-        c.push(blk.dg);
-        d.push(blk.dd);
+        out.a.push(blk.da);
+        out.b.push(T::one());
+        out.c.push(blk.dg);
+        out.d.push(blk.dd);
     }
-    TriSystem { a, b, c, d }
+}
+
+/// As [`assemble_interface_into`], allocating a fresh system.
+pub fn assemble_interface<T: Scalar>(iface: &[BlockInterface<T>]) -> TriSystem<T> {
+    let mut out = empty_system();
+    assemble_interface_into(iface, &mut out);
+    out
 }
 
 /// Stage 3 for one block: interior Thomas with boundaries folded in.
 /// Writes the full block solution (including boundaries) into `x`.
+/// `cp/dp` are scratch of len m (fully overwritten before being read).
+///
+/// # Invariant
+///
+/// `m = b.len()` must be >= 3 (same contract as [`stage1_block`]: the
+/// public entry points validate and return [`Error::Solver`]; the
+/// per-block kernel checks only by `debug_assert`). Under that
+/// invariant the boundary rows `x[0]`/`x[m-1]` and the interior row
+/// `x[m-2] = dp[m-2]` are always distinct.
 #[allow(clippy::too_many_arguments)]
 pub fn stage3_block<T: Scalar>(
     a: &[T],
@@ -244,7 +330,7 @@ pub fn stage3_block<T: Scalar>(
     x: &mut [T],
 ) -> Result<()> {
     let m = b.len();
-    debug_assert!(m >= 3);
+    debug_assert!(m >= 3, "stage3_block requires m >= 3 (validated by callers)");
     let tiny = T::of_f64(f64::MIN_POSITIVE.sqrt());
 
     // RHS corrections (cumulative: both hit row 1 when m == 3).
@@ -285,19 +371,20 @@ pub fn stage3_block<T: Scalar>(
 
     x[0] = xf;
     x[m - 1] = xl;
-    x[m - 2] = if m >= 3 { dp[m - 2] } else { xl };
+    x[m - 2] = dp[m - 2];
     for i in (1..m - 2).rev() {
         x[i] = dp[i] - cp[i] * x[i + 1];
     }
     Ok(())
 }
 
-/// Stage 3 across all blocks, data-parallel.
-pub fn stage3_all<T: Scalar>(
+/// Stage 3 across all blocks through the worker pool in `exec`.
+/// `sys.n()` must be a multiple of `m`; one chunk per block.
+pub fn stage3_all_exec<T: Scalar>(
     sys: &TriSystem<T>,
     m: usize,
     boundary: &[T], // interleaved [xf_0, xl_0, xf_1, xl_1, ...] (Stage-2 x)
-    threads: usize,
+    exec: &ExecCtx,
     x: &mut [T],
 ) -> Result<()> {
     let n = sys.n();
@@ -312,94 +399,101 @@ pub fn stage3_all<T: Scalar>(
     if x.len() != n {
         return Err(Error::Shape(format!("x len {} != n {}", x.len(), n)));
     }
-    let workers = threads.max(1).min(p);
-    let chunk = p.div_ceil(workers);
-    let results: Vec<Result<()>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = x
-            .chunks_mut(chunk * m)
-            .enumerate()
-            .map(|(w, x_chunk)| {
-                let sys = &sys;
-                scope.spawn(move || -> Result<()> {
-                    let mut cp = vec![T::zero(); m];
-                    let mut dp = vec![T::zero(); m];
-                    for (j, xb) in x_chunk.chunks_mut(m).enumerate() {
-                        let k = w * chunk + j;
-                        let s = k * m;
-                        stage3_block(
-                            &sys.a[s..s + m],
-                            &sys.b[s..s + m],
-                            &sys.c[s..s + m],
-                            &sys.d[s..s + m],
-                            boundary[2 * k],
-                            boundary[2 * k + 1],
-                            &mut cp,
-                            &mut dp,
-                            xb,
-                        )?;
-                    }
-                    Ok(())
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    for r in results {
-        r?;
-    }
-    Ok(())
+    let x_ptr = SendPtr(x.as_mut_ptr());
+    exec.run(p, |arena, k| {
+        let buf = arena.take::<T>(2 * m);
+        let (cp, dp) = buf.split_at_mut(m);
+        let s = k * m;
+        // SAFETY: chunk k exclusively owns x[s..s + m] (disjoint per
+        // chunk; the submitter blocks until all chunks complete).
+        let xb = unsafe { std::slice::from_raw_parts_mut(x_ptr.0.add(s), m) };
+        stage3_block(
+            &sys.a[s..s + m],
+            &sys.b[s..s + m],
+            &sys.c[s..s + m],
+            &sys.d[s..s + m],
+            boundary[2 * k],
+            boundary[2 * k + 1],
+            cp,
+            dp,
+            xb,
+        )
+    })
+}
+
+/// Stage 3 across all blocks, data-parallel with at most `threads`
+/// workers of the process-wide pool (compatibility wrapper over
+/// [`stage3_all_exec`]).
+pub fn stage3_all<T: Scalar>(
+    sys: &TriSystem<T>,
+    m: usize,
+    boundary: &[T],
+    threads: usize,
+    x: &mut [T],
+) -> Result<()> {
+    stage3_all_exec(sys, m, boundary, &ExecCtx::global(threads), x)
 }
 
 /// Full non-recursive partition solve. Pads `n` up to a multiple of `m`
 /// with identity rows internally and truncates the result back to `n`.
+/// Runs on the process-wide pool with at most `threads` workers.
 pub fn partition_solve<T: Scalar>(sys: &TriSystem<T>, m: usize, threads: usize) -> Result<Vec<T>> {
     let mut ws = PartitionWorkspace::new();
-    partition_solve_with_workspace(sys, m, threads, &mut ws)
+    let mut x = vec![T::zero(); sys.n()];
+    partition_solve_with_workspace(sys, m, &ExecCtx::global(threads), &mut ws, &mut x)?;
+    Ok(x)
 }
 
-/// As [`partition_solve`] but reusing caller-provided buffers.
+/// As [`partition_solve`] but solving into the caller-provided `x`
+/// (`x.len() == sys.n()`) and reusing the workspace's buffers: a call
+/// whose `(n, m)` shape the workspace and pool have seen before
+/// performs zero heap allocations.
 pub fn partition_solve_with_workspace<T: Scalar>(
     sys: &TriSystem<T>,
     m: usize,
-    threads: usize,
+    exec: &ExecCtx,
     ws: &mut PartitionWorkspace<T>,
-) -> Result<Vec<T>> {
+    x: &mut [T],
+) -> Result<()> {
     let n = sys.n();
     if m < 3 {
         return Err(Error::Solver(format!("sub-system size m={m} must be >= 3")));
     }
+    if x.len() != n {
+        return Err(Error::Shape(format!("x len {} != n {}", x.len(), n)));
+    }
     // Pad to a whole number of blocks (identity rows are exact — see
-    // TriSystem::pad_to).
-    let padded;
-    let work: &TriSystem<T> = if n % m == 0 {
-        sys
+    // TriSystem::pad_to) into the reusable workspace buffer.
+    let np = n.div_ceil(m) * m;
+    if np != n {
+        copy_into_padded(sys, np, &mut ws.padded);
+    }
+    let work: &TriSystem<T> = if np == n { sys } else { &ws.padded };
+
+    stage1_all_exec(work, m, exec, &mut ws.iface)?;
+    assemble_interface_into(&ws.iface, &mut ws.iface_sys);
+    ensure_len(&mut ws.iface_x, ws.iface_sys.n(), T::zero());
+    thomas_solve_with_scratch(&ws.iface_sys, &mut ws.scratch, &mut ws.iface_x)?;
+
+    if np == n {
+        stage3_all_exec(work, m, &ws.iface_x, exec, x)?;
     } else {
-        let mut s = sys.clone();
-        s.pad_to(n.div_ceil(m) * m);
-        padded = s;
-        &padded
-    };
-
-    stage1_all(work, m, threads, &mut ws.iface)?;
-    let iface_sys = assemble_interface(&ws.iface);
-    ws.iface_x.clear();
-    ws.iface_x.resize(iface_sys.n(), T::zero());
-    thomas_solve_with_scratch(&iface_sys, &mut ws.scratch, &mut ws.iface_x)?;
-    ws.iface_sys = Some(iface_sys);
-
-    let mut x = vec![T::zero(); work.n()];
-    stage3_all(work, m, &ws.iface_x, threads, &mut x)?;
-    x.truncate(n);
-    Ok(x)
+        ensure_len(&mut ws.padded_x, np, T::zero());
+        stage3_all_exec(work, m, &ws.iface_x, exec, &mut ws.padded_x[..])?;
+        x.copy_from_slice(&ws.padded_x[..n]);
+    }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::WorkerPool;
     use crate::solver::generator::{manufactured_solution, random_dd_system, toeplitz_system};
     use crate::solver::residual::{max_abs_diff, max_abs_residual};
     use crate::solver::thomas_solve;
     use crate::util::Pcg64;
+    use std::sync::Arc;
 
     #[test]
     fn matches_thomas_on_random_dd() {
@@ -481,6 +575,27 @@ mod tests {
     }
 
     #[test]
+    fn pool_size_invariance() {
+        // The acceptance bar: bit-identical results across pool sizes
+        // {1, 2, 8}, including an n % m != 0 padded shape.
+        let mut rng = Pcg64::new(11);
+        for n in [512usize, 515] {
+            let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let mut results = Vec::new();
+            for size in [1usize, 2, 8] {
+                let pool = Arc::new(WorkerPool::new(size));
+                let exec = ExecCtx::with_pool(pool, size);
+                let mut ws = PartitionWorkspace::new();
+                let mut x = vec![0.0f64; n];
+                partition_solve_with_workspace(&sys, 16, &exec, &mut ws, &mut x).unwrap();
+                results.push(x);
+            }
+            assert_eq!(results[0], results[1], "pool size 1 vs 2 (n={n})");
+            assert_eq!(results[0], results[2], "pool size 1 vs 8 (n={n})");
+        }
+    }
+
+    #[test]
     fn manufactured_forward_error() {
         let mut rng = Pcg64::new(8);
         let (sys, x_star) = manufactured_solution::<f64>(&mut rng, 300);
@@ -503,14 +618,51 @@ mod tests {
     }
 
     #[test]
+    fn rejects_wrong_output_length() {
+        let mut rng = Pcg64::new(12);
+        let sys = random_dd_system::<f64>(&mut rng, 32, 0.5);
+        let exec = ExecCtx::global(2);
+        let mut ws = PartitionWorkspace::new();
+        let mut x = vec![0.0; 31];
+        assert!(partition_solve_with_workspace(&sys, 4, &exec, &mut ws, &mut x).is_err());
+    }
+
+    #[test]
     fn workspace_reuse_is_consistent() {
         let mut rng = Pcg64::new(10);
+        let exec = ExecCtx::global(2);
         let mut ws = PartitionWorkspace::new();
+        let mut x = vec![0.0f64; 128];
         for _ in 0..3 {
             let sys = random_dd_system::<f64>(&mut rng, 128, 0.5);
-            let x = partition_solve_with_workspace(&sys, 8, 2, &mut ws).unwrap();
+            partition_solve_with_workspace(&sys, 8, &exec, &mut ws, &mut x).unwrap();
             let want = thomas_solve(&sys).unwrap();
             assert!(max_abs_diff(&x, &want) < 1e-10);
         }
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_bit_for_bit() {
+        // One workspace reused across different (n, m) shapes and both
+        // dtypes must produce exactly the bits a fresh workspace does.
+        let mut rng = Pcg64::new(13);
+        let exec = ExecCtx::global(4);
+        let mut ws = PartitionWorkspace::new();
+        for (n, m) in [(256usize, 8usize), (100, 5), (515, 16), (64, 4)] {
+            let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let mut x = vec![0.0f64; n];
+            partition_solve_with_workspace(&sys, m, &exec, &mut ws, &mut x).unwrap();
+            let mut fresh_ws = PartitionWorkspace::new();
+            let mut x_fresh = vec![0.0f64; n];
+            partition_solve_with_workspace(&sys, m, &exec, &mut fresh_ws, &mut x_fresh).unwrap();
+            assert_eq!(x, x_fresh, "reused workspace diverged at n={n} m={m}");
+        }
+        // And an f32 workspace sharing the same (global) pool/arenas.
+        let mut ws32 = PartitionWorkspace::new();
+        let sys = random_dd_system::<f32>(&mut rng, 200, 0.5);
+        let mut x = vec![0.0f32; 200];
+        partition_solve_with_workspace(&sys, 8, &exec, &mut ws32, &mut x).unwrap();
+        let want = partition_solve(&sys, 8, 4).unwrap();
+        assert_eq!(x, want);
     }
 }

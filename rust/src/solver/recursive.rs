@@ -6,64 +6,153 @@
 //! plan (§3.2): level 0 uses the optimum m for the initial SLAE, deeper
 //! levels use the optimum m for each interface system (with the paper's
 //! Remark fixing `m_1 = 10` when more than one recursion is planned).
+//!
+//! Execution runs on the persistent worker pool (see [`crate::exec`])
+//! and reuses a per-level [`SolveWorkspace`] stack: a warmed-up
+//! [`recursive_solve_with_workspace`] call performs zero heap
+//! allocations (asserted by `tests/alloc_free.rs`) and its results are
+//! bit-identical across pool sizes.
 
-use super::partition::{assemble_interface, stage1_all, stage3_all};
-use super::thomas::thomas_solve;
+use super::partition::{
+    assemble_interface_into, copy_into_padded, ensure_len, stage1_all_exec, stage3_all_exec,
+    PartitionWorkspace,
+};
+use super::thomas::thomas_solve_with_scratch;
+use super::workspace::SolveWorkspace;
 use super::{Scalar, TriSystem};
 use crate::error::{Error, Result};
+use crate::exec::ExecCtx;
+
+/// Whether a recursion level partitions an `n`-row system with
+/// sub-system size `m`, or bottoms out on the sequential Thomas solver.
+///
+/// The decision is made on the **padded** shape: partitioning needs at
+/// least three padded blocks (`ceil(n/m) >= 3`). With fewer, the system
+/// is comparable to one or two sub-systems, partitioning is pure
+/// overhead, and the interface system would not be meaningfully smaller
+/// than the input. Because padding rounds `n` *up* to `ceil(n/m) * m`,
+/// this is exactly the `n > 2m` cutoff evaluated on the padded size —
+/// the planner's `recursion::planner::interface_size` (which also
+/// reasons in padded blocks, `2 * ceil(n/m)`) and the executed recursion
+/// therefore agree on where the chain bottoms out.
+pub fn partition_applies(n: usize, m: usize) -> bool {
+    n.div_ceil(m) >= 3
+}
 
 /// Solve with `plan.len() - 1` recursive steps: `plan[0]` is the sub-system
 /// size for the initial SLAE, `plan[r]` for the r-th interface system. An
 /// empty plan degenerates to the sequential Thomas baseline (R = "-1", i.e.
-/// no partitioning at all).
+/// no partitioning at all). Runs on the process-wide pool with at most
+/// `threads` workers.
 pub fn recursive_solve<T: Scalar>(
     sys: &TriSystem<T>,
     plan: &[usize],
     threads: usize,
 ) -> Result<Vec<T>> {
-    let Some((&m, rest)) = plan.split_first() else {
-        return thomas_solve(sys);
-    };
+    let mut ws = SolveWorkspace::new();
+    let mut x = vec![T::zero(); sys.n()];
+    recursive_solve_with_workspace(sys, plan, &ExecCtx::global(threads), &mut ws, &mut x)?;
+    Ok(x)
+}
+
+/// As [`recursive_solve`] but solving into the caller-provided `x`
+/// (`x.len() == sys.n()`) and reusing the workspace's per-level buffer
+/// stack: a call whose shape the workspace and pool have seen before
+/// performs zero heap allocations.
+pub fn recursive_solve_with_workspace<T: Scalar>(
+    sys: &TriSystem<T>,
+    plan: &[usize],
+    exec: &ExecCtx,
+    ws: &mut SolveWorkspace<T>,
+    x: &mut [T],
+) -> Result<()> {
+    if x.len() != sys.n() {
+        return Err(Error::Shape(format!(
+            "x len {} != n {}",
+            x.len(),
+            sys.n()
+        )));
+    }
+    solve_level(sys, plan, 0, exec, ws, x)
+}
+
+fn solve_level<T: Scalar>(
+    sys: &TriSystem<T>,
+    plan: &[usize],
+    level: usize,
+    exec: &ExecCtx,
+    ws: &mut SolveWorkspace<T>,
+    x: &mut [T],
+) -> Result<()> {
     let n = sys.n();
+    let Some(&m) = plan.get(level) else {
+        // Plan exhausted: host Thomas, reusing this level's scratch.
+        return thomas_solve_with_scratch(sys, &mut ws.level(level).scratch, x);
+    };
     if m < 3 {
         return Err(Error::Solver(format!("sub-system size m={m} must be >= 3")));
     }
-    // Small systems: partitioning a system comparable to m is pure overhead
-    // and the interface system would be as large as the input; cut off.
-    if n <= 2 * m {
-        return thomas_solve(sys);
+    // Small systems: fewer than three padded blocks makes partitioning
+    // pure overhead; bottom out (see `partition_applies`).
+    if !partition_applies(n, m) {
+        return thomas_solve_with_scratch(sys, &mut ws.level(level).scratch, x);
     }
 
-    let padded;
-    let work: &TriSystem<T> = if n % m == 0 {
-        sys
+    // Detach this level's buffers so the recursion below can borrow the
+    // workspace stack for the deeper levels.
+    ws.level(level);
+    let mut lw = std::mem::take(&mut ws.levels[level]);
+    let result = run_level(sys, plan, level, m, exec, ws, &mut lw, x);
+    ws.levels[level] = lw;
+    result
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_level<T: Scalar>(
+    sys: &TriSystem<T>,
+    plan: &[usize],
+    level: usize,
+    m: usize,
+    exec: &ExecCtx,
+    ws: &mut SolveWorkspace<T>,
+    lw: &mut PartitionWorkspace<T>,
+    x: &mut [T],
+) -> Result<()> {
+    let n = sys.n();
+    let np = n.div_ceil(m) * m;
+    if np != n {
+        copy_into_padded(sys, np, &mut lw.padded);
+    }
+    let work: &TriSystem<T> = if np == n { sys } else { &lw.padded };
+
+    stage1_all_exec(work, m, exec, &mut lw.iface)?;
+    assemble_interface_into(&lw.iface, &mut lw.iface_sys);
+
+    // Stage 2: recurse into the interface system (or Thomas when the
+    // plan is exhausted) — the boundary vector is this level's iface_x.
+    ensure_len(&mut lw.iface_x, lw.iface_sys.n(), T::zero());
+    solve_level(&lw.iface_sys, plan, level + 1, exec, ws, &mut lw.iface_x)?;
+
+    if np == n {
+        stage3_all_exec(work, m, &lw.iface_x, exec, x)?;
     } else {
-        let mut s = sys.clone();
-        s.pad_to(n.div_ceil(m) * m);
-        padded = s;
-        &padded
-    };
-
-    let mut iface = Vec::new();
-    stage1_all(work, m, threads, &mut iface)?;
-    let iface_sys = assemble_interface(&iface);
-
-    // Stage 2: recurse (or Thomas when the plan is exhausted).
-    let boundary = recursive_solve(&iface_sys, rest, threads)?;
-
-    let mut x = vec![T::zero(); work.n()];
-    stage3_all(work, m, &boundary, threads, &mut x)?;
-    x.truncate(n);
-    Ok(x)
+        ensure_len(&mut lw.padded_x, np, T::zero());
+        stage3_all_exec(work, m, &lw.iface_x, exec, &mut lw.padded_x[..])?;
+        x.copy_from_slice(&lw.padded_x[..n]);
+    }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::WorkerPool;
     use crate::solver::generator::random_dd_system;
+    use crate::solver::partition::{assemble_interface, stage1_all};
     use crate::solver::residual::max_abs_diff;
     use crate::solver::thomas_solve;
     use crate::util::Pcg64;
+    use std::sync::Arc;
 
     #[test]
     fn empty_plan_is_thomas() {
@@ -107,12 +196,45 @@ mod tests {
     #[test]
     fn recursion_bottoms_out_on_small_interfaces() {
         // Plan deeper than the shrinking interface chain supports: the
-        // n <= 2m cutoff must stop the recursion gracefully.
+        // padded-block-count cutoff must stop the recursion gracefully.
         let mut rng = Pcg64::new(4);
         let sys = random_dd_system::<f64>(&mut rng, 256, 0.5);
         let got = recursive_solve(&sys, &[8, 8, 8, 8, 8, 8, 8, 8], 2).unwrap();
         let want = thomas_solve(&sys).unwrap();
         assert!(max_abs_diff(&got, &want) < 1e-9);
+    }
+
+    #[test]
+    fn cutoff_is_decided_on_the_padded_size() {
+        // The Thomas-vs-partition choice counts *padded* blocks
+        // (`ceil(n/m)`), so padding can never flip the decision after
+        // the fact: exactly at the boundary n = 2m the padded system is
+        // still 2 blocks -> Thomas; one row past it the padded system
+        // is 3 blocks -> partition, for every n in (2m, 3m].
+        assert!(!partition_applies(16, 8), "n = 2m is two blocks");
+        assert!(partition_applies(17, 8), "n = 2m + 1 pads to three blocks");
+        assert!(partition_applies(24, 8), "n = 3m is three exact blocks");
+        assert!(!partition_applies(5, 8), "n < m is a single padded block");
+        // Consistency with the planner's padded-interface arithmetic:
+        // partition applies exactly when the planned interface
+        // (2 * ceil(n/m) rows) is smaller than 3 blocks' worth of rows.
+        for (n, m) in [(15usize, 5usize), (16, 5), (29, 7), (100, 8)] {
+            let planned_iface = crate::recursion::planner::interface_size(n, m);
+            assert_eq!(
+                partition_applies(n, m),
+                planned_iface >= 6,
+                "plan/execution cutoff disagree at n={n} m={m}"
+            );
+        }
+        // And both boundary shapes still solve correctly through the
+        // recursion (Thomas side and partition side of the cutoff).
+        let mut rng = Pcg64::new(7);
+        for n in [16usize, 17, 20, 24] {
+            let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let got = recursive_solve(&sys, &[8, 4], 2).unwrap();
+            let want = thomas_solve(&sys).unwrap();
+            assert!(max_abs_diff(&got, &want) < 1e-10, "n={n}");
+        }
     }
 
     #[test]
@@ -132,5 +254,74 @@ mod tests {
         let got = recursive_solve(&sys, &[32, 10], 4).unwrap();
         let want = thomas_solve(&sys).unwrap();
         assert!(max_abs_diff(&got, &want) < 5e-3);
+    }
+
+    #[test]
+    fn pool_size_invariance() {
+        // Mirror of partition::tests::pool_size_invariance for the
+        // recursive path: bit-identical across pool sizes {1, 2, 8},
+        // including a padded (n % m != 0) top level.
+        let mut rng = Pcg64::new(8);
+        for n in [20_000usize, 20_011] {
+            let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let mut results = Vec::new();
+            for size in [1usize, 2, 8] {
+                let pool = Arc::new(WorkerPool::new(size));
+                let exec = ExecCtx::with_pool(pool, size);
+                let mut ws = SolveWorkspace::new();
+                let mut x = vec![0.0f64; n];
+                recursive_solve_with_workspace(&sys, &[32, 10, 8], &exec, &mut ws, &mut x)
+                    .unwrap();
+                results.push(x);
+            }
+            assert_eq!(results[0], results[1], "pool size 1 vs 2 (n={n})");
+            assert_eq!(results[0], results[2], "pool size 1 vs 8 (n={n})");
+        }
+    }
+
+    #[test]
+    fn thread_cap_invariance() {
+        // Same pool, different per-call parallelism caps.
+        let mut rng = Pcg64::new(9);
+        let sys = random_dd_system::<f64>(&mut rng, 8_192, 0.5);
+        let x1 = recursive_solve(&sys, &[16, 8], 1).unwrap();
+        for threads in [2usize, 3, 8, 64] {
+            let xt = recursive_solve(&sys, &[16, 8], threads).unwrap();
+            assert_eq!(x1, xt, "threads={threads} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_bit_for_bit() {
+        // One workspace + one pool reused across different n, plans and
+        // dtypes must reproduce fresh-workspace solves exactly.
+        let pool = Arc::new(WorkerPool::new(4));
+        let exec = ExecCtx::with_pool(pool, 4);
+        let mut rng = Pcg64::new(10);
+        let mut ws = SolveWorkspace::new();
+        for (n, plan) in [
+            (4_096usize, vec![32usize, 10]),
+            (515, vec![16]),
+            (20_000, vec![32, 10, 8]),
+            (50, vec![]),
+        ] {
+            let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let mut x = vec![0.0f64; n];
+            recursive_solve_with_workspace(&sys, &plan, &exec, &mut ws, &mut x).unwrap();
+            let mut fresh_ws = SolveWorkspace::new();
+            let mut x_fresh = vec![0.0f64; n];
+            recursive_solve_with_workspace(&sys, &plan, &exec, &mut fresh_ws, &mut x_fresh)
+                .unwrap();
+            assert_eq!(x, x_fresh, "reused workspace diverged at n={n} plan={plan:?}");
+        }
+        // f32 through the same pool (worker arenas switch dtype).
+        let mut ws32: SolveWorkspace<f32> = SolveWorkspace::new();
+        let sys = random_dd_system::<f32>(&mut rng, 2_048, 1.0);
+        let mut x = vec![0.0f32; 2_048];
+        recursive_solve_with_workspace(&sys, &[16, 8], &exec, &mut ws32, &mut x).unwrap();
+        let mut x_fresh = vec![0.0f32; 2_048];
+        let mut fresh = SolveWorkspace::new();
+        recursive_solve_with_workspace(&sys, &[16, 8], &exec, &mut fresh, &mut x_fresh).unwrap();
+        assert_eq!(x, x_fresh);
     }
 }

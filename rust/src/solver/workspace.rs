@@ -1,0 +1,61 @@
+//! [`SolveWorkspace`]: every buffer a (recursive) partition solve needs,
+//! reusable across solves and recyclable across requests.
+//!
+//! The recursion of `recursive_solve` keeps one [`PartitionWorkspace`]
+//! per level (interface vector, interface system, boundary/interface-x,
+//! padded-system and padded-output buffers, Thomas scratch). The stack
+//! grows to the deepest recursion it has seen and is then stable: a
+//! warmed-up workspace solves any already-seen shape with zero heap
+//! allocations. The coordinator's `NativeBackend` recycles these
+//! through an [`crate::exec::WorkspacePool`].
+
+use super::partition::PartitionWorkspace;
+use super::Scalar;
+
+/// Per-level buffer stack for [`crate::solver::recursive_solve`] (level
+/// 0 doubles as the workspace for plain partition solves).
+#[derive(Debug)]
+pub struct SolveWorkspace<T> {
+    pub(crate) levels: Vec<PartitionWorkspace<T>>,
+}
+
+impl<T: Scalar> Default for SolveWorkspace<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Scalar> SolveWorkspace<T> {
+    pub fn new() -> SolveWorkspace<T> {
+        SolveWorkspace { levels: Vec::new() }
+    }
+
+    /// The workspace for recursion level `level`, growing the stack on
+    /// first use.
+    pub(crate) fn level(&mut self, level: usize) -> &mut PartitionWorkspace<T> {
+        if self.levels.len() <= level {
+            self.levels.resize_with(level + 1, PartitionWorkspace::new);
+        }
+        &mut self.levels[level]
+    }
+
+    /// Deepest level this workspace has buffers for (diagnostics).
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_stack_grows_and_persists() {
+        let mut ws: SolveWorkspace<f64> = SolveWorkspace::new();
+        assert_eq!(ws.depth(), 0);
+        let _ = ws.level(2);
+        assert_eq!(ws.depth(), 3);
+        let _ = ws.level(0);
+        assert_eq!(ws.depth(), 3, "shallower access must not truncate");
+    }
+}

@@ -1,0 +1,52 @@
+//! A counting global allocator shared by the allocation-free acceptance
+//! test (`tests/alloc_free.rs`) and the solver bench
+//! (`benches/bench_solver_native.rs`), so both report allocations from
+//! the same instrumentation.
+//!
+//! Rust allows one `#[global_allocator]` per *binary*, so each consumer
+//! declares the attribute itself:
+//!
+//! ```ignore
+//! use partisol::util::count_alloc::CountingAlloc;
+//! #[global_allocator]
+//! static ALLOCATOR: CountingAlloc = CountingAlloc;
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Delegates to [`System`], counting every `alloc`/`realloc` call.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    /// Total allocation events since process start.
+    pub fn allocations() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+
+    /// Allocation events that happened while `f` ran. Only meaningful
+    /// when the calling binary installed [`CountingAlloc`] as its
+    /// `#[global_allocator]` and no other thread is allocating.
+    pub fn count_during(f: impl FnOnce()) -> u64 {
+        let before = Self::allocations();
+        f();
+        Self::allocations() - before
+    }
+}
+
+// SAFETY: delegates verbatim to System; only adds a relaxed counter.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}

@@ -7,6 +7,7 @@
 //! and the system-prompt contract is to build substrates rather than stub
 //! them.
 
+pub mod count_alloc;
 pub mod csv;
 pub mod json;
 pub mod logging;

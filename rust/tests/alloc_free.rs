@@ -1,0 +1,76 @@
+//! The ISSUE-2 acceptance bar: a warmed-up pooled solve performs
+//! **zero** heap allocations.
+//!
+//! This integration test is its own binary so it can install a counting
+//! global allocator, and it contains exactly one `#[test]` so no
+//! concurrent test thread can pollute the counter. Warm-up covers pool
+//! spawn, arena growth and workspace-buffer growth; after it, repeated
+//! solves through `partition_solve_with_workspace` and
+//! `recursive_solve_with_workspace` (padded and exact shapes, one-level
+//! and deep plans) must not allocate at all.
+
+use partisol::exec::{ExecCtx, WorkerPool};
+use partisol::solver::generator::random_dd_system;
+use partisol::solver::partition::PartitionWorkspace;
+use partisol::solver::{
+    partition_solve_with_workspace, recursive_solve_with_workspace, SolveWorkspace,
+};
+use partisol::util::count_alloc::CountingAlloc;
+use partisol::util::Pcg64;
+use std::sync::Arc;
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_solve_is_allocation_free() {
+    let pool = Arc::new(WorkerPool::new(4));
+    let exec = ExecCtx::with_pool(pool, 4);
+    let mut rng = Pcg64::new(42);
+
+    // --- Non-recursive partition path (exact and padded shapes). ---
+    let sys_exact = random_dd_system::<f64>(&mut rng, 4_096, 0.5);
+    let sys_padded = random_dd_system::<f64>(&mut rng, 4_099, 0.5);
+    let mut ws = PartitionWorkspace::new();
+    let mut x_exact = vec![0.0f64; 4_096];
+    let mut x_padded = vec![0.0f64; 4_099];
+    for _ in 0..2 {
+        partition_solve_with_workspace(&sys_exact, 32, &exec, &mut ws, &mut x_exact).unwrap();
+        partition_solve_with_workspace(&sys_padded, 32, &exec, &mut ws, &mut x_padded).unwrap();
+    }
+
+    let allocs = CountingAlloc::count_during(|| {
+        for _ in 0..5 {
+            partition_solve_with_workspace(&sys_exact, 32, &exec, &mut ws, &mut x_exact).unwrap();
+            partition_solve_with_workspace(&sys_padded, 32, &exec, &mut ws, &mut x_padded).unwrap();
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "warmed-up partition_solve_with_workspace must not allocate"
+    );
+
+    // --- Recursive path with a deep plan. ---
+    let n = 20_000;
+    let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+    let plan = [32usize, 10, 8];
+    let mut rws = SolveWorkspace::new();
+    let mut x = vec![0.0f64; n];
+    for _ in 0..2 {
+        recursive_solve_with_workspace(&sys, &plan, &exec, &mut rws, &mut x).unwrap();
+    }
+
+    let allocs = CountingAlloc::count_during(|| {
+        for _ in 0..5 {
+            recursive_solve_with_workspace(&sys, &plan, &exec, &mut rws, &mut x).unwrap();
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "warmed-up recursive_solve_with_workspace must not allocate"
+    );
+
+    // Sanity: the solves above actually produced solutions.
+    let residual = partisol::solver::residual::max_abs_residual(&sys, &x);
+    assert!(residual < 1e-9, "residual {residual}");
+}
