@@ -1,69 +1,84 @@
-//! Quickstart: solve a tridiagonal SLAE with the tuned sub-system size.
+//! Quickstart: solve tridiagonal SLAEs through the typed client API.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 //!
-//! Shows the three-layer path end-to-end through the planning pipeline:
-//! `Planner::plan` picks the sub-system size m and the backend, a
-//! `SolverBackend` executes the plan (Stage 1/3 as AOT-compiled Pallas
-//! kernels on the PJRT CPU client, Stage 2 host-side in Rust — or the
-//! native solver when artifacts are missing), and the solution is
-//! verified against the sequential Thomas baseline.
+//! The `Client` is the single solve surface: it probes the PJRT
+//! artifacts, plans every request through the ML-tuned heuristic
+//! (`Planner` + plan cache), dispatches to the planned backend (AOT
+//! Pallas kernels on PJRT when artifacts exist, the pooled native
+//! solver otherwise), and hands back typed `SolveHandle` futures.
+//! Three requests below show the API surface:
+//!
+//! 1. an owned f64 solve, verified against the Thomas baseline;
+//! 2. an f32 solve that runs the f32 kernels **end-to-end** (the
+//!    response is `Solution::F32` — nothing is widened through f64);
+//! 3. a zero-copy borrowed solve through `solve_now` (the diagonals
+//!    are never cloned).
 
-use partisol::gpu::spec::{Dtype, GpuCard};
-use partisol::plan::{
-    Backend, BackendAvailability, NativeBackend, PjrtBackend, Planner, SolveOptions,
-    SolverBackend,
-};
-use partisol::runtime::{Manifest, Runtime};
+use partisol::api::{Client, SolveSpec};
 use partisol::solver::generator::random_dd_system;
-use partisol::solver::residual::{max_abs_diff, max_abs_residual};
+use partisol::solver::residual::max_abs_diff;
 use partisol::solver::thomas_solve;
 use partisol::util::Pcg64;
-use std::path::Path;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n = 100_000;
     let mut rng = Pcg64::new(2025);
     let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
 
-    // 1. The planner composes the paper's heuristics with the probed
-    //    backend availability into an explicit plan.
-    let avail = match Manifest::load(Path::new("artifacts")) {
-        Ok(man) => BackendAvailability::from_manifest(&man, Dtype::F64, true),
-        Err(_) => BackendAvailability::native_only(),
-    };
-    let planner = Planner::paper(avail, GpuCard::Rtx2080Ti);
-    let plan = planner.plan(n, &SolveOptions::default());
-    println!("{}\n", planner.explain(&plan));
+    // One client = one running service (planner, plan cache, exec pool,
+    // native workers, PJRT device thread when artifacts are present).
+    let client = Client::builder()
+        .artifacts_dir("artifacts")
+        .workers(2)
+        .build()?;
 
-    // 2. Execute the plan on the planned backend (falling back to the
-    //    native solver when the PJRT runtime is unavailable).
-    let outcome = match plan.backend {
-        Backend::Pjrt => match Runtime::new(Path::new("artifacts")) {
-            Ok(rt) => {
-                println!("backend: PJRT ({})", rt.platform_name());
-                PjrtBackend::new(&rt).execute(&plan, &sys)?
-            }
-            Err(e) => {
-                println!("backend: native (PJRT unavailable: {e})");
-                NativeBackend::new(4).execute(&plan, &sys)?
-            }
-        },
-        _ => {
-            println!("backend: {}", plan.backend.name());
-            NativeBackend::new(4).execute(&plan, &sys)?
-        }
-    };
-
-    // 3. Verify: residual + agreement with the sequential baseline.
-    let residual = max_abs_residual(&sys, &outcome.x);
+    // 1. Owned f64 request. The plan is explicit and inspectable —
+    //    borrow a view for introspection; nothing is copied.
+    let plan = client.plan(n, &SolveSpec::borrowed_f64(sys.view()).opts);
+    println!("{}\n", client.explain(&plan));
+    let resp = client.solve(SolveSpec::f64(sys.clone()))?;
+    println!(
+        "f64 solve : backend {} | m = {} | residual {:.3e}",
+        resp.backend.name(),
+        resp.m,
+        resp.residual.unwrap()
+    );
     let baseline = thomas_solve(&sys)?;
-    let diff = max_abs_diff(&outcome.x, &baseline);
-    println!("max |Ax - d|          = {residual:.3e}");
-    println!("max |x - x_thomas|    = {diff:.3e}");
-    assert!(residual < 1e-9 && diff < 1e-9);
+    let diff = max_abs_diff(resp.x.as_f64().unwrap(), &baseline);
+    assert!(resp.residual.unwrap() < 1e-9 && diff < 1e-9);
+
+    // 2. f32 request: plans on the f32 heuristic trend and executes the
+    //    f32 kernels end-to-end — the solution comes back as f32 bits.
+    let sys32 = random_dd_system::<f32>(&mut rng, n, 0.5);
+    let resp32 = client.solve(SolveSpec::f32(sys32))?;
+    let x32: &[f32] = resp32.x.as_f32().expect("f32 in, f32 out");
+    println!(
+        "f32 solve : backend {} | m = {} | residual {:.3e} | x[0] = {}",
+        resp32.backend.name(),
+        resp32.m,
+        resp32.residual.unwrap(),
+        x32[0]
+    );
+    assert!(resp32.residual.unwrap() < 1e-2);
+
+    // 3. Zero-copy: a borrowed view of caller-owned diagonals, solved
+    //    synchronously on the calling thread (no queue hop, no clone).
+    let spec = SolveSpec::borrowed_f64(sys.view());
+    let now = client.solve_now(&spec)?;
+    let now_diff = max_abs_diff(now.x.as_f64().unwrap(), &baseline);
+    assert!(now_diff < 1e-9);
+    println!("solve_now : borrowed view solved zero-copy (|x - x_thomas| = {now_diff:.3e})");
+
+    let m = client.metrics();
+    println!(
+        "\nmetrics   : {} completed | plan cache {}h/{}m | workspaces {}c/{}r",
+        m.completed, m.plan_cache_hits, m.plan_cache_misses,
+        m.workspaces_created, m.workspaces_reused
+    );
+    client.shutdown();
     println!("quickstart OK");
     Ok(())
 }

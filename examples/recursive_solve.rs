@@ -8,7 +8,7 @@
 
 use partisol::gpu::simulator::GpuSimulator;
 use partisol::gpu::spec::{Dtype, GpuCard};
-use partisol::plan::{BackendAvailability, NativeBackend, Planner, SolverBackend};
+use partisol::plan::{BackendAvailability, NativeBackend, Planner};
 use partisol::recursion::rsteps::{published_opt_r, RStepsModel};
 use partisol::solver::generator::random_dd_system;
 use partisol::solver::residual::max_abs_residual;
@@ -17,7 +17,9 @@ use partisol::util::Pcg64;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     // Real numerics at a laptop-friendly size: every recursion depth must
-    // produce the same solution.
+    // produce the same solution. Execution goes through the typed
+    // backend surface (`execute_typed` over a borrowed view — the same
+    // zero-copy path the client API's solve_now uses).
     let n = 200_000;
     let mut rng = Pcg64::new(31);
     let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
@@ -26,7 +28,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("solving N = {n} natively at every recursion depth:");
     for r in 0..=4 {
         let plan = planner.plan_recursive(n, r, Dtype::F64);
-        let out = backend.execute(&plan, &sys)?;
+        let out = backend.execute_typed::<f64>(&plan, sys.view())?;
         let res = max_abs_residual(&sys, &out.x);
         println!("  R = {r}: plan {:?}  max|Ax-d| = {res:.3e}", plan.levels);
         assert!(res < 1e-9);

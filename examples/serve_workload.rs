@@ -1,26 +1,30 @@
 //! END-TO-END DRIVER (EXPERIMENTS.md §E2E): run the full three-layer
-//! system on a real workload — the solve service with the ML-tuned router
-//! on a log-uniform mix of SLAE sizes, through the AOT Pallas artifacts on
-//! PJRT, with native workers alongside — and report latency/throughput,
-//! residuals and the paper-facing simulated-GPU cost of every request.
+//! system on a real workload — the typed client API over the solve
+//! service with the ML-tuned router, through the AOT Pallas artifacts
+//! on PJRT when present, with native workers alongside — and report
+//! latency/throughput, residuals and the paper-facing simulated-GPU
+//! cost of every request.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_workload
+//! cargo run --release --example serve_workload -- --batched
 //! ```
+//!
+//! `--batched` switches to a mixed f32/f64 workload of repeated sizes
+//! and compares one-at-a-time submission against `submit_many` (the
+//! whole group rides the batcher as fused same-shape executions),
+//! reporting the throughput ratio and the observed batch sizes.
 
-use partisol::config::Config;
-use partisol::coordinator::{Service, SolveRequest};
+use partisol::api::{Client, SolveSpec};
 use partisol::solver::generator::random_dd_system;
 use partisol::util::stats::{mean, percentile};
 use partisol::util::Pcg64;
+use std::sync::Arc;
 use std::time::Instant;
 
-fn main() -> Result<(), Box<dyn std::error::Error>> {
+fn log_uniform_workload(client: &Client) -> Result<(), Box<dyn std::error::Error>> {
     let requests = 128usize;
     let (min_n, max_n) = (1_000usize, 300_000usize);
-
-    let cfg = Config::default();
-    let svc = Service::start(cfg)?;
     let mut rng = Pcg64::new(99);
 
     // Log-uniform workload over the paper's size range.
@@ -32,34 +36,27 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     println!("submitting {requests} solves, N in [{min_n}, {max_n}] (log-uniform)…");
     let t0 = Instant::now();
-    let mut rxs = Vec::with_capacity(requests);
-    for (i, &n) in sizes.iter().enumerate() {
+    let mut handles = Vec::with_capacity(requests);
+    for &n in &sizes {
         let sys = random_dd_system(&mut rng, n, 0.5);
-        // Retry on backpressure — the bounded queue is part of the test.
-        loop {
-            match svc.submit(SolveRequest::new(i as u64, sys.clone())) {
-                Ok(rx) => {
-                    rxs.push(rx);
-                    break;
-                }
-                Err(_) => std::thread::sleep(std::time::Duration::from_micros(100)),
-            }
-        }
+        // submit_blocking rides out backpressure without cloning the
+        // diagonals (the service hands a rejected payload back).
+        handles.push(client.submit_blocking(SolveSpec::f64(sys))?);
     }
 
     let mut lat_ms = Vec::new();
     let mut sim_gpu_ms = Vec::new();
     let mut worst_res: f64 = 0.0;
     let mut by_backend = std::collections::BTreeMap::<&str, usize>::new();
-    for rx in rxs {
-        let resp = rx.recv()?.map_err(partisol::Error::Service)?;
+    for handle in handles {
+        let resp = handle.wait()?;
         lat_ms.push((resp.queue_us + resp.exec_us) / 1e3);
         sim_gpu_ms.push(resp.simulated_gpu_us / 1e3);
         worst_res = worst_res.max(resp.residual.unwrap_or(0.0));
         *by_backend.entry(resp.backend.name()).or_default() += 1;
     }
     let wall = t0.elapsed().as_secs_f64();
-    let m = svc.metrics();
+    let m = client.metrics();
 
     println!("\n== end-to-end results ==");
     println!(
@@ -88,12 +85,110 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         m.workspaces_created, m.workspaces_reused
     );
     println!(
+        "failures          : {} failed | {} backpressure | {} pjrt fallbacks | {} dropped",
+        m.failed, m.rejected_backpressure, m.pjrt_fallbacks, m.responses_dropped
+    );
+    println!(
         "simulated GPU cost: mean {:.3} ms/solve (what this workload would cost on the paper's 2080 Ti)",
         mean(&sim_gpu_ms)
     );
     assert!(worst_res < 1e-8, "residual check failed");
     assert_eq!(m.completed as usize, requests);
-    svc.shutdown();
+    Ok(())
+}
+
+/// Mixed-precision batched mode: the same requests submitted
+/// one-at-a-time vs. as `submit_many` groups.
+fn batched_workload(client: &Client) -> Result<(), Box<dyn std::error::Error>> {
+    let groups = 8usize; // submit_many calls per run
+    let group_size = 16usize; // requests per call (mixed f32/f64)
+    let n = 50_000usize;
+    let requests = groups * group_size;
+    let mut rng = Pcg64::new(7);
+
+    // Pre-generate a mixed f32/f64 workload of one repeated size so
+    // same-dtype requests share an execution shape.
+    let sys64: Vec<Arc<_>> = (0..requests / 2)
+        .map(|_| Arc::new(random_dd_system::<f64>(&mut rng, n, 0.5)))
+        .collect();
+    // Stronger dominance for the f32 half keeps its residuals
+    // comfortably inside f32 round-off at this size.
+    let sys32: Vec<Arc<_>> = (0..requests / 2)
+        .map(|_| Arc::new(random_dd_system::<f32>(&mut rng, n, 1.0)))
+        .collect();
+    let make_specs = || -> Vec<SolveSpec<'static>> {
+        let mut specs = Vec::with_capacity(requests);
+        for i in 0..requests / 2 {
+            specs.push(SolveSpec::shared_f64(sys64[i].clone()));
+            specs.push(SolveSpec::shared_f32(sys32[i].clone()));
+        }
+        specs
+    };
+
+    println!("batched mode: {requests} solves (half f32, half f64), N = {n}\n");
+
+    // --- one-at-a-time baseline ---
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(requests);
+    for spec in make_specs() {
+        handles.push(client.submit_blocking(spec)?);
+    }
+    for h in handles {
+        let resp = h.wait()?;
+        assert!(resp.residual.unwrap_or(0.0) < 1e-2);
+    }
+    let t_single = t0.elapsed().as_secs_f64();
+
+    // --- submit_many: each group rides the batcher as one fan-out ---
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(requests);
+    let mut batch_sizes = Vec::new();
+    for chunk in make_specs().chunks(group_size) {
+        handles.extend(client.submit_many(chunk.to_vec())?);
+    }
+    for h in handles {
+        let resp = h.wait()?;
+        assert!(resp.residual.unwrap_or(0.0) < 1e-2);
+        batch_sizes.push(resp.batch_size as f64);
+    }
+    let t_batched = t0.elapsed().as_secs_f64();
+
+    println!(
+        "one-at-a-time : {t_single:.3}s  ({:.1} req/s)",
+        requests as f64 / t_single
+    );
+    println!(
+        "submit_many   : {t_batched:.3}s  ({:.1} req/s, {:.2}x)",
+        requests as f64 / t_batched,
+        t_single / t_batched
+    );
+    println!(
+        "batch sizes   : mean {:.1}, max {:.0} (mixed dtypes never share a batch)",
+        mean(&batch_sizes),
+        batch_sizes.iter().fold(0.0f64, |a, &b| a.max(b))
+    );
+    let m = client.metrics();
+    println!(
+        "service       : {} completed | {} batches | plan cache {}h/{}m",
+        m.completed, m.batches, m.plan_cache_hits, m.plan_cache_misses
+    );
+    assert!(
+        batch_sizes.iter().any(|&b| b > 1.0),
+        "submit_many never produced a fused batch"
+    );
+    assert_eq!(m.completed as usize, 2 * requests);
+    Ok(())
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let batched = std::env::args().any(|a| a == "--batched");
+    let client = Client::builder().workers(2).build()?;
+    if batched {
+        batched_workload(&client)?;
+    } else {
+        log_uniform_workload(&client)?;
+    }
+    client.shutdown();
     println!("serve_workload OK");
     Ok(())
 }

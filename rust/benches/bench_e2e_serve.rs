@@ -1,16 +1,19 @@
 //! End-to-end service benchmark: throughput and latency of the threaded
 //! coordinator under a mixed synthetic workload (the serving-paper-style
-//! metric of EXPERIMENTS.md §E2E).
+//! metric of EXPERIMENTS.md §E2E), driven through the typed client API,
+//! plus a batched-submission section comparing one-at-a-time `submit`
+//! against `submit_many` fan-outs on a repeated-size workload.
 
+use partisol::api::{Client, SolveSpec};
 use partisol::config::Config;
-use partisol::coordinator::{Service, SolveRequest};
 use partisol::solver::generator::random_dd_system;
 use partisol::util::Pcg64;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn run_workload(cfg: Config, label: &str, requests: usize) {
-    let svc = match Service::start(cfg) {
-        Ok(s) => s,
+    let client = match Client::from_config(cfg) {
+        Ok(c) => c,
         Err(e) => {
             println!("{label}: SKIP ({e})");
             return;
@@ -18,26 +21,25 @@ fn run_workload(cfg: Config, label: &str, requests: usize) {
     };
     let mut rng = Pcg64::new(11);
     let t0 = Instant::now();
-    let mut rxs = Vec::new();
-    for i in 0..requests {
+    let mut handles = Vec::new();
+    for _ in 0..requests {
         let n = (1000.0 * (100.0f64).powf(rng.uniform())) as usize; // 1e3..1e5
         let sys = random_dd_system(&mut rng, n, 0.5);
-        loop {
-            match svc.submit(SolveRequest::new(i as u64, sys.clone())) {
-                Ok(rx) => {
-                    rxs.push(rx);
-                    break;
-                }
-                Err(_) => std::thread::sleep(std::time::Duration::from_micros(50)),
+        match client.submit_blocking(SolveSpec::f64(sys)) {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                println!("{label}: submit failed ({e})");
+                return;
             }
         }
     }
-    let ok = rxs
+    let ok = handles
         .into_iter()
-        .filter(|rx| matches!(rx.recv(), Ok(Ok(_))))
+        .map(|h| h.wait())
+        .filter(|r| r.is_ok())
         .count();
     let wall = t0.elapsed().as_secs_f64();
-    let m = svc.metrics();
+    let m = client.metrics();
     println!(
         "{label}: {ok}/{requests} ok, {:.1} req/s | e2e p50 {:.1} ms p99 {:.1} ms | batches {} | pjrt {} native {} thomas {} | plan cache {}h/{}m",
         ok as f64 / wall,
@@ -50,7 +52,59 @@ fn run_workload(cfg: Config, label: &str, requests: usize) {
         m.plan_cache_hits,
         m.plan_cache_misses
     );
-    svc.shutdown();
+    client.shutdown();
+}
+
+/// submit vs submit_many on a repeated-size native workload: the
+/// batched path fuses same-shape members into one pool fan-out each.
+fn run_batched_comparison(requests: usize, n: usize) {
+    let cfg = Config {
+        probe_pjrt: false,
+        workers: 2,
+        ..Config::default()
+    };
+    let client = match Client::from_config(cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            println!("batched: SKIP ({e})");
+            return;
+        }
+    };
+    let mut rng = Pcg64::new(13);
+    let systems: Vec<Arc<_>> = (0..requests)
+        .map(|_| Arc::new(random_dd_system::<f64>(&mut rng, n, 0.5)))
+        .collect();
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for sys in &systems {
+        handles.push(client.submit(SolveSpec::shared_f64(sys.clone())).unwrap());
+    }
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let t_single = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    let mut max_batch_seen = 0usize;
+    for chunk in systems.chunks(8) {
+        let specs = chunk.iter().map(|s| SolveSpec::shared_f64(s.clone())).collect();
+        handles.extend(client.submit_many(specs).unwrap());
+    }
+    for h in handles {
+        max_batch_seen = max_batch_seen.max(h.wait().unwrap().batch_size);
+    }
+    let t_batched = t0.elapsed().as_secs_f64();
+
+    println!(
+        "batched: N={n} x{requests} | submit {:.1} req/s | submit_many {:.1} req/s ({:.2}x, max batch {})",
+        requests as f64 / t_single,
+        requests as f64 / t_batched,
+        t_single / t_batched,
+        max_batch_seen
+    );
+    client.shutdown();
 }
 
 fn main() {
@@ -60,11 +114,12 @@ fn main() {
     // Native-only service (worker pool).
     run_workload(
         Config {
-            artifacts_dir: "/nonexistent".into(),
+            probe_pjrt: false,
             workers: 4,
             ..Config::default()
         },
         "native ",
         64,
     );
+    run_batched_comparison(64, 20_000);
 }

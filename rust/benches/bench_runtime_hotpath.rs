@@ -58,6 +58,42 @@ fn bench_pool_dispatch(loop_t: Duration, min_iters: usize) -> Vec<(&'static str,
     out
 }
 
+/// Client-API overhead on the hot path: the full `solve_now` round trip
+/// (plan-cache lookup + typed dispatch + zero-copy borrowed execute)
+/// vs. the bare solver call it wraps. Runs without artifacts.
+fn bench_client_overhead(loop_t: Duration, min_iters: usize) -> (f64, f64) {
+    use partisol::api::{Client, SolveSpec};
+    use partisol::solver::partition_solve;
+
+    let client = Client::builder()
+        .native_only()
+        .workers(1)
+        .pool_size(1)
+        .build()
+        .expect("client");
+    let mut rng = Pcg64::new(5);
+    let sys = random_dd_system::<f64>(&mut rng, 1_000, 0.5);
+    let spec = SolveSpec::borrowed_f64(sys.view()).with_residual(false);
+    let samples = bench_loop(loop_t, min_iters, || {
+        let _ = std::hint::black_box(client.solve_now(&spec).unwrap());
+    });
+    let t_client = median(&samples);
+
+    let m = client.plan(1_000, &spec.opts).m();
+    let samples = bench_loop(loop_t, min_iters, || {
+        let _ = std::hint::black_box(partition_solve(&sys, m, 1).unwrap());
+    });
+    let t_direct = median(&samples);
+    println!(
+        "client solve_now:       {:>10.0} ns (direct solver {:>8.0} ns, overhead {:.0} ns)",
+        t_client * 1e9,
+        t_direct * 1e9,
+        (t_client - t_direct) * 1e9
+    );
+    client.shutdown();
+    (t_client * 1e9, t_direct * 1e9)
+}
+
 /// Plan-cache effect on the serve hot path: a cache hit must be far
 /// cheaper than a full kNN + occupancy-model + shard-layout planning
 /// pass. Runs without artifacts, so it is always part of the trajectory.
@@ -119,6 +155,7 @@ fn main() {
     };
     let (plan_ns, miss_ns, hit_ns) = bench_plan_cache(loop_t, min_iters);
     let dispatch = bench_pool_dispatch(loop_t, if smoke { 3 } else { 200 });
+    let (client_ns, direct_ns) = bench_client_overhead(loop_t, if smoke { 3 } else { 200 });
 
     let report = obj(vec![
         ("bench", Json::Str("runtime_hotpath".to_string())),
@@ -126,6 +163,8 @@ fn main() {
         ("plan_uncached_ns", Json::Num(plan_ns)),
         ("plan_cache_miss_ns", Json::Num(miss_ns)),
         ("plan_cache_hit_ns", Json::Num(hit_ns)),
+        ("client_solve_now_ns", Json::Num(client_ns)),
+        ("direct_solver_ns", Json::Num(direct_ns)),
         (
             "pool_dispatch_ns",
             obj(dispatch

@@ -1,0 +1,337 @@
+//! [`Client`]: the typed facade over the coordinator [`Service`] — the
+//! single public solve surface.
+//!
+//! ```no_run
+//! use partisol::api::{Client, SolveSpec};
+//! use partisol::solver::generator::random_dd_system;
+//! use partisol::util::Pcg64;
+//!
+//! let client = Client::builder().workers(2).build()?;
+//! let mut rng = Pcg64::new(1);
+//! let sys = random_dd_system::<f32>(&mut rng, 100_000, 0.5);
+//! let handle = client.submit(SolveSpec::f32(sys))?;      // f32 end-to-end
+//! let resp = handle.wait()?;
+//! let x: &[f32] = resp.x.as_f32().unwrap();              // no f64 widening
+//! # let _ = x;
+//! # Ok::<(), partisol::api::ApiError>(())
+//! ```
+
+use super::error::ApiError;
+use super::handle::SolveHandle;
+use super::payload::SystemPayload;
+use crate::config::{Config, HeuristicKind};
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::{Service, SolveResponse};
+use crate::gpu::spec::GpuCard;
+use crate::plan::{Backend, Planner, SolveOptions, SolvePlan};
+use crate::solver::{TriSystem, TriSystemRef};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// One solve request: a dtype-erased payload plus per-request options.
+/// The request's dtype is always the payload's dtype — `opts.dtype` is
+/// synchronized on submission, so an f32 payload plans and executes on
+/// the f32 heuristic trend and the f32 kernels.
+#[derive(Clone, Debug)]
+pub struct SolveSpec<'a> {
+    pub payload: SystemPayload<'a>,
+    pub opts: SolveOptions,
+}
+
+impl<'a> SolveSpec<'a> {
+    /// A spec from anything that converts into a payload (owned or
+    /// `Arc`-shared [`TriSystem`], borrowed [`TriSystemRef`]).
+    pub fn new(payload: impl Into<SystemPayload<'a>>) -> SolveSpec<'a> {
+        let payload = payload.into();
+        let opts = SolveOptions {
+            dtype: payload.dtype(),
+            ..SolveOptions::default()
+        };
+        SolveSpec { payload, opts }
+    }
+
+    /// Owned f64 request.
+    pub fn f64(sys: TriSystem<f64>) -> SolveSpec<'static> {
+        SolveSpec::new(sys)
+    }
+
+    /// Owned f32 request (plans on the f32 trend, executes f32 kernels).
+    pub fn f32(sys: TriSystem<f32>) -> SolveSpec<'static> {
+        SolveSpec::new(sys)
+    }
+
+    /// Shared f64 request: retries and re-submissions clone a pointer,
+    /// not three diagonals.
+    pub fn shared_f64(sys: Arc<TriSystem<f64>>) -> SolveSpec<'static> {
+        SolveSpec::new(sys)
+    }
+
+    /// Shared f32 request.
+    pub fn shared_f32(sys: Arc<TriSystem<f32>>) -> SolveSpec<'static> {
+        SolveSpec::new(sys)
+    }
+
+    /// Borrowed f64 view (zero-copy; pair with [`Client::solve_now`]).
+    pub fn borrowed_f64(sys: TriSystemRef<'a, f64>) -> SolveSpec<'a> {
+        SolveSpec::new(sys)
+    }
+
+    /// Borrowed f32 view.
+    pub fn borrowed_f32(sys: TriSystemRef<'a, f32>) -> SolveSpec<'a> {
+        SolveSpec::new(sys)
+    }
+
+    /// Force a sub-system size instead of the heuristic.
+    pub fn with_m(mut self, m: usize) -> Self {
+        self.opts.m_override = Some(m);
+        self
+    }
+
+    /// Force a backend instead of the planner's choice.
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.opts.backend_override = Some(backend);
+        self
+    }
+
+    /// Enable/disable residual verification in the response.
+    pub fn with_residual(mut self, compute: bool) -> Self {
+        self.opts.compute_residual = compute;
+        self
+    }
+}
+
+/// Builder for a [`Client`] (a thin, typed layer over [`Config`]).
+#[derive(Clone, Debug, Default)]
+pub struct ClientBuilder {
+    cfg: Config,
+}
+
+impl ClientBuilder {
+    pub fn new() -> ClientBuilder {
+        ClientBuilder {
+            cfg: Config::default(),
+        }
+    }
+
+    /// Start from an existing service configuration.
+    pub fn from_config(cfg: Config) -> ClientBuilder {
+        ClientBuilder { cfg }
+    }
+
+    /// Native worker threads executing solves.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
+    /// Worker threads in the shared exec pool.
+    pub fn pool_size(mut self, pool_size: usize) -> Self {
+        self.cfg.pool_size = pool_size;
+        self
+    }
+
+    /// Bounded request-queue depth (backpressure beyond this).
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.cfg.queue_depth = depth;
+        self
+    }
+
+    /// Max requests batched into one execution.
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.cfg.max_batch = max_batch;
+        self
+    }
+
+    /// Plan-cache capacity (0 disables caching).
+    pub fn plan_cache(mut self, capacity: usize) -> Self {
+        self.cfg.plan_cache = capacity;
+        self
+    }
+
+    /// PJRT artifact directory.
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Optimum-m heuristic the planner uses.
+    pub fn heuristic(mut self, heuristic: HeuristicKind) -> Self {
+        self.cfg.heuristic = heuristic;
+        self
+    }
+
+    /// Simulated GPU card for timing estimates.
+    pub fn card(mut self, card: GpuCard) -> Self {
+        self.cfg.card = card;
+        self
+    }
+
+    /// Skip the PJRT artifact probe entirely: every solve runs on the
+    /// native backend.
+    pub fn native_only(mut self) -> Self {
+        self.cfg.probe_pjrt = false;
+        self.cfg.native_fallback = true;
+        self
+    }
+
+    pub fn build(self) -> Result<Client, ApiError> {
+        if self.cfg.workers == 0
+            || self.cfg.queue_depth == 0
+            || self.cfg.max_batch == 0
+            || self.cfg.pool_size == 0
+        {
+            return Err(ApiError::InvalidRequest(
+                "workers, queue_depth, max_batch and pool_size must be positive".into(),
+            ));
+        }
+        Client::from_config(self.cfg)
+    }
+}
+
+/// The typed client: owns a running [`Service`], assigns request ids,
+/// and exposes submission ([`Client::submit`], [`Client::submit_many`]),
+/// blocking round-trips ([`Client::solve`]), the synchronous zero-copy
+/// path ([`Client::solve_now`]) and plan introspection.
+pub struct Client {
+    svc: Service,
+    next_id: AtomicU64,
+}
+
+impl Client {
+    pub fn builder() -> ClientBuilder {
+        ClientBuilder::new()
+    }
+
+    /// Start a service from a full [`Config`].
+    pub fn from_config(cfg: Config) -> Result<Client, ApiError> {
+        let svc = Service::start(cfg).map_err(|e| ApiError::Service(e.to_string()))?;
+        Ok(Client {
+            svc,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit one request; returns a [`SolveHandle`] future. Payloads
+    /// must be queueable (`'static`): owned, shared or `'static`
+    /// borrows. On [`ApiError::Backpressure`], either retry manually or
+    /// use [`Client::submit_blocking`], which retries without cloning.
+    pub fn submit(&self, spec: SolveSpec<'static>) -> Result<SolveHandle, ApiError> {
+        let SolveSpec { payload, mut opts } = spec;
+        opts.dtype = payload.dtype();
+        let id = self.next_id();
+        let rx = self
+            .svc
+            .submit_payload(id, payload, opts)
+            .map_err(|(e, _, _)| e)?;
+        Ok(SolveHandle::new(id, rx))
+    }
+
+    /// Submit, blocking on backpressure: when the bounded queue is full
+    /// the call sleeps briefly and retries until admitted (or a
+    /// non-retryable error occurs). Retries are zero-copy — the
+    /// rejected payload is handed back by the service and resubmitted,
+    /// never cloned. Blocks only on *admission*, not completion.
+    pub fn submit_blocking(&self, spec: SolveSpec<'static>) -> Result<SolveHandle, ApiError> {
+        const BACKOFF: std::time::Duration = std::time::Duration::from_micros(100);
+        let SolveSpec { mut payload, mut opts } = spec;
+        opts.dtype = payload.dtype();
+        let id = self.next_id();
+        loop {
+            match self.svc.submit_payload(id, payload, opts) {
+                Ok(rx) => return Ok(SolveHandle::new(id, rx)),
+                Err((ApiError::Backpressure { .. }, p, o)) => {
+                    payload = p;
+                    opts = o;
+                    std::thread::sleep(BACKOFF);
+                }
+                Err((e, _, _)) => return Err(e),
+            }
+        }
+    }
+
+    /// Submit a group of requests as one fan-out: requests sharing an
+    /// execution shape `(m, backend, dtype)` are batched and solved in
+    /// a single fused execution (their responses report the shared
+    /// `batch_size`). Admission is all-or-nothing: either every request
+    /// is queued or none is (backpressure rejects the whole group).
+    pub fn submit_many(
+        &self,
+        specs: Vec<SolveSpec<'static>>,
+    ) -> Result<Vec<SolveHandle>, ApiError> {
+        let mut items = Vec::with_capacity(specs.len());
+        let mut ids = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let SolveSpec { payload, mut opts } = spec;
+            opts.dtype = payload.dtype();
+            let id = self.next_id();
+            ids.push(id);
+            items.push((id, payload, opts));
+        }
+        let rxs = self.svc.submit_batch(items)?;
+        Ok(ids
+            .into_iter()
+            .zip(rxs)
+            .map(|(id, rx)| SolveHandle::new(id, rx))
+            .collect())
+    }
+
+    /// Submit and wait: the blocking round-trip.
+    pub fn solve(&self, spec: SolveSpec<'static>) -> Result<SolveResponse, ApiError> {
+        let SolveSpec { payload, mut opts } = spec;
+        opts.dtype = payload.dtype();
+        self.svc.solve_payload(self.next_id(), payload, opts)
+    }
+
+    /// Synchronous in-process solve, bypassing the queue: plans through
+    /// the same router/plan-cache, executes on the shared native
+    /// backend on the calling thread. Borrowed payloads solve zero-copy
+    /// — the diagonals are never cloned. (Always executes natively;
+    /// PJRT-planned requests take the native fallback.)
+    pub fn solve_now(&self, spec: &SolveSpec<'_>) -> Result<SolveResponse, ApiError> {
+        self.svc.solve_inline(self.next_id(), &spec.payload, &spec.opts)
+    }
+
+    /// Service metrics snapshot (latency, counters, cache/pool stats).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.svc.metrics()
+    }
+
+    /// The planner behind the service router (plan introspection,
+    /// recursive planning, explain).
+    pub fn planner(&self) -> &Planner {
+        self.svc.router().planner()
+    }
+
+    /// Plan a request without executing it (served from the plan cache
+    /// on repeated sizes).
+    pub fn plan(&self, n: usize, opts: &SolveOptions) -> Arc<SolvePlan> {
+        self.svc.router().plan(n, opts)
+    }
+
+    /// Human-readable rendering of a plan.
+    pub fn explain(&self, plan: &SolvePlan) -> String {
+        self.planner().explain(plan)
+    }
+
+    /// Escape hatch to the underlying service (deprecated surface).
+    pub fn service(&self) -> &Service {
+        &self.svc
+    }
+
+    /// Stop accepting work, finish the queue, join the service threads.
+    pub fn shutdown(self) {
+        self.svc.shutdown()
+    }
+}
+
+impl std::fmt::Debug for Client {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Client")
+            .field("next_id", &self.next_id.load(Ordering::Relaxed))
+            .finish()
+    }
+}

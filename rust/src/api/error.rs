@@ -1,0 +1,96 @@
+//! [`ApiError`]: the structured error taxonomy at the client boundary,
+//! replacing the stringly `Result<_, String>` replies the raw service
+//! channel used to carry. Callers can now match on *why* a solve failed
+//! (backpressure vs. numerics vs. a dropped service) instead of parsing
+//! message text.
+
+use crate::error::Error;
+
+/// Everything that can go wrong between [`crate::api::Client::submit`]
+/// and [`crate::api::SolveHandle::wait`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ApiError {
+    /// The bounded request queue is full; retry after draining some
+    /// in-flight work. `queue_depth` is the configured capacity.
+    Backpressure { queue_depth: usize },
+    /// The service has been shut down and accepts no new work.
+    ShutDown,
+    /// The request was malformed (shape mismatch, inconsistent dtype,
+    /// zero-sized batch member, …) and was never executed.
+    InvalidRequest(String),
+    /// The solver rejected or failed the system (singular pivot, bad
+    /// sub-system size, …).
+    Solve(String),
+    /// The service dropped the reply channel without answering — the
+    /// request can be assumed dead.
+    Disconnected,
+    /// A `wait_timeout`/`wait_deadline` expired before the solve
+    /// completed. The handle stays live; waiting again is allowed.
+    Timeout,
+    /// The handle already yielded its result (or its terminal error).
+    Consumed,
+    /// Service-level failure outside a single solve (startup, config,
+    /// worker spawn).
+    Service(String),
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ApiError::Backpressure { queue_depth } => {
+                write!(f, "queue full (backpressure, depth {queue_depth})")
+            }
+            ApiError::ShutDown => write!(f, "service is shut down"),
+            ApiError::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+            ApiError::Solve(msg) => write!(f, "solve failed: {msg}"),
+            ApiError::Disconnected => write!(f, "service dropped the request"),
+            ApiError::Timeout => write!(f, "wait deadline expired"),
+            ApiError::Consumed => write!(f, "handle already yielded its result"),
+            ApiError::Service(msg) => write!(f, "service error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+impl From<Error> for ApiError {
+    fn from(e: Error) -> Self {
+        match &e {
+            Error::Solver(_) | Error::SingularSystem { .. } => ApiError::Solve(e.to_string()),
+            Error::Shape(msg) => ApiError::InvalidRequest(msg.clone()),
+            _ => ApiError::Service(e.to_string()),
+        }
+    }
+}
+
+impl From<ApiError> for Error {
+    fn from(e: ApiError) -> Self {
+        Error::Service(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crate_errors_map_onto_the_taxonomy() {
+        let e: ApiError = Error::SingularSystem {
+            row: 3,
+            magnitude: 0.0,
+        }
+        .into();
+        assert!(matches!(e, ApiError::Solve(_)));
+        let e: ApiError = Error::Shape("x len 3 != n 4".into()).into();
+        assert!(matches!(e, ApiError::InvalidRequest(_)));
+        let e: ApiError = Error::Config("bad".into()).into();
+        assert!(matches!(e, ApiError::Service(_)));
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let msg = ApiError::Backpressure { queue_depth: 8 }.to_string();
+        assert!(msg.contains("backpressure") && msg.contains('8'));
+        assert!(ApiError::Solve("singular".into()).to_string().contains("singular"));
+    }
+}

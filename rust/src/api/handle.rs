@@ -1,0 +1,162 @@
+//! [`SolveHandle`]: the future of one submitted solve, replacing the
+//! raw `mpsc::Receiver<Reply>` the service used to leak. A handle is
+//! single-shot: it yields its [`SolveResponse`] (or terminal
+//! [`ApiError`]) exactly once; timed waits that expire keep the handle
+//! live so the caller can keep waiting.
+
+use super::error::ApiError;
+use crate::coordinator::service::Reply;
+use crate::coordinator::SolveResponse;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// A pending solve. Dropping the handle abandons the result (the solve
+/// still runs to completion server-side; the service counts the
+/// dropped response in its metrics).
+#[derive(Debug)]
+pub struct SolveHandle {
+    id: u64,
+    rx: mpsc::Receiver<Reply>,
+    done: bool,
+}
+
+impl SolveHandle {
+    pub(crate) fn new(id: u64, rx: mpsc::Receiver<Reply>) -> SolveHandle {
+        SolveHandle {
+            id,
+            rx,
+            done: false,
+        }
+    }
+
+    /// The client-assigned request id (echoed in the response).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the solve completes.
+    pub fn wait(mut self) -> Result<SolveResponse, ApiError> {
+        if self.done {
+            return Err(ApiError::Consumed);
+        }
+        self.done = true;
+        match self.rx.recv() {
+            Ok(reply) => reply,
+            Err(_) => Err(ApiError::Disconnected),
+        }
+    }
+
+    /// Non-blocking poll: `Ok(None)` while the solve is still running.
+    pub fn try_wait(&mut self) -> Result<Option<SolveResponse>, ApiError> {
+        if self.done {
+            return Err(ApiError::Consumed);
+        }
+        match self.rx.try_recv() {
+            Ok(reply) => {
+                self.done = true;
+                reply.map(Some)
+            }
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.done = true;
+                Err(ApiError::Disconnected)
+            }
+        }
+    }
+
+    /// Block for at most `timeout`. [`ApiError::Timeout`] leaves the
+    /// handle live — waiting again later is allowed.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Result<SolveResponse, ApiError> {
+        if self.done {
+            return Err(ApiError::Consumed);
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(reply) => {
+                self.done = true;
+                reply
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ApiError::Timeout),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.done = true;
+                Err(ApiError::Disconnected)
+            }
+        }
+    }
+
+    /// Block until `deadline` at the latest (an already-passed deadline
+    /// degenerates to a non-blocking poll).
+    pub fn wait_deadline(&mut self, deadline: Instant) -> Result<SolveResponse, ApiError> {
+        let timeout = deadline.saturating_duration_since(Instant::now());
+        self.wait_timeout(timeout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ready_handle(reply: Reply) -> SolveHandle {
+        let (tx, rx) = mpsc::channel();
+        tx.send(reply).unwrap();
+        SolveHandle::new(7, rx)
+    }
+
+    fn sample_response() -> SolveResponse {
+        SolveResponse {
+            id: 7,
+            x: crate::api::Solution::F64(vec![1.0]),
+            m: 4,
+            backend: crate::plan::Backend::Native,
+            residual: None,
+            queue_us: 0.0,
+            exec_us: 1.0,
+            batch_size: 1,
+            simulated_gpu_us: 0.0,
+        }
+    }
+
+    #[test]
+    fn wait_yields_the_response() {
+        let h = ready_handle(Ok(sample_response()));
+        assert_eq!(h.id(), 7);
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.id, 7);
+    }
+
+    #[test]
+    fn try_wait_polls_then_consumes() {
+        let (tx, rx) = mpsc::channel();
+        let mut h = SolveHandle::new(1, rx);
+        assert!(matches!(h.try_wait(), Ok(None)), "nothing sent yet");
+        tx.send(Ok(sample_response())).unwrap();
+        assert!(matches!(h.try_wait(), Ok(Some(_))));
+        assert!(matches!(h.try_wait(), Err(ApiError::Consumed)));
+    }
+
+    #[test]
+    fn timeout_keeps_the_handle_live() {
+        let (tx, rx) = mpsc::channel();
+        let mut h = SolveHandle::new(2, rx);
+        assert!(matches!(
+            h.wait_timeout(Duration::from_millis(1)),
+            Err(ApiError::Timeout)
+        ));
+        tx.send(Ok(sample_response())).unwrap();
+        assert!(h.wait_timeout(Duration::from_secs(1)).is_ok());
+    }
+
+    #[test]
+    fn dropped_sender_reports_disconnected() {
+        let (tx, rx) = mpsc::channel::<Reply>();
+        drop(tx);
+        let h = SolveHandle::new(3, rx);
+        assert!(matches!(h.wait(), Err(ApiError::Disconnected)));
+    }
+
+    #[test]
+    fn past_deadline_degenerates_to_a_poll() {
+        let mut h = ready_handle(Ok(sample_response()));
+        let resp = h.wait_deadline(Instant::now() - Duration::from_secs(1));
+        assert!(resp.is_ok(), "already-delivered reply is still returned");
+    }
+}

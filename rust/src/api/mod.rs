@@ -1,0 +1,43 @@
+//! The typed client API: the single public solve surface.
+//!
+//! ```text
+//!   SolveSpec { SystemPayload::{F32, F64}, SolveOptions }
+//!        │
+//!        ▼
+//!   Client ──submit──────▶ SolveHandle ──wait/try_wait/deadline──▶ SolveResponse
+//!     │  └──submit_many──▶ one fan-out: same-(m, backend, dtype)     { Solution::
+//!     │                    requests fused into batched executions       {F32,F64},
+//!     └──solve_now───────▶ synchronous zero-copy path                  metrics… }
+//! ```
+//!
+//! What this layer adds over the raw coordinator [`crate::coordinator::Service`]:
+//!
+//! * **Dtype-generic requests** — [`SystemPayload`] carries f32 or f64
+//!   systems; f32 requests plan on the f32 heuristic trend, exercise
+//!   the `(n, dtype)`-keyed plan cache, and execute the f32 solver
+//!   kernels end-to-end (the solution comes back as [`Solution::F32`]
+//!   bits, never widened through f64).
+//! * **Zero-copy payloads** — systems are owned, `Arc`-shared (retries
+//!   clone a pointer) or borrowed [`crate::solver::TriSystemRef`] views
+//!   ([`Client::solve_now`] never copies a diagonal).
+//! * **Futures, not channels** — [`SolveHandle`] replaces the leaked
+//!   `mpsc::Receiver` with `wait`/`try_wait`/`wait_timeout`/
+//!   `wait_deadline` semantics.
+//! * **Batched submission** — [`Client::submit_many`] routes a group
+//!   through the batcher as one fan-out; same-shape requests share one
+//!   fused execution (`batch_size > 1` in their responses).
+//! * **Structured errors** — [`ApiError`] replaces stringly errors at
+//!   the boundary.
+//!
+//! `Service::submit`/`Service::solve` remain as thin deprecated
+//! wrappers for one release; new code goes through [`Client`].
+
+pub mod client;
+pub mod error;
+pub mod handle;
+pub mod payload;
+
+pub use client::{Client, ClientBuilder, SolveSpec};
+pub use error::ApiError;
+pub use handle::SolveHandle;
+pub use payload::{PayloadScalar, Solution, SystemPayload, SystemSource};

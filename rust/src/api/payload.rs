@@ -1,0 +1,277 @@
+//! Dtype-erased request payloads and solutions.
+//!
+//! [`SystemPayload`] is the single request body the solve surface
+//! accepts: an f32 or f64 tridiagonal system, held as an owned
+//! [`TriSystem`], a shared `Arc<TriSystem>` (re-submission and
+//! backpressure retries clone a pointer, not three diagonals), or a
+//! borrowed [`TriSystemRef`] view (the synchronous
+//! [`crate::api::Client::solve_now`] path never copies the diagonals at
+//! all). [`Solution`] is the matching dtype-erased response vector: an
+//! f32 request yields `Solution::F32` bits straight from the f32
+//! kernels — nothing is widened to f64 on the way out.
+
+use crate::gpu::spec::Dtype;
+use crate::solver::{Scalar, TriSystem, TriSystemRef};
+use std::sync::Arc;
+
+/// One dtype's system, by ownership flavor.
+#[derive(Clone, Debug)]
+pub enum SystemSource<'a, T> {
+    /// The request owns the system (moved in, freed after the solve).
+    Owned(TriSystem<T>),
+    /// Shared ownership: cheap to clone for retries and fan-outs.
+    Shared(Arc<TriSystem<T>>),
+    /// Borrowed view: zero-copy, only usable on paths that complete
+    /// within the borrow (`'static` borrows may also be queued).
+    Borrowed(TriSystemRef<'a, T>),
+}
+
+impl<'a, T: Scalar> SystemSource<'a, T> {
+    /// Borrowed view of the diagonals, whatever the ownership flavor.
+    pub fn view(&self) -> TriSystemRef<'_, T> {
+        match self {
+            SystemSource::Owned(sys) => sys.view(),
+            SystemSource::Shared(sys) => sys.view(),
+            SystemSource::Borrowed(v) => TriSystemRef {
+                a: v.a,
+                b: v.b,
+                c: v.c,
+                d: v.d,
+            },
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            SystemSource::Owned(sys) => sys.n(),
+            SystemSource::Shared(sys) => sys.n(),
+            SystemSource::Borrowed(v) => v.n(),
+        }
+    }
+}
+
+/// The dtype-erased request payload: what a [`crate::api::SolveSpec`]
+/// carries into the service.
+#[derive(Clone, Debug)]
+pub enum SystemPayload<'a> {
+    F32(SystemSource<'a, f32>),
+    F64(SystemSource<'a, f64>),
+}
+
+impl<'a> SystemPayload<'a> {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            SystemPayload::F32(_) => Dtype::F32,
+            SystemPayload::F64(_) => Dtype::F64,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            SystemPayload::F32(s) => s.n(),
+            SystemPayload::F64(s) => s.n(),
+        }
+    }
+}
+
+impl From<TriSystem<f64>> for SystemPayload<'static> {
+    fn from(sys: TriSystem<f64>) -> Self {
+        SystemPayload::F64(SystemSource::Owned(sys))
+    }
+}
+
+impl From<TriSystem<f32>> for SystemPayload<'static> {
+    fn from(sys: TriSystem<f32>) -> Self {
+        SystemPayload::F32(SystemSource::Owned(sys))
+    }
+}
+
+impl From<Arc<TriSystem<f64>>> for SystemPayload<'static> {
+    fn from(sys: Arc<TriSystem<f64>>) -> Self {
+        SystemPayload::F64(SystemSource::Shared(sys))
+    }
+}
+
+impl From<Arc<TriSystem<f32>>> for SystemPayload<'static> {
+    fn from(sys: Arc<TriSystem<f32>>) -> Self {
+        SystemPayload::F32(SystemSource::Shared(sys))
+    }
+}
+
+impl<'a> From<TriSystemRef<'a, f64>> for SystemPayload<'a> {
+    fn from(sys: TriSystemRef<'a, f64>) -> Self {
+        SystemPayload::F64(SystemSource::Borrowed(sys))
+    }
+}
+
+impl<'a> From<TriSystemRef<'a, f32>> for SystemPayload<'a> {
+    fn from(sys: TriSystemRef<'a, f32>) -> Self {
+        SystemPayload::F32(SystemSource::Borrowed(sys))
+    }
+}
+
+/// The dtype-erased solution vector: bits come straight from the
+/// kernels that ran the request's dtype.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Solution {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+impl Solution {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Solution::F32(_) => Dtype::F32,
+            Solution::F64(_) => Dtype::F64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Solution::F32(x) => x.len(),
+            Solution::F64(x) => x.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The f32 bits, if this is an f32 solution.
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Solution::F32(x) => Some(x),
+            Solution::F64(_) => None,
+        }
+    }
+
+    /// The f64 values, if this is an f64 solution.
+    pub fn as_f64(&self) -> Option<&[f64]> {
+        match self {
+            Solution::F64(x) => Some(x),
+            Solution::F32(_) => None,
+        }
+    }
+
+    /// Widening copy for dtype-agnostic consumers (f32 → f64 is exact).
+    pub fn to_f64(&self) -> Vec<f64> {
+        match self {
+            Solution::F64(x) => x.clone(),
+            Solution::F32(x) => x.iter().map(|&v| v as f64).collect(),
+        }
+    }
+}
+
+/// Scalars a [`SystemPayload`] can carry. Generic service/backend code
+/// uses this to extract the matching [`SystemSource`] and to wrap a
+/// typed solve result back into a [`Solution`] without a dtype match at
+/// every call site.
+pub trait PayloadScalar: Scalar {
+    const DTYPE: Dtype;
+    /// This dtype's source inside a payload, if the payload carries it.
+    fn source<'p, 'a>(payload: &'p SystemPayload<'a>) -> Option<&'p SystemSource<'a, Self>>;
+    fn into_solution(x: Vec<Self>) -> Solution;
+    /// This dtype's slice of a solution, if the solution carries it.
+    fn solution_slice(sol: &Solution) -> Option<&[Self]>;
+}
+
+impl PayloadScalar for f64 {
+    const DTYPE: Dtype = Dtype::F64;
+    fn source<'p, 'a>(payload: &'p SystemPayload<'a>) -> Option<&'p SystemSource<'a, f64>> {
+        match payload {
+            SystemPayload::F64(s) => Some(s),
+            SystemPayload::F32(_) => None,
+        }
+    }
+    fn into_solution(x: Vec<f64>) -> Solution {
+        Solution::F64(x)
+    }
+    fn solution_slice(sol: &Solution) -> Option<&[f64]> {
+        sol.as_f64()
+    }
+}
+
+impl PayloadScalar for f32 {
+    const DTYPE: Dtype = Dtype::F32;
+    fn source<'p, 'a>(payload: &'p SystemPayload<'a>) -> Option<&'p SystemSource<'a, f32>> {
+        match payload {
+            SystemPayload::F32(s) => Some(s),
+            SystemPayload::F64(_) => None,
+        }
+    }
+    fn into_solution(x: Vec<f32>) -> Solution {
+        Solution::F32(x)
+    }
+    fn solution_slice(sol: &Solution) -> Option<&[f32]> {
+        sol.as_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::generator::random_dd_system;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn payload_reports_dtype_and_size() {
+        let mut rng = Pcg64::new(1);
+        let sys64 = random_dd_system::<f64>(&mut rng, 16, 0.5);
+        let sys32 = random_dd_system::<f32>(&mut rng, 12, 0.5);
+        let p: SystemPayload = sys64.into();
+        assert_eq!((p.dtype(), p.n()), (Dtype::F64, 16));
+        let p: SystemPayload = sys32.into();
+        assert_eq!((p.dtype(), p.n()), (Dtype::F32, 12));
+    }
+
+    #[test]
+    fn shared_payloads_clone_pointers_not_diagonals() {
+        let mut rng = Pcg64::new(2);
+        let sys = Arc::new(random_dd_system::<f64>(&mut rng, 64, 0.5));
+        let p: SystemPayload = sys.clone().into();
+        let q = p.clone();
+        let SystemPayload::F64(SystemSource::Shared(a)) = &p else {
+            panic!("expected a shared source");
+        };
+        let SystemPayload::F64(SystemSource::Shared(b)) = &q else {
+            panic!("expected a shared source");
+        };
+        assert!(Arc::ptr_eq(a, b), "clone must share the allocation");
+    }
+
+    #[test]
+    fn borrowed_payloads_view_the_caller_buffers() {
+        let mut rng = Pcg64::new(3);
+        let sys = random_dd_system::<f64>(&mut rng, 32, 0.5);
+        let p: SystemPayload = sys.view().into();
+        let SystemPayload::F64(src) = &p else {
+            panic!("expected f64")
+        };
+        assert!(std::ptr::eq(src.view().b.as_ptr(), sys.b.as_ptr()));
+    }
+
+    #[test]
+    fn solution_accessors() {
+        let s = Solution::F32(vec![1.0, 2.0]);
+        assert_eq!(s.dtype(), Dtype::F32);
+        assert_eq!(s.len(), 2);
+        assert!(!s.is_empty());
+        assert!(s.as_f64().is_none());
+        assert_eq!(s.as_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(s.to_f64(), vec![1.0, 2.0]);
+        let s = Solution::F64(vec![3.0]);
+        assert_eq!(s.as_f64().unwrap(), &[3.0]);
+        assert!(s.as_f32().is_none());
+    }
+
+    #[test]
+    fn payload_scalar_extracts_matching_source_only() {
+        let mut rng = Pcg64::new(4);
+        let p: SystemPayload = random_dd_system::<f32>(&mut rng, 8, 0.5).into();
+        assert!(<f32 as PayloadScalar>::source(&p).is_some());
+        assert!(<f64 as PayloadScalar>::source(&p).is_none());
+        let sol = <f32 as PayloadScalar>::into_solution(vec![1.0]);
+        assert!(<f32 as PayloadScalar>::solution_slice(&sol).is_some());
+        assert!(<f64 as PayloadScalar>::solution_slice(&sol).is_none());
+    }
+}

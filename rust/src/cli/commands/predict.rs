@@ -1,11 +1,12 @@
 //! `partisol predict` — heuristic predictions for one SLAE size, straight
-//! from the planning pipeline: optimum sub-system size, stream count,
-//! recursion depth, the per-level `SolvePlan`, and its explanation.
+//! from the planning pipeline behind the client API: optimum sub-system
+//! size, stream count, recursion depth, the per-level `SolvePlan`, and
+//! its explanation.
 
+use crate::api::Client;
 use crate::cli::args::{parse_dtype, Args};
 use crate::error::Result;
-use crate::gpu::spec::{Dtype, GpuCard};
-use crate::plan::{BackendAvailability, Planner};
+use crate::gpu::spec::Dtype;
 use crate::recursion::rsteps::published_opt_r;
 use crate::util::table::fmt_n;
 
@@ -26,14 +27,17 @@ pub fn run(argv: &[String]) -> Result<()> {
     let n = args.get_usize("n", 1_000_000)?;
     let dtype = args.get("dtype").map(parse_dtype).transpose()?.unwrap_or(Dtype::F64);
 
-    let planner = Planner::paper(BackendAvailability::native_only(), GpuCard::Rtx2080Ti);
+    // Planning only: a native-only client exposes the same planner the
+    // serve path dispatches through.
+    let client = Client::builder().native_only().workers(1).pool_size(1).build()?;
     let r = published_opt_r(n);
-    let plan = planner.plan_recursive(n, r, dtype);
+    let plan = client.planner().plan_recursive(n, r, dtype);
     println!("N = {} ({n}), dtype {}", fmt_n(n), dtype.name());
     println!("  optimum sub-system size m : {}", plan.m());
     println!("  optimum CUDA streams      : {}", plan.streams);
     println!("  optimum recursive steps R : {r}");
     println!("  per-level plan [m0..mR]   : {:?}", plan.levels);
-    println!("{}", planner.explain(&plan));
+    println!("{}", client.explain(&plan));
+    client.shutdown();
     Ok(())
 }

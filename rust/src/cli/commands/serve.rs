@@ -1,9 +1,10 @@
 //! `partisol serve` — run the threaded solve service on a synthetic
-//! workload and report latency/throughput.
+//! workload through the typed client API and report latency/throughput
+//! plus every error-path counter.
 
+use crate::api::{Client, SolveSpec};
 use crate::cli::args::Args;
 use crate::config::Config;
-use crate::coordinator::{Service, SolveRequest};
 use crate::error::Result;
 use crate::solver::generator::random_dd_system;
 use crate::util::Pcg64;
@@ -46,39 +47,33 @@ pub fn run(argv: &[String]) -> Result<()> {
         ));
     }
 
-    let svc = Service::start(cfg)?;
+    let client = Client::from_config(cfg)?;
     let mut rng = Pcg64::new(seed);
     let t0 = Instant::now();
-    let mut rxs = Vec::with_capacity(requests);
-    for i in 0..requests {
+    let mut handles = Vec::with_capacity(requests);
+    for _ in 0..requests {
         let n = (min_n as f64
             * ((max_n as f64 / min_n as f64).powf(rng.uniform()))) as usize;
         let sys = random_dd_system(&mut rng, n.max(4), 0.5);
-        loop {
-            match svc.submit(SolveRequest::new(i as u64, sys.clone())) {
-                Ok(rx) => {
-                    rxs.push(rx);
-                    break;
-                }
-                Err(_) => std::thread::sleep(std::time::Duration::from_micros(200)),
-            }
-        }
+        // submit_blocking rides out backpressure zero-copy (the service
+        // hands the rejected payload back between retries).
+        handles.push(client.submit_blocking(SolveSpec::f64(sys))?);
     }
     let mut worst_res: f64 = 0.0;
     let mut ok = 0usize;
-    for rx in rxs {
-        match rx.recv() {
-            Ok(Ok(resp)) => {
+    for handle in handles {
+        match handle.wait() {
+            Ok(resp) => {
                 ok += 1;
                 if let Some(r) = resp.residual {
                     worst_res = worst_res.max(r);
                 }
             }
-            other => eprintln!("request failed: {other:?}"),
+            Err(e) => eprintln!("request failed: {e}"),
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let m = svc.metrics();
+    let m = client.metrics();
     println!("requests completed : {ok}/{requests} in {wall:.3}s ({:.1} req/s)", ok as f64 / wall);
     println!("worst residual     : {worst_res:.3e}");
     println!(
@@ -92,8 +87,8 @@ pub fn run(argv: &[String]) -> Result<()> {
         m.pjrt_solves, m.native_solves, m.thomas_solves, m.batches
     );
     println!(
-        "backpressure       : {} rejected",
-        m.rejected_backpressure
+        "failures           : {} failed | {} backpressure | {} shutdown-rejected | {} pjrt fallbacks | {} dropped replies",
+        m.failed, m.rejected_backpressure, m.rejected_shutdown, m.pjrt_fallbacks, m.responses_dropped
     );
     println!(
         "plan cache         : {} hits / {} misses",
@@ -107,6 +102,6 @@ pub fn run(argv: &[String]) -> Result<()> {
         "workspaces         : {} created / {} reused",
         m.workspaces_created, m.workspaces_reused
     );
-    svc.shutdown();
+    client.shutdown();
     Ok(())
 }

@@ -1,20 +1,17 @@
 //! `partisol solve` — generate an SLAE and solve it end-to-end through
-//! the planning pipeline: `Planner::plan` picks sub-system size and
-//! backend, a `SolverBackend` executes the plan.
+//! the typed client API: the client's planner picks sub-system size and
+//! backend (plan-cached), and the solve executes in the requested dtype
+//! (an `--dtype f32` run generates an f32 system and runs the f32
+//! kernels end-to-end — no f64 widening).
 
+use crate::api::{Client, SolveSpec};
 use crate::cli::args::{parse_dtype, Args};
 use crate::error::Result;
-use crate::gpu::spec::{Dtype, GpuCard};
-use crate::plan::{
-    Backend, BackendAvailability, NativeBackend, PjrtBackend, Planner, SolveOptions,
-    SolverBackend,
-};
-use crate::runtime::{Manifest, Runtime};
+use crate::gpu::spec::Dtype;
+use crate::plan::Backend;
 use crate::solver::generator::random_dd_system;
-use crate::solver::residual::max_abs_residual;
 use crate::util::table::fmt_n;
 use crate::util::{Pcg64, Stopwatch};
-use std::path::Path;
 
 const HELP: &str = "\
 partisol solve — generate a diagonally-dominant SLAE and solve it
@@ -22,7 +19,8 @@ partisol solve — generate a diagonally-dominant SLAE and solve it
 OPTIONS:
     --n <N>             SLAE size (default 1e5)
     --m <m>             sub-system size (default: tuned heuristic)
-    --dtype <d>         f64 | f32 (default f64)
+    --dtype <d>         f64 | f32 (default f64; f32 runs the f32
+                        kernels end-to-end)
     --backend <b>       pjrt | native | thomas (default: planner's choice)
     --artifacts <dir>   artifact directory (default artifacts)
     --seed <s>          system generator seed (default 42)
@@ -44,20 +42,30 @@ pub fn run(argv: &[String]) -> Result<()> {
     let seed = args.get_u64("seed", 42)?;
     let threads = args.get_usize("threads", crate::exec::default_pool_size())?;
 
-    // One decision layer: probe what backends exist, then plan.
-    let avail = match Manifest::load(Path::new(&artifacts)) {
-        Ok(man) => BackendAvailability::from_manifest(&man, dtype, true),
-        Err(_) => BackendAvailability::native_only(),
+    // One decision layer: the client probes what backends exist and
+    // plans every request through the shared planner + plan cache.
+    let client = Client::builder()
+        .artifacts_dir(artifacts)
+        .workers(1)
+        .pool_size(threads)
+        .build()?;
+
+    let mut rng = Pcg64::new(seed);
+    let mut sw = Stopwatch::new();
+    let mut spec = match dtype {
+        Dtype::F64 => SolveSpec::f64(random_dd_system::<f64>(&mut rng, n, 0.5)),
+        Dtype::F32 => SolveSpec::f32(random_dd_system::<f32>(&mut rng, n, 0.5)),
     };
-    let planner = Planner::paper(avail, GpuCard::Rtx2080Ti);
-    let opts = SolveOptions {
-        dtype,
-        m_override: args.get("m").map(|_| args.get_usize("m", 0)).transpose()?,
-        backend_override: args.get("backend").map(Backend::parse).transpose()?,
-        compute_residual: true,
-    };
-    let plan = planner.plan(n, &opts);
-    if let Some(want) = opts.m_override {
+    sw.lap("generate");
+    if let Some(m) = args.get("m").map(|_| args.get_usize("m", 0)).transpose()? {
+        spec = spec.with_m(m);
+    }
+    if let Some(b) = args.get("backend").map(Backend::parse).transpose()? {
+        spec = spec.with_backend(b);
+    }
+
+    let plan = client.plan(n, &spec.opts);
+    if let Some(want) = spec.opts.m_override {
         if plan.m() != want {
             eprintln!(
                 "note: m = {want} has no PJRT artifact; snapped to m = {} \
@@ -67,10 +75,8 @@ pub fn run(argv: &[String]) -> Result<()> {
         }
     }
     if args.has("explain") {
-        println!("{}\n", planner.explain(&plan));
+        println!("{}\n", client.explain(&plan));
     }
-
-    let mut rng = Pcg64::new(seed);
     println!(
         "N = {} ({n}), m = {} ({}), dtype {}",
         fmt_n(n),
@@ -79,30 +85,25 @@ pub fn run(argv: &[String]) -> Result<()> {
         dtype.name()
     );
 
-    let mut sw = Stopwatch::new();
-    let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
-    sw.lap("generate");
-
-    let outcome = match plan.backend {
-        Backend::Pjrt => match Runtime::new(Path::new(&artifacts)) {
-            Ok(rt) => PjrtBackend::new(&rt).execute(&plan, &sys)?,
-            Err(e) => {
-                eprintln!("pjrt unavailable ({e}); using native solver");
-                NativeBackend::new(threads).execute(&plan, &sys)?
-            }
-        },
-        _ => NativeBackend::new(threads).execute(&plan, &sys)?,
-    };
+    sw.lap("plan");
+    let resp = client.solve(spec)?;
     let solve_t = sw.lap("solve");
-    let x = outcome.x;
-    let res = max_abs_residual(&sys, &x);
-    sw.lap("verify");
 
-    println!("backend          : {}", outcome.backend.name());
+    let res = resp.residual.unwrap_or(f64::NAN);
+    println!("backend          : {}", resp.backend.name());
     println!("solve wall time  : {:.3} ms", solve_t.as_secs_f64() * 1e3);
     println!("max|Ax - d|      : {res:.3e}");
-    println!("x[0..4]          : {:?}", &x[..4.min(x.len())]);
-    if res > 1e-6 {
+    let head = 4.min(resp.x.len());
+    match &resp.x {
+        crate::api::Solution::F64(x) => println!("x[0..{head}]          : {:?}", &x[..head]),
+        crate::api::Solution::F32(x) => println!("x[0..{head}]          : {:?}", &x[..head]),
+    }
+    client.shutdown();
+    let tol = match dtype {
+        Dtype::F64 => 1e-6,
+        Dtype::F32 => 1e-1,
+    };
+    if res.is_nan() || res >= tol {
         return Err(crate::Error::Solver(format!("residual too large: {res:e}")));
     }
     Ok(())

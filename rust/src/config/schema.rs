@@ -32,6 +32,10 @@ pub struct Config {
     pub heuristic: HeuristicKind,
     /// Artifact directory (HLO text + manifest.json).
     pub artifacts_dir: String,
+    /// Probe `artifacts_dir` for PJRT artifacts at startup. `false`
+    /// skips the probe entirely: every solve runs on the native
+    /// backend (`api::ClientBuilder::native_only`).
+    pub probe_pjrt: bool,
     /// Simulated GPU card for timing estimates.
     pub card: GpuCard,
     /// Use the native Rust solver instead of the PJRT runtime.
@@ -56,6 +60,7 @@ impl Default for Config {
             dtype: Dtype::F64,
             heuristic: HeuristicKind::PaperInterval,
             artifacts_dir: "artifacts".to_string(),
+            probe_pjrt: true,
             card: GpuCard::Rtx2080Ti,
             native_fallback: true,
             solver_threads: 0,
@@ -134,6 +139,11 @@ impl Config {
                 .as_str()
                 .ok_or_else(|| Error::Config("service.artifacts_dir must be a string".into()))?
                 .to_string();
+        }
+        if let Some(v) = t.get("service.probe_pjrt") {
+            cfg.probe_pjrt = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("service.probe_pjrt must be a bool".into()))?;
         }
         if let Some(v) = t.get("service.native_fallback") {
             cfg.native_fallback = v
@@ -231,6 +241,14 @@ mod tests {
         assert_eq!(c.effective_solver_threads(), 6);
         let c = Config::from_str("[service]\nsolver_threads = 2\n[exec]\npool_size = 6").unwrap();
         assert_eq!(c.effective_solver_threads(), 2, "explicit cap wins");
+    }
+
+    #[test]
+    fn probe_pjrt_is_configurable() {
+        assert!(Config::default().probe_pjrt);
+        let c = Config::from_str("[service]\nprobe_pjrt = false").unwrap();
+        assert!(!c.probe_pjrt);
+        assert!(Config::from_str("[service]\nprobe_pjrt = 3").is_err());
     }
 
     #[test]

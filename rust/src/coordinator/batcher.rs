@@ -2,18 +2,25 @@
 //! `(m, backend, dtype)` of their [`Route`] — are concatenated into one
 //! blocked execution.
 //!
-//! Soundness: every request's system has zero first/last couplings
-//! (`a[0] = c[n-1] = 0`), so concatenated systems do not couple — Stage 1
-//! treats each block independently and the concatenated interface system
-//! is block-diagonal, which the Stage-2 Thomas solves exactly. Each
-//! request's slice of the batch solution equals its standalone solution
-//! (verified in tests/coordinator_e2e.rs). Requests whose n is not a
-//! multiple of m are padded to a block boundary first, keeping slice
-//! offsets block-aligned.
+//! Soundness: concatenated systems must not couple across member
+//! boundaries. A standalone tridiagonal system's `a[0]` and `c[n-1]`
+//! are unused by definition, and [`concat_systems`] forces them to zero
+//! at every seam, so Stage 1 treats each block independently and the
+//! concatenated interface system is block-diagonal, which the Stage-2
+//! Thomas solves exactly. Each request's slice of the batch solution
+//! equals its standalone solution (verified in
+//! tests/coordinator_e2e.rs). Requests whose n is not a multiple of m
+//! are padded to a block boundary first, keeping slice offsets
+//! block-aligned.
+//!
+//! PJRT **and** native jobs batch (one fused Stage-1/2/3 pass — a
+//! single pool fan-out — solves the whole group); only Thomas-routed
+//! jobs stay singletons, since the sequential baseline gains nothing
+//! from concatenation.
 
 use super::request::Backend;
 use super::router::Route;
-use crate::solver::TriSystem;
+use crate::solver::{Scalar, TriSystem, TriSystemRef};
 
 /// One queued job after routing (service-internal).
 pub struct RoutedJob<J> {
@@ -28,12 +35,12 @@ pub struct Batch<J> {
 }
 
 /// Group routed jobs into batches of at most `max_batch`, preserving FIFO
-/// order within a group. Only PJRT jobs batch (>1); native/Thomas jobs get
+/// order within a group. PJRT and native jobs batch (>1); Thomas jobs get
 /// singleton batches.
 pub fn form_batches<J>(jobs: Vec<RoutedJob<J>>, max_batch: usize) -> Vec<Batch<J>> {
     let mut batches: Vec<Batch<J>> = Vec::new();
     for rj in jobs {
-        let can_join = rj.route.backend == Backend::Pjrt;
+        let can_join = rj.route.backend != Backend::Thomas;
         if can_join {
             if let Some(b) = batches
                 .iter_mut()
@@ -53,7 +60,14 @@ pub fn form_batches<J>(jobs: Vec<RoutedJob<J>>, max_batch: usize) -> Vec<Batch<J
 
 /// Concatenate systems into one, each padded to a whole number of blocks.
 /// Returns the combined system and each request's `(row_offset, n)`.
-pub fn concat_systems(systems: &[&TriSystem<f64>], m: usize) -> (TriSystem<f64>, Vec<(usize, usize)>) {
+/// Dtype-generic: an f32 batch concatenates f32 diagonals and solves on
+/// the f32 kernels. Boundary couplings (`a[0]` / `c[n-1]` of every
+/// member — unused in a standalone system) are forced to zero so
+/// members can never couple through the seam.
+pub fn concat_systems<T: Scalar>(
+    systems: &[TriSystemRef<'_, T>],
+    m: usize,
+) -> (TriSystem<T>, Vec<(usize, usize)>) {
     let total: usize = systems.iter().map(|s| s.n().div_ceil(m) * m).sum();
     let mut combined = TriSystem {
         a: Vec::with_capacity(total),
@@ -65,15 +79,19 @@ pub fn concat_systems(systems: &[&TriSystem<f64>], m: usize) -> (TriSystem<f64>,
     for sys in systems {
         let offset = combined.b.len();
         let n = sys.n();
+        debug_assert!(n > 0, "empty member system");
         let padded = n.div_ceil(m) * m;
-        combined.a.extend_from_slice(&sys.a);
-        combined.b.extend_from_slice(&sys.b);
-        combined.c.extend_from_slice(&sys.c);
-        combined.d.extend_from_slice(&sys.d);
-        combined.a.extend(std::iter::repeat_n(0.0, padded - n));
-        combined.b.extend(std::iter::repeat_n(1.0, padded - n));
-        combined.c.extend(std::iter::repeat_n(0.0, padded - n));
-        combined.d.extend(std::iter::repeat_n(0.0, padded - n));
+        combined.a.extend_from_slice(sys.a);
+        combined.b.extend_from_slice(sys.b);
+        combined.c.extend_from_slice(sys.c);
+        combined.d.extend_from_slice(sys.d);
+        // Decouple at the seam (a[0]/c[n-1] are unused standalone).
+        combined.a[offset] = T::zero();
+        combined.c[offset + n - 1] = T::zero();
+        combined.a.extend(std::iter::repeat_n(T::zero(), padded - n));
+        combined.b.extend(std::iter::repeat_n(T::one(), padded - n));
+        combined.c.extend(std::iter::repeat_n(T::zero(), padded - n));
+        combined.d.extend(std::iter::repeat_n(T::zero(), padded - n));
         spans.push((offset, n));
     }
     (combined, spans)
@@ -148,14 +166,64 @@ mod tests {
     }
 
     #[test]
-    fn native_jobs_stay_single() {
-        let jobs: Vec<RoutedJob<usize>> = (0..3)
+    fn native_jobs_batch_and_thomas_stays_single() {
+        let native: Vec<RoutedJob<usize>> = (0..3)
             .map(|i| RoutedJob {
                 job: i,
                 route: route(32, Backend::Native),
             })
             .collect();
-        assert_eq!(form_batches(jobs, 8).len(), 3);
+        let batches = form_batches(native, 8);
+        assert_eq!(batches.len(), 1, "native jobs share one fan-out");
+        assert_eq!(batches[0].jobs, vec![0, 1, 2]);
+
+        let thomas: Vec<RoutedJob<usize>> = (0..3)
+            .map(|i| RoutedJob {
+                job: i,
+                route: route(4, Backend::Thomas),
+            })
+            .collect();
+        assert_eq!(form_batches(thomas, 8).len(), 3);
+    }
+
+    #[test]
+    fn empty_job_list_forms_no_batches() {
+        let batches = form_batches(Vec::<RoutedJob<usize>>::new(), 8);
+        assert!(batches.is_empty());
+    }
+
+    #[test]
+    fn max_batch_one_keeps_everything_single() {
+        let jobs: Vec<RoutedJob<usize>> = (0..4)
+            .map(|i| RoutedJob {
+                job: i,
+                route: route(32, Backend::Pjrt),
+            })
+            .collect();
+        let batches = form_batches(jobs, 1);
+        assert_eq!(batches.len(), 4);
+        assert!(batches.iter().all(|b| b.jobs.len() == 1));
+    }
+
+    #[test]
+    fn concat_empty_list_yields_empty_system() {
+        let (combined, spans) = concat_systems::<f64>(&[], 8);
+        assert_eq!(combined.b.len(), 0);
+        assert!(spans.is_empty());
+    }
+
+    #[test]
+    fn concat_single_system_pads_to_block_boundary() {
+        let mut rng = Pcg64::new(4);
+        let sys = random_dd_system::<f64>(&mut rng, 37, 0.5);
+        let (combined, spans) = concat_systems(&[sys.view()], 8);
+        assert_eq!(combined.n(), 40, "37 pads to ceil(37/8)*8");
+        assert_eq!(spans, vec![(0, 37)]);
+        // The padded tail is identity rows.
+        assert!(combined.b[37..].iter().all(|&v| v == 1.0));
+        assert!(combined.d[37..].iter().all(|&v| v == 0.0));
+        // Un-padded head equals the member.
+        assert_eq!(&combined.b[..37], &sys.b[..]);
     }
 
     #[test]
@@ -166,7 +234,7 @@ mod tests {
             .iter()
             .map(|&n| random_dd_system(&mut rng, n, 0.5))
             .collect();
-        let refs: Vec<&TriSystem<f64>> = systems.iter().collect();
+        let refs: Vec<TriSystemRef<'_, f64>> = systems.iter().map(|s| s.view()).collect();
         let (combined, spans) = concat_systems(&refs, m);
         assert_eq!(combined.n() % m, 0);
         let x = partition_solve(&combined, m, 2).unwrap();
@@ -181,13 +249,48 @@ mod tests {
     }
 
     #[test]
+    fn concat_is_dtype_generic() {
+        let mut rng = Pcg64::new(7);
+        let m = 8;
+        let systems: Vec<TriSystem<f32>> = [19usize, 40]
+            .iter()
+            .map(|&n| random_dd_system(&mut rng, n, 0.5))
+            .collect();
+        let refs: Vec<TriSystemRef<'_, f32>> = systems.iter().map(|s| s.view()).collect();
+        let (combined, spans) = concat_systems(&refs, m);
+        assert_eq!(combined.n(), 24 + 40);
+        let x = partition_solve::<f32>(&combined, m, 2).unwrap();
+        for (sys, &(off, n)) in systems.iter().zip(&spans) {
+            let want = thomas_solve(sys).unwrap();
+            assert!(max_abs_diff(&x[off..off + n], &want) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn concat_zeroes_stray_boundary_couplings() {
+        // A member whose (by-definition unused) a[0]/c[n-1] slots hold
+        // garbage must still not couple to its neighbors.
+        let mut rng = Pcg64::new(6);
+        let mut sys_a = random_dd_system::<f64>(&mut rng, 16, 0.5);
+        let mut sys_b = random_dd_system::<f64>(&mut rng, 16, 0.5);
+        sys_a.c[15] = 123.0;
+        sys_b.a[0] = -77.0;
+        let want_a = thomas_solve(&sys_a).unwrap();
+        let want_b = thomas_solve(&sys_b).unwrap();
+        let (combined, spans) = concat_systems(&[sys_a.view(), sys_b.view()], 4);
+        let x = partition_solve(&combined, 4, 1).unwrap();
+        assert!(max_abs_diff(&x[spans[0].0..spans[0].0 + 16], &want_a) < 1e-9);
+        assert!(max_abs_diff(&x[spans[1].0..spans[1].0 + 16], &want_b) < 1e-9);
+    }
+
+    #[test]
     fn concat_offsets_are_block_aligned() {
         let mut rng = Pcg64::new(6);
         let systems: Vec<TriSystem<f64>> = [10usize, 11]
             .iter()
             .map(|&n| random_dd_system(&mut rng, n, 0.5))
             .collect();
-        let refs: Vec<&TriSystem<f64>> = systems.iter().collect();
+        let refs: Vec<TriSystemRef<'_, f64>> = systems.iter().map(|s| s.view()).collect();
         let (_, spans) = concat_systems(&refs, 4);
         assert_eq!(spans[0], (0, 10));
         assert_eq!(spans[1].0 % 4, 0);

@@ -56,8 +56,18 @@ impl Histogram {
 pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
+    /// Solves that returned an error to the caller (singular systems,
+    /// shape mismatches, dtype routing bugs).
     pub failed: AtomicU64,
     pub rejected_backpressure: AtomicU64,
+    /// Submissions rejected because the service was shutting down.
+    pub rejected_shutdown: AtomicU64,
+    /// Jobs whose PJRT execution failed and fell back to the native
+    /// backend (including device-thread startup failures).
+    pub pjrt_fallbacks: AtomicU64,
+    /// Responses that could not be delivered (caller dropped the
+    /// handle before completion).
+    pub responses_dropped: AtomicU64,
     pub batches: AtomicU64,
     pub pjrt_solves: AtomicU64,
     pub native_solves: AtomicU64,
@@ -75,8 +85,15 @@ pub struct Metrics {
 pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
+    /// Solves that returned an error to the caller.
     pub failed: u64,
     pub rejected_backpressure: u64,
+    /// Submissions rejected during shutdown.
+    pub rejected_shutdown: u64,
+    /// PJRT executions that fell back to the native backend.
+    pub pjrt_fallbacks: u64,
+    /// Responses dropped because the caller abandoned the handle.
+    pub responses_dropped: u64,
     pub batches: u64,
     pub pjrt_solves: u64,
     pub native_solves: u64,
@@ -115,6 +132,9 @@ impl Metrics {
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             rejected_backpressure: self.rejected_backpressure.load(Ordering::Relaxed),
+            rejected_shutdown: self.rejected_shutdown.load(Ordering::Relaxed),
+            pjrt_fallbacks: self.pjrt_fallbacks.load(Ordering::Relaxed),
+            responses_dropped: self.responses_dropped.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             pjrt_solves: self.pjrt_solves.load(Ordering::Relaxed),
             native_solves: self.native_solves.load(Ordering::Relaxed),
@@ -167,6 +187,24 @@ mod tests {
         assert_eq!(s.submitted, 3);
         assert_eq!(s.completed, 2);
         assert!(s.mean_e2e_us > 0.0);
+    }
+
+    #[test]
+    fn error_path_counters_survive_the_snapshot() {
+        // The satellite guarantee: no error path vanishes from the
+        // exported snapshot.
+        let m = Metrics::default();
+        m.failed.fetch_add(2, Ordering::Relaxed);
+        m.rejected_backpressure.fetch_add(3, Ordering::Relaxed);
+        m.rejected_shutdown.fetch_add(4, Ordering::Relaxed);
+        m.pjrt_fallbacks.fetch_add(5, Ordering::Relaxed);
+        m.responses_dropped.fetch_add(6, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.failed, 2);
+        assert_eq!(s.rejected_backpressure, 3);
+        assert_eq!(s.rejected_shutdown, 4);
+        assert_eq!(s.pjrt_fallbacks, 5);
+        assert_eq!(s.responses_dropped, 6);
     }
 
     #[test]

@@ -1,29 +1,35 @@
-//! Layer-3 coordinator (system S19): the solve service a downstream user
-//! deploys.
+//! Layer-3 coordinator (system S19): the solve service behind the
+//! public [`crate::api::Client`] surface.
 //!
 //! Architecture (one process):
 //!
 //! ```text
-//!   submit() ─▶ bounded queue ─▶ router ─▶ ┌ device thread (PJRT runtime,
-//!      │            │                      │   batched same-shape solves)
-//!      │        backpressure               └ worker pool (native solver)
-//!      ▼
-//!   Receiver<SolveResponse>
+//!   api::Client ─▶ bounded queue ─▶ router ─▶ ┌ device thread (PJRT runtime,
+//!      │               │                      │   batched same-shape solves)
+//!      │           backpressure               └ worker pool (native solver,
+//!      ▼                                          dtype-dispatched f32/f64)
+//!   SolveHandle ──▶ SolveResponse { Solution::{F32, F64}, … }
 //! ```
 //!
-//! * [`request`] — request/response types (backend + options re-exported
-//!   from [`crate::plan`]).
+//! * [`request`] — request/response types (backend + options from
+//!   [`crate::plan`]; payload/solution from [`crate::api::payload`]).
 //! * [`router`] — a [`crate::plan::Planner`] (the tuned heuristic — the
 //!   paper's contribution in production position) behind an LRU
-//!   [`crate::plan::PlanCache`]; emits explicit `SolvePlan`s.
-//! * [`batcher`] — groups same-(m, dtype) requests and *concatenates*
-//!   their systems into one blocked execution: independent tridiagonal
-//!   systems do not couple, so one fused Stage-1/2/3 pass solves the whole
-//!   batch (tested in tests/coordinator_e2e.rs).
+//!   [`crate::plan::PlanCache`] keyed `(n, dtype, availability)`; f32
+//!   traffic exercises the f32 key space.
+//! * [`batcher`] — groups same-(m, backend, dtype) requests and
+//!   *concatenates* their systems into one blocked execution:
+//!   independent tridiagonal systems do not couple, so one fused
+//!   Stage-1/2/3 pass solves the whole batch (tested in
+//!   tests/coordinator_e2e.rs). Native groups batch too — one pool
+//!   fan-out pair per group.
 //! * [`service`] — bounded-queue threaded service with a PJRT device
 //!   thread (xla handles are thread-confined) and a native worker pool;
-//!   execution goes through [`crate::plan::SolverBackend`] impls.
-//! * [`metrics`] — counters (incl. plan-cache hit/miss) + latency
+//!   execution dispatches on the payload dtype through the typed
+//!   backend (`NativeBackend::execute_typed`). `Service::submit`/
+//!   `Service::solve` are deprecated wrappers over the typed path.
+//! * [`metrics`] — counters (incl. plan-cache hit/miss and the
+//!   failed / rejected / fallback / dropped error paths) + latency
 //!   histogram.
 
 pub mod batcher;

@@ -1,12 +1,20 @@
 //! Solve-service request/response types. The backend enum and the
 //! per-request options live in [`crate::plan`] (the planning layer owns
-//! them); they are re-exported here for the service API.
+//! them); the dtype-erased payload and solution types live in
+//! [`crate::api::payload`] (the client surface owns them). Both are
+//! re-exported here for the service API.
 
+use crate::api::payload::Solution;
 use crate::solver::TriSystem;
 
 pub use crate::plan::{Backend, SolveOptions};
 
-/// One solve request (f64 payload; f32 execution casts internally).
+/// The legacy one-shot request shape (f64 payload; an f32 dtype option
+/// casts at the submit boundary). Kept for the deprecated
+/// [`crate::coordinator::Service::submit`] wrapper — new code builds a
+/// [`crate::api::SolveSpec`] and goes through [`crate::api::Client`],
+/// which carries f32 systems natively and can borrow or share payloads
+/// instead of owning them.
 #[derive(Clone, Debug)]
 pub struct SolveRequest {
     pub id: u64,
@@ -32,11 +40,15 @@ impl SolveRequest {
 #[derive(Clone, Debug)]
 pub struct SolveResponse {
     pub id: u64,
-    pub x: Vec<f64>,
+    /// The solution in the request's own dtype: an f32 request yields
+    /// [`Solution::F32`] bits straight from the f32 kernels (no f64
+    /// widening), an f64 request yields [`Solution::F64`].
+    pub x: Solution,
     /// Sub-system size used.
     pub m: usize,
     pub backend: Backend,
-    /// Max-abs residual, when requested.
+    /// Max-abs residual (computed in the request's dtype), when
+    /// requested.
     pub residual: Option<f64>,
     /// Time spent queued, µs.
     pub queue_us: f64,
@@ -71,5 +83,22 @@ mod tests {
         assert_eq!(Backend::Pjrt.name(), "pjrt");
         assert_eq!(Backend::Native.name(), "native");
         assert_eq!(Backend::Thomas.name(), "thomas");
+    }
+
+    #[test]
+    fn response_exposes_typed_solution() {
+        let resp = SolveResponse {
+            id: 1,
+            x: Solution::F32(vec![1.0, 2.0]),
+            m: 4,
+            backend: Backend::Native,
+            residual: None,
+            queue_us: 0.0,
+            exec_us: 0.0,
+            batch_size: 1,
+            simulated_gpu_us: 0.0,
+        };
+        assert_eq!(resp.x.dtype(), Dtype::F32);
+        assert_eq!(resp.x.to_f64(), vec![1.0, 2.0]);
     }
 }

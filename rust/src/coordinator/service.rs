@@ -2,28 +2,42 @@
 //! batcher, PJRT device thread + native worker pool, metrics, clean
 //! shutdown.
 //!
-//! Execution is fully plan-driven: `submit` asks the router for a
-//! [`SolvePlan`] (served from the LRU plan cache on repeated sizes), and
-//! the worker threads hand plans to [`SolverBackend`] implementations —
-//! the service itself contains no backend dispatch logic.
+//! Execution is fully plan-driven **and dtype-driven**: submission asks
+//! the router for a [`SolvePlan`] (served from the LRU plan cache on
+//! repeated `(n, dtype)` keys), and the worker threads dispatch on the
+//! request's [`SystemPayload`] dtype — an f32 payload executes the f32
+//! solver kernels end-to-end through the f32 workspace pool, never
+//! widening to f64. Batched submissions ([`Service::submit_batch`])
+//! arrive pre-grouped by execution shape and run as **one** fused
+//! solve per group (a single pool fan-out on the native lane, one
+//! device call on the PJRT lane).
 //!
 //! All native solves share **one** persistent exec pool
 //! (`cfg.pool_size` threads, parked between fan-outs) and one recycled
-//! workspace pool, so a steady-state request allocates only its
-//! response vector; the pool/task/workspace-reuse counters are exported
-//! through [`Service::metrics`].
+//! per-dtype workspace pool, so a steady-state request allocates only
+//! its response vector; the pool/task/workspace-reuse counters are
+//! exported through [`Service::metrics`].
+//!
+//! The public solve surface is [`crate::api::Client`]; the raw
+//! [`Service::submit`]/[`Service::solve`] entry points are deprecated
+//! wrappers kept for one release.
 
-use super::batcher::{concat_systems, form_batches, RoutedJob};
+use super::batcher::{concat_systems, form_batches, Batch, RoutedJob};
 use super::metrics::Metrics;
 use super::request::{Backend, SolveRequest, SolveResponse};
 use super::router::{Route, Router};
+use crate::api::payload::{PayloadScalar, SystemPayload, SystemSource};
+use crate::api::ApiError;
 use crate::config::Config;
 use crate::error::{Error, Result};
-use crate::exec::{ExecCtx, WorkerPool, WorkspacePool};
-use crate::plan::{BackendAvailability, NativeBackend, PjrtBackend, SolvePlan, SolverBackend};
+use crate::exec::{ExecCtx, WorkerPool};
+use crate::gpu::spec::Dtype;
+use crate::plan::{
+    BackendAvailability, NativeBackend, NativeScalar, PjrtBackend, SolveOptions, SolvePlan,
+};
+use crate::runtime::executor::PjrtScalar;
 use crate::runtime::Runtime;
-use crate::solver::residual::max_abs_residual;
-use crate::solver::TriSystem;
+use crate::solver::residual::max_abs_residual_ref;
 use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::atomic::Ordering;
@@ -31,20 +45,46 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-/// Response channel payload (String error keeps it trivially Send).
-pub type Reply = std::result::Result<SolveResponse, String>;
+/// Response channel payload: the typed reply a [`crate::api::SolveHandle`]
+/// resolves to.
+pub type Reply = std::result::Result<SolveResponse, ApiError>;
+
+/// A rejected submission: the structured error plus the payload/options
+/// handed back to the caller, so retries never clone a diagonal.
+pub(crate) type Rejected = (ApiError, SystemPayload<'static>, SolveOptions);
 
 struct Job {
-    req: SolveRequest,
+    id: u64,
+    payload: SystemPayload<'static>,
+    opts: SolveOptions,
     plan: Arc<SolvePlan>,
     enqueued: Instant,
     tx: mpsc::Sender<Reply>,
 }
 
+/// One queue item: a single job, or a pre-formed same-shape group from
+/// [`Service::submit_batch`] that must execute as one fused solve.
+enum Work {
+    One(Job),
+    Batch { route: Route, jobs: Vec<Job> },
+}
+
+impl Work {
+    fn len(&self) -> usize {
+        match self {
+            Work::One(_) => 1,
+            Work::Batch { jobs, .. } => jobs.len(),
+        }
+    }
+}
+
 #[derive(Default)]
 struct QueueState {
-    pjrt: VecDeque<Job>,
-    native: VecDeque<Job>,
+    pjrt: VecDeque<Work>,
+    native: VecDeque<Work>,
+    /// Total jobs across both lanes (backpressure is counted in jobs,
+    /// not queue items, so a batch cannot sidestep the bound).
+    queued_jobs: usize,
     shutdown: bool,
 }
 
@@ -58,8 +98,8 @@ struct Inner {
     /// native worker (total CPU parallelism = `cfg.pool_size`, not
     /// `workers x solver_threads`).
     pool: Arc<WorkerPool>,
-    /// One native backend (pool handle + recycled workspaces) shared
-    /// across requests.
+    /// One native backend (pool handle + recycled per-dtype workspaces)
+    /// shared across requests.
     native: NativeBackend,
 }
 
@@ -75,10 +115,15 @@ impl Service {
     pub fn start(cfg: Config) -> Result<Service> {
         // Probe the manifest up front so the planner knows the supported
         // m values and buckets (the device thread re-opens it to build
-        // the runtime).
-        let avail = match crate::runtime::Manifest::load(Path::new(&cfg.artifacts_dir)) {
-            Ok(man) => BackendAvailability::from_manifest(&man, cfg.dtype, cfg.native_fallback),
-            Err(_) => BackendAvailability {
+        // the runtime). `probe_pjrt = false` skips the probe: native only.
+        let probed = if cfg.probe_pjrt {
+            crate::runtime::Manifest::load(Path::new(&cfg.artifacts_dir)).ok()
+        } else {
+            None
+        };
+        let avail = match probed {
+            Some(man) => BackendAvailability::from_manifest(&man, cfg.dtype, cfg.native_fallback),
+            None => BackendAvailability {
                 pjrt: Vec::new(),
                 native: cfg.native_fallback,
             },
@@ -92,7 +137,7 @@ impl Service {
         let router = Router::from_config(&cfg, avail)?;
         let pool = Arc::new(WorkerPool::new(cfg.pool_size));
         let exec = ExecCtx::with_pool(pool.clone(), cfg.effective_solver_threads());
-        let native = NativeBackend::with_workspaces(exec, Arc::new(WorkspacePool::new()));
+        let native = NativeBackend::with_exec(exec);
         let inner = Arc::new(Inner {
             cfg: cfg.clone(),
             router,
@@ -125,35 +170,52 @@ impl Service {
         Ok(Service { inner, threads })
     }
 
-    /// Submit a request. Returns the response channel, or a backpressure
-    /// error when the bounded queue is full.
-    pub fn submit(&self, req: SolveRequest) -> Result<mpsc::Receiver<Reply>> {
+    /// Submit a typed payload (the [`crate::api::Client::submit`]
+    /// entry). Returns the reply channel, or — so retries never have to
+    /// clone a diagonal — the structured error *together with* the
+    /// rejected payload/options.
+    pub(crate) fn submit_payload(
+        &self,
+        id: u64,
+        payload: SystemPayload<'static>,
+        opts: SolveOptions,
+    ) -> std::result::Result<mpsc::Receiver<Reply>, Rejected> {
         let inner = &self.inner;
-        let plan = inner.router.plan(req.n(), &req.opts);
+        let plan = inner.router.plan(payload.n(), &opts);
         let (tx, rx) = mpsc::channel();
         {
             let mut q = inner.queue.lock().unwrap();
             if q.shutdown {
-                return Err(Error::Service("service is shut down".into()));
+                inner.metrics.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
+                return Err((ApiError::ShutDown, payload, opts));
             }
-            if q.pjrt.len() + q.native.len() >= inner.cfg.queue_depth {
+            if q.queued_jobs >= inner.cfg.queue_depth {
                 inner
                     .metrics
                     .rejected_backpressure
                     .fetch_add(1, Ordering::Relaxed);
-                return Err(Error::Service("queue full (backpressure)".into()));
+                return Err((
+                    ApiError::Backpressure {
+                        queue_depth: inner.cfg.queue_depth,
+                    },
+                    payload,
+                    opts,
+                ));
             }
             let lane_is_pjrt = plan.backend == Backend::Pjrt;
             let job = Job {
-                req,
+                id,
+                payload,
+                opts,
                 plan,
                 enqueued: Instant::now(),
                 tx,
             };
+            q.queued_jobs += 1;
             if lane_is_pjrt {
-                q.pjrt.push_back(job);
+                q.pjrt.push_back(Work::One(job));
             } else {
-                q.native.push_back(job);
+                q.native.push_back(Work::One(job));
             }
         }
         inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
@@ -161,12 +223,171 @@ impl Service {
         Ok(rx)
     }
 
-    /// Convenience: submit and wait.
+    /// Submit a group of requests as one fan-out (the
+    /// [`crate::api::Client::submit_many`] entry). The group is routed
+    /// through the batcher here: same-`(m, backend, dtype)` members
+    /// become one fused execution. Admission is all-or-nothing against
+    /// the bounded queue.
+    pub(crate) fn submit_batch(
+        &self,
+        specs: Vec<(u64, SystemPayload<'static>, SolveOptions)>,
+    ) -> std::result::Result<Vec<mpsc::Receiver<Reply>>, ApiError> {
+        if specs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let inner = &self.inner;
+        let count = specs.len();
+        if count > inner.cfg.queue_depth {
+            // No amount of draining can ever admit this group; that is
+            // a caller error, not retryable backpressure.
+            return Err(ApiError::InvalidRequest(format!(
+                "batch of {count} requests exceeds the queue depth \
+                 ({}); split the group",
+                inner.cfg.queue_depth
+            )));
+        }
+        let now = Instant::now();
+        let mut rxs = Vec::with_capacity(count);
+        let mut routed = Vec::with_capacity(count);
+        for (id, payload, opts) in specs {
+            let plan = inner.router.plan(payload.n(), &opts);
+            let (tx, rx) = mpsc::channel();
+            rxs.push(rx);
+            let route = Route::of_plan(&plan);
+            routed.push(RoutedJob {
+                route,
+                job: Job {
+                    id,
+                    payload,
+                    opts,
+                    plan,
+                    enqueued: now,
+                    tx,
+                },
+            });
+        }
+        let batches = form_batches(routed, inner.cfg.max_batch);
+        {
+            let mut q = inner.queue.lock().unwrap();
+            if q.shutdown {
+                inner
+                    .metrics
+                    .rejected_shutdown
+                    .fetch_add(count as u64, Ordering::Relaxed);
+                return Err(ApiError::ShutDown);
+            }
+            if q.queued_jobs + count > inner.cfg.queue_depth {
+                inner
+                    .metrics
+                    .rejected_backpressure
+                    .fetch_add(count as u64, Ordering::Relaxed);
+                return Err(ApiError::Backpressure {
+                    queue_depth: inner.cfg.queue_depth,
+                });
+            }
+            for b in batches {
+                let njobs = b.jobs.len();
+                q.queued_jobs += njobs;
+                let Batch { route, mut jobs } = b;
+                let work = if njobs == 1 {
+                    Work::One(jobs.pop().expect("singleton batch"))
+                } else {
+                    Work::Batch { route, jobs }
+                };
+                if route.backend == Backend::Pjrt {
+                    q.pjrt.push_back(work);
+                } else {
+                    q.native.push_back(work);
+                }
+            }
+        }
+        inner
+            .metrics
+            .submitted
+            .fetch_add(count as u64, Ordering::Relaxed);
+        inner.cv.notify_all();
+        Ok(rxs)
+    }
+
+    /// Submit a typed payload and wait for its reply.
+    pub(crate) fn solve_payload(
+        &self,
+        id: u64,
+        payload: SystemPayload<'static>,
+        opts: SolveOptions,
+    ) -> std::result::Result<SolveResponse, ApiError> {
+        let rx = self
+            .submit_payload(id, payload, opts)
+            .map_err(|(e, _, _)| e)?;
+        rx.recv().map_err(|_| ApiError::Disconnected)?
+    }
+
+    /// Synchronous in-process execution (the
+    /// [`crate::api::Client::solve_now`] entry): plans through the same
+    /// router/plan-cache, then runs on the shared native backend on the
+    /// calling thread. Borrowed payloads solve zero-copy.
+    pub(crate) fn solve_inline(
+        &self,
+        id: u64,
+        payload: &SystemPayload<'_>,
+        opts: &SolveOptions,
+    ) -> std::result::Result<SolveResponse, ApiError> {
+        let inner = &self.inner;
+        let opts = SolveOptions {
+            dtype: payload.dtype(),
+            ..opts.clone()
+        };
+        let plan = inner.router.plan(payload.n(), &opts);
+        inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let (x, backend, residual) = match payload {
+            SystemPayload::F64(src) => inline_typed::<f64>(inner, &plan, src, &opts)?,
+            SystemPayload::F32(src) => inline_typed::<f32>(inner, &plan, src, &opts)?,
+        };
+        let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+        inner.metrics.record_backend(backend, 1);
+        inner.metrics.queue_latency.record(0.0);
+        inner.metrics.exec_latency.record(exec_us);
+        inner.metrics.e2e_latency.record(exec_us);
+        inner.metrics.completed.fetch_add(1, Ordering::Relaxed);
+        Ok(SolveResponse {
+            id,
+            x,
+            m: plan.m(),
+            backend,
+            residual,
+            queue_us: 0.0,
+            exec_us,
+            batch_size: 1,
+            simulated_gpu_us: plan.simulated_gpu_us,
+        })
+    }
+
+    /// Submit a legacy request. Returns the raw response channel, or a
+    /// backpressure error when the bounded queue is full.
+    #[deprecated(note = "use api::Client::submit / submit_many (kept one release)")]
+    pub fn submit(&self, req: SolveRequest) -> Result<mpsc::Receiver<Reply>> {
+        let SolveRequest { id, sys, opts } = req;
+        // The legacy f32 semantics cast the f64 payload; the cast now
+        // happens once at the boundary so everything downstream is
+        // dtype-consistent. (The typed API takes f32 systems directly.)
+        let payload: SystemPayload<'static> = if opts.dtype == Dtype::F32 {
+            SystemPayload::F32(SystemSource::Owned(sys.cast()))
+        } else {
+            SystemPayload::F64(SystemSource::Owned(sys))
+        };
+        self.submit_payload(id, payload, opts)
+            .map_err(|(e, _, _)| Error::from(e))
+    }
+
+    /// Convenience: submit a legacy request and wait.
+    #[deprecated(note = "use api::Client::solve (kept one release)")]
     pub fn solve(&self, req: SolveRequest) -> Result<SolveResponse> {
+        #[allow(deprecated)]
         let rx = self.submit(req)?;
         rx.recv()
             .map_err(|_| Error::Service("service dropped the request".into()))?
-            .map_err(Error::Service)
+            .map_err(Error::from)
     }
 
     pub fn metrics(&self) -> super::metrics::MetricsSnapshot {
@@ -214,6 +435,26 @@ impl Drop for Service {
     }
 }
 
+/// Typed core of [`Service::solve_inline`].
+fn inline_typed<T: PayloadScalar + NativeScalar>(
+    inner: &Inner,
+    plan: &SolvePlan,
+    src: &SystemSource<'_, T>,
+    opts: &SolveOptions,
+) -> std::result::Result<(crate::api::Solution, Backend, Option<f64>), ApiError> {
+    let out = inner
+        .native
+        .execute_typed::<T>(plan, src.view())
+        .map_err(|e| {
+            inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            ApiError::from(e)
+        })?;
+    let residual = opts
+        .compute_residual
+        .then(|| max_abs_residual_ref(src.view(), &out.x));
+    Ok((T::into_solution(out.x), out.backend, residual))
+}
+
 // ---------------------------------------------------------------------------
 // Device thread: owns the (thread-confined) PJRT runtime; executes batches.
 // ---------------------------------------------------------------------------
@@ -225,43 +466,59 @@ fn device_thread(inner: Arc<Inner>) {
             crate::log_warn!("device thread: runtime unavailable ({e}); using native fallback");
             // Keep draining the pjrt queue natively so requests never hang.
             loop {
-                let Some(jobs) = take_jobs(&inner, true) else {
+                let Some(works) = take_work(&inner, true) else {
                     return;
                 };
-                for job in jobs {
-                    execute_native(&inner, job);
+                for w in works {
+                    inner
+                        .metrics
+                        .pjrt_fallbacks
+                        .fetch_add(w.len() as u64, Ordering::Relaxed);
+                    execute_work_native(&inner, w);
                 }
             }
         }
     };
 
     loop {
-        let Some(jobs) = take_jobs(&inner, true) else {
+        let Some(works) = take_work(&inner, true) else {
             return;
         };
-        let routed: Vec<RoutedJob<Job>> = jobs
-            .into_iter()
-            .map(|job| RoutedJob {
-                route: Route::of_plan(&job.plan),
-                job,
-            })
-            .collect();
-        for batch in form_batches(routed, inner.cfg.max_batch) {
+        // Pre-formed submit_batch groups execute as-is; loose jobs are
+        // regrouped here exactly as before.
+        let mut groups: Vec<(Route, Vec<Job>)> = Vec::new();
+        let mut loose: Vec<RoutedJob<Job>> = Vec::new();
+        for w in works {
+            match w {
+                Work::One(job) => loose.push(RoutedJob {
+                    route: Route::of_plan(&job.plan),
+                    job,
+                }),
+                Work::Batch { route, jobs } => groups.push((route, jobs)),
+            }
+        }
+        for b in form_batches(loose, inner.cfg.max_batch) {
+            groups.push((b.route, b.jobs));
+        }
+        for (route, jobs) in groups {
             inner.metrics.batches.fetch_add(1, Ordering::Relaxed);
-            execute_pjrt_batch(&inner, &runtime, batch.route, batch.jobs);
+            execute_pjrt_batch(&inner, &runtime, route, jobs);
         }
     }
 }
 
-/// Pop all currently queued jobs for one lane; None = shutdown + empty.
-fn take_jobs(inner: &Arc<Inner>, pjrt_lane: bool) -> Option<Vec<Job>> {
+/// Pop all currently queued work for one lane; None = shutdown + empty.
+fn take_work(inner: &Arc<Inner>, pjrt_lane: bool) -> Option<Vec<Work>> {
     let mut q = inner.queue.lock().unwrap();
     loop {
         let lane_len = if pjrt_lane { q.pjrt.len() } else { q.native.len() };
         if lane_len > 0 {
+            let take = lane_len.min(inner.cfg.max_batch * 4);
             let lane = if pjrt_lane { &mut q.pjrt } else { &mut q.native };
-            let take = lane.len().min(inner.cfg.max_batch * 4);
-            return Some(lane.drain(..take).collect());
+            let items: Vec<Work> = lane.drain(..take).collect();
+            let popped: usize = items.iter().map(Work::len).sum();
+            q.queued_jobs -= popped;
+            return Some(items);
         }
         if q.shutdown {
             return None;
@@ -271,16 +528,46 @@ fn take_jobs(inner: &Arc<Inner>, pjrt_lane: bool) -> Option<Vec<Job>> {
 }
 
 fn execute_pjrt_batch(inner: &Arc<Inner>, rt: &Runtime, route: Route, jobs: Vec<Job>) {
+    match route.dtype {
+        Dtype::F64 => pjrt_batch_typed::<f64>(inner, rt, route, jobs),
+        Dtype::F32 => pjrt_batch_typed::<f32>(inner, rt, route, jobs),
+    }
+}
+
+fn pjrt_batch_typed<T: PayloadScalar + PjrtScalar>(
+    inner: &Arc<Inner>,
+    rt: &Runtime,
+    route: Route,
+    jobs: Vec<Job>,
+) {
     let t0 = Instant::now();
-    let systems: Vec<&TriSystem<f64>> = jobs.iter().map(|j| &j.req.sys).collect();
-    let (combined, spans) = concat_systems(&systems, route.m);
+    let mut views = Vec::with_capacity(jobs.len());
+    for j in &jobs {
+        let Some(src) = T::source(&j.payload) else {
+            break;
+        };
+        views.push(src.view());
+    }
+    if views.len() != jobs.len() {
+        // Route/payload dtype mismatch cannot happen through the typed
+        // client; recover per-job instead of crashing the lane.
+        drop(views);
+        for job in jobs {
+            execute_native(inner, job);
+        }
+        return;
+    }
+    let (combined, spans) = concat_systems(&views, route.m);
+    drop(views);
     // The members were planned (and cached) individually; the batch only
     // restates their shared shape — no planning work on the device thread.
-    let batch_plan = SolvePlan::for_batch(combined.n(), route.m, route.dtype);
-    let backend = PjrtBackend::new(rt);
-    let solved = backend
-        .execute(&batch_plan, &combined)
-        .map_err(|e| e.to_string());
+    let batch_plan = SolvePlan::for_batch(
+        combined.n(),
+        route.m,
+        <T as PayloadScalar>::DTYPE,
+        Backend::Pjrt,
+    );
+    let solved = PjrtBackend::new(rt).execute_typed::<T>(&batch_plan, &combined);
     let exec_us = t0.elapsed().as_secs_f64() * 1e6;
     let batch_size = jobs.len();
 
@@ -291,11 +578,15 @@ fn execute_pjrt_batch(inner: &Arc<Inner>, rt: &Runtime, route: Route, jobs: Vec<
                 .record_backend(outcome.backend, batch_size as u64);
             for (job, &(off, n)) in jobs.into_iter().zip(&spans) {
                 let xj = outcome.x[off..off + n].to_vec();
-                respond_ok(inner, job, xj, outcome.backend, exec_us, batch_size);
+                respond_ok_typed::<T>(inner, job, xj, outcome.backend, exec_us, batch_size);
             }
         }
-        Err(msg) => {
-            crate::log_warn!("pjrt batch failed ({msg}); falling back to native");
+        Err(e) => {
+            crate::log_warn!("pjrt batch failed ({e}); falling back to native");
+            inner
+                .metrics
+                .pjrt_fallbacks
+                .fetch_add(batch_size as u64, Ordering::Relaxed);
             for job in jobs {
                 execute_native(inner, job);
             }
@@ -309,52 +600,158 @@ fn execute_pjrt_batch(inner: &Arc<Inner>, rt: &Runtime, route: Route, jobs: Vec<
 
 fn native_worker(inner: Arc<Inner>) {
     loop {
-        let Some(jobs) = take_jobs(&inner, false) else {
+        let Some(works) = take_work(&inner, false) else {
             return;
         };
-        for job in jobs {
-            execute_native(&inner, job);
+        // Same policy as the device thread: pre-formed submit_batch
+        // groups execute as-is, and loose jobs that piled up while the
+        // workers were busy are regrouped so same-shape native traffic
+        // shares one fused fan-out too.
+        let mut groups: Vec<(Route, Vec<Job>)> = Vec::new();
+        let mut loose: Vec<RoutedJob<Job>> = Vec::new();
+        for w in works {
+            match w {
+                Work::One(job) => loose.push(RoutedJob {
+                    route: Route::of_plan(&job.plan),
+                    job,
+                }),
+                Work::Batch { route, jobs } => groups.push((route, jobs)),
+            }
         }
+        for b in form_batches(loose, inner.cfg.max_batch) {
+            groups.push((b.route, b.jobs));
+        }
+        for (route, jobs) in groups {
+            execute_native_batch(&inner, route, jobs);
+        }
+    }
+}
+
+fn execute_work_native(inner: &Arc<Inner>, work: Work) {
+    match work {
+        Work::One(job) => execute_native(inner, job),
+        Work::Batch { route, jobs } => execute_native_batch(inner, route, jobs),
     }
 }
 
 fn execute_native(inner: &Arc<Inner>, job: Job) {
+    match job.payload.dtype() {
+        Dtype::F64 => native_one::<f64>(inner, job),
+        Dtype::F32 => native_one::<f32>(inner, job),
+    }
+}
+
+fn native_one<T: PayloadScalar + NativeScalar>(inner: &Arc<Inner>, job: Job) {
     let t0 = Instant::now();
-    let result = inner.native.execute(&job.plan, &job.req.sys);
+    let result = match T::source(&job.payload) {
+        Some(src) => inner.native.execute_typed::<T>(&job.plan, src.view()),
+        None => Err(Error::Service(
+            "payload dtype does not match its route".into(),
+        )),
+    };
     let exec_us = t0.elapsed().as_secs_f64() * 1e6;
     match result {
         Ok(outcome) => {
             inner.metrics.record_backend(outcome.backend, 1);
-            respond_ok(inner, job, outcome.x, outcome.backend, exec_us, 1);
+            respond_ok_typed::<T>(inner, job, outcome.x, outcome.backend, exec_us, 1);
         }
         Err(e) => {
             inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
-            let _ = job.tx.send(Err(e.to_string()));
+            respond_err(inner, job, ApiError::from(e));
         }
     }
 }
 
-fn respond_ok(
+/// Execute a pre-formed same-shape group as one fused native solve:
+/// concatenate the members (block-aligned), run a single partition
+/// solve — one Stage-1/Stage-3 pool fan-out pair for the whole group —
+/// and split the solution back per member.
+fn execute_native_batch(inner: &Arc<Inner>, route: Route, jobs: Vec<Job>) {
+    if jobs.len() == 1 {
+        let job = jobs.into_iter().next().expect("len checked");
+        execute_native(inner, job);
+        return;
+    }
+    inner.metrics.batches.fetch_add(1, Ordering::Relaxed);
+    match route.dtype {
+        Dtype::F64 => native_batch_typed::<f64>(inner, route, jobs),
+        Dtype::F32 => native_batch_typed::<f32>(inner, route, jobs),
+    }
+}
+
+fn native_batch_typed<T: PayloadScalar + NativeScalar>(
+    inner: &Arc<Inner>,
+    route: Route,
+    jobs: Vec<Job>,
+) {
+    let t0 = Instant::now();
+    let mut views = Vec::with_capacity(jobs.len());
+    for j in &jobs {
+        let Some(src) = T::source(&j.payload) else {
+            break;
+        };
+        views.push(src.view());
+    }
+    if views.len() != jobs.len() {
+        drop(views);
+        for job in jobs {
+            execute_native(inner, job);
+        }
+        return;
+    }
+    let (combined, spans) = concat_systems(&views, route.m);
+    drop(views);
+    let batch_plan = SolvePlan::for_batch(
+        combined.n(),
+        route.m,
+        <T as PayloadScalar>::DTYPE,
+        Backend::Native,
+    );
+    let result = inner.native.execute_typed::<T>(&batch_plan, combined.view());
+    let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+    let batch_size = jobs.len();
+    match result {
+        Ok(outcome) => {
+            inner
+                .metrics
+                .record_backend(outcome.backend, batch_size as u64);
+            for (job, &(off, n)) in jobs.into_iter().zip(&spans) {
+                let xj = outcome.x[off..off + n].to_vec();
+                respond_ok_typed::<T>(inner, job, xj, outcome.backend, exec_us, batch_size);
+            }
+        }
+        Err(e) => {
+            // One bad member (e.g. a singular system) must not poison
+            // the group: retry every member individually.
+            crate::log_warn!("native batch failed ({e}); retrying members individually");
+            for job in jobs {
+                execute_native(inner, job);
+            }
+        }
+    }
+}
+
+fn respond_ok_typed<T: PayloadScalar>(
     inner: &Arc<Inner>,
     job: Job,
-    x: Vec<f64>,
+    x: Vec<T>,
     backend: Backend,
     exec_us: f64,
     batch_size: usize,
 ) {
-    let queue_us = job.enqueued.elapsed().as_secs_f64() * 1e6 - exec_us;
-    let residual = job
-        .req
-        .opts
-        .compute_residual
-        .then(|| max_abs_residual(&job.req.sys, &x));
+    let queue_us = (job.enqueued.elapsed().as_secs_f64() * 1e6 - exec_us).max(0.0);
+    let residual = if job.opts.compute_residual {
+        T::source(&job.payload).map(|src| max_abs_residual_ref(src.view(), &x))
+    } else {
+        None
+    };
     let resp = SolveResponse {
-        id: job.req.id,
-        x,
+        id: job.id,
+        x: T::into_solution(x),
         m: job.plan.m(),
         backend,
         residual,
-        queue_us: queue_us.max(0.0),
+        queue_us,
         exec_us,
         batch_size,
         simulated_gpu_us: job.plan.simulated_gpu_us,
@@ -366,21 +763,40 @@ fn respond_ok(
         .e2e_latency
         .record(job.enqueued.elapsed().as_secs_f64() * 1e6);
     inner.metrics.completed.fetch_add(1, Ordering::Relaxed);
-    let _ = job.tx.send(Ok(resp));
+    if job.tx.send(Ok(resp)).is_err() {
+        inner
+            .metrics
+            .responses_dropped
+            .fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+fn respond_err(inner: &Arc<Inner>, job: Job, err: ApiError) {
+    if job.tx.send(Err(err)).is_err() {
+        inner
+            .metrics
+            .responses_dropped
+            .fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::solver::generator::random_dd_system;
+    use crate::solver::{thomas_solve, TriSystem};
     use crate::util::Pcg64;
 
     fn native_cfg() -> Config {
         Config {
-            artifacts_dir: "/nonexistent".into(),
+            probe_pjrt: false,
             workers: 2,
             ..Config::default()
         }
+    }
+
+    fn payload64(sys: TriSystem<f64>) -> SystemPayload<'static> {
+        SystemPayload::F64(SystemSource::Owned(sys))
     }
 
     #[test]
@@ -388,7 +804,9 @@ mod tests {
         let svc = Service::start(native_cfg()).unwrap();
         let mut rng = Pcg64::new(1);
         let sys = random_dd_system(&mut rng, 1000, 0.5);
-        let resp = svc.solve(SolveRequest::new(1, sys)).unwrap();
+        let resp = svc
+            .solve_payload(1, payload64(sys), SolveOptions::default())
+            .unwrap();
         assert_eq!(resp.x.len(), 1000);
         assert!(resp.residual.unwrap() < 1e-9);
         assert_eq!(resp.backend, Backend::Native);
@@ -397,12 +815,43 @@ mod tests {
     }
 
     #[test]
+    fn f32_payloads_execute_in_f32() {
+        let svc = Service::start(native_cfg()).unwrap();
+        let mut rng = Pcg64::new(9);
+        let sys = random_dd_system::<f32>(&mut rng, 5_000, 0.5);
+        let payload = SystemPayload::F32(SystemSource::Owned(sys));
+        let opts = SolveOptions {
+            dtype: Dtype::F32,
+            ..SolveOptions::default()
+        };
+        let resp = svc.solve_payload(1, payload, opts).unwrap();
+        assert_eq!(resp.x.dtype(), Dtype::F32, "no f64 widening");
+        assert_eq!(resp.x.len(), 5_000);
+        assert!(resp.residual.unwrap() < 1e-2, "f32-scale residual");
+        svc.shutdown();
+    }
+
+    #[test]
     fn tiny_system_routed_to_thomas() {
         let svc = Service::start(native_cfg()).unwrap();
         let mut rng = Pcg64::new(2);
         let sys = random_dd_system(&mut rng, 6, 0.5);
-        let resp = svc.solve(SolveRequest::new(2, sys)).unwrap();
+        let resp = svc
+            .solve_payload(2, payload64(sys), SolveOptions::default())
+            .unwrap();
         assert_eq!(resp.backend, Backend::Thomas);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn deprecated_submit_wrapper_still_works() {
+        let svc = Service::start(native_cfg()).unwrap();
+        let mut rng = Pcg64::new(7);
+        let sys = random_dd_system(&mut rng, 500, 0.5);
+        #[allow(deprecated)]
+        let resp = svc.solve(SolveRequest::new(42, sys)).unwrap();
+        assert_eq!(resp.id, 42);
+        assert_eq!(resp.x.len(), 500);
         svc.shutdown();
     }
 
@@ -411,7 +860,7 @@ mod tests {
         let cfg = Config {
             queue_depth: 1,
             workers: 1,
-            artifacts_dir: "/nonexistent".into(),
+            probe_pjrt: false,
             ..Config::default()
         };
         let svc = Service::start(cfg).unwrap();
@@ -422,9 +871,10 @@ mod tests {
         let mut receivers = Vec::new();
         for i in 0..200 {
             let sys = random_dd_system(&mut rng, 20_000, 0.5);
-            match svc.submit(SolveRequest::new(i, sys)) {
+            match svc.submit_payload(i, payload64(sys), SolveOptions::default()) {
                 Ok(rx) => receivers.push(rx),
-                Err(_) => {
+                Err((e, _payload, _opts)) => {
+                    assert!(matches!(e, ApiError::Backpressure { queue_depth: 1 }));
                     saw_reject = true;
                     break;
                 }
@@ -446,7 +896,10 @@ mod tests {
         let mut rxs = Vec::new();
         for i in 0..20 {
             let sys = random_dd_system(&mut rng, 500, 0.5);
-            rxs.push(svc.submit(SolveRequest::new(i, sys)).unwrap());
+            rxs.push(
+                svc.submit_payload(i, payload64(sys), SolveOptions::default())
+                    .unwrap(),
+            );
         }
         svc.shutdown();
         let done = rxs.into_iter().filter(|rx| rx.recv().is_ok()).count();
@@ -463,7 +916,9 @@ mod tests {
                 let mut rng = Pcg64::new(100 + t);
                 for i in 0..10 {
                     let sys = random_dd_system(&mut rng, 300, 0.5);
-                    let resp = svc2.solve(SolveRequest::new(t * 100 + i, sys)).unwrap();
+                    let resp = svc2
+                        .solve_payload(t * 100 + i, payload64(sys), SolveOptions::default())
+                        .unwrap();
                     assert!(resp.residual.unwrap() < 1e-9);
                 }
             }));
@@ -476,12 +931,93 @@ mod tests {
     }
 
     #[test]
+    fn submit_batch_fuses_same_shape_jobs() {
+        let svc = Service::start(native_cfg()).unwrap();
+        let mut rng = Pcg64::new(11);
+        let systems: Vec<TriSystem<f64>> =
+            (0..3).map(|_| random_dd_system(&mut rng, 2_000, 0.5)).collect();
+        let specs = systems
+            .iter()
+            .enumerate()
+            .map(|(i, sys)| (i as u64, payload64(sys.clone()), SolveOptions::default()))
+            .collect();
+        let rxs = svc.submit_batch(specs).unwrap();
+        for (rx, sys) in rxs.into_iter().zip(&systems) {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.batch_size, 3, "all three share one fused execution");
+            let want = thomas_solve(sys).unwrap();
+            let got = resp.x.as_f64().unwrap();
+            let diff = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(diff < 1e-9, "batched member diverges ({diff})");
+        }
+        let m = svc.metrics();
+        assert!(m.batches >= 1);
+        assert_eq!(m.completed, 3);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batch_with_singular_member_fails_only_that_member() {
+        let svc = Service::start(native_cfg()).unwrap();
+        let mut rng = Pcg64::new(12);
+        let good = random_dd_system::<f64>(&mut rng, 2_000, 0.5);
+        let n = 2_000;
+        let singular = TriSystem::<f64> {
+            a: vec![0.0; n],
+            b: vec![0.0; n],
+            c: vec![0.0; n],
+            d: vec![1.0; n],
+        };
+        let specs = vec![
+            (0, payload64(good.clone()), SolveOptions::default()),
+            (1, payload64(singular), SolveOptions::default()),
+        ];
+        let rxs = svc.submit_batch(specs).unwrap();
+        let mut replies: Vec<Reply> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let bad = replies.pop().unwrap();
+        let ok = replies.pop().unwrap();
+        assert!(matches!(bad, Err(ApiError::Solve(_))), "{bad:?}");
+        let resp = ok.unwrap();
+        assert!(resp.residual.unwrap() < 1e-9, "healthy member still solves");
+        let m = svc.metrics();
+        assert_eq!(m.failed, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn abandoned_handles_count_as_dropped_responses() {
+        let svc = Service::start(native_cfg()).unwrap();
+        let mut rng = Pcg64::new(13);
+        let sys = random_dd_system(&mut rng, 1_000_000, 0.5);
+        let rx = svc
+            .submit_payload(1, payload64(sys), SolveOptions::default())
+            .unwrap();
+        drop(rx); // abandon before the (large) solve can complete
+        let deadline = Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            let m = svc.metrics();
+            if m.responses_dropped >= 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "dropped response never counted");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        svc.shutdown();
+    }
+
+    #[test]
     fn pool_and_workspace_counters_are_exported() {
         let svc = Service::start(native_cfg()).unwrap();
         let mut rng = Pcg64::new(6);
         for i in 0..8 {
             let sys = random_dd_system(&mut rng, 5_000, 0.5);
-            let resp = svc.solve(SolveRequest::new(i, sys)).unwrap();
+            let resp = svc
+                .solve_payload(i, payload64(sys), SolveOptions::default())
+                .unwrap();
             assert_eq!(resp.backend, Backend::Native);
         }
         let m = svc.metrics();
@@ -507,7 +1043,9 @@ mod tests {
         let mut rng = Pcg64::new(5);
         for i in 0..6 {
             let sys = random_dd_system(&mut rng, 2_000, 0.5);
-            let _ = svc.solve(SolveRequest::new(i, sys)).unwrap();
+            let _ = svc
+                .solve_payload(i, payload64(sys), SolveOptions::default())
+                .unwrap();
         }
         let m = svc.metrics();
         assert_eq!(m.plan_cache_misses, 1, "first size plans once");

@@ -30,10 +30,15 @@
 //!   kernels (`artifacts/*.hlo.txt`) on the request path.
 //! * [`coordinator`] — the solve service: router (plan + cache), batcher,
 //!   worker pool, metrics.
+//! * [`api`] — the typed client surface over the coordinator: `Client` /
+//!   `ClientBuilder`, dtype-erased `SystemPayload` (owned / `Arc`-shared /
+//!   borrowed zero-copy), `SolveHandle` futures, batched `submit_many`,
+//!   and the structured `ApiError` taxonomy. **The public solve API.**
 //! * [`data`] — the paper's published tables embedded as typed datasets.
 //! * [`util`], [`config`], [`cli`], [`testkit`] — offline substrates
 //!   (RNG, stats, JSON, tables, TOML-subset config, CLI, property testing).
 
+pub mod api;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

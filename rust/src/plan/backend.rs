@@ -1,16 +1,25 @@
 //! Interchangeable execution backends consuming a [`SolvePlan`]:
 //! [`NativeBackend`] (threaded CPU solvers) and [`PjrtBackend`] (the AOT
 //! Pallas artifacts on the PJRT client).
+//!
+//! Both backends are **dtype-generic**: [`NativeBackend::execute_typed`]
+//! and [`PjrtBackend::execute_typed`] run the solver kernels in the
+//! payload's own scalar type over a borrowed [`TriSystemRef`] view, so
+//! an f32 request executes f32 arithmetic end-to-end (no f64 widening
+//! and no diagonal cloning). The [`SolverBackend`] trait keeps the
+//! legacy f64-owned surface: its f32 handling is the old cast path
+//! (PJRT casts at the device boundary, exactly as the paper's FP32
+//! experiments do).
 
 use super::{Backend, SolvePlan};
 use crate::error::Result;
 use crate::exec::{ExecCtx, WorkspacePool, WorkspaceStats};
 use crate::gpu::spec::Dtype;
-use crate::runtime::executor::pjrt_partition_solve;
+use crate::runtime::executor::{pjrt_partition_solve, PjrtScalar};
 use crate::runtime::Runtime;
 use crate::solver::{
-    partition_solve_with_workspace, recursive_solve_with_workspace, thomas_solve, SolveWorkspace,
-    TriSystem,
+    partition_solve_ref_with_workspace, recursive_solve_ref_with_workspace, thomas_solve_ref,
+    Scalar, SolveWorkspace, TriSystem, TriSystemRef,
 };
 use std::sync::Arc;
 
@@ -23,10 +32,37 @@ pub struct SolveOutcome {
     pub backend: Backend,
 }
 
+/// Dtype-generic execution result (`T` is the payload's own scalar).
+#[derive(Clone, Debug)]
+pub struct TypedOutcome<T> {
+    pub x: Vec<T>,
+    pub backend: Backend,
+}
+
 /// Anything that can execute a [`SolvePlan`] against a system.
 pub trait SolverBackend {
     fn name(&self) -> &'static str;
     fn execute(&self, plan: &SolvePlan, sys: &TriSystem<f64>) -> Result<SolveOutcome>;
+}
+
+/// Scalars the native backend can execute end-to-end. The trait's only
+/// job is selecting the matching per-dtype workspace pool inside
+/// [`NativeBackend`], so generic code never routes an f32 solve through
+/// f64 buffers.
+pub trait NativeScalar: Scalar {
+    fn workspaces(backend: &NativeBackend) -> &WorkspacePool<SolveWorkspace<Self>>;
+}
+
+impl NativeScalar for f64 {
+    fn workspaces(backend: &NativeBackend) -> &WorkspacePool<SolveWorkspace<f64>> {
+        &backend.ws64
+    }
+}
+
+impl NativeScalar for f32 {
+    fn workspaces(backend: &NativeBackend) -> &WorkspacePool<SolveWorkspace<f32>> {
+        &backend.ws32
+    }
 }
 
 /// Threaded native CPU execution: Thomas for `Backend::Thomas` plans,
@@ -34,13 +70,14 @@ pub trait SolverBackend {
 /// handed over by a fallback path.
 ///
 /// The backend owns an [`ExecCtx`] (a persistent worker-pool handle —
-/// no threads are spawned per solve) and a [`WorkspacePool`] recycling
-/// [`SolveWorkspace`]s across requests, so the steady-state solve path
-/// allocates only the response vector.
+/// no threads are spawned per solve) and one [`WorkspacePool`] per
+/// dtype recycling [`SolveWorkspace`]s across requests, so the
+/// steady-state solve path allocates only the response vector.
 #[derive(Clone, Debug)]
 pub struct NativeBackend {
     exec: ExecCtx,
-    workspaces: Arc<WorkspacePool<SolveWorkspace<f64>>>,
+    ws64: Arc<WorkspacePool<SolveWorkspace<f64>>>,
+    ws32: Arc<WorkspacePool<SolveWorkspace<f32>>>,
 }
 
 impl NativeBackend {
@@ -50,29 +87,59 @@ impl NativeBackend {
     }
 
     /// Run on an explicit pool handle (the coordinator service shares
-    /// one pool and one workspace pool across all its workers).
+    /// one pool — and, through a shared backend, the per-dtype
+    /// workspace pools — across all its workers).
     pub fn with_exec(exec: ExecCtx) -> NativeBackend {
         NativeBackend {
             exec,
-            workspaces: Arc::new(WorkspacePool::new()),
+            ws64: Arc::new(WorkspacePool::new()),
+            ws32: Arc::new(WorkspacePool::new()),
         }
-    }
-
-    /// Share an existing workspace pool (coordinator-owned).
-    pub fn with_workspaces(
-        exec: ExecCtx,
-        workspaces: Arc<WorkspacePool<SolveWorkspace<f64>>>,
-    ) -> NativeBackend {
-        NativeBackend { exec, workspaces }
     }
 
     pub fn exec(&self) -> &ExecCtx {
         &self.exec
     }
 
-    /// Workspace created/reused counters (exported via service metrics).
+    /// Combined per-dtype workspace created/reused counters (exported
+    /// via service metrics).
     pub fn workspace_stats(&self) -> WorkspaceStats {
-        self.workspaces.stats()
+        let a = self.ws64.stats();
+        let b = self.ws32.stats();
+        WorkspaceStats {
+            created: a.created + b.created,
+            reused: a.reused + b.reused,
+        }
+    }
+
+    /// Execute a plan in the payload's own scalar type over a borrowed
+    /// view: f32 plans run f32 arithmetic end-to-end, and no diagonal
+    /// is copied on the way in.
+    pub fn execute_typed<T: NativeScalar>(
+        &self,
+        plan: &SolvePlan,
+        sys: TriSystemRef<'_, T>,
+    ) -> Result<TypedOutcome<T>> {
+        if plan.backend == Backend::Thomas {
+            return Ok(TypedOutcome {
+                x: thomas_solve_ref(sys)?,
+                backend: Backend::Thomas,
+            });
+        }
+        let pool = T::workspaces(self);
+        let mut ws = pool.acquire();
+        let mut x = vec![T::zero(); sys.n()];
+        let solved = if plan.levels.len() > 1 {
+            recursive_solve_ref_with_workspace(sys, &plan.levels, &self.exec, &mut ws, &mut x)
+        } else {
+            partition_solve_ref_with_workspace(sys, plan.m(), &self.exec, ws.level(0), &mut x)
+        };
+        pool.release(ws);
+        solved?;
+        Ok(TypedOutcome {
+            x,
+            backend: Backend::Native,
+        })
     }
 }
 
@@ -82,31 +149,16 @@ impl SolverBackend for NativeBackend {
     }
 
     fn execute(&self, plan: &SolvePlan, sys: &TriSystem<f64>) -> Result<SolveOutcome> {
-        if plan.backend == Backend::Thomas {
-            return Ok(SolveOutcome {
-                x: thomas_solve(sys)?,
-                backend: Backend::Thomas,
-            });
-        }
-        let mut ws = self.workspaces.acquire();
-        let mut x = vec![0.0f64; sys.n()];
-        let solved = if plan.levels.len() > 1 {
-            recursive_solve_with_workspace(sys, &plan.levels, &self.exec, &mut ws, &mut x)
-        } else {
-            partition_solve_with_workspace(sys, plan.m(), &self.exec, ws.level(0), &mut x)
-        };
-        self.workspaces.release(ws);
-        solved?;
+        let out = self.execute_typed::<f64>(plan, sys.view())?;
         Ok(SolveOutcome {
-            x,
-            backend: Backend::Native,
+            x: out.x,
+            backend: out.backend,
         })
     }
 }
 
 /// PJRT execution of a plan's top level (Stage 1/3 on the device client,
-/// Stage 2 host-side). FP32 plans cast on the way in and out, exactly as
-/// the paper's FP32 experiments do.
+/// Stage 2 host-side).
 pub struct PjrtBackend<'rt> {
     rt: &'rt Runtime,
 }
@@ -115,6 +167,19 @@ impl<'rt> PjrtBackend<'rt> {
     pub fn new(rt: &'rt Runtime) -> PjrtBackend<'rt> {
         PjrtBackend { rt }
     }
+
+    /// Execute in the payload's own scalar type (f32 artifacts run f32
+    /// kernels directly; nothing is cast).
+    pub fn execute_typed<T: PjrtScalar>(
+        &self,
+        plan: &SolvePlan,
+        sys: &TriSystem<T>,
+    ) -> Result<TypedOutcome<T>> {
+        Ok(TypedOutcome {
+            x: pjrt_partition_solve(self.rt, sys, plan.m())?,
+            backend: Backend::Pjrt,
+        })
+    }
 }
 
 impl SolverBackend for PjrtBackend<'_> {
@@ -122,6 +187,9 @@ impl SolverBackend for PjrtBackend<'_> {
         "pjrt"
     }
 
+    /// Legacy f64-owned surface. FP32 plans cast on the way in and out,
+    /// exactly as the paper's FP32 experiments do — the typed path
+    /// ([`PjrtBackend::execute_typed`]) is the cast-free route.
     fn execute(&self, plan: &SolvePlan, sys: &TriSystem<f64>) -> Result<SolveOutcome> {
         let m = plan.m();
         let x = match plan.dtype {
@@ -147,6 +215,7 @@ mod tests {
     use crate::plan::ShardSpec;
     use crate::solver::generator::random_dd_system;
     use crate::solver::residual::max_abs_diff;
+    use crate::solver::thomas_solve;
     use crate::util::Pcg64;
 
     fn plan(n: usize, backend: Backend, levels: Vec<usize>) -> SolvePlan {
@@ -205,5 +274,53 @@ mod tests {
             .unwrap();
         assert_eq!(out.backend, Backend::Native);
         assert!(max_abs_diff(&out.x, &thomas_solve(&sys).unwrap()) < 1e-9);
+    }
+
+    #[test]
+    fn typed_f32_execution_is_bitwise_the_generic_f32_solve() {
+        // The no-widening guarantee at the backend layer: an f32 typed
+        // execution must produce exactly the bits of the direct generic
+        // f32 partition solve (an f64 solve truncated to f32 would not).
+        use crate::solver::partition_solve;
+        let mut rng = Pcg64::new(5);
+        let sys = random_dd_system::<f32>(&mut rng, 2_000, 0.5);
+        let backend = NativeBackend::new(2);
+        let mut p = plan(2_000, Backend::Native, vec![8]);
+        p.dtype = Dtype::F32;
+        let out = backend.execute_typed::<f32>(&p, sys.view()).unwrap();
+        let want = partition_solve::<f32>(&sys, 8, 2).unwrap();
+        assert_eq!(out.x, want);
+        assert_eq!(out.backend, Backend::Native);
+    }
+
+    #[test]
+    fn typed_execution_uses_per_dtype_workspace_pools() {
+        let mut rng = Pcg64::new(6);
+        let backend = NativeBackend::new(2);
+        let sys64 = random_dd_system::<f64>(&mut rng, 1_000, 0.5);
+        let sys32 = random_dd_system::<f32>(&mut rng, 1_000, 0.5);
+        let p64 = plan(1_000, Backend::Native, vec![8]);
+        let mut p32 = plan(1_000, Backend::Native, vec![8]);
+        p32.dtype = Dtype::F32;
+        for _ in 0..2 {
+            backend.execute_typed::<f64>(&p64, sys64.view()).unwrap();
+            backend.execute_typed::<f32>(&p32, sys32.view()).unwrap();
+        }
+        let stats = backend.workspace_stats();
+        assert_eq!(stats.created, 2, "one workspace per dtype pool");
+        assert_eq!(stats.reused, 2, "second round reuses both");
+    }
+
+    #[test]
+    fn typed_execution_borrows_without_copying_diagonals() {
+        // A borrowed view assembled from caller-owned slices solves
+        // without an owned TriSystem ever existing.
+        let mut rng = Pcg64::new(7);
+        let owned = random_dd_system::<f64>(&mut rng, 600, 0.5);
+        let view = TriSystemRef::new(&owned.a, &owned.b, &owned.c, &owned.d).unwrap();
+        let out = NativeBackend::new(2)
+            .execute_typed::<f64>(&plan(600, Backend::Native, vec![8]), view)
+            .unwrap();
+        assert!(max_abs_diff(&out.x, &thomas_solve(&owned).unwrap()) < 1e-9);
     }
 }

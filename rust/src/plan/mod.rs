@@ -32,7 +32,7 @@ pub mod cache;
 pub mod planner;
 pub mod shard;
 
-pub use backend::{NativeBackend, PjrtBackend, SolveOutcome, SolverBackend};
+pub use backend::{NativeBackend, NativeScalar, PjrtBackend, SolveOutcome, SolverBackend, TypedOutcome};
 pub use cache::{PlanCache, PlanKey};
 pub use planner::{BackendAvailability, Planner, PjrtVariant};
 pub use shard::{plan_shards, ShardSpec};
@@ -122,13 +122,13 @@ pub struct SolvePlan {
 impl SolvePlan {
     /// A minimal plan for an already-routed batch execution: the member
     /// requests were planned individually (and cached); the concatenated
-    /// system only needs the shared shape `(m, dtype)` re-stated, so no
-    /// heuristic, occupancy or shard work is repeated here.
-    pub fn for_batch(n: usize, m: usize, dtype: Dtype) -> SolvePlan {
+    /// system only needs the shared shape `(m, dtype, backend)` re-stated,
+    /// so no heuristic, occupancy or shard work is repeated here.
+    pub fn for_batch(n: usize, m: usize, dtype: Dtype, backend: Backend) -> SolvePlan {
         SolvePlan {
             n,
             dtype,
-            backend: Backend::Pjrt,
+            backend,
             levels: vec![m],
             streams: 1,
             shards: Vec::new(),

@@ -27,10 +27,16 @@ pub mod tridiagonal;
 pub mod workspace;
 
 pub use generator::{random_dd_system, toeplitz_system};
-pub use partition::{partition_solve, partition_solve_with_workspace, PartitionWorkspace};
-pub use recursive::{partition_applies, recursive_solve, recursive_solve_with_workspace};
-pub use thomas::{thomas_solve, thomas_solve_with_scratch};
-pub use tridiagonal::TriSystem;
+pub use partition::{
+    partition_solve, partition_solve_ref_with_workspace, partition_solve_with_workspace,
+    PartitionWorkspace,
+};
+pub use recursive::{
+    partition_applies, recursive_solve, recursive_solve_ref_with_workspace,
+    recursive_solve_with_workspace,
+};
+pub use thomas::{thomas_solve, thomas_solve_ref, thomas_solve_with_scratch};
+pub use tridiagonal::{TriSystem, TriSystemRef};
 pub use workspace::SolveWorkspace;
 
 /// Scalar abstraction: everything the solvers need from f32 / f64

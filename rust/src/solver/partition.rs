@@ -19,7 +19,8 @@
 //! warmed-up solve through [`partition_solve_with_workspace`] performs
 //! zero heap allocations (asserted by `tests/alloc_free.rs`).
 
-use super::thomas::{thomas_solve_with_scratch, ThomasScratch};
+use super::thomas::{thomas_solve_ref_with_scratch, ThomasScratch};
+use super::tridiagonal::TriSystemRef;
 use super::{Scalar, TriSystem};
 use crate::error::{Error, Result};
 use crate::exec::{ExecCtx, SendPtr};
@@ -110,19 +111,23 @@ pub(crate) fn ensure_len<T: Clone>(v: &mut Vec<T>, len: usize, fill: T) {
 /// Copy `sys` into `out` grown to `n_new` with identity pad rows,
 /// reusing `out`'s buffers (the allocation-free replacement for
 /// `sys.clone()` + [`TriSystem::pad_to`]).
-pub(crate) fn copy_into_padded<T: Scalar>(sys: &TriSystem<T>, n_new: usize, out: &mut TriSystem<T>) {
+pub(crate) fn copy_into_padded<T: Scalar>(
+    sys: TriSystemRef<'_, T>,
+    n_new: usize,
+    out: &mut TriSystem<T>,
+) {
     debug_assert!(n_new >= sys.n());
     out.a.clear();
-    out.a.extend_from_slice(&sys.a);
+    out.a.extend_from_slice(sys.a);
     out.a.resize(n_new, T::zero());
     out.b.clear();
-    out.b.extend_from_slice(&sys.b);
+    out.b.extend_from_slice(sys.b);
     out.b.resize(n_new, T::one());
     out.c.clear();
-    out.c.extend_from_slice(&sys.c);
+    out.c.extend_from_slice(sys.c);
     out.c.resize(n_new, T::zero());
     out.d.clear();
-    out.d.extend_from_slice(&sys.d);
+    out.d.extend_from_slice(sys.d);
     out.d.resize(n_new, T::zero());
 }
 
@@ -222,6 +227,16 @@ pub fn stage1_block<T: Scalar>(
 /// One chunk per block; see `exec::pool` for the determinism contract.
 pub fn stage1_all_exec<T: Scalar>(
     sys: &TriSystem<T>,
+    m: usize,
+    exec: &ExecCtx,
+    out: &mut Vec<BlockInterface<T>>,
+) -> Result<()> {
+    stage1_all_ref(sys.view(), m, exec, out)
+}
+
+/// As [`stage1_all_exec`] but over a borrowed [`TriSystemRef`] view.
+pub fn stage1_all_ref<T: Scalar>(
+    sys: TriSystemRef<'_, T>,
     m: usize,
     exec: &ExecCtx,
     out: &mut Vec<BlockInterface<T>>,
@@ -387,6 +402,17 @@ pub fn stage3_all_exec<T: Scalar>(
     exec: &ExecCtx,
     x: &mut [T],
 ) -> Result<()> {
+    stage3_all_ref(sys.view(), m, boundary, exec, x)
+}
+
+/// As [`stage3_all_exec`] but over a borrowed [`TriSystemRef`] view.
+pub fn stage3_all_ref<T: Scalar>(
+    sys: TriSystemRef<'_, T>,
+    m: usize,
+    boundary: &[T],
+    exec: &ExecCtx,
+    x: &mut [T],
+) -> Result<()> {
     let n = sys.n();
     let p = n / m;
     if boundary.len() != 2 * p {
@@ -455,6 +481,19 @@ pub fn partition_solve_with_workspace<T: Scalar>(
     ws: &mut PartitionWorkspace<T>,
     x: &mut [T],
 ) -> Result<()> {
+    partition_solve_ref_with_workspace(sys.view(), m, exec, ws, x)
+}
+
+/// As [`partition_solve_with_workspace`] but over a borrowed
+/// [`TriSystemRef`] view — the zero-copy core behind the owned entry
+/// points and the client API's borrowed-payload path.
+pub fn partition_solve_ref_with_workspace<T: Scalar>(
+    sys: TriSystemRef<'_, T>,
+    m: usize,
+    exec: &ExecCtx,
+    ws: &mut PartitionWorkspace<T>,
+    x: &mut [T],
+) -> Result<()> {
     let n = sys.n();
     if m < 3 {
         return Err(Error::Solver(format!("sub-system size m={m} must be >= 3")));
@@ -468,18 +507,18 @@ pub fn partition_solve_with_workspace<T: Scalar>(
     if np != n {
         copy_into_padded(sys, np, &mut ws.padded);
     }
-    let work: &TriSystem<T> = if np == n { sys } else { &ws.padded };
+    let work: TriSystemRef<'_, T> = if np == n { sys } else { ws.padded.view() };
 
-    stage1_all_exec(work, m, exec, &mut ws.iface)?;
+    stage1_all_ref(work, m, exec, &mut ws.iface)?;
     assemble_interface_into(&ws.iface, &mut ws.iface_sys);
     ensure_len(&mut ws.iface_x, ws.iface_sys.n(), T::zero());
-    thomas_solve_with_scratch(&ws.iface_sys, &mut ws.scratch, &mut ws.iface_x)?;
+    thomas_solve_ref_with_scratch(ws.iface_sys.view(), &mut ws.scratch, &mut ws.iface_x)?;
 
     if np == n {
-        stage3_all_exec(work, m, &ws.iface_x, exec, x)?;
+        stage3_all_ref(work, m, &ws.iface_x, exec, x)?;
     } else {
         ensure_len(&mut ws.padded_x, np, T::zero());
-        stage3_all_exec(work, m, &ws.iface_x, exec, &mut ws.padded_x[..])?;
+        stage3_all_ref(work, m, &ws.iface_x, exec, &mut ws.padded_x[..])?;
         x.copy_from_slice(&ws.padded_x[..n]);
     }
     Ok(())

@@ -14,10 +14,11 @@
 //! bit-identical across pool sizes.
 
 use super::partition::{
-    assemble_interface_into, copy_into_padded, ensure_len, stage1_all_exec, stage3_all_exec,
+    assemble_interface_into, copy_into_padded, ensure_len, stage1_all_ref, stage3_all_ref,
     PartitionWorkspace,
 };
-use super::thomas::thomas_solve_with_scratch;
+use super::thomas::thomas_solve_ref_with_scratch;
+use super::tridiagonal::TriSystemRef;
 use super::workspace::SolveWorkspace;
 use super::{Scalar, TriSystem};
 use crate::error::{Error, Result};
@@ -66,6 +67,19 @@ pub fn recursive_solve_with_workspace<T: Scalar>(
     ws: &mut SolveWorkspace<T>,
     x: &mut [T],
 ) -> Result<()> {
+    recursive_solve_ref_with_workspace(sys.view(), plan, exec, ws, x)
+}
+
+/// As [`recursive_solve_with_workspace`] but over a borrowed
+/// [`TriSystemRef`] view — the zero-copy core behind the owned entry
+/// points and the client API's borrowed-payload path.
+pub fn recursive_solve_ref_with_workspace<T: Scalar>(
+    sys: TriSystemRef<'_, T>,
+    plan: &[usize],
+    exec: &ExecCtx,
+    ws: &mut SolveWorkspace<T>,
+    x: &mut [T],
+) -> Result<()> {
     if x.len() != sys.n() {
         return Err(Error::Shape(format!(
             "x len {} != n {}",
@@ -77,7 +91,7 @@ pub fn recursive_solve_with_workspace<T: Scalar>(
 }
 
 fn solve_level<T: Scalar>(
-    sys: &TriSystem<T>,
+    sys: TriSystemRef<'_, T>,
     plan: &[usize],
     level: usize,
     exec: &ExecCtx,
@@ -87,7 +101,7 @@ fn solve_level<T: Scalar>(
     let n = sys.n();
     let Some(&m) = plan.get(level) else {
         // Plan exhausted: host Thomas, reusing this level's scratch.
-        return thomas_solve_with_scratch(sys, &mut ws.level(level).scratch, x);
+        return thomas_solve_ref_with_scratch(sys, &mut ws.level(level).scratch, x);
     };
     if m < 3 {
         return Err(Error::Solver(format!("sub-system size m={m} must be >= 3")));
@@ -95,7 +109,7 @@ fn solve_level<T: Scalar>(
     // Small systems: fewer than three padded blocks makes partitioning
     // pure overhead; bottom out (see `partition_applies`).
     if !partition_applies(n, m) {
-        return thomas_solve_with_scratch(sys, &mut ws.level(level).scratch, x);
+        return thomas_solve_ref_with_scratch(sys, &mut ws.level(level).scratch, x);
     }
 
     // Detach this level's buffers so the recursion below can borrow the
@@ -109,7 +123,7 @@ fn solve_level<T: Scalar>(
 
 #[allow(clippy::too_many_arguments)]
 fn run_level<T: Scalar>(
-    sys: &TriSystem<T>,
+    sys: TriSystemRef<'_, T>,
     plan: &[usize],
     level: usize,
     m: usize,
@@ -123,21 +137,21 @@ fn run_level<T: Scalar>(
     if np != n {
         copy_into_padded(sys, np, &mut lw.padded);
     }
-    let work: &TriSystem<T> = if np == n { sys } else { &lw.padded };
+    let work: TriSystemRef<'_, T> = if np == n { sys } else { lw.padded.view() };
 
-    stage1_all_exec(work, m, exec, &mut lw.iface)?;
+    stage1_all_ref(work, m, exec, &mut lw.iface)?;
     assemble_interface_into(&lw.iface, &mut lw.iface_sys);
 
     // Stage 2: recurse into the interface system (or Thomas when the
     // plan is exhausted) — the boundary vector is this level's iface_x.
     ensure_len(&mut lw.iface_x, lw.iface_sys.n(), T::zero());
-    solve_level(&lw.iface_sys, plan, level + 1, exec, ws, &mut lw.iface_x)?;
+    solve_level(lw.iface_sys.view(), plan, level + 1, exec, ws, &mut lw.iface_x)?;
 
     if np == n {
-        stage3_all_exec(work, m, &lw.iface_x, exec, x)?;
+        stage3_all_ref(work, m, &lw.iface_x, exec, x)?;
     } else {
         ensure_len(&mut lw.padded_x, np, T::zero());
-        stage3_all_exec(work, m, &lw.iface_x, exec, &mut lw.padded_x[..])?;
+        stage3_all_ref(work, m, &lw.iface_x, exec, &mut lw.padded_x[..])?;
         x.copy_from_slice(&lw.padded_x[..n]);
     }
     Ok(())

@@ -1,14 +1,30 @@
 //! Residual-based verification: `‖A x − d‖`.
 
+use super::tridiagonal::TriSystemRef;
 use super::{Scalar, TriSystem};
 
 /// Maximum absolute residual component.
 pub fn max_abs_residual<T: Scalar>(sys: &TriSystem<T>, x: &[T]) -> f64 {
-    let ax = sys.matvec(x);
-    ax.iter()
-        .zip(&sys.d)
-        .map(|(p, q)| (*p - *q).as_f64().abs())
-        .fold(0.0, f64::max)
+    max_abs_residual_ref(sys.view(), x)
+}
+
+/// As [`max_abs_residual`] but over a borrowed view, computing the
+/// residual row-by-row without materializing `A x` (no allocation).
+pub fn max_abs_residual_ref<T: Scalar>(sys: TriSystemRef<'_, T>, x: &[T]) -> f64 {
+    let n = sys.n();
+    assert_eq!(x.len(), n);
+    let mut worst = 0.0f64;
+    for i in 0..n {
+        let mut v = sys.b[i] * x[i];
+        if i > 0 {
+            v = v + sys.a[i] * x[i - 1];
+        }
+        if i + 1 < n {
+            v = v + sys.c[i] * x[i + 1];
+        }
+        worst = worst.max((v - sys.d[i]).as_f64().abs());
+    }
+    worst
 }
 
 /// Relative residual `‖Ax − d‖∞ / max(‖d‖∞, ε)`.

@@ -1,6 +1,7 @@
 //! Sequential Thomas algorithm — the paper's Stage-2 host solver and the
 //! correctness oracle for every parallel path.
 
+use super::tridiagonal::TriSystemRef;
 use super::{Scalar, TriSystem};
 use crate::error::{Error, Result};
 
@@ -31,9 +32,14 @@ impl<T: Scalar> ThomasScratch<T> {
 
 /// Solve `A x = d`, allocating scratch internally.
 pub fn thomas_solve<T: Scalar>(sys: &TriSystem<T>) -> Result<Vec<T>> {
+    thomas_solve_ref(sys.view())
+}
+
+/// As [`thomas_solve`] but over a borrowed [`TriSystemRef`] view.
+pub fn thomas_solve_ref<T: Scalar>(sys: TriSystemRef<'_, T>) -> Result<Vec<T>> {
     let mut scratch = ThomasScratch::with_capacity(sys.n());
     let mut x = vec![T::zero(); sys.n()];
-    thomas_solve_with_scratch(sys, &mut scratch, &mut x)?;
+    thomas_solve_ref_with_scratch(sys, &mut scratch, &mut x)?;
     Ok(x)
 }
 
@@ -44,11 +50,21 @@ pub fn thomas_solve_with_scratch<T: Scalar>(
     scratch: &mut ThomasScratch<T>,
     x: &mut [T],
 ) -> Result<()> {
+    thomas_solve_ref_with_scratch(sys.view(), scratch, x)
+}
+
+/// As [`thomas_solve_with_scratch`] but over a borrowed view — the
+/// zero-copy core every Thomas entry point funnels into.
+pub fn thomas_solve_ref_with_scratch<T: Scalar>(
+    sys: TriSystemRef<'_, T>,
+    scratch: &mut ThomasScratch<T>,
+    x: &mut [T],
+) -> Result<()> {
     let n = sys.n();
     if x.len() != n {
         return Err(Error::Shape(format!("x len {} != n {}", x.len(), n)));
     }
-    let (a, b, c, d) = (&sys.a, &sys.b, &sys.c, &sys.d);
+    let (a, b, c, d) = (sys.a, sys.b, sys.c, sys.d);
     let tiny = T::of_f64(f64::MIN_POSITIVE.sqrt());
 
     scratch.cp.clear();

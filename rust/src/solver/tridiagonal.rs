@@ -14,6 +14,53 @@ pub struct TriSystem<T> {
     pub d: Vec<T>,
 }
 
+/// A borrowed view of a tridiagonal SLAE: the zero-copy counterpart of
+/// [`TriSystem`]. The solver entry points (`*_ref_*`) consume views, so
+/// callers that already hold the four diagonals — a client buffer, a
+/// slice of a larger allocation, a memory-mapped dataset — can solve
+/// without cloning them into an owned system first.
+#[derive(Clone, Copy, Debug)]
+pub struct TriSystemRef<'a, T> {
+    pub a: &'a [T],
+    pub b: &'a [T],
+    pub c: &'a [T],
+    pub d: &'a [T],
+}
+
+impl<'a, T: Scalar> TriSystemRef<'a, T> {
+    /// Shape-checked view over four diagonal slices.
+    pub fn new(a: &'a [T], b: &'a [T], c: &'a [T], d: &'a [T]) -> Result<Self> {
+        let n = b.len();
+        if n == 0 {
+            return Err(Error::Shape("empty system".into()));
+        }
+        if a.len() != n || c.len() != n || d.len() != n {
+            return Err(Error::Shape(format!(
+                "diagonal lengths differ: a={} b={} c={} d={}",
+                a.len(),
+                n,
+                c.len(),
+                d.len()
+            )));
+        }
+        Ok(TriSystemRef { a, b, c, d })
+    }
+
+    pub fn n(&self) -> usize {
+        self.b.len()
+    }
+
+    /// Copy the view into an owned system.
+    pub fn to_owned(&self) -> TriSystem<T> {
+        TriSystem {
+            a: self.a.to_vec(),
+            b: self.b.to_vec(),
+            c: self.c.to_vec(),
+            d: self.d.to_vec(),
+        }
+    }
+}
+
 impl<T: Scalar> TriSystem<T> {
     pub fn new(a: Vec<T>, b: Vec<T>, c: Vec<T>, d: Vec<T>) -> Result<Self> {
         let n = b.len();
@@ -83,6 +130,16 @@ impl<T: Scalar> TriSystem<T> {
         self.d.resize(n_new, T::zero());
     }
 
+    /// Borrowed zero-copy view of all four diagonals.
+    pub fn view(&self) -> TriSystemRef<'_, T> {
+        TriSystemRef {
+            a: &self.a,
+            b: &self.b,
+            c: &self.c,
+            d: &self.d,
+        }
+    }
+
     /// Cast to another scalar type (used by the FP32 experiments).
     pub fn cast<U: Scalar>(&self) -> TriSystem<U> {
         let conv = |v: &[T]| v.iter().map(|x| U::of_f64(x.as_f64())).collect();
@@ -147,5 +204,23 @@ mod tests {
         let s32: TriSystem<f32> = s.cast();
         let back: TriSystem<f64> = s32.cast();
         assert!((back.b[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn view_roundtrips_without_copying() {
+        let s = small();
+        let v = s.view();
+        assert_eq!(v.n(), 3);
+        assert!(std::ptr::eq(v.b.as_ptr(), s.b.as_ptr()), "view must borrow, not copy");
+        assert_eq!(v.to_owned(), s);
+    }
+
+    #[test]
+    fn ref_shape_validation() {
+        let s = small();
+        assert!(TriSystemRef::new(&s.a, &s.b, &s.c, &s.d).is_ok());
+        assert!(TriSystemRef::new(&s.a[..2], &s.b, &s.c, &s.d).is_err());
+        let empty: &[f64] = &[];
+        assert!(TriSystemRef::new(empty, empty, empty, empty).is_err());
     }
 }

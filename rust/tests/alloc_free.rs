@@ -50,6 +50,23 @@ fn steady_state_solve_is_allocation_free() {
         "warmed-up partition_solve_with_workspace must not allocate"
     );
 
+    // --- f32 path (first-class end-to-end dtype): same guarantee. ---
+    let sys32 = random_dd_system::<f32>(&mut rng, 4_096, 0.5);
+    let mut ws32 = PartitionWorkspace::new();
+    let mut x32 = vec![0.0f32; 4_096];
+    for _ in 0..2 {
+        partition_solve_with_workspace(&sys32, 32, &exec, &mut ws32, &mut x32).unwrap();
+    }
+    let allocs = CountingAlloc::count_during(|| {
+        for _ in 0..5 {
+            partition_solve_with_workspace(&sys32, 32, &exec, &mut ws32, &mut x32).unwrap();
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "warmed-up f32 partition_solve_with_workspace must not allocate"
+    );
+
     // --- Recursive path with a deep plan. ---
     let n = 20_000;
     let sys = random_dd_system::<f64>(&mut rng, n, 0.5);

@@ -1,0 +1,242 @@
+//! ISSUE-3 acceptance tests for the typed client API.
+//!
+//! * f32 requests solve **end-to-end in f32**: the service response is
+//!   bit-identical to the direct generic `partition_solve::<f32>` call
+//!   (an f64 solve truncated to f32 would differ in round-off on
+//!   essentially every element), and the solution arrives as
+//!   `Solution::F32` — no f64 widening anywhere.
+//! * `submit_many` round-trips: same-shape requests share one fused
+//!   batch (`batch_size > 1` in every member's response) with correct
+//!   per-request solutions; mixed dtypes never share a batch.
+//! * `SolveHandle` wait/try_wait/deadline semantics and the structured
+//!   `ApiError` taxonomy at the boundary.
+
+use partisol::api::{ApiError, Client, SolveSpec};
+use partisol::coordinator::Backend;
+use partisol::gpu::spec::Dtype;
+use partisol::solver::generator::random_dd_system;
+use partisol::solver::residual::max_abs_diff;
+use partisol::solver::{partition_solve, thomas_solve};
+use partisol::util::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn native_client(workers: usize) -> Client {
+    Client::builder()
+        .native_only()
+        .workers(workers)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn f32_requests_solve_end_to_end_without_widening() {
+    let client = native_client(2);
+    let mut rng = Pcg64::new(1);
+    let sys = random_dd_system::<f32>(&mut rng, 10_000, 0.5);
+    let resp = client.solve(SolveSpec::f32(sys.clone())).unwrap();
+    assert_eq!(resp.backend, Backend::Native);
+    let got = resp
+        .x
+        .as_f32()
+        .expect("f32 request must yield an f32 solution");
+    // Bit-for-bit against the direct generic f32 solve at the planned m
+    // (results are pool-size invariant, so the thread count is free).
+    let want = partition_solve::<f32>(&sys, resp.m, 4).unwrap();
+    assert_eq!(got, &want[..], "service f32 path diverges from the generic f32 kernels");
+    client.shutdown();
+}
+
+#[test]
+fn f32_traffic_exercises_the_dtype_keyed_plan_cache() {
+    let client = native_client(1);
+    let mut rng = Pcg64::new(2);
+    for _ in 0..3 {
+        let sys = random_dd_system::<f32>(&mut rng, 4_000, 0.5);
+        client.solve(SolveSpec::f32(sys)).unwrap();
+    }
+    // Same n as f64: a distinct (n, dtype) key, so one more miss.
+    let sys = random_dd_system::<f64>(&mut rng, 4_000, 0.5);
+    client.solve(SolveSpec::f64(sys)).unwrap();
+    let m = client.metrics();
+    assert_eq!(m.plan_cache_misses, 2, "one miss per (n, dtype) key");
+    assert_eq!(m.plan_cache_hits, 2, "repeated f32 sizes hit the cache");
+    client.shutdown();
+}
+
+#[test]
+fn submit_many_fuses_same_shape_requests_into_one_batch() {
+    let client = native_client(1);
+    let mut rng = Pcg64::new(3);
+    let n = 3_000;
+    let systems: Vec<_> = (0..3)
+        .map(|_| random_dd_system::<f64>(&mut rng, n, 0.5))
+        .collect();
+    let specs = systems.iter().map(|s| SolveSpec::f64(s.clone())).collect();
+    let handles = client.submit_many(specs).unwrap();
+    assert_eq!(handles.len(), 3);
+    for (handle, sys) in handles.into_iter().zip(&systems) {
+        let resp = handle.wait().unwrap();
+        assert_eq!(
+            resp.batch_size, 3,
+            "all three members must share one fused execution"
+        );
+        let want = thomas_solve(sys).unwrap();
+        assert!(
+            max_abs_diff(resp.x.as_f64().unwrap(), &want) < 1e-9,
+            "per-request solution wrong inside the batch"
+        );
+    }
+    let m = client.metrics();
+    assert!(m.batches >= 1, "no batch was recorded");
+    client.shutdown();
+}
+
+#[test]
+fn submit_many_keeps_dtypes_in_separate_batches() {
+    let client = native_client(1);
+    let mut rng = Pcg64::new(4);
+    let n = 3_000;
+    let sys64: Vec<_> = (0..2)
+        .map(|_| random_dd_system::<f64>(&mut rng, n, 0.5))
+        .collect();
+    let sys32: Vec<_> = (0..2)
+        .map(|_| random_dd_system::<f32>(&mut rng, n, 1.0))
+        .collect();
+    let specs = vec![
+        SolveSpec::f64(sys64[0].clone()),
+        SolveSpec::f32(sys32[0].clone()),
+        SolveSpec::f64(sys64[1].clone()),
+        SolveSpec::f32(sys32[1].clone()),
+    ];
+    let handles = client.submit_many(specs).unwrap();
+    let responses: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+    // f64 members batch together; f32 members batch together; never mixed.
+    assert_eq!(responses[0].x.dtype(), Dtype::F64);
+    assert_eq!(responses[1].x.dtype(), Dtype::F32);
+    for resp in &responses {
+        assert_eq!(resp.batch_size, 2, "each dtype pair shares one batch");
+    }
+    // f32 members agree with the direct generic f32 solve, bitwise.
+    for (resp, sys) in [&responses[1], &responses[3]].iter().zip(&sys32) {
+        let want = partition_solve::<f32>(sys, resp.m, 2).unwrap();
+        assert_eq!(resp.x.as_f32().unwrap(), &want[..]);
+    }
+    client.shutdown();
+}
+
+#[test]
+fn handles_support_try_wait_and_deadlines() {
+    let client = native_client(1);
+    let mut rng = Pcg64::new(5);
+    // Large enough that the solve cannot finish before the zero-length
+    // deadline below expires.
+    let sys = random_dd_system::<f64>(&mut rng, 2_000_000, 0.5);
+    let mut handle = client.submit(SolveSpec::f64(sys)).unwrap();
+    match handle.wait_timeout(Duration::ZERO) {
+        Err(ApiError::Timeout) => {}
+        Ok(_) => panic!("a 2M-row solve finished inside a zero timeout"),
+        Err(e) => panic!("unexpected error: {e}"),
+    }
+    // The handle stays live after a timeout.
+    let resp = handle.wait_timeout(Duration::from_secs(120)).unwrap();
+    assert_eq!(resp.x.len(), 2_000_000);
+    // And is consumed afterwards.
+    assert!(matches!(handle.try_wait(), Err(ApiError::Consumed)));
+    client.shutdown();
+}
+
+#[test]
+fn solve_now_borrowed_view_matches_queued_solve() {
+    let client = native_client(1);
+    let mut rng = Pcg64::new(6);
+    let sys = random_dd_system::<f64>(&mut rng, 5_000, 0.5);
+    let queued = client.solve(SolveSpec::f64(sys.clone())).unwrap();
+    // Borrowed zero-copy spec: the diagonals are never cloned.
+    let spec = SolveSpec::borrowed_f64(sys.view());
+    let inline = client.solve_now(&spec).unwrap();
+    assert_eq!(
+        inline.x.as_f64().unwrap(),
+        queued.x.as_f64().unwrap(),
+        "inline borrowed solve must be bit-identical to the queued solve"
+    );
+    assert_eq!(inline.batch_size, 1);
+    client.shutdown();
+}
+
+#[test]
+fn backpressure_surfaces_as_a_typed_error() {
+    let client = Client::builder()
+        .native_only()
+        .workers(1)
+        .queue_depth(1)
+        .build()
+        .unwrap();
+    let mut rng = Pcg64::new(7);
+    let mut saw_backpressure = false;
+    let mut handles = Vec::new();
+    for _ in 0..200 {
+        let sys = Arc::new(random_dd_system::<f64>(&mut rng, 50_000, 0.5));
+        match client.submit(SolveSpec::shared_f64(sys)) {
+            Ok(h) => handles.push(h),
+            Err(ApiError::Backpressure { queue_depth }) => {
+                assert_eq!(queue_depth, 1);
+                saw_backpressure = true;
+                break;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(saw_backpressure, "bounded queue never pushed back");
+    for h in handles {
+        let _ = h.wait();
+    }
+    client.shutdown();
+}
+
+#[test]
+fn shared_payload_resubmits_without_cloning_diagonals() {
+    let client = native_client(1);
+    let mut rng = Pcg64::new(8);
+    let sys = Arc::new(random_dd_system::<f64>(&mut rng, 2_000, 0.5));
+    // Submit the same shared system three times: three solves, one
+    // allocation of the diagonals (held by the Arc).
+    let handles: Vec<_> = (0..3)
+        .map(|_| client.submit(SolveSpec::shared_f64(sys.clone())).unwrap())
+        .collect();
+    let want = thomas_solve(&sys).unwrap();
+    for h in handles {
+        let resp = h.wait().unwrap();
+        assert!(max_abs_diff(resp.x.as_f64().unwrap(), &want) < 1e-9);
+    }
+    // The worker drops its share just after sending the reply; give it
+    // a moment rather than racing the send.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while Arc::strong_count(&sys) > 1 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "service never released its payload shares"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    client.shutdown();
+}
+
+#[test]
+fn invalid_and_failed_requests_map_onto_the_taxonomy() {
+    use partisol::solver::TriSystem;
+    let client = native_client(1);
+    // Singular system -> ApiError::Solve, counted in metrics.failed.
+    let n = 64;
+    let singular = TriSystem::<f64> {
+        a: vec![0.0; n],
+        b: vec![0.0; n],
+        c: vec![0.0; n],
+        d: vec![1.0; n],
+    };
+    let err = client.solve(SolveSpec::f64(singular)).unwrap_err();
+    assert!(matches!(err, ApiError::Solve(_)), "{err:?}");
+    let m = client.metrics();
+    assert_eq!(m.failed, 1);
+    client.shutdown();
+}

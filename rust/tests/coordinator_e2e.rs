@@ -1,8 +1,10 @@
-//! End-to-end coordinator tests: routing, batching soundness, PJRT device
-//! thread, fallback behaviour and failure injection.
+//! End-to-end coordinator tests through the typed client API: routing,
+//! batching soundness, PJRT device thread, fallback behaviour and
+//! failure injection.
 
+use partisol::api::{ApiError, Client, SolveSpec};
 use partisol::config::{Config, HeuristicKind};
-use partisol::coordinator::{Backend, Service, SolveOptions, SolveRequest};
+use partisol::coordinator::Backend;
 use partisol::gpu::spec::Dtype;
 use partisol::solver::generator::random_dd_system;
 use partisol::solver::thomas_solve;
@@ -13,40 +15,46 @@ fn artifacts_available() -> bool {
     std::path::Path::new("artifacts/manifest.json").exists()
 }
 
+fn native_client() -> Client {
+    Client::builder().native_only().workers(2).build().unwrap()
+}
+
 #[test]
 fn pjrt_service_solves_and_batches() {
     if !artifacts_available() {
         eprintln!("SKIP: artifacts missing");
         return;
     }
-    let svc = Service::start(Config::default()).unwrap();
+    let client = Client::from_config(Config::default()).unwrap();
     let mut rng = Pcg64::new(20);
     // Same-size burst: the batcher should coalesce them.
-    let mut rxs = Vec::new();
+    let mut handles = Vec::new();
     let mut systems = Vec::new();
-    for i in 0..12u64 {
+    for _ in 0..12 {
         let sys = random_dd_system::<f64>(&mut rng, 5000, 0.5);
         systems.push(sys.clone());
-        rxs.push(svc.submit(SolveRequest::new(i, sys)).unwrap());
+        handles.push(client.submit(SolveSpec::f64(sys)).unwrap());
     }
-    for (rx, sys) in rxs.into_iter().zip(&systems) {
-        let resp = rx.recv().unwrap().unwrap();
+    for (handle, sys) in handles.into_iter().zip(&systems) {
+        let resp = handle.wait().unwrap();
         assert_eq!(resp.backend, Backend::Pjrt);
         assert!(resp.residual.unwrap() < 1e-9);
         // Batched result equals the standalone solve.
         let want = thomas_solve(sys).unwrap();
         let diff = resp
             .x
+            .as_f64()
+            .unwrap()
             .iter()
             .zip(&want)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f64, f64::max);
         assert!(diff < 1e-9, "batched vs standalone diff {diff}");
     }
-    let m = svc.metrics();
+    let m = client.metrics();
     assert!(m.batches < 12, "expected coalescing, got {} batches", m.batches);
     assert_eq!(m.pjrt_solves, 12);
-    svc.shutdown();
+    client.shutdown();
 }
 
 #[test]
@@ -55,71 +63,51 @@ fn router_respects_m_override_and_heuristics() {
         eprintln!("SKIP: artifacts missing");
         return;
     }
-    let svc = Service::start(Config::default()).unwrap();
+    let client = Client::from_config(Config::default()).unwrap();
     let mut rng = Pcg64::new(21);
     let sys = random_dd_system::<f64>(&mut rng, 30_000, 0.5);
     // Heuristic: N=3e4 -> m=16.
-    let r1 = svc.solve(SolveRequest::new(1, sys.clone())).unwrap();
+    let r1 = client.solve(SolveSpec::f64(sys.clone())).unwrap();
     assert_eq!(r1.m, 16);
     // Override to 64.
-    let req = SolveRequest {
-        id: 2,
-        sys: sys.clone(),
-        opts: SolveOptions {
-            m_override: Some(64),
-            ..Default::default()
-        },
-    };
-    assert_eq!(svc.solve(req).unwrap().m, 64);
-    svc.shutdown();
+    let r2 = client.solve(SolveSpec::f64(sys.clone()).with_m(64)).unwrap();
+    assert_eq!(r2.m, 64);
+    client.shutdown();
 }
 
 #[test]
 fn knn_heuristic_config() {
     let cfg = Config {
         heuristic: HeuristicKind::Knn,
-        artifacts_dir: "/nonexistent".into(),
+        probe_pjrt: false,
         ..Config::default()
     };
-    let svc = Service::start(cfg).unwrap();
+    let client = Client::from_config(cfg).unwrap();
     let mut rng = Pcg64::new(22);
     let sys = random_dd_system::<f64>(&mut rng, 1_000_000, 0.5);
-    let resp = svc.solve(SolveRequest::new(1, sys)).unwrap();
+    let resp = client.solve(SolveSpec::f64(sys)).unwrap();
     assert_eq!(resp.m, 32, "kNN on corrected Table 1 data: m(1e6) = 32");
-    svc.shutdown();
+    client.shutdown();
 }
 
 #[test]
 fn f32_requests_route_on_fp32_trend() {
-    if !artifacts_available() {
-        eprintln!("SKIP: artifacts missing");
-        return;
-    }
-    let svc = Service::start(Config::default()).unwrap();
+    // Native path: an f32 payload plans on the FP32 trend and executes
+    // the f32 kernels end-to-end.
+    let client = native_client();
     let mut rng = Pcg64::new(23);
-    let sys = random_dd_system::<f64>(&mut rng, 100_000, 1.0);
-    let req = SolveRequest {
-        id: 1,
-        sys,
-        opts: SolveOptions {
-            dtype: Dtype::F32,
-            ..Default::default()
-        },
-    };
-    let resp = svc.solve(req).unwrap();
+    let sys = random_dd_system::<f32>(&mut rng, 100_000, 1.0);
+    let resp = client.solve(SolveSpec::f32(sys)).unwrap();
     // FP32 trend at 1e5 -> m=32 (same as FP64 here); residual at f32 tol.
     assert_eq!(resp.m, 32);
+    assert_eq!(resp.x.dtype(), Dtype::F32, "no f64 widening");
     assert!(resp.residual.unwrap() < 1e-2);
-    svc.shutdown();
+    client.shutdown();
 }
 
 #[test]
-fn singular_system_reports_error_not_hang() {
-    let svc = Service::start(Config {
-        artifacts_dir: "/nonexistent".into(),
-        ..Config::default()
-    })
-    .unwrap();
+fn singular_system_reports_structured_error_not_hang() {
+    let client = native_client();
     let n = 100;
     let sys = TriSystem::<f64> {
         a: vec![0.0; n],
@@ -127,23 +115,20 @@ fn singular_system_reports_error_not_hang() {
         c: vec![0.0; n],
         d: vec![1.0; n],
     };
-    let err = svc.solve(SolveRequest::new(1, sys)).unwrap_err();
+    let err = client.solve(SolveSpec::f64(sys)).unwrap_err();
+    assert!(matches!(err, ApiError::Solve(_)), "{err:?}");
     assert!(err.to_string().contains("singular"), "{err}");
-    let m = svc.metrics();
-    assert_eq!(m.failed, 1);
-    svc.shutdown();
+    let m = client.metrics();
+    assert_eq!(m.failed, 1, "the failure is counted, not dropped");
+    client.shutdown();
 }
 
 #[test]
 fn simulated_gpu_estimate_present() {
-    let svc = Service::start(Config {
-        artifacts_dir: "/nonexistent".into(),
-        ..Config::default()
-    })
-    .unwrap();
+    let client = native_client();
     let mut rng = Pcg64::new(24);
     let sys = random_dd_system::<f64>(&mut rng, 50_000, 0.5);
-    let resp = svc.solve(SolveRequest::new(1, sys)).unwrap();
+    let resp = client.solve(SolveSpec::f64(sys)).unwrap();
     // The paper-facing estimate: a 5e4 solve costs ~0.7-0.9 ms on the
     // simulated 2080 Ti (Table 1 row: 0.785 ms).
     assert!(
@@ -151,5 +136,5 @@ fn simulated_gpu_estimate_present() {
         "simulated {} µs",
         resp.simulated_gpu_us
     );
-    svc.shutdown();
+    client.shutdown();
 }
