@@ -14,9 +14,20 @@
 //! and compares one-at-a-time submission against `submit_many` (the
 //! whole group rides the batcher as fused same-shape executions),
 //! reporting the throughput ratio and the observed batch sizes.
+//!
+//! `--online-tune` starts the service with a **deliberately skewed**
+//! initial heuristic (fixed m = 4) and online tuning enabled: workers
+//! record per-solve telemetry, a fraction of traffic explores
+//! neighboring m values, and the trainer refits + hot-swaps the kNN
+//! model between rounds — the served m should walk toward the
+//! empirically best sub-system size, epoch by epoch.
 
 use partisol::api::{Client, SolveSpec};
+use partisol::config::HeuristicKind;
+use partisol::data::paper::M_CANDIDATES;
+use partisol::plan::SolveOptions;
 use partisol::solver::generator::random_dd_system;
+use partisol::tuner::online::OnlineTuneConfig;
 use partisol::util::stats::{mean, percentile};
 use partisol::util::Pcg64;
 use std::sync::Arc;
@@ -180,8 +191,154 @@ fn batched_workload(client: &Client) -> Result<(), Box<dyn std::error::Error>> {
     Ok(())
 }
 
+/// Online-tuning mode: a skewed initial heuristic plus telemetry-driven
+/// retraining. Served m must converge toward the empirically best m and
+/// the retrain-epoch counter must advance.
+fn online_tune_workload(client: &Client) -> Result<(), Box<dyn std::error::Error>> {
+    let sizes = [30_000usize, 120_000];
+    let rounds = 8usize;
+    let per_size = 32usize;
+    let mut rng = Pcg64::new(2026);
+
+    println!("online-tune mode: initial heuristic deliberately skewed to m = 4;");
+    println!("telemetry-driven retraining walks the served m toward the empirical");
+    println!("optimum, one hot-swapped epoch at a time.\n");
+
+    let predictions = |c: &Client| -> Vec<usize> {
+        sizes
+            .iter()
+            .map(|&n| c.plan(n, &SolveOptions::default()).m())
+            .collect()
+    };
+    let initial = predictions(client);
+    println!("round  0: predicted m = {initial:?} (epoch 0)");
+
+    for round in 1..=rounds {
+        let t0 = Instant::now();
+        let mut handles = Vec::with_capacity(sizes.len() * per_size);
+        for &n in &sizes {
+            for _ in 0..per_size {
+                let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+                handles.push(client.submit_blocking(SolveSpec::f64(sys).with_residual(false))?);
+            }
+        }
+        for h in handles {
+            h.wait()?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        // One deterministic retrain boundary per round (the service's
+        // background trainer also runs on its own 200 ms interval).
+        client.online_tuner().expect("online tuning enabled").retrain_now();
+        let m = client.metrics();
+        println!(
+            "round {round:>2}: predicted m = {:?} (epoch {}, {:.0} req/s)",
+            predictions(client),
+            m.model_epoch,
+            (sizes.len() * per_size) as f64 / wall
+        );
+    }
+
+    // Ground truth: time each candidate m directly on this machine.
+    println!("\npredicted-vs-empirical drift:");
+    let grid = [4usize, 8, 16, 32, 64];
+    let grid_index = |m: usize| {
+        M_CANDIDATES
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &g)| g.abs_diff(m))
+            .unwrap()
+            .0
+    };
+    let final_m = predictions(client);
+    let mut improved = false;
+    for (i, &n) in sizes.iter().enumerate() {
+        let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+        // Time every grid candidate plus the model's final prediction
+        // (it may sit between grid points, e.g. 20 or 25).
+        let mut candidates = grid.to_vec();
+        if !candidates.contains(&final_m[i]) {
+            candidates.push(final_m[i]);
+        }
+        let mut best = (grid[0], f64::INFINITY);
+        let t_at = |m: usize| -> Result<f64, Box<dyn std::error::Error>> {
+            let spec = SolveSpec::borrowed_f64(sys.view()).with_m(m).with_residual(false);
+            let mut t = f64::INFINITY;
+            for _ in 0..3 {
+                t = t.min(client.solve_now(&spec)?.exec_us);
+            }
+            Ok(t)
+        };
+        let mut t_initial = f64::INFINITY;
+        let mut t_final = f64::INFINITY;
+        for &m in &candidates {
+            let t = t_at(m)?;
+            if t < best.1 {
+                best = (m, t);
+            }
+            if m == initial[i] {
+                t_initial = t;
+            }
+            if m == final_m[i] {
+                t_final = t;
+            }
+        }
+        let before = grid_index(initial[i]).abs_diff(grid_index(best.0));
+        let after = grid_index(final_m[i]).abs_diff(grid_index(best.0));
+        println!(
+            "  N = {n:>7}: initial m = {:>2} ({:.3} ms) -> served m = {:>2} ({:.3} ms) | \
+             empirical best = {:>2} ({:.3} ms) | drift {before} -> {after} grid steps",
+            initial[i],
+            t_initial / 1e3,
+            final_m[i],
+            t_final / 1e3,
+            best.0,
+            best.1 / 1e3
+        );
+        // Noise-robust convergence check: the m the model converged to
+        // must measure decisively faster than the skewed starting m
+        // (m = 4's sequential interface is ~2x+ slower at these sizes,
+        // far outside timing noise on a shared runner).
+        if t_final < 0.9 * t_initial {
+            improved = true;
+        }
+    }
+
+    let m = client.metrics();
+    println!("\nservice       : {} completed | {} batches", m.completed, m.batches);
+    println!(
+        "online tuning : epoch {} | {} retrains | {} samples recorded / {} dropped | {} explored",
+        m.model_epoch, m.retrains, m.telemetry_recorded, m.telemetry_dropped, m.explored_solves
+    );
+    assert!(m.model_epoch > 0, "online tuning never produced a retrain epoch");
+    assert!(
+        improved,
+        "the converged m did not measure decisively faster than the skewed initial m for any size"
+    );
+    Ok(())
+}
+
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let batched = std::env::args().any(|a| a == "--batched");
+    let online = std::env::args().any(|a| a == "--online-tune");
+    if online {
+        // Skewed start + online tuning on: the heuristic must recover.
+        let client = Client::builder()
+            .native_only()
+            .workers(2)
+            .heuristic(HeuristicKind::Fixed(4))
+            .online_tune(OnlineTuneConfig {
+                enabled: true,
+                window: 1 << 14,
+                min_samples: 3,
+                retrain_ms: 200,
+                explore: 0.5,
+            })
+            .build()?;
+        online_tune_workload(&client)?;
+        client.shutdown();
+        println!("serve_workload OK");
+        return Ok(());
+    }
     let client = Client::builder().workers(2).build()?;
     if batched {
         batched_workload(&client)?;

@@ -146,6 +146,29 @@ fn bench_plan_cache(loop_t: Duration, min_iters: usize) -> (f64, f64, f64) {
     (t_plan * 1e9, t_miss * 1e9, t_hit * 1e9)
 }
 
+/// Telemetry recording on the solve hot path (online tuning): one
+/// `fetch_add` plus atomic stores — the worker must never block or
+/// allocate, so this should sit in the low tens of nanoseconds.
+fn bench_telemetry_record(loop_t: Duration, min_iters: usize) -> f64 {
+    use partisol::plan::Backend;
+    use partisol::tuner::online::{TelemetrySample, TelemetryStore};
+    let store = TelemetryStore::new(1 << 14);
+    let mut latency = 0u64;
+    let samples = bench_loop(loop_t, min_iters, || {
+        latency = latency.wrapping_add(17);
+        store.record(std::hint::black_box(TelemetrySample {
+            n: 50_000,
+            m: 32,
+            dtype: Dtype::F64,
+            backend: Backend::Native,
+            latency_ns: latency,
+        }));
+    });
+    let t = median(&samples);
+    println!("telemetry record:       {:>10.0} ns", t * 1e9);
+    t * 1e9
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let (loop_t, min_iters) = if smoke {
@@ -156,6 +179,7 @@ fn main() {
     let (plan_ns, miss_ns, hit_ns) = bench_plan_cache(loop_t, min_iters);
     let dispatch = bench_pool_dispatch(loop_t, if smoke { 3 } else { 200 });
     let (client_ns, direct_ns) = bench_client_overhead(loop_t, if smoke { 3 } else { 200 });
+    let telemetry_ns = bench_telemetry_record(loop_t, min_iters);
 
     let report = obj(vec![
         ("bench", Json::Str("runtime_hotpath".to_string())),
@@ -165,6 +189,7 @@ fn main() {
         ("plan_cache_hit_ns", Json::Num(hit_ns)),
         ("client_solve_now_ns", Json::Num(client_ns)),
         ("direct_solver_ns", Json::Num(direct_ns)),
+        ("telemetry_record_ns", Json::Num(telemetry_ns)),
         (
             "pool_dispatch_ns",
             obj(dispatch

@@ -174,6 +174,14 @@ impl ClientBuilder {
         self
     }
 
+    /// Online tuning knobs (telemetry-driven kNN retraining hot-swapped
+    /// into the planner; see [`crate::tuner::online`]). Pass a config
+    /// with `enabled: true` to turn the subsystem on.
+    pub fn online_tune(mut self, online: crate::tuner::online::OnlineTuneConfig) -> Self {
+        self.cfg.online = online;
+        self
+    }
+
     pub fn build(self) -> Result<Client, ApiError> {
         if self.cfg.workers == 0
             || self.cfg.queue_depth == 0
@@ -315,6 +323,12 @@ impl Client {
     /// Human-readable rendering of a plan.
     pub fn explain(&self, plan: &SolvePlan) -> String {
         self.planner().explain(plan)
+    }
+
+    /// The online tuning subsystem (epoch/telemetry introspection,
+    /// forced retrains), when enabled on this client's service.
+    pub fn online_tuner(&self) -> Option<&Arc<crate::tuner::online::OnlineTuner>> {
+        self.svc.online_tuner()
     }
 
     /// Escape hatch to the underlying service (deprecated surface).

@@ -21,11 +21,12 @@ OPTIONS:
     --pool-size <p>     exec-pool worker threads shared by all solves
                         (default: all cores; [exec] pool_size in config)
     --config <path>     TOML config file (flags override it)
+    --online-tune       enable online tuning ([online] enabled = true)
     --seed <s>          workload seed (default 7)
 ";
 
 pub fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["help"])?;
+    let args = Args::parse(argv, &["help", "online-tune"])?;
     if args.has("help") {
         print!("{HELP}");
         return Ok(());
@@ -41,6 +42,9 @@ pub fn run(argv: &[String]) -> Result<()> {
     };
     cfg.workers = args.get_usize("workers", cfg.workers)?;
     cfg.pool_size = args.get_usize("pool-size", cfg.pool_size)?;
+    if args.has("online-tune") {
+        cfg.online.enabled = true;
+    }
     if cfg.workers == 0 || cfg.pool_size == 0 {
         return Err(crate::Error::Cli(
             "--workers and --pool-size must be positive".into(),
@@ -102,6 +106,16 @@ pub fn run(argv: &[String]) -> Result<()> {
         "workspaces         : {} created / {} reused",
         m.workspaces_created, m.workspaces_reused
     );
+    if client.online_tuner().is_some() {
+        println!(
+            "online tuning      : epoch {} | {} retrains | {} samples recorded / {} dropped | {} explored",
+            m.model_epoch,
+            m.retrains,
+            m.telemetry_recorded,
+            m.telemetry_dropped,
+            m.explored_solves
+        );
+    }
     client.shutdown();
     Ok(())
 }

@@ -14,6 +14,10 @@ use crate::util::table::{fmt_n, Table};
 const HELP: &str = "\
 partisol tune — empirical sweep -> correction -> heuristics
 
+USAGE:
+    partisol tune [OPTIONS]          offline §2 pipeline (simulated sweep)
+    partisol tune online [OPTIONS]   online-tuning replay (see --help there)
+
 OPTIONS:
     --card <name>    (default rtx2080ti)
     --dtype <d>      f64 | f32 (default f64)
@@ -21,8 +25,27 @@ OPTIONS:
     --clean          noise-free sweep (no observed/corrected distinction)
 ";
 
+const HELP_ONLINE: &str = "\
+partisol tune online — replay a workload against the online tuning
+subsystem (telemetry ring -> trainer -> kNN hot-swap) and report the
+predicted-vs-empirical optimum-m drift
+
+OPTIONS:
+    --rounds <r>       replay rounds, one forced retrain each (default 6)
+    --requests <q>     solves per size per round (default 32)
+    --sizes <list>     comma-separated SLAE sizes (default 2e4,1.5e5)
+    --initial <h>      initial heuristic: paper | knn | fixed:<m>
+                       (default fixed:4 — deliberately skewed)
+    --explore <f>      exploration fraction in [0, 1) (default 0.5)
+    --min-samples <s>  samples per (size, m) cell before it counts (default 3)
+    --seed <s>         workload seed (default 41)
+";
+
 pub fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &["help", "clean"])?;
+    if args.positional().first().map(String::as_str) == Some("online") {
+        return run_online(&args);
+    }
     if args.has("help") {
         print!("{HELP}");
         return Ok(());
@@ -104,5 +127,148 @@ pub fn run(argv: &[String]) -> Result<()> {
             plan.simulated_gpu_us / 1e3
         );
     }
+    Ok(())
+}
+
+/// `partisol tune online` — drive a live service with online tuning
+/// enabled, forcing one retrain per replay round, then compare the
+/// served (model-predicted) m against a direct empirical mini-sweep.
+fn run_online(args: &Args) -> Result<()> {
+    use crate::api::{Client, SolveSpec};
+    use crate::config::HeuristicKind;
+    use crate::data::paper::M_CANDIDATES;
+    use crate::solver::generator::random_dd_system;
+    use crate::tuner::online::OnlineTuneConfig;
+    use crate::util::Pcg64;
+
+    if args.has("help") {
+        print!("{HELP_ONLINE}");
+        return Ok(());
+    }
+    let rounds = args.get_usize("rounds", 6)?;
+    let per_size = args.get_usize("requests", 32)?;
+    let seed = args.get_u64("seed", 41)?;
+    let explore = args.get_f64("explore", 0.5)?;
+    let min_samples = args.get_usize("min-samples", 3)?;
+    let sizes: Vec<usize> = match args.get("sizes") {
+        None => vec![20_000, 150_000],
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                crate::cli::args::parse_human_int(s.trim())
+                    .ok_or_else(|| crate::Error::Cli(format!("--sizes: cannot parse `{s}`")))
+            })
+            .collect::<Result<_>>()?,
+    };
+    let initial = HeuristicKind::parse(args.get("initial").unwrap_or("fixed:4"))?;
+    let online = OnlineTuneConfig {
+        enabled: true,
+        window: 1 << 14,
+        min_samples,
+        retrain_ms: 200,
+        explore,
+    };
+    online.validate()?;
+
+    let client = Client::builder()
+        .native_only()
+        .workers(2)
+        .heuristic(initial)
+        .online_tune(online)
+        .build()
+        .map_err(crate::Error::from)?;
+    let predictions = |client: &Client| -> Vec<usize> {
+        sizes
+            .iter()
+            .map(|&n| client.plan(n, &SolveOptions::default()).m())
+            .collect()
+    };
+
+    let mut rng = Pcg64::new(seed);
+    let initial_m = predictions(&client);
+    println!(
+        "replaying {rounds} rounds x {per_size} solves/size over sizes {sizes:?} \
+         (initial heuristic: {initial:?}, explore {explore})"
+    );
+    println!("round  0: predicted m per size = {initial_m:?} (epoch 0)");
+    for round in 1..=rounds {
+        let mut handles = Vec::with_capacity(sizes.len() * per_size);
+        for &n in &sizes {
+            for _ in 0..per_size {
+                let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+                handles.push(
+                    client
+                        .submit_blocking(SolveSpec::f64(sys).with_residual(false))
+                        .map_err(crate::Error::from)?,
+                );
+            }
+        }
+        for handle in handles {
+            let _ = handle.wait();
+        }
+        // One deterministic retrain boundary per round (the service's
+        // background trainer also runs on its own interval).
+        client.online_tuner().expect("online tuning enabled").retrain_now();
+        println!(
+            "round {round:>2}: predicted m per size = {:?} (epoch {})",
+            predictions(&client),
+            client.metrics().model_epoch
+        );
+    }
+
+    // Ground truth: time each candidate m directly on this machine.
+    println!("\npredicted-vs-empirical drift:");
+    let grid: Vec<usize> = M_CANDIDATES.iter().copied().filter(|&m| m <= 64).collect();
+    let grid_index = |m: usize| {
+        grid.iter()
+            .enumerate()
+            .min_by_key(|(_, &g)| g.abs_diff(m))
+            .unwrap()
+            .0
+    };
+    let final_m = predictions(&client);
+    for (i, &n) in sizes.iter().enumerate() {
+        let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+        let mut best = (0usize, f64::INFINITY);
+        for &m in &grid {
+            if n.div_ceil(m) < 3 {
+                continue;
+            }
+            let spec = SolveSpec::borrowed_f64(sys.view()).with_m(m).with_residual(false);
+            let mut t = f64::INFINITY;
+            for _ in 0..3 {
+                t = t.min(client.solve_now(&spec).map_err(crate::Error::from)?.exec_us);
+            }
+            if t < best.1 {
+                best = (m, t);
+            }
+        }
+        if best.1.is_infinite() {
+            // Every candidate was skipped (ceil(n/m) < 3 for all of
+            // them): the size is too small for partitioning at all.
+            println!(
+                "  N = {:>9}: too small for any partition candidate (Thomas territory) — no drift to report",
+                fmt_n(n)
+            );
+            continue;
+        }
+        println!(
+            "  N = {:>9}: initial m {:>3} -> served m {:>3} | empirical best m {:>3} \
+             ({:.3} ms) | drift {} -> {} grid steps",
+            fmt_n(n),
+            initial_m[i],
+            final_m[i],
+            best.0,
+            best.1 / 1e3,
+            grid_index(initial_m[i]).abs_diff(grid_index(best.0)),
+            grid_index(final_m[i]).abs_diff(grid_index(best.0)),
+        );
+    }
+    let m = client.metrics();
+    println!(
+        "\nonline tuning: epoch {} | {} retrains | {} samples recorded / {} dropped | {} explored solves",
+        m.model_epoch, m.retrains, m.telemetry_recorded, m.telemetry_dropped, m.explored_solves
+    );
+    client.shutdown();
     Ok(())
 }

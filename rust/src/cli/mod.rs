@@ -16,6 +16,7 @@ USAGE:
 COMMANDS:
     solve       solve a generated SLAE end-to-end (native or PJRT runtime)
     tune        run the empirical sweep -> correction -> heuristic pipeline
+                (`tune online`: telemetry-driven retraining replay + drift report)
     predict     predict optimum m / recursion plan for an SLAE size
     simulate    print the simulated GPU timing landscape for one N
     calibrate   re-fit the GPU-simulator constants against the paper tables

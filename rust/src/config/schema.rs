@@ -4,6 +4,7 @@
 use super::parser::{parse, TomlTable};
 use crate::error::{Error, Result};
 use crate::gpu::spec::{Dtype, GpuCard};
+use crate::tuner::online::OnlineTuneConfig;
 use std::path::Path;
 
 /// Which optimum-m heuristic the router uses.
@@ -15,6 +16,26 @@ pub enum HeuristicKind {
     Knn,
     /// A fixed sub-system size (tuning disabled).
     Fixed(usize),
+}
+
+impl HeuristicKind {
+    /// Parse the `service.heuristic` syntax: `paper | knn | fixed:<m>`
+    /// (also used by the `tune online --initial` CLI flag).
+    pub fn parse(s: &str) -> Result<HeuristicKind> {
+        match s {
+            "paper" => Ok(HeuristicKind::PaperInterval),
+            "knn" => Ok(HeuristicKind::Knn),
+            s if s.starts_with("fixed:") => {
+                let m = s[6..]
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad fixed heuristic spec `{s}`")))?;
+                Ok(HeuristicKind::Fixed(m))
+            }
+            other => Err(Error::Config(format!(
+                "heuristic must be paper|knn|fixed:<m>, got `{other}`"
+            ))),
+        }
+    }
 }
 
 /// Full service configuration.
@@ -48,6 +69,9 @@ pub struct Config {
     /// (`[exec] pool_size`; CLI `--threads` / `--pool-size` flags map
     /// onto the same pool configuration). Defaults to all cores.
     pub pool_size: usize,
+    /// Online tuning: telemetry-driven kNN retraining hot-swapped into
+    /// the planner (`[online]` table; disabled by default).
+    pub online: OnlineTuneConfig,
 }
 
 impl Default for Config {
@@ -65,6 +89,7 @@ impl Default for Config {
             native_fallback: true,
             solver_threads: 0,
             pool_size: crate::exec::default_pool_size(),
+            online: OnlineTuneConfig::default(),
         }
     }
 }
@@ -118,21 +143,9 @@ impl Config {
             };
         }
         if let Some(v) = t.get("service.heuristic") {
-            cfg.heuristic = match v.as_str() {
-                Some("paper") => HeuristicKind::PaperInterval,
-                Some("knn") => HeuristicKind::Knn,
-                Some(s) if s.starts_with("fixed:") => {
-                    let m = s[6..].parse().map_err(|_| {
-                        Error::Config(format!("bad fixed heuristic spec `{s}`"))
-                    })?;
-                    HeuristicKind::Fixed(m)
-                }
-                other => {
-                    return Err(Error::Config(format!(
-                        "service.heuristic must be paper|knn|fixed:<m>, got {other:?}"
-                    )))
-                }
-            };
+            cfg.heuristic = HeuristicKind::parse(v.as_str().ok_or_else(|| {
+                Error::Config("service.heuristic must be a string".into())
+            })?)?;
         }
         if let Some(v) = t.get("service.artifacts_dir") {
             cfg.artifacts_dir = v
@@ -168,11 +181,31 @@ impl Config {
                 }
             };
         }
+        if let Some(v) = t.get("online.enabled") {
+            cfg.online.enabled = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("online.enabled must be a bool".into()))?;
+        }
+        if let Some(v) = t.get("online.window") {
+            cfg.online.window = int_field(v, "online.window")?;
+        }
+        if let Some(v) = t.get("online.min_samples") {
+            cfg.online.min_samples = int_field(v, "online.min_samples")?;
+        }
+        if let Some(v) = t.get("online.retrain_ms") {
+            cfg.online.retrain_ms = int_field(v, "online.retrain_ms")? as u64;
+        }
+        if let Some(v) = t.get("online.explore") {
+            cfg.online.explore = v
+                .as_float()
+                .ok_or_else(|| Error::Config("online.explore must be a number".into()))?;
+        }
         if cfg.workers == 0 || cfg.queue_depth == 0 || cfg.max_batch == 0 || cfg.pool_size == 0 {
             return Err(Error::Config(
                 "workers, queue_depth, max_batch, pool_size must be positive".into(),
             ));
         }
+        cfg.online.validate()?;
         Ok(cfg)
     }
 }
@@ -255,6 +288,26 @@ mod tests {
     fn fixed_heuristic_spec() {
         let c = Config::from_str("[service]\nheuristic = \"fixed:32\"").unwrap();
         assert_eq!(c.heuristic, HeuristicKind::Fixed(32));
+        assert_eq!(HeuristicKind::parse("knn").unwrap(), HeuristicKind::Knn);
+        assert!(HeuristicKind::parse("magic").is_err());
+    }
+
+    #[test]
+    fn online_tuning_knobs_roundtrip() {
+        let c = Config::from_str(
+            "[online]\nenabled = true\nwindow = 4096\nmin_samples = 3\nretrain_ms = 250\nexplore = 0.25",
+        )
+        .unwrap();
+        assert!(c.online.enabled);
+        assert_eq!(c.online.window, 4096);
+        assert_eq!(c.online.min_samples, 3);
+        assert_eq!(c.online.retrain_ms, 250);
+        assert_eq!(c.online.explore, 0.25);
+        assert!(!Config::default().online.enabled, "off by default");
+        assert!(Config::from_str("[online]\nenabled = true\nexplore = 1.5").is_err());
+        assert!(Config::from_str("[online]\nenabled = true\nwindow = 0").is_err());
+        // Knobs without the switch parse fine (inert until enabled).
+        assert!(Config::from_str("[online]\nwindow = 0").is_ok());
     }
 
     #[test]

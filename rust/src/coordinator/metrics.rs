@@ -109,6 +109,17 @@ pub struct MetricsSnapshot {
     /// Solve workspaces created (cold) vs recycled (warm).
     pub workspaces_created: u64,
     pub workspaces_reused: u64,
+    /// Online-tuning model epoch (0 until the first hot-swap; bumping
+    /// it re-keys the plan cache so stale plans are never served).
+    pub model_epoch: u64,
+    /// Retrain passes that installed at least one model.
+    pub retrains: u64,
+    /// Telemetry samples recorded by the execution path.
+    pub telemetry_recorded: u64,
+    /// Telemetry samples lost to ring overflow (drop-oldest).
+    pub telemetry_dropped: u64,
+    /// Solves served at an exploration m instead of the prediction.
+    pub explored_solves: u64,
     pub mean_e2e_us: f64,
     pub p50_e2e_us: f64,
     pub p99_e2e_us: f64,
@@ -146,6 +157,11 @@ impl Metrics {
             pool_chunks: 0,
             workspaces_created: 0,
             workspaces_reused: 0,
+            model_epoch: 0,
+            retrains: 0,
+            telemetry_recorded: 0,
+            telemetry_dropped: 0,
+            explored_solves: 0,
             mean_e2e_us: self.e2e_latency.mean_us(),
             p50_e2e_us: self.e2e_latency.percentile_us(50.0),
             p99_e2e_us: self.e2e_latency.percentile_us(99.0),

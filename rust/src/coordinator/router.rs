@@ -47,6 +47,14 @@ impl Router {
         &self.planner
     }
 
+    /// Attach the online-tuning hot-swap slot to the planner (see
+    /// [`crate::tuner::online`]): model installs then re-key the plan
+    /// cache through the planner fingerprint, so no cached `SolvePlan`
+    /// outlives the model that produced it.
+    pub fn attach_adaptive(&mut self, slot: std::sync::Arc<crate::tuner::online::AdaptiveHeuristic>) {
+        self.planner.attach_adaptive(slot);
+    }
+
     /// Plan one request, through the cache when the request carries no
     /// per-request overrides (overrides are rare and must not alias
     /// heuristic plans). Plans are shared: a cache hit is an `Arc` clone.

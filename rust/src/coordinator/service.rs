@@ -38,6 +38,7 @@ use crate::plan::{
 use crate::runtime::executor::PjrtScalar;
 use crate::runtime::Runtime;
 use crate::solver::residual::max_abs_residual_ref;
+use crate::tuner::online::{OnlineTuner, TelemetrySample};
 use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::atomic::Ordering;
@@ -101,6 +102,9 @@ struct Inner {
     /// One native backend (pool handle + recycled per-dtype workspaces)
     /// shared across requests.
     native: NativeBackend,
+    /// Online tuning subsystem (telemetry ring + trainer state + the
+    /// planner's hot-swap slot), when `cfg.online.enabled`.
+    tuner: Option<Arc<OnlineTuner>>,
 }
 
 /// Handle to a running service.
@@ -134,7 +138,24 @@ impl Service {
             ));
         }
         let has_pjrt = avail.has_pjrt();
-        let router = Router::from_config(&cfg, avail)?;
+        let mut router = Router::from_config(&cfg, avail)?;
+        cfg.online.validate()?;
+        let tuner = if cfg.online.enabled {
+            let tuner = Arc::new(OnlineTuner::new(cfg.online.clone()));
+            // The planner consults the tuner's hot-swap slot; installing
+            // a model re-keys the plan cache through the fingerprint.
+            router.attach_adaptive(tuner.adaptive().clone());
+            crate::log_info!(
+                "[online] window={} min_samples={} retrain_ms={} explore={}",
+                cfg.online.window,
+                cfg.online.min_samples,
+                cfg.online.retrain_ms,
+                cfg.online.explore
+            );
+            Some(tuner)
+        } else {
+            None
+        };
         let pool = Arc::new(WorkerPool::new(cfg.pool_size));
         let exec = ExecCtx::with_pool(pool.clone(), cfg.effective_solver_threads());
         let native = NativeBackend::with_exec(exec);
@@ -146,6 +167,7 @@ impl Service {
             cv: Condvar::new(),
             pool,
             native,
+            tuner,
         });
 
         let mut threads = Vec::new();
@@ -167,6 +189,15 @@ impl Service {
                     .map_err(|e| Error::Service(format!("spawn worker: {e}")))?,
             );
         }
+        if inner.tuner.is_some() {
+            let inner2 = inner.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("partisol-tuner".into())
+                    .spawn(move || tuner_thread(inner2))
+                    .map_err(|e| Error::Service(format!("spawn tuner thread: {e}")))?,
+            );
+        }
         Ok(Service { inner, threads })
     }
 
@@ -181,13 +212,28 @@ impl Service {
         opts: SolveOptions,
     ) -> std::result::Result<mpsc::Receiver<Reply>, Rejected> {
         let inner = &self.inner;
+        let mut opts = opts;
+        let explored = maybe_explore(inner, payload.n(), &mut opts);
+        // On rejection, roll back the exploration claim and hand the
+        // caller's *original* options back (the injected m_override
+        // must not leak into retries, which re-plan — and may
+        // re-explore — on resubmission).
+        let unexplore = |mut opts: SolveOptions| {
+            if explored {
+                if let Some(tuner) = &inner.tuner {
+                    tuner.cancel_explore();
+                }
+                opts.m_override = None;
+            }
+            opts
+        };
         let plan = inner.router.plan(payload.n(), &opts);
         let (tx, rx) = mpsc::channel();
         {
             let mut q = inner.queue.lock().unwrap();
             if q.shutdown {
                 inner.metrics.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
-                return Err((ApiError::ShutDown, payload, opts));
+                return Err((ApiError::ShutDown, payload, unexplore(opts)));
             }
             if q.queued_jobs >= inner.cfg.queue_depth {
                 inner
@@ -199,7 +245,7 @@ impl Service {
                         queue_depth: inner.cfg.queue_depth,
                     },
                     payload,
-                    opts,
+                    unexplore(opts),
                 ));
             }
             let lane_is_pjrt = plan.backend == Backend::Pjrt;
@@ -333,10 +379,11 @@ impl Service {
         opts: &SolveOptions,
     ) -> std::result::Result<SolveResponse, ApiError> {
         let inner = &self.inner;
-        let opts = SolveOptions {
+        let mut opts = SolveOptions {
             dtype: payload.dtype(),
             ..opts.clone()
         };
+        maybe_explore(inner, payload.n(), &mut opts);
         let plan = inner.router.plan(payload.n(), &opts);
         inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
@@ -345,6 +392,7 @@ impl Service {
             SystemPayload::F32(src) => inline_typed::<f32>(inner, &plan, src, &opts)?,
         };
         let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+        record_telemetry(inner, payload.n(), plan.m(), payload.dtype(), backend, exec_us, 1);
         inner.metrics.record_backend(backend, 1);
         inner.metrics.queue_latency.record(0.0);
         inner.metrics.exec_latency.record(exec_us);
@@ -402,11 +450,24 @@ impl Service {
         let ws = self.inner.native.workspace_stats();
         snap.workspaces_created = ws.created;
         snap.workspaces_reused = ws.reused;
+        if let Some(tuner) = &self.inner.tuner {
+            let s = tuner.stats();
+            snap.model_epoch = s.epoch;
+            snap.retrains = s.retrains;
+            snap.telemetry_recorded = s.recorded;
+            snap.telemetry_dropped = s.dropped;
+            snap.explored_solves = s.explored;
+        }
         snap
     }
 
     pub fn router(&self) -> &Router {
         &self.inner.router
+    }
+
+    /// The online tuning subsystem, when `cfg.online.enabled`.
+    pub fn online_tuner(&self) -> Option<&Arc<OnlineTuner>> {
+        self.inner.tuner.as_ref()
     }
 
     /// Stop accepting work, finish the queue, join the threads.
@@ -453,6 +514,92 @@ fn inline_typed<T: PayloadScalar + NativeScalar>(
         .compute_residual
         .then(|| max_abs_residual_ref(src.view(), &out.x));
     Ok((T::into_solution(out.x), out.backend, residual))
+}
+
+// ---------------------------------------------------------------------------
+// Online tuning hooks.
+// ---------------------------------------------------------------------------
+
+/// Serve a fraction of eligible requests at a grid neighbor of the
+/// predicted m: the telemetry this produces is the comparative evidence
+/// the trainer needs to move the model. Requests carrying explicit
+/// overrides, Thomas-planned (tiny) systems and pre-grouped batches are
+/// never explored. Returns whether an exploration override was injected
+/// (so rejection paths can roll the claim back).
+fn maybe_explore(inner: &Inner, n: usize, opts: &mut SolveOptions) -> bool {
+    let Some(tuner) = &inner.tuner else {
+        return false;
+    };
+    if opts.m_override.is_some() || opts.backend_override.is_some() {
+        return false;
+    }
+    // Claim the tick before planning so non-exploring submissions skip
+    // the extra plan-cache probe entirely.
+    let Some(slot) = tuner.explore_slot() else {
+        return false;
+    };
+    let base = inner.router.plan(n, opts);
+    if base.backend == Backend::Thomas {
+        return false;
+    }
+    match tuner.neighbor_m(n, base.m(), slot) {
+        Some(m) => {
+            opts.m_override = Some(m);
+            true
+        }
+        None => false,
+    }
+}
+
+/// Record one executed solve into the telemetry ring (atomics only —
+/// the hot path never blocks or allocates here). Batch members report
+/// the fused execution time split evenly across the group.
+fn record_telemetry(
+    inner: &Inner,
+    n: usize,
+    m: usize,
+    dtype: Dtype,
+    backend: Backend,
+    exec_us: f64,
+    batch_size: usize,
+) {
+    if let Some(tuner) = &inner.tuner {
+        tuner.record_solve(
+            n,
+            m,
+            dtype,
+            backend,
+            (exec_us * 1e3 / batch_size.max(1) as f64) as u64,
+        );
+    }
+}
+
+/// Background trainer: every `cfg.online.retrain_ms` drain the
+/// telemetry ring, refit and hot-swap the kNN models. Wakes promptly on
+/// shutdown via the service condvar.
+fn tuner_thread(inner: Arc<Inner>) {
+    let Some(tuner) = inner.tuner.clone() else { return };
+    let interval = std::time::Duration::from_millis(inner.cfg.online.retrain_ms.max(1));
+    let mut scratch: Vec<TelemetrySample> = Vec::with_capacity(tuner.config().window);
+    loop {
+        let next = Instant::now() + interval;
+        let mut q = inner.queue.lock().unwrap();
+        loop {
+            if q.shutdown {
+                return;
+            }
+            let now = Instant::now();
+            if now >= next {
+                break;
+            }
+            let (guard, _) = inner.cv.wait_timeout(q, next - now).unwrap();
+            q = guard;
+        }
+        drop(q);
+        if tuner.retrain(&mut scratch) {
+            crate::log_info!("[online] retrained: epoch {}", tuner.stats().epoch);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -739,6 +886,15 @@ fn respond_ok_typed<T: PayloadScalar>(
     exec_us: f64,
     batch_size: usize,
 ) {
+    record_telemetry(
+        inner,
+        job.payload.n(),
+        job.plan.m(),
+        job.payload.dtype(),
+        backend,
+        exec_us,
+        batch_size,
+    );
     let queue_us = (job.enqueued.elapsed().as_secs_f64() * 1e6 - exec_us).max(0.0);
     let residual = if job.opts.compute_residual {
         T::source(&job.payload).map(|src| max_abs_residual_ref(src.view(), &x))
@@ -1034,6 +1190,34 @@ mod tests {
             "every native solve checks exactly one workspace out"
         );
         assert!(m.workspaces_created >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn online_tuning_records_telemetry_and_exports_counters() {
+        let cfg = Config {
+            probe_pjrt: false,
+            workers: 2,
+            online: crate::tuner::online::OnlineTuneConfig {
+                enabled: true,
+                explore: 0.0,
+                ..Default::default()
+            },
+            ..Config::default()
+        };
+        let svc = Service::start(cfg).unwrap();
+        let mut rng = Pcg64::new(77);
+        for i in 0..6 {
+            let sys = random_dd_system(&mut rng, 5_000, 0.5);
+            let _ = svc
+                .solve_payload(i, payload64(sys), SolveOptions::default())
+                .unwrap();
+        }
+        let m = svc.metrics();
+        assert_eq!(m.telemetry_recorded, 6, "every solve records one sample");
+        assert_eq!(m.model_epoch, 0, "no comparative evidence yet");
+        assert_eq!(m.explored_solves, 0, "exploration disabled");
+        assert!(svc.online_tuner().is_some());
         svc.shutdown();
     }
 

@@ -138,6 +138,69 @@ mod tests {
     }
 
     #[test]
+    fn k_equal_to_n_train_votes_over_the_whole_set() {
+        // The legal upper edge of k: every training point votes, so the
+        // prediction is the (distance-tie-broken) global mode wherever
+        // the query lands.
+        let knn = Knn::fit(&[0.0, 1.0, 2.0, 3.0, 4.0], &[7, 7, 7, 9, 9], 5).unwrap();
+        assert_eq!(knn.k(), knn.n_train());
+        assert_eq!(knn.predict(-100.0), 7);
+        assert_eq!(knn.predict(100.0), 7);
+        // One past the edge is a fit-time error, not a silent clamp.
+        assert!(Knn::fit(&[0.0, 1.0], &[1, 2], 3).is_err());
+    }
+
+    #[test]
+    fn exact_distance_ties_break_deterministically() {
+        // x = 1 is exactly equidistant from both training points. k=1:
+        // the neighbor sort falls back to the smaller label; k=2: the
+        // one-vote-each mode tie has equal distance sums, so the mode
+        // tie-break also lands on the smaller label.
+        let knn = Knn::fit(&[0.0, 2.0], &[9, 5], 1).unwrap();
+        assert_eq!(knn.predict(1.0), 5);
+        let knn = Knn::fit(&[0.0, 2.0], &[9, 5], 2).unwrap();
+        assert_eq!(knn.predict(1.0), 5);
+        // Same inputs, same answer, every time (no hidden state).
+        let again = Knn::fit(&[0.0, 2.0], &[9, 5], 1).unwrap();
+        assert_eq!(again.predict(1.0), 5);
+    }
+
+    #[test]
+    fn leave_one_out_on_paper_corrected_data_tracks_fig2_model() {
+        // Harsher than the paper's 3:1 split (every boundary point is
+        // tested), but the 1-NN model must still sit far above the null
+        // baseline and within tolerance of the Fig-2 corrected-data
+        // accuracy of 1.0 — errors can only come from the handful of
+        // interval-boundary points.
+        let rows = crate::data::paper::table1_rows();
+        let xs: Vec<f64> = rows.iter().map(|r| (r.n as f64).log10()).collect();
+        let ys: Vec<usize> = rows.iter().map(|r| r.m_corrected).collect();
+        let mut hits = 0usize;
+        for i in 0..xs.len() {
+            let (mut txs, mut tys) = (xs.clone(), ys.clone());
+            txs.remove(i);
+            tys.remove(i);
+            let knn = Knn::fit(&txs, &tys, 1).unwrap();
+            if knn.predict(xs[i]) == ys[i] {
+                hits += 1;
+            }
+        }
+        let loo = hits as f64 / xs.len() as f64;
+        let null = {
+            let mut counts = std::collections::BTreeMap::new();
+            for &y in &ys {
+                *counts.entry(y).or_insert(0usize) += 1;
+            }
+            *counts.values().max().unwrap() as f64 / ys.len() as f64
+        };
+        assert!(loo > null, "LOO accuracy {loo:.3} must beat null {null:.3}");
+        assert!(
+            crate::data::paper::headline::KNN_ACC_CORRECTED - loo < 0.25,
+            "LOO accuracy {loo:.3} too far below the Fig-2 corrected model"
+        );
+    }
+
+    #[test]
     fn log_scaled_feature_matches_paper_intuition() {
         // With log10(N) features, the nearest SLAE size in decade terms
         // provides the prediction — "assign the sub-system size of the

@@ -12,9 +12,11 @@ use crate::gpu::spec::{Dtype, GpuCard};
 use crate::recursion::planner::plan_with_heuristic;
 use crate::runtime::artifact::{Manifest, StageKind};
 use crate::tuner::heuristic::{IntervalHeuristic, KnnHeuristic, MHeuristic};
+use crate::tuner::online::AdaptiveHeuristic;
 use crate::tuner::streams::optimum_streams;
 use crate::util::table::fmt_n;
 use std::hash::{Hash, Hasher};
+use std::sync::Arc;
 
 /// One PJRT-executable sub-system size and its artifact buckets.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -113,6 +115,10 @@ pub struct Planner {
     avail: BackendAvailability,
     sim: GpuSimulator,
     fingerprint: u64,
+    /// Online-tuning hot-swap slot: when attached and holding a model
+    /// for the request dtype, that model overrides the static heuristic
+    /// and its epoch is mixed into [`Planner::fingerprint`].
+    adaptive: Option<Arc<AdaptiveHeuristic>>,
 }
 
 impl Planner {
@@ -152,7 +158,23 @@ impl Planner {
             avail,
             sim: GpuSimulator::new(card),
             fingerprint: hasher.finish(),
+            adaptive: None,
         }
+    }
+
+    /// Attach the online-tuning hot-swap slot (see
+    /// [`crate::tuner::online`]). While the slot holds no model the
+    /// planner behaves exactly as before; once the trainer installs
+    /// one, it overrides the static heuristic and every epoch bump
+    /// changes [`Planner::fingerprint`], invalidating all `(n, dtype)`
+    /// plan-cache entries the previous model produced.
+    pub fn attach_adaptive(&mut self, slot: Arc<AdaptiveHeuristic>) {
+        self.adaptive = Some(slot);
+    }
+
+    /// The attached online-tuning slot, if any.
+    pub fn adaptive(&self) -> Option<&Arc<AdaptiveHeuristic>> {
+        self.adaptive.as_ref()
     }
 
     /// Build from service configuration (heuristic kind + card).
@@ -206,8 +228,17 @@ impl Planner {
 
     /// Cache-key fingerprint: planners with equal fingerprints produce
     /// interchangeable plans (same availability, card and heuristics).
+    /// With an attached online-tuning slot the model epoch is mixed in,
+    /// so a hot-swap retires every cached plan of the previous model.
     pub fn fingerprint(&self) -> u64 {
-        self.fingerprint
+        let mut fp = self.fingerprint;
+        if let Some(slot) = &self.adaptive {
+            let epoch = slot.epoch();
+            if epoch > 0 {
+                fp ^= epoch.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            }
+        }
+        fp
     }
 
     pub fn simulator(&self) -> &GpuSimulator {
@@ -226,8 +257,28 @@ impl Planner {
     /// Plan one (non-recursive) solve: heuristic m, backend choice,
     /// stream count, shard layout and the paper-facing cost estimate.
     pub fn plan(&self, n: usize, opts: &SolveOptions) -> SolvePlan {
-        let h = self.heuristic(opts.dtype);
-        let m_want = opts.m_override.unwrap_or_else(|| h.opt_m(n));
+        // An explicit override wins outright — don't pay the adaptive
+        // slot's lock/lookup for a prediction the override discards
+        // (every explored solve takes this uncacheable path). Otherwise
+        // the live online-tuned model (when attached and fitted for
+        // this dtype) overrides the static heuristic; its name carries
+        // the model epoch so plans record which model decided them.
+        let (m_want, heuristic) = match opts.m_override {
+            Some(m) => (m, "m-override".to_string()),
+            None => {
+                let live = self
+                    .adaptive
+                    .as_ref()
+                    .and_then(|slot| slot.predict(n, opts.dtype));
+                match live {
+                    Some((m, name)) => (m, name),
+                    None => {
+                        let h = self.heuristic(opts.dtype);
+                        (h.opt_m(n), h.name().to_string())
+                    }
+                }
+            }
+        };
 
         let requested = opts.backend_override.unwrap_or({
             // Tiny systems: partitioning is pure overhead.
@@ -263,11 +314,6 @@ impl Planner {
         let shards = match backend {
             Backend::Pjrt => plan_shards(n, m, self.avail.buckets_for(m)),
             _ => Vec::new(),
-        };
-        let heuristic = if opts.m_override.is_some() {
-            "m-override".to_string()
-        } else {
-            h.name().to_string()
         };
         SolvePlan {
             n,
@@ -480,6 +526,42 @@ mod tests {
         assert_ne!(paper.fingerprint(), fixed32.fingerprint());
         assert_ne!(fixed32.fingerprint(), fixed64.fingerprint());
         assert_ne!(paper.fingerprint(), other_card.fingerprint());
+    }
+
+    #[test]
+    fn adaptive_model_overrides_heuristic_and_refingerprints() {
+        use crate::tuner::heuristic::KnnHeuristic;
+        use crate::tuner::online::AdaptiveHeuristic;
+        let mut p = planner(vec![]);
+        let fp0 = p.fingerprint();
+        let slot = Arc::new(AdaptiveHeuristic::new());
+        p.attach_adaptive(slot.clone());
+        // Empty slot: static heuristic and unchanged fingerprint.
+        assert_eq!(p.fingerprint(), fp0);
+        assert_eq!(p.plan(1_000_000, &SolveOptions::default()).m(), 32);
+        // Install a model predicting m = 64 everywhere: plans hot-swap
+        // and the fingerprint (= the plan-cache key) moves with the epoch.
+        let model =
+            KnnHeuristic::fit_full("online-knn-f64", &[1_000_000], &[64], 1).unwrap();
+        slot.install(Dtype::F64, model);
+        assert_ne!(p.fingerprint(), fp0, "epoch must re-key the plan cache");
+        let plan = p.plan(1_000_000, &SolveOptions::default());
+        assert_eq!(plan.m(), 64);
+        assert!(plan.heuristic.contains("online-knn-f64@e1"), "{}", plan.heuristic);
+        // No f32 model installed: the f32 trend still serves f32 traffic.
+        let opts = SolveOptions {
+            dtype: Dtype::F32,
+            ..Default::default()
+        };
+        assert_eq!(p.plan(30_000, &opts).m(), 16);
+        // Overrides still win over the live model.
+        let opts = SolveOptions {
+            m_override: Some(8),
+            ..Default::default()
+        };
+        let plan = p.plan(1_000_000, &opts);
+        assert_eq!(plan.m(), 8);
+        assert_eq!(plan.heuristic, "m-override");
     }
 
     #[test]

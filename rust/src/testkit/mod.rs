@@ -107,6 +107,17 @@ pub fn default_cases() -> usize {
         .unwrap_or(64)
 }
 
+/// Base seed for a property: the test's pinned default, unless the
+/// `PARTISOL_PROPTEST_SEED` env var overrides it (the CI randomized
+/// smoke pass). Failures always report the exact per-case seed, so a
+/// randomized run that trips is still reproducible from its output.
+pub fn base_seed(default: u64) -> u64 {
+    std::env::var("PARTISOL_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

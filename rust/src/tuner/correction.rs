@@ -70,6 +70,16 @@ pub fn correct_trend(sweeps: &[SweepResult], switch_penalty: f64) -> Vec<usize> 
     let mut j = (0..l)
         .min_by(|&a, &b| dp[n - 1][a].partial_cmp(&dp[n - 1][b]).unwrap())
         .unwrap();
+    if !dp[n - 1][j].is_finite() {
+        // No finite non-decreasing assignment exists. That never
+        // happens on the dense offline sweep grid (every level is
+        // measured at every N it fits), but online telemetry bins can
+        // carry conflicting sparse level sets — e.g. a smaller size
+        // measured only at m=20 while a larger one only at m=8. Fall
+        // back to the observed optima unsmoothed instead of panicking
+        // in the backtrack (parent links are MAX on infinite paths).
+        return sweeps.iter().map(|s| s.opt_m).collect();
+    }
     let mut out = vec![0usize; n];
     for i in (0..n).rev() {
         out[i] = levels[j];
@@ -176,5 +186,17 @@ mod tests {
     #[test]
     fn empty_input() {
         assert!(correct_trend(&[], 0.02).is_empty());
+    }
+
+    #[test]
+    fn infeasible_sparse_levels_fall_back_to_observed() {
+        // Conflicting sparse level sets (an online-telemetry shape the
+        // offline sweep grid never produces): the smaller N measured
+        // only at m=20, the larger only at m=8, so every non-decreasing
+        // assignment has infinite cost. Must return the observed optima
+        // rather than panic in the backtrack.
+        let sweeps = vec![sweep(1_000, &[(20, 1.0)]), sweep(10_000, &[(8, 1.0)])];
+        let corrected = correct_trend(&sweeps, 0.02);
+        assert_eq!(corrected, vec![20, 8]);
     }
 }

@@ -8,10 +8,14 @@
 
 pub mod correction;
 pub mod heuristic;
+pub mod online;
 pub mod streams;
 pub mod sweep;
 
 pub use correction::correct_trend;
 pub use heuristic::{IntervalHeuristic, KnnHeuristic, MHeuristic};
+pub use online::{
+    AdaptiveHeuristic, OnlineStats, OnlineTuneConfig, OnlineTuner, TelemetrySample, TelemetryStore,
+};
 pub use streams::optimum_streams;
 pub use sweep::{sweep_all, sweep_n, SweepConfig, SweepResult};

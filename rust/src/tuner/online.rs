@@ -1,0 +1,822 @@
+//! Online adaptive tuning: telemetry-driven kNN retraining hot-swapped
+//! into the [`crate::plan::Planner`].
+//!
+//! The paper fits its optimum-m kNN model **once**, from offline sweeps
+//! on one GPU. A production service should instead learn from its own
+//! traffic (the way supervised-scheduling and BLAS-tuner runtimes
+//! retrain from measured executions): native workers record one
+//! [`TelemetrySample`] per solve into a bounded, non-blocking
+//! [`TelemetryStore`] ring; a background trainer periodically drains the
+//! ring, aggregates samples into per-size best-m observations (smoothed
+//! through the §2.4 trend correction, exactly like the offline
+//! pipeline), refits a [`KnnHeuristic`] through the existing `ml::knn`
+//! machinery, and hot-swaps it into the epoch-tagged
+//! [`AdaptiveHeuristic`] slot the planner consults.
+//!
+//! **Epoch semantics.** Every installed model bumps the slot's epoch.
+//! The planner mixes the epoch into its fingerprint — the plan-cache
+//! key — so every cached `SolvePlan` is implicitly tagged with the
+//! model that produced it: a bump makes all old keys unreachable and
+//! stale plans can never be served (they age out of the LRU).
+//!
+//! **Exploration.** Traffic served purely at the current prediction
+//! teaches the trainer nothing about neighboring m. A deterministic
+//! counter explores a configurable fraction of eligible solves at a
+//! grid neighbor of the predicted m (±1/±2 steps on the paper's
+//! candidate grid), giving the aggregator the comparative evidence it
+//! needs to move the model.
+
+use super::correction::correct_trend;
+use super::heuristic::{KnnHeuristic, MHeuristic};
+use super::sweep::SweepResult;
+use crate::data::paper::M_CANDIDATES;
+use crate::gpu::spec::Dtype;
+use crate::plan::Backend;
+use crate::solver::recursive::partition_applies;
+use std::collections::BTreeMap;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Online-tuning knobs (the `[online]` config table).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OnlineTuneConfig {
+    /// Master switch; everything below is inert when false.
+    pub enabled: bool,
+    /// Telemetry ring capacity in samples (oldest dropped on overflow).
+    pub window: usize,
+    /// Samples required per (size-bin, m) cell before it counts.
+    pub min_samples: usize,
+    /// Background retrain cadence, milliseconds.
+    pub retrain_ms: u64,
+    /// Fraction of eligible solves explored at a neighboring m, in
+    /// `[0, 1)`; 0 disables exploration.
+    pub explore: f64,
+}
+
+impl Default for OnlineTuneConfig {
+    fn default() -> Self {
+        OnlineTuneConfig {
+            enabled: false,
+            window: 16_384,
+            min_samples: 5,
+            retrain_ms: 500,
+            explore: 0.125,
+        }
+    }
+}
+
+impl OnlineTuneConfig {
+    /// Validate the knobs (only meaningful when enabled).
+    pub fn validate(&self) -> crate::error::Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if self.window == 0 || self.min_samples == 0 || self.retrain_ms == 0 {
+            return Err(crate::error::Error::Config(
+                "online.window, online.min_samples and online.retrain_ms must be positive".into(),
+            ));
+        }
+        if !(0.0..1.0).contains(&self.explore) {
+            return Err(crate::error::Error::Config(format!(
+                "online.explore must be in [0, 1), got {}",
+                self.explore
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// One per-solve measurement recorded by the execution path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TelemetrySample {
+    /// SLAE size.
+    pub n: usize,
+    /// Sub-system size the solve actually used.
+    pub m: usize,
+    pub dtype: Dtype,
+    /// Backend that executed the solve (Thomas samples carry no m
+    /// signal and are ignored by the trainer).
+    pub backend: Backend,
+    /// Execution latency, nanoseconds (batch members report the fused
+    /// execution time divided by the batch size).
+    pub latency_ns: u64,
+}
+
+fn pack(dtype: Dtype, backend: Backend) -> u64 {
+    let d = match dtype {
+        Dtype::F64 => 0u64,
+        Dtype::F32 => 1,
+    };
+    let b = match backend {
+        Backend::Pjrt => 0u64,
+        Backend::Native => 1,
+        Backend::Thomas => 2,
+    };
+    d | (b << 1)
+}
+
+fn unpack(tag: u64) -> (Dtype, Backend) {
+    let dtype = if tag & 1 == 0 { Dtype::F64 } else { Dtype::F32 };
+    let backend = match (tag >> 1) & 3 {
+        0 => Backend::Pjrt,
+        1 => Backend::Native,
+        _ => Backend::Thomas,
+    };
+    (dtype, backend)
+}
+
+/// One ring slot: a per-slot seqlock. `seq` is `2*ticket + 1` while the
+/// writer owning `ticket` is mid-write and `2*ticket + 2` once the
+/// fields are consistent, so the reader can tell exactly which ticket a
+/// slot holds and skip slots that were overwritten or are in flight.
+#[derive(Default)]
+struct Slot {
+    seq: AtomicU64,
+    n: AtomicU64,
+    m: AtomicU64,
+    tag: AtomicU64,
+    latency: AtomicU64,
+}
+
+/// Bounded, non-blocking telemetry ring. Writers (`record`) are
+/// lock-free — one `fetch_add` plus plain atomic stores, no allocation
+/// — and overflow silently overwrites the oldest samples, so a slow or
+/// absent trainer can never stall the solve hot path. The single
+/// consumer ([`TelemetryStore::drain_into`]) detects both overwritten
+/// and in-flight slots through the per-slot sequence tag and counts
+/// them as dropped.
+///
+/// The seqlock detects reader/writer races; two *writers* landing on
+/// the same slot (tickets a full ring apart, both mid-write) can in
+/// principle publish one mixed sample — acceptable for telemetry, where
+/// a rare corrupt point only perturbs a latency mean that the
+/// min-sample threshold and trend correction smooth over anyway.
+pub struct TelemetryStore {
+    slots: Box<[Slot]>,
+    /// Total samples ever recorded (the next write ticket).
+    head: AtomicU64,
+    /// Drain cursor (single consumer).
+    tail: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl TelemetryStore {
+    pub fn new(capacity: usize) -> TelemetryStore {
+        let cap = capacity.max(1);
+        TelemetryStore {
+            slots: (0..cap).map(|_| Slot::default()).collect::<Vec<_>>().into(),
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record one sample. Never blocks, never allocates.
+    pub fn record(&self, s: TelemetrySample) {
+        let cap = self.slots.len() as u64;
+        let ticket = self.head.fetch_add(1, Ordering::AcqRel);
+        let slot = &self.slots[(ticket % cap) as usize];
+        // Canonical seqlock write: mark odd, release fence so the field
+        // stores cannot become visible before the odd mark (the reader's
+        // trailing acquire fence pairs with this one), write, mark even.
+        slot.seq.store(2 * ticket + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        slot.n.store(s.n as u64, Ordering::Relaxed);
+        slot.m.store(s.m as u64, Ordering::Relaxed);
+        slot.tag.store(pack(s.dtype, s.backend), Ordering::Relaxed);
+        slot.latency.store(s.latency_ns, Ordering::Relaxed);
+        slot.seq.store(2 * ticket + 2, Ordering::Release);
+    }
+
+    /// Total samples ever recorded.
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Samples lost to overflow or in-flight/overwritten slots, as
+    /// detected at drain time.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Drain every sample recorded since the previous drain into `out`
+    /// (appending; the caller clears). Single consumer: concurrent
+    /// drains race on the cursor — [`OnlineTuner`] serializes its own.
+    pub fn drain_into(&self, out: &mut Vec<TelemetrySample>) {
+        let cap = self.slots.len() as u64;
+        let head = self.head.load(Ordering::Acquire);
+        let mut tail = self.tail.load(Ordering::Acquire);
+        if head.saturating_sub(tail) > cap {
+            // Overflow: the ring only retains the newest `cap` tickets.
+            self.dropped.fetch_add(head - tail - cap, Ordering::Relaxed);
+            tail = head - cap;
+        }
+        for t in tail..head {
+            let slot = &self.slots[(t % cap) as usize];
+            let want = 2 * t + 2;
+            if slot.seq.load(Ordering::Acquire) != want {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            let n = slot.n.load(Ordering::Relaxed) as usize;
+            let m = slot.m.load(Ordering::Relaxed) as usize;
+            let tag = slot.tag.load(Ordering::Relaxed);
+            let latency_ns = slot.latency.load(Ordering::Relaxed);
+            fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) != want {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            let (dtype, backend) = unpack(tag);
+            out.push(TelemetrySample {
+                n,
+                m,
+                dtype,
+                backend,
+                latency_ns,
+            });
+        }
+        self.tail.store(head, Ordering::Release);
+    }
+}
+
+/// The epoch-tagged hot-swap slot the planner consults: at most one
+/// live kNN model per dtype, plus a monotone epoch that the planner
+/// mixes into its fingerprint (= the plan-cache key), so installing a
+/// model atomically invalidates every plan the previous model produced.
+#[derive(Default)]
+pub struct AdaptiveHeuristic {
+    epoch: AtomicU64,
+    f64_model: RwLock<Option<Arc<KnnHeuristic>>>,
+    f32_model: RwLock<Option<Arc<KnnHeuristic>>>,
+}
+
+impl AdaptiveHeuristic {
+    pub fn new() -> AdaptiveHeuristic {
+        AdaptiveHeuristic::default()
+    }
+
+    fn slot(&self, dtype: Dtype) -> &RwLock<Option<Arc<KnnHeuristic>>> {
+        match dtype {
+            Dtype::F64 => &self.f64_model,
+            Dtype::F32 => &self.f32_model,
+        }
+    }
+
+    /// Current model epoch (0 = no model ever installed).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// The live model for a dtype, if any.
+    pub fn current(&self, dtype: Dtype) -> Option<Arc<KnnHeuristic>> {
+        self.slot(dtype).read().unwrap().clone()
+    }
+
+    /// Hot-swap a freshly fitted model in and bump the epoch. Returns
+    /// the new epoch.
+    pub fn install(&self, dtype: Dtype, model: KnnHeuristic) -> u64 {
+        *self.slot(dtype).write().unwrap() = Some(Arc::new(model));
+        self.epoch.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// Predict the optimum m for a size, when a model for the dtype is
+    /// live. The returned name tags the epoch (`online-knn-f64@e3`) so
+    /// plans record exactly which model decided them.
+    pub fn predict(&self, n: usize, dtype: Dtype) -> Option<(usize, String)> {
+        let guard = self.slot(dtype).read().unwrap();
+        let model = guard.as_ref()?;
+        Some((
+            model.opt_m(n),
+            format!("{}@e{}", model.name(), self.epoch()),
+        ))
+    }
+}
+
+/// Point-in-time counters of the online tuning subsystem.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OnlineStats {
+    /// Current model epoch (0 until the first install).
+    pub epoch: u64,
+    /// Retrain passes that installed at least one model.
+    pub retrains: u64,
+    /// Telemetry samples recorded by the execution path.
+    pub recorded: u64,
+    /// Samples lost to ring overflow (detected at drain time).
+    pub dropped: u64,
+    /// Solves served at an exploration m instead of the prediction.
+    pub explored: u64,
+}
+
+/// Per-(dtype, size-bin) aggregation: sizes are binned on an eighth-of-
+/// a-decade log grid (traffic sizes rarely repeat exactly), and each
+/// bin keeps per-m sample counts and total latency.
+#[derive(Default)]
+struct BinStats {
+    log_sum: f64,
+    count: u64,
+    /// m -> (samples, total latency µs).
+    per_m: BTreeMap<usize, (u64, f64)>,
+}
+
+type Bins = BTreeMap<i64, BinStats>;
+
+fn dtype_index(dtype: Dtype) -> usize {
+    match dtype {
+        Dtype::F64 => 0,
+        Dtype::F32 => 1,
+    }
+}
+
+/// Build the retrain inputs from one dtype's bins: qualified per-m mean
+/// latencies per bin (ascending n), the observed optimum, and the §2.4
+/// trend correction over the lot. Returns `None` until at least one bin
+/// has comparative evidence (two or more qualified m values) — fitting
+/// from policy-only traffic would just memorize the current heuristic.
+fn fit_rows(bins: &Bins, min_samples: u64) -> Option<(Vec<usize>, Vec<usize>)> {
+    let mut ns = Vec::new();
+    let mut sweeps = Vec::new();
+    let mut comparative = false;
+    for b in bins.values() {
+        let times: Vec<(usize, f64)> = b
+            .per_m
+            .iter()
+            .filter(|&(_, &(count, _))| count >= min_samples)
+            .map(|(&m, &(count, total_us))| (m, (total_us / count as f64).max(1e-6)))
+            .collect();
+        if times.is_empty() {
+            continue;
+        }
+        if times.len() >= 2 {
+            comparative = true;
+        }
+        let (opt_m, opt_t) = times
+            .iter()
+            .copied()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let rep_n = 10f64.powf(b.log_sum / b.count as f64).round().max(3.0) as usize;
+        ns.push(rep_n);
+        sweeps.push(SweepResult {
+            n: rep_n,
+            streams: 1,
+            times,
+            opt_m,
+            opt_time_us: opt_t,
+        });
+    }
+    if sweeps.is_empty() || !comparative {
+        return None;
+    }
+    let corrected = correct_trend(&sweeps, 0.02);
+    Some((ns, corrected))
+}
+
+/// The online tuning subsystem one [`crate::coordinator::Service`]
+/// owns: the telemetry ring the workers feed, the sticky aggregation
+/// the trainer folds drains into, the exploration counter, and the
+/// [`AdaptiveHeuristic`] hot-swap slot shared with the planner.
+pub struct OnlineTuner {
+    cfg: OnlineTuneConfig,
+    store: TelemetryStore,
+    adaptive: Arc<AdaptiveHeuristic>,
+    retrains: AtomicU64,
+    explored: AtomicU64,
+    explore_tick: AtomicU64,
+    /// [f64 bins, f32 bins]; the lock also serializes drains.
+    agg: Mutex<[Bins; 2]>,
+}
+
+impl OnlineTuner {
+    /// Exploration offsets in grid steps, cycled deterministically.
+    const OFFSETS: [isize; 4] = [1, -1, 2, -2];
+
+    pub fn new(cfg: OnlineTuneConfig) -> OnlineTuner {
+        let window = cfg.window.max(1);
+        OnlineTuner {
+            cfg,
+            store: TelemetryStore::new(window),
+            adaptive: Arc::new(AdaptiveHeuristic::new()),
+            retrains: AtomicU64::new(0),
+            explored: AtomicU64::new(0),
+            explore_tick: AtomicU64::new(0),
+            agg: Mutex::new([Bins::new(), Bins::new()]),
+        }
+    }
+
+    pub fn config(&self) -> &OnlineTuneConfig {
+        &self.cfg
+    }
+
+    /// The hot-swap slot to attach to a planner
+    /// ([`crate::plan::Planner::attach_adaptive`]).
+    pub fn adaptive(&self) -> &Arc<AdaptiveHeuristic> {
+        &self.adaptive
+    }
+
+    /// Record one executed solve (never blocks or allocates).
+    pub fn record_solve(
+        &self,
+        n: usize,
+        m: usize,
+        dtype: Dtype,
+        backend: Backend,
+        latency_ns: u64,
+    ) {
+        self.store.record(TelemetrySample {
+            n,
+            m,
+            dtype,
+            backend,
+            latency_ns,
+        });
+    }
+
+    /// Claim the next exploration slot: `Some(offset index)` on every
+    /// `ceil(1/explore)`-th call, `None` otherwise. The counter stride
+    /// quantizes the fraction to `1/k` — rounding *up* guarantees the
+    /// explored share never exceeds the configured one (in particular,
+    /// `explore < 1` can never degenerate into exploring every solve).
+    /// Consuming the tick *before* planning keeps non-exploring
+    /// submissions from paying a plan-cache probe.
+    pub fn explore_slot(&self) -> Option<usize> {
+        if self.cfg.explore <= 0.0 {
+            return None;
+        }
+        let k = (1.0 / self.cfg.explore).ceil().max(2.0) as u64;
+        let tick = self.explore_tick.fetch_add(1, Ordering::Relaxed);
+        if tick % k != 0 {
+            return None;
+        }
+        Some(((tick / k) % Self::OFFSETS.len() as u64) as usize)
+    }
+
+    /// The exploration m for a claimed slot: the grid neighbor of
+    /// `base_m` at the slot's offset, or `None` when the offset clamps
+    /// back onto `base_m` or partitioning would not apply at that size.
+    pub fn neighbor_m(&self, n: usize, base_m: usize, slot: usize) -> Option<usize> {
+        let offset = Self::OFFSETS[slot % Self::OFFSETS.len()];
+        let i = M_CANDIDATES
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &g)| g.abs_diff(base_m))
+            .unwrap()
+            .0 as isize;
+        let j = (i + offset).clamp(0, M_CANDIDATES.len() as isize - 1) as usize;
+        let m = M_CANDIDATES[j];
+        if m == base_m || !partition_applies(n, m) {
+            return None;
+        }
+        self.explored.fetch_add(1, Ordering::Relaxed);
+        Some(m)
+    }
+
+    /// Roll back an exploration claim whose request was rejected before
+    /// execution (backpressure/shutdown), so `explored` keeps counting
+    /// solves actually *served* at an exploration m.
+    pub(crate) fn cancel_explore(&self) {
+        self.explored.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// One trainer pass: drain the ring, fold into the aggregation,
+    /// refit and hot-swap per-dtype models whose predictions changed.
+    /// Returns true when at least one model was installed. `scratch` is
+    /// the trainer's reusable drain buffer.
+    pub(crate) fn retrain(&self, scratch: &mut Vec<TelemetrySample>) -> bool {
+        let mut agg = self.agg.lock().unwrap();
+        scratch.clear();
+        self.store.drain_into(scratch);
+        for s in scratch.iter() {
+            if s.backend == Backend::Thomas {
+                continue;
+            }
+            let bins = &mut agg[dtype_index(s.dtype)];
+            let bin = ((s.n.max(1) as f64).log10() * 8.0).round() as i64;
+            let b = bins.entry(bin).or_default();
+            b.log_sum += (s.n.max(1) as f64).log10();
+            b.count += 1;
+            let e = b.per_m.entry(s.m).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += s.latency_ns as f64 / 1e3;
+        }
+        let mut installed = false;
+        for (idx, dtype) in [(0usize, Dtype::F64), (1, Dtype::F32)] {
+            let Some((ns, corrected)) = fit_rows(&agg[idx], self.cfg.min_samples as u64) else {
+                continue;
+            };
+            // Only bump the epoch (and so flush the plan cache) when the
+            // refit actually changes a prediction over the observed sizes.
+            let changed = match self.adaptive.current(dtype) {
+                None => true,
+                Some(cur) => ns
+                    .iter()
+                    .zip(&corrected)
+                    .any(|(&n, &m)| cur.opt_m(n) != m),
+            };
+            if !changed {
+                continue;
+            }
+            let name = format!("online-knn-{}", dtype.name());
+            if let Ok(model) = KnnHeuristic::fit_full(&name, &ns, &corrected, 1) {
+                self.adaptive.install(dtype, model);
+                installed = true;
+            }
+        }
+        if installed {
+            self.retrains.fetch_add(1, Ordering::Relaxed);
+        }
+        installed
+    }
+
+    /// Synchronous retrain (the `tune online` CLI and tests; the
+    /// service's background trainer calls the same core on its
+    /// interval). Returns true when a model was installed.
+    pub fn retrain_now(&self) -> bool {
+        let mut scratch = Vec::new();
+        self.retrain(&mut scratch)
+    }
+
+    pub fn stats(&self) -> OnlineStats {
+        OnlineStats {
+            epoch: self.adaptive.epoch(),
+            retrains: self.retrains.load(Ordering::Relaxed),
+            recorded: self.store.recorded(),
+            dropped: self.store.dropped(),
+            explored: self.explored.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(n: usize, m: usize, latency_ns: u64) -> TelemetrySample {
+        TelemetrySample {
+            n,
+            m,
+            dtype: Dtype::F64,
+            backend: Backend::Native,
+            latency_ns,
+        }
+    }
+
+    #[test]
+    fn ring_roundtrips_samples_in_order() {
+        let store = TelemetryStore::new(16);
+        for i in 0..5u64 {
+            store.record(sample(1000 + i as usize, 8, i));
+        }
+        let mut out = Vec::new();
+        store.drain_into(&mut out);
+        assert_eq!(out.len(), 5);
+        assert_eq!(out[0], sample(1000, 8, 0));
+        assert_eq!(out[4], sample(1004, 8, 4));
+        assert_eq!(store.recorded(), 5);
+        assert_eq!(store.dropped(), 0);
+        // Second drain: nothing new.
+        out.clear();
+        store.drain_into(&mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn ring_drops_oldest_under_overflow_without_blocking() {
+        let store = TelemetryStore::new(8);
+        for i in 0..20u64 {
+            store.record(sample(1000 + i as usize, 8, i));
+        }
+        let mut out = Vec::new();
+        store.drain_into(&mut out);
+        assert_eq!(out.len(), 8, "only the newest window survives");
+        assert!(out.iter().all(|s| s.n >= 1012), "{out:?}");
+        assert_eq!(store.dropped(), 12);
+        assert_eq!(store.recorded(), 20);
+    }
+
+    #[test]
+    fn ring_accounts_for_every_sample_across_threads() {
+        let store = Arc::new(TelemetryStore::new(64));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = store.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    s.record(sample(10 + (t * 1000 + i) as usize, 8, i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(store.recorded(), 2000);
+        let mut out = Vec::new();
+        store.drain_into(&mut out);
+        assert!(out.len() <= 64);
+        assert!(!out.is_empty());
+        assert_eq!(out.len() as u64 + store.dropped(), 2000, "drained + dropped = recorded");
+    }
+
+    #[test]
+    fn dtype_backend_packing_roundtrips() {
+        for dtype in [Dtype::F64, Dtype::F32] {
+            for backend in [Backend::Pjrt, Backend::Native, Backend::Thomas] {
+                assert_eq!(unpack(pack(dtype, backend)), (dtype, backend));
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_slot_epoch_and_predict() {
+        let slot = AdaptiveHeuristic::new();
+        assert_eq!(slot.epoch(), 0);
+        assert!(slot.predict(1000, Dtype::F64).is_none());
+        let model = KnnHeuristic::fit_full("online-knn-f64", &[1000, 100_000], &[8, 32], 1).unwrap();
+        assert_eq!(slot.install(Dtype::F64, model), 1);
+        let (m, name) = slot.predict(2000, Dtype::F64).unwrap();
+        assert_eq!(m, 8);
+        assert_eq!(name, "online-knn-f64@e1");
+        assert!(slot.predict(2000, Dtype::F32).is_none(), "per-dtype slots");
+    }
+
+    #[test]
+    fn retrain_fits_installs_and_converges() {
+        let cfg = OnlineTuneConfig {
+            enabled: true,
+            min_samples: 2,
+            ..OnlineTuneConfig::default()
+        };
+        let tuner = OnlineTuner::new(cfg);
+        // Comparative evidence at one size: m = 32 measures 2x faster.
+        for _ in 0..3 {
+            tuner.record_solve(30_000, 8, Dtype::F64, Backend::Native, 900_000);
+            tuner.record_solve(30_000, 32, Dtype::F64, Backend::Native, 400_000);
+        }
+        assert!(tuner.retrain_now());
+        let stats = tuner.stats();
+        assert_eq!(stats.epoch, 1);
+        assert_eq!(stats.retrains, 1);
+        assert_eq!(stats.recorded, 6);
+        let (m, _) = tuner.adaptive().predict(30_000, Dtype::F64).unwrap();
+        assert_eq!(m, 32, "trainer must pick the measured-fastest m");
+        assert!(tuner.adaptive().predict(30_000, Dtype::F32).is_none());
+        // No new evidence and unchanged predictions: no epoch churn.
+        assert!(!tuner.retrain_now());
+        assert_eq!(tuner.stats().epoch, 1);
+    }
+
+    #[test]
+    fn retrain_waits_for_comparative_evidence() {
+        let tuner = OnlineTuner::new(OnlineTuneConfig {
+            enabled: true,
+            min_samples: 2,
+            ..OnlineTuneConfig::default()
+        });
+        // Policy-only traffic: a single m per size teaches nothing.
+        for _ in 0..10 {
+            tuner.record_solve(50_000, 16, Dtype::F64, Backend::Native, 500_000);
+        }
+        assert!(!tuner.retrain_now());
+        assert_eq!(tuner.stats().epoch, 0);
+    }
+
+    #[test]
+    fn retrain_survives_incompatible_sparse_bins() {
+        // A smaller size measured only at m=20 while a larger size only
+        // saw {8, 16}: no finite monotone assignment exists, and the
+        // trend correction must fall back to the observed optima
+        // instead of panicking (which would silently kill the trainer
+        // thread and poison the aggregation mutex).
+        let tuner = OnlineTuner::new(OnlineTuneConfig {
+            enabled: true,
+            min_samples: 1,
+            ..OnlineTuneConfig::default()
+        });
+        for _ in 0..2 {
+            tuner.record_solve(10_000, 20, Dtype::F64, Backend::Native, 500_000);
+            tuner.record_solve(100_000, 8, Dtype::F64, Backend::Native, 700_000);
+            tuner.record_solve(100_000, 16, Dtype::F64, Backend::Native, 600_000);
+        }
+        assert!(tuner.retrain_now());
+        let (m, _) = tuner.adaptive().predict(100_000, Dtype::F64).unwrap();
+        assert_eq!(m, 16, "larger bin keeps its own observed optimum");
+        let (m, _) = tuner.adaptive().predict(10_000, Dtype::F64).unwrap();
+        assert_eq!(m, 20);
+    }
+
+    #[test]
+    fn thomas_samples_are_ignored() {
+        let tuner = OnlineTuner::new(OnlineTuneConfig {
+            enabled: true,
+            min_samples: 1,
+            ..OnlineTuneConfig::default()
+        });
+        for _ in 0..4 {
+            tuner.record_solve(100, 4, Dtype::F64, Backend::Thomas, 1_000);
+            tuner.record_solve(100, 8, Dtype::F64, Backend::Thomas, 2_000);
+        }
+        assert!(!tuner.retrain_now(), "Thomas solves carry no m signal");
+    }
+
+    #[test]
+    fn trend_correction_keeps_online_fit_monotone() {
+        // A noisy non-monotone optimum at one middle bin must be
+        // smoothed by the same §2.4 correction the offline pipeline
+        // uses: the per-bin argmins (8, 4, 8) fit as a flat m = 8 run
+        // when the middle bin's m = 8 time is within tolerance.
+        let tuner = OnlineTuner::new(OnlineTuneConfig {
+            enabled: true,
+            min_samples: 1,
+            ..OnlineTuneConfig::default()
+        });
+        for (n, m, ns) in [
+            (1_000, 4, 500_000u64),
+            (1_000, 8, 480_000),
+            (10_000, 4, 799_000),
+            (10_000, 8, 800_000), // 0.1% above the observed optimum
+            (100_000, 4, 1_500_000),
+            (100_000, 8, 900_000),
+        ] {
+            for _ in 0..2 {
+                tuner.record_solve(n, m, Dtype::F64, Backend::Native, ns);
+            }
+        }
+        assert!(tuner.retrain_now());
+        let adaptive = tuner.adaptive();
+        let (m_small, _) = adaptive.predict(1_000, Dtype::F64).unwrap();
+        let (m_mid, _) = adaptive.predict(10_000, Dtype::F64).unwrap();
+        let (m_big, _) = adaptive.predict(100_000, Dtype::F64).unwrap();
+        assert_eq!((m_small, m_mid, m_big), (8, 8, 8), "fluctuation smoothed");
+    }
+
+    #[test]
+    fn exploration_cycles_neighbors_deterministically() {
+        let tuner = OnlineTuner::new(OnlineTuneConfig {
+            enabled: true,
+            explore: 0.5,
+            ..OnlineTuneConfig::default()
+        });
+        // k = 2: every second call claims a slot, offsets cycle.
+        let mut explored = Vec::new();
+        for _ in 0..8 {
+            if let Some(slot) = tuner.explore_slot() {
+                explored.push(tuner.neighbor_m(100_000, 16, slot));
+            }
+        }
+        // Offsets +1, -1, +2, -2 around m = 16 on the candidate grid.
+        assert_eq!(explored, vec![Some(20), Some(10), Some(25), Some(8)]);
+        assert_eq!(tuner.stats().explored, 4);
+    }
+
+    #[test]
+    fn exploration_respects_grid_edges_and_tiny_systems() {
+        let tuner = OnlineTuner::new(OnlineTuneConfig {
+            enabled: true,
+            explore: 0.5,
+            ..OnlineTuneConfig::default()
+        });
+        // At the grid's low edge, -1/-2 clamp back onto the base m.
+        assert_eq!(tuner.neighbor_m(100_000, 4, 1), None);
+        assert_eq!(tuner.neighbor_m(100_000, 4, 3), None);
+        assert_eq!(tuner.neighbor_m(100_000, 4, 0), Some(5));
+        // A neighbor that breaks the padded-block cutoff is refused.
+        assert_eq!(tuner.neighbor_m(10, 4, 0), None, "ceil(10/5) < 3");
+        // explore = 0 disables the counter entirely.
+        let off = OnlineTuner::new(OnlineTuneConfig {
+            enabled: true,
+            explore: 0.0,
+            ..OnlineTuneConfig::default()
+        });
+        for _ in 0..16 {
+            assert!(off.explore_slot().is_none());
+        }
+        // A near-1 fraction must never degenerate into exploring every
+        // solve: the stride rounds up, capping exploration at 1-in-2.
+        let high = OnlineTuner::new(OnlineTuneConfig {
+            enabled: true,
+            explore: 0.9,
+            ..OnlineTuneConfig::default()
+        });
+        let claimed = (0..16).filter(|_| high.explore_slot().is_some()).count();
+        assert_eq!(claimed, 8, "explore=0.9 still serves the prediction half the time");
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(OnlineTuneConfig::default().validate().is_ok());
+        let mut c = OnlineTuneConfig {
+            enabled: true,
+            ..OnlineTuneConfig::default()
+        };
+        assert!(c.validate().is_ok());
+        c.explore = 1.0;
+        assert!(c.validate().is_err());
+        c.explore = 0.5;
+        c.window = 0;
+        assert!(c.validate().is_err());
+    }
+}

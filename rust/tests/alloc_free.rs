@@ -10,11 +10,14 @@
 //! and deep plans) must not allocate at all.
 
 use partisol::exec::{ExecCtx, WorkerPool};
+use partisol::gpu::spec::Dtype;
+use partisol::plan::Backend;
 use partisol::solver::generator::random_dd_system;
 use partisol::solver::partition::PartitionWorkspace;
 use partisol::solver::{
     partition_solve_with_workspace, recursive_solve_with_workspace, SolveWorkspace,
 };
+use partisol::tuner::online::{TelemetrySample, TelemetryStore};
 use partisol::util::count_alloc::CountingAlloc;
 use partisol::util::Pcg64;
 use std::sync::Arc;
@@ -86,6 +89,39 @@ fn steady_state_solve_is_allocation_free() {
         allocs, 0,
         "warmed-up recursive_solve_with_workspace must not allocate"
     );
+
+    // --- Telemetry recording on: the online-tuning ring is atomics-only,
+    // so the steady-state solve path stays allocation-free with per-solve
+    // recording enabled — including under ring overflow (205 samples into
+    // a 64-slot ring: drop-oldest overwrites are plain stores). ---
+    let store = TelemetryStore::new(64);
+    let allocs = CountingAlloc::count_during(|| {
+        for i in 0..5u64 {
+            partition_solve_with_workspace(&sys_exact, 32, &exec, &mut ws, &mut x_exact).unwrap();
+            store.record(TelemetrySample {
+                n: 4_096,
+                m: 32,
+                dtype: Dtype::F64,
+                backend: Backend::Native,
+                latency_ns: 1_000 + i,
+            });
+        }
+        for i in 0..200u64 {
+            // Overflow the ring: drop-oldest must not allocate either.
+            store.record(TelemetrySample {
+                n: 4_099,
+                m: 32,
+                dtype: Dtype::F32,
+                backend: Backend::Native,
+                latency_ns: i,
+            });
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "warmed-up solve + telemetry recording must not allocate"
+    );
+    assert_eq!(store.recorded(), 205);
 
     // Sanity: the solves above actually produced solutions.
     let residual = partisol::solver::residual::max_abs_residual(&sys, &x);

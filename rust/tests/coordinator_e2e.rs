@@ -9,6 +9,8 @@ use partisol::gpu::spec::Dtype;
 use partisol::solver::generator::random_dd_system;
 use partisol::solver::thomas_solve;
 use partisol::solver::TriSystem;
+use partisol::tuner::online::OnlineTuneConfig;
+use partisol::tuner::KnnHeuristic;
 use partisol::util::Pcg64;
 
 fn artifacts_available() -> bool {
@@ -120,6 +122,54 @@ fn singular_system_reports_structured_error_not_hang() {
     assert!(err.to_string().contains("singular"), "{err}");
     let m = client.metrics();
     assert_eq!(m.failed, 1, "the failure is counted, not dropped");
+    client.shutdown();
+}
+
+/// ISSUE-4 stale-plan regression: a model hot-swap bumps the epoch,
+/// which re-keys the plan cache through the planner fingerprint — the
+/// next solve of an already-cached size must be served by the new
+/// model, never by a cached `SolvePlan` of the old one.
+#[test]
+fn epoch_bump_invalidates_cached_plans_and_hot_swaps_served_m() {
+    let cfg = Config {
+        probe_pjrt: false,
+        workers: 2,
+        online: OnlineTuneConfig {
+            enabled: true,
+            explore: 0.0, // deterministic: no exploration overrides
+            ..OnlineTuneConfig::default()
+        },
+        ..Config::default()
+    };
+    let client = Client::from_config(cfg).unwrap();
+    let mut rng = Pcg64::new(31);
+    // Warm the plan cache: N = 50_000 plans m = 16 on the paper trend.
+    for _ in 0..2 {
+        let sys = random_dd_system::<f64>(&mut rng, 50_000, 0.5);
+        let resp = client.solve(SolveSpec::f64(sys)).unwrap();
+        assert_eq!(resp.m, 16, "paper trend before any hot-swap");
+    }
+    let m0 = client.metrics();
+    assert!(m0.plan_cache_hits >= 1, "second solve must hit the cache");
+    assert_eq!(m0.model_epoch, 0);
+    assert_eq!(m0.telemetry_recorded, 2, "both solves recorded telemetry");
+
+    // Hot-swap a model that predicts m = 64 for every size.
+    let tuner = client.online_tuner().expect("online tuning enabled");
+    let model = KnnHeuristic::fit_full(
+        "online-knn-f64",
+        &[1_000, 50_000, 1_000_000],
+        &[64, 64, 64],
+        1,
+    )
+    .unwrap();
+    tuner.adaptive().install(Dtype::F64, model);
+
+    let sys = random_dd_system::<f64>(&mut rng, 50_000, 0.5);
+    let resp = client.solve(SolveSpec::f64(sys)).unwrap();
+    assert_eq!(resp.m, 64, "cached plan outlived the model that produced it");
+    let m1 = client.metrics();
+    assert_eq!(m1.model_epoch, 1, "install must bump the exported epoch");
     client.shutdown();
 }
 

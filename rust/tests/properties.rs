@@ -7,14 +7,14 @@ use partisol::solver::partition::{assemble_interface, stage1_all};
 use partisol::solver::recursive::recursive_solve;
 use partisol::solver::residual::{max_abs_diff, max_abs_residual};
 use partisol::solver::{partition_solve, thomas_solve};
-use partisol::testkit::{default_cases, forall};
+use partisol::testkit::{base_seed, default_cases, forall};
 use partisol::tuner::correction::correct_trend;
 use partisol::tuner::sweep::SweepResult;
 
 #[test]
 fn prop_partition_equals_thomas() {
     forall(
-        0xA11CE,
+        base_seed(0xA11CE),
         default_cases(),
         |g| {
             let n = g.int(3, 20_000);
@@ -37,10 +37,50 @@ fn prop_partition_equals_thomas() {
     );
 }
 
+/// The ISSUE-4 solve-stack sweep: for random diagonally dominant
+/// systems, `partition_solve` agrees with `thomas_solve` for every
+/// valid m, in both dtypes, across pool sizes {1, 4}. f64 compares
+/// solutions directly; f32 checks the residual (thomas round-off at
+/// f32 makes a direct diff an unreliable oracle).
+#[test]
+fn prop_partition_equals_thomas_all_dtypes_and_pools() {
+    forall(
+        base_seed(0xF00D),
+        default_cases(),
+        |g| {
+            let n = g.int(3, 20_000);
+            let m = g.int(3, 80);
+            let seed = g.rng.next_u64();
+            (n, m, seed)
+        },
+        |&(n, m, seed)| {
+            let mut rng = partisol::util::Pcg64::new(seed);
+            let sys64 = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let want = thomas_solve(&sys64).map_err(|e| e.to_string())?;
+            for pool in [1usize, 4] {
+                let got = partition_solve(&sys64, m, pool).map_err(|e| e.to_string())?;
+                let diff = max_abs_diff(&got, &want);
+                if diff >= 1e-8 {
+                    return Err(format!("f64 n={n} m={m} pool={pool}: diff {diff}"));
+                }
+            }
+            let sys32 = random_dd_system::<f32>(&mut rng, n, 1.0);
+            for pool in [1usize, 4] {
+                let got = partition_solve(&sys32, m, pool).map_err(|e| e.to_string())?;
+                let res = max_abs_residual(&sys32, &got);
+                if res >= 1e-2 {
+                    return Err(format!("f32 n={n} m={m} pool={pool}: residual {res}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_interface_inherits_diagonal_dominance() {
     forall(
-        0xD0_D0,
+        base_seed(0xD0_D0),
         default_cases(),
         |g| {
             let p = g.int(1, 200);
@@ -65,7 +105,7 @@ fn prop_interface_inherits_diagonal_dominance() {
 #[test]
 fn prop_recursion_depth_invariant() {
     forall(
-        0xBEC_u64,
+        base_seed(0xBEC_u64),
         default_cases() / 2,
         |g| {
             let n = g.int(10, 30_000);
@@ -92,7 +132,7 @@ fn prop_recursion_depth_invariant() {
 #[test]
 fn prop_split_is_partition_and_knn_memorizes() {
     forall(
-        0x5EED,
+        base_seed(0x5EED),
         default_cases(),
         |g| {
             let n = g.int(8, 200);
@@ -123,7 +163,7 @@ fn prop_split_is_partition_and_knn_memorizes() {
 #[test]
 fn prop_trend_correction_monotone_and_within_grid() {
     forall(
-        0x77E_u64,
+        base_seed(0x77E_u64),
         default_cases(),
         |g| {
             // Random sweep landscapes over a fixed grid.
