@@ -21,8 +21,18 @@
 //! neighboring m values, and the trainer refits + hot-swaps the kNN
 //! model between rounds — the served m should walk toward the
 //! empirically best sub-system size, epoch by epoch.
+//!
+//! `--remote <addr>` drives a running `partisol serve --listen <addr>`
+//! server instead of an in-process service: a mixed f32/f64 workload
+//! over the wire protocol, plus one deliberately oversized burst to
+//! exercise the server's load shedding (`--expect-shed` asserts at
+//! least one `Backpressure` frame came back — pair it with a server
+//! started with a tiny `--queue-depth`). `--shutdown-server` sends the
+//! `Shutdown` control frame at the end and asserts the acknowledgment
+//! (the CI net-smoke step then asserts the server process exits 0).
 
-use partisol::api::{Client, SolveSpec};
+use partisol::api::{ApiError, Client, SolveSpec};
+use partisol::net::RemoteClient;
 use partisol::config::HeuristicKind;
 use partisol::data::paper::M_CANDIDATES;
 use partisol::plan::SolveOptions;
@@ -317,9 +327,119 @@ fn online_tune_workload(client: &Client) -> Result<(), Box<dyn std::error::Error
     Ok(())
 }
 
+/// Remote mode: the same three-layer system, reached over TCP.
+fn remote_workload(
+    addr: &str,
+    expect_shed: bool,
+    shutdown_server: bool,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let client = RemoteClient::connect(addr)?;
+    let rtt = client.ping()?;
+    println!("connected to {addr} (ping {:.2} ms)\n", rtt.as_secs_f64() * 1e3);
+
+    // --- mixed f32/f64 workload, sequential blocking round-trips ---
+    let requests = 48usize;
+    let (min_n, max_n) = (2_000usize, 120_000usize);
+    let mut rng = Pcg64::new(321);
+    let t0 = Instant::now();
+    let mut by_dtype = std::collections::BTreeMap::<&str, usize>::new();
+    let mut worst = (0.0f64, 0.0f64); // (f64, f32)
+    for i in 0..requests {
+        let log_n = rng.range((min_n as f64).ln(), (max_n as f64).ln());
+        let n = log_n.exp() as usize;
+        // Alternate dtypes; the stronger f32 dominance keeps its
+        // residuals inside f32 round-off across the size range.
+        // solve_blocking rides out backpressure (the CI server runs
+        // with a deliberately tiny queue), resubmitting shed requests.
+        let spec = if i % 2 == 0 {
+            SolveSpec::f64(random_dd_system::<f64>(&mut rng, n, 0.5))
+        } else {
+            SolveSpec::f32(random_dd_system::<f32>(&mut rng, n, 1.0))
+        };
+        let resp = client.solve_blocking(spec)?;
+        match &resp.x {
+            partisol::api::Solution::F64(_) => {
+                worst.0 = worst.0.max(resp.residual.unwrap_or(0.0));
+                *by_dtype.entry("f64").or_default() += 1;
+            }
+            partisol::api::Solution::F32(_) => {
+                worst.1 = worst.1.max(resp.residual.unwrap_or(0.0));
+                *by_dtype.entry("f32").or_default() += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "mixed workload : {requests} solves in {wall:.2}s = {:.1} req/s ({by_dtype:?})",
+        requests as f64 / wall
+    );
+    println!(
+        "worst residual : f64 {:.3e} | f32 {:.3e}",
+        worst.0, worst.1
+    );
+    assert!(worst.0 < 1e-8, "f64 residual check failed");
+    assert!(worst.1 < 5e-2, "f32 residual check failed");
+
+    // --- one deliberately shed burst: pin the workers with a giant
+    // solve, then over-submit small ones; sheds come back as
+    // Backpressure frames instead of hanging the connection ---
+    let giant = client.submit(
+        SolveSpec::f64(random_dd_system::<f64>(&mut rng, 1_500_000, 0.5)).with_residual(false),
+    )?;
+    let sys = Arc::new(random_dd_system::<f64>(&mut rng, 8_000, 0.5));
+    let burst: Vec<SolveSpec<'static>> = (0..64)
+        .map(|_| SolveSpec::shared_f64(sys.clone()).with_residual(false))
+        .collect();
+    let mut shed = 0usize;
+    let mut served = 0usize;
+    for h in client.submit_many(burst)? {
+        match h.wait() {
+            Ok(_) => served += 1,
+            Err(ApiError::Backpressure { .. }) => shed += 1,
+            Err(e) => return Err(format!("burst member failed: {e}").into()),
+        }
+    }
+    giant.wait()?;
+    println!("shed burst     : {served} served, {shed} shed with Backpressure frames");
+    if expect_shed {
+        assert!(shed >= 1, "--expect-shed: the burst was never load-shed");
+    }
+
+    // --- server-side stats over the wire ---
+    let stats = client.stats()?;
+    println!(
+        "server stats   : {} completed | {} frames in / {} out | {} sheds",
+        stats.get("completed")?.as_usize().unwrap_or(0),
+        stats.get("frames_in")?.as_usize().unwrap_or(0),
+        stats.get("frames_out")?.as_usize().unwrap_or(0),
+        stats.get("sheds")?.as_usize().unwrap_or(0),
+    );
+
+    if shutdown_server {
+        client.shutdown_server()?;
+        println!("server acknowledged shutdown");
+    }
+    client.close();
+    Ok(())
+}
+
+fn arg_value(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let batched = std::env::args().any(|a| a == "--batched");
     let online = std::env::args().any(|a| a == "--online-tune");
+    if let Some(addr) = arg_value("--remote") {
+        let expect_shed = std::env::args().any(|a| a == "--expect-shed");
+        let shutdown = std::env::args().any(|a| a == "--shutdown-server");
+        remote_workload(&addr, expect_shed, shutdown)?;
+        println!("serve_workload OK");
+        return Ok(());
+    }
     if online {
         // Skewed start + online tuning on: the heuristic must recover.
         let client = Client::builder()
@@ -332,6 +452,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 min_samples: 3,
                 retrain_ms: 200,
                 explore: 0.5,
+                model_path: None,
             })
             .build()?;
         online_tune_workload(&client)?;

@@ -1,0 +1,162 @@
+//! Network round-trip benchmark: what the wire layer costs on top of
+//! the in-process service.
+//!
+//! Measures, per dtype (f32 / f64):
+//!
+//! * **single-inflight latency** — one `RemoteClient::solve` round trip
+//!   at a time (codec + TCP + queue + solve), vs the same system
+//!   through the in-process `Client::solve` for the transport overhead;
+//! * **pipelined throughput** — a window of requests submitted before
+//!   the first reply is awaited (the per-connection writer streams
+//!   responses back while later requests are still in flight).
+//!
+//! Results are persisted to `BENCH_net_roundtrip.json` at the repo
+//! root. Pass `--smoke` for the CI-sized iteration budget.
+
+use partisol::api::{Client, SolveSpec};
+use partisol::config::Config;
+use partisol::net::{NetConfig, NetServer, RemoteClient};
+use partisol::solver::generator::random_dd_system;
+use partisol::solver::TriSystem;
+use partisol::util::json::{obj, Json};
+use partisol::util::stats::median;
+use partisol::util::timer::bench_loop;
+use partisol::util::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
+
+const N: usize = 20_000;
+const WINDOW: usize = 32;
+
+struct DtypeReport {
+    key: &'static str,
+    remote_latency_us: f64,
+    local_latency_us: f64,
+    pipelined_rps: f64,
+    single_rps: f64,
+}
+
+fn bench_dtype(
+    remote: &RemoteClient,
+    local: &Arc<Client>,
+    sys64: Option<Arc<TriSystem<f64>>>,
+    sys32: Option<Arc<TriSystem<f32>>>,
+    loop_t: Duration,
+    min_iters: usize,
+) -> DtypeReport {
+    let key = if sys64.is_some() { "f64" } else { "f32" };
+    let spec = || -> SolveSpec<'static> {
+        match (&sys64, &sys32) {
+            (Some(s), _) => SolveSpec::shared_f64(s.clone()).with_residual(false),
+            (_, Some(s)) => SolveSpec::shared_f32(s.clone()).with_residual(false),
+            _ => unreachable!("one dtype is always set"),
+        }
+    };
+
+    // Single-inflight latency: remote vs in-process.
+    let samples = bench_loop(loop_t, min_iters, || {
+        remote.solve_blocking(spec()).expect("remote solve");
+    });
+    let remote_latency_us = median(&samples) * 1e6;
+    let samples = bench_loop(loop_t, min_iters, || {
+        local.solve(spec()).expect("local solve");
+    });
+    let local_latency_us = median(&samples) * 1e6;
+
+    // Pipelined: WINDOW requests in flight on one connection.
+    let samples = bench_loop(loop_t, min_iters, || {
+        let specs: Vec<SolveSpec<'static>> = (0..WINDOW).map(|_| spec()).collect();
+        for h in remote.submit_many(specs).expect("pipelined submit") {
+            match h.wait() {
+                Ok(_) => {}
+                Err(partisol::api::ApiError::Backpressure { .. }) => {}
+                Err(e) => panic!("pipelined member failed: {e}"),
+            }
+        }
+    });
+    let per_window = median(&samples);
+    let pipelined_rps = WINDOW as f64 / per_window;
+    let single_rps = 1e6 / remote_latency_us;
+
+    println!(
+        "{key}: remote {remote_latency_us:>8.0} µs | local {local_latency_us:>8.0} µs \
+         (wire overhead {:>6.0} µs) | pipelined {pipelined_rps:>7.0} req/s \
+         ({:.1}x single-inflight)",
+        remote_latency_us - local_latency_us,
+        pipelined_rps / single_rps
+    );
+    DtypeReport {
+        key,
+        remote_latency_us,
+        local_latency_us,
+        pipelined_rps,
+        single_rps,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (loop_t, min_iters) = if smoke {
+        (Duration::from_millis(50), 3)
+    } else {
+        (Duration::from_secs(2), 20)
+    };
+
+    let mut cfg = Config {
+        probe_pjrt: false,
+        workers: 2,
+        ..Config::default()
+    };
+    cfg.net = NetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        ..NetConfig::default()
+    };
+    let net = cfg.net.clone();
+    let local = Arc::new(Client::from_config(cfg).expect("start service"));
+    let server = NetServer::start(local.clone(), net).expect("start server");
+    let addr = server.local_addr().to_string();
+    let remote = RemoteClient::connect(&addr).expect("connect");
+    println!("bench_net_roundtrip: server on {addr}, N = {N}, window = {WINDOW}\n");
+
+    let mut rng = Pcg64::new(11);
+    let sys64 = Arc::new(random_dd_system::<f64>(&mut rng, N, 0.5));
+    let sys32 = Arc::new(random_dd_system::<f32>(&mut rng, N, 0.5));
+
+    let f64_report = bench_dtype(&remote, &local, Some(sys64), None, loop_t, min_iters);
+    let f32_report = bench_dtype(&remote, &local, None, Some(sys32), loop_t, min_iters);
+
+    let m = server.metrics();
+    println!(
+        "\nnet counters: {} frames in / {} out, {} sheds, {} conns",
+        m.net_frames_in, m.net_frames_out, m.net_sheds, m.net_connections_accepted
+    );
+
+    let section = |r: &DtypeReport| {
+        obj(vec![
+            ("remote_latency_us", Json::Num(r.remote_latency_us)),
+            ("local_latency_us", Json::Num(r.local_latency_us)),
+            (
+                "wire_overhead_us",
+                Json::Num(r.remote_latency_us - r.local_latency_us),
+            ),
+            ("pipelined_rps", Json::Num(r.pipelined_rps)),
+            ("single_inflight_rps", Json::Num(r.single_rps)),
+        ])
+    };
+    let report = obj(vec![
+        ("bench", Json::Str("net_roundtrip".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("n", Json::Num(N as f64)),
+        ("window", Json::Num(WINDOW as f64)),
+        (f64_report.key, section(&f64_report)),
+        (f32_report.key, section(&f32_report)),
+        ("frames_in", Json::Num(m.net_frames_in as f64)),
+        ("frames_out", Json::Num(m.net_frames_out as f64)),
+    ]);
+    std::fs::write("BENCH_net_roundtrip.json", report.to_string_pretty())
+        .expect("write BENCH_net_roundtrip.json");
+    println!("wrote BENCH_net_roundtrip.json");
+
+    remote.close();
+    server.shutdown();
+}

@@ -162,6 +162,7 @@ fn bench_telemetry_record(loop_t: Duration, min_iters: usize) -> f64 {
             dtype: Dtype::F64,
             backend: Backend::Native,
             latency_ns: latency,
+            batch: 1,
         }));
     });
     let t = median(&samples);

@@ -1,17 +1,24 @@
 //! `partisol serve` — run the threaded solve service on a synthetic
 //! workload through the typed client API and report latency/throughput
-//! plus every error-path counter.
+//! plus every error-path counter, or (`--listen`) expose the service
+//! over TCP through the [`crate::net`] wire protocol until a remote
+//! `Shutdown` frame arrives.
 
 use crate::api::{Client, SolveSpec};
 use crate::cli::args::Args;
 use crate::config::Config;
+use crate::coordinator::metrics::MetricsSnapshot;
 use crate::error::Result;
+use crate::net::NetServer;
 use crate::solver::generator::random_dd_system;
 use crate::util::Pcg64;
+use std::io::Write as _;
+use std::sync::Arc;
 use std::time::Instant;
 
 const HELP: &str = "\
-partisol serve — drive the solve service with a synthetic workload
+partisol serve — drive the solve service with a synthetic workload, or
+serve it over TCP
 
 OPTIONS:
     --requests <r>      number of requests (default 64)
@@ -20,9 +27,15 @@ OPTIONS:
     --workers <w>       native worker threads (default 2)
     --pool-size <p>     exec-pool worker threads shared by all solves
                         (default: all cores; [exec] pool_size in config)
+    --queue-depth <d>   bounded request-queue depth (backpressure beyond)
     --config <path>     TOML config file (flags override it)
     --online-tune       enable online tuning ([online] enabled = true)
     --seed <s>          workload seed (default 7)
+    --listen <addr>     serve the wire protocol on <addr> (host:port;
+                        port 0 picks a free port) instead of running the
+                        synthetic workload; runs until a remote client
+                        sends a Shutdown frame ([net] table for the
+                        connection cap, read timeout and frame cap)
 ";
 
 pub fn run(argv: &[String]) -> Result<()> {
@@ -42,13 +55,19 @@ pub fn run(argv: &[String]) -> Result<()> {
     };
     cfg.workers = args.get_usize("workers", cfg.workers)?;
     cfg.pool_size = args.get_usize("pool-size", cfg.pool_size)?;
+    cfg.queue_depth = args.get_usize("queue-depth", cfg.queue_depth)?;
     if args.has("online-tune") {
         cfg.online.enabled = true;
     }
-    if cfg.workers == 0 || cfg.pool_size == 0 {
+    if cfg.workers == 0 || cfg.pool_size == 0 || cfg.queue_depth == 0 {
         return Err(crate::Error::Cli(
-            "--workers and --pool-size must be positive".into(),
+            "--workers, --pool-size and --queue-depth must be positive".into(),
         ));
+    }
+
+    if let Some(addr) = args.get("listen") {
+        cfg.net.addr = addr.to_string();
+        return run_listener(cfg);
     }
 
     let client = Client::from_config(cfg)?;
@@ -118,4 +137,64 @@ pub fn run(argv: &[String]) -> Result<()> {
     }
     client.shutdown();
     Ok(())
+}
+
+/// `serve --listen`: expose the service over TCP until a remote client
+/// sends a `Shutdown` frame, then report the serving-stack counters.
+fn run_listener(cfg: Config) -> Result<()> {
+    let online = cfg.online.enabled;
+    let net_cfg = cfg.net.clone();
+    let client = Arc::new(Client::from_config(cfg)?);
+    let server = NetServer::start(client, net_cfg)?;
+    // The bound address on its own line so scripts (and the CI
+    // net-smoke step) can scrape the OS-assigned port.
+    println!("listening on {}", server.local_addr());
+    std::io::stdout().flush().ok();
+    server.run_until_shutdown();
+
+    let m = server.metrics();
+    println!("shutdown requested; connections drained");
+    print_net_metrics(&m, online);
+    server.shutdown();
+    Ok(())
+}
+
+/// The serving-stack counters `serve --listen` reports on exit.
+fn print_net_metrics(m: &MetricsSnapshot, online: bool) {
+    println!(
+        "requests           : {} submitted | {} completed | {} failed",
+        m.submitted, m.completed, m.failed
+    );
+    println!(
+        "latency e2e        : mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms",
+        m.mean_e2e_us / 1e3,
+        m.p50_e2e_us / 1e3,
+        m.p99_e2e_us / 1e3
+    );
+    println!(
+        "backends           : pjrt {} | native {} | thomas {} ({} batches)",
+        m.pjrt_solves, m.native_solves, m.thomas_solves, m.batches
+    );
+    println!(
+        "plan cache         : {} hits / {} misses",
+        m.plan_cache_hits, m.plan_cache_misses
+    );
+    println!(
+        "net connections    : {} accepted / {} open",
+        m.net_connections_accepted, m.net_connections_open
+    );
+    println!(
+        "net frames         : {} in / {} out",
+        m.net_frames_in, m.net_frames_out
+    );
+    println!(
+        "net admission      : {} sheds (backpressure) | {} deadlines expired",
+        m.net_sheds, m.net_deadline_expired
+    );
+    if online {
+        println!(
+            "online tuning      : epoch {} | {} retrains | {} samples recorded / {} dropped",
+            m.model_epoch, m.retrains, m.telemetry_recorded, m.telemetry_dropped
+        );
+    }
 }

@@ -27,6 +27,10 @@ OPTIONS:
     --threads <t>       parallelism cap on the shared exec pool
                         (default: all cores; no threads are spawned
                         per solve — the persistent pool is reused)
+    --remote <addr>     solve against a running `serve --listen <addr>`
+                        server over the wire protocol instead of the
+                        in-process service (the server's planner picks
+                        m and backend; --m/--backend still override)
     --explain           print the chosen SolvePlan before solving
 ";
 
@@ -41,6 +45,10 @@ pub fn run(argv: &[String]) -> Result<()> {
     let artifacts = args.get("artifacts").unwrap_or("artifacts").to_string();
     let seed = args.get_u64("seed", 42)?;
     let threads = args.get_usize("threads", crate::exec::default_pool_size())?;
+
+    if let Some(addr) = args.get("remote") {
+        return run_remote(addr, n, dtype, seed, &args);
+    }
 
     // One decision layer: the client probes what backends exist and
     // plans every request through the shared planner + plan cache.
@@ -99,6 +107,64 @@ pub fn run(argv: &[String]) -> Result<()> {
         crate::api::Solution::F32(x) => println!("x[0..{head}]          : {:?}", &x[..head]),
     }
     client.shutdown();
+    let tol = match dtype {
+        Dtype::F64 => 1e-6,
+        Dtype::F32 => 1e-1,
+    };
+    if res.is_nan() || res >= tol {
+        return Err(crate::Error::Solver(format!("residual too large: {res:e}")));
+    }
+    Ok(())
+}
+
+/// `solve --remote <addr>`: the same end-to-end solve, executed by a
+/// running `serve --listen` server over the wire protocol.
+fn run_remote(addr: &str, n: usize, dtype: Dtype, seed: u64, args: &Args) -> Result<()> {
+    use crate::net::RemoteClient;
+
+    let client = RemoteClient::connect(addr)
+        .map_err(|e| crate::Error::Service(format!("connect {addr}: {e}")))?;
+    let rtt = client
+        .ping()
+        .map_err(|e| crate::Error::Service(format!("ping: {e}")))?;
+    println!("connected to {addr} (ping {:.2} ms)", rtt.as_secs_f64() * 1e3);
+
+    let mut rng = Pcg64::new(seed);
+    let mut sw = Stopwatch::new();
+    let mut spec = match dtype {
+        Dtype::F64 => SolveSpec::f64(random_dd_system::<f64>(&mut rng, n, 0.5)),
+        Dtype::F32 => SolveSpec::f32(random_dd_system::<f32>(&mut rng, n, 0.5)),
+    };
+    sw.lap("generate");
+    if let Some(m) = args.get("m").map(|_| args.get_usize("m", 0)).transpose()? {
+        spec = spec.with_m(m);
+    }
+    if let Some(b) = args.get("backend").map(Backend::parse).transpose()? {
+        spec = spec.with_backend(b);
+    }
+    println!("N = {} ({n}), dtype {} (planned server-side)", fmt_n(n), dtype.name());
+
+    let resp = client
+        .solve_blocking(spec)
+        .map_err(|e| crate::Error::Service(format!("remote solve: {e}")))?;
+    let solve_t = sw.lap("solve");
+
+    let res = resp.residual.unwrap_or(f64::NAN);
+    println!("served m         : {}", resp.m);
+    println!("backend          : {}", resp.backend.name());
+    println!(
+        "round trip       : {:.3} ms (exec {:.3} ms + queue {:.3} ms server-side)",
+        solve_t.as_secs_f64() * 1e3,
+        resp.exec_us / 1e3,
+        resp.queue_us / 1e3
+    );
+    println!("max|Ax - d|      : {res:.3e}");
+    let head = 4.min(resp.x.len());
+    match &resp.x {
+        crate::api::Solution::F64(x) => println!("x[0..{head}]          : {:?}", &x[..head]),
+        crate::api::Solution::F32(x) => println!("x[0..{head}]          : {:?}", &x[..head]),
+    }
+    client.close();
     let tol = match dtype {
         Dtype::F64 => 1e-6,
         Dtype::F32 => 1e-1,

@@ -167,6 +167,7 @@ fn run_online(args: &Args) -> Result<()> {
         min_samples,
         retrain_ms: 200,
         explore,
+        model_path: None,
     };
     online.validate()?;
 

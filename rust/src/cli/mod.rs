@@ -14,7 +14,8 @@ USAGE:
     partisol <COMMAND> [OPTIONS]
 
 COMMANDS:
-    solve       solve a generated SLAE end-to-end (native or PJRT runtime)
+    solve       solve a generated SLAE end-to-end (native or PJRT runtime;
+                `solve --remote <addr>` solves against a network server)
     tune        run the empirical sweep -> correction -> heuristic pipeline
                 (`tune online`: telemetry-driven retraining replay + drift report)
     predict     predict optimum m / recursion plan for an SLAE size
@@ -22,6 +23,7 @@ COMMANDS:
     calibrate   re-fit the GPU-simulator constants against the paper tables
     occupancy   print the Fig-1 occupancy series
     serve       run the threaded solve service on a synthetic workload
+                (`serve --listen <addr>`: expose it over the wire protocol)
     report      print paper-vs-reproduction summary tables
     help        show this message
 

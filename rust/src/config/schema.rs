@@ -4,6 +4,7 @@
 use super::parser::{parse, TomlTable};
 use crate::error::{Error, Result};
 use crate::gpu::spec::{Dtype, GpuCard};
+use crate::net::NetConfig;
 use crate::tuner::online::OnlineTuneConfig;
 use std::path::Path;
 
@@ -72,6 +73,9 @@ pub struct Config {
     /// Online tuning: telemetry-driven kNN retraining hot-swapped into
     /// the planner (`[online]` table; disabled by default).
     pub online: OnlineTuneConfig,
+    /// Network serving layer (`[net]` table; used by `serve --listen`
+    /// and `NetServer::start`).
+    pub net: NetConfig,
 }
 
 impl Default for Config {
@@ -90,6 +94,7 @@ impl Default for Config {
             solver_threads: 0,
             pool_size: crate::exec::default_pool_size(),
             online: OnlineTuneConfig::default(),
+            net: NetConfig::default(),
         }
     }
 }
@@ -200,12 +205,34 @@ impl Config {
                 .as_float()
                 .ok_or_else(|| Error::Config("online.explore must be a number".into()))?;
         }
+        if let Some(v) = t.get("online.model_path") {
+            let path = v
+                .as_str()
+                .ok_or_else(|| Error::Config("online.model_path must be a string".into()))?;
+            cfg.online.model_path = (!path.is_empty()).then(|| path.to_string());
+        }
+        if let Some(v) = t.get("net.addr") {
+            cfg.net.addr = v
+                .as_str()
+                .ok_or_else(|| Error::Config("net.addr must be a string".into()))?
+                .to_string();
+        }
+        if let Some(v) = t.get("net.max_conns") {
+            cfg.net.max_conns = int_field(v, "net.max_conns")?;
+        }
+        if let Some(v) = t.get("net.read_timeout_ms") {
+            cfg.net.read_timeout_ms = int_field(v, "net.read_timeout_ms")? as u64;
+        }
+        if let Some(v) = t.get("net.max_frame_bytes") {
+            cfg.net.max_frame_bytes = int_field(v, "net.max_frame_bytes")?;
+        }
         if cfg.workers == 0 || cfg.queue_depth == 0 || cfg.max_batch == 0 || cfg.pool_size == 0 {
             return Err(Error::Config(
                 "workers, queue_depth, max_batch, pool_size must be positive".into(),
             ));
         }
         cfg.online.validate()?;
+        cfg.net.validate()?;
         Ok(cfg)
     }
 }
@@ -304,10 +331,29 @@ mod tests {
         assert_eq!(c.online.retrain_ms, 250);
         assert_eq!(c.online.explore, 0.25);
         assert!(!Config::default().online.enabled, "off by default");
+        let c = Config::from_str("[online]\nmodel_path = \"/tmp/model.json\"").unwrap();
+        assert_eq!(c.online.model_path.as_deref(), Some("/tmp/model.json"));
+        assert!(Config::default().online.model_path.is_none());
         assert!(Config::from_str("[online]\nenabled = true\nexplore = 1.5").is_err());
         assert!(Config::from_str("[online]\nenabled = true\nwindow = 0").is_err());
         // Knobs without the switch parse fine (inert until enabled).
         assert!(Config::from_str("[online]\nwindow = 0").is_ok());
+    }
+
+    #[test]
+    fn net_knobs_roundtrip_and_validate() {
+        let c = Config::from_str(
+            "[net]\naddr = \"0.0.0.0:9000\"\nmax_conns = 8\nread_timeout_ms = 500\nmax_frame_bytes = 1048576",
+        )
+        .unwrap();
+        assert_eq!(c.net.addr, "0.0.0.0:9000");
+        assert_eq!(c.net.max_conns, 8);
+        assert_eq!(c.net.read_timeout_ms, 500);
+        assert_eq!(c.net.max_frame_bytes, 1 << 20);
+        assert_eq!(Config::default().net.addr, "127.0.0.1:7071");
+        assert!(Config::from_str("[net]\nmax_conns = 0").is_err());
+        assert!(Config::from_str("[net]\nmax_frame_bytes = 16").is_err());
+        assert!(Config::from_str("[net]\naddr = \"\"").is_err());
     }
 
     #[test]

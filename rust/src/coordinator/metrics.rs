@@ -77,10 +77,46 @@ pub struct Metrics {
     pub e2e_latency: Histogram,
 }
 
+/// Counters of the network serving layer ([`crate::net::NetServer`]).
+/// They live here — next to the service counters they extend — so one
+/// [`MetricsSnapshot`] describes the whole serving stack;
+/// `NetServer::metrics` fills them into the snapshot via
+/// [`NetMetrics::fill`].
+#[derive(Default)]
+pub struct NetMetrics {
+    /// Connections the acceptor admitted (a handler thread was spawned).
+    pub connections_accepted: AtomicU64,
+    /// Currently open connections (gauge: admitted minus closed).
+    pub connections_open: AtomicU64,
+    /// Frames successfully decoded off client connections.
+    pub frames_in: AtomicU64,
+    /// Frames written back to clients (responses, errors, control).
+    pub frames_out: AtomicU64,
+    /// Requests shed with a `Backpressure` frame (full service queue or
+    /// the connection cap).
+    pub sheds: AtomicU64,
+    /// Requests whose per-request deadline expired before the solve
+    /// completed (the client got a `Timeout` error frame).
+    pub deadline_expired: AtomicU64,
+}
+
+impl NetMetrics {
+    /// Copy the network counters into a snapshot.
+    pub fn fill(&self, snap: &mut MetricsSnapshot) {
+        snap.net_connections_accepted = self.connections_accepted.load(Ordering::Relaxed);
+        snap.net_connections_open = self.connections_open.load(Ordering::Relaxed);
+        snap.net_frames_in = self.frames_in.load(Ordering::Relaxed);
+        snap.net_frames_out = self.frames_out.load(Ordering::Relaxed);
+        snap.net_sheds = self.sheds.load(Ordering::Relaxed);
+        snap.net_deadline_expired = self.deadline_expired.load(Ordering::Relaxed);
+    }
+}
+
 /// A point-in-time copy for reporting. The plan-cache counters live in
-/// the router's cache, and the exec-pool / workspace-reuse counters in
-/// the shared worker pool and workspace pool; `Service::metrics` fills
-/// them in.
+/// the router's cache, the exec-pool / workspace-reuse counters in
+/// the shared worker pool and workspace pool, and the `net_*` counters
+/// in the network layer's [`NetMetrics`]; `Service::metrics` (and
+/// `NetServer::metrics` above it) fill them in.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
@@ -120,6 +156,18 @@ pub struct MetricsSnapshot {
     pub telemetry_dropped: u64,
     /// Solves served at an exploration m instead of the prediction.
     pub explored_solves: u64,
+    /// Network layer: connections the acceptor admitted.
+    pub net_connections_accepted: u64,
+    /// Network layer: currently open connections.
+    pub net_connections_open: u64,
+    /// Network layer: frames decoded off client connections.
+    pub net_frames_in: u64,
+    /// Network layer: frames written back to clients.
+    pub net_frames_out: u64,
+    /// Network layer: requests shed with a `Backpressure` frame.
+    pub net_sheds: u64,
+    /// Network layer: per-request deadlines that expired server-side.
+    pub net_deadline_expired: u64,
     pub mean_e2e_us: f64,
     pub p50_e2e_us: f64,
     pub p99_e2e_us: f64,
@@ -162,6 +210,12 @@ impl Metrics {
             telemetry_recorded: 0,
             telemetry_dropped: 0,
             explored_solves: 0,
+            net_connections_accepted: 0,
+            net_connections_open: 0,
+            net_frames_in: 0,
+            net_frames_out: 0,
+            net_sheds: 0,
+            net_deadline_expired: 0,
             mean_e2e_us: self.e2e_latency.mean_us(),
             p50_e2e_us: self.e2e_latency.percentile_us(50.0),
             p99_e2e_us: self.e2e_latency.percentile_us(99.0),
@@ -221,6 +275,32 @@ mod tests {
         assert_eq!(s.rejected_shutdown, 4);
         assert_eq!(s.pjrt_fallbacks, 5);
         assert_eq!(s.responses_dropped, 6);
+    }
+
+    #[test]
+    fn net_counters_fill_into_the_snapshot() {
+        // The network layer's counters ride the same snapshot as the
+        // service counters; `NetMetrics::fill` must copy every one.
+        let net = NetMetrics::default();
+        net.connections_accepted.fetch_add(7, Ordering::Relaxed);
+        net.connections_open.fetch_add(2, Ordering::Relaxed);
+        net.frames_in.fetch_add(31, Ordering::Relaxed);
+        net.frames_out.fetch_add(29, Ordering::Relaxed);
+        net.sheds.fetch_add(5, Ordering::Relaxed);
+        net.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        let mut s = Metrics::default().snapshot();
+        assert_eq!(
+            (s.net_connections_accepted, s.net_frames_in, s.net_sheds),
+            (0, 0, 0),
+            "service snapshots default the net counters to zero"
+        );
+        net.fill(&mut s);
+        assert_eq!(s.net_connections_accepted, 7);
+        assert_eq!(s.net_connections_open, 2);
+        assert_eq!(s.net_frames_in, 31);
+        assert_eq!(s.net_frames_out, 29);
+        assert_eq!(s.net_sheds, 5);
+        assert_eq!(s.net_deadline_expired, 1);
     }
 
     #[test]

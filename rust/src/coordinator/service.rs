@@ -553,7 +553,9 @@ fn maybe_explore(inner: &Inner, n: usize, opts: &mut SolveOptions) -> bool {
 
 /// Record one executed solve into the telemetry ring (atomics only —
 /// the hot path never blocks or allocates here). Batch members report
-/// the fused execution time split evenly across the group.
+/// the fused execution time split evenly across the group, tagged with
+/// the batch size so the trainer only compares like-batch samples
+/// (amortized fused latencies are not comparable to singleton ones).
 fn record_telemetry(
     inner: &Inner,
     n: usize,
@@ -570,6 +572,7 @@ fn record_telemetry(
             dtype,
             backend,
             (exec_us * 1e3 / batch_size.max(1) as f64) as u64,
+            batch_size.max(1),
         );
     }
 }

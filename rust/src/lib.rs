@@ -34,6 +34,10 @@
 //!   `ClientBuilder`, dtype-erased `SystemPayload` (owned / `Arc`-shared /
 //!   borrowed zero-copy), `SolveHandle` futures, batched `submit_many`,
 //!   and the structured `ApiError` taxonomy. **The public solve API.**
+//! * [`net`] — the network serving layer: versioned binary wire
+//!   protocol, `NetServer` (TCP acceptor + per-connection pipelined
+//!   handlers with deadline-aware admission control and load shedding)
+//!   and `RemoteClient`, the wire twin of `Client`.
 //! * [`data`] — the paper's published tables embedded as typed datasets.
 //! * [`util`], [`config`], [`cli`], [`testkit`] — offline substrates
 //!   (RNG, stats, JSON, tables, TOML-subset config, CLI, property testing).
@@ -47,6 +51,7 @@ pub mod error;
 pub mod exec;
 pub mod gpu;
 pub mod ml;
+pub mod net;
 pub mod plan;
 pub mod recursion;
 pub mod runtime;

@@ -51,6 +51,17 @@ impl Knn {
         self.xs.len()
     }
 
+    /// The memorized training features (the model's entire state,
+    /// together with [`Knn::ys`] — used to persist fitted models).
+    pub fn xs(&self) -> &[f64] {
+        &self.xs
+    }
+
+    /// The memorized training labels.
+    pub fn ys(&self) -> &[usize] {
+        &self.ys
+    }
+
     /// Predict the label for one feature value.
     pub fn predict(&self, x: f64) -> usize {
         // Partial sort of the k nearest (n is tiny — dozens of points).

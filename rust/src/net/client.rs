@@ -1,0 +1,403 @@
+//! [`RemoteClient`]: the network counterpart of [`crate::api::Client`].
+//!
+//! It speaks the [`super::wire`] protocol over one TCP connection and
+//! exposes the same submit / `submit_many` / blocking-`solve` surface,
+//! returning the same [`SolveHandle`] futures — examples and benches
+//! swap transports by swapping the client object.
+//!
+//! Semantics differences from the in-process client, both inherent to
+//! the pipelined transport:
+//!
+//! * Admission is asynchronous: a shed request ([`ApiError::Backpressure`])
+//!   surfaces on the returned handle's `wait`, not on `submit` itself
+//!   (the frame has already left). [`RemoteClient::solve_blocking`]
+//!   retries shed requests transparently.
+//! * Responses arrive in submission order per connection.
+//!
+//! `connect` performs a one-ping handshake, so a server at its
+//! connection cap fails the *connect* with the connection-level
+//! `Backpressure` it shed us with — distinguishable from a crash.
+
+use super::wire::{read_frame, write_request, Frame, WireError};
+use super::DEFAULT_MAX_FRAME_BYTES;
+use crate::api::{ApiError, SolveHandle, SolveSpec, SystemPayload, SystemSource};
+use crate::coordinator::service::Reply;
+use crate::coordinator::SolveResponse;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Control replies (everything that is not a per-request solve reply).
+enum ControlMsg {
+    Pong(u64),
+    Stats(String),
+    ShutdownAck,
+}
+
+struct Shared {
+    /// In-flight request ids → reply channels ([`SolveHandle`] rx ends).
+    pending: Mutex<HashMap<u64, mpsc::Sender<Reply>>>,
+    /// At most one control round-trip is in flight at a time.
+    control: Mutex<Option<mpsc::Sender<ControlMsg>>>,
+    /// Set once the reader thread observes a dead connection.
+    dead: AtomicBool,
+    /// The connection-level error (id 0 frame) the server sent before
+    /// closing, if any — e.g. the over-`max_conns` Backpressure shed.
+    /// Surfaced instead of a bare `Disconnected` so callers can tell a
+    /// shed from a crash.
+    conn_error: Mutex<Option<ApiError>>,
+}
+
+impl Shared {
+    /// Fail every in-flight request (dropping the senders resolves
+    /// their handles as [`ApiError::Disconnected`]).
+    fn poison(&self) {
+        self.dead.store(true, Ordering::Release);
+        self.pending.lock().unwrap().clear();
+        *self.control.lock().unwrap() = None;
+    }
+
+    /// Why this connection is unusable: the server's connection-level
+    /// error when one was sent, a plain `Disconnected` otherwise.
+    fn error(&self) -> ApiError {
+        self.conn_error
+            .lock()
+            .unwrap()
+            .clone()
+            .unwrap_or(ApiError::Disconnected)
+    }
+}
+
+/// A connected remote solve client.
+pub struct RemoteClient {
+    writer: Mutex<BufWriter<TcpStream>>,
+    stream: TcpStream,
+    shared: Arc<Shared>,
+    next_id: AtomicU64,
+    max_frame_bytes: usize,
+    reader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RemoteClient {
+    /// Connect to a [`crate::net::NetServer`] at `addr`
+    /// (`host:port`).
+    pub fn connect(addr: &str) -> Result<RemoteClient, ApiError> {
+        RemoteClient::connect_with(addr, DEFAULT_MAX_FRAME_BYTES)
+    }
+
+    /// Connect with an explicit inbound frame-size cap (must admit the
+    /// largest expected solution frame).
+    pub fn connect_with(addr: &str, max_frame_bytes: usize) -> Result<RemoteClient, ApiError> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| ApiError::Service(format!("connect {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let wstream = stream
+            .try_clone()
+            .map_err(|e| ApiError::Service(format!("clone stream: {e}")))?;
+        let rstream = stream
+            .try_clone()
+            .map_err(|e| ApiError::Service(format!("clone stream: {e}")))?;
+        let shared = Arc::new(Shared {
+            pending: Mutex::new(HashMap::new()),
+            control: Mutex::new(None),
+            dead: AtomicBool::new(false),
+            conn_error: Mutex::new(None),
+        });
+        let shared2 = shared.clone();
+        let reader = std::thread::Builder::new()
+            .name("partisol-net-client".into())
+            .spawn(move || reader_loop(rstream, shared2, max_frame_bytes))
+            .map_err(|e| ApiError::Service(format!("spawn reader: {e}")))?;
+        let client = RemoteClient {
+            writer: Mutex::new(BufWriter::new(wstream)),
+            stream,
+            shared,
+            next_id: AtomicU64::new(0),
+            max_frame_bytes,
+            reader: Some(reader),
+        };
+        // Handshake: one ping proves the server admitted the connection
+        // and speaks the protocol. A server at its connection cap
+        // answers with a connection-level Backpressure frame and closes
+        // — surface that as `Backpressure`, not a bare `Disconnected`.
+        if let Err(e) = client.ping() {
+            let err = match client.shared.error() {
+                ApiError::Disconnected => e,
+                conn_level => conn_level,
+            };
+            return Err(err);
+        }
+        Ok(client)
+    }
+
+    fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn check_alive(&self) -> Result<(), ApiError> {
+        if self.shared.dead.load(Ordering::Acquire) {
+            return Err(self.shared.error());
+        }
+        Ok(())
+    }
+
+    /// Submit one request; returns a [`SolveHandle`] exactly like the
+    /// local client. A server-side shed resolves the handle as
+    /// [`ApiError::Backpressure`].
+    pub fn submit(&self, spec: SolveSpec<'static>) -> Result<SolveHandle, ApiError> {
+        self.submit_deadline(spec, None)
+    }
+
+    /// Submit with a per-request deadline the **server** honors: if the
+    /// solve has not completed within `deadline`, the server answers
+    /// [`ApiError::Timeout`] instead of a solution.
+    pub fn submit_deadline(
+        &self,
+        spec: SolveSpec<'static>,
+        deadline: Option<Duration>,
+    ) -> Result<SolveHandle, ApiError> {
+        self.check_alive()?;
+        let id = self.next_id();
+        let (tx, rx) = mpsc::channel();
+        self.shared.pending.lock().unwrap().insert(id, tx);
+        let deadline_ms = deadline
+            .map(|d| (d.as_millis().max(1)).min(u32::MAX as u128) as u32)
+            .unwrap_or(0);
+        let res = {
+            let mut w = self.writer.lock().unwrap();
+            write_request(&mut *w, id, &spec.opts, deadline_ms, &spec.payload)
+                .and_then(|_| w.flush())
+        };
+        if let Err(e) = res {
+            self.shared.pending.lock().unwrap().remove(&id);
+            return Err(ApiError::Service(format!("send request: {e}")));
+        }
+        // The reader may have poisoned the map between the insert and
+        // now; re-check so a handle registered after the purge cannot
+        // wait forever.
+        if self.shared.dead.load(Ordering::Acquire) {
+            self.shared.pending.lock().unwrap().remove(&id);
+            return Err(ApiError::Disconnected);
+        }
+        Ok(SolveHandle::new(id, rx))
+    }
+
+    /// Submit a group pipelined under one writer lock / one flush. The
+    /// server admits each member against its bounded queue; shed
+    /// members resolve as [`ApiError::Backpressure`] on their handles
+    /// while the rest solve normally (per-member admission, unlike the
+    /// local all-or-nothing `submit_many` — the frames are already on
+    /// the wire).
+    pub fn submit_many(
+        &self,
+        specs: Vec<SolveSpec<'static>>,
+    ) -> Result<Vec<SolveHandle>, ApiError> {
+        self.check_alive()?;
+        let mut handles = Vec::with_capacity(specs.len());
+        let mut w = self.writer.lock().unwrap();
+        for spec in specs {
+            let id = self.next_id();
+            let (tx, rx) = mpsc::channel();
+            self.shared.pending.lock().unwrap().insert(id, tx);
+            if let Err(e) = write_request(&mut *w, id, &spec.opts, 0, &spec.payload) {
+                self.shared.pending.lock().unwrap().remove(&id);
+                return Err(ApiError::Service(format!("send request: {e}")));
+            }
+            handles.push(SolveHandle::new(id, rx));
+        }
+        w.flush()
+            .map_err(|e| ApiError::Service(format!("flush requests: {e}")))?;
+        drop(w);
+        if self.shared.dead.load(Ordering::Acquire) {
+            // See submit_deadline: handles registered after a purge
+            // must fail now rather than wait forever.
+            let mut pending = self.shared.pending.lock().unwrap();
+            for h in &handles {
+                pending.remove(&h.id());
+            }
+            return Err(ApiError::Disconnected);
+        }
+        Ok(handles)
+    }
+
+    /// Submit and wait: the blocking round-trip.
+    pub fn solve(&self, spec: SolveSpec<'static>) -> Result<SolveResponse, ApiError> {
+        self.submit(spec)?.wait()
+    }
+
+    /// Blocking round-trip that rides out server-side backpressure:
+    /// shed requests are resubmitted after a short backoff until
+    /// admitted or a non-retryable error. Owned payloads are promoted
+    /// to `Arc`-shared once up front (a move, not a copy), so every
+    /// attempt — including the first — clones only a pointer.
+    pub fn solve_blocking(&self, spec: SolveSpec<'static>) -> Result<SolveResponse, ApiError> {
+        const BACKOFF: Duration = Duration::from_micros(200);
+        let SolveSpec { payload, opts } = spec;
+        let payload: SystemPayload<'static> = match payload {
+            SystemPayload::F64(SystemSource::Owned(sys)) => {
+                SystemPayload::F64(SystemSource::Shared(Arc::new(sys)))
+            }
+            SystemPayload::F32(SystemSource::Owned(sys)) => {
+                SystemPayload::F32(SystemSource::Shared(Arc::new(sys)))
+            }
+            other => other,
+        };
+        loop {
+            let retry = SolveSpec {
+                payload: payload.clone(),
+                opts: opts.clone(),
+            };
+            match self.solve(retry) {
+                Err(ApiError::Backpressure { .. }) => std::thread::sleep(BACKOFF),
+                other => return other,
+            }
+        }
+    }
+
+    /// Round-trip a ping; returns the measured latency.
+    pub fn ping(&self) -> Result<Duration, ApiError> {
+        let t0 = Instant::now();
+        let nonce = 0x5050 ^ self.next_id();
+        match self.control_roundtrip(&Frame::Ping { nonce })? {
+            ControlMsg::Pong(got) if got == nonce => Ok(t0.elapsed()),
+            ControlMsg::Pong(_) => Err(ApiError::Service("pong nonce mismatch".into())),
+            _ => Err(ApiError::Service("unexpected control reply".into())),
+        }
+    }
+
+    /// Fetch the server's metrics snapshot (service + net counters) as
+    /// parsed JSON.
+    pub fn stats(&self) -> Result<Json, ApiError> {
+        match self.control_roundtrip(&Frame::StatsRequest)? {
+            ControlMsg::Stats(json) => Json::parse(&json)
+                .map_err(|e| ApiError::Service(format!("bad stats payload: {e}"))),
+            _ => Err(ApiError::Service("unexpected control reply".into())),
+        }
+    }
+
+    /// Ask the server to shut down; resolves once it acknowledges.
+    pub fn shutdown_server(&self) -> Result<(), ApiError> {
+        match self.control_roundtrip(&Frame::Shutdown)? {
+            ControlMsg::ShutdownAck => Ok(()),
+            _ => Err(ApiError::Service("unexpected control reply".into())),
+        }
+    }
+
+    fn control_roundtrip(&self, frame: &Frame) -> Result<ControlMsg, ApiError> {
+        self.check_alive()?;
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut slot = self.shared.control.lock().unwrap();
+            if slot.is_some() {
+                return Err(ApiError::InvalidRequest(
+                    "another control round-trip is in flight".into(),
+                ));
+            }
+            *slot = Some(tx);
+        }
+        let res = {
+            let mut w = self.writer.lock().unwrap();
+            frame.write_to(&mut *w).and_then(|_| w.flush())
+        };
+        if let Err(e) = res {
+            *self.shared.control.lock().unwrap() = None;
+            return Err(ApiError::Service(format!("send control frame: {e}")));
+        }
+        let reply = rx
+            .recv_timeout(Duration::from_secs(30))
+            .map_err(|_| ApiError::Disconnected);
+        *self.shared.control.lock().unwrap() = None;
+        reply
+    }
+
+    /// The inbound frame-size cap this client reads with.
+    pub fn max_frame_bytes(&self) -> usize {
+        self.max_frame_bytes
+    }
+
+    /// Close the connection and join the reader thread.
+    pub fn close(mut self) {
+        self.teardown();
+    }
+
+    fn teardown(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        if let Some(t) = self.reader.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RemoteClient {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+fn reader_loop(stream: TcpStream, shared: Arc<Shared>, max_frame_bytes: usize) {
+    let mut r = BufReader::new(stream);
+    loop {
+        match read_frame(&mut r, max_frame_bytes) {
+            Ok(Frame::Response(resp)) => {
+                let tx = shared.pending.lock().unwrap().remove(&resp.id);
+                if let Some(tx) = tx {
+                    let _ = tx.send(Ok(resp.into_solve_response()));
+                }
+            }
+            Ok(Frame::Error(reply)) => {
+                let tx = shared.pending.lock().unwrap().remove(&reply.id);
+                match tx {
+                    Some(tx) => {
+                        let _ = tx.send(Err(reply.error));
+                    }
+                    None if reply.id == 0 => {
+                        // Connection-level notice (shed / protocol
+                        // error): remember it so the close that follows
+                        // reports the real cause, not Disconnected.
+                        let mut slot = shared.conn_error.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(reply.error);
+                        }
+                    }
+                    None => {
+                        // A reply to an abandoned handle.
+                        crate::log_warn!(
+                            "net client: server error for unknown id {}: {}",
+                            reply.id,
+                            reply.error
+                        );
+                    }
+                }
+            }
+            Ok(Frame::Pong { nonce }) => send_control(&shared, ControlMsg::Pong(nonce)),
+            Ok(Frame::StatsResponse { json }) => send_control(&shared, ControlMsg::Stats(json)),
+            Ok(Frame::ShutdownAck) => send_control(&shared, ControlMsg::ShutdownAck),
+            Ok(_) => {
+                crate::log_warn!("net client: unexpected client-side frame; closing");
+                shared.poison();
+                return;
+            }
+            Err(WireError::Timeout) => continue,
+            Err(WireError::Closed) => {
+                shared.poison();
+                return;
+            }
+            Err(e) => {
+                crate::log_warn!("net client: {e}; closing");
+                shared.poison();
+                return;
+            }
+        }
+    }
+}
+
+fn send_control(shared: &Arc<Shared>, msg: ControlMsg) {
+    let slot = shared.control.lock().unwrap().take();
+    if let Some(tx) = slot {
+        let _ = tx.send(msg);
+    }
+}

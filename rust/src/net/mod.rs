@@ -1,0 +1,115 @@
+//! The network serving layer: a length-prefixed binary wire protocol
+//! ([`wire`]), a TCP [`NetServer`] feeding the in-process service
+//! through [`crate::api::Client`], and a [`RemoteClient`] exposing the
+//! same submit / `submit_many` / blocking-wait surface over the wire —
+//! the ROADMAP's "serves heavy traffic" north star finally gets a
+//! transport external callers can hit.
+//!
+//! ```text
+//!   RemoteClient ──Request frames──▶ NetServer ──Client::submit──▶ Service
+//!        ▲                             │ per-conn reader/writer      (queue,
+//!        └──Response / Error frames────┘ (pipelined, FIFO replies)    batcher,
+//!                                                                    workers)
+//! ```
+//!
+//! Admission control composes with the service's bounded queue: a
+//! submission the queue rejects is answered with a `Backpressure`
+//! error frame (the shed is counted in the `net_sheds` metric), a
+//! connection beyond `max_conns` is shed with a connection-level
+//! `Backpressure` frame, and per-request deadlines expire server-side
+//! into `Timeout` frames. Payloads cross the wire as raw little-endian
+//! arrays and are copied exactly once per direction (wire → owned
+//! system in, solution → frame body out).
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::RemoteClient;
+pub use server::NetServer;
+pub use wire::{Frame, WireError};
+
+use crate::error::{Error, Result};
+
+/// Default inbound frame-size cap: fits the four diagonals of an
+/// n = 2 × 10⁶ f64 system with room to spare.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 256 << 20;
+
+/// The `[net]` config table: knobs of the TCP serving layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetConfig {
+    /// Listen address (`host:port`; port 0 lets the OS pick).
+    pub addr: String,
+    /// Connection cap; further connections are shed with a
+    /// connection-level `Backpressure` frame.
+    pub max_conns: usize,
+    /// Per-connection read timeout in milliseconds: a connection that
+    /// sends nothing for a full window *and* has no reply in flight is
+    /// reaped (0 = never reap; shutdown still unblocks readers by
+    /// closing their read halves).
+    pub read_timeout_ms: u64,
+    /// Largest accepted frame body; oversized frames are rejected
+    /// before allocation and the offending connection is closed.
+    pub max_frame_bytes: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "127.0.0.1:7071".to_string(),
+            max_conns: 64,
+            read_timeout_ms: 30_000,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Validate the knobs (called by `NetServer::start` and the config
+    /// loader).
+    pub fn validate(&self) -> Result<()> {
+        if self.addr.is_empty() {
+            return Err(Error::Config("net.addr must not be empty".into()));
+        }
+        if self.max_conns == 0 {
+            return Err(Error::Config("net.max_conns must be positive".into()));
+        }
+        if self.max_frame_bytes < wire::HEADER_LEN + 64 {
+            return Err(Error::Config(format!(
+                "net.max_frame_bytes must be at least {} (one control frame)",
+                wire::HEADER_LEN + 64
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn net_config_defaults_and_validation() {
+        let cfg = NetConfig::default();
+        assert!(cfg.validate().is_ok());
+        assert!(cfg.max_conns > 0 && cfg.max_frame_bytes > 1 << 20);
+        assert!(NetConfig {
+            addr: String::new(),
+            ..NetConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(NetConfig {
+            max_conns: 0,
+            ..NetConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(NetConfig {
+            max_frame_bytes: 16,
+            ..NetConfig::default()
+        }
+        .validate()
+        .is_err());
+    }
+}

@@ -1,0 +1,487 @@
+//! [`NetServer`]: the TCP serving layer over a local [`Client`].
+//!
+//! One acceptor thread admits connections (shedding beyond
+//! `max_conns`); each connection gets a **reader** thread (decodes
+//! frames, submits solves through the shared [`Client`], answers
+//! control frames) and a **writer** thread (waits completed
+//! [`SolveHandle`]s in submission order and streams the responses
+//! back). Admission control is queue-depth aware: a submission the
+//! bounded service queue rejects is answered with a `Backpressure`
+//! error frame instead of blocking or dropping the connection — the
+//! remote caller decides whether to retry, exactly like a local
+//! caller would.
+//!
+//! Per-request deadlines (`deadline_ms` in the request frame) are
+//! honored via [`SolveHandle::wait_deadline`]: an expired deadline
+//! yields a `Timeout` error frame and the handle is dropped (the solve
+//! still completes server-side; the service counts the dropped reply).
+//!
+//! A malformed frame closes only its own connection (after a
+//! best-effort error frame); other connections keep serving. A
+//! connection that sends nothing for a full `read_timeout_ms` window
+//! with no reply in flight is reaped, so dead peers cannot pin
+//! `max_conns` slots. A `Shutdown` control frame stops the acceptor
+//! and closes every connection's *read* half — writers drain their
+//! in-flight replies before the sockets fully close — then resolves
+//! [`NetServer::run_until_shutdown`].
+
+use super::wire::{read_frame, ErrorReply, Frame, WireError};
+use super::NetConfig;
+use crate::api::{ApiError, Client, SolveHandle, SolveSpec};
+use crate::coordinator::metrics::{MetricsSnapshot, NetMetrics};
+use crate::error::{Error, Result};
+use crate::util::json::{obj, Json};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// What the reader hands the per-connection writer thread.
+enum Outgoing {
+    /// A pending solve: wait it (optionally against a deadline), then
+    /// write the response/error frame.
+    Pending {
+        id: u64,
+        handle: SolveHandle,
+        deadline: Option<Instant>,
+    },
+    /// A pre-built control or error frame.
+    Frame(Frame),
+    /// Write + flush a `ShutdownAck`, **then** begin the server-wide
+    /// shutdown (closing sockets first would race the ack away).
+    AckThenShutdown,
+}
+
+struct ServerInner {
+    client: Arc<Client>,
+    cfg: NetConfig,
+    metrics: Arc<NetMetrics>,
+    shutdown: AtomicBool,
+    /// Write halves of live connections, so shutdown can unblock
+    /// readers stuck in a long read.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next_conn_id: AtomicU64,
+    handlers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ServerInner {
+    fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        // Unblock readers waiting on quiet sockets — but only the read
+        // half: writers must still drain their in-flight replies (each
+        // connection fully closes once its writer has finished).
+        let conns = self.conns.lock().unwrap();
+        for stream in conns.values() {
+            let _ = stream.shutdown(std::net::Shutdown::Read);
+        }
+    }
+}
+
+/// Handle to a running network server. Dropping it shuts the server
+/// down (joining the acceptor and every connection thread).
+pub struct NetServer {
+    inner: Arc<ServerInner>,
+    local_addr: SocketAddr,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `cfg.addr` and start serving `client`. With port 0 the OS
+    /// assigns a free port — read it back via [`NetServer::local_addr`].
+    pub fn start(client: Arc<Client>, cfg: NetConfig) -> Result<NetServer> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| Error::Service(format!("bind {}: {e}", cfg.addr)))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| Error::Service(format!("local_addr: {e}")))?;
+        // Non-blocking accept so the acceptor can observe shutdown.
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Service(format!("set_nonblocking: {e}")))?;
+        let inner = Arc::new(ServerInner {
+            client,
+            cfg,
+            metrics: Arc::new(NetMetrics::default()),
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(HashMap::new()),
+            next_conn_id: AtomicU64::new(0),
+            handlers: Mutex::new(Vec::new()),
+        });
+        let inner2 = inner.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("partisol-net-accept".into())
+            .spawn(move || accept_loop(listener, inner2))
+            .map_err(|e| Error::Service(format!("spawn acceptor: {e}")))?;
+        Ok(NetServer {
+            inner,
+            local_addr,
+            acceptor: Some(acceptor),
+        })
+    }
+
+    /// The bound address (the actual port when `addr` asked for `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The served client (shared with in-process callers).
+    pub fn client(&self) -> &Arc<Client> {
+        &self.inner.client
+    }
+
+    /// One snapshot covering the whole serving stack: the service
+    /// counters plus the `net_*` connection/frame/shed counters.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let mut snap = self.inner.client.metrics();
+        self.inner.metrics.fill(&mut snap);
+        snap
+    }
+
+    /// Block until a `Shutdown` control frame arrives (or
+    /// [`NetServer::shutdown`] is called from another thread) and every
+    /// connection has drained.
+    pub fn run_until_shutdown(&self) {
+        loop {
+            let open = self.inner.metrics.connections_open.load(Ordering::Relaxed);
+            if self.inner.shutting_down() && open == 0 {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Stop accepting, drain and join every connection, join the
+    /// acceptor. Idempotent with a protocol-initiated shutdown.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.inner.begin_shutdown();
+        if let Some(t) = self.acceptor.take() {
+            let _ = t.join();
+        }
+        let handlers: Vec<_> = self.inner.handlers.lock().unwrap().drain(..).collect();
+        for t in handlers {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<ServerInner>) {
+    loop {
+        if inner.shutting_down() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let _ = stream.set_nodelay(true);
+                let open = inner.metrics.connections_open.load(Ordering::Relaxed);
+                if open >= inner.cfg.max_conns as u64 {
+                    // Over the cap: shed with a connection-level
+                    // Backpressure frame, then drop the socket.
+                    inner.metrics.sheds.fetch_add(1, Ordering::Relaxed);
+                    let mut w = BufWriter::new(&stream);
+                    let wrote = Frame::Error(ErrorReply {
+                        id: 0,
+                        error: ApiError::Backpressure {
+                            queue_depth: inner.cfg.max_conns,
+                        },
+                    })
+                    .write_to(&mut w)
+                    .is_ok()
+                        && w.flush().is_ok();
+                    if wrote {
+                        inner.metrics.frames_out.fetch_add(1, Ordering::Relaxed);
+                    }
+                    continue;
+                }
+                inner
+                    .metrics
+                    .connections_accepted
+                    .fetch_add(1, Ordering::Relaxed);
+                inner
+                    .metrics
+                    .connections_open
+                    .fetch_add(1, Ordering::Relaxed);
+                let conn_id = inner.next_conn_id.fetch_add(1, Ordering::Relaxed);
+                if let Ok(clone) = stream.try_clone() {
+                    inner.conns.lock().unwrap().insert(conn_id, clone);
+                }
+                let inner2 = inner.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("partisol-net-conn-{conn_id}"))
+                    .spawn(move || {
+                        conn_reader(stream, conn_id, &inner2);
+                        inner2.conns.lock().unwrap().remove(&conn_id);
+                        inner2
+                            .metrics
+                            .connections_open
+                            .fetch_sub(1, Ordering::Relaxed);
+                    });
+                match handle {
+                    Ok(h) => {
+                        // Reap handles of connections that already
+                        // finished (dropping a finished JoinHandle just
+                        // detaches it) so churn cannot grow the vec
+                        // without bound.
+                        let mut handlers = inner.handlers.lock().unwrap();
+                        handlers.retain(|t| !t.is_finished());
+                        handlers.push(h);
+                    }
+                    Err(e) => {
+                        crate::log_warn!("net: spawn handler for {peer}: {e}");
+                        inner.conns.lock().unwrap().remove(&conn_id);
+                        inner
+                            .metrics
+                            .connections_open
+                            .fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                crate::log_warn!("net: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Per-connection reader: decode frames, submit solves, answer control
+/// frames. Responses are written by a dedicated writer thread so a
+/// long-running solve never blocks frame intake (pipelining).
+fn conn_reader(stream: TcpStream, conn_id: u64, inner: &Arc<ServerInner>) {
+    if inner.cfg.read_timeout_ms > 0 {
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(inner.cfg.read_timeout_ms)));
+    }
+    let (tx, rx) = mpsc::channel::<Outgoing>();
+    // Replies handed to the writer but not yet written back: a read
+    // timeout only reaps the connection when this is zero, so a peer
+    // quietly waiting on a long solve is never cut off.
+    let inflight = Arc::new(AtomicU64::new(0));
+    let writer = match stream.try_clone() {
+        Ok(wstream) => {
+            let inner2 = inner.clone();
+            let inflight2 = inflight.clone();
+            std::thread::Builder::new()
+                .name(format!("partisol-net-write-{conn_id}"))
+                .spawn(move || conn_writer(wstream, rx, inner2, inflight2))
+                .ok()
+        }
+        Err(e) => {
+            crate::log_warn!("net: clone stream for conn {conn_id}: {e}");
+            None
+        }
+    };
+    if writer.is_some() {
+        let mut r = BufReader::new(&stream);
+        loop {
+            match read_frame(&mut r, inner.cfg.max_frame_bytes) {
+                Ok(frame) => {
+                    inner.metrics.frames_in.fetch_add(1, Ordering::Relaxed);
+                    if !handle_frame(frame, &tx, inner, &inflight) {
+                        break;
+                    }
+                }
+                Err(WireError::Closed) => break,
+                Err(WireError::Timeout) => {
+                    // Reap a genuinely idle connection (nothing read for
+                    // a full read_timeout window, no reply owed); keep
+                    // serving one that is waiting on in-flight work.
+                    if inner.shutting_down() || inflight.load(Ordering::Acquire) == 0 {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    // Malformed or desynced: notify best-effort, then
+                    // close only this connection.
+                    crate::log_warn!("net: conn {conn_id}: {e}; closing");
+                    let _ = tx.send(Outgoing::Frame(Frame::Error(ErrorReply {
+                        id: 0,
+                        error: ApiError::InvalidRequest(format!("protocol error: {e}")),
+                    })));
+                    break;
+                }
+            }
+        }
+    }
+    // Close the reader side and let the writer drain its in-flight
+    // replies before the connection fully goes away.
+    drop(tx);
+    if let Some(w) = writer {
+        let _ = w.join();
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// React to one decoded frame. Returns false when the connection (or
+/// the whole server) should stop reading.
+fn handle_frame(
+    frame: Frame,
+    tx: &mpsc::Sender<Outgoing>,
+    inner: &Arc<ServerInner>,
+    inflight: &Arc<AtomicU64>,
+) -> bool {
+    match frame {
+        Frame::Request(req) => {
+            let deadline = (req.deadline_ms > 0)
+                .then(|| Instant::now() + Duration::from_millis(req.deadline_ms as u64));
+            let id = req.id;
+            let spec = SolveSpec {
+                payload: req.payload,
+                opts: req.opts,
+            };
+            let out = match inner.client.submit(spec) {
+                Ok(handle) => {
+                    inflight.fetch_add(1, Ordering::AcqRel);
+                    Outgoing::Pending {
+                        id,
+                        handle,
+                        deadline,
+                    }
+                }
+                Err(e) => {
+                    if matches!(e, ApiError::Backpressure { .. }) {
+                        inner.metrics.sheds.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Outgoing::Frame(Frame::Error(ErrorReply { id, error: e }))
+                }
+            };
+            tx.send(out).is_ok()
+        }
+        Frame::Ping { nonce } => tx.send(Outgoing::Frame(Frame::Pong { nonce })).is_ok(),
+        Frame::StatsRequest => {
+            let mut snap = inner.client.metrics();
+            inner.metrics.fill(&mut snap);
+            let json = stats_json(&snap).to_string_compact();
+            tx.send(Outgoing::Frame(Frame::StatsResponse { json }))
+                .is_ok()
+        }
+        Frame::Shutdown => {
+            // The writer acknowledges and only then stops the whole
+            // server (acceptor exits, every other connection is
+            // unblocked); shutting sockets here would race the ack.
+            let _ = tx.send(Outgoing::AckThenShutdown);
+            false
+        }
+        // Server-to-client frames arriving here are protocol violations.
+        Frame::Response(_)
+        | Frame::Error(_)
+        | Frame::Pong { .. }
+        | Frame::StatsResponse { .. }
+        | Frame::ShutdownAck => {
+            let _ = tx.send(Outgoing::Frame(Frame::Error(ErrorReply {
+                id: 0,
+                error: ApiError::InvalidRequest("unexpected server-side frame kind".into()),
+            })));
+            false
+        }
+    }
+}
+
+/// Per-connection writer: stream replies back in submission order.
+fn conn_writer(
+    stream: TcpStream,
+    rx: mpsc::Receiver<Outgoing>,
+    inner: Arc<ServerInner>,
+    inflight: Arc<AtomicU64>,
+) {
+    let mut w = BufWriter::new(stream);
+    for out in rx {
+        let frame = match out {
+            Outgoing::AckThenShutdown => {
+                let ok = Frame::ShutdownAck.write_to(&mut w).is_ok() && w.flush().is_ok();
+                if ok {
+                    inner.metrics.frames_out.fetch_add(1, Ordering::Relaxed);
+                }
+                inner.begin_shutdown();
+                continue;
+            }
+            Outgoing::Frame(f) => f,
+            Outgoing::Pending {
+                id,
+                mut handle,
+                deadline,
+            } => {
+                // The response must echo the *wire* request id: the
+                // service response carries the id the server's local
+                // Client assigned, which means nothing to the peer.
+                let respond = |resp: &crate::coordinator::SolveResponse| {
+                    let mut wire_resp = super::wire::Response::from_solve(resp);
+                    wire_resp.id = id;
+                    Frame::Response(wire_resp)
+                };
+                let frame = match deadline {
+                    Some(d) => match handle.wait_deadline(d) {
+                        Ok(resp) => respond(&resp),
+                        Err(ApiError::Timeout) => {
+                            // The solve still completes service-side;
+                            // the abandoned handle is counted as a
+                            // dropped response there.
+                            inner
+                                .metrics
+                                .deadline_expired
+                                .fetch_add(1, Ordering::Relaxed);
+                            Frame::Error(ErrorReply {
+                                id,
+                                error: ApiError::Timeout,
+                            })
+                        }
+                        Err(e) => Frame::Error(ErrorReply { id, error: e }),
+                    },
+                    None => match handle.wait() {
+                        Ok(resp) => respond(&resp),
+                        Err(e) => Frame::Error(ErrorReply { id, error: e }),
+                    },
+                };
+                inflight.fetch_sub(1, Ordering::AcqRel);
+                frame
+            }
+        };
+        if frame.write_to(&mut w).is_err() || w.flush().is_err() {
+            // The peer went away; stop draining (pending solves finish
+            // service-side and count as dropped responses).
+            return;
+        }
+        inner.metrics.frames_out.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The stats-frame payload: the full snapshot as flat JSON.
+pub(crate) fn stats_json(snap: &MetricsSnapshot) -> Json {
+    let num = |v: u64| Json::Num(v as f64);
+    obj(vec![
+        ("submitted", num(snap.submitted)),
+        ("completed", num(snap.completed)),
+        ("failed", num(snap.failed)),
+        ("rejected_backpressure", num(snap.rejected_backpressure)),
+        ("batches", num(snap.batches)),
+        ("plan_cache_hits", num(snap.plan_cache_hits)),
+        ("plan_cache_misses", num(snap.plan_cache_misses)),
+        ("model_epoch", num(snap.model_epoch)),
+        ("mean_e2e_us", Json::Num(snap.mean_e2e_us)),
+        ("p99_e2e_us", Json::Num(snap.p99_e2e_us)),
+        ("connections_accepted", num(snap.net_connections_accepted)),
+        ("connections_open", num(snap.net_connections_open)),
+        ("frames_in", num(snap.net_frames_in)),
+        ("frames_out", num(snap.net_frames_out)),
+        ("sheds", num(snap.net_sheds)),
+        ("deadline_expired", num(snap.net_deadline_expired)),
+    ])
+}

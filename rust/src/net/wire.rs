@@ -1,0 +1,909 @@
+//! The length-prefixed binary wire protocol spoken between
+//! [`crate::net::NetServer`] and [`crate::net::RemoteClient`].
+//!
+//! Every frame is a fixed 12-byte header followed by a body:
+//!
+//! ```text
+//!   magic "PTSL" (4) | version u8 | kind u8 | reserved u16 | body_len u32 LE
+//! ```
+//!
+//! Request bodies carry the [`crate::plan::SolveOptions`] fields plus
+//! the four diagonals as raw little-endian f32/f64 arrays — the encoder
+//! writes straight from borrowed [`crate::solver::TriSystemRef`] views
+//! and the decoder materializes owned vectors, so each direction copies
+//! the system exactly once. Response bodies carry a [`Solution`] (same
+//! raw-array encoding) or a structured [`ApiError`] code; `Ping`/
+//! `Stats`/`Shutdown` are small control frames.
+//!
+//! The reader rejects bad magic, unknown versions, unknown kinds,
+//! truncated bodies and frames larger than the configured
+//! `max_frame_bytes` with a typed [`WireError`] — never a panic — so a
+//! malformed client can always be dropped without taking the server
+//! down.
+
+use crate::api::payload::{Solution, SystemPayload, SystemSource};
+use crate::api::ApiError;
+use crate::coordinator::SolveResponse;
+use crate::gpu::spec::Dtype;
+use crate::plan::{Backend, SolveOptions};
+use crate::solver::TriSystem;
+use std::io::{ErrorKind, Read, Write};
+
+/// Frame magic: the first four bytes of every valid frame.
+pub const MAGIC: [u8; 4] = *b"PTSL";
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Bytes in the fixed frame header.
+pub const HEADER_LEN: usize = 12;
+
+/// Frame kind bytes (header offset 5).
+pub const KIND_REQUEST: u8 = 1;
+pub const KIND_RESPONSE: u8 = 2;
+pub const KIND_ERROR: u8 = 3;
+pub const KIND_PING: u8 = 4;
+pub const KIND_PONG: u8 = 5;
+pub const KIND_STATS_REQUEST: u8 = 6;
+pub const KIND_STATS_RESPONSE: u8 = 7;
+pub const KIND_SHUTDOWN: u8 = 8;
+pub const KIND_SHUTDOWN_ACK: u8 = 9;
+
+/// Everything that can go wrong reading or writing a frame.
+#[derive(Debug)]
+pub enum WireError {
+    /// The peer closed the connection at a frame boundary (clean EOF).
+    Closed,
+    /// The read timed out at a frame boundary (the stream is still in
+    /// sync; the caller may retry).
+    Timeout,
+    /// Transport failure (includes mid-frame timeouts, which desync
+    /// the stream and require closing the connection).
+    Io(std::io::Error),
+    /// The first four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// The peer speaks a protocol version this build does not.
+    BadVersion(u8),
+    /// The declared body length exceeds the configured cap.
+    TooLarge { len: usize, max: usize },
+    /// Unknown kind, truncated body, or inconsistent fields.
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::Timeout => write!(f, "read timed out"),
+            WireError::Io(e) => write!(f, "io error: {e}"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:?}"),
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (speaking {VERSION})")
+            }
+            WireError::TooLarge { len, max } => {
+                write!(f, "frame body of {len} bytes exceeds the {max}-byte cap")
+            }
+            WireError::Malformed(msg) => write!(f, "malformed frame: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+impl From<WireError> for ApiError {
+    fn from(e: WireError) -> Self {
+        match e {
+            WireError::Closed => ApiError::Disconnected,
+            WireError::Timeout => ApiError::Timeout,
+            other => ApiError::Service(format!("wire protocol: {other}")),
+        }
+    }
+}
+
+/// A decoded solve request: what the server hands to the service.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Client-assigned request id, echoed in the response.
+    pub id: u64,
+    /// Per-request options (dtype always matches the payload).
+    pub opts: SolveOptions,
+    /// Optional per-request deadline, milliseconds from receipt;
+    /// 0 = none. Honored server-side via `SolveHandle::wait_deadline`.
+    pub deadline_ms: u32,
+    /// The decoded system (owned — one copy off the wire).
+    pub payload: SystemPayload<'static>,
+}
+
+/// A decoded solve response (mirrors [`SolveResponse`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub x: Solution,
+    pub m: usize,
+    pub backend: Backend,
+    pub residual: Option<f64>,
+    pub queue_us: f64,
+    pub exec_us: f64,
+    pub batch_size: usize,
+    pub simulated_gpu_us: f64,
+}
+
+impl Response {
+    /// Wire form of a service response.
+    pub fn from_solve(resp: &SolveResponse) -> Response {
+        Response {
+            id: resp.id,
+            x: resp.x.clone(),
+            m: resp.m,
+            backend: resp.backend,
+            residual: resp.residual,
+            queue_us: resp.queue_us,
+            exec_us: resp.exec_us,
+            batch_size: resp.batch_size,
+            simulated_gpu_us: resp.simulated_gpu_us,
+        }
+    }
+
+    /// Back into the typed response the client API yields.
+    pub fn into_solve_response(self) -> SolveResponse {
+        SolveResponse {
+            id: self.id,
+            x: self.x,
+            m: self.m,
+            backend: self.backend,
+            residual: self.residual,
+            queue_us: self.queue_us,
+            exec_us: self.exec_us,
+            batch_size: self.batch_size,
+            simulated_gpu_us: self.simulated_gpu_us,
+        }
+    }
+}
+
+/// A structured error reply for one request id (id 0 = connection-level,
+/// e.g. the connection-cap shed or a malformed-frame notice).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ErrorReply {
+    pub id: u64,
+    pub error: ApiError,
+}
+
+/// One decoded protocol frame.
+#[derive(Clone, Debug)]
+pub enum Frame {
+    Request(Request),
+    Response(Response),
+    Error(ErrorReply),
+    Ping { nonce: u64 },
+    Pong { nonce: u64 },
+    StatsRequest,
+    StatsResponse { json: String },
+    Shutdown,
+    ShutdownAck,
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian body builders.
+// ---------------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn dtype_code(dtype: Dtype) -> u8 {
+    match dtype {
+        Dtype::F64 => 0,
+        Dtype::F32 => 1,
+    }
+}
+
+fn parse_dtype(code: u8) -> Result<Dtype, WireError> {
+    match code {
+        0 => Ok(Dtype::F64),
+        1 => Ok(Dtype::F32),
+        other => Err(WireError::Malformed(format!("unknown dtype code {other}"))),
+    }
+}
+
+fn backend_code(backend: Backend) -> u8 {
+    match backend {
+        Backend::Pjrt => 1,
+        Backend::Native => 2,
+        Backend::Thomas => 3,
+    }
+}
+
+fn parse_backend(code: u8) -> Result<Backend, WireError> {
+    match code {
+        1 => Ok(Backend::Pjrt),
+        2 => Ok(Backend::Native),
+        3 => Ok(Backend::Thomas),
+        other => Err(WireError::Malformed(format!("unknown backend code {other}"))),
+    }
+}
+
+/// Write one frame: header + body. The caller owns buffering/flushing.
+fn write_frame<W: Write>(w: &mut W, kind: u8, body: &[u8]) -> std::io::Result<()> {
+    let len = u32::try_from(body.len()).map_err(|_| {
+        std::io::Error::new(ErrorKind::InvalidInput, "frame body exceeds u32 length")
+    })?;
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[0..4].copy_from_slice(&MAGIC);
+    hdr[4] = VERSION;
+    hdr[5] = kind;
+    // hdr[6..8] reserved = 0
+    hdr[8..12].copy_from_slice(&len.to_le_bytes());
+    w.write_all(&hdr)?;
+    w.write_all(body)
+}
+
+/// Encode a solve request straight from the payload's borrowed views
+/// (no intermediate system copy — the body buffer is the one copy this
+/// direction makes).
+pub fn write_request<W: Write>(
+    w: &mut W,
+    id: u64,
+    opts: &SolveOptions,
+    deadline_ms: u32,
+    payload: &SystemPayload<'_>,
+) -> std::io::Result<()> {
+    let n = payload.n();
+    let dtype = payload.dtype();
+    let mut body = Vec::with_capacity(32 + 4 * n * dtype.bytes());
+    put_u64(&mut body, id);
+    body.push(dtype_code(dtype));
+    body.push(opts.compute_residual as u8);
+    body.push(opts.backend_override.map(backend_code).unwrap_or(0));
+    body.push(0); // reserved
+    put_u32(&mut body, opts.m_override.unwrap_or(0) as u32);
+    put_u32(&mut body, deadline_ms);
+    put_u64(&mut body, n as u64);
+    match payload {
+        SystemPayload::F64(src) => {
+            let v = src.view();
+            put_f64s(&mut body, v.a);
+            put_f64s(&mut body, v.b);
+            put_f64s(&mut body, v.c);
+            put_f64s(&mut body, v.d);
+        }
+        SystemPayload::F32(src) => {
+            let v = src.view();
+            put_f32s(&mut body, v.a);
+            put_f32s(&mut body, v.b);
+            put_f32s(&mut body, v.c);
+            put_f32s(&mut body, v.d);
+        }
+    }
+    write_frame(w, KIND_REQUEST, &body)
+}
+
+impl Frame {
+    /// Encode this frame onto a writer ([`Frame::Request`] delegates to
+    /// [`write_request`], which callers with borrowed payloads should
+    /// use directly).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        match self {
+            Frame::Request(req) => {
+                write_request(w, req.id, &req.opts, req.deadline_ms, &req.payload)
+            }
+            Frame::Response(resp) => {
+                let n = resp.x.len();
+                let dtype = resp.x.dtype();
+                let mut body = Vec::with_capacity(64 + n * dtype.bytes());
+                put_u64(&mut body, resp.id);
+                body.push(dtype_code(dtype));
+                body.push(backend_code(resp.backend));
+                body.push(resp.residual.is_some() as u8);
+                body.push(0); // reserved
+                put_u32(&mut body, resp.m as u32);
+                put_u32(&mut body, resp.batch_size as u32);
+                put_f64(&mut body, resp.residual.unwrap_or(0.0));
+                put_f64(&mut body, resp.queue_us);
+                put_f64(&mut body, resp.exec_us);
+                put_f64(&mut body, resp.simulated_gpu_us);
+                put_u64(&mut body, n as u64);
+                match &resp.x {
+                    Solution::F64(x) => put_f64s(&mut body, x),
+                    Solution::F32(x) => put_f32s(&mut body, x),
+                }
+                write_frame(w, KIND_RESPONSE, &body)
+            }
+            Frame::Error(reply) => {
+                let (code, queue_depth, message): (u8, u32, &str) = match &reply.error {
+                    ApiError::Backpressure { queue_depth } => (1, *queue_depth as u32, ""),
+                    ApiError::ShutDown => (2, 0, ""),
+                    ApiError::InvalidRequest(msg) => (3, 0, msg),
+                    ApiError::Solve(msg) => (4, 0, msg),
+                    ApiError::Disconnected => (5, 0, ""),
+                    ApiError::Timeout => (6, 0, ""),
+                    ApiError::Consumed => (7, 0, ""),
+                    ApiError::Service(msg) => (8, 0, msg),
+                };
+                let mut body = Vec::with_capacity(24 + message.len());
+                put_u64(&mut body, reply.id);
+                body.push(code);
+                body.push(0);
+                body.push(0);
+                body.push(0); // reserved
+                put_u32(&mut body, queue_depth);
+                put_str(&mut body, message);
+                write_frame(w, KIND_ERROR, &body)
+            }
+            Frame::Ping { nonce } => {
+                let mut body = Vec::with_capacity(8);
+                put_u64(&mut body, *nonce);
+                write_frame(w, KIND_PING, &body)
+            }
+            Frame::Pong { nonce } => {
+                let mut body = Vec::with_capacity(8);
+                put_u64(&mut body, *nonce);
+                write_frame(w, KIND_PONG, &body)
+            }
+            Frame::StatsRequest => write_frame(w, KIND_STATS_REQUEST, &[]),
+            Frame::StatsResponse { json } => {
+                let mut body = Vec::with_capacity(4 + json.len());
+                put_str(&mut body, json);
+                write_frame(w, KIND_STATS_RESPONSE, &body)
+            }
+            Frame::Shutdown => write_frame(w, KIND_SHUTDOWN, &[]),
+            Frame::ShutdownAck => write_frame(w, KIND_SHUTDOWN_ACK, &[]),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reader.
+// ---------------------------------------------------------------------------
+
+struct Cur<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b }
+    }
+
+    fn take(&mut self, k: usize) -> Result<&'a [u8], WireError> {
+        if self.b.len() < k {
+            return Err(WireError::Malformed(format!(
+                "truncated body: wanted {k} more bytes, have {}",
+                self.b.len()
+            )));
+        }
+        let (head, rest) = self.b.split_at(k);
+        self.b = rest;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64_vec(&mut self, n: usize) -> Result<Vec<f64>, WireError> {
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|ch| f64::from_le_bytes(ch.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+            .collect())
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        let len = self.u32()? as usize;
+        let raw = self.take(len)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| WireError::Malformed("non-utf8 string field".into()))
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len()
+    }
+
+    fn finish(&self) -> Result<(), WireError> {
+        if self.b.is_empty() {
+            Ok(())
+        } else {
+            Err(WireError::Malformed(format!(
+                "{} trailing bytes after body",
+                self.b.len()
+            )))
+        }
+    }
+}
+
+/// Read the fixed header; distinguishes a clean close (EOF before any
+/// header byte) and a frame-boundary timeout from mid-header failures.
+fn read_header<R: Read>(r: &mut R) -> Result<[u8; HEADER_LEN], WireError> {
+    let mut hdr = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut hdr[got..]) {
+            Ok(0) => {
+                return Err(if got == 0 {
+                    WireError::Closed
+                } else {
+                    WireError::Malformed("connection closed mid-header".into())
+                });
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e)
+                if got == 0
+                    && matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) =>
+            {
+                return Err(WireError::Timeout);
+            }
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(hdr)
+}
+
+/// Read and decode one frame. `max_frame_bytes` caps the declared body
+/// length; larger frames are rejected before any allocation.
+pub fn read_frame<R: Read>(r: &mut R, max_frame_bytes: usize) -> Result<Frame, WireError> {
+    let hdr = read_header(r)?;
+    if hdr[0..4] != MAGIC {
+        return Err(WireError::BadMagic([hdr[0], hdr[1], hdr[2], hdr[3]]));
+    }
+    if hdr[4] != VERSION {
+        return Err(WireError::BadVersion(hdr[4]));
+    }
+    let kind = hdr[5];
+    let len = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+    if len > max_frame_bytes {
+        return Err(WireError::TooLarge {
+            len,
+            max: max_frame_bytes,
+        });
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| match e.kind() {
+        ErrorKind::UnexpectedEof => WireError::Malformed("connection closed mid-body".into()),
+        _ => WireError::Io(e),
+    })?;
+    parse_body(kind, &body)
+}
+
+fn parse_body(kind: u8, body: &[u8]) -> Result<Frame, WireError> {
+    let mut cur = Cur::new(body);
+    match kind {
+        KIND_REQUEST => {
+            let id = cur.u64()?;
+            let dtype = parse_dtype(cur.u8()?)?;
+            let compute_residual = match cur.u8()? {
+                0 => false,
+                1 => true,
+                other => {
+                    return Err(WireError::Malformed(format!(
+                        "bad residual flag {other}"
+                    )))
+                }
+            };
+            let backend_override = match cur.u8()? {
+                0 => None,
+                code => Some(parse_backend(code)?),
+            };
+            let _reserved = cur.u8()?;
+            let m_override = cur.u32()? as usize;
+            let deadline_ms = cur.u32()?;
+            let n64 = cur.u64()?;
+            let n = usize::try_from(n64)
+                .map_err(|_| WireError::Malformed(format!("system size {n64} too large")))?;
+            if n == 0 {
+                return Err(WireError::Malformed("empty system".into()));
+            }
+            let need = n
+                .checked_mul(dtype.bytes())
+                .and_then(|x| x.checked_mul(4))
+                .ok_or_else(|| WireError::Malformed("system size overflows".into()))?;
+            if cur.remaining() != need {
+                return Err(WireError::Malformed(format!(
+                    "diagonal bytes mismatch: declared n = {n} ({} dtype) needs {need}, body has {}",
+                    dtype.name(),
+                    cur.remaining()
+                )));
+            }
+            let payload = match dtype {
+                Dtype::F64 => {
+                    let a = cur.f64_vec(n)?;
+                    let b = cur.f64_vec(n)?;
+                    let c = cur.f64_vec(n)?;
+                    let d = cur.f64_vec(n)?;
+                    SystemPayload::F64(SystemSource::Owned(TriSystem { a, b, c, d }))
+                }
+                Dtype::F32 => {
+                    let a = cur.f32_vec(n)?;
+                    let b = cur.f32_vec(n)?;
+                    let c = cur.f32_vec(n)?;
+                    let d = cur.f32_vec(n)?;
+                    SystemPayload::F32(SystemSource::Owned(TriSystem { a, b, c, d }))
+                }
+            };
+            cur.finish()?;
+            Ok(Frame::Request(Request {
+                id,
+                opts: SolveOptions {
+                    dtype,
+                    m_override: if m_override == 0 { None } else { Some(m_override) },
+                    backend_override,
+                    compute_residual,
+                },
+                deadline_ms,
+                payload,
+            }))
+        }
+        KIND_RESPONSE => {
+            let id = cur.u64()?;
+            let dtype = parse_dtype(cur.u8()?)?;
+            let backend = parse_backend(cur.u8()?)?;
+            let has_residual = cur.u8()? != 0;
+            let _reserved = cur.u8()?;
+            let m = cur.u32()? as usize;
+            let batch_size = cur.u32()? as usize;
+            let residual = cur.f64()?;
+            let queue_us = cur.f64()?;
+            let exec_us = cur.f64()?;
+            let simulated_gpu_us = cur.f64()?;
+            let n64 = cur.u64()?;
+            let n = usize::try_from(n64)
+                .map_err(|_| WireError::Malformed(format!("solution size {n64} too large")))?;
+            let need = n
+                .checked_mul(dtype.bytes())
+                .ok_or_else(|| WireError::Malformed("solution size overflows".into()))?;
+            if cur.remaining() != need {
+                return Err(WireError::Malformed(format!(
+                    "solution bytes mismatch: declared n = {n} needs {need}, body has {}",
+                    cur.remaining()
+                )));
+            }
+            let x = match dtype {
+                Dtype::F64 => Solution::F64(cur.f64_vec(n)?),
+                Dtype::F32 => Solution::F32(cur.f32_vec(n)?),
+            };
+            cur.finish()?;
+            Ok(Frame::Response(Response {
+                id,
+                x,
+                m,
+                backend,
+                residual: has_residual.then_some(residual),
+                queue_us,
+                exec_us,
+                batch_size,
+                simulated_gpu_us,
+            }))
+        }
+        KIND_ERROR => {
+            let id = cur.u64()?;
+            let code = cur.u8()?;
+            let _ = cur.u8()?;
+            let _ = cur.u8()?;
+            let _ = cur.u8()?;
+            let queue_depth = cur.u32()? as usize;
+            let message = cur.string()?;
+            cur.finish()?;
+            let error = match code {
+                1 => ApiError::Backpressure { queue_depth },
+                2 => ApiError::ShutDown,
+                3 => ApiError::InvalidRequest(message),
+                4 => ApiError::Solve(message),
+                5 => ApiError::Disconnected,
+                6 => ApiError::Timeout,
+                7 => ApiError::Consumed,
+                8 => ApiError::Service(message),
+                other => {
+                    return Err(WireError::Malformed(format!("unknown error code {other}")))
+                }
+            };
+            Ok(Frame::Error(ErrorReply { id, error }))
+        }
+        KIND_PING => {
+            let nonce = cur.u64()?;
+            cur.finish()?;
+            Ok(Frame::Ping { nonce })
+        }
+        KIND_PONG => {
+            let nonce = cur.u64()?;
+            cur.finish()?;
+            Ok(Frame::Pong { nonce })
+        }
+        KIND_STATS_REQUEST => {
+            cur.finish()?;
+            Ok(Frame::StatsRequest)
+        }
+        KIND_STATS_RESPONSE => {
+            let json = cur.string()?;
+            cur.finish()?;
+            Ok(Frame::StatsResponse { json })
+        }
+        KIND_SHUTDOWN => {
+            cur.finish()?;
+            Ok(Frame::Shutdown)
+        }
+        KIND_SHUTDOWN_ACK => {
+            cur.finish()?;
+            Ok(Frame::ShutdownAck)
+        }
+        other => Err(WireError::Malformed(format!("unknown frame kind {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::generator::random_dd_system;
+    use crate::util::Pcg64;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        frame.write_to(&mut buf).unwrap();
+        let mut r = &buf[..];
+        let out = read_frame(&mut r, 1 << 24).unwrap();
+        assert!(r.is_empty(), "reader must consume the whole frame");
+        out
+    }
+
+    #[test]
+    fn request_roundtrips_both_dtypes() {
+        let mut rng = Pcg64::new(1);
+        let sys = random_dd_system::<f64>(&mut rng, 37, 0.5);
+        let req = Request {
+            id: 42,
+            opts: SolveOptions {
+                dtype: Dtype::F64,
+                m_override: Some(16),
+                backend_override: Some(Backend::Native),
+                compute_residual: true,
+            },
+            deadline_ms: 2_500,
+            payload: SystemPayload::F64(SystemSource::Owned(sys.clone())),
+        };
+        let Frame::Request(out) = roundtrip(&Frame::Request(req)) else {
+            panic!("expected a request frame");
+        };
+        assert_eq!(out.id, 42);
+        assert_eq!(out.opts.dtype, Dtype::F64);
+        assert_eq!(out.opts.m_override, Some(16));
+        assert_eq!(out.opts.backend_override, Some(Backend::Native));
+        assert!(out.opts.compute_residual);
+        assert_eq!(out.deadline_ms, 2_500);
+        let SystemPayload::F64(SystemSource::Owned(got)) = out.payload else {
+            panic!("expected an owned f64 payload");
+        };
+        assert_eq!(got, sys, "diagonals must round-trip bit-exactly");
+
+        let sys32 = random_dd_system::<f32>(&mut rng, 21, 0.5);
+        let req = Request {
+            id: 7,
+            opts: SolveOptions {
+                dtype: Dtype::F32,
+                m_override: None,
+                backend_override: None,
+                compute_residual: false,
+            },
+            deadline_ms: 0,
+            payload: SystemPayload::F32(SystemSource::Owned(sys32.clone())),
+        };
+        let Frame::Request(out) = roundtrip(&Frame::Request(req)) else {
+            panic!("expected a request frame");
+        };
+        assert_eq!(out.opts.m_override, None);
+        assert_eq!(out.opts.backend_override, None);
+        assert!(!out.opts.compute_residual);
+        let SystemPayload::F32(SystemSource::Owned(got)) = out.payload else {
+            panic!("expected an owned f32 payload");
+        };
+        assert_eq!(got, sys32);
+    }
+
+    #[test]
+    fn response_roundtrips_both_dtypes() {
+        let resp = Response {
+            id: 9,
+            x: Solution::F64(vec![1.5, -2.25, 0.125]),
+            m: 8,
+            backend: Backend::Native,
+            residual: Some(1e-12),
+            queue_us: 12.5,
+            exec_us: 800.0,
+            batch_size: 3,
+            simulated_gpu_us: 42.0,
+        };
+        let Frame::Response(out) = roundtrip(&Frame::Response(resp.clone())) else {
+            panic!("expected a response frame");
+        };
+        assert_eq!(out, resp);
+
+        let resp32 = Response {
+            id: 10,
+            x: Solution::F32(vec![0.5, 0.25]),
+            m: 4,
+            backend: Backend::Thomas,
+            residual: None,
+            queue_us: 0.0,
+            exec_us: 3.0,
+            batch_size: 1,
+            simulated_gpu_us: 0.0,
+        };
+        let Frame::Response(out) = roundtrip(&Frame::Response(resp32.clone())) else {
+            panic!("expected a response frame");
+        };
+        assert_eq!(out, resp32);
+    }
+
+    #[test]
+    fn error_frames_roundtrip_the_taxonomy() {
+        for error in [
+            ApiError::Backpressure { queue_depth: 64 },
+            ApiError::ShutDown,
+            ApiError::InvalidRequest("bad shape".into()),
+            ApiError::Solve("singular pivot".into()),
+            ApiError::Disconnected,
+            ApiError::Timeout,
+            ApiError::Consumed,
+            ApiError::Service("boom".into()),
+        ] {
+            let reply = ErrorReply { id: 3, error };
+            let Frame::Error(out) = roundtrip(&Frame::Error(reply.clone())) else {
+                panic!("expected an error frame");
+            };
+            assert_eq!(out, reply);
+        }
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        assert!(matches!(
+            roundtrip(&Frame::Ping { nonce: 77 }),
+            Frame::Ping { nonce: 77 }
+        ));
+        assert!(matches!(
+            roundtrip(&Frame::Pong { nonce: 78 }),
+            Frame::Pong { nonce: 78 }
+        ));
+        assert!(matches!(roundtrip(&Frame::StatsRequest), Frame::StatsRequest));
+        let Frame::StatsResponse { json } = roundtrip(&Frame::StatsResponse {
+            json: "{\"completed\": 3}".into(),
+        }) else {
+            panic!("expected a stats response");
+        };
+        assert_eq!(json, "{\"completed\": 3}");
+        assert!(matches!(roundtrip(&Frame::Shutdown), Frame::Shutdown));
+        assert!(matches!(roundtrip(&Frame::ShutdownAck), Frame::ShutdownAck));
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let mut buf = Vec::new();
+        Frame::Ping { nonce: 1 }.write_to(&mut buf).unwrap();
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            read_frame(&mut &bad[..], 1 << 20),
+            Err(WireError::BadMagic(_))
+        ));
+        let mut bad = buf.clone();
+        bad[4] = 99;
+        assert!(matches!(
+            read_frame(&mut &bad[..], 1 << 20),
+            Err(WireError::BadVersion(99))
+        ));
+        let mut bad = buf;
+        bad[5] = 200; // unknown kind
+        assert!(matches!(
+            read_frame(&mut &bad[..], 1 << 20),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn truncated_and_oversized_frames_are_rejected_without_panic() {
+        let mut rng = Pcg64::new(2);
+        let sys = random_dd_system::<f64>(&mut rng, 50, 0.5);
+        let mut buf = Vec::new();
+        write_request(&mut buf, 1, &SolveOptions::default(), 0, &sys.clone().into()).unwrap();
+
+        // Truncate at every interesting boundary: nothing may panic.
+        for cut in [0, 3, HEADER_LEN - 1, HEADER_LEN, HEADER_LEN + 5, buf.len() - 1] {
+            let err = read_frame(&mut &buf[..cut], 1 << 24).unwrap_err();
+            assert!(
+                matches!(err, WireError::Closed | WireError::Malformed(_)),
+                "cut at {cut}: {err}"
+            );
+        }
+
+        // A frame over the cap is refused before its body is read.
+        assert!(matches!(
+            read_frame(&mut &buf[..], 64),
+            Err(WireError::TooLarge { .. })
+        ));
+
+        // A body shorter than its diagonals declare is malformed, not a
+        // panic: corrupt the declared n upward.
+        let mut bad = buf.clone();
+        // n lives after id(8) + dtype/flags(4) + m_override(4) + deadline(4)
+        // = body offset 20, i.e. buffer offset HEADER_LEN + 20.
+        let off = HEADER_LEN + 20;
+        bad[off..off + 8].copy_from_slice(&(51u64).to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut &bad[..], 1 << 24),
+            Err(WireError::Malformed(_))
+        ));
+
+        // Empty systems are rejected at the codec boundary.
+        let mut empty = Vec::new();
+        bad = Vec::new();
+        put_u64(&mut bad, 1); // id
+        bad.push(0); // f64
+        bad.push(1);
+        bad.push(0);
+        bad.push(0);
+        put_u32(&mut bad, 0);
+        put_u32(&mut bad, 0);
+        put_u64(&mut bad, 0); // n = 0
+        write_frame(&mut empty, KIND_REQUEST, &bad).unwrap();
+        assert!(matches!(
+            read_frame(&mut &empty[..], 1 << 24),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn clean_eof_reads_as_closed() {
+        let empty: &[u8] = &[];
+        assert!(matches!(
+            read_frame(&mut &empty[..], 1 << 20),
+            Err(WireError::Closed)
+        ));
+    }
+}

@@ -152,6 +152,26 @@ impl KnnHeuristic {
             model: Knn::fit(&xs, ms, k)?,
         })
     }
+
+    /// Neighborhood size of the fitted model.
+    pub fn k(&self) -> usize {
+        self.model.k()
+    }
+
+    /// The fitted `(n, m)` training pairs — the memorizing model's
+    /// entire state, so a persisted copy refits bit-for-bit via
+    /// [`KnnHeuristic::fit_full`]. Sizes round-trip through the
+    /// log10 feature space (exact for every practical n: the mantissa
+    /// of `log10(n)` loses nothing a `round()` cannot restore).
+    pub fn training_pairs(&self) -> (Vec<usize>, Vec<usize>) {
+        let ns = self
+            .model
+            .xs()
+            .iter()
+            .map(|&x| 10f64.powf(x).round().max(1.0) as usize)
+            .collect();
+        (ns, self.model.ys().to_vec())
+    }
 }
 
 impl MHeuristic for KnnHeuristic {

@@ -33,6 +33,7 @@ use crate::data::paper::M_CANDIDATES;
 use crate::gpu::spec::Dtype;
 use crate::plan::Backend;
 use crate::solver::recursive::partition_applies;
+use crate::util::json::{obj, Json};
 use std::collections::BTreeMap;
 use std::sync::atomic::{fence, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -51,6 +52,11 @@ pub struct OnlineTuneConfig {
     /// Fraction of eligible solves explored at a neighboring m, in
     /// `[0, 1)`; 0 disables exploration.
     pub explore: f64,
+    /// Persist the fitted model here on every install, and restore it
+    /// at startup: a restarted service resumes from the learned
+    /// heuristic (and epoch) instead of the static one. `None`
+    /// disables persistence.
+    pub model_path: Option<String>,
 }
 
 impl Default for OnlineTuneConfig {
@@ -61,6 +67,7 @@ impl Default for OnlineTuneConfig {
             min_samples: 5,
             retrain_ms: 500,
             explore: 0.125,
+            model_path: None,
         }
     }
 }
@@ -100,9 +107,15 @@ pub struct TelemetrySample {
     /// Execution latency, nanoseconds (batch members report the fused
     /// execution time divided by the batch size).
     pub latency_ns: u64,
+    /// Execution batch size the solve rode in (1 = singleton). The
+    /// aggregator only compares like-batch samples: a fused member's
+    /// amortized latency hides fan-out overhead a singleton pays in
+    /// full, so mixing the two biases per-m means toward whichever m
+    /// the batcher favors.
+    pub batch: usize,
 }
 
-fn pack(dtype: Dtype, backend: Backend) -> u64 {
+fn pack(dtype: Dtype, backend: Backend, batch: usize) -> u64 {
     let d = match dtype {
         Dtype::F64 => 0u64,
         Dtype::F32 => 1,
@@ -112,17 +125,17 @@ fn pack(dtype: Dtype, backend: Backend) -> u64 {
         Backend::Native => 1,
         Backend::Thomas => 2,
     };
-    d | (b << 1)
+    d | (b << 1) | ((batch.max(1) as u64) << 3)
 }
 
-fn unpack(tag: u64) -> (Dtype, Backend) {
+fn unpack(tag: u64) -> (Dtype, Backend, usize) {
     let dtype = if tag & 1 == 0 { Dtype::F64 } else { Dtype::F32 };
     let backend = match (tag >> 1) & 3 {
         0 => Backend::Pjrt,
         1 => Backend::Native,
         _ => Backend::Thomas,
     };
-    (dtype, backend)
+    (dtype, backend, (tag >> 3).max(1) as usize)
 }
 
 /// One ring slot: a per-slot seqlock. `seq` is `2*ticket + 1` while the
@@ -187,7 +200,8 @@ impl TelemetryStore {
         fence(Ordering::Release);
         slot.n.store(s.n as u64, Ordering::Relaxed);
         slot.m.store(s.m as u64, Ordering::Relaxed);
-        slot.tag.store(pack(s.dtype, s.backend), Ordering::Relaxed);
+        slot.tag
+            .store(pack(s.dtype, s.backend, s.batch), Ordering::Relaxed);
         slot.latency.store(s.latency_ns, Ordering::Relaxed);
         slot.seq.store(2 * ticket + 2, Ordering::Release);
     }
@@ -231,13 +245,14 @@ impl TelemetryStore {
                 self.dropped.fetch_add(1, Ordering::Relaxed);
                 continue;
             }
-            let (dtype, backend) = unpack(tag);
+            let (dtype, backend, batch) = unpack(tag);
             out.push(TelemetrySample {
                 n,
                 m,
                 dtype,
                 backend,
                 latency_ns,
+                batch,
             });
         }
         self.tail.store(head, Ordering::Release);
@@ -284,6 +299,20 @@ impl AdaptiveHeuristic {
         self.epoch.fetch_add(1, Ordering::AcqRel) + 1
     }
 
+    /// Install a restored (persisted) model **without** bumping the
+    /// epoch; pair with [`AdaptiveHeuristic::restore_epoch`] so the
+    /// restarted service resumes at the saved epoch instead of
+    /// replaying 1, 2, … (which would collide with plan-cache keys the
+    /// previous life already used).
+    pub fn restore(&self, dtype: Dtype, model: KnnHeuristic) {
+        *self.slot(dtype).write().unwrap() = Some(Arc::new(model));
+    }
+
+    /// Raise the epoch to at least `epoch` (monotone; never lowers).
+    pub fn restore_epoch(&self, epoch: u64) {
+        self.epoch.fetch_max(epoch, Ordering::AcqRel);
+    }
+
     /// Predict the optimum m for a size, when a model for the dtype is
     /// live. The returned name tags the epoch (`online-knn-f64@e3`) so
     /// plans record exactly which model decided them.
@@ -314,13 +343,16 @@ pub struct OnlineStats {
 
 /// Per-(dtype, size-bin) aggregation: sizes are binned on an eighth-of-
 /// a-decade log grid (traffic sizes rarely repeat exactly), and each
-/// bin keeps per-m sample counts and total latency.
+/// bin keeps per-(batch-size, m) sample counts and total latency —
+/// keyed by batch size so the fit only ever compares like-batch
+/// samples (a fused member's amortized latency is not comparable to a
+/// singleton's).
 #[derive(Default)]
 struct BinStats {
     log_sum: f64,
     count: u64,
-    /// m -> (samples, total latency µs).
-    per_m: BTreeMap<usize, (u64, f64)>,
+    /// (batch size, m) -> (samples, total latency µs).
+    per_m: BTreeMap<(usize, usize), (u64, f64)>,
 }
 
 type Bins = BTreeMap<i64, BinStats>;
@@ -337,20 +369,36 @@ fn dtype_index(dtype: Dtype) -> usize {
 /// trend correction over the lot. Returns `None` until at least one bin
 /// has comparative evidence (two or more qualified m values) — fitting
 /// from policy-only traffic would just memorize the current heuristic.
+///
+/// Per-m means are computed **within one batch-size class per bin**:
+/// fused-batch members record amortized latency (`exec/batch_size`)
+/// that hides the fan-out overhead singleton (explored) samples pay in
+/// full, so cross-class comparison would bias every bin toward the
+/// incumbent m under `submit_many`-heavy traffic. The class with the
+/// most qualified m values wins (ties prefer the smaller batch size,
+/// where exploration evidence lives).
 fn fit_rows(bins: &Bins, min_samples: u64) -> Option<(Vec<usize>, Vec<usize>)> {
     let mut ns = Vec::new();
     let mut sweeps = Vec::new();
     let mut comparative = false;
     for b in bins.values() {
-        let times: Vec<(usize, f64)> = b
-            .per_m
-            .iter()
-            .filter(|&(_, &(count, _))| count >= min_samples)
-            .map(|(&m, &(count, total_us))| (m, (total_us / count as f64).max(1e-6)))
-            .collect();
-        if times.is_empty() {
-            continue;
+        let mut classes: BTreeMap<usize, Vec<(usize, f64)>> = BTreeMap::new();
+        for (&(batch, m), &(count, total_us)) in &b.per_m {
+            if count >= min_samples {
+                classes
+                    .entry(batch)
+                    .or_default()
+                    .push((m, (total_us / count as f64).max(1e-6)));
+            }
         }
+        // max_by: most qualified m values; on ties the *smaller* batch
+        // compares greater, so it wins.
+        let Some((_batch, times)) = classes
+            .into_iter()
+            .max_by(|a, b| a.1.len().cmp(&b.1.len()).then(b.0.cmp(&a.0)))
+        else {
+            continue;
+        };
         if times.len() >= 2 {
             comparative = true;
         }
@@ -376,6 +424,67 @@ fn fit_rows(bins: &Bins, min_samples: u64) -> Option<(Vec<usize>, Vec<usize>)> {
     Some((ns, corrected))
 }
 
+// ---------------------------------------------------------------------------
+// Model persistence: the fitted (n, m) pairs + epoch as JSON, written
+// atomically (temp file + rename) on every install and restored at
+// startup.
+// ---------------------------------------------------------------------------
+
+const MODEL_DTYPES: [(&str, Dtype); 2] = [("f64", Dtype::F64), ("f32", Dtype::F32)];
+
+/// Serialize the live per-dtype models and the current epoch to `path`.
+fn save_models(path: &str, adaptive: &AdaptiveHeuristic) -> crate::error::Result<()> {
+    let mut entries: Vec<(&str, Json)> = vec![("epoch", Json::Num(adaptive.epoch() as f64))];
+    for (key, dtype) in MODEL_DTYPES {
+        let Some(model) = adaptive.current(dtype) else {
+            continue;
+        };
+        let (ns, ms) = model.training_pairs();
+        entries.push((
+            key,
+            obj(vec![
+                ("k", Json::Num(model.k() as f64)),
+                (
+                    "ns",
+                    Json::Arr(ns.iter().map(|&n| Json::Num(n as f64)).collect()),
+                ),
+                (
+                    "ms",
+                    Json::Arr(ms.iter().map(|&m| Json::Num(m as f64)).collect()),
+                ),
+            ]),
+        ));
+    }
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, obj(entries).to_string_pretty())?;
+    std::fs::rename(tmp, path)?;
+    Ok(())
+}
+
+/// Parse a persisted snapshot back into per-dtype models. `None` on
+/// any read/parse/refit failure (the caller starts fresh).
+fn load_models(path: &str) -> Option<(u64, Vec<(Dtype, KnnHeuristic)>)> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let json = Json::parse(&text).ok()?;
+    let epoch = json.get("epoch").ok()?.as_f64()? as u64;
+    let usizes = |j: &Json| -> Option<Vec<usize>> {
+        j.as_arr()?.iter().map(Json::as_usize).collect()
+    };
+    let mut models = Vec::new();
+    for (key, dtype) in MODEL_DTYPES {
+        let Ok(entry) = json.get(key) else {
+            continue;
+        };
+        let k = entry.get("k").ok()?.as_usize()?;
+        let ns = usizes(entry.get("ns").ok()?)?;
+        let ms = usizes(entry.get("ms").ok()?)?;
+        let name = format!("online-knn-{}", dtype.name());
+        let model = KnnHeuristic::fit_full(&name, &ns, &ms, k.max(1)).ok()?;
+        models.push((dtype, model));
+    }
+    Some((epoch, models))
+}
+
 /// The online tuning subsystem one [`crate::coordinator::Service`]
 /// owns: the telemetry ring the workers feed, the sticky aggregation
 /// the trainer folds drains into, the exploration counter, and the
@@ -397,7 +506,7 @@ impl OnlineTuner {
 
     pub fn new(cfg: OnlineTuneConfig) -> OnlineTuner {
         let window = cfg.window.max(1);
-        OnlineTuner {
+        let tuner = OnlineTuner {
             cfg,
             store: TelemetryStore::new(window),
             adaptive: Arc::new(AdaptiveHeuristic::new()),
@@ -405,6 +514,37 @@ impl OnlineTuner {
             explored: AtomicU64::new(0),
             explore_tick: AtomicU64::new(0),
             agg: Mutex::new([Bins::new(), Bins::new()]),
+        };
+        if let Some(path) = tuner.cfg.model_path.clone() {
+            tuner.restore_from(&path);
+        }
+        tuner
+    }
+
+    /// Load a persisted model snapshot, installing the per-dtype models
+    /// without epoch bumps and resuming at the saved epoch. A missing
+    /// file is a fresh start; a corrupt one is logged and ignored.
+    fn restore_from(&self, path: &str) {
+        if !std::path::Path::new(path).exists() {
+            return;
+        }
+        match load_models(path) {
+            Some((epoch, models)) if !models.is_empty() => {
+                for (dtype, model) in models {
+                    self.adaptive.restore(dtype, model);
+                }
+                // A persisted model was always saved at epoch >= 1.
+                self.adaptive.restore_epoch(epoch.max(1));
+                crate::log_info!(
+                    "[online] restored persisted model from {path} (epoch {})",
+                    self.adaptive.epoch()
+                );
+            }
+            _ => {
+                crate::log_warn!(
+                    "[online] could not load persisted model at {path}; starting fresh"
+                );
+            }
         }
     }
 
@@ -418,7 +558,9 @@ impl OnlineTuner {
         &self.adaptive
     }
 
-    /// Record one executed solve (never blocks or allocates).
+    /// Record one executed solve (never blocks or allocates). `batch`
+    /// is the execution batch size the solve rode in (1 = singleton);
+    /// the trainer only compares like-batch samples.
     pub fn record_solve(
         &self,
         n: usize,
@@ -426,6 +568,7 @@ impl OnlineTuner {
         dtype: Dtype,
         backend: Backend,
         latency_ns: u64,
+        batch: usize,
     ) {
         self.store.record(TelemetrySample {
             n,
@@ -433,6 +576,7 @@ impl OnlineTuner {
             dtype,
             backend,
             latency_ns,
+            batch,
         });
     }
 
@@ -499,7 +643,7 @@ impl OnlineTuner {
             let b = bins.entry(bin).or_default();
             b.log_sum += (s.n.max(1) as f64).log10();
             b.count += 1;
-            let e = b.per_m.entry(s.m).or_insert((0, 0.0));
+            let e = b.per_m.entry((s.batch.max(1), s.m)).or_insert((0, 0.0));
             e.0 += 1;
             e.1 += s.latency_ns as f64 / 1e3;
         }
@@ -528,6 +672,11 @@ impl OnlineTuner {
         }
         if installed {
             self.retrains.fetch_add(1, Ordering::Relaxed);
+            if let Some(path) = &self.cfg.model_path {
+                if let Err(e) = save_models(path, &self.adaptive) {
+                    crate::log_warn!("[online] persisting model to {path} failed: {e}");
+                }
+            }
         }
         installed
     }
@@ -562,6 +711,7 @@ mod tests {
             dtype: Dtype::F64,
             backend: Backend::Native,
             latency_ns,
+            batch: 1,
         }
     }
 
@@ -622,12 +772,19 @@ mod tests {
     }
 
     #[test]
-    fn dtype_backend_packing_roundtrips() {
+    fn dtype_backend_batch_packing_roundtrips() {
         for dtype in [Dtype::F64, Dtype::F32] {
             for backend in [Backend::Pjrt, Backend::Native, Backend::Thomas] {
-                assert_eq!(unpack(pack(dtype, backend)), (dtype, backend));
+                for batch in [1usize, 2, 16, 4096] {
+                    assert_eq!(
+                        unpack(pack(dtype, backend, batch)),
+                        (dtype, backend, batch)
+                    );
+                }
             }
         }
+        // A zero batch (defensive) normalizes to the singleton class.
+        assert_eq!(unpack(pack(Dtype::F64, Backend::Native, 0)).2, 1);
     }
 
     #[test]
@@ -653,8 +810,8 @@ mod tests {
         let tuner = OnlineTuner::new(cfg);
         // Comparative evidence at one size: m = 32 measures 2x faster.
         for _ in 0..3 {
-            tuner.record_solve(30_000, 8, Dtype::F64, Backend::Native, 900_000);
-            tuner.record_solve(30_000, 32, Dtype::F64, Backend::Native, 400_000);
+            tuner.record_solve(30_000, 8, Dtype::F64, Backend::Native, 900_000, 1);
+            tuner.record_solve(30_000, 32, Dtype::F64, Backend::Native, 400_000, 1);
         }
         assert!(tuner.retrain_now());
         let stats = tuner.stats();
@@ -678,7 +835,7 @@ mod tests {
         });
         // Policy-only traffic: a single m per size teaches nothing.
         for _ in 0..10 {
-            tuner.record_solve(50_000, 16, Dtype::F64, Backend::Native, 500_000);
+            tuner.record_solve(50_000, 16, Dtype::F64, Backend::Native, 500_000, 1);
         }
         assert!(!tuner.retrain_now());
         assert_eq!(tuner.stats().epoch, 0);
@@ -697,9 +854,9 @@ mod tests {
             ..OnlineTuneConfig::default()
         });
         for _ in 0..2 {
-            tuner.record_solve(10_000, 20, Dtype::F64, Backend::Native, 500_000);
-            tuner.record_solve(100_000, 8, Dtype::F64, Backend::Native, 700_000);
-            tuner.record_solve(100_000, 16, Dtype::F64, Backend::Native, 600_000);
+            tuner.record_solve(10_000, 20, Dtype::F64, Backend::Native, 500_000, 1);
+            tuner.record_solve(100_000, 8, Dtype::F64, Backend::Native, 700_000, 1);
+            tuner.record_solve(100_000, 16, Dtype::F64, Backend::Native, 600_000, 1);
         }
         assert!(tuner.retrain_now());
         let (m, _) = tuner.adaptive().predict(100_000, Dtype::F64).unwrap();
@@ -716,8 +873,8 @@ mod tests {
             ..OnlineTuneConfig::default()
         });
         for _ in 0..4 {
-            tuner.record_solve(100, 4, Dtype::F64, Backend::Thomas, 1_000);
-            tuner.record_solve(100, 8, Dtype::F64, Backend::Thomas, 2_000);
+            tuner.record_solve(100, 4, Dtype::F64, Backend::Thomas, 1_000, 1);
+            tuner.record_solve(100, 8, Dtype::F64, Backend::Thomas, 2_000, 1);
         }
         assert!(!tuner.retrain_now(), "Thomas solves carry no m signal");
     }
@@ -742,7 +899,7 @@ mod tests {
             (100_000, 8, 900_000),
         ] {
             for _ in 0..2 {
-                tuner.record_solve(n, m, Dtype::F64, Backend::Native, ns);
+                tuner.record_solve(n, m, Dtype::F64, Backend::Native, ns, 1);
             }
         }
         assert!(tuner.retrain_now());
@@ -818,5 +975,106 @@ mod tests {
         c.explore = 0.5;
         c.window = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn like_batch_aggregation_unbiases_fused_members() {
+        // N = 100_000 traffic: fused batches of 4 run at the incumbent
+        // m = 8 with *amortized* 250 µs member latency (the fan-out
+        // overhead is split four ways), while singleton samples measure
+        // the honest picture — m = 8 at 900 µs, m = 16 at 600 µs.
+        // Pooled naively, m = 8's mean ((12·250 + 2·900)/14 ≈ 343 µs)
+        // would beat m = 16 and the incumbent could never be dethroned;
+        // comparing only like-batch samples must pick m = 16.
+        let tuner = OnlineTuner::new(OnlineTuneConfig {
+            enabled: true,
+            min_samples: 2,
+            ..OnlineTuneConfig::default()
+        });
+        for _ in 0..12 {
+            tuner.record_solve(100_000, 8, Dtype::F64, Backend::Native, 250_000, 4);
+        }
+        for _ in 0..2 {
+            tuner.record_solve(100_000, 8, Dtype::F64, Backend::Native, 900_000, 1);
+            tuner.record_solve(100_000, 16, Dtype::F64, Backend::Native, 600_000, 1);
+        }
+        assert!(tuner.retrain_now(), "singleton class carries comparative evidence");
+        let (m, _) = tuner.adaptive().predict(100_000, Dtype::F64).unwrap();
+        assert_eq!(m, 16, "amortized fused latencies must not mask the singleton optimum");
+    }
+
+    #[test]
+    fn batched_only_traffic_still_trains_within_its_class() {
+        // All evidence lives in one fused-batch class: comparison within
+        // that class is still sound (same amortization on both sides).
+        let tuner = OnlineTuner::new(OnlineTuneConfig {
+            enabled: true,
+            min_samples: 2,
+            ..OnlineTuneConfig::default()
+        });
+        for _ in 0..3 {
+            tuner.record_solve(50_000, 8, Dtype::F64, Backend::Native, 800_000, 4);
+            tuner.record_solve(50_000, 32, Dtype::F64, Backend::Native, 500_000, 4);
+        }
+        assert!(tuner.retrain_now());
+        let (m, _) = tuner.adaptive().predict(50_000, Dtype::F64).unwrap();
+        assert_eq!(m, 32);
+    }
+
+    #[test]
+    fn model_persists_and_restores_across_restarts() {
+        let path = std::env::temp_dir().join(format!(
+            "partisol-online-model-{}-roundtrip.json",
+            std::process::id()
+        ));
+        let path_str = path.to_string_lossy().into_owned();
+        let _ = std::fs::remove_file(&path);
+        let cfg = OnlineTuneConfig {
+            enabled: true,
+            min_samples: 2,
+            model_path: Some(path_str.clone()),
+            ..OnlineTuneConfig::default()
+        };
+
+        // First life: learn m = 32 at 30k (f64) and m = 16 at 80k (f32).
+        let tuner = OnlineTuner::new(cfg.clone());
+        assert_eq!(tuner.stats().epoch, 0, "no persisted file yet");
+        for _ in 0..3 {
+            tuner.record_solve(30_000, 8, Dtype::F64, Backend::Native, 900_000, 1);
+            tuner.record_solve(30_000, 32, Dtype::F64, Backend::Native, 400_000, 1);
+            tuner.record_solve(80_000, 8, Dtype::F32, Backend::Native, 700_000, 1);
+            tuner.record_solve(80_000, 16, Dtype::F32, Backend::Native, 300_000, 1);
+        }
+        assert!(tuner.retrain_now());
+        let epoch = tuner.stats().epoch;
+        assert!(epoch >= 1);
+        assert!(path.exists(), "install must write the snapshot");
+
+        // Second life: a fresh tuner restores model and epoch.
+        let restored = OnlineTuner::new(cfg);
+        assert_eq!(restored.stats().epoch, epoch, "epoch resumes, not replays");
+        for n in [10_000usize, 30_000, 60_000] {
+            assert_eq!(
+                restored.adaptive().predict(n, Dtype::F64).map(|(m, _)| m),
+                tuner.adaptive().predict(n, Dtype::F64).map(|(m, _)| m),
+                "restored f64 model must predict identically at n = {n}"
+            );
+        }
+        assert_eq!(
+            restored.adaptive().predict(80_000, Dtype::F32).map(|(m, _)| m),
+            Some(16),
+            "per-dtype models restore independently"
+        );
+
+        // A corrupt file is a fresh start, not a panic.
+        std::fs::write(&path, b"{ not json").unwrap();
+        let fresh = OnlineTuner::new(OnlineTuneConfig {
+            enabled: true,
+            model_path: Some(path_str),
+            ..OnlineTuneConfig::default()
+        });
+        assert_eq!(fresh.stats().epoch, 0);
+        assert!(fresh.adaptive().predict(30_000, Dtype::F64).is_none());
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -104,6 +104,7 @@ fn steady_state_solve_is_allocation_free() {
                 dtype: Dtype::F64,
                 backend: Backend::Native,
                 latency_ns: 1_000 + i,
+                batch: 1,
             });
         }
         for i in 0..200u64 {
@@ -114,6 +115,7 @@ fn steady_state_solve_is_allocation_free() {
                 dtype: Dtype::F32,
                 backend: Backend::Native,
                 latency_ns: i,
+                batch: 1,
             });
         }
     });
