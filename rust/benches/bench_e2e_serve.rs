@@ -2,21 +2,29 @@
 //! coordinator under a mixed synthetic workload (the serving-paper-style
 //! metric of EXPERIMENTS.md §E2E), driven through the typed client API,
 //! plus a batched-submission section comparing one-at-a-time `submit`
-//! against `submit_many` fan-outs on a repeated-size workload.
+//! against `submit_many` fan-outs, and a kernel-variant axis comparing
+//! forced-scalar execution against the planner's lane-kernel policy on
+//! many-small-systems traffic.
+//!
+//! Results are written machine-readably to `BENCH_e2e_serve.json` at
+//! the repo root. Pass `--smoke` (the CI bench-smoke job does) for a
+//! tiny request count that still exercises the JSON-emitting path.
 
 use partisol::api::{Client, SolveSpec};
 use partisol::config::Config;
+use partisol::plan::KernelVariant;
 use partisol::solver::generator::random_dd_system;
+use partisol::util::json::{obj, Json};
 use partisol::util::Pcg64;
 use std::sync::Arc;
 use std::time::Instant;
 
-fn run_workload(cfg: Config, label: &str, requests: usize) {
+fn run_workload(cfg: Config, label: &str, requests: usize) -> Option<Json> {
     let client = match Client::from_config(cfg) {
         Ok(c) => c,
         Err(e) => {
             println!("{label}: SKIP ({e})");
-            return;
+            return None;
         }
     };
     let mut rng = Pcg64::new(11);
@@ -29,7 +37,7 @@ fn run_workload(cfg: Config, label: &str, requests: usize) {
             Ok(h) => handles.push(h),
             Err(e) => {
                 println!("{label}: submit failed ({e})");
-                return;
+                return None;
             }
         }
     }
@@ -41,7 +49,7 @@ fn run_workload(cfg: Config, label: &str, requests: usize) {
     let wall = t0.elapsed().as_secs_f64();
     let m = client.metrics();
     println!(
-        "{label}: {ok}/{requests} ok, {:.1} req/s | e2e p50 {:.1} ms p99 {:.1} ms | batches {} | pjrt {} native {} thomas {} | plan cache {}h/{}m",
+        "{label}: {ok}/{requests} ok, {:.1} req/s | e2e p50 {:.1} ms p99 {:.1} ms | batches {} | pjrt {} native {} thomas {} | kernels s{}/soa{}/v{} | plan cache {}h/{}m",
         ok as f64 / wall,
         m.p50_e2e_us / 1e3,
         m.p99_e2e_us / 1e3,
@@ -49,15 +57,30 @@ fn run_workload(cfg: Config, label: &str, requests: usize) {
         m.pjrt_solves,
         m.native_solves,
         m.thomas_solves,
+        m.kernel_scalar,
+        m.kernel_soa,
+        m.kernel_simd_single,
         m.plan_cache_hits,
         m.plan_cache_misses
     );
     client.shutdown();
+    Some(obj(vec![
+        ("label", Json::Str(label.trim().to_string())),
+        ("requests", Json::Num(requests as f64)),
+        ("ok", Json::Num(ok as f64)),
+        ("req_per_s", Json::Num(ok as f64 / wall)),
+        ("p50_ms", Json::Num(m.p50_e2e_us / 1e3)),
+        ("p99_ms", Json::Num(m.p99_e2e_us / 1e3)),
+        ("batches", Json::Num(m.batches as f64)),
+        ("kernel_scalar", Json::Num(m.kernel_scalar as f64)),
+        ("kernel_soa", Json::Num(m.kernel_soa as f64)),
+        ("kernel_simd_single", Json::Num(m.kernel_simd_single as f64)),
+    ]))
 }
 
 /// submit vs submit_many on a repeated-size native workload: the
 /// batched path fuses same-shape members into one pool fan-out each.
-fn run_batched_comparison(requests: usize, n: usize) {
+fn run_batched_comparison(requests: usize, n: usize) -> Option<Json> {
     let cfg = Config {
         probe_pjrt: false,
         workers: 2,
@@ -67,7 +90,7 @@ fn run_batched_comparison(requests: usize, n: usize) {
         Ok(c) => c,
         Err(e) => {
             println!("batched: SKIP ({e})");
-            return;
+            return None;
         }
     };
     let mut rng = Pcg64::new(13);
@@ -105,21 +128,123 @@ fn run_batched_comparison(requests: usize, n: usize) {
         max_batch_seen
     );
     client.shutdown();
+    Some(obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("requests", Json::Num(requests as f64)),
+        ("submit_req_per_s", Json::Num(requests as f64 / t_single)),
+        ("submit_many_req_per_s", Json::Num(requests as f64 / t_batched)),
+        ("speedup", Json::Num(t_single / t_batched)),
+        ("max_batch", Json::Num(max_batch_seen as f64)),
+    ]))
+}
+
+/// Kernel-variant axis: the same `submit_many` workload forced through
+/// the scalar kernel (per-request `with_kernel` override) vs the
+/// planner's policy (SoA lane batches for small n), end to end through
+/// the service — batcher fusion, lane transposes and response fan-out
+/// included.
+fn run_kernel_axis(points: &[(usize, usize)]) -> Vec<Json> {
+    let mut rows = Vec::new();
+    for &(n, batch) in points {
+        let cfg = Config {
+            probe_pjrt: false,
+            workers: 2,
+            ..Config::default()
+        };
+        let client = match Client::from_config(cfg) {
+            Ok(c) => c,
+            Err(e) => {
+                println!("kernel axis: SKIP ({e})");
+                return rows;
+            }
+        };
+        let mut rng = Pcg64::new(17);
+        let systems: Vec<Arc<_>> = (0..batch)
+            .map(|_| Arc::new(random_dd_system::<f64>(&mut rng, n, 0.5)))
+            .collect();
+        let run = |kernel: Option<KernelVariant>| -> f64 {
+            let t0 = Instant::now();
+            let specs = systems
+                .iter()
+                .map(|s| {
+                    let spec = SolveSpec::shared_f64(s.clone());
+                    match kernel {
+                        Some(k) => spec.with_kernel(k),
+                        None => spec,
+                    }
+                })
+                .collect();
+            for h in client.submit_many(specs).unwrap() {
+                h.wait().unwrap();
+            }
+            t0.elapsed().as_secs_f64()
+        };
+        // Warm both paths (pool spin-up, plan cache, arenas), then time.
+        run(Some(KernelVariant::Scalar));
+        run(None);
+        let t_scalar = run(Some(KernelVariant::Scalar));
+        let t_auto = run(None);
+        let m = client.metrics();
+        println!(
+            "kernel axis: N={n} x{batch} | scalar {:.1} req/s | auto {:.1} req/s ({:.2}x) | counters s{}/soa{}/v{}",
+            batch as f64 / t_scalar,
+            batch as f64 / t_auto,
+            t_scalar / t_auto,
+            m.kernel_scalar,
+            m.kernel_soa,
+            m.kernel_simd_single
+        );
+        rows.push(obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("batch", Json::Num(batch as f64)),
+            ("scalar_req_per_s", Json::Num(batch as f64 / t_scalar)),
+            ("auto_req_per_s", Json::Num(batch as f64 / t_auto)),
+            ("speedup", Json::Num(t_scalar / t_auto)),
+            ("kernel_scalar", Json::Num(m.kernel_scalar as f64)),
+            ("kernel_soa", Json::Num(m.kernel_soa as f64)),
+            ("kernel_simd_single", Json::Num(m.kernel_simd_single as f64)),
+        ]));
+        client.shutdown();
+    }
+    rows
 }
 
 fn main() {
-    println!("== end-to-end service benchmarks (64 mixed requests, N in 1e3..1e5) ==");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let requests = if smoke { 12 } else { 64 };
+    let mut workloads = Vec::new();
+    println!("== end-to-end service benchmarks ({requests} mixed requests, N in 1e3..1e5) ==");
     // PJRT-backed service (device thread + batching).
-    run_workload(Config::default(), "pjrt   ", 64);
+    workloads.extend(run_workload(Config::default(), "pjrt   ", requests));
     // Native-only service (worker pool).
-    run_workload(
+    workloads.extend(run_workload(
         Config {
             probe_pjrt: false,
             workers: 4,
             ..Config::default()
         },
         "native ",
-        64,
-    );
-    run_batched_comparison(64, 20_000);
+        requests,
+    ));
+    let batched = run_batched_comparison(requests, 20_000);
+    let kernel_points: &[(usize, usize)] = if smoke {
+        &[(512, 64)]
+    } else {
+        &[(128, 256), (512, 256), (2048, 128)]
+    };
+    let kernel_rows = run_kernel_axis(kernel_points);
+
+    let report = obj(vec![
+        ("bench", Json::Str("e2e_serve".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("workloads", Json::Arr(workloads)),
+        (
+            "batched",
+            batched.unwrap_or_else(|| obj(vec![("skipped", Json::Bool(true))])),
+        ),
+        ("kernel_variants", Json::Arr(kernel_rows)),
+    ]);
+    std::fs::write("BENCH_e2e_serve.json", report.to_string_pretty())
+        .expect("write BENCH_e2e_serve.json");
+    println!("\nwrote BENCH_e2e_serve.json");
 }

@@ -23,7 +23,10 @@ use partisol::solver::partition::{
     BlockInterface, PartitionWorkspace,
 };
 use partisol::solver::thomas::{thomas_solve_with_scratch, ThomasScratch};
-use partisol::solver::TriSystem;
+use partisol::solver::{
+    default_lanes, simd_partition_solve_ref_with_workspace, soa_solve_batch_ref, TriSystem,
+    TriSystemRef,
+};
 use partisol::util::count_alloc::CountingAlloc;
 use partisol::util::json::{obj, Json};
 use partisol::util::stats::median;
@@ -259,11 +262,147 @@ fn main() {
         ]));
     }
 
+    // -----------------------------------------------------------------
+    // Kernel variants: the SoA lane batch vs a sequential per-system
+    // Thomas loop on many-small-systems workloads, and the
+    // lane-vectorized single-system stage1/stage3 vs the scalar
+    // partition pipeline at large N. Both lane kernels are bit-exact
+    // drop-ins, so the baselines double as correctness oracles.
+    // -----------------------------------------------------------------
+    // Enough iterations even under --smoke: the headline soa speedup is
+    // a recorded acceptance number, so it must not ride one noisy pass.
+    let kv_iters = min_iters.max(5);
+    let lane_points: &[(usize, usize)] = if smoke {
+        &[(512, 256)]
+    } else {
+        &[(64, 1024), (512, 256), (2048, 64)]
+    };
+    println!("\n== kernel variants ==");
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    let mut soa_headline = 0.0f64;
+    for &(n_sys, batch) in lane_points {
+        let systems: Vec<TriSystem<f64>> = (0..batch)
+            .map(|_| random_dd_system::<f64>(&mut rng, n_sys, 0.5))
+            .collect();
+        let views: Vec<TriSystemRef<'_, f64>> = systems.iter().map(|s| s.view()).collect();
+        let total = n_sys * batch;
+
+        // Scalar baseline: what small-system batches cost before the
+        // lane kernel — one sequential Thomas sweep per member.
+        let mut scratch = ThomasScratch::with_capacity(n_sys);
+        let mut x_scalar = vec![0.0f64; total];
+        let samples = bench_loop(loop_t, kv_iters, || {
+            for (i, s) in systems.iter().enumerate() {
+                thomas_solve_with_scratch(
+                    s,
+                    &mut scratch,
+                    &mut x_scalar[i * n_sys..(i + 1) * n_sys],
+                )
+                .unwrap();
+            }
+            std::hint::black_box(&x_scalar);
+        });
+        let t_scalar = median(&samples);
+
+        let w = default_lanes::<f64>();
+        let mut spans = Vec::new();
+        let mut x_soa = vec![0.0f64; total];
+        soa_solve_batch_ref(&views, w, &exec, &mut spans, &mut x_soa).unwrap(); // warm
+        let samples = bench_loop(loop_t, kv_iters, || {
+            soa_solve_batch_ref(&views, w, &exec, &mut spans, &mut x_soa).unwrap();
+            std::hint::black_box(&x_soa);
+        });
+        let t_soa = median(&samples);
+        let soa_allocs = CountingAlloc::count_during(|| {
+            soa_solve_batch_ref(&views, w, &exec, &mut spans, &mut x_soa).unwrap();
+        });
+        assert_eq!(x_soa, x_scalar, "lane kernel must match per-member Thomas");
+        let speedup = t_scalar / t_soa;
+        if (n_sys, batch) == (512, 256) {
+            soa_headline = speedup;
+        }
+        println!(
+            "  soa lanes  : N={n_sys:>5} x{batch:>5} w={w} | scalar {:>9.3} ms | soa {:>9.3} ms | {:>6.2}x | {} allocs/batch",
+            t_scalar * 1e3,
+            t_soa * 1e3,
+            speedup,
+            soa_allocs
+        );
+        kernel_rows.push(obj(vec![
+            ("variant", Json::Str("soa".to_string())),
+            ("n", Json::Num(n_sys as f64)),
+            ("batch", Json::Num(batch as f64)),
+            ("width", Json::Num(w as f64)),
+            ("scalar_ms", Json::Num(t_scalar * 1e3)),
+            ("variant_ms", Json::Num(t_soa * 1e3)),
+            ("speedup", Json::Num(speedup)),
+            ("allocs_per_batch", Json::Num(soa_allocs as f64)),
+        ]));
+    }
+
+    let single_points: &[usize] = if smoke { &[1 << 14] } else { &[1 << 17, 1 << 20] };
+    for &n_big in single_points {
+        let m_big = planner.plan(n_big, &SolveOptions::default()).m();
+        let sys_big = random_dd_system::<f64>(&mut rng, n_big, 0.5);
+        let mut ws = PartitionWorkspace::new();
+        let mut x_scalar = vec![0.0f64; n_big];
+        partition_solve_with_workspace(&sys_big, m_big, &exec, &mut ws, &mut x_scalar).unwrap();
+        let samples = bench_loop(loop_t, kv_iters, || {
+            partition_solve_with_workspace(&sys_big, m_big, &exec, &mut ws, &mut x_scalar).unwrap();
+            std::hint::black_box(&x_scalar);
+        });
+        let t_scalar = median(&samples);
+
+        let lanes = default_lanes::<f64>();
+        let mut ws_simd = PartitionWorkspace::new();
+        let mut x_simd = vec![0.0f64; n_big];
+        simd_partition_solve_ref_with_workspace(
+            sys_big.view(),
+            m_big,
+            lanes,
+            &exec,
+            &mut ws_simd,
+            &mut x_simd,
+        )
+        .unwrap();
+        let samples = bench_loop(loop_t, kv_iters, || {
+            simd_partition_solve_ref_with_workspace(
+                sys_big.view(),
+                m_big,
+                lanes,
+                &exec,
+                &mut ws_simd,
+                &mut x_simd,
+            )
+            .unwrap();
+            std::hint::black_box(&x_simd);
+        });
+        let t_simd = median(&samples);
+        assert_eq!(x_simd, x_scalar, "simd-single must match scalar partition");
+        println!(
+            "  simd-single: N={n_big:>8} m={m_big:>3} lanes={lanes} | scalar {:>9.3} ms | simd {:>9.3} ms | {:>6.2}x",
+            t_scalar * 1e3,
+            t_simd * 1e3,
+            t_scalar / t_simd
+        );
+        kernel_rows.push(obj(vec![
+            ("variant", Json::Str("simd_single".to_string())),
+            ("n", Json::Num(n_big as f64)),
+            ("m", Json::Num(m_big as f64)),
+            ("lanes", Json::Num(lanes as f64)),
+            ("scalar_ms", Json::Num(t_scalar * 1e3)),
+            ("variant_ms", Json::Num(t_simd * 1e3)),
+            ("speedup", Json::Num(t_scalar / t_simd)),
+        ]));
+    }
+
     let report = obj(vec![
         ("bench", Json::Str("solver_native".to_string())),
         ("smoke", Json::Bool(smoke)),
         ("pool_size", Json::Num(threads as f64)),
         ("results", Json::Arr(rows)),
+        ("kernel_variants", Json::Arr(kernel_rows)),
+        ("soa_vs_scalar_speedup", Json::Num(soa_headline)),
         (
             "thomas_baseline",
             obj(vec![

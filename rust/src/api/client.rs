@@ -23,7 +23,7 @@ use crate::config::{Config, HeuristicKind};
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::{Service, SolveResponse};
 use crate::gpu::spec::GpuCard;
-use crate::plan::{Backend, Planner, SolveOptions, SolvePlan};
+use crate::plan::{Backend, KernelVariant, Planner, SolveOptions, SolvePlan};
 use crate::solver::{TriSystem, TriSystemRef};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -90,6 +90,14 @@ impl<'a> SolveSpec<'a> {
     /// Force a backend instead of the planner's choice.
     pub fn with_backend(mut self, backend: Backend) -> Self {
         self.opts.backend_override = Some(backend);
+        self
+    }
+
+    /// Force a kernel variant instead of the planner's size policy
+    /// (e.g. [`KernelVariant::Scalar`] to benchmark against the lane
+    /// kernels, or a specific `SoaLanes` width).
+    pub fn with_kernel(mut self, kernel: KernelVariant) -> Self {
+        self.opts.kernel_override = Some(kernel);
         self
     }
 

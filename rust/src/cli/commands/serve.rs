@@ -110,6 +110,10 @@ pub fn run(argv: &[String]) -> Result<()> {
         m.pjrt_solves, m.native_solves, m.thomas_solves, m.batches
     );
     println!(
+        "kernels            : scalar {} | soa {} | simd-single {}",
+        m.kernel_scalar, m.kernel_soa, m.kernel_simd_single
+    );
+    println!(
         "failures           : {} failed | {} backpressure | {} shutdown-rejected | {} pjrt fallbacks | {} dropped replies",
         m.failed, m.rejected_backpressure, m.rejected_shutdown, m.pjrt_fallbacks, m.responses_dropped
     );
@@ -174,6 +178,10 @@ fn print_net_metrics(m: &MetricsSnapshot, online: bool) {
     println!(
         "backends           : pjrt {} | native {} | thomas {} ({} batches)",
         m.pjrt_solves, m.native_solves, m.thomas_solves, m.batches
+    );
+    println!(
+        "kernels            : scalar {} | soa {} | simd-single {}",
+        m.kernel_scalar, m.kernel_soa, m.kernel_simd_single
     );
     println!(
         "plan cache         : {} hits / {} misses",

@@ -5,6 +5,7 @@ use super::parser::{parse, TomlTable};
 use crate::error::{Error, Result};
 use crate::gpu::spec::{Dtype, GpuCard};
 use crate::net::NetConfig;
+use crate::plan::KernelConfig;
 use crate::tuner::online::OnlineTuneConfig;
 use std::path::Path;
 
@@ -76,6 +77,10 @@ pub struct Config {
     /// Network serving layer (`[net]` table; used by `serve --listen`
     /// and `NetServer::start`).
     pub net: NetConfig,
+    /// Kernel-variant selection policy (`[kernel]` table): when the
+    /// planner picks the SoA lane kernel or the vectorized
+    /// single-system kernel over the scalar sweeps.
+    pub kernel: KernelConfig,
 }
 
 impl Default for Config {
@@ -95,6 +100,7 @@ impl Default for Config {
             pool_size: crate::exec::default_pool_size(),
             online: OnlineTuneConfig::default(),
             net: NetConfig::default(),
+            kernel: KernelConfig::default(),
         }
     }
 }
@@ -226,6 +232,29 @@ impl Config {
         if let Some(v) = t.get("net.max_frame_bytes") {
             cfg.net.max_frame_bytes = int_field(v, "net.max_frame_bytes")?;
         }
+        if let Some(v) = t.get("kernel.mode") {
+            cfg.kernel.enabled = match v.as_str() {
+                Some("auto") => true,
+                Some("scalar") => false,
+                other => {
+                    return Err(Error::Config(format!(
+                        "kernel.mode must be \"auto\"|\"scalar\", got {other:?}"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = t.get("kernel.soa_width_f64") {
+            cfg.kernel.soa_width_f64 = int_field(v, "kernel.soa_width_f64")?;
+        }
+        if let Some(v) = t.get("kernel.soa_width_f32") {
+            cfg.kernel.soa_width_f32 = int_field(v, "kernel.soa_width_f32")?;
+        }
+        if let Some(v) = t.get("kernel.soa_max_n") {
+            cfg.kernel.soa_max_n = int_field(v, "kernel.soa_max_n")?;
+        }
+        if let Some(v) = t.get("kernel.simd_single_min_n") {
+            cfg.kernel.simd_single_min_n = int_field(v, "kernel.simd_single_min_n")?;
+        }
         if cfg.workers == 0 || cfg.queue_depth == 0 || cfg.max_batch == 0 || cfg.pool_size == 0 {
             return Err(Error::Config(
                 "workers, queue_depth, max_batch, pool_size must be positive".into(),
@@ -233,6 +262,7 @@ impl Config {
         }
         cfg.online.validate()?;
         cfg.net.validate()?;
+        cfg.kernel.validate()?;
         Ok(cfg)
     }
 }
@@ -354,6 +384,26 @@ mod tests {
         assert!(Config::from_str("[net]\nmax_conns = 0").is_err());
         assert!(Config::from_str("[net]\nmax_frame_bytes = 16").is_err());
         assert!(Config::from_str("[net]\naddr = \"\"").is_err());
+    }
+
+    #[test]
+    fn kernel_knobs_roundtrip_and_validate() {
+        let c = Config::from_str(
+            "[kernel]\nmode = \"auto\"\nsoa_width_f64 = 8\nsoa_width_f32 = 16\nsoa_max_n = 2048\nsimd_single_min_n = 100000",
+        )
+        .unwrap();
+        assert!(c.kernel.enabled);
+        assert_eq!(c.kernel.soa_width_f64, 8);
+        assert_eq!(c.kernel.soa_width_f32, 16);
+        assert_eq!(c.kernel.soa_max_n, 2048);
+        assert_eq!(c.kernel.simd_single_min_n, 100_000);
+        let c = Config::from_str("[kernel]\nmode = \"scalar\"").unwrap();
+        assert!(!c.kernel.enabled, "scalar mode disables the lane kernels");
+        assert!(Config::default().kernel.enabled, "auto by default");
+        assert!(Config::from_str("[kernel]\nmode = \"turbo\"").is_err());
+        // Widths must come from the supported lane set.
+        assert!(Config::from_str("[kernel]\nsoa_width_f64 = 3").is_err());
+        assert!(Config::from_str("[kernel]\nsoa_width_f32 = 0").is_err());
     }
 
     #[test]

@@ -14,12 +14,15 @@
 //! block-aligned.
 //!
 //! PJRT **and** native jobs batch (one fused Stage-1/2/3 pass — a
-//! single pool fan-out — solves the whole group); only Thomas-routed
-//! jobs stay singletons, since the sequential baseline gains nothing
-//! from concatenation.
+//! single pool fan-out — solves the whole group). Thomas-routed jobs
+//! batch only when their route carries the SoA lane kernel: the group
+//! then executes as interleaved lane-Thomas sweeps (the sequential
+//! scalar baseline gains nothing from concatenation, so scalar-kernel
+//! Thomas jobs stay singletons).
 
 use super::request::Backend;
 use super::router::Route;
+use crate::plan::KernelVariant;
 use crate::solver::{Scalar, TriSystem, TriSystemRef};
 
 /// One queued job after routing (service-internal).
@@ -40,7 +43,8 @@ pub struct Batch<J> {
 pub fn form_batches<J>(jobs: Vec<RoutedJob<J>>, max_batch: usize) -> Vec<Batch<J>> {
     let mut batches: Vec<Batch<J>> = Vec::new();
     for rj in jobs {
-        let can_join = rj.route.backend != Backend::Thomas;
+        let can_join = rj.route.backend != Backend::Thomas
+            || matches!(rj.route.kernel, KernelVariant::SoaLanes(_));
         if can_join {
             if let Some(b) = batches
                 .iter_mut()
@@ -112,6 +116,7 @@ mod tests {
             m,
             backend,
             dtype: Dtype::F64,
+            kernel: KernelVariant::Scalar,
         }
     }
 
@@ -184,6 +189,45 @@ mod tests {
             })
             .collect();
         assert_eq!(form_batches(thomas, 8).len(), 3);
+    }
+
+    #[test]
+    fn soa_planned_thomas_jobs_fuse_into_lane_batches() {
+        // Regression: small-n Thomas-routed jobs carrying the SoA lane
+        // kernel must fuse into one group (previously every Thomas job
+        // stayed singleton, starving the lane kernel of its batch).
+        let soa: Vec<RoutedJob<usize>> = (0..5)
+            .map(|i| RoutedJob {
+                job: i,
+                route: Route {
+                    kernel: KernelVariant::SoaLanes(4),
+                    ..route(4, Backend::Thomas)
+                },
+            })
+            .collect();
+        let batches = form_batches(soa, 8);
+        assert_eq!(batches.len(), 1, "SoA-planned Thomas jobs share a group");
+        assert_eq!(batches[0].jobs, vec![0, 1, 2, 3, 4]);
+        // Scalar-kernel Thomas jobs and SoA ones never mix (route differs).
+        let mixed: Vec<RoutedJob<usize>> = (0..2)
+            .flat_map(|i| {
+                [
+                    RoutedJob {
+                        job: 2 * i,
+                        route: route(4, Backend::Thomas),
+                    },
+                    RoutedJob {
+                        job: 2 * i + 1,
+                        route: Route {
+                            kernel: KernelVariant::SoaLanes(4),
+                            ..route(4, Backend::Thomas)
+                        },
+                    },
+                ]
+            })
+            .collect();
+        let batches = form_batches(mixed, 8);
+        assert_eq!(batches.len(), 3, "2 scalar singletons + 1 SoA group");
     }
 
     #[test]

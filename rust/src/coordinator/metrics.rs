@@ -72,6 +72,12 @@ pub struct Metrics {
     pub pjrt_solves: AtomicU64,
     pub native_solves: AtomicU64,
     pub thomas_solves: AtomicU64,
+    /// Solves executed by the scalar host kernels.
+    pub kernel_scalar: AtomicU64,
+    /// Solves executed by the interleaved SoA lane kernel (per member).
+    pub kernel_soa: AtomicU64,
+    /// Solves executed by the vectorized single-system stage 1/3 path.
+    pub kernel_simd_single: AtomicU64,
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
     pub e2e_latency: Histogram,
@@ -134,6 +140,11 @@ pub struct MetricsSnapshot {
     pub pjrt_solves: u64,
     pub native_solves: u64,
     pub thomas_solves: u64,
+    /// Per-kernel-variant solve counters (host kernels only; PJRT
+    /// solves count under none of these).
+    pub kernel_scalar: u64,
+    pub kernel_soa: u64,
+    pub kernel_simd_single: u64,
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
     /// Worker threads in the service's shared exec pool.
@@ -185,6 +196,16 @@ impl Metrics {
         .fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Count `n` solves executed by a host kernel variant.
+    pub fn record_kernel(&self, kernel: crate::plan::KernelVariant, n: u64) {
+        match kernel {
+            crate::plan::KernelVariant::Scalar => &self.kernel_scalar,
+            crate::plan::KernelVariant::SoaLanes(_) => &self.kernel_soa,
+            crate::plan::KernelVariant::SimdSingle => &self.kernel_simd_single,
+        }
+        .fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -198,6 +219,9 @@ impl Metrics {
             pjrt_solves: self.pjrt_solves.load(Ordering::Relaxed),
             native_solves: self.native_solves.load(Ordering::Relaxed),
             thomas_solves: self.thomas_solves.load(Ordering::Relaxed),
+            kernel_scalar: self.kernel_scalar.load(Ordering::Relaxed),
+            kernel_soa: self.kernel_soa.load(Ordering::Relaxed),
+            kernel_simd_single: self.kernel_simd_single.load(Ordering::Relaxed),
             plan_cache_hits: 0,
             plan_cache_misses: 0,
             pool_workers: 0,
@@ -314,5 +338,19 @@ mod tests {
         assert_eq!(s.pjrt_solves, 3);
         assert_eq!(s.native_solves, 2);
         assert_eq!(s.thomas_solves, 1);
+    }
+
+    #[test]
+    fn kernel_variant_counters_survive_the_snapshot() {
+        use crate::plan::KernelVariant;
+        let m = Metrics::default();
+        m.record_kernel(KernelVariant::Scalar, 4);
+        m.record_kernel(KernelVariant::SoaLanes(4), 7);
+        m.record_kernel(KernelVariant::SoaLanes(8), 1);
+        m.record_kernel(KernelVariant::SimdSingle, 2);
+        let s = m.snapshot();
+        assert_eq!(s.kernel_scalar, 4);
+        assert_eq!(s.kernel_soa, 8, "all lane widths share one counter");
+        assert_eq!(s.kernel_simd_single, 2);
     }
 }

@@ -7,16 +7,17 @@ use super::request::{Backend, SolveOptions};
 use crate::config::Config;
 use crate::error::Result;
 use crate::gpu::spec::Dtype;
-use crate::plan::{BackendAvailability, PlanCache, PlanKey, Planner, SolvePlan};
+use crate::plan::{BackendAvailability, KernelVariant, PlanCache, PlanKey, Planner, SolvePlan};
 use std::sync::Arc;
 
-/// The execution shape the batcher groups by: same (m, backend, dtype)
-/// requests can share one blocked execution.
+/// The execution shape the batcher groups by: same
+/// (m, backend, dtype, kernel) requests can share one blocked execution.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Route {
     pub m: usize,
     pub backend: Backend,
     pub dtype: Dtype,
+    pub kernel: KernelVariant,
 }
 
 impl Route {
@@ -25,6 +26,7 @@ impl Route {
             m: plan.m(),
             backend: plan.backend,
             dtype: plan.dtype,
+            kernel: plan.kernel,
         }
     }
 }
@@ -47,6 +49,12 @@ impl Router {
         &self.planner
     }
 
+    /// Install the kernel-variant selection policy (re-keys the cache
+    /// through the planner fingerprint).
+    pub fn set_kernel_config(&mut self, kc: crate::plan::KernelConfig) {
+        self.planner.set_kernel_config(kc);
+    }
+
     /// Attach the online-tuning hot-swap slot to the planner (see
     /// [`crate::tuner::online`]): model installs then re-key the plan
     /// cache through the planner fingerprint, so no cached `SolvePlan`
@@ -59,7 +67,9 @@ impl Router {
     /// per-request overrides (overrides are rare and must not alias
     /// heuristic plans). Plans are shared: a cache hit is an `Arc` clone.
     pub fn plan(&self, n: usize, opts: &SolveOptions) -> Arc<SolvePlan> {
-        let cacheable = opts.m_override.is_none() && opts.backend_override.is_none();
+        let cacheable = opts.m_override.is_none()
+            && opts.backend_override.is_none()
+            && opts.kernel_override.is_none();
         if !cacheable {
             return Arc::new(self.planner.plan(n, opts));
         }
@@ -133,5 +143,24 @@ mod tests {
         let (hits, misses) = r.cache_stats();
         assert_eq!(hits, 0);
         assert_eq!(misses, 0);
+    }
+
+    #[test]
+    fn kernel_override_bypasses_the_cache() {
+        // A forced kernel variant must not alias the auto-planned entry
+        // for the same (n, dtype).
+        let r = router(vec![]);
+        let forced = SolveOptions {
+            kernel_override: Some(crate::plan::KernelVariant::Scalar),
+            ..Default::default()
+        };
+        let plan = r.plan(1_000, &forced);
+        assert_eq!(plan.kernel, crate::plan::KernelVariant::Scalar);
+        let (hits, misses) = r.cache_stats();
+        assert_eq!((hits, misses), (0, 0));
+        // The auto plan for the same size still carries the policy choice.
+        let auto = r.plan(1_000, &SolveOptions::default());
+        assert_eq!(auto.kernel, crate::plan::KernelVariant::SoaLanes(4));
+        assert_eq!(auto.kernel, Route::of_plan(&auto).kernel);
     }
 }

@@ -33,7 +33,8 @@ use crate::error::{Error, Result};
 use crate::exec::{ExecCtx, WorkerPool};
 use crate::gpu::spec::Dtype;
 use crate::plan::{
-    BackendAvailability, NativeBackend, NativeScalar, PjrtBackend, SolveOptions, SolvePlan,
+    BackendAvailability, KernelVariant, NativeBackend, NativeScalar, PjrtBackend, SolveOptions,
+    SolvePlan,
 };
 use crate::runtime::executor::PjrtScalar;
 use crate::runtime::Runtime;
@@ -139,6 +140,8 @@ impl Service {
         }
         let has_pjrt = avail.has_pjrt();
         let mut router = Router::from_config(&cfg, avail)?;
+        cfg.kernel.validate()?;
+        router.set_kernel_config(cfg.kernel);
         cfg.online.validate()?;
         let tuner = if cfg.online.enabled {
             let tuner = Arc::new(OnlineTuner::new(cfg.online.clone()));
@@ -387,13 +390,23 @@ impl Service {
         let plan = inner.router.plan(payload.n(), &opts);
         inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
-        let (x, backend, residual) = match payload {
+        let (x, backend, kernel, residual) = match payload {
             SystemPayload::F64(src) => inline_typed::<f64>(inner, &plan, src, &opts)?,
             SystemPayload::F32(src) => inline_typed::<f32>(inner, &plan, src, &opts)?,
         };
         let exec_us = t0.elapsed().as_secs_f64() * 1e6;
-        record_telemetry(inner, payload.n(), plan.m(), payload.dtype(), backend, exec_us, 1);
+        record_telemetry(
+            inner,
+            payload.n(),
+            plan.m(),
+            payload.dtype(),
+            backend,
+            kernel,
+            exec_us,
+            1,
+        );
         inner.metrics.record_backend(backend, 1);
+        inner.metrics.record_kernel(kernel, 1);
         inner.metrics.queue_latency.record(0.0);
         inner.metrics.exec_latency.record(exec_us);
         inner.metrics.e2e_latency.record(exec_us);
@@ -502,7 +515,7 @@ fn inline_typed<T: PayloadScalar + NativeScalar>(
     plan: &SolvePlan,
     src: &SystemSource<'_, T>,
     opts: &SolveOptions,
-) -> std::result::Result<(crate::api::Solution, Backend, Option<f64>), ApiError> {
+) -> std::result::Result<(crate::api::Solution, Backend, KernelVariant, Option<f64>), ApiError> {
     let out = inner
         .native
         .execute_typed::<T>(plan, src.view())
@@ -513,7 +526,7 @@ fn inline_typed<T: PayloadScalar + NativeScalar>(
     let residual = opts
         .compute_residual
         .then(|| max_abs_residual_ref(src.view(), &out.x));
-    Ok((T::into_solution(out.x), out.backend, residual))
+    Ok((T::into_solution(out.x), out.backend, out.kernel, residual))
 }
 
 // ---------------------------------------------------------------------------
@@ -554,14 +567,18 @@ fn maybe_explore(inner: &Inner, n: usize, opts: &mut SolveOptions) -> bool {
 /// Record one executed solve into the telemetry ring (atomics only —
 /// the hot path never blocks or allocates here). Batch members report
 /// the fused execution time split evenly across the group, tagged with
-/// the batch size so the trainer only compares like-batch samples
-/// (amortized fused latencies are not comparable to singleton ones).
+/// the batch size **and** the kernel variant that ran, so the trainer
+/// only compares like-for-like samples (amortized fused latencies are
+/// not comparable to singleton ones, and per-variant timing curves have
+/// different optimum m).
+#[allow(clippy::too_many_arguments)]
 fn record_telemetry(
     inner: &Inner,
     n: usize,
     m: usize,
     dtype: Dtype,
     backend: Backend,
+    kernel: KernelVariant,
     exec_us: f64,
     batch_size: usize,
 ) {
@@ -571,6 +588,7 @@ fn record_telemetry(
             m,
             dtype,
             backend,
+            kernel,
             (exec_us * 1e3 / batch_size.max(1) as f64) as u64,
             batch_size.max(1),
         );
@@ -716,6 +734,7 @@ fn pjrt_batch_typed<T: PayloadScalar + PjrtScalar>(
         route.m,
         <T as PayloadScalar>::DTYPE,
         Backend::Pjrt,
+        KernelVariant::Scalar,
     );
     let solved = PjrtBackend::new(rt).execute_typed::<T>(&batch_plan, &combined);
     let exec_us = t0.elapsed().as_secs_f64() * 1e6;
@@ -728,7 +747,15 @@ fn pjrt_batch_typed<T: PayloadScalar + PjrtScalar>(
                 .record_backend(outcome.backend, batch_size as u64);
             for (job, &(off, n)) in jobs.into_iter().zip(&spans) {
                 let xj = outcome.x[off..off + n].to_vec();
-                respond_ok_typed::<T>(inner, job, xj, outcome.backend, exec_us, batch_size);
+                respond_ok_typed::<T>(
+                    inner,
+                    job,
+                    xj,
+                    outcome.backend,
+                    outcome.kernel,
+                    exec_us,
+                    batch_size,
+                );
             }
         }
         Err(e) => {
@@ -803,7 +830,16 @@ fn native_one<T: PayloadScalar + NativeScalar>(inner: &Arc<Inner>, job: Job) {
     match result {
         Ok(outcome) => {
             inner.metrics.record_backend(outcome.backend, 1);
-            respond_ok_typed::<T>(inner, job, outcome.x, outcome.backend, exec_us, 1);
+            inner.metrics.record_kernel(outcome.kernel, 1);
+            respond_ok_typed::<T>(
+                inner,
+                job,
+                outcome.x,
+                outcome.backend,
+                outcome.kernel,
+                exec_us,
+                1,
+            );
         }
         Err(e) => {
             inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
@@ -823,9 +859,81 @@ fn execute_native_batch(inner: &Arc<Inner>, route: Route, jobs: Vec<Job>) {
         return;
     }
     inner.metrics.batches.fetch_add(1, Ordering::Relaxed);
+    // SoA-planned groups (small same-route systems, including
+    // Thomas-routed ones the batcher fuses for exactly this) execute as
+    // interleaved lane sweeps instead of one concatenated partition solve.
+    if let KernelVariant::SoaLanes(width) = route.kernel {
+        match route.dtype {
+            Dtype::F64 => native_soa_batch_typed::<f64>(inner, width, route, jobs),
+            Dtype::F32 => native_soa_batch_typed::<f32>(inner, width, route, jobs),
+        }
+        return;
+    }
     match route.dtype {
         Dtype::F64 => native_batch_typed::<f64>(inner, route, jobs),
         Dtype::F32 => native_batch_typed::<f32>(inner, route, jobs),
+    }
+}
+
+/// Execute a same-route group with the SoA lane kernel: members become
+/// interleaved lanes of one batched Thomas sweep (bit-identical per
+/// member to a standalone solve). On any member failure (e.g. one
+/// singular system) every member retries individually so the offender
+/// fails alone.
+fn native_soa_batch_typed<T: PayloadScalar + NativeScalar>(
+    inner: &Arc<Inner>,
+    width: usize,
+    route: Route,
+    jobs: Vec<Job>,
+) {
+    let t0 = Instant::now();
+    let mut views = Vec::with_capacity(jobs.len());
+    for j in &jobs {
+        let Some(src) = T::source(&j.payload) else {
+            break;
+        };
+        views.push(src.view());
+    }
+    if views.len() != jobs.len() {
+        drop(views);
+        for job in jobs {
+            execute_native(inner, job);
+        }
+        return;
+    }
+    let mut spans = Vec::new();
+    let mut x = Vec::new();
+    let result = inner
+        .native
+        .execute_soa_batch_typed::<T>(width, &views, &mut spans, &mut x);
+    drop(views);
+    let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+    let batch_size = jobs.len();
+    match result {
+        Ok(()) => {
+            inner
+                .metrics
+                .record_backend(route.backend, batch_size as u64);
+            inner.metrics.record_kernel(route.kernel, batch_size as u64);
+            for (job, &(off, n)) in jobs.into_iter().zip(&spans) {
+                let xj = x[off..off + n].to_vec();
+                respond_ok_typed::<T>(
+                    inner,
+                    job,
+                    xj,
+                    route.backend,
+                    route.kernel,
+                    exec_us,
+                    batch_size,
+                );
+            }
+        }
+        Err(e) => {
+            crate::log_warn!("soa lane batch failed ({e}); retrying members individually");
+            for job in jobs {
+                execute_native(inner, job);
+            }
+        }
     }
 }
 
@@ -856,6 +964,7 @@ fn native_batch_typed<T: PayloadScalar + NativeScalar>(
         route.m,
         <T as PayloadScalar>::DTYPE,
         Backend::Native,
+        route.kernel,
     );
     let result = inner.native.execute_typed::<T>(&batch_plan, combined.view());
     let exec_us = t0.elapsed().as_secs_f64() * 1e6;
@@ -865,9 +974,18 @@ fn native_batch_typed<T: PayloadScalar + NativeScalar>(
             inner
                 .metrics
                 .record_backend(outcome.backend, batch_size as u64);
+            inner.metrics.record_kernel(outcome.kernel, batch_size as u64);
             for (job, &(off, n)) in jobs.into_iter().zip(&spans) {
                 let xj = outcome.x[off..off + n].to_vec();
-                respond_ok_typed::<T>(inner, job, xj, outcome.backend, exec_us, batch_size);
+                respond_ok_typed::<T>(
+                    inner,
+                    job,
+                    xj,
+                    outcome.backend,
+                    outcome.kernel,
+                    exec_us,
+                    batch_size,
+                );
             }
         }
         Err(e) => {
@@ -886,6 +1004,7 @@ fn respond_ok_typed<T: PayloadScalar>(
     job: Job,
     x: Vec<T>,
     backend: Backend,
+    kernel: KernelVariant,
     exec_us: f64,
     batch_size: usize,
 ) {
@@ -895,6 +1014,7 @@ fn respond_ok_typed<T: PayloadScalar>(
         job.plan.m(),
         job.payload.dtype(),
         backend,
+        kernel,
         exec_us,
         batch_size,
     );
@@ -1116,6 +1236,32 @@ mod tests {
         let m = svc.metrics();
         assert!(m.batches >= 1);
         assert_eq!(m.completed, 3);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn small_system_batch_fuses_through_the_soa_lane_kernel() {
+        // Regression for the batcher fix: small-n (Thomas-routed) jobs
+        // sharing a route must fuse into one SoA lane group instead of
+        // five singleton Thomas solves — and stay bit-identical.
+        let svc = Service::start(native_cfg()).unwrap();
+        let mut rng = Pcg64::new(21);
+        let systems: Vec<TriSystem<f64>> =
+            (0..5).map(|_| random_dd_system(&mut rng, 64, 0.5)).collect();
+        let specs = systems
+            .iter()
+            .enumerate()
+            .map(|(i, sys)| (i as u64, payload64(sys.clone()), SolveOptions::default()))
+            .collect();
+        let rxs = svc.submit_batch(specs).unwrap();
+        for (rx, sys) in rxs.into_iter().zip(&systems) {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.batch_size, 5, "all five share one lane group");
+            assert_eq!(resp.x.as_f64().unwrap(), &thomas_solve(sys).unwrap()[..]);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.kernel_soa, 5, "every member counts under the SoA kernel");
+        assert_eq!(m.kernel_scalar, 0);
         svc.shutdown();
     }
 

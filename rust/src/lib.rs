@@ -1,3 +1,4 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # partisol
 //!
 //! Production-oriented reproduction of *“ML-Based Optimum Sub-system Size

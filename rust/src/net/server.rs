@@ -474,6 +474,9 @@ pub(crate) fn stats_json(snap: &MetricsSnapshot) -> Json {
         ("batches", num(snap.batches)),
         ("plan_cache_hits", num(snap.plan_cache_hits)),
         ("plan_cache_misses", num(snap.plan_cache_misses)),
+        ("kernel_scalar", num(snap.kernel_scalar)),
+        ("kernel_soa", num(snap.kernel_soa)),
+        ("kernel_simd_single", num(snap.kernel_simd_single)),
         ("model_epoch", num(snap.model_epoch)),
         ("mean_e2e_us", Json::Num(snap.mean_e2e_us)),
         ("p99_e2e_us", Json::Num(snap.p99_e2e_us)),

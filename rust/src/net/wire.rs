@@ -25,7 +25,7 @@ use crate::api::payload::{Solution, SystemPayload, SystemSource};
 use crate::api::ApiError;
 use crate::coordinator::SolveResponse;
 use crate::gpu::spec::Dtype;
-use crate::plan::{Backend, SolveOptions};
+use crate::plan::{Backend, KernelVariant, SolveOptions};
 use crate::solver::TriSystem;
 use std::io::{ErrorKind, Read, Write};
 
@@ -242,6 +242,27 @@ fn backend_code(backend: Backend) -> u8 {
     }
 }
 
+/// Kernel-override byte (the request frame's former reserved slot, so
+/// v1 peers interoperate: old clients send 0 = no override, old servers
+/// ignore whatever we send). `0x10 | log2(width)` encodes SoA widths.
+fn kernel_code(kernel: KernelVariant) -> u8 {
+    match kernel {
+        KernelVariant::Scalar => 1,
+        KernelVariant::SimdSingle => 2,
+        KernelVariant::SoaLanes(w) => 0x10 | ((w.max(1) as u32).trailing_zeros() as u8 & 0x0f),
+    }
+}
+
+fn parse_kernel(code: u8) -> Result<Option<KernelVariant>, WireError> {
+    match code {
+        0 => Ok(None),
+        1 => Ok(Some(KernelVariant::Scalar)),
+        2 => Ok(Some(KernelVariant::SimdSingle)),
+        c if c & 0xf0 == 0x10 => Ok(Some(KernelVariant::SoaLanes(1usize << (c & 0x0f)))),
+        other => Err(WireError::Malformed(format!("unknown kernel code {other}"))),
+    }
+}
+
 fn parse_backend(code: u8) -> Result<Backend, WireError> {
     match code {
         1 => Ok(Backend::Pjrt),
@@ -283,7 +304,7 @@ pub fn write_request<W: Write>(
     body.push(dtype_code(dtype));
     body.push(opts.compute_residual as u8);
     body.push(opts.backend_override.map(backend_code).unwrap_or(0));
-    body.push(0); // reserved
+    body.push(opts.kernel_override.map(kernel_code).unwrap_or(0));
     put_u32(&mut body, opts.m_override.unwrap_or(0) as u32);
     put_u32(&mut body, deadline_ms);
     put_u64(&mut body, n as u64);
@@ -533,7 +554,7 @@ fn parse_body(kind: u8, body: &[u8]) -> Result<Frame, WireError> {
                 0 => None,
                 code => Some(parse_backend(code)?),
             };
-            let _reserved = cur.u8()?;
+            let kernel_override = parse_kernel(cur.u8()?)?;
             let m_override = cur.u32()? as usize;
             let deadline_ms = cur.u32()?;
             let n64 = cur.u64()?;
@@ -576,6 +597,7 @@ fn parse_body(kind: u8, body: &[u8]) -> Result<Frame, WireError> {
                     dtype,
                     m_override: if m_override == 0 { None } else { Some(m_override) },
                     backend_override,
+                    kernel_override,
                     compute_residual,
                 },
                 deadline_ms,
@@ -703,6 +725,7 @@ mod tests {
                 dtype: Dtype::F64,
                 m_override: Some(16),
                 backend_override: Some(Backend::Native),
+                kernel_override: Some(KernelVariant::SoaLanes(8)),
                 compute_residual: true,
             },
             deadline_ms: 2_500,
@@ -729,6 +752,7 @@ mod tests {
                 dtype: Dtype::F32,
                 m_override: None,
                 backend_override: None,
+                kernel_override: None,
                 compute_residual: false,
             },
             deadline_ms: 0,

@@ -11,15 +11,16 @@
 //! (PJRT casts at the device boundary, exactly as the paper's FP32
 //! experiments do).
 
-use super::{Backend, SolvePlan};
+use super::{Backend, KernelVariant, SolvePlan};
 use crate::error::Result;
 use crate::exec::{ExecCtx, WorkspacePool, WorkspaceStats};
 use crate::gpu::spec::Dtype;
 use crate::runtime::executor::{pjrt_partition_solve, PjrtScalar};
 use crate::runtime::Runtime;
 use crate::solver::{
-    partition_solve_ref_with_workspace, recursive_solve_ref_with_workspace, thomas_solve_ref,
-    Scalar, SolveWorkspace, TriSystem, TriSystemRef,
+    default_lanes, partition_solve_ref_with_workspace, recursive_solve_ref_with_workspace,
+    simd_partition_solve_ref_with_workspace, soa_solve_batch_ref, thomas_solve_ref, Scalar,
+    SolveWorkspace, TriSystem, TriSystemRef,
 };
 use std::sync::Arc;
 
@@ -37,6 +38,9 @@ pub struct SolveOutcome {
 pub struct TypedOutcome<T> {
     pub x: Vec<T>,
     pub backend: Backend,
+    /// The kernel variant that actually ran (a `SoaLanes` plan executed
+    /// as a singleton reports `Scalar` — lanes need a batch).
+    pub kernel: KernelVariant,
 }
 
 /// Anything that can execute a [`SolvePlan`] against a system.
@@ -124,13 +128,27 @@ impl NativeBackend {
             return Ok(TypedOutcome {
                 x: thomas_solve_ref(sys)?,
                 backend: Backend::Thomas,
+                kernel: KernelVariant::Scalar,
             });
         }
         let pool = T::workspaces(self);
         let mut ws = pool.acquire();
         let mut x = vec![T::zero(); sys.n()];
+        // SimdSingle vectorizes the one-level partition pipeline; a
+        // SoaLanes plan arriving here is a singleton (the batch path is
+        // `execute_soa_batch_typed`), which falls back to scalar.
+        let simd_single = plan.levels.len() == 1 && plan.kernel == KernelVariant::SimdSingle;
         let solved = if plan.levels.len() > 1 {
             recursive_solve_ref_with_workspace(sys, &plan.levels, &self.exec, &mut ws, &mut x)
+        } else if simd_single {
+            simd_partition_solve_ref_with_workspace(
+                sys,
+                plan.m(),
+                default_lanes::<T>(),
+                &self.exec,
+                ws.level(0),
+                &mut x,
+            )
         } else {
             partition_solve_ref_with_workspace(sys, plan.m(), &self.exec, ws.level(0), &mut x)
         };
@@ -139,7 +157,30 @@ impl NativeBackend {
         Ok(TypedOutcome {
             x,
             backend: Backend::Native,
+            kernel: if simd_single {
+                KernelVariant::SimdSingle
+            } else {
+                KernelVariant::Scalar
+            },
         })
+    }
+
+    /// Execute a fused same-route batch with the SoA lane kernel:
+    /// member `i`'s solution lands at `x[spans[i].0..][..spans[i].1]`.
+    /// `spans` and `x` are caller-reused buffers (allocation-free once
+    /// warmed up). A singular member fails the whole call — the service
+    /// falls back to per-member solves to isolate the offender.
+    pub fn execute_soa_batch_typed<T: NativeScalar>(
+        &self,
+        width: usize,
+        systems: &[TriSystemRef<'_, T>],
+        spans: &mut Vec<(usize, usize)>,
+        x: &mut Vec<T>,
+    ) -> Result<()> {
+        let total = systems.iter().map(|s| s.n()).sum();
+        x.clear();
+        x.resize(total, T::zero());
+        soa_solve_batch_ref(systems, width, &self.exec, spans, x)
     }
 }
 
@@ -178,6 +219,7 @@ impl<'rt> PjrtBackend<'rt> {
         Ok(TypedOutcome {
             x: pjrt_partition_solve(self.rt, sys, plan.m())?,
             backend: Backend::Pjrt,
+            kernel: KernelVariant::Scalar,
         })
     }
 }
@@ -228,6 +270,7 @@ mod tests {
             shards: Vec::<ShardSpec>::new(),
             simulated_gpu_us: 0.0,
             heuristic: "test".into(),
+            kernel: KernelVariant::Scalar,
         }
     }
 
@@ -309,6 +352,56 @@ mod tests {
         let stats = backend.workspace_stats();
         assert_eq!(stats.created, 2, "one workspace per dtype pool");
         assert_eq!(stats.reused, 2, "second round reuses both");
+    }
+
+    #[test]
+    fn simd_single_plan_is_bit_identical_to_scalar_partition() {
+        let mut rng = Pcg64::new(8);
+        let sys = random_dd_system::<f64>(&mut rng, 2_000, 0.5);
+        let backend = NativeBackend::new(4);
+        let scalar = backend
+            .execute_typed::<f64>(&plan(2_000, Backend::Native, vec![16]), sys.view())
+            .unwrap();
+        assert_eq!(scalar.kernel, KernelVariant::Scalar);
+        let mut p = plan(2_000, Backend::Native, vec![16]);
+        p.kernel = KernelVariant::SimdSingle;
+        let simd = backend.execute_typed::<f64>(&p, sys.view()).unwrap();
+        assert_eq!(simd.kernel, KernelVariant::SimdSingle);
+        assert_eq!(simd.x, scalar.x);
+    }
+
+    #[test]
+    fn soa_batch_execution_matches_per_member_thomas() {
+        let mut rng = Pcg64::new(9);
+        let backend = NativeBackend::new(2);
+        let systems: Vec<TriSystem<f64>> = [30usize, 7, 64, 12, 3]
+            .iter()
+            .map(|&n| random_dd_system::<f64>(&mut rng, n, 0.5))
+            .collect();
+        let views: Vec<TriSystemRef<'_, f64>> = systems.iter().map(|s| s.view()).collect();
+        let mut spans = Vec::new();
+        let mut x = Vec::new();
+        backend
+            .execute_soa_batch_typed::<f64>(4, &views, &mut spans, &mut x)
+            .unwrap();
+        for (sys, &(off, n)) in systems.iter().zip(&spans) {
+            assert_eq!(&x[off..off + n], &thomas_solve(sys).unwrap()[..]);
+        }
+    }
+
+    #[test]
+    fn soa_singleton_plan_falls_back_to_scalar() {
+        // A SoaLanes plan executed outside a batch runs — and reports —
+        // the scalar kernel.
+        let mut rng = Pcg64::new(10);
+        let sys = random_dd_system::<f64>(&mut rng, 500, 0.5);
+        let mut p = plan(500, Backend::Native, vec![8]);
+        p.kernel = KernelVariant::SoaLanes(4);
+        let out = NativeBackend::new(2)
+            .execute_typed::<f64>(&p, sys.view())
+            .unwrap();
+        assert_eq!(out.kernel, KernelVariant::Scalar);
+        assert!(max_abs_diff(&out.x, &thomas_solve(&sys).unwrap()) < 1e-9);
     }
 
     #[test]

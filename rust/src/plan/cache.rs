@@ -170,6 +170,7 @@ mod tests {
             shards: Vec::new(),
             simulated_gpu_us: 1.0,
             heuristic: "t".into(),
+            kernel: crate::plan::KernelVariant::Scalar,
         }
     }
 

@@ -71,6 +71,118 @@ impl Backend {
     }
 }
 
+/// Which native kernel formulation executes a plan. A planner decision
+/// beside `m`: the scalar reference loops, the interleaved
+/// structure-of-arrays lane kernel for same-shape groups, or the
+/// block-lane vectorized single-system stage1/stage3 variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KernelVariant {
+    /// Scalar reference loops (one system, one element at a time).
+    Scalar,
+    /// Interleaved SoA lanes: `w` same-shape systems per sweep
+    /// (f64x4 / f32x8 by default). Batched executions fuse eligible
+    /// same-route groups into lane sweeps; singletons run scalar.
+    SoaLanes(usize),
+    /// Single-system stage1/stage3 with blocks gathered into lane
+    /// groups so the per-row arithmetic runs `w` blocks wide.
+    SimdSingle,
+}
+
+impl KernelVariant {
+    /// Serialized / displayed name: `scalar`, `soa<w>`, `simd-single`.
+    pub fn label(self) -> String {
+        match self {
+            KernelVariant::Scalar => "scalar".to_string(),
+            KernelVariant::SoaLanes(w) => format!("soa{w}"),
+            KernelVariant::SimdSingle => "simd-single".to_string(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<KernelVariant> {
+        match s {
+            "scalar" => Ok(KernelVariant::Scalar),
+            "simd-single" => Ok(KernelVariant::SimdSingle),
+            s if s.starts_with("soa") => {
+                let w: usize = s[3..]
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad kernel variant `{s}`")))?;
+                Ok(KernelVariant::SoaLanes(w))
+            }
+            other => Err(Error::Config(format!(
+                "kernel variant must be scalar|soa<w>|simd-single, got `{other}`"
+            ))),
+        }
+    }
+}
+
+/// Planner knobs for kernel-variant selection (`[kernel]` config table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// `false` forces [`KernelVariant::Scalar`] everywhere
+    /// (`[kernel] mode = "scalar"`).
+    pub enabled: bool,
+    /// SoA lane width for f64 groups (power of two in 2..=16).
+    pub soa_width_f64: usize,
+    /// SoA lane width for f32 groups (power of two in 2..=16).
+    pub soa_width_f32: usize,
+    /// Largest per-system size eligible for the SoA lane kernel.
+    pub soa_max_n: usize,
+    /// Smallest n where the planner picks [`KernelVariant::SimdSingle`].
+    pub simd_single_min_n: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig {
+            enabled: true,
+            soa_width_f64: 4,
+            soa_width_f32: 8,
+            soa_max_n: 4096,
+            simd_single_min_n: 1 << 18,
+        }
+    }
+}
+
+impl KernelConfig {
+    /// The SoA lane width for a dtype.
+    pub fn soa_width(&self, dtype: Dtype) -> usize {
+        match dtype {
+            Dtype::F64 => self.soa_width_f64,
+            Dtype::F32 => self.soa_width_f32,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for w in [self.soa_width_f64, self.soa_width_f32] {
+            if !crate::solver::soa::SUPPORTED_LANES.contains(&w) {
+                return Err(Error::Config(format!(
+                    "kernel soa width {w} unsupported (expected one of {:?})",
+                    crate::solver::soa::SUPPORTED_LANES
+                )));
+            }
+        }
+        if self.soa_max_n == 0 || self.simd_single_min_n == 0 {
+            return Err(Error::Config(
+                "kernel.soa_max_n and kernel.simd_single_min_n must be positive".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Stable hash of every knob, mixed into the planner fingerprint so
+    /// a kernel-config change re-keys the plan cache.
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.enabled.hash(&mut h);
+        self.soa_width_f64.hash(&mut h);
+        self.soa_width_f32.hash(&mut h);
+        self.soa_max_n.hash(&mut h);
+        self.simd_single_min_n.hash(&mut h);
+        h.finish()
+    }
+}
+
 /// Per-request options the planner honors.
 #[derive(Clone, Debug)]
 pub struct SolveOptions {
@@ -79,6 +191,8 @@ pub struct SolveOptions {
     pub m_override: Option<usize>,
     /// Force a backend instead of the planner's choice.
     pub backend_override: Option<Backend>,
+    /// Force a kernel variant instead of the planner's choice.
+    pub kernel_override: Option<KernelVariant>,
     /// Verify the solution and include the residual in the response.
     pub compute_residual: bool,
 }
@@ -89,6 +203,7 @@ impl Default for SolveOptions {
             dtype: Dtype::F64,
             m_override: None,
             backend_override: None,
+            kernel_override: None,
             compute_residual: true,
         }
     }
@@ -117,14 +232,23 @@ pub struct SolvePlan {
     pub simulated_gpu_us: f64,
     /// Name of the heuristic that picked `levels[0]`.
     pub heuristic: String,
+    /// Which native kernel formulation executes this plan.
+    pub kernel: KernelVariant,
 }
 
 impl SolvePlan {
     /// A minimal plan for an already-routed batch execution: the member
     /// requests were planned individually (and cached); the concatenated
-    /// system only needs the shared shape `(m, dtype, backend)` re-stated,
-    /// so no heuristic, occupancy or shard work is repeated here.
-    pub fn for_batch(n: usize, m: usize, dtype: Dtype, backend: Backend) -> SolvePlan {
+    /// system only needs the shared shape `(m, dtype, backend, kernel)`
+    /// re-stated, so no heuristic, occupancy or shard work is repeated
+    /// here.
+    pub fn for_batch(
+        n: usize,
+        m: usize,
+        dtype: Dtype,
+        backend: Backend,
+        kernel: KernelVariant,
+    ) -> SolvePlan {
         SolvePlan {
             n,
             dtype,
@@ -134,6 +258,7 @@ impl SolvePlan {
             shards: Vec::new(),
             simulated_gpu_us: 0.0,
             heuristic: "batch".to_string(),
+            kernel,
         }
     }
 
@@ -174,6 +299,7 @@ impl SolvePlan {
             ),
             ("simulated_gpu_us", Json::Num(self.simulated_gpu_us)),
             ("heuristic", Json::Str(self.heuristic.clone())),
+            ("kernel", Json::Str(self.kernel.label())),
         ])
     }
 
@@ -239,6 +365,15 @@ impl SolvePlan {
             .as_str()
             .ok_or_else(|| Error::Config("plan heuristic must be a string".into()))?
             .to_string();
+        // Plans serialized before kernel variants existed carry no
+        // `kernel` field; they ran the scalar path.
+        let kernel = match j.get("kernel") {
+            Ok(v) => KernelVariant::parse(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("plan kernel must be a string".into()))?,
+            )?,
+            Err(_) => KernelVariant::Scalar,
+        };
         Ok(SolvePlan {
             n: num("n")?,
             dtype,
@@ -248,6 +383,7 @@ impl SolvePlan {
             shards,
             simulated_gpu_us,
             heuristic,
+            kernel,
         })
     }
 
@@ -281,6 +417,7 @@ mod tests {
             ],
             simulated_gpu_us: 10_537.25,
             heuristic: "paper-trend-f64".to_string(),
+            kernel: KernelVariant::Scalar,
         }
     }
 
@@ -309,9 +446,51 @@ mod tests {
             shards: Vec::new(),
             simulated_gpu_us: 203.0,
             heuristic: "knn".to_string(),
+            kernel: KernelVariant::SoaLanes(4),
         };
         let back = SolvePlan::from_json_str(&p.to_json_string()).unwrap();
         assert_eq!(back, p);
+    }
+
+    #[test]
+    fn kernel_variant_labels_roundtrip() {
+        for k in [
+            KernelVariant::Scalar,
+            KernelVariant::SoaLanes(4),
+            KernelVariant::SoaLanes(8),
+            KernelVariant::SimdSingle,
+        ] {
+            assert_eq!(KernelVariant::parse(&k.label()).unwrap(), k);
+        }
+        assert!(KernelVariant::parse("avx512").is_err());
+        assert!(KernelVariant::parse("soaX").is_err());
+    }
+
+    #[test]
+    fn plans_without_kernel_field_default_to_scalar() {
+        // Pre-variant serialized plans must keep deserializing.
+        let legacy = r#"{"n": 10, "dtype": "f64", "backend": "native",
+            "levels": [4], "streams": 1, "shards": [],
+            "simulated_gpu_us": 1.0, "heuristic": "h"}"#;
+        let p = SolvePlan::from_json_str(legacy).unwrap();
+        assert_eq!(p.kernel, KernelVariant::Scalar);
+    }
+
+    #[test]
+    fn kernel_config_validates_and_fingerprints() {
+        let kc = KernelConfig::default();
+        assert!(kc.validate().is_ok());
+        let fp = kc.fingerprint();
+        let mut other = kc;
+        other.soa_max_n = 1024;
+        assert!(other.validate().is_ok());
+        assert_ne!(fp, other.fingerprint(), "knob change must re-fingerprint");
+        let mut bad = kc;
+        bad.soa_width_f64 = 3;
+        assert!(bad.validate().is_err());
+        let mut bad = kc;
+        bad.soa_max_n = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

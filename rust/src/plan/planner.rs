@@ -4,7 +4,7 @@
 //! [`SolvePlan`]s.
 
 use super::shard::plan_shards;
-use super::{Backend, SolveOptions, SolvePlan};
+use super::{Backend, KernelConfig, KernelVariant, SolveOptions, SolvePlan};
 use crate::config::{Config, HeuristicKind};
 use crate::error::Result;
 use crate::gpu::simulator::GpuSimulator;
@@ -119,6 +119,9 @@ pub struct Planner {
     /// for the request dtype, that model overrides the static heuristic
     /// and its epoch is mixed into [`Planner::fingerprint`].
     adaptive: Option<Arc<AdaptiveHeuristic>>,
+    /// Kernel-variant selection policy (see [`KernelConfig`]); part of
+    /// the fingerprint so config changes retire cached plans.
+    kernel_cfg: KernelConfig,
 }
 
 impl Planner {
@@ -159,7 +162,20 @@ impl Planner {
             sim: GpuSimulator::new(card),
             fingerprint: hasher.finish(),
             adaptive: None,
+            kernel_cfg: KernelConfig::default(),
         }
+    }
+
+    /// Install the kernel-variant selection policy (validated config).
+    /// Changes the planner fingerprint, retiring all cached plans made
+    /// under the previous policy.
+    pub fn set_kernel_config(&mut self, kc: KernelConfig) {
+        self.kernel_cfg = kc;
+    }
+
+    /// The active kernel-variant selection policy.
+    pub fn kernel_config(&self) -> &KernelConfig {
+        &self.kernel_cfg
     }
 
     /// Attach the online-tuning hot-swap slot (see
@@ -231,7 +247,7 @@ impl Planner {
     /// With an attached online-tuning slot the model epoch is mixed in,
     /// so a hot-swap retires every cached plan of the previous model.
     pub fn fingerprint(&self) -> u64 {
-        let mut fp = self.fingerprint;
+        let mut fp = self.fingerprint ^ self.kernel_cfg.fingerprint();
         if let Some(slot) = &self.adaptive {
             let epoch = slot.epoch();
             if epoch > 0 {
@@ -315,6 +331,10 @@ impl Planner {
             Backend::Pjrt => plan_shards(n, m, self.avail.buckets_for(m)),
             _ => Vec::new(),
         };
+        let kernel = match opts.kernel_override {
+            Some(k) => k,
+            None => self.kernel_for(n, backend, opts.dtype),
+        };
         SolvePlan {
             n,
             dtype: opts.dtype,
@@ -324,6 +344,34 @@ impl Planner {
             shards,
             simulated_gpu_us: self.sim.solve(n, m, streams, opts.dtype).total_us,
             heuristic,
+            kernel,
+        }
+    }
+
+    /// Kernel-variant policy for an automatic (non-overridden) plan.
+    ///
+    /// * Small systems (`n <= soa_max_n`) on the host solvers get the
+    ///   SoA lane kernel — singletons fall back to scalar at execution
+    ///   time, but the batcher fuses same-route groups into lane sweeps.
+    /// * Large native partition solves (`n >= simd_single_min_n`) get
+    ///   the block-lane vectorized stage 1/3.
+    /// * PJRT plans always carry `Scalar`: variant selection is a host
+    ///   kernel decision (device artifacts have their own layout).
+    fn kernel_for(&self, n: usize, backend: Backend, dtype: Dtype) -> KernelVariant {
+        if !self.kernel_cfg.enabled {
+            return KernelVariant::Scalar;
+        }
+        match backend {
+            Backend::Pjrt => KernelVariant::Scalar,
+            Backend::Thomas | Backend::Native => {
+                if n <= self.kernel_cfg.soa_max_n {
+                    KernelVariant::SoaLanes(self.kernel_cfg.soa_width(dtype))
+                } else if backend == Backend::Native && n >= self.kernel_cfg.simd_single_min_n {
+                    KernelVariant::SimdSingle
+                } else {
+                    KernelVariant::Scalar
+                }
+            }
         }
     }
 
@@ -349,6 +397,8 @@ impl Planner {
             streams,
             shards: Vec::new(),
             heuristic: h.name().to_string(),
+            // The recursive executor is the scalar pipeline end-to-end.
+            kernel: KernelVariant::Scalar,
         }
     }
 
@@ -562,6 +612,71 @@ mod tests {
         let plan = p.plan(1_000_000, &opts);
         assert_eq!(plan.m(), 8);
         assert_eq!(plan.heuristic, "m-override");
+    }
+
+    #[test]
+    fn kernel_variant_follows_size_policy() {
+        let p = planner(vec![]);
+        // Small host solves carry the SoA lane variant (dtype-sized width).
+        assert_eq!(
+            p.plan(6, &SolveOptions::default()).kernel,
+            KernelVariant::SoaLanes(4)
+        );
+        assert_eq!(
+            p.plan(1_000, &SolveOptions::default()).kernel,
+            KernelVariant::SoaLanes(4)
+        );
+        let f32_opts = SolveOptions {
+            dtype: Dtype::F32,
+            ..Default::default()
+        };
+        assert_eq!(p.plan(1_000, &f32_opts).kernel, KernelVariant::SoaLanes(8));
+        // Large native partition solves vectorize stage 1/3.
+        assert_eq!(
+            p.plan(1_000_000, &SolveOptions::default()).kernel,
+            KernelVariant::SimdSingle
+        );
+        // Mid-size native stays scalar.
+        assert_eq!(
+            p.plan(50_000, &SolveOptions::default()).kernel,
+            KernelVariant::Scalar
+        );
+        // PJRT plans are always scalar (device kernels own their layout).
+        let pj = planner(vec![4, 8, 16, 32, 64]);
+        let plan = pj.plan(1_000_000, &SolveOptions::default());
+        assert_eq!(plan.backend, Backend::Pjrt);
+        assert_eq!(plan.kernel, KernelVariant::Scalar);
+        // An explicit override wins over the policy.
+        let opts = SolveOptions {
+            kernel_override: Some(KernelVariant::Scalar),
+            ..Default::default()
+        };
+        assert_eq!(p.plan(1_000, &opts).kernel, KernelVariant::Scalar);
+        // Recursive plans are scalar end-to-end.
+        assert_eq!(
+            p.plan_recursive(100_000_000, 3, Dtype::F64).kernel,
+            KernelVariant::Scalar
+        );
+    }
+
+    #[test]
+    fn kernel_config_rekeys_fingerprint_and_can_disable() {
+        let mut p = planner(vec![]);
+        let fp0 = p.fingerprint();
+        let kc = KernelConfig {
+            enabled: false,
+            ..KernelConfig::default()
+        };
+        p.set_kernel_config(kc);
+        assert_ne!(
+            p.fingerprint(),
+            fp0,
+            "kernel policy change must retire cached plans"
+        );
+        assert_eq!(
+            p.plan(1_000, &SolveOptions::default()).kernel,
+            KernelVariant::Scalar
+        );
     }
 
     #[test]

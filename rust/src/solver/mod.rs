@@ -11,6 +11,9 @@
 //!   partition method for a planned sequence of sub-system sizes.
 //! * [`workspace`] — the reusable per-level buffer stack behind the
 //!   allocation-free steady-state solve path.
+//! * [`soa`] — the SIMD structure-of-arrays kernel engine: interleaved
+//!   lane sweeps over batches of systems (`SoaLanes`) and over the
+//!   partition blocks of one large system (`SimdSingle`).
 //! * [`generator`] — seeded SLAE generators (diagonally dominant, Toeplitz).
 //! * [`residual`] — ‖Ax − d‖ verification helpers.
 //!
@@ -22,6 +25,7 @@ pub mod generator;
 pub mod partition;
 pub mod recursive;
 pub mod residual;
+pub mod soa;
 pub mod thomas;
 pub mod tridiagonal;
 pub mod workspace;
@@ -34,6 +38,10 @@ pub use partition::{
 pub use recursive::{
     partition_applies, recursive_solve, recursive_solve_ref_with_workspace,
     recursive_solve_with_workspace,
+};
+pub use soa::{
+    default_lanes, simd_partition_solve, simd_partition_solve_ref_with_workspace, soa_solve_batch,
+    soa_solve_batch_ref, SUPPORTED_LANES,
 };
 pub use thomas::{thomas_solve, thomas_solve_ref, thomas_solve_with_scratch};
 pub use tridiagonal::{TriSystem, TriSystemRef};

@@ -1,0 +1,870 @@
+//! SIMD structure-of-arrays kernel engine: interleaved lane kernels
+//! that sweep several independent systems (or several blocks of one
+//! system) per pass.
+//!
+//! Layout: a lane group of `W` systems stores element `(row i, lane l)`
+//! at `buf[i * W + l]`, so one forward-elimination step reads and
+//! writes `W` contiguous elements — the CPU analogue of coalesced
+//! access, and the shape LLVM auto-vectorizes into f64x4 / f32x8
+//! arithmetic on stable Rust (the `simd` cargo feature additionally
+//! compiles an explicit `std::simd` formulation, see [`stdsimd`]).
+//!
+//! Two drivers share the lane kernels:
+//!
+//! * [`soa_solve_batch_ref`] — `KernelVariant::SoaLanes(w)`: a batch of
+//!   same-route systems, lanes = members. Members are padded to the
+//!   lane group's max length with identity rows (exact: pad unknowns
+//!   solve to 0 and never couple back), remainder groups run with
+//!   identity filler lanes, and lane groups fan out across the
+//!   [`crate::exec`] worker pool.
+//! * [`simd_partition_solve_ref_with_workspace`] —
+//!   `KernelVariant::SimdSingle`: one large system, lanes = consecutive
+//!   partition blocks of stage 1 / stage 3 (stage 2 stays the scalar
+//!   interface Thomas, exactly as the scalar path).
+//!
+//! Every lane performs the *identical* per-element operation sequence
+//! of the scalar kernels in `thomas.rs` / `partition.rs` (including the
+//! on-chain `cp = c / w` division in stage 1 vs the off-chain
+//! `cp = c * inv_w` multiply in stage 3, the `rv = -c[m-1]` spike term,
+//! the per-lane data-driven interface decoupling branches, and the
+//! pivot checks in the same order), so f64 results are bit-identical to
+//! the scalar path — asserted by the property suite.
+
+use super::partition::{
+    assemble_interface_into, ensure_len, stage1_block, stage3_block, BlockInterface,
+    PartitionWorkspace,
+};
+use super::thomas::thomas_solve_ref_with_scratch;
+use super::tridiagonal::TriSystemRef;
+use super::{Scalar, TriSystem};
+use crate::error::{Error, Result};
+use crate::exec::{ExecCtx, SendPtr};
+
+/// Lane widths with a monomorphized kernel instantiation.
+pub const SUPPORTED_LANES: [usize; 4] = [2, 4, 8, 16];
+
+/// The default lane width for a scalar type: one 256-bit vector
+/// register worth of elements (f64x4 / f32x8).
+pub fn default_lanes<T: Scalar>() -> usize {
+    if T::DTYPE_NAME == "f32" {
+        8
+    } else {
+        4
+    }
+}
+
+/// Dispatch a runtime lane width to a `const W` kernel instantiation.
+macro_rules! with_lanes {
+    ($w:expr, $W:ident => $body:expr) => {
+        match $w {
+            2 => {
+                const $W: usize = 2;
+                $body
+            }
+            4 => {
+                const $W: usize = 4;
+                $body
+            }
+            8 => {
+                const $W: usize = 8;
+                $body
+            }
+            16 => {
+                const $W: usize = 16;
+                $body
+            }
+            other => Err(Error::Solver(format!(
+                "unsupported SoA lane width {other} (expected one of {:?})",
+                SUPPORTED_LANES
+            ))),
+        }
+    };
+}
+
+fn singular<T: Scalar>(row: usize, w: T) -> Error {
+    Error::SingularSystem {
+        row,
+        magnitude: w.as_f64().abs(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lane kernels (interleaved layout, hand-unrolled over `W`).
+// ---------------------------------------------------------------------------
+
+/// Thomas over `W` interleaved systems of `rows` rows each. Mirrors
+/// `thomas_solve_ref_with_scratch` element-for-element per lane.
+/// `cp`/`dp` are scratch of `rows * W` (fully overwritten).
+fn lane_thomas<T: Scalar, const W: usize>(
+    a: &[T],
+    b: &[T],
+    c: &[T],
+    d: &[T],
+    cp: &mut [T],
+    dp: &mut [T],
+    x: &mut [T],
+    rows: usize,
+) -> Result<()> {
+    let tiny = T::of_f64(f64::MIN_POSITIVE.sqrt());
+    let mut w = [T::zero(); W];
+    for l in 0..W {
+        w[l] = b[l];
+    }
+    for (l, &wl) in w.iter().enumerate() {
+        if wl.abs() <= tiny {
+            let _ = l;
+            return Err(singular(0, wl));
+        }
+    }
+    for l in 0..W {
+        cp[l] = c[l] / w[l];
+        dp[l] = d[l] / w[l];
+    }
+    for i in 1..rows {
+        let r = i * W;
+        let pr = r - W;
+        for l in 0..W {
+            w[l] = b[r + l] - a[r + l] * cp[pr + l];
+        }
+        for &wl in &w {
+            if wl.abs() <= tiny {
+                return Err(singular(i, wl));
+            }
+        }
+        for l in 0..W {
+            cp[r + l] = c[r + l] / w[l];
+            dp[r + l] = (d[r + l] - a[r + l] * dp[pr + l]) / w[l];
+        }
+    }
+    let last = (rows - 1) * W;
+    x[last..last + W].copy_from_slice(&dp[last..last + W]);
+    for i in (0..rows - 1).rev() {
+        let r = i * W;
+        for l in 0..W {
+            x[r + l] = dp[r + l] - cp[r + l] * x[r + W + l];
+        }
+    }
+    Ok(())
+}
+
+/// Stage 1 over `W` interleaved blocks of `m` rows. Mirrors
+/// `stage1_block` per lane; the interface construction (data-driven
+/// decoupling branches) runs per lane at the end.
+#[allow(clippy::too_many_arguments)]
+fn lane_stage1<T: Scalar, const W: usize>(
+    a: &[T],
+    b: &[T],
+    c: &[T],
+    d: &[T],
+    cp: &mut [T],
+    dy: &mut [T],
+    du: &mut [T],
+    dv: &mut [T],
+    m: usize,
+    out: &mut [BlockInterface<T>; W],
+) -> Result<()> {
+    debug_assert!(m >= 3, "lane_stage1 requires m >= 3 (validated by callers)");
+    let tiny = T::of_f64(f64::MIN_POSITIVE.sqrt());
+
+    let mut w = [T::zero(); W];
+    let mut inv_w = [T::zero(); W];
+    for l in 0..W {
+        w[l] = b[l];
+    }
+    for &wl in &w {
+        if wl.abs() <= tiny {
+            return Err(singular(0, wl));
+        }
+    }
+    for l in 0..W {
+        inv_w[l] = T::one() / w[l];
+        cp[l] = c[l] / w[l];
+        dy[l] = d[l] * inv_w[l];
+        du[l] = -a[l] * inv_w[l];
+        dv[l] = T::zero();
+    }
+    for i in 1..m {
+        let r = i * W;
+        let pr = r - W;
+        for l in 0..W {
+            w[l] = b[r + l] - a[r + l] * cp[pr + l];
+        }
+        for &wl in &w {
+            if wl.abs() <= tiny {
+                return Err(singular(i, wl));
+            }
+        }
+        let last_row = i == m - 1;
+        for l in 0..W {
+            let ai = a[r + l];
+            let rv = if last_row { -c[r + l] } else { T::zero() };
+            inv_w[l] = T::one() / w[l];
+            cp[r + l] = c[r + l] / w[l];
+            dy[r + l] = (d[r + l] - ai * dy[pr + l]) * inv_w[l];
+            du[r + l] = (-ai * du[pr + l]) * inv_w[l];
+            dv[r + l] = (rv - ai * dv[pr + l]) * inv_w[l];
+        }
+    }
+
+    let last = (m - 1) * W;
+    let mut ym = [T::zero(); W];
+    let mut um = [T::zero(); W];
+    let mut vm = [T::zero(); W];
+    let mut y = [T::zero(); W];
+    let mut u = [T::zero(); W];
+    let mut v = [T::zero(); W];
+    for l in 0..W {
+        ym[l] = dy[last + l];
+        um[l] = du[last + l];
+        vm[l] = dv[last + l];
+        y[l] = ym[l];
+        u[l] = um[l];
+        v[l] = vm[l];
+    }
+    for i in (0..m - 1).rev() {
+        let r = i * W;
+        for l in 0..W {
+            y[l] = dy[r + l] - cp[r + l] * y[l];
+            u[l] = du[r + l] - cp[r + l] * u[l];
+            v[l] = dv[r + l] - cp[r + l] * v[l];
+        }
+    }
+    for l in 0..W {
+        let (y0, u0, v0) = (y[l], u[l], v[l]);
+        let (ua, ub, ug, ud) = if vm[l] == T::zero() {
+            (-u0, T::one(), T::zero(), y0)
+        } else {
+            (v0 * um[l] - vm[l] * u0, vm[l], -v0, vm[l] * y0 - v0 * ym[l])
+        };
+        let (da, db, dg, dd) = if u0 == T::zero() {
+            (T::zero(), T::one(), -vm[l], ym[l])
+        } else {
+            (um[l], -u0, u0 * vm[l] - um[l] * v0, um[l] * y0 - u0 * ym[l])
+        };
+        out[l] = BlockInterface {
+            ua: ua / ub,
+            ug: ug / ub,
+            ud: ud / ub,
+            da: da / db,
+            dg: dg / db,
+            dd: dd / db,
+        };
+    }
+    Ok(())
+}
+
+/// Stage 3 over `W` interleaved blocks: interior Thomas with per-lane
+/// boundary values folded into the RHS. Mirrors `stage3_block` per lane.
+#[allow(clippy::too_many_arguments)]
+fn lane_stage3<T: Scalar, const W: usize>(
+    a: &[T],
+    b: &[T],
+    c: &[T],
+    d: &[T],
+    xf: &[T; W],
+    xl: &[T; W],
+    cp: &mut [T],
+    dp: &mut [T],
+    x: &mut [T],
+    m: usize,
+) -> Result<()> {
+    debug_assert!(m >= 3, "lane_stage3 requires m >= 3 (validated by callers)");
+    let tiny = T::of_f64(f64::MIN_POSITIVE.sqrt());
+
+    let mut w = [T::zero(); W];
+    let mut inv_w = [T::zero(); W];
+    for l in 0..W {
+        w[l] = b[W + l];
+    }
+    for &wl in &w {
+        if wl.abs() <= tiny {
+            return Err(singular(1, wl));
+        }
+    }
+    // Row 1 RHS corrections are cumulative: both hit it when m == 3.
+    for l in 0..W {
+        inv_w[l] = T::one() / w[l];
+        cp[W + l] = c[W + l] * inv_w[l];
+        let mut rhs = d[W + l] - a[W + l] * xf[l];
+        if m == 3 {
+            rhs = rhs - c[W + l] * xl[l];
+        }
+        dp[W + l] = rhs * inv_w[l];
+    }
+    for i in 2..m - 1 {
+        let r = i * W;
+        let pr = r - W;
+        for l in 0..W {
+            w[l] = b[r + l] - a[r + l] * cp[pr + l];
+        }
+        for &wl in &w {
+            if wl.abs() <= tiny {
+                return Err(singular(i, wl));
+            }
+        }
+        let penultimate = i == m - 2;
+        for l in 0..W {
+            inv_w[l] = T::one() / w[l];
+            cp[r + l] = c[r + l] * inv_w[l];
+            let mut rhs = d[r + l];
+            if penultimate {
+                rhs = rhs - c[r + l] * xl[l];
+            }
+            dp[r + l] = (rhs - a[r + l] * dp[pr + l]) * inv_w[l];
+        }
+    }
+
+    let rl = (m - 1) * W;
+    let rp = (m - 2) * W;
+    for l in 0..W {
+        x[l] = xf[l];
+        x[rl + l] = xl[l];
+        x[rp + l] = dp[rp + l];
+    }
+    for i in (1..m - 2).rev() {
+        let r = i * W;
+        for l in 0..W {
+            x[r + l] = dp[r + l] - cp[r + l] * x[r + W + l];
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Batched SoA driver (KernelVariant::SoaLanes): lanes = batch members.
+// ---------------------------------------------------------------------------
+
+/// Solve a batch of systems with interleaved lane-Thomas sweeps of
+/// width `w`. Member `i`'s solution lands at `x[spans[i].0..][..spans[i].1]`
+/// (`spans` is filled by this call; `x.len()` must equal the members'
+/// total size). Lane groups fan out across the pool; scratch comes from
+/// the per-worker arenas, so a warmed-up call with reused `spans`/`x`
+/// buffers performs zero heap allocations.
+///
+/// f64 member solutions are bit-identical to per-member
+/// [`crate::solver::thomas_solve_ref`]. A singular pivot in any member
+/// fails the whole call — batch executors fall back to per-member
+/// solves to isolate the offender.
+pub fn soa_solve_batch_ref<T: Scalar>(
+    systems: &[TriSystemRef<'_, T>],
+    w: usize,
+    exec: &ExecCtx,
+    spans: &mut Vec<(usize, usize)>,
+    x: &mut [T],
+) -> Result<()> {
+    with_lanes!(w, W => soa_batch_impl::<T, W>(systems, exec, spans, x))
+}
+
+/// As [`soa_solve_batch_ref`], allocating the outputs (test/bench
+/// convenience).
+pub fn soa_solve_batch<T: Scalar>(
+    systems: &[TriSystem<T>],
+    w: usize,
+    exec: &ExecCtx,
+) -> Result<Vec<Vec<T>>> {
+    let views: Vec<TriSystemRef<'_, T>> = systems.iter().map(|s| s.view()).collect();
+    let total = views.iter().map(|s| s.n()).sum();
+    let mut spans = Vec::new();
+    let mut x = vec![T::zero(); total];
+    soa_solve_batch_ref(&views, w, exec, &mut spans, &mut x)?;
+    Ok(spans.iter().map(|&(off, n)| x[off..off + n].to_vec()).collect())
+}
+
+fn soa_batch_impl<T: Scalar, const W: usize>(
+    systems: &[TriSystemRef<'_, T>],
+    exec: &ExecCtx,
+    spans: &mut Vec<(usize, usize)>,
+    x: &mut [T],
+) -> Result<()> {
+    let total: usize = systems.iter().map(|s| s.n()).sum();
+    if x.len() != total {
+        return Err(Error::Shape(format!(
+            "batch x len {} != total member size {total}",
+            x.len()
+        )));
+    }
+    spans.clear();
+    spans.reserve(systems.len());
+    let mut off = 0;
+    for s in systems {
+        spans.push((off, s.n()));
+        off += s.n();
+    }
+    if systems.is_empty() {
+        return Ok(());
+    }
+
+    let groups = systems.len().div_ceil(W);
+    let spans_ro: &[(usize, usize)] = spans;
+    let x_ptr = SendPtr(x.as_mut_ptr());
+    exec.run(groups, |arena, g| {
+        let s0 = g * W;
+        let members = &systems[s0..(s0 + W).min(systems.len())];
+        let rows = members.iter().map(|s| s.n()).max().unwrap_or(1);
+        let buf = arena.take::<T>(7 * rows * W);
+        let (a, rest) = buf.split_at_mut(rows * W);
+        let (b, rest) = rest.split_at_mut(rows * W);
+        let (c, rest) = rest.split_at_mut(rows * W);
+        let (d, rest) = rest.split_at_mut(rows * W);
+        let (cp, rest) = rest.split_at_mut(rows * W);
+        let (dp, xw) = rest.split_at_mut(rows * W);
+
+        // Transpose in. Rows past a member's end (and filler lanes of a
+        // remainder group) are identity rows — exact, and numerically
+        // inert per lane. The member's unused last super-diagonal slot
+        // is zeroed so pad rows never couple back (the scalar sweep
+        // never reads it, preserving bit-identity).
+        for i in 0..rows {
+            let r = i * W;
+            for l in 0..W {
+                let (av, bv, cv, dv) = match members.get(l) {
+                    Some(s) if i < s.n() => {
+                        let cv = if i + 1 == s.n() { T::zero() } else { s.c[i] };
+                        (s.a[i], s.b[i], cv, s.d[i])
+                    }
+                    _ => (T::zero(), T::one(), T::zero(), T::zero()),
+                };
+                a[r + l] = av;
+                b[r + l] = bv;
+                c[r + l] = cv;
+                d[r + l] = dv;
+            }
+        }
+
+        lane_thomas::<T, W>(a, b, c, d, cp, dp, xw, rows)?;
+
+        // Transpose out: each group exclusively owns its members' spans.
+        for (l, s) in members.iter().enumerate() {
+            let (off, n) = spans_ro[s0 + l];
+            // SAFETY: spans are disjoint and each belongs to exactly one
+            // group; the submitter blocks until all chunks complete.
+            let out = unsafe { std::slice::from_raw_parts_mut(x_ptr.0.add(off), n) };
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = xw[i * W + l];
+            }
+            let _ = s;
+        }
+        Ok(())
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Vectorized single-system driver (KernelVariant::SimdSingle):
+// lanes = consecutive partition blocks.
+// ---------------------------------------------------------------------------
+
+/// Full partition solve with stage 1 / stage 3 running `lanes` blocks
+/// per sweep (stage 2 is the scalar interface Thomas, identical to the
+/// scalar pipeline). Remainder block groups run the scalar per-block
+/// kernels, so f64 results are bit-identical to
+/// [`crate::solver::partition_solve_ref_with_workspace`] at the same
+/// `(n, m)` for every lane width.
+pub fn simd_partition_solve_ref_with_workspace<T: Scalar>(
+    sys: TriSystemRef<'_, T>,
+    m: usize,
+    lanes: usize,
+    exec: &ExecCtx,
+    ws: &mut PartitionWorkspace<T>,
+    x: &mut [T],
+) -> Result<()> {
+    with_lanes!(lanes, W => simd_partition_impl::<T, W>(sys, m, exec, ws, x))
+}
+
+/// As [`simd_partition_solve_ref_with_workspace`], allocating workspace
+/// and output (test/bench convenience). Runs on the process-wide pool.
+pub fn simd_partition_solve<T: Scalar>(
+    sys: &TriSystem<T>,
+    m: usize,
+    lanes: usize,
+    threads: usize,
+) -> Result<Vec<T>> {
+    let mut ws = PartitionWorkspace::new();
+    let mut x = vec![T::zero(); sys.n()];
+    simd_partition_solve_ref_with_workspace(
+        sys.view(),
+        m,
+        lanes,
+        &ExecCtx::global(threads),
+        &mut ws,
+        &mut x,
+    )?;
+    Ok(x)
+}
+
+fn simd_partition_impl<T: Scalar, const W: usize>(
+    sys: TriSystemRef<'_, T>,
+    m: usize,
+    exec: &ExecCtx,
+    ws: &mut PartitionWorkspace<T>,
+    x: &mut [T],
+) -> Result<()> {
+    let n = sys.n();
+    if m < 3 {
+        return Err(Error::Solver(format!("sub-system size m={m} must be >= 3")));
+    }
+    if x.len() != n {
+        return Err(Error::Shape(format!("x len {} != n {}", x.len(), n)));
+    }
+    let np = n.div_ceil(m) * m;
+    if np != n {
+        super::partition::copy_into_padded(sys, np, &mut ws.padded);
+    }
+    let work: TriSystemRef<'_, T> = if np == n { sys } else { ws.padded.view() };
+
+    simd_stage1_all::<T, W>(work, m, exec, &mut ws.iface)?;
+    assemble_interface_into(&ws.iface, &mut ws.iface_sys);
+    ensure_len(&mut ws.iface_x, ws.iface_sys.n(), T::zero());
+    thomas_solve_ref_with_scratch(ws.iface_sys.view(), &mut ws.scratch, &mut ws.iface_x)?;
+
+    if np == n {
+        simd_stage3_all::<T, W>(work, m, &ws.iface_x, exec, x)
+    } else {
+        ensure_len(&mut ws.padded_x, np, T::zero());
+        simd_stage3_all::<T, W>(work, m, &ws.iface_x, exec, &mut ws.padded_x[..])?;
+        x.copy_from_slice(&ws.padded_x[..n]);
+        Ok(())
+    }
+}
+
+fn simd_stage1_all<T: Scalar, const W: usize>(
+    sys: TriSystemRef<'_, T>,
+    m: usize,
+    exec: &ExecCtx,
+    out: &mut Vec<BlockInterface<T>>,
+) -> Result<()> {
+    let p = sys.n() / m;
+    ensure_len(out, p, BlockInterface::zero());
+    let groups = p.div_ceil(W);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    exec.run(groups, |arena, g| {
+        let k0 = g * W;
+        let lanes = (p - k0).min(W);
+        if lanes == W {
+            let buf = arena.take::<T>(8 * m * W);
+            let (a, rest) = buf.split_at_mut(m * W);
+            let (b, rest) = rest.split_at_mut(m * W);
+            let (c, rest) = rest.split_at_mut(m * W);
+            let (d, rest) = rest.split_at_mut(m * W);
+            let (cp, rest) = rest.split_at_mut(m * W);
+            let (dy, rest) = rest.split_at_mut(m * W);
+            let (du, dv) = rest.split_at_mut(m * W);
+            for i in 0..m {
+                let r = i * W;
+                for l in 0..W {
+                    let s = (k0 + l) * m + i;
+                    a[r + l] = sys.a[s];
+                    b[r + l] = sys.b[s];
+                    c[r + l] = sys.c[s];
+                    d[r + l] = sys.d[s];
+                }
+            }
+            let mut ifc = [BlockInterface::zero(); W];
+            lane_stage1::<T, W>(a, b, c, d, cp, dy, du, dv, m, &mut ifc)?;
+            for (l, blk) in ifc.iter().enumerate() {
+                // SAFETY: group g exclusively owns out[k0..k0 + lanes].
+                unsafe { *out_ptr.0.add(k0 + l) = *blk };
+            }
+        } else {
+            // Remainder blocks: the scalar kernel (bit-identical).
+            let buf = arena.take::<T>(4 * m);
+            let (cp, rest) = buf.split_at_mut(m);
+            let (dy, rest) = rest.split_at_mut(m);
+            let (du, dv) = rest.split_at_mut(m);
+            for l in 0..lanes {
+                let s = (k0 + l) * m;
+                let blk = stage1_block(
+                    &sys.a[s..s + m],
+                    &sys.b[s..s + m],
+                    &sys.c[s..s + m],
+                    &sys.d[s..s + m],
+                    cp,
+                    dy,
+                    du,
+                    dv,
+                )?;
+                // SAFETY: as above — disjoint interface slots per group.
+                unsafe { *out_ptr.0.add(k0 + l) = blk };
+            }
+        }
+        Ok(())
+    })
+}
+
+fn simd_stage3_all<T: Scalar, const W: usize>(
+    sys: TriSystemRef<'_, T>,
+    m: usize,
+    boundary: &[T],
+    exec: &ExecCtx,
+    x: &mut [T],
+) -> Result<()> {
+    let n = sys.n();
+    let p = n / m;
+    if boundary.len() != 2 * p {
+        return Err(Error::Shape(format!(
+            "boundary len {} != 2P = {}",
+            boundary.len(),
+            2 * p
+        )));
+    }
+    if x.len() != n {
+        return Err(Error::Shape(format!("x len {} != n {}", x.len(), n)));
+    }
+    let groups = p.div_ceil(W);
+    let x_ptr = SendPtr(x.as_mut_ptr());
+    exec.run(groups, |arena, g| {
+        let k0 = g * W;
+        let lanes = (p - k0).min(W);
+        // SAFETY: group g exclusively owns x[k0 * m..(k0 + lanes) * m]
+        // (disjoint; the submitter blocks until all chunks complete).
+        let xg = unsafe { std::slice::from_raw_parts_mut(x_ptr.0.add(k0 * m), lanes * m) };
+        if lanes == W {
+            let buf = arena.take::<T>(7 * m * W);
+            let (a, rest) = buf.split_at_mut(m * W);
+            let (b, rest) = rest.split_at_mut(m * W);
+            let (c, rest) = rest.split_at_mut(m * W);
+            let (d, rest) = rest.split_at_mut(m * W);
+            let (cp, rest) = rest.split_at_mut(m * W);
+            let (dp, xw) = rest.split_at_mut(m * W);
+            for i in 0..m {
+                let r = i * W;
+                for l in 0..W {
+                    let s = (k0 + l) * m + i;
+                    a[r + l] = sys.a[s];
+                    b[r + l] = sys.b[s];
+                    c[r + l] = sys.c[s];
+                    d[r + l] = sys.d[s];
+                }
+            }
+            let mut xf = [T::zero(); W];
+            let mut xl = [T::zero(); W];
+            for l in 0..W {
+                xf[l] = boundary[2 * (k0 + l)];
+                xl[l] = boundary[2 * (k0 + l) + 1];
+            }
+            lane_stage3::<T, W>(a, b, c, d, &xf, &xl, cp, dp, xw, m)?;
+            for i in 0..m {
+                let r = i * W;
+                for l in 0..W {
+                    xg[l * m + i] = xw[r + l];
+                }
+            }
+        } else {
+            let buf = arena.take::<T>(2 * m);
+            let (cp, dp) = buf.split_at_mut(m);
+            for l in 0..lanes {
+                let s = (k0 + l) * m;
+                stage3_block(
+                    &sys.a[s..s + m],
+                    &sys.b[s..s + m],
+                    &sys.c[s..s + m],
+                    &sys.d[s..s + m],
+                    boundary[2 * (k0 + l)],
+                    boundary[2 * (k0 + l) + 1],
+                    cp,
+                    dp,
+                    &mut xg[l * m..(l + 1) * m],
+                )?;
+            }
+        }
+        Ok(())
+    })
+}
+
+// ---------------------------------------------------------------------------
+// std::simd formulation (nightly-only, behind the `simd` cargo feature).
+// ---------------------------------------------------------------------------
+
+/// Explicit `std::simd` lane sweeps. The stable hand-unrolled kernels
+/// above are the production dispatch (LLVM vectorizes them); this
+/// module exists to compare codegen against true portable SIMD and
+/// requires a nightly toolchain (`cargo test --features simd`).
+#[cfg(feature = "simd")]
+pub mod stdsimd {
+    use std::simd::prelude::*;
+
+    /// Thomas over 4 interleaved f64 systems; returns `false` on a
+    /// (near-)singular pivot. Layout and arithmetic match
+    /// `lane_thomas::<f64, 4>` exactly.
+    pub fn thomas_lanes_f64x4(
+        a: &[f64],
+        b: &[f64],
+        c: &[f64],
+        d: &[f64],
+        cp: &mut [f64],
+        dp: &mut [f64],
+        x: &mut [f64],
+        rows: usize,
+    ) -> bool {
+        const W: usize = 4;
+        let tiny = f64x4::splat(f64::MIN_POSITIVE.sqrt());
+        let mut w = f64x4::from_slice(&b[..W]);
+        if w.abs().simd_le(tiny).any() {
+            return false;
+        }
+        (f64x4::from_slice(&c[..W]) / w).copy_to_slice(&mut cp[..W]);
+        (f64x4::from_slice(&d[..W]) / w).copy_to_slice(&mut dp[..W]);
+        for i in 1..rows {
+            let r = i * W;
+            let pr = r - W;
+            let av = f64x4::from_slice(&a[r..r + W]);
+            w = f64x4::from_slice(&b[r..r + W]) - av * f64x4::from_slice(&cp[pr..pr + W]);
+            if w.abs().simd_le(tiny).any() {
+                return false;
+            }
+            (f64x4::from_slice(&c[r..r + W]) / w).copy_to_slice(&mut cp[r..r + W]);
+            ((f64x4::from_slice(&d[r..r + W]) - av * f64x4::from_slice(&dp[pr..pr + W])) / w)
+                .copy_to_slice(&mut dp[r..r + W]);
+        }
+        let last = (rows - 1) * W;
+        x[last..last + W].copy_from_slice(&dp[last..last + W]);
+        for i in (0..rows - 1).rev() {
+            let r = i * W;
+            (f64x4::from_slice(&dp[r..r + W])
+                - f64x4::from_slice(&cp[r..r + W]) * f64x4::from_slice(&x[r + W..r + 2 * W]))
+            .copy_to_slice(&mut x[r..r + W]);
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::WorkerPool;
+    use crate::solver::generator::random_dd_system;
+    use crate::solver::residual::max_abs_residual;
+    use crate::solver::{partition_solve, thomas_solve};
+    use crate::util::Pcg64;
+    use std::sync::Arc;
+
+    fn exec(pool_size: usize) -> ExecCtx {
+        let pool = Arc::new(WorkerPool::new(pool_size));
+        ExecCtx::with_pool(pool, pool_size)
+    }
+
+    #[test]
+    fn soa_batch_matches_thomas_bit_for_bit() {
+        let mut rng = Pcg64::new(21);
+        let exec = exec(4);
+        for w in SUPPORTED_LANES {
+            // Mixed sizes, batch % w != 0 to exercise remainder lanes.
+            let systems: Vec<_> = [3usize, 17, 1, 64, 9, 2, 33]
+                .iter()
+                .map(|&n| random_dd_system::<f64>(&mut rng, n, 0.5))
+                .collect();
+            let got = soa_solve_batch(&systems, w, &exec).unwrap();
+            for (sys, xs) in systems.iter().zip(&got) {
+                let want = thomas_solve(sys).unwrap();
+                assert_eq!(xs, &want, "w={w} n={} must be bit-identical", sys.n());
+            }
+        }
+    }
+
+    #[test]
+    fn soa_batch_f32_residual_bounded() {
+        let mut rng = Pcg64::new(22);
+        let exec = exec(2);
+        let systems: Vec<_> = (0..13)
+            .map(|i| random_dd_system::<f32>(&mut rng, 50 + 31 * i, 0.5))
+            .collect();
+        let got = soa_solve_batch(&systems, 8, &exec).unwrap();
+        for (sys, xs) in systems.iter().zip(&got) {
+            assert!(max_abs_residual(sys, xs) < 1e-2);
+        }
+    }
+
+    #[test]
+    fn soa_batch_rejects_unsupported_width() {
+        let mut rng = Pcg64::new(23);
+        let exec = exec(1);
+        let systems = vec![random_dd_system::<f64>(&mut rng, 8, 0.5)];
+        assert!(soa_solve_batch(&systems, 3, &exec).is_err());
+        assert!(soa_solve_batch(&systems, 0, &exec).is_err());
+    }
+
+    #[test]
+    fn soa_batch_singular_member_fails_whole_group() {
+        let mut rng = Pcg64::new(24);
+        let exec = exec(1);
+        let mut bad = random_dd_system::<f64>(&mut rng, 10, 0.5);
+        bad.b[0] = 0.0;
+        let systems = vec![random_dd_system::<f64>(&mut rng, 10, 0.5), bad];
+        assert!(soa_solve_batch(&systems, 4, &exec).is_err());
+    }
+
+    #[test]
+    fn simd_single_matches_scalar_partition_bit_for_bit() {
+        let mut rng = Pcg64::new(25);
+        for (n, m) in [(512usize, 16usize), (515, 16), (1000, 20), (97, 7)] {
+            let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let want = partition_solve(&sys, m, 4).unwrap();
+            for lanes in SUPPORTED_LANES {
+                let got = simd_partition_solve(&sys, m, lanes, 4).unwrap();
+                assert_eq!(got, want, "n={n} m={m} lanes={lanes}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_single_f32_residual_bounded() {
+        let mut rng = Pcg64::new(26);
+        let sys = random_dd_system::<f32>(&mut rng, 4096, 0.5);
+        let x = simd_partition_solve(&sys, 32, 8, 4).unwrap();
+        assert!(max_abs_residual(&sys, &x) < 1e-2);
+    }
+
+    #[test]
+    fn simd_single_pool_size_invariant() {
+        let mut rng = Pcg64::new(27);
+        let sys = random_dd_system::<f64>(&mut rng, 515, 0.5);
+        let mut results = Vec::new();
+        for size in [1usize, 4] {
+            let exec = exec(size);
+            let mut ws = PartitionWorkspace::new();
+            let mut x = vec![0.0f64; 515];
+            simd_partition_solve_ref_with_workspace(sys.view(), 16, 4, &exec, &mut ws, &mut x)
+                .unwrap();
+            results.push(x);
+        }
+        assert_eq!(results[0], results[1]);
+    }
+
+    #[test]
+    fn default_lane_widths() {
+        assert_eq!(default_lanes::<f64>(), 4);
+        assert_eq!(default_lanes::<f32>(), 8);
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    fn stdsimd_matches_hand_unrolled_lanes() {
+        let mut rng = Pcg64::new(28);
+        let systems: Vec<_> = (0..4)
+            .map(|_| random_dd_system::<f64>(&mut rng, 40, 0.5))
+            .collect();
+        const W: usize = 4;
+        let rows = 40;
+        let mut lanes = vec![vec![0.0f64; rows * W]; 4];
+        for i in 0..rows {
+            for (l, s) in systems.iter().enumerate() {
+                lanes[0][i * W + l] = s.a[i];
+                lanes[1][i * W + l] = s.b[i];
+                lanes[2][i * W + l] = s.c[i];
+                lanes[3][i * W + l] = s.d[i];
+            }
+        }
+        let (mut cp, mut dp, mut x) = (
+            vec![0.0; rows * W],
+            vec![0.0; rows * W],
+            vec![0.0; rows * W],
+        );
+        assert!(stdsimd::thomas_lanes_f64x4(
+            &lanes[0], &lanes[1], &lanes[2], &lanes[3], &mut cp, &mut dp, &mut x, rows,
+        ));
+        for (l, s) in systems.iter().enumerate() {
+            let want = thomas_solve(s).unwrap();
+            let got: Vec<f64> = (0..rows).map(|i| x[i * W + l]).collect();
+            assert_eq!(got, want);
+        }
+    }
+}

@@ -31,7 +31,7 @@ use super::heuristic::{KnnHeuristic, MHeuristic};
 use super::sweep::SweepResult;
 use crate::data::paper::M_CANDIDATES;
 use crate::gpu::spec::Dtype;
-use crate::plan::Backend;
+use crate::plan::{Backend, KernelVariant};
 use crate::solver::recursive::partition_applies;
 use crate::util::json::{obj, Json};
 use std::collections::BTreeMap;
@@ -107,6 +107,11 @@ pub struct TelemetrySample {
     /// Execution latency, nanoseconds (batch members report the fused
     /// execution time divided by the batch size).
     pub latency_ns: u64,
+    /// Kernel variant that executed the solve. Per-variant latencies are
+    /// not comparable (a lane kernel amortizes sweep overhead across its
+    /// lanes), so the aggregator also classes samples by variant and the
+    /// fitted model learns a per-variant optimum m.
+    pub variant: KernelVariant,
     /// Execution batch size the solve rode in (1 = singleton). The
     /// aggregator only compares like-batch samples: a fused member's
     /// amortized latency hides fan-out overhead a singleton pays in
@@ -115,7 +120,10 @@ pub struct TelemetrySample {
     pub batch: usize,
 }
 
-fn pack(dtype: Dtype, backend: Backend, batch: usize) -> u64 {
+/// Tag layout: dtype bit 0, backend bits 1..=2, kernel-variant kind
+/// bits 3..=4 (0 scalar, 1 SoA lanes, 2 simd-single), lane-width log2
+/// bits 5..=7, batch size from bit 8 up.
+fn pack(dtype: Dtype, backend: Backend, variant: KernelVariant, batch: usize) -> u64 {
     let d = match dtype {
         Dtype::F64 => 0u64,
         Dtype::F32 => 1,
@@ -125,17 +133,29 @@ fn pack(dtype: Dtype, backend: Backend, batch: usize) -> u64 {
         Backend::Native => 1,
         Backend::Thomas => 2,
     };
-    d | (b << 1) | ((batch.max(1) as u64) << 3)
+    let (v, w) = match variant {
+        KernelVariant::Scalar => (0u64, 0u64),
+        KernelVariant::SoaLanes(width) => {
+            (1, (width.max(1) as u64).trailing_zeros() as u64 & 7)
+        }
+        KernelVariant::SimdSingle => (2, 0),
+    };
+    d | (b << 1) | (v << 3) | (w << 5) | ((batch.max(1) as u64) << 8)
 }
 
-fn unpack(tag: u64) -> (Dtype, Backend, usize) {
+fn unpack(tag: u64) -> (Dtype, Backend, KernelVariant, usize) {
     let dtype = if tag & 1 == 0 { Dtype::F64 } else { Dtype::F32 };
     let backend = match (tag >> 1) & 3 {
         0 => Backend::Pjrt,
         1 => Backend::Native,
         _ => Backend::Thomas,
     };
-    (dtype, backend, (tag >> 3).max(1) as usize)
+    let variant = match (tag >> 3) & 3 {
+        0 => KernelVariant::Scalar,
+        1 => KernelVariant::SoaLanes(1usize << ((tag >> 5) & 7)),
+        _ => KernelVariant::SimdSingle,
+    };
+    (dtype, backend, variant, (tag >> 8).max(1) as usize)
 }
 
 /// One ring slot: a per-slot seqlock. `seq` is `2*ticket + 1` while the
@@ -201,7 +221,7 @@ impl TelemetryStore {
         slot.n.store(s.n as u64, Ordering::Relaxed);
         slot.m.store(s.m as u64, Ordering::Relaxed);
         slot.tag
-            .store(pack(s.dtype, s.backend, s.batch), Ordering::Relaxed);
+            .store(pack(s.dtype, s.backend, s.variant, s.batch), Ordering::Relaxed);
         slot.latency.store(s.latency_ns, Ordering::Relaxed);
         slot.seq.store(2 * ticket + 2, Ordering::Release);
     }
@@ -245,12 +265,13 @@ impl TelemetryStore {
                 self.dropped.fetch_add(1, Ordering::Relaxed);
                 continue;
             }
-            let (dtype, backend, batch) = unpack(tag);
+            let (dtype, backend, variant, batch) = unpack(tag);
             out.push(TelemetrySample {
                 n,
                 m,
                 dtype,
                 backend,
+                variant,
                 latency_ns,
                 batch,
             });
@@ -343,16 +364,17 @@ pub struct OnlineStats {
 
 /// Per-(dtype, size-bin) aggregation: sizes are binned on an eighth-of-
 /// a-decade log grid (traffic sizes rarely repeat exactly), and each
-/// bin keeps per-(batch-size, m) sample counts and total latency —
-/// keyed by batch size so the fit only ever compares like-batch
-/// samples (a fused member's amortized latency is not comparable to a
-/// singleton's).
+/// bin keeps per-(batch-size, kernel-variant, m) sample counts and
+/// total latency — keyed by batch size *and* kernel variant so the fit
+/// only ever compares like-for-like samples (a fused member's amortized
+/// latency is not comparable to a singleton's, and a lane kernel's
+/// per-member latency is not comparable to a scalar sweep's).
 #[derive(Default)]
 struct BinStats {
     log_sum: f64,
     count: u64,
-    /// (batch size, m) -> (samples, total latency µs).
-    per_m: BTreeMap<(usize, usize), (u64, f64)>,
+    /// (batch size, kernel variant, m) -> (samples, total latency µs).
+    per_m: BTreeMap<(usize, KernelVariant, usize), (u64, f64)>,
 }
 
 type Bins = BTreeMap<i64, BinStats>;
@@ -370,30 +392,31 @@ fn dtype_index(dtype: Dtype) -> usize {
 /// has comparative evidence (two or more qualified m values) — fitting
 /// from policy-only traffic would just memorize the current heuristic.
 ///
-/// Per-m means are computed **within one batch-size class per bin**:
-/// fused-batch members record amortized latency (`exec/batch_size`)
-/// that hides the fan-out overhead singleton (explored) samples pay in
-/// full, so cross-class comparison would bias every bin toward the
-/// incumbent m under `submit_many`-heavy traffic. The class with the
-/// most qualified m values wins (ties prefer the smaller batch size,
-/// where exploration evidence lives).
+/// Per-m means are computed **within one (batch-size, kernel-variant)
+/// class per bin**: fused-batch members record amortized latency
+/// (`exec/batch_size`) that hides the fan-out overhead singleton
+/// (explored) samples pay in full, and lane-kernel members amortize the
+/// sweep across lanes, so cross-class comparison would bias every bin
+/// toward the incumbent m under `submit_many`-heavy traffic. The class
+/// with the most qualified m values wins (ties prefer the smaller batch
+/// size, where exploration evidence lives, then the scalar kernel).
 fn fit_rows(bins: &Bins, min_samples: u64) -> Option<(Vec<usize>, Vec<usize>)> {
     let mut ns = Vec::new();
     let mut sweeps = Vec::new();
     let mut comparative = false;
     for b in bins.values() {
-        let mut classes: BTreeMap<usize, Vec<(usize, f64)>> = BTreeMap::new();
-        for (&(batch, m), &(count, total_us)) in &b.per_m {
+        let mut classes: BTreeMap<(usize, KernelVariant), Vec<(usize, f64)>> = BTreeMap::new();
+        for (&(batch, variant, m), &(count, total_us)) in &b.per_m {
             if count >= min_samples {
                 classes
-                    .entry(batch)
+                    .entry((batch, variant))
                     .or_default()
                     .push((m, (total_us / count as f64).max(1e-6)));
             }
         }
-        // max_by: most qualified m values; on ties the *smaller* batch
-        // compares greater, so it wins.
-        let Some((_batch, times)) = classes
+        // max_by: most qualified m values; on ties the *smaller*
+        // (batch, variant) key compares greater, so it wins.
+        let Some((_class, times)) = classes
             .into_iter()
             .max_by(|a, b| a.1.len().cmp(&b.1.len()).then(b.0.cmp(&a.0)))
         else {
@@ -558,15 +581,18 @@ impl OnlineTuner {
         &self.adaptive
     }
 
-    /// Record one executed solve (never blocks or allocates). `batch`
-    /// is the execution batch size the solve rode in (1 = singleton);
-    /// the trainer only compares like-batch samples.
+    /// Record one executed solve (never blocks or allocates). `kernel`
+    /// is the variant that ran it; `batch` is the execution batch size
+    /// the solve rode in (1 = singleton). The trainer only compares
+    /// samples within one (batch, kernel-variant) class.
+    #[allow(clippy::too_many_arguments)]
     pub fn record_solve(
         &self,
         n: usize,
         m: usize,
         dtype: Dtype,
         backend: Backend,
+        kernel: KernelVariant,
         latency_ns: u64,
         batch: usize,
     ) {
@@ -575,6 +601,7 @@ impl OnlineTuner {
             m,
             dtype,
             backend,
+            variant: kernel,
             latency_ns,
             batch,
         });
@@ -643,7 +670,10 @@ impl OnlineTuner {
             let b = bins.entry(bin).or_default();
             b.log_sum += (s.n.max(1) as f64).log10();
             b.count += 1;
-            let e = b.per_m.entry((s.batch.max(1), s.m)).or_insert((0, 0.0));
+            let e = b
+                .per_m
+                .entry((s.batch.max(1), s.variant, s.m))
+                .or_insert((0, 0.0));
             e.0 += 1;
             e.1 += s.latency_ns as f64 / 1e3;
         }
@@ -710,6 +740,7 @@ mod tests {
             m,
             dtype: Dtype::F64,
             backend: Backend::Native,
+            variant: KernelVariant::Scalar,
             latency_ns,
             batch: 1,
         }
@@ -772,19 +803,32 @@ mod tests {
     }
 
     #[test]
-    fn dtype_backend_batch_packing_roundtrips() {
+    fn dtype_backend_variant_batch_packing_roundtrips() {
+        let variants = [
+            KernelVariant::Scalar,
+            KernelVariant::SoaLanes(2),
+            KernelVariant::SoaLanes(4),
+            KernelVariant::SoaLanes(8),
+            KernelVariant::SoaLanes(16),
+            KernelVariant::SimdSingle,
+        ];
         for dtype in [Dtype::F64, Dtype::F32] {
             for backend in [Backend::Pjrt, Backend::Native, Backend::Thomas] {
-                for batch in [1usize, 2, 16, 4096] {
-                    assert_eq!(
-                        unpack(pack(dtype, backend, batch)),
-                        (dtype, backend, batch)
-                    );
+                for variant in variants {
+                    for batch in [1usize, 2, 16, 4096] {
+                        assert_eq!(
+                            unpack(pack(dtype, backend, variant, batch)),
+                            (dtype, backend, variant, batch)
+                        );
+                    }
                 }
             }
         }
         // A zero batch (defensive) normalizes to the singleton class.
-        assert_eq!(unpack(pack(Dtype::F64, Backend::Native, 0)).2, 1);
+        assert_eq!(
+            unpack(pack(Dtype::F64, Backend::Native, KernelVariant::Scalar, 0)).3,
+            1
+        );
     }
 
     #[test]
@@ -810,8 +854,24 @@ mod tests {
         let tuner = OnlineTuner::new(cfg);
         // Comparative evidence at one size: m = 32 measures 2x faster.
         for _ in 0..3 {
-            tuner.record_solve(30_000, 8, Dtype::F64, Backend::Native, 900_000, 1);
-            tuner.record_solve(30_000, 32, Dtype::F64, Backend::Native, 400_000, 1);
+            tuner.record_solve(
+                30_000,
+                8,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                900_000,
+                1,
+            );
+            tuner.record_solve(
+                30_000,
+                32,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                400_000,
+                1,
+            );
         }
         assert!(tuner.retrain_now());
         let stats = tuner.stats();
@@ -835,7 +895,15 @@ mod tests {
         });
         // Policy-only traffic: a single m per size teaches nothing.
         for _ in 0..10 {
-            tuner.record_solve(50_000, 16, Dtype::F64, Backend::Native, 500_000, 1);
+            tuner.record_solve(
+                50_000,
+                16,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                500_000,
+                1,
+            );
         }
         assert!(!tuner.retrain_now());
         assert_eq!(tuner.stats().epoch, 0);
@@ -854,9 +922,33 @@ mod tests {
             ..OnlineTuneConfig::default()
         });
         for _ in 0..2 {
-            tuner.record_solve(10_000, 20, Dtype::F64, Backend::Native, 500_000, 1);
-            tuner.record_solve(100_000, 8, Dtype::F64, Backend::Native, 700_000, 1);
-            tuner.record_solve(100_000, 16, Dtype::F64, Backend::Native, 600_000, 1);
+            tuner.record_solve(
+                10_000,
+                20,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                500_000,
+                1,
+            );
+            tuner.record_solve(
+                100_000,
+                8,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                700_000,
+                1,
+            );
+            tuner.record_solve(
+                100_000,
+                16,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                600_000,
+                1,
+            );
         }
         assert!(tuner.retrain_now());
         let (m, _) = tuner.adaptive().predict(100_000, Dtype::F64).unwrap();
@@ -873,8 +965,24 @@ mod tests {
             ..OnlineTuneConfig::default()
         });
         for _ in 0..4 {
-            tuner.record_solve(100, 4, Dtype::F64, Backend::Thomas, 1_000, 1);
-            tuner.record_solve(100, 8, Dtype::F64, Backend::Thomas, 2_000, 1);
+            tuner.record_solve(
+                100,
+                4,
+                Dtype::F64,
+                Backend::Thomas,
+                KernelVariant::Scalar,
+                1_000,
+                1,
+            );
+            tuner.record_solve(
+                100,
+                8,
+                Dtype::F64,
+                Backend::Thomas,
+                KernelVariant::Scalar,
+                2_000,
+                1,
+            );
         }
         assert!(!tuner.retrain_now(), "Thomas solves carry no m signal");
     }
@@ -899,7 +1007,15 @@ mod tests {
             (100_000, 8, 900_000),
         ] {
             for _ in 0..2 {
-                tuner.record_solve(n, m, Dtype::F64, Backend::Native, ns, 1);
+                tuner.record_solve(
+                    n,
+                    m,
+                    Dtype::F64,
+                    Backend::Native,
+                    KernelVariant::Scalar,
+                    ns,
+                    1,
+                );
             }
         }
         assert!(tuner.retrain_now());
@@ -992,11 +1108,35 @@ mod tests {
             ..OnlineTuneConfig::default()
         });
         for _ in 0..12 {
-            tuner.record_solve(100_000, 8, Dtype::F64, Backend::Native, 250_000, 4);
+            tuner.record_solve(
+                100_000,
+                8,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                250_000,
+                4,
+            );
         }
         for _ in 0..2 {
-            tuner.record_solve(100_000, 8, Dtype::F64, Backend::Native, 900_000, 1);
-            tuner.record_solve(100_000, 16, Dtype::F64, Backend::Native, 600_000, 1);
+            tuner.record_solve(
+                100_000,
+                8,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                900_000,
+                1,
+            );
+            tuner.record_solve(
+                100_000,
+                16,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                600_000,
+                1,
+            );
         }
         assert!(tuner.retrain_now(), "singleton class carries comparative evidence");
         let (m, _) = tuner.adaptive().predict(100_000, Dtype::F64).unwrap();
@@ -1013,12 +1153,140 @@ mod tests {
             ..OnlineTuneConfig::default()
         });
         for _ in 0..3 {
-            tuner.record_solve(50_000, 8, Dtype::F64, Backend::Native, 800_000, 4);
-            tuner.record_solve(50_000, 32, Dtype::F64, Backend::Native, 500_000, 4);
+            tuner.record_solve(
+                50_000,
+                8,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                800_000,
+                4,
+            );
+            tuner.record_solve(
+                50_000,
+                32,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                500_000,
+                4,
+            );
         }
         assert!(tuner.retrain_now());
         let (m, _) = tuner.adaptive().predict(50_000, Dtype::F64).unwrap();
         assert_eq!(m, 32);
+    }
+
+    #[test]
+    fn per_variant_aggregation_keeps_kernel_classes_apart() {
+        // Same batch size, different kernel variants: the SoA lane
+        // kernel amortizes its sweep across lanes, so its per-member
+        // latencies are not comparable to scalar ones. Pooled naively,
+        // the lane kernel's m = 8 mean (~200 µs) would bury the scalar
+        // evidence that m = 16 beats m = 8; per-(batch, variant)
+        // classes must keep the scalar comparison intact.
+        let tuner = OnlineTuner::new(OnlineTuneConfig {
+            enabled: true,
+            min_samples: 2,
+            ..OnlineTuneConfig::default()
+        });
+        for _ in 0..12 {
+            tuner.record_solve(
+                100_000,
+                8,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::SoaLanes(4),
+                200_000,
+                4,
+            );
+        }
+        for _ in 0..2 {
+            tuner.record_solve(
+                100_000,
+                8,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                900_000,
+                4,
+            );
+            tuner.record_solve(
+                100_000,
+                16,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                600_000,
+                4,
+            );
+        }
+        assert!(tuner.retrain_now(), "scalar class carries comparative evidence");
+        let (m, _) = tuner.adaptive().predict(100_000, Dtype::F64).unwrap();
+        assert_eq!(m, 16, "lane-kernel latencies must not mask the scalar optimum");
+    }
+
+    #[test]
+    fn per_variant_model_install_retires_prior_epoch_plans() {
+        // The acceptance criterion: plans created under one
+        // kernel-variant model epoch retire atomically when the tuner
+        // hot-swaps a new per-variant model. The planner mixes the
+        // adaptive epoch into its fingerprint (= the plan-cache key),
+        // so an install makes every previously cached key unreachable.
+        use crate::config::Config;
+        use crate::coordinator::{Router, SolveOptions};
+        use crate::plan::BackendAvailability;
+
+        let tuner = OnlineTuner::new(OnlineTuneConfig {
+            enabled: true,
+            min_samples: 2,
+            ..OnlineTuneConfig::default()
+        });
+        let mut router =
+            Router::from_config(&Config::default(), BackendAvailability::native_only()).unwrap();
+        router.attach_adaptive(tuner.adaptive().clone());
+
+        let fp_before = router.planner().fingerprint();
+        let opts = SolveOptions::default();
+        let _ = router.plan(30_000, &opts); // miss: cached under epoch 0
+        let _ = router.plan(30_000, &opts); // hit
+        assert_eq!(router.cache_stats(), (1, 1));
+
+        // Per-variant telemetry (simd-single class) with comparative
+        // evidence installs a new model and bumps the epoch.
+        for _ in 0..3 {
+            tuner.record_solve(
+                30_000,
+                8,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::SimdSingle,
+                900_000,
+                1,
+            );
+            tuner.record_solve(
+                30_000,
+                32,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::SimdSingle,
+                400_000,
+                1,
+            );
+        }
+        assert!(tuner.retrain_now());
+        assert_eq!(tuner.stats().epoch, 1);
+        assert_ne!(
+            router.planner().fingerprint(),
+            fp_before,
+            "install must re-key the plan cache through the fingerprint"
+        );
+        // The old cached plan is unreachable: same size misses again
+        // and the fresh plan reflects the new model.
+        let plan = router.plan(30_000, &opts);
+        assert_eq!(router.cache_stats(), (1, 2), "stale epoch-0 key never hit again");
+        assert_eq!(plan.m(), 32);
+        assert!(plan.heuristic.contains("@e1"), "{}", plan.heuristic);
     }
 
     #[test]
@@ -1040,10 +1308,42 @@ mod tests {
         let tuner = OnlineTuner::new(cfg.clone());
         assert_eq!(tuner.stats().epoch, 0, "no persisted file yet");
         for _ in 0..3 {
-            tuner.record_solve(30_000, 8, Dtype::F64, Backend::Native, 900_000, 1);
-            tuner.record_solve(30_000, 32, Dtype::F64, Backend::Native, 400_000, 1);
-            tuner.record_solve(80_000, 8, Dtype::F32, Backend::Native, 700_000, 1);
-            tuner.record_solve(80_000, 16, Dtype::F32, Backend::Native, 300_000, 1);
+            tuner.record_solve(
+                30_000,
+                8,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                900_000,
+                1,
+            );
+            tuner.record_solve(
+                30_000,
+                32,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                400_000,
+                1,
+            );
+            tuner.record_solve(
+                80_000,
+                8,
+                Dtype::F32,
+                Backend::Native,
+                KernelVariant::Scalar,
+                700_000,
+                1,
+            );
+            tuner.record_solve(
+                80_000,
+                16,
+                Dtype::F32,
+                Backend::Native,
+                KernelVariant::Scalar,
+                300_000,
+                1,
+            );
         }
         assert!(tuner.retrain_now());
         let epoch = tuner.stats().epoch;

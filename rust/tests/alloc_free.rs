@@ -11,12 +11,14 @@
 
 use partisol::exec::{ExecCtx, WorkerPool};
 use partisol::gpu::spec::Dtype;
-use partisol::plan::Backend;
+use partisol::plan::{Backend, KernelVariant};
 use partisol::solver::generator::random_dd_system;
 use partisol::solver::partition::PartitionWorkspace;
 use partisol::solver::{
-    partition_solve_with_workspace, recursive_solve_with_workspace, SolveWorkspace,
+    partition_solve_with_workspace, recursive_solve_with_workspace, soa_solve_batch_ref,
+    SolveWorkspace,
 };
+use partisol::solver::{TriSystem, TriSystemRef};
 use partisol::tuner::online::{TelemetrySample, TelemetryStore};
 use partisol::util::count_alloc::CountingAlloc;
 use partisol::util::Pcg64;
@@ -103,6 +105,7 @@ fn steady_state_solve_is_allocation_free() {
                 m: 32,
                 dtype: Dtype::F64,
                 backend: Backend::Native,
+                variant: KernelVariant::Scalar,
                 latency_ns: 1_000 + i,
                 batch: 1,
             });
@@ -114,6 +117,7 @@ fn steady_state_solve_is_allocation_free() {
                 m: 32,
                 dtype: Dtype::F32,
                 backend: Backend::Native,
+                variant: KernelVariant::SoaLanes(4),
                 latency_ns: i,
                 batch: 1,
             });
@@ -124,6 +128,34 @@ fn steady_state_solve_is_allocation_free() {
         "warmed-up solve + telemetry recording must not allocate"
     );
     assert_eq!(store.recorded(), 205);
+
+    // --- SoA lane-batch kernel: a warmed-up batched solve with reused
+    // span/solution buffers is allocation-free in steady state (the
+    // lane transposes live in the exec arena, the member spans reuse
+    // their Vec capacity). ---
+    let members: Vec<TriSystem<f64>> = (0..13)
+        .map(|i| random_dd_system::<f64>(&mut rng, 64 + (i % 5) * 7, 0.5))
+        .collect();
+    let views: Vec<TriSystemRef<'_, f64>> = members.iter().map(|s| s.view()).collect();
+    let total: usize = members.iter().map(|s| s.a.len()).sum();
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    let mut soa_x = vec![0.0f64; total];
+    for _ in 0..2 {
+        soa_solve_batch_ref(&views, 4, &exec, &mut spans, &mut soa_x).unwrap();
+    }
+    let allocs = CountingAlloc::count_during(|| {
+        for _ in 0..5 {
+            soa_solve_batch_ref(&views, 4, &exec, &mut spans, &mut soa_x).unwrap();
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "warmed-up SoA lane-batch solve must not allocate"
+    );
+    for (member, &(off, n)) in members.iter().zip(spans.iter()) {
+        let r = partisol::solver::residual::max_abs_residual(member, &soa_x[off..off + n]);
+        assert!(r < 1e-9, "member residual {r}");
+    }
 
     // Sanity: the solves above actually produced solutions.
     let residual = partisol::solver::residual::max_abs_residual(&sys, &x);

@@ -274,6 +274,13 @@ fn control_frames_ping_stats_shutdown() {
     let stats = remote.stats().unwrap();
     assert_eq!(stats.get("completed").unwrap().as_usize(), Some(1));
     assert!(stats.get("frames_in").unwrap().as_usize().unwrap() >= 3);
+    // The per-kernel counters ride the same stats frame: exactly the
+    // one host solve lands in exactly one variant bucket.
+    let kernels: usize = ["kernel_scalar", "kernel_soa", "kernel_simd_single"]
+        .iter()
+        .map(|k| stats.get(k).unwrap().as_usize().unwrap())
+        .sum();
+    assert_eq!(kernels, 1, "one solve, one kernel-variant counter");
 
     remote.shutdown_server().unwrap();
     // The server observes the shutdown, drains and joins.

@@ -1,12 +1,15 @@
 //! Property-based tests (hand-rolled testkit) over the crate's core
 //! invariants — the Rust-side counterpart of python/tests/test_properties.py.
 
+use partisol::exec::ExecCtx;
 use partisol::ml::{train_test_split, Dataset, Knn};
 use partisol::solver::generator::random_dd_system;
 use partisol::solver::partition::{assemble_interface, stage1_all};
 use partisol::solver::recursive::recursive_solve;
 use partisol::solver::residual::{max_abs_diff, max_abs_residual};
-use partisol::solver::{partition_solve, thomas_solve};
+use partisol::solver::{
+    partition_solve, simd_partition_solve, soa_solve_batch, thomas_solve, SUPPORTED_LANES,
+};
 use partisol::testkit::{base_seed, default_cases, forall};
 use partisol::tuner::correction::correct_trend;
 use partisol::tuner::sweep::SweepResult;
@@ -70,6 +73,107 @@ fn prop_partition_equals_thomas_all_dtypes_and_pools() {
                 let res = max_abs_residual(&sys32, &got);
                 if res >= 1e-2 {
                     return Err(format!("f32 n={n} m={m} pool={pool}: residual {res}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The SoA lane-batch kernel is an exact drop-in for per-member Thomas:
+/// f64 solutions are identical for every supported lane width and pool
+/// size, including ragged batches whose size is not a lane multiple and
+/// members shorter than the group maximum (identity-padded rows). f32
+/// checks the residual bound.
+#[test]
+fn prop_soa_lane_batch_matches_thomas() {
+    forall(
+        base_seed(0x50A_u64),
+        default_cases() / 2,
+        |g| {
+            let count = g.int(1, 24);
+            let sizes: Vec<usize> = (0..count).map(|_| g.int(1, 200)).collect();
+            (sizes, g.rng.next_u64())
+        },
+        |(sizes, seed)| {
+            let mut rng = partisol::util::Pcg64::new(*seed);
+            let sys64: Vec<_> = sizes
+                .iter()
+                .map(|&n| random_dd_system::<f64>(&mut rng, n, 0.5))
+                .collect();
+            let want: Vec<Vec<f64>> = sys64
+                .iter()
+                .map(thomas_solve)
+                .collect::<Result<_, _>>()
+                .map_err(|e| e.to_string())?;
+            let sys32: Vec<_> = sizes
+                .iter()
+                .map(|&n| random_dd_system::<f32>(&mut rng, n, 1.0))
+                .collect();
+            for pool in [1usize, 4] {
+                let exec = ExecCtx::global(pool);
+                for w in SUPPORTED_LANES {
+                    let got = soa_solve_batch(&sys64, w, &exec).map_err(|e| e.to_string())?;
+                    for (i, (gx, wx)) in got.iter().zip(&want).enumerate() {
+                        if gx != wx {
+                            return Err(format!(
+                                "f64 w={w} pool={pool} member {i} (n={}) not identical",
+                                sizes[i]
+                            ));
+                        }
+                    }
+                    let got = soa_solve_batch(&sys32, w, &exec).map_err(|e| e.to_string())?;
+                    for (i, gx) in got.iter().enumerate() {
+                        let r = max_abs_residual(&sys32[i], gx);
+                        if r >= 1e-2 {
+                            return Err(format!(
+                                "f32 w={w} pool={pool} member {i} (n={}): residual {r}",
+                                sizes[i]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The lane-vectorized single-system kernel mirrors the scalar
+/// partition pipeline step for step, so its f64 solutions are identical
+/// to `partition_solve` at the same m — for every lane width, remainder
+/// block count (p % lanes), m across the full grid, and pool size.
+#[test]
+fn prop_simd_single_matches_partition() {
+    forall(
+        base_seed(0x51D_u64),
+        default_cases() / 2,
+        |g| {
+            let n = g.int(3, 20_000);
+            let m = g.int(3, 80);
+            (n, m, g.rng.next_u64())
+        },
+        |&(n, m, seed)| {
+            let mut rng = partisol::util::Pcg64::new(seed);
+            let sys64 = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let want = partition_solve(&sys64, m, 4).map_err(|e| e.to_string())?;
+            for pool in [1usize, 4] {
+                for lanes in SUPPORTED_LANES {
+                    let got =
+                        simd_partition_solve(&sys64, m, lanes, pool).map_err(|e| e.to_string())?;
+                    if got != want {
+                        return Err(format!(
+                            "f64 n={n} m={m} lanes={lanes} pool={pool} diverges from partition"
+                        ));
+                    }
+                }
+            }
+            let sys32 = random_dd_system::<f32>(&mut rng, n, 1.0);
+            for lanes in SUPPORTED_LANES {
+                let got = simd_partition_solve(&sys32, m, lanes, 2).map_err(|e| e.to_string())?;
+                let r = max_abs_residual(&sys32, &got);
+                if r >= 1e-2 {
+                    return Err(format!("f32 n={n} m={m} lanes={lanes}: residual {r}"));
                 }
             }
             Ok(())
