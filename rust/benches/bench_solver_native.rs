@@ -22,10 +22,12 @@ use partisol::solver::partition::{
     assemble_interface, partition_solve_with_workspace, stage1_block, stage3_block,
     BlockInterface, PartitionWorkspace,
 };
+use partisol::solver::pivoting::{pivoting_solve_ref_with_workspace, PivotingWorkspace};
+use partisol::solver::residual::relative_residual_ref;
 use partisol::solver::thomas::{thomas_solve_with_scratch, ThomasScratch};
 use partisol::solver::{
-    default_lanes, simd_partition_solve_ref_with_workspace, soa_solve_batch_ref, TriSystem,
-    TriSystemRef,
+    default_lanes, estimate_condition_ref, simd_partition_solve_ref_with_workspace,
+    soa_solve_batch_ref, TriSystem, TriSystemRef,
 };
 use partisol::util::count_alloc::CountingAlloc;
 use partisol::util::json::{obj, Json};
@@ -396,12 +398,80 @@ fn main() {
         ]));
     }
 
+    // -----------------------------------------------------------------
+    // Robust-route overhead: what the safety net costs on healthy
+    // traffic (the O(n) admission estimate and the post-solve residual
+    // check, both per solve) and what the scaled-pivoting fallback
+    // costs relative to the fast partition pipeline when it fires.
+    // -----------------------------------------------------------------
+    println!("\n== robust overhead ==");
+    let mut robust_rows: Vec<Json> = Vec::new();
+    let robust_points: &[usize] = if smoke { &[1 << 14] } else { &[1 << 17, 1 << 20] };
+    for &n_r in robust_points {
+        let m_r = planner.plan(n_r, &SolveOptions::default()).m();
+        let sys_r = random_dd_system::<f64>(&mut rng, n_r, 0.5);
+
+        let samples = bench_loop(loop_t, kv_iters, || {
+            std::hint::black_box(estimate_condition_ref(sys_r.view()));
+        });
+        let t_estimate = median(&samples);
+
+        let mut ws = PartitionWorkspace::new();
+        let mut x_fast = vec![0.0f64; n_r];
+        partition_solve_with_workspace(&sys_r, m_r, &exec, &mut ws, &mut x_fast).unwrap();
+        let samples = bench_loop(loop_t, kv_iters, || {
+            partition_solve_with_workspace(&sys_r, m_r, &exec, &mut ws, &mut x_fast).unwrap();
+            std::hint::black_box(&x_fast);
+        });
+        let t_fast = median(&samples);
+
+        let samples = bench_loop(loop_t, kv_iters, || {
+            std::hint::black_box(relative_residual_ref(sys_r.view(), &x_fast));
+        });
+        let t_residual = median(&samples);
+
+        let mut ws_piv = PivotingWorkspace::new();
+        let mut x_piv = vec![0.0f64; n_r];
+        pivoting_solve_ref_with_workspace(sys_r.view(), m_r, &exec, &mut ws_piv, &mut x_piv)
+            .unwrap();
+        let samples = bench_loop(loop_t, kv_iters, || {
+            pivoting_solve_ref_with_workspace(sys_r.view(), m_r, &exec, &mut ws_piv, &mut x_piv)
+                .unwrap();
+            std::hint::black_box(&x_piv);
+        });
+        let t_piv = median(&samples);
+        assert!(
+            relative_residual_ref(sys_r.view(), &x_piv) < 1e-9,
+            "pivoting route must stay at solver accuracy"
+        );
+
+        println!(
+            "  N={n_r:>8} m={m_r:>3} | estimate {:>8.1} us | residual {:>8.1} us | fast {:>9.3} ms | pivoting {:>9.3} ms ({:.2}x)",
+            t_estimate * 1e6,
+            t_residual * 1e6,
+            t_fast * 1e3,
+            t_piv * 1e3,
+            t_piv / t_fast
+        );
+        robust_rows.push(obj(vec![
+            ("n", Json::Num(n_r as f64)),
+            ("m", Json::Num(m_r as f64)),
+            ("estimate_us", Json::Num(t_estimate * 1e6)),
+            ("residual_check_us", Json::Num(t_residual * 1e6)),
+            ("fast_ms", Json::Num(t_fast * 1e3)),
+            ("pivoting_ms", Json::Num(t_piv * 1e3)),
+            ("pivoting_over_fast", Json::Num(t_piv / t_fast)),
+            ("estimate_frac_of_fast", Json::Num(t_estimate / t_fast)),
+        ]));
+    }
+
     let report = obj(vec![
         ("bench", Json::Str("solver_native".to_string())),
         ("smoke", Json::Bool(smoke)),
         ("pool_size", Json::Num(threads as f64)),
         ("results", Json::Arr(rows)),
         ("kernel_variants", Json::Arr(kernel_rows)),
+        ("robust_overhead", Json::Arr(robust_rows)),
         ("soa_vs_scalar_speedup", Json::Num(soa_headline)),
         (
             "thomas_baseline",

@@ -112,6 +112,8 @@ mod tests {
             exec_us: 1.0,
             batch_size: 1,
             simulated_gpu_us: 0.0,
+            route: crate::plan::RobustRoute::Fast,
+            resolved_robust: false,
         }
     }
 

@@ -114,6 +114,10 @@ pub fn run(argv: &[String]) -> Result<()> {
         m.kernel_scalar, m.kernel_soa, m.kernel_simd_single
     );
     println!(
+        "robust routes      : fast {} | pivoting {} | {} re-solves | {} rejected | {} batch retries",
+        m.route_fast, m.route_pivoting, m.robust_resolves, m.robust_rejected, m.robust_batch_retries
+    );
+    println!(
         "failures           : {} failed | {} backpressure | {} shutdown-rejected | {} pjrt fallbacks | {} dropped replies",
         m.failed, m.rejected_backpressure, m.rejected_shutdown, m.pjrt_fallbacks, m.responses_dropped
     );
@@ -182,6 +186,10 @@ fn print_net_metrics(m: &MetricsSnapshot, online: bool) {
     println!(
         "kernels            : scalar {} | soa {} | simd-single {}",
         m.kernel_scalar, m.kernel_soa, m.kernel_simd_single
+    );
+    println!(
+        "robust routes      : fast {} | pivoting {} | {} re-solves | {} rejected | {} batch retries",
+        m.route_fast, m.route_pivoting, m.robust_resolves, m.robust_rejected, m.robust_batch_retries
     );
     println!(
         "plan cache         : {} hits / {} misses",

@@ -5,7 +5,7 @@ use super::parser::{parse, TomlTable};
 use crate::error::{Error, Result};
 use crate::gpu::spec::{Dtype, GpuCard};
 use crate::net::NetConfig;
-use crate::plan::KernelConfig;
+use crate::plan::{KernelConfig, RobustConfig, RobustMode};
 use crate::tuner::online::OnlineTuneConfig;
 use std::path::Path;
 
@@ -81,6 +81,10 @@ pub struct Config {
     /// planner picks the SoA lane kernel or the vectorized
     /// single-system kernel over the scalar sweeps.
     pub kernel: KernelConfig,
+    /// Numerical-robustness policy (`[robust]` table): condition-aware
+    /// admission, the scaled-pivoting fallback route and the post-solve
+    /// residual bound that triggers a re-solve.
+    pub robust: RobustConfig,
 }
 
 impl Default for Config {
@@ -101,6 +105,7 @@ impl Default for Config {
             online: OnlineTuneConfig::default(),
             net: NetConfig::default(),
             kernel: KernelConfig::default(),
+            robust: RobustConfig::default(),
         }
     }
 }
@@ -255,6 +260,32 @@ impl Config {
         if let Some(v) = t.get("kernel.simd_single_min_n") {
             cfg.kernel.simd_single_min_n = int_field(v, "kernel.simd_single_min_n")?;
         }
+        if let Some(v) = t.get("robust.mode") {
+            cfg.robust.mode = RobustMode::parse(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("robust.mode must be a string".into()))?,
+            )?;
+        }
+        if let Some(v) = t.get("robust.margin_min") {
+            cfg.robust.margin_min = v
+                .as_float()
+                .ok_or_else(|| Error::Config("robust.margin_min must be a number".into()))?;
+        }
+        if let Some(v) = t.get("robust.scaled_pivot_min") {
+            cfg.robust.scaled_pivot_min = v
+                .as_float()
+                .ok_or_else(|| Error::Config("robust.scaled_pivot_min must be a number".into()))?;
+        }
+        if let Some(v) = t.get("robust.residual_bound_f64") {
+            cfg.robust.residual_bound_f64 = v.as_float().ok_or_else(|| {
+                Error::Config("robust.residual_bound_f64 must be a number".into())
+            })?;
+        }
+        if let Some(v) = t.get("robust.residual_bound_f32") {
+            cfg.robust.residual_bound_f32 = v.as_float().ok_or_else(|| {
+                Error::Config("robust.residual_bound_f32 must be a number".into())
+            })?;
+        }
         if cfg.workers == 0 || cfg.queue_depth == 0 || cfg.max_batch == 0 || cfg.pool_size == 0 {
             return Err(Error::Config(
                 "workers, queue_depth, max_batch, pool_size must be positive".into(),
@@ -263,6 +294,7 @@ impl Config {
         cfg.online.validate()?;
         cfg.net.validate()?;
         cfg.kernel.validate()?;
+        cfg.robust.validate()?;
         Ok(cfg)
     }
 }
@@ -404,6 +436,24 @@ mod tests {
         // Widths must come from the supported lane set.
         assert!(Config::from_str("[kernel]\nsoa_width_f64 = 3").is_err());
         assert!(Config::from_str("[kernel]\nsoa_width_f32 = 0").is_err());
+    }
+
+    #[test]
+    fn robust_knobs_roundtrip_and_validate() {
+        let c = Config::from_str(
+            "[robust]\nmode = \"always\"\nmargin_min = 0.05\nscaled_pivot_min = 1e-6\nresidual_bound_f64 = 1e-10\nresidual_bound_f32 = 1e-3",
+        )
+        .unwrap();
+        assert_eq!(c.robust.mode, RobustMode::Always);
+        assert_eq!(c.robust.margin_min, 0.05);
+        assert_eq!(c.robust.scaled_pivot_min, 1e-6);
+        assert_eq!(c.robust.residual_bound_f64, 1e-10);
+        assert_eq!(c.robust.residual_bound_f32, 1e-3);
+        assert_eq!(Config::default().robust.mode, RobustMode::Estimate);
+        let c = Config::from_str("[robust]\nmode = \"off\"").unwrap();
+        assert_eq!(c.robust.mode, RobustMode::Off);
+        assert!(Config::from_str("[robust]\nmode = \"paranoid\"").is_err());
+        assert!(Config::from_str("[robust]\nmargin_min = 2.0").is_err());
     }
 
     #[test]

@@ -117,6 +117,7 @@ mod tests {
             backend,
             dtype: Dtype::F64,
             kernel: KernelVariant::Scalar,
+            route: crate::plan::RobustRoute::Fast,
         }
     }
 
@@ -161,9 +162,8 @@ mod tests {
             RoutedJob {
                 job: 1,
                 route: Route {
-                    m: 32,
-                    backend: Backend::Pjrt,
                     dtype: Dtype::F32,
+                    ..route(32, Backend::Pjrt)
                 },
             },
         ];

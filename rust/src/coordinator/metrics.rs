@@ -78,6 +78,20 @@ pub struct Metrics {
     pub kernel_soa: AtomicU64,
     /// Solves executed by the vectorized single-system stage 1/3 path.
     pub kernel_simd_single: AtomicU64,
+    /// Completed solves that ran the fast (no-pivoting) route.
+    pub route_fast: AtomicU64,
+    /// Completed solves that ran the scaled-pivoting route (admission-
+    /// routed, residual-triggered, or singular-retry).
+    pub route_pivoting: AtomicU64,
+    /// Fast-path solves re-solved on the pivoting route (residual over
+    /// bound, or a singular fast-core error).
+    pub robust_resolves: AtomicU64,
+    /// Requests rejected at admission: a structurally singular system
+    /// (an all-zero row) no route can solve.
+    pub robust_rejected: AtomicU64,
+    /// Fused batches that failed and fell back to per-member solves
+    /// (where singular members retry through the pivoting route).
+    pub robust_batch_retries: AtomicU64,
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
     pub e2e_latency: Histogram,
@@ -145,6 +159,15 @@ pub struct MetricsSnapshot {
     pub kernel_scalar: u64,
     pub kernel_soa: u64,
     pub kernel_simd_single: u64,
+    /// Completed solves per robust route (fast vs scaled-pivoting).
+    pub route_fast: u64,
+    pub route_pivoting: u64,
+    /// Fast-path solves re-solved on the pivoting route.
+    pub robust_resolves: u64,
+    /// Structurally singular systems rejected at admission.
+    pub robust_rejected: u64,
+    /// Fused batches retried per-member (singular members pivot).
+    pub robust_batch_retries: u64,
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
     /// Worker threads in the service's shared exec pool.
@@ -196,6 +219,15 @@ impl Metrics {
         .fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Count `n` completed solves on a robust route.
+    pub fn record_route(&self, route: crate::plan::RobustRoute, n: u64) {
+        match route {
+            crate::plan::RobustRoute::Fast => &self.route_fast,
+            crate::plan::RobustRoute::Pivoting => &self.route_pivoting,
+        }
+        .fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Count `n` solves executed by a host kernel variant.
     pub fn record_kernel(&self, kernel: crate::plan::KernelVariant, n: u64) {
         match kernel {
@@ -222,6 +254,11 @@ impl Metrics {
             kernel_scalar: self.kernel_scalar.load(Ordering::Relaxed),
             kernel_soa: self.kernel_soa.load(Ordering::Relaxed),
             kernel_simd_single: self.kernel_simd_single.load(Ordering::Relaxed),
+            route_fast: self.route_fast.load(Ordering::Relaxed),
+            route_pivoting: self.route_pivoting.load(Ordering::Relaxed),
+            robust_resolves: self.robust_resolves.load(Ordering::Relaxed),
+            robust_rejected: self.robust_rejected.load(Ordering::Relaxed),
+            robust_batch_retries: self.robust_batch_retries.load(Ordering::Relaxed),
             plan_cache_hits: 0,
             plan_cache_misses: 0,
             pool_workers: 0,
@@ -325,6 +362,23 @@ mod tests {
         assert_eq!(s.net_frames_out, 29);
         assert_eq!(s.net_sheds, 5);
         assert_eq!(s.net_deadline_expired, 1);
+    }
+
+    #[test]
+    fn robust_counters_survive_the_snapshot() {
+        use crate::plan::RobustRoute;
+        let m = Metrics::default();
+        m.record_route(RobustRoute::Fast, 5);
+        m.record_route(RobustRoute::Pivoting, 2);
+        m.robust_resolves.fetch_add(1, Ordering::Relaxed);
+        m.robust_rejected.fetch_add(3, Ordering::Relaxed);
+        m.robust_batch_retries.fetch_add(4, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.route_fast, 5);
+        assert_eq!(s.route_pivoting, 2);
+        assert_eq!(s.robust_resolves, 1);
+        assert_eq!(s.robust_rejected, 3);
+        assert_eq!(s.robust_batch_retries, 4);
     }
 
     #[test]

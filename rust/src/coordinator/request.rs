@@ -7,7 +7,7 @@
 use crate::api::payload::Solution;
 use crate::solver::TriSystem;
 
-pub use crate::plan::{Backend, SolveOptions};
+pub use crate::plan::{Backend, RobustRoute, SolveOptions};
 
 /// The legacy one-shot request shape (f64 payload; an f32 dtype option
 /// casts at the submit boundary). Kept for the deprecated
@@ -59,6 +59,12 @@ pub struct SolveResponse {
     /// What the calibrated simulator says this solve would cost on the
     /// paper's GPU (total µs) — the paper-facing metric.
     pub simulated_gpu_us: f64,
+    /// Which robust route produced the solution that was returned.
+    pub route: RobustRoute,
+    /// True when the fast path's answer was discarded and the system
+    /// re-solved on the pivoting route (residual over bound, or a
+    /// singular fast-core error).
+    pub resolved_robust: bool,
 }
 
 #[cfg(test)]
@@ -97,8 +103,12 @@ mod tests {
             exec_us: 0.0,
             batch_size: 1,
             simulated_gpu_us: 0.0,
+            route: RobustRoute::Fast,
+            resolved_robust: false,
         };
         assert_eq!(resp.x.dtype(), Dtype::F32);
         assert_eq!(resp.x.to_f64(), vec![1.0, 2.0]);
+        assert_eq!(resp.route, RobustRoute::Fast);
+        assert!(!resp.resolved_robust);
     }
 }

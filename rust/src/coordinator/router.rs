@@ -7,17 +7,27 @@ use super::request::{Backend, SolveOptions};
 use crate::config::Config;
 use crate::error::Result;
 use crate::gpu::spec::Dtype;
-use crate::plan::{BackendAvailability, KernelVariant, PlanCache, PlanKey, Planner, SolvePlan};
+use crate::plan::{
+    BackendAvailability, KernelVariant, PlanCache, PlanKey, Planner, RobustRoute, SolvePlan,
+};
+use crate::solver::ConditionClass;
 use std::sync::Arc;
 
+/// Salt mixed into the plan-cache key for requests whose admission
+/// estimate classified them ill-conditioned: the same `(n, dtype)` key
+/// must never serve a fast-route plan to an ill system (or vice versa).
+const ILL_KEY_SALT: u64 = 0xA5A5_5A5A_D00D_F00D;
+
 /// The execution shape the batcher groups by: same
-/// (m, backend, dtype, kernel) requests can share one blocked execution.
+/// (m, backend, dtype, kernel, route) requests can share one blocked
+/// execution.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Route {
     pub m: usize,
     pub backend: Backend,
     pub dtype: Dtype,
     pub kernel: KernelVariant,
+    pub route: RobustRoute,
 }
 
 impl Route {
@@ -27,6 +37,7 @@ impl Route {
             backend: plan.backend,
             dtype: plan.dtype,
             kernel: plan.kernel,
+            route: plan.route,
         }
     }
 }
@@ -55,6 +66,12 @@ impl Router {
         self.planner.set_kernel_config(kc);
     }
 
+    /// Install the robust-route policy (re-keys the cache through the
+    /// planner fingerprint, so a threshold flip retires stale plans).
+    pub fn set_robust_config(&mut self, rc: crate::plan::RobustConfig) {
+        self.planner.set_robust_config(rc);
+    }
+
     /// Attach the online-tuning hot-swap slot to the planner (see
     /// [`crate::tuner::online`]): model installs then re-key the plan
     /// cache through the planner fingerprint, so no cached `SolvePlan`
@@ -73,10 +90,17 @@ impl Router {
         if !cacheable {
             return Arc::new(self.planner.plan(n, opts));
         }
+        // Ill-classified requests get their own cache lane: their plans
+        // carry the pivoting route and must not alias the fast plans of
+        // well-conditioned systems with the same (n, dtype).
+        let salt = match opts.condition {
+            Some(ConditionClass::Ill) => ILL_KEY_SALT,
+            _ => 0,
+        };
         let key = PlanKey {
             n,
             dtype: opts.dtype,
-            planner: self.planner.fingerprint(),
+            planner: self.planner.fingerprint() ^ salt,
         };
         self.cache
             .get_or_insert_with(key, || self.planner.plan(n, opts))
@@ -143,6 +167,26 @@ mod tests {
         let (hits, misses) = r.cache_stats();
         assert_eq!(hits, 0);
         assert_eq!(misses, 0);
+    }
+
+    #[test]
+    fn ill_condition_gets_its_own_cache_lane() {
+        // An ill-classified request must not be served the cached fast
+        // plan of a well-conditioned system with the same (n, dtype).
+        let r = router(vec![]);
+        let well = r.plan(50_000, &SolveOptions::default());
+        assert_eq!(well.route, RobustRoute::Fast);
+        let ill_opts = SolveOptions {
+            condition: Some(ConditionClass::Ill),
+            ..Default::default()
+        };
+        let ill = r.plan(50_000, &ill_opts);
+        assert_eq!(ill.route, RobustRoute::Pivoting);
+        // Both populate (and re-serve from) their own entries.
+        assert_eq!(r.plan(50_000, &SolveOptions::default()).route, RobustRoute::Fast);
+        assert_eq!(r.plan(50_000, &ill_opts).route, RobustRoute::Pivoting);
+        let (hits, misses) = r.cache_stats();
+        assert_eq!((hits, misses), (2, 2));
     }
 
     #[test]

@@ -33,12 +33,13 @@ use crate::error::{Error, Result};
 use crate::exec::{ExecCtx, WorkerPool};
 use crate::gpu::spec::Dtype;
 use crate::plan::{
-    BackendAvailability, KernelVariant, NativeBackend, NativeScalar, PjrtBackend, SolveOptions,
-    SolvePlan,
+    BackendAvailability, KernelVariant, NativeBackend, NativeScalar, PjrtBackend, RobustMode,
+    RobustRoute, SolveOptions, SolvePlan,
 };
 use crate::runtime::executor::PjrtScalar;
 use crate::runtime::Runtime;
-use crate::solver::residual::max_abs_residual_ref;
+use crate::solver::estimate_condition_ref;
+use crate::solver::residual::{max_abs_residual_ref, relative_residual_ref};
 use crate::tuner::online::{OnlineTuner, TelemetrySample};
 use std::collections::VecDeque;
 use std::path::Path;
@@ -142,6 +143,8 @@ impl Service {
         let mut router = Router::from_config(&cfg, avail)?;
         cfg.kernel.validate()?;
         router.set_kernel_config(cfg.kernel);
+        cfg.robust.validate()?;
+        router.set_robust_config(cfg.robust);
         cfg.online.validate()?;
         let tuner = if cfg.online.enabled {
             let tuner = Arc::new(OnlineTuner::new(cfg.online.clone()));
@@ -216,6 +219,15 @@ impl Service {
     ) -> std::result::Result<mpsc::Receiver<Reply>, Rejected> {
         let inner = &self.inner;
         let mut opts = opts;
+        // Admission rejections travel through the normal reply channel
+        // (the request was accepted, its solve failed) — only queue
+        // errors use the payload-returning rejection path.
+        if let Some(err) = admit(inner, &payload, &mut opts) {
+            inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+            let (tx, rx) = mpsc::channel();
+            let _ = tx.send(Err(err));
+            return Ok(rx);
+        }
         let explored = maybe_explore(inner, payload.n(), &mut opts);
         // On rejection, roll back the exploration claim and hand the
         // caller's *original* options back (the injected m_override
@@ -299,6 +311,16 @@ impl Service {
         let mut rxs = Vec::with_capacity(count);
         let mut routed = Vec::with_capacity(count);
         for (id, payload, opts) in specs {
+            let mut opts = opts;
+            if let Some(err) = admit(inner, &payload, &mut opts) {
+                // The member is answered (with the admission error)
+                // without ever reaching the queue; the rest of the
+                // group is unaffected.
+                let (tx, rx) = mpsc::channel();
+                let _ = tx.send(Err(err));
+                rxs.push(rx);
+                continue;
+            }
             let plan = inner.router.plan(payload.n(), &opts);
             let (tx, rx) = mpsc::channel();
             rxs.push(rx);
@@ -386,11 +408,15 @@ impl Service {
             dtype: payload.dtype(),
             ..opts.clone()
         };
+        if let Some(err) = admit(inner, payload, &mut opts) {
+            inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+            return Err(err);
+        }
         maybe_explore(inner, payload.n(), &mut opts);
         let plan = inner.router.plan(payload.n(), &opts);
         inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
-        let (x, backend, kernel, residual) = match payload {
+        let out = match payload {
             SystemPayload::F64(src) => inline_typed::<f64>(inner, &plan, src, &opts)?,
             SystemPayload::F32(src) => inline_typed::<f32>(inner, &plan, src, &opts)?,
         };
@@ -400,27 +426,31 @@ impl Service {
             payload.n(),
             plan.m(),
             payload.dtype(),
-            backend,
-            kernel,
+            out.backend,
+            out.kernel,
             exec_us,
             1,
+            out.route == RobustRoute::Pivoting,
         );
-        inner.metrics.record_backend(backend, 1);
-        inner.metrics.record_kernel(kernel, 1);
+        inner.metrics.record_backend(out.backend, 1);
+        inner.metrics.record_kernel(out.kernel, 1);
+        inner.metrics.record_route(out.route, 1);
         inner.metrics.queue_latency.record(0.0);
         inner.metrics.exec_latency.record(exec_us);
         inner.metrics.e2e_latency.record(exec_us);
         inner.metrics.completed.fetch_add(1, Ordering::Relaxed);
         Ok(SolveResponse {
             id,
-            x,
+            x: out.x,
             m: plan.m(),
-            backend,
-            residual,
+            backend: out.backend,
+            residual: out.residual,
             queue_us: 0.0,
             exec_us,
             batch_size: 1,
             simulated_gpu_us: plan.simulated_gpu_us,
+            route: out.route,
+            resolved_robust: out.resolved_robust,
         })
     }
 
@@ -509,24 +539,112 @@ impl Drop for Service {
     }
 }
 
-/// Typed core of [`Service::solve_inline`].
+/// What [`inline_typed`] hands back to [`Service::solve_inline`].
+struct InlineOutcome {
+    x: crate::api::Solution,
+    backend: Backend,
+    kernel: KernelVariant,
+    residual: Option<f64>,
+    route: RobustRoute,
+    resolved_robust: bool,
+}
+
+/// Typed core of [`Service::solve_inline`], with the same robustness
+/// safety net as the queued path: a singular fast-core error retries on
+/// the pivoting route, and a fast answer whose relative residual
+/// exceeds the policy bound is discarded and re-solved.
 fn inline_typed<T: PayloadScalar + NativeScalar>(
     inner: &Inner,
     plan: &SolvePlan,
     src: &SystemSource<'_, T>,
     opts: &SolveOptions,
-) -> std::result::Result<(crate::api::Solution, Backend, KernelVariant, Option<f64>), ApiError> {
-    let out = inner
-        .native
-        .execute_typed::<T>(plan, src.view())
-        .map_err(|e| {
+) -> std::result::Result<InlineOutcome, ApiError> {
+    let retryable = inner.cfg.robust.mode != RobustMode::Off && plan.route == RobustRoute::Fast;
+    let (out, mut route, mut resolved) = match inner.native.execute_typed::<T>(plan, src.view()) {
+        Ok(out) => (out, plan.route, false),
+        Err(Error::SingularSystem { .. }) if retryable => {
+            let rplan = robust_replan(plan);
+            let out = inner
+                .native
+                .execute_typed::<T>(&rplan, src.view())
+                .map_err(|e| {
+                    inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    ApiError::from(e)
+                })?;
+            inner.metrics.robust_resolves.fetch_add(1, Ordering::Relaxed);
+            (out, RobustRoute::Pivoting, true)
+        }
+        Err(e) => {
             inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
-            ApiError::from(e)
-        })?;
+            return Err(ApiError::from(e));
+        }
+    };
+    let mut x = out.x;
+    let mut backend = out.backend;
+    let mut kernel = out.kernel;
+    if route == RobustRoute::Fast {
+        if let Some(bound) = inner.cfg.robust.residual_bound(opts.dtype) {
+            if relative_residual_ref(src.view(), &x) > bound {
+                let rplan = robust_replan(plan);
+                if let Ok(out) = inner.native.execute_typed::<T>(&rplan, src.view()) {
+                    x = out.x;
+                    backend = out.backend;
+                    kernel = out.kernel;
+                    route = RobustRoute::Pivoting;
+                    resolved = true;
+                    inner.metrics.robust_resolves.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
     let residual = opts
         .compute_residual
-        .then(|| max_abs_residual_ref(src.view(), &out.x));
-    Ok((T::into_solution(out.x), out.backend, out.kernel, residual))
+        .then(|| max_abs_residual_ref(src.view(), &x));
+    Ok(InlineOutcome {
+        x: T::into_solution(x),
+        backend,
+        kernel,
+        residual,
+        route,
+        resolved_robust: resolved,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Numerical-robustness hooks.
+// ---------------------------------------------------------------------------
+
+/// Admission-time conditioning (`[robust] mode = "estimate"`): run the
+/// O(n) condition estimate, reject structurally singular systems (an
+/// all-zero row — no route can solve those), and stash the class on the
+/// options so planning routes ill systems down the pivoting path.
+fn admit(inner: &Inner, payload: &SystemPayload<'_>, opts: &mut SolveOptions) -> Option<ApiError> {
+    if inner.cfg.robust.mode != RobustMode::Estimate {
+        return None;
+    }
+    let est = match payload {
+        SystemPayload::F64(src) => estimate_condition_ref(src.view()),
+        SystemPayload::F32(src) => estimate_condition_ref(src.view()),
+    };
+    if est.zero_row {
+        inner.metrics.robust_rejected.fetch_add(1, Ordering::Relaxed);
+        inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+        return Some(ApiError::InvalidRequest(
+            "system has an all-zero row (structurally singular)".into(),
+        ));
+    }
+    opts.condition = Some(inner.cfg.robust.classify(&est));
+    None
+}
+
+/// Clone a plan onto the scaled-pivoting route: native backend, scalar
+/// kernel (the robust solver has no lane variants), same m.
+fn robust_replan(plan: &SolvePlan) -> SolvePlan {
+    let mut p = plan.clone();
+    p.route = RobustRoute::Pivoting;
+    p.backend = Backend::Native;
+    p.kernel = KernelVariant::Scalar;
+    p
 }
 
 // ---------------------------------------------------------------------------
@@ -581,6 +699,7 @@ fn record_telemetry(
     kernel: KernelVariant,
     exec_us: f64,
     batch_size: usize,
+    robust: bool,
 ) {
     if let Some(tuner) = &inner.tuner {
         tuner.record_solve(
@@ -591,6 +710,7 @@ fn record_telemetry(
             kernel,
             (exec_us * 1e3 / batch_size.max(1) as f64) as u64,
             batch_size.max(1),
+            robust,
         );
     }
 }
@@ -702,7 +822,7 @@ fn execute_pjrt_batch(inner: &Arc<Inner>, rt: &Runtime, route: Route, jobs: Vec<
     }
 }
 
-fn pjrt_batch_typed<T: PayloadScalar + PjrtScalar>(
+fn pjrt_batch_typed<T: PayloadScalar + PjrtScalar + NativeScalar>(
     inner: &Arc<Inner>,
     rt: &Runtime,
     route: Route,
@@ -735,6 +855,7 @@ fn pjrt_batch_typed<T: PayloadScalar + PjrtScalar>(
         <T as PayloadScalar>::DTYPE,
         Backend::Pjrt,
         KernelVariant::Scalar,
+        RobustRoute::Fast,
     );
     let solved = PjrtBackend::new(rt).execute_typed::<T>(&batch_plan, &combined);
     let exec_us = t0.elapsed().as_secs_f64() * 1e6;
@@ -755,6 +876,7 @@ fn pjrt_batch_typed<T: PayloadScalar + PjrtScalar>(
                     outcome.kernel,
                     exec_us,
                     batch_size,
+                    false,
                 );
             }
         }
@@ -839,7 +961,43 @@ fn native_one<T: PayloadScalar + NativeScalar>(inner: &Arc<Inner>, job: Job) {
                 outcome.kernel,
                 exec_us,
                 1,
+                false,
             );
+        }
+        Err(Error::SingularSystem { .. })
+            if inner.cfg.robust.mode != RobustMode::Off && job.plan.route == RobustRoute::Fast =>
+        {
+            // The fast path hit a dead pivot; re-solve on the
+            // scaled-pivoting route instead of failing the request.
+            let mut job = job;
+            job.plan = Arc::new(robust_replan(&job.plan));
+            let t1 = Instant::now();
+            let retried = {
+                let src = T::source(&job.payload).expect("dtype was matched above");
+                inner.native.execute_typed::<T>(&job.plan, src.view())
+            };
+            let exec_us = exec_us + t1.elapsed().as_secs_f64() * 1e6;
+            match retried {
+                Ok(outcome) => {
+                    inner.metrics.robust_resolves.fetch_add(1, Ordering::Relaxed);
+                    inner.metrics.record_backend(outcome.backend, 1);
+                    inner.metrics.record_kernel(outcome.kernel, 1);
+                    respond_ok_typed::<T>(
+                        inner,
+                        job,
+                        outcome.x,
+                        outcome.backend,
+                        outcome.kernel,
+                        exec_us,
+                        1,
+                        true,
+                    );
+                }
+                Err(e) => {
+                    inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    respond_err(inner, job, ApiError::from(e));
+                }
+            }
         }
         Err(e) => {
             inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
@@ -925,11 +1083,16 @@ fn native_soa_batch_typed<T: PayloadScalar + NativeScalar>(
                     route.kernel,
                     exec_us,
                     batch_size,
+                    false,
                 );
             }
         }
         Err(e) => {
             crate::log_warn!("soa lane batch failed ({e}); retrying members individually");
+            inner
+                .metrics
+                .robust_batch_retries
+                .fetch_add(1, Ordering::Relaxed);
             for job in jobs {
                 execute_native(inner, job);
             }
@@ -965,6 +1128,7 @@ fn native_batch_typed<T: PayloadScalar + NativeScalar>(
         <T as PayloadScalar>::DTYPE,
         Backend::Native,
         route.kernel,
+        route.route,
     );
     let result = inner.native.execute_typed::<T>(&batch_plan, combined.view());
     let exec_us = t0.elapsed().as_secs_f64() * 1e6;
@@ -985,13 +1149,19 @@ fn native_batch_typed<T: PayloadScalar + NativeScalar>(
                     outcome.kernel,
                     exec_us,
                     batch_size,
+                    false,
                 );
             }
         }
         Err(e) => {
             // One bad member (e.g. a singular system) must not poison
-            // the group: retry every member individually.
+            // the group: retry every member individually (a singular
+            // member then pivots through `native_one`'s retry).
             crate::log_warn!("native batch failed ({e}); retrying members individually");
+            inner
+                .metrics
+                .robust_batch_retries
+                .fetch_add(1, Ordering::Relaxed);
             for job in jobs {
                 execute_native(inner, job);
             }
@@ -999,7 +1169,12 @@ fn native_batch_typed<T: PayloadScalar + NativeScalar>(
     }
 }
 
-fn respond_ok_typed<T: PayloadScalar>(
+/// Build and send one success reply. The post-solve safety net lives
+/// here so every execution path shares it: when the fast route's answer
+/// misses the policy residual bound, it is discarded and the system
+/// re-solved on the scaled-pivoting route before the reply goes out.
+#[allow(clippy::too_many_arguments)]
+fn respond_ok_typed<T: PayloadScalar + NativeScalar>(
     inner: &Arc<Inner>,
     job: Job,
     x: Vec<T>,
@@ -1007,7 +1182,41 @@ fn respond_ok_typed<T: PayloadScalar>(
     kernel: KernelVariant,
     exec_us: f64,
     batch_size: usize,
+    resolved_robust: bool,
 ) {
+    let mut x = x;
+    let mut backend = backend;
+    let mut kernel = kernel;
+    let mut exec_us = exec_us;
+    let mut route = job.plan.route;
+    let mut resolved_robust = resolved_robust;
+    if route == RobustRoute::Fast {
+        if let Some(bound) = inner.cfg.robust.residual_bound(job.payload.dtype()) {
+            if let Some(src) = T::source(&job.payload) {
+                if relative_residual_ref(src.view(), &x) > bound {
+                    let rplan = robust_replan(&job.plan);
+                    let t1 = Instant::now();
+                    match inner.native.execute_typed::<T>(&rplan, src.view()) {
+                        Ok(out) => {
+                            x = out.x;
+                            backend = out.backend;
+                            kernel = out.kernel;
+                            route = RobustRoute::Pivoting;
+                            resolved_robust = true;
+                            inner.metrics.robust_resolves.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            // The pivoting route refused too (truly
+                            // singular data): the fast answer is still
+                            // the best available — reply with it.
+                            crate::log_warn!("robust re-solve failed ({e}); keeping fast answer");
+                        }
+                    }
+                    exec_us += t1.elapsed().as_secs_f64() * 1e6;
+                }
+            }
+        }
+    }
     record_telemetry(
         inner,
         job.payload.n(),
@@ -1017,7 +1226,9 @@ fn respond_ok_typed<T: PayloadScalar>(
         kernel,
         exec_us,
         batch_size,
+        route == RobustRoute::Pivoting,
     );
+    inner.metrics.record_route(route, 1);
     let queue_us = (job.enqueued.elapsed().as_secs_f64() * 1e6 - exec_us).max(0.0);
     let residual = if job.opts.compute_residual {
         T::source(&job.payload).map(|src| max_abs_residual_ref(src.view(), &x))
@@ -1034,6 +1245,8 @@ fn respond_ok_typed<T: PayloadScalar>(
         exec_us,
         batch_size,
         simulated_gpu_us: job.plan.simulated_gpu_us,
+        route,
+        resolved_robust,
     };
     inner.metrics.queue_latency.record(resp.queue_us);
     inner.metrics.exec_latency.record(exec_us);

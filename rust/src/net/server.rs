@@ -477,6 +477,11 @@ pub(crate) fn stats_json(snap: &MetricsSnapshot) -> Json {
         ("kernel_scalar", num(snap.kernel_scalar)),
         ("kernel_soa", num(snap.kernel_soa)),
         ("kernel_simd_single", num(snap.kernel_simd_single)),
+        ("route_fast", num(snap.route_fast)),
+        ("route_pivoting", num(snap.route_pivoting)),
+        ("robust_resolves", num(snap.robust_resolves)),
+        ("robust_rejected", num(snap.robust_rejected)),
+        ("robust_batch_retries", num(snap.robust_batch_retries)),
         ("model_epoch", num(snap.model_epoch)),
         ("mean_e2e_us", Json::Num(snap.mean_e2e_us)),
         ("p99_e2e_us", Json::Num(snap.p99_e2e_us)),

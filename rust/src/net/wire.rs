@@ -25,7 +25,7 @@ use crate::api::payload::{Solution, SystemPayload, SystemSource};
 use crate::api::ApiError;
 use crate::coordinator::SolveResponse;
 use crate::gpu::spec::Dtype;
-use crate::plan::{Backend, KernelVariant, SolveOptions};
+use crate::plan::{Backend, KernelVariant, RobustRoute, SolveOptions};
 use crate::solver::TriSystem;
 use std::io::{ErrorKind, Read, Write};
 
@@ -130,6 +130,11 @@ pub struct Response {
     pub exec_us: f64,
     pub batch_size: usize,
     pub simulated_gpu_us: f64,
+    /// Which robust route produced the solution.
+    pub route: RobustRoute,
+    /// True when the fast path's answer was discarded and the system
+    /// re-solved on the pivoting route.
+    pub resolved_robust: bool,
 }
 
 impl Response {
@@ -145,6 +150,8 @@ impl Response {
             exec_us: resp.exec_us,
             batch_size: resp.batch_size,
             simulated_gpu_us: resp.simulated_gpu_us,
+            route: resp.route,
+            resolved_robust: resp.resolved_robust,
         }
     }
 
@@ -160,6 +167,8 @@ impl Response {
             exec_us: self.exec_us,
             batch_size: self.batch_size,
             simulated_gpu_us: self.simulated_gpu_us,
+            route: self.route,
+            resolved_robust: self.resolved_robust,
         }
     }
 }
@@ -344,7 +353,13 @@ impl Frame {
                 body.push(dtype_code(dtype));
                 body.push(backend_code(resp.backend));
                 body.push(resp.residual.is_some() as u8);
-                body.push(0); // reserved
+                // Robust flags in the former reserved slot (old peers
+                // sent 0, which decodes as fast route / no re-solve):
+                // bit 0 = pivoting route, bit 1 = robust re-solve.
+                body.push(
+                    (resp.route == RobustRoute::Pivoting) as u8
+                        | ((resp.resolved_robust as u8) << 1),
+                );
                 put_u32(&mut body, resp.m as u32);
                 put_u32(&mut body, resp.batch_size as u32);
                 put_f64(&mut body, resp.residual.unwrap_or(0.0));
@@ -599,6 +614,9 @@ fn parse_body(kind: u8, body: &[u8]) -> Result<Frame, WireError> {
                     backend_override,
                     kernel_override,
                     compute_residual,
+                    // Admission classification is service-side state; it
+                    // is never carried on the wire.
+                    condition: None,
                 },
                 deadline_ms,
                 payload,
@@ -609,7 +627,18 @@ fn parse_body(kind: u8, body: &[u8]) -> Result<Frame, WireError> {
             let dtype = parse_dtype(cur.u8()?)?;
             let backend = parse_backend(cur.u8()?)?;
             let has_residual = cur.u8()? != 0;
-            let _reserved = cur.u8()?;
+            let flags = cur.u8()?;
+            if flags & !0x03 != 0 {
+                return Err(WireError::Malformed(format!(
+                    "unknown response flags {flags:#04x}"
+                )));
+            }
+            let route = if flags & 0x01 != 0 {
+                RobustRoute::Pivoting
+            } else {
+                RobustRoute::Fast
+            };
+            let resolved_robust = flags & 0x02 != 0;
             let m = cur.u32()? as usize;
             let batch_size = cur.u32()? as usize;
             let residual = cur.f64()?;
@@ -643,6 +672,8 @@ fn parse_body(kind: u8, body: &[u8]) -> Result<Frame, WireError> {
                 exec_us,
                 batch_size,
                 simulated_gpu_us,
+                route,
+                resolved_robust,
             }))
         }
         KIND_ERROR => {
@@ -727,6 +758,7 @@ mod tests {
                 backend_override: Some(Backend::Native),
                 kernel_override: Some(KernelVariant::SoaLanes(8)),
                 compute_residual: true,
+                condition: None,
             },
             deadline_ms: 2_500,
             payload: SystemPayload::F64(SystemSource::Owned(sys.clone())),
@@ -754,6 +786,7 @@ mod tests {
                 backend_override: None,
                 kernel_override: None,
                 compute_residual: false,
+                condition: None,
             },
             deadline_ms: 0,
             payload: SystemPayload::F32(SystemSource::Owned(sys32.clone())),
@@ -782,6 +815,8 @@ mod tests {
             exec_us: 800.0,
             batch_size: 3,
             simulated_gpu_us: 42.0,
+            route: RobustRoute::Fast,
+            resolved_robust: false,
         };
         let Frame::Response(out) = roundtrip(&Frame::Response(resp.clone())) else {
             panic!("expected a response frame");
@@ -798,11 +833,15 @@ mod tests {
             exec_us: 3.0,
             batch_size: 1,
             simulated_gpu_us: 0.0,
+            route: RobustRoute::Pivoting,
+            resolved_robust: true,
         };
         let Frame::Response(out) = roundtrip(&Frame::Response(resp32.clone())) else {
             panic!("expected a response frame");
         };
         assert_eq!(out, resp32);
+        assert_eq!(out.route, RobustRoute::Pivoting);
+        assert!(out.resolved_robust);
     }
 
     #[test]

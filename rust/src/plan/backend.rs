@@ -11,16 +11,16 @@
 //! (PJRT casts at the device boundary, exactly as the paper's FP32
 //! experiments do).
 
-use super::{Backend, KernelVariant, SolvePlan};
+use super::{Backend, KernelVariant, RobustRoute, SolvePlan};
 use crate::error::Result;
 use crate::exec::{ExecCtx, WorkspacePool, WorkspaceStats};
 use crate::gpu::spec::Dtype;
 use crate::runtime::executor::{pjrt_partition_solve, PjrtScalar};
 use crate::runtime::Runtime;
 use crate::solver::{
-    default_lanes, partition_solve_ref_with_workspace, recursive_solve_ref_with_workspace,
-    simd_partition_solve_ref_with_workspace, soa_solve_batch_ref, thomas_solve_ref, Scalar,
-    SolveWorkspace, TriSystem, TriSystemRef,
+    default_lanes, partition_solve_ref_with_workspace, pivoting_solve_ref_with_workspace,
+    recursive_solve_ref_with_workspace, simd_partition_solve_ref_with_workspace,
+    soa_solve_batch_ref, thomas_solve_ref, Scalar, SolveWorkspace, TriSystem, TriSystemRef,
 };
 use std::sync::Arc;
 
@@ -124,6 +124,23 @@ impl NativeBackend {
         plan: &SolvePlan,
         sys: TriSystemRef<'_, T>,
     ) -> Result<TypedOutcome<T>> {
+        // The robust route bypasses every fast kernel: the scaled-
+        // pivoting core solves in place (handling n <= m sequentially),
+        // so even Thomas-sized plans pivot when routed here.
+        if plan.route == RobustRoute::Pivoting {
+            let pool = T::workspaces(self);
+            let mut ws = pool.acquire();
+            let mut x = vec![T::zero(); sys.n()];
+            let solved =
+                pivoting_solve_ref_with_workspace(sys, plan.m(), &self.exec, ws.pivot(), &mut x);
+            pool.release(ws);
+            solved?;
+            return Ok(TypedOutcome {
+                x,
+                backend: Backend::Native,
+                kernel: KernelVariant::Scalar,
+            });
+        }
         if plan.backend == Backend::Thomas {
             return Ok(TypedOutcome {
                 x: thomas_solve_ref(sys)?,
@@ -271,6 +288,7 @@ mod tests {
             simulated_gpu_us: 0.0,
             heuristic: "test".into(),
             kernel: KernelVariant::Scalar,
+            route: RobustRoute::Fast,
         }
     }
 
@@ -402,6 +420,39 @@ mod tests {
             .unwrap();
         assert_eq!(out.kernel, KernelVariant::Scalar);
         assert!(max_abs_diff(&out.x, &thomas_solve(&sys).unwrap()) < 1e-9);
+    }
+
+    #[test]
+    fn pivoting_route_solves_what_the_fast_path_cannot() {
+        // A zero-diagonal system is fatal for the no-pivoting sweeps;
+        // a plan carrying the robust route must still solve it.
+        use crate::solver::residual::relative_residual;
+        let n = 64;
+        let sys = TriSystem::new(
+            {
+                let mut a = vec![1.0f64; n];
+                a[0] = 0.0;
+                a
+            },
+            vec![0.0; n],
+            {
+                let mut c = vec![1.0f64; n];
+                c[n - 1] = 0.0;
+                c
+            },
+            vec![1.0; n],
+        )
+        .unwrap();
+        let mut p = plan(n, Backend::Native, vec![8]);
+        p.route = RobustRoute::Pivoting;
+        let backend = NativeBackend::new(2);
+        assert!(backend
+            .execute_typed::<f64>(&plan(n, Backend::Native, vec![8]), sys.view())
+            .is_err());
+        let out = backend.execute_typed::<f64>(&p, sys.view()).unwrap();
+        assert_eq!(out.backend, Backend::Native);
+        assert_eq!(out.kernel, KernelVariant::Scalar);
+        assert!(relative_residual(&sys, &out.x) < 1e-12);
     }
 
     #[test]

@@ -171,6 +171,7 @@ mod tests {
             simulated_gpu_us: 1.0,
             heuristic: "t".into(),
             kernel: crate::plan::KernelVariant::Scalar,
+            route: crate::plan::RobustRoute::Fast,
         }
     }
 

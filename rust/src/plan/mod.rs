@@ -39,6 +39,7 @@ pub use shard::{plan_shards, ShardSpec};
 
 use crate::error::{Error, Result};
 use crate::gpu::spec::Dtype;
+use crate::solver::{ConditionClass, ConditionEstimate};
 use crate::util::json::{obj, Json};
 
 /// Which execution backend handles (or should handle) a request.
@@ -183,6 +184,162 @@ impl KernelConfig {
     }
 }
 
+/// Which solve formulation a request is routed to: the fast
+/// no-pivoting cores, or the scaled-partial-pivoting safety net.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RobustRoute {
+    /// Thomas / partition / lane kernels — fastest, but only
+    /// backward-stable when every pivot stays healthy.
+    Fast,
+    /// The scaled-partial-pivoting partition core
+    /// ([`crate::solver::pivoting`]): slower, solves any nonsingular
+    /// system.
+    Pivoting,
+}
+
+impl RobustRoute {
+    pub fn label(self) -> &'static str {
+        match self {
+            RobustRoute::Fast => "fast",
+            RobustRoute::Pivoting => "pivoting",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RobustRoute> {
+        match s {
+            "fast" => Ok(RobustRoute::Fast),
+            "pivoting" => Ok(RobustRoute::Pivoting),
+            other => Err(Error::Config(format!("unknown route `{other}`"))),
+        }
+    }
+}
+
+/// When the planner consults the admission condition estimate
+/// (`[robust] mode`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RobustMode {
+    /// Never route to pivoting up front; no residual re-solve either.
+    Off,
+    /// Route by the per-system [`ConditionEstimate`] (the default).
+    Estimate,
+    /// Route everything to the pivoting core (debugging / worst-case
+    /// workloads).
+    Always,
+}
+
+impl RobustMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            RobustMode::Off => "off",
+            RobustMode::Estimate => "estimate",
+            RobustMode::Always => "always",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RobustMode> {
+        match s {
+            "off" => Ok(RobustMode::Off),
+            "estimate" => Ok(RobustMode::Estimate),
+            "always" => Ok(RobustMode::Always),
+            other => Err(Error::Config(format!(
+                "robust mode must be off|estimate|always, got `{other}`"
+            ))),
+        }
+    }
+}
+
+/// Thresholds for the numerical-robustness safety net (`[robust]`
+/// config table): when the admission estimate classifies a system as
+/// ill-conditioned, and how large a post-solve relative residual the
+/// fast path may return before the worker re-solves on the pivoting
+/// route.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RobustConfig {
+    pub mode: RobustMode,
+    /// Systems whose normalized dominance margin falls below this are
+    /// classified ill (0.0 = any row that loses diagonal dominance).
+    pub margin_min: f64,
+    /// Systems whose minimum scaled pivot `|b_i| / s_i` falls below
+    /// this are classified ill regardless of the margin.
+    pub scaled_pivot_min: f64,
+    /// Fast-path relative-residual bound for f64 solves (0 disables the
+    /// post-solve check).
+    pub residual_bound_f64: f64,
+    /// Fast-path relative-residual bound for f32 solves (0 disables).
+    pub residual_bound_f32: f64,
+}
+
+impl Default for RobustConfig {
+    fn default() -> Self {
+        RobustConfig {
+            mode: RobustMode::Estimate,
+            margin_min: 0.0,
+            scaled_pivot_min: 1e-8,
+            residual_bound_f64: 1e-8,
+            residual_bound_f32: 1e-4,
+        }
+    }
+}
+
+impl RobustConfig {
+    /// The post-solve relative-residual bound for a dtype; `None` when
+    /// the check is disabled (mode off, or a zero bound).
+    pub fn residual_bound(&self, dtype: Dtype) -> Option<f64> {
+        if self.mode == RobustMode::Off {
+            return None;
+        }
+        let bound = match dtype {
+            Dtype::F64 => self.residual_bound_f64,
+            Dtype::F32 => self.residual_bound_f32,
+        };
+        (bound > 0.0).then_some(bound)
+    }
+
+    /// Classify an admission estimate against the thresholds.
+    pub fn classify(&self, est: &ConditionEstimate) -> ConditionClass {
+        if est.zero_row
+            || est.dominance_margin < self.margin_min
+            || est.min_scaled_pivot < self.scaled_pivot_min
+        {
+            ConditionClass::Ill
+        } else {
+            ConditionClass::Well
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("robust.margin_min", self.margin_min),
+            ("robust.scaled_pivot_min", self.scaled_pivot_min),
+            ("robust.residual_bound_f64", self.residual_bound_f64),
+            ("robust.residual_bound_f32", self.residual_bound_f32),
+        ] {
+            if !v.is_finite() {
+                return Err(Error::Config(format!("{name} must be finite, got {v}")));
+            }
+        }
+        if self.margin_min > 1.0 {
+            return Err(Error::Config(
+                "robust.margin_min > 1 would classify every system ill".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Stable hash of every knob, mixed into the planner fingerprint so
+    /// a threshold flip re-keys the plan cache.
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.mode.name().hash(&mut h);
+        self.margin_min.to_bits().hash(&mut h);
+        self.scaled_pivot_min.to_bits().hash(&mut h);
+        self.residual_bound_f64.to_bits().hash(&mut h);
+        self.residual_bound_f32.to_bits().hash(&mut h);
+        h.finish()
+    }
+}
+
 /// Per-request options the planner honors.
 #[derive(Clone, Debug)]
 pub struct SolveOptions {
@@ -195,6 +352,10 @@ pub struct SolveOptions {
     pub kernel_override: Option<KernelVariant>,
     /// Verify the solution and include the residual in the response.
     pub compute_residual: bool,
+    /// What the admission-time condition estimate concluded (set
+    /// service-side before planning; never carried on the wire). `None`
+    /// plans like [`ConditionClass::Well`].
+    pub condition: Option<ConditionClass>,
 }
 
 impl Default for SolveOptions {
@@ -205,6 +366,7 @@ impl Default for SolveOptions {
             backend_override: None,
             kernel_override: None,
             compute_residual: true,
+            condition: None,
         }
     }
 }
@@ -234,6 +396,8 @@ pub struct SolvePlan {
     pub heuristic: String,
     /// Which native kernel formulation executes this plan.
     pub kernel: KernelVariant,
+    /// Fast cores or the scaled-partial-pivoting safety net.
+    pub route: RobustRoute,
 }
 
 impl SolvePlan {
@@ -248,6 +412,7 @@ impl SolvePlan {
         dtype: Dtype,
         backend: Backend,
         kernel: KernelVariant,
+        route: RobustRoute,
     ) -> SolvePlan {
         SolvePlan {
             n,
@@ -259,6 +424,7 @@ impl SolvePlan {
             simulated_gpu_us: 0.0,
             heuristic: "batch".to_string(),
             kernel,
+            route,
         }
     }
 
@@ -300,6 +466,7 @@ impl SolvePlan {
             ("simulated_gpu_us", Json::Num(self.simulated_gpu_us)),
             ("heuristic", Json::Str(self.heuristic.clone())),
             ("kernel", Json::Str(self.kernel.label())),
+            ("route", Json::Str(self.route.label().to_string())),
         ])
     }
 
@@ -374,6 +541,15 @@ impl SolvePlan {
             )?,
             Err(_) => KernelVariant::Scalar,
         };
+        // Plans serialized before the robustness net carry no `route`
+        // field; they ran the fast path.
+        let route = match j.get("route") {
+            Ok(v) => RobustRoute::parse(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("plan route must be a string".into()))?,
+            )?,
+            Err(_) => RobustRoute::Fast,
+        };
         Ok(SolvePlan {
             n: num("n")?,
             dtype,
@@ -384,6 +560,7 @@ impl SolvePlan {
             simulated_gpu_us,
             heuristic,
             kernel,
+            route,
         })
     }
 
@@ -418,6 +595,7 @@ mod tests {
             simulated_gpu_us: 10_537.25,
             heuristic: "paper-trend-f64".to_string(),
             kernel: KernelVariant::Scalar,
+            route: RobustRoute::Fast,
         }
     }
 
@@ -447,6 +625,7 @@ mod tests {
             simulated_gpu_us: 203.0,
             heuristic: "knn".to_string(),
             kernel: KernelVariant::SoaLanes(4),
+            route: RobustRoute::Pivoting,
         };
         let back = SolvePlan::from_json_str(&p.to_json_string()).unwrap();
         assert_eq!(back, p);
@@ -474,6 +653,67 @@ mod tests {
             "simulated_gpu_us": 1.0, "heuristic": "h"}"#;
         let p = SolvePlan::from_json_str(legacy).unwrap();
         assert_eq!(p.kernel, KernelVariant::Scalar);
+        assert_eq!(p.route, RobustRoute::Fast, "legacy plans ran fast");
+    }
+
+    #[test]
+    fn robust_route_labels_roundtrip() {
+        for r in [RobustRoute::Fast, RobustRoute::Pivoting] {
+            assert_eq!(RobustRoute::parse(r.label()).unwrap(), r);
+        }
+        assert!(RobustRoute::parse("slow").is_err());
+        for m in [RobustMode::Off, RobustMode::Estimate, RobustMode::Always] {
+            assert_eq!(RobustMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(RobustMode::parse("never").is_err());
+    }
+
+    #[test]
+    fn robust_config_classifies_and_fingerprints() {
+        let rc = RobustConfig::default();
+        assert!(rc.validate().is_ok());
+        let well = ConditionEstimate {
+            dominance_margin: 0.4,
+            min_scaled_pivot: 0.8,
+            zero_row: false,
+        };
+        assert_eq!(rc.classify(&well), ConditionClass::Well);
+        let weak = ConditionEstimate {
+            dominance_margin: -0.2,
+            min_scaled_pivot: 0.8,
+            zero_row: false,
+        };
+        assert_eq!(rc.classify(&weak), ConditionClass::Ill);
+        let tiny_pivot = ConditionEstimate {
+            dominance_margin: 0.4,
+            min_scaled_pivot: 1e-12,
+            zero_row: false,
+        };
+        assert_eq!(rc.classify(&tiny_pivot), ConditionClass::Ill);
+        let fp = rc.fingerprint();
+        let mut other = rc;
+        other.margin_min = 0.1;
+        assert!(other.validate().is_ok());
+        assert_ne!(fp, other.fingerprint(), "knob change must re-fingerprint");
+        let mut bad = rc;
+        bad.residual_bound_f64 = f64::NAN;
+        assert!(bad.validate().is_err());
+        let mut bad = rc;
+        bad.margin_min = 2.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn residual_bound_follows_mode_and_dtype() {
+        let rc = RobustConfig::default();
+        assert_eq!(rc.residual_bound(Dtype::F64), Some(1e-8));
+        assert_eq!(rc.residual_bound(Dtype::F32), Some(1e-4));
+        let mut off = rc;
+        off.mode = RobustMode::Off;
+        assert_eq!(off.residual_bound(Dtype::F64), None);
+        let mut zeroed = rc;
+        zeroed.residual_bound_f64 = 0.0;
+        assert_eq!(zeroed.residual_bound(Dtype::F64), None);
     }
 
     #[test]

@@ -4,9 +4,13 @@
 //! [`SolvePlan`]s.
 
 use super::shard::plan_shards;
-use super::{Backend, KernelConfig, KernelVariant, SolveOptions, SolvePlan};
+use super::{
+    Backend, KernelConfig, KernelVariant, RobustConfig, RobustMode, RobustRoute, SolveOptions,
+    SolvePlan,
+};
 use crate::config::{Config, HeuristicKind};
 use crate::error::Result;
+use crate::solver::ConditionClass;
 use crate::gpu::simulator::GpuSimulator;
 use crate::gpu::spec::{Dtype, GpuCard};
 use crate::recursion::planner::plan_with_heuristic;
@@ -122,6 +126,9 @@ pub struct Planner {
     /// Kernel-variant selection policy (see [`KernelConfig`]); part of
     /// the fingerprint so config changes retire cached plans.
     kernel_cfg: KernelConfig,
+    /// Robust-route policy (see [`RobustConfig`]); part of the
+    /// fingerprint so threshold flips retire cached plans.
+    robust_cfg: RobustConfig,
 }
 
 impl Planner {
@@ -163,6 +170,7 @@ impl Planner {
             fingerprint: hasher.finish(),
             adaptive: None,
             kernel_cfg: KernelConfig::default(),
+            robust_cfg: RobustConfig::default(),
         }
     }
 
@@ -176,6 +184,18 @@ impl Planner {
     /// The active kernel-variant selection policy.
     pub fn kernel_config(&self) -> &KernelConfig {
         &self.kernel_cfg
+    }
+
+    /// Install the robust-route policy (validated config). Changes the
+    /// planner fingerprint, retiring all cached plans made under the
+    /// previous thresholds.
+    pub fn set_robust_config(&mut self, rc: RobustConfig) {
+        self.robust_cfg = rc;
+    }
+
+    /// The active robust-route policy.
+    pub fn robust_config(&self) -> &RobustConfig {
+        &self.robust_cfg
     }
 
     /// Attach the online-tuning hot-swap slot (see
@@ -247,7 +267,8 @@ impl Planner {
     /// With an attached online-tuning slot the model epoch is mixed in,
     /// so a hot-swap retires every cached plan of the previous model.
     pub fn fingerprint(&self) -> u64 {
-        let mut fp = self.fingerprint ^ self.kernel_cfg.fingerprint();
+        let mut fp =
+            self.fingerprint ^ self.kernel_cfg.fingerprint() ^ self.robust_cfg.fingerprint();
         if let Some(slot) = &self.adaptive {
             let epoch = slot.epoch();
             if epoch > 0 {
@@ -296,6 +317,18 @@ impl Planner {
             }
         };
 
+        // Robust route decision: `always` pivots everything, `estimate`
+        // pivots only what the admission estimate classified as
+        // ill-conditioned, `off` never pivots.
+        let route = match self.robust_cfg.mode {
+            RobustMode::Off => RobustRoute::Fast,
+            RobustMode::Always => RobustRoute::Pivoting,
+            RobustMode::Estimate => match opts.condition {
+                Some(ConditionClass::Ill) => RobustRoute::Pivoting,
+                _ => RobustRoute::Fast,
+            },
+        };
+
         let requested = opts.backend_override.unwrap_or({
             // Tiny systems: partitioning is pure overhead.
             if n <= 2 * m_want.max(4) {
@@ -310,8 +343,11 @@ impl Planner {
         });
         // Clamp to what can actually execute: a PJRT override without
         // artifacts would plan a lane no executor drains (the request
-        // would hang in the service's pjrt queue).
+        // would hang in the service's pjrt queue). The pivoting core is
+        // a native-only pipeline, so the robust route wins over both the
+        // automatic choice and any backend override.
         let backend = match requested {
+            _ if route == RobustRoute::Pivoting => Backend::Native,
             Backend::Pjrt if !self.avail.has_pjrt() => {
                 if self.avail.native {
                     Backend::Native
@@ -331,9 +367,15 @@ impl Planner {
             Backend::Pjrt => plan_shards(n, m, self.avail.buckets_for(m)),
             _ => Vec::new(),
         };
-        let kernel = match opts.kernel_override {
-            Some(k) => k,
-            None => self.kernel_for(n, backend, opts.dtype),
+        // The pivoting core has no lane/SIMD variants: the robust route
+        // is scalar end-to-end regardless of the kernel policy.
+        let kernel = if route == RobustRoute::Pivoting {
+            KernelVariant::Scalar
+        } else {
+            match opts.kernel_override {
+                Some(k) => k,
+                None => self.kernel_for(n, backend, opts.dtype),
+            }
         };
         SolvePlan {
             n,
@@ -345,6 +387,7 @@ impl Planner {
             simulated_gpu_us: self.sim.solve(n, m, streams, opts.dtype).total_us,
             heuristic,
             kernel,
+            route,
         }
     }
 
@@ -399,6 +442,7 @@ impl Planner {
             heuristic: h.name().to_string(),
             // The recursive executor is the scalar pipeline end-to-end.
             kernel: KernelVariant::Scalar,
+            route: RobustRoute::Fast,
         }
     }
 
@@ -422,6 +466,11 @@ impl Planner {
             plan.levels, plan.heuristic
         ));
         out.push_str(&format!("  streams            : {}\n", plan.streams));
+        out.push_str(&format!(
+            "  route              : {} (robust mode: {})\n",
+            plan.route.label(),
+            self.robust_cfg.mode.name()
+        ));
         if plan.shards.is_empty() {
             out.push_str("  shards             : (no PJRT bucket layout)\n");
         } else {
@@ -677,6 +726,50 @@ mod tests {
             p.plan(1_000, &SolveOptions::default()).kernel,
             KernelVariant::Scalar
         );
+    }
+
+    #[test]
+    fn robust_route_follows_mode_and_condition() {
+        let mut p = planner(vec![4, 8, 16, 32, 64]);
+        // Default mode `estimate`: no condition info or Well -> fast.
+        let plan = p.plan(1_000_000, &SolveOptions::default());
+        assert_eq!(plan.route, RobustRoute::Fast);
+        assert_eq!(plan.backend, Backend::Pjrt);
+        let well = SolveOptions {
+            condition: Some(ConditionClass::Well),
+            ..Default::default()
+        };
+        assert_eq!(p.plan(1_000_000, &well).route, RobustRoute::Fast);
+        // Ill-conditioned: pivoting route, forced native scalar.
+        let ill = SolveOptions {
+            condition: Some(ConditionClass::Ill),
+            ..Default::default()
+        };
+        let plan = p.plan(1_000_000, &ill);
+        assert_eq!(plan.route, RobustRoute::Pivoting);
+        assert_eq!(plan.backend, Backend::Native);
+        assert_eq!(plan.kernel, KernelVariant::Scalar);
+        // Even a tiny ill-conditioned system pivots (the core handles
+        // n <= m sequentially).
+        let plan = p.plan(6, &ill);
+        assert_eq!(plan.route, RobustRoute::Pivoting);
+        assert_eq!(plan.backend, Backend::Native);
+        // Mode `off`: ill systems stay on the fast path.
+        let fp0 = p.fingerprint();
+        p.set_robust_config(RobustConfig {
+            mode: RobustMode::Off,
+            ..RobustConfig::default()
+        });
+        assert_ne!(p.fingerprint(), fp0, "robust policy must re-key the cache");
+        assert_eq!(p.plan(1_000_000, &ill).route, RobustRoute::Fast);
+        // Mode `always`: everything pivots.
+        p.set_robust_config(RobustConfig {
+            mode: RobustMode::Always,
+            ..RobustConfig::default()
+        });
+        let plan = p.plan(1_000_000, &SolveOptions::default());
+        assert_eq!(plan.route, RobustRoute::Pivoting);
+        assert_eq!(plan.backend, Backend::Native);
     }
 
     #[test]

@@ -1,0 +1,177 @@
+//! Cheap O(n) admission-time conditioning estimate.
+//!
+//! The fast solve paths (Thomas sweeps, the partition method, the lane
+//! kernels) are only backward-stable on diagonally dominant systems; a
+//! near-singular block produces garbage or a hard
+//! [`crate::error::Error::SingularSystem`]. Before planning a solve the
+//! service runs [`estimate_condition_ref`] once over the borrowed view:
+//! one pass computing the *normalized dominance margin* and the *minimum
+//! scaled pivot*, both in f64 regardless of the system dtype. The
+//! planner folds the resulting [`ConditionClass`] into its route
+//! decision (fast vs the scaled-pivoting core) and into the plan-cache
+//! key, so threshold flips retire stale plans atomically.
+//!
+//! This is deliberately an estimate, not a condition *number*: it is
+//! O(n) with no solve, and errs on the safe side — a system it calls
+//! ill-conditioned merely takes the pivoting route (slower, never
+//! wrong), while the residual check catches anything it misses.
+
+use super::tridiagonal::TriSystemRef;
+use super::{Scalar, TriSystem};
+
+/// What the admission estimate concluded about a system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ConditionClass {
+    /// Diagonally dominant with healthy scaled pivots: every fast path
+    /// is safe.
+    Well,
+    /// Weak or violated dominance, or a tiny scaled pivot: route to the
+    /// scaled-pivoting core.
+    Ill,
+}
+
+impl ConditionClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            ConditionClass::Well => "well",
+            ConditionClass::Ill => "ill",
+        }
+    }
+}
+
+/// The raw O(n) statistics behind a [`ConditionClass`] decision.
+/// Classification against configured thresholds lives in
+/// [`crate::plan::RobustConfig::classify`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConditionEstimate {
+    /// `min_i (|b_i| − |a_i| − |c_i|) / s_i` with `s_i` the row max-abs:
+    /// > 0 means strictly diagonally dominant everywhere, ≤ 0 means at
+    /// least one row violates dominance (−1 is the worst possible).
+    pub dominance_margin: f64,
+    /// `min_i |b_i| / s_i`: how small the unpivoted pivot can get
+    /// relative to its row. 0 means a zero diagonal entry somewhere
+    /// (fatal for the no-pivoting sweeps), and a row of all zeros also
+    /// reports 0 (the system is singular outright).
+    pub min_scaled_pivot: f64,
+    /// True when some row is entirely zero (including its RHS-side
+    /// coefficients): the matrix is structurally singular and no route
+    /// can solve it.
+    pub zero_row: bool,
+}
+
+impl ConditionEstimate {
+    /// The estimate of an empty/degenerate view (used for padding).
+    pub fn perfect() -> ConditionEstimate {
+        ConditionEstimate {
+            dominance_margin: 1.0,
+            min_scaled_pivot: 1.0,
+            zero_row: false,
+        }
+    }
+}
+
+/// One pass over the borrowed view; no allocation.
+pub fn estimate_condition_ref<T: Scalar>(sys: TriSystemRef<'_, T>) -> ConditionEstimate {
+    let n = sys.n();
+    let mut margin = f64::INFINITY;
+    let mut min_pivot = f64::INFINITY;
+    let mut zero_row = false;
+    for i in 0..n {
+        let ai = if i > 0 { sys.a[i].as_f64().abs() } else { 0.0 };
+        let bi = sys.b[i].as_f64().abs();
+        let ci = if i + 1 < n { sys.c[i].as_f64().abs() } else { 0.0 };
+        let s = ai.max(bi).max(ci);
+        if s == 0.0 {
+            zero_row = true;
+            margin = -1.0;
+            min_pivot = 0.0;
+            continue;
+        }
+        margin = margin.min((bi - ai - ci) / s);
+        min_pivot = min_pivot.min(bi / s);
+    }
+    ConditionEstimate {
+        dominance_margin: if margin.is_finite() { margin } else { 1.0 },
+        min_scaled_pivot: if min_pivot.is_finite() { min_pivot } else { 1.0 },
+        zero_row,
+    }
+}
+
+/// Owned-system convenience wrapper.
+pub fn estimate_condition<T: Scalar>(sys: &TriSystem<T>) -> ConditionEstimate {
+    estimate_condition_ref(sys.view())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::generator::{random_dd_system, toeplitz_system};
+    use crate::util::Pcg64;
+
+    #[test]
+    fn dominant_systems_have_positive_margin() {
+        let mut rng = Pcg64::new(1);
+        let sys = random_dd_system::<f64>(&mut rng, 256, 0.5);
+        let est = estimate_condition(&sys);
+        assert!(est.dominance_margin > 0.0, "margin {}", est.dominance_margin);
+        assert!(est.min_scaled_pivot > 0.0);
+        assert!(!est.zero_row);
+        // Toeplitz(4): |b|=4, |a|+|c|=2 interior -> margin (4-2)/4 = 0.5.
+        let est = estimate_condition(&toeplitz_system::<f64>(64, 4.0));
+        assert!((est.dominance_margin - 0.5).abs() < 1e-12);
+        assert_eq!(est.min_scaled_pivot, 1.0);
+    }
+
+    #[test]
+    fn non_dominant_row_flips_margin_negative() {
+        let mut sys = toeplitz_system::<f64>(32, 4.0);
+        sys.b[10] = 0.5; // |a|+|c| = 2 > 0.5
+        let est = estimate_condition(&sys);
+        assert!(est.dominance_margin < 0.0);
+        assert!(est.min_scaled_pivot < 1.0);
+        assert!(!est.zero_row);
+    }
+
+    #[test]
+    fn zero_diagonal_zeroes_the_scaled_pivot() {
+        let mut sys = toeplitz_system::<f64>(16, 4.0);
+        sys.b[7] = 0.0;
+        let est = estimate_condition(&sys);
+        assert_eq!(est.min_scaled_pivot, 0.0);
+        assert!(!est.zero_row, "off-diagonals keep the row nonzero");
+    }
+
+    #[test]
+    fn all_zero_row_is_structurally_singular() {
+        let mut sys = toeplitz_system::<f64>(16, 4.0);
+        sys.a[7] = 0.0;
+        sys.b[7] = 0.0;
+        sys.c[7] = 0.0;
+        let est = estimate_condition(&sys);
+        assert!(est.zero_row);
+        assert_eq!(est.min_scaled_pivot, 0.0);
+        assert_eq!(est.dominance_margin, -1.0);
+    }
+
+    #[test]
+    fn boundary_rows_ignore_out_of_band_entries() {
+        // a[0] and c[n-1] are unused storage; they must not count.
+        let sys = TriSystem::new(
+            vec![99.0, 1.0, 1.0],
+            vec![3.0, 3.0, 3.0],
+            vec![1.0, 1.0, 99.0],
+            vec![1.0, 1.0, 1.0],
+        )
+        .unwrap();
+        let est = estimate_condition(&sys);
+        assert!(est.dominance_margin > 0.0);
+    }
+
+    #[test]
+    fn single_row_system() {
+        let sys = TriSystem::new(vec![0.0], vec![2.0], vec![0.0], vec![4.0]).unwrap();
+        let est = estimate_condition(&sys);
+        assert_eq!(est.dominance_margin, 1.0);
+        assert_eq!(est.min_scaled_pivot, 1.0);
+    }
+}

@@ -14,6 +14,11 @@
 //! * [`soa`] — the SIMD structure-of-arrays kernel engine: interleaved
 //!   lane sweeps over batches of systems (`SoaLanes`) and over the
 //!   partition blocks of one large system (`SimdSingle`).
+//! * [`conditioning`] — cheap O(n) admission-time condition estimate
+//!   (dominance margin + scaled row pivots) feeding the planner's
+//!   fast-vs-pivoting route decision.
+//! * [`pivoting`] — the scaled-partial-pivoting partition variant: the
+//!   robust route for systems the fast no-pivoting sweeps cannot solve.
 //! * [`generator`] — seeded SLAE generators (diagonally dominant, Toeplitz).
 //! * [`residual`] — ‖Ax − d‖ verification helpers.
 //!
@@ -21,8 +26,10 @@
 //! [`crate::exec`]; the `*_with_workspace` entry points solve into
 //! caller-provided output and, once warmed up, never touch the heap.
 
+pub mod conditioning;
 pub mod generator;
 pub mod partition;
+pub mod pivoting;
 pub mod recursive;
 pub mod residual;
 pub mod soa;
@@ -30,10 +37,17 @@ pub mod thomas;
 pub mod tridiagonal;
 pub mod workspace;
 
+pub use conditioning::{
+    estimate_condition, estimate_condition_ref, ConditionClass, ConditionEstimate,
+};
 pub use generator::{random_dd_system, toeplitz_system};
 pub use partition::{
     partition_solve, partition_solve_ref_with_workspace, partition_solve_with_workspace,
     PartitionWorkspace,
+};
+pub use pivoting::{
+    pivoting_solve, pivoting_solve_ref_with_workspace, pivoting_solve_with_workspace, spp_solve,
+    PivotingWorkspace,
 };
 pub use recursive::{
     partition_applies, recursive_solve, recursive_solve_ref_with_workspace,

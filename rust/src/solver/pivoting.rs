@@ -1,0 +1,727 @@
+//! The scaled-partial-pivoting partition solver: the robust fallback
+//! path behind `RobustRoute::Pivoting` (Klein & Strzodka's ICPP '21
+//! formulation, adapted to this crate's partition pipeline).
+//!
+//! The fast partition method (DESIGN.md §4) factors each block with a
+//! plain Thomas sweep, which breaks on any zero/tiny pivot and loses
+//! accuracy the moment diagonal dominance goes away. This variant keeps
+//! the same three-stage structure but eliminates with *scaled partial
+//! pivoting* everywhere:
+//!
+//! * **Stage 1** per block: a downward sweep ([`eliminate_down`]) folds
+//!   rows `1..m` into one equation over `(x_first, x_last, x_next)`,
+//!   choosing at every step between the running equation and the next
+//!   row by scaled pivot magnitude; the chosen pivot equations are
+//!   retained (5 coefficients per step) for Stage 3. A symmetric upward
+//!   sweep ([`eliminate_up`]) folds rows `0..m-1` into an equation over
+//!   `(x_prev, x_first, x_last)`.
+//! * **Stage 2**: the 2P interface equations interleave into a
+//!   tridiagonal *with explicit diagonals* (no unit normalization — the
+//!   diagonal may be weak) solved by a sequential scaled-partial-
+//!   pivoting LU ([`spp_sweep`]) with one fill-in superdiagonal.
+//! * **Stage 3** per block: back-substitution through the retained
+//!   pivot equations — never a fresh interior solve, whose submatrix
+//!   may be singular even when the full system is not.
+//!
+//! Per-block pivoting only ever sees two candidate equations per
+//! column, so a pathological block can still report singular where a
+//! global elimination would succeed; the driver then falls back to the
+//! sequential whole-system SPP sweep, which pivots globally and is the
+//! final authority. Stage 1/3 run block-parallel on the worker pool and
+//! the workspace makes warmed-up solves allocation-free, mirroring
+//! [`super::partition`].
+
+use super::partition::{copy_into_padded, ensure_len};
+use super::tridiagonal::TriSystemRef;
+use super::{Scalar, TriSystem};
+use crate::error::{Error, Result};
+use crate::exec::{ExecCtx, SendPtr};
+
+/// Reusable buffers for the whole pivoting pipeline (the counterpart of
+/// [`super::partition::PartitionWorkspace`]). A workspace that has seen
+/// a given `(n, m)` shape solves it again without touching the heap.
+#[derive(Debug)]
+pub struct PivotingWorkspace<T> {
+    /// Retained pivot equations, `5 * (m - 2)` per block.
+    retained: Vec<T>,
+    /// The assembled 2P interface system (explicit diagonals).
+    coarse: TriSystem<T>,
+    /// SPP fill-in superdiagonal for the coarse solve.
+    coarse_e: Vec<T>,
+    /// SPP row scales for the coarse solve.
+    coarse_s: Vec<T>,
+    /// Coarse solution `[x_{0,f}, x_{0,l}, x_{1,f}, …]`.
+    coarse_x: Vec<T>,
+    /// Pad buffer for `n % m != 0` (identity rows are exact).
+    padded: TriSystem<T>,
+    padded_x: Vec<T>,
+    /// Whole-system sequential fallback scratch (mutable row copies).
+    seq_b: Vec<T>,
+    seq_c: Vec<T>,
+    seq_d: Vec<T>,
+    seq_e: Vec<T>,
+    seq_s: Vec<T>,
+}
+
+fn empty_system<T>() -> TriSystem<T> {
+    TriSystem {
+        a: Vec::new(),
+        b: Vec::new(),
+        c: Vec::new(),
+        d: Vec::new(),
+    }
+}
+
+impl<T: Scalar> Default for PivotingWorkspace<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Scalar> PivotingWorkspace<T> {
+    pub fn new() -> Self {
+        PivotingWorkspace {
+            retained: Vec::new(),
+            coarse: empty_system(),
+            coarse_e: Vec::new(),
+            coarse_s: Vec::new(),
+            coarse_x: Vec::new(),
+            padded: empty_system(),
+            padded_x: Vec::new(),
+            seq_b: Vec::new(),
+            seq_c: Vec::new(),
+            seq_d: Vec::new(),
+            seq_e: Vec::new(),
+            seq_s: Vec::new(),
+        }
+    }
+}
+
+#[inline]
+fn max3<T: Scalar>(a: T, b: T, c: T) -> T {
+    let ab = if a > b { a } else { b };
+    if ab > c { ab } else { c }
+}
+
+#[inline]
+fn tiny<T: Scalar>() -> T {
+    T::of_f64(f64::MIN_POSITIVE.sqrt())
+}
+
+/// Sequential scaled-partial-pivoting LU sweep over a full tridiagonal
+/// system. `a` is the *original* sub-diagonal (read-only; `a[0]`
+/// ignored); `b`, `c`, `d` arrive holding the system rows and are
+/// consumed in place; `e` (fill-in second superdiagonal) and `s` (row
+/// scales) are overwritten scratch. Solves into `x`.
+pub(crate) fn spp_sweep<T: Scalar>(
+    a: &[T],
+    b: &mut [T],
+    c: &mut [T],
+    e: &mut [T],
+    s: &mut [T],
+    d: &mut [T],
+    x: &mut [T],
+) -> Result<()> {
+    let n = b.len();
+    let tiny = tiny::<T>();
+    // Row scales from the unmodified rows; a row of all zeros is
+    // singular outright.
+    for i in 0..n {
+        let ai = if i > 0 { a[i].abs() } else { T::zero() };
+        let ci = if i + 1 < n { c[i].abs() } else { T::zero() };
+        let sc = max3(ai, b[i].abs(), ci);
+        if sc <= tiny {
+            return Err(Error::SingularSystem {
+                row: i,
+                magnitude: sc.as_f64(),
+            });
+        }
+        s[i] = sc;
+        e[i] = T::zero();
+    }
+    for i in 0..n.saturating_sub(1) {
+        let an = a[i + 1];
+        // Scaled compare |b_i|/s_i >= |a_{i+1}|/s_{i+1}, division-free.
+        if b[i].abs() * s[i + 1] >= an.abs() * s[i] {
+            let piv = b[i];
+            if piv.abs() <= tiny {
+                return Err(Error::SingularSystem {
+                    row: i,
+                    magnitude: piv.as_f64().abs(),
+                });
+            }
+            let f = an / piv;
+            b[i + 1] = b[i + 1] - f * c[i];
+            c[i + 1] = c[i + 1] - f * e[i];
+            d[i + 1] = d[i + 1] - f * d[i];
+        } else {
+            // Interchange rows i and i+1 (an won the scaled compare, so
+            // it is nonzero), then eliminate; the old row i picks up the
+            // next row's fill-in positions.
+            let f = b[i] / an;
+            let (bn, cn, dn) = (b[i + 1], c[i + 1], d[i + 1]);
+            b[i + 1] = c[i] - f * bn;
+            c[i + 1] = e[i] - f * cn;
+            d[i + 1] = d[i] - f * dn;
+            b[i] = an;
+            c[i] = bn;
+            e[i] = cn;
+            d[i] = dn;
+            s[i + 1] = s[i];
+        }
+    }
+    if b[n - 1].abs() <= tiny {
+        return Err(Error::SingularSystem {
+            row: n - 1,
+            magnitude: b[n - 1].as_f64().abs(),
+        });
+    }
+    x[n - 1] = d[n - 1] / b[n - 1];
+    if n >= 2 {
+        x[n - 2] = (d[n - 2] - c[n - 2] * x[n - 1]) / b[n - 2];
+    }
+    for i in (0..n.saturating_sub(2)).rev() {
+        x[i] = (d[i] - c[i] * x[i + 1] - e[i] * x[i + 2]) / b[i];
+    }
+    Ok(())
+}
+
+/// Downward block sweep with scaled partial pivoting. Folds rows
+/// `1..m` into one equation over `(x_0, x_{m-1}, x_m)` (returned as
+/// `[coef x_0, coef x_{m-1}, coef x_m, rhs]`), storing the pivot
+/// equation of every elimination step into `retained` (`5 * (m - 2)`
+/// values: coefficients on `(x_0, x_{j-1}, x_j, x_{j+1})` plus RHS) for
+/// the Stage-3 back-substitution.
+fn eliminate_down<T: Scalar>(
+    a: &[T],
+    b: &[T],
+    c: &[T],
+    d: &[T],
+    retained: &mut [T],
+) -> Result<[T; 4]> {
+    let m = b.len();
+    debug_assert!(m >= 3);
+    debug_assert_eq!(retained.len(), 5 * (m - 2));
+    let tiny = tiny::<T>();
+    // Running equation E over (x_0, x_{j-1}, x_j), seeded from row 1.
+    let (mut e0, mut e1, mut e2, mut er) = (a[1], b[1], c[1], d[1]);
+    for j in 2..m {
+        // Row j couples (x_{j-1}, x_j, x_{j+1}); c[m-1] couples the
+        // next block's first unknown (zero for the last block).
+        let (r1, r2, r3, rr) = (a[j], b[j], c[j], d[j]);
+        let se = max3(e0.abs(), e1.abs(), e2.abs());
+        let sr = max3(r1.abs(), r2.abs(), r3.abs());
+        // Pivot on the x_{j-1} coefficient: |e1|/se >= |r1|/sr.
+        let e_wins = e1.abs() * sr >= r1.abs() * se;
+        // Both written over (x_0, x_{j-1}, x_j, x_{j+1}).
+        let (p0, p1, p2, p3, pr, o0, o1, o2, o3, orr) = if e_wins {
+            (e0, e1, e2, T::zero(), er, T::zero(), r1, r2, r3, rr)
+        } else {
+            (T::zero(), r1, r2, r3, rr, e0, e1, e2, T::zero(), er)
+        };
+        if p1.abs() <= tiny {
+            return Err(Error::SingularSystem {
+                row: j - 1,
+                magnitude: p1.as_f64().abs(),
+            });
+        }
+        let slot = &mut retained[5 * (j - 2)..5 * (j - 1)];
+        slot[0] = p0;
+        slot[1] = p1;
+        slot[2] = p2;
+        slot[3] = p3;
+        slot[4] = pr;
+        let f = o1 / p1;
+        e0 = o0 - f * p0;
+        e1 = o2 - f * p2;
+        e2 = o3 - f * p3;
+        er = orr - f * pr;
+        // Rescale to unit max-coefficient so long blocks cannot over-
+        // or underflow the running equation.
+        let sc = max3(e0.abs(), e1.abs(), e2.abs());
+        if sc <= tiny {
+            return Err(Error::SingularSystem {
+                row: j,
+                magnitude: sc.as_f64(),
+            });
+        }
+        let inv = T::one() / sc;
+        e0 = e0 * inv;
+        e1 = e1 * inv;
+        e2 = e2 * inv;
+        er = er * inv;
+    }
+    Ok([e0, e1, e2, er])
+}
+
+/// Upward block sweep: folds rows `m-2..=0` into one equation over
+/// `(x_{-1}, x_0, x_{m-1})` (returned as `[coef x_prev, coef x_0,
+/// coef x_{m-1}, rhs]`), pivoting each step on the scaled coefficient
+/// of the unknown being eliminated. No retention — interiors are
+/// recovered from the downward sweep's equations.
+fn eliminate_up<T: Scalar>(a: &[T], b: &[T], c: &[T], d: &[T]) -> Result<[T; 4]> {
+    let m = b.len();
+    debug_assert!(m >= 3);
+    let tiny = tiny::<T>();
+    // Running equation E over (x_{j-1}, x_j, x_{m-1}), seeded from row
+    // m-2; a[0] couples the previous block's last unknown at the end.
+    let (mut g0, mut g1, mut g2, mut gr) = (a[m - 2], b[m - 2], c[m - 2], d[m - 2]);
+    for j in (1..m - 1).rev() {
+        // Row j-1 couples (x_{j-2}, x_{j-1}, x_j); eliminate x_j
+        // between it (coefficient c[j-1]) and E (coefficient g1).
+        let (r1, r2, r3, rr) = (a[j - 1], b[j - 1], c[j - 1], d[j - 1]);
+        let se = max3(g0.abs(), g1.abs(), g2.abs());
+        let sr = max3(r1.abs(), r2.abs(), r3.abs());
+        let e_wins = g1.abs() * sr >= r3.abs() * se;
+        // Both written over (x_{j-2}, x_{j-1}, x_j, x_{m-1}).
+        let (p0, p1, p2, p3, pr, o0, o1, o2, o3, orr) = if e_wins {
+            (T::zero(), g0, g1, g2, gr, r1, r2, r3, T::zero(), rr)
+        } else {
+            (r1, r2, r3, T::zero(), rr, T::zero(), g0, g1, g2, gr)
+        };
+        if p2.abs() <= tiny {
+            return Err(Error::SingularSystem {
+                row: j,
+                magnitude: p2.as_f64().abs(),
+            });
+        }
+        let f = o2 / p2;
+        g0 = o0 - f * p0;
+        g1 = o1 - f * p1;
+        g2 = o3 - f * p3;
+        gr = orr - f * pr;
+        let sc = max3(g0.abs(), g1.abs(), g2.abs());
+        if sc <= tiny {
+            return Err(Error::SingularSystem {
+                row: j - 1,
+                magnitude: sc.as_f64(),
+            });
+        }
+        let inv = T::one() / sc;
+        g0 = g0 * inv;
+        g1 = g1 * inv;
+        g2 = g2 * inv;
+        gr = gr * inv;
+    }
+    Ok([g0, g1, g2, gr])
+}
+
+/// Stage-3 back-substitution for one block through its retained pivot
+/// equations. Every division is by a pivot the elimination already
+/// verified nonzero.
+fn back_substitute<T: Scalar>(retained: &[T], xf: T, xl: T, x_next: T, x: &mut [T]) {
+    let m = x.len();
+    x[0] = xf;
+    x[m - 1] = xl;
+    let (mut xj, mut xj1) = (xl, x_next);
+    for j in (2..m).rev() {
+        let q = &retained[5 * (j - 2)..5 * (j - 1)];
+        let v = (q[4] - q[0] * xf - q[2] * xj - q[3] * xj1) / q[1];
+        x[j - 1] = v;
+        xj1 = xj;
+        xj = v;
+    }
+}
+
+/// The block-parallel pipeline; errors with `SingularSystem` when the
+/// restricted per-block pivoting (or the reduced interface system)
+/// gives up — the caller then retries sequentially.
+fn pivoting_partitioned<T: Scalar>(
+    sys: TriSystemRef<'_, T>,
+    m: usize,
+    exec: &ExecCtx,
+    ws: &mut PivotingWorkspace<T>,
+    x: &mut [T],
+) -> Result<()> {
+    let n = sys.n();
+    let np = n.div_ceil(m) * m;
+    if np != n {
+        copy_into_padded(sys, np, &mut ws.padded);
+    }
+    let work: TriSystemRef<'_, T> = if np == n { sys } else { ws.padded.view() };
+    let p = np / m;
+    let stride = 5 * (m - 2);
+
+    // Stage 1: per-block downward + upward sweeps, writing the retained
+    // equations and the block's two interface rows.
+    ensure_len(&mut ws.retained, stride * p, T::zero());
+    let n2 = 2 * p;
+    ensure_len(&mut ws.coarse.a, n2, T::zero());
+    ensure_len(&mut ws.coarse.b, n2, T::zero());
+    ensure_len(&mut ws.coarse.c, n2, T::zero());
+    ensure_len(&mut ws.coarse.d, n2, T::zero());
+    let ra = SendPtr(ws.retained.as_mut_ptr());
+    let ca = SendPtr(ws.coarse.a.as_mut_ptr());
+    let cb = SendPtr(ws.coarse.b.as_mut_ptr());
+    let cc = SendPtr(ws.coarse.c.as_mut_ptr());
+    let cd = SendPtr(ws.coarse.d.as_mut_ptr());
+    exec.run(p, |_arena, k| {
+        let s = k * m;
+        let (a, b, c, d) = (
+            &work.a[s..s + m],
+            &work.b[s..s + m],
+            &work.c[s..s + m],
+            &work.d[s..s + m],
+        );
+        // SAFETY: block k exclusively owns retained[k*stride ..] and
+        // coarse rows 2k, 2k+1 (disjoint per chunk; the submitter
+        // blocks until all chunks complete).
+        let ret = unsafe { std::slice::from_raw_parts_mut(ra.0.add(k * stride), stride) };
+        let down = eliminate_down(a, b, c, d, ret)?;
+        let up = eliminate_up(a, b, c, d)?;
+        unsafe {
+            // Row 2k (UP_k) couples (x_{k-1,l}, x_{k,f}, x_{k,l});
+            // row 2k+1 (DOWN_k) couples (x_{k,f}, x_{k,l}, x_{k+1,f}).
+            *ca.0.add(2 * k) = up[0];
+            *cb.0.add(2 * k) = up[1];
+            *cc.0.add(2 * k) = up[2];
+            *cd.0.add(2 * k) = up[3];
+            *ca.0.add(2 * k + 1) = down[0];
+            *cb.0.add(2 * k + 1) = down[1];
+            *cc.0.add(2 * k + 1) = down[2];
+            *cd.0.add(2 * k + 1) = down[3];
+        }
+        Ok(())
+    })?;
+
+    // Stage 2: the interface system keeps explicit (possibly weak)
+    // diagonals, so it gets the pivoting sweep too.
+    ensure_len(&mut ws.coarse_e, n2, T::zero());
+    ensure_len(&mut ws.coarse_s, n2, T::zero());
+    ensure_len(&mut ws.coarse_x, n2, T::zero());
+    spp_sweep(
+        &ws.coarse.a,
+        &mut ws.coarse.b,
+        &mut ws.coarse.c,
+        &mut ws.coarse_e,
+        &mut ws.coarse_s,
+        &mut ws.coarse.d,
+        &mut ws.coarse_x,
+    )?;
+
+    // Stage 3: block-parallel back-substitution through the retained
+    // pivot equations.
+    if np == n {
+        stage3_all(p, m, &ws.retained, &ws.coarse_x, exec, x)?;
+    } else {
+        ensure_len(&mut ws.padded_x, np, T::zero());
+        stage3_all(p, m, &ws.retained, &ws.coarse_x, exec, &mut ws.padded_x[..])?;
+        x.copy_from_slice(&ws.padded_x[..n]);
+    }
+    Ok(())
+}
+
+/// Stage 3 over every block of `x` (length `p * m`).
+fn stage3_all<T: Scalar>(
+    p: usize,
+    m: usize,
+    retained: &[T],
+    coarse_x: &[T],
+    exec: &ExecCtx,
+    x: &mut [T],
+) -> Result<()> {
+    let stride = 5 * (m - 2);
+    let x_ptr = SendPtr(x.as_mut_ptr());
+    exec.run(p, |_arena, k| {
+        let s = k * m;
+        // SAFETY: block k exclusively owns x[s..s+m] (disjoint per
+        // chunk; the submitter blocks until all chunks complete).
+        let xb = unsafe { std::slice::from_raw_parts_mut(x_ptr.0.add(s), m) };
+        let x_next = if k + 1 < p {
+            coarse_x[2 * k + 2]
+        } else {
+            T::zero()
+        };
+        back_substitute(
+            &retained[k * stride..(k + 1) * stride],
+            coarse_x[2 * k],
+            coarse_x[2 * k + 1],
+            x_next,
+            xb,
+        );
+        Ok(())
+    })
+}
+
+/// Whole-system sequential SPP solve into `x`, reusing the workspace's
+/// scratch rows (the original sub-diagonal is borrowed, not copied).
+fn spp_solve_seq<T: Scalar>(
+    sys: TriSystemRef<'_, T>,
+    ws: &mut PivotingWorkspace<T>,
+    x: &mut [T],
+) -> Result<()> {
+    let n = sys.n();
+    ws.seq_b.clear();
+    ws.seq_b.extend_from_slice(sys.b);
+    ws.seq_c.clear();
+    ws.seq_c.extend_from_slice(sys.c);
+    ws.seq_d.clear();
+    ws.seq_d.extend_from_slice(sys.d);
+    ensure_len(&mut ws.seq_e, n, T::zero());
+    ensure_len(&mut ws.seq_s, n, T::zero());
+    spp_sweep(
+        sys.a,
+        &mut ws.seq_b,
+        &mut ws.seq_c,
+        &mut ws.seq_e,
+        &mut ws.seq_s,
+        &mut ws.seq_d,
+        x,
+    )
+}
+
+/// Full robust solve over a borrowed view into caller-provided `x` —
+/// the zero-copy core behind the pivoting route. Pads `n` up to a
+/// multiple of `m` with identity rows, runs the block-parallel pipeline
+/// on the pool, and falls back to the sequential whole-system sweep
+/// when the restricted per-block pivoting reports singular; an error
+/// from the fallback means the system genuinely is.
+pub fn pivoting_solve_ref_with_workspace<T: Scalar>(
+    sys: TriSystemRef<'_, T>,
+    m: usize,
+    exec: &ExecCtx,
+    ws: &mut PivotingWorkspace<T>,
+    x: &mut [T],
+) -> Result<()> {
+    let n = sys.n();
+    if m < 3 {
+        return Err(Error::Solver(format!("sub-system size m={m} must be >= 3")));
+    }
+    if x.len() != n {
+        return Err(Error::Shape(format!("x len {} != n {}", x.len(), n)));
+    }
+    if n <= m {
+        // A single block reduces to the sequential sweep anyway.
+        return spp_solve_seq(sys, ws, x);
+    }
+    match pivoting_partitioned(sys, m, exec, ws, x) {
+        Err(Error::SingularSystem { .. }) => spp_solve_seq(sys, ws, x),
+        other => other,
+    }
+}
+
+/// As [`pivoting_solve_ref_with_workspace`] over an owned system.
+pub fn pivoting_solve_with_workspace<T: Scalar>(
+    sys: &TriSystem<T>,
+    m: usize,
+    exec: &ExecCtx,
+    ws: &mut PivotingWorkspace<T>,
+    x: &mut [T],
+) -> Result<()> {
+    pivoting_solve_ref_with_workspace(sys.view(), m, exec, ws, x)
+}
+
+/// Convenience entry allocating its own workspace and output; runs on
+/// the process-wide pool with at most `threads` workers.
+pub fn pivoting_solve<T: Scalar>(sys: &TriSystem<T>, m: usize, threads: usize) -> Result<Vec<T>> {
+    let mut ws = PivotingWorkspace::new();
+    let mut x = vec![T::zero(); sys.n()];
+    pivoting_solve_ref_with_workspace(sys.view(), m, &ExecCtx::global(threads), &mut ws, &mut x)?;
+    Ok(x)
+}
+
+/// The sequential whole-system scaled-partial-pivoting solve — the
+/// correctness oracle for the partitioned path and the small-system
+/// route.
+pub fn spp_solve<T: Scalar>(sys: &TriSystem<T>) -> Result<Vec<T>> {
+    let mut ws = PivotingWorkspace::new();
+    let mut x = vec![T::zero(); sys.n()];
+    spp_solve_seq(sys.view(), &mut ws, &mut x)?;
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::generator::{manufactured_solution, random_dd_system, toeplitz_system};
+    use crate::solver::residual::{max_abs_diff, relative_residual};
+    use crate::solver::thomas_solve;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn matches_thomas_on_dominant_systems() {
+        let mut rng = Pcg64::new(1);
+        for (n, m) in [(12, 4), (64, 8), (100, 5), (1000, 20), (4096, 32)] {
+            let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let want = thomas_solve(&sys).unwrap();
+            let got = pivoting_solve(&sys, m, 4).unwrap();
+            assert!(
+                max_abs_diff(&got, &want) < 1e-9,
+                "n={n} m={m} diff={}",
+                max_abs_diff(&got, &want)
+            );
+        }
+    }
+
+    #[test]
+    fn sequential_oracle_matches_thomas() {
+        let mut rng = Pcg64::new(2);
+        let sys = random_dd_system::<f64>(&mut rng, 500, 0.5);
+        let want = thomas_solve(&sys).unwrap();
+        let got = spp_solve(&sys).unwrap();
+        assert!(max_abs_diff(&got, &want) < 1e-10);
+    }
+
+    #[test]
+    fn handles_n_not_multiple_of_m() {
+        let mut rng = Pcg64::new(3);
+        for (n, m) in [(13, 4), (99, 8), (4500, 8), (7, 5)] {
+            let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let want = thomas_solve(&sys).unwrap();
+            let got = pivoting_solve(&sys, m, 2).unwrap();
+            assert!(max_abs_diff(&got, &want) < 1e-9, "n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn zero_diagonal_pivots_are_solved() {
+        // b = 0 everywhere, unit off-diagonals, even n: nonsingular, but
+        // any no-pivoting sweep dies on the first row.
+        let n = 64;
+        let mut sys = TriSystem::<f64> {
+            a: vec![1.0; n],
+            b: vec![0.0; n],
+            c: vec![1.0; n],
+            d: (0..n).map(|i| (i as f64).sin()).collect(),
+        };
+        sys.a[0] = 0.0;
+        sys.c[n - 1] = 0.0;
+        assert!(thomas_solve(&sys).is_err(), "fast path must reject this");
+        for m in [4usize, 8, 16] {
+            let x = pivoting_solve(&sys, m, 4).unwrap();
+            assert!(
+                relative_residual(&sys, &x) < 1e-12,
+                "m={m} residual {}",
+                relative_residual(&sys, &x)
+            );
+        }
+    }
+
+    #[test]
+    fn interior_zero_and_tiny_pivots_are_solved() {
+        let mut sys = toeplitz_system::<f64>(256, 4.0);
+        sys.b[97] = 0.0;
+        sys.b[130] = 1e-40;
+        let x = pivoting_solve(&sys, 16, 4).unwrap();
+        assert!(relative_residual(&sys, &x) < 1e-12);
+    }
+
+    #[test]
+    fn non_dominant_graded_rows() {
+        // Rows whose off-diagonals dwarf the diagonal by growing factors.
+        let n = 300;
+        let mut rng = Pcg64::new(7);
+        let mut sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+        for i in (5..n - 5).step_by(7) {
+            let g = 10f64.powi((i % 6) as i32);
+            sys.a[i] *= g;
+            sys.c[i] *= g;
+        }
+        let x = pivoting_solve(&sys, 10, 4).unwrap();
+        assert!(
+            relative_residual(&sys, &x) < 1e-10,
+            "residual {}",
+            relative_residual(&sys, &x)
+        );
+    }
+
+    #[test]
+    fn truly_singular_system_errors() {
+        // An all-zero row cannot be saved by any pivoting.
+        let mut sys = toeplitz_system::<f64>(64, 4.0);
+        sys.a[10] = 0.0;
+        sys.b[10] = 0.0;
+        sys.c[10] = 0.0;
+        assert!(matches!(
+            pivoting_solve(&sys, 8, 2),
+            Err(Error::SingularSystem { .. })
+        ));
+        assert!(matches!(spp_solve(&sys), Err(Error::SingularSystem { .. })));
+    }
+
+    #[test]
+    fn manufactured_forward_error() {
+        let mut rng = Pcg64::new(8);
+        let (sys, x_star) = manufactured_solution::<f64>(&mut rng, 300);
+        let x = pivoting_solve(&sys, 10, 4).unwrap();
+        assert!(max_abs_diff(&x, &x_star) < 1e-9);
+    }
+
+    #[test]
+    fn f32_systems_solve() {
+        let sys = toeplitz_system::<f32>(1024, 4.0);
+        let x = pivoting_solve(&sys, 32, 4).unwrap();
+        assert!(relative_residual(&sys, &x) < 1e-4);
+    }
+
+    #[test]
+    fn thread_count_invariance() {
+        let mut rng = Pcg64::new(9);
+        let mut sys = random_dd_system::<f64>(&mut rng, 512, 0.5);
+        sys.b[100] = 1e-9; // force genuine pivoting decisions
+        let x1 = pivoting_solve(&sys, 16, 1).unwrap();
+        for threads in [2, 3, 8] {
+            let xt = pivoting_solve(&sys, 16, threads).unwrap();
+            assert_eq!(x1, xt, "threads={threads} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh() {
+        let mut rng = Pcg64::new(10);
+        let exec = ExecCtx::global(2);
+        let mut ws = PivotingWorkspace::new();
+        for (n, m) in [(256usize, 8usize), (100, 5), (515, 16), (64, 4)] {
+            let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+            let mut x = vec![0.0f64; n];
+            pivoting_solve_with_workspace(&sys, m, &exec, &mut ws, &mut x).unwrap();
+            let mut fresh = PivotingWorkspace::new();
+            let mut x_fresh = vec![0.0f64; n];
+            pivoting_solve_with_workspace(&sys, m, &exec, &mut fresh, &mut x_fresh).unwrap();
+            assert_eq!(x, x_fresh, "reused workspace diverged at n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_m_and_shape() {
+        let mut rng = Pcg64::new(11);
+        let sys = random_dd_system::<f64>(&mut rng, 16, 0.5);
+        assert!(pivoting_solve(&sys, 2, 1).is_err());
+        let exec = ExecCtx::global(1);
+        let mut ws = PivotingWorkspace::new();
+        let mut x = vec![0.0; 15];
+        assert!(pivoting_solve_with_workspace(&sys, 4, &exec, &mut ws, &mut x).is_err());
+    }
+
+    #[test]
+    fn random_ill_conditioned_sweep() {
+        // Random systems with broken dominance and occasional tiny
+        // pivots: the pivoting path must stay at solver-accuracy
+        // residuals everywhere.
+        let mut rng = Pcg64::new(12);
+        for trial in 0..20 {
+            let n = 50 + (trial * 37) % 400;
+            let mut sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+            for i in 0..n {
+                if rng.uniform() < 0.3 {
+                    sys.b[i] *= rng.range(1e-8, 1e-2);
+                }
+                if rng.uniform() < 0.1 {
+                    sys.b[i] = 0.0;
+                }
+            }
+            match pivoting_solve(&sys, 8, 4) {
+                Ok(x) => {
+                    let r = relative_residual(&sys, &x);
+                    assert!(r < 1e-8, "trial {trial} n={n} residual {r}");
+                }
+                Err(Error::SingularSystem { .. }) => {
+                    // Legitimately (near-)singular draw; the sequential
+                    // oracle must agree.
+                    assert!(spp_solve(&sys).is_err(), "trial {trial}: oracle disagrees");
+                }
+                Err(e) => panic!("trial {trial}: unexpected error {e}"),
+            }
+        }
+    }
+}

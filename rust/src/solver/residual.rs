@@ -29,13 +29,29 @@ pub fn max_abs_residual_ref<T: Scalar>(sys: TriSystemRef<'_, T>, x: &[T]) -> f64
 
 /// Relative residual `‖Ax − d‖∞ / max(‖d‖∞, ε)`.
 pub fn relative_residual<T: Scalar>(sys: &TriSystem<T>, x: &[T]) -> f64 {
-    let denom = sys
-        .d
-        .iter()
-        .map(|v| v.as_f64().abs())
-        .fold(0.0, f64::max)
-        .max(1e-30);
-    max_abs_residual(sys, x) / denom
+    relative_residual_ref(sys.view(), x)
+}
+
+/// As [`relative_residual`] over a borrowed view: numerator and
+/// denominator in one row-by-row pass, no allocation — the form the
+/// serving path's post-solve check uses.
+pub fn relative_residual_ref<T: Scalar>(sys: TriSystemRef<'_, T>, x: &[T]) -> f64 {
+    let n = sys.n();
+    assert_eq!(x.len(), n);
+    let mut worst = 0.0f64;
+    let mut dmax = 0.0f64;
+    for i in 0..n {
+        let mut v = sys.b[i] * x[i];
+        if i > 0 {
+            v = v + sys.a[i] * x[i - 1];
+        }
+        if i + 1 < n {
+            v = v + sys.c[i] * x[i + 1];
+        }
+        worst = worst.max((v - sys.d[i]).as_f64().abs());
+        dmax = dmax.max(sys.d[i].as_f64().abs());
+    }
+    worst / dmax.max(1e-30)
 }
 
 /// Max |x - y| between two solution vectors.

@@ -10,13 +10,16 @@
 //! through an [`crate::exec::WorkspacePool`].
 
 use super::partition::PartitionWorkspace;
+use super::pivoting::PivotingWorkspace;
 use super::Scalar;
 
 /// Per-level buffer stack for [`crate::solver::recursive_solve`] (level
-/// 0 doubles as the workspace for plain partition solves).
+/// 0 doubles as the workspace for plain partition solves), plus the
+/// scaled-pivoting buffers for the robust route.
 #[derive(Debug)]
 pub struct SolveWorkspace<T> {
     pub(crate) levels: Vec<PartitionWorkspace<T>>,
+    pub(crate) pivot: PivotingWorkspace<T>,
 }
 
 impl<T: Scalar> Default for SolveWorkspace<T> {
@@ -27,7 +30,10 @@ impl<T: Scalar> Default for SolveWorkspace<T> {
 
 impl<T: Scalar> SolveWorkspace<T> {
     pub fn new() -> SolveWorkspace<T> {
-        SolveWorkspace { levels: Vec::new() }
+        SolveWorkspace {
+            levels: Vec::new(),
+            pivot: PivotingWorkspace::new(),
+        }
     }
 
     /// The workspace for recursion level `level`, growing the stack on
@@ -37,6 +43,11 @@ impl<T: Scalar> SolveWorkspace<T> {
             self.levels.resize_with(level + 1, PartitionWorkspace::new);
         }
         &mut self.levels[level]
+    }
+
+    /// The scaled-pivoting workspace (the robust route's buffers).
+    pub(crate) fn pivot(&mut self) -> &mut PivotingWorkspace<T> {
+        &mut self.pivot
     }
 
     /// Deepest level this workspace has buffers for (diagnostics).

@@ -118,12 +118,16 @@ pub struct TelemetrySample {
     /// full, so mixing the two biases per-m means toward whichever m
     /// the batcher favors.
     pub batch: usize,
+    /// The solve ran on the scaled-pivoting robust route (or was a
+    /// robust re-solve). Pivoting latencies say nothing about the fast
+    /// kernels' optimum m, so the trainer never fits on them.
+    pub robust: bool,
 }
 
 /// Tag layout: dtype bit 0, backend bits 1..=2, kernel-variant kind
 /// bits 3..=4 (0 scalar, 1 SoA lanes, 2 simd-single), lane-width log2
-/// bits 5..=7, batch size from bit 8 up.
-fn pack(dtype: Dtype, backend: Backend, variant: KernelVariant, batch: usize) -> u64 {
+/// bits 5..=7, robust bit 8, batch size from bit 9 up.
+fn pack(dtype: Dtype, backend: Backend, variant: KernelVariant, batch: usize, robust: bool) -> u64 {
     let d = match dtype {
         Dtype::F64 => 0u64,
         Dtype::F32 => 1,
@@ -140,10 +144,10 @@ fn pack(dtype: Dtype, backend: Backend, variant: KernelVariant, batch: usize) ->
         }
         KernelVariant::SimdSingle => (2, 0),
     };
-    d | (b << 1) | (v << 3) | (w << 5) | ((batch.max(1) as u64) << 8)
+    d | (b << 1) | (v << 3) | (w << 5) | ((robust as u64) << 8) | ((batch.max(1) as u64) << 9)
 }
 
-fn unpack(tag: u64) -> (Dtype, Backend, KernelVariant, usize) {
+fn unpack(tag: u64) -> (Dtype, Backend, KernelVariant, usize, bool) {
     let dtype = if tag & 1 == 0 { Dtype::F64 } else { Dtype::F32 };
     let backend = match (tag >> 1) & 3 {
         0 => Backend::Pjrt,
@@ -155,7 +159,8 @@ fn unpack(tag: u64) -> (Dtype, Backend, KernelVariant, usize) {
         1 => KernelVariant::SoaLanes(1usize << ((tag >> 5) & 7)),
         _ => KernelVariant::SimdSingle,
     };
-    (dtype, backend, variant, (tag >> 8).max(1) as usize)
+    let robust = tag & (1 << 8) != 0;
+    (dtype, backend, variant, (tag >> 9).max(1) as usize, robust)
 }
 
 /// One ring slot: a per-slot seqlock. `seq` is `2*ticket + 1` while the
@@ -220,8 +225,10 @@ impl TelemetryStore {
         fence(Ordering::Release);
         slot.n.store(s.n as u64, Ordering::Relaxed);
         slot.m.store(s.m as u64, Ordering::Relaxed);
-        slot.tag
-            .store(pack(s.dtype, s.backend, s.variant, s.batch), Ordering::Relaxed);
+        slot.tag.store(
+            pack(s.dtype, s.backend, s.variant, s.batch, s.robust),
+            Ordering::Relaxed,
+        );
         slot.latency.store(s.latency_ns, Ordering::Relaxed);
         slot.seq.store(2 * ticket + 2, Ordering::Release);
     }
@@ -265,7 +272,7 @@ impl TelemetryStore {
                 self.dropped.fetch_add(1, Ordering::Relaxed);
                 continue;
             }
-            let (dtype, backend, variant, batch) = unpack(tag);
+            let (dtype, backend, variant, batch, robust) = unpack(tag);
             out.push(TelemetrySample {
                 n,
                 m,
@@ -274,6 +281,7 @@ impl TelemetryStore {
                 variant,
                 latency_ns,
                 batch,
+                robust,
             });
         }
         self.tail.store(head, Ordering::Release);
@@ -583,8 +591,10 @@ impl OnlineTuner {
 
     /// Record one executed solve (never blocks or allocates). `kernel`
     /// is the variant that ran it; `batch` is the execution batch size
-    /// the solve rode in (1 = singleton). The trainer only compares
-    /// samples within one (batch, kernel-variant) class.
+    /// the solve rode in (1 = singleton); `robust` marks pivoting-route
+    /// solves and robust re-solves, which the trainer never fits on.
+    /// The trainer only compares samples within one
+    /// (batch, kernel-variant) class.
     #[allow(clippy::too_many_arguments)]
     pub fn record_solve(
         &self,
@@ -595,6 +605,7 @@ impl OnlineTuner {
         kernel: KernelVariant,
         latency_ns: u64,
         batch: usize,
+        robust: bool,
     ) {
         self.store.record(TelemetrySample {
             n,
@@ -604,6 +615,7 @@ impl OnlineTuner {
             variant: kernel,
             latency_ns,
             batch,
+            robust,
         });
     }
 
@@ -662,7 +674,7 @@ impl OnlineTuner {
         scratch.clear();
         self.store.drain_into(scratch);
         for s in scratch.iter() {
-            if s.backend == Backend::Thomas {
+            if s.backend == Backend::Thomas || s.robust {
                 continue;
             }
             let bins = &mut agg[dtype_index(s.dtype)];
@@ -743,6 +755,7 @@ mod tests {
             variant: KernelVariant::Scalar,
             latency_ns,
             batch: 1,
+            robust: false,
         }
     }
 
@@ -816,17 +829,19 @@ mod tests {
             for backend in [Backend::Pjrt, Backend::Native, Backend::Thomas] {
                 for variant in variants {
                     for batch in [1usize, 2, 16, 4096] {
-                        assert_eq!(
-                            unpack(pack(dtype, backend, variant, batch)),
-                            (dtype, backend, variant, batch)
-                        );
+                        for robust in [false, true] {
+                            assert_eq!(
+                                unpack(pack(dtype, backend, variant, batch, robust)),
+                                (dtype, backend, variant, batch, robust)
+                            );
+                        }
                     }
                 }
             }
         }
         // A zero batch (defensive) normalizes to the singleton class.
         assert_eq!(
-            unpack(pack(Dtype::F64, Backend::Native, KernelVariant::Scalar, 0)).3,
+            unpack(pack(Dtype::F64, Backend::Native, KernelVariant::Scalar, 0, false)).3,
             1
         );
     }
@@ -862,6 +877,7 @@ mod tests {
                 KernelVariant::Scalar,
                 900_000,
                 1,
+                false,
             );
             tuner.record_solve(
                 30_000,
@@ -871,6 +887,7 @@ mod tests {
                 KernelVariant::Scalar,
                 400_000,
                 1,
+                false,
             );
         }
         assert!(tuner.retrain_now());
@@ -903,6 +920,7 @@ mod tests {
                 KernelVariant::Scalar,
                 500_000,
                 1,
+                false,
             );
         }
         assert!(!tuner.retrain_now());
@@ -930,6 +948,7 @@ mod tests {
                 KernelVariant::Scalar,
                 500_000,
                 1,
+                false,
             );
             tuner.record_solve(
                 100_000,
@@ -939,6 +958,7 @@ mod tests {
                 KernelVariant::Scalar,
                 700_000,
                 1,
+                false,
             );
             tuner.record_solve(
                 100_000,
@@ -948,6 +968,7 @@ mod tests {
                 KernelVariant::Scalar,
                 600_000,
                 1,
+                false,
             );
         }
         assert!(tuner.retrain_now());
@@ -973,6 +994,7 @@ mod tests {
                 KernelVariant::Scalar,
                 1_000,
                 1,
+                false,
             );
             tuner.record_solve(
                 100,
@@ -982,9 +1004,44 @@ mod tests {
                 KernelVariant::Scalar,
                 2_000,
                 1,
+                false,
             );
         }
         assert!(!tuner.retrain_now(), "Thomas solves carry no m signal");
+    }
+
+    #[test]
+    fn robust_samples_never_train_the_m_model() {
+        let tuner = OnlineTuner::new(OnlineTuneConfig {
+            enabled: true,
+            min_samples: 1,
+            ..OnlineTuneConfig::default()
+        });
+        // Comparative evidence that would normally move the model, all
+        // tagged as pivoting-route solves: the trainer must ignore it.
+        for _ in 0..4 {
+            tuner.record_solve(
+                30_000,
+                8,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                900_000,
+                1,
+                true,
+            );
+            tuner.record_solve(
+                30_000,
+                32,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                400_000,
+                1,
+                true,
+            );
+        }
+        assert!(!tuner.retrain_now(), "pivoting latencies carry no m signal");
     }
 
     #[test]
@@ -1015,6 +1072,7 @@ mod tests {
                     KernelVariant::Scalar,
                     ns,
                     1,
+                    false,
                 );
             }
         }
@@ -1116,6 +1174,7 @@ mod tests {
                 KernelVariant::Scalar,
                 250_000,
                 4,
+                false,
             );
         }
         for _ in 0..2 {
@@ -1127,6 +1186,7 @@ mod tests {
                 KernelVariant::Scalar,
                 900_000,
                 1,
+                false,
             );
             tuner.record_solve(
                 100_000,
@@ -1136,6 +1196,7 @@ mod tests {
                 KernelVariant::Scalar,
                 600_000,
                 1,
+                false,
             );
         }
         assert!(tuner.retrain_now(), "singleton class carries comparative evidence");
@@ -1161,6 +1222,7 @@ mod tests {
                 KernelVariant::Scalar,
                 800_000,
                 4,
+                false,
             );
             tuner.record_solve(
                 50_000,
@@ -1170,6 +1232,7 @@ mod tests {
                 KernelVariant::Scalar,
                 500_000,
                 4,
+                false,
             );
         }
         assert!(tuner.retrain_now());
@@ -1199,6 +1262,7 @@ mod tests {
                 KernelVariant::SoaLanes(4),
                 200_000,
                 4,
+                false,
             );
         }
         for _ in 0..2 {
@@ -1210,6 +1274,7 @@ mod tests {
                 KernelVariant::Scalar,
                 900_000,
                 4,
+                false,
             );
             tuner.record_solve(
                 100_000,
@@ -1219,6 +1284,7 @@ mod tests {
                 KernelVariant::Scalar,
                 600_000,
                 4,
+                false,
             );
         }
         assert!(tuner.retrain_now(), "scalar class carries comparative evidence");
@@ -1263,6 +1329,7 @@ mod tests {
                 KernelVariant::SimdSingle,
                 900_000,
                 1,
+                false,
             );
             tuner.record_solve(
                 30_000,
@@ -1272,6 +1339,7 @@ mod tests {
                 KernelVariant::SimdSingle,
                 400_000,
                 1,
+                false,
             );
         }
         assert!(tuner.retrain_now());
@@ -1316,6 +1384,7 @@ mod tests {
                 KernelVariant::Scalar,
                 900_000,
                 1,
+                false,
             );
             tuner.record_solve(
                 30_000,
@@ -1325,6 +1394,7 @@ mod tests {
                 KernelVariant::Scalar,
                 400_000,
                 1,
+                false,
             );
             tuner.record_solve(
                 80_000,
@@ -1334,6 +1404,7 @@ mod tests {
                 KernelVariant::Scalar,
                 700_000,
                 1,
+                false,
             );
             tuner.record_solve(
                 80_000,
@@ -1343,6 +1414,7 @@ mod tests {
                 KernelVariant::Scalar,
                 300_000,
                 1,
+                false,
             );
         }
         assert!(tuner.retrain_now());

@@ -1,0 +1,406 @@
+//! ISSUE-7 acceptance tests for the numerical-robustness safety net.
+//!
+//! * Admission classifies ill-conditioned systems up front and routes
+//!   them to the scaled-partial-pivoting core: zero / tiny diagonal
+//!   pivots solve to solver-accuracy residuals where the fast path
+//!   rejects or degrades.
+//! * Structurally singular payloads (an all-zero row) are rejected at
+//!   admission with `InvalidRequest` — no worker time is spent.
+//! * Well-conditioned workloads never leave the fast path: route
+//!   `Fast`, zero re-solves, and results bit-identical both to
+//!   `partition_solve` and to a robust-mode-off client.
+//! * When admission is loosened past a defect, the post-solve residual
+//!   check (or the `SingularSystem` retry) still catches it and
+//!   re-solves on the pivoting route, flagging `resolved_robust`.
+//! * The same degradation story holds end-to-end over TCP: route and
+//!   re-solve metadata ride the wire, counters ride the Stats frame.
+
+use partisol::api::{ApiError, Client, SolveSpec};
+use partisol::config::Config;
+use partisol::coordinator::Backend;
+use partisol::net::{NetServer, RemoteClient};
+use partisol::plan::{KernelVariant, RobustConfig, RobustMode, RobustRoute};
+use partisol::solver::generator::random_dd_system;
+use partisol::solver::residual::relative_residual;
+use partisol::solver::{partition_solve, spp_solve, thomas_solve, toeplitz_system, TriSystem};
+use partisol::util::Pcg64;
+use std::sync::Arc;
+
+fn native_cfg() -> Config {
+    Config {
+        probe_pjrt: false,
+        workers: 2,
+        ..Config::default()
+    }
+}
+
+/// Admission thresholds loosened past any defect: everything
+/// classifies `Well`, so only the post-solve safety nets can catch a
+/// bad system.
+fn blind_admission_cfg() -> Config {
+    Config {
+        robust: RobustConfig {
+            margin_min: -1e300,
+            scaled_pivot_min: 0.0,
+            ..RobustConfig::default()
+        },
+        ..native_cfg()
+    }
+}
+
+/// Nonsingular but fatal to any no-pivoting sweep: a zero diagonal
+/// with unit off-diagonals (even `n`).
+fn zero_diag_system(n: usize) -> TriSystem<f64> {
+    assert!(n % 2 == 0);
+    let mut sys = TriSystem::<f64> {
+        a: vec![1.0; n],
+        b: vec![0.0; n],
+        c: vec![1.0; n],
+        d: (0..n).map(|i| (i as f64).sin()).collect(),
+    };
+    sys.a[0] = 0.0;
+    sys.c[n - 1] = 0.0;
+    sys
+}
+
+/// An all-zero row: no pivoting order can save it.
+fn zero_row_system(n: usize) -> TriSystem<f64> {
+    let mut sys = toeplitz_system::<f64>(n, 4.0);
+    sys.a[10] = 0.0;
+    sys.b[10] = 0.0;
+    sys.c[10] = 0.0;
+    sys
+}
+
+#[test]
+fn ill_conditioned_admission_routes_to_pivoting() {
+    let client = Client::from_config(native_cfg()).unwrap();
+
+    // The fast path cannot touch this system at all.
+    let sys = zero_diag_system(4096);
+    assert!(thomas_solve(&sys).is_err(), "fast oracle must reject it");
+    let resp = client.solve(SolveSpec::f64(sys.clone())).unwrap();
+    assert_eq!(resp.route, RobustRoute::Pivoting, "admission must reroute");
+    assert_eq!(resp.backend, Backend::Native, "pivoting is native-only");
+    assert!(!resp.resolved_robust, "up-front routing is not a re-solve");
+    let r = relative_residual(&sys, resp.x.as_f64().unwrap());
+    assert!(r < 1e-10, "pivoting residual {r}");
+
+    // Graded non-dominant rows: solvable by the fast path in principle,
+    // but the scaled-pivot estimate flags the broken dominance and the
+    // pivoting route keeps solver-accuracy residuals.
+    let mut rng = Pcg64::new(41);
+    let n = 3000;
+    let mut graded = random_dd_system::<f64>(&mut rng, n, 0.5);
+    for i in (5..n - 5).step_by(7) {
+        let g = 10f64.powi((i % 6) as i32);
+        graded.a[i] *= g;
+        graded.c[i] *= g;
+        graded.b[i] *= 1e-9; // tiny scaled pivots on the graded rows
+    }
+    let resp = client.solve(SolveSpec::f64(graded.clone())).unwrap();
+    assert_eq!(resp.route, RobustRoute::Pivoting);
+    let r = relative_residual(&graded, resp.x.as_f64().unwrap());
+    assert!(r < 1e-8, "graded-rows residual {r}");
+
+    // Sign-alternating off-diagonals over a near-zero diagonal: every
+    // scaled pivot is tiny, so admission reroutes, and row exchanges
+    // keep the elimination stable.
+    let n = 2048;
+    let mut alt = TriSystem::<f64> {
+        a: (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect(),
+        b: vec![1e-10; n],
+        c: (0..n).map(|i| if i % 2 == 0 { -1.0 } else { 1.0 }).collect(),
+        d: (0..n).map(|i| (i as f64).cos()).collect(),
+    };
+    alt.a[0] = 0.0;
+    alt.c[n - 1] = 0.0;
+    let resp = client.solve(SolveSpec::f64(alt.clone())).unwrap();
+    assert_eq!(resp.route, RobustRoute::Pivoting);
+    let r = relative_residual(&alt, resp.x.as_f64().unwrap());
+    assert!(r < 1e-8, "sign-alternating residual {r}");
+
+    let m = client.metrics();
+    assert_eq!(m.route_pivoting, 3);
+    assert_eq!(m.robust_resolves, 0, "admission routing needs no re-solve");
+    client.shutdown();
+}
+
+#[test]
+fn random_ill_conditioned_sweep_stays_under_bound() {
+    // Random systems with broken dominance and occasional zero pivots:
+    // every admitted solve must come back under the f64 residual bound,
+    // whatever route it took.
+    let client = Client::from_config(native_cfg()).unwrap();
+    let mut rng = Pcg64::new(12);
+    for trial in 0..10 {
+        let n = 1000 + (trial * 537) % 4000;
+        let mut sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+        for i in 0..n {
+            if rng.uniform() < 0.3 {
+                sys.b[i] *= rng.range(1e-8, 1e-2);
+            }
+            if rng.uniform() < 0.05 {
+                sys.b[i] = 0.0;
+            }
+        }
+        match client.solve(SolveSpec::f64(sys.clone())) {
+            Ok(resp) => {
+                let r = relative_residual(&sys, resp.x.as_f64().unwrap());
+                assert!(r < 1e-8, "trial {trial} n={n} residual {r}");
+            }
+            Err(ApiError::Solve(msg)) => {
+                // A legitimately singular draw: the sequential pivoting
+                // oracle must agree there is nothing to solve.
+                assert!(msg.contains("singular"), "trial {trial}: {msg}");
+                assert!(
+                    spp_solve(&sys).is_err(),
+                    "trial {trial}: oracle disagrees with the service"
+                );
+            }
+            Err(e) => panic!("trial {trial}: unexpected error {e}"),
+        }
+    }
+    client.shutdown();
+}
+
+#[test]
+fn f32_ill_conditioned_routes_and_solves() {
+    let client = Client::from_config(native_cfg()).unwrap();
+    let n = 2048;
+    let mut sys = toeplitz_system::<f32>(n, 4.0);
+    for i in (0..n).step_by(3) {
+        sys.b[i] = 0.0; // zero pivots everywhere the fast path looks
+    }
+    let resp = client.solve(SolveSpec::f32(sys.clone())).unwrap();
+    assert_eq!(resp.route, RobustRoute::Pivoting);
+    let r = relative_residual(&sys, resp.x.as_f32().unwrap());
+    assert!(r < 1e-3, "f32 pivoting residual {r}");
+    client.shutdown();
+}
+
+#[test]
+fn all_zero_row_is_rejected_at_admission() {
+    let client = Client::from_config(native_cfg()).unwrap();
+    let sys = zero_row_system(64);
+    let err = client.solve(SolveSpec::f64(sys)).unwrap_err();
+    match err {
+        ApiError::InvalidRequest(msg) => {
+            assert!(msg.contains("all-zero row"), "{msg}")
+        }
+        other => panic!("want InvalidRequest, got {other:?}"),
+    }
+    let m = client.metrics();
+    assert_eq!(m.robust_rejected, 1);
+    assert_eq!(m.failed, 1, "the rejection is counted as a failure");
+    assert_eq!(m.route_pivoting, 0, "no worker ever saw the system");
+    client.shutdown();
+}
+
+#[test]
+fn well_conditioned_solves_never_leave_the_fast_path() {
+    // The guarantee that makes the safety net free: on healthy systems
+    // the robust client plans the same route and returns the same bits
+    // as a robust-off client, and as the bare solver core.
+    let robust = Client::from_config(native_cfg()).unwrap();
+    let off = Client::from_config(Config {
+        robust: RobustConfig {
+            mode: RobustMode::Off,
+            ..RobustConfig::default()
+        },
+        ..native_cfg()
+    })
+    .unwrap();
+
+    let mut rng = Pcg64::new(42);
+    for _ in 0..6 {
+        let n = 5_000 + (rng.uniform() * 50_000.0) as usize;
+        let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+        // Pin the kernel so the bare-core comparison is exact: the
+        // scalar fast path IS partition_solve.
+        let spec = || SolveSpec::f64(sys.clone()).with_kernel(KernelVariant::Scalar);
+        let got = robust.solve(spec()).unwrap();
+        assert_eq!(got.route, RobustRoute::Fast);
+        assert!(!got.resolved_robust);
+        let want_off = off.solve(spec()).unwrap();
+        assert_eq!(
+            got.x.as_f64().unwrap(),
+            want_off.x.as_f64().unwrap(),
+            "robust admission must not perturb fast-path bits"
+        );
+        let want_core = partition_solve(&sys, got.m, 2).unwrap();
+        assert_eq!(
+            got.x.as_f64().unwrap(),
+            want_core.as_slice(),
+            "fast path must stay bit-identical to partition_solve"
+        );
+    }
+    let m = robust.metrics();
+    assert_eq!(m.route_fast, 6);
+    assert_eq!(m.route_pivoting, 0);
+    assert_eq!(m.robust_resolves, 0);
+    assert_eq!(m.robust_rejected, 0);
+    robust.shutdown();
+    off.shutdown();
+}
+
+#[test]
+fn residual_check_catches_what_blind_admission_misses() {
+    // Loosened thresholds admit a tiny leading pivot as `Well`; the
+    // fast sweep survives it but loses ~10 digits to pivot growth. The
+    // post-solve residual check must notice and re-solve.
+    let client = Client::from_config(blind_admission_cfg()).unwrap();
+    let mut rng = Pcg64::new(43);
+    let mut sys = random_dd_system::<f64>(&mut rng, 20_000, 0.5);
+    sys.b[0] = 1e-13;
+    let resp = client.solve(SolveSpec::f64(sys.clone())).unwrap();
+    assert!(resp.resolved_robust, "the defect must be caught post-solve");
+    assert_eq!(resp.route, RobustRoute::Pivoting);
+    let r = relative_residual(&sys, resp.x.as_f64().unwrap());
+    assert!(r < 1e-8, "re-solved residual {r}");
+    let m = client.metrics();
+    assert_eq!(m.robust_resolves, 1);
+    assert_eq!(m.robust_rejected, 0, "nothing was rejected up front");
+    client.shutdown();
+}
+
+#[test]
+fn singular_fast_path_retries_through_pivoting() {
+    // Blind admission sends a zero-diagonal system down the fast path,
+    // which dies with SingularSystem; the worker must retry on the
+    // pivoting route instead of surfacing the error.
+    let client = Client::from_config(blind_admission_cfg()).unwrap();
+    let sys = zero_diag_system(4096);
+    let resp = client.solve(SolveSpec::f64(sys.clone())).unwrap();
+    assert!(resp.resolved_robust, "singular retry must be flagged");
+    assert_eq!(resp.route, RobustRoute::Pivoting);
+    let r = relative_residual(&sys, resp.x.as_f64().unwrap());
+    assert!(r < 1e-10, "retried residual {r}");
+    assert_eq!(client.metrics().robust_resolves, 1);
+    client.shutdown();
+}
+
+#[test]
+fn robust_off_surfaces_the_singular_error() {
+    // Opting out restores the pre-safety-net contract: structured
+    // errors, no silent re-solves.
+    let client = Client::from_config(Config {
+        robust: RobustConfig {
+            mode: RobustMode::Off,
+            ..RobustConfig::default()
+        },
+        ..native_cfg()
+    })
+    .unwrap();
+    let sys = zero_diag_system(64);
+    let err = client.solve(SolveSpec::f64(sys)).unwrap_err();
+    assert!(matches!(err, ApiError::Solve(_)), "{err:?}");
+    assert!(err.to_string().contains("singular"), "{err}");
+    let m = client.metrics();
+    assert_eq!(m.robust_resolves, 0);
+    assert_eq!(m.route_pivoting, 0);
+    client.shutdown();
+}
+
+#[test]
+fn singular_member_in_fused_batch_retries_alone() {
+    // A same-shape group fuses into one batch execution; one member
+    // with a zero diagonal poisons the fused fast solve. The service
+    // must fall back to per-member solves (counted as a batch retry)
+    // and pivot only the poisoned member.
+    let client = Client::from_config(blind_admission_cfg()).unwrap();
+    let mut rng = Pcg64::new(44);
+    let n = 5_000;
+    let healthy = Arc::new(random_dd_system::<f64>(&mut rng, n, 0.5));
+    let bad = zero_diag_system(n);
+    let mut specs: Vec<SolveSpec<'static>> = (0..5)
+        .map(|_| SolveSpec::shared_f64(healthy.clone()))
+        .collect();
+    specs.push(SolveSpec::f64(bad.clone()));
+    let handles = client.submit_many(specs).unwrap();
+    let responses: Vec<_> = handles
+        .into_iter()
+        .map(|h| h.wait().expect("every member must still solve"))
+        .collect();
+    for resp in &responses[..5] {
+        assert_eq!(resp.route, RobustRoute::Fast, "healthy members stay fast");
+        let r = relative_residual(&healthy, resp.x.as_f64().unwrap());
+        assert!(r < 1e-9, "healthy member residual {r}");
+    }
+    let poisoned = &responses[5];
+    assert_eq!(poisoned.route, RobustRoute::Pivoting);
+    assert!(poisoned.resolved_robust);
+    let r = relative_residual(&bad, poisoned.x.as_f64().unwrap());
+    assert!(r < 1e-10, "poisoned member residual {r}");
+    let m = client.metrics();
+    assert!(
+        m.robust_batch_retries >= 1,
+        "the fused failure must be counted ({} retries)",
+        m.robust_batch_retries
+    );
+    assert!(m.robust_resolves >= 1);
+    client.shutdown();
+}
+
+/// The ISSUE-7 acceptance scenario end-to-end over TCP: an
+/// ill-conditioned system degrades gracefully through `RemoteClient`
+/// (pivoting metadata on the wire, counters in the Stats frame) while
+/// a concurrent well-conditioned workload stays on the fast path,
+/// bit-identical to the local synchronous solve.
+#[test]
+fn remote_degradation_e2e() {
+    let mut cfg = native_cfg();
+    cfg.net.addr = "127.0.0.1:0".to_string();
+    let net = cfg.net.clone();
+    let client = Arc::new(Client::from_config(cfg).unwrap());
+    let server = NetServer::start(client, net).unwrap();
+    let addr = server.local_addr().to_string();
+    let remote = RemoteClient::connect(&addr).unwrap();
+    let mut rng = Pcg64::new(45);
+
+    // The healthy workload, submitted around the degraded one.
+    let healthy = random_dd_system::<f64>(&mut rng, 20_000, 0.5);
+    let h1 = remote.submit(SolveSpec::f64(healthy.clone())).unwrap();
+
+    // The degraded request: admission reroutes it server-side, and the
+    // route rides back in the response flags.
+    let bad = zero_diag_system(4096);
+    let got_bad = remote.solve(SolveSpec::f64(bad.clone())).unwrap();
+    assert_eq!(got_bad.route, RobustRoute::Pivoting, "route must ride the wire");
+    assert!(!got_bad.resolved_robust);
+    let r = relative_residual(&bad, got_bad.x.as_f64().unwrap());
+    assert!(r < 1e-8, "remote degraded residual {r}");
+
+    // A structurally singular payload comes back as a typed rejection.
+    match remote.solve(SolveSpec::f64(zero_row_system(64))) {
+        Err(ApiError::InvalidRequest(msg)) => assert!(msg.contains("all-zero row"), "{msg}"),
+        other => panic!("want InvalidRequest over the wire, got {other:?}"),
+    }
+
+    // The healthy workload was never perturbed: fast route, no robust
+    // flags, bits identical to the local synchronous path.
+    let got = h1.wait().unwrap();
+    assert_eq!(got.route, RobustRoute::Fast);
+    assert!(!got.resolved_robust);
+    let want = server
+        .client()
+        .solve_now(&SolveSpec::borrowed_f64(healthy.view()))
+        .unwrap();
+    assert_eq!(
+        got.x.as_f64().unwrap(),
+        want.x.as_f64().unwrap(),
+        "remote fast path must stay bit-identical to solve_now"
+    );
+
+    // The robust counters ride the Stats frame.
+    let stats = remote.stats().unwrap();
+    let count = |k: &str| stats.get(k).unwrap().as_usize().unwrap();
+    assert!(count("route_fast") >= 2, "healthy + solve_now stay fast");
+    assert_eq!(count("route_pivoting"), 1);
+    assert_eq!(count("robust_resolves"), 0);
+    assert_eq!(count("robust_rejected"), 1);
+    assert_eq!(count("robust_batch_retries"), 0);
+
+    remote.close();
+    server.shutdown();
+}
