@@ -409,10 +409,7 @@ fn remote_workload(
     let stats = client.stats()?;
     println!(
         "server stats   : {} completed | {} frames in / {} out | {} sheds",
-        stats.get("completed")?.as_usize().unwrap_or(0),
-        stats.get("frames_in")?.as_usize().unwrap_or(0),
-        stats.get("frames_out")?.as_usize().unwrap_or(0),
-        stats.get("sheds")?.as_usize().unwrap_or(0),
+        stats.completed, stats.frames_in, stats.frames_out, stats.sheds,
     );
 
     if shutdown_server {

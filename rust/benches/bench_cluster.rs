@@ -1,0 +1,223 @@
+//! Cluster-tier benchmark: does shape-affine placement actually buy
+//! anything over random placement?
+//!
+//! Three in-process shards sit behind a `ShardRouter`; the same mixed
+//! f32/f64 workload (12 shapes, round-robin) runs once under
+//! rendezvous-hash placement and once under uniform-random placement.
+//! Under affinity every shape is a plan-cache miss on exactly one
+//! shard (its home) and a hit everywhere after; under random placement
+//! each shape misses once on *every* shard it lands on, so the
+//! aggregate hit rate drops — the same dilution the paper's per-device
+//! tuning state suffers when work is not shape-partitioned.
+//!
+//! Reported per arm: aggregate shard plan-cache hit rate, wall time,
+//! throughput, and the per-shard routed counts. Results are persisted
+//! to `BENCH_cluster.json` at the repo root. Pass `--smoke` for the
+//! CI-sized workload.
+
+use partisol::api::SolveSpec;
+use partisol::cluster::{ClusterConfig, PlacementKind, ShardRouter};
+use partisol::config::Config;
+use partisol::net::{NetServer, RemoteClient};
+use partisol::solver::generator::random_dd_system;
+use partisol::solver::TriSystem;
+use partisol::util::json::{obj, Json};
+use partisol::util::Pcg64;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+const SHARDS: usize = 3;
+const PLAN_CACHE: usize = 12;
+
+/// One workload shape: a pre-generated system solved repeatedly (the
+/// plan cache keys on `(n, dtype)`, not on the values).
+enum ShapeSys {
+    F64(Arc<TriSystem<f64>>),
+    F32(Arc<TriSystem<f32>>),
+}
+
+impl ShapeSys {
+    fn spec(&self) -> SolveSpec<'static> {
+        match self {
+            ShapeSys::F64(s) => SolveSpec::shared_f64(s.clone()).with_residual(false),
+            ShapeSys::F32(s) => SolveSpec::shared_f32(s.clone()).with_residual(false),
+        }
+    }
+}
+
+struct ArmReport {
+    placement: &'static str,
+    hit_rate: f64,
+    hits: u64,
+    misses: u64,
+    wall_s: f64,
+    rps: f64,
+    routed_per_shard: Vec<u64>,
+}
+
+fn shard_cfg() -> Config {
+    Config {
+        probe_pjrt: false,
+        workers: 2,
+        plan_cache: PLAN_CACHE,
+        ..Config::default()
+    }
+}
+
+fn run_arm(placement: PlacementKind, shapes: &[ShapeSys], rounds: usize) -> ArmReport {
+    let mut shards = Vec::with_capacity(SHARDS);
+    let mut addrs = Vec::with_capacity(SHARDS);
+    for _ in 0..SHARDS {
+        let mut cfg = shard_cfg();
+        cfg.net.addr = "127.0.0.1:0".to_string();
+        let net = cfg.net.clone();
+        let client = Arc::new(partisol::api::Client::from_config(cfg).expect("shard service"));
+        let server = NetServer::start(client, net).expect("shard server");
+        addrs.push(server.local_addr().to_string());
+        shards.push(server);
+    }
+    let router = ShardRouter::start(ClusterConfig {
+        listen: "127.0.0.1:0".to_string(),
+        shards: addrs,
+        placement,
+        ..ClusterConfig::default()
+    })
+    .expect("router");
+    let remote = RemoteClient::connect(&router.local_addr().to_string()).expect("connect");
+
+    // Round-robin over the shapes so every shape recurs `rounds` times
+    // — the access pattern a shard's LRU sees is what placement makes
+    // of this cycle.
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for shape in shapes {
+            remote.solve(shape.spec()).expect("routed solve");
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let total = (rounds * shapes.len()) as f64;
+
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    for s in &shards {
+        let m = s.metrics();
+        hits += m.plan_cache_hits;
+        misses += m.plan_cache_misses;
+    }
+    let routed_per_shard: Vec<u64> = router
+        .cluster_metrics()
+        .shards()
+        .iter()
+        .map(|s| s.routed.load(Ordering::Relaxed))
+        .collect();
+
+    remote.close();
+    drop(router);
+    for s in shards {
+        s.shutdown();
+    }
+
+    let name = match placement {
+        PlacementKind::Hash => "hash",
+        PlacementKind::Random => "random",
+    };
+    ArmReport {
+        placement: name,
+        hit_rate: hits as f64 / (hits + misses).max(1) as f64,
+        hits,
+        misses,
+        wall_s,
+        rps: total / wall_s,
+        routed_per_shard,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (n_shapes, rounds, max_n) = if smoke { (12, 3, 30_000) } else { (12, 8, 200_000) };
+
+    // Log-spaced shape sizes, alternating dtype: a mixed workload that
+    // only fits a shard's plan cache when a shard sees its slice alone.
+    let mut rng = Pcg64::new(17);
+    let min_n = 2_000usize;
+    let mut shapes = Vec::with_capacity(n_shapes);
+    for i in 0..n_shapes {
+        let frac = i as f64 / (n_shapes - 1) as f64;
+        let n = (min_n as f64 * (max_n as f64 / min_n as f64).powf(frac)) as usize;
+        if i % 2 == 0 {
+            shapes.push(ShapeSys::F64(Arc::new(random_dd_system::<f64>(
+                &mut rng, n, 0.5,
+            ))));
+        } else {
+            shapes.push(ShapeSys::F32(Arc::new(random_dd_system::<f32>(
+                &mut rng, n, 1.0,
+            ))));
+        }
+    }
+    println!(
+        "bench_cluster: {SHARDS} shards (plan cache {PLAN_CACHE}), \
+         {n_shapes} shapes x {rounds} rounds, N in [{min_n}, {max_n}]\n"
+    );
+
+    let arms = [
+        run_arm(PlacementKind::Hash, &shapes, rounds),
+        run_arm(PlacementKind::Random, &shapes, rounds),
+    ];
+    for r in &arms {
+        println!(
+            "{:<6}: plan-cache hit rate {:5.1}% ({} hits / {} misses) | \
+             {:6.1} req/s | routed {:?}",
+            r.placement,
+            r.hit_rate * 100.0,
+            r.hits,
+            r.misses,
+            r.rps,
+            r.routed_per_shard
+        );
+    }
+    let beats = arms[0].hit_rate > arms[1].hit_rate;
+    println!(
+        "\naffinity {} random on shard plan-cache hit rate ({:.1}% vs {:.1}%)",
+        if beats { "beats" } else { "does NOT beat" },
+        arms[0].hit_rate * 100.0,
+        arms[1].hit_rate * 100.0
+    );
+
+    let section = |r: &ArmReport| {
+        obj(vec![
+            ("plan_cache_hit_rate", Json::Num(r.hit_rate)),
+            ("plan_cache_hits", Json::Num(r.hits as f64)),
+            ("plan_cache_misses", Json::Num(r.misses as f64)),
+            ("wall_s", Json::Num(r.wall_s)),
+            ("rps", Json::Num(r.rps)),
+            (
+                "routed_per_shard",
+                Json::Arr(
+                    r.routed_per_shard
+                        .iter()
+                        .map(|&v| Json::Num(v as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    };
+    let report = obj(vec![
+        ("bench", Json::Str("cluster".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("shards", Json::Num(SHARDS as f64)),
+        ("plan_cache_entries", Json::Num(PLAN_CACHE as f64)),
+        ("shapes", Json::Num(n_shapes as f64)),
+        ("rounds", Json::Num(rounds as f64)),
+        (arms[0].placement, section(&arms[0])),
+        (arms[1].placement, section(&arms[1])),
+        ("affinity_beats_random", Json::Bool(beats)),
+    ]);
+    std::fs::write("BENCH_cluster.json", report.to_string_pretty())
+        .expect("write BENCH_cluster.json");
+    println!("wrote BENCH_cluster.json");
+    assert!(
+        beats,
+        "affinity routing must beat random placement on plan-cache hit rate"
+    );
+}

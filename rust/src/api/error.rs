@@ -32,6 +32,14 @@ pub enum ApiError {
     /// Service-level failure outside a single solve (startup, config,
     /// worker spawn).
     Service(String),
+    /// The connection presented no (or a wrong) pre-shared auth token
+    /// on a server that requires one. Not retryable with the same
+    /// credentials.
+    Unauthorized,
+    /// The peer speaks a different wire-protocol version. Permanent for
+    /// this peer build — a router ejects the shard rather than retrying
+    /// (unlike a refused connection, which is transient).
+    VersionMismatch { peer: u8 },
 }
 
 impl std::fmt::Display for ApiError {
@@ -47,6 +55,12 @@ impl std::fmt::Display for ApiError {
             ApiError::Timeout => write!(f, "wait deadline expired"),
             ApiError::Consumed => write!(f, "handle already yielded its result"),
             ApiError::Service(msg) => write!(f, "service error: {msg}"),
+            ApiError::Unauthorized => {
+                write!(f, "unauthorized: missing or wrong auth token")
+            }
+            ApiError::VersionMismatch { peer } => {
+                write!(f, "wire protocol version mismatch (peer speaks v{peer})")
+            }
         }
     }
 }
@@ -92,5 +106,8 @@ mod tests {
         let msg = ApiError::Backpressure { queue_depth: 8 }.to_string();
         assert!(msg.contains("backpressure") && msg.contains('8'));
         assert!(ApiError::Solve("singular".into()).to_string().contains("singular"));
+        assert!(ApiError::Unauthorized.to_string().contains("auth token"));
+        let msg = ApiError::VersionMismatch { peer: 3 }.to_string();
+        assert!(msg.contains("version") && msg.contains('3'));
     }
 }

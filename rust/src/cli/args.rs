@@ -1,4 +1,6 @@
 //! Tiny flag parser: `--key value`, `--key=value`, boolean `--flag`.
+//! A flag may repeat (`--shard a --shard b`); single-value accessors
+//! read the last occurrence, [`Args::get_all`] reads them all.
 
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
@@ -6,7 +8,7 @@ use std::collections::BTreeMap;
 /// Parsed arguments: flags plus positional values.
 #[derive(Debug, Default)]
 pub struct Args {
-    flags: BTreeMap<String, String>,
+    flags: BTreeMap<String, Vec<String>>,
     positional: Vec<String>,
 }
 
@@ -19,14 +21,14 @@ impl Args {
             let a = &argv[i];
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
-                    args.flags.insert(k.to_string(), v.to_string());
+                    args.push_flag(k, v.to_string());
                 } else if known_bools.contains(&stripped) {
-                    args.flags.insert(stripped.to_string(), "true".to_string());
+                    args.push_flag(stripped, "true".to_string());
                 } else {
                     let v = argv.get(i + 1).ok_or_else(|| {
                         Error::Cli(format!("flag --{stripped} expects a value"))
                     })?;
-                    args.flags.insert(stripped.to_string(), v.clone());
+                    args.push_flag(stripped, v.clone());
                     i += 1;
                 }
             } else {
@@ -37,16 +39,29 @@ impl Args {
         Ok(args)
     }
 
+    fn push_flag(&mut self, key: &str, value: String) {
+        self.flags.entry(key.to_string()).or_default().push(value);
+    }
+
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
+        self.flags
+            .get(key)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable flag, in command-line order
+    /// (empty when the flag was never given).
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.flags.get(key).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
-        match self.flags.get(key) {
+        match self.get(key) {
             None => Ok(default),
             Some(v) => parse_human_int(v)
                 .ok_or_else(|| Error::Cli(format!("--{key}: cannot parse `{v}` as integer"))),
@@ -58,7 +73,7 @@ impl Args {
     }
 
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
-        match self.flags.get(key) {
+        match self.get(key) {
             None => Ok(default),
             Some(v) => v
                 .parse()
@@ -120,6 +135,19 @@ mod tests {
         assert_eq!(a.get("card"), Some("4080"));
         assert!(a.has("verbose"));
         assert_eq!(a.positional(), &["pos".to_string()]);
+    }
+
+    #[test]
+    fn repeated_flags_accumulate() {
+        let a = Args::parse(
+            &v(&["--shard", "h1:7071", "--shard=h2:7071", "--n", "2", "--n", "5"]),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.get_all("shard"), &["h1:7071", "h2:7071"]);
+        assert_eq!(a.get("shard"), Some("h2:7071"), "single-value = last");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+        assert!(a.get_all("missing").is_empty());
     }
 
     #[test]

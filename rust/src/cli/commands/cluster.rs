@@ -1,0 +1,145 @@
+//! `partisol cluster` — run the shard router in front of N
+//! `serve --listen` shards, until a remote `Shutdown` frame arrives,
+//! then report the routing counters.
+
+use crate::cli::args::Args;
+use crate::cluster::{PlacementKind, ShardRouter};
+use crate::config::Config;
+use crate::error::Result;
+use crate::util::json::Json;
+use std::io::Write as _;
+
+const HELP: &str = "\
+partisol cluster — route wire-protocol traffic across serve shards by
+request shape (rendezvous hashing on size-bin x dtype), with
+backpressure spill, failover and health-based ejection/readmission
+
+OPTIONS:
+    --listen <addr>       router listen address (host:port; port 0 picks
+                          a free port; default 127.0.0.1:7070)
+    --shard <addr>        a shard address (repeat once per shard; at
+                          least one required unless the config file
+                          names them)
+    --placement <p>       hash | random (default hash)
+    --auth-token <t>      pre-shared token required of clients and
+                          forwarded to every shard
+    --health-interval <ms> health-probe period (default 200)
+    --eject-after <k>     consecutive failures before ejection (default 3)
+    --readmit-after <k>   consecutive probe successes before readmission
+                          (default 2)
+    --config <path>       TOML config file with a [cluster] table
+                          (flags override it)
+";
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["help"])?;
+    if args.has("help") {
+        print!("{HELP}");
+        return Ok(());
+    }
+    let base = match args.get("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    let mut cfg = base.cluster;
+    if let Some(listen) = args.get("listen") {
+        cfg.listen = listen.to_string();
+    }
+    let shards = args.get_all("shard");
+    if !shards.is_empty() {
+        cfg.shards = shards.to_vec();
+    }
+    if let Some(p) = args.get("placement") {
+        cfg.placement = PlacementKind::parse(p)?;
+    }
+    if let Some(t) = args.get("auth-token") {
+        cfg.auth_token = (!t.is_empty()).then(|| t.to_string());
+    }
+    cfg.health_interval_ms = args.get_u64("health-interval", cfg.health_interval_ms)?;
+    cfg.eject_after = args.get_usize("eject-after", cfg.eject_after as usize)? as u32;
+    cfg.readmit_after = args.get_usize("readmit-after", cfg.readmit_after as usize)? as u32;
+
+    let router = ShardRouter::start(cfg)?;
+    // The bound address on its own line so scripts (and the CI
+    // cluster-smoke step) can scrape the OS-assigned port.
+    println!("router listening on {}", router.local_addr());
+    for (i, _) in router.cluster_metrics().shards().iter().enumerate() {
+        println!("  shard {i}: {}", router.shards().addr(i));
+    }
+    std::io::stdout().flush().ok();
+    router.run_until_shutdown();
+
+    println!("shutdown requested; connections drained");
+    print_counters(&router.stats_json());
+    router.shutdown();
+    Ok(())
+}
+
+/// The routing counters the `cluster` command reports on exit.
+fn print_counters(stats: &Json) {
+    let num = |k: &str| -> u64 {
+        stats
+            .get(k)
+            .ok()
+            .and_then(|v| v.as_f64())
+            .map(|v| v.max(0.0) as u64)
+            .unwrap_or(0)
+    };
+    println!(
+        "requests           : {} completed | {} failed",
+        num("completed"),
+        num("failed")
+    );
+    println!(
+        "routing            : {} routed | {} spilled | {} failovers | {} no-shard sheds",
+        num("cluster_routed"),
+        num("cluster_spilled"),
+        num("cluster_failovers"),
+        num("cluster_no_shard")
+    );
+    println!(
+        "health             : {} ejections | {} readmissions",
+        num("cluster_ejections"),
+        num("cluster_readmissions")
+    );
+    if let Ok(shards) = stats.get("shards") {
+        if let Some(arr) = shards.as_arr() {
+            for (i, s) in arr.iter().enumerate() {
+                let f = |k: &str| -> u64 {
+                    s.get(k)
+                        .ok()
+                        .and_then(|v| v.as_f64())
+                        .map(|v| v.max(0.0) as u64)
+                        .unwrap_or(0)
+                };
+                let addr = s
+                    .get("addr")
+                    .ok()
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("?")
+                    .to_string();
+                let up = s
+                    .get("available")
+                    .ok()
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false);
+                println!(
+                    "  shard {i} {addr:<21} : {} | {} routed | {} spilled | {} ejections | {} readmissions",
+                    if up { "up" } else { "down" },
+                    f("routed"),
+                    f("spilled"),
+                    f("ejections"),
+                    f("readmissions")
+                );
+            }
+        }
+    }
+    println!(
+        "connections        : {} accepted | {} frames in / {} out | {} sheds | {} unauthorized",
+        num("connections_accepted"),
+        num("frames_in"),
+        num("frames_out"),
+        num("sheds"),
+        num("unauthorized")
+    );
+}

@@ -1,6 +1,7 @@
 //! CLI subcommand implementations.
 
 pub mod calibrate;
+pub mod cluster;
 pub mod occupancy;
 pub mod predict;
 pub mod report;

@@ -36,6 +36,8 @@ OPTIONS:
                         synthetic workload; runs until a remote client
                         sends a Shutdown frame ([net] table for the
                         connection cap, read timeout and frame cap)
+    --auth-token <t>    pre-shared token every connection must present
+                        first ([net] auth_token; --listen only)
 ";
 
 pub fn run(argv: &[String]) -> Result<()> {
@@ -67,6 +69,9 @@ pub fn run(argv: &[String]) -> Result<()> {
 
     if let Some(addr) = args.get("listen") {
         cfg.net.addr = addr.to_string();
+        if let Some(t) = args.get("auth-token") {
+            cfg.net.auth_token = (!t.is_empty()).then(|| t.to_string());
+        }
         return run_listener(cfg);
     }
 

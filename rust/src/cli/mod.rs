@@ -24,6 +24,8 @@ COMMANDS:
     occupancy   print the Fig-1 occupancy series
     serve       run the threaded solve service on a synthetic workload
                 (`serve --listen <addr>`: expose it over the wire protocol)
+    cluster     run the shard router over N `serve --listen` shards
+                (shape-aware placement, spill, failover, health checks)
     report      print paper-vs-reproduction summary tables
     help        show this message
 
@@ -53,6 +55,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "calibrate" => commands::calibrate::run(rest),
         "occupancy" => commands::occupancy::run(rest),
         "serve" => commands::serve::run(rest),
+        "cluster" => commands::cluster::run(rest),
         "report" => commands::report::run(rest),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");

@@ -1,0 +1,90 @@
+//! The health monitor: a background prober that ejects dead shards and
+//! readmits recovered ones.
+//!
+//! Every `interval` it pings each probeable shard over the same wire
+//! protocol requests ride (a `Ping`/`Pong` round-trip through the
+//! shard's [`crate::net::RemoteClient`]), feeding the
+//! [`ShardTable`](super::shards::ShardTable) state machine:
+//! `eject_after` consecutive failures mark a shard unavailable (routed
+//! traffic contributes failures too, so a busy router usually ejects
+//! from traffic before the prober notices), and `readmit_after`
+//! consecutive probe successes bring it back. Ejected shards keep
+//! being probed — that is the only road back in. Probes answer with
+//! [`ApiError::Unauthorized`] / [`ApiError::VersionMismatch`] eject
+//! permanently: a redial cannot fix a misconfigured peer.
+
+use super::shards::{ShardTable, Transition};
+use crate::api::ApiError;
+use crate::coordinator::metrics::ClusterMetrics;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub struct HealthConfig {
+    pub interval: Duration,
+    pub probe_timeout: Duration,
+}
+
+/// Spawn the prober thread; it exits once `shutdown` is set.
+pub fn spawn(
+    shards: Arc<ShardTable>,
+    metrics: Arc<ClusterMetrics>,
+    shutdown: Arc<AtomicBool>,
+    cfg: HealthConfig,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name("partisol-cluster-health".into())
+        .spawn(move || loop {
+            for i in 0..shards.len() {
+                if shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                if shards.probeable(i) {
+                    probe(&shards, &metrics, i, cfg.probe_timeout);
+                }
+            }
+            // Sleep in small slices so shutdown is prompt.
+            let mut left = cfg.interval;
+            while left > Duration::ZERO {
+                if shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                let step = left.min(Duration::from_millis(20));
+                std::thread::sleep(step);
+                left -= step;
+            }
+        })
+}
+
+/// One ping round-trip; updates health state and counters.
+fn probe(shards: &ShardTable, metrics: &ClusterMetrics, i: usize, timeout: Duration) {
+    let outcome = shards
+        .client(i)
+        .and_then(|c| c.ping_timeout(timeout).map(|_| ()));
+    match outcome {
+        Ok(()) => {
+            if shards.record_success(i) == Transition::Readmitted {
+                metrics.shard(i).readmissions.fetch_add(1, Ordering::Relaxed);
+                crate::log_info!("cluster: shard {} ({}) readmitted", i, shards.addr(i));
+            }
+        }
+        Err(ApiError::Unauthorized) | Err(ApiError::VersionMismatch { .. }) => {
+            shards.drop_client(i);
+            if shards.eject_permanently(i) == Transition::Ejected {
+                metrics.shard(i).ejections.fetch_add(1, Ordering::Relaxed);
+            }
+            crate::log_warn!(
+                "cluster: shard {} ({}) permanently ejected (auth/version rejection)",
+                i,
+                shards.addr(i)
+            );
+        }
+        Err(e) => {
+            shards.drop_client(i);
+            if shards.record_failure(i) == Transition::Ejected {
+                metrics.shard(i).ejections.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!("cluster: shard {} ({}) ejected: {e}", i, shards.addr(i));
+            }
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! The cluster tier: a shape-aware shard router over N serve processes.
+//!
+//! ```text
+//!                         ┌────────────────────┐      ┌──────────────┐
+//!   RemoteClient ──────▶  │    ShardRouter     │ ───▶ │ shard 0      │
+//!     (wire protocol,     │  placement: shape  │      │ serve --listen│
+//!      unchanged)         │  ShapeKey → order  │ ───▶ │ shard 1      │
+//!                         │  health: ping loop │      │ …            │
+//!                         └────────────────────┘ ───▶ │ shard N-1    │
+//!                                                     └──────────────┘
+//! ```
+//!
+//! One solve service specializes per shape: its plan cache is keyed on
+//! `(n, dtype)` and its online model trains on the sizes it sees. The
+//! router exploits that: [`placement::ShapeKey`] buckets each request
+//! (the online tuner's log₁₀ size bins × dtype) and rendezvous hashing
+//! pins every bucket to a primary shard, so each shard's cache and
+//! model specialize on a stable slice of the workload instead of
+//! diluting across all of it.
+//!
+//! Resilience is layered on the same order: `Backpressure` replies
+//! spill to the next shard, dead connections fail over (idempotent
+//! solves — replays are bit-identical), [`health`] ejects a shard
+//! after `eject_after` consecutive failures and readmits it after
+//! `readmit_after` consecutive probe successes. Auth and protocol
+//! version rejections eject permanently.
+//!
+//! Submodules: [`router`] (the process), [`placement`] (policies),
+//! [`shards`] (shard table + health state), [`health`] (the prober).
+
+pub mod health;
+pub mod placement;
+pub mod router;
+pub mod shards;
+
+pub use placement::{PlacementPolicy, RandomPolicy, RendezvousPolicy, ShapeKey};
+pub use router::ShardRouter;
+pub use shards::{ShardTable, Transition};
+
+use crate::error::{Error, Result};
+use crate::net::DEFAULT_MAX_FRAME_BYTES;
+
+/// Which placement policy the router runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Shape-affine rendezvous hashing (the default).
+    Hash,
+    /// Uniform-random placement — the control arm for benchmarks.
+    Random,
+}
+
+impl PlacementKind {
+    pub fn parse(s: &str) -> Result<PlacementKind> {
+        match s {
+            "hash" => Ok(PlacementKind::Hash),
+            "random" => Ok(PlacementKind::Random),
+            other => Err(Error::Config(format!(
+                "cluster.placement must be \"hash\"|\"random\", got `{other}`"
+            ))),
+        }
+    }
+}
+
+/// The `[cluster]` config table: knobs of the shard router.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Router listen address (`host:port`; port 0 lets the OS pick).
+    pub listen: String,
+    /// Shard addresses (each a `serve --listen` instance).
+    pub shards: Vec<String>,
+    /// Placement policy.
+    pub placement: PlacementKind,
+    /// Health-probe period in milliseconds.
+    pub health_interval_ms: u64,
+    /// Per-probe reply deadline in milliseconds.
+    pub probe_timeout_ms: u64,
+    /// Consecutive failures (probe or routed traffic) before a shard is
+    /// ejected from placement.
+    pub eject_after: u32,
+    /// Consecutive probe successes before an ejected shard returns.
+    pub readmit_after: u32,
+    /// Pre-shared token: required of downstream clients **and**
+    /// forwarded on every shard connection, so one credential covers
+    /// the whole tier.
+    pub auth_token: Option<String>,
+    /// Downstream connection cap (excess sheds with `Backpressure`).
+    pub max_conns: usize,
+    /// Downstream read timeout (0 = never reap idle connections).
+    pub read_timeout_ms: u64,
+    /// Frame-size cap, both directions.
+    pub max_frame_bytes: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            listen: "127.0.0.1:7070".to_string(),
+            shards: Vec::new(),
+            placement: PlacementKind::Hash,
+            health_interval_ms: 200,
+            probe_timeout_ms: 1_000,
+            eject_after: 3,
+            readmit_after: 2,
+            auth_token: None,
+            max_conns: 64,
+            read_timeout_ms: 30_000,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Validate the knobs (called by [`ShardRouter::start`] and the
+    /// config loader).
+    pub fn validate(&self) -> Result<()> {
+        if self.listen.is_empty() {
+            return Err(Error::Config("cluster.listen must not be empty".into()));
+        }
+        if self.shards.is_empty() {
+            return Err(Error::Config(
+                "cluster.shards must name at least one shard".into(),
+            ));
+        }
+        if self.shards.iter().any(|s| s.is_empty()) {
+            return Err(Error::Config("cluster.shards must not be empty".into()));
+        }
+        if self.health_interval_ms == 0 || self.probe_timeout_ms == 0 {
+            return Err(Error::Config(
+                "cluster.health_interval_ms and probe_timeout_ms must be positive".into(),
+            ));
+        }
+        if self.eject_after == 0 || self.readmit_after == 0 {
+            return Err(Error::Config(
+                "cluster.eject_after and readmit_after must be positive".into(),
+            ));
+        }
+        if self.max_conns == 0 {
+            return Err(Error::Config("cluster.max_conns must be positive".into()));
+        }
+        if matches!(&self.auth_token, Some(t) if t.is_empty()) {
+            return Err(Error::Config(
+                "cluster.auth_token must not be empty (omit it to disable auth)".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_and_validation() {
+        let mut cfg = ClusterConfig::default();
+        assert!(cfg.validate().is_err(), "no shards = invalid");
+        cfg.shards = vec!["127.0.0.1:7071".into()];
+        assert!(cfg.validate().is_ok());
+        assert_eq!(cfg.placement, PlacementKind::Hash);
+        assert!(cfg.eject_after >= 1 && cfg.readmit_after >= 1);
+        assert!(ClusterConfig {
+            listen: String::new(),
+            shards: vec!["a:1".into()],
+            ..ClusterConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(ClusterConfig {
+            shards: vec!["a:1".into()],
+            auth_token: Some(String::new()),
+            ..ClusterConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(ClusterConfig {
+            shards: vec!["a:1".into()],
+            eject_after: 0,
+            ..ClusterConfig::default()
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn placement_kind_parses() {
+        assert_eq!(PlacementKind::parse("hash").unwrap(), PlacementKind::Hash);
+        assert_eq!(
+            PlacementKind::parse("random").unwrap(),
+            PlacementKind::Random
+        );
+        assert!(PlacementKind::parse("round-robin").is_err());
+    }
+}

@@ -1,0 +1,194 @@
+//! Shape-aware placement: which shard should solve a request.
+//!
+//! The serve stack specializes per shape: the plan cache is keyed on
+//! `(n, dtype, config)` and the online tuner's kNN model trains on the
+//! sizes a shard actually sees. Routing every request of one shape to
+//! the same shard keeps both hot — a request for a size the shard has
+//! planned before hits its cache, and its model interpolates inside a
+//! dense local sample cloud instead of a diluted global one.
+//!
+//! [`ShapeKey`] buckets requests the same way the online tuner buckets
+//! its telemetry (log₁₀-spaced size bins × dtype), and
+//! [`RendezvousPolicy`] turns a key into a full preference order over
+//! shards via rendezvous (highest-random-weight) hashing: every
+//! `(key, shard)` pair gets a deterministic weight, and the order is
+//! shards sorted by weight. Losing a shard only re-homes the keys it
+//! owned — every other key keeps its primary, so failovers do not
+//! dump whole plan caches.
+//!
+//! [`RandomPolicy`] is the control arm for `bench_cluster`: same
+//! spill semantics, no affinity.
+
+use crate::gpu::spec::Dtype;
+use crate::util::rng::Pcg64;
+use std::sync::Mutex;
+
+/// The placement key of one request: its size bin and dtype. Requests
+/// with the same key share plans and tuner telemetry, so they belong on
+/// the same shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ShapeKey {
+    /// Log₁₀-spaced size bin — the same granularity the online tuner
+    /// bins its telemetry with (8 bins per decade), so one shard's
+    /// traffic concentrates whole bins, not scattered sizes.
+    pub size_bin: i64,
+    pub dtype: Dtype,
+}
+
+impl ShapeKey {
+    pub fn of(n: usize, dtype: Dtype) -> ShapeKey {
+        let size_bin = ((n.max(1) as f64).log10() * 8.0).round() as i64;
+        ShapeKey { size_bin, dtype }
+    }
+
+    fn hash_seed(&self) -> u64 {
+        let dt = match self.dtype {
+            Dtype::F32 => 0x9e37u64,
+            Dtype::F64 => 0x79b9u64,
+        };
+        mix64((self.size_bin as u64).wrapping_mul(0x2545_f491_4f6c_dd1d) ^ (dt << 48))
+    }
+}
+
+/// SplitMix64 finalizer: a cheap, well-distributed 64-bit mixer.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// A placement policy maps a request shape to a preference-ordered list
+/// of shard indices: `order[0]` is the primary, the rest is the spill /
+/// failover order.
+pub trait PlacementPolicy: Send + Sync {
+    fn order(&self, key: ShapeKey, n_shards: usize) -> Vec<usize>;
+
+    /// Short name for logs and the stats document.
+    fn name(&self) -> &'static str;
+}
+
+/// Rendezvous (highest-random-weight) hashing: deterministic affinity
+/// with minimal re-homing when the shard set changes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RendezvousPolicy;
+
+impl PlacementPolicy for RendezvousPolicy {
+    fn order(&self, key: ShapeKey, n_shards: usize) -> Vec<usize> {
+        let seed = key.hash_seed();
+        let mut weighted: Vec<(u64, usize)> = (0..n_shards)
+            .map(|i| (mix64(seed ^ (i as u64).wrapping_mul(0xc2b2_ae3d_27d4_eb4f)), i))
+            .collect();
+        // Highest weight first; ties (never in practice) break by index.
+        weighted.sort_by(|a, b| b.cmp(a));
+        weighted.into_iter().map(|(_, i)| i).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+}
+
+/// Uniform-random placement: the no-affinity control arm. Spill order
+/// is a fresh shuffle per request.
+#[derive(Debug)]
+pub struct RandomPolicy {
+    rng: Mutex<Pcg64>,
+}
+
+impl RandomPolicy {
+    pub fn new(seed: u64) -> RandomPolicy {
+        RandomPolicy {
+            rng: Mutex::new(Pcg64::new(seed)),
+        }
+    }
+}
+
+impl PlacementPolicy for RandomPolicy {
+    fn order(&self, _key: ShapeKey, n_shards: usize) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..n_shards).collect();
+        let mut rng = self.rng.lock().unwrap();
+        // Fisher–Yates.
+        for i in (1..order.len()).rev() {
+            let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+            order.swap(i, j);
+        }
+        order
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_keys_bucket_like_the_online_tuner() {
+        // Same bin ⇔ same key (for one dtype); an order of magnitude
+        // apart is always a different bin.
+        let a = ShapeKey::of(10_000, Dtype::F64);
+        let b = ShapeKey::of(10_200, Dtype::F64);
+        let c = ShapeKey::of(100_000, Dtype::F64);
+        assert_eq!(a, b, "nearby sizes share a bin");
+        assert_ne!(a, c);
+        assert_ne!(a, ShapeKey::of(10_000, Dtype::F32), "dtype splits bins");
+        assert_eq!(ShapeKey::of(0, Dtype::F64).size_bin, 0, "n=0 is clamped");
+    }
+
+    #[test]
+    fn rendezvous_is_deterministic_and_complete() {
+        let p = RendezvousPolicy;
+        let key = ShapeKey::of(50_000, Dtype::F64);
+        let o1 = p.order(key, 5);
+        let o2 = p.order(key, 5);
+        assert_eq!(o1, o2, "same key, same order");
+        let mut sorted = o1.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4], "a permutation of all shards");
+    }
+
+    #[test]
+    fn rendezvous_spreads_keys_and_rehomes_minimally() {
+        let p = RendezvousPolicy;
+        // Primaries over many bins should touch every shard.
+        let mut hit = [false; 4];
+        for bin in 0..64 {
+            let key = ShapeKey {
+                size_bin: bin,
+                dtype: Dtype::F64,
+            };
+            hit[p.order(key, 4)[0]] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "every shard owns some shape");
+        // Dropping the last shard re-homes only the keys it owned:
+        // rendezvous order restricted to the surviving set is stable.
+        for bin in 0..64 {
+            let key = ShapeKey {
+                size_bin: bin,
+                dtype: Dtype::F32,
+            };
+            let with4 = p.order(key, 4);
+            let with3 = p.order(key, 3);
+            let survivors: Vec<usize> = with4.iter().copied().filter(|&i| i < 3).collect();
+            assert_eq!(survivors, with3, "relative order survives shard loss");
+        }
+    }
+
+    #[test]
+    fn random_policy_permutes() {
+        let p = RandomPolicy::new(42);
+        let key = ShapeKey::of(1_000, Dtype::F64);
+        let mut seen_orders = std::collections::HashSet::new();
+        for _ in 0..32 {
+            let o = p.order(key, 4);
+            let mut sorted = o.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3]);
+            seen_orders.insert(o);
+        }
+        assert!(seen_orders.len() > 1, "not stuck on one order");
+    }
+}

@@ -1,0 +1,645 @@
+//! [`ShardRouter`]: a wire-speaking process that fronts N `serve
+//! --listen` shards.
+//!
+//! The router accepts the same protocol a [`crate::net::NetServer`]
+//! speaks, so existing clients point at it unchanged. Each request is
+//! placed by shape ([`ShapeKey`]): the placement policy yields a
+//! preference order over shards, the request goes to the first
+//! available one, and the reply is relayed back with the downstream
+//! request id. On a `Backpressure` reply the request **spills** to the
+//! next shard in the order; on a connection failure it **fails over**
+//! the same way (solves are idempotent — a replay on another shard is
+//! bit-identical, because every shard runs the same deterministic
+//! planner and kernels). Only when every candidate has refused does
+//! the client see an error (`Backpressure`, counted as `no_shard`).
+//!
+//! Per-connection structure mirrors the server: a reader thread
+//! decodes frames and makes the *first* placement attempt (so
+//! independent requests pipeline into the shards), and a writer thread
+//! waits each routed reply in submission order, driving spill /
+//! failover retries inline when the primary's reply turns out to be a
+//! failure. Replies to one downstream connection therefore come back
+//! in submission order, exactly like a single shard.
+
+use super::health::{self, HealthConfig};
+use super::placement::{PlacementPolicy, RandomPolicy, RendezvousPolicy, ShapeKey};
+use super::shards::{ShardTable, Transition};
+use super::{ClusterConfig, PlacementKind};
+use crate::api::{ApiError, SolveHandle, SolveSpec, SystemPayload};
+use crate::coordinator::metrics::{ClusterMetrics, NetMetrics};
+use crate::error::{Error, Result};
+use crate::net::client::promote_shared;
+use crate::net::wire::{read_frame, ErrorReply, Frame, WireError, VERSION};
+use crate::plan::SolveOptions;
+use crate::util::json::{obj, Json};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// One routed request as it moves from the reader to the writer: the
+/// downstream id, the (Arc-shared) payload kept for resubmission, the
+/// candidate shard order, and the in-flight attempt if the reader's
+/// placement succeeded.
+struct RoutedJob {
+    id: u64,
+    opts: SolveOptions,
+    deadline_ms: u32,
+    payload: SystemPayload<'static>,
+    /// Preference-ordered candidate shard indices (available shards
+    /// first, probeable-but-ejected ones appended as a last resort).
+    candidates: Vec<usize>,
+    /// Next index into `candidates` to try.
+    next: usize,
+    /// The shard currently solving this job, with its pending handle.
+    pending: Option<(usize, SolveHandle)>,
+}
+
+enum Outgoing {
+    Job(Box<RoutedJob>),
+    Frame(Frame),
+    AckThenShutdown,
+}
+
+struct RouterInner {
+    cfg: ClusterConfig,
+    shards: Arc<ShardTable>,
+    placement: Box<dyn PlacementPolicy>,
+    net: NetMetrics,
+    cluster: Arc<ClusterMetrics>,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    shutdown: Arc<AtomicBool>,
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next_conn_id: AtomicU64,
+    handlers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl RouterInner {
+    fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        let conns = self.conns.lock().unwrap();
+        for stream in conns.values() {
+            let _ = stream.shutdown(std::net::Shutdown::Read);
+        }
+    }
+}
+
+/// Handle to a running shard router. Dropping it shuts the router down.
+pub struct ShardRouter {
+    inner: Arc<RouterInner>,
+    local_addr: SocketAddr,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    health: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardRouter {
+    /// Bind `cfg.listen` and start routing to `cfg.shards`.
+    pub fn start(cfg: ClusterConfig) -> Result<ShardRouter> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(&cfg.listen)
+            .map_err(|e| Error::Service(format!("bind {}: {e}", cfg.listen)))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| Error::Service(format!("local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Service(format!("set_nonblocking: {e}")))?;
+        let shards = Arc::new(ShardTable::new(
+            cfg.shards.clone(),
+            cfg.auth_token.clone(),
+            cfg.max_frame_bytes,
+            cfg.eject_after,
+            cfg.readmit_after,
+        ));
+        let placement: Box<dyn PlacementPolicy> = match cfg.placement {
+            PlacementKind::Hash => Box::new(RendezvousPolicy),
+            PlacementKind::Random => Box::new(RandomPolicy::new(0x7061_7274)),
+        };
+        let cluster = Arc::new(ClusterMetrics::new(shards.len()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let health = health::spawn(
+            shards.clone(),
+            cluster.clone(),
+            shutdown.clone(),
+            HealthConfig {
+                interval: Duration::from_millis(cfg.health_interval_ms),
+                probe_timeout: Duration::from_millis(cfg.probe_timeout_ms),
+            },
+        )
+        .map_err(|e| Error::Service(format!("spawn health monitor: {e}")))?;
+        let inner = Arc::new(RouterInner {
+            cfg,
+            shards,
+            placement,
+            net: NetMetrics::default(),
+            cluster,
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            shutdown,
+            conns: Mutex::new(HashMap::new()),
+            next_conn_id: AtomicU64::new(0),
+            handlers: Mutex::new(Vec::new()),
+        });
+        let inner2 = inner.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("partisol-cluster-accept".into())
+            .spawn(move || accept_loop(listener, inner2))
+            .map_err(|e| Error::Service(format!("spawn acceptor: {e}")))?;
+        Ok(ShardRouter {
+            inner,
+            local_addr,
+            acceptor: Some(acceptor),
+            health: Some(health),
+        })
+    }
+
+    /// The bound address (the actual port when `listen` asked for `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The per-shard routing counters (shared with the stats frame).
+    pub fn cluster_metrics(&self) -> &ClusterMetrics {
+        &self.inner.cluster
+    }
+
+    /// The shard table (health state), for tests and diagnostics.
+    pub fn shards(&self) -> &ShardTable {
+        &self.inner.shards
+    }
+
+    /// The full router stats document (what a `StatsRequest` frame is
+    /// answered with).
+    pub fn stats_json(&self) -> Json {
+        router_stats_json(&self.inner)
+    }
+
+    /// Block until a `Shutdown` control frame arrives (or
+    /// [`ShardRouter::shutdown`] is called from another thread) and
+    /// every downstream connection has drained.
+    pub fn run_until_shutdown(&self) {
+        loop {
+            let open = self.inner.net.connections_open.load(Ordering::Relaxed);
+            if self.inner.shutting_down() && open == 0 {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Stop accepting, drain and join every connection, the health
+    /// monitor and the acceptor, and close the shard connections.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.inner.begin_shutdown();
+        if let Some(t) = self.acceptor.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.health.take() {
+            let _ = t.join();
+        }
+        let handlers: Vec<_> = self.inner.handlers.lock().unwrap().drain(..).collect();
+        for t in handlers {
+            let _ = t.join();
+        }
+        self.inner.shards.close_all();
+    }
+}
+
+impl Drop for ShardRouter {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<RouterInner>) {
+    loop {
+        if inner.shutting_down() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let _ = stream.set_nodelay(true);
+                let open = inner.net.connections_open.load(Ordering::Relaxed);
+                if open >= inner.cfg.max_conns as u64 {
+                    inner.net.sheds.fetch_add(1, Ordering::Relaxed);
+                    let mut w = BufWriter::new(&stream);
+                    let _ = Frame::Error(ErrorReply {
+                        id: 0,
+                        error: ApiError::Backpressure {
+                            queue_depth: inner.cfg.max_conns,
+                        },
+                    })
+                    .write_to(&mut w)
+                    .and_then(|_| std::io::Write::flush(&mut w));
+                    continue;
+                }
+                inner
+                    .net
+                    .connections_accepted
+                    .fetch_add(1, Ordering::Relaxed);
+                inner.net.connections_open.fetch_add(1, Ordering::Relaxed);
+                let conn_id = inner.next_conn_id.fetch_add(1, Ordering::Relaxed);
+                if let Ok(clone) = stream.try_clone() {
+                    inner.conns.lock().unwrap().insert(conn_id, clone);
+                }
+                let inner2 = inner.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("partisol-cluster-conn-{conn_id}"))
+                    .spawn(move || {
+                        conn_reader(stream, conn_id, &inner2);
+                        inner2.conns.lock().unwrap().remove(&conn_id);
+                        inner2.net.connections_open.fetch_sub(1, Ordering::Relaxed);
+                    });
+                match handle {
+                    Ok(h) => {
+                        let mut handlers = inner.handlers.lock().unwrap();
+                        handlers.retain(|t| !t.is_finished());
+                        handlers.push(h);
+                    }
+                    Err(e) => {
+                        crate::log_warn!("cluster: spawn handler for {peer}: {e}");
+                        inner.conns.lock().unwrap().remove(&conn_id);
+                        inner.net.connections_open.fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                crate::log_warn!("cluster: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Downstream-connection reader: decode frames, place requests, answer
+/// control frames. Mirrors the server's reader, with routing in place
+/// of local submission.
+fn conn_reader(stream: TcpStream, conn_id: u64, inner: &Arc<RouterInner>) {
+    if inner.cfg.read_timeout_ms > 0 {
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(inner.cfg.read_timeout_ms)));
+    }
+    let (tx, rx) = mpsc::channel::<Outgoing>();
+    let inflight = Arc::new(AtomicU64::new(0));
+    let writer = match stream.try_clone() {
+        Ok(wstream) => {
+            let inner2 = inner.clone();
+            let inflight2 = inflight.clone();
+            std::thread::Builder::new()
+                .name(format!("partisol-cluster-write-{conn_id}"))
+                .spawn(move || conn_writer(wstream, rx, inner2, inflight2))
+                .ok()
+        }
+        Err(e) => {
+            crate::log_warn!("cluster: clone stream for conn {conn_id}: {e}");
+            None
+        }
+    };
+    if writer.is_some() {
+        let mut authed = inner.cfg.auth_token.is_none();
+        let mut r = BufReader::new(&stream);
+        loop {
+            match read_frame(&mut r, inner.cfg.max_frame_bytes) {
+                Ok(frame) => {
+                    inner.net.frames_in.fetch_add(1, Ordering::Relaxed);
+                    if !authed {
+                        match &frame {
+                            Frame::Auth { token }
+                                if Some(token.as_str()) == inner.cfg.auth_token.as_deref() =>
+                            {
+                                authed = true;
+                                continue;
+                            }
+                            _ => {
+                                inner.net.unauthorized.fetch_add(1, Ordering::Relaxed);
+                                let _ = tx.send(Outgoing::Frame(Frame::Error(ErrorReply {
+                                    id: 0,
+                                    error: ApiError::Unauthorized,
+                                })));
+                                break;
+                            }
+                        }
+                    }
+                    if !handle_frame(frame, &tx, inner, &inflight) {
+                        break;
+                    }
+                }
+                Err(WireError::Closed) => break,
+                Err(WireError::Timeout) => {
+                    if inner.shutting_down() || inflight.load(Ordering::Acquire) == 0 {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    crate::log_warn!("cluster: conn {conn_id}: {e}; closing");
+                    let error = match &e {
+                        WireError::BadVersion(_) => ApiError::VersionMismatch { peer: VERSION },
+                        _ => ApiError::InvalidRequest(format!("protocol error: {e}")),
+                    };
+                    let _ = tx.send(Outgoing::Frame(Frame::Error(ErrorReply { id: 0, error })));
+                    break;
+                }
+            }
+        }
+    }
+    drop(tx);
+    if let Some(w) = writer {
+        let _ = w.join();
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+fn handle_frame(
+    frame: Frame,
+    tx: &mpsc::Sender<Outgoing>,
+    inner: &Arc<RouterInner>,
+    inflight: &Arc<AtomicU64>,
+) -> bool {
+    match frame {
+        Frame::Request(req) => {
+            let payload = promote_shared(req.payload);
+            let key = ShapeKey::of(payload.n(), payload.dtype());
+            let order = inner.placement.order(key, inner.shards.len());
+            // Available shards keep their placement order; ejected (but
+            // probeable) ones are appended as a last resort.
+            let (avail, rest): (Vec<usize>, Vec<usize>) =
+                order.into_iter().partition(|&s| inner.shards.available(s));
+            let mut candidates = avail;
+            candidates.extend(rest.into_iter().filter(|&s| inner.shards.probeable(s)));
+            let mut job = Box::new(RoutedJob {
+                id: req.id,
+                opts: req.opts,
+                deadline_ms: req.deadline_ms,
+                payload,
+                candidates,
+                next: 0,
+                pending: None,
+            });
+            // First placement here, so requests pipeline into the
+            // shards; failures fall through to the writer's retry loop.
+            place_next(inner, &mut job);
+            inflight.fetch_add(1, Ordering::AcqRel);
+            tx.send(Outgoing::Job(job)).is_ok()
+        }
+        Frame::Ping { nonce } => tx.send(Outgoing::Frame(Frame::Pong { nonce })).is_ok(),
+        Frame::StatsRequest => {
+            let json = router_stats_json(inner).to_string_compact();
+            tx.send(Outgoing::Frame(Frame::StatsResponse { json }))
+                .is_ok()
+        }
+        Frame::Shutdown => {
+            let _ = tx.send(Outgoing::AckThenShutdown);
+            false
+        }
+        Frame::Auth { .. } => true,
+        Frame::Response(_)
+        | Frame::Error(_)
+        | Frame::Pong { .. }
+        | Frame::StatsResponse { .. }
+        | Frame::ShutdownAck => {
+            let _ = tx.send(Outgoing::Frame(Frame::Error(ErrorReply {
+                id: 0,
+                error: ApiError::InvalidRequest("unexpected server-side frame kind".into()),
+            })));
+            false
+        }
+    }
+}
+
+/// Downstream-connection writer: wait each routed job (driving retries)
+/// and stream replies back in submission order.
+fn conn_writer(
+    stream: TcpStream,
+    rx: mpsc::Receiver<Outgoing>,
+    inner: Arc<RouterInner>,
+    inflight: Arc<AtomicU64>,
+) {
+    let mut w = BufWriter::new(stream);
+    for out in rx {
+        let frame = match out {
+            Outgoing::AckThenShutdown => {
+                let _ = Frame::ShutdownAck
+                    .write_to(&mut w)
+                    .and_then(|_| std::io::Write::flush(&mut w));
+                inner.net.frames_out.fetch_add(1, Ordering::Relaxed);
+                inner.begin_shutdown();
+                continue;
+            }
+            Outgoing::Frame(f) => f,
+            Outgoing::Job(mut job) => {
+                let frame = drive_job(&inner, &mut job);
+                inflight.fetch_sub(1, Ordering::AcqRel);
+                frame
+            }
+        };
+        if frame.write_to(&mut w).is_err() || std::io::Write::flush(&mut w).is_err() {
+            return;
+        }
+        inner.net.frames_out.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Wait the job's pending reply; on a retryable failure, spill /
+/// fail over to the next candidate until one answers or the candidate
+/// list is exhausted.
+fn drive_job(inner: &Arc<RouterInner>, job: &mut RoutedJob) -> Frame {
+    loop {
+        if let Some((shard, handle)) = job.pending.take() {
+            match handle.wait() {
+                Ok(resp) => {
+                    inner.shards.record_success(shard);
+                    inner.completed.fetch_add(1, Ordering::Relaxed);
+                    let mut wire_resp = crate::net::wire::Response::from_solve(&resp);
+                    wire_resp.id = job.id;
+                    return Frame::Response(wire_resp);
+                }
+                Err(e) if retryable(&e) => {
+                    note_abandon(inner, shard, &e);
+                }
+                Err(e) => {
+                    // A solve-level verdict (singular system, expired
+                    // deadline, invalid request): the shard answered,
+                    // the answer is an error — relay it.
+                    inner.shards.record_success(shard);
+                    inner.failed.fetch_add(1, Ordering::Relaxed);
+                    return Frame::Error(ErrorReply { id: job.id, error: e });
+                }
+            }
+        }
+        if !place_next(inner, job) {
+            // Every candidate refused: shed back to the client.
+            inner.cluster.no_shard.fetch_add(1, Ordering::Relaxed);
+            inner.failed.fetch_add(1, Ordering::Relaxed);
+            return Frame::Error(ErrorReply {
+                id: job.id,
+                error: ApiError::Backpressure {
+                    queue_depth: inner.shards.len(),
+                },
+            });
+        }
+    }
+}
+
+/// Try candidates from `job.next` on until a submission lands; sets
+/// `job.pending` and returns true, or returns false when exhausted.
+fn place_next(inner: &Arc<RouterInner>, job: &mut RoutedJob) -> bool {
+    while job.next < job.candidates.len() {
+        let shard = job.candidates[job.next];
+        job.next += 1;
+        if !inner.shards.probeable(shard) {
+            continue;
+        }
+        match try_submit(inner, shard, job) {
+            Ok(handle) => {
+                inner
+                    .cluster
+                    .shard(shard)
+                    .routed
+                    .fetch_add(1, Ordering::Relaxed);
+                job.pending = Some((shard, handle));
+                return true;
+            }
+            Err(e) => note_abandon(inner, shard, &e),
+        }
+    }
+    false
+}
+
+fn try_submit(
+    inner: &Arc<RouterInner>,
+    shard: usize,
+    job: &RoutedJob,
+) -> std::result::Result<SolveHandle, ApiError> {
+    let client = inner.shards.client(shard)?;
+    let deadline = (job.deadline_ms > 0).then(|| Duration::from_millis(job.deadline_ms as u64));
+    client.submit_deadline(
+        SolveSpec {
+            payload: job.payload.clone(),
+            opts: job.opts.clone(),
+        },
+        deadline,
+    )
+}
+
+/// Errors worth trying another shard for. Everything else is a
+/// per-request verdict the client should see.
+fn retryable(e: &ApiError) -> bool {
+    matches!(
+        e,
+        ApiError::Backpressure { .. }
+            | ApiError::Disconnected
+            | ApiError::Service(_)
+            | ApiError::Unauthorized
+            | ApiError::VersionMismatch { .. }
+    )
+}
+
+/// Book-keeping for abandoning a shard attempt: count the spill, and on
+/// connection-level failures feed the health state machine.
+fn note_abandon(inner: &Arc<RouterInner>, shard: usize, e: &ApiError) {
+    inner
+        .cluster
+        .shard(shard)
+        .spilled
+        .fetch_add(1, Ordering::Relaxed);
+    match e {
+        ApiError::Backpressure { .. } => {
+            // The shard is alive, just loaded — no health penalty.
+        }
+        ApiError::Unauthorized | ApiError::VersionMismatch { .. } => {
+            inner.shards.drop_client(shard);
+            if inner.shards.eject_permanently(shard) == Transition::Ejected {
+                inner
+                    .cluster
+                    .shard(shard)
+                    .ejections
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+            crate::log_warn!(
+                "cluster: shard {} ({}) permanently ejected: {e}",
+                shard,
+                inner.shards.addr(shard)
+            );
+        }
+        _ => {
+            inner
+                .cluster
+                .shard(shard)
+                .failovers
+                .fetch_add(1, Ordering::Relaxed);
+            inner.shards.drop_client(shard);
+            if inner.shards.record_failure(shard) == Transition::Ejected {
+                inner
+                    .cluster
+                    .shard(shard)
+                    .ejections
+                    .fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!(
+                    "cluster: shard {} ({}) ejected: {e}",
+                    shard,
+                    inner.shards.addr(shard)
+                );
+            }
+        }
+    }
+}
+
+/// The router's stats document: router-level counters, cluster sums,
+/// and a per-shard breakdown. Flat keys mirror the server's where the
+/// meaning matches, so [`crate::net::StatsSnapshot`] parses it; the
+/// cluster-specific fields ride the raw document.
+fn router_stats_json(inner: &RouterInner) -> Json {
+    let num = |v: u64| Json::Num(v as f64);
+    let load = |a: &AtomicU64| a.load(Ordering::Relaxed);
+    let shard_objs: Vec<Json> = (0..inner.shards.len())
+        .map(|i| {
+            let c = inner.cluster.shard(i);
+            obj(vec![
+                ("addr", Json::Str(inner.shards.addr(i).to_string())),
+                ("available", Json::Bool(inner.shards.available(i))),
+                ("routed", num(load(&c.routed))),
+                ("spilled", num(load(&c.spilled))),
+                ("failovers", num(load(&c.failovers))),
+                ("ejections", num(load(&c.ejections))),
+                ("readmissions", num(load(&c.readmissions))),
+            ])
+        })
+        .collect();
+    let sum = |f: fn(&crate::coordinator::metrics::ShardCounters) -> &AtomicU64| -> u64 {
+        inner.cluster.shards().iter().map(|s| load(f(s))).sum()
+    };
+    obj(vec![
+        ("completed", num(load(&inner.completed))),
+        ("failed", num(load(&inner.failed))),
+        ("cluster_routed", num(sum(|s| &s.routed))),
+        ("cluster_spilled", num(sum(|s| &s.spilled))),
+        ("cluster_failovers", num(sum(|s| &s.failovers))),
+        ("cluster_ejections", num(sum(|s| &s.ejections))),
+        ("cluster_readmissions", num(sum(|s| &s.readmissions))),
+        ("cluster_no_shard", num(load(&inner.cluster.no_shard))),
+        ("placement", Json::Str(inner.placement.name().to_string())),
+        (
+            "connections_accepted",
+            num(load(&inner.net.connections_accepted)),
+        ),
+        ("connections_open", num(load(&inner.net.connections_open))),
+        ("frames_in", num(load(&inner.net.frames_in))),
+        ("frames_out", num(load(&inner.net.frames_out))),
+        ("sheds", num(load(&inner.net.sheds))),
+        ("unauthorized", num(load(&inner.net.unauthorized))),
+        ("shards", Json::Arr(shard_objs)),
+    ])
+}

@@ -1,0 +1,241 @@
+//! [`ShardTable`]: the router's view of its backend shards.
+//!
+//! Each shard is one `serve --listen` process. The table keeps, per
+//! shard, a lazily-dialed [`RemoteClient`] (plain mode — the router
+//! must *observe* a shard death to fail over, so the client's own
+//! reconnect layer stays off) and the health state machine:
+//!
+//! ```text
+//!            eject_after consecutive failures
+//!   healthy ────────────────────────────────▶ ejected
+//!      ▲                                         │
+//!      └─────────────────────────────────────────┘
+//!            readmit_after consecutive successes
+//!            (health probes keep testing ejected shards)
+//! ```
+//!
+//! A shard that rejects the router outright — wrong auth token, wire
+//! protocol version mismatch — is ejected *permanently*: redialing
+//! cannot fix a misconfigured peer, so probes stop and placement never
+//! offers it again.
+
+use crate::api::ApiError;
+use crate::net::{ConnectOptions, RemoteClient};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A health-state transition caused by one success/failure record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transition {
+    None,
+    /// The shard just crossed the consecutive-failure threshold.
+    Ejected,
+    /// The shard just crossed the consecutive-success threshold.
+    Readmitted,
+}
+
+/// One shard's connection slot and health counters.
+pub struct ShardState {
+    pub addr: String,
+    client: Mutex<Option<Arc<RemoteClient>>>,
+    healthy: AtomicBool,
+    permanent: AtomicBool,
+    consec_failures: AtomicU32,
+    consec_successes: AtomicU32,
+}
+
+impl ShardState {
+    fn new(addr: String) -> ShardState {
+        ShardState {
+            addr,
+            client: Mutex::new(None),
+            healthy: AtomicBool::new(true),
+            permanent: AtomicBool::new(false),
+            consec_failures: AtomicU32::new(0),
+            consec_successes: AtomicU32::new(0),
+        }
+    }
+}
+
+/// The router's shard set. Indices are stable (they are the identity
+/// used by placement and the per-shard metrics).
+pub struct ShardTable {
+    shards: Vec<ShardState>,
+    /// Credentials forwarded to every shard dial.
+    auth_token: Option<String>,
+    max_frame_bytes: usize,
+    eject_after: u32,
+    readmit_after: u32,
+}
+
+impl ShardTable {
+    pub fn new(
+        addrs: Vec<String>,
+        auth_token: Option<String>,
+        max_frame_bytes: usize,
+        eject_after: u32,
+        readmit_after: u32,
+    ) -> ShardTable {
+        ShardTable {
+            shards: addrs.into_iter().map(ShardState::new).collect(),
+            auth_token,
+            max_frame_bytes,
+            eject_after: eject_after.max(1),
+            readmit_after: readmit_after.max(1),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn addr(&self, i: usize) -> &str {
+        &self.shards[i].addr
+    }
+
+    /// Healthy and not permanently ejected: placement offers this shard.
+    pub fn available(&self, i: usize) -> bool {
+        let s = &self.shards[i];
+        s.healthy.load(Ordering::Acquire) && !s.permanent.load(Ordering::Acquire)
+    }
+
+    /// Worth retrying eventually (not rejected for good): the health
+    /// monitor keeps probing these, and the router's last-ditch pass
+    /// tries them when every available shard has failed.
+    pub fn probeable(&self, i: usize) -> bool {
+        !self.shards[i].permanent.load(Ordering::Acquire)
+    }
+
+    /// The shard's client, dialing (with the router's credentials) if
+    /// none is connected. A dial failure is the caller's to record via
+    /// [`ShardTable::record_failure`].
+    pub fn client(&self, i: usize) -> Result<Arc<RemoteClient>, ApiError> {
+        let mut slot = self.shards[i].client.lock().unwrap();
+        if let Some(c) = slot.as_ref() {
+            return Ok(c.clone());
+        }
+        let c = Arc::new(RemoteClient::connect_opts(
+            &self.shards[i].addr,
+            ConnectOptions {
+                max_frame_bytes: self.max_frame_bytes,
+                auth_token: self.auth_token.clone(),
+                reconnect: None,
+            },
+        )?);
+        *slot = Some(c.clone());
+        Ok(c)
+    }
+
+    /// Drop the shard's connection (it is presumed dead); the next
+    /// [`ShardTable::client`] call redials.
+    pub fn drop_client(&self, i: usize) {
+        *self.shards[i].client.lock().unwrap() = None;
+    }
+
+    /// Record a successful round-trip (probe or routed request).
+    pub fn record_success(&self, i: usize) -> Transition {
+        let s = &self.shards[i];
+        if s.permanent.load(Ordering::Acquire) {
+            return Transition::None;
+        }
+        s.consec_failures.store(0, Ordering::Relaxed);
+        let run = s.consec_successes.fetch_add(1, Ordering::Relaxed) + 1;
+        if !s.healthy.load(Ordering::Acquire) && run >= self.readmit_after {
+            s.healthy.store(true, Ordering::Release);
+            return Transition::Readmitted;
+        }
+        Transition::None
+    }
+
+    /// Record a failed round-trip (probe failure, dial failure, or a
+    /// connection that died under a routed request).
+    pub fn record_failure(&self, i: usize) -> Transition {
+        let s = &self.shards[i];
+        if s.permanent.load(Ordering::Acquire) {
+            return Transition::None;
+        }
+        s.consec_successes.store(0, Ordering::Relaxed);
+        let run = s.consec_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        if s.healthy.load(Ordering::Acquire) && run >= self.eject_after {
+            s.healthy.store(false, Ordering::Release);
+            return Transition::Ejected;
+        }
+        Transition::None
+    }
+
+    /// Eject for good (auth rejection, protocol version mismatch —
+    /// conditions a redial cannot fix). Returns `Ejected` the first
+    /// time, `None` on repeats.
+    pub fn eject_permanently(&self, i: usize) -> Transition {
+        let s = &self.shards[i];
+        let was_permanent = s.permanent.swap(true, Ordering::AcqRel);
+        let was_healthy = s.healthy.swap(false, Ordering::AcqRel);
+        if !was_permanent && was_healthy {
+            Transition::Ejected
+        } else {
+            Transition::None
+        }
+    }
+
+    /// Tear down every connection (router shutdown).
+    pub fn close_all(&self) {
+        for s in &self.shards {
+            *s.client.lock().unwrap() = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(n: usize) -> ShardTable {
+        let addrs = (0..n).map(|i| format!("127.0.0.1:{}", 7071 + i)).collect();
+        ShardTable::new(addrs, None, 1 << 20, 3, 2)
+    }
+
+    #[test]
+    fn ejects_after_consecutive_failures_and_readmits_after_successes() {
+        let t = table(2);
+        assert!(t.available(0));
+        assert_eq!(t.record_failure(0), Transition::None);
+        assert_eq!(t.record_failure(0), Transition::None);
+        assert_eq!(t.record_failure(0), Transition::Ejected);
+        assert!(!t.available(0));
+        assert!(t.available(1), "only the failing shard is ejected");
+        // One success is not enough to readmit (readmit_after = 2)...
+        assert_eq!(t.record_success(0), Transition::None);
+        assert_eq!(t.record_success(0), Transition::Readmitted);
+        assert!(t.available(0));
+    }
+
+    #[test]
+    fn interleaved_success_resets_the_failure_run() {
+        let t = table(1);
+        t.record_failure(0);
+        t.record_failure(0);
+        t.record_success(0);
+        assert_eq!(t.record_failure(0), Transition::None);
+        assert_eq!(t.record_failure(0), Transition::None);
+        assert_eq!(t.record_failure(0), Transition::Ejected, "run restarts");
+    }
+
+    #[test]
+    fn permanent_ejection_is_terminal() {
+        let t = table(2);
+        assert_eq!(t.eject_permanently(1), Transition::Ejected);
+        assert_eq!(t.eject_permanently(1), Transition::None, "idempotent");
+        assert!(!t.available(1));
+        assert!(!t.probeable(1));
+        // No amount of success brings it back.
+        for _ in 0..5 {
+            assert_eq!(t.record_success(1), Transition::None);
+        }
+        assert!(!t.available(1));
+        assert!(t.probeable(0), "the healthy shard keeps being probed");
+    }
+}

@@ -45,6 +45,22 @@ impl TomlValue {
             _ => None,
         }
     }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// An array of strings (e.g. `cluster.shards`); `None` when the
+    /// value is not an array or any element is not a string.
+    pub fn as_str_array(&self) -> Option<Vec<String>> {
+        self.as_array()?
+            .iter()
+            .map(|v| v.as_str().map(str::to_string))
+            .collect()
+    }
 }
 
 /// Flat map of `section.key` → value.
@@ -168,6 +184,18 @@ mod tests {
             TomlValue::Array(v) => assert_eq!(v.len(), 5),
             other => panic!("expected array, got {other:?}"),
         }
+        assert_eq!(t["gpu.m_grid"].as_array().map(|a| a.len()), Some(5));
+        assert!(t["gpu.m_grid"].as_str_array().is_none(), "ints, not strings");
+    }
+
+    #[test]
+    fn string_arrays_round_trip() {
+        let t = parse(r#"shards = ["127.0.0.1:7071", "127.0.0.1:7072"]"#).unwrap();
+        assert_eq!(
+            t["shards"].as_str_array().unwrap(),
+            vec!["127.0.0.1:7071".to_string(), "127.0.0.1:7072".to_string()]
+        );
+        assert!(TomlValue::Int(3).as_array().is_none());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! parser.
 
 use super::parser::{parse, TomlTable};
+use crate::cluster::{ClusterConfig, PlacementKind};
 use crate::error::{Error, Result};
 use crate::gpu::spec::{Dtype, GpuCard};
 use crate::net::NetConfig;
@@ -77,6 +78,9 @@ pub struct Config {
     /// Network serving layer (`[net]` table; used by `serve --listen`
     /// and `NetServer::start`).
     pub net: NetConfig,
+    /// Cluster tier (`[cluster]` table; used by the `cluster` command
+    /// and `ShardRouter::start`). Inert unless shards are configured.
+    pub cluster: ClusterConfig,
     /// Kernel-variant selection policy (`[kernel]` table): when the
     /// planner picks the SoA lane kernel or the vectorized
     /// single-system kernel over the scalar sweeps.
@@ -104,6 +108,7 @@ impl Default for Config {
             pool_size: crate::exec::default_pool_size(),
             online: OnlineTuneConfig::default(),
             net: NetConfig::default(),
+            cluster: ClusterConfig::default(),
             kernel: KernelConfig::default(),
             robust: RobustConfig::default(),
         }
@@ -237,6 +242,56 @@ impl Config {
         if let Some(v) = t.get("net.max_frame_bytes") {
             cfg.net.max_frame_bytes = int_field(v, "net.max_frame_bytes")?;
         }
+        if let Some(v) = t.get("net.auth_token") {
+            let token = v
+                .as_str()
+                .ok_or_else(|| Error::Config("net.auth_token must be a string".into()))?;
+            cfg.net.auth_token = (!token.is_empty()).then(|| token.to_string());
+        }
+        if let Some(v) = t.get("cluster.listen") {
+            cfg.cluster.listen = v
+                .as_str()
+                .ok_or_else(|| Error::Config("cluster.listen must be a string".into()))?
+                .to_string();
+        }
+        if let Some(v) = t.get("cluster.shards") {
+            cfg.cluster.shards = v.as_str_array().ok_or_else(|| {
+                Error::Config("cluster.shards must be an array of strings".into())
+            })?;
+        }
+        if let Some(v) = t.get("cluster.placement") {
+            cfg.cluster.placement = PlacementKind::parse(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("cluster.placement must be a string".into()))?,
+            )?;
+        }
+        if let Some(v) = t.get("cluster.health_interval_ms") {
+            cfg.cluster.health_interval_ms = int_field(v, "cluster.health_interval_ms")? as u64;
+        }
+        if let Some(v) = t.get("cluster.probe_timeout_ms") {
+            cfg.cluster.probe_timeout_ms = int_field(v, "cluster.probe_timeout_ms")? as u64;
+        }
+        if let Some(v) = t.get("cluster.eject_after") {
+            cfg.cluster.eject_after = int_field(v, "cluster.eject_after")? as u32;
+        }
+        if let Some(v) = t.get("cluster.readmit_after") {
+            cfg.cluster.readmit_after = int_field(v, "cluster.readmit_after")? as u32;
+        }
+        if let Some(v) = t.get("cluster.auth_token") {
+            let token = v
+                .as_str()
+                .ok_or_else(|| Error::Config("cluster.auth_token must be a string".into()))?;
+            cfg.cluster.auth_token = (!token.is_empty()).then(|| token.to_string());
+        }
+        if let Some(v) = t.get("cluster.max_conns") {
+            cfg.cluster.max_conns = int_field(v, "cluster.max_conns")?;
+        }
+        if let Some(v) = t.get("cluster.read_timeout_ms") {
+            cfg.cluster.read_timeout_ms = int_field(v, "cluster.read_timeout_ms")? as u64;
+        }
+        if let Some(v) = t.get("cluster.max_frame_bytes") {
+            cfg.cluster.max_frame_bytes = int_field(v, "cluster.max_frame_bytes")?;
+        }
         if let Some(v) = t.get("kernel.mode") {
             cfg.kernel.enabled = match v.as_str() {
                 Some("auto") => true,
@@ -295,6 +350,12 @@ impl Config {
         cfg.net.validate()?;
         cfg.kernel.validate()?;
         cfg.robust.validate()?;
+        // The cluster table is inert (and unvalidated) until shards are
+        // actually configured — a config without a `[cluster]` section
+        // must stay loadable.
+        if !cfg.cluster.shards.is_empty() {
+            cfg.cluster.validate()?;
+        }
         Ok(cfg)
     }
 }
@@ -416,6 +477,51 @@ mod tests {
         assert!(Config::from_str("[net]\nmax_conns = 0").is_err());
         assert!(Config::from_str("[net]\nmax_frame_bytes = 16").is_err());
         assert!(Config::from_str("[net]\naddr = \"\"").is_err());
+    }
+
+    #[test]
+    fn net_auth_token_roundtrips() {
+        let c = Config::from_str("[net]\nauth_token = \"s3cret\"").unwrap();
+        assert_eq!(c.net.auth_token.as_deref(), Some("s3cret"));
+        assert!(Config::default().net.auth_token.is_none());
+        // Empty string = unset (explicitly disabling auth in a file).
+        let c = Config::from_str("[net]\nauth_token = \"\"").unwrap();
+        assert!(c.net.auth_token.is_none());
+    }
+
+    #[test]
+    fn cluster_knobs_roundtrip_and_validate() {
+        let c = Config::from_str(
+            r#"
+            [cluster]
+            listen = "0.0.0.0:7070"
+            shards = ["10.0.0.1:7071", "10.0.0.2:7071"]
+            placement = "random"
+            health_interval_ms = 100
+            probe_timeout_ms = 400
+            eject_after = 5
+            readmit_after = 3
+            auth_token = "tok"
+            max_conns = 16
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.cluster.listen, "0.0.0.0:7070");
+        assert_eq!(c.cluster.shards.len(), 2);
+        assert_eq!(c.cluster.placement, PlacementKind::Random);
+        assert_eq!(c.cluster.health_interval_ms, 100);
+        assert_eq!(c.cluster.probe_timeout_ms, 400);
+        assert_eq!(c.cluster.eject_after, 5);
+        assert_eq!(c.cluster.readmit_after, 3);
+        assert_eq!(c.cluster.auth_token.as_deref(), Some("tok"));
+        assert_eq!(c.cluster.max_conns, 16);
+        // Without a [cluster] section the table stays inert.
+        let c = Config::from_str("[service]\nworkers = 2").unwrap();
+        assert!(c.cluster.shards.is_empty());
+        // But a configured cluster is validated.
+        assert!(Config::from_str("[cluster]\nshards = [\"a:1\"]\neject_after = 0").is_err());
+        assert!(Config::from_str("[cluster]\nshards = [4, 5]").is_err());
+        assert!(Config::from_str("[cluster]\nplacement = \"robin\"").is_err());
     }
 
     #[test]

@@ -118,6 +118,9 @@ pub struct NetMetrics {
     /// Requests whose per-request deadline expired before the solve
     /// completed (the client got a `Timeout` error frame).
     pub deadline_expired: AtomicU64,
+    /// Connections rejected by the first-frame auth check (missing or
+    /// wrong `[net] auth_token`).
+    pub unauthorized: AtomicU64,
 }
 
 impl NetMetrics {
@@ -129,6 +132,68 @@ impl NetMetrics {
         snap.net_frames_out = self.frames_out.load(Ordering::Relaxed);
         snap.net_sheds = self.sheds.load(Ordering::Relaxed);
         snap.net_deadline_expired = self.deadline_expired.load(Ordering::Relaxed);
+        snap.net_unauthorized = self.unauthorized.load(Ordering::Relaxed);
+    }
+}
+
+/// Per-shard routing counters of one cluster-router shard slot.
+#[derive(Default)]
+pub struct ShardCounters {
+    /// Requests whose first placement attempt was this shard.
+    pub routed: AtomicU64,
+    /// Requests moved off this shard to the next replica (a
+    /// `Backpressure` shed or a failover — the failover subset is also
+    /// counted below).
+    pub spilled: AtomicU64,
+    /// Spills caused by a dead connection: the request was resubmitted
+    /// to the next replica after this shard disconnected mid-flight.
+    pub failovers: AtomicU64,
+    /// Healthy → ejected transitions (consecutive ping failures, or a
+    /// permanent version-mismatch ejection).
+    pub ejections: AtomicU64,
+    /// Ejected → healthy transitions (consecutive successful pings).
+    pub readmissions: AtomicU64,
+}
+
+/// Counters of the cluster tier ([`crate::cluster::ShardRouter`]): one
+/// [`ShardCounters`] slot per configured shard plus router-level
+/// admission counters. Lives here — like [`NetMetrics`] — so one
+/// [`MetricsSnapshot`] can describe a whole routing stack.
+pub struct ClusterMetrics {
+    shards: Vec<ShardCounters>,
+    /// Requests that exhausted every replica (all shards ejected or
+    /// shedding) and were answered with an error.
+    pub no_shard: AtomicU64,
+}
+
+impl ClusterMetrics {
+    /// One counter slot per configured shard.
+    pub fn new(n_shards: usize) -> ClusterMetrics {
+        ClusterMetrics {
+            shards: (0..n_shards).map(|_| ShardCounters::default()).collect(),
+            no_shard: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shard(&self, i: usize) -> &ShardCounters {
+        &self.shards[i]
+    }
+
+    pub fn shards(&self) -> &[ShardCounters] {
+        &self.shards
+    }
+
+    /// Copy the cluster totals into a snapshot.
+    pub fn fill(&self, snap: &mut MetricsSnapshot) {
+        let sum = |f: fn(&ShardCounters) -> &AtomicU64| -> u64 {
+            self.shards.iter().map(|s| f(s).load(Ordering::Relaxed)).sum()
+        };
+        snap.cluster_routed = sum(|s| &s.routed);
+        snap.cluster_spilled = sum(|s| &s.spilled);
+        snap.cluster_failovers = sum(|s| &s.failovers);
+        snap.cluster_ejections = sum(|s| &s.ejections);
+        snap.cluster_readmissions = sum(|s| &s.readmissions);
+        snap.cluster_no_shard = self.no_shard.load(Ordering::Relaxed);
     }
 }
 
@@ -202,6 +267,20 @@ pub struct MetricsSnapshot {
     pub net_sheds: u64,
     /// Network layer: per-request deadlines that expired server-side.
     pub net_deadline_expired: u64,
+    /// Network layer: connections rejected by the first-frame auth check.
+    pub net_unauthorized: u64,
+    /// Cluster tier: requests placed on their first-choice shard.
+    pub cluster_routed: u64,
+    /// Cluster tier: requests moved to the next replica (shed/failover).
+    pub cluster_spilled: u64,
+    /// Cluster tier: spills caused by a dead shard connection.
+    pub cluster_failovers: u64,
+    /// Cluster tier: healthy → ejected shard transitions.
+    pub cluster_ejections: u64,
+    /// Cluster tier: ejected → healthy shard transitions.
+    pub cluster_readmissions: u64,
+    /// Cluster tier: requests that exhausted every replica.
+    pub cluster_no_shard: u64,
     pub mean_e2e_us: f64,
     pub p50_e2e_us: f64,
     pub p99_e2e_us: f64,
@@ -277,6 +356,13 @@ impl Metrics {
             net_frames_out: 0,
             net_sheds: 0,
             net_deadline_expired: 0,
+            net_unauthorized: 0,
+            cluster_routed: 0,
+            cluster_spilled: 0,
+            cluster_failovers: 0,
+            cluster_ejections: 0,
+            cluster_readmissions: 0,
+            cluster_no_shard: 0,
             mean_e2e_us: self.e2e_latency.mean_us(),
             p50_e2e_us: self.e2e_latency.percentile_us(50.0),
             p99_e2e_us: self.e2e_latency.percentile_us(99.0),
@@ -355,6 +441,7 @@ mod tests {
             (0, 0, 0),
             "service snapshots default the net counters to zero"
         );
+        net.unauthorized.fetch_add(4, Ordering::Relaxed);
         net.fill(&mut s);
         assert_eq!(s.net_connections_accepted, 7);
         assert_eq!(s.net_connections_open, 2);
@@ -362,6 +449,30 @@ mod tests {
         assert_eq!(s.net_frames_out, 29);
         assert_eq!(s.net_sheds, 5);
         assert_eq!(s.net_deadline_expired, 1);
+        assert_eq!(s.net_unauthorized, 4);
+    }
+
+    #[test]
+    fn cluster_counters_sum_per_shard_into_the_snapshot() {
+        let c = ClusterMetrics::new(3);
+        c.shard(0).routed.fetch_add(10, Ordering::Relaxed);
+        c.shard(1).routed.fetch_add(5, Ordering::Relaxed);
+        c.shard(1).spilled.fetch_add(2, Ordering::Relaxed);
+        c.shard(2).failovers.fetch_add(1, Ordering::Relaxed);
+        c.shard(2).spilled.fetch_add(1, Ordering::Relaxed);
+        c.shard(2).ejections.fetch_add(1, Ordering::Relaxed);
+        c.shard(2).readmissions.fetch_add(1, Ordering::Relaxed);
+        c.no_shard.fetch_add(9, Ordering::Relaxed);
+        let mut s = Metrics::default().snapshot();
+        assert_eq!(s.cluster_routed, 0, "service snapshots zero the cluster tier");
+        c.fill(&mut s);
+        assert_eq!(s.cluster_routed, 15);
+        assert_eq!(s.cluster_spilled, 3);
+        assert_eq!(s.cluster_failovers, 1);
+        assert_eq!(s.cluster_ejections, 1);
+        assert_eq!(s.cluster_readmissions, 1);
+        assert_eq!(s.cluster_no_shard, 9);
+        assert_eq!(c.shards().len(), 3);
     }
 
     #[test]

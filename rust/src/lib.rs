@@ -38,13 +38,20 @@
 //! * [`net`] — the network serving layer: versioned binary wire
 //!   protocol, `NetServer` (TCP acceptor + per-connection pipelined
 //!   handlers with deadline-aware admission control and load shedding)
-//!   and `RemoteClient`, the wire twin of `Client`.
+//!   and `RemoteClient`, the wire twin of `Client` (with an optional
+//!   reconnect-and-replay layer for resilient clients).
+//! * [`cluster`] — the cluster tier: `ShardRouter` places requests
+//!   across N serve processes by shape (rendezvous hashing on size-bin
+//!   × dtype, so each shard's plan cache and online model specialize),
+//!   spills on backpressure, fails over on shard death, and
+//!   ejects/readmits shards via a ping health monitor.
 //! * [`data`] — the paper's published tables embedded as typed datasets.
 //! * [`util`], [`config`], [`cli`], [`testkit`] — offline substrates
 //!   (RNG, stats, JSON, tables, TOML-subset config, CLI, property testing).
 
 pub mod api;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

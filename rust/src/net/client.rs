@@ -16,20 +16,85 @@
 //!
 //! `connect` performs a one-ping handshake, so a server at its
 //! connection cap fails the *connect* with the connection-level
-//! `Backpressure` it shed us with — distinguishable from a crash.
+//! `Backpressure` it shed us with, and a server speaking a different
+//! protocol version fails it with [`ApiError::VersionMismatch`] — both
+//! distinguishable from a refused connection (`ApiError::Service`) and
+//! from a crash (`Disconnected`).
+//!
+//! ## Resilient mode
+//!
+//! [`ConnectOptions::reconnect`] arms a reconnect layer: when the
+//! connection drops, the reader thread redials the same address under
+//! bounded exponential backoff and **replays every in-flight request**
+//! (ids unchanged) on the new connection before new submissions
+//! proceed. Solves are idempotent — same system, same answer — so a
+//! killed server fails no handle that can be safely replayed; callers
+//! keep their [`SolveHandle`]s and never observe the outage (server-side
+//! deadlines restart on the replayed connection). Requests are buffered
+//! `Arc`-shared for replay, so retries clone pointers, not diagonals.
+//! Permanent rejections (wrong auth token, protocol version mismatch)
+//! are not retried.
 
+use super::stats::StatsSnapshot;
 use super::wire::{read_frame, write_request, Frame, WireError};
 use super::DEFAULT_MAX_FRAME_BYTES;
 use crate::api::{ApiError, SolveHandle, SolveSpec, SystemPayload, SystemSource};
 use crate::coordinator::service::Reply;
 use crate::coordinator::SolveResponse;
-use crate::util::json::Json;
-use std::collections::HashMap;
+use crate::plan::SolveOptions;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Bounded exponential backoff for the resilient client's redial loop.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReconnectPolicy {
+    /// Redial attempts per outage before the client gives up and fails
+    /// its in-flight handles.
+    pub max_attempts: u32,
+    /// Backoff before the second attempt (the first redial is
+    /// immediate); doubled per failure up to `max_backoff`.
+    pub initial_backoff: Duration,
+    pub max_backoff: Duration,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        ReconnectPolicy {
+            max_attempts: 8,
+            initial_backoff: Duration::from_millis(50),
+            max_backoff: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Connection options for [`RemoteClient::connect_opts`].
+#[derive(Clone, Debug)]
+pub struct ConnectOptions {
+    /// Inbound frame-size cap (must admit the largest expected solution
+    /// frame).
+    pub max_frame_bytes: usize,
+    /// Pre-shared token presented as the connection's first frame
+    /// (required by servers configured with `[net] auth_token`; open
+    /// servers ignore it).
+    pub auth_token: Option<String>,
+    /// Arm the reconnect layer. `None` (the default) keeps the classic
+    /// fail-fast behavior: a dropped connection poisons the client.
+    pub reconnect: Option<ReconnectPolicy>,
+}
+
+impl Default for ConnectOptions {
+    fn default() -> Self {
+        ConnectOptions {
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            auth_token: None,
+            reconnect: None,
+        }
+    }
+}
 
 /// Control replies (everything that is not a per-request solve reply).
 enum ControlMsg {
@@ -38,18 +103,47 @@ enum ControlMsg {
     ShutdownAck,
 }
 
+/// A request retained for replay-on-reconnect (resilient mode only).
+/// The payload is `Arc`-shared, so the copy here is a pointer.
+struct ReplayEntry {
+    opts: SolveOptions,
+    deadline_ms: u32,
+    payload: SystemPayload<'static>,
+}
+
+/// The current connection: writer + a raw handle for teardown. `None`
+/// while an outage is being redialed — submitters block on the condvar
+/// until the writer returns or the client is poisoned.
+#[derive(Default)]
+struct ConnSlot {
+    writer: Option<BufWriter<TcpStream>>,
+    stream: Option<TcpStream>,
+}
+
 struct Shared {
+    addr: String,
+    opts: ConnectOptions,
     /// In-flight request ids → reply channels ([`SolveHandle`] rx ends).
     pending: Mutex<HashMap<u64, mpsc::Sender<Reply>>>,
+    /// Resilient mode: in-flight requests kept for replay, in id order
+    /// (the order the server originally saw them).
+    replay: Mutex<BTreeMap<u64, ReplayEntry>>,
     /// At most one control round-trip is in flight at a time.
     control: Mutex<Option<mpsc::Sender<ControlMsg>>>,
-    /// Set once the reader thread observes a dead connection.
+    conn: Mutex<ConnSlot>,
+    conn_cv: Condvar,
+    /// Set once the connection is unusable for good (poisoned).
     dead: AtomicBool,
+    /// Set by `close`/`drop`: stops the reader from redialing.
+    closing: AtomicBool,
     /// The connection-level error (id 0 frame) the server sent before
-    /// closing, if any — e.g. the over-`max_conns` Backpressure shed.
-    /// Surfaced instead of a bare `Disconnected` so callers can tell a
-    /// shed from a crash.
+    /// closing, if any — e.g. the over-`max_conns` Backpressure shed,
+    /// an auth rejection, or a protocol version mismatch. Surfaced
+    /// instead of a bare `Disconnected` so callers can tell them apart.
     conn_error: Mutex<Option<ApiError>>,
+    /// Successful redials and requests replayed across them.
+    reconnects: AtomicU64,
+    replayed: AtomicU64,
 }
 
 impl Shared {
@@ -58,7 +152,11 @@ impl Shared {
     fn poison(&self) {
         self.dead.store(true, Ordering::Release);
         self.pending.lock().unwrap().clear();
+        self.replay.lock().unwrap().clear();
         *self.control.lock().unwrap() = None;
+        // Wake submitters blocked on an outage so they observe `dead`.
+        drop(self.conn.lock().unwrap());
+        self.conn_cv.notify_all();
     }
 
     /// Why this connection is unusable: the server's connection-level
@@ -70,60 +168,113 @@ impl Shared {
             .clone()
             .unwrap_or(ApiError::Disconnected)
     }
+
+    /// Record a connection-level cause, keeping the first one.
+    fn set_conn_error(&self, e: ApiError) {
+        let mut slot = self.conn_error.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+    }
+
+    /// True when redialing cannot help: the server rejected this client
+    /// for good (credentials, protocol version), not transiently.
+    fn permanently_rejected(&self) -> bool {
+        matches!(
+            *self.conn_error.lock().unwrap(),
+            Some(ApiError::Unauthorized) | Some(ApiError::VersionMismatch { .. })
+        )
+    }
 }
 
 /// A connected remote solve client.
 pub struct RemoteClient {
-    writer: Mutex<BufWriter<TcpStream>>,
-    stream: TcpStream,
     shared: Arc<Shared>,
     next_id: AtomicU64,
-    max_frame_bytes: usize,
     reader: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Dial, present credentials, and return the raw stream plus a buffered
+/// writer on its clone.
+fn open_stream(
+    addr: &str,
+    opts: &ConnectOptions,
+) -> std::io::Result<(TcpStream, BufWriter<TcpStream>)> {
+    let stream = TcpStream::connect(addr)?;
+    let _ = stream.set_nodelay(true);
+    let mut writer = BufWriter::new(stream.try_clone()?);
+    if let Some(token) = &opts.auth_token {
+        Frame::Auth {
+            token: token.clone(),
+        }
+        .write_to(&mut writer)?;
+        writer.flush()?;
+    }
+    Ok((stream, writer))
 }
 
 impl RemoteClient {
     /// Connect to a [`crate::net::NetServer`] at `addr`
     /// (`host:port`).
     pub fn connect(addr: &str) -> Result<RemoteClient, ApiError> {
-        RemoteClient::connect_with(addr, DEFAULT_MAX_FRAME_BYTES)
+        RemoteClient::connect_opts(addr, ConnectOptions::default())
     }
 
     /// Connect with an explicit inbound frame-size cap (must admit the
     /// largest expected solution frame).
     pub fn connect_with(addr: &str, max_frame_bytes: usize) -> Result<RemoteClient, ApiError> {
-        let stream = TcpStream::connect(addr)
+        RemoteClient::connect_opts(
+            addr,
+            ConnectOptions {
+                max_frame_bytes,
+                ..ConnectOptions::default()
+            },
+        )
+    }
+
+    /// Connect with full [`ConnectOptions`] (frame cap, auth token,
+    /// reconnect policy). The *initial* dial is not retried — the
+    /// reconnect policy governs redials after an established connection
+    /// drops.
+    pub fn connect_opts(addr: &str, opts: ConnectOptions) -> Result<RemoteClient, ApiError> {
+        let (stream, writer) = open_stream(addr, &opts)
             .map_err(|e| ApiError::Service(format!("connect {addr}: {e}")))?;
-        let _ = stream.set_nodelay(true);
-        let wstream = stream
-            .try_clone()
-            .map_err(|e| ApiError::Service(format!("clone stream: {e}")))?;
         let rstream = stream
             .try_clone()
             .map_err(|e| ApiError::Service(format!("clone stream: {e}")))?;
         let shared = Arc::new(Shared {
+            addr: addr.to_string(),
+            opts,
             pending: Mutex::new(HashMap::new()),
+            replay: Mutex::new(BTreeMap::new()),
             control: Mutex::new(None),
+            conn: Mutex::new(ConnSlot {
+                writer: Some(writer),
+                stream: Some(stream),
+            }),
+            conn_cv: Condvar::new(),
             dead: AtomicBool::new(false),
+            closing: AtomicBool::new(false),
             conn_error: Mutex::new(None),
+            reconnects: AtomicU64::new(0),
+            replayed: AtomicU64::new(0),
         });
         let shared2 = shared.clone();
         let reader = std::thread::Builder::new()
             .name("partisol-net-client".into())
-            .spawn(move || reader_loop(rstream, shared2, max_frame_bytes))
+            .spawn(move || reader_loop(rstream, shared2))
             .map_err(|e| ApiError::Service(format!("spawn reader: {e}")))?;
         let client = RemoteClient {
-            writer: Mutex::new(BufWriter::new(wstream)),
-            stream,
             shared,
             next_id: AtomicU64::new(0),
-            max_frame_bytes,
             reader: Some(reader),
         };
         // Handshake: one ping proves the server admitted the connection
         // and speaks the protocol. A server at its connection cap
-        // answers with a connection-level Backpressure frame and closes
-        // — surface that as `Backpressure`, not a bare `Disconnected`.
+        // answers with a connection-level Backpressure frame and
+        // closes, an auth-requiring server rejects with Unauthorized,
+        // and a version-skewed server surfaces VersionMismatch —
+        // surface those causes, not a bare `Disconnected`.
         if let Err(e) = client.ping() {
             let err = match client.shared.error() {
                 ApiError::Disconnected => e,
@@ -145,6 +296,42 @@ impl RemoteClient {
         Ok(())
     }
 
+    /// True when the reconnect layer is armed.
+    fn resilient(&self) -> bool {
+        self.shared.opts.reconnect.is_some()
+    }
+
+    /// Run `f` with the connection's writer, blocking through an
+    /// in-progress redial in resilient mode. Fails once the client is
+    /// poisoned.
+    fn with_writer<T>(
+        &self,
+        f: impl FnOnce(&mut BufWriter<TcpStream>) -> std::io::Result<T>,
+    ) -> Result<T, ApiError> {
+        let mut conn = self.shared.conn.lock().unwrap();
+        loop {
+            if self.shared.dead.load(Ordering::Acquire) {
+                return Err(self.shared.error());
+            }
+            match conn.writer.as_mut() {
+                Some(w) => {
+                    return f(w).map_err(|e| ApiError::Service(format!("send frame: {e}")));
+                }
+                None => {
+                    // An outage is being redialed; wait for the writer
+                    // to come back (or for the poison that follows a
+                    // failed redial).
+                    let (guard, _) = self
+                        .shared
+                        .conn_cv
+                        .wait_timeout(conn, Duration::from_millis(100))
+                        .unwrap();
+                    conn = guard;
+                }
+            }
+        }
+    }
+
     /// Submit one request; returns a [`SolveHandle`] exactly like the
     /// local client. A server-side shed resolves the handle as
     /// [`ApiError::Backpressure`].
@@ -154,7 +341,9 @@ impl RemoteClient {
 
     /// Submit with a per-request deadline the **server** honors: if the
     /// solve has not completed within `deadline`, the server answers
-    /// [`ApiError::Timeout`] instead of a solution.
+    /// [`ApiError::Timeout`] instead of a solution. In resilient mode
+    /// the deadline restarts on a replayed connection (the replay is a
+    /// fresh receipt server-side).
     pub fn submit_deadline(
         &self,
         spec: SolveSpec<'static>,
@@ -167,21 +356,48 @@ impl RemoteClient {
         let deadline_ms = deadline
             .map(|d| (d.as_millis().max(1)).min(u32::MAX as u128) as u32)
             .unwrap_or(0);
-        let res = {
-            let mut w = self.writer.lock().unwrap();
-            write_request(&mut *w, id, &spec.opts, deadline_ms, &spec.payload)
-                .and_then(|_| w.flush())
+        let SolveSpec { payload, opts } = spec;
+        let payload = if self.resilient() {
+            promote_shared(payload)
+        } else {
+            payload
         };
-        if let Err(e) = res {
-            self.shared.pending.lock().unwrap().remove(&id);
-            return Err(ApiError::Service(format!("send request: {e}")));
+        let res = self.with_writer(|w| {
+            if self.resilient() {
+                // Registered under the connection lock, so a redial
+                // either replays this request or it is written below —
+                // never both.
+                self.shared.replay.lock().unwrap().insert(
+                    id,
+                    ReplayEntry {
+                        opts: opts.clone(),
+                        deadline_ms,
+                        payload: payload.clone(),
+                    },
+                );
+            }
+            write_request(w, id, &opts, deadline_ms, &payload).and_then(|_| w.flush())
+        });
+        match res {
+            Err(e) if self.resilient() && !self.shared.dead.load(Ordering::Acquire) => {
+                // The socket died under the write; the reader's redial
+                // replays this request, so the handle stays good.
+                crate::log_warn!("net client: send failed ({e}); awaiting replay");
+            }
+            Err(e) => {
+                self.shared.pending.lock().unwrap().remove(&id);
+                self.shared.replay.lock().unwrap().remove(&id);
+                return Err(e);
+            }
+            Ok(()) => {}
         }
         // The reader may have poisoned the map between the insert and
         // now; re-check so a handle registered after the purge cannot
         // wait forever.
         if self.shared.dead.load(Ordering::Acquire) {
             self.shared.pending.lock().unwrap().remove(&id);
-            return Err(ApiError::Disconnected);
+            self.shared.replay.lock().unwrap().remove(&id);
+            return Err(self.shared.error());
         }
         Ok(SolveHandle::new(id, rx))
     }
@@ -197,29 +413,60 @@ impl RemoteClient {
         specs: Vec<SolveSpec<'static>>,
     ) -> Result<Vec<SolveHandle>, ApiError> {
         self.check_alive()?;
+        let resilient = self.resilient();
         let mut handles = Vec::with_capacity(specs.len());
-        let mut w = self.writer.lock().unwrap();
-        for spec in specs {
-            let id = self.next_id();
-            let (tx, rx) = mpsc::channel();
-            self.shared.pending.lock().unwrap().insert(id, tx);
-            if let Err(e) = write_request(&mut *w, id, &spec.opts, 0, &spec.payload) {
-                self.shared.pending.lock().unwrap().remove(&id);
-                return Err(ApiError::Service(format!("send request: {e}")));
+        let res = self.with_writer(|w| {
+            for spec in specs {
+                let id = self.next_id();
+                let (tx, rx) = mpsc::channel();
+                self.shared.pending.lock().unwrap().insert(id, tx);
+                let SolveSpec { payload, opts } = spec;
+                let payload = if resilient {
+                    promote_shared(payload)
+                } else {
+                    payload
+                };
+                if resilient {
+                    self.shared.replay.lock().unwrap().insert(
+                        id,
+                        ReplayEntry {
+                            opts: opts.clone(),
+                            deadline_ms: 0,
+                            payload: payload.clone(),
+                        },
+                    );
+                }
+                write_request(w, id, &opts, 0, &payload)?;
+                handles.push(SolveHandle::new(id, rx));
             }
-            handles.push(SolveHandle::new(id, rx));
+            w.flush()
+        });
+        match res {
+            Err(_) if resilient && !self.shared.dead.load(Ordering::Acquire) => {
+                // Replayed after the redial; every registered handle
+                // stays good.
+            }
+            Err(e) => {
+                let mut pending = self.shared.pending.lock().unwrap();
+                let mut replay = self.shared.replay.lock().unwrap();
+                for h in &handles {
+                    pending.remove(&h.id());
+                    replay.remove(&h.id());
+                }
+                return Err(e);
+            }
+            Ok(()) => {}
         }
-        w.flush()
-            .map_err(|e| ApiError::Service(format!("flush requests: {e}")))?;
-        drop(w);
         if self.shared.dead.load(Ordering::Acquire) {
             // See submit_deadline: handles registered after a purge
             // must fail now rather than wait forever.
             let mut pending = self.shared.pending.lock().unwrap();
+            let mut replay = self.shared.replay.lock().unwrap();
             for h in &handles {
                 pending.remove(&h.id());
+                replay.remove(&h.id());
             }
-            return Err(ApiError::Disconnected);
+            return Err(self.shared.error());
         }
         Ok(handles)
     }
@@ -237,15 +484,7 @@ impl RemoteClient {
     pub fn solve_blocking(&self, spec: SolveSpec<'static>) -> Result<SolveResponse, ApiError> {
         const BACKOFF: Duration = Duration::from_micros(200);
         let SolveSpec { payload, opts } = spec;
-        let payload: SystemPayload<'static> = match payload {
-            SystemPayload::F64(SystemSource::Owned(sys)) => {
-                SystemPayload::F64(SystemSource::Shared(Arc::new(sys)))
-            }
-            SystemPayload::F32(SystemSource::Owned(sys)) => {
-                SystemPayload::F32(SystemSource::Shared(Arc::new(sys)))
-            }
-            other => other,
-        };
+        let payload = promote_shared(payload);
         loop {
             let retry = SolveSpec {
                 payload: payload.clone(),
@@ -260,34 +499,45 @@ impl RemoteClient {
 
     /// Round-trip a ping; returns the measured latency.
     pub fn ping(&self) -> Result<Duration, ApiError> {
+        self.ping_timeout(Duration::from_secs(30))
+    }
+
+    /// [`RemoteClient::ping`] with an explicit reply deadline — health
+    /// monitors probing possibly-hung peers should not block for the
+    /// default 30 s.
+    pub fn ping_timeout(&self, timeout: Duration) -> Result<Duration, ApiError> {
         let t0 = Instant::now();
         let nonce = 0x5050 ^ self.next_id();
-        match self.control_roundtrip(&Frame::Ping { nonce })? {
+        match self.control_roundtrip(&Frame::Ping { nonce }, timeout)? {
             ControlMsg::Pong(got) if got == nonce => Ok(t0.elapsed()),
             ControlMsg::Pong(_) => Err(ApiError::Service("pong nonce mismatch".into())),
             _ => Err(ApiError::Service("unexpected control reply".into())),
         }
     }
 
-    /// Fetch the server's metrics snapshot (service + net counters) as
-    /// parsed JSON.
-    pub fn stats(&self) -> Result<Json, ApiError> {
-        match self.control_roundtrip(&Frame::StatsRequest)? {
-            ControlMsg::Stats(json) => Json::parse(&json)
-                .map_err(|e| ApiError::Service(format!("bad stats payload: {e}"))),
+    /// Fetch the server's metrics snapshot (service + net counters),
+    /// parsed once into the typed [`StatsSnapshot`]
+    /// ([`StatsSnapshot::raw`] reaches untyped fields).
+    pub fn stats(&self) -> Result<StatsSnapshot, ApiError> {
+        match self.control_roundtrip(&Frame::StatsRequest, Duration::from_secs(30))? {
+            ControlMsg::Stats(json) => StatsSnapshot::parse(&json),
             _ => Err(ApiError::Service("unexpected control reply".into())),
         }
     }
 
     /// Ask the server to shut down; resolves once it acknowledges.
     pub fn shutdown_server(&self) -> Result<(), ApiError> {
-        match self.control_roundtrip(&Frame::Shutdown)? {
+        match self.control_roundtrip(&Frame::Shutdown, Duration::from_secs(30))? {
             ControlMsg::ShutdownAck => Ok(()),
             _ => Err(ApiError::Service("unexpected control reply".into())),
         }
     }
 
-    fn control_roundtrip(&self, frame: &Frame) -> Result<ControlMsg, ApiError> {
+    fn control_roundtrip(
+        &self,
+        frame: &Frame,
+        timeout: Duration,
+    ) -> Result<ControlMsg, ApiError> {
         self.check_alive()?;
         let (tx, rx) = mpsc::channel();
         {
@@ -299,24 +549,35 @@ impl RemoteClient {
             }
             *slot = Some(tx);
         }
-        let res = {
-            let mut w = self.writer.lock().unwrap();
-            frame.write_to(&mut *w).and_then(|_| w.flush())
-        };
+        let res = self.with_writer(|w| frame.write_to(w).and_then(|_| w.flush()));
         if let Err(e) = res {
             *self.shared.control.lock().unwrap() = None;
-            return Err(ApiError::Service(format!("send control frame: {e}")));
+            return Err(e);
         }
-        let reply = rx
-            .recv_timeout(Duration::from_secs(30))
-            .map_err(|_| ApiError::Disconnected);
+        let reply = rx.recv_timeout(timeout).map_err(|_| {
+            if self.shared.dead.load(Ordering::Acquire) {
+                self.shared.error()
+            } else {
+                ApiError::Disconnected
+            }
+        });
         *self.shared.control.lock().unwrap() = None;
         reply
     }
 
     /// The inbound frame-size cap this client reads with.
     pub fn max_frame_bytes(&self) -> usize {
-        self.max_frame_bytes
+        self.shared.opts.max_frame_bytes
+    }
+
+    /// Successful redials performed by the reconnect layer.
+    pub fn reconnects(&self) -> u64 {
+        self.shared.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// In-flight requests transparently resubmitted across redials.
+    pub fn replayed(&self) -> u64 {
+        self.shared.replayed.load(Ordering::Relaxed)
     }
 
     /// Close the connection and join the reader thread.
@@ -325,7 +586,14 @@ impl RemoteClient {
     }
 
     fn teardown(&mut self) {
-        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        self.shared.closing.store(true, Ordering::Release);
+        {
+            let conn = self.shared.conn.lock().unwrap();
+            if let Some(s) = &conn.stream {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        self.shared.conn_cv.notify_all();
         if let Some(t) = self.reader.take() {
             let _ = t.join();
         }
@@ -338,61 +606,200 @@ impl Drop for RemoteClient {
     }
 }
 
-fn reader_loop(stream: TcpStream, shared: Arc<Shared>, max_frame_bytes: usize) {
-    let mut r = BufReader::new(stream);
+/// Promote an owned payload to `Arc`-shared (a move, not a copy) so
+/// replay/retry clones are pointer clones. Also used by the cluster
+/// router, which re-submits a request to another shard on failover.
+pub(crate) fn promote_shared(payload: SystemPayload<'static>) -> SystemPayload<'static> {
+    match payload {
+        SystemPayload::F64(SystemSource::Owned(sys)) => {
+            SystemPayload::F64(SystemSource::Shared(Arc::new(sys)))
+        }
+        SystemPayload::F32(SystemSource::Owned(sys)) => {
+            SystemPayload::F32(SystemSource::Shared(Arc::new(sys)))
+        }
+        other => other,
+    }
+}
+
+/// Why one connection's read stream ended.
+enum ReadExit {
+    /// The transport died (close / io error): redial in resilient mode.
+    Transient,
+    /// Protocol-level failure (bad frame, version skew, unexpected
+    /// frame kind): never redial.
+    Fatal,
+}
+
+fn reader_loop(mut stream: TcpStream, shared: Arc<Shared>) {
     loop {
-        match read_frame(&mut r, max_frame_bytes) {
-            Ok(Frame::Response(resp)) => {
-                let tx = shared.pending.lock().unwrap().remove(&resp.id);
-                if let Some(tx) = tx {
-                    let _ = tx.send(Ok(resp.into_solve_response()));
-                }
-            }
-            Ok(Frame::Error(reply)) => {
-                let tx = shared.pending.lock().unwrap().remove(&reply.id);
-                match tx {
-                    Some(tx) => {
-                        let _ = tx.send(Err(reply.error));
-                    }
-                    None if reply.id == 0 => {
-                        // Connection-level notice (shed / protocol
-                        // error): remember it so the close that follows
-                        // reports the real cause, not Disconnected.
-                        let mut slot = shared.conn_error.lock().unwrap();
-                        if slot.is_none() {
-                            *slot = Some(reply.error);
-                        }
-                    }
-                    None => {
-                        // A reply to an abandoned handle.
-                        crate::log_warn!(
-                            "net client: server error for unknown id {}: {}",
-                            reply.id,
-                            reply.error
-                        );
-                    }
-                }
-            }
-            Ok(Frame::Pong { nonce }) => send_control(&shared, ControlMsg::Pong(nonce)),
-            Ok(Frame::StatsResponse { json }) => send_control(&shared, ControlMsg::Stats(json)),
-            Ok(Frame::ShutdownAck) => send_control(&shared, ControlMsg::ShutdownAck),
-            Ok(_) => {
-                crate::log_warn!("net client: unexpected client-side frame; closing");
-                shared.poison();
-                return;
-            }
-            Err(WireError::Timeout) => continue,
-            Err(WireError::Closed) => {
-                shared.poison();
-                return;
-            }
-            Err(e) => {
-                crate::log_warn!("net client: {e}; closing");
+        let exit = read_stream(&stream, &shared);
+        if shared.closing.load(Ordering::Acquire)
+            || matches!(exit, ReadExit::Fatal)
+            || shared.permanently_rejected()
+            || shared.opts.reconnect.is_none()
+        {
+            shared.poison();
+            return;
+        }
+        // Transient outage with a reconnect policy: take the writer
+        // away (submitters block), drop any waiting control caller,
+        // then redial and replay.
+        {
+            let mut conn = shared.conn.lock().unwrap();
+            conn.writer = None;
+            conn.stream = None;
+        }
+        *shared.control.lock().unwrap() = None;
+        match reconnect(&shared) {
+            Some(s) => stream = s,
+            None => {
                 shared.poison();
                 return;
             }
         }
     }
+}
+
+/// Serve one connection's inbound frames until it dies.
+fn read_stream(stream: &TcpStream, shared: &Arc<Shared>) -> ReadExit {
+    let mut r = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(e) => {
+            crate::log_warn!("net client: clone read stream: {e}");
+            return ReadExit::Transient;
+        }
+    };
+    loop {
+        match read_frame(&mut r, shared.opts.max_frame_bytes) {
+            Ok(Frame::Response(resp)) => {
+                let id = resp.id;
+                let tx = shared.pending.lock().unwrap().remove(&id);
+                shared.replay.lock().unwrap().remove(&id);
+                if let Some(tx) = tx {
+                    let _ = tx.send(Ok(resp.into_solve_response()));
+                }
+            }
+            Ok(Frame::Error(reply)) => {
+                let id = reply.id;
+                let tx = shared.pending.lock().unwrap().remove(&id);
+                shared.replay.lock().unwrap().remove(&id);
+                match tx {
+                    Some(tx) => {
+                        let _ = tx.send(Err(reply.error));
+                    }
+                    None if id == 0 => {
+                        // Connection-level notice (shed / auth / version
+                        // / protocol error): remember it so the close
+                        // that follows reports the real cause, not
+                        // Disconnected.
+                        shared.set_conn_error(reply.error);
+                    }
+                    None => {
+                        // A reply to an abandoned handle.
+                        crate::log_warn!(
+                            "net client: server error for unknown id {}: {}",
+                            id,
+                            reply.error
+                        );
+                    }
+                }
+            }
+            Ok(Frame::Pong { nonce }) => send_control(shared, ControlMsg::Pong(nonce)),
+            Ok(Frame::StatsResponse { json }) => send_control(shared, ControlMsg::Stats(json)),
+            Ok(Frame::ShutdownAck) => send_control(shared, ControlMsg::ShutdownAck),
+            Ok(_) => {
+                crate::log_warn!("net client: unexpected client-side frame; closing");
+                return ReadExit::Fatal;
+            }
+            Err(WireError::Timeout) => continue,
+            Err(WireError::Closed) => return ReadExit::Transient,
+            Err(WireError::Io(e)) => {
+                if !shared.closing.load(Ordering::Acquire) {
+                    crate::log_warn!("net client: {e}; connection lost");
+                }
+                return ReadExit::Transient;
+            }
+            Err(WireError::BadVersion(v)) => {
+                // The server speaks a different protocol version —
+                // permanent for this peer, surfaced distinctly from a
+                // refused connection so routers eject instead of retry.
+                shared.set_conn_error(ApiError::VersionMismatch { peer: v });
+                return ReadExit::Fatal;
+            }
+            Err(e) => {
+                crate::log_warn!("net client: {e}; closing");
+                return ReadExit::Fatal;
+            }
+        }
+    }
+}
+
+/// Redial under the bounded-exponential-backoff policy; on success the
+/// new connection carries the auth token and a replay of every
+/// in-flight request (id order), and the writer slot is republished.
+fn reconnect(shared: &Arc<Shared>) -> Option<TcpStream> {
+    let policy = shared.opts.reconnect.clone()?;
+    let mut backoff = policy.initial_backoff;
+    for attempt in 0..policy.max_attempts.max(1) {
+        if shared.closing.load(Ordering::Acquire) {
+            return None;
+        }
+        if attempt > 0 {
+            // Backoff in small slices so `close` is never held up by a
+            // long sleep.
+            let mut left = backoff;
+            while left > Duration::ZERO {
+                if shared.closing.load(Ordering::Acquire) {
+                    return None;
+                }
+                let step = left.min(Duration::from_millis(25));
+                std::thread::sleep(step);
+                left -= step;
+            }
+            backoff = (backoff * 2).min(policy.max_backoff);
+        }
+        match try_redial(shared) {
+            Ok(stream) => return Some(stream),
+            Err(e) => {
+                crate::log_warn!(
+                    "net client: redial {} of {} to {} failed: {e}",
+                    attempt + 1,
+                    policy.max_attempts,
+                    shared.addr
+                );
+            }
+        }
+    }
+    None
+}
+
+fn try_redial(shared: &Arc<Shared>) -> std::io::Result<TcpStream> {
+    let (stream, mut writer) = open_stream(&shared.addr, &shared.opts)?;
+    // Replay every in-flight request in id order. While the writer slot
+    // is empty no new requests can register, so this set is stable.
+    let entries: Vec<(u64, SolveOptions, u32, SystemPayload<'static>)> = {
+        let replay = shared.replay.lock().unwrap();
+        replay
+            .iter()
+            .map(|(id, e)| (*id, e.opts.clone(), e.deadline_ms, e.payload.clone()))
+            .collect()
+    };
+    for (id, opts, deadline_ms, payload) in &entries {
+        write_request(&mut writer, *id, opts, *deadline_ms, payload)?;
+    }
+    writer.flush()?;
+    let rstream = stream.try_clone()?;
+    {
+        let mut conn = shared.conn.lock().unwrap();
+        conn.stream = Some(stream);
+        conn.writer = Some(writer);
+    }
+    shared.reconnects.fetch_add(1, Ordering::Relaxed);
+    shared
+        .replayed
+        .fetch_add(entries.len() as u64, Ordering::Relaxed);
+    shared.conn_cv.notify_all();
+    Ok(rstream)
 }
 
 fn send_control(shared: &Arc<Shared>, msg: ControlMsg) {

@@ -23,10 +23,12 @@
 
 pub mod client;
 pub mod server;
+pub mod stats;
 pub mod wire;
 
-pub use client::RemoteClient;
+pub use client::{ConnectOptions, ReconnectPolicy, RemoteClient};
 pub use server::NetServer;
+pub use stats::StatsSnapshot;
 pub use wire::{Frame, WireError};
 
 use crate::error::{Error, Result};
@@ -51,6 +53,11 @@ pub struct NetConfig {
     /// Largest accepted frame body; oversized frames are rejected
     /// before allocation and the offending connection is closed.
     pub max_frame_bytes: usize,
+    /// Pre-shared auth token (`[net] auth_token`). When set, every
+    /// connection must present it in an `Auth` frame before anything
+    /// else; the first non-auth frame is answered with an
+    /// `Unauthorized` error frame and the connection is closed.
+    pub auth_token: Option<String>,
 }
 
 impl Default for NetConfig {
@@ -60,6 +67,7 @@ impl Default for NetConfig {
             max_conns: 64,
             read_timeout_ms: 30_000,
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            auth_token: None,
         }
     }
 }
@@ -79,6 +87,11 @@ impl NetConfig {
                 "net.max_frame_bytes must be at least {} (one control frame)",
                 wire::HEADER_LEN + 64
             )));
+        }
+        if matches!(&self.auth_token, Some(t) if t.is_empty()) {
+            return Err(Error::Config(
+                "net.auth_token must not be empty (omit it to disable auth)".into(),
+            ));
         }
         Ok(())
     }
@@ -111,5 +124,17 @@ mod tests {
         }
         .validate()
         .is_err());
+        assert!(NetConfig {
+            auth_token: Some(String::new()),
+            ..NetConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(NetConfig {
+            auth_token: Some("tok".into()),
+            ..NetConfig::default()
+        }
+        .validate()
+        .is_ok());
     }
 }

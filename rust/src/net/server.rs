@@ -25,7 +25,7 @@
 //! in-flight replies before the sockets fully close — then resolves
 //! [`NetServer::run_until_shutdown`].
 
-use super::wire::{read_frame, ErrorReply, Frame, WireError};
+use super::wire::{read_frame, ErrorReply, Frame, WireError, VERSION};
 use super::NetConfig;
 use crate::api::{ApiError, Client, SolveHandle, SolveSpec};
 use crate::coordinator::metrics::{MetricsSnapshot, NetMetrics};
@@ -163,6 +163,18 @@ impl NetServer {
         self.stop();
     }
 
+    /// Abrupt death, for failover testing: close every connection in
+    /// both directions (in-flight replies are lost — peers observe a
+    /// mid-stream close exactly as if the process were killed) and stop
+    /// the acceptor. Unlike [`NetServer::shutdown`], nothing drains.
+    pub fn kill(&self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        let conns = self.inner.conns.lock().unwrap();
+        for stream in conns.values() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
     fn stop(&mut self) {
         self.inner.begin_shutdown();
         if let Some(t) = self.acceptor.take() {
@@ -290,11 +302,34 @@ fn conn_reader(stream: TcpStream, conn_id: u64, inner: &Arc<ServerInner>) {
         }
     };
     if writer.is_some() {
+        // With `[net] auth_token` set, the first frame must be a
+        // matching `Auth` — anything else is answered with an
+        // `Unauthorized` error frame and the connection is closed.
+        let mut authed = inner.cfg.auth_token.is_none();
         let mut r = BufReader::new(&stream);
         loop {
             match read_frame(&mut r, inner.cfg.max_frame_bytes) {
                 Ok(frame) => {
                     inner.metrics.frames_in.fetch_add(1, Ordering::Relaxed);
+                    if !authed {
+                        match &frame {
+                            Frame::Auth { token }
+                                if Some(token.as_str())
+                                    == inner.cfg.auth_token.as_deref() =>
+                            {
+                                authed = true;
+                                continue;
+                            }
+                            _ => {
+                                inner.metrics.unauthorized.fetch_add(1, Ordering::Relaxed);
+                                let _ = tx.send(Outgoing::Frame(Frame::Error(ErrorReply {
+                                    id: 0,
+                                    error: ApiError::Unauthorized,
+                                })));
+                                break;
+                            }
+                        }
+                    }
                     if !handle_frame(frame, &tx, inner, &inflight) {
                         break;
                     }
@@ -310,12 +345,16 @@ fn conn_reader(stream: TcpStream, conn_id: u64, inner: &Arc<ServerInner>) {
                 }
                 Err(e) => {
                     // Malformed or desynced: notify best-effort, then
-                    // close only this connection.
+                    // close only this connection. A peer speaking the
+                    // wrong protocol version gets the structured
+                    // version-mismatch error (carrying the version this
+                    // build speaks) so it can stop retrying.
                     crate::log_warn!("net: conn {conn_id}: {e}; closing");
-                    let _ = tx.send(Outgoing::Frame(Frame::Error(ErrorReply {
-                        id: 0,
-                        error: ApiError::InvalidRequest(format!("protocol error: {e}")),
-                    })));
+                    let error = match &e {
+                        WireError::BadVersion(_) => ApiError::VersionMismatch { peer: VERSION },
+                        _ => ApiError::InvalidRequest(format!("protocol error: {e}")),
+                    };
+                    let _ = tx.send(Outgoing::Frame(Frame::Error(ErrorReply { id: 0, error })));
                     break;
                 }
             }
@@ -380,6 +419,9 @@ fn handle_frame(
             let _ = tx.send(Outgoing::AckThenShutdown);
             false
         }
+        // A redundant auth frame (already authed, or a credentialed
+        // client talking to an open server) is benign.
+        Frame::Auth { .. } => true,
         // Server-to-client frames arriving here are protocol violations.
         Frame::Response(_)
         | Frame::Error(_)
@@ -491,5 +533,6 @@ pub(crate) fn stats_json(snap: &MetricsSnapshot) -> Json {
         ("frames_out", num(snap.net_frames_out)),
         ("sheds", num(snap.net_sheds)),
         ("deadline_expired", num(snap.net_deadline_expired)),
+        ("unauthorized", num(snap.net_unauthorized)),
     ])
 }

@@ -1,0 +1,154 @@
+//! [`StatsSnapshot`]: the typed form of the `Stats` control frame.
+//!
+//! The server answers `StatsRequest` with the whole serving stack's
+//! counters as flat JSON (see [`super::server`]). Parsing that once
+//! into a struct — instead of handing callers raw [`Json`] — gives the
+//! router's health monitor, tests and examples field access without
+//! per-call-site key strings, while [`StatsSnapshot::raw`] keeps the
+//! untyped document reachable for fields newer than this build.
+
+use crate::api::ApiError;
+use crate::util::json::Json;
+
+/// Typed view of a server's stats reply. Fields missing from the wire
+/// document (an older server, or a router's cluster-shaped stats) read
+/// as zero, so a newer client can interrogate any peer.
+#[derive(Clone, Debug)]
+pub struct StatsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected_backpressure: u64,
+    pub batches: u64,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+    pub kernel_scalar: u64,
+    pub kernel_soa: u64,
+    pub kernel_simd_single: u64,
+    pub route_fast: u64,
+    pub route_pivoting: u64,
+    pub robust_resolves: u64,
+    pub robust_rejected: u64,
+    pub robust_batch_retries: u64,
+    pub model_epoch: u64,
+    pub mean_e2e_us: f64,
+    pub p99_e2e_us: f64,
+    pub connections_accepted: u64,
+    pub connections_open: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub sheds: u64,
+    pub deadline_expired: u64,
+    /// The full untyped document as received.
+    raw: Json,
+}
+
+impl Default for StatsSnapshot {
+    fn default() -> Self {
+        StatsSnapshot::from_json(Json::Null)
+    }
+}
+
+impl StatsSnapshot {
+    /// Parse the stats-frame JSON payload.
+    pub fn parse(text: &str) -> Result<StatsSnapshot, ApiError> {
+        let raw = Json::parse(text)
+            .map_err(|e| ApiError::Service(format!("bad stats payload: {e}")))?;
+        Ok(StatsSnapshot::from_json(raw))
+    }
+
+    /// Build from an already-parsed document.
+    pub fn from_json(raw: Json) -> StatsSnapshot {
+        let num = |k: &str| -> u64 {
+            raw.get(k)
+                .ok()
+                .and_then(|v| v.as_f64())
+                .map(|v| v.max(0.0) as u64)
+                .unwrap_or(0)
+        };
+        let fnum = |k: &str| -> f64 {
+            raw.get(k).ok().and_then(|v| v.as_f64()).unwrap_or(0.0)
+        };
+        StatsSnapshot {
+            submitted: num("submitted"),
+            completed: num("completed"),
+            failed: num("failed"),
+            rejected_backpressure: num("rejected_backpressure"),
+            batches: num("batches"),
+            plan_cache_hits: num("plan_cache_hits"),
+            plan_cache_misses: num("plan_cache_misses"),
+            kernel_scalar: num("kernel_scalar"),
+            kernel_soa: num("kernel_soa"),
+            kernel_simd_single: num("kernel_simd_single"),
+            route_fast: num("route_fast"),
+            route_pivoting: num("route_pivoting"),
+            robust_resolves: num("robust_resolves"),
+            robust_rejected: num("robust_rejected"),
+            robust_batch_retries: num("robust_batch_retries"),
+            model_epoch: num("model_epoch"),
+            mean_e2e_us: fnum("mean_e2e_us"),
+            p99_e2e_us: fnum("p99_e2e_us"),
+            connections_accepted: num("connections_accepted"),
+            connections_open: num("connections_open"),
+            frames_in: num("frames_in"),
+            frames_out: num("frames_out"),
+            sheds: num("sheds"),
+            deadline_expired: num("deadline_expired"),
+            raw,
+        }
+    }
+
+    /// The untyped document — the escape hatch for fields a newer
+    /// server exports that this build does not type.
+    pub fn raw(&self) -> &Json {
+        &self.raw
+    }
+
+    /// Fraction of plan lookups served from the cache (0 when the shard
+    /// has planned nothing yet).
+    pub fn plan_cache_hit_rate(&self) -> f64 {
+        let total = self.plan_cache_hits + self.plan_cache_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.plan_cache_hits as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_known_fields_and_defaults_missing_ones() {
+        let s = StatsSnapshot::parse(
+            r#"{"completed": 12, "plan_cache_hits": 9, "plan_cache_misses": 3,
+                "mean_e2e_us": 812.5, "sheds": 2}"#,
+        )
+        .unwrap();
+        assert_eq!(s.completed, 12);
+        assert_eq!(s.plan_cache_hits, 9);
+        assert_eq!(s.sheds, 2);
+        assert_eq!(s.mean_e2e_us, 812.5);
+        assert_eq!(s.submitted, 0, "missing fields read as zero");
+        assert_eq!(s.plan_cache_hit_rate(), 0.75);
+    }
+
+    #[test]
+    fn raw_escape_hatch_reaches_untyped_fields() {
+        let s = StatsSnapshot::parse(r#"{"completed": 1, "future_counter": 42}"#).unwrap();
+        assert_eq!(
+            s.raw().get("future_counter").ok().and_then(|v| v.as_usize()),
+            Some(42)
+        );
+    }
+
+    #[test]
+    fn bad_payload_is_a_service_error() {
+        assert!(matches!(
+            StatsSnapshot::parse("{nope"),
+            Err(ApiError::Service(_))
+        ));
+        assert_eq!(StatsSnapshot::default().plan_cache_hit_rate(), 0.0);
+    }
+}

@@ -46,6 +46,7 @@ pub const KIND_STATS_REQUEST: u8 = 6;
 pub const KIND_STATS_RESPONSE: u8 = 7;
 pub const KIND_SHUTDOWN: u8 = 8;
 pub const KIND_SHUTDOWN_ACK: u8 = 9;
+pub const KIND_AUTH: u8 = 10;
 
 /// Everything that can go wrong reading or writing a frame.
 #[derive(Debug)]
@@ -193,6 +194,11 @@ pub enum Frame {
     StatsResponse { json: String },
     Shutdown,
     ShutdownAck,
+    /// Pre-shared token presented as a connection's **first** frame when
+    /// the server requires one (`[net] auth_token`). Servers without a
+    /// configured token ignore it, so a credentialed client can talk to
+    /// an open server unchanged.
+    Auth { token: String },
 }
 
 // ---------------------------------------------------------------------------
@@ -374,6 +380,9 @@ impl Frame {
                 write_frame(w, KIND_RESPONSE, &body)
             }
             Frame::Error(reply) => {
+                // The u32 slot after the code byte is the queue depth for
+                // Backpressure and the peer's protocol version for
+                // VersionMismatch; 0 otherwise.
                 let (code, queue_depth, message): (u8, u32, &str) = match &reply.error {
                     ApiError::Backpressure { queue_depth } => (1, *queue_depth as u32, ""),
                     ApiError::ShutDown => (2, 0, ""),
@@ -383,6 +392,8 @@ impl Frame {
                     ApiError::Timeout => (6, 0, ""),
                     ApiError::Consumed => (7, 0, ""),
                     ApiError::Service(msg) => (8, 0, msg),
+                    ApiError::Unauthorized => (9, 0, ""),
+                    ApiError::VersionMismatch { peer } => (10, *peer as u32, ""),
                 };
                 let mut body = Vec::with_capacity(24 + message.len());
                 put_u64(&mut body, reply.id);
@@ -412,6 +423,11 @@ impl Frame {
             }
             Frame::Shutdown => write_frame(w, KIND_SHUTDOWN, &[]),
             Frame::ShutdownAck => write_frame(w, KIND_SHUTDOWN_ACK, &[]),
+            Frame::Auth { token } => {
+                let mut body = Vec::with_capacity(4 + token.len());
+                put_str(&mut body, token);
+                write_frame(w, KIND_AUTH, &body)
+            }
         }
     }
 }
@@ -694,6 +710,10 @@ fn parse_body(kind: u8, body: &[u8]) -> Result<Frame, WireError> {
                 6 => ApiError::Timeout,
                 7 => ApiError::Consumed,
                 8 => ApiError::Service(message),
+                9 => ApiError::Unauthorized,
+                10 => ApiError::VersionMismatch {
+                    peer: (queue_depth & 0xff) as u8,
+                },
                 other => {
                     return Err(WireError::Malformed(format!("unknown error code {other}")))
                 }
@@ -726,6 +746,11 @@ fn parse_body(kind: u8, body: &[u8]) -> Result<Frame, WireError> {
         KIND_SHUTDOWN_ACK => {
             cur.finish()?;
             Ok(Frame::ShutdownAck)
+        }
+        KIND_AUTH => {
+            let token = cur.string()?;
+            cur.finish()?;
+            Ok(Frame::Auth { token })
         }
         other => Err(WireError::Malformed(format!("unknown frame kind {other}"))),
     }
@@ -855,6 +880,8 @@ mod tests {
             ApiError::Timeout,
             ApiError::Consumed,
             ApiError::Service("boom".into()),
+            ApiError::Unauthorized,
+            ApiError::VersionMismatch { peer: 2 },
         ] {
             let reply = ErrorReply { id: 3, error };
             let Frame::Error(out) = roundtrip(&Frame::Error(reply.clone())) else {
@@ -883,6 +910,12 @@ mod tests {
         assert_eq!(json, "{\"completed\": 3}");
         assert!(matches!(roundtrip(&Frame::Shutdown), Frame::Shutdown));
         assert!(matches!(roundtrip(&Frame::ShutdownAck), Frame::ShutdownAck));
+        let Frame::Auth { token } = roundtrip(&Frame::Auth {
+            token: "s3cret-token".into(),
+        }) else {
+            panic!("expected an auth frame");
+        };
+        assert_eq!(token, "s3cret-token");
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! the generator's built-in size parameter) and reports the smallest
 //! failing case's seed so the exact run is reproducible.
 
+pub mod proxy;
+
 use crate::util::Pcg64;
 
 /// Generation context: RNG plus a size hint the shrinker lowers.

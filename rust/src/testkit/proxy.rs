@@ -1,0 +1,205 @@
+//! Gate-controlled TCP proxy for failure-injection tests.
+//!
+//! [`TcpProxy`] listens on an OS-assigned port and pumps bytes to a
+//! fixed upstream address. Tests sever the path with
+//! [`TcpProxy::close_gate`] — live links are reset and new dials are
+//! accepted-then-dropped — and restore it with [`TcpProxy::open_gate`].
+//! The proxy's own listen port stays bound throughout, so a "crashed"
+//! upstream comes back at a **stable address** without rebinding a
+//! just-killed port (std offers no `SO_REUSEADDR`, and a rebind race
+//! against `TIME_WAIT` would flake in CI).
+
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A byte-level TCP relay with a breakable link in the middle.
+pub struct TcpProxy {
+    local_addr: SocketAddr,
+    gate: Arc<AtomicBool>,
+    shutdown: Arc<AtomicBool>,
+    links: Arc<Mutex<Vec<TcpStream>>>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl TcpProxy {
+    /// Start relaying `127.0.0.1:0 -> target`. The gate starts open.
+    pub fn start(target: &str) -> io::Result<TcpProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let gate = Arc::new(AtomicBool::new(true));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let links: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let target = target.to_string();
+        let (g, s, l) = (gate.clone(), shutdown.clone(), links.clone());
+        let acceptor = std::thread::Builder::new()
+            .name("partisol-test-proxy".into())
+            .spawn(move || accept_loop(listener, &target, &g, &s, &l))?;
+        Ok(TcpProxy {
+            local_addr,
+            gate,
+            shutdown,
+            links,
+            acceptor: Some(acceptor),
+        })
+    }
+
+    /// The address clients should dial instead of the upstream's.
+    pub fn addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Sever the path: resets every live link and rejects new dials
+    /// (accepted, then immediately closed) until the gate reopens.
+    pub fn close_gate(&self) {
+        self.gate.store(false, Ordering::Release);
+        let mut links = self.links.lock().unwrap();
+        for s in links.drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Restore the path for new dials (severed links stay dead).
+    pub fn open_gate(&self) {
+        self.gate.store(true, Ordering::Release);
+    }
+}
+
+impl Drop for TcpProxy {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.close_gate();
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    target: &str,
+    gate: &AtomicBool,
+    shutdown: &AtomicBool,
+    links: &Arc<Mutex<Vec<TcpStream>>>,
+) {
+    loop {
+        if shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let down = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            Err(_) => return,
+        };
+        // Gate closed: the accepted socket drops straight away, so the
+        // dialer's first read fails — indistinguishable from a crashed
+        // server that the OS still routes to.
+        if !gate.load(Ordering::Acquire) {
+            let _ = down.shutdown(Shutdown::Both);
+            continue;
+        }
+        let up = match TcpStream::connect(target) {
+            Ok(s) => s,
+            Err(_) => {
+                let _ = down.shutdown(Shutdown::Both);
+                continue;
+            }
+        };
+        let _ = down.set_nodelay(true);
+        let _ = up.set_nodelay(true);
+        let (Ok(down2), Ok(up2), Ok(down3), Ok(up3)) = (
+            down.try_clone(),
+            up.try_clone(),
+            down.try_clone(),
+            up.try_clone(),
+        ) else {
+            continue;
+        };
+        {
+            // Registry of live links so `close_gate` can reset them.
+            // Tests hold a handful of connections; no pruning needed.
+            let mut l = links.lock().unwrap();
+            l.push(down3);
+            l.push(up3);
+        }
+        spawn_pump(down, up2);
+        spawn_pump(up, down2);
+    }
+}
+
+/// One direction of the relay; on EOF or error both sockets are reset
+/// so the opposite pump unblocks too.
+fn spawn_pump(mut from: TcpStream, mut to: TcpStream) {
+    let _ = std::thread::Builder::new()
+        .name("partisol-test-proxy-pump".into())
+        .spawn(move || {
+            let _ = io::copy(&mut from, &mut to);
+            let _ = from.shutdown(Shutdown::Both);
+            let _ = to.shutdown(Shutdown::Both);
+        });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    /// Upstream echo server answering one byte at a time.
+    fn echo_server() -> (SocketAddr, JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            while let Ok((mut s, _)) = listener.accept() {
+                std::thread::spawn(move || {
+                    let mut buf = [0u8; 64];
+                    while let Ok(k) = s.read(&mut buf) {
+                        if k == 0 || s.write_all(&buf[..k]).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        (addr, h)
+    }
+
+    #[test]
+    fn relays_bytes_and_gate_severs_then_restores() {
+        let (upstream, _h) = echo_server();
+        let proxy = TcpProxy::start(&upstream.to_string()).unwrap();
+
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        c.write_all(b"ping").unwrap();
+        let mut buf = [0u8; 4];
+        c.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ping");
+
+        // Severed: the live link resets and a fresh dial gets a socket
+        // that dies on first use.
+        proxy.close_gate();
+        assert!(
+            c.write_all(b"dead").is_err() || c.read_exact(&mut buf).is_err(),
+            "severed link must error"
+        );
+        let mut c2 = TcpStream::connect(proxy.addr()).unwrap();
+        c2.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let dead = c2.write_all(b"x").is_err() || c2.read_exact(&mut buf[..1]).is_err();
+        assert!(dead, "gate-closed dial must not reach the upstream");
+
+        // Restored: new connections flow again at the same address.
+        proxy.open_gate();
+        let mut c3 = TcpStream::connect(proxy.addr()).unwrap();
+        c3.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        c3.write_all(b"back").unwrap();
+        c3.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"back");
+    }
+}

@@ -70,6 +70,13 @@ impl Json {
         self.as_f64().map(|x| x as usize)
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// `obj["key"]` convenience with error context.
     pub fn get(&self, key: &str) -> Result<&Json> {
         self.as_obj()

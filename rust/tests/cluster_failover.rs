@@ -1,0 +1,495 @@
+//! ISSUE-8 acceptance tests for the cluster tier.
+//!
+//! * Shape-affine routing: one shape's requests all land on one shard,
+//!   and every answer is bit-identical to a single-node `solve_now`.
+//! * Kill a shard mid-burst: every request still completes with
+//!   bit-identical answers (failover re-submits the idempotent solves),
+//!   and the dead shard is ejected by consecutive failures.
+//! * Ejection + readmission through a severed/restored network path
+//!   (the testkit TCP proxy), with traffic served throughout.
+//! * Backpressure spill: a loaded shard sheds and the job spills to the
+//!   next replica; exhausted candidates surface `Backpressure`.
+//! * Auth: the pre-shared token gates both the router and the shards,
+//!   and the router forwards its credential downstream.
+//! * Connect-time error taxonomy: refused connection vs protocol
+//!   version mismatch are distinct `ApiError`s.
+//! * Resilient client: a severed connection redials with backoff and
+//!   replays in-flight requests — same ids, bit-identical answers, no
+//!   handle dropped or doubled.
+
+use partisol::api::{ApiError, Client, SolveSpec};
+use partisol::cluster::{ClusterConfig, ShardRouter};
+use partisol::config::Config;
+use partisol::net::wire::{self, ErrorReply, Frame};
+use partisol::net::{ConnectOptions, NetServer, ReconnectPolicy, RemoteClient};
+use partisol::solver::generator::random_dd_system;
+use partisol::testkit::proxy::TcpProxy;
+use partisol::util::Pcg64;
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn native_cfg() -> Config {
+    Config {
+        probe_pjrt: false,
+        workers: 2,
+        ..Config::default()
+    }
+}
+
+fn start_shard(cfg: Config) -> (NetServer, String) {
+    let mut cfg = cfg;
+    cfg.net.addr = "127.0.0.1:0".to_string();
+    let net = cfg.net.clone();
+    let client = Arc::new(Client::from_config(cfg).unwrap());
+    let server = NetServer::start(client, net).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+fn start_router(shards: Vec<String>, tweak: impl FnOnce(&mut ClusterConfig)) -> ShardRouter {
+    let mut cfg = ClusterConfig {
+        listen: "127.0.0.1:0".to_string(),
+        shards,
+        ..ClusterConfig::default()
+    };
+    tweak(&mut cfg);
+    ShardRouter::start(cfg).unwrap()
+}
+
+/// Poll `cond` for up to `secs` seconds.
+fn wait_for(secs: u64, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    cond()
+}
+
+#[test]
+fn affinity_routes_one_shape_to_one_shard_bit_identical() {
+    let shards: Vec<(NetServer, String)> = (0..3).map(|_| start_shard(native_cfg())).collect();
+    let addrs: Vec<String> = shards.iter().map(|s| s.1.clone()).collect();
+    let router = start_router(addrs, |_| {});
+    let remote = RemoteClient::connect(&router.local_addr().to_string()).unwrap();
+    let reference = Client::from_config(native_cfg()).unwrap();
+    let mut rng = Pcg64::new(11);
+
+    // Six distinct systems of one shape: rendezvous placement must pin
+    // the whole shape bucket to a single shard, and the router must be
+    // a bit-transparent relay.
+    for _ in 0..6 {
+        let sys = random_dd_system::<f64>(&mut rng, 30_000, 0.5);
+        let got = remote.solve(SolveSpec::f64(sys.clone())).unwrap();
+        let want = reference
+            .solve_now(&SolveSpec::borrowed_f64(sys.view()))
+            .unwrap();
+        assert_eq!(got.m, want.m, "router must not change planning");
+        assert_eq!(
+            got.x.as_f64().unwrap(),
+            want.x.as_f64().unwrap(),
+            "routed f64 answer must be bit-identical to a local solve"
+        );
+    }
+    // An f32 shape keeps its own (possibly different) home; the answer
+    // stays bit-identical end to end.
+    let sys32 = random_dd_system::<f32>(&mut rng, 10_000, 0.5);
+    let got = remote.solve(SolveSpec::f32(sys32.clone())).unwrap();
+    let want = reference
+        .solve_now(&SolveSpec::borrowed_f32(sys32.view()))
+        .unwrap();
+    assert_eq!(got.x.as_f32().unwrap(), want.x.as_f32().unwrap());
+
+    let routed: Vec<u64> = router
+        .cluster_metrics()
+        .shards()
+        .iter()
+        .map(|s| s.routed.load(Ordering::Relaxed))
+        .collect();
+    assert_eq!(routed.iter().sum::<u64>(), 7, "every request routed once");
+    let f64_homes = routed.iter().filter(|&&r| r >= 6).count();
+    assert_eq!(
+        f64_homes, 1,
+        "all six same-shape requests must share one home, got {routed:?}"
+    );
+
+    // The router answers the stats control frame with a document the
+    // typed snapshot parses; cluster extras ride the raw JSON.
+    let stats = remote.stats().unwrap();
+    assert_eq!(stats.completed, 7);
+    let raw = stats.raw();
+    assert_eq!(
+        raw.get("cluster_routed").ok().and_then(|v| v.as_f64()),
+        Some(7.0)
+    );
+    assert_eq!(
+        raw.get("placement").ok().and_then(|v| v.as_str()),
+        Some("hash")
+    );
+
+    remote.close();
+    drop(router);
+    for (s, _) in shards {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn killed_shard_mid_burst_fails_over_bit_identical_and_ejects() {
+    let shards: Vec<(NetServer, String)> = (0..3).map(|_| start_shard(native_cfg())).collect();
+    let addrs: Vec<String> = shards.iter().map(|s| s.1.clone()).collect();
+    let router = start_router(addrs, |c| {
+        c.health_interval_ms = 100;
+        c.probe_timeout_ms = 500;
+    });
+    let remote = RemoteClient::connect(&router.local_addr().to_string()).unwrap();
+    let reference = Client::from_config(native_cfg()).unwrap();
+    let mut rng = Pcg64::new(23);
+    let n = 120_000;
+
+    // Probe once to learn the shape's home shard — that is the one we
+    // will kill under load.
+    let probe = random_dd_system::<f64>(&mut rng, n, 0.5);
+    remote.solve(SolveSpec::f64(probe)).unwrap();
+    let m0 = router.cluster_metrics();
+    let home = (0..3)
+        .find(|&i| m0.shard(i).routed.load(Ordering::Relaxed) > 0)
+        .expect("probe request must have routed somewhere");
+
+    // Pipeline a burst at the home shard, then yank it mid-flight.
+    let mut inflight = Vec::new();
+    for _ in 0..16 {
+        let sys = random_dd_system::<f64>(&mut rng, n, 0.5);
+        let handle = remote.submit(SolveSpec::f64(sys.clone())).unwrap();
+        inflight.push((sys, handle));
+    }
+    shards[home].0.kill();
+
+    for (sys, handle) in inflight {
+        let got = handle.wait().expect("failover must complete the solve");
+        let want = reference
+            .solve_now(&SolveSpec::borrowed_f64(sys.view()))
+            .unwrap();
+        assert_eq!(
+            got.x.as_f64().unwrap(),
+            want.x.as_f64().unwrap(),
+            "failed-over replay must be bit-identical"
+        );
+    }
+
+    let m = router.cluster_metrics();
+    let failovers: u64 = m
+        .shards()
+        .iter()
+        .map(|s| s.failovers.load(Ordering::Relaxed))
+        .sum();
+    let spilled: u64 = m
+        .shards()
+        .iter()
+        .map(|s| s.spilled.load(Ordering::Relaxed))
+        .sum();
+    assert!(failovers >= 1, "the killed shard must have failed over work");
+    assert!(spilled >= failovers, "every failover is a spill");
+
+    // Consecutive failures (traffic and probes) must eject the corpse.
+    assert!(
+        wait_for(5, || m.shard(home).ejections.load(Ordering::Relaxed) >= 1),
+        "dead shard must be ejected"
+    );
+    assert!(!router.shards().available(home));
+
+    remote.close();
+    drop(router);
+    for (i, (s, _)) in shards.into_iter().enumerate() {
+        if i != home {
+            s.shutdown();
+        }
+    }
+}
+
+#[test]
+fn severed_shard_is_ejected_then_readmitted_with_service_throughout() {
+    let (shard_a, addr_a) = start_shard(native_cfg());
+    let (shard_b, addr_b) = start_shard(native_cfg());
+    let proxy = TcpProxy::start(&addr_b).unwrap();
+    let router = start_router(vec![addr_a.clone(), proxy.addr().to_string()], |c| {
+        c.health_interval_ms = 50;
+        c.probe_timeout_ms = 500;
+        c.eject_after = 2;
+        c.readmit_after = 2;
+    });
+    let remote = RemoteClient::connect(&router.local_addr().to_string()).unwrap();
+    let mut rng = Pcg64::new(31);
+    let m = router.cluster_metrics();
+
+    // Sever shard B's path: consecutive probe failures must eject it.
+    proxy.close_gate();
+    assert!(
+        wait_for(5, || m.shard(1).ejections.load(Ordering::Relaxed) >= 1),
+        "severed shard must be ejected by the health monitor"
+    );
+    assert!(!router.shards().available(1));
+
+    // The tier keeps serving while degraded (everything homes on A).
+    let sys = random_dd_system::<f64>(&mut rng, 20_000, 0.5);
+    remote.solve(SolveSpec::f64(sys)).unwrap();
+
+    // Restore the path: consecutive probe successes must readmit it.
+    proxy.open_gate();
+    assert!(
+        wait_for(5, || m.shard(1).readmissions.load(Ordering::Relaxed) >= 1),
+        "restored shard must be readmitted"
+    );
+    assert!(router.shards().available(1));
+
+    remote.close();
+    drop(router);
+    drop(proxy);
+    shard_a.shutdown();
+    shard_b.shutdown();
+}
+
+#[test]
+fn loaded_shard_spills_and_exhausted_candidates_surface_backpressure() {
+    // Tiny shards: one worker, queue depth one. A pipelined burst must
+    // overflow the home shard (spill) and may exhaust both (shed).
+    let tiny = || {
+        let mut cfg = native_cfg();
+        cfg.workers = 1;
+        cfg.queue_depth = 1;
+        cfg
+    };
+    let (shard_a, addr_a) = start_shard(tiny());
+    let (shard_b, addr_b) = start_shard(tiny());
+    let router = start_router(vec![addr_a, addr_b], |_| {});
+    let remote = RemoteClient::connect(&router.local_addr().to_string()).unwrap();
+    let reference = Client::from_config(native_cfg()).unwrap();
+    let mut rng = Pcg64::new(41);
+
+    let m = router.cluster_metrics();
+    let spilled = || {
+        m.shards()
+            .iter()
+            .map(|s| s.spilled.load(Ordering::Relaxed))
+            .sum::<u64>()
+    };
+    let mut completed = 0u64;
+    let mut shed = 0u64;
+    let mut total = 0u64;
+    // A pipelined burst overflows a depth-1 queue with overwhelming
+    // probability; retry rounds squash the residual scheduling luck
+    // without weakening any accounting assertion.
+    for _round in 0..3 {
+        let mut inflight = Vec::new();
+        for _ in 0..16 {
+            let sys = random_dd_system::<f32>(&mut rng, 250_000, 0.5);
+            let handle = remote.submit(SolveSpec::f32(sys.clone())).unwrap();
+            inflight.push((sys, handle));
+        }
+        total += 16;
+        for (sys, handle) in inflight {
+            match handle.wait() {
+                Ok(got) => {
+                    completed += 1;
+                    let want = reference
+                        .solve_now(&SolveSpec::borrowed_f32(sys.view()))
+                        .unwrap();
+                    assert_eq!(got.x.as_f32().unwrap(), want.x.as_f32().unwrap());
+                }
+                Err(ApiError::Backpressure { .. }) => shed += 1,
+                Err(other) => panic!("only Backpressure may surface, got {other}"),
+            }
+        }
+        if spilled() >= 1 {
+            break;
+        }
+    }
+    assert!(completed >= 1, "an empty queue must admit the first request");
+    assert_eq!(completed + shed, total, "no request may vanish");
+    assert!(spilled() >= 1, "a depth-1 queue under a 16-burst must spill");
+    // Shards shed load but never died: no ejections.
+    assert_eq!(
+        m.shards()
+            .iter()
+            .map(|s| s.ejections.load(Ordering::Relaxed))
+            .sum::<u64>(),
+        0,
+        "backpressure must not count against shard health"
+    );
+
+    remote.close();
+    drop(router);
+    shard_a.shutdown();
+    shard_b.shutdown();
+}
+
+#[test]
+fn auth_token_gates_shards_router_and_is_forwarded() {
+    let token = "open-sesame";
+    let mut cfg = native_cfg();
+    cfg.net.auth_token = Some(token.to_string());
+    let (shard, addr) = start_shard(cfg);
+
+    // Direct, no token: the handshake must surface Unauthorized.
+    match RemoteClient::connect(&addr) {
+        Err(ApiError::Unauthorized) => {}
+        other => panic!("expected Unauthorized, got {other:?}"),
+    }
+    // Direct, wrong token: same.
+    let wrong = ConnectOptions {
+        auth_token: Some("guess".to_string()),
+        ..ConnectOptions::default()
+    };
+    match RemoteClient::connect_opts(&addr, wrong) {
+        Err(ApiError::Unauthorized) => {}
+        other => panic!("expected Unauthorized, got {other:?}"),
+    }
+
+    // Router configured with the credential: it both demands it of
+    // downstream clients and presents it upstream.
+    let router = start_router(vec![addr.clone()], |c| {
+        c.auth_token = Some(token.to_string());
+    });
+    let raddr = router.local_addr().to_string();
+    match RemoteClient::connect(&raddr) {
+        Err(ApiError::Unauthorized) => {}
+        other => panic!("router must demand the token, got {other:?}"),
+    }
+    let opts = ConnectOptions {
+        auth_token: Some(token.to_string()),
+        ..ConnectOptions::default()
+    };
+    let remote = RemoteClient::connect_opts(&raddr, opts).unwrap();
+    let mut rng = Pcg64::new(53);
+    let sys = random_dd_system::<f64>(&mut rng, 5_000, 0.5);
+    let got = remote.solve(SolveSpec::f64(sys)).unwrap();
+    assert!(got.residual.unwrap() < 1e-9);
+
+    remote.close();
+    drop(router);
+    shard.shutdown();
+}
+
+#[test]
+fn connect_errors_distinguish_refusal_from_version_skew() {
+    // Refused connection: nothing listens on the freed port.
+    let freed = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    match RemoteClient::connect(&freed) {
+        Err(ApiError::Service(msg)) => {
+            assert!(msg.contains("connect"), "refusal must name the dial: {msg}")
+        }
+        other => panic!("expected Service(connect...), got {other:?}"),
+    }
+
+    // Version skew, client side: a peer that answers the handshake
+    // with a connection-level VersionMismatch frame.
+    let skew = TcpListener::bind("127.0.0.1:0").unwrap();
+    let skew_addr = skew.local_addr().unwrap().to_string();
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = skew.accept().unwrap();
+        Frame::Error(ErrorReply {
+            id: 0,
+            error: ApiError::VersionMismatch { peer: 3 },
+        })
+        .write_to(&mut s)
+        .unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+    });
+    match RemoteClient::connect(&skew_addr) {
+        Err(ApiError::VersionMismatch { peer: 3 }) => {}
+        other => panic!("expected VersionMismatch(peer 3), got {other:?}"),
+    }
+    fake.join().unwrap();
+
+    // Version skew, server side: a raw version-99 ping must come back
+    // as a VersionMismatch error frame naming the server's version.
+    let (shard, addr) = start_shard(native_cfg());
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut hdr = [0u8; wire::HEADER_LEN];
+    hdr[0..4].copy_from_slice(&wire::MAGIC);
+    hdr[4] = 99;
+    hdr[5] = wire::KIND_PING;
+    hdr[8..12].copy_from_slice(&8u32.to_le_bytes());
+    raw.write_all(&hdr).unwrap();
+    raw.write_all(&0u64.to_le_bytes()).unwrap();
+    match wire::read_frame(&mut raw, 1 << 20) {
+        Ok(Frame::Error(reply)) => {
+            assert_eq!(reply.id, 0);
+            match reply.error {
+                ApiError::VersionMismatch { peer } => assert_eq!(peer, wire::VERSION),
+                other => panic!("expected VersionMismatch, got {other}"),
+            }
+        }
+        other => panic!("expected a connection-level error frame, got {other:?}"),
+    }
+    shard.shutdown();
+}
+
+#[test]
+fn resilient_client_redials_and_replays_bit_identically() {
+    let (server, addr) = start_shard(native_cfg());
+    let proxy = TcpProxy::start(&addr).unwrap();
+    let opts = ConnectOptions {
+        reconnect: Some(ReconnectPolicy {
+            max_attempts: 12,
+            initial_backoff: Duration::from_millis(20),
+            max_backoff: Duration::from_millis(200),
+        }),
+        ..ConnectOptions::default()
+    };
+    let remote = RemoteClient::connect_opts(&proxy.addr().to_string(), opts).unwrap();
+    let reference = Client::from_config(native_cfg()).unwrap();
+    let mut rng = Pcg64::new(61);
+
+    // Pipeline a burst, then sever the path under it. The severed
+    // replies are lost; the reconnect layer must redial and replay
+    // every unanswered request with its original id and bytes.
+    let mut inflight = Vec::new();
+    for _ in 0..8 {
+        let sys = random_dd_system::<f64>(&mut rng, 120_000, 0.5);
+        let handle = remote.submit(SolveSpec::f64(sys.clone())).unwrap();
+        inflight.push((sys, handle));
+    }
+    proxy.close_gate();
+    std::thread::sleep(Duration::from_millis(100));
+    proxy.open_gate();
+
+    let mut ids = std::collections::BTreeSet::new();
+    for (sys, handle) in inflight {
+        ids.insert(handle.id());
+        let got = handle.wait().expect("replays must complete every handle");
+        let want = reference
+            .solve_now(&SolveSpec::borrowed_f64(sys.view()))
+            .unwrap();
+        assert_eq!(
+            got.x.as_f64().unwrap(),
+            want.x.as_f64().unwrap(),
+            "replayed solve must be bit-identical"
+        );
+    }
+    assert_eq!(ids.len(), 8, "no handle dropped or doubled");
+    assert!(remote.reconnects() >= 1, "the outage must have redialed");
+    assert!(remote.replayed() >= 1, "unanswered requests must replay");
+
+    // The restored client keeps working for fresh traffic too.
+    let sys = random_dd_system::<f32>(&mut rng, 9_000, 0.5);
+    let got = remote.solve(SolveSpec::f32(sys.clone())).unwrap();
+    let want = reference
+        .solve_now(&SolveSpec::borrowed_f32(sys.view()))
+        .unwrap();
+    assert_eq!(got.x.as_f32().unwrap(), want.x.as_f32().unwrap());
+
+    remote.close();
+    drop(proxy);
+    server.shutdown();
+}

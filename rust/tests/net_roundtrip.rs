@@ -272,14 +272,11 @@ fn control_frames_ping_stats_shutdown() {
     let sys = random_dd_system::<f64>(&mut rng, 2_000, 0.5);
     remote.solve(SolveSpec::f64(sys)).unwrap();
     let stats = remote.stats().unwrap();
-    assert_eq!(stats.get("completed").unwrap().as_usize(), Some(1));
-    assert!(stats.get("frames_in").unwrap().as_usize().unwrap() >= 3);
+    assert_eq!(stats.completed, 1);
+    assert!(stats.frames_in >= 3);
     // The per-kernel counters ride the same stats frame: exactly the
     // one host solve lands in exactly one variant bucket.
-    let kernels: usize = ["kernel_scalar", "kernel_soa", "kernel_simd_single"]
-        .iter()
-        .map(|k| stats.get(k).unwrap().as_usize().unwrap())
-        .sum();
+    let kernels = stats.kernel_scalar + stats.kernel_soa + stats.kernel_simd_single;
     assert_eq!(kernels, 1, "one solve, one kernel-variant counter");
 
     remote.shutdown_server().unwrap();

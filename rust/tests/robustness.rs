@@ -394,12 +394,11 @@ fn remote_degradation_e2e() {
 
     // The robust counters ride the Stats frame.
     let stats = remote.stats().unwrap();
-    let count = |k: &str| stats.get(k).unwrap().as_usize().unwrap();
-    assert!(count("route_fast") >= 2, "healthy + solve_now stay fast");
-    assert_eq!(count("route_pivoting"), 1);
-    assert_eq!(count("robust_resolves"), 0);
-    assert_eq!(count("robust_rejected"), 1);
-    assert_eq!(count("robust_batch_retries"), 0);
+    assert!(stats.route_fast >= 2, "healthy + solve_now stay fast");
+    assert_eq!(stats.route_pivoting, 1);
+    assert_eq!(stats.robust_resolves, 0);
+    assert_eq!(stats.robust_rejected, 1);
+    assert_eq!(stats.robust_batch_retries, 0);
 
     remote.close();
     server.shutdown();
