@@ -7,11 +7,18 @@
 //!   at a time (codec + TCP + queue + solve), vs the same system
 //!   through the in-process `Client::solve` for the transport overhead;
 //! * **pipelined throughput** — a window of requests submitted before
-//!   the first reply is awaited (the per-connection writer streams
-//!   responses back while later requests are still in flight).
+//!   the first reply is awaited (the event loop streams responses back
+//!   while later requests are still in flight);
+//! * **connection scaling** — single-inflight latency while K idle
+//!   connections are held open against the same event loop, for K up
+//!   to `--conns` (default 10000). The loop multiplexes every
+//!   connection over a fixed worker set, so latency should stay flat
+//!   where a thread-per-connection server would exhaust threads.
 //!
 //! Results are persisted to `BENCH_net_roundtrip.json` at the repo
-//! root. Pass `--smoke` for the CI-sized iteration budget.
+//! root. Pass `--smoke` for the CI-sized iteration budget and
+//! `--conns <K>` to cap the scaling axis (file-descriptor budgets
+//! allowing; the axis degrades gracefully when `ulimit -n` bites).
 
 use partisol::api::{Client, SolveSpec};
 use partisol::config::Config;
@@ -22,8 +29,9 @@ use partisol::util::json::{obj, Json};
 use partisol::util::stats::median;
 use partisol::util::timer::bench_loop;
 use partisol::util::Pcg64;
+use std::net::TcpStream;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 const N: usize = 20_000;
 const WINDOW: usize = 32;
@@ -94,8 +102,98 @@ fn bench_dtype(
     }
 }
 
+struct ScalePoint {
+    target: usize,
+    achieved: usize,
+    latency_us: f64,
+}
+
+/// Hold K idle connections against a fresh server and measure the
+/// single-inflight latency an active client sees alongside them.
+fn bench_conn_scaling(
+    local: &Arc<Client>,
+    sys64: &Arc<TriSystem<f64>>,
+    targets: &[usize],
+    loop_t: Duration,
+    min_iters: usize,
+) -> Vec<ScalePoint> {
+    let mut points = Vec::new();
+    for &target in targets {
+        let cfg = NetConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_conns: target + 8,
+            // Idle connections must survive the measurement window.
+            read_timeout_ms: 0,
+            ..NetConfig::default()
+        };
+        let server = match NetServer::start(local.clone(), cfg) {
+            Ok(s) => s,
+            Err(e) => {
+                println!("conns {target:>6}: server start failed ({e}); stopping axis");
+                break;
+            }
+        };
+        let addr = server.local_addr().to_string();
+        let mut idle = Vec::with_capacity(target);
+        for _ in 0..target {
+            match TcpStream::connect(&addr) {
+                Ok(s) => idle.push(s),
+                // fd budget exhausted: keep what we got.
+                Err(_) => break,
+            }
+        }
+        // Wait for the acceptor to register what the fd budget allows.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let open = server.metrics().net_connections_open as usize;
+            if open >= idle.len() || Instant::now() > deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let achieved = server.metrics().net_connections_open as usize;
+        match RemoteClient::connect(&addr) {
+            Ok(remote) => {
+                let samples = bench_loop(loop_t, min_iters, || {
+                    remote
+                        .solve_blocking(SolveSpec::shared_f64(sys64.clone()).with_residual(false))
+                        .expect("scaled remote solve");
+                });
+                let latency_us = median(&samples) * 1e6;
+                println!(
+                    "conns {target:>6}: {achieved:>6} idle held | single-inflight \
+                     {latency_us:>8.0} µs"
+                );
+                points.push(ScalePoint {
+                    target,
+                    achieved,
+                    latency_us,
+                });
+                remote.close();
+            }
+            Err(e) => {
+                println!("conns {target:>6}: active connect failed ({e}); fd budget reached");
+            }
+        }
+        drop(idle);
+        server.shutdown();
+        if achieved + 64 < target {
+            // fd-limited already: larger targets cannot do better.
+            break;
+        }
+    }
+    points
+}
+
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let conns_cap = argv
+        .iter()
+        .position(|a| a == "--conns")
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(10_000);
     let (loop_t, min_iters) = if smoke {
         (Duration::from_millis(50), 3)
     } else {
@@ -122,8 +220,15 @@ fn main() {
     let sys64 = Arc::new(random_dd_system::<f64>(&mut rng, N, 0.5));
     let sys32 = Arc::new(random_dd_system::<f32>(&mut rng, N, 0.5));
 
-    let f64_report = bench_dtype(&remote, &local, Some(sys64), None, loop_t, min_iters);
+    let f64_report = bench_dtype(&remote, &local, Some(sys64.clone()), None, loop_t, min_iters);
     let f32_report = bench_dtype(&remote, &local, None, Some(sys32), loop_t, min_iters);
+
+    println!();
+    let targets: Vec<usize> = [100usize, 1_000, 5_000, 10_000]
+        .into_iter()
+        .filter(|&k| k <= conns_cap)
+        .collect();
+    let scaling = bench_conn_scaling(&local, &sys64, &targets, loop_t, min_iters);
 
     let m = server.metrics();
     println!(
@@ -152,6 +257,22 @@ fn main() {
         (f32_report.key, section(&f32_report)),
         ("frames_in", Json::Num(m.net_frames_in as f64)),
         ("frames_out", Json::Num(m.net_frames_out as f64)),
+        ("conns_cap", Json::Num(conns_cap as f64)),
+        (
+            "conn_scaling",
+            Json::Arr(
+                scaling
+                    .iter()
+                    .map(|p| {
+                        obj(vec![
+                            ("target", Json::Num(p.target as f64)),
+                            ("achieved", Json::Num(p.achieved as f64)),
+                            ("single_inflight_latency_us", Json::Num(p.latency_us)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ]);
     std::fs::write("BENCH_net_roundtrip.json", report.to_string_pretty())
         .expect("write BENCH_net_roundtrip.json");

@@ -38,6 +38,11 @@ OPTIONS:
                         connection cap, read timeout and frame cap)
     --auth-token <t>    pre-shared token every connection must present
                         first ([net] auth_token; --listen only)
+    --event-workers <w> event-loop worker threads multiplexing all
+                        connections ([net] event_workers; --listen only)
+    --conn-quota <q>    per-connection in-flight solve quota; pipelined
+                        requests beyond it are deferred, then shed with
+                        Backpressure ([net] conn_quota; --listen only)
 ";
 
 pub fn run(argv: &[String]) -> Result<()> {
@@ -72,6 +77,9 @@ pub fn run(argv: &[String]) -> Result<()> {
         if let Some(t) = args.get("auth-token") {
             cfg.net.auth_token = (!t.is_empty()).then(|| t.to_string());
         }
+        cfg.net.event_workers = args.get_usize("event-workers", cfg.net.event_workers)?;
+        cfg.net.conn_quota = args.get_usize("conn-quota", cfg.net.conn_quota)?;
+        cfg.net.validate()?;
         return run_listener(cfg);
     }
 
@@ -209,8 +217,12 @@ fn print_net_metrics(m: &MetricsSnapshot, online: bool) {
         m.net_frames_in, m.net_frames_out
     );
     println!(
-        "net admission      : {} sheds (backpressure) | {} deadlines expired",
-        m.net_sheds, m.net_deadline_expired
+        "net admission      : {} sheds (backpressure) | {} deadlines expired | {} quota-deferred",
+        m.net_sheds, m.net_deadline_expired, m.net_quota_deferred
+    );
+    println!(
+        "net event loop     : {} wakeups | {} partial reads | {} fused | {} chunk frames",
+        m.net_wakeups, m.net_partial_reads, m.net_conn_fused, m.net_chunked_frames
     );
     if online {
         println!(

@@ -2,24 +2,28 @@
 //! --listen` shards.
 //!
 //! The router accepts the same protocol a [`crate::net::NetServer`]
-//! speaks, so existing clients point at it unchanged. Each request is
-//! placed by shape ([`ShapeKey`]): the placement policy yields a
-//! preference order over shards, the request goes to the first
-//! available one, and the reply is relayed back with the downstream
-//! request id. On a `Backpressure` reply the request **spills** to the
-//! next shard in the order; on a connection failure it **fails over**
-//! the same way (solves are idempotent — a replay on another shard is
-//! bit-identical, because every shard runs the same deterministic
-//! planner and kernels). Only when every candidate has refused does
-//! the client see an error (`Backpressure`, counted as `no_shard`).
+//! speaks, so existing clients point at it unchanged — and it rides
+//! the same readiness-driven [`crate::net::event_loop`] the server
+//! does: a fixed worker set multiplexes every downstream connection,
+//! with no thread pair per client. Each request is placed by shape
+//! ([`ShapeKey`]): the placement policy yields a preference order over
+//! shards, the request goes to the first available one, and the reply
+//! is relayed back with the downstream request id. On a `Backpressure`
+//! reply the request **spills** to the next shard in the order; on a
+//! connection failure it **fails over** the same way (solves are
+//! idempotent — a replay on another shard is bit-identical, because
+//! every shard runs the same deterministic planner and kernels). Only
+//! when every candidate has refused does the client see an error
+//! (`Backpressure`, counted as `no_shard`).
 //!
-//! Per-connection structure mirrors the server: a reader thread
-//! decodes frames and makes the *first* placement attempt (so
-//! independent requests pipeline into the shards), and a writer thread
-//! waits each routed reply in submission order, driving spill /
-//! failover retries inline when the primary's reply turns out to be a
-//! failure. Replies to one downstream connection therefore come back
-//! in submission order, exactly like a single shard.
+//! The first placement happens in the read batch (so independent
+//! requests pipeline into the shards); the event loop's pump then
+//! polls each connection's job queue in submission order, driving
+//! spill / failover retries inline when the primary's reply turns out
+//! to be a failure. Replies to one downstream connection therefore
+//! come back in submission order, exactly like a single shard. Shard
+//! replies land on the shard clients' reader threads, which prod the
+//! event loop through its waker so relays go out promptly.
 
 use super::health::{self, HealthConfig};
 use super::placement::{PlacementPolicy, RandomPolicy, RendezvousPolicy, ShapeKey};
@@ -29,20 +33,21 @@ use crate::api::{ApiError, SolveHandle, SolveSpec, SystemPayload};
 use crate::coordinator::metrics::{ClusterMetrics, NetMetrics};
 use crate::error::{Error, Result};
 use crate::net::client::promote_shared;
-use crate::net::wire::{read_frame, ErrorReply, Frame, WireError, VERSION};
+use crate::net::event_loop::{CloseReason, ConnIo, Driver, EventLoop, Verdict};
+use crate::net::wire::{ErrorReply, Frame};
+use crate::net::NetConfig;
 use crate::plan::SolveOptions;
 use crate::util::json::{obj, Json};
-use std::collections::HashMap;
-use std::io::{BufReader, BufWriter};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::collections::VecDeque;
+use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
-/// One routed request as it moves from the reader to the writer: the
+/// One routed request as it moves through the job queue: the
 /// downstream id, the (Arc-shared) payload kept for resubmission, the
-/// candidate shard order, and the in-flight attempt if the reader's
-/// placement succeeded.
+/// candidate shard order, and the in-flight attempt if placement
+/// succeeded.
 struct RoutedJob {
     id: u64,
     opts: SolveOptions,
@@ -57,45 +62,191 @@ struct RoutedJob {
     pending: Option<(usize, SolveHandle)>,
 }
 
-enum Outgoing {
-    Job(Box<RoutedJob>),
-    Frame(Frame),
-    AckThenShutdown,
-}
-
 struct RouterInner {
-    cfg: ClusterConfig,
     shards: Arc<ShardTable>,
     placement: Box<dyn PlacementPolicy>,
-    net: NetMetrics,
+    net: Arc<NetMetrics>,
     cluster: Arc<ClusterMetrics>,
     completed: AtomicU64,
     failed: AtomicU64,
-    shutdown: Arc<AtomicBool>,
-    conns: Mutex<HashMap<u64, TcpStream>>,
-    next_conn_id: AtomicU64,
-    handlers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
-impl RouterInner {
-    fn shutting_down(&self) -> bool {
-        self.shutdown.load(Ordering::Acquire)
+/// Per-downstream-connection state: routed jobs awaiting replies, in
+/// submission order.
+#[derive(Default)]
+struct RouterConn {
+    jobs: VecDeque<RoutedJob>,
+    shutdown_requested: bool,
+}
+
+/// The routing protocol riding the event loop.
+struct RouterDriver {
+    inner: Arc<RouterInner>,
+}
+
+impl Driver for RouterDriver {
+    type Conn = RouterConn;
+
+    fn new_conn(&self, _conn_id: u64) -> RouterConn {
+        RouterConn::default()
     }
 
-    fn begin_shutdown(&self) {
-        self.shutdown.store(true, Ordering::Release);
-        let conns = self.conns.lock().unwrap();
-        for stream in conns.values() {
-            let _ = stream.shutdown(std::net::Shutdown::Read);
+    fn on_batch(&self, conn: &mut RouterConn, io: &mut ConnIo<'_>, frames: Vec<Frame>) -> Verdict {
+        let inner = &self.inner;
+        for frame in frames {
+            match frame {
+                Frame::Request(req) => {
+                    let payload = promote_shared(req.payload);
+                    let key = ShapeKey::of(payload.n(), payload.dtype());
+                    let order = inner.placement.order(key, inner.shards.len());
+                    // Available shards keep their placement order;
+                    // ejected (but probeable) ones are appended as a
+                    // last resort.
+                    let (avail, rest): (Vec<usize>, Vec<usize>) =
+                        order.into_iter().partition(|&s| inner.shards.available(s));
+                    let mut candidates = avail;
+                    candidates.extend(rest.into_iter().filter(|&s| inner.shards.probeable(s)));
+                    let mut job = RoutedJob {
+                        id: req.id,
+                        opts: req.opts,
+                        deadline_ms: req.deadline_ms,
+                        payload,
+                        candidates,
+                        next: 0,
+                        pending: None,
+                    };
+                    // First placement here, so requests pipeline into
+                    // the shards; failures fall through to the pump's
+                    // retry loop.
+                    place_next(inner, &mut job);
+                    conn.jobs.push_back(job);
+                }
+                Frame::Ping { nonce } => io.send(&Frame::Pong { nonce }),
+                Frame::StatsRequest => {
+                    let json = router_stats_json(inner).to_string_compact();
+                    io.send(&Frame::StatsResponse { json });
+                }
+                Frame::Shutdown => conn.shutdown_requested = true,
+                // The harness consumes Auth and reassembles Chunk
+                // frames before the driver sees the batch; stray ones
+                // are benign.
+                Frame::Auth { .. } | Frame::Chunk(_) => {}
+                Frame::Response(_)
+                | Frame::Error(_)
+                | Frame::Pong { .. }
+                | Frame::StatsResponse { .. }
+                | Frame::ShutdownAck => {
+                    io.send(&Frame::Error(ErrorReply {
+                        id: 0,
+                        error: ApiError::InvalidRequest("unexpected server-side frame kind".into()),
+                    }));
+                    return Verdict::CloseAfterFlush;
+                }
+            }
         }
+        // Pump immediately: fast failures (no candidate at all) answer
+        // in the same wakeup, and a lone Shutdown acks without waiting
+        // for the next tick.
+        self.pump(conn, io)
+    }
+
+    fn pump(&self, conn: &mut RouterConn, io: &mut ConnIo<'_>) -> Verdict {
+        let inner = &self.inner;
+        loop {
+            enum Step {
+                /// The front job is still solving: replies relay in
+                /// submission order, so stop here.
+                Blocked,
+                /// The front job was answered (or shed): drop it.
+                Pop,
+                /// State changed (retry placed / abandoned): loop.
+                Again,
+            }
+            let step = match conn.jobs.front_mut() {
+                None => break,
+                Some(job) => match job.pending.take() {
+                    Some((shard, mut handle)) => match handle.try_wait() {
+                        Ok(None) => {
+                            job.pending = Some((shard, handle));
+                            Step::Blocked
+                        }
+                        Ok(Some(resp)) => {
+                            inner.shards.record_success(shard);
+                            inner.completed.fetch_add(1, Ordering::Relaxed);
+                            let mut wire_resp = crate::net::wire::Response::from_solve(&resp);
+                            wire_resp.id = job.id;
+                            io.send(&Frame::Response(wire_resp));
+                            Step::Pop
+                        }
+                        Err(e) if retryable(&e) => {
+                            note_abandon(inner, shard, &e);
+                            Step::Again
+                        }
+                        Err(e) => {
+                            // A solve-level verdict (singular system,
+                            // expired deadline, invalid request): the
+                            // shard answered, the answer is an error —
+                            // relay it.
+                            inner.shards.record_success(shard);
+                            inner.failed.fetch_add(1, Ordering::Relaxed);
+                            io.send(&Frame::Error(ErrorReply {
+                                id: job.id,
+                                error: e,
+                            }));
+                            Step::Pop
+                        }
+                    },
+                    None => {
+                        if place_next(inner, job) {
+                            Step::Again
+                        } else {
+                            // Every candidate refused: shed back to the
+                            // client.
+                            inner.cluster.no_shard.fetch_add(1, Ordering::Relaxed);
+                            inner.failed.fetch_add(1, Ordering::Relaxed);
+                            io.send(&Frame::Error(ErrorReply {
+                                id: job.id,
+                                error: ApiError::Backpressure {
+                                    queue_depth: inner.shards.len(),
+                                },
+                            }));
+                            Step::Pop
+                        }
+                    }
+                },
+            };
+            match step {
+                Step::Blocked => break,
+                Step::Pop => {
+                    conn.jobs.pop_front();
+                }
+                Step::Again => {}
+            }
+        }
+        if conn.shutdown_requested && conn.jobs.is_empty() {
+            io.send(&Frame::ShutdownAck);
+            return Verdict::ShutdownAfterFlush;
+        }
+        Verdict::Continue
+    }
+
+    fn replies_owed(&self, conn: &RouterConn) -> usize {
+        conn.jobs.len()
+    }
+
+    fn on_close(&self, conn: &mut RouterConn, _io: &mut ConnIo<'_>, _reason: CloseReason) {
+        // Dropping the jobs drops their shard handles; late shard
+        // replies resolve into the clients' abandoned-id path. The
+        // downstream peer is gone (or being severed), so no frames.
+        conn.jobs.clear();
     }
 }
 
 /// Handle to a running shard router. Dropping it shuts the router down.
 pub struct ShardRouter {
     inner: Arc<RouterInner>,
-    local_addr: SocketAddr,
-    acceptor: Option<std::thread::JoinHandle<()>>,
+    event_loop: EventLoop,
+    health_stop: Arc<AtomicBool>,
     health: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -103,14 +254,6 @@ impl ShardRouter {
     /// Bind `cfg.listen` and start routing to `cfg.shards`.
     pub fn start(cfg: ClusterConfig) -> Result<ShardRouter> {
         cfg.validate()?;
-        let listener = TcpListener::bind(&cfg.listen)
-            .map_err(|e| Error::Service(format!("bind {}: {e}", cfg.listen)))?;
-        let local_addr = listener
-            .local_addr()
-            .map_err(|e| Error::Service(format!("local_addr: {e}")))?;
-        listener
-            .set_nonblocking(true)
-            .map_err(|e| Error::Service(format!("set_nonblocking: {e}")))?;
         let shards = Arc::new(ShardTable::new(
             cfg.shards.clone(),
             cfg.auth_token.clone(),
@@ -123,46 +266,55 @@ impl ShardRouter {
             PlacementKind::Random => Box::new(RandomPolicy::new(0x7061_7274)),
         };
         let cluster = Arc::new(ClusterMetrics::new(shards.len()));
-        let shutdown = Arc::new(AtomicBool::new(false));
+        let health_stop = Arc::new(AtomicBool::new(false));
         let health = health::spawn(
             shards.clone(),
             cluster.clone(),
-            shutdown.clone(),
+            health_stop.clone(),
             HealthConfig {
                 interval: Duration::from_millis(cfg.health_interval_ms),
                 probe_timeout: Duration::from_millis(cfg.probe_timeout_ms),
             },
         )
         .map_err(|e| Error::Service(format!("spawn health monitor: {e}")))?;
+        let net = Arc::new(NetMetrics::default());
         let inner = Arc::new(RouterInner {
-            cfg,
-            shards,
+            shards: shards.clone(),
             placement,
-            net: NetMetrics::default(),
+            net: net.clone(),
             cluster,
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
-            shutdown,
-            conns: Mutex::new(HashMap::new()),
-            next_conn_id: AtomicU64::new(0),
-            handlers: Mutex::new(Vec::new()),
         });
-        let inner2 = inner.clone();
-        let acceptor = std::thread::Builder::new()
-            .name("partisol-cluster-accept".into())
-            .spawn(move || accept_loop(listener, inner2))
-            .map_err(|e| Error::Service(format!("spawn acceptor: {e}")))?;
+        let net_cfg = NetConfig {
+            addr: cfg.listen.clone(),
+            max_conns: cfg.max_conns,
+            read_timeout_ms: cfg.read_timeout_ms,
+            max_frame_bytes: cfg.max_frame_bytes,
+            auth_token: cfg.auth_token.clone(),
+            // Keep chunk frames well under the cluster's frame cap.
+            chunk_bytes: (cfg.max_frame_bytes / 2).clamp(1024, 4 << 20),
+            ..NetConfig::default()
+        };
+        let driver = Arc::new(RouterDriver {
+            inner: inner.clone(),
+        });
+        let event_loop = EventLoop::start(driver, net_cfg, net, "cluster")?;
+        // Shard replies resolve handles on the shard clients' reader
+        // threads; hook them up to prod the loop out of its tick.
+        let waker = event_loop.waker();
+        shards.set_reply_waker(Arc::new(move || waker.wake()));
         Ok(ShardRouter {
             inner,
-            local_addr,
-            acceptor: Some(acceptor),
+            event_loop,
+            health_stop,
             health: Some(health),
         })
     }
 
     /// The bound address (the actual port when `listen` asked for `:0`).
     pub fn local_addr(&self) -> SocketAddr {
-        self.local_addr
+        self.event_loop.local_addr()
     }
 
     /// The per-shard routing counters (shared with the stats frame).
@@ -187,7 +339,7 @@ impl ShardRouter {
     pub fn run_until_shutdown(&self) {
         loop {
             let open = self.inner.net.connections_open.load(Ordering::Relaxed);
-            if self.inner.shutting_down() && open == 0 {
+            if self.event_loop.shutting_down() && open == 0 {
                 return;
             }
             std::thread::sleep(Duration::from_millis(20));
@@ -195,21 +347,15 @@ impl ShardRouter {
     }
 
     /// Stop accepting, drain and join every connection, the health
-    /// monitor and the acceptor, and close the shard connections.
+    /// monitor and the event loop, and close the shard connections.
     pub fn shutdown(mut self) {
         self.stop();
     }
 
     fn stop(&mut self) {
-        self.inner.begin_shutdown();
-        if let Some(t) = self.acceptor.take() {
-            let _ = t.join();
-        }
+        self.health_stop.store(true, Ordering::Release);
+        self.event_loop.stop();
         if let Some(t) = self.health.take() {
-            let _ = t.join();
-        }
-        let handlers: Vec<_> = self.inner.handlers.lock().unwrap().drain(..).collect();
-        for t in handlers {
             let _ = t.join();
         }
         self.inner.shards.close_all();
@@ -219,277 +365,6 @@ impl ShardRouter {
 impl Drop for ShardRouter {
     fn drop(&mut self) {
         self.stop();
-    }
-}
-
-fn accept_loop(listener: TcpListener, inner: Arc<RouterInner>) {
-    loop {
-        if inner.shutting_down() {
-            return;
-        }
-        match listener.accept() {
-            Ok((stream, peer)) => {
-                let _ = stream.set_nodelay(true);
-                let open = inner.net.connections_open.load(Ordering::Relaxed);
-                if open >= inner.cfg.max_conns as u64 {
-                    inner.net.sheds.fetch_add(1, Ordering::Relaxed);
-                    let mut w = BufWriter::new(&stream);
-                    let _ = Frame::Error(ErrorReply {
-                        id: 0,
-                        error: ApiError::Backpressure {
-                            queue_depth: inner.cfg.max_conns,
-                        },
-                    })
-                    .write_to(&mut w)
-                    .and_then(|_| std::io::Write::flush(&mut w));
-                    continue;
-                }
-                inner
-                    .net
-                    .connections_accepted
-                    .fetch_add(1, Ordering::Relaxed);
-                inner.net.connections_open.fetch_add(1, Ordering::Relaxed);
-                let conn_id = inner.next_conn_id.fetch_add(1, Ordering::Relaxed);
-                if let Ok(clone) = stream.try_clone() {
-                    inner.conns.lock().unwrap().insert(conn_id, clone);
-                }
-                let inner2 = inner.clone();
-                let handle = std::thread::Builder::new()
-                    .name(format!("partisol-cluster-conn-{conn_id}"))
-                    .spawn(move || {
-                        conn_reader(stream, conn_id, &inner2);
-                        inner2.conns.lock().unwrap().remove(&conn_id);
-                        inner2.net.connections_open.fetch_sub(1, Ordering::Relaxed);
-                    });
-                match handle {
-                    Ok(h) => {
-                        let mut handlers = inner.handlers.lock().unwrap();
-                        handlers.retain(|t| !t.is_finished());
-                        handlers.push(h);
-                    }
-                    Err(e) => {
-                        crate::log_warn!("cluster: spawn handler for {peer}: {e}");
-                        inner.conns.lock().unwrap().remove(&conn_id);
-                        inner.net.connections_open.fetch_sub(1, Ordering::Relaxed);
-                    }
-                }
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(10));
-            }
-            Err(e) => {
-                crate::log_warn!("cluster: accept failed: {e}");
-                std::thread::sleep(Duration::from_millis(50));
-            }
-        }
-    }
-}
-
-/// Downstream-connection reader: decode frames, place requests, answer
-/// control frames. Mirrors the server's reader, with routing in place
-/// of local submission.
-fn conn_reader(stream: TcpStream, conn_id: u64, inner: &Arc<RouterInner>) {
-    if inner.cfg.read_timeout_ms > 0 {
-        let _ = stream.set_read_timeout(Some(Duration::from_millis(inner.cfg.read_timeout_ms)));
-    }
-    let (tx, rx) = mpsc::channel::<Outgoing>();
-    let inflight = Arc::new(AtomicU64::new(0));
-    let writer = match stream.try_clone() {
-        Ok(wstream) => {
-            let inner2 = inner.clone();
-            let inflight2 = inflight.clone();
-            std::thread::Builder::new()
-                .name(format!("partisol-cluster-write-{conn_id}"))
-                .spawn(move || conn_writer(wstream, rx, inner2, inflight2))
-                .ok()
-        }
-        Err(e) => {
-            crate::log_warn!("cluster: clone stream for conn {conn_id}: {e}");
-            None
-        }
-    };
-    if writer.is_some() {
-        let mut authed = inner.cfg.auth_token.is_none();
-        let mut r = BufReader::new(&stream);
-        loop {
-            match read_frame(&mut r, inner.cfg.max_frame_bytes) {
-                Ok(frame) => {
-                    inner.net.frames_in.fetch_add(1, Ordering::Relaxed);
-                    if !authed {
-                        match &frame {
-                            Frame::Auth { token }
-                                if Some(token.as_str()) == inner.cfg.auth_token.as_deref() =>
-                            {
-                                authed = true;
-                                continue;
-                            }
-                            _ => {
-                                inner.net.unauthorized.fetch_add(1, Ordering::Relaxed);
-                                let _ = tx.send(Outgoing::Frame(Frame::Error(ErrorReply {
-                                    id: 0,
-                                    error: ApiError::Unauthorized,
-                                })));
-                                break;
-                            }
-                        }
-                    }
-                    if !handle_frame(frame, &tx, inner, &inflight) {
-                        break;
-                    }
-                }
-                Err(WireError::Closed) => break,
-                Err(WireError::Timeout) => {
-                    if inner.shutting_down() || inflight.load(Ordering::Acquire) == 0 {
-                        break;
-                    }
-                }
-                Err(e) => {
-                    crate::log_warn!("cluster: conn {conn_id}: {e}; closing");
-                    let error = match &e {
-                        WireError::BadVersion(_) => ApiError::VersionMismatch { peer: VERSION },
-                        _ => ApiError::InvalidRequest(format!("protocol error: {e}")),
-                    };
-                    let _ = tx.send(Outgoing::Frame(Frame::Error(ErrorReply { id: 0, error })));
-                    break;
-                }
-            }
-        }
-    }
-    drop(tx);
-    if let Some(w) = writer {
-        let _ = w.join();
-    }
-    let _ = stream.shutdown(std::net::Shutdown::Both);
-}
-
-fn handle_frame(
-    frame: Frame,
-    tx: &mpsc::Sender<Outgoing>,
-    inner: &Arc<RouterInner>,
-    inflight: &Arc<AtomicU64>,
-) -> bool {
-    match frame {
-        Frame::Request(req) => {
-            let payload = promote_shared(req.payload);
-            let key = ShapeKey::of(payload.n(), payload.dtype());
-            let order = inner.placement.order(key, inner.shards.len());
-            // Available shards keep their placement order; ejected (but
-            // probeable) ones are appended as a last resort.
-            let (avail, rest): (Vec<usize>, Vec<usize>) =
-                order.into_iter().partition(|&s| inner.shards.available(s));
-            let mut candidates = avail;
-            candidates.extend(rest.into_iter().filter(|&s| inner.shards.probeable(s)));
-            let mut job = Box::new(RoutedJob {
-                id: req.id,
-                opts: req.opts,
-                deadline_ms: req.deadline_ms,
-                payload,
-                candidates,
-                next: 0,
-                pending: None,
-            });
-            // First placement here, so requests pipeline into the
-            // shards; failures fall through to the writer's retry loop.
-            place_next(inner, &mut job);
-            inflight.fetch_add(1, Ordering::AcqRel);
-            tx.send(Outgoing::Job(job)).is_ok()
-        }
-        Frame::Ping { nonce } => tx.send(Outgoing::Frame(Frame::Pong { nonce })).is_ok(),
-        Frame::StatsRequest => {
-            let json = router_stats_json(inner).to_string_compact();
-            tx.send(Outgoing::Frame(Frame::StatsResponse { json }))
-                .is_ok()
-        }
-        Frame::Shutdown => {
-            let _ = tx.send(Outgoing::AckThenShutdown);
-            false
-        }
-        Frame::Auth { .. } => true,
-        Frame::Response(_)
-        | Frame::Error(_)
-        | Frame::Pong { .. }
-        | Frame::StatsResponse { .. }
-        | Frame::ShutdownAck => {
-            let _ = tx.send(Outgoing::Frame(Frame::Error(ErrorReply {
-                id: 0,
-                error: ApiError::InvalidRequest("unexpected server-side frame kind".into()),
-            })));
-            false
-        }
-    }
-}
-
-/// Downstream-connection writer: wait each routed job (driving retries)
-/// and stream replies back in submission order.
-fn conn_writer(
-    stream: TcpStream,
-    rx: mpsc::Receiver<Outgoing>,
-    inner: Arc<RouterInner>,
-    inflight: Arc<AtomicU64>,
-) {
-    let mut w = BufWriter::new(stream);
-    for out in rx {
-        let frame = match out {
-            Outgoing::AckThenShutdown => {
-                let _ = Frame::ShutdownAck
-                    .write_to(&mut w)
-                    .and_then(|_| std::io::Write::flush(&mut w));
-                inner.net.frames_out.fetch_add(1, Ordering::Relaxed);
-                inner.begin_shutdown();
-                continue;
-            }
-            Outgoing::Frame(f) => f,
-            Outgoing::Job(mut job) => {
-                let frame = drive_job(&inner, &mut job);
-                inflight.fetch_sub(1, Ordering::AcqRel);
-                frame
-            }
-        };
-        if frame.write_to(&mut w).is_err() || std::io::Write::flush(&mut w).is_err() {
-            return;
-        }
-        inner.net.frames_out.fetch_add(1, Ordering::Relaxed);
-    }
-}
-
-/// Wait the job's pending reply; on a retryable failure, spill /
-/// fail over to the next candidate until one answers or the candidate
-/// list is exhausted.
-fn drive_job(inner: &Arc<RouterInner>, job: &mut RoutedJob) -> Frame {
-    loop {
-        if let Some((shard, handle)) = job.pending.take() {
-            match handle.wait() {
-                Ok(resp) => {
-                    inner.shards.record_success(shard);
-                    inner.completed.fetch_add(1, Ordering::Relaxed);
-                    let mut wire_resp = crate::net::wire::Response::from_solve(&resp);
-                    wire_resp.id = job.id;
-                    return Frame::Response(wire_resp);
-                }
-                Err(e) if retryable(&e) => {
-                    note_abandon(inner, shard, &e);
-                }
-                Err(e) => {
-                    // A solve-level verdict (singular system, expired
-                    // deadline, invalid request): the shard answered,
-                    // the answer is an error — relay it.
-                    inner.shards.record_success(shard);
-                    inner.failed.fetch_add(1, Ordering::Relaxed);
-                    return Frame::Error(ErrorReply { id: job.id, error: e });
-                }
-            }
-        }
-        if !place_next(inner, job) {
-            // Every candidate refused: shed back to the client.
-            inner.cluster.no_shard.fetch_add(1, Ordering::Relaxed);
-            inner.failed.fetch_add(1, Ordering::Relaxed);
-            return Frame::Error(ErrorReply {
-                id: job.id,
-                error: ApiError::Backpressure {
-                    queue_depth: inner.shards.len(),
-                },
-            });
-        }
     }
 }
 
@@ -640,6 +515,9 @@ fn router_stats_json(inner: &RouterInner) -> Json {
         ("frames_out", num(load(&inner.net.frames_out))),
         ("sheds", num(load(&inner.net.sheds))),
         ("unauthorized", num(load(&inner.net.unauthorized))),
+        ("wakeups", num(load(&inner.net.wakeups))),
+        ("partial_reads", num(load(&inner.net.partial_reads))),
+        ("chunked_frames", num(load(&inner.net.chunked_frames))),
         ("shards", Json::Arr(shard_objs)),
     ])
 }

@@ -66,6 +66,10 @@ pub struct ShardTable {
     max_frame_bytes: usize,
     eject_after: u32,
     readmit_after: u32,
+    /// Installed on every dialed client: called when a shard reply
+    /// resolves a handle, so the router's event loop re-pumps instead
+    /// of waiting out its tick.
+    reply_waker: Mutex<Option<Arc<dyn Fn() + Send + Sync>>>,
 }
 
 impl ShardTable {
@@ -82,7 +86,19 @@ impl ShardTable {
             max_frame_bytes,
             eject_after: eject_after.max(1),
             readmit_after: readmit_after.max(1),
+            reply_waker: Mutex::new(None),
         }
+    }
+
+    /// Set the reply waker installed on every shard client (existing
+    /// and future dials).
+    pub fn set_reply_waker(&self, waker: Arc<dyn Fn() + Send + Sync>) {
+        for s in &self.shards {
+            if let Some(c) = s.client.lock().unwrap().as_ref() {
+                c.set_reply_waker(waker.clone());
+            }
+        }
+        *self.reply_waker.lock().unwrap() = Some(waker);
     }
 
     pub fn len(&self) -> usize {
@@ -124,8 +140,12 @@ impl ShardTable {
                 max_frame_bytes: self.max_frame_bytes,
                 auth_token: self.auth_token.clone(),
                 reconnect: None,
+                ..ConnectOptions::default()
             },
         )?);
+        if let Some(w) = self.reply_waker.lock().unwrap().as_ref() {
+            c.set_reply_waker(w.clone());
+        }
         *slot = Some(c.clone());
         Ok(c)
     }

@@ -242,6 +242,15 @@ impl Config {
         if let Some(v) = t.get("net.max_frame_bytes") {
             cfg.net.max_frame_bytes = int_field(v, "net.max_frame_bytes")?;
         }
+        if let Some(v) = t.get("net.event_workers") {
+            cfg.net.event_workers = int_field(v, "net.event_workers")?;
+        }
+        if let Some(v) = t.get("net.conn_quota") {
+            cfg.net.conn_quota = int_field(v, "net.conn_quota")?;
+        }
+        if let Some(v) = t.get("net.chunk_bytes") {
+            cfg.net.chunk_bytes = int_field(v, "net.chunk_bytes")?;
+        }
         if let Some(v) = t.get("net.auth_token") {
             let token = v
                 .as_str()
@@ -466,17 +475,26 @@ mod tests {
     #[test]
     fn net_knobs_roundtrip_and_validate() {
         let c = Config::from_str(
-            "[net]\naddr = \"0.0.0.0:9000\"\nmax_conns = 8\nread_timeout_ms = 500\nmax_frame_bytes = 1048576",
+            "[net]\naddr = \"0.0.0.0:9000\"\nmax_conns = 8\nread_timeout_ms = 500\nmax_frame_bytes = 1048576\nevent_workers = 3\nconn_quota = 16\nchunk_bytes = 262144",
         )
         .unwrap();
         assert_eq!(c.net.addr, "0.0.0.0:9000");
         assert_eq!(c.net.max_conns, 8);
         assert_eq!(c.net.read_timeout_ms, 500);
         assert_eq!(c.net.max_frame_bytes, 1 << 20);
+        assert_eq!(c.net.event_workers, 3);
+        assert_eq!(c.net.conn_quota, 16);
+        assert_eq!(c.net.chunk_bytes, 256 << 10);
         assert_eq!(Config::default().net.addr, "127.0.0.1:7071");
         assert!(Config::from_str("[net]\nmax_conns = 0").is_err());
         assert!(Config::from_str("[net]\nmax_frame_bytes = 16").is_err());
         assert!(Config::from_str("[net]\naddr = \"\"").is_err());
+        assert!(Config::from_str("[net]\nevent_workers = 0").is_err());
+        assert!(Config::from_str("[net]\nconn_quota = 0").is_err());
+        // chunk_bytes must leave room under the frame cap.
+        assert!(
+            Config::from_str("[net]\nmax_frame_bytes = 1048576\nchunk_bytes = 1048576").is_err()
+        );
     }
 
     #[test]

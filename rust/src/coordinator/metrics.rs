@@ -121,6 +121,19 @@ pub struct NetMetrics {
     /// Connections rejected by the first-frame auth check (missing or
     /// wrong `[net] auth_token`).
     pub unauthorized: AtomicU64,
+    /// Event-loop worker wakeups (one per `epoll_wait` return).
+    pub wakeups: AtomicU64,
+    /// Read batches that ended with a partial frame still buffered
+    /// (the readiness decoder picked it up on a later wakeup).
+    pub partial_reads: AtomicU64,
+    /// Requests parked in a connection's deferred queue because the
+    /// connection was at its fairness quota (`[net] conn_quota`).
+    pub quota_deferred: AtomicU64,
+    /// Requests executed as part of a server-side fused `submit_many`
+    /// group (same-shape pipelined requests from one connection).
+    pub conn_fused: AtomicU64,
+    /// Chunk frames sent or received (`[net] chunk_bytes` streaming).
+    pub chunked_frames: AtomicU64,
 }
 
 impl NetMetrics {
@@ -133,6 +146,11 @@ impl NetMetrics {
         snap.net_sheds = self.sheds.load(Ordering::Relaxed);
         snap.net_deadline_expired = self.deadline_expired.load(Ordering::Relaxed);
         snap.net_unauthorized = self.unauthorized.load(Ordering::Relaxed);
+        snap.net_wakeups = self.wakeups.load(Ordering::Relaxed);
+        snap.net_partial_reads = self.partial_reads.load(Ordering::Relaxed);
+        snap.net_quota_deferred = self.quota_deferred.load(Ordering::Relaxed);
+        snap.net_conn_fused = self.conn_fused.load(Ordering::Relaxed);
+        snap.net_chunked_frames = self.chunked_frames.load(Ordering::Relaxed);
     }
 }
 
@@ -269,6 +287,16 @@ pub struct MetricsSnapshot {
     pub net_deadline_expired: u64,
     /// Network layer: connections rejected by the first-frame auth check.
     pub net_unauthorized: u64,
+    /// Network layer: event-loop worker wakeups.
+    pub net_wakeups: u64,
+    /// Network layer: read batches ending in a buffered partial frame.
+    pub net_partial_reads: u64,
+    /// Network layer: requests deferred at the per-connection quota.
+    pub net_quota_deferred: u64,
+    /// Network layer: requests fused into server-side `submit_many` groups.
+    pub net_conn_fused: u64,
+    /// Network layer: chunk frames sent or received.
+    pub net_chunked_frames: u64,
     /// Cluster tier: requests placed on their first-choice shard.
     pub cluster_routed: u64,
     /// Cluster tier: requests moved to the next replica (shed/failover).
@@ -357,6 +385,11 @@ impl Metrics {
             net_sheds: 0,
             net_deadline_expired: 0,
             net_unauthorized: 0,
+            net_wakeups: 0,
+            net_partial_reads: 0,
+            net_quota_deferred: 0,
+            net_conn_fused: 0,
+            net_chunked_frames: 0,
             cluster_routed: 0,
             cluster_spilled: 0,
             cluster_failovers: 0,
@@ -442,6 +475,11 @@ mod tests {
             "service snapshots default the net counters to zero"
         );
         net.unauthorized.fetch_add(4, Ordering::Relaxed);
+        net.wakeups.fetch_add(11, Ordering::Relaxed);
+        net.partial_reads.fetch_add(12, Ordering::Relaxed);
+        net.quota_deferred.fetch_add(13, Ordering::Relaxed);
+        net.conn_fused.fetch_add(14, Ordering::Relaxed);
+        net.chunked_frames.fetch_add(15, Ordering::Relaxed);
         net.fill(&mut s);
         assert_eq!(s.net_connections_accepted, 7);
         assert_eq!(s.net_connections_open, 2);
@@ -450,6 +488,11 @@ mod tests {
         assert_eq!(s.net_sheds, 5);
         assert_eq!(s.net_deadline_expired, 1);
         assert_eq!(s.net_unauthorized, 4);
+        assert_eq!(s.net_wakeups, 11);
+        assert_eq!(s.net_partial_reads, 12);
+        assert_eq!(s.net_quota_deferred, 13);
+        assert_eq!(s.net_conn_fused, 14);
+        assert_eq!(s.net_chunked_frames, 15);
     }
 
     #[test]

@@ -107,6 +107,18 @@ struct Inner {
     /// Online tuning subsystem (telemetry ring + trainer state + the
     /// planner's hot-swap slot), when `cfg.online.enabled`.
     tuner: Option<Arc<OnlineTuner>>,
+    /// Callbacks fired after every reply send (success or error): the
+    /// network event loop registers one so a completed solve wakes the
+    /// worker that owes its reply instead of waiting out a poll tick.
+    completion_wakers: Mutex<Vec<Arc<dyn Fn() + Send + Sync>>>,
+}
+
+impl Inner {
+    fn notify_completion(&self) {
+        for waker in self.completion_wakers.lock().unwrap().iter() {
+            waker();
+        }
+    }
 }
 
 /// Handle to a running service.
@@ -174,6 +186,7 @@ impl Service {
             pool,
             native,
             tuner,
+            completion_wakers: Mutex::new(Vec::new()),
         });
 
         let mut threads = Vec::new();
@@ -479,6 +492,13 @@ impl Service {
         rx.recv()
             .map_err(|_| Error::Service("service dropped the request".into()))?
             .map_err(Error::from)
+    }
+
+    /// Register a callback fired after every reply send (success or
+    /// error). The network event loop uses this to wake the worker
+    /// owing a finished solve's reply the moment it completes.
+    pub fn add_completion_waker(&self, waker: Arc<dyn Fn() + Send + Sync>) {
+        self.inner.completion_wakers.lock().unwrap().push(waker);
     }
 
     pub fn metrics(&self) -> super::metrics::MetricsSnapshot {
@@ -1261,6 +1281,7 @@ fn respond_ok_typed<T: PayloadScalar + NativeScalar>(
             .responses_dropped
             .fetch_add(1, Ordering::Relaxed);
     }
+    inner.notify_completion();
 }
 
 fn respond_err(inner: &Arc<Inner>, job: Job, err: ApiError) {
@@ -1270,6 +1291,7 @@ fn respond_err(inner: &Arc<Inner>, job: Job, err: ApiError) {
             .responses_dropped
             .fetch_add(1, Ordering::Relaxed);
     }
+    inner.notify_completion();
 }
 
 #[cfg(test)]

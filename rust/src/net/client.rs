@@ -36,7 +36,10 @@
 //! are not retried.
 
 use super::stats::StatsSnapshot;
-use super::wire::{read_frame, write_request, Frame, WireError};
+use super::wire::{
+    encode_request_body, read_frame, reassemble, write_chunked, write_request, Frame, WireError,
+    KIND_REQUEST, MAX_STREAM_BYTES,
+};
 use super::DEFAULT_MAX_FRAME_BYTES;
 use crate::api::{ApiError, SolveHandle, SolveSpec, SystemPayload, SystemSource};
 use crate::coordinator::service::Reply;
@@ -84,6 +87,11 @@ pub struct ConnectOptions {
     /// Arm the reconnect layer. `None` (the default) keeps the classic
     /// fail-fast behavior: a dropped connection poisons the client.
     pub reconnect: Option<ReconnectPolicy>,
+    /// Outbound chunking threshold: request bodies above this are sent
+    /// as `Chunk`/`ChunkEnd` streams (version-2 servers reassemble),
+    /// which is how a system larger than the server's `max_frame_bytes`
+    /// gets solved remotely. Each chunk frame stays under this size.
+    pub chunk_bytes: usize,
 }
 
 impl Default for ConnectOptions {
@@ -92,6 +100,7 @@ impl Default for ConnectOptions {
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
             auth_token: None,
             reconnect: None,
+            chunk_bytes: 4 << 20,
         }
     }
 }
@@ -144,6 +153,10 @@ struct Shared {
     /// Successful redials and requests replayed across them.
     reconnects: AtomicU64,
     replayed: AtomicU64,
+    /// Called after every solve-reply dispatch (and on poison): the
+    /// cluster router's event loop registers one so a shard reply wakes
+    /// the worker owing the downstream response.
+    reply_waker: Mutex<Option<Arc<dyn Fn() + Send + Sync>>>,
 }
 
 impl Shared {
@@ -157,6 +170,16 @@ impl Shared {
         // Wake submitters blocked on an outage so they observe `dead`.
         drop(self.conn.lock().unwrap());
         self.conn_cv.notify_all();
+        // Poisoning resolves every handle (as Disconnected); anyone
+        // polling those handles wants to know now.
+        self.wake_reply();
+    }
+
+    fn wake_reply(&self) {
+        let waker = self.reply_waker.lock().unwrap().clone();
+        if let Some(w) = waker {
+            w();
+        }
     }
 
     /// Why this connection is unusable: the server's connection-level
@@ -258,6 +281,7 @@ impl RemoteClient {
             conn_error: Mutex::new(None),
             reconnects: AtomicU64::new(0),
             replayed: AtomicU64::new(0),
+            reply_waker: Mutex::new(None),
         });
         let shared2 = shared.clone();
         let reader = std::thread::Builder::new()
@@ -376,7 +400,8 @@ impl RemoteClient {
                     },
                 );
             }
-            write_request(w, id, &opts, deadline_ms, &payload).and_then(|_| w.flush())
+            send_request(w, id, &opts, deadline_ms, &payload, self.shared.opts.chunk_bytes)
+                .and_then(|_| w.flush())
         });
         match res {
             Err(e) if self.resilient() && !self.shared.dead.load(Ordering::Acquire) => {
@@ -436,7 +461,7 @@ impl RemoteClient {
                         },
                     );
                 }
-                write_request(w, id, &opts, 0, &payload)?;
+                send_request(w, id, &opts, 0, &payload, self.shared.opts.chunk_bytes)?;
                 handles.push(SolveHandle::new(id, rx));
             }
             w.flush()
@@ -570,6 +595,14 @@ impl RemoteClient {
         self.shared.opts.max_frame_bytes
     }
 
+    /// Register a callback fired after each solve reply (response or
+    /// error) is dispatched to its handle, and when the client is
+    /// poisoned. Used by pollers (the cluster router's event loop) to
+    /// avoid waiting out their tick.
+    pub(crate) fn set_reply_waker(&self, waker: Arc<dyn Fn() + Send + Sync>) {
+        *self.shared.reply_waker.lock().unwrap() = Some(waker);
+    }
+
     /// Successful redials performed by the reconnect layer.
     pub fn reconnects(&self) -> u64 {
         self.shared.reconnects.load(Ordering::Relaxed)
@@ -603,6 +636,27 @@ impl RemoteClient {
 impl Drop for RemoteClient {
     fn drop(&mut self) {
         self.teardown();
+    }
+}
+
+/// Write one request, chunking the body when it exceeds the chunk
+/// threshold — this is how a system larger than the server's
+/// `max_frame_bytes` crosses the wire. The size estimate mirrors
+/// [`encode_request_body`] (fixed 28-byte head + four diagonals).
+fn send_request<W: Write>(
+    w: &mut W,
+    id: u64,
+    opts: &SolveOptions,
+    deadline_ms: u32,
+    payload: &SystemPayload<'static>,
+    chunk_bytes: usize,
+) -> std::io::Result<()> {
+    let est = 28 + 4 * payload.n() * payload.dtype().bytes();
+    if est > chunk_bytes {
+        let body = encode_request_body(id, opts, deadline_ms, payload);
+        write_chunked(w, id, KIND_REQUEST, &body, chunk_bytes).map(|_| ())
+    } else {
+        write_request(w, id, opts, deadline_ms, payload)
     }
 }
 
@@ -669,8 +723,38 @@ fn read_stream(stream: &TcpStream, shared: &Arc<Shared>) -> ReadExit {
             return ReadExit::Transient;
         }
     };
+    // One in-progress chunk stream at a time: (stream id, inner kind,
+    // reassembly buffer).
+    let mut assembly: Option<(u64, u8, Vec<u8>)> = None;
     loop {
-        match read_frame(&mut r, shared.opts.max_frame_bytes) {
+        let decoded = match read_frame(&mut r, shared.opts.max_frame_bytes) {
+            Ok(Frame::Chunk(piece)) => {
+                let (ps, pk, last) = (piece.stream, piece.inner_kind, piece.last);
+                let a = assembly.get_or_insert_with(|| (ps, pk, Vec::new()));
+                if a.0 != ps || a.1 != pk {
+                    crate::log_warn!("net client: interleaved chunk streams; closing");
+                    return ReadExit::Fatal;
+                }
+                if a.2.len() + piece.data.len() > MAX_STREAM_BYTES {
+                    crate::log_warn!("net client: chunk stream exceeds cap; closing");
+                    return ReadExit::Fatal;
+                }
+                a.2.extend_from_slice(&piece.data);
+                if !last {
+                    continue;
+                }
+                let (_, kind, buf) = assembly.take().unwrap();
+                match reassemble(kind, &buf) {
+                    Ok(frame) => Ok(frame),
+                    Err(e) => {
+                        crate::log_warn!("net client: chunk stream: {e}; closing");
+                        return ReadExit::Fatal;
+                    }
+                }
+            }
+            other => other,
+        };
+        match decoded {
             Ok(Frame::Response(resp)) => {
                 let id = resp.id;
                 let tx = shared.pending.lock().unwrap().remove(&id);
@@ -678,6 +762,7 @@ fn read_stream(stream: &TcpStream, shared: &Arc<Shared>) -> ReadExit {
                 if let Some(tx) = tx {
                     let _ = tx.send(Ok(resp.into_solve_response()));
                 }
+                shared.wake_reply();
             }
             Ok(Frame::Error(reply)) => {
                 let id = reply.id;
@@ -703,6 +788,7 @@ fn read_stream(stream: &TcpStream, shared: &Arc<Shared>) -> ReadExit {
                         );
                     }
                 }
+                shared.wake_reply();
             }
             Ok(Frame::Pong { nonce }) => send_control(shared, ControlMsg::Pong(nonce)),
             Ok(Frame::StatsResponse { json }) => send_control(shared, ControlMsg::Stats(json)),
@@ -785,7 +871,14 @@ fn try_redial(shared: &Arc<Shared>) -> std::io::Result<TcpStream> {
             .collect()
     };
     for (id, opts, deadline_ms, payload) in &entries {
-        write_request(&mut writer, *id, opts, *deadline_ms, payload)?;
+        send_request(
+            &mut writer,
+            *id,
+            opts,
+            *deadline_ms,
+            payload,
+            shared.opts.chunk_bytes,
+        )?;
     }
     writer.flush()?;
     let rstream = stream.try_clone()?;

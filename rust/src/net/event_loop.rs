@@ -1,0 +1,1214 @@
+//! Readiness-driven event loop: the shared engine under
+//! [`crate::net::NetServer`] and [`crate::cluster::ShardRouter`].
+//!
+//! A small fixed worker set multiplexes every connection over an
+//! `epoll` instance (raw syscall wrapper — no external crates; a
+//! `poll(2)` fallback covers non-Linux unix hosts). Each connection is
+//! a state machine: bytes read on readiness feed an incremental
+//! [`FrameDecoder`], decoded frames are handed to the protocol
+//! [`Driver`] in batches (which is what makes server-side request
+//! fusing possible), and replies accumulate in a per-connection write
+//! queue drained on writability. Workers sleep in `epoll_wait`;
+//! completed solves prod them through an eventfd-backed [`Waker`], so
+//! a reply is written promptly without any thread parked per
+//! connection.
+//!
+//! The harness owns everything protocol-generic: accept + connection
+//! shed, the first-frame auth gate, chunk-stream reassembly
+//! (version-2 peers), idle reaping, counters and the
+//! shutdown/kill sequencing. Protocol semantics — what a request
+//! *does* — live behind the [`Driver`] trait.
+
+use super::wire::{
+    reassemble, write_chunked, write_frame, ErrorReply, Frame, FrameDecoder, WireError,
+    KIND_REQUEST, KIND_RESPONSE, KIND_STATS_RESPONSE, MAX_STREAM_BYTES, VERSION,
+};
+use super::NetConfig;
+use crate::api::ApiError;
+use crate::coordinator::metrics::NetMetrics;
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// OS readiness layer.
+// ---------------------------------------------------------------------------
+
+/// One readiness notification from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct PollEvent {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Token 0 is reserved for the poller's own wake channel.
+const WAKER_TOKEN: u64 = 0;
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! Linux: `epoll` (level-triggered) + `eventfd` wakeups, declared
+    //! directly against libc (std already links it; the `libc` crate is
+    //! not a dependency of this offline build).
+
+    use super::{PollEvent, WAKER_TOKEN};
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::sync::Arc;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EFD_CLOEXEC: i32 = 0o2000000;
+    const EFD_NONBLOCK: i32 = 0o4000;
+
+    /// The kernel ABI struct. x86-64 packs it (no padding between the
+    /// u32 mask and the u64 payload); other architectures use natural
+    /// alignment.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn eventfd(initval: u32, flags: i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        fn close(fd: i32) -> i32;
+    }
+
+    fn cvt(ret: i32) -> io::Result<i32> {
+        if ret < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(ret)
+        }
+    }
+
+    /// Owns the eventfd so a [`Waker`] clone held by a completion
+    /// callback can never write into a recycled fd number: the fd is
+    /// closed only when the last clone drops.
+    struct WakeFd(RawFd);
+
+    impl Drop for WakeFd {
+        fn drop(&mut self) {
+            unsafe { close(self.0) };
+        }
+    }
+
+    /// Cross-thread wakeup handle for a [`Poller`] blocked in `wait`.
+    #[derive(Clone)]
+    pub struct Waker {
+        fd: Arc<WakeFd>,
+    }
+
+    impl Waker {
+        pub fn wake(&self) {
+            let one = 1u64.to_ne_bytes();
+            unsafe { write(self.fd.0, one.as_ptr(), one.len()) };
+        }
+    }
+
+    pub struct Poller {
+        epfd: RawFd,
+        waker: Waker,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            let efd = match cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) }) {
+                Ok(fd) => fd,
+                Err(e) => {
+                    unsafe { close(epfd) };
+                    return Err(e);
+                }
+            };
+            let poller = Poller {
+                epfd,
+                waker: Waker {
+                    fd: Arc::new(WakeFd(efd)),
+                },
+            };
+            poller.ctl(EPOLL_CTL_ADD, efd, WAKER_TOKEN, EPOLLIN)?;
+            Ok(poller)
+        }
+
+        pub fn waker(&self) -> Waker {
+            self.waker.clone()
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events,
+                data: token,
+            };
+            cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) }).map(|_| ())
+        }
+
+        fn mask(readable: bool, writable: bool) -> u32 {
+            let mut m = 0;
+            if readable {
+                m |= EPOLLIN;
+            }
+            if writable {
+                m |= EPOLLOUT;
+            }
+            m
+        }
+
+        pub fn register(
+            &self,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, Self::mask(readable, writable))
+        }
+
+        pub fn rearm(
+            &self,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, Self::mask(readable, writable))
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            // The event pointer must be non-null for DEL on old kernels.
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        pub fn wait(&self, out: &mut Vec<PollEvent>, timeout_ms: i32) -> io::Result<usize> {
+            out.clear();
+            let mut buf = [EpollEvent { events: 0, data: 0 }; 256];
+            let n = loop {
+                let r = unsafe {
+                    epoll_wait(self.epfd, buf.as_mut_ptr(), buf.len() as i32, timeout_ms)
+                };
+                if r >= 0 {
+                    break r as usize;
+                }
+                let e = io::Error::last_os_error();
+                if e.kind() != io::ErrorKind::Interrupted {
+                    return Err(e);
+                }
+            };
+            for ev in &buf[..n] {
+                // Copy out of the (possibly packed) ABI struct by value.
+                let (events, data) = (ev.events, ev.data);
+                if data == WAKER_TOKEN {
+                    // Drain the eventfd counter so level-triggering
+                    // does not spin.
+                    let mut eat = [0u8; 8];
+                    unsafe { read(self.waker.fd.0, eat.as_mut_ptr(), eat.len()) };
+                    continue;
+                }
+                out.push(PollEvent {
+                    token: data,
+                    readable: events & (EPOLLIN | EPOLLERR | EPOLLHUP) != 0,
+                    writable: events & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(out.len())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe { close(self.epfd) };
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    //! Portable unix fallback: `poll(2)` over a registered-interest
+    //! table, with a connected UDP socket pair as the wake channel
+    //! (pure std — no pipes or fcntl needed).
+
+    use super::{PollEvent, WAKER_TOKEN};
+    use std::collections::HashMap;
+    use std::io;
+    use std::net::UdpSocket;
+    use std::os::unix::io::{AsRawFd, RawFd};
+    use std::sync::{Arc, Mutex};
+
+    const POLLIN: i16 = 0x1;
+    const POLLOUT: i16 = 0x4;
+
+    #[repr(C)]
+    struct Pollfd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut Pollfd, nfds: u64, timeout: i32) -> i32;
+    }
+
+    #[derive(Clone)]
+    pub struct Waker {
+        tx: Arc<UdpSocket>,
+    }
+
+    impl Waker {
+        pub fn wake(&self) {
+            let _ = self.tx.send(&[1u8]);
+        }
+    }
+
+    pub struct Poller {
+        interests: Mutex<HashMap<RawFd, (u64, bool, bool)>>,
+        rx: UdpSocket,
+        waker: Waker,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let rx = UdpSocket::bind("127.0.0.1:0")?;
+            rx.set_nonblocking(true)?;
+            let tx = UdpSocket::bind("127.0.0.1:0")?;
+            tx.connect(rx.local_addr()?)?;
+            Ok(Poller {
+                interests: Mutex::new(HashMap::new()),
+                rx,
+                waker: Waker { tx: Arc::new(tx) },
+            })
+        }
+
+        pub fn waker(&self) -> Waker {
+            self.waker.clone()
+        }
+
+        pub fn register(
+            &self,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> io::Result<()> {
+            self.interests
+                .lock()
+                .unwrap()
+                .insert(fd, (token, readable, writable));
+            Ok(())
+        }
+
+        pub fn rearm(
+            &self,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> io::Result<()> {
+            self.register(fd, token, readable, writable)
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            self.interests.lock().unwrap().remove(&fd);
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<PollEvent>, timeout_ms: i32) -> io::Result<usize> {
+            out.clear();
+            let mut fds = vec![Pollfd {
+                fd: self.rx.as_raw_fd(),
+                events: POLLIN,
+                revents: 0,
+            }];
+            let mut tokens = vec![WAKER_TOKEN];
+            {
+                let interests = self.interests.lock().unwrap();
+                for (&fd, &(token, readable, writable)) in interests.iter() {
+                    let mut events = 0;
+                    if readable {
+                        events |= POLLIN;
+                    }
+                    if writable {
+                        events |= POLLOUT;
+                    }
+                    fds.push(Pollfd {
+                        fd,
+                        events,
+                        revents: 0,
+                    });
+                    tokens.push(token);
+                }
+            }
+            let n = loop {
+                let r = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms) };
+                if r >= 0 {
+                    break r;
+                }
+                let e = io::Error::last_os_error();
+                if e.kind() != io::ErrorKind::Interrupted {
+                    return Err(e);
+                }
+            };
+            if n == 0 {
+                return Ok(0);
+            }
+            for (i, pfd) in fds.iter().enumerate() {
+                if pfd.revents == 0 {
+                    continue;
+                }
+                if tokens[i] == WAKER_TOKEN {
+                    let mut eat = [0u8; 16];
+                    while self.rx.recv(&mut eat).is_ok() {}
+                    continue;
+                }
+                out.push(PollEvent {
+                    token: tokens[i],
+                    readable: pfd.revents & POLLIN != 0 || pfd.revents & !(POLLIN | POLLOUT) != 0,
+                    writable: pfd.revents & POLLOUT != 0 || pfd.revents & !(POLLIN | POLLOUT) != 0,
+                });
+            }
+            Ok(out.len())
+        }
+    }
+}
+
+#[cfg(not(unix))]
+compile_error!("the partisol event loop needs a unix host (epoll or poll)");
+
+pub use sys::{Poller, Waker};
+
+// ---------------------------------------------------------------------------
+// Driver contract.
+// ---------------------------------------------------------------------------
+
+/// What the driver wants done with the connection after a callback.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Keep serving.
+    Continue,
+    /// Close immediately (queued output is attempted once, best-effort).
+    Close,
+    /// Stop reading, drain the write queue, then close.
+    CloseAfterFlush,
+    /// Drain the write queue, close, then shut the whole server down
+    /// (the protocol `Shutdown` handshake).
+    ShutdownAfterFlush,
+}
+
+/// Why a connection is being closed (the driver sees this in
+/// [`Driver::on_close`] and fails whatever it still owes accordingly).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CloseReason {
+    /// The peer closed or the transport died.
+    PeerClosed,
+    /// Nothing read for a full `read_timeout_ms` window with no reply
+    /// owed.
+    IdleReaped,
+    /// The peer sent bytes that do not parse (or violate the protocol).
+    ProtocolError,
+    /// The server is shutting down.
+    Shutdown,
+}
+
+/// Protocol logic riding the event loop. One driver instance serves
+/// every connection; per-connection state lives in `Driver::Conn`.
+pub trait Driver: Send + Sync + 'static {
+    type Conn: Send + 'static;
+
+    /// A connection was admitted (post-shed, pre-auth).
+    fn new_conn(&self, conn_id: u64) -> Self::Conn;
+
+    /// One batch of decoded frames — every frame the last readiness
+    /// burst yielded, so pipelined requests arrive together (the fusing
+    /// seam).
+    fn on_batch(&self, conn: &mut Self::Conn, io: &mut ConnIo<'_>, frames: Vec<Frame>) -> Verdict;
+
+    /// Progress poll: resolve finished work into reply frames, expire
+    /// deadlines, admit deferred requests. Called on every worker
+    /// wakeup for every connection (must be cheap when idle).
+    fn pump(&self, conn: &mut Self::Conn, io: &mut ConnIo<'_>) -> Verdict;
+
+    /// Replies the peer is still owed. Non-zero suppresses the idle
+    /// reaper (a peer quietly waiting on a long solve is not idle) and
+    /// keeps the worker on its short tick.
+    fn replies_owed(&self, conn: &Self::Conn) -> usize;
+
+    /// The connection is going away: fail owed work. Frames sent from
+    /// here are flushed best-effort before the socket closes.
+    fn on_close(&self, conn: &mut Self::Conn, io: &mut ConnIo<'_>, reason: CloseReason);
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection output queue + the driver's IO handle.
+// ---------------------------------------------------------------------------
+
+struct OutBuf {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl OutBuf {
+    fn new() -> OutBuf {
+        OutBuf {
+            buf: Vec::new(),
+            pos: 0,
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    /// Write as much as the socket takes; true once fully drained.
+    fn drain_into(&mut self, stream: &mut &TcpStream) -> std::io::Result<bool> {
+        while self.pos < self.buf.len() {
+            match stream.write(&self.buf[self.pos..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "socket wrote zero bytes",
+                    ))
+                }
+                Ok(k) => self.pos += k,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        self.buf.clear();
+        self.pos = 0;
+        Ok(true)
+    }
+}
+
+/// The driver's window onto one connection: queue frames for the write
+/// path (chunking large bodies for version-2 peers) and inspect the
+/// peer's negotiated protocol version.
+pub struct ConnIo<'a> {
+    out: &'a mut OutBuf,
+    peer_version: u8,
+    chunk_bytes: usize,
+    metrics: &'a NetMetrics,
+}
+
+impl ConnIo<'_> {
+    /// Protocol version observed on the peer's frames ([`VERSION`]
+    /// until the peer has sent its first frame).
+    pub fn peer_version(&self) -> u8 {
+        self.peer_version
+    }
+
+    /// Queue one frame. Bodies larger than `chunk_bytes` are sent as a
+    /// chunk stream when the peer speaks version ≥ 2 (a v1 peer gets
+    /// the plain frame and may reject it against its own frame cap —
+    /// exactly what it would have done before chunking existed).
+    pub fn send(&mut self, frame: &Frame) {
+        let (kind, body) = frame.encode_parts();
+        let chunkable = matches!(kind, KIND_REQUEST | KIND_RESPONSE | KIND_STATS_RESPONSE);
+        if chunkable && self.peer_version >= 2 && body.len() > self.chunk_bytes {
+            let stream_id = match frame {
+                Frame::Request(r) => r.id,
+                Frame::Response(r) => r.id,
+                _ => 0,
+            };
+            match write_chunked(&mut self.out.buf, stream_id, kind, &body, self.chunk_bytes) {
+                Ok(pieces) => {
+                    self.metrics
+                        .chunked_frames
+                        .fetch_add(pieces as u64, Ordering::Relaxed);
+                    self.metrics
+                        .frames_out
+                        .fetch_add(pieces as u64, Ordering::Relaxed);
+                }
+                Err(_) => unreachable!("Vec<u8> writes are infallible"),
+            }
+            return;
+        }
+        match write_frame(&mut self.out.buf, kind, &body) {
+            Ok(()) => {
+                self.metrics.frames_out.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                // A >4GiB unchunkable body cannot be framed; drop it
+                // (the peer's request was absurd; its read side will
+                // time out or retry).
+                crate::log_warn!("net: unframeable {}-byte body: {e}", body.len());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The harness.
+// ---------------------------------------------------------------------------
+
+/// In-progress inbound chunk stream (one per connection at a time).
+struct ChunkAssembly {
+    stream: u64,
+    inner_kind: u8,
+    buf: Vec<u8>,
+}
+
+enum Closing {
+    Flush,
+    ShutdownAfter,
+}
+
+struct Conn<C> {
+    stream: TcpStream,
+    conn_id: u64,
+    decoder: FrameDecoder,
+    assembly: Option<ChunkAssembly>,
+    out: OutBuf,
+    authed: bool,
+    last_activity: Instant,
+    closing: Option<Closing>,
+    /// Current epoll interest (to avoid redundant `EPOLL_CTL_MOD`s).
+    armed_write: bool,
+    driver_conn: C,
+}
+
+struct Shared {
+    cfg: NetConfig,
+    metrics: Arc<NetMetrics>,
+    shutdown: AtomicBool,
+    /// Clones of every live connection's stream, so [`EventLoop::kill`]
+    /// can sever them and shutdown can nudge blocked peers.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    wakers: Mutex<Vec<Waker>>,
+    next_conn_id: AtomicU64,
+}
+
+impl Shared {
+    fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    fn wake_all(&self) {
+        for w in self.wakers.lock().unwrap().iter() {
+            w.wake();
+        }
+    }
+
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.wake_all();
+    }
+}
+
+/// A cheap cloneable handle that prods every worker — registered as
+/// the service's completion waker so a finished solve immediately
+/// wakes the loop that owes its reply.
+#[derive(Clone)]
+pub struct LoopWaker {
+    shared: Arc<Shared>,
+}
+
+impl LoopWaker {
+    pub fn wake(&self) {
+        self.shared.wake_all();
+    }
+}
+
+/// A running event loop bound to one listener.
+pub struct EventLoop {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl EventLoop {
+    /// Bind `cfg.addr` and serve `driver` on `cfg.event_workers`
+    /// worker threads plus one acceptor.
+    pub fn start<D: Driver>(
+        driver: Arc<D>,
+        cfg: NetConfig,
+        metrics: Arc<NetMetrics>,
+        thread_tag: &str,
+    ) -> Result<EventLoop> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| Error::Service(format!("bind {}: {e}", cfg.addr)))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| Error::Service(format!("local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Service(format!("set_nonblocking: {e}")))?;
+
+        let shared = Arc::new(Shared {
+            cfg: cfg.clone(),
+            metrics,
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(HashMap::new()),
+            wakers: Mutex::new(Vec::new()),
+            // Token 0 is the poller's waker; connection ids start at 1.
+            next_conn_id: AtomicU64::new(1),
+        });
+
+        let mut threads = Vec::new();
+        let mut senders = Vec::new();
+        for w in 0..cfg.event_workers {
+            let poller =
+                Poller::new().map_err(|e| Error::Service(format!("event poller: {e}")))?;
+            shared.wakers.lock().unwrap().push(poller.waker());
+            let (tx, rx) = mpsc::channel::<(u64, TcpStream)>();
+            senders.push(tx);
+            let shared2 = shared.clone();
+            let driver2 = driver.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("partisol-{thread_tag}-ev{w}"))
+                    .spawn(move || worker_loop(poller, rx, driver2, shared2))
+                    .map_err(|e| Error::Service(format!("spawn event worker: {e}")))?,
+            );
+        }
+        let shared2 = shared.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("partisol-{thread_tag}-accept"))
+                .spawn(move || accept_loop(listener, senders, shared2))
+                .map_err(|e| Error::Service(format!("spawn acceptor: {e}")))?,
+        );
+        Ok(EventLoop {
+            shared,
+            local_addr,
+            threads,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn waker(&self) -> LoopWaker {
+        LoopWaker {
+            shared: self.shared.clone(),
+        }
+    }
+
+    pub fn shutting_down(&self) -> bool {
+        self.shared.shutting_down()
+    }
+
+    /// Begin a graceful shutdown: stop accepting, let pending work
+    /// resolve, drain write queues, close.
+    pub fn begin_shutdown(&self) {
+        self.shared.begin_shutdown();
+    }
+
+    /// Abrupt death, for failover testing: sever every connection in
+    /// both directions (in-flight replies are lost — peers observe a
+    /// mid-stream close exactly as if the process were killed).
+    pub fn kill(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        let conns = self.shared.conns.lock().unwrap();
+        for stream in conns.values() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+        drop(conns);
+        self.shared.wake_all();
+    }
+
+    /// Shut down (if not already) and join every thread.
+    pub fn stop(&mut self) {
+        self.shared.begin_shutdown();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for EventLoop {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    senders: Vec<mpsc::Sender<(u64, TcpStream)>>,
+    shared: Arc<Shared>,
+) {
+    let mut next_worker = 0usize;
+    loop {
+        if shared.shutting_down() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let _ = stream.set_nodelay(true);
+                let open = shared.metrics.connections_open.load(Ordering::Relaxed);
+                if open >= shared.cfg.max_conns as u64 {
+                    // Over the cap: shed with a connection-level
+                    // Backpressure frame, then drop the socket. The
+                    // stream is still blocking here, so the frame goes
+                    // out without event-loop involvement.
+                    shared.metrics.sheds.fetch_add(1, Ordering::Relaxed);
+                    let mut w = std::io::BufWriter::new(&stream);
+                    let wrote = Frame::Error(ErrorReply {
+                        id: 0,
+                        error: ApiError::Backpressure {
+                            queue_depth: shared.cfg.max_conns,
+                        },
+                    })
+                    .write_to(&mut w)
+                    .is_ok()
+                        && w.flush().is_ok();
+                    if wrote {
+                        shared.metrics.frames_out.fetch_add(1, Ordering::Relaxed);
+                    }
+                    continue;
+                }
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                shared
+                    .metrics
+                    .connections_accepted
+                    .fetch_add(1, Ordering::Relaxed);
+                shared
+                    .metrics
+                    .connections_open
+                    .fetch_add(1, Ordering::Relaxed);
+                let conn_id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
+                if let Ok(clone) = stream.try_clone() {
+                    shared.conns.lock().unwrap().insert(conn_id, clone);
+                }
+                // Round-robin handoff to a worker, then wake it.
+                let w = next_worker % senders.len();
+                next_worker = next_worker.wrapping_add(1);
+                if senders[w].send((conn_id, stream)).is_err() {
+                    crate::log_warn!("net: worker {w} gone; dropping conn from {peer}");
+                    shared.conns.lock().unwrap().remove(&conn_id);
+                    shared
+                        .metrics
+                        .connections_open
+                        .fetch_sub(1, Ordering::Relaxed);
+                    continue;
+                }
+                shared.wakers.lock().unwrap()[w].wake();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                crate::log_warn!("net: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Why the read pass wants the connection gone.
+enum ReadOutcome {
+    Open,
+    PeerClosed,
+    /// Typed protocol failure: an error frame was already queued.
+    Protocol,
+}
+
+fn worker_loop<D: Driver>(
+    poller: Poller,
+    rx: mpsc::Receiver<(u64, TcpStream)>,
+    driver: Arc<D>,
+    shared: Arc<Shared>,
+) {
+    let cfg = &shared.cfg;
+    let metrics: &NetMetrics = &shared.metrics;
+    let idle_after = (cfg.read_timeout_ms > 0).then(|| Duration::from_millis(cfg.read_timeout_ms));
+    let mut conns: HashMap<u64, Conn<D::Conn>> = HashMap::new();
+    let mut events = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+
+    loop {
+        // Short tick while any connection owes replies (deadlines and
+        // solve completion need polling granularity); long tick when
+        // everything is idle.
+        let busy = conns.values().any(|c| {
+            !c.out.is_empty() || c.closing.is_some() || driver.replies_owed(&c.driver_conn) > 0
+        });
+        let timeout = if shared.shutting_down() || busy { 10 } else { 250 };
+        match poller.wait(&mut events, timeout) {
+            Ok(_) => {}
+            Err(e) => {
+                crate::log_warn!("net: poller wait failed: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+        metrics.wakeups.fetch_add(1, Ordering::Relaxed);
+
+        // Adopt connections the acceptor handed over.
+        while let Ok((conn_id, stream)) = rx.try_recv() {
+            if poller
+                .register(stream.as_raw_fd(), conn_id, true, false)
+                .is_err()
+            {
+                shared.conns.lock().unwrap().remove(&conn_id);
+                metrics.connections_open.fetch_sub(1, Ordering::Relaxed);
+                continue;
+            }
+            conns.insert(
+                conn_id,
+                Conn {
+                    stream,
+                    conn_id,
+                    decoder: FrameDecoder::new(cfg.max_frame_bytes),
+                    assembly: None,
+                    out: OutBuf::new(),
+                    authed: cfg.auth_token.is_none(),
+                    last_activity: Instant::now(),
+                    closing: None,
+                    armed_write: false,
+                    driver_conn: driver.new_conn(conn_id),
+                },
+            );
+        }
+
+        let shutting = shared.shutting_down();
+        let mut dead: Vec<(u64, CloseReason)> = Vec::new();
+        let mut begin_shutdown = false;
+
+        // Readiness-driven IO.
+        for ev in &events {
+            let Some(conn) = conns.get_mut(&ev.token) else {
+                continue;
+            };
+            if ev.readable && conn.closing.is_none() && !shutting {
+                match read_pass(conn, &driver, cfg, metrics, &mut scratch) {
+                    ReadOutcome::Open => {}
+                    ReadOutcome::PeerClosed => {
+                        dead.push((ev.token, CloseReason::PeerClosed));
+                        continue;
+                    }
+                    ReadOutcome::Protocol => {
+                        conn.closing = Some(Closing::Flush);
+                    }
+                }
+            } else if ev.readable {
+                // Closing or shutting down: swallow (and discard) any
+                // further input so the peer's writes cannot stall, but
+                // notice an EOF.
+                loop {
+                    match conn.stream.read(&mut scratch) {
+                        Ok(0) => {
+                            dead.push((ev.token, CloseReason::PeerClosed));
+                            break;
+                        }
+                        Ok(_) => continue,
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            dead.push((ev.token, CloseReason::PeerClosed));
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Drive every connection: pump the driver, drain writes, reap.
+        for conn in conns.values_mut() {
+            if dead.iter().any(|(id, _)| *id == conn.conn_id) {
+                continue;
+            }
+            let mut io = ConnIo {
+                out: &mut conn.out,
+                peer_version: conn.decoder.peer_version().unwrap_or(VERSION),
+                chunk_bytes: cfg.chunk_bytes,
+                metrics,
+            };
+            let verdict = driver.pump(&mut conn.driver_conn, &mut io);
+            apply_verdict(verdict, conn, &mut dead);
+
+            if !conn.out.is_empty() {
+                match conn.out.drain_into(&mut &conn.stream) {
+                    Ok(_) => {}
+                    Err(_) => {
+                        dead.push((conn.conn_id, CloseReason::PeerClosed));
+                        continue;
+                    }
+                }
+            }
+            // Toggle EPOLLOUT interest to match the queue.
+            let want_write = !conn.out.is_empty();
+            if want_write != conn.armed_write {
+                let _ = poller.rearm(conn.stream.as_raw_fd(), conn.conn_id, true, want_write);
+                conn.armed_write = want_write;
+            }
+
+            if conn.out.is_empty() {
+                match conn.closing {
+                    Some(Closing::Flush) => {
+                        dead.push((conn.conn_id, CloseReason::ProtocolError));
+                        continue;
+                    }
+                    Some(Closing::ShutdownAfter) => {
+                        begin_shutdown = true;
+                        dead.push((conn.conn_id, CloseReason::Shutdown));
+                        continue;
+                    }
+                    None => {}
+                }
+            }
+
+            if shutting
+                && conn.out.is_empty()
+                && conn.closing.is_none()
+                && driver.replies_owed(&conn.driver_conn) == 0
+            {
+                dead.push((conn.conn_id, CloseReason::Shutdown));
+                continue;
+            }
+
+            // Idle reap: nothing read for a full window and no reply
+            // owed. Deferred over-quota requests do NOT count as owed
+            // (their token never freed up) — on_close fails them as
+            // Timeout so their handles resolve instead of leaking.
+            if let Some(idle) = idle_after {
+                if !shutting
+                    && conn.closing.is_none()
+                    && conn.last_activity.elapsed() > idle
+                    && driver.replies_owed(&conn.driver_conn) == 0
+                    && conn.out.is_empty()
+                {
+                    dead.push((conn.conn_id, CloseReason::IdleReaped));
+                }
+            }
+        }
+
+        // Tear down dead connections.
+        for (conn_id, reason) in dead {
+            let Some(mut conn) = conns.remove(&conn_id) else {
+                continue;
+            };
+            let mut io = ConnIo {
+                out: &mut conn.out,
+                peer_version: conn.decoder.peer_version().unwrap_or(VERSION),
+                chunk_bytes: cfg.chunk_bytes,
+                metrics,
+            };
+            driver.on_close(&mut conn.driver_conn, &mut io, reason);
+            // Best-effort: flush whatever on_close queued (Timeout /
+            // ShutDown error frames for work it had to abandon).
+            let _ = conn.out.drain_into(&mut &conn.stream);
+            let _ = poller.deregister(conn.stream.as_raw_fd());
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+            shared.conns.lock().unwrap().remove(&conn_id);
+            metrics.connections_open.fetch_sub(1, Ordering::Relaxed);
+        }
+
+        if begin_shutdown {
+            shared.begin_shutdown();
+        }
+        if shared.shutting_down() && conns.is_empty() {
+            // Drain any connection the acceptor handed over after the
+            // flag flipped (it exits on its next loop turn).
+            while let Ok((conn_id, stream)) = rx.try_recv() {
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+                shared.conns.lock().unwrap().remove(&conn_id);
+                metrics.connections_open.fetch_sub(1, Ordering::Relaxed);
+            }
+            return;
+        }
+    }
+}
+
+fn apply_verdict<C>(verdict: Verdict, conn: &mut Conn<C>, dead: &mut Vec<(u64, CloseReason)>) {
+    match verdict {
+        Verdict::Continue => {}
+        Verdict::Close => dead.push((conn.conn_id, CloseReason::ProtocolError)),
+        Verdict::CloseAfterFlush => {
+            if conn.closing.is_none() {
+                conn.closing = Some(Closing::Flush);
+            }
+        }
+        Verdict::ShutdownAfterFlush => conn.closing = Some(Closing::ShutdownAfter),
+    }
+}
+
+/// Read until `WouldBlock`, decode every complete frame, hand the
+/// batch to the driver.
+fn read_pass<D: Driver>(
+    conn: &mut Conn<D::Conn>,
+    driver: &Arc<D>,
+    cfg: &NetConfig,
+    metrics: &NetMetrics,
+    scratch: &mut [u8],
+) -> ReadOutcome {
+    let mut saw_eof = false;
+    loop {
+        match conn.stream.read(scratch) {
+            Ok(0) => {
+                saw_eof = true;
+                break;
+            }
+            Ok(k) => {
+                conn.decoder.push(&scratch[..k]);
+                conn.last_activity = Instant::now();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                saw_eof = true;
+                break;
+            }
+        }
+    }
+
+    // Decode the burst into one batch.
+    let mut batch = Vec::new();
+    let mut protocol_error: Option<WireError> = None;
+    loop {
+        match conn.decoder.next_frame() {
+            Ok(Some(Frame::Chunk(piece))) => {
+                metrics.frames_in.fetch_add(1, Ordering::Relaxed);
+                metrics.chunked_frames.fetch_add(1, Ordering::Relaxed);
+                match accept_chunk(conn, piece) {
+                    Ok(Some(inner)) => batch.push(inner),
+                    Ok(None) => {}
+                    Err(e) => {
+                        protocol_error = Some(e);
+                        break;
+                    }
+                }
+            }
+            Ok(Some(frame)) => {
+                metrics.frames_in.fetch_add(1, Ordering::Relaxed);
+                batch.push(frame);
+            }
+            Ok(None) => {
+                if conn.decoder.pending_bytes() > 0 {
+                    metrics.partial_reads.fetch_add(1, Ordering::Relaxed);
+                }
+                break;
+            }
+            Err(e) => {
+                protocol_error = Some(e);
+                break;
+            }
+        }
+    }
+
+    // The first-frame auth gate (with `[net] auth_token` set). Auth
+    // frames are consumed here either way: a redundant one (already
+    // authed, or a credentialed client talking to an open server) is
+    // benign.
+    let mut out_frames = Vec::with_capacity(batch.len());
+    let mut unauthorized = false;
+    for frame in batch {
+        match frame {
+            Frame::Auth { token } => {
+                if !conn.authed && Some(token.as_str()) == cfg.auth_token.as_deref() {
+                    conn.authed = true;
+                }
+            }
+            frame if conn.authed => out_frames.push(frame),
+            _ => {
+                unauthorized = true;
+                break;
+            }
+        }
+    }
+
+    let mut io = ConnIo {
+        out: &mut conn.out,
+        peer_version: conn.decoder.peer_version().unwrap_or(VERSION),
+        chunk_bytes: cfg.chunk_bytes,
+        metrics,
+    };
+    if unauthorized {
+        metrics.unauthorized.fetch_add(1, Ordering::Relaxed);
+        io.send(&Frame::Error(ErrorReply {
+            id: 0,
+            error: ApiError::Unauthorized,
+        }));
+        return ReadOutcome::Protocol;
+    }
+
+    if let Some(e) = protocol_error {
+        // Best-effort structured notice, then close. A peer speaking
+        // an unknown protocol version gets the version this build
+        // speaks so it can stop retrying.
+        crate::log_warn!("net: conn {}: {e}; closing", conn.conn_id);
+        let error = match &e {
+            WireError::BadVersion(_) => ApiError::VersionMismatch { peer: VERSION },
+            _ => ApiError::InvalidRequest(format!("protocol error: {e}")),
+        };
+        io.send(&Frame::Error(ErrorReply { id: 0, error }));
+        // Drop frames decoded before the bad one: the driver never
+        // sees a half-trusted batch.
+        return ReadOutcome::Protocol;
+    }
+
+    if !out_frames.is_empty() {
+        let verdict = driver.on_batch(&mut conn.driver_conn, &mut io, out_frames);
+        match verdict {
+            Verdict::Continue => {}
+            Verdict::Close => return ReadOutcome::PeerClosed,
+            Verdict::CloseAfterFlush => conn.closing = Some(Closing::Flush),
+            Verdict::ShutdownAfterFlush => conn.closing = Some(Closing::ShutdownAfter),
+        }
+    }
+    if saw_eof {
+        return ReadOutcome::PeerClosed;
+    }
+    ReadOutcome::Open
+}
+
+/// Fold one chunk piece into the connection's assembly; a completed
+/// stream yields its reassembled inner frame.
+fn accept_chunk<C>(
+    conn: &mut Conn<C>,
+    piece: super::wire::ChunkPiece,
+) -> std::result::Result<Option<Frame>, WireError> {
+    let assembly = match conn.assembly.as_mut() {
+        Some(a) => {
+            if a.stream != piece.stream || a.inner_kind != piece.inner_kind {
+                return Err(WireError::Malformed(format!(
+                    "interleaved chunk streams ({} then {})",
+                    a.stream, piece.stream
+                )));
+            }
+            a
+        }
+        None => {
+            conn.assembly = Some(ChunkAssembly {
+                stream: piece.stream,
+                inner_kind: piece.inner_kind,
+                buf: Vec::new(),
+            });
+            conn.assembly.as_mut().unwrap()
+        }
+    };
+    if assembly.buf.len() + piece.data.len() > MAX_STREAM_BYTES {
+        conn.assembly = None;
+        return Err(WireError::TooLarge {
+            len: MAX_STREAM_BYTES + 1,
+            max: MAX_STREAM_BYTES,
+        });
+    }
+    assembly.buf.extend_from_slice(&piece.data);
+    if !piece.last {
+        return Ok(None);
+    }
+    let done = conn.assembly.take().unwrap();
+    reassemble(done.inner_kind, &done.buf).map(Some)
+}

@@ -22,6 +22,7 @@
 //! system in, solution → frame body out).
 
 pub mod client;
+pub mod event_loop;
 pub mod server;
 pub mod stats;
 pub mod wire;
@@ -58,6 +59,22 @@ pub struct NetConfig {
     /// else; the first non-auth frame is answered with an
     /// `Unauthorized` error frame and the connection is closed.
     pub auth_token: Option<String>,
+    /// Event-loop worker threads multiplexing all connections
+    /// (`[net] event_workers`). Two suffice for most hosts: workers
+    /// only shuffle bytes and poll solve handles — the heavy lifting
+    /// stays on the service's worker pool.
+    pub event_workers: usize,
+    /// Per-connection fairness quota (`[net] conn_quota`): in-flight
+    /// solve tokens one connection may hold. Requests beyond it are
+    /// deferred (up to another `conn_quota` deep), then shed with
+    /// per-request `Backpressure` — one greedy pipeliner cannot
+    /// monopolize the service queue.
+    pub conn_quota: usize,
+    /// Chunk payload size for streaming large frames to version-2
+    /// peers (`[net] chunk_bytes`). Response bodies above this are
+    /// split into `Chunk`/`ChunkEnd` streams, which is what lets a
+    /// system larger than `max_frame_bytes` cross the wire.
+    pub chunk_bytes: usize,
 }
 
 impl Default for NetConfig {
@@ -68,6 +85,9 @@ impl Default for NetConfig {
             read_timeout_ms: 30_000,
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
             auth_token: None,
+            event_workers: 2,
+            conn_quota: 64,
+            chunk_bytes: 4 << 20,
         }
     }
 }
@@ -92,6 +112,26 @@ impl NetConfig {
             return Err(Error::Config(
                 "net.auth_token must not be empty (omit it to disable auth)".into(),
             ));
+        }
+        if self.event_workers == 0 {
+            return Err(Error::Config("net.event_workers must be positive".into()));
+        }
+        if self.conn_quota == 0 {
+            return Err(Error::Config("net.conn_quota must be positive".into()));
+        }
+        if self.chunk_bytes < 1024 {
+            return Err(Error::Config(
+                "net.chunk_bytes must be at least 1024".into(),
+            ));
+        }
+        // A chunk frame must itself fit under the frame cap: header'd
+        // piece = 12-byte chunk head + data.
+        if self.chunk_bytes + wire::HEADER_LEN + 12 > self.max_frame_bytes {
+            return Err(Error::Config(format!(
+                "net.chunk_bytes ({}) must leave room for chunk framing under \
+                 net.max_frame_bytes ({})",
+                self.chunk_bytes, self.max_frame_bytes
+            )));
         }
         Ok(())
     }
@@ -132,6 +172,43 @@ mod tests {
         .is_err());
         assert!(NetConfig {
             auth_token: Some("tok".into()),
+            ..NetConfig::default()
+        }
+        .validate()
+        .is_ok());
+    }
+
+    #[test]
+    fn event_loop_knobs_validate() {
+        assert!(NetConfig {
+            event_workers: 0,
+            ..NetConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(NetConfig {
+            conn_quota: 0,
+            ..NetConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(NetConfig {
+            chunk_bytes: 16,
+            ..NetConfig::default()
+        }
+        .validate()
+        .is_err());
+        // A chunk piece (plus framing) must fit under the frame cap.
+        assert!(NetConfig {
+            max_frame_bytes: 1 << 20,
+            chunk_bytes: 1 << 20,
+            ..NetConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(NetConfig {
+            max_frame_bytes: 1 << 20,
+            chunk_bytes: 256 << 10,
             ..NetConfig::default()
         }
         .validate()

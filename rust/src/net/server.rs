@@ -1,146 +1,460 @@
-//! [`NetServer`]: the TCP serving layer over a local [`Client`].
+//! [`NetServer`]: the TCP serving layer over a local [`Client`],
+//! riding the shared [`event_loop`](super::event_loop).
 //!
-//! One acceptor thread admits connections (shedding beyond
-//! `max_conns`); each connection gets a **reader** thread (decodes
-//! frames, submits solves through the shared [`Client`], answers
-//! control frames) and a **writer** thread (waits completed
-//! [`SolveHandle`]s in submission order and streams the responses
-//! back). Admission control is queue-depth aware: a submission the
+//! A fixed worker set multiplexes every connection (no thread pair per
+//! socket); this driver supplies the protocol semantics on top:
+//!
+//! - **Fairness quotas** — each connection holds at most
+//!   `conn_quota` in-flight solve tokens. Over-budget requests are
+//!   deferred (up to another `conn_quota` deep) and admitted as tokens
+//!   free up; beyond that they are shed with per-request
+//!   `Backpressure` error frames, so one greedy pipeliner cannot
+//!   monopolize the service queue.
+//! - **Request fusing** — same-shape pipelined requests arriving in
+//!   one readiness burst are submitted together through
+//!   [`Client::submit_many`], landing in one service batch.
+//! - **Deadlines without head-of-line blocking** — an expired deadline
+//!   answers its request with a `Timeout` error frame immediately and
+//!   parks the still-running handle on a zombie list (its quota token
+//!   stays held until the solve actually resolves, so a deadline storm
+//!   cannot bypass the quota).
+//!
+//! Admission control is queue-depth aware end to end: a submission the
 //! bounded service queue rejects is answered with a `Backpressure`
-//! error frame instead of blocking or dropping the connection — the
-//! remote caller decides whether to retry, exactly like a local
-//! caller would.
-//!
-//! Per-request deadlines (`deadline_ms` in the request frame) are
-//! honored via [`SolveHandle::wait_deadline`]: an expired deadline
-//! yields a `Timeout` error frame and the handle is dropped (the solve
-//! still completes server-side; the service counts the dropped reply).
+//! error frame instead of blocking or dropping the connection.
 //!
 //! A malformed frame closes only its own connection (after a
-//! best-effort error frame); other connections keep serving. A
-//! connection that sends nothing for a full `read_timeout_ms` window
-//! with no reply in flight is reaped, so dead peers cannot pin
-//! `max_conns` slots. A `Shutdown` control frame stops the acceptor
-//! and closes every connection's *read* half — writers drain their
-//! in-flight replies before the sockets fully close — then resolves
+//! best-effort error frame). An idle connection (nothing read for a
+//! full `read_timeout_ms`, no reply owed) is reaped — any deferred
+//! over-quota requests it still had are failed as `Timeout` error
+//! frames rather than leaked. A `Shutdown` control frame is
+//! acknowledged once the connection's pending replies have drained,
+//! then stops the whole server and resolves
 //! [`NetServer::run_until_shutdown`].
 
-use super::wire::{read_frame, ErrorReply, Frame, WireError, VERSION};
+use super::event_loop::{CloseReason, ConnIo, Driver, EventLoop, Verdict};
+use super::wire::{ErrorReply, Frame};
 use super::NetConfig;
-use crate::api::{ApiError, Client, SolveHandle, SolveSpec};
+use super::client::promote_shared;
+use crate::api::{ApiError, Client, SolveHandle, SolveSpec, SystemPayload};
 use crate::coordinator::metrics::{MetricsSnapshot, NetMetrics};
-use crate::error::{Error, Result};
+use crate::error::Result;
+use crate::gpu::Dtype;
+use crate::plan::{Backend, KernelVariant, SolveOptions};
 use crate::util::json::{obj, Json};
-use std::collections::HashMap;
-use std::io::{BufReader, BufWriter, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::collections::VecDeque;
+use std::net::SocketAddr;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// What the reader hands the per-connection writer thread.
-enum Outgoing {
-    /// A pending solve: wait it (optionally against a deadline), then
-    /// write the response/error frame.
-    Pending {
-        id: u64,
-        handle: SolveHandle,
-        deadline: Option<Instant>,
-    },
-    /// A pre-built control or error frame.
-    Frame(Frame),
-    /// Write + flush a `ShutdownAck`, **then** begin the server-wide
-    /// shutdown (closing sockets first would race the ack away).
-    AckThenShutdown,
+/// A reply the peer is owed, in request order.
+struct PendingReply {
+    id: u64,
+    handle: SolveHandle,
+    deadline: Option<Instant>,
 }
 
-struct ServerInner {
+/// An admitted-but-not-yet-submitted request parked behind the quota.
+struct DeferredReq {
+    id: u64,
+    payload: SystemPayload<'static>,
+    opts: SolveOptions,
+    deadline: Option<Instant>,
+}
+
+/// Per-connection protocol state.
+#[derive(Default)]
+pub struct ServerConn {
+    /// FIFO of replies owed (each entry holds one quota token).
+    pending: VecDeque<PendingReply>,
+    /// Deadline-expired solves: the Timeout frame went out already,
+    /// but the token is held until the solve resolves.
+    zombies: Vec<SolveHandle>,
+    /// Over-quota requests waiting for a token.
+    deferred: VecDeque<DeferredReq>,
+    /// Peer asked for a server shutdown; ack once `pending` drains.
+    shutdown_requested: bool,
+}
+
+impl ServerConn {
+    /// Quota tokens this connection holds.
+    fn tokens(&self) -> usize {
+        self.pending.len() + self.zombies.len()
+    }
+}
+
+struct ServerDriver {
     client: Arc<Client>,
     cfg: NetConfig,
     metrics: Arc<NetMetrics>,
-    shutdown: AtomicBool,
-    /// Write halves of live connections, so shutdown can unblock
-    /// readers stuck in a long read.
-    conns: Mutex<HashMap<u64, TcpStream>>,
-    next_conn_id: AtomicU64,
-    handlers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
-impl ServerInner {
-    fn shutting_down(&self) -> bool {
-        self.shutdown.load(Ordering::Acquire)
+impl ServerDriver {
+    fn respond_frame(&self, wire_id: u64, resp: &crate::coordinator::SolveResponse) -> Frame {
+        // The response must echo the *wire* request id: the service
+        // response carries the id the server's local Client assigned,
+        // which means nothing to the peer.
+        let mut wire_resp = super::wire::Response::from_solve(resp);
+        wire_resp.id = wire_id;
+        Frame::Response(wire_resp)
     }
 
-    fn begin_shutdown(&self) {
-        self.shutdown.store(true, Ordering::Release);
-        // Unblock readers waiting on quiet sockets — but only the read
-        // half: writers must still drain their in-flight replies (each
-        // connection fully closes once its writer has finished).
-        let conns = self.conns.lock().unwrap();
-        for stream in conns.values() {
-            let _ = stream.shutdown(std::net::Shutdown::Read);
+    fn submit_one(
+        &self,
+        conn: &mut ServerConn,
+        io: &mut ConnIo<'_>,
+        id: u64,
+        payload: SystemPayload<'static>,
+        opts: SolveOptions,
+        deadline: Option<Instant>,
+    ) {
+        match self.client.submit(SolveSpec { payload, opts }) {
+            Ok(handle) => conn.pending.push_back(PendingReply {
+                id,
+                handle,
+                deadline,
+            }),
+            Err(e) => {
+                if matches!(e, ApiError::Backpressure { .. }) {
+                    self.metrics.sheds.fetch_add(1, Ordering::Relaxed);
+                }
+                io.send(&Frame::Error(ErrorReply { id, error: e }));
+            }
+        }
+    }
+
+    /// Pull deferred requests into the service while tokens are free,
+    /// lazily expiring any whose deadline already passed.
+    fn admit_deferred(&self, conn: &mut ServerConn, io: &mut ConnIo<'_>) {
+        while conn.tokens() < self.cfg.conn_quota {
+            let Some(req) = conn.deferred.pop_front() else {
+                return;
+            };
+            if matches!(req.deadline, Some(d) if Instant::now() >= d) {
+                self.metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                io.send(&Frame::Error(ErrorReply {
+                    id: req.id,
+                    error: ApiError::Timeout,
+                }));
+                continue;
+            }
+            self.submit_one(conn, io, req.id, req.payload, req.opts, req.deadline);
+        }
+    }
+
+    /// Submit one readiness burst's worth of admitted requests, fusing
+    /// same-shape neighbors into a single `submit_many` group.
+    fn submit_admitted(
+        &self,
+        conn: &mut ServerConn,
+        io: &mut ConnIo<'_>,
+        admitted: Vec<DeferredReq>,
+    ) {
+        if admitted.len() < 2 {
+            for req in admitted {
+                self.submit_one(conn, io, req.id, req.payload, req.opts, req.deadline);
+            }
+            return;
+        }
+        // Group by solve shape. `SolveOptions` has no `Eq`, so the key
+        // is the tuple of fields that decide batch compatibility
+        // (deadlines stay per-member; `condition` is never on the wire).
+        type Key = (
+            usize,
+            Dtype,
+            Option<usize>,
+            Option<Backend>,
+            Option<KernelVariant>,
+            bool,
+        );
+        let key_of = |r: &DeferredReq| -> Key {
+            (
+                r.payload.n(),
+                r.payload.dtype(),
+                r.opts.m_override,
+                r.opts.backend_override,
+                r.opts.kernel_override,
+                r.opts.compute_residual,
+            )
+        };
+        let mut groups: Vec<(Key, Vec<DeferredReq>)> = Vec::new();
+        for req in admitted {
+            let k = key_of(&req);
+            match groups.iter_mut().find(|(gk, _)| *gk == k) {
+                Some((_, members)) => members.push(req),
+                None => groups.push((k, vec![req])),
+            }
+        }
+        for (_, members) in groups {
+            if members.len() < 2 {
+                for req in members {
+                    self.submit_one(conn, io, req.id, req.payload, req.opts, req.deadline);
+                }
+                continue;
+            }
+            let mut meta = Vec::with_capacity(members.len());
+            let mut specs = Vec::with_capacity(members.len());
+            let mut fallback = Vec::with_capacity(members.len());
+            for mut req in members {
+                // Shared ownership makes the fallback clone free.
+                req.payload = promote_shared(req.payload);
+                meta.push((req.id, req.deadline));
+                specs.push(SolveSpec {
+                    payload: req.payload.clone(),
+                    opts: req.opts.clone(),
+                });
+                fallback.push(req);
+            }
+            match self.client.submit_many(specs) {
+                Ok(handles) => {
+                    self.metrics
+                        .conn_fused
+                        .fetch_add(meta.len() as u64, Ordering::Relaxed);
+                    for ((id, deadline), handle) in meta.into_iter().zip(handles) {
+                        conn.pending.push_back(PendingReply {
+                            id,
+                            handle,
+                            deadline,
+                        });
+                    }
+                }
+                Err(_) => {
+                    // All-or-nothing group admission failed (queue too
+                    // full for the whole batch, or a member was
+                    // rejected): fall back to per-request submission so
+                    // each request gets its own verdict.
+                    for req in fallback {
+                        self.submit_one(conn, io, req.id, req.payload, req.opts, req.deadline);
+                    }
+                }
+            }
         }
     }
 }
 
+impl Driver for ServerDriver {
+    type Conn = ServerConn;
+
+    fn new_conn(&self, _conn_id: u64) -> ServerConn {
+        ServerConn::default()
+    }
+
+    fn on_batch(&self, conn: &mut ServerConn, io: &mut ConnIo<'_>, frames: Vec<Frame>) -> Verdict {
+        let mut admitted: Vec<DeferredReq> = Vec::new();
+        let mut verdict = Verdict::Continue;
+        for frame in frames {
+            match frame {
+                Frame::Request(req) => {
+                    let deadline = (req.deadline_ms > 0)
+                        .then(|| Instant::now() + Duration::from_millis(req.deadline_ms as u64));
+                    let entry = DeferredReq {
+                        id: req.id,
+                        payload: req.payload,
+                        opts: req.opts,
+                        deadline,
+                    };
+                    if conn.tokens() + admitted.len() < self.cfg.conn_quota {
+                        admitted.push(entry);
+                    } else if conn.deferred.len() < self.cfg.conn_quota {
+                        // Over budget: park it. The token this request
+                        // is waiting for frees when an in-flight solve
+                        // resolves.
+                        self.metrics.quota_deferred.fetch_add(1, Ordering::Relaxed);
+                        conn.deferred.push_back(entry);
+                    } else {
+                        // Even the waiting room is full: shed this one
+                        // request, keep the connection.
+                        self.metrics.sheds.fetch_add(1, Ordering::Relaxed);
+                        io.send(&Frame::Error(ErrorReply {
+                            id: entry.id,
+                            error: ApiError::Backpressure {
+                                queue_depth: self.cfg.conn_quota,
+                            },
+                        }));
+                    }
+                }
+                Frame::Ping { nonce } => io.send(&Frame::Pong { nonce }),
+                Frame::StatsRequest => {
+                    let mut snap = self.client.metrics();
+                    self.metrics.fill(&mut snap);
+                    let json = stats_json(&snap).to_string_compact();
+                    io.send(&Frame::StatsResponse { json });
+                }
+                Frame::Shutdown => {
+                    conn.shutdown_requested = true;
+                    // Deferred work will never get a token now; fail it
+                    // immediately so the peer's handles resolve.
+                    for req in conn.deferred.drain(..) {
+                        io.send(&Frame::Error(ErrorReply {
+                            id: req.id,
+                            error: ApiError::ShutDown,
+                        }));
+                    }
+                }
+                // The event loop consumes Auth and Chunk frames before
+                // the driver; a redundant Auth is benign either way.
+                Frame::Auth { .. } | Frame::Chunk(_) => {}
+                // Server-to-client frames arriving here are protocol
+                // violations.
+                Frame::Response(_)
+                | Frame::Error(_)
+                | Frame::Pong { .. }
+                | Frame::StatsResponse { .. }
+                | Frame::ShutdownAck => {
+                    io.send(&Frame::Error(ErrorReply {
+                        id: 0,
+                        error: ApiError::InvalidRequest(
+                            "unexpected server-side frame kind".into(),
+                        ),
+                    }));
+                    verdict = Verdict::CloseAfterFlush;
+                    break;
+                }
+            }
+        }
+        self.submit_admitted(conn, io, admitted);
+        verdict
+    }
+
+    fn pump(&self, conn: &mut ServerConn, io: &mut ConnIo<'_>) -> Verdict {
+        // Sweep zombies: a resolved deadline-expired solve releases its
+        // token (its reply frame went out long ago).
+        conn.zombies
+            .retain_mut(|h| matches!(h.try_wait(), Ok(None)));
+
+        // Write replies strictly in request order.
+        while let Some(front) = conn.pending.front_mut() {
+            match front.handle.try_wait() {
+                Ok(Some(resp)) => {
+                    let frame = self.respond_frame(front.id, &resp);
+                    io.send(&frame);
+                    conn.pending.pop_front();
+                }
+                Ok(None) => {
+                    if matches!(front.deadline, Some(d) if Instant::now() >= d) {
+                        // Answer now, keep the token until the solve
+                        // actually resolves (the service still counts
+                        // the dropped reply when the zombie is swept).
+                        self.metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                        io.send(&Frame::Error(ErrorReply {
+                            id: front.id,
+                            error: ApiError::Timeout,
+                        }));
+                        let done = conn.pending.pop_front().unwrap();
+                        conn.zombies.push(done.handle);
+                        continue;
+                    }
+                    break;
+                }
+                Err(e) => {
+                    io.send(&Frame::Error(ErrorReply {
+                        id: front.id,
+                        error: e,
+                    }));
+                    conn.pending.pop_front();
+                }
+            }
+        }
+
+        if conn.shutdown_requested {
+            if conn.pending.is_empty() {
+                io.send(&Frame::ShutdownAck);
+                return Verdict::ShutdownAfterFlush;
+            }
+            return Verdict::Continue;
+        }
+        self.admit_deferred(conn, io);
+        Verdict::Continue
+    }
+
+    fn replies_owed(&self, conn: &ServerConn) -> usize {
+        // Deliberately excludes zombies (answered) and deferred
+        // (unsubmitted): a connection whose only remaining state is a
+        // deferred request behind a zombie token IS idle-reapable — see
+        // `on_close`, which fails that request as Timeout instead of
+        // leaking it.
+        conn.pending.len()
+    }
+
+    fn on_close(&self, conn: &mut ServerConn, io: &mut ConnIo<'_>, reason: CloseReason) {
+        // Deferred requests were never submitted; resolve their wire
+        // ids so a peer still listening sees a terminal error rather
+        // than silence.
+        let error = match reason {
+            CloseReason::IdleReaped => Some(ApiError::Timeout),
+            CloseReason::Shutdown => Some(ApiError::ShutDown),
+            CloseReason::PeerClosed | CloseReason::ProtocolError => None,
+        };
+        if let Some(error) = error {
+            if matches!(error, ApiError::Timeout) && !conn.deferred.is_empty() {
+                self.metrics
+                    .deadline_expired
+                    .fetch_add(conn.deferred.len() as u64, Ordering::Relaxed);
+            }
+            for req in conn.deferred.drain(..) {
+                io.send(&Frame::Error(ErrorReply {
+                    id: req.id,
+                    error: error.clone(),
+                }));
+            }
+        }
+        // Pending/zombie handles just drop: the solves run to
+        // completion service-side and count as dropped responses.
+        conn.deferred.clear();
+        conn.pending.clear();
+        conn.zombies.clear();
+    }
+}
+
 /// Handle to a running network server. Dropping it shuts the server
-/// down (joining the acceptor and every connection thread).
+/// down (joining the event-loop workers and acceptor).
 pub struct NetServer {
-    inner: Arc<ServerInner>,
-    local_addr: SocketAddr,
-    acceptor: Option<std::thread::JoinHandle<()>>,
+    client: Arc<Client>,
+    metrics: Arc<NetMetrics>,
+    event_loop: EventLoop,
 }
 
 impl NetServer {
     /// Bind `cfg.addr` and start serving `client`. With port 0 the OS
     /// assigns a free port — read it back via [`NetServer::local_addr`].
     pub fn start(client: Arc<Client>, cfg: NetConfig) -> Result<NetServer> {
-        cfg.validate()?;
-        let listener = TcpListener::bind(&cfg.addr)
-            .map_err(|e| Error::Service(format!("bind {}: {e}", cfg.addr)))?;
-        let local_addr = listener
-            .local_addr()
-            .map_err(|e| Error::Service(format!("local_addr: {e}")))?;
-        // Non-blocking accept so the acceptor can observe shutdown.
-        listener
-            .set_nonblocking(true)
-            .map_err(|e| Error::Service(format!("set_nonblocking: {e}")))?;
-        let inner = Arc::new(ServerInner {
-            client,
-            cfg,
-            metrics: Arc::new(NetMetrics::default()),
-            shutdown: AtomicBool::new(false),
-            conns: Mutex::new(HashMap::new()),
-            next_conn_id: AtomicU64::new(0),
-            handlers: Mutex::new(Vec::new()),
+        let metrics = Arc::new(NetMetrics::default());
+        let driver = Arc::new(ServerDriver {
+            client: client.clone(),
+            cfg: cfg.clone(),
+            metrics: metrics.clone(),
         });
-        let inner2 = inner.clone();
-        let acceptor = std::thread::Builder::new()
-            .name("partisol-net-accept".into())
-            .spawn(move || accept_loop(listener, inner2))
-            .map_err(|e| Error::Service(format!("spawn acceptor: {e}")))?;
+        let event_loop = EventLoop::start(driver, cfg, metrics.clone(), "net")?;
+        // A finished solve immediately wakes the worker that owes its
+        // reply — replies go out at completion latency, not poll-tick
+        // latency.
+        let waker = event_loop.waker();
+        client
+            .service()
+            .add_completion_waker(Arc::new(move || waker.wake()));
         Ok(NetServer {
-            inner,
-            local_addr,
-            acceptor: Some(acceptor),
+            client,
+            metrics,
+            event_loop,
         })
     }
 
     /// The bound address (the actual port when `addr` asked for `:0`).
     pub fn local_addr(&self) -> SocketAddr {
-        self.local_addr
+        self.event_loop.local_addr()
     }
 
     /// The served client (shared with in-process callers).
     pub fn client(&self) -> &Arc<Client> {
-        &self.inner.client
+        &self.client
     }
 
     /// One snapshot covering the whole serving stack: the service
-    /// counters plus the `net_*` connection/frame/shed counters.
+    /// counters plus the `net_*` connection/frame/event-loop counters.
     pub fn metrics(&self) -> MetricsSnapshot {
-        let mut snap = self.inner.client.metrics();
-        self.inner.metrics.fill(&mut snap);
+        let mut snap = self.client.metrics();
+        self.metrics.fill(&mut snap);
         snap
     }
 
@@ -149,18 +463,19 @@ impl NetServer {
     /// connection has drained.
     pub fn run_until_shutdown(&self) {
         loop {
-            let open = self.inner.metrics.connections_open.load(Ordering::Relaxed);
-            if self.inner.shutting_down() && open == 0 {
+            let open = self.metrics.connections_open.load(Ordering::Relaxed);
+            if self.event_loop.shutting_down() && open == 0 {
                 return;
             }
             std::thread::sleep(Duration::from_millis(20));
         }
     }
 
-    /// Stop accepting, drain and join every connection, join the
-    /// acceptor. Idempotent with a protocol-initiated shutdown.
+    /// Stop accepting, drain and close every connection, join the
+    /// event-loop threads. Idempotent with a protocol-initiated
+    /// shutdown.
     pub fn shutdown(mut self) {
-        self.stop();
+        self.event_loop.stop();
     }
 
     /// Abrupt death, for failover testing: close every connection in
@@ -168,340 +483,7 @@ impl NetServer {
     /// mid-stream close exactly as if the process were killed) and stop
     /// the acceptor. Unlike [`NetServer::shutdown`], nothing drains.
     pub fn kill(&self) {
-        self.inner.shutdown.store(true, Ordering::Release);
-        let conns = self.inner.conns.lock().unwrap();
-        for stream in conns.values() {
-            let _ = stream.shutdown(std::net::Shutdown::Both);
-        }
-    }
-
-    fn stop(&mut self) {
-        self.inner.begin_shutdown();
-        if let Some(t) = self.acceptor.take() {
-            let _ = t.join();
-        }
-        let handlers: Vec<_> = self.inner.handlers.lock().unwrap().drain(..).collect();
-        for t in handlers {
-            let _ = t.join();
-        }
-    }
-}
-
-impl Drop for NetServer {
-    fn drop(&mut self) {
-        self.stop();
-    }
-}
-
-fn accept_loop(listener: TcpListener, inner: Arc<ServerInner>) {
-    loop {
-        if inner.shutting_down() {
-            return;
-        }
-        match listener.accept() {
-            Ok((stream, peer)) => {
-                let _ = stream.set_nodelay(true);
-                let open = inner.metrics.connections_open.load(Ordering::Relaxed);
-                if open >= inner.cfg.max_conns as u64 {
-                    // Over the cap: shed with a connection-level
-                    // Backpressure frame, then drop the socket.
-                    inner.metrics.sheds.fetch_add(1, Ordering::Relaxed);
-                    let mut w = BufWriter::new(&stream);
-                    let wrote = Frame::Error(ErrorReply {
-                        id: 0,
-                        error: ApiError::Backpressure {
-                            queue_depth: inner.cfg.max_conns,
-                        },
-                    })
-                    .write_to(&mut w)
-                    .is_ok()
-                        && w.flush().is_ok();
-                    if wrote {
-                        inner.metrics.frames_out.fetch_add(1, Ordering::Relaxed);
-                    }
-                    continue;
-                }
-                inner
-                    .metrics
-                    .connections_accepted
-                    .fetch_add(1, Ordering::Relaxed);
-                inner
-                    .metrics
-                    .connections_open
-                    .fetch_add(1, Ordering::Relaxed);
-                let conn_id = inner.next_conn_id.fetch_add(1, Ordering::Relaxed);
-                if let Ok(clone) = stream.try_clone() {
-                    inner.conns.lock().unwrap().insert(conn_id, clone);
-                }
-                let inner2 = inner.clone();
-                let handle = std::thread::Builder::new()
-                    .name(format!("partisol-net-conn-{conn_id}"))
-                    .spawn(move || {
-                        conn_reader(stream, conn_id, &inner2);
-                        inner2.conns.lock().unwrap().remove(&conn_id);
-                        inner2
-                            .metrics
-                            .connections_open
-                            .fetch_sub(1, Ordering::Relaxed);
-                    });
-                match handle {
-                    Ok(h) => {
-                        // Reap handles of connections that already
-                        // finished (dropping a finished JoinHandle just
-                        // detaches it) so churn cannot grow the vec
-                        // without bound.
-                        let mut handlers = inner.handlers.lock().unwrap();
-                        handlers.retain(|t| !t.is_finished());
-                        handlers.push(h);
-                    }
-                    Err(e) => {
-                        crate::log_warn!("net: spawn handler for {peer}: {e}");
-                        inner.conns.lock().unwrap().remove(&conn_id);
-                        inner
-                            .metrics
-                            .connections_open
-                            .fetch_sub(1, Ordering::Relaxed);
-                    }
-                }
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(10));
-            }
-            Err(e) => {
-                crate::log_warn!("net: accept failed: {e}");
-                std::thread::sleep(Duration::from_millis(50));
-            }
-        }
-    }
-}
-
-/// Per-connection reader: decode frames, submit solves, answer control
-/// frames. Responses are written by a dedicated writer thread so a
-/// long-running solve never blocks frame intake (pipelining).
-fn conn_reader(stream: TcpStream, conn_id: u64, inner: &Arc<ServerInner>) {
-    if inner.cfg.read_timeout_ms > 0 {
-        let _ = stream.set_read_timeout(Some(Duration::from_millis(inner.cfg.read_timeout_ms)));
-    }
-    let (tx, rx) = mpsc::channel::<Outgoing>();
-    // Replies handed to the writer but not yet written back: a read
-    // timeout only reaps the connection when this is zero, so a peer
-    // quietly waiting on a long solve is never cut off.
-    let inflight = Arc::new(AtomicU64::new(0));
-    let writer = match stream.try_clone() {
-        Ok(wstream) => {
-            let inner2 = inner.clone();
-            let inflight2 = inflight.clone();
-            std::thread::Builder::new()
-                .name(format!("partisol-net-write-{conn_id}"))
-                .spawn(move || conn_writer(wstream, rx, inner2, inflight2))
-                .ok()
-        }
-        Err(e) => {
-            crate::log_warn!("net: clone stream for conn {conn_id}: {e}");
-            None
-        }
-    };
-    if writer.is_some() {
-        // With `[net] auth_token` set, the first frame must be a
-        // matching `Auth` — anything else is answered with an
-        // `Unauthorized` error frame and the connection is closed.
-        let mut authed = inner.cfg.auth_token.is_none();
-        let mut r = BufReader::new(&stream);
-        loop {
-            match read_frame(&mut r, inner.cfg.max_frame_bytes) {
-                Ok(frame) => {
-                    inner.metrics.frames_in.fetch_add(1, Ordering::Relaxed);
-                    if !authed {
-                        match &frame {
-                            Frame::Auth { token }
-                                if Some(token.as_str())
-                                    == inner.cfg.auth_token.as_deref() =>
-                            {
-                                authed = true;
-                                continue;
-                            }
-                            _ => {
-                                inner.metrics.unauthorized.fetch_add(1, Ordering::Relaxed);
-                                let _ = tx.send(Outgoing::Frame(Frame::Error(ErrorReply {
-                                    id: 0,
-                                    error: ApiError::Unauthorized,
-                                })));
-                                break;
-                            }
-                        }
-                    }
-                    if !handle_frame(frame, &tx, inner, &inflight) {
-                        break;
-                    }
-                }
-                Err(WireError::Closed) => break,
-                Err(WireError::Timeout) => {
-                    // Reap a genuinely idle connection (nothing read for
-                    // a full read_timeout window, no reply owed); keep
-                    // serving one that is waiting on in-flight work.
-                    if inner.shutting_down() || inflight.load(Ordering::Acquire) == 0 {
-                        break;
-                    }
-                }
-                Err(e) => {
-                    // Malformed or desynced: notify best-effort, then
-                    // close only this connection. A peer speaking the
-                    // wrong protocol version gets the structured
-                    // version-mismatch error (carrying the version this
-                    // build speaks) so it can stop retrying.
-                    crate::log_warn!("net: conn {conn_id}: {e}; closing");
-                    let error = match &e {
-                        WireError::BadVersion(_) => ApiError::VersionMismatch { peer: VERSION },
-                        _ => ApiError::InvalidRequest(format!("protocol error: {e}")),
-                    };
-                    let _ = tx.send(Outgoing::Frame(Frame::Error(ErrorReply { id: 0, error })));
-                    break;
-                }
-            }
-        }
-    }
-    // Close the reader side and let the writer drain its in-flight
-    // replies before the connection fully goes away.
-    drop(tx);
-    if let Some(w) = writer {
-        let _ = w.join();
-    }
-    let _ = stream.shutdown(std::net::Shutdown::Both);
-}
-
-/// React to one decoded frame. Returns false when the connection (or
-/// the whole server) should stop reading.
-fn handle_frame(
-    frame: Frame,
-    tx: &mpsc::Sender<Outgoing>,
-    inner: &Arc<ServerInner>,
-    inflight: &Arc<AtomicU64>,
-) -> bool {
-    match frame {
-        Frame::Request(req) => {
-            let deadline = (req.deadline_ms > 0)
-                .then(|| Instant::now() + Duration::from_millis(req.deadline_ms as u64));
-            let id = req.id;
-            let spec = SolveSpec {
-                payload: req.payload,
-                opts: req.opts,
-            };
-            let out = match inner.client.submit(spec) {
-                Ok(handle) => {
-                    inflight.fetch_add(1, Ordering::AcqRel);
-                    Outgoing::Pending {
-                        id,
-                        handle,
-                        deadline,
-                    }
-                }
-                Err(e) => {
-                    if matches!(e, ApiError::Backpressure { .. }) {
-                        inner.metrics.sheds.fetch_add(1, Ordering::Relaxed);
-                    }
-                    Outgoing::Frame(Frame::Error(ErrorReply { id, error: e }))
-                }
-            };
-            tx.send(out).is_ok()
-        }
-        Frame::Ping { nonce } => tx.send(Outgoing::Frame(Frame::Pong { nonce })).is_ok(),
-        Frame::StatsRequest => {
-            let mut snap = inner.client.metrics();
-            inner.metrics.fill(&mut snap);
-            let json = stats_json(&snap).to_string_compact();
-            tx.send(Outgoing::Frame(Frame::StatsResponse { json }))
-                .is_ok()
-        }
-        Frame::Shutdown => {
-            // The writer acknowledges and only then stops the whole
-            // server (acceptor exits, every other connection is
-            // unblocked); shutting sockets here would race the ack.
-            let _ = tx.send(Outgoing::AckThenShutdown);
-            false
-        }
-        // A redundant auth frame (already authed, or a credentialed
-        // client talking to an open server) is benign.
-        Frame::Auth { .. } => true,
-        // Server-to-client frames arriving here are protocol violations.
-        Frame::Response(_)
-        | Frame::Error(_)
-        | Frame::Pong { .. }
-        | Frame::StatsResponse { .. }
-        | Frame::ShutdownAck => {
-            let _ = tx.send(Outgoing::Frame(Frame::Error(ErrorReply {
-                id: 0,
-                error: ApiError::InvalidRequest("unexpected server-side frame kind".into()),
-            })));
-            false
-        }
-    }
-}
-
-/// Per-connection writer: stream replies back in submission order.
-fn conn_writer(
-    stream: TcpStream,
-    rx: mpsc::Receiver<Outgoing>,
-    inner: Arc<ServerInner>,
-    inflight: Arc<AtomicU64>,
-) {
-    let mut w = BufWriter::new(stream);
-    for out in rx {
-        let frame = match out {
-            Outgoing::AckThenShutdown => {
-                let ok = Frame::ShutdownAck.write_to(&mut w).is_ok() && w.flush().is_ok();
-                if ok {
-                    inner.metrics.frames_out.fetch_add(1, Ordering::Relaxed);
-                }
-                inner.begin_shutdown();
-                continue;
-            }
-            Outgoing::Frame(f) => f,
-            Outgoing::Pending {
-                id,
-                mut handle,
-                deadline,
-            } => {
-                // The response must echo the *wire* request id: the
-                // service response carries the id the server's local
-                // Client assigned, which means nothing to the peer.
-                let respond = |resp: &crate::coordinator::SolveResponse| {
-                    let mut wire_resp = super::wire::Response::from_solve(resp);
-                    wire_resp.id = id;
-                    Frame::Response(wire_resp)
-                };
-                let frame = match deadline {
-                    Some(d) => match handle.wait_deadline(d) {
-                        Ok(resp) => respond(&resp),
-                        Err(ApiError::Timeout) => {
-                            // The solve still completes service-side;
-                            // the abandoned handle is counted as a
-                            // dropped response there.
-                            inner
-                                .metrics
-                                .deadline_expired
-                                .fetch_add(1, Ordering::Relaxed);
-                            Frame::Error(ErrorReply {
-                                id,
-                                error: ApiError::Timeout,
-                            })
-                        }
-                        Err(e) => Frame::Error(ErrorReply { id, error: e }),
-                    },
-                    None => match handle.wait() {
-                        Ok(resp) => respond(&resp),
-                        Err(e) => Frame::Error(ErrorReply { id, error: e }),
-                    },
-                };
-                inflight.fetch_sub(1, Ordering::AcqRel);
-                frame
-            }
-        };
-        if frame.write_to(&mut w).is_err() || w.flush().is_err() {
-            // The peer went away; stop draining (pending solves finish
-            // service-side and count as dropped responses).
-            return;
-        }
-        inner.metrics.frames_out.fetch_add(1, Ordering::Relaxed);
+        self.event_loop.kill();
     }
 }
 
@@ -534,5 +516,10 @@ pub(crate) fn stats_json(snap: &MetricsSnapshot) -> Json {
         ("sheds", num(snap.net_sheds)),
         ("deadline_expired", num(snap.net_deadline_expired)),
         ("unauthorized", num(snap.net_unauthorized)),
+        ("wakeups", num(snap.net_wakeups)),
+        ("partial_reads", num(snap.net_partial_reads)),
+        ("quota_deferred", num(snap.net_quota_deferred)),
+        ("conn_fused", num(snap.net_conn_fused)),
+        ("chunked_frames", num(snap.net_chunked_frames)),
     ])
 }

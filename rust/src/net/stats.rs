@@ -39,6 +39,16 @@ pub struct StatsSnapshot {
     pub frames_out: u64,
     pub sheds: u64,
     pub deadline_expired: u64,
+    /// Event-loop poller wakeups (readiness events + timer ticks).
+    pub wakeups: u64,
+    /// Reads that left a partial frame buffered in the decoder.
+    pub partial_reads: u64,
+    /// Requests deferred past a connection's fairness quota.
+    pub quota_deferred: u64,
+    /// Pipelined same-shape requests fused into `submit_many` groups.
+    pub conn_fused: u64,
+    /// Chunk frames sent while streaming oversized bodies.
+    pub chunked_frames: u64,
     /// The full untyped document as received.
     raw: Json,
 }
@@ -94,6 +104,11 @@ impl StatsSnapshot {
             frames_out: num("frames_out"),
             sheds: num("sheds"),
             deadline_expired: num("deadline_expired"),
+            wakeups: num("wakeups"),
+            partial_reads: num("partial_reads"),
+            quota_deferred: num("quota_deferred"),
+            conn_fused: num("conn_fused"),
+            chunked_frames: num("chunked_frames"),
             raw,
         }
     }
@@ -123,12 +138,18 @@ mod tests {
     fn parses_known_fields_and_defaults_missing_ones() {
         let s = StatsSnapshot::parse(
             r#"{"completed": 12, "plan_cache_hits": 9, "plan_cache_misses": 3,
-                "mean_e2e_us": 812.5, "sheds": 2}"#,
+                "mean_e2e_us": 812.5, "sheds": 2, "wakeups": 7,
+                "quota_deferred": 3, "conn_fused": 4, "chunked_frames": 5}"#,
         )
         .unwrap();
         assert_eq!(s.completed, 12);
         assert_eq!(s.plan_cache_hits, 9);
         assert_eq!(s.sheds, 2);
+        assert_eq!(s.wakeups, 7);
+        assert_eq!(s.quota_deferred, 3);
+        assert_eq!(s.conn_fused, 4);
+        assert_eq!(s.chunked_frames, 5);
+        assert_eq!(s.partial_reads, 0);
         assert_eq!(s.mean_e2e_us, 812.5);
         assert_eq!(s.submitted, 0, "missing fields read as zero");
         assert_eq!(s.plan_cache_hit_rate(), 0.75);

@@ -31,8 +31,13 @@ use std::io::{ErrorKind, Read, Write};
 
 /// Frame magic: the first four bytes of every valid frame.
 pub const MAGIC: [u8; 4] = *b"PTSL";
-/// Protocol version this build speaks.
-pub const VERSION: u8 = 1;
+/// Protocol version this build speaks (and stamps on every frame).
+/// Version 2 added the `Chunk`/`ChunkEnd` streaming kinds.
+pub const VERSION: u8 = 2;
+/// Oldest protocol version this build still accepts. Version-1 peers
+/// interoperate fully as long as they never send chunk frames (they
+/// cannot — the kinds did not exist).
+pub const MIN_VERSION: u8 = 1;
 /// Bytes in the fixed frame header.
 pub const HEADER_LEN: usize = 12;
 
@@ -47,6 +52,16 @@ pub const KIND_STATS_RESPONSE: u8 = 7;
 pub const KIND_SHUTDOWN: u8 = 8;
 pub const KIND_SHUTDOWN_ACK: u8 = 9;
 pub const KIND_AUTH: u8 = 10;
+/// One piece of a chunked frame (version ≥ 2): more pieces follow.
+pub const KIND_CHUNK: u8 = 11;
+/// The final piece of a chunked frame (version ≥ 2).
+pub const KIND_CHUNK_END: u8 = 12;
+
+/// Cap on a *reassembled* chunk stream. Each individual chunk frame is
+/// still bounded by `max_frame_bytes`; this bounds how much a peer can
+/// make the reassembler buffer across pieces (chunking exists precisely
+/// so systems larger than `max_frame_bytes` can cross the wire).
+pub const MAX_STREAM_BYTES: usize = 2 << 30;
 
 /// Everything that can go wrong reading or writing a frame.
 #[derive(Debug)]
@@ -182,6 +197,20 @@ pub struct ErrorReply {
     pub error: ApiError,
 }
 
+/// One piece of a chunked frame: `data` is a slice of some inner
+/// frame's *body*, identified by the originator-chosen `stream` id
+/// (request/response id by convention). Pieces of one stream arrive in
+/// order on one connection; `last` marks the piece that completes the
+/// stream, after which the reassembled bytes parse as an ordinary body
+/// of kind `inner_kind`.
+#[derive(Clone, Debug)]
+pub struct ChunkPiece {
+    pub stream: u64,
+    pub inner_kind: u8,
+    pub last: bool,
+    pub data: Vec<u8>,
+}
+
 /// One decoded protocol frame.
 #[derive(Clone, Debug)]
 pub enum Frame {
@@ -199,6 +228,8 @@ pub enum Frame {
     /// configured token ignore it, so a credentialed client can talk to
     /// an open server unchanged.
     Auth { token: String },
+    /// A piece of a chunked inner frame (version ≥ 2 only).
+    Chunk(ChunkPiece),
 }
 
 // ---------------------------------------------------------------------------
@@ -288,7 +319,7 @@ fn parse_backend(code: u8) -> Result<Backend, WireError> {
 }
 
 /// Write one frame: header + body. The caller owns buffering/flushing.
-fn write_frame<W: Write>(w: &mut W, kind: u8, body: &[u8]) -> std::io::Result<()> {
+pub(crate) fn write_frame<W: Write>(w: &mut W, kind: u8, body: &[u8]) -> std::io::Result<()> {
     let len = u32::try_from(body.len()).map_err(|_| {
         std::io::Error::new(ErrorKind::InvalidInput, "frame body exceeds u32 length")
     })?;
@@ -302,16 +333,15 @@ fn write_frame<W: Write>(w: &mut W, kind: u8, body: &[u8]) -> std::io::Result<()
     w.write_all(body)
 }
 
-/// Encode a solve request straight from the payload's borrowed views
+/// Encode a request *body* straight from the payload's borrowed views
 /// (no intermediate system copy — the body buffer is the one copy this
 /// direction makes).
-pub fn write_request<W: Write>(
-    w: &mut W,
+pub fn encode_request_body(
     id: u64,
     opts: &SolveOptions,
     deadline_ms: u32,
     payload: &SystemPayload<'_>,
-) -> std::io::Result<()> {
+) -> Vec<u8> {
     let n = payload.n();
     let dtype = payload.dtype();
     let mut body = Vec::with_capacity(32 + 4 * n * dtype.bytes());
@@ -339,18 +369,73 @@ pub fn write_request<W: Write>(
             put_f32s(&mut body, v.d);
         }
     }
+    body
+}
+
+/// Encode a solve request onto a writer.
+pub fn write_request<W: Write>(
+    w: &mut W,
+    id: u64,
+    opts: &SolveOptions,
+    deadline_ms: u32,
+    payload: &SystemPayload<'_>,
+) -> std::io::Result<()> {
+    let body = encode_request_body(id, opts, deadline_ms, payload);
     write_frame(w, KIND_REQUEST, &body)
 }
 
+/// Write a body of kind `inner_kind` as a sequence of chunk frames of
+/// at most `chunk_bytes` of data each (version-2 peers only). Returns
+/// the number of chunk frames written.
+pub fn write_chunked<W: Write>(
+    w: &mut W,
+    stream: u64,
+    inner_kind: u8,
+    body: &[u8],
+    chunk_bytes: usize,
+) -> std::io::Result<usize> {
+    let chunk_bytes = chunk_bytes.max(1);
+    let pieces = body.len().div_ceil(chunk_bytes).max(1);
+    let mut head = [0u8; 12];
+    head[0..8].copy_from_slice(&stream.to_le_bytes());
+    head[8] = inner_kind;
+    for i in 0..pieces {
+        let data = &body[i * chunk_bytes..body.len().min((i + 1) * chunk_bytes)];
+        let last = i + 1 == pieces;
+        let kind = if last { KIND_CHUNK_END } else { KIND_CHUNK };
+        let len = u32::try_from(head.len() + data.len()).map_err(|_| {
+            std::io::Error::new(ErrorKind::InvalidInput, "chunk exceeds u32 length")
+        })?;
+        let mut hdr = [0u8; HEADER_LEN];
+        hdr[0..4].copy_from_slice(&MAGIC);
+        hdr[4] = VERSION;
+        hdr[5] = kind;
+        hdr[8..12].copy_from_slice(&len.to_le_bytes());
+        w.write_all(&hdr)?;
+        w.write_all(&head)?;
+        w.write_all(data)?;
+    }
+    Ok(pieces)
+}
+
+/// Parse a fully reassembled chunk stream back into its inner frame.
+pub fn reassemble(inner_kind: u8, body: &[u8]) -> Result<Frame, WireError> {
+    if inner_kind == KIND_CHUNK || inner_kind == KIND_CHUNK_END {
+        return Err(WireError::Malformed("chunk stream nests chunks".into()));
+    }
+    parse_body(VERSION, inner_kind, body)
+}
+
 impl Frame {
-    /// Encode this frame onto a writer ([`Frame::Request`] delegates to
-    /// [`write_request`], which callers with borrowed payloads should
-    /// use directly).
-    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+    /// Encode this frame into `(kind, body)` parts — the seam the
+    /// event loop uses to decide between a plain frame and a chunked
+    /// stream before any bytes hit the socket.
+    pub(crate) fn encode_parts(&self) -> (u8, Vec<u8>) {
         match self {
-            Frame::Request(req) => {
-                write_request(w, req.id, &req.opts, req.deadline_ms, &req.payload)
-            }
+            Frame::Request(req) => (
+                KIND_REQUEST,
+                encode_request_body(req.id, &req.opts, req.deadline_ms, &req.payload),
+            ),
             Frame::Response(resp) => {
                 let n = resp.x.len();
                 let dtype = resp.x.dtype();
@@ -377,7 +462,7 @@ impl Frame {
                     Solution::F64(x) => put_f64s(&mut body, x),
                     Solution::F32(x) => put_f32s(&mut body, x),
                 }
-                write_frame(w, KIND_RESPONSE, &body)
+                (KIND_RESPONSE, body)
             }
             Frame::Error(reply) => {
                 // The u32 slot after the code byte is the queue depth for
@@ -403,32 +488,49 @@ impl Frame {
                 body.push(0); // reserved
                 put_u32(&mut body, queue_depth);
                 put_str(&mut body, message);
-                write_frame(w, KIND_ERROR, &body)
+                (KIND_ERROR, body)
             }
             Frame::Ping { nonce } => {
                 let mut body = Vec::with_capacity(8);
                 put_u64(&mut body, *nonce);
-                write_frame(w, KIND_PING, &body)
+                (KIND_PING, body)
             }
             Frame::Pong { nonce } => {
                 let mut body = Vec::with_capacity(8);
                 put_u64(&mut body, *nonce);
-                write_frame(w, KIND_PONG, &body)
+                (KIND_PONG, body)
             }
-            Frame::StatsRequest => write_frame(w, KIND_STATS_REQUEST, &[]),
+            Frame::StatsRequest => (KIND_STATS_REQUEST, Vec::new()),
             Frame::StatsResponse { json } => {
                 let mut body = Vec::with_capacity(4 + json.len());
                 put_str(&mut body, json);
-                write_frame(w, KIND_STATS_RESPONSE, &body)
+                (KIND_STATS_RESPONSE, body)
             }
-            Frame::Shutdown => write_frame(w, KIND_SHUTDOWN, &[]),
-            Frame::ShutdownAck => write_frame(w, KIND_SHUTDOWN_ACK, &[]),
+            Frame::Shutdown => (KIND_SHUTDOWN, Vec::new()),
+            Frame::ShutdownAck => (KIND_SHUTDOWN_ACK, Vec::new()),
             Frame::Auth { token } => {
                 let mut body = Vec::with_capacity(4 + token.len());
                 put_str(&mut body, token);
-                write_frame(w, KIND_AUTH, &body)
+                (KIND_AUTH, body)
+            }
+            Frame::Chunk(piece) => {
+                let mut body = Vec::with_capacity(12 + piece.data.len());
+                put_u64(&mut body, piece.stream);
+                body.push(piece.inner_kind);
+                body.push(0);
+                body.push(0);
+                body.push(0); // reserved
+                body.extend_from_slice(&piece.data);
+                let kind = if piece.last { KIND_CHUNK_END } else { KIND_CHUNK };
+                (kind, body)
             }
         }
+    }
+
+    /// Encode this frame onto a writer.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        let (kind, body) = self.encode_parts();
+        write_frame(w, kind, &body)
     }
 }
 
@@ -547,7 +649,7 @@ pub fn read_frame<R: Read>(r: &mut R, max_frame_bytes: usize) -> Result<Frame, W
     if hdr[0..4] != MAGIC {
         return Err(WireError::BadMagic([hdr[0], hdr[1], hdr[2], hdr[3]]));
     }
-    if hdr[4] != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&hdr[4]) {
         return Err(WireError::BadVersion(hdr[4]));
     }
     let kind = hdr[5];
@@ -563,10 +665,10 @@ pub fn read_frame<R: Read>(r: &mut R, max_frame_bytes: usize) -> Result<Frame, W
         ErrorKind::UnexpectedEof => WireError::Malformed("connection closed mid-body".into()),
         _ => WireError::Io(e),
     })?;
-    parse_body(kind, &body)
+    parse_body(hdr[4], kind, &body)
 }
 
-fn parse_body(kind: u8, body: &[u8]) -> Result<Frame, WireError> {
+fn parse_body(version: u8, kind: u8, body: &[u8]) -> Result<Frame, WireError> {
     let mut cur = Cur::new(body);
     match kind {
         KIND_REQUEST => {
@@ -752,7 +854,142 @@ fn parse_body(kind: u8, body: &[u8]) -> Result<Frame, WireError> {
             cur.finish()?;
             Ok(Frame::Auth { token })
         }
+        KIND_CHUNK | KIND_CHUNK_END => {
+            if version < 2 {
+                return Err(WireError::Malformed(
+                    "chunk frames require protocol version 2".into(),
+                ));
+            }
+            let stream = cur.u64()?;
+            let inner_kind = cur.u8()?;
+            let _ = cur.u8()?;
+            let _ = cur.u8()?;
+            let _ = cur.u8()?;
+            if inner_kind == 0
+                || inner_kind == KIND_CHUNK
+                || inner_kind == KIND_CHUNK_END
+                || inner_kind > KIND_CHUNK_END
+            {
+                return Err(WireError::Malformed(format!(
+                    "bad chunk inner kind {inner_kind}"
+                )));
+            }
+            let data = cur.take(cur.remaining())?.to_vec();
+            Ok(Frame::Chunk(ChunkPiece {
+                stream,
+                inner_kind,
+                last: kind == KIND_CHUNK_END,
+                data,
+            }))
+        }
         other => Err(WireError::Malformed(format!("unknown frame kind {other}"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Incremental decoder.
+// ---------------------------------------------------------------------------
+
+/// Push-based frame decoder for nonblocking readers: feed whatever
+/// bytes the socket yields with [`FrameDecoder::push`], then drain
+/// complete frames with [`FrameDecoder::next_frame`].
+///
+/// Error recovery is deliberately two-tier. Body-level corruption
+/// ([`WireError::Malformed`]) and an unknown header version
+/// ([`WireError::BadVersion`]) consume exactly the bad frame's bytes —
+/// the header's length field still framed it — so the *next* valid
+/// frame on the stream decodes normally. Corrupt magic and an
+/// over-cap length poison the decoder: with the framing itself
+/// untrusted there is no resync point, and every later call returns an
+/// error (never a frame decoded from misaligned bytes).
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    pos: usize,
+    max_frame_bytes: usize,
+    poisoned: bool,
+    peer_version: Option<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new(max_frame_bytes: usize) -> FrameDecoder {
+        FrameDecoder {
+            buf: Vec::new(),
+            pos: 0,
+            max_frame_bytes,
+            poisoned: false,
+            peer_version: None,
+        }
+    }
+
+    /// Append raw bytes from the transport.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Protocol version observed on the peer's frames (`None` before
+    /// the first fully framed header).
+    pub fn peer_version(&self) -> Option<u8> {
+        self.peer_version
+    }
+
+    /// Bytes buffered but not yet consumed (a non-zero value after a
+    /// drain means a partial frame is waiting for more input).
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn consume(&mut self, k: usize) {
+        self.pos += k;
+        // Compact once the dead prefix dominates, so a long-lived
+        // connection cannot grow the buffer without bound.
+        if self.pos > 4096 && self.pos * 2 >= self.buf.len() {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    /// Decode the next complete frame, `Ok(None)` when more bytes are
+    /// needed, or a typed error (see the type docs for which errors
+    /// consume the frame and which poison the stream).
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, WireError> {
+        if self.poisoned {
+            return Err(WireError::Malformed(
+                "frame stream desynchronized by an earlier error".into(),
+            ));
+        }
+        let avail = &self.buf[self.pos..];
+        if avail.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let hdr: [u8; HEADER_LEN] = avail[..HEADER_LEN].try_into().unwrap();
+        if hdr[0..4] != MAGIC {
+            self.poisoned = true;
+            return Err(WireError::BadMagic([hdr[0], hdr[1], hdr[2], hdr[3]]));
+        }
+        let len = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+        if len > self.max_frame_bytes {
+            // Skipping an over-cap body would let a hostile peer make
+            // us buffer (or seek past) unbounded bytes: poison instead.
+            self.poisoned = true;
+            return Err(WireError::TooLarge {
+                len,
+                max: self.max_frame_bytes,
+            });
+        }
+        if avail.len() < HEADER_LEN + len {
+            return Ok(None);
+        }
+        let version = hdr[4];
+        let kind = hdr[5];
+        if !(MIN_VERSION..=VERSION).contains(&version) {
+            self.consume(HEADER_LEN + len);
+            return Err(WireError::BadVersion(version));
+        }
+        self.peer_version = Some(version);
+        let body = &self.buf[self.pos + HEADER_LEN..self.pos + HEADER_LEN + len];
+        let out = parse_body(version, kind, body);
+        self.consume(HEADER_LEN + len);
+        out.map(Some)
     }
 }
 
@@ -1001,5 +1238,145 @@ mod tests {
             read_frame(&mut &empty[..], 1 << 20),
             Err(WireError::Closed)
         ));
+    }
+
+    #[test]
+    fn version_1_frames_still_decode() {
+        let mut buf = Vec::new();
+        Frame::Ping { nonce: 5 }.write_to(&mut buf).unwrap();
+        buf[4] = 1; // downgrade the stamped version to the v1 peer's
+        assert!(matches!(
+            read_frame(&mut &buf[..], 1 << 20),
+            Ok(Frame::Ping { nonce: 5 })
+        ));
+        // ...but chunk kinds did not exist in v1: a v1-stamped chunk
+        // frame is malformed, not silently accepted.
+        let mut buf = Vec::new();
+        Frame::Chunk(ChunkPiece {
+            stream: 1,
+            inner_kind: KIND_PING,
+            last: true,
+            data: vec![0u8; 8],
+        })
+        .write_to(&mut buf)
+        .unwrap();
+        buf[4] = 1;
+        assert!(matches!(
+            read_frame(&mut &buf[..], 1 << 20),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn chunked_stream_reassembles_to_the_inner_frame() {
+        let resp = Response {
+            id: 99,
+            x: Solution::F64((0..500).map(|i| i as f64 * 0.5).collect()),
+            m: 32,
+            backend: Backend::Native,
+            residual: None,
+            queue_us: 1.0,
+            exec_us: 2.0,
+            batch_size: 1,
+            simulated_gpu_us: 0.0,
+            route: RobustRoute::Fast,
+            resolved_robust: false,
+        };
+        let (kind, body) = Frame::Response(resp.clone()).encode_parts();
+        let mut wire = Vec::new();
+        let pieces = write_chunked(&mut wire, 99, kind, &body, 64).unwrap();
+        assert!(pieces > 1, "a 4KB body must split at 64-byte chunks");
+
+        let mut dec = FrameDecoder::new(1 << 20);
+        dec.push(&wire);
+        let mut stream = Vec::new();
+        let mut inner_kind = 0;
+        let mut done = false;
+        while let Some(frame) = dec.next_frame().unwrap() {
+            let Frame::Chunk(piece) = frame else {
+                panic!("expected only chunk frames");
+            };
+            assert_eq!(piece.stream, 99);
+            inner_kind = piece.inner_kind;
+            stream.extend_from_slice(&piece.data);
+            if piece.last {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "stream must terminate with a ChunkEnd");
+        assert_eq!(dec.pending_bytes(), 0);
+        let Frame::Response(out) = reassemble(inner_kind, &stream).unwrap() else {
+            panic!("expected the inner response");
+        };
+        assert_eq!(out, resp);
+    }
+
+    #[test]
+    fn decoder_streams_frames_across_arbitrary_push_boundaries() {
+        let mut wire = Vec::new();
+        Frame::Ping { nonce: 1 }.write_to(&mut wire).unwrap();
+        Frame::StatsRequest.write_to(&mut wire).unwrap();
+        Frame::Pong { nonce: 2 }.write_to(&mut wire).unwrap();
+
+        let mut dec = FrameDecoder::new(1 << 20);
+        let mut got = Vec::new();
+        for b in &wire {
+            dec.push(std::slice::from_ref(b));
+            while let Some(f) = dec.next_frame().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got.len(), 3);
+        assert!(matches!(got[0], Frame::Ping { nonce: 1 }));
+        assert!(matches!(got[1], Frame::StatsRequest));
+        assert!(matches!(got[2], Frame::Pong { nonce: 2 }));
+        assert_eq!(dec.peer_version(), Some(VERSION));
+    }
+
+    #[test]
+    fn decoder_resyncs_after_body_corruption_but_poisons_on_bad_magic() {
+        // A malformed body consumes only its own frame: the following
+        // valid frame must decode.
+        let mut bad = Vec::new();
+        Frame::Ping { nonce: 1 }.write_to(&mut bad).unwrap();
+        bad[5] = 200; // unknown kind, framing intact
+        let mut wire = bad.clone();
+        Frame::Ping { nonce: 7 }.write_to(&mut wire).unwrap();
+        let mut dec = FrameDecoder::new(1 << 20);
+        dec.push(&wire);
+        assert!(matches!(dec.next_frame(), Err(WireError::Malformed(_))));
+        assert!(matches!(dec.next_frame(), Ok(Some(Frame::Ping { nonce: 7 }))));
+
+        // An unknown version likewise skips one frame.
+        let mut wire = bad;
+        wire[5] = KIND_PING;
+        wire[4] = 77;
+        Frame::Ping { nonce: 8 }.write_to(&mut wire).unwrap();
+        let mut dec = FrameDecoder::new(1 << 20);
+        dec.push(&wire);
+        assert!(matches!(dec.next_frame(), Err(WireError::BadVersion(77))));
+        assert!(matches!(dec.next_frame(), Ok(Some(Frame::Ping { nonce: 8 }))));
+
+        // Bad magic destroys the framing: poisoned forever after.
+        let mut wire = Vec::new();
+        Frame::Ping { nonce: 1 }.write_to(&mut wire).unwrap();
+        wire[0] = b'X';
+        Frame::Ping { nonce: 9 }.write_to(&mut wire).unwrap();
+        let mut dec = FrameDecoder::new(1 << 20);
+        dec.push(&wire);
+        assert!(matches!(dec.next_frame(), Err(WireError::BadMagic(_))));
+        assert!(dec.next_frame().is_err(), "poisoned decoder never recovers");
+
+        // Over-cap length is equally unrecoverable (cannot skip what we
+        // refuse to buffer).
+        let mut wire = Vec::new();
+        Frame::StatsResponse { json: "x".repeat(256) }
+            .write_to(&mut wire)
+            .unwrap();
+        let mut dec = FrameDecoder::new(64);
+        dec.push(&wire);
+        assert!(matches!(dec.next_frame(), Err(WireError::TooLarge { .. })));
+        assert!(dec.next_frame().is_err());
     }
 }

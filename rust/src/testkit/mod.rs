@@ -6,6 +6,7 @@
 //! the generator's built-in size parameter) and reports the smallest
 //! failing case's seed so the exact run is reproducible.
 
+pub mod mutate;
 pub mod proxy;
 
 use crate::util::Pcg64;

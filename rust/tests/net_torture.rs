@@ -1,0 +1,463 @@
+//! Torture battery for the event-driven network layer.
+//!
+//! Each test abuses the server in a way the readiness-driven loop must
+//! absorb without dropping healthy traffic:
+//!
+//! * **slow-loris** — frames dribbled a byte at a time are decoded
+//!   incrementally (`net_partial_reads`) and answered, not dropped;
+//! * **mid-frame disconnects** — a peer dying inside a frame, or inside
+//!   a chunk stream, tears down only its own connection state;
+//! * **a thousand idle connections** — the fixed worker set multiplexes
+//!   them all while an active client solves bit-identically;
+//! * **pipelined burst under quota** — admissions beyond `conn_quota`
+//!   defer, then shed with per-request `Backpressure` echoing the quota;
+//! * **server-side fusing** — same-shape pipelined requests arriving in
+//!   one read batch execute as one fused `submit_many` group;
+//! * **chunked solve** — a system whose request frame exceeds the
+//!   server's `max_frame_bytes` crosses as a `Chunk` stream and solves
+//!   bit-identically to the local path;
+//! * **idle-reap regression** — a reaped connection's deferred
+//!   over-quota request must fail its handle as `Timeout`, not leak.
+
+use partisol::api::{ApiError, Client, SolveSpec};
+use partisol::config::Config;
+use partisol::net::wire;
+use partisol::net::{ConnectOptions, NetServer, RemoteClient};
+use partisol::plan::SolveOptions;
+use partisol::solver::generator::random_dd_system;
+use partisol::solver::TriSystem;
+use partisol::util::Pcg64;
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn native_cfg() -> Config {
+    Config {
+        probe_pjrt: false,
+        workers: 2,
+        ..Config::default()
+    }
+}
+
+fn start_server(mut cfg: Config) -> (NetServer, String) {
+    cfg.net.addr = "127.0.0.1:0".to_string();
+    let net = cfg.net.clone();
+    let client = Arc::new(Client::from_config(cfg).unwrap());
+    let server = NetServer::start(client, net).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+/// Wait (10 s cap) until the server's open-connection count satisfies
+/// `cond` — accept registration and teardown are asynchronous to the
+/// peers' sockets.
+fn await_open_conns(server: &NetServer, cond: impl Fn(u64) -> bool, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond(server.metrics().net_connections_open) {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Wait (60 s cap) until at least `want` requests have reached the
+/// service queue.
+fn await_submitted(server: &NetServer, want: u64, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while server.metrics().submitted < want {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn slow_loris_dribbled_frames_are_served_not_dropped() {
+    let (server, addr) = start_server(native_cfg());
+    let mut raw = TcpStream::connect(addr.as_str()).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    raw.set_nodelay(true).unwrap();
+
+    // A ping delivered one byte at a time: the decoder must hold the
+    // partial header/body across read passes and still answer.
+    let mut ping = Vec::new();
+    wire::Frame::Ping { nonce: 77 }.write_to(&mut ping).unwrap();
+    for b in &ping {
+        raw.write_all(std::slice::from_ref(b)).unwrap();
+        raw.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    match wire::read_frame(&mut raw, 1 << 20) {
+        Ok(wire::Frame::Pong { nonce: 77 }) => {}
+        other => panic!("dribbled ping must still pong, got {other:?}"),
+    }
+
+    // A solve request in 64-byte slices — dozens of partial decodes
+    // deep inside the body — must solve exactly like the local path.
+    let mut rng = Pcg64::new(21);
+    let sys = random_dd_system::<f64>(&mut rng, 64, 0.5);
+    let mut req = Vec::new();
+    wire::write_request(&mut req, 5, &SolveOptions::default(), 0, &sys.clone().into()).unwrap();
+    for piece in req.chunks(64) {
+        raw.write_all(piece).unwrap();
+        raw.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let got = match wire::read_frame(&mut raw, 1 << 24) {
+        Ok(wire::Frame::Response(resp)) => {
+            assert_eq!(resp.id, 5);
+            resp.into_solve_response()
+        }
+        other => panic!("dribbled request must still solve, got {other:?}"),
+    };
+    let want = server
+        .client()
+        .solve_now(&SolveSpec::borrowed_f64(sys.view()))
+        .unwrap();
+    assert_eq!(
+        got.x.as_f64().unwrap(),
+        want.x.as_f64().unwrap(),
+        "a dribbled solve must be bit-identical to the local path"
+    );
+
+    let m = server.metrics();
+    assert!(
+        m.net_partial_reads >= 1,
+        "byte-at-a-time delivery must exercise the partial-decode path"
+    );
+    drop(raw);
+    server.shutdown();
+}
+
+#[test]
+fn mid_frame_disconnects_leave_the_server_healthy() {
+    let (server, addr) = start_server(native_cfg());
+    let healthy = RemoteClient::connect(&addr).unwrap();
+    let mut rng = Pcg64::new(22);
+
+    // Die halfway through a plain request frame.
+    {
+        let mut raw = TcpStream::connect(addr.as_str()).unwrap();
+        let sys = random_dd_system::<f64>(&mut rng, 4_096, 0.5);
+        let mut req = Vec::new();
+        wire::write_request(&mut req, 1, &SolveOptions::default(), 0, &sys.into()).unwrap();
+        raw.write_all(&req[..req.len() / 2]).unwrap();
+        raw.flush().unwrap();
+    }
+
+    // Die halfway through a chunk stream: several complete pieces, then
+    // a torn one. The server must discard the half-assembled stream
+    // with the connection.
+    {
+        let mut raw = TcpStream::connect(addr.as_str()).unwrap();
+        let sys = random_dd_system::<f64>(&mut rng, 8_192, 0.5);
+        let body = wire::encode_request_body(2, &SolveOptions::default(), 0, &sys.into());
+        let mut stream = Vec::new();
+        wire::write_chunked(&mut stream, 2, wire::KIND_REQUEST, &body, 16 << 10).unwrap();
+        raw.write_all(&stream[..stream.len() / 2]).unwrap();
+        raw.flush().unwrap();
+    }
+
+    await_open_conns(&server, |open| open == 1, "the torn connections to be torn down");
+
+    // The healthy connection never noticed.
+    let sys = random_dd_system::<f64>(&mut rng, 5_000, 0.5);
+    let resp = healthy.solve(SolveSpec::f64(sys)).unwrap();
+    assert_eq!(resp.x.len(), 5_000);
+    assert!(resp.residual.unwrap() < 1e-9);
+
+    healthy.close();
+    server.shutdown();
+}
+
+#[test]
+fn a_thousand_idle_connections_do_not_starve_active_solvers() {
+    let mut cfg = native_cfg();
+    cfg.net.max_conns = 1_200;
+    // Idle peers must survive the whole test.
+    cfg.net.read_timeout_ms = 0;
+    let (server, addr) = start_server(cfg);
+
+    let mut idle = Vec::with_capacity(1_000);
+    for _ in 0..1_000 {
+        match TcpStream::connect(addr.as_str()) {
+            Ok(s) => idle.push(s),
+            // fd budget exhausted: keep what we got.
+            Err(_) => break,
+        }
+    }
+    assert!(
+        idle.len() >= 600,
+        "fd budget too small to torture with ({} conns)",
+        idle.len()
+    );
+    let held = idle.len();
+    await_open_conns(&server, |open| open as usize >= held, "the idle herd to register");
+
+    // An active client alongside them solves bit-identically — the
+    // fixed worker set multiplexes rather than dedicating threads.
+    let remote = RemoteClient::connect(&addr).unwrap();
+    let mut rng = Pcg64::new(23);
+    let sys = random_dd_system::<f64>(&mut rng, 20_000, 0.5);
+    let got = remote.solve(SolveSpec::f64(sys.clone())).unwrap();
+    let want = server
+        .client()
+        .solve_now(&SolveSpec::borrowed_f64(sys.view()))
+        .unwrap();
+    assert_eq!(got.m, want.m);
+    assert_eq!(
+        got.x.as_f64().unwrap(),
+        want.x.as_f64().unwrap(),
+        "a solve among {held} idle connections must stay bit-identical"
+    );
+    assert!(remote.ping().unwrap() < Duration::from_secs(5));
+
+    remote.close();
+    drop(idle);
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_burst_beyond_conn_quota_defers_then_sheds() {
+    let mut cfg = native_cfg();
+    cfg.workers = 1;
+    cfg.queue_depth = 64;
+    cfg.net.conn_quota = 4;
+    let (server, addr) = start_server(cfg);
+
+    // Pin the single service worker from a separate connection so no
+    // burst member completes during admission — the quota arithmetic
+    // below is then deterministic.
+    let pinner = RemoteClient::connect(&addr).unwrap();
+    let mut rng = Pcg64::new(24);
+    let giant = random_dd_system::<f64>(&mut rng, 3_000_000, 0.5);
+    let giant_handle = pinner
+        .submit(SolveSpec::f64(giant).with_residual(false))
+        .unwrap();
+    await_submitted(&server, 1, "the pinning solve to reach the service");
+
+    // 32 same-shape requests against conn_quota = 4: four admitted,
+    // four deferred (admitted later, when the pin releases), the rest
+    // shed with Backpressure echoing the *quota*, not the queue depth.
+    let remote = RemoteClient::connect(&addr).unwrap();
+    let sys = Arc::new(random_dd_system::<f64>(&mut rng, 2_000, 0.5));
+    let specs: Vec<SolveSpec<'static>> = (0..32)
+        .map(|_| SolveSpec::shared_f64(sys.clone()).with_residual(false))
+        .collect();
+    let handles = remote.submit_many(specs).unwrap();
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for h in handles {
+        match h.wait() {
+            Ok(resp) => {
+                ok += 1;
+                assert_eq!(resp.x.len(), 2_000);
+            }
+            Err(ApiError::Backpressure { queue_depth }) => {
+                shed += 1;
+                assert_eq!(queue_depth, 4, "quota sheds echo the conn quota");
+            }
+            Err(e) => panic!("burst member failed with {e} (want Ok or Backpressure)"),
+        }
+    }
+    assert_eq!(ok + shed, 32);
+    assert!(
+        ok >= 8,
+        "admitted plus deferred members must all solve, got {ok}"
+    );
+    assert!(
+        shed >= 1,
+        "a 32-deep burst against quota 4 must shed ({ok} ok)"
+    );
+    giant_handle.wait().unwrap();
+
+    let m = server.metrics();
+    assert!(m.net_quota_deferred >= 1, "the deferral path never fired");
+    assert!(m.net_sheds >= shed as u64);
+    pinner.close();
+    remote.close();
+    server.shutdown();
+}
+
+#[test]
+fn same_shape_pipelined_requests_fuse_server_side() {
+    let (server, addr) = start_server(native_cfg());
+    let n = 256;
+    let mut rng = Pcg64::new(25);
+    let systems: Vec<TriSystem<f64>> = (0..8)
+        .map(|_| random_dd_system::<f64>(&mut rng, n, 0.5))
+        .collect();
+
+    // Local reference: the same eight systems through the in-process
+    // fused path. Batched-vs-batched is the honest comparison — a
+    // fused group of eight must match a fused group of eight.
+    let local_specs: Vec<SolveSpec<'static>> = systems
+        .iter()
+        .map(|s| SolveSpec::f64(s.clone()))
+        .collect();
+    let want: Vec<_> = server
+        .client()
+        .submit_many(local_specs)
+        .unwrap()
+        .into_iter()
+        .map(|h| h.wait().unwrap())
+        .collect();
+    assert!(
+        want.iter().all(|r| r.batch_size == 8),
+        "local submit_many must fuse all eight same-shape systems"
+    );
+
+    // Eight request frames in one write: they land in one read batch,
+    // so the server's admission pass sees the whole same-shape group
+    // and fuses it into one submit_many. Read batching is a kernel
+    // scheduling matter, so retry on fresh connections until it holds.
+    let mut fused = false;
+    for attempt in 0..10 {
+        let mut raw = TcpStream::connect(addr.as_str()).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let mut batch = Vec::new();
+        for (i, sys) in systems.iter().enumerate() {
+            let id = (i + 1) as u64;
+            wire::write_request(&mut batch, id, &SolveOptions::default(), 0, &sys.clone().into())
+                .unwrap();
+        }
+        raw.write_all(&batch).unwrap();
+        raw.flush().unwrap();
+        let mut got = Vec::with_capacity(8);
+        for id in 1..=8u64 {
+            match wire::read_frame(&mut raw, 1 << 24) {
+                Ok(wire::Frame::Response(resp)) => {
+                    assert_eq!(resp.id, id, "replies must keep submission order");
+                    got.push(resp);
+                }
+                other => panic!("attempt {attempt}: want response {id}, got {other:?}"),
+            }
+        }
+        drop(raw);
+        if !got.iter().all(|r| r.batch_size == 8) {
+            continue;
+        }
+        for (resp, want) in got.iter().zip(&want) {
+            assert_eq!(resp.m, want.m);
+            assert_eq!(
+                resp.x.as_f64().unwrap(),
+                want.x.as_f64().unwrap(),
+                "a server-fused member must be bit-identical to the local fused path"
+            );
+        }
+        fused = true;
+        break;
+    }
+    assert!(
+        fused,
+        "eight same-shape pipelined requests never fused into one batch"
+    );
+    assert!(
+        server.metrics().net_conn_fused >= 8,
+        "the fused group must be counted"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn chunked_request_crosses_a_small_frame_cap_bit_identically() {
+    let mut cfg = native_cfg();
+    // A request cap far below the system below: unchunked, the frame
+    // would be rejected as TooLarge before allocation.
+    cfg.net.max_frame_bytes = 1 << 20;
+    cfg.net.chunk_bytes = 256 << 10;
+    let (server, addr) = start_server(cfg);
+
+    // The client chunks against its *own* threshold (it cannot know the
+    // server's cap), so give it one below the server's.
+    let opts = ConnectOptions {
+        chunk_bytes: 128 << 10,
+        ..ConnectOptions::default()
+    };
+    let remote = RemoteClient::connect_opts(&addr, opts).unwrap();
+    let mut rng = Pcg64::new(26);
+    // Request body ≈ 1.6 MB > the 1 MB cap: crosses as ~13 chunks. The
+    // 400 KB response exceeds the server's chunk threshold, so the
+    // reply streams back chunked too.
+    let sys = random_dd_system::<f64>(&mut rng, 50_000, 0.5);
+    let got = remote.solve(SolveSpec::f64(sys.clone())).unwrap();
+    let want = server
+        .client()
+        .solve_now(&SolveSpec::borrowed_f64(sys.view()))
+        .unwrap();
+    assert_eq!(got.m, want.m);
+    assert_eq!(
+        got.x.as_f64().unwrap(),
+        want.x.as_f64().unwrap(),
+        "a chunked remote solve must be bit-identical to the local path"
+    );
+    assert!(got.residual.unwrap() < 1e-9);
+
+    let m = server.metrics();
+    assert!(
+        m.net_chunked_frames >= 2,
+        "the request must actually have crossed as a chunk stream"
+    );
+    remote.close();
+    server.shutdown();
+}
+
+#[test]
+fn idle_reaped_connection_fails_deferred_request_as_timeout() {
+    let mut cfg = native_cfg();
+    cfg.workers = 1;
+    cfg.queue_depth = 16;
+    cfg.net.conn_quota = 1;
+    cfg.net.read_timeout_ms = 150;
+    let (server, addr) = start_server(cfg);
+
+    // Pin the single worker behind a serial pile of giants from six
+    // independent connections (the quota binds per connection, so one
+    // client could hold only a single giant).
+    let mut rng = Pcg64::new(27);
+    let giant = Arc::new(random_dd_system::<f64>(&mut rng, 2_000_000, 0.5));
+    let pinners: Vec<RemoteClient> = (0..6)
+        .map(|_| RemoteClient::connect(&addr).unwrap())
+        .collect();
+    let pinner_handles: Vec<_> = pinners
+        .iter()
+        .map(|c| c.submit(SolveSpec::shared_f64(giant.clone())).unwrap())
+        .collect();
+    await_submitted(&server, 6, "the pinning solves to reach the service");
+
+    // Generate both payloads before connecting: the victim's idle
+    // window is only 150 ms, and generation must not eat into it.
+    let req1_sys = random_dd_system::<f64>(&mut rng, 1_000_000, 0.5);
+    let req2_sys = random_dd_system::<f64>(&mut rng, 2_000, 0.5);
+
+    // req1: admitted, then expired by its 1 ms deadline — the reply is
+    // a Timeout frame but the solve (queued behind the giants) still
+    // holds the connection's one quota token as a zombie.
+    let victim = RemoteClient::connect(&addr).unwrap();
+    let req1 = victim
+        .submit_deadline(SolveSpec::f64(req1_sys), Some(Duration::from_millis(1)))
+        .unwrap();
+    // req2: over quota, deferred with no deadline of its own. The
+    // regression: when the now-idle connection is reaped, the deferred
+    // request must resolve its handle as Timeout — not leak forever.
+    let req2 = victim.submit(SolveSpec::f64(req2_sys)).unwrap();
+
+    match req1.wait() {
+        Err(ApiError::Timeout) => {}
+        other => panic!("req1: want Timeout from the expired deadline, got {other:?}"),
+    }
+    match req2.wait() {
+        Err(ApiError::Timeout) => {}
+        other => panic!("req2: want Timeout from the idle reap, got {other:?}"),
+    }
+
+    let m = server.metrics();
+    assert!(m.net_quota_deferred >= 1, "req2 never took the deferral path");
+    assert!(
+        m.net_deadline_expired >= 2,
+        "both the expiry and the reaped deferral must be counted"
+    );
+    drop(pinner_handles);
+    drop(pinners);
+    drop(victim);
+    server.shutdown();
+}

@@ -1,0 +1,258 @@
+//! Structure-aware fuzzing of the PTSL wire codec.
+//!
+//! The decoder's contract under corruption is positional: a flipped bit
+//! in the magic or the length field destroys the framing (the decoder
+//! poisons itself rather than decode misaligned bytes), while a flip in
+//! the version, kind, reserved or body region is contained to exactly
+//! one frame — the next valid frame on the stream always decodes. The
+//! [`partisol::testkit::mutate`] mutator reports where every flip
+//! landed so each case asserts the region-appropriate failure mode.
+//! Nothing here may panic: corruption always surfaces as a typed
+//! [`WireError`].
+
+use partisol::net::wire::{
+    write_request, Frame, FrameDecoder, Request, WireError, HEADER_LEN, KIND_PING, MAGIC, VERSION,
+};
+use partisol::plan::SolveOptions;
+use partisol::solver::generator::random_dd_system;
+use partisol::testkit::mutate::{classify, flip, Mutation, Region};
+use partisol::testkit::{base_seed, default_cases, forall, Gen};
+use partisol::util::Pcg64;
+
+/// Nonce of the pristine frame appended after every mutated one; the
+/// resync assertions look for it.
+const SENTINEL: u64 = 0xFEED_FACE;
+
+/// Decode `wire`, feeding it in the spans between `cuts`, and re-encode
+/// every decoded frame. For a valid stream the output is byte-identical
+/// to the input regardless of where the pushes split.
+fn decode_and_reencode(wire: &[u8], cuts: &[usize]) -> Vec<u8> {
+    let mut dec = FrameDecoder::new(1 << 24);
+    let mut out = Vec::new();
+    let mut fed = 0usize;
+    for &cut in cuts {
+        dec.push(&wire[fed..cut]);
+        fed = cut;
+        while let Some(frame) = dec.next_frame().expect("valid stream must decode") {
+            frame.write_to(&mut out).unwrap();
+        }
+    }
+    assert_eq!(dec.pending_bytes(), 0, "a complete stream leaves nothing pending");
+    out
+}
+
+#[test]
+fn every_split_boundary_decodes_the_same_frames() {
+    let mut wire = Vec::new();
+    Frame::Ping { nonce: 41 }.write_to(&mut wire).unwrap();
+    let auth = Frame::Auth {
+        token: "tok".into(),
+    };
+    auth.write_to(&mut wire).unwrap();
+    let mut rng = Pcg64::new(5);
+    let sys = random_dd_system::<f64>(&mut rng, 9, 0.5);
+    write_request(&mut wire, 3, &SolveOptions::default(), 250, &sys.into()).unwrap();
+    Frame::StatsRequest.write_to(&mut wire).unwrap();
+    Frame::Pong { nonce: 42 }.write_to(&mut wire).unwrap();
+
+    // The whole stream in one push is the reference decode.
+    assert_eq!(decode_and_reencode(&wire, &[wire.len()]), wire);
+
+    // Splitting the pushes at every byte boundary must decode the same
+    // frames — partial headers and partial bodies alike.
+    for cut in 0..=wire.len() {
+        let out = decode_and_reencode(&wire, &[cut, wire.len()]);
+        assert_eq!(out, wire, "split at byte {cut} changed the decode");
+    }
+}
+
+#[test]
+fn truncation_never_panics_and_leaves_the_decoder_pending() {
+    let mut wire = Vec::new();
+    let mut rng = Pcg64::new(6);
+    let sys = random_dd_system::<f64>(&mut rng, 33, 0.5);
+    write_request(&mut wire, 8, &SolveOptions::default(), 0, &sys.into()).unwrap();
+    for cut in 0..wire.len() {
+        let mut dec = FrameDecoder::new(1 << 24);
+        dec.push(&wire[..cut]);
+        assert!(
+            matches!(dec.next_frame(), Ok(None)),
+            "a frame cut at byte {cut} must read as incomplete, not an error"
+        );
+        assert_eq!(dec.pending_bytes(), cut);
+        dec.push(&wire[cut..]);
+        assert!(matches!(dec.next_frame(), Ok(Some(Frame::Request(_)))));
+        assert_eq!(dec.pending_bytes(), 0);
+    }
+}
+
+#[test]
+fn oversized_declared_length_poisons_before_allocation() {
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[0..4].copy_from_slice(&MAGIC);
+    hdr[4] = VERSION;
+    hdr[5] = KIND_PING;
+    hdr[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+    let mut dec = FrameDecoder::new(1 << 16);
+    dec.push(&hdr);
+    assert!(matches!(dec.next_frame(), Err(WireError::TooLarge { .. })));
+    // Poisoned: even a pristine frame afterwards is refused, because
+    // the stream position can no longer be trusted.
+    let mut good = Vec::new();
+    Frame::Ping { nonce: 1 }.write_to(&mut good).unwrap();
+    dec.push(&good);
+    assert!(dec.next_frame().is_err());
+}
+
+/// After the corrupted frame is dealt with, the pristine sentinel frame
+/// must decode — corruption in a framing-preserving region never
+/// desyncs the stream.
+fn expect_sentinel(dec: &mut FrameDecoder) -> Result<(), String> {
+    match dec.next_frame() {
+        Ok(Some(Frame::Ping { nonce: SENTINEL })) => {}
+        other => return Err(format!("sentinel lost after corruption: {other:?}")),
+    }
+    match dec.next_frame() {
+        Ok(None) => Ok(()),
+        other => Err(format!("unexpected trailing decode: {other:?}")),
+    }
+}
+
+/// Run the decoder over a mutated frame followed by the sentinel and
+/// assert the failure mode the mutated region demands.
+fn check_mutated(wire: &[u8], m: &Mutation) -> Result<(), String> {
+    let mut dec = FrameDecoder::new(1 << 24);
+    dec.push(wire);
+    match m.region {
+        Region::Magic => {
+            // Framing destroyed: BadMagic, then poisoned forever.
+            match dec.next_frame() {
+                Err(WireError::BadMagic(_)) => {}
+                other => {
+                    return Err(format!(
+                        "magic flip at offset {}: expected BadMagic, got {other:?}",
+                        m.offset
+                    ))
+                }
+            }
+            if let Ok(Some(f)) = dec.next_frame() {
+                return Err(format!("poisoned decoder yielded a frame: {f:?}"));
+            }
+            Ok(())
+        }
+        Region::Version => {
+            // v2 is two hamming away from v1, so any single flip lands
+            // outside [MIN_VERSION, VERSION]; the length field still
+            // frames the body, so exactly one frame is skipped.
+            match dec.next_frame() {
+                Err(WireError::BadVersion(_)) => {}
+                other => {
+                    return Err(format!(
+                        "version flip bit {}: expected BadVersion, got {other:?}",
+                        m.bit
+                    ))
+                }
+            }
+            expect_sentinel(&mut dec)
+        }
+        Region::Reserved => {
+            // Reserved header bytes must be ignored entirely.
+            match dec.next_frame() {
+                Ok(Some(_)) => {}
+                other => {
+                    return Err(format!(
+                        "reserved flip at offset {}: frame must still decode, got {other:?}",
+                        m.offset
+                    ))
+                }
+            }
+            expect_sentinel(&mut dec)
+        }
+        Region::Kind | Region::Body => {
+            // The flip may land on another decodable frame (a float
+            // payload bit, a kind that happens to fit the body) or be
+            // rejected as Malformed — either way exactly one frame is
+            // consumed and the stream stays in sync.
+            match dec.next_frame() {
+                Ok(Some(_)) | Err(WireError::Malformed(_)) => {}
+                other => {
+                    return Err(format!(
+                        "{:?} flip at offset {}: expected a decode or Malformed, got {other:?}",
+                        m.region, m.offset
+                    ))
+                }
+            }
+            expect_sentinel(&mut dec)
+        }
+        Region::Len => {
+            // A corrupt length field loses the framing by design (the
+            // bytes it mis-spans may swallow the sentinel or read as
+            // garbage headers). The only guarantee is typed errors,
+            // never a panic and never an unbounded loop.
+            for _ in 0..8 {
+                match dec.next_frame() {
+                    Ok(None) => break,
+                    Ok(Some(_)) | Err(_) => {}
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+#[test]
+fn random_bit_flips_fail_structurally() {
+    let gen = |g: &mut Gen| {
+        let frame = match g.rng.below(4) {
+            0 => Frame::Ping {
+                nonce: g.rng.below(1 << 20) as u64,
+            },
+            1 => Frame::Auth {
+                token: "fuzz-token".into(),
+            },
+            2 => Frame::StatsResponse {
+                json: r#"{"completed": 12}"#.into(),
+            },
+            _ => {
+                let n = g.int(2, 48).max(2);
+                let sys = random_dd_system::<f64>(g.rng, n, 0.5);
+                Frame::Request(Request {
+                    id: 7,
+                    opts: SolveOptions::default(),
+                    deadline_ms: 100,
+                    payload: sys.into(),
+                })
+            }
+        };
+        let mut first = Vec::new();
+        frame.write_to(&mut first).unwrap();
+        let mutation = flip(&mut first, g);
+        let mut wire = first;
+        Frame::Ping { nonce: SENTINEL }.write_to(&mut wire).unwrap();
+        (wire, mutation)
+    };
+    forall(base_seed(0x51F2), default_cases(), gen, |(wire, mutation)| {
+        check_mutated(wire, mutation)
+    });
+}
+
+#[test]
+fn every_header_bit_flip_is_handled_structurally() {
+    for offset in 0..HEADER_LEN {
+        for bit in 0..8u8 {
+            let mut first = Vec::new();
+            Frame::Ping { nonce: 0x1234_5678 }.write_to(&mut first).unwrap();
+            first[offset] ^= 1 << bit;
+            let mutation = Mutation {
+                offset,
+                bit,
+                region: classify(offset),
+            };
+            let mut wire = first;
+            Frame::Ping { nonce: SENTINEL }.write_to(&mut wire).unwrap();
+            if let Err(e) = check_mutated(&wire, &mutation) {
+                panic!("header offset {offset} bit {bit}: {e}");
+            }
+        }
+    }
+}
