@@ -150,7 +150,7 @@ fn bench_plan_cache(loop_t: Duration, min_iters: usize) -> (f64, f64, f64) {
 /// `fetch_add` plus atomic stores — the worker must never block or
 /// allocate, so this should sit in the low tens of nanoseconds.
 fn bench_telemetry_record(loop_t: Duration, min_iters: usize) -> f64 {
-    use partisol::plan::Backend;
+    use partisol::plan::{Backend, KernelVariant};
     use partisol::tuner::online::{TelemetrySample, TelemetryStore};
     let store = TelemetryStore::new(1 << 14);
     let mut latency = 0u64;
@@ -161,12 +161,60 @@ fn bench_telemetry_record(loop_t: Duration, min_iters: usize) -> f64 {
             m: 32,
             dtype: Dtype::F64,
             backend: Backend::Native,
+            variant: KernelVariant::Scalar,
             latency_ns: latency,
             batch: 1,
+            robust: false,
         }));
     });
     let t = median(&samples);
     println!("telemetry record:       {:>10.0} ns", t * 1e9);
+    t * 1e9
+}
+
+/// Span-ring recording on the solve hot path (ISSUE-10): one
+/// `fetch_add` ticket plus five relaxed stores under a seqlock stamp.
+/// Tracing is always-on, so this must stay well under 100 ns/span.
+fn bench_trace_record(loop_t: Duration, min_iters: usize) -> f64 {
+    use partisol::obs::{self, Stage};
+    obs::warm();
+    let ring = obs::recorder();
+    let trace = obs::next_trace_id();
+    let mut t_ns = 0u64;
+    let samples = bench_loop(loop_t, min_iters, || {
+        t_ns = t_ns.wrapping_add(31);
+        ring.record(
+            std::hint::black_box(trace),
+            Stage::Exec,
+            t_ns,
+            100,
+            50_000,
+        );
+    });
+    let t = median(&samples);
+    println!("trace span record:      {:>10.0} ns", t * 1e9);
+    t * 1e9
+}
+
+/// Dimension-keyed latency histogram recording (per completed solve):
+/// an index computation plus three relaxed `fetch_add`s.
+fn bench_hist_record(loop_t: Duration, min_iters: usize) -> f64 {
+    use partisol::coordinator::metrics::DimHistograms;
+    use partisol::plan::{Backend, KernelVariant, RobustRoute};
+    let dims = DimHistograms::default();
+    let mut us = 1.0f64;
+    let samples = bench_loop(loop_t, min_iters, || {
+        us += 3.0;
+        dims.record(
+            Backend::Native,
+            KernelVariant::Scalar,
+            RobustRoute::Fast,
+            false,
+            std::hint::black_box(us),
+        );
+    });
+    let t = median(&samples);
+    println!("dim histogram record:   {:>10.0} ns", t * 1e9);
     t * 1e9
 }
 
@@ -181,6 +229,8 @@ fn main() {
     let dispatch = bench_pool_dispatch(loop_t, if smoke { 3 } else { 200 });
     let (client_ns, direct_ns) = bench_client_overhead(loop_t, if smoke { 3 } else { 200 });
     let telemetry_ns = bench_telemetry_record(loop_t, min_iters);
+    let trace_ns = bench_trace_record(loop_t, min_iters);
+    let hist_ns = bench_hist_record(loop_t, min_iters);
 
     let report = obj(vec![
         ("bench", Json::Str("runtime_hotpath".to_string())),
@@ -191,6 +241,8 @@ fn main() {
         ("client_solve_now_ns", Json::Num(client_ns)),
         ("direct_solver_ns", Json::Num(direct_ns)),
         ("telemetry_record_ns", Json::Num(telemetry_ns)),
+        ("trace_record_ns", Json::Num(trace_ns)),
+        ("hist_record_ns", Json::Num(hist_ns)),
         (
             "pool_dispatch_ns",
             obj(dispatch

@@ -106,6 +106,16 @@ impl<'a> SolveSpec<'a> {
         self.opts.compute_residual = compute;
         self
     }
+
+    /// Tag this solve with an explicit trace id (nonzero). Every stage
+    /// span the request produces — locally or across `RemoteClient` /
+    /// `ShardRouter` hops, which carry the id on the wire — lands in
+    /// the span ring under this id, and the response echoes it back.
+    /// Untagged solves (`trace` 0) get a fresh id at admission.
+    pub fn with_trace(mut self, trace: u64) -> Self {
+        self.opts.trace = trace;
+        self
+    }
 }
 
 /// Builder for a [`Client`] (a thin, typed layer over [`Config`]).

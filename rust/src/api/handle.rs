@@ -114,6 +114,7 @@ mod tests {
             simulated_gpu_us: 0.0,
             route: crate::plan::RobustRoute::Fast,
             resolved_robust: false,
+            trace: 0,
         }
     }
 

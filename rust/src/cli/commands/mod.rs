@@ -8,4 +8,5 @@ pub mod report;
 pub mod serve;
 pub mod simulate;
 pub mod solve;
+pub mod trace;
 pub mod tune;

@@ -43,6 +43,10 @@ OPTIONS:
     --conn-quota <q>    per-connection in-flight solve quota; pipelined
                         requests beyond it are deferred, then shed with
                         Backpressure ([net] conn_quota; --listen only)
+    --metrics-addr <a>  serve the Prometheus text exposition on plain
+                        HTTP `GET /metrics` at <a> (host:port; port 0
+                        picks a free port) while listening
+                        ([net] metrics_addr; --listen only)
 ";
 
 pub fn run(argv: &[String]) -> Result<()> {
@@ -79,6 +83,9 @@ pub fn run(argv: &[String]) -> Result<()> {
         }
         cfg.net.event_workers = args.get_usize("event-workers", cfg.net.event_workers)?;
         cfg.net.conn_quota = args.get_usize("conn-quota", cfg.net.conn_quota)?;
+        if let Some(a) = args.get("metrics-addr") {
+            cfg.net.metrics_addr = (!a.is_empty()).then(|| a.to_string());
+        }
         cfg.net.validate()?;
         return run_listener(cfg);
     }
@@ -167,9 +174,12 @@ fn run_listener(cfg: Config) -> Result<()> {
     let net_cfg = cfg.net.clone();
     let client = Arc::new(Client::from_config(cfg)?);
     let server = NetServer::start(client, net_cfg)?;
-    // The bound address on its own line so scripts (and the CI
-    // net-smoke step) can scrape the OS-assigned port.
+    // The bound addresses on their own lines so scripts (and the CI
+    // net-smoke step) can scrape the OS-assigned ports.
     println!("listening on {}", server.local_addr());
+    if let Some(addr) = server.metrics_local_addr() {
+        println!("metrics on {addr}");
+    }
     std::io::stdout().flush().ok();
     server.run_until_shutdown();
 
@@ -181,53 +191,27 @@ fn run_listener(cfg: Config) -> Result<()> {
 }
 
 /// The serving-stack counters `serve --listen` reports on exit.
+///
+/// Driven entirely by [`MetricsSnapshot::fields`] — the same field
+/// list the `Stats` wire frame and the Prometheus exposition render —
+/// so a counter added to the snapshot shows up here (and there) with
+/// no per-surface wiring, and the three outputs cannot drift apart.
 fn print_net_metrics(m: &MetricsSnapshot, online: bool) {
-    println!(
-        "requests           : {} submitted | {} completed | {} failed",
-        m.submitted, m.completed, m.failed
-    );
-    println!(
-        "latency e2e        : mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms",
-        m.mean_e2e_us / 1e3,
-        m.p50_e2e_us / 1e3,
-        m.p99_e2e_us / 1e3
-    );
-    println!(
-        "backends           : pjrt {} | native {} | thomas {} ({} batches)",
-        m.pjrt_solves, m.native_solves, m.thomas_solves, m.batches
-    );
-    println!(
-        "kernels            : scalar {} | soa {} | simd-single {}",
-        m.kernel_scalar, m.kernel_soa, m.kernel_simd_single
-    );
-    println!(
-        "robust routes      : fast {} | pivoting {} | {} re-solves | {} rejected | {} batch retries",
-        m.route_fast, m.route_pivoting, m.robust_resolves, m.robust_rejected, m.robust_batch_retries
-    );
-    println!(
-        "plan cache         : {} hits / {} misses",
-        m.plan_cache_hits, m.plan_cache_misses
-    );
-    println!(
-        "net connections    : {} accepted / {} open",
-        m.net_connections_accepted, m.net_connections_open
-    );
-    println!(
-        "net frames         : {} in / {} out",
-        m.net_frames_in, m.net_frames_out
-    );
-    println!(
-        "net admission      : {} sheds (backpressure) | {} deadlines expired | {} quota-deferred",
-        m.net_sheds, m.net_deadline_expired, m.net_quota_deferred
-    );
-    println!(
-        "net event loop     : {} wakeups | {} partial reads | {} fused | {} chunk frames",
-        m.net_wakeups, m.net_partial_reads, m.net_conn_fused, m.net_chunked_frames
-    );
-    if online {
-        println!(
-            "online tuning      : epoch {} | {} retrains | {} samples recorded / {} dropped",
-            m.model_epoch, m.retrains, m.telemetry_recorded, m.telemetry_dropped
-        );
+    const ONLINE_ONLY: &[&str] = &[
+        "model_epoch",
+        "retrains",
+        "telemetry_recorded",
+        "telemetry_dropped",
+        "explored_solves",
+    ];
+    for (name, value) in m.fields() {
+        if !online && ONLINE_ONLY.contains(&name) {
+            continue;
+        }
+        if value.fract() == 0.0 && value.abs() < 1e15 {
+            println!("  {name:<24} {}", value as i64);
+        } else {
+            println!("  {name:<24} {value:.2}");
+        }
     }
 }

@@ -1,0 +1,113 @@
+//! `partisol trace` — run a traced synthetic workload through the
+//! solve service, then emit the span ring as Chrome-trace JSON (load
+//! it at `chrome://tracing` / Perfetto) and a top-N slow-solve table
+//! with each offender's full [`crate::plan::SolvePlan`].
+
+use crate::api::{Client, SolveSpec};
+use crate::cli::args::Args;
+use crate::config::Config;
+use crate::error::Result;
+use crate::obs;
+use crate::solver::generator::random_dd_system;
+use crate::util::Pcg64;
+
+const HELP: &str = "\
+partisol trace — run a traced workload and dump spans + slow-solve table
+
+OPTIONS:
+    --requests <r>   number of traced solves (default 16)
+    --min-n <N>      smallest SLAE (default 1e3)
+    --max-n <N>      largest SLAE (default 2e5)
+    --top <k>        slow-solve table rows (default 8)
+    --json           print the Chrome-trace JSON document to stdout
+                     (nothing else — pipe it straight into a file or
+                     a JSON tool) instead of the human summary
+    --out <path>     also write the Chrome-trace JSON to <path>
+    --config <path>  TOML config file
+    --seed <s>       workload seed (default 7)
+";
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["help", "json"])?;
+    if args.has("help") {
+        print!("{HELP}");
+        return Ok(());
+    }
+    let requests = args.get_usize("requests", 16)?;
+    let min_n = args.get_usize("min-n", 1_000)?;
+    let max_n = args.get_usize("max-n", 200_000)?;
+    let top = args.get_usize("top", 8)?;
+    let json_only = args.has("json");
+    let seed = args.get_u64("seed", 7)?;
+
+    let cfg = match args.get("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    let client = Client::from_config(cfg)?;
+    // Capture every solve in the slow table regardless of the
+    // configured forensics threshold — this command exists to look.
+    client.service().slow_table().set_gate_us(0);
+
+    let mut rng = Pcg64::new(seed);
+    let mut handles = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let n = (min_n as f64 * ((max_n as f64 / min_n as f64).powf(rng.uniform()))) as usize;
+        let sys = random_dd_system(&mut rng, n.max(4), 0.5);
+        handles.push(client.submit_blocking(SolveSpec::f64(sys))?);
+    }
+    let mut ok = 0usize;
+    for handle in handles {
+        match handle.wait() {
+            Ok(_) => ok += 1,
+            Err(e) => eprintln!("request failed: {e}"),
+        }
+    }
+
+    let mut spans = Vec::new();
+    let dropped = obs::recorder().drain_into(&mut spans);
+    let doc = obs::chrome_trace_json(&spans).to_string_compact();
+    if json_only {
+        println!("{doc}");
+        client.shutdown();
+        return Ok(());
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &doc)
+            .map_err(|e| crate::Error::Cli(format!("write {path}: {e}")))?;
+        println!("chrome trace       : {} spans -> {path}", spans.len());
+    } else {
+        println!("chrome trace       : {} spans (use --out/--json to export)", spans.len());
+    }
+    println!(
+        "requests completed : {ok}/{requests} ({} spans recorded, {dropped} dropped)",
+        spans.len()
+    );
+
+    let slow = client.service().slow_table().top(top);
+    if !slow.is_empty() {
+        println!("slowest solves:");
+        println!(
+            "  {:<18} {:>9} {:>10} {:>9} {:>9} {:>9}  plan",
+            "trace", "n", "e2e µs", "queue µs", "exec µs", "resid µs"
+        );
+        for e in &slow {
+            println!(
+                "  {:#018x} {:>9} {:>10.1} {:>9.1} {:>9.1} {:>9.1}  m={} {:?}/{:?}/{:?} levels={:?}",
+                e.trace,
+                e.n,
+                e.e2e_us,
+                e.queue_us,
+                e.exec_us,
+                e.residual_us,
+                e.plan.m(),
+                e.plan.backend,
+                e.plan.kernel,
+                e.plan.route,
+                e.plan.levels
+            );
+        }
+    }
+    client.shutdown();
+    Ok(())
+}

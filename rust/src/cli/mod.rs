@@ -26,6 +26,8 @@ COMMANDS:
                 (`serve --listen <addr>`: expose it over the wire protocol)
     cluster     run the shard router over N `serve --listen` shards
                 (shape-aware placement, spill, failover, health checks)
+    trace       run a traced workload; dump Chrome-trace JSON of the
+                per-stage span ring plus a top-N slow-solve table
     report      print paper-vs-reproduction summary tables
     help        show this message
 
@@ -56,6 +58,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "occupancy" => commands::occupancy::run(rest),
         "serve" => commands::serve::run(rest),
         "cluster" => commands::cluster::run(rest),
+        "trace" => commands::trace::run(rest),
         "report" => commands::report::run(rest),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");

@@ -97,6 +97,15 @@ impl Driver for RouterDriver {
             match frame {
                 Frame::Request(req) => {
                     let payload = promote_shared(req.payload);
+                    // Trace stitching: keep the client's trace id when
+                    // it sent one (v3), mint one otherwise — either
+                    // way the id rides `opts` to the shard, so the
+                    // router hop's NetEncode/NetDecode spans and the
+                    // shard's solve spans all share it.
+                    let mut opts = req.opts;
+                    if opts.trace == 0 {
+                        opts.trace = crate::obs::next_trace_id();
+                    }
                     let key = ShapeKey::of(payload.n(), payload.dtype());
                     let order = inner.placement.order(key, inner.shards.len());
                     // Available shards keep their placement order;
@@ -108,7 +117,7 @@ impl Driver for RouterDriver {
                     candidates.extend(rest.into_iter().filter(|&s| inner.shards.probeable(s)));
                     let mut job = RoutedJob {
                         id: req.id,
-                        opts: req.opts,
+                        opts,
                         deadline_ms: req.deadline_ms,
                         payload,
                         candidates,
@@ -126,6 +135,10 @@ impl Driver for RouterDriver {
                     let json = router_stats_json(inner).to_string_compact();
                     io.send(&Frame::StatsResponse { json });
                 }
+                Frame::MetricsRequest => {
+                    let text = router_prom_text(inner);
+                    io.send(&Frame::MetricsText { text });
+                }
                 Frame::Shutdown => conn.shutdown_requested = true,
                 // The harness consumes Auth and reassembles Chunk
                 // frames before the driver sees the batch; stray ones
@@ -135,6 +148,7 @@ impl Driver for RouterDriver {
                 | Frame::Error(_)
                 | Frame::Pong { .. }
                 | Frame::StatsResponse { .. }
+                | Frame::MetricsText { .. }
                 | Frame::ShutdownAck => {
                     io.send(&Frame::Error(ErrorReply {
                         id: 0,
@@ -520,4 +534,28 @@ fn router_stats_json(inner: &RouterInner) -> Json {
         ("chunked_frames", num(load(&inner.net.chunked_frames))),
         ("shards", Json::Arr(shard_objs)),
     ])
+}
+
+/// The router's Prometheus exposition: every numeric field of the
+/// stats document as `partisol_router_<name>`, so a scraper pointed at
+/// the router sees routing/spill/ejection counters without speaking
+/// the frame protocol. Per-shard detail stays on the JSON stats frame.
+fn router_prom_text(inner: &RouterInner) -> String {
+    let doc = router_stats_json(inner);
+    let mut out = String::new();
+    if let Json::Obj(fields) = &doc {
+        for (name, value) in fields {
+            if let Json::Num(v) = value {
+                let kind = if name == "connections_open" {
+                    "gauge"
+                } else {
+                    "counter"
+                };
+                out.push_str(&format!(
+                    "# TYPE partisol_router_{name} {kind}\npartisol_router_{name} {v}\n"
+                ));
+            }
+        }
+    }
+    out
 }

@@ -8,6 +8,7 @@ use crate::gpu::spec::{Dtype, GpuCard};
 use crate::net::NetConfig;
 use crate::plan::{KernelConfig, RobustConfig, RobustMode};
 use crate::tuner::online::OnlineTuneConfig;
+use crate::util::logging::Level;
 use std::path::Path;
 
 /// Which optimum-m heuristic the router uses.
@@ -37,6 +38,29 @@ impl HeuristicKind {
             other => Err(Error::Config(format!(
                 "heuristic must be paper|knn|fixed:<m>, got `{other}`"
             ))),
+        }
+    }
+}
+
+/// Logging and slow-solve forensics knobs (`[log]` table).
+#[derive(Clone, Debug)]
+pub struct LogConfig {
+    /// Minimum level emitted (`error|warn|info|debug`). The
+    /// `PARTISOL_LOG` environment variable, when set, wins over this.
+    pub level: Level,
+    /// Solves whose end-to-end latency exceeds this many milliseconds
+    /// are logged at `warn` with their full plan and per-stage
+    /// breakdown, and captured in the service's slow-solve table
+    /// (`partisol trace` drains it). 0 disables the forensics log but
+    /// keeps the table (gated at 0, it self-raises as entries evict).
+    pub slow_solve_ms: u64,
+}
+
+impl Default for LogConfig {
+    fn default() -> Self {
+        LogConfig {
+            level: Level::Info,
+            slow_solve_ms: 500,
         }
     }
 }
@@ -89,6 +113,8 @@ pub struct Config {
     /// admission, the scaled-pivoting fallback route and the post-solve
     /// residual bound that triggers a re-solve.
     pub robust: RobustConfig,
+    /// Logging level and slow-solve forensics (`[log]` table).
+    pub log: LogConfig,
 }
 
 impl Default for Config {
@@ -111,6 +137,7 @@ impl Default for Config {
             cluster: ClusterConfig::default(),
             kernel: KernelConfig::default(),
             robust: RobustConfig::default(),
+            log: LogConfig::default(),
         }
     }
 }
@@ -251,6 +278,12 @@ impl Config {
         if let Some(v) = t.get("net.chunk_bytes") {
             cfg.net.chunk_bytes = int_field(v, "net.chunk_bytes")?;
         }
+        if let Some(v) = t.get("net.metrics_addr") {
+            let addr = v
+                .as_str()
+                .ok_or_else(|| Error::Config("net.metrics_addr must be a string".into()))?;
+            cfg.net.metrics_addr = (!addr.is_empty()).then(|| addr.to_string());
+        }
         if let Some(v) = t.get("net.auth_token") {
             let token = v
                 .as_str()
@@ -349,6 +382,19 @@ impl Config {
             cfg.robust.residual_bound_f32 = v.as_float().ok_or_else(|| {
                 Error::Config("robust.residual_bound_f32 must be a number".into())
             })?;
+        }
+        if let Some(v) = t.get("log.level") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| Error::Config("log.level must be a string".into()))?;
+            cfg.log.level = Level::parse(name).ok_or_else(|| {
+                Error::Config(format!(
+                    "log.level must be error|warn|info|debug, got `{name}`"
+                ))
+            })?;
+        }
+        if let Some(v) = t.get("log.slow_solve_ms") {
+            cfg.log.slow_solve_ms = int_field(v, "log.slow_solve_ms")? as u64;
         }
         if cfg.workers == 0 || cfg.queue_depth == 0 || cfg.max_batch == 0 || cfg.pool_size == 0 {
             return Err(Error::Config(
@@ -578,6 +624,22 @@ mod tests {
         assert_eq!(c.robust.mode, RobustMode::Off);
         assert!(Config::from_str("[robust]\nmode = \"paranoid\"").is_err());
         assert!(Config::from_str("[robust]\nmargin_min = 2.0").is_err());
+    }
+
+    #[test]
+    fn log_and_metrics_knobs_roundtrip() {
+        let c = Config::from_str("[log]\nlevel = \"debug\"\nslow_solve_ms = 50").unwrap();
+        assert_eq!(c.log.level, Level::Debug);
+        assert_eq!(c.log.slow_solve_ms, 50);
+        assert_eq!(Config::default().log.level, Level::Info);
+        assert_eq!(Config::default().log.slow_solve_ms, 500);
+        assert!(Config::from_str("[log]\nlevel = \"verbose\"").is_err());
+        let c = Config::from_str("[net]\nmetrics_addr = \"127.0.0.1:9464\"").unwrap();
+        assert_eq!(c.net.metrics_addr.as_deref(), Some("127.0.0.1:9464"));
+        assert!(Config::default().net.metrics_addr.is_none());
+        // Empty string = unset (explicitly disabling the endpoint).
+        let c = Config::from_str("[net]\nmetrics_addr = \"\"").unwrap();
+        assert!(c.net.metrics_addr.is_none());
     }
 
     #[test]

@@ -1,9 +1,12 @@
-//! Service metrics: atomic counters + a log-bucketed latency histogram.
+//! Service metrics: atomic counters, log-bucketed latency histograms
+//! (aggregate and dimension-keyed), and the point-in-time
+//! [`MetricsSnapshot`] every exposition surface derives from.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Log2-bucketed latency histogram (µs): bucket i covers [2^i, 2^(i+1)).
-const BUCKETS: usize = 32;
+/// Buckets per log2 latency histogram (µs): bucket i covers
+/// [2^i, 2^(i+1)); the last bucket also absorbs everything above it.
+pub const BUCKETS: usize = 32;
 
 #[derive(Default)]
 pub struct Histogram {
@@ -35,19 +38,170 @@ impl Histogram {
     /// Approximate percentile from the bucket histogram (upper bound of
     /// the containing bucket).
     pub fn percentile_us(&self, q: f64) -> f64 {
-        let n = self.count();
-        if n == 0 {
+        self.snapshot().percentile_us(q)
+    }
+
+    /// Point-in-time copy of the bucket counts.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        for (dst, src) in counts.iter_mut().zip(self.counts.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot {
+            counts,
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            n: self.n.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of one [`Histogram`]: what snapshots carry and
+/// the Prometheus renderer exposes as cumulative `le` buckets.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub counts: [u64; BUCKETS],
+    pub sum_us: u64,
+    pub n: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot {
+            counts: [0; BUCKETS],
+            sum_us: 0,
+            n: 0,
+        }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Upper bound of bucket `i`, µs (`[2^i, 2^(i+1))`).
+    pub fn bucket_bound_us(i: usize) -> u64 {
+        1u64 << (i + 1).min(63)
+    }
+
+    /// Fold another histogram into this one (used to check per-label
+    /// cells against the aggregate, and by the Prometheus renderer).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (dst, src) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *dst += src;
+        }
+        self.sum_us += other.sum_us;
+        self.n += other.n;
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.n == 0 {
             return 0.0;
         }
-        let target = (q / 100.0 * n as f64).ceil() as u64;
+        self.sum_us as f64 / self.n as f64
+    }
+
+    /// Approximate percentile: the upper bound of the bucket containing
+    /// the q-th quantile observation.
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q / 100.0 * self.n as f64).ceil() as u64;
         let mut acc = 0u64;
         for (i, c) in self.counts.iter().enumerate() {
-            acc += c.load(Ordering::Relaxed);
+            acc += c;
             if acc >= target {
-                return (1u64 << (i + 1)) as f64;
+                return Self::bucket_bound_us(i) as f64;
             }
         }
         f64::INFINITY
+    }
+}
+
+/// Label values of the dimension-keyed latency histograms, in index
+/// order (see [`DimHistograms`]).
+pub const DIM_BACKENDS: [&str; 3] = ["pjrt", "native", "thomas"];
+pub const DIM_KERNELS: [&str; 3] = ["scalar", "soa", "simd_single"];
+pub const DIM_ROUTES: [&str; 2] = ["fast", "pivoting"];
+pub const DIM_BATCH: [&str; 2] = ["single", "batched"];
+
+/// End-to-end latency histograms keyed on
+/// backend × kernel class × robust route × batch class. All 36 cells
+/// are pre-allocated, so recording is one atomic index away from the
+/// aggregate path — lock-free and allocation-free.
+pub struct DimHistograms {
+    cells: [Histogram; 36],
+}
+
+impl Default for DimHistograms {
+    fn default() -> Self {
+        DimHistograms {
+            cells: std::array::from_fn(|_| Histogram::default()),
+        }
+    }
+}
+
+/// One labeled cell of [`DimHistograms`], as carried by a snapshot.
+#[derive(Clone, Debug)]
+pub struct DimCell {
+    pub backend: &'static str,
+    pub kernel: &'static str,
+    pub route: &'static str,
+    pub batch: &'static str,
+    pub hist: HistogramSnapshot,
+}
+
+impl DimHistograms {
+    fn index(
+        backend: crate::plan::Backend,
+        kernel: crate::plan::KernelVariant,
+        route: crate::plan::RobustRoute,
+        batched: bool,
+    ) -> usize {
+        let b = match backend {
+            crate::plan::Backend::Pjrt => 0,
+            crate::plan::Backend::Native => 1,
+            crate::plan::Backend::Thomas => 2,
+        };
+        let k = match kernel {
+            crate::plan::KernelVariant::Scalar => 0,
+            crate::plan::KernelVariant::SoaLanes(_) => 1,
+            crate::plan::KernelVariant::SimdSingle => 2,
+        };
+        let r = (route == crate::plan::RobustRoute::Pivoting) as usize;
+        ((b * 3 + k) * 2 + r) * 2 + batched as usize
+    }
+
+    /// Record one solve's end-to-end latency under its dimension cell.
+    pub fn record(
+        &self,
+        backend: crate::plan::Backend,
+        kernel: crate::plan::KernelVariant,
+        route: crate::plan::RobustRoute,
+        batched: bool,
+        us: f64,
+    ) {
+        self.cells[Self::index(backend, kernel, route, batched)].record(us);
+    }
+
+    /// Every cell with its labels (including empty ones — renderers
+    /// filter on `hist.n`).
+    pub fn snapshot(&self) -> Vec<DimCell> {
+        let mut out = Vec::with_capacity(self.cells.len());
+        for (bi, backend) in DIM_BACKENDS.iter().enumerate() {
+            for (ki, kernel) in DIM_KERNELS.iter().enumerate() {
+                for (ri, route) in DIM_ROUTES.iter().enumerate() {
+                    for (ti, batch) in DIM_BATCH.iter().enumerate() {
+                        let i = ((bi * 3 + ki) * 2 + ri) * 2 + ti;
+                        out.push(DimCell {
+                            backend,
+                            kernel,
+                            route,
+                            batch,
+                            hist: self.cells[i].snapshot(),
+                        });
+                    }
+                }
+            }
+        }
+        out
     }
 }
 
@@ -95,6 +249,8 @@ pub struct Metrics {
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
     pub e2e_latency: Histogram,
+    /// End-to-end latency keyed on backend × kernel × route × batch.
+    pub dims: DimHistograms,
 }
 
 /// Counters of the network serving layer ([`crate::net::NetServer`]).
@@ -137,20 +293,36 @@ pub struct NetMetrics {
 }
 
 impl NetMetrics {
-    /// Copy the network counters into a snapshot.
+    /// Copy the network counters into a snapshot. The exhaustive
+    /// destructure makes adding a `NetMetrics` counter without
+    /// exporting it a compile error.
     pub fn fill(&self, snap: &mut MetricsSnapshot) {
-        snap.net_connections_accepted = self.connections_accepted.load(Ordering::Relaxed);
-        snap.net_connections_open = self.connections_open.load(Ordering::Relaxed);
-        snap.net_frames_in = self.frames_in.load(Ordering::Relaxed);
-        snap.net_frames_out = self.frames_out.load(Ordering::Relaxed);
-        snap.net_sheds = self.sheds.load(Ordering::Relaxed);
-        snap.net_deadline_expired = self.deadline_expired.load(Ordering::Relaxed);
-        snap.net_unauthorized = self.unauthorized.load(Ordering::Relaxed);
-        snap.net_wakeups = self.wakeups.load(Ordering::Relaxed);
-        snap.net_partial_reads = self.partial_reads.load(Ordering::Relaxed);
-        snap.net_quota_deferred = self.quota_deferred.load(Ordering::Relaxed);
-        snap.net_conn_fused = self.conn_fused.load(Ordering::Relaxed);
-        snap.net_chunked_frames = self.chunked_frames.load(Ordering::Relaxed);
+        let NetMetrics {
+            connections_accepted,
+            connections_open,
+            frames_in,
+            frames_out,
+            sheds,
+            deadline_expired,
+            unauthorized,
+            wakeups,
+            partial_reads,
+            quota_deferred,
+            conn_fused,
+            chunked_frames,
+        } = self;
+        snap.net_connections_accepted = connections_accepted.load(Ordering::Relaxed);
+        snap.net_connections_open = connections_open.load(Ordering::Relaxed);
+        snap.net_frames_in = frames_in.load(Ordering::Relaxed);
+        snap.net_frames_out = frames_out.load(Ordering::Relaxed);
+        snap.net_sheds = sheds.load(Ordering::Relaxed);
+        snap.net_deadline_expired = deadline_expired.load(Ordering::Relaxed);
+        snap.net_unauthorized = unauthorized.load(Ordering::Relaxed);
+        snap.net_wakeups = wakeups.load(Ordering::Relaxed);
+        snap.net_partial_reads = partial_reads.load(Ordering::Relaxed);
+        snap.net_quota_deferred = quota_deferred.load(Ordering::Relaxed);
+        snap.net_conn_fused = conn_fused.load(Ordering::Relaxed);
+        snap.net_chunked_frames = chunked_frames.load(Ordering::Relaxed);
     }
 }
 
@@ -201,16 +373,31 @@ impl ClusterMetrics {
         &self.shards
     }
 
-    /// Copy the cluster totals into a snapshot.
+    /// Copy the cluster totals into a snapshot. Each shard slot is
+    /// destructured exhaustively so a new per-shard counter cannot
+    /// silently miss the export.
     pub fn fill(&self, snap: &mut MetricsSnapshot) {
-        let sum = |f: fn(&ShardCounters) -> &AtomicU64| -> u64 {
-            self.shards.iter().map(|s| f(s).load(Ordering::Relaxed)).sum()
-        };
-        snap.cluster_routed = sum(|s| &s.routed);
-        snap.cluster_spilled = sum(|s| &s.spilled);
-        snap.cluster_failovers = sum(|s| &s.failovers);
-        snap.cluster_ejections = sum(|s| &s.ejections);
-        snap.cluster_readmissions = sum(|s| &s.readmissions);
+        let (mut routed_t, mut spilled_t, mut failovers_t) = (0u64, 0u64, 0u64);
+        let (mut ejections_t, mut readmissions_t) = (0u64, 0u64);
+        for s in &self.shards {
+            let ShardCounters {
+                routed,
+                spilled,
+                failovers,
+                ejections,
+                readmissions,
+            } = s;
+            routed_t += routed.load(Ordering::Relaxed);
+            spilled_t += spilled.load(Ordering::Relaxed);
+            failovers_t += failovers.load(Ordering::Relaxed);
+            ejections_t += ejections.load(Ordering::Relaxed);
+            readmissions_t += readmissions.load(Ordering::Relaxed);
+        }
+        snap.cluster_routed = routed_t;
+        snap.cluster_spilled = spilled_t;
+        snap.cluster_failovers = failovers_t;
+        snap.cluster_ejections = ejections_t;
+        snap.cluster_readmissions = readmissions_t;
         snap.cluster_no_shard = self.no_shard.load(Ordering::Relaxed);
     }
 }
@@ -311,8 +498,16 @@ pub struct MetricsSnapshot {
     pub cluster_no_shard: u64,
     pub mean_e2e_us: f64,
     pub p50_e2e_us: f64,
+    pub p95_e2e_us: f64,
     pub p99_e2e_us: f64,
     pub mean_exec_us: f64,
+    /// Full bucket payloads of the aggregate latency histograms (what
+    /// the Prometheus renderer exposes as cumulative `le` buckets).
+    pub e2e_hist: HistogramSnapshot,
+    pub queue_hist: HistogramSnapshot,
+    pub exec_hist: HistogramSnapshot,
+    /// Dimension-keyed end-to-end latency cells (36 labeled cells).
+    pub dims: Vec<DimCell>,
 }
 
 impl Metrics {
@@ -346,26 +541,56 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
+        // Exhaustive destructure: adding a counter to `Metrics` without
+        // exporting it through the snapshot fails to compile.
+        let Metrics {
+            submitted,
+            completed,
+            failed,
+            rejected_backpressure,
+            rejected_shutdown,
+            pjrt_fallbacks,
+            responses_dropped,
+            batches,
+            pjrt_solves,
+            native_solves,
+            thomas_solves,
+            kernel_scalar,
+            kernel_soa,
+            kernel_simd_single,
+            route_fast,
+            route_pivoting,
+            robust_resolves,
+            robust_rejected,
+            robust_batch_retries,
+            queue_latency,
+            exec_latency,
+            e2e_latency,
+            dims,
+        } = self;
+        let e2e = e2e_latency.snapshot();
+        let queue = queue_latency.snapshot();
+        let exec = exec_latency.snapshot();
         MetricsSnapshot {
-            submitted: self.submitted.load(Ordering::Relaxed),
-            completed: self.completed.load(Ordering::Relaxed),
-            failed: self.failed.load(Ordering::Relaxed),
-            rejected_backpressure: self.rejected_backpressure.load(Ordering::Relaxed),
-            rejected_shutdown: self.rejected_shutdown.load(Ordering::Relaxed),
-            pjrt_fallbacks: self.pjrt_fallbacks.load(Ordering::Relaxed),
-            responses_dropped: self.responses_dropped.load(Ordering::Relaxed),
-            batches: self.batches.load(Ordering::Relaxed),
-            pjrt_solves: self.pjrt_solves.load(Ordering::Relaxed),
-            native_solves: self.native_solves.load(Ordering::Relaxed),
-            thomas_solves: self.thomas_solves.load(Ordering::Relaxed),
-            kernel_scalar: self.kernel_scalar.load(Ordering::Relaxed),
-            kernel_soa: self.kernel_soa.load(Ordering::Relaxed),
-            kernel_simd_single: self.kernel_simd_single.load(Ordering::Relaxed),
-            route_fast: self.route_fast.load(Ordering::Relaxed),
-            route_pivoting: self.route_pivoting.load(Ordering::Relaxed),
-            robust_resolves: self.robust_resolves.load(Ordering::Relaxed),
-            robust_rejected: self.robust_rejected.load(Ordering::Relaxed),
-            robust_batch_retries: self.robust_batch_retries.load(Ordering::Relaxed),
+            submitted: submitted.load(Ordering::Relaxed),
+            completed: completed.load(Ordering::Relaxed),
+            failed: failed.load(Ordering::Relaxed),
+            rejected_backpressure: rejected_backpressure.load(Ordering::Relaxed),
+            rejected_shutdown: rejected_shutdown.load(Ordering::Relaxed),
+            pjrt_fallbacks: pjrt_fallbacks.load(Ordering::Relaxed),
+            responses_dropped: responses_dropped.load(Ordering::Relaxed),
+            batches: batches.load(Ordering::Relaxed),
+            pjrt_solves: pjrt_solves.load(Ordering::Relaxed),
+            native_solves: native_solves.load(Ordering::Relaxed),
+            thomas_solves: thomas_solves.load(Ordering::Relaxed),
+            kernel_scalar: kernel_scalar.load(Ordering::Relaxed),
+            kernel_soa: kernel_soa.load(Ordering::Relaxed),
+            kernel_simd_single: kernel_simd_single.load(Ordering::Relaxed),
+            route_fast: route_fast.load(Ordering::Relaxed),
+            route_pivoting: route_pivoting.load(Ordering::Relaxed),
+            robust_resolves: robust_resolves.load(Ordering::Relaxed),
+            robust_rejected: robust_rejected.load(Ordering::Relaxed),
+            robust_batch_retries: robust_batch_retries.load(Ordering::Relaxed),
             plan_cache_hits: 0,
             plan_cache_misses: 0,
             pool_workers: 0,
@@ -396,11 +621,147 @@ impl Metrics {
             cluster_ejections: 0,
             cluster_readmissions: 0,
             cluster_no_shard: 0,
-            mean_e2e_us: self.e2e_latency.mean_us(),
-            p50_e2e_us: self.e2e_latency.percentile_us(50.0),
-            p99_e2e_us: self.e2e_latency.percentile_us(99.0),
-            mean_exec_us: self.exec_latency.mean_us(),
+            mean_e2e_us: e2e.mean_us(),
+            p50_e2e_us: e2e.percentile_us(50.0),
+            p95_e2e_us: e2e.percentile_us(95.0),
+            p99_e2e_us: e2e.percentile_us(99.0),
+            mean_exec_us: exec.mean_us(),
+            e2e_hist: e2e,
+            queue_hist: queue,
+            exec_hist: exec,
+            dims: dims.snapshot(),
         }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Every scalar counter and gauge of the snapshot as
+    /// `(name, value)` pairs — THE single source the stats wire frame,
+    /// the `serve` shutdown printout and the Prometheus renderer all
+    /// derive from, so the three surfaces cannot drift field-by-field
+    /// again. The exhaustive destructure makes the guarantee
+    /// structural: adding a snapshot field without naming it here (or
+    /// explicitly excluding a non-scalar payload) fails to compile.
+    /// Network counters keep their historical un-prefixed wire names.
+    pub fn fields(&self) -> Vec<(&'static str, f64)> {
+        let MetricsSnapshot {
+            submitted,
+            completed,
+            failed,
+            rejected_backpressure,
+            rejected_shutdown,
+            pjrt_fallbacks,
+            responses_dropped,
+            batches,
+            pjrt_solves,
+            native_solves,
+            thomas_solves,
+            kernel_scalar,
+            kernel_soa,
+            kernel_simd_single,
+            route_fast,
+            route_pivoting,
+            robust_resolves,
+            robust_rejected,
+            robust_batch_retries,
+            plan_cache_hits,
+            plan_cache_misses,
+            pool_workers,
+            pool_tasks,
+            pool_chunks,
+            workspaces_created,
+            workspaces_reused,
+            model_epoch,
+            retrains,
+            telemetry_recorded,
+            telemetry_dropped,
+            explored_solves,
+            net_connections_accepted,
+            net_connections_open,
+            net_frames_in,
+            net_frames_out,
+            net_sheds,
+            net_deadline_expired,
+            net_unauthorized,
+            net_wakeups,
+            net_partial_reads,
+            net_quota_deferred,
+            net_conn_fused,
+            net_chunked_frames,
+            cluster_routed,
+            cluster_spilled,
+            cluster_failovers,
+            cluster_ejections,
+            cluster_readmissions,
+            cluster_no_shard,
+            mean_e2e_us,
+            p50_e2e_us,
+            p95_e2e_us,
+            p99_e2e_us,
+            mean_exec_us,
+            // Non-scalar payloads: exposed as real histograms by the
+            // Prometheus renderer, not as flat fields.
+            e2e_hist: _,
+            queue_hist: _,
+            exec_hist: _,
+            dims: _,
+        } = self;
+        vec![
+            ("submitted", *submitted as f64),
+            ("completed", *completed as f64),
+            ("failed", *failed as f64),
+            ("rejected_backpressure", *rejected_backpressure as f64),
+            ("rejected_shutdown", *rejected_shutdown as f64),
+            ("pjrt_fallbacks", *pjrt_fallbacks as f64),
+            ("responses_dropped", *responses_dropped as f64),
+            ("batches", *batches as f64),
+            ("pjrt_solves", *pjrt_solves as f64),
+            ("native_solves", *native_solves as f64),
+            ("thomas_solves", *thomas_solves as f64),
+            ("kernel_scalar", *kernel_scalar as f64),
+            ("kernel_soa", *kernel_soa as f64),
+            ("kernel_simd_single", *kernel_simd_single as f64),
+            ("route_fast", *route_fast as f64),
+            ("route_pivoting", *route_pivoting as f64),
+            ("robust_resolves", *robust_resolves as f64),
+            ("robust_rejected", *robust_rejected as f64),
+            ("robust_batch_retries", *robust_batch_retries as f64),
+            ("plan_cache_hits", *plan_cache_hits as f64),
+            ("plan_cache_misses", *plan_cache_misses as f64),
+            ("pool_workers", *pool_workers as f64),
+            ("pool_tasks", *pool_tasks as f64),
+            ("pool_chunks", *pool_chunks as f64),
+            ("workspaces_created", *workspaces_created as f64),
+            ("workspaces_reused", *workspaces_reused as f64),
+            ("model_epoch", *model_epoch as f64),
+            ("retrains", *retrains as f64),
+            ("telemetry_recorded", *telemetry_recorded as f64),
+            ("telemetry_dropped", *telemetry_dropped as f64),
+            ("explored_solves", *explored_solves as f64),
+            ("connections_accepted", *net_connections_accepted as f64),
+            ("connections_open", *net_connections_open as f64),
+            ("frames_in", *net_frames_in as f64),
+            ("frames_out", *net_frames_out as f64),
+            ("sheds", *net_sheds as f64),
+            ("deadline_expired", *net_deadline_expired as f64),
+            ("unauthorized", *net_unauthorized as f64),
+            ("wakeups", *net_wakeups as f64),
+            ("partial_reads", *net_partial_reads as f64),
+            ("quota_deferred", *net_quota_deferred as f64),
+            ("conn_fused", *net_conn_fused as f64),
+            ("chunked_frames", *net_chunked_frames as f64),
+            ("cluster_routed", *cluster_routed as f64),
+            ("cluster_spilled", *cluster_spilled as f64),
+            ("cluster_failovers", *cluster_failovers as f64),
+            ("cluster_ejections", *cluster_ejections as f64),
+            ("cluster_readmissions", *cluster_readmissions as f64),
+            ("cluster_no_shard", *cluster_no_shard as f64),
+            ("mean_e2e_us", *mean_e2e_us),
+            ("p50_e2e_us", *p50_e2e_us),
+            ("p95_e2e_us", *p95_e2e_us),
+            ("p99_e2e_us", *p99_e2e_us),
+            ("mean_exec_us", *mean_exec_us),
+        ]
     }
 }
 
@@ -560,5 +921,161 @@ mod tests {
         assert_eq!(s.kernel_scalar, 4);
         assert_eq!(s.kernel_soa, 8, "all lane widths share one counter");
         assert_eq!(s.kernel_simd_single, 2);
+    }
+
+    #[test]
+    fn log_bucket_boundaries_land_on_powers_of_two() {
+        let h = Histogram::default();
+        // Bucket i covers [2^i, 2^(i+1)); sub-µs records clamp to 1µs.
+        for us in [0.2, 1.0, 1.9] {
+            h.record(us); // bucket 0
+        }
+        h.record(2.0); // bucket 1
+        h.record(3.9); // bucket 1
+        h.record(1023.0); // bucket 9
+        h.record(1024.0); // bucket 10
+        h.record(1e18); // clamps into the last bucket
+        let s = h.snapshot();
+        assert_eq!(s.counts[0], 3);
+        assert_eq!(s.counts[1], 2);
+        assert_eq!(s.counts[9], 1);
+        assert_eq!(s.counts[10], 1);
+        assert_eq!(s.counts[BUCKETS - 1], 1);
+        assert_eq!(s.n, 8);
+        assert_eq!(HistogramSnapshot::bucket_bound_us(0), 2);
+        assert_eq!(HistogramSnapshot::bucket_bound_us(9), 1024);
+    }
+
+    #[test]
+    fn percentiles_are_monotone_in_q() {
+        let h = Histogram::default();
+        let mut v = 1.0;
+        for i in 0..500 {
+            h.record(v + (i % 7) as f64);
+            v = (v * 1.03).min(5e6);
+        }
+        let mut last = 0.0;
+        for q in [10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9] {
+            let p = h.percentile_us(q);
+            assert!(
+                p >= last,
+                "p{q} = {p} must not undercut the previous quantile {last}"
+            );
+            last = p;
+        }
+        assert!(last.is_finite());
+    }
+
+    #[test]
+    fn concurrent_records_lose_nothing() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::default());
+        let threads = 4;
+        let per = 10_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        h.record((1 + (t as u64 * per + i) % 4096) as f64);
+                    }
+                })
+            })
+            .collect();
+        for handle in handles {
+            handle.join().unwrap();
+        }
+        let s = h.snapshot();
+        let total = threads as u64 * per;
+        assert_eq!(s.n, total);
+        assert_eq!(
+            s.counts.iter().sum::<u64>(),
+            total,
+            "every record must land in exactly one bucket"
+        );
+    }
+
+    #[test]
+    fn dim_cells_merge_back_to_the_aggregate() {
+        use crate::plan::{Backend, KernelVariant, RobustRoute};
+        let m = Metrics::default();
+        let combos = [
+            (Backend::Native, KernelVariant::Scalar, RobustRoute::Fast, false),
+            (Backend::Native, KernelVariant::SoaLanes(4), RobustRoute::Fast, true),
+            (Backend::Pjrt, KernelVariant::Scalar, RobustRoute::Pivoting, true),
+            (Backend::Thomas, KernelVariant::SimdSingle, RobustRoute::Fast, false),
+        ];
+        for (i, (b, k, r, t)) in combos.iter().enumerate() {
+            let us = 10.0 * (1 << i) as f64;
+            m.dims.record(*b, *k, *r, *t, us);
+            m.e2e_latency.record(us);
+        }
+        let snap = m.snapshot();
+        let mut merged = HistogramSnapshot::default();
+        for cell in &snap.dims {
+            merged.merge(&cell.hist);
+        }
+        assert_eq!(merged, snap.e2e_hist, "per-label cells must sum to the aggregate");
+        let occupied: Vec<_> = snap.dims.iter().filter(|c| c.hist.n > 0).collect();
+        assert_eq!(occupied.len(), 4);
+        let soa = occupied
+            .iter()
+            .find(|c| c.kernel == "soa")
+            .expect("SoaLanes cell");
+        assert_eq!((soa.backend, soa.route, soa.batch), ("native", "fast", "batched"));
+    }
+
+    #[test]
+    fn dim_histograms_give_every_combination_its_own_cell() {
+        use crate::plan::{Backend, KernelVariant, RobustRoute};
+        let m = Metrics::default();
+        for b in [Backend::Pjrt, Backend::Native, Backend::Thomas] {
+            for k in [
+                KernelVariant::Scalar,
+                KernelVariant::SoaLanes(8),
+                KernelVariant::SimdSingle,
+            ] {
+                for r in [RobustRoute::Fast, RobustRoute::Pivoting] {
+                    for t in [false, true] {
+                        m.dims.record(b, k, r, t, 50.0);
+                    }
+                }
+            }
+        }
+        let cells = m.dims.snapshot();
+        assert_eq!(cells.len(), 36);
+        assert!(
+            cells.iter().all(|c| c.hist.n == 1),
+            "each combination must land in exactly one distinct cell"
+        );
+    }
+
+    #[test]
+    fn fields_cover_every_surface_without_duplicates() {
+        let m = Metrics::default();
+        m.completed.fetch_add(17, Ordering::Relaxed);
+        m.e2e_latency.record(300.0);
+        let mut s = m.snapshot();
+        let net = NetMetrics::default();
+        net.sheds.fetch_add(3, Ordering::Relaxed);
+        net.fill(&mut s);
+        ClusterMetrics::new(2).fill(&mut s);
+        let fields = s.fields();
+        let mut names = std::collections::HashSet::new();
+        for (name, _) in &fields {
+            assert!(names.insert(*name), "duplicate exported field {name}");
+        }
+        let get = |k: &str| {
+            fields
+                .iter()
+                .find(|(n, _)| *n == k)
+                .unwrap_or_else(|| panic!("missing exported field {k}"))
+                .1
+        };
+        assert_eq!(get("completed"), 17.0);
+        assert_eq!(get("sheds"), 3.0);
+        assert_eq!(get("cluster_routed"), 0.0);
+        assert!(get("p95_e2e_us") >= 300.0);
+        assert!(get("p99_e2e_us") >= get("p50_e2e_us"));
     }
 }

@@ -65,6 +65,9 @@ pub struct SolveResponse {
     /// re-solved on the pivoting route (residual over bound, or a
     /// singular fast-core error).
     pub resolved_robust: bool,
+    /// The trace id this solve's spans were recorded under (assigned at
+    /// admission when the request did not carry one).
+    pub trace: u64,
 }
 
 #[cfg(test)]
@@ -105,6 +108,7 @@ mod tests {
             simulated_gpu_us: 0.0,
             route: RobustRoute::Fast,
             resolved_robust: false,
+            trace: 0,
         };
         assert_eq!(resp.x.dtype(), Dtype::F32);
         assert_eq!(resp.x.to_f64(), vec![1.0, 2.0]);

@@ -32,6 +32,7 @@ use crate::config::Config;
 use crate::error::{Error, Result};
 use crate::exec::{ExecCtx, WorkerPool};
 use crate::gpu::spec::Dtype;
+use crate::obs::{self, SlowEntry, SlowTable, Stage};
 use crate::plan::{
     BackendAvailability, KernelVariant, NativeBackend, NativeScalar, PjrtBackend, RobustMode,
     RobustRoute, SolveOptions, SolvePlan,
@@ -107,6 +108,9 @@ struct Inner {
     /// Online tuning subsystem (telemetry ring + trainer state + the
     /// planner's hot-swap slot), when `cfg.online.enabled`.
     tuner: Option<Arc<OnlineTuner>>,
+    /// Slow-solve forensics leaderboard: the slowest solves retained
+    /// with their plan and stage breakdown (`partisol trace` drains it).
+    slow: SlowTable,
     /// Callbacks fired after every reply send (success or error): the
     /// network event loop registers one so a completed solve wakes the
     /// worker that owes its reply instead of waiting out a poll tick.
@@ -131,6 +135,11 @@ impl Service {
     /// Start the service. When PJRT artifacts are unavailable and
     /// `cfg.native_fallback` is set, all requests run natively.
     pub fn start(cfg: Config) -> Result<Service> {
+        // `[log] level` applies unless PARTISOL_LOG pinned a level, and
+        // the tracing epoch/ring/id-seed warm up before the first solve
+        // so the hot path's first record allocates nothing.
+        crate::util::logging::apply_config(cfg.log.level);
+        obs::warm();
         // Probe the manifest up front so the planner knows the supported
         // m values and buckets (the device thread re-opens it to build
         // the runtime). `probe_pjrt = false` skips the probe: native only.
@@ -186,6 +195,7 @@ impl Service {
             pool,
             native,
             tuner,
+            slow: SlowTable::new(cfg.log.slow_solve_ms.saturating_mul(1000), 32),
             completion_wakers: Mutex::new(Vec::new()),
         });
 
@@ -232,10 +242,22 @@ impl Service {
     ) -> std::result::Result<mpsc::Receiver<Reply>, Rejected> {
         let inner = &self.inner;
         let mut opts = opts;
+        if opts.trace == 0 {
+            opts.trace = obs::next_trace_id();
+        }
         // Admission rejections travel through the normal reply channel
         // (the request was accepted, its solve failed) — only queue
         // errors use the payload-returning rejection path.
-        if let Some(err) = admit(inner, &payload, &mut opts) {
+        let t_admit = obs::now_ns();
+        let admitted = admit(inner, &payload, &mut opts);
+        obs::recorder().record(
+            opts.trace,
+            Stage::Admit,
+            t_admit,
+            obs::now_ns().saturating_sub(t_admit),
+            payload.n() as u64,
+        );
+        if let Some(err) = admitted {
             inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
             let (tx, rx) = mpsc::channel();
             let _ = tx.send(Err(err));
@@ -255,7 +277,15 @@ impl Service {
             }
             opts
         };
+        let t_plan = obs::now_ns();
         let plan = inner.router.plan(payload.n(), &opts);
+        obs::recorder().record(
+            opts.trace,
+            Stage::Plan,
+            t_plan,
+            obs::now_ns().saturating_sub(t_plan),
+            payload.n() as u64,
+        );
         let (tx, rx) = mpsc::channel();
         {
             let mut q = inner.queue.lock().unwrap();
@@ -325,7 +355,19 @@ impl Service {
         let mut routed = Vec::with_capacity(count);
         for (id, payload, opts) in specs {
             let mut opts = opts;
-            if let Some(err) = admit(inner, &payload, &mut opts) {
+            if opts.trace == 0 {
+                opts.trace = obs::next_trace_id();
+            }
+            let t_admit = obs::now_ns();
+            let admitted = admit(inner, &payload, &mut opts);
+            obs::recorder().record(
+                opts.trace,
+                Stage::Admit,
+                t_admit,
+                obs::now_ns().saturating_sub(t_admit),
+                payload.n() as u64,
+            );
+            if let Some(err) = admitted {
                 // The member is answered (with the admission error)
                 // without ever reaching the queue; the rest of the
                 // group is unaffected.
@@ -334,7 +376,15 @@ impl Service {
                 rxs.push(rx);
                 continue;
             }
+            let t_plan = obs::now_ns();
             let plan = inner.router.plan(payload.n(), &opts);
+            obs::recorder().record(
+                opts.trace,
+                Stage::Plan,
+                t_plan,
+                obs::now_ns().saturating_sub(t_plan),
+                payload.n() as u64,
+            );
             let (tx, rx) = mpsc::channel();
             rxs.push(rx);
             let route = Route::of_plan(&plan);
@@ -421,19 +471,47 @@ impl Service {
             dtype: payload.dtype(),
             ..opts.clone()
         };
-        if let Some(err) = admit(inner, payload, &mut opts) {
+        if opts.trace == 0 {
+            opts.trace = obs::next_trace_id();
+        }
+        let t_admit = obs::now_ns();
+        let admitted = admit(inner, payload, &mut opts);
+        obs::recorder().record(
+            opts.trace,
+            Stage::Admit,
+            t_admit,
+            obs::now_ns().saturating_sub(t_admit),
+            payload.n() as u64,
+        );
+        if let Some(err) = admitted {
             inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
             return Err(err);
         }
         maybe_explore(inner, payload.n(), &mut opts);
+        let t_plan = obs::now_ns();
         let plan = inner.router.plan(payload.n(), &opts);
+        obs::recorder().record(
+            opts.trace,
+            Stage::Plan,
+            t_plan,
+            obs::now_ns().saturating_sub(t_plan),
+            payload.n() as u64,
+        );
         inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
+        let exec_start = obs::now_ns();
         let out = match payload {
             SystemPayload::F64(src) => inline_typed::<f64>(inner, &plan, src, &opts)?,
             SystemPayload::F32(src) => inline_typed::<f32>(inner, &plan, src, &opts)?,
         };
         let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+        obs::recorder().record(
+            opts.trace,
+            Stage::Exec,
+            exec_start,
+            obs::now_ns().saturating_sub(exec_start),
+            payload.n() as u64,
+        );
         record_telemetry(
             inner,
             payload.n(),
@@ -451,7 +529,21 @@ impl Service {
         inner.metrics.queue_latency.record(0.0);
         inner.metrics.exec_latency.record(exec_us);
         inner.metrics.e2e_latency.record(exec_us);
+        inner
+            .metrics
+            .dims
+            .record(out.backend, out.kernel, out.route, false, exec_us);
         inner.metrics.completed.fetch_add(1, Ordering::Relaxed);
+        note_slow(
+            inner,
+            opts.trace,
+            payload.n(),
+            &plan,
+            exec_us,
+            0.0,
+            exec_us,
+            0.0,
+        );
         Ok(SolveResponse {
             id,
             x: out.x,
@@ -464,6 +556,7 @@ impl Service {
             simulated_gpu_us: plan.simulated_gpu_us,
             route: out.route,
             resolved_robust: out.resolved_robust,
+            trace: opts.trace,
         })
     }
 
@@ -531,6 +624,12 @@ impl Service {
     /// The online tuning subsystem, when `cfg.online.enabled`.
     pub fn online_tuner(&self) -> Option<&Arc<OnlineTuner>> {
         self.inner.tuner.as_ref()
+    }
+
+    /// The slow-solve forensics table (`partisol trace` drops its gate
+    /// to capture a whole workload, then drains the leaderboard).
+    pub fn slow_table(&self) -> &SlowTable {
+        &self.inner.slow
     }
 
     /// Stop accepting work, finish the queue, join the threads.
@@ -1210,6 +1309,7 @@ fn respond_ok_typed<T: PayloadScalar + NativeScalar>(
     let mut exec_us = exec_us;
     let mut route = job.plan.route;
     let mut resolved_robust = resolved_robust;
+    let residual_start = obs::now_ns();
     if route == RobustRoute::Fast {
         if let Some(bound) = inner.cfg.robust.residual_bound(job.payload.dtype()) {
             if let Some(src) = T::source(&job.payload) {
@@ -1237,6 +1337,7 @@ fn respond_ok_typed<T: PayloadScalar + NativeScalar>(
             }
         }
     }
+    let mut residual_ns = obs::now_ns().saturating_sub(residual_start);
     record_telemetry(
         inner,
         job.payload.n(),
@@ -1250,11 +1351,24 @@ fn respond_ok_typed<T: PayloadScalar + NativeScalar>(
     );
     inner.metrics.record_route(route, 1);
     let queue_us = (job.enqueued.elapsed().as_secs_f64() * 1e6 - exec_us).max(0.0);
+    let t_res = obs::now_ns();
     let residual = if job.opts.compute_residual {
         T::source(&job.payload).map(|src| max_abs_residual_ref(src.view(), &x))
     } else {
         None
     };
+    residual_ns += obs::now_ns().saturating_sub(t_res);
+    let n = job.payload.n() as u64;
+    let trace = job.opts.trace;
+    let rec = obs::recorder();
+    rec.record(trace, Stage::Residual, residual_start, residual_ns, n);
+    // The queue and exec spans are reconstructed from the enqueue
+    // instant so the trace timeline lines up with the reported µs.
+    let enq_ns = obs::instant_ns(job.enqueued);
+    let queue_ns = (queue_us * 1e3) as u64;
+    rec.record(trace, Stage::Queue, enq_ns, queue_ns, n);
+    rec.record(trace, Stage::Exec, enq_ns + queue_ns, (exec_us * 1e3) as u64, n);
+    let respond_start = obs::now_ns();
     let resp = SolveResponse {
         id: job.id,
         x: T::into_solution(x),
@@ -1267,21 +1381,79 @@ fn respond_ok_typed<T: PayloadScalar + NativeScalar>(
         simulated_gpu_us: job.plan.simulated_gpu_us,
         route,
         resolved_robust,
+        trace,
     };
     inner.metrics.queue_latency.record(resp.queue_us);
     inner.metrics.exec_latency.record(exec_us);
+    let e2e_us = job.enqueued.elapsed().as_secs_f64() * 1e6;
+    inner.metrics.e2e_latency.record(e2e_us);
     inner
         .metrics
-        .e2e_latency
-        .record(job.enqueued.elapsed().as_secs_f64() * 1e6);
+        .dims
+        .record(backend, kernel, route, batch_size > 1, e2e_us);
     inner.metrics.completed.fetch_add(1, Ordering::Relaxed);
+    note_slow(
+        inner,
+        trace,
+        job.payload.n(),
+        &job.plan,
+        e2e_us,
+        queue_us,
+        exec_us,
+        residual_ns as f64 / 1e3,
+    );
     if job.tx.send(Ok(resp)).is_err() {
         inner
             .metrics
             .responses_dropped
             .fetch_add(1, Ordering::Relaxed);
     }
+    rec.record(
+        trace,
+        Stage::Respond,
+        respond_start,
+        obs::now_ns().saturating_sub(respond_start),
+        n,
+    );
     inner.notify_completion();
+}
+
+/// Slow-solve forensics shared by the queued and inline paths: offer
+/// the solve to the retained leaderboard (gated, so a fast solve costs
+/// one atomic load) and, past the `[log] slow_solve_ms` threshold, log
+/// the plan and stage breakdown at warn.
+#[allow(clippy::too_many_arguments)]
+fn note_slow(
+    inner: &Inner,
+    trace: u64,
+    n: usize,
+    plan: &SolvePlan,
+    e2e_us: f64,
+    queue_us: f64,
+    exec_us: f64,
+    residual_us: f64,
+) {
+    inner.slow.offer(e2e_us, || SlowEntry {
+        trace,
+        n,
+        e2e_us,
+        queue_us,
+        exec_us,
+        residual_us,
+        plan: plan.clone(),
+    });
+    let threshold_ms = inner.cfg.log.slow_solve_ms;
+    if threshold_ms > 0 && e2e_us >= threshold_ms as f64 * 1e3 {
+        crate::log_warn!(
+            "slow solve: trace={trace:#018x} n={n} e2e={e2e_us:.0}µs \
+             (queue={queue_us:.0}µs exec={exec_us:.0}µs residual={residual_us:.0}µs) \
+             m={} backend={:?} kernel={:?} route={:?}",
+            plan.m(),
+            plan.backend,
+            plan.kernel,
+            plan.route
+        );
+    }
 }
 
 fn respond_err(inner: &Arc<Inner>, job: Job, err: ApiError) {

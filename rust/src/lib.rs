@@ -45,6 +45,10 @@
 //!   × dtype, so each shard's plan cache and online model specialize),
 //!   spills on backpressure, fails over on shard death, and
 //!   ejects/readmits shards via a ping health monitor.
+//! * [`obs`] — observability: lock-free per-solve span tracing under
+//!   64-bit trace ids that propagate across wire hops, slow-solve
+//!   forensics, and the Chrome-trace / Prometheus exposition renderers
+//!   behind `partisol trace` and the `/metrics` endpoint.
 //! * [`data`] — the paper's published tables embedded as typed datasets.
 //! * [`util`], [`config`], [`cli`], [`testkit`] — offline substrates
 //!   (RNG, stats, JSON, tables, TOML-subset config, CLI, property testing).
@@ -60,6 +64,7 @@ pub mod exec;
 pub mod gpu;
 pub mod ml;
 pub mod net;
+pub mod obs;
 pub mod plan;
 pub mod recursion;
 pub mod runtime;

@@ -37,10 +37,11 @@
 
 use super::stats::StatsSnapshot;
 use super::wire::{
-    encode_request_body, read_frame, reassemble, write_chunked, write_request, Frame, WireError,
-    KIND_REQUEST, MAX_STREAM_BYTES,
+    encode_request_body, read_frame_versioned, reassemble, write_chunked, write_request, Frame,
+    WireError, KIND_REQUEST, MAX_STREAM_BYTES,
 };
 use super::DEFAULT_MAX_FRAME_BYTES;
+use crate::obs::{self, Stage};
 use crate::api::{ApiError, SolveHandle, SolveSpec, SystemPayload, SystemSource};
 use crate::coordinator::service::Reply;
 use crate::coordinator::SolveResponse;
@@ -109,6 +110,7 @@ impl Default for ConnectOptions {
 enum ControlMsg {
     Pong(u64),
     Stats(String),
+    MetricsText(String),
     ShutdownAck,
 }
 
@@ -550,6 +552,17 @@ impl RemoteClient {
         }
     }
 
+    /// Fetch the server's Prometheus text exposition over the wire
+    /// (the same document its `--metrics-addr` HTTP endpoint serves) —
+    /// handy where the scrape port is not reachable but the frame port
+    /// is.
+    pub fn metrics_text(&self) -> Result<String, ApiError> {
+        match self.control_roundtrip(&Frame::MetricsRequest, Duration::from_secs(30))? {
+            ControlMsg::MetricsText(text) => Ok(text),
+            _ => Err(ApiError::Service("unexpected control reply".into())),
+        }
+    }
+
     /// Ask the server to shut down; resolves once it acknowledges.
     pub fn shutdown_server(&self) -> Result<(), ApiError> {
         match self.control_roundtrip(&Frame::Shutdown, Duration::from_secs(30))? {
@@ -642,7 +655,9 @@ impl Drop for RemoteClient {
 /// Write one request, chunking the body when it exceeds the chunk
 /// threshold — this is how a system larger than the server's
 /// `max_frame_bytes` crosses the wire. The size estimate mirrors
-/// [`encode_request_body`] (fixed 28-byte head + four diagonals).
+/// [`encode_request_body`] (fixed 36-byte v3 head + four diagonals).
+/// Traced requests record the encode+write as a `NetEncode` span, the
+/// client-side leg of the stitched cross-hop trace.
 fn send_request<W: Write>(
     w: &mut W,
     id: u64,
@@ -651,13 +666,24 @@ fn send_request<W: Write>(
     payload: &SystemPayload<'static>,
     chunk_bytes: usize,
 ) -> std::io::Result<()> {
-    let est = 28 + 4 * payload.n() * payload.dtype().bytes();
-    if est > chunk_bytes {
+    let t0 = if opts.trace != 0 { obs::now_ns() } else { 0 };
+    let est = 36 + 4 * payload.n() * payload.dtype().bytes();
+    let res = if est > chunk_bytes {
         let body = encode_request_body(id, opts, deadline_ms, payload);
         write_chunked(w, id, KIND_REQUEST, &body, chunk_bytes).map(|_| ())
     } else {
         write_request(w, id, opts, deadline_ms, payload)
+    };
+    if opts.trace != 0 {
+        obs::recorder().record(
+            opts.trace,
+            Stage::NetEncode,
+            t0,
+            obs::now_ns().saturating_sub(t0),
+            payload.n() as u64,
+        );
     }
+    res
 }
 
 /// Promote an owned payload to `Arc`-shared (a move, not a copy) so
@@ -727,8 +753,8 @@ fn read_stream(stream: &TcpStream, shared: &Arc<Shared>) -> ReadExit {
     // reassembly buffer).
     let mut assembly: Option<(u64, u8, Vec<u8>)> = None;
     loop {
-        let decoded = match read_frame(&mut r, shared.opts.max_frame_bytes) {
-            Ok(Frame::Chunk(piece)) => {
+        let decoded = match read_frame_versioned(&mut r, shared.opts.max_frame_bytes) {
+            Ok((ver, Frame::Chunk(piece))) => {
                 let (ps, pk, last) = (piece.stream, piece.inner_kind, piece.last);
                 let a = assembly.get_or_insert_with(|| (ps, pk, Vec::new()));
                 if a.0 != ps || a.1 != pk {
@@ -744,7 +770,10 @@ fn read_stream(stream: &TcpStream, shared: &Arc<Shared>) -> ReadExit {
                     continue;
                 }
                 let (_, kind, buf) = assembly.take().unwrap();
-                match reassemble(kind, &buf) {
+                // The reassembled body parses at the version the chunk
+                // frames' headers carried — the server encodes each
+                // stream uniformly, so the last header is authoritative.
+                match reassemble(ver, kind, &buf) {
                     Ok(frame) => Ok(frame),
                     Err(e) => {
                         crate::log_warn!("net client: chunk stream: {e}; closing");
@@ -752,15 +781,25 @@ fn read_stream(stream: &TcpStream, shared: &Arc<Shared>) -> ReadExit {
                     }
                 }
             }
-            other => other,
+            other => other.map(|(_, frame)| frame),
         };
         match decoded {
             Ok(Frame::Response(resp)) => {
-                let id = resp.id;
+                let t0 = obs::now_ns();
+                let (id, trace, n) = (resp.id, resp.trace, resp.x.len() as u64);
                 let tx = shared.pending.lock().unwrap().remove(&id);
                 shared.replay.lock().unwrap().remove(&id);
                 if let Some(tx) = tx {
                     let _ = tx.send(Ok(resp.into_solve_response()));
+                }
+                if trace != 0 {
+                    obs::recorder().record(
+                        trace,
+                        Stage::NetDecode,
+                        t0,
+                        obs::now_ns().saturating_sub(t0),
+                        n,
+                    );
                 }
                 shared.wake_reply();
             }
@@ -792,6 +831,9 @@ fn read_stream(stream: &TcpStream, shared: &Arc<Shared>) -> ReadExit {
             }
             Ok(Frame::Pong { nonce }) => send_control(shared, ControlMsg::Pong(nonce)),
             Ok(Frame::StatsResponse { json }) => send_control(shared, ControlMsg::Stats(json)),
+            Ok(Frame::MetricsText { text }) => {
+                send_control(shared, ControlMsg::MetricsText(text))
+            }
             Ok(Frame::ShutdownAck) => send_control(shared, ControlMsg::ShutdownAck),
             Ok(_) => {
                 crate::log_warn!("net client: unexpected client-side frame; closing");

@@ -20,8 +20,8 @@
 //! *does* — live behind the [`Driver`] trait.
 
 use super::wire::{
-    reassemble, write_chunked, write_frame, ErrorReply, Frame, FrameDecoder, WireError,
-    KIND_REQUEST, KIND_RESPONSE, KIND_STATS_RESPONSE, MAX_STREAM_BYTES, VERSION,
+    reassemble, write_chunked_v, write_frame_v, ErrorReply, Frame, FrameDecoder, WireError,
+    KIND_METRICS_TEXT, KIND_REQUEST, KIND_RESPONSE, KIND_STATS_RESPONSE, MAX_STREAM_BYTES, VERSION,
 };
 use super::NetConfig;
 use crate::api::ApiError;
@@ -515,20 +515,40 @@ impl ConnIo<'_> {
         self.peer_version
     }
 
-    /// Queue one frame. Bodies larger than `chunk_bytes` are sent as a
-    /// chunk stream when the peer speaks version ≥ 2 (a v1 peer gets
-    /// the plain frame and may reject it against its own frame cap —
-    /// exactly what it would have done before chunking existed).
+    /// Queue one frame, encoded (and header-stamped) at the peer's
+    /// negotiated version so older builds decode it. Bodies larger
+    /// than `chunk_bytes` are sent as a chunk stream when the peer
+    /// speaks version ≥ 2 (a v1 peer gets the plain frame and may
+    /// reject it against its own frame cap — exactly what it would
+    /// have done before chunking existed).
     pub fn send(&mut self, frame: &Frame) {
-        let (kind, body) = frame.encode_parts();
-        let chunkable = matches!(kind, KIND_REQUEST | KIND_RESPONSE | KIND_STATS_RESPONSE);
-        if chunkable && self.peer_version >= 2 && body.len() > self.chunk_bytes {
+        let version = self.peer_version.min(VERSION);
+        let enc_start = crate::obs::now_ns();
+        let (kind, body) = frame.encode_parts_v(version);
+        // Response encode time is a traced stage of its solve.
+        if let Frame::Response(resp) = frame {
+            if resp.trace != 0 {
+                crate::obs::recorder().record(
+                    resp.trace,
+                    crate::obs::Stage::NetEncode,
+                    enc_start,
+                    crate::obs::now_ns().saturating_sub(enc_start),
+                    resp.x.len() as u64,
+                );
+            }
+        }
+        let chunkable = matches!(
+            kind,
+            KIND_REQUEST | KIND_RESPONSE | KIND_STATS_RESPONSE | KIND_METRICS_TEXT
+        );
+        if chunkable && version >= 2 && body.len() > self.chunk_bytes {
             let stream_id = match frame {
                 Frame::Request(r) => r.id,
                 Frame::Response(r) => r.id,
                 _ => 0,
             };
-            match write_chunked(&mut self.out.buf, stream_id, kind, &body, self.chunk_bytes) {
+            match write_chunked_v(&mut self.out.buf, version, stream_id, kind, &body, self.chunk_bytes)
+            {
                 Ok(pieces) => {
                     self.metrics
                         .chunked_frames
@@ -541,7 +561,7 @@ impl ConnIo<'_> {
             }
             return;
         }
-        match write_frame(&mut self.out.buf, kind, &body) {
+        match write_frame_v(&mut self.out.buf, version, kind, &body) {
             Ok(()) => {
                 self.metrics.frames_out.fetch_add(1, Ordering::Relaxed);
             }
@@ -1210,5 +1230,6 @@ fn accept_chunk<C>(
         return Ok(None);
     }
     let done = conn.assembly.take().unwrap();
-    reassemble(done.inner_kind, &done.buf).map(Some)
+    let version = conn.decoder.peer_version().unwrap_or(VERSION);
+    reassemble(version, done.inner_kind, &done.buf).map(Some)
 }

@@ -1,0 +1,183 @@
+//! Minimal plain-HTTP server for the Prometheus scrape endpoint
+//! (`[net] metrics_addr` / `serve --metrics-addr`).
+//!
+//! Scrapers speak HTTP, not the PTSL frame protocol, so the endpoint
+//! gets its own listener and thread instead of riding the frame event
+//! loop (whose decoder poisons a connection on non-PTSL bytes). One
+//! serial accept loop is plenty: a scrape happens every few seconds,
+//! renders one string, and closes — `Connection: close` keeps the
+//! loop trivially correct with no keep-alive state.
+
+use crate::error::{Error, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Produces the exposition text for one scrape. The server stores it
+/// boxed so callers can close over whatever snapshot plumbing they
+/// have (service metrics + net counters, router aggregates, …).
+pub type RenderFn = Box<dyn Fn() -> String + Send + Sync>;
+
+/// The `/metrics` HTTP listener: one background thread, one request
+/// per connection.
+pub struct MetricsHttpServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsHttpServer {
+    /// Bind `addr` and start serving. The render closure runs on the
+    /// serving thread once per scrape.
+    pub fn start(addr: &str, render: RenderFn) -> Result<MetricsHttpServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Service(format!("metrics bind {addr}: {e}")))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| Error::Service(format!("metrics local_addr: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("partisol-metrics-http".into())
+            .spawn(move || serve_loop(listener, stop2, render))
+            .map_err(|e| Error::Service(format!("spawn metrics thread: {e}")))?;
+        crate::log_info!("metrics on http://{local_addr}/metrics");
+        Ok(MetricsHttpServer {
+            local_addr,
+            stop,
+            thread: Some(thread),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting and join the thread.
+    pub fn shutdown(&mut self) {
+        if let Some(t) = self.thread.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // The accept loop is blocked in accept(); a throwaway
+            // self-connection wakes it to observe the flag.
+            let _ = TcpStream::connect(self.local_addr);
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MetricsHttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_loop(listener: TcpListener, stop: Arc<AtomicBool>, render: RenderFn) {
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(x) => x,
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let _ = handle_one(stream, &render);
+    }
+}
+
+/// Read one request head, answer, close. Anything that is not a
+/// well-formed `GET /metrics` gets a 404/405/400 so a misdirected
+/// client learns quickly.
+fn handle_one(mut stream: TcpStream, render: &RenderFn) -> std::io::Result<()> {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let mut buf = [0u8; 4096];
+    let mut head = Vec::new();
+    loop {
+        let k = stream.read(&mut buf)?;
+        if k == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..k]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 16 << 10 {
+            break;
+        }
+    }
+    let request_line = std::str::from_utf8(&head)
+        .unwrap_or("")
+        .lines()
+        .next()
+        .unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let (status, content_type, body) = match (method, path) {
+        ("GET", "/metrics") => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            render(),
+        ),
+        ("GET", _) => ("404 Not Found", "text/plain", "not found\n".to_string()),
+        ("", _) => ("400 Bad Request", "text/plain", "bad request\n".to_string()),
+        _ => (
+            "405 Method Not Allowed",
+            "text/plain",
+            "method not allowed\n".to_string(),
+        ),
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_text_and_404s_elsewhere() {
+        let srv = MetricsHttpServer::start(
+            "127.0.0.1:0",
+            Box::new(|| "# TYPE partisol_up gauge\npartisol_up 1\n".to_string()),
+        )
+        .unwrap();
+        let ok = get(srv.local_addr(), "/metrics");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+        assert!(ok.contains("text/plain; version=0.0.4"));
+        assert!(ok.contains("partisol_up 1\n"));
+        let missing = get(srv.local_addr(), "/other");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+    }
+
+    #[test]
+    fn non_get_is_rejected_and_shutdown_joins() {
+        let mut srv =
+            MetricsHttpServer::start("127.0.0.1:0", Box::new(|| String::new())).unwrap();
+        let addr = srv.local_addr();
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 405"), "{out}");
+        srv.shutdown();
+        // Idempotent: a second shutdown (and the Drop) are no-ops.
+        srv.shutdown();
+    }
+}

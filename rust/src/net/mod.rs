@@ -23,6 +23,7 @@
 
 pub mod client;
 pub mod event_loop;
+pub mod http;
 pub mod server;
 pub mod stats;
 pub mod wire;
@@ -75,6 +76,12 @@ pub struct NetConfig {
     /// split into `Chunk`/`ChunkEnd` streams, which is what lets a
     /// system larger than `max_frame_bytes` cross the wire.
     pub chunk_bytes: usize,
+    /// Prometheus scrape endpoint (`[net] metrics_addr`; CLI
+    /// `--metrics-addr`): when set, the server answers plain-HTTP
+    /// `GET /metrics` on this address with the text exposition of the
+    /// same snapshot the `Stats` wire frame carries. `None` (the
+    /// default) disables the endpoint.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for NetConfig {
@@ -88,6 +95,7 @@ impl Default for NetConfig {
             event_workers: 2,
             conn_quota: 64,
             chunk_bytes: 4 << 20,
+            metrics_addr: None,
         }
     }
 }
@@ -132,6 +140,11 @@ impl NetConfig {
                  net.max_frame_bytes ({})",
                 self.chunk_bytes, self.max_frame_bytes
             )));
+        }
+        if matches!(&self.metrics_addr, Some(a) if a.is_empty()) {
+            return Err(Error::Config(
+                "net.metrics_addr must not be empty (omit it to disable the endpoint)".into(),
+            ));
         }
         Ok(())
     }

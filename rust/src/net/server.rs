@@ -281,6 +281,12 @@ impl Driver for ServerDriver {
                     let json = stats_json(&snap).to_string_compact();
                     io.send(&Frame::StatsResponse { json });
                 }
+                Frame::MetricsRequest => {
+                    let mut snap = self.client.metrics();
+                    self.metrics.fill(&mut snap);
+                    let text = crate::obs::prom::render(&snap);
+                    io.send(&Frame::MetricsText { text });
+                }
                 Frame::Shutdown => {
                     conn.shutdown_requested = true;
                     // Deferred work will never get a token now; fail it
@@ -301,6 +307,7 @@ impl Driver for ServerDriver {
                 | Frame::Error(_)
                 | Frame::Pong { .. }
                 | Frame::StatsResponse { .. }
+                | Frame::MetricsText { .. }
                 | Frame::ShutdownAck => {
                     io.send(&Frame::Error(ErrorReply {
                         id: 0,
@@ -413,13 +420,17 @@ pub struct NetServer {
     client: Arc<Client>,
     metrics: Arc<NetMetrics>,
     event_loop: EventLoop,
+    metrics_http: Option<super::http::MetricsHttpServer>,
 }
 
 impl NetServer {
     /// Bind `cfg.addr` and start serving `client`. With port 0 the OS
     /// assigns a free port — read it back via [`NetServer::local_addr`].
+    /// When `cfg.metrics_addr` is set, a plain-HTTP `GET /metrics`
+    /// listener exposes the same snapshot as Prometheus text.
     pub fn start(client: Arc<Client>, cfg: NetConfig) -> Result<NetServer> {
         let metrics = Arc::new(NetMetrics::default());
+        let metrics_addr = cfg.metrics_addr.clone();
         let driver = Arc::new(ServerDriver {
             client: client.clone(),
             cfg: cfg.clone(),
@@ -433,16 +444,38 @@ impl NetServer {
         client
             .service()
             .add_completion_waker(Arc::new(move || waker.wake()));
+        let metrics_http = match metrics_addr {
+            Some(addr) => {
+                let scrape_client = client.clone();
+                let scrape_net = metrics.clone();
+                Some(super::http::MetricsHttpServer::start(
+                    &addr,
+                    Box::new(move || {
+                        let mut snap = scrape_client.metrics();
+                        scrape_net.fill(&mut snap);
+                        crate::obs::prom::render(&snap)
+                    }),
+                )?)
+            }
+            None => None,
+        };
         Ok(NetServer {
             client,
             metrics,
             event_loop,
+            metrics_http,
         })
     }
 
     /// The bound address (the actual port when `addr` asked for `:0`).
     pub fn local_addr(&self) -> SocketAddr {
         self.event_loop.local_addr()
+    }
+
+    /// The bound `/metrics` HTTP address, when `metrics_addr` was
+    /// configured (resolves port 0).
+    pub fn metrics_local_addr(&self) -> Option<SocketAddr> {
+        self.metrics_http.as_ref().map(|m| m.local_addr())
     }
 
     /// The served client (shared with in-process callers).
@@ -487,39 +520,14 @@ impl NetServer {
     }
 }
 
-/// The stats-frame payload: the full snapshot as flat JSON.
+/// The stats-frame payload: every scalar of the snapshot as flat JSON,
+/// derived from [`MetricsSnapshot::fields`] — the same single source
+/// the Prometheus renderer and the `serve` printout use, so the wire
+/// surface can never drift from them field-by-field again.
 pub(crate) fn stats_json(snap: &MetricsSnapshot) -> Json {
-    let num = |v: u64| Json::Num(v as f64);
-    obj(vec![
-        ("submitted", num(snap.submitted)),
-        ("completed", num(snap.completed)),
-        ("failed", num(snap.failed)),
-        ("rejected_backpressure", num(snap.rejected_backpressure)),
-        ("batches", num(snap.batches)),
-        ("plan_cache_hits", num(snap.plan_cache_hits)),
-        ("plan_cache_misses", num(snap.plan_cache_misses)),
-        ("kernel_scalar", num(snap.kernel_scalar)),
-        ("kernel_soa", num(snap.kernel_soa)),
-        ("kernel_simd_single", num(snap.kernel_simd_single)),
-        ("route_fast", num(snap.route_fast)),
-        ("route_pivoting", num(snap.route_pivoting)),
-        ("robust_resolves", num(snap.robust_resolves)),
-        ("robust_rejected", num(snap.robust_rejected)),
-        ("robust_batch_retries", num(snap.robust_batch_retries)),
-        ("model_epoch", num(snap.model_epoch)),
-        ("mean_e2e_us", Json::Num(snap.mean_e2e_us)),
-        ("p99_e2e_us", Json::Num(snap.p99_e2e_us)),
-        ("connections_accepted", num(snap.net_connections_accepted)),
-        ("connections_open", num(snap.net_connections_open)),
-        ("frames_in", num(snap.net_frames_in)),
-        ("frames_out", num(snap.net_frames_out)),
-        ("sheds", num(snap.net_sheds)),
-        ("deadline_expired", num(snap.net_deadline_expired)),
-        ("unauthorized", num(snap.net_unauthorized)),
-        ("wakeups", num(snap.net_wakeups)),
-        ("partial_reads", num(snap.net_partial_reads)),
-        ("quota_deferred", num(snap.net_quota_deferred)),
-        ("conn_fused", num(snap.net_conn_fused)),
-        ("chunked_frames", num(snap.net_chunked_frames)),
-    ])
+    obj(snap
+        .fields()
+        .into_iter()
+        .map(|(name, value)| (name, Json::Num(value)))
+        .collect())
 }

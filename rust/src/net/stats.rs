@@ -32,6 +32,10 @@ pub struct StatsSnapshot {
     pub robust_batch_retries: u64,
     pub model_epoch: u64,
     pub mean_e2e_us: f64,
+    /// Histogram-derived end-to-end latency percentiles (zero until
+    /// the first completion lands in the histogram).
+    pub p50_e2e_us: f64,
+    pub p95_e2e_us: f64,
     pub p99_e2e_us: f64,
     pub connections_accepted: u64,
     pub connections_open: u64,
@@ -97,6 +101,8 @@ impl StatsSnapshot {
             robust_batch_retries: num("robust_batch_retries"),
             model_epoch: num("model_epoch"),
             mean_e2e_us: fnum("mean_e2e_us"),
+            p50_e2e_us: fnum("p50_e2e_us"),
+            p95_e2e_us: fnum("p95_e2e_us"),
             p99_e2e_us: fnum("p99_e2e_us"),
             connections_accepted: num("connections_accepted"),
             connections_open: num("connections_open"),
@@ -139,7 +145,8 @@ mod tests {
         let s = StatsSnapshot::parse(
             r#"{"completed": 12, "plan_cache_hits": 9, "plan_cache_misses": 3,
                 "mean_e2e_us": 812.5, "sheds": 2, "wakeups": 7,
-                "quota_deferred": 3, "conn_fused": 4, "chunked_frames": 5}"#,
+                "quota_deferred": 3, "conn_fused": 4, "chunked_frames": 5,
+                "p50_e2e_us": 400.0, "p95_e2e_us": 900.0, "p99_e2e_us": 1200.0}"#,
         )
         .unwrap();
         assert_eq!(s.completed, 12);
@@ -151,6 +158,9 @@ mod tests {
         assert_eq!(s.chunked_frames, 5);
         assert_eq!(s.partial_reads, 0);
         assert_eq!(s.mean_e2e_us, 812.5);
+        assert_eq!(s.p50_e2e_us, 400.0);
+        assert_eq!(s.p95_e2e_us, 900.0);
+        assert_eq!(s.p99_e2e_us, 1200.0);
         assert_eq!(s.submitted, 0, "missing fields read as zero");
         assert_eq!(s.plan_cache_hit_rate(), 0.75);
     }

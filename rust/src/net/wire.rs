@@ -31,9 +31,12 @@ use std::io::{ErrorKind, Read, Write};
 
 /// Frame magic: the first four bytes of every valid frame.
 pub const MAGIC: [u8; 4] = *b"PTSL";
-/// Protocol version this build speaks (and stamps on every frame).
-/// Version 2 added the `Chunk`/`ChunkEnd` streaming kinds.
-pub const VERSION: u8 = 2;
+/// Protocol version this build speaks. Version 2 added the
+/// `Chunk`/`ChunkEnd` streaming kinds; version 3 added the request /
+/// response trace-id field and the `MetricsRequest`/`MetricsText`
+/// kinds. Frames sent to an older peer are encoded (and stamped) at
+/// the peer's version, so v1/v2 builds interoperate unchanged.
+pub const VERSION: u8 = 3;
 /// Oldest protocol version this build still accepts. Version-1 peers
 /// interoperate fully as long as they never send chunk frames (they
 /// cannot — the kinds did not exist).
@@ -56,6 +59,10 @@ pub const KIND_AUTH: u8 = 10;
 pub const KIND_CHUNK: u8 = 11;
 /// The final piece of a chunked frame (version ≥ 2).
 pub const KIND_CHUNK_END: u8 = 12;
+/// Ask the peer for its metrics in Prometheus text form (version ≥ 3).
+pub const KIND_METRICS_REQUEST: u8 = 13;
+/// Prometheus text exposition of the sender's metrics (version ≥ 3).
+pub const KIND_METRICS_TEXT: u8 = 14;
 
 /// Cap on a *reassembled* chunk stream. Each individual chunk frame is
 /// still bounded by `max_frame_bytes`; this bounds how much a peer can
@@ -151,6 +158,9 @@ pub struct Response {
     /// True when the fast path's answer was discarded and the system
     /// re-solved on the pivoting route.
     pub resolved_robust: bool,
+    /// Trace id the solve was recorded under (0 when the peer predates
+    /// version 3 or tracing was unset).
+    pub trace: u64,
 }
 
 impl Response {
@@ -168,6 +178,7 @@ impl Response {
             simulated_gpu_us: resp.simulated_gpu_us,
             route: resp.route,
             resolved_robust: resp.resolved_robust,
+            trace: resp.trace,
         }
     }
 
@@ -185,6 +196,7 @@ impl Response {
             simulated_gpu_us: self.simulated_gpu_us,
             route: self.route,
             resolved_robust: self.resolved_robust,
+            trace: self.trace,
         }
     }
 }
@@ -230,6 +242,12 @@ pub enum Frame {
     Auth { token: String },
     /// A piece of a chunked inner frame (version ≥ 2 only).
     Chunk(ChunkPiece),
+    /// Ask the peer to render its metrics as Prometheus text
+    /// (version ≥ 3 only).
+    MetricsRequest,
+    /// Prometheus text exposition of the sender's metrics
+    /// (version ≥ 3 only).
+    MetricsText { text: String },
 }
 
 // ---------------------------------------------------------------------------
@@ -318,14 +336,26 @@ fn parse_backend(code: u8) -> Result<Backend, WireError> {
     }
 }
 
-/// Write one frame: header + body. The caller owns buffering/flushing.
+/// Write one frame at [`VERSION`]. The caller owns buffering/flushing.
 pub(crate) fn write_frame<W: Write>(w: &mut W, kind: u8, body: &[u8]) -> std::io::Result<()> {
+    write_frame_v(w, VERSION, kind, body)
+}
+
+/// Write one frame stamped with an explicit protocol `version` — the
+/// seam for talking down to an older peer (the body must have been
+/// encoded at the same version).
+pub(crate) fn write_frame_v<W: Write>(
+    w: &mut W,
+    version: u8,
+    kind: u8,
+    body: &[u8],
+) -> std::io::Result<()> {
     let len = u32::try_from(body.len()).map_err(|_| {
         std::io::Error::new(ErrorKind::InvalidInput, "frame body exceeds u32 length")
     })?;
     let mut hdr = [0u8; HEADER_LEN];
     hdr[0..4].copy_from_slice(&MAGIC);
-    hdr[4] = VERSION;
+    hdr[4] = version;
     hdr[5] = kind;
     // hdr[6..8] reserved = 0
     hdr[8..12].copy_from_slice(&len.to_le_bytes());
@@ -333,10 +363,23 @@ pub(crate) fn write_frame<W: Write>(w: &mut W, kind: u8, body: &[u8]) -> std::io
     w.write_all(body)
 }
 
+/// Encode a request *body* at [`VERSION`]. See
+/// [`encode_request_body_v`].
+pub fn encode_request_body(
+    id: u64,
+    opts: &SolveOptions,
+    deadline_ms: u32,
+    payload: &SystemPayload<'_>,
+) -> Vec<u8> {
+    encode_request_body_v(VERSION, id, opts, deadline_ms, payload)
+}
+
 /// Encode a request *body* straight from the payload's borrowed views
 /// (no intermediate system copy — the body buffer is the one copy this
-/// direction makes).
-pub fn encode_request_body(
+/// direction makes). `version` selects the body layout: the trace-id
+/// word exists from version 3 on.
+pub fn encode_request_body_v(
+    version: u8,
     id: u64,
     opts: &SolveOptions,
     deadline_ms: u32,
@@ -344,7 +387,7 @@ pub fn encode_request_body(
 ) -> Vec<u8> {
     let n = payload.n();
     let dtype = payload.dtype();
-    let mut body = Vec::with_capacity(32 + 4 * n * dtype.bytes());
+    let mut body = Vec::with_capacity(40 + 4 * n * dtype.bytes());
     put_u64(&mut body, id);
     body.push(dtype_code(dtype));
     body.push(opts.compute_residual as u8);
@@ -352,6 +395,9 @@ pub fn encode_request_body(
     body.push(opts.kernel_override.map(kernel_code).unwrap_or(0));
     put_u32(&mut body, opts.m_override.unwrap_or(0) as u32);
     put_u32(&mut body, deadline_ms);
+    if version >= 3 {
+        put_u64(&mut body, opts.trace);
+    }
     put_u64(&mut body, n as u64);
     match payload {
         SystemPayload::F64(src) => {
@@ -372,7 +418,7 @@ pub fn encode_request_body(
     body
 }
 
-/// Encode a solve request onto a writer.
+/// Encode a solve request onto a writer at [`VERSION`].
 pub fn write_request<W: Write>(
     w: &mut W,
     id: u64,
@@ -380,15 +426,41 @@ pub fn write_request<W: Write>(
     deadline_ms: u32,
     payload: &SystemPayload<'_>,
 ) -> std::io::Result<()> {
-    let body = encode_request_body(id, opts, deadline_ms, payload);
-    write_frame(w, KIND_REQUEST, &body)
+    write_request_v(w, VERSION, id, opts, deadline_ms, payload)
+}
+
+/// Encode a solve request onto a writer, body layout and header stamp
+/// both at `version` (≤ [`VERSION`], ≥ the peer's minimum).
+pub fn write_request_v<W: Write>(
+    w: &mut W,
+    version: u8,
+    id: u64,
+    opts: &SolveOptions,
+    deadline_ms: u32,
+    payload: &SystemPayload<'_>,
+) -> std::io::Result<()> {
+    let body = encode_request_body_v(version, id, opts, deadline_ms, payload);
+    write_frame_v(w, version, KIND_REQUEST, &body)
+}
+
+/// [`write_chunked_v`] at [`VERSION`].
+pub fn write_chunked<W: Write>(
+    w: &mut W,
+    stream: u64,
+    inner_kind: u8,
+    body: &[u8],
+    chunk_bytes: usize,
+) -> std::io::Result<usize> {
+    write_chunked_v(w, VERSION, stream, inner_kind, body, chunk_bytes)
 }
 
 /// Write a body of kind `inner_kind` as a sequence of chunk frames of
-/// at most `chunk_bytes` of data each (version-2 peers only). Returns
-/// the number of chunk frames written.
-pub fn write_chunked<W: Write>(
+/// at most `chunk_bytes` of data each (version ≥ 2 peers only; the
+/// body must have been encoded at the same `version`). Returns the
+/// number of chunk frames written.
+pub fn write_chunked_v<W: Write>(
     w: &mut W,
+    version: u8,
     stream: u64,
     inner_kind: u8,
     body: &[u8],
@@ -408,7 +480,7 @@ pub fn write_chunked<W: Write>(
         })?;
         let mut hdr = [0u8; HEADER_LEN];
         hdr[0..4].copy_from_slice(&MAGIC);
-        hdr[4] = VERSION;
+        hdr[4] = version;
         hdr[5] = kind;
         hdr[8..12].copy_from_slice(&len.to_le_bytes());
         w.write_all(&hdr)?;
@@ -419,22 +491,30 @@ pub fn write_chunked<W: Write>(
 }
 
 /// Parse a fully reassembled chunk stream back into its inner frame.
-pub fn reassemble(inner_kind: u8, body: &[u8]) -> Result<Frame, WireError> {
+/// `version` is the protocol version the chunk frames arrived at (the
+/// inner body was encoded at the same version as its carrier frames).
+pub fn reassemble(version: u8, inner_kind: u8, body: &[u8]) -> Result<Frame, WireError> {
     if inner_kind == KIND_CHUNK || inner_kind == KIND_CHUNK_END {
         return Err(WireError::Malformed("chunk stream nests chunks".into()));
     }
-    parse_body(VERSION, inner_kind, body)
+    parse_body(version, inner_kind, body)
 }
 
 impl Frame {
-    /// Encode this frame into `(kind, body)` parts — the seam the
-    /// event loop uses to decide between a plain frame and a chunked
-    /// stream before any bytes hit the socket.
+    /// [`Frame::encode_parts_v`] at [`VERSION`].
     pub(crate) fn encode_parts(&self) -> (u8, Vec<u8>) {
+        self.encode_parts_v(VERSION)
+    }
+
+    /// Encode this frame into `(kind, body)` parts at `version` — the
+    /// seam the event loop uses to decide between a plain frame and a
+    /// chunked stream before any bytes hit the socket, and to encode
+    /// down to an older peer's body layout.
+    pub(crate) fn encode_parts_v(&self, version: u8) -> (u8, Vec<u8>) {
         match self {
             Frame::Request(req) => (
                 KIND_REQUEST,
-                encode_request_body(req.id, &req.opts, req.deadline_ms, &req.payload),
+                encode_request_body_v(version, req.id, &req.opts, req.deadline_ms, &req.payload),
             ),
             Frame::Response(resp) => {
                 let n = resp.x.len();
@@ -457,6 +537,9 @@ impl Frame {
                 put_f64(&mut body, resp.queue_us);
                 put_f64(&mut body, resp.exec_us);
                 put_f64(&mut body, resp.simulated_gpu_us);
+                if version >= 3 {
+                    put_u64(&mut body, resp.trace);
+                }
                 put_u64(&mut body, n as u64);
                 match &resp.x {
                     Solution::F64(x) => put_f64s(&mut body, x),
@@ -524,10 +607,16 @@ impl Frame {
                 let kind = if piece.last { KIND_CHUNK_END } else { KIND_CHUNK };
                 (kind, body)
             }
+            Frame::MetricsRequest => (KIND_METRICS_REQUEST, Vec::new()),
+            Frame::MetricsText { text } => {
+                let mut body = Vec::with_capacity(4 + text.len());
+                put_str(&mut body, text);
+                (KIND_METRICS_TEXT, body)
+            }
         }
     }
 
-    /// Encode this frame onto a writer.
+    /// Encode this frame onto a writer at [`VERSION`].
     pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
         let (kind, body) = self.encode_parts();
         write_frame(w, kind, &body)
@@ -645,6 +734,16 @@ fn read_header<R: Read>(r: &mut R) -> Result<[u8; HEADER_LEN], WireError> {
 /// Read and decode one frame. `max_frame_bytes` caps the declared body
 /// length; larger frames are rejected before any allocation.
 pub fn read_frame<R: Read>(r: &mut R, max_frame_bytes: usize) -> Result<Frame, WireError> {
+    read_frame_versioned(r, max_frame_bytes).map(|(_, f)| f)
+}
+
+/// [`read_frame`], also returning the protocol version the frame's
+/// header carried — what a client handshake uses to learn how far down
+/// it must encode for this peer.
+pub fn read_frame_versioned<R: Read>(
+    r: &mut R,
+    max_frame_bytes: usize,
+) -> Result<(u8, Frame), WireError> {
     let hdr = read_header(r)?;
     if hdr[0..4] != MAGIC {
         return Err(WireError::BadMagic([hdr[0], hdr[1], hdr[2], hdr[3]]));
@@ -665,7 +764,7 @@ pub fn read_frame<R: Read>(r: &mut R, max_frame_bytes: usize) -> Result<Frame, W
         ErrorKind::UnexpectedEof => WireError::Malformed("connection closed mid-body".into()),
         _ => WireError::Io(e),
     })?;
-    parse_body(hdr[4], kind, &body)
+    parse_body(hdr[4], kind, &body).map(|f| (hdr[4], f))
 }
 
 fn parse_body(version: u8, kind: u8, body: &[u8]) -> Result<Frame, WireError> {
@@ -690,6 +789,7 @@ fn parse_body(version: u8, kind: u8, body: &[u8]) -> Result<Frame, WireError> {
             let kernel_override = parse_kernel(cur.u8()?)?;
             let m_override = cur.u32()? as usize;
             let deadline_ms = cur.u32()?;
+            let trace = if version >= 3 { cur.u64()? } else { 0 };
             let n64 = cur.u64()?;
             let n = usize::try_from(n64)
                 .map_err(|_| WireError::Malformed(format!("system size {n64} too large")))?;
@@ -735,6 +835,7 @@ fn parse_body(version: u8, kind: u8, body: &[u8]) -> Result<Frame, WireError> {
                     // Admission classification is service-side state; it
                     // is never carried on the wire.
                     condition: None,
+                    trace,
                 },
                 deadline_ms,
                 payload,
@@ -763,6 +864,7 @@ fn parse_body(version: u8, kind: u8, body: &[u8]) -> Result<Frame, WireError> {
             let queue_us = cur.f64()?;
             let exec_us = cur.f64()?;
             let simulated_gpu_us = cur.f64()?;
+            let trace = if version >= 3 { cur.u64()? } else { 0 };
             let n64 = cur.u64()?;
             let n = usize::try_from(n64)
                 .map_err(|_| WireError::Malformed(format!("solution size {n64} too large")))?;
@@ -792,6 +894,7 @@ fn parse_body(version: u8, kind: u8, body: &[u8]) -> Result<Frame, WireError> {
                 simulated_gpu_us,
                 route,
                 resolved_robust,
+                trace,
             }))
         }
         KIND_ERROR => {
@@ -854,6 +957,25 @@ fn parse_body(version: u8, kind: u8, body: &[u8]) -> Result<Frame, WireError> {
             cur.finish()?;
             Ok(Frame::Auth { token })
         }
+        KIND_METRICS_REQUEST => {
+            if version < 3 {
+                return Err(WireError::Malformed(
+                    "metrics frames require protocol version 3".into(),
+                ));
+            }
+            cur.finish()?;
+            Ok(Frame::MetricsRequest)
+        }
+        KIND_METRICS_TEXT => {
+            if version < 3 {
+                return Err(WireError::Malformed(
+                    "metrics frames require protocol version 3".into(),
+                ));
+            }
+            let text = cur.string()?;
+            cur.finish()?;
+            Ok(Frame::MetricsText { text })
+        }
         KIND_CHUNK | KIND_CHUNK_END => {
             if version < 2 {
                 return Err(WireError::Malformed(
@@ -868,7 +990,7 @@ fn parse_body(version: u8, kind: u8, body: &[u8]) -> Result<Frame, WireError> {
             if inner_kind == 0
                 || inner_kind == KIND_CHUNK
                 || inner_kind == KIND_CHUNK_END
-                || inner_kind > KIND_CHUNK_END
+                || inner_kind > KIND_METRICS_TEXT
             {
                 return Err(WireError::Malformed(format!(
                     "bad chunk inner kind {inner_kind}"
@@ -1021,6 +1143,7 @@ mod tests {
                 kernel_override: Some(KernelVariant::SoaLanes(8)),
                 compute_residual: true,
                 condition: None,
+                trace: 0xDEAD_BEEF_0042,
             },
             deadline_ms: 2_500,
             payload: SystemPayload::F64(SystemSource::Owned(sys.clone())),
@@ -1033,6 +1156,7 @@ mod tests {
         assert_eq!(out.opts.m_override, Some(16));
         assert_eq!(out.opts.backend_override, Some(Backend::Native));
         assert!(out.opts.compute_residual);
+        assert_eq!(out.opts.trace, 0xDEAD_BEEF_0042, "trace id rides v3 frames");
         assert_eq!(out.deadline_ms, 2_500);
         let SystemPayload::F64(SystemSource::Owned(got)) = out.payload else {
             panic!("expected an owned f64 payload");
@@ -1049,6 +1173,7 @@ mod tests {
                 kernel_override: None,
                 compute_residual: false,
                 condition: None,
+                trace: 0,
             },
             deadline_ms: 0,
             payload: SystemPayload::F32(SystemSource::Owned(sys32.clone())),
@@ -1079,6 +1204,7 @@ mod tests {
             simulated_gpu_us: 42.0,
             route: RobustRoute::Fast,
             resolved_robust: false,
+            trace: 0x7777_0001,
         };
         let Frame::Response(out) = roundtrip(&Frame::Response(resp.clone())) else {
             panic!("expected a response frame");
@@ -1097,6 +1223,7 @@ mod tests {
             simulated_gpu_us: 0.0,
             route: RobustRoute::Pivoting,
             resolved_robust: true,
+            trace: 0,
         };
         let Frame::Response(out) = roundtrip(&Frame::Response(resp32.clone())) else {
             panic!("expected a response frame");
@@ -1205,8 +1332,8 @@ mod tests {
         // panic: corrupt the declared n upward.
         let mut bad = buf.clone();
         // n lives after id(8) + dtype/flags(4) + m_override(4) + deadline(4)
-        // = body offset 20, i.e. buffer offset HEADER_LEN + 20.
-        let off = HEADER_LEN + 20;
+        // + trace(8) = body offset 28, i.e. buffer offset HEADER_LEN + 28.
+        let off = HEADER_LEN + 28;
         bad[off..off + 8].copy_from_slice(&(51u64).to_le_bytes());
         assert!(matches!(
             read_frame(&mut &bad[..], 1 << 24),
@@ -1223,6 +1350,7 @@ mod tests {
         bad.push(0);
         put_u32(&mut bad, 0);
         put_u32(&mut bad, 0);
+        put_u64(&mut bad, 0); // trace
         put_u64(&mut bad, 0); // n = 0
         write_frame(&mut empty, KIND_REQUEST, &bad).unwrap();
         assert!(matches!(
@@ -1281,6 +1409,7 @@ mod tests {
             simulated_gpu_us: 0.0,
             route: RobustRoute::Fast,
             resolved_robust: false,
+            trace: 0xABCD,
         };
         let (kind, body) = Frame::Response(resp.clone()).encode_parts();
         let mut wire = Vec::new();
@@ -1306,7 +1435,7 @@ mod tests {
         }
         assert!(done, "stream must terminate with a ChunkEnd");
         assert_eq!(dec.pending_bytes(), 0);
-        let Frame::Response(out) = reassemble(inner_kind, &stream).unwrap() else {
+        let Frame::Response(out) = reassemble(VERSION, inner_kind, &stream).unwrap() else {
             panic!("expected the inner response");
         };
         assert_eq!(out, resp);
@@ -1378,5 +1507,81 @@ mod tests {
         dec.push(&wire);
         assert!(matches!(dec.next_frame(), Err(WireError::TooLarge { .. })));
         assert!(dec.next_frame().is_err());
+    }
+
+    #[test]
+    fn version_2_encoding_drops_the_trace_field() {
+        // Talking down to a v2 peer: the body layout has no trace word
+        // and the header is stamped v2, so an old build decodes it.
+        let mut rng = Pcg64::new(3);
+        let sys = random_dd_system::<f64>(&mut rng, 9, 0.5);
+        let req = Frame::Request(Request {
+            id: 5,
+            opts: SolveOptions {
+                trace: 0x5555,
+                ..SolveOptions::default()
+            },
+            deadline_ms: 0,
+            payload: SystemPayload::F64(SystemSource::Owned(sys)),
+        });
+        let (kind, body_v3) = req.encode_parts_v(3);
+        let (_, body_v2) = req.encode_parts_v(2);
+        assert_eq!(body_v3.len(), body_v2.len() + 8, "v3 adds one u64");
+        let mut wire = Vec::new();
+        write_frame_v(&mut wire, 2, kind, &body_v2).unwrap();
+        assert_eq!(wire[4], 2, "header stamped at the peer's version");
+        let (ver, frame) = read_frame_versioned(&mut &wire[..], 1 << 24).unwrap();
+        assert_eq!(ver, 2);
+        let Frame::Request(out) = frame else {
+            panic!("expected a request frame");
+        };
+        assert_eq!(out.id, 5);
+        assert_eq!(out.opts.trace, 0, "the trace cannot survive a v2 hop");
+
+        let resp = Frame::Response(Response {
+            id: 6,
+            x: Solution::F64(vec![1.0]),
+            m: 2,
+            backend: Backend::Native,
+            residual: None,
+            queue_us: 0.0,
+            exec_us: 1.0,
+            batch_size: 1,
+            simulated_gpu_us: 0.0,
+            route: RobustRoute::Fast,
+            resolved_robust: false,
+            trace: 0x6666,
+        });
+        let (kind, body) = resp.encode_parts_v(2);
+        let mut wire = Vec::new();
+        write_frame_v(&mut wire, 2, kind, &body).unwrap();
+        let Frame::Response(out) = read_frame(&mut &wire[..], 1 << 24).unwrap() else {
+            panic!("expected a response frame");
+        };
+        assert_eq!(out.trace, 0);
+        assert_eq!(out.id, 6);
+    }
+
+    #[test]
+    fn metrics_frames_roundtrip_and_are_version_gated() {
+        assert!(matches!(
+            roundtrip(&Frame::MetricsRequest),
+            Frame::MetricsRequest
+        ));
+        let text = "# TYPE partisol_completed counter\npartisol_completed 3\n";
+        let Frame::MetricsText { text: out } = roundtrip(&Frame::MetricsText {
+            text: text.to_string(),
+        }) else {
+            panic!("expected a metrics text frame");
+        };
+        assert_eq!(out, text);
+        // The kinds did not exist before v3: a downgraded stamp rejects.
+        let mut wire = Vec::new();
+        Frame::MetricsRequest.write_to(&mut wire).unwrap();
+        wire[4] = 2;
+        assert!(matches!(
+            read_frame(&mut &wire[..], 1 << 20),
+            Err(WireError::Malformed(_))
+        ));
     }
 }

@@ -1,0 +1,166 @@
+//! Observability: per-solve span tracing, slow-solve forensics, and
+//! the Prometheus/Chrome-trace exposition renderers.
+//!
+//! Every solve carries a 64-bit trace id (assigned at admission when
+//! the caller did not set one, propagated verbatim over the wire on
+//! version-3 frames) and each lifecycle stage records a [`Span`] into
+//! the process-wide [`SpanRing`] — a fixed-slot seqlock ring modeled on
+//! the tuner's `TelemetryStore`, so recording is lock-free and
+//! allocation-free on the warmed-up hot path (proved by
+//! `tests/alloc_free.rs`). The ring is deliberately global: a
+//! `RemoteClient`, a `ShardRouter` and a shard service living in one
+//! process all record into it, so one drain stitches a request's hops
+//! into a single trace.
+
+mod chrome;
+pub mod prom;
+mod ring;
+mod slow;
+
+pub use chrome::chrome_trace_json;
+pub use ring::{Span, SpanRing};
+pub use slow::{SlowEntry, SlowTable};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Slots in the process-wide span ring: enough for ~1k in-flight solves
+/// at 8 spans each before drop-oldest kicks in.
+pub const DEFAULT_RING_SLOTS: usize = 8192;
+
+/// The lifecycle stages a traced solve passes through. Discriminants
+/// start at 1 so a zeroed ring slot can never decode as a valid stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Stage {
+    /// Admission: singularity screen + condition estimate.
+    Admit = 1,
+    /// Planner lookup (cache hit or full heuristic pass).
+    Plan = 2,
+    /// Time spent in the bounded service queue.
+    Queue = 3,
+    /// Kernel execution (the batch's wall time for fused members).
+    Exec = 4,
+    /// Residual verification and any robust re-solve it triggers.
+    Residual = 5,
+    /// Telemetry, counters and handle delivery after execution.
+    Respond = 6,
+    /// Wire-frame encoding (client request or server response).
+    NetEncode = 7,
+    /// Wire-frame decoding on either end of a connection.
+    NetDecode = 8,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 8] = [
+        Stage::Admit,
+        Stage::Plan,
+        Stage::Queue,
+        Stage::Exec,
+        Stage::Residual,
+        Stage::Respond,
+        Stage::NetEncode,
+        Stage::NetDecode,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Admit => "admit",
+            Stage::Plan => "plan",
+            Stage::Queue => "queue",
+            Stage::Exec => "exec",
+            Stage::Residual => "residual",
+            Stage::Respond => "respond",
+            Stage::NetEncode => "net_encode",
+            Stage::NetDecode => "net_decode",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        Stage::ALL.into_iter().find(|s| *s as u8 == v)
+    }
+}
+
+/// The process trace epoch all span timestamps are offsets from.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process trace epoch.
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// An [`Instant`] as nanoseconds since the trace epoch (0 when it
+/// predates the epoch).
+pub fn instant_ns(t: Instant) -> u64 {
+    t.checked_duration_since(epoch())
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0)
+}
+
+/// The process-wide span ring every layer records into.
+pub fn recorder() -> &'static SpanRing {
+    static RECORDER: OnceLock<SpanRing> = OnceLock::new();
+    RECORDER.get_or_init(|| SpanRing::new(DEFAULT_RING_SLOTS))
+}
+
+/// Allocate a fresh nonzero trace id: a per-process random-ish seed
+/// (wall clock ⊕ pid, so ids from different processes do not collide)
+/// advanced by a Weyl increment per id.
+pub fn next_trace_id() -> u64 {
+    static SEED: OnceLock<u64> = OnceLock::new();
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let seed = *SEED.get_or_init(|| {
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5eed);
+        t ^ ((std::process::id() as u64) << 48)
+    });
+    let k = COUNTER.fetch_add(1, Ordering::Relaxed);
+    seed.wrapping_add(k.wrapping_mul(0x9E37_79B9_7F4A_7C15)) | 1
+}
+
+/// Force-initialize the epoch, the global ring and the trace-id seed so
+/// the first hot-path record allocates nothing.
+pub fn warm() {
+    let _ = epoch();
+    let _ = recorder();
+    let _ = next_trace_id();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_codes_roundtrip() {
+        for s in Stage::ALL {
+            assert_eq!(Stage::from_u8(s as u8), Some(s), "{}", s.label());
+        }
+        assert_eq!(Stage::from_u8(0), None, "zeroed slots must not decode");
+        assert_eq!(Stage::from_u8(200), None);
+    }
+
+    #[test]
+    fn trace_ids_are_nonzero_and_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            let id = next_trace_id();
+            assert_ne!(id, 0, "0 means 'unset' on the wire");
+            assert!(seen.insert(id), "trace ids must not repeat");
+        }
+    }
+
+    #[test]
+    fn clock_is_monotonic_from_the_epoch() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+        let t = Instant::now();
+        assert!(instant_ns(t) <= now_ns());
+    }
+}

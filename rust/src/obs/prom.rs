@@ -1,0 +1,137 @@
+//! Prometheus text exposition (format version 0.0.4): renders one
+//! [`MetricsSnapshot`] — the same single source the stats wire frame
+//! and the `serve` printout derive from — as scrape-ready text for the
+//! `--metrics-addr` HTTP endpoint and the `MetricsText` wire frame.
+
+use crate::coordinator::metrics::{HistogramSnapshot, MetricsSnapshot, BUCKETS};
+
+/// Exported fields that are point-in-time levels rather than
+/// monotonically increasing totals.
+fn is_gauge(name: &str) -> bool {
+    name.ends_with("_us")
+        || matches!(name, "connections_open" | "pool_workers" | "model_epoch")
+}
+
+fn write_hist(out: &mut String, name: &str, labels: &str, h: &HistogramSnapshot) {
+    use std::fmt::Write;
+    let mut acc = 0u64;
+    for i in 0..BUCKETS {
+        let c = h.counts[i];
+        if c == 0 {
+            continue;
+        }
+        acc += c;
+        let bound = HistogramSnapshot::bucket_bound_us(i);
+        if labels.is_empty() {
+            let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {acc}");
+        } else {
+            let _ = writeln!(out, "{name}_bucket{{{labels},le=\"{bound}\"}} {acc}");
+        }
+    }
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.n);
+        let _ = writeln!(out, "{name}_sum {}", h.sum_us);
+        let _ = writeln!(out, "{name}_count {}", h.n);
+    } else {
+        let _ = writeln!(out, "{name}_bucket{{{labels},le=\"+Inf\"}} {}", h.n);
+        let _ = writeln!(out, "{name}_sum{{{labels}}} {}", h.sum_us);
+        let _ = writeln!(out, "{name}_count{{{labels}}} {}", h.n);
+    }
+}
+
+/// Render a snapshot as Prometheus text. Every scalar from
+/// [`MetricsSnapshot::fields`] becomes `partisol_<name>`; the
+/// aggregate latency histograms and the backend × kernel × route ×
+/// batch dimension cells are exposed as real cumulative-`le` bucket
+/// histograms; the global span ring's accounting rides along so a
+/// scraper can see tracing losses.
+pub fn render(snap: &MetricsSnapshot) -> String {
+    use std::fmt::Write;
+    let mut out = String::with_capacity(4096);
+    for (name, value) in snap.fields() {
+        let kind = if is_gauge(name) { "gauge" } else { "counter" };
+        let _ = writeln!(out, "# TYPE partisol_{name} {kind}");
+        let _ = writeln!(out, "partisol_{name} {value}");
+    }
+    let ring = super::recorder();
+    let _ = writeln!(out, "# TYPE partisol_trace_spans_recorded counter");
+    let _ = writeln!(out, "partisol_trace_spans_recorded {}", ring.recorded());
+    let _ = writeln!(out, "# TYPE partisol_trace_spans_dropped counter");
+    let _ = writeln!(out, "partisol_trace_spans_dropped {}", ring.dropped());
+    for (name, h) in [
+        ("partisol_e2e_latency_us", &snap.e2e_hist),
+        ("partisol_queue_latency_us", &snap.queue_hist),
+        ("partisol_exec_latency_us", &snap.exec_hist),
+    ] {
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        write_hist(&mut out, name, "", h);
+    }
+    let _ = writeln!(out, "# TYPE partisol_solve_latency_us histogram");
+    for cell in &snap.dims {
+        if cell.hist.n == 0 {
+            continue;
+        }
+        let labels = format!(
+            "backend=\"{}\",kernel=\"{}\",route=\"{}\",batch=\"{}\"",
+            cell.backend, cell.kernel, cell.route, cell.batch
+        );
+        write_hist(&mut out, "partisol_solve_latency_us", &labels, &cell.hist);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+    use crate::plan::{Backend, KernelVariant, RobustRoute};
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn renders_counters_gauges_and_labeled_histograms() {
+        let m = Metrics::default();
+        m.completed.fetch_add(5, Ordering::Relaxed);
+        m.e2e_latency.record(100.0);
+        m.e2e_latency.record(900.0);
+        m.dims
+            .record(Backend::Native, KernelVariant::SoaLanes(4), RobustRoute::Fast, true, 100.0);
+        let text = render(&m.snapshot());
+        assert!(text.contains("# TYPE partisol_completed counter\npartisol_completed 5\n"));
+        assert!(text.contains("# TYPE partisol_p99_e2e_us gauge\n"));
+        assert!(text.contains("# TYPE partisol_connections_open gauge\n"));
+        // 100µs lands in [64,128): cumulative le="128" carries 1.
+        assert!(text.contains("partisol_e2e_latency_us_bucket{le=\"128\"} 1\n"));
+        assert!(text.contains("partisol_e2e_latency_us_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("partisol_e2e_latency_us_sum 1000\n"));
+        assert!(text.contains("partisol_e2e_latency_us_count 2\n"));
+        assert!(text.contains(
+            "partisol_solve_latency_us_bucket{backend=\"native\",kernel=\"soa\",\
+             route=\"fast\",batch=\"batched\",le=\"128\"} 1\n"
+        ));
+        assert!(text.contains(
+            "partisol_solve_latency_us_count{backend=\"native\",kernel=\"soa\",\
+             route=\"fast\",batch=\"batched\"} 1\n"
+        ));
+    }
+
+    #[test]
+    fn every_exported_field_appears_exactly_once() {
+        let snap = Metrics::default().snapshot();
+        let text = render(&snap);
+        for (name, _) in snap.fields() {
+            let typed = format!("# TYPE partisol_{name} ");
+            assert_eq!(
+                text.matches(&typed).count(),
+                1,
+                "field {name} must be exposed exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_dim_cells_are_omitted() {
+        let text = render(&Metrics::default().snapshot());
+        assert!(!text.contains("partisol_solve_latency_us_bucket"));
+        assert!(text.contains("# TYPE partisol_solve_latency_us histogram"));
+    }
+}

@@ -1,0 +1,264 @@
+//! Lock-free fixed-slot span ring, seqlock-style per slot (the same
+//! discipline as the tuner's `TelemetryStore`): writers claim a ticket
+//! with one `fetch_add` and never block or allocate; readers detect a
+//! slot that was overwritten mid-read by its sequence stamp and skip
+//! it. Overflow is drop-oldest with exact dropped-span accounting.
+
+use super::Stage;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One recorded stage span of one traced solve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub trace: u64,
+    pub stage: Stage,
+    /// Start offset from the process trace epoch, ns.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// System size the span worked on (0 when not applicable).
+    pub n: u64,
+}
+
+#[derive(Default)]
+struct Slot {
+    /// `2*ticket + 1` while the writer owns the slot, `2*ticket + 2`
+    /// once its fields are published.
+    seq: AtomicU64,
+    trace: AtomicU64,
+    /// Stage byte in the low 8 bits, the span's `n` above them.
+    meta: AtomicU64,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+}
+
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+    /// Read cursor: the next ticket `drain_into` will return.
+    tail: Mutex<u64>,
+    dropped: AtomicU64,
+}
+
+impl SpanRing {
+    pub fn new(slots: usize) -> SpanRing {
+        SpanRing {
+            slots: (0..slots.max(1)).map(|_| Slot::default()).collect(),
+            head: AtomicU64::new(0),
+            tail: Mutex::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total spans ever recorded (including any later overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Spans lost to ring overflow, accumulated at drain time.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Record one span. Lock-free and allocation-free: the ticket from
+    /// `fetch_add` uniquely owns its slot generation, and the odd/even
+    /// sequence stamps let readers detect a concurrent overwrite
+    /// instead of returning torn fields.
+    pub fn record(&self, trace: u64, stage: Stage, start_ns: u64, dur_ns: u64, n: u64) {
+        let ticket = self.head.fetch_add(1, Ordering::AcqRel);
+        let slot = &self.slots[(ticket % self.slots.len() as u64) as usize];
+        slot.seq.store(2 * ticket + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        slot.trace.store(trace, Ordering::Relaxed);
+        slot.meta
+            .store((stage as u64) | (n << 8), Ordering::Relaxed);
+        slot.start_ns.store(start_ns, Ordering::Relaxed);
+        slot.dur_ns.store(dur_ns, Ordering::Relaxed);
+        slot.seq.store(2 * ticket + 2, Ordering::Release);
+    }
+
+    /// Read ticket `t`'s slot, `None` if a concurrent writer owns or
+    /// has overwritten it.
+    fn read_slot(&self, ticket: u64) -> Option<Span> {
+        let slot = &self.slots[(ticket % self.slots.len() as u64) as usize];
+        let want = 2 * ticket + 2;
+        if slot.seq.load(Ordering::Acquire) != want {
+            return None;
+        }
+        let trace = slot.trace.load(Ordering::Relaxed);
+        let meta = slot.meta.load(Ordering::Relaxed);
+        let start_ns = slot.start_ns.load(Ordering::Relaxed);
+        let dur_ns = slot.dur_ns.load(Ordering::Relaxed);
+        fence(Ordering::Acquire);
+        if slot.seq.load(Ordering::Relaxed) != want {
+            return None;
+        }
+        let stage = Stage::from_u8((meta & 0xff) as u8)?;
+        Some(Span {
+            trace,
+            stage,
+            start_ns,
+            dur_ns,
+            n: meta >> 8,
+        })
+    }
+
+    /// Move every span recorded since the previous drain into `out`
+    /// (oldest first), advancing the read cursor. Returns how many
+    /// spans overflow discarded since the previous drain (also added
+    /// to [`SpanRing::dropped`]).
+    pub fn drain_into(&self, out: &mut Vec<Span>) -> u64 {
+        let mut tail = self.tail.lock().unwrap();
+        let head = self.head.load(Ordering::Acquire);
+        let oldest = head.saturating_sub(self.slots.len() as u64);
+        let mut dropped = 0;
+        let start = if *tail < oldest {
+            dropped = oldest - *tail;
+            oldest
+        } else {
+            *tail
+        };
+        self.dropped.fetch_add(dropped, Ordering::Relaxed);
+        for t in start..head {
+            if let Some(s) = self.read_slot(t) {
+                out.push(s);
+            }
+        }
+        *tail = head;
+        dropped
+    }
+
+    /// Copy the currently buffered spans into `out` (oldest first)
+    /// without advancing the read cursor. Slots a concurrent writer is
+    /// mid-overwrite on are skipped, never returned torn.
+    pub fn snapshot_into(&self, out: &mut Vec<Span>) {
+        let tail = *self.tail.lock().unwrap();
+        let head = self.head.load(Ordering::Acquire);
+        let oldest = head.saturating_sub(self.slots.len() as u64);
+        for t in tail.max(oldest)..head {
+            if let Some(s) = self.read_slot(t) {
+                out.push(s);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_drains_in_order() {
+        let ring = SpanRing::new(16);
+        for i in 0..5u64 {
+            ring.record(100 + i, Stage::Exec, i * 10, 5, 64);
+        }
+        let mut out = Vec::new();
+        assert_eq!(ring.drain_into(&mut out), 0);
+        assert_eq!(out.len(), 5);
+        for (i, s) in out.iter().enumerate() {
+            assert_eq!(s.trace, 100 + i as u64);
+            assert_eq!(s.stage, Stage::Exec);
+            assert_eq!(s.start_ns, i as u64 * 10);
+            assert_eq!(s.dur_ns, 5);
+            assert_eq!(s.n, 64);
+        }
+        out.clear();
+        ring.drain_into(&mut out);
+        assert!(out.is_empty(), "a drain consumes what it returns");
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_accounts_for_it() {
+        let ring = SpanRing::new(8);
+        for i in 0..20u64 {
+            ring.record(i, Stage::Plan, i, 1, 0);
+        }
+        let mut out = Vec::new();
+        let dropped = ring.drain_into(&mut out);
+        assert_eq!(dropped, 12, "20 records into 8 slots drop the oldest 12");
+        assert_eq!(ring.dropped(), 12);
+        assert_eq!(ring.recorded(), 20);
+        assert_eq!(out.len(), 8);
+        assert_eq!(out.first().unwrap().trace, 12, "drop-oldest keeps the tail");
+        assert_eq!(out.last().unwrap().trace, 19);
+    }
+
+    #[test]
+    fn snapshot_is_non_destructive() {
+        let ring = SpanRing::new(8);
+        ring.record(1, Stage::Admit, 0, 1, 4);
+        ring.record(1, Stage::Exec, 1, 2, 4);
+        let mut a = Vec::new();
+        ring.snapshot_into(&mut a);
+        let mut b = Vec::new();
+        ring.snapshot_into(&mut b);
+        assert_eq!(a, b);
+        let mut d = Vec::new();
+        assert_eq!(ring.drain_into(&mut d), 0);
+        assert_eq!(d, a, "the drain still sees everything the snapshots saw");
+    }
+
+    #[test]
+    fn large_n_survives_the_packed_meta_word() {
+        let ring = SpanRing::new(2);
+        let n = (1u64 << 40) + 17;
+        ring.record(9, Stage::Residual, 3, 4, n);
+        let mut out = Vec::new();
+        ring.drain_into(&mut out);
+        assert_eq!(out[0].n, n);
+        assert_eq!(out[0].stage, Stage::Residual);
+    }
+
+    #[test]
+    fn concurrent_recorders_never_yield_torn_spans() {
+        use std::sync::Arc;
+        let ring = Arc::new(SpanRing::new(64));
+        let writers = 4;
+        let per = 5_000u64;
+        let handles: Vec<_> = (0..writers)
+            .map(|w| {
+                let ring = Arc::clone(&ring);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        // Tie every field to the writer id so a torn
+                        // read (fields from two writers) is detectable.
+                        let tag = (w as u64) << 32 | i;
+                        ring.record(tag, Stage::Exec, tag, tag, tag);
+                    }
+                })
+            })
+            .collect();
+        let mut seen = 0u64;
+        let mut out = Vec::new();
+        for _ in 0..200 {
+            out.clear();
+            ring.drain_into(&mut out);
+            for s in &out {
+                assert_eq!(s.start_ns, s.trace, "torn slot leaked");
+                assert_eq!(s.dur_ns, s.trace);
+                assert_eq!(s.n, s.trace);
+            }
+            seen += out.len() as u64;
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        out.clear();
+        ring.drain_into(&mut out);
+        for s in &out {
+            assert_eq!(s.start_ns, s.trace);
+        }
+        seen += out.len() as u64;
+        let total = writers as u64 * per;
+        assert_eq!(ring.recorded(), total);
+        // Every recorded span was either returned intact, dropped by
+        // overflow, or skipped as torn — nothing double-counted.
+        assert!(seen <= total);
+        assert!(seen + ring.dropped() <= total);
+    }
+}

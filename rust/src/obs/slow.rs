@@ -1,0 +1,160 @@
+//! Slow-solve forensics: a small bounded leaderboard of the slowest
+//! solves, each retained with its full [`SolvePlan`] and per-stage
+//! breakdown so "where did this one slow solve spend its time" is
+//! answerable after the fact (`partisol trace` prints it).
+
+use crate::plan::SolvePlan;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One retained slow solve.
+#[derive(Clone, Debug)]
+pub struct SlowEntry {
+    pub trace: u64,
+    pub n: usize,
+    pub e2e_us: f64,
+    pub queue_us: f64,
+    pub exec_us: f64,
+    /// Residual verification + robust re-solve time, µs.
+    pub residual_us: f64,
+    pub plan: SolvePlan,
+}
+
+/// Top-N slowest-solve table. Admission is a single relaxed atomic
+/// compare against `gate_us`, so the fast path never locks or
+/// allocates: the entry closure only runs for solves that clear the
+/// gate, and once the table is full the gate self-raises to the
+/// table's minimum.
+pub struct SlowTable {
+    gate_us: AtomicU64,
+    cap: usize,
+    entries: Mutex<Vec<SlowEntry>>,
+}
+
+impl SlowTable {
+    pub fn new(floor_us: u64, cap: usize) -> SlowTable {
+        SlowTable {
+            gate_us: AtomicU64::new(floor_us),
+            cap: cap.max(1),
+            entries: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Current admission bound, µs.
+    pub fn gate_us(&self) -> u64 {
+        self.gate_us.load(Ordering::Relaxed)
+    }
+
+    /// Reset the admission bound (e.g. `partisol trace` drops it to 0
+    /// so every solve of its workload is eligible).
+    pub fn set_gate_us(&self, v: u64) {
+        self.gate_us.store(v, Ordering::Relaxed);
+    }
+
+    /// Offer a solve. `make` is only invoked — and memory only
+    /// allocated — when `e2e_us` clears the gate and beats the table's
+    /// current minimum.
+    pub fn offer(&self, e2e_us: f64, make: impl FnOnce() -> SlowEntry) {
+        if e2e_us < self.gate_us.load(Ordering::Relaxed) as f64 {
+            return;
+        }
+        let mut entries = self.entries.lock().unwrap();
+        if entries.len() >= self.cap {
+            let (i, min) = entries
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.e2e_us.total_cmp(&b.1.e2e_us))
+                .map(|(i, e)| (i, e.e2e_us))
+                .unwrap();
+            if e2e_us <= min {
+                // Full of slower solves already: raise the gate so
+                // future offers at this latency skip the lock too.
+                self.gate_us.fetch_max(min as u64, Ordering::Relaxed);
+                return;
+            }
+            entries.swap_remove(i);
+        }
+        entries.push(make());
+    }
+
+    /// The `k` slowest retained solves, slowest first.
+    pub fn top(&self, k: usize) -> Vec<SlowEntry> {
+        let mut v = self.entries.lock().unwrap().clone();
+        v.sort_by(|a, b| b.e2e_us.total_cmp(&a.e2e_us));
+        v.truncate(k);
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::spec::Dtype;
+    use crate::plan::{Backend, KernelVariant, RobustRoute};
+
+    fn entry(trace: u64, e2e_us: f64) -> SlowEntry {
+        SlowEntry {
+            trace,
+            n: 128,
+            e2e_us,
+            queue_us: 1.0,
+            exec_us: e2e_us - 2.0,
+            residual_us: 1.0,
+            plan: SolvePlan::for_batch(
+                128,
+                8,
+                Dtype::F64,
+                Backend::Native,
+                KernelVariant::Scalar,
+                RobustRoute::Fast,
+            ),
+        }
+    }
+
+    #[test]
+    fn gate_rejects_fast_solves_without_building_entries() {
+        let t = SlowTable::new(1_000, 4);
+        t.offer(10.0, || panic!("under-gate offers must not build entries"));
+        assert!(t.is_empty());
+        t.offer(2_000.0, || entry(1, 2_000.0));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn keeps_the_top_n_and_raises_the_gate_when_full() {
+        let t = SlowTable::new(0, 3);
+        for (trace, us) in [(1, 50.0), (2, 300.0), (3, 100.0), (4, 200.0)] {
+            t.offer(us, || entry(trace, us));
+        }
+        let top = t.top(10);
+        assert_eq!(
+            top.iter().map(|e| e.trace).collect::<Vec<_>>(),
+            vec![2, 4, 3],
+            "slowest first; the 50µs solve was evicted"
+        );
+        // A solve at/below the retained minimum bounces and lifts the gate.
+        t.offer(90.0, || panic!("must not beat the table minimum"));
+        assert_eq!(t.gate_us(), 100);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn top_truncates_and_sorts() {
+        let t = SlowTable::new(0, 8);
+        for (trace, us) in [(1, 5.0), (2, 9.0), (3, 7.0)] {
+            t.offer(us, || entry(trace, us));
+        }
+        let top = t.top(2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].trace, 2);
+        assert_eq!(top[1].trace, 3);
+    }
+}

@@ -356,6 +356,11 @@ pub struct SolveOptions {
     /// service-side before planning; never carried on the wire). `None`
     /// plans like [`ConditionClass::Well`].
     pub condition: Option<ConditionClass>,
+    /// Trace id the solve's spans are recorded under. 0 means unset:
+    /// the service assigns one at admission. Propagated verbatim on
+    /// version-3 wire frames so client → router → shard hops stitch
+    /// into one trace.
+    pub trace: u64,
 }
 
 impl Default for SolveOptions {
@@ -367,6 +372,7 @@ impl Default for SolveOptions {
             kernel_override: None,
             compute_residual: true,
             condition: None,
+            trace: 0,
         }
     }
 }

@@ -1,7 +1,11 @@
-//! Minimal leveled logger controlled by `PARTISOL_LOG` (error|warn|info|debug).
+//! Minimal leveled logger. The level comes from the `PARTISOL_LOG`
+//! environment variable (error|warn|info|debug) when set; otherwise
+//! from the `[log] level` config knob via [`apply_config`]. The env
+//! var always wins so a one-off `PARTISOL_LOG=debug partisol serve`
+//! overrides whatever the config file says.
 
 use std::io::Write;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::OnceLock;
 
 #[derive(Clone, Copy, Debug, PartialEq, PartialOrd)]
@@ -12,20 +16,51 @@ pub enum Level {
     Debug = 3,
 }
 
+impl Level {
+    /// Parse a config/env level name. Unknown names get `None` so the
+    /// caller can decide between erroring (config) and defaulting (env).
+    pub fn parse(name: &str) -> Option<Level> {
+        match name {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
 static LEVEL: AtomicU8 = AtomicU8::new(2); // info
+static ENV_PINNED: AtomicBool = AtomicBool::new(false);
 static INIT: OnceLock<()> = OnceLock::new();
 
 /// Initialize from the environment (idempotent).
 pub fn init() {
     INIT.get_or_init(|| {
-        let lvl = match std::env::var("PARTISOL_LOG").as_deref() {
-            Ok("error") => Level::Error,
-            Ok("warn") => Level::Warn,
-            Ok("debug") => Level::Debug,
-            _ => Level::Info,
-        };
-        LEVEL.store(lvl as u8, Ordering::Relaxed);
+        if let Ok(name) = std::env::var("PARTISOL_LOG") {
+            let lvl = Level::parse(&name).unwrap_or(Level::Info);
+            LEVEL.store(lvl as u8, Ordering::Relaxed);
+            ENV_PINNED.store(true, Ordering::Relaxed);
+        }
     });
+}
+
+/// Apply the `[log] level` config value. A `PARTISOL_LOG` override in
+/// the environment is pinned and wins; the call is then a no-op.
+pub fn apply_config(lvl: Level) {
+    init();
+    if !ENV_PINNED.load(Ordering::Relaxed) {
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    }
 }
 
 pub fn set_level(lvl: Level) {
@@ -48,6 +83,14 @@ pub fn log(lvl: Level, module: &str, msg: std::fmt::Arguments) {
         let mut err = std::io::stderr().lock();
         let _ = writeln!(err, "[{tag}] {module}: {msg}");
     }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*))
+    };
 }
 
 #[macro_export]
@@ -85,5 +128,13 @@ mod tests {
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn level_names_roundtrip() {
+        for lvl in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::parse(lvl.name()), Some(lvl));
+        }
+        assert_eq!(Level::parse("verbose"), None);
     }
 }

@@ -108,6 +108,7 @@ fn steady_state_solve_is_allocation_free() {
                 variant: KernelVariant::Scalar,
                 latency_ns: 1_000 + i,
                 batch: 1,
+                robust: false,
             });
         }
         for i in 0..200u64 {
@@ -120,6 +121,7 @@ fn steady_state_solve_is_allocation_free() {
                 variant: KernelVariant::SoaLanes(4),
                 latency_ns: i,
                 batch: 1,
+                robust: false,
             });
         }
     });
@@ -156,6 +158,44 @@ fn steady_state_solve_is_allocation_free() {
         let r = partisol::solver::residual::max_abs_residual(member, &soa_x[off..off + n]);
         assert!(r < 1e-9, "member residual {r}");
     }
+
+    // --- Observability hot path: with the span ring and metric
+    // histograms warmed, recording a stage span and a dimension-keyed
+    // latency observation per solve is allocation-free — the ISSUE-10
+    // bar for leaving tracing always-on in production. Seqlock slots
+    // are plain stores (drop-oldest included) and the histogram cells
+    // are fixed atomic arrays. ---
+    partisol::obs::warm();
+    let ring = partisol::obs::recorder();
+    let trace = partisol::obs::next_trace_id();
+    let dims = partisol::coordinator::metrics::DimHistograms::default();
+    dims.record(
+        Backend::Native,
+        KernelVariant::Scalar,
+        partisol::plan::RobustRoute::Fast,
+        false,
+        10.0,
+    );
+    let allocs = CountingAlloc::count_during(|| {
+        // A solve with recording interleaved, then well past the ring
+        // capacity so the drop-oldest overwrite path is covered too.
+        partition_solve_with_workspace(&sys_exact, 32, &exec, &mut ws, &mut x_exact).unwrap();
+        for i in 0..20_000u64 {
+            ring.record(trace, partisol::obs::Stage::Exec, i, 100, 4_096);
+            dims.record(
+                Backend::Native,
+                KernelVariant::Scalar,
+                partisol::plan::RobustRoute::Fast,
+                false,
+                50.0 + i as f64,
+            );
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "warmed-up span-ring + histogram recording must not allocate"
+    );
+    assert!(ring.recorded() >= 20_000);
 
     // Sanity: the solves above actually produced solutions.
     let residual = partisol::solver::residual::max_abs_residual(&sys, &x);

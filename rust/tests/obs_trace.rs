@@ -1,0 +1,187 @@
+//! ISSUE-10 acceptance tests for the observability layer.
+//!
+//! * A remote solve through `RemoteClient → ShardRouter → shard` is
+//!   one stitched trace: the caller's trace id survives both wire hops
+//!   (v3 `trace` field), the response echoes it, and the span ring
+//!   holds admit/plan/queue/exec/respond spans — plus the hops'
+//!   net_encode/net_decode legs — all under that one id, renderable as
+//!   Chrome-trace JSON.
+//! * The `--metrics-addr` HTTP endpoint answers `GET /metrics` with
+//!   Prometheus 0.0.4 text: nonzero solve counters, dimension-labeled
+//!   `partisol_solve_latency_us` histograms, and histogram-derived
+//!   percentile gauges.
+//! * The `MetricsText` wire frame round-trips the same exposition for
+//!   peers that can reach the frame port but not the scrape port.
+
+use partisol::api::{Client, SolveSpec};
+use partisol::cluster::{ClusterConfig, ShardRouter};
+use partisol::config::Config;
+use partisol::net::{NetServer, RemoteClient};
+use partisol::obs::{self, Stage};
+use partisol::solver::generator::random_dd_system;
+use partisol::util::Pcg64;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn native_cfg() -> Config {
+    Config {
+        probe_pjrt: false,
+        workers: 2,
+        ..Config::default()
+    }
+}
+
+fn start_shard(mut cfg: Config) -> (NetServer, String) {
+    cfg.net.addr = "127.0.0.1:0".to_string();
+    let net = cfg.net.clone();
+    let client = Arc::new(Client::from_config(cfg).unwrap());
+    let server = NetServer::start(client, net).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+#[test]
+fn remote_solve_through_router_is_one_stitched_trace() {
+    let (_shard, shard_addr) = start_shard(native_cfg());
+    let router = ShardRouter::start(ClusterConfig {
+        listen: "127.0.0.1:0".to_string(),
+        shards: vec![shard_addr],
+        ..ClusterConfig::default()
+    })
+    .unwrap();
+    let remote = RemoteClient::connect(&router.local_addr().to_string()).unwrap();
+
+    let trace: u64 = 0x0b5e_0000_abc1_2345;
+    let mut rng = Pcg64::new(42);
+    let sys = random_dd_system(&mut rng, 4096, 0.5);
+    let resp = remote
+        .solve(SolveSpec::f64(sys).with_trace(trace))
+        .unwrap();
+    assert_eq!(
+        resp.trace, trace,
+        "the response must echo the caller's trace id across both hops"
+    );
+
+    let mut spans = Vec::new();
+    obs::recorder().snapshot_into(&mut spans);
+    let ours: Vec<_> = spans.into_iter().filter(|s| s.trace == trace).collect();
+    for stage in [
+        Stage::Admit,
+        Stage::Plan,
+        Stage::Queue,
+        Stage::Exec,
+        Stage::Respond,
+        Stage::NetEncode,
+        Stage::NetDecode,
+    ] {
+        assert!(
+            ours.iter().any(|s| s.stage == stage),
+            "stage {stage:?} missing from stitched trace; got {ours:?}"
+        );
+    }
+    // Client, router and shard each encode one outbound leg for this
+    // request (request, forwarded request, response) — the shared ring
+    // stitched all of them, not just one hop's.
+    let encodes = ours.iter().filter(|s| s.stage == Stage::NetEncode).count();
+    assert!(encodes >= 2, "expected multi-hop net_encode spans, got {encodes}");
+
+    let doc = obs::chrome_trace_json(&ours).to_string_compact();
+    for label in ["admit", "plan", "queue", "exec", "respond", "net_encode"] {
+        assert!(doc.contains(label), "chrome doc lacks {label}: {doc}");
+    }
+
+    remote.close();
+    router.shutdown();
+}
+
+/// One HTTP GET against the scrape endpoint; returns the raw response.
+fn http_get(addr: &str, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+/// The value on a `<name> <value>` exposition line.
+fn metric_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(&format!("{name} ")))
+        .unwrap_or_else(|| panic!("metric {name} not found"))
+        .trim()
+        .parse()
+        .unwrap()
+}
+
+#[test]
+fn http_metrics_endpoint_serves_prometheus_text_with_live_counters() {
+    let mut cfg = native_cfg();
+    cfg.net.metrics_addr = Some("127.0.0.1:0".to_string());
+    let (shard, addr) = start_shard(cfg);
+    let metrics_addr = shard
+        .metrics_local_addr()
+        .expect("metrics endpoint configured")
+        .to_string();
+    let remote = RemoteClient::connect(&addr).unwrap();
+
+    let mut rng = Pcg64::new(7);
+    let solves = 6;
+    for _ in 0..solves {
+        let sys = random_dd_system(&mut rng, 2048, 0.5);
+        remote.solve(SolveSpec::f64(sys)).unwrap();
+    }
+
+    let raw = http_get(&metrics_addr, "/metrics");
+    assert!(raw.starts_with("HTTP/1.1 200 OK\r\n"), "{raw}");
+    assert!(raw.contains("text/plain; version=0.0.4"), "{raw}");
+    let body = raw.split("\r\n\r\n").nth(1).unwrap();
+    assert!(body.contains("# TYPE partisol_completed counter"));
+    assert!(metric_value(body, "partisol_completed") >= solves as f64);
+    // The dimension-keyed histogram: at least one (backend, kernel,
+    // route, batch) cell with as many observations as we made.
+    assert!(
+        body.contains("partisol_solve_latency_us_bucket{backend="),
+        "no labeled histogram cell in exposition:\n{body}"
+    );
+    let cell_count: f64 = body
+        .lines()
+        .filter(|l| l.starts_with("partisol_solve_latency_us_count{"))
+        .map(|l| l.rsplit(' ').next().unwrap().parse::<f64>().unwrap())
+        .sum();
+    assert!(cell_count >= solves as f64, "cells hold {cell_count} obs");
+    // Histogram-derived percentiles: present, ordered, and positive
+    // once solves have landed.
+    let p50 = metric_value(body, "partisol_p50_e2e_us");
+    let p95 = metric_value(body, "partisol_p95_e2e_us");
+    let p99 = metric_value(body, "partisol_p99_e2e_us");
+    assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+    // The span ring's own accounting is exposed too.
+    assert!(metric_value(body, "partisol_trace_spans_recorded") > 0.0);
+
+    // 404 for anything else.
+    assert!(http_get(&metrics_addr, "/other").starts_with("HTTP/1.1 404"));
+
+    // Satellite: the same exposition rides the MetricsText wire frame.
+    let text = remote.metrics_text().unwrap();
+    assert!(text.contains("# TYPE partisol_completed counter"));
+    assert!(metric_value(&text, "partisol_completed") >= solves as f64);
+
+    remote.close();
+    shard.shutdown();
+}
+
+#[test]
+fn untraced_remote_solve_gets_a_server_assigned_trace() {
+    let (shard, addr) = start_shard(native_cfg());
+    let remote = RemoteClient::connect(&addr).unwrap();
+    let mut rng = Pcg64::new(9);
+    let sys = random_dd_system(&mut rng, 1024, 0.5);
+    let resp = remote.solve(SolveSpec::f64(sys)).unwrap();
+    assert_ne!(
+        resp.trace, 0,
+        "admission must mint a trace id when the caller sent none"
+    );
+    remote.close();
+    shard.shutdown();
+}
